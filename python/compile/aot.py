@@ -1,0 +1,138 @@
+"""AOT lowering: JAX/Pallas (L2+L1) -> HLO text artifacts for the Rust runtime.
+
+Interchange format is HLO *text*, not serialized HloModuleProto: jax >= 0.5
+emits protos with 64-bit instruction ids which xla_extension 0.5.1 (the
+version behind the published `xla` 0.1.6 crate) rejects; the text parser
+reassigns ids and round-trips cleanly. See /opt/xla-example/README.md.
+
+Outputs (under --out-dir, default ../artifacts):
+  <name>.hlo.txt       one per entry point x shape variant
+  manifest.json        entry-point index the Rust runtime loads:
+                       [{name, file, inputs: [{shape, dtype}], outputs: [...]}]
+
+Run via `make artifacts` (no-op when inputs are unchanged).
+"""
+
+import argparse
+import json
+import os
+import sys
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+
+def to_hlo_text(lowered):
+    """StableHLO -> XlaComputation -> HLO text (see module docstring)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def spec(shape, dtype=jnp.float32):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def entry_points():
+    """(name, fn, example-arg specs) for every artifact.
+
+    Shape variants cover the serving tile (256 rows x 1024 bits, the paper's
+    array), the Table-1 geometry, a small test geometry, and the HDC case
+    study (ISOLET-like shapes padded to tile multiples).
+    """
+    eps = []
+
+    def add(name, fn, args):
+        eps.append((name, fn, args))
+
+    for rows, dims, batch in [
+        (256, 1024, 8),
+        (256, 1024, 64),
+        (256, 256, 8),
+        (32, 128, 4),
+    ]:
+        add(
+            f"cosime_search_r{rows}_d{dims}_b{batch}",
+            model.am_search_cosine,
+            [spec((batch, dims)), spec((rows, dims)), spec((rows,))],
+        )
+    add(
+        "hamming_search_r256_d1024_b8",
+        model.am_search_hamming,
+        [spec((8, 1024)), spec((256, 1024)), spec((256,))],
+    )
+    add(
+        "approx_search_r256_d1024_b8",
+        model.am_search_approx,
+        [spec((8, 1024)), spec((256, 1024)), spec((1,))],
+    )
+    # HDC end-to-end: ISOLET-like n=617 features, K=32 class rows (26 used,
+    # padded to a tile multiple), D=1024.
+    add(
+        "hdc_encode_n617_d1024_b8",
+        model.hdc_encode_batch,
+        [spec((8, 617)), spec((1024, 617))],
+    )
+    add(
+        "hdc_infer_n617_k32_d1024_b8",
+        model.hdc_infer,
+        [spec((8, 617)), spec((1024, 617)), spec((32, 1024)), spec((32,))],
+    )
+    add(
+        "analog_mc_r64_d256_b4_t100",
+        model.analog_mc,
+        [spec((4, 256)), spec((64, 256)), spec((64,)), spec((100, 64))],
+    )
+    add(
+        "exact_cosine_r256_d1024_b8",
+        model.exact_cosine_f32,
+        [spec((8, 1024)), spec((256, 1024))],
+    )
+    return eps
+
+
+def lower_all(out_dir):
+    os.makedirs(out_dir, exist_ok=True)
+    manifest = []
+    for name, fn, args in entry_points():
+        lowered = jax.jit(fn).lower(*args)
+        text = to_hlo_text(lowered)
+        fname = f"{name}.hlo.txt"
+        with open(os.path.join(out_dir, fname), "w") as f:
+            f.write(text)
+        out_info = lowered.out_info
+        flat_out, _ = jax.tree_util.tree_flatten(out_info)
+        manifest.append(
+            {
+                "name": name,
+                "file": fname,
+                "inputs": [
+                    {"shape": list(a.shape), "dtype": str(a.dtype)} for a in args
+                ],
+                "outputs": [
+                    {"shape": list(o.shape), "dtype": str(o.dtype)} for o in flat_out
+                ],
+            }
+        )
+        print(f"lowered {name}: {len(text)} chars", file=sys.stderr)
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"wrote {len(manifest)} artifacts to {out_dir}", file=sys.stderr)
+
+
+def main():
+    p = argparse.ArgumentParser(description=__doc__)
+    p.add_argument("--out-dir", default=None, help="artifact output directory")
+    p.add_argument("--out", default=None, help="(legacy) single-file target; directory is used")
+    args = p.parse_args()
+    out_dir = args.out_dir or (os.path.dirname(args.out) if args.out else "../artifacts")
+    lower_all(out_dir)
+
+
+if __name__ == "__main__":
+    main()

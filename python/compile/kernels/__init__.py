@@ -1,0 +1,16 @@
+"""L1 Pallas kernels (build-time only; lowered to HLO by compile/aot.py)."""
+
+from .analog_mc import analog_mc_search
+from .approx_cosine import approx_cosine_search
+from .cosime_search import cosime_scores, cosime_search
+from .hamming_search import hamming_search
+from .hdc_encode import hdc_encode
+
+__all__ = [
+    "analog_mc_search",
+    "approx_cosine_search",
+    "cosime_scores",
+    "cosime_search",
+    "hamming_search",
+    "hdc_encode",
+]

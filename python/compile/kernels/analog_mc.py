@@ -1,0 +1,49 @@
+"""L1 Pallas kernel: variation-injected Monte Carlo search (paper Fig. 7).
+
+Each trial is one fabricated die: a frozen per-row multiplicative gain error
+(translinear loop + amplification mirror + WTA rail mismatch, lumped — see
+rust/src/device/variation.rs for the per-component model this lumping is
+calibrated against). The kernel scores every (trial, query) pair and returns
+the per-trial winner, vectorizing the paper's 100-run Spectre MC.
+
+Grid: (trials,). Per step the full score matrix for one die fits in VMEM
+(B x N f32 <= 256 KiB at the paper's geometries).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _mc_kernel(q_ref, cls_ref, y_ref, g_ref, win_ref):
+    x = jnp.dot(q_ref[...], cls_ref[...].T)  # (B, N)
+    y = jnp.maximum(y_ref[...], 1.0)[None, :]
+    s = (x * x) / y * g_ref[0][None, :]  # die-specific gains
+    win_ref[0, :] = jnp.argmax(s, axis=1).astype(jnp.int32)
+
+
+@jax.jit
+def analog_mc_search(q, cls, ycnt, gains):
+    """Per-trial winners.
+
+    q: (B, D); cls: (N, D); ycnt: (N,); gains: (T, N).
+    Returns (T, B) i32 winner indices.
+    """
+    b, d = q.shape
+    n = cls.shape[0]
+    t = gains.shape[0]
+    return pl.pallas_call(
+        _mc_kernel,
+        grid=(t,),
+        in_specs=[
+            pl.BlockSpec((b, d), lambda i: (0, 0)),
+            pl.BlockSpec((n, d), lambda i: (0, 0)),
+            pl.BlockSpec((n,), lambda i: (0,)),
+            pl.BlockSpec((1, n), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, b), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((t, b), jnp.int32),
+        interpret=True,
+    )(q, cls, ycnt, gains)

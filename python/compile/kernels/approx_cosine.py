@@ -1,0 +1,62 @@
+"""L1 Pallas kernel: approximate-cosine NN search (the constant-denominator
+scheme of ref [10], COSIME's headline comparator in Table 1).
+
+The denominator ||b|| is frozen at a single constant, so the search is a
+dot-product ranking scaled by 1/norm_const. The kernel keeps the scale so
+returned scores are comparable with the reference implementation.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _approx_kernel(q_ref, cls_ref, nc_ref, idx_ref, score_ref, *, block_rows):
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _init():
+        score_ref[...] = jnp.full_like(score_ref, -jnp.inf)
+        idx_ref[...] = jnp.zeros_like(idx_ref)
+
+    x = jnp.dot(q_ref[...], cls_ref[...].T)  # (B, block_rows)
+    s = x / jnp.maximum(nc_ref[0], 1e-9)
+
+    blk_best = jnp.max(s, axis=1)
+    blk_arg = jnp.argmax(s, axis=1).astype(jnp.int32) + i * block_rows
+    better = blk_best > score_ref[...]
+    score_ref[...] = jnp.where(better, blk_best, score_ref[...])
+    idx_ref[...] = jnp.where(better, blk_arg, idx_ref[...])
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows",))
+def approx_cosine_search(q, cls, norm_const, block_rows=128):
+    """NN by approximate cosine. norm_const: (1,) f32 frozen denominator.
+
+    Returns (idx (B,) i32, score (B,) f32).
+    """
+    b, d = q.shape
+    n = cls.shape[0]
+    block_rows = min(block_rows, n)
+    assert n % block_rows == 0, f"rows {n} not divisible by block {block_rows}"
+    kernel = functools.partial(_approx_kernel, block_rows=block_rows)
+    return pl.pallas_call(
+        kernel,
+        grid=(n // block_rows,),
+        in_specs=[
+            pl.BlockSpec((b, d), lambda i: (0, 0)),
+            pl.BlockSpec((block_rows, d), lambda i: (i, 0)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((b,), lambda i: (0,)),
+            pl.BlockSpec((b,), lambda i: (0,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b,), jnp.int32),
+            jax.ShapeDtypeStruct((b,), jnp.float32),
+        ],
+        interpret=True,
+    )(q, cls, norm_const)

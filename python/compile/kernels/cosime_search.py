@@ -1,0 +1,106 @@
+"""L1 Pallas kernel: in-memory squared-cosine NN search (the COSIME array).
+
+Hardware adaptation (DESIGN.md §3): the analog crossbar's row-parallel dot
+product maps to an MXU matmul over row *tiles* (BlockSpec grid = array
+banks); the per-row translinear X^2/Y maps to a fused VPU elementwise on the
+matmul result while it is still VMEM-resident; the WTA race maps to a
+running (max, argmax) carried across the sequential row-tile grid in the
+revisited output block — the digital analogue of the shared V_c rail.
+
+interpret=True everywhere: the CPU PJRT plugin cannot execute Mosaic
+custom-calls; numerics are identical and the lowered HLO is what the Rust
+runtime loads (see python/compile/aot.py).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _search_kernel(q_ref, cls_ref, y_ref, idx_ref, score_ref, *, block_rows):
+    """One grid step: score a row tile, fold into the running argmax."""
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _init():
+        score_ref[...] = jnp.full_like(score_ref, -jnp.inf)
+        idx_ref[...] = jnp.zeros_like(idx_ref)
+
+    # MXU: (B, D) x (D, block_rows) dot product = the crossbar's I_x currents.
+    x = jnp.dot(q_ref[...], cls_ref[...].T)  # (B, block_rows)
+    # VPU: translinear X^2 / Y (Eq. 6), fused in-register.
+    y = jnp.maximum(y_ref[...], 1.0)[None, :]
+    s = (x * x) / y
+
+    # WTA: fold the tile winner into the running (max, argmax). Ties resolve
+    # to the lowest row index (strict > across tiles, argmax within a tile).
+    blk_best = jnp.max(s, axis=1)
+    blk_arg = jnp.argmax(s, axis=1).astype(jnp.int32) + i * block_rows
+    better = blk_best > score_ref[...]
+    score_ref[...] = jnp.where(better, blk_best, score_ref[...])
+    idx_ref[...] = jnp.where(better, blk_arg, idx_ref[...])
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows",))
+def cosime_search(q, cls, ycnt, block_rows=128):
+    """NN search under squared cosine over row tiles.
+
+    q: (B, D) f32 0/1; cls: (N, D) f32 0/1; ycnt: (N,) f32 popcounts.
+    Returns (idx (B,) i32, score (B,) f32). N must be divisible by
+    block_rows (pad with all-zero rows, which can never win: Y=0 -> s=0
+    against initialized -inf ... all-zero rows score 0, still never beat any
+    real row with s > 0; exact ties go to the lower index).
+    """
+    b, d = q.shape
+    n = cls.shape[0]
+    block_rows = min(block_rows, n)
+    assert n % block_rows == 0, f"rows {n} not divisible by block {block_rows}"
+    grid = (n // block_rows,)
+    kernel = functools.partial(_search_kernel, block_rows=block_rows)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((b, d), lambda i: (0, 0)),  # query tile: resident
+            pl.BlockSpec((block_rows, d), lambda i: (i, 0)),  # row tile
+            pl.BlockSpec((block_rows,), lambda i: (i,)),  # popcount tile
+        ],
+        out_specs=[
+            pl.BlockSpec((b,), lambda i: (0,)),  # running argmax (revisited)
+            pl.BlockSpec((b,), lambda i: (0,)),  # running max
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b,), jnp.int32),
+            jax.ShapeDtypeStruct((b,), jnp.float32),
+        ],
+        interpret=True,
+    )(q, cls, ycnt)
+
+
+def _scores_kernel(q_ref, cls_ref, y_ref, out_ref):
+    x = jnp.dot(q_ref[...], cls_ref[...].T)
+    y = jnp.maximum(y_ref[...], 1.0)[None, :]
+    out_ref[...] = (x * x) / y
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows",))
+def cosime_scores(q, cls, ycnt, block_rows=128):
+    """Full (B, N) score matrix (for waveform-level cross-checks)."""
+    b, d = q.shape
+    n = cls.shape[0]
+    block_rows = min(block_rows, n)
+    assert n % block_rows == 0
+    return pl.pallas_call(
+        _scores_kernel,
+        grid=(n // block_rows,),
+        in_specs=[
+            pl.BlockSpec((b, d), lambda i: (0, 0)),
+            pl.BlockSpec((block_rows, d), lambda i: (i, 0)),
+            pl.BlockSpec((block_rows,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((b, block_rows), lambda i: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((b, n), jnp.float32),
+        interpret=True,
+    )(q, cls, ycnt)

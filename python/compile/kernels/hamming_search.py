@@ -1,0 +1,65 @@
+"""L1 Pallas kernel: Hamming-distance NN search (the CAM/TCAM baseline of
+refs [6][9], used in the Fig. 1 / Fig. 9a metric comparisons).
+
+Same tile structure as cosime_search; the per-tile score is the negated
+Hamming distance computed from the dot product:
+    d(a, b) = |a| + |b| - 2 a.b   for binary vectors.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _hamming_kernel(q_ref, cls_ref, cb_ref, idx_ref, score_ref, *, block_rows):
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _init():
+        score_ref[...] = jnp.full_like(score_ref, -jnp.inf)
+        idx_ref[...] = jnp.zeros_like(idx_ref)
+
+    q = q_ref[...]
+    x = jnp.dot(q, cls_ref[...].T)  # (B, block_rows)
+    qa = jnp.sum(q, axis=1, keepdims=True)  # (B, 1)
+    s = -(qa + cb_ref[...][None, :] - 2.0 * x)  # negated distance
+
+    blk_best = jnp.max(s, axis=1)
+    blk_arg = jnp.argmax(s, axis=1).astype(jnp.int32) + i * block_rows
+    better = blk_best > score_ref[...]
+    score_ref[...] = jnp.where(better, blk_best, score_ref[...])
+    idx_ref[...] = jnp.where(better, blk_arg, idx_ref[...])
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows",))
+def hamming_search(q, cls, popcounts, block_rows=128):
+    """NN by Hamming distance. Returns (idx (B,) i32, -distance (B,) f32).
+
+    popcounts: (N,) f32 per-row |b| (precomputed, VMEM-resident alongside the
+    tile exactly like the cosine kernel's Y vector).
+    """
+    b, d = q.shape
+    n = cls.shape[0]
+    block_rows = min(block_rows, n)
+    assert n % block_rows == 0, f"rows {n} not divisible by block {block_rows}"
+    kernel = functools.partial(_hamming_kernel, block_rows=block_rows)
+    return pl.pallas_call(
+        kernel,
+        grid=(n // block_rows,),
+        in_specs=[
+            pl.BlockSpec((b, d), lambda i: (0, 0)),
+            pl.BlockSpec((block_rows, d), lambda i: (i, 0)),
+            pl.BlockSpec((block_rows,), lambda i: (i,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((b,), lambda i: (0,)),
+            pl.BlockSpec((b,), lambda i: (0,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b,), jnp.int32),
+            jax.ShapeDtypeStruct((b,), jnp.float32),
+        ],
+        interpret=True,
+    )(q, cls, popcounts)

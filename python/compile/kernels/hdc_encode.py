@@ -1,0 +1,38 @@
+"""L1 Pallas kernel: HDC random-projection encoder (paper Fig. 8a AFL stage).
+
+h = step(F @ P.T) with P a fixed bipolar +-1 matrix. Tiled over hypervector
+dimension blocks: each grid step matmuls the feature batch against one block
+of projection rows on the MXU and thresholds on the VPU. The projection tile
+streams HBM->VMEM; the feature batch stays resident.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _encode_kernel(f_ref, p_ref, out_ref):
+    z = jnp.dot(f_ref[...], p_ref[...].T)  # (B, block_d)
+    out_ref[...] = (z > 0.0).astype(jnp.float32)
+
+
+@functools.partial(jax.jit, static_argnames=("block_d",))
+def hdc_encode(feats, proj, block_d=256):
+    """Encode feats (B, n) with proj (D, n) of +-1 -> (B, D) f32 0/1."""
+    b, n = feats.shape
+    dims = proj.shape[0]
+    block_d = min(block_d, dims)
+    assert dims % block_d == 0, f"dims {dims} not divisible by block {block_d}"
+    return pl.pallas_call(
+        _encode_kernel,
+        grid=(dims // block_d,),
+        in_specs=[
+            pl.BlockSpec((b, n), lambda i: (0, 0)),
+            pl.BlockSpec((block_d, n), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((b, block_d), lambda i: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((b, dims), jnp.float32),
+        interpret=True,
+    )(feats, proj)

@@ -1,0 +1,88 @@
+"""Pure-jnp oracles for every Pallas kernel (L1 correctness ground truth).
+
+These implement the paper's math directly:
+  * squared-cosine scores  s = X**2 / Y   (paper Eq. 2, shared ||a||^2 dropped)
+  * Hamming distance scores (refs [6][9] baseline)
+  * approximate cosine (constant denominator, ref [10])
+  * HDC random-projection encoding (paper Fig. 8a AFL stage)
+  * variation-injected analog Monte Carlo scores (paper Fig. 7 model)
+
+pytest (python/tests/) asserts the Pallas kernels match these to float
+precision across hypothesis-swept shapes; the Rust digital engine mirrors the
+same math on bit-packed words.
+"""
+
+import jax.numpy as jnp
+
+
+def cosine_scores_ref(q, cls, ycnt):
+    """Squared-cosine row scores.
+
+    q: (B, D) float 0/1 queries; cls: (N, D) float 0/1 stored words;
+    ycnt: (N,) float popcounts of cls. Returns (B, N) scores X^2/Y.
+    """
+    x = q @ cls.T  # (B, N) dot products
+    y = jnp.maximum(ycnt, 1.0)[None, :]
+    return (x * x) / y
+
+
+def cosine_search_ref(q, cls, ycnt):
+    """NN search under squared cosine: returns (idx (B,), score (B,))."""
+    s = cosine_scores_ref(q, cls, ycnt)
+    return jnp.argmax(s, axis=1).astype(jnp.int32), jnp.max(s, axis=1)
+
+
+def hamming_scores_ref(q, cls):
+    """Negated Hamming distances (higher = closer), (B, N)."""
+    # d(a,b) = |a| + |b| - 2 a.b for binary vectors.
+    x = q @ cls.T
+    qa = jnp.sum(q, axis=1, keepdims=True)
+    cb = jnp.sum(cls, axis=1)[None, :]
+    return -(qa + cb - 2.0 * x)
+
+
+def hamming_search_ref(q, cls):
+    s = hamming_scores_ref(q, cls)
+    return jnp.argmax(s, axis=1).astype(jnp.int32), jnp.max(s, axis=1)
+
+
+def approx_cosine_scores_ref(q, cls, norm_const):
+    """Constant-denominator approximate CSS (ref [10]): dot / norm_const."""
+    return (q @ cls.T) / jnp.maximum(norm_const, 1e-9)
+
+
+def approx_cosine_search_ref(q, cls, norm_const):
+    s = approx_cosine_scores_ref(q, cls, norm_const)
+    return jnp.argmax(s, axis=1).astype(jnp.int32), jnp.max(s, axis=1)
+
+
+def hdc_encode_ref(feats, proj):
+    """Random-projection binary encoding: step(feats @ proj.T).
+
+    feats: (B, n) float features; proj: (D, n) float +-1 projection.
+    Returns (B, D) float 0/1 hypervectors.
+    """
+    return (feats @ proj.T > 0.0).astype(jnp.float32)
+
+
+def analog_mc_scores_ref(q, cls, ycnt, gains):
+    """Variation-injected analog scores (Fig. 7 behavioral model).
+
+    gains: (T, N) per-trial per-row multiplicative gain errors (frozen
+    translinear + mirror + WTA-rail mismatch). Returns (T, B, N).
+    """
+    base = cosine_scores_ref(q, cls, ycnt)  # (B, N)
+    return gains[:, None, :] * base[None, :, :]
+
+
+def analog_mc_search_ref(q, cls, ycnt, gains):
+    """Per-trial winners: (T, B) int32."""
+    s = analog_mc_scores_ref(q, cls, ycnt, gains)
+    return jnp.argmax(s, axis=2).astype(jnp.int32)
+
+
+def exact_cosine_f32_ref(q, cls):
+    """Full float cosine similarity (the GPU-baseline computation), (B, N)."""
+    qn = q / jnp.maximum(jnp.linalg.norm(q, axis=1, keepdims=True), 1e-9)
+    cn = cls / jnp.maximum(jnp.linalg.norm(cls, axis=1, keepdims=True), 1e-9)
+    return qn @ cn.T

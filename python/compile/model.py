@@ -1,0 +1,81 @@
+"""L2 JAX model: the full compute graphs the Rust runtime executes.
+
+Each public function here is a jit-able graph composed from the L1 Pallas
+kernels (so the kernels lower into the same HLO module) plus glue math.
+`compile/aot.py` lowers them at fixed shapes into artifacts/*.hlo.txt.
+
+Entry points:
+  * am_search_cosine   — the COSIME search (paper Eq. 2 + WTA)
+  * am_search_hamming  — CAM/TCAM baseline search [6][9]
+  * am_search_approx   — approximate-cosine baseline [10]
+  * hdc_encode_batch   — random-projection encoder (AFL stage)
+  * hdc_infer          — encoder + COSIME search fused into one module
+  * analog_mc          — variation Monte Carlo (Fig. 7) over frozen gains
+  * exact_cosine_f32   — full float cosine (the GPU comparator computation)
+"""
+
+import jax.numpy as jnp
+
+from .kernels import (
+    analog_mc_search,
+    approx_cosine_search,
+    cosime_search,
+    hamming_search,
+    hdc_encode,
+)
+from .kernels import ref
+
+
+def _block_rows(n):
+    """Largest power-of-two tile <= min(n, 128) that divides n."""
+    for cand in (128, 64, 32, 16, 8, 4, 2, 1):
+        if cand <= n and n % cand == 0:
+            return cand
+    return 1
+
+
+def am_search_cosine(q, cls, ycnt):
+    """COSIME search: (idx, score) per query (tuple output for jax.export)."""
+    idx, score = cosime_search(q, cls, ycnt, block_rows=_block_rows(cls.shape[0]))
+    return (idx, score)
+
+
+def am_search_hamming(q, cls, popcounts):
+    idx, score = hamming_search(q, cls, popcounts, block_rows=_block_rows(cls.shape[0]))
+    return (idx, score)
+
+
+def am_search_approx(q, cls, norm_const):
+    idx, score = approx_cosine_search(
+        q, cls, norm_const, block_rows=_block_rows(cls.shape[0])
+    )
+    return (idx, score)
+
+
+def hdc_encode_batch(feats, proj):
+    """Encode features to binary hypervectors (B, D) f32 0/1."""
+    block = 256 if proj.shape[0] % 256 == 0 else _block_rows(proj.shape[0])
+    return (hdc_encode(feats, proj, block_d=block),)
+
+
+def hdc_infer(feats, proj, cls, ycnt):
+    """End-to-end HDC inference: encode then COSIME-search, one HLO module.
+
+    feats: (B, n); proj: (D, n) +-1; cls: (K, D); ycnt: (K,).
+    Returns (class idx (B,) i32, score (B,) f32).
+    """
+    (h,) = hdc_encode_batch(feats, proj)
+    return am_search_cosine(h, cls, ycnt)
+
+
+def analog_mc(q, cls, ycnt, gains):
+    """Per-trial winners under frozen per-die gains: (T, B) i32."""
+    return (analog_mc_search(q, cls, ycnt, gains),)
+
+
+def exact_cosine_f32(q, cls):
+    """Full float cosine scores + argmax — the GPU-side computation the
+    paper benchmarks against (Fig. 9b/c). Pure jnp (no Pallas): this is the
+    *comparator*, not the contribution."""
+    s = ref.exact_cosine_f32_ref(q, cls)
+    return (jnp.argmax(s, axis=1).astype(jnp.int32), jnp.max(s, axis=1))

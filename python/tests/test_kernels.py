@@ -1,0 +1,200 @@
+"""L1 correctness: every Pallas kernel vs its pure-jnp oracle, with
+hypothesis sweeping shapes, densities and seeds. This is the CORE
+correctness signal for the compute the Rust runtime executes."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import (
+    analog_mc_search,
+    approx_cosine_search,
+    cosime_scores,
+    cosime_search,
+    hamming_search,
+    hdc_encode,
+)
+from compile.kernels import ref
+
+SHAPES = st.tuples(
+    st.sampled_from([1, 2, 4, 8]),  # batch
+    st.sampled_from([8, 16, 32, 64, 128]),  # rows
+    st.sampled_from([16, 64, 128, 256]),  # dims
+)
+
+
+def binary(rng, shape, density):
+    return (rng.random(shape) < density).astype(np.float32)
+
+
+# ---------------------------------------------------------------- cosine ----
+
+
+@settings(max_examples=25, deadline=None)
+@given(shape=SHAPES, density=st.floats(0.1, 0.9), seed=st.integers(0, 2**31 - 1))
+def test_cosime_search_matches_ref(shape, density, seed):
+    b, n, d = shape
+    rng = np.random.default_rng(seed)
+    q = binary(rng, (b, d), 0.5)
+    cls = binary(rng, (n, d), density)
+    y = cls.sum(axis=1)
+    idx, score = cosime_search(q, cls, y, block_rows=min(n, 32))
+    ridx, rscore = ref.cosine_search_ref(q, cls, y)
+    np.testing.assert_array_equal(np.asarray(idx), np.asarray(ridx))
+    np.testing.assert_allclose(np.asarray(score), np.asarray(rscore), rtol=1e-6)
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_cosime_scores_matrix_matches_ref(seed):
+    rng = np.random.default_rng(seed)
+    q = binary(rng, (4, 64), 0.5)
+    cls = binary(rng, (64, 64), 0.5)
+    y = cls.sum(axis=1)
+    s = cosime_scores(q, cls, y, block_rows=32)
+    np.testing.assert_allclose(
+        np.asarray(s), np.asarray(ref.cosine_scores_ref(q, cls, y)), rtol=1e-6
+    )
+
+
+def test_cosime_search_exact_self_match():
+    rng = np.random.default_rng(7)
+    cls = binary(rng, (32, 128), 0.5)
+    y = cls.sum(axis=1)
+    idx, score = cosime_search(cls[:8], cls, y, block_rows=16)
+    np.testing.assert_array_equal(np.asarray(idx), np.arange(8))
+    # Self-match score = X^2/Y = Y (since X = Y for a self-dot).
+    np.testing.assert_allclose(np.asarray(score), y[:8], rtol=1e-6)
+
+
+def test_cosime_block_size_invariance():
+    rng = np.random.default_rng(8)
+    q = binary(rng, (4, 64), 0.5)
+    cls = binary(rng, (64, 64), 0.5)
+    y = cls.sum(axis=1)
+    results = [
+        np.asarray(cosime_search(q, cls, y, block_rows=br)[0]) for br in (8, 16, 32, 64)
+    ]
+    for r in results[1:]:
+        np.testing.assert_array_equal(results[0], r)
+
+
+def test_cosime_zero_rows_never_win():
+    rng = np.random.default_rng(9)
+    cls = binary(rng, (16, 32), 0.5)
+    cls[3:8] = 0.0  # padding rows
+    y = cls.sum(axis=1)
+    q = binary(rng, (4, 32), 0.5)
+    idx, _ = cosime_search(q, cls, y, block_rows=8)
+    assert not np.isin(np.asarray(idx), np.arange(3, 8)).any()
+
+
+# --------------------------------------------------------------- hamming ----
+
+
+@settings(max_examples=20, deadline=None)
+@given(shape=SHAPES, seed=st.integers(0, 2**31 - 1))
+def test_hamming_search_matches_ref(shape, seed):
+    b, n, d = shape
+    rng = np.random.default_rng(seed)
+    q = binary(rng, (b, d), 0.5)
+    cls = binary(rng, (n, d), 0.5)
+    pc = cls.sum(axis=1)
+    idx, score = hamming_search(q, cls, pc, block_rows=min(n, 32))
+    ridx, rscore = ref.hamming_search_ref(q, cls)
+    np.testing.assert_array_equal(np.asarray(idx), np.asarray(ridx))
+    np.testing.assert_allclose(np.asarray(score), np.asarray(rscore), rtol=1e-6)
+
+
+def test_hamming_exact_match_is_zero_distance():
+    rng = np.random.default_rng(10)
+    cls = binary(rng, (16, 64), 0.5)
+    pc = cls.sum(axis=1)
+    idx, score = hamming_search(cls[:4], cls, pc, block_rows=16)
+    np.testing.assert_array_equal(np.asarray(idx), np.arange(4))
+    np.testing.assert_allclose(np.asarray(score), 0.0, atol=1e-6)
+
+
+# ---------------------------------------------------------------- approx ----
+
+
+@settings(max_examples=20, deadline=None)
+@given(shape=SHAPES, seed=st.integers(0, 2**31 - 1), nc=st.floats(1.0, 100.0))
+def test_approx_search_matches_ref(shape, seed, nc):
+    b, n, d = shape
+    rng = np.random.default_rng(seed)
+    q = binary(rng, (b, d), 0.5)
+    cls = binary(rng, (n, d), 0.5)
+    ncv = np.array([nc], dtype=np.float32)
+    idx, score = approx_cosine_search(q, cls, ncv, block_rows=min(n, 32))
+    ridx, rscore = ref.approx_cosine_search_ref(q, cls, np.float32(nc))
+    np.testing.assert_array_equal(np.asarray(idx), np.asarray(ridx))
+    np.testing.assert_allclose(np.asarray(score), np.asarray(rscore), rtol=1e-5)
+
+
+# ---------------------------------------------------------------- encode ----
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    b=st.sampled_from([1, 2, 8]),
+    n=st.sampled_from([7, 32, 61, 128]),
+    dims=st.sampled_from([64, 256, 512]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_hdc_encode_matches_ref(b, n, dims, seed):
+    rng = np.random.default_rng(seed)
+    feats = rng.standard_normal((b, n)).astype(np.float32)
+    proj = np.where(rng.random((dims, n)) < 0.5, 1.0, -1.0).astype(np.float32)
+    h = hdc_encode(feats, proj, block_d=min(dims, 64))
+    np.testing.assert_array_equal(np.asarray(h), ref.hdc_encode_ref(feats, proj))
+
+
+def test_hdc_encode_output_is_binary():
+    rng = np.random.default_rng(11)
+    feats = rng.standard_normal((4, 33)).astype(np.float32)
+    proj = np.where(rng.random((128, 33)) < 0.5, 1.0, -1.0).astype(np.float32)
+    h = np.asarray(hdc_encode(feats, proj, block_d=64))
+    assert set(np.unique(h)) <= {0.0, 1.0}
+
+
+# ------------------------------------------------------------------- MC -----
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), trials=st.sampled_from([1, 4, 16]))
+def test_analog_mc_matches_ref(seed, trials):
+    rng = np.random.default_rng(seed)
+    q = binary(rng, (4, 64), 0.5)
+    cls = binary(rng, (16, 64), 0.5)
+    y = cls.sum(axis=1)
+    gains = (1.0 + 0.12 * rng.standard_normal((trials, 16))).astype(np.float32)
+    w = analog_mc_search(q, cls, y, gains)
+    rw = ref.analog_mc_search_ref(q, cls, y, gains)
+    np.testing.assert_array_equal(np.asarray(w), np.asarray(rw))
+
+
+def test_analog_mc_unit_gains_equal_nominal():
+    rng = np.random.default_rng(12)
+    q = binary(rng, (4, 64), 0.5)
+    cls = binary(rng, (16, 64), 0.5)
+    y = cls.sum(axis=1)
+    gains = np.ones((3, 16), dtype=np.float32)
+    w = np.asarray(analog_mc_search(q, cls, y, gains))
+    nom, _ = ref.cosine_search_ref(q, cls, y)
+    for t in range(3):
+        np.testing.assert_array_equal(w[t], np.asarray(nom))
+
+
+# -------------------------------------------------- degenerate edge cases ---
+
+
+@pytest.mark.parametrize("density", [0.0, 1.0])
+def test_extreme_density_does_not_nan(density):
+    rng = np.random.default_rng(13)
+    q = binary(rng, (2, 32), 0.5)
+    cls = np.full((8, 32), density, dtype=np.float32)
+    y = cls.sum(axis=1)
+    idx, score = cosime_search(q, cls, y, block_rows=8)
+    assert np.isfinite(np.asarray(score)).all()
+    assert (np.asarray(idx) >= 0).all()

@@ -1,0 +1,78 @@
+"""L2 model-level tests: composed graphs (encode -> search), shape contracts,
+and the GPU-comparator computation."""
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile import model
+from compile.kernels import ref
+
+
+def binary(rng, shape, density=0.5):
+    return (rng.random(shape) < density).astype(np.float32)
+
+
+def test_hdc_infer_composes_encode_and_search():
+    rng = np.random.default_rng(0)
+    feats = rng.standard_normal((8, 61)).astype(np.float32)
+    proj = np.where(rng.random((256, 61)) < 0.5, 1.0, -1.0).astype(np.float32)
+    cls = binary(rng, (16, 256))
+    y = cls.sum(axis=1)
+    idx, score = model.hdc_infer(feats, proj, cls, y)
+    h = ref.hdc_encode_ref(feats, proj)
+    ridx, rscore = ref.cosine_search_ref(h, cls, y)
+    np.testing.assert_array_equal(np.asarray(idx), np.asarray(ridx))
+    np.testing.assert_allclose(np.asarray(score), np.asarray(rscore), rtol=1e-6)
+
+
+def test_hdc_infer_classifies_class_prototypes():
+    # Inference on noiseless prototypes must return the prototype's row.
+    rng = np.random.default_rng(1)
+    protos = rng.standard_normal((8, 61)).astype(np.float32)
+    proj = np.where(rng.random((256, 61)) < 0.5, 1.0, -1.0).astype(np.float32)
+    h = ref.hdc_encode_ref(protos, proj)
+    y = h.sum(axis=1)
+    idx, _ = model.hdc_infer(protos, proj, h, y)
+    np.testing.assert_array_equal(np.asarray(idx), np.arange(8))
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_exact_cosine_matches_numpy(seed):
+    rng = np.random.default_rng(seed)
+    q = rng.standard_normal((4, 64)).astype(np.float32)
+    cls = rng.standard_normal((16, 64)).astype(np.float32)
+    idx, score = model.exact_cosine_f32(q, cls)
+    qn = q / np.linalg.norm(q, axis=1, keepdims=True)
+    cn = cls / np.linalg.norm(cls, axis=1, keepdims=True)
+    s = qn @ cn.T
+    np.testing.assert_array_equal(np.asarray(idx), s.argmax(axis=1))
+    np.testing.assert_allclose(np.asarray(score), s.max(axis=1), rtol=1e-5)
+
+
+def test_exact_vs_squared_cosine_same_winner_for_binary():
+    # For binary vectors the squared-cosine argmax equals the cosine argmax
+    # (squaring is monotone on [0, 1]) — the paper's Eq. 2 equivalence.
+    rng = np.random.default_rng(2)
+    q = binary(rng, (8, 128))
+    cls = binary(rng, (32, 128), 0.4)
+    y = cls.sum(axis=1)
+    sq_idx, _ = model.am_search_cosine(q, cls, y)
+    ex_idx, _ = model.exact_cosine_f32(q, cls)
+    np.testing.assert_array_equal(np.asarray(sq_idx), np.asarray(ex_idx))
+
+
+def test_search_variants_shapes():
+    rng = np.random.default_rng(3)
+    q = binary(rng, (4, 128))
+    cls = binary(rng, (32, 128))
+    y = cls.sum(axis=1)
+    for out in [
+        model.am_search_cosine(q, cls, y),
+        model.am_search_hamming(q, cls, y),
+        model.am_search_approx(q, cls, np.array([8.0], dtype=np.float32)),
+    ]:
+        idx, score = out
+        assert np.asarray(idx).shape == (4,)
+        assert np.asarray(score).shape == (4,)
+        assert np.asarray(idx).dtype == np.int32

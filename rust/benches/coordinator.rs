@@ -1,0 +1,74 @@
+//! Bench: the L3 serving engine — end-to-end service throughput under
+//! concurrent load across batching policies, plus batcher microbenchmarks.
+//! This is the hot path the performance pass (EXPERIMENTS.md §Perf) tracks.
+
+use cosime::am::{AmEngine, DigitalExactEngine};
+use cosime::config::CosimeConfig;
+use cosime::coordinator::{AmService, Batcher, TileManager};
+use cosime::util::bench::Bench;
+use cosime::util::{rng, BitVec};
+use std::time::{Duration, Instant};
+
+fn service_throughput(rows: usize, dims: usize, workers: usize, max_batch: usize, n: usize) -> f64 {
+    let mut cfg = CosimeConfig::default();
+    cfg.coordinator.workers = workers;
+    cfg.coordinator.max_batch = max_batch;
+    let mut r = rng(7);
+    let words: Vec<BitVec> = (0..rows).map(|_| BitVec::random(dims, 0.5, &mut r)).collect();
+    let tiles = TileManager::build(words, 256, |w| {
+        Ok(Box::new(DigitalExactEngine::new(w)) as Box<dyn AmEngine>)
+    })
+    .unwrap();
+    let svc = AmService::start(&cfg.coordinator, tiles);
+    let clients = 8u64;
+    let t0 = Instant::now();
+    std::thread::scope(|s| {
+        for c in 0..clients {
+            let svc = svc.clone();
+            s.spawn(move || {
+                let mut r = rng(100 + c);
+                for _ in 0..n as u64 / clients {
+                    let q = BitVec::random(dims, 0.5, &mut r);
+                    let _ = svc.search_with_retry(q, 50);
+                }
+            });
+        }
+    });
+    let tput = svc.metrics().completed as f64 / t0.elapsed().as_secs_f64();
+    svc.shutdown();
+    tput
+}
+
+fn main() {
+    let mut b = Bench::new();
+
+    // Batcher microbenchmarks: submit + drain round trip.
+    let batcher: Batcher<u64> = Batcher::new(64, Duration::from_micros(1), 1 << 16);
+    b.bench("batcher/submit+drain", || {
+        batcher.submit(1).unwrap();
+        batcher.next_batch()
+    });
+
+    // Tile merge cost.
+    let mut r = rng(3);
+    let words: Vec<BitVec> = (0..1024).map(|_| BitVec::random(1024, 0.5, &mut r)).collect();
+    let tiles = TileManager::build(words, 256, |w| {
+        Ok(Box::new(DigitalExactEngine::new(w)) as Box<dyn AmEngine>)
+    })
+    .unwrap();
+    let q = BitVec::random(1024, 0.5, &mut r);
+    b.bench_throughput("tiles/search/1024x1024/4-tiles", 1024.0, || tiles.search(&q));
+    let batch: Vec<BitVec> = (0..32).map(|_| BitVec::random(1024, 0.5, &mut r)).collect();
+    b.bench_throughput("tiles/search_batch32/1024x1024", 32.0 * 1024.0, || {
+        tiles.search_batch(&batch)
+    });
+
+    b.report("Coordinator microbenchmarks");
+
+    println!("\n== service throughput (8 clients, 4096x1024 store) ==");
+    println!("{:>8} {:>10} {:>16}", "workers", "max_batch", "queries/s");
+    for (workers, max_batch) in [(1, 1), (1, 32), (2, 32), (4, 32), (4, 64), (8, 64)] {
+        let tput = service_throughput(4096, 1024, workers, max_batch, 6000);
+        println!("{workers:>8} {max_batch:>10} {tput:>16.0}");
+    }
+}

@@ -1,0 +1,25 @@
+//! Bench: Fig. 1 — metric-comparison evaluation cost (NN classification and
+//! few-shot episodes) plus the regenerated accuracy tables.
+
+use cosime::hdc::{
+    cosine_engine, evaluate_accuracy, few_shot_accuracy, hamming_engine, Dataset, DatasetSpec,
+    FewShotSpec, SyntheticParams, TrainConfig,
+};
+use cosime::util::bench::Bench;
+
+fn main() {
+    let ds = Dataset::synthetic(
+        DatasetSpec::Ucihar,
+        SyntheticParams { subsample: 0.02, ..Default::default() },
+        1,
+    );
+    let mut b = Bench::new();
+    let cfg = TrainConfig { dims: 512, epochs: 1, ..Default::default() };
+    b.bench("fig1a/evaluate/cosine/D=512", || evaluate_accuracy(&ds, cfg, cosine_engine));
+    b.bench("fig1a/evaluate/hamming/D=512", || evaluate_accuracy(&ds, cfg, hamming_engine));
+    let spec = FewShotSpec { ways: 5, shots: 5, queries: 4, episodes: 10, dims: 512, seed: 2 };
+    b.bench("fig1b/few-shot/cosine/10-episodes", || few_shot_accuracy(&ds, spec, cosine_engine));
+    b.report("Fig. 1 workload — evaluation benchmarks");
+    println!();
+    cosime::repro::fig1::run(0.05, Some("results")).expect("fig1");
+}

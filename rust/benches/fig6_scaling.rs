@@ -1,0 +1,57 @@
+//! Bench: Fig. 6 — scaling of the search across rows and wordlength, on
+//! both the digital hot path (what the coordinator serves) and the analog
+//! transient simulator (what regenerates the figure), plus the figure's own
+//! modeled energy/delay table.
+
+use cosime::am::analog::AnalogCosimeEngine;
+use cosime::am::{AmEngine, DigitalExactEngine};
+use cosime::circuit::Wta;
+use cosime::config::CosimeConfig;
+use cosime::util::bench::Bench;
+use cosime::util::{rng, BitVec};
+
+fn main() {
+    let cfg = CosimeConfig::default();
+    let mut b = Bench::new();
+
+    // Digital search scaling in rows (dims = 1024).
+    for rows in [64usize, 256, 1024, 4096] {
+        let mut r = rng(rows as u64);
+        let words: Vec<BitVec> = (0..rows).map(|_| BitVec::random(1024, 0.5, &mut r)).collect();
+        let e = DigitalExactEngine::new(words);
+        let q = BitVec::random(1024, 0.5, &mut r);
+        b.bench_throughput(&format!("digital/rows={rows}/d=1024"), rows as f64, || e.search(&q));
+    }
+
+    // Digital search scaling in dims (rows = 256).
+    for dims in [64usize, 256, 1024, 4096] {
+        let mut r = rng(dims as u64 + 17);
+        let words: Vec<BitVec> = (0..256).map(|_| BitVec::random(dims, 0.5, &mut r)).collect();
+        let e = DigitalExactEngine::new(words);
+        let q = BitVec::random(dims, 0.5, &mut r);
+        b.bench_throughput(&format!("digital/rows=256/d={dims}"), 256.0, || e.search(&q));
+    }
+
+    // Analog static search (row currents + translinear + static WTA).
+    for rows in [64usize, 256] {
+        let mut r = rng(rows as u64 + 31);
+        let words: Vec<BitVec> = (0..rows).map(|_| BitVec::random(1024, 0.5, &mut r)).collect();
+        let e = AnalogCosimeEngine::nominal(&cfg, words);
+        let q = BitVec::random(1024, 0.5, &mut r);
+        b.bench_throughput(&format!("analog-static/rows={rows}/d=1024"), rows as f64, || {
+            e.search(&q)
+        });
+    }
+
+    // WTA transient solve cost vs rail count (the fig6 inner loop).
+    for rails in [16usize, 64, 256] {
+        let wta = Wta::new(cfg.wta.clone());
+        let mut inputs = vec![0.24e-6; rails];
+        inputs[rails / 2] = 0.3e-6;
+        b.bench(&format!("wta-transient/rails={rails}"), || wta.settle(&inputs, false));
+    }
+
+    b.report("Fig. 6 workload — scaling benchmarks");
+    println!();
+    cosime::repro::fig6::run("both", Some("results")).expect("fig6");
+}

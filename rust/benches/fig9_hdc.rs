@@ -1,0 +1,50 @@
+//! Bench: Fig. 9 — the HDC case-study pipeline: encode throughput, training
+//! time, inference through each engine, and the COSIME-vs-GPU ratio table.
+
+use cosime::am::{AmEngine, DigitalExactEngine};
+use cosime::hdc::{
+    AnyEncoder, Dataset, DatasetSpec, EncoderKind, HdcModel, SyntheticParams, TrainConfig,
+};
+use cosime::runtime::{RuntimeHandle, XlaAmEngine};
+use cosime::util::bench::Bench;
+
+fn main() {
+    let ds = Dataset::synthetic(
+        DatasetSpec::Isolet,
+        SyntheticParams { subsample: 0.05, ..Default::default() },
+        1,
+    );
+    let mut b = Bench::new();
+
+    // Encoders.
+    for (name, kind) in [
+        ("level", EncoderKind::Level { spread: 2.0 }),
+        ("random-projection", EncoderKind::RandomProjection { threshold_scale: 0.0 }),
+    ] {
+        let enc = AnyEncoder::build(kind, 1024, ds.features, 3);
+        let x = &ds.train_x[0];
+        b.bench_throughput(&format!("encode/{name}/D=1024"), 1.0, || enc.encode(x));
+    }
+
+    // Training (single pass, D=512 on the subsampled set).
+    b.bench("train/single-pass/D=512", || {
+        HdcModel::train(&ds, TrainConfig { dims: 512, epochs: 0, ..Default::default() })
+    });
+
+    // Inference through engines.
+    let model = HdcModel::train(&ds, TrainConfig { dims: 1024, epochs: 1, ..Default::default() });
+    let hvs = model.class_hypervectors();
+    let digital = DigitalExactEngine::new(hvs.clone());
+    let h = model.encoder.encode(&ds.test_x[0]);
+    b.bench_throughput("infer/digital/K=26/D=1024", 1.0, || digital.search(&h));
+
+    if let Ok(rt) = RuntimeHandle::spawn("artifacts") {
+        if let Ok(x) = XlaAmEngine::new(&rt, "cosime_search_r256_d1024_b8", &hvs) {
+            b.bench_throughput("infer/xla/K=26/D=1024", 1.0, || x.search(&h));
+        }
+    }
+
+    b.report("Fig. 9 workload — HDC pipeline benchmarks");
+    println!();
+    cosime::repro::fig9::run_bc(Some("results")).expect("fig9bc");
+}

@@ -1,0 +1,51 @@
+//! Bench: Table 1 — per-search cost of each AM realization at the paper's
+//! 256×256 geometry, plus the modeled fJ/bit / ns / mm² table itself.
+//!
+//! Wall-clock numbers here are *simulator* throughput (how fast this crate
+//! searches); the paper-comparable metrics come from the calibrated energy
+//! model printed below (see EXPERIMENTS.md §Table 1).
+
+use cosime::am::analog::AnalogCosimeEngine;
+use cosime::am::{AmEngine, ApproxCosineEngine, DigitalExactEngine, DotEngine, HammingEngine};
+use cosime::config::CosimeConfig;
+use cosime::runtime::{RuntimeHandle, XlaAmEngine};
+use cosime::util::bench::Bench;
+use cosime::util::{rng, BitVec};
+
+fn main() {
+    let (rows, dims) = (256usize, 256usize);
+    let mut r = rng(1);
+    let words: Vec<BitVec> = (0..rows).map(|_| BitVec::random(dims, 0.5, &mut r)).collect();
+    let queries: Vec<BitVec> = (0..64).map(|_| BitVec::random(dims, 0.5, &mut r)).collect();
+    let cfg = CosimeConfig::default();
+
+    let mut b = Bench::new();
+    let engines: Vec<Box<dyn AmEngine>> = vec![
+        Box::new(DigitalExactEngine::new(words.clone())),
+        Box::new(HammingEngine::new(words.clone())),
+        Box::new(ApproxCosineEngine::new(words.clone())),
+        Box::new(DotEngine::new(words.clone())),
+        Box::new(AnalogCosimeEngine::nominal(&cfg, words.clone())),
+    ];
+    for e in &engines {
+        let mut i = 0usize;
+        b.bench_throughput(&format!("search/{}/256x256", e.name()), 1.0, || {
+            i = (i + 1) % queries.len();
+            e.search(&queries[i])
+        });
+    }
+
+    if let Ok(rt) = RuntimeHandle::spawn("artifacts") {
+        if let Ok(x) = XlaAmEngine::new(&rt, "cosime_search_r256_d256_b8", &words) {
+            let mut i = 0usize;
+            b.bench_throughput("search/xla-batch8/256x256", 8.0, || {
+                i = (i + 8) % 64;
+                x.search_batch(&queries[i..i + 8.min(64 - i)])
+            });
+        }
+    }
+
+    b.report("Table 1 workload — simulator search timings");
+    println!();
+    cosime::repro::table1::run().expect("table1");
+}

@@ -1,0 +1,445 @@
+//! The analog COSIME engine (paper Fig. 3): two 1FeFET1R arrays feeding
+//! per-row translinear `X²/Y` blocks, whose outputs race in the WTA.
+//!
+//! This is the *variation-faithful* realization used for Fig. 4b waveforms,
+//! Fig. 6 energy/latency sweeps and the Fig. 7 Monte Carlo: every cell,
+//! translinear loop and WTA rail carries frozen fabrication variation drawn
+//! from [`VariationSampler`]. Search currents follow the paper's signal
+//! chain:
+//!
+//! ```text
+//! query bits → BL drivers → I_x (dot array) ─┐
+//!                all-high → I_y (norm array) ─┤→ I_z = I_x²/I_y → WTA → NN
+//! ```
+//!
+//! Cell currents are pre-characterized at build time ([`CellSample`]) so a
+//! search is pure arithmetic (no exp() on the hot path).
+
+use crate::circuit::{Translinear, TranslinearInstance, Wta, WtaInstance, WtaOutcome};
+use crate::config::CosimeConfig;
+use crate::device::VariationSampler;
+use crate::energy::{EnergyModel, OperatingPoint, SearchCost};
+use crate::util::{BitVec, Rng};
+
+use super::{AmEngine, Metric, SearchResult};
+
+/// Pre-characterized current triple per cell, flattened row-major.
+struct CellBank {
+    i_on: Vec<f64>,
+    i_gate_off: Vec<f64>,
+    i_store_off: Vec<f64>,
+}
+
+/// Full analog COSIME tile with frozen variation.
+pub struct AnalogCosimeEngine {
+    #[allow(dead_code)] // kept: the fabricated die's design point, useful for debugging dumps
+    cfg: CosimeConfig,
+    rows: usize,
+    dims: usize,
+    stored: Vec<BitVec>,
+    cells: CellBank,
+    translinear: Vec<TranslinearInstance>,
+    wta: WtaInstance,
+    wta_block: Wta,
+    /// Per-row amplification mirror gain (design gain × frozen mismatch)
+    /// lifting I_z into the WTA input range (§4.1 amplification mirrors).
+    amp_gain: Vec<f64>,
+    /// Common supply scale factor of this die (10 % variation).
+    #[allow(dead_code)] // frozen at build; cells already carry the scale
+    supply_scale: f64,
+    energy: EnergyModel,
+}
+
+/// Detailed outcome of one analog search (feeds Fig. 4b / Fig. 6 / Fig. 7).
+pub struct AnalogSearchOutcome {
+    pub result: SearchResult,
+    /// Row currents from the dot-product array (A).
+    pub i_x: Vec<f64>,
+    /// Row currents from the norm array (A).
+    pub i_y: Vec<f64>,
+    /// Translinear outputs (A).
+    pub i_z: Vec<f64>,
+    /// WTA transient outcome (None for static searches).
+    pub wta: Option<WtaOutcome>,
+    /// Energy/latency accounting for this search.
+    pub cost: SearchCost,
+}
+
+impl AnalogCosimeEngine {
+    /// Fabricate a tile storing `words`, drawing all device variation from
+    /// `rng`. Disable variation classes via `cfg.variation` for a nominal die.
+    pub fn new(cfg: &CosimeConfig, words: Vec<BitVec>, rng: &mut Rng) -> Self {
+        assert!(!words.is_empty(), "analog engine needs stored words");
+        let rows = words.len();
+        let dims = words[0].len();
+        assert!(words.iter().all(|w| w.len() == dims), "stored words must share a length");
+
+        let sampler = VariationSampler::new(cfg);
+        let supply_scale = sampler.supply_scale(rng);
+
+        // Eq. 7 tuning: the 1R is programmed so a fully-selected row delivers
+        // the full-scale current regardless of geometry.
+        let i_cell_target = cfg.array.i_row_full_scale / dims as f64;
+        let tune_scale = i_cell_target / (cfg.device.v_wl / cfg.device.r_series);
+
+        let n = rows * dims;
+        let mut cells = CellBank {
+            i_on: Vec::with_capacity(n),
+            i_gate_off: Vec::with_capacity(n),
+            i_store_off: Vec::with_capacity(n),
+        };
+        for word in &words {
+            for j in 0..dims {
+                let mut cell = sampler.cell(word.get(j), rng);
+                cell.tune_scale = tune_scale;
+                let s = cell.sample(&cfg.device);
+                // Supply variation scales every read current on this die.
+                cells.i_on.push(s.i_on * supply_scale);
+                cells.i_gate_off.push(s.i_gate_off * supply_scale);
+                cells.i_store_off.push(s.i_store_off * supply_scale);
+            }
+        }
+
+        let tl = Translinear::new(cfg.translinear.clone());
+        let translinear = (0..rows).map(|_| tl.instance(&sampler, rng)).collect();
+        let wta_block = Wta::new(cfg.wta.clone());
+        let wta = wta_block.instance(rows, &sampler, rng);
+
+        // Amplification mirrors (§4.1): lift the average I_z to the WTA's
+        // per-rail bias scale so the race starts in the resolving range.
+        // Each row owns one mirror, with its own frozen mismatch.
+        let d = cfg.array.expected_density;
+        let i_z_avg = cfg.array.i_row_full_scale * d * d * d;
+        let amp_design = cfg.wta.i_bias / i_z_avg.max(1e-12);
+        let amp_gain: Vec<f64> =
+            (0..rows).map(|_| amp_design * sampler.stage_gain(rng)).collect();
+
+        AnalogCosimeEngine {
+            cfg: cfg.clone(),
+            rows,
+            dims,
+            stored: words,
+            cells,
+            translinear,
+            wta,
+            wta_block,
+            amp_gain,
+            supply_scale,
+            energy: EnergyModel::new(cfg),
+        }
+    }
+
+    /// Nominal engine: all variation disabled (ideal die).
+    pub fn nominal(cfg: &CosimeConfig, words: Vec<BitVec>) -> Self {
+        let mut cfg = cfg.clone();
+        cfg.variation.fefet_vth = false;
+        cfg.variation.resistor = false;
+        cfg.variation.mos = false;
+        cfg.variation.supply = false;
+        let mut rng = crate::util::rng(0);
+        Self::new(&cfg, words, &mut rng)
+    }
+
+    pub fn stored(&self, i: usize) -> &BitVec {
+        &self.stored[i]
+    }
+
+    /// Analog row currents for a query: (I_x per row, I_y per row).
+    pub fn row_currents(&self, query: &BitVec) -> (Vec<f64>, Vec<f64>) {
+        assert_eq!(query.len(), self.dims, "query length {} != dims {}", query.len(), self.dims);
+        let mut i_x = vec![0.0f64; self.rows];
+        let mut i_y = vec![0.0f64; self.rows];
+        let qbits: Vec<bool> = query.iter().collect();
+        for r in 0..self.rows {
+            let base = r * self.dims;
+            let stored = &self.stored[r];
+            let (mut x, mut y) = (0.0f64, 0.0f64);
+            for j in 0..self.dims {
+                let idx = base + j;
+                if stored.get(j) {
+                    // Norm array: gate always high for stored 1s.
+                    y += self.cells.i_on[idx];
+                    x += if qbits[j] {
+                        self.cells.i_on[idx]
+                    } else {
+                        self.cells.i_gate_off[idx]
+                    };
+                } else {
+                    y += self.cells.i_store_off[idx];
+                    if qbits[j] {
+                        x += self.cells.i_store_off[idx];
+                    }
+                }
+            }
+            i_x[r] = x;
+            i_y[r] = y;
+        }
+        (i_x, i_y)
+    }
+
+    /// Translinear outputs for given row currents.
+    pub fn translinear_outputs(&self, i_x: &[f64], i_y: &[f64]) -> Vec<f64> {
+        self.translinear
+            .iter()
+            .zip(i_x.iter().zip(i_y))
+            .map(|(tl, (&x, &y))| tl.output(x, y))
+            .collect()
+    }
+
+    /// Full search with transient WTA: returns waveforms, latency and energy.
+    pub fn search_detailed(&self, query: &BitVec, capture: bool) -> AnalogSearchOutcome {
+        let (i_x, i_y) = self.row_currents(query);
+        let i_z = self.translinear_outputs(&i_x, &i_y);
+        // Amplified + rail-mismatched WTA inputs.
+        let wta_in: Vec<f64> = i_z
+            .iter()
+            .zip(self.wta.rail_gain.iter().zip(&self.amp_gain))
+            .map(|(&z, (&g, &a))| z * a * g)
+            .collect();
+        let outcome = self.wta_block.settle(&wta_in, capture);
+
+        let rows = self.rows;
+        let mean = |v: &[f64]| v.iter().sum::<f64>() / rows as f64;
+        let op = OperatingPoint {
+            i_x_avg: mean(&i_x),
+            i_y_avg: mean(&i_y),
+            i_z_avg: mean(&i_z),
+            t_wta: outcome.latency,
+        };
+        let cost = self.energy.search_cost(rows, self.dims, &op);
+        AnalogSearchOutcome {
+            result: SearchResult { winner: outcome.winner, score: i_z[outcome.winner] },
+            i_x,
+            i_y,
+            i_z,
+            wta: Some(outcome),
+            cost,
+        }
+    }
+}
+
+impl AmEngine for AnalogCosimeEngine {
+    fn name(&self) -> &str {
+        "analog-cosime"
+    }
+    fn metric(&self) -> Metric {
+        Metric::Cosine
+    }
+    fn rows(&self) -> usize {
+        self.rows
+    }
+    fn dims(&self) -> usize {
+        self.dims
+    }
+
+    /// Analog scores: the (mismatched, amplified) WTA input currents.
+    fn scores(&self, query: &BitVec) -> Vec<f64> {
+        let (i_x, i_y) = self.row_currents(query);
+        self.translinear_outputs(&i_x, &i_y)
+            .iter()
+            .zip(self.wta.rail_gain.iter().zip(&self.amp_gain))
+            .map(|(&z, (&g, &a))| z * a * g)
+            .collect()
+    }
+
+    /// Fast search: static WTA winner (argmax of mismatched rail inputs) —
+    /// matches the transient decision whenever the gap is resolvable.
+    fn search(&self, query: &BitVec) -> SearchResult {
+        let scores = self.scores(query);
+        let winner = self.wta.winner_static(&scores);
+        SearchResult { winner, score: scores[winner] }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::am::DigitalExactEngine;
+    use crate::config::CosimeConfig;
+    use crate::util::{rng, BitVec};
+
+    fn small_words(n: usize, dims: usize, seed: u64) -> Vec<BitVec> {
+        let mut r = rng(seed);
+        (0..n).map(|_| BitVec::random(dims, 0.5, &mut r)).collect()
+    }
+
+    #[test]
+    fn nominal_engine_matches_digital_reference() {
+        // Without variation, the analog winner must equal the exact cos² NN.
+        let cfg = CosimeConfig::default();
+        let words = small_words(16, 128, 7);
+        let analog = AnalogCosimeEngine::nominal(&cfg, words.clone());
+        let digital = DigitalExactEngine::new(words);
+        let mut r = rng(8);
+        for _ in 0..40 {
+            let q = BitVec::random(128, 0.5, &mut r);
+            assert_eq!(analog.search(&q).winner, digital.search(&q).winner);
+        }
+    }
+
+    #[test]
+    fn row_currents_proportional_to_dot_and_norm() {
+        let cfg = CosimeConfig::default();
+        let words = small_words(8, 64, 9);
+        let e = AnalogCosimeEngine::nominal(&cfg, words.clone());
+        let mut r = rng(10);
+        let q = BitVec::random(64, 0.5, &mut r);
+        let (i_x, i_y) = e.row_currents(&q);
+        let i_cell = cfg.array.i_row_full_scale / 64.0;
+        for (row, w) in words.iter().enumerate() {
+            let expect_x = q.dot(w) as f64 * i_cell;
+            let expect_y = w.count_ones() as f64 * i_cell;
+            assert!((i_x[row] - expect_x).abs() / expect_x.max(i_cell) < 0.02, "row {row} x");
+            assert!((i_y[row] - expect_y).abs() / expect_y.max(i_cell) < 0.02, "row {row} y");
+        }
+    }
+
+    #[test]
+    fn eq7_tuning_keeps_row_current_constant_across_dims() {
+        // Scaling dims must not change the full-scale row current (Eq. 7).
+        let cfg = CosimeConfig::default();
+        for dims in [64usize, 256, 1024] {
+            let words = vec![BitVec::from_bools(vec![true; dims]); 2];
+            let e = AnalogCosimeEngine::nominal(&cfg, words);
+            let q = BitVec::from_bools(vec![true; dims]);
+            let (i_x, _) = e.row_currents(&q);
+            assert!(
+                (i_x[0] - cfg.array.i_row_full_scale).abs() / cfg.array.i_row_full_scale < 0.02,
+                "dims {dims}: {:.3e}",
+                i_x[0]
+            );
+        }
+    }
+
+    #[test]
+    fn detailed_search_settles_within_paper_latency_band() {
+        let cfg = CosimeConfig::default();
+        let words = small_words(32, 256, 11);
+        let e = AnalogCosimeEngine::nominal(&cfg, words);
+        let mut r = rng(12);
+        let q = BitVec::random(256, 0.5, &mut r);
+        let out = e.search_detailed(&q, false);
+        let wta = out.wta.expect("transient requested");
+        assert!(wta.settled, "nominal die must settle");
+        // Total latency in the 1–10 ns band (paper: 3 ns).
+        assert!(out.cost.latency > 1e-9 && out.cost.latency < 10e-9, "{:.2e}", out.cost.latency);
+        assert!(out.cost.total() > 0.0);
+    }
+
+    #[test]
+    fn transient_and_static_agree_on_clear_winners() {
+        let cfg = CosimeConfig::default();
+        let words = small_words(16, 256, 13);
+        let e = AnalogCosimeEngine::nominal(&cfg, words.clone());
+        // Query = one of the stored words: unambiguous winner.
+        let q = words[5].clone();
+        let stat = e.search(&q);
+        let tran = e.search_detailed(&q, false);
+        assert_eq!(stat.winner, 5);
+        assert_eq!(tran.result.winner, 5);
+    }
+
+    #[test]
+    fn variation_flips_near_ties_but_not_clear_wins() {
+        let cfg = CosimeConfig::default();
+        let words = small_words(8, 256, 14);
+        let mut flips = 0;
+        for trial in 0..30 {
+            let mut r = rng(100 + trial);
+            let e = AnalogCosimeEngine::new(&cfg, words.clone(), &mut r);
+            // Exact self-match: cos² = 1 vs ≲0.6 for random others — a clear
+            // win that variation must not destroy.
+            let q = words[3].clone();
+            if e.search(&q).winner != 3 {
+                flips += 1;
+            }
+        }
+        assert!(flips <= 1, "clear self-matches flipped {flips}/30 times");
+    }
+
+    #[test]
+    fn scores_are_all_finite_and_positive() {
+        let cfg = CosimeConfig::default();
+        let words = small_words(8, 64, 15);
+        let mut r = rng(16);
+        let e = AnalogCosimeEngine::new(&cfg, words, &mut r);
+        let q = BitVec::random(64, 0.5, &mut r);
+        for s in e.scores(&q) {
+            assert!(s.is_finite() && s >= 0.0);
+        }
+    }
+
+    #[test]
+    fn all_zero_query_does_not_panic() {
+        let cfg = CosimeConfig::default();
+        let words = small_words(4, 64, 17);
+        let e = AnalogCosimeEngine::nominal(&cfg, words);
+        let q = BitVec::zeros(64);
+        let r = e.search(&q);
+        assert!(r.winner < 4);
+    }
+}
+
+#[cfg(test)]
+mod ablation_tests {
+    //! Ablation of the Eq. 7 current-tuning claim (DESIGN.md §5): without
+    //! retuning the 1R as geometry scales, row currents exceed the
+    //! translinear operating range and the scores compress — the design
+    //! choice the paper's §3.3 scalability argument rests on.
+
+    use super::*;
+    use crate::config::CosimeConfig;
+    use crate::repro::worst_case_pair;
+
+    /// Score ratio of a numerator-differing pair (equal Y = 512, overlaps
+    /// 256 vs 229 → cos² = 1/4 vs 1/5) under a given full-scale current.
+    /// This pair exercises the squaring path, which is what saturates when
+    /// I_x leaves the operating range.
+    fn pair_ratio(i_row_full_scale: f64) -> f64 {
+        use crate::util::BitVec;
+        let mut cfg = CosimeConfig::default();
+        cfg.array.i_row_full_scale = i_row_full_scale;
+        let dims = 1024;
+        let (query, mut words, _) = worst_case_pair(8, dims, 99);
+        let mut row_b = BitVec::zeros(dims);
+        for j in 0..229 {
+            row_b.set(j, true); // shared with the query
+        }
+        for j in 512..(512 + 512 - 229) {
+            row_b.set(j, true); // keeps Y = 512
+        }
+        words[1] = row_b;
+        let engine = AnalogCosimeEngine::nominal(&cfg, words);
+        let (i_x, i_y) = engine.row_currents(&query);
+        let i_z = engine.translinear_outputs(&i_x, &i_y);
+        i_z[0] / i_z[1]
+    }
+
+    #[test]
+    fn eq7_tuning_preserves_score_contrast() {
+        // Tuned (default full-scale inside the translinear range): the pair
+        // separates by the ideal 1.25x.
+        let tuned = pair_ratio(CosimeConfig::default().array.i_row_full_scale);
+        assert!((tuned - 1.25).abs() < 0.07, "tuned ratio {tuned:.3}");
+
+        // Untuned: cells sized for a 64-bit word driving a 1024-bit word
+        // (16x over-current) push I_x past the weak-inversion knee; the
+        // squaring compresses and the contrast collapses toward 1.
+        let untuned = pair_ratio(CosimeConfig::default().array.i_row_full_scale * 16.0);
+        assert!(
+            untuned < 1.10,
+            "without Eq. 7 tuning the pair must compress below WTA-safe contrast: {untuned:.3}"
+        );
+    }
+
+    #[test]
+    fn tuned_engine_survives_geometry_sweep() {
+        // With tuning, the worst-case winner is found at every wordlength.
+        let cfg = CosimeConfig::default();
+        for dims in [64usize, 256, 1024] {
+            let (query, words, winner) = worst_case_pair(8, dims, 101);
+            let engine = AnalogCosimeEngine::nominal(&cfg, words);
+            assert_eq!(engine.search(&query).winner, winner, "dims {dims}");
+        }
+    }
+}

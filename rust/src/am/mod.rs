@@ -1,0 +1,495 @@
+//! Array-level associative-memory engines.
+//!
+//! [`AmEngine`] is the common search interface; implementations:
+//!
+//! * [`DigitalExactEngine`] — bit-exact squared-cosine search (Eq. 2), the
+//!   functional ground truth and the coordinator's fast serving path.
+//! * [`HammingEngine`] — nearest neighbor by Hamming distance, the CAM/TCAM
+//!   baseline of refs [6][9] (Fig. 1 / Fig. 9a comparisons).
+//! * [`ApproxCosineEngine`] — the constant-denominator approximate CSS of
+//!   ref [10] (dot-product search with the ‖b‖ term frozen).
+//! * [`DotEngine`] — raw dot-product search (no normalization at all), the
+//!   strawman the paper's Eq. 2 motivates against.
+//! * [`analog::AnalogCosimeEngine`] — the full analog path: 1FeFET1R arrays
+//!   → translinear X²/Y → WTA, with frozen device variation (Fig. 7).
+//! * [`write`] — the array programming path (±4 V pulses + write-verify).
+
+pub mod analog;
+pub mod write;
+
+use crate::util::BitVec;
+
+/// Distance/similarity metric an engine implements (Table 1 column).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Metric {
+    Cosine,
+    Hamming,
+    ApproxCosine,
+    Dot,
+}
+
+/// Result of one nearest-neighbor search.
+#[derive(Debug, Clone)]
+pub struct SearchResult {
+    /// Winning row index.
+    pub winner: usize,
+    /// Winning score in the engine's own metric (higher = closer; Hamming
+    /// distances are negated so the convention holds everywhere).
+    pub score: f64,
+}
+
+/// Common interface over every AM realization.
+pub trait AmEngine: Send + Sync {
+    fn name(&self) -> &str;
+    fn metric(&self) -> Metric;
+    fn rows(&self) -> usize;
+    fn dims(&self) -> usize;
+
+    /// Scores for every stored row (higher = closer).
+    fn scores(&self, query: &BitVec) -> Vec<f64>;
+
+    /// Nearest-neighbor search (argmax of [`AmEngine::scores`]; ties break
+    /// to the lowest row index, matching the Pallas kernel and jnp.argmax).
+    fn search(&self, query: &BitVec) -> SearchResult {
+        let scores = self.scores(query);
+        assert!(!scores.is_empty(), "engine has no rows");
+        let (mut winner, mut score) = (0usize, f64::NEG_INFINITY);
+        for (i, &s) in scores.iter().enumerate() {
+            if s > score {
+                winner = i;
+                score = s;
+            }
+        }
+        SearchResult { winner, score }
+    }
+
+    /// Batched search; engines with batch-friendly substrates override this.
+    fn search_batch(&self, queries: &[BitVec]) -> Vec<SearchResult> {
+        queries.iter().map(|q| self.search(q)).collect()
+    }
+
+    /// Top-k nearest neighbors (descending score; ties to lower index).
+    /// The analog realization is an iterated WTA with winner inhibition —
+    /// digitally this is a partial selection over the scores.
+    fn search_topk(&self, query: &BitVec, k: usize) -> Vec<SearchResult> {
+        let scores = self.scores(query);
+        let k = k.min(scores.len());
+        let mut idx: Vec<usize> = (0..scores.len()).collect();
+        idx.sort_by(|&a, &b| {
+            scores[b].partial_cmp(&scores[a]).expect("finite scores").then(a.cmp(&b))
+        });
+        idx.truncate(k);
+        idx.into_iter().map(|i| SearchResult { winner: i, score: scores[i] }).collect()
+    }
+}
+
+/// Shared storage for the digital engines: bit-packed rows + popcounts.
+///
+/// Rows are additionally flattened into one contiguous u64 matrix
+/// (`packed`, row-major) so the search hot loop streams cache lines
+/// sequentially instead of chasing per-row heap allocations — the single
+/// biggest lever found in the §Perf pass (EXPERIMENTS.md).
+#[derive(Debug, Clone)]
+struct Store {
+    rows: Vec<BitVec>,
+    popcounts: Vec<u32>,
+    dims: usize,
+    /// Row-major lane matrix: rows × lanes_per_row.
+    packed: Vec<u64>,
+    lanes_per_row: usize,
+}
+
+impl Store {
+    fn new(rows: Vec<BitVec>) -> Self {
+        assert!(!rows.is_empty(), "AM needs at least one stored word");
+        let dims = rows[0].len();
+        assert!(rows.iter().all(|r| r.len() == dims), "stored words must share a length");
+        let popcounts = rows.iter().map(|r| r.count_ones()).collect();
+        let lanes_per_row = dims.div_ceil(64);
+        let mut packed = Vec::with_capacity(rows.len() * lanes_per_row);
+        for r in &rows {
+            packed.extend_from_slice(r.lanes());
+        }
+        Store { rows, popcounts, dims, packed, lanes_per_row }
+    }
+
+    fn check_query(&self, query: &BitVec) {
+        assert_eq!(query.len(), self.dims, "query length {} != dims {}", query.len(), self.dims);
+    }
+
+    /// Binary dot product of `query` with stored row `row` over the packed
+    /// matrix. Four accumulators break the POPCNT dependency chain.
+    #[inline]
+    fn dot_packed(&self, q: &[u64], row: usize) -> u32 {
+        let base = row * self.lanes_per_row;
+        let lanes = &self.packed[base..base + self.lanes_per_row];
+        debug_assert_eq!(q.len(), lanes.len());
+        // chunks_exact elides bounds checks; four accumulators break the
+        // POPCNT dependency chain (§Perf).
+        let mut acc = [0u32; 4];
+        let mut it_l = lanes.chunks_exact(4);
+        let mut it_q = q.chunks_exact(4);
+        for (l, qq) in (&mut it_l).zip(&mut it_q) {
+            acc[0] += (l[0] & qq[0]).count_ones();
+            acc[1] += (l[1] & qq[1]).count_ones();
+            acc[2] += (l[2] & qq[2]).count_ones();
+            acc[3] += (l[3] & qq[3]).count_ones();
+        }
+        for (l, qq) in it_l.remainder().iter().zip(it_q.remainder()) {
+            acc[0] += (l & qq).count_ones();
+        }
+        acc[0] + acc[1] + acc[2] + acc[3]
+    }
+}
+
+/// Bit-exact squared-cosine AM (paper Eq. 2): score = X²/Y with X = a·b,
+/// Y = ‖b‖². The shared ‖a‖² factor is dropped, exactly as the hardware does.
+#[derive(Debug, Clone)]
+pub struct DigitalExactEngine {
+    store: Store,
+}
+
+impl DigitalExactEngine {
+    pub fn new(rows: Vec<BitVec>) -> Self {
+        DigitalExactEngine { store: Store::new(rows) }
+    }
+
+    pub fn stored(&self, i: usize) -> &BitVec {
+        &self.store.rows[i]
+    }
+}
+
+impl AmEngine for DigitalExactEngine {
+    fn name(&self) -> &str {
+        "digital-cosine"
+    }
+    fn metric(&self) -> Metric {
+        Metric::Cosine
+    }
+    fn rows(&self) -> usize {
+        self.store.rows.len()
+    }
+    fn dims(&self) -> usize {
+        self.store.dims
+    }
+
+    fn scores(&self, query: &BitVec) -> Vec<f64> {
+        self.store.check_query(query);
+        let q = query.lanes();
+        (0..self.store.rows.len())
+            .map(|r| {
+                let x = self.store.dot_packed(q, r) as f64;
+                let y = self.store.popcounts[r];
+                if y == 0 {
+                    0.0
+                } else {
+                    x * x / y as f64
+                }
+            })
+            .collect()
+    }
+
+    /// Fused hot path: streams the packed matrix once, tracking the running
+    /// (max, argmax) inline — no score vector allocation (§Perf).
+    fn search(&self, query: &BitVec) -> SearchResult {
+        self.store.check_query(query);
+        let q = query.lanes();
+        let (mut winner, mut best) = (0usize, f64::NEG_INFINITY);
+        for r in 0..self.store.rows.len() {
+            let x = self.store.dot_packed(q, r) as f64;
+            let y = self.store.popcounts[r];
+            let s = if y == 0 { 0.0 } else { x * x / y as f64 };
+            if s > best {
+                winner = r;
+                best = s;
+            }
+        }
+        SearchResult { winner, score: best }
+    }
+
+    /// Batched search: queries are independent — fan out across cores
+    /// (the coordinator's batch is exactly this shape).
+    fn search_batch(&self, queries: &[BitVec]) -> Vec<SearchResult> {
+        if queries.len() < 4 {
+            return queries.iter().map(|q| self.search(q)).collect();
+        }
+        crate::util::par::par_map(queries, |q| self.search(q))
+    }
+}
+
+/// Hamming-distance AM (refs [6][9]). Scores are negated distances.
+#[derive(Debug, Clone)]
+pub struct HammingEngine {
+    store: Store,
+}
+
+impl HammingEngine {
+    pub fn new(rows: Vec<BitVec>) -> Self {
+        HammingEngine { store: Store::new(rows) }
+    }
+}
+
+impl AmEngine for HammingEngine {
+    fn name(&self) -> &str {
+        "hamming"
+    }
+    fn metric(&self) -> Metric {
+        Metric::Hamming
+    }
+    fn rows(&self) -> usize {
+        self.store.rows.len()
+    }
+    fn dims(&self) -> usize {
+        self.store.dims
+    }
+
+    fn scores(&self, query: &BitVec) -> Vec<f64> {
+        self.store.check_query(query);
+        // d(a,b) = |a| + |b| − 2·a·b, computed over the packed matrix.
+        let q = query.lanes();
+        let qa = query.count_ones();
+        (0..self.store.rows.len())
+            .map(|r| {
+                let x = self.store.dot_packed(q, r);
+                -((qa + self.store.popcounts[r]) as f64 - 2.0 * x as f64)
+            })
+            .collect()
+    }
+
+    fn search_batch(&self, queries: &[BitVec]) -> Vec<SearchResult> {
+        if queries.len() < 4 {
+            return queries.iter().map(|q| self.search(q)).collect();
+        }
+        crate::util::par::par_map(queries, |q| self.search(q))
+    }
+}
+
+/// Approximate-cosine AM of ref [10]: the denominator ‖b‖ is frozen at its
+/// expected value (quasi-orthogonality of HD vectors), so the search reduces
+/// to a dot-product ranking scaled by a constant.
+#[derive(Debug, Clone)]
+pub struct ApproxCosineEngine {
+    store: Store,
+    /// The frozen denominator: √(E[Y]) (constant across rows).
+    norm_const: f64,
+}
+
+impl ApproxCosineEngine {
+    pub fn new(rows: Vec<BitVec>) -> Self {
+        let store = Store::new(rows);
+        let mean_y =
+            store.popcounts.iter().map(|&y| y as f64).sum::<f64>() / store.rows.len() as f64;
+        ApproxCosineEngine { store, norm_const: mean_y.max(1.0).sqrt() }
+    }
+}
+
+impl AmEngine for ApproxCosineEngine {
+    fn name(&self) -> &str {
+        "approx-cosine"
+    }
+    fn metric(&self) -> Metric {
+        Metric::ApproxCosine
+    }
+    fn rows(&self) -> usize {
+        self.store.rows.len()
+    }
+    fn dims(&self) -> usize {
+        self.store.dims
+    }
+
+    fn scores(&self, query: &BitVec) -> Vec<f64> {
+        self.store.check_query(query);
+        self.store.rows.iter().map(|row| query.dot(row) as f64 / self.norm_const).collect()
+    }
+}
+
+/// Raw dot-product AM — no normalization (the strawman of §3.1).
+#[derive(Debug, Clone)]
+pub struct DotEngine {
+    store: Store,
+}
+
+impl DotEngine {
+    pub fn new(rows: Vec<BitVec>) -> Self {
+        DotEngine { store: Store::new(rows) }
+    }
+}
+
+impl AmEngine for DotEngine {
+    fn name(&self) -> &str {
+        "dot"
+    }
+    fn metric(&self) -> Metric {
+        Metric::Dot
+    }
+    fn rows(&self) -> usize {
+        self.store.rows.len()
+    }
+    fn dims(&self) -> usize {
+        self.store.dims
+    }
+
+    fn scores(&self, query: &BitVec) -> Vec<f64> {
+        self.store.check_query(query);
+        self.store.rows.iter().map(|row| query.dot(row) as f64).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::{rng, BitVec};
+
+    fn words() -> Vec<BitVec> {
+        vec![
+            BitVec::from_bits(&[1, 1, 1, 1, 0, 0, 0, 0]),
+            BitVec::from_bits(&[1, 1, 0, 0, 0, 0, 0, 0]),
+            BitVec::from_bits(&[1, 1, 1, 1, 1, 1, 1, 1]),
+            BitVec::from_bits(&[0, 0, 0, 0, 0, 0, 1, 1]),
+        ]
+    }
+
+    #[test]
+    fn digital_cosine_picks_exact_match() {
+        let e = DigitalExactEngine::new(words());
+        for (i, w) in words().iter().enumerate() {
+            let r = e.search(w);
+            assert_eq!(r.winner, i, "row {i} must match itself");
+        }
+    }
+
+    #[test]
+    fn cosine_normalization_matters() {
+        // Query = row1 = [1,1,0,...]. Dot with row2 (all ones) is also 2, but
+        // cosine must prefer the sparse exact match.
+        let e = DigitalExactEngine::new(words());
+        let q = BitVec::from_bits(&[1, 1, 0, 0, 0, 0, 0, 0]);
+        assert_eq!(e.search(&q).winner, 1);
+        // The unnormalized dot engine ties and cannot distinguish.
+        let d = DotEngine::new(words());
+        let s = d.scores(&q);
+        assert_eq!(s[1], s[2], "dot product cannot separate these");
+    }
+
+    #[test]
+    fn digital_scores_match_cos2_definition() {
+        let e = DigitalExactEngine::new(words());
+        let q = BitVec::from_bits(&[1, 0, 1, 0, 1, 0, 1, 0]);
+        let scores = e.scores(&q);
+        let na = q.count_ones() as f64;
+        for (i, w) in words().iter().enumerate() {
+            let expect = w.cos2(&q) * na; // engine drops the shared ‖a‖² term
+            assert!((scores[i] - expect).abs() < 1e-12, "row {i}");
+        }
+    }
+
+    #[test]
+    fn hamming_and_cosine_are_different_rankings() {
+        // The paper's Fig. 1 point: Hamming and cosine disagree often enough
+        // to cost accuracy when vectors have varying density.
+        let mut r = rng(3);
+        let rows: Vec<BitVec> =
+            (0..16).map(|_| BitVec::random(64, 0.3 + 0.4 * r.f64(), &mut r)).collect();
+        let cos = DigitalExactEngine::new(rows.clone());
+        let ham = HammingEngine::new(rows);
+        let mut disagree = 0;
+        for _ in 0..200 {
+            let q = BitVec::random(64, 0.5, &mut r);
+            if cos.search(&q).winner != ham.search(&q).winner {
+                disagree += 1;
+            }
+        }
+        assert!(disagree > 10, "metrics should disagree sometimes: {disagree}");
+    }
+
+    #[test]
+    fn approx_cosine_is_dot_ranking() {
+        let mut r = rng(4);
+        let rows: Vec<BitVec> = (0..8).map(|_| BitVec::random(32, 0.5, &mut r)).collect();
+        let approx = ApproxCosineEngine::new(rows.clone());
+        let dot = DotEngine::new(rows);
+        for _ in 0..50 {
+            let q = BitVec::random(32, 0.5, &mut r);
+            assert_eq!(approx.search(&q).winner, dot.search(&q).winner);
+        }
+    }
+
+    #[test]
+    fn approx_cosine_errs_where_exact_does_not() {
+        // Norm variation breaks the constant-denominator approximation [10]:
+        // a dense row can steal the win from the true cosine NN.
+        let rows = vec![
+            BitVec::from_bits(&[1, 1, 0, 0, 0, 0, 0, 0]), // true NN of q
+            BitVec::from_bits(&[1, 1, 1, 1, 1, 1, 1, 1]), // dense attractor
+        ];
+        let q = BitVec::from_bits(&[1, 1, 1, 0, 0, 0, 0, 0]);
+        let exact = DigitalExactEngine::new(rows.clone());
+        let approx = ApproxCosineEngine::new(rows);
+        assert_eq!(exact.search(&q).winner, 0); // 4/2=2 vs 9/8=1.125
+        assert_eq!(approx.search(&q).winner, 1); // dot 2 vs 3
+    }
+
+    #[test]
+    fn batch_matches_serial() {
+        let mut r = rng(5);
+        let rows: Vec<BitVec> = (0..12).map(|_| BitVec::random(48, 0.5, &mut r)).collect();
+        let e = DigitalExactEngine::new(rows);
+        let queries: Vec<BitVec> = (0..9).map(|_| BitVec::random(48, 0.5, &mut r)).collect();
+        let batch = e.search_batch(&queries);
+        for (q, b) in queries.iter().zip(&batch) {
+            assert_eq!(e.search(q).winner, b.winner);
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "query length")]
+    fn query_length_mismatch_panics() {
+        let e = DigitalExactEngine::new(words());
+        let _ = e.scores(&BitVec::zeros(5));
+    }
+
+    #[test]
+    fn zero_row_scores_zero_not_nan() {
+        let rows = vec![BitVec::zeros(8), BitVec::from_bits(&[1, 0, 0, 0, 0, 0, 0, 0])];
+        let e = DigitalExactEngine::new(rows);
+        let q = BitVec::from_bits(&[1, 1, 0, 0, 0, 0, 0, 0]);
+        let s = e.scores(&q);
+        assert_eq!(s[0], 0.0);
+        assert!(s.iter().all(|x| x.is_finite()));
+        assert_eq!(e.search(&q).winner, 1);
+    }
+}
+
+#[cfg(test)]
+mod topk_tests {
+    use super::*;
+    use crate::util::{rng, BitVec};
+
+    #[test]
+    fn topk_ordering_and_head_matches_search() {
+        let mut r = rng(21);
+        let rows: Vec<BitVec> = (0..40).map(|_| BitVec::random(96, 0.5, &mut r)).collect();
+        let e = DigitalExactEngine::new(rows);
+        for _ in 0..20 {
+            let q = BitVec::random(96, 0.5, &mut r);
+            let top = e.search_topk(&q, 5);
+            assert_eq!(top.len(), 5);
+            assert_eq!(top[0].winner, e.search(&q).winner, "head must equal the WTA winner");
+            for w in top.windows(2) {
+                assert!(
+                    w[0].score > w[1].score
+                        || (w[0].score == w[1].score && w[0].winner < w[1].winner),
+                    "descending with index tie-break"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn topk_k_larger_than_rows_clamps() {
+        let rows = vec![BitVec::from_bits(&[1, 0]), BitVec::from_bits(&[0, 1])];
+        let e = DigitalExactEngine::new(rows);
+        let top = e.search_topk(&BitVec::from_bits(&[1, 1]), 10);
+        assert_eq!(top.len(), 2);
+    }
+}

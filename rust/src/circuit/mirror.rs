@@ -1,0 +1,74 @@
+//! Current mirror with gain and mismatch. COSIME uses mirrors to (a) copy the
+//! array wordline currents into the translinear loop, (b) amplify the
+//! translinear outputs up to the WTA working range ("amplification current
+//! mirrors", §4.1), and (c) close the WTA excitatory feedback path (Fig. 3c).
+
+/// A (possibly ratioed) current mirror: `I_out = gain × mismatch × I_in`.
+#[derive(Debug, Clone, Copy)]
+pub struct CurrentMirror {
+    /// Design gain from the W/L ratio of the output leg.
+    pub gain: f64,
+    /// Frozen multiplicative mismatch of this instance (1.0 = ideal).
+    pub mismatch: f64,
+    /// Compliance limit: the output leg saturates at this current (A).
+    pub i_max: f64,
+}
+
+impl CurrentMirror {
+    pub fn ideal(gain: f64) -> Self {
+        CurrentMirror { gain, mismatch: 1.0, i_max: f64::INFINITY }
+    }
+
+    pub fn with_mismatch(gain: f64, mismatch: f64) -> Self {
+        CurrentMirror { gain, mismatch, i_max: f64::INFINITY }
+    }
+
+    /// Mirror an input current through this instance.
+    pub fn copy(&self, i_in: f64) -> f64 {
+        (self.gain * self.mismatch * i_in.max(0.0)).min(self.i_max)
+    }
+
+    /// Supply charge drawn per unit time by both legs while conducting
+    /// (used by the energy model: input + output legs both burn I×V).
+    pub fn supply_current(&self, i_in: f64) -> f64 {
+        i_in.max(0.0) + self.copy(i_in)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ideal_mirror_copies() {
+        let m = CurrentMirror::ideal(1.0);
+        assert_eq!(m.copy(3e-7), 3e-7);
+        let m = CurrentMirror::ideal(20.0);
+        assert_eq!(m.copy(1e-7), 2e-6);
+    }
+
+    #[test]
+    fn mismatch_scales_output() {
+        let m = CurrentMirror::with_mismatch(2.0, 1.1);
+        assert!((m.copy(1e-6) - 2.2e-6).abs() < 1e-18);
+    }
+
+    #[test]
+    fn negative_input_clamped() {
+        let m = CurrentMirror::ideal(1.0);
+        assert_eq!(m.copy(-1e-6), 0.0);
+    }
+
+    #[test]
+    fn compliance_limit_saturates() {
+        let mut m = CurrentMirror::ideal(10.0);
+        m.i_max = 5e-6;
+        assert_eq!(m.copy(1e-6), 5e-6);
+    }
+
+    #[test]
+    fn supply_current_counts_both_legs() {
+        let m = CurrentMirror::ideal(3.0);
+        assert!((m.supply_current(1e-6) - 4e-6).abs() < 1e-18);
+    }
+}

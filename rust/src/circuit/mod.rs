@@ -1,0 +1,21 @@
+//! Analog circuit layer (paper §3.3–§3.5): subthreshold MOS law, current
+//! mirrors, the translinear `X²/Y` loop, and the Lazzaro O(N) winner-take-all
+//! network with a transient ODE integrator.
+//!
+//! The paper validates these blocks in Cadence Spectre; we solve the same
+//! subthreshold equations (Eq. 3–6 for the translinear loop, Eq. 8–14 for the
+//! WTA small-signal dynamics) numerically. Each block exposes both a *static*
+//! solve (operating point) and, for the WTA, a *transient* solve that yields
+//! the settle latency the paper reports (search delay, Fig. 4b / Fig. 6).
+
+mod mirror;
+mod subthreshold;
+mod translinear;
+mod waveform;
+mod wta;
+
+pub use mirror::CurrentMirror;
+pub use subthreshold::{ids_subthreshold, vgs_for_current};
+pub use translinear::{Translinear, TranslinearInstance};
+pub use waveform::{Trace, Waveform};
+pub use wta::{Wta, WtaInstance, WtaOutcome};

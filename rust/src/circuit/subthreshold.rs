@@ -1,0 +1,48 @@
+//! Subthreshold (weak inversion) MOS law — paper Eq. 3/Eq. 5:
+//! `I_DS ≈ I_0 (W/L) exp(V_GS / ηV_T)` and its inverse.
+
+use crate::config::consts;
+
+/// Drain-source current of a subthreshold MOS (paper Eq. 3).
+/// Exponent is clamped to keep the behavioral solver finite when a node
+/// briefly overshoots during transients.
+pub fn ids_subthreshold(i0_wl: f64, v_gs: f64, eta: f64) -> f64 {
+    let x = (v_gs / (eta * consts::V_T)).clamp(-80.0, 80.0);
+    i0_wl * x.exp()
+}
+
+/// Gate-source voltage required for a target subthreshold current
+/// (paper Eq. 5: `V_GS = ηV_T ln(I_DS/I_0)`).
+pub fn vgs_for_current(i0_wl: f64, i_ds: f64, eta: f64) -> f64 {
+    assert!(i_ds > 0.0 && i0_wl > 0.0, "currents must be positive");
+    eta * consts::V_T * (i_ds / i0_wl).ln()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn law_and_inverse_roundtrip() {
+        let (i0, eta) = (1e-7, 1.35);
+        for &i in &[1e-9, 5e-8, 3e-7, 2e-6] {
+            let v = vgs_for_current(i0, i, eta);
+            let back = ids_subthreshold(i0, v, eta);
+            assert!((back - i).abs() / i < 1e-9, "{i} -> {back}");
+        }
+    }
+
+    #[test]
+    fn exponential_slope_is_eta_vt_per_e_fold() {
+        let (i0, eta) = (1e-7, 1.4);
+        let i1 = ids_subthreshold(i0, 0.2, eta);
+        let i2 = ids_subthreshold(i0, 0.2 + eta * crate::config::consts::V_T, eta);
+        assert!((i2 / i1 - std::f64::consts::E).abs() < 1e-9);
+    }
+
+    #[test]
+    fn clamp_prevents_overflow() {
+        let i = ids_subthreshold(1e-7, 100.0, 1.0);
+        assert!(i.is_finite());
+    }
+}

@@ -1,0 +1,182 @@
+//! Translinear squaring/division circuit (paper §3.3, Fig. 3b).
+//!
+//! The loop of CW transistors {M1, M4} and CCW transistors {M2, M5} in weak
+//! inversion enforces ΣV_GS(CW) = ΣV_GS(CCW) (Eq. 4), which with the
+//! exponential law (Eq. 3/5) yields `I_z = I_x² / I_y` (Eq. 6).
+//!
+//! The behavioral model adds what Spectre shows in Fig. 4a:
+//! * a leakage floor at very small I_x (left flat region),
+//! * soft compression once I_x pushes the CW devices out of weak inversion
+//!   (right bend), with the knee set by `i_x_max`,
+//! * per-instance gain error from MOS V_TH/size mismatch (Monte Carlo).
+
+use crate::config::TranslinearConfig;
+use crate::device::VariationSampler;
+use crate::util::Rng;
+
+/// Design-level (nominal) translinear block.
+#[derive(Debug, Clone)]
+pub struct Translinear {
+    pub cfg: TranslinearConfig,
+}
+
+/// A fabricated instance with frozen mismatch, as used per array row.
+#[derive(Debug, Clone)]
+pub struct TranslinearInstance {
+    pub cfg: TranslinearConfig,
+    /// Frozen multiplicative gain error of the loop (V_TH mismatch around the
+    /// translinear loop enters as a current-gain factor).
+    pub gain: f64,
+    /// Frozen additive input-referred offset on I_x (A).
+    pub i_offset: f64,
+}
+
+impl Translinear {
+    pub fn new(cfg: TranslinearConfig) -> Self {
+        Translinear { cfg }
+    }
+
+    /// Ideal transfer (paper Eq. 6), used as the theory curve in Fig. 4a.
+    pub fn transfer_ideal(&self, i_x: f64, i_y: f64) -> f64 {
+        let i_y = i_y.max(1e-15);
+        i_x.max(0.0).powi(2) / i_y
+    }
+
+    /// Behavioral transfer with leakage floor and weak-inversion compression.
+    pub fn transfer(&self, i_x: f64, i_y: f64) -> f64 {
+        let c = &self.cfg;
+        let i_x = i_x.max(0.0);
+        let i_y = i_y.max(1e-15);
+        // Soft compression of the effective input beyond the weak-inversion
+        // knee: x_eff → i_x_max as i_x → ∞ (CW devices leave subthreshold).
+        let p = c.sat_sharpness;
+        let x_eff = i_x / (1.0 + (i_x / c.i_x_max).powf(p)).powf(1.0 / p);
+        x_eff * x_eff / i_y + c.i_leak
+    }
+
+    /// Fabricate an instance with frozen Monte Carlo mismatch.
+    pub fn instance(&self, sampler: &VariationSampler, rng: &mut Rng) -> TranslinearInstance {
+        // Four loop devices + two mirror legs contribute; their V_TH errors
+        // combine into one loop gain (CW up, CCW down) — sample two stage
+        // gains and take the ratio, matching the loop topology.
+        let g_cw = sampler.stage_gain(rng);
+        let g_ccw = sampler.stage_gain(rng);
+        let gain = (g_cw / g_ccw).clamp(0.25, 4.0);
+        // Input-referred offset from mirror leakage, small vs. operating range.
+        let i_offset = self.cfg.i_x_min * 0.1 * (sampler.stage_gain(rng) - 1.0);
+        TranslinearInstance { cfg: self.cfg.clone(), gain, i_offset }
+    }
+
+    /// Ideal (mismatch-free) instance.
+    pub fn ideal_instance(&self) -> TranslinearInstance {
+        TranslinearInstance { cfg: self.cfg.clone(), gain: 1.0, i_offset: 0.0 }
+    }
+}
+
+impl TranslinearInstance {
+    /// Output current of this fabricated row (A).
+    pub fn output(&self, i_x: f64, i_y: f64) -> f64 {
+        let t = Translinear { cfg: self.cfg.clone() };
+        self.gain * t.transfer((i_x + self.i_offset).max(0.0), i_y)
+    }
+
+    /// Supply current drawn while settled (for the energy model): the loop
+    /// conducts I_x (twice, CW pair), I_y, and I_z.
+    pub fn supply_current(&self, i_x: f64, i_y: f64) -> f64 {
+        2.0 * i_x.max(0.0) + i_y.max(0.0) + self.output(i_x, i_y)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{CosimeConfig, TranslinearConfig};
+    use crate::util::rng;
+
+    fn tl() -> Translinear {
+        Translinear::new(TranslinearConfig::default())
+    }
+
+    #[test]
+    fn ideal_is_x_squared_over_y() {
+        let t = tl();
+        assert!((t.transfer_ideal(600e-9, 600e-9) - 600e-9).abs() < 1e-15);
+        assert!((t.transfer_ideal(300e-9, 600e-9) - 150e-9).abs() < 1e-15);
+    }
+
+    #[test]
+    fn behavioral_matches_ideal_in_operating_region() {
+        // Fig. 4a center region: simulated aligns with theory.
+        let t = tl();
+        let i_y = t.cfg.i_y_nominal;
+        for &ix in &[20e-9, 100e-9, 300e-9, 600e-9] {
+            let ideal = t.transfer_ideal(ix, i_y);
+            let beh = t.transfer(ix, i_y);
+            assert!(
+                (beh - ideal).abs() / ideal < 0.05,
+                "ix={ix}: ideal {ideal} vs behavioral {beh}"
+            );
+        }
+    }
+
+    #[test]
+    fn compression_above_operating_range() {
+        // Fig. 4a right bend: above i_x_max the output falls below ideal.
+        let t = tl();
+        let i_y = t.cfg.i_y_nominal;
+        let ix = t.cfg.i_x_max * 8.0;
+        let beh = t.transfer(ix, i_y);
+        let ideal = t.transfer_ideal(ix, i_y);
+        assert!(beh < 0.1 * ideal, "must compress: {beh} vs {ideal}");
+    }
+
+    #[test]
+    fn leakage_floor_below_operating_range() {
+        let t = tl();
+        let out = t.transfer(0.0, t.cfg.i_y_nominal);
+        assert!(out > 0.0 && out <= 2.0 * t.cfg.i_leak);
+    }
+
+    #[test]
+    fn transfer_monotone_in_ix() {
+        let t = tl();
+        let i_y = t.cfg.i_y_nominal;
+        let mut prev = -1.0;
+        for step in 0..200 {
+            let ix = 1e-9 * 1.06f64.powi(step);
+            let z = t.transfer(ix, i_y);
+            assert!(z >= prev, "non-monotone at ix={ix}");
+            prev = z;
+        }
+    }
+
+    #[test]
+    fn larger_norm_divides_score_down() {
+        let t = tl();
+        let z1 = t.transfer(300e-9, 400e-9);
+        let z2 = t.transfer(300e-9, 800e-9);
+        assert!((z1 / z2 - 2.0).abs() < 0.05);
+    }
+
+    #[test]
+    fn instance_gain_distribution_sane() {
+        let cfg = CosimeConfig::default();
+        let sampler = crate::device::VariationSampler::new(&cfg);
+        let t = tl();
+        let mut r = rng(11);
+        let gains: Vec<f64> = (0..2000).map(|_| t.instance(&sampler, &mut r).gain).collect();
+        let m = crate::util::mean(&gains);
+        let sd = crate::util::stddev(&gains);
+        assert!((m - 1.0).abs() < 0.25, "mean {m}");
+        // Loop gain sigma ~ sqrt(2) × stage sigma; must be nonzero but bounded.
+        assert!(sd > 0.1 && sd < 1.0, "sd {sd}");
+    }
+
+    #[test]
+    fn ideal_instance_reproduces_nominal() {
+        let t = tl();
+        let inst = t.ideal_instance();
+        let i_y = t.cfg.i_y_nominal;
+        assert!((inst.output(300e-9, i_y) - t.transfer(300e-9, i_y)).abs() < 1e-18);
+    }
+}

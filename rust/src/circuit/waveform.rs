@@ -1,0 +1,98 @@
+//! Waveform capture for transient simulations — backs the Fig. 4b and
+//! Fig. 7a plots and the CSV dumps under `results/`.
+
+/// One named signal over time.
+#[derive(Debug, Clone)]
+pub struct Trace {
+    pub name: String,
+    /// Sample values, one per stored timestep.
+    pub values: Vec<f64>,
+}
+
+/// A set of equally-sampled traces sharing a time base.
+#[derive(Debug, Clone)]
+pub struct Waveform {
+    /// Time between stored samples (s).
+    pub dt: f64,
+    pub traces: Vec<Trace>,
+}
+
+impl Waveform {
+    pub fn new(dt: f64, names: &[String]) -> Self {
+        Waveform {
+            dt,
+            traces: names.iter().map(|n| Trace { name: n.clone(), values: Vec::new() }).collect(),
+        }
+    }
+
+    /// Append one sample per trace (must match trace count).
+    pub fn push(&mut self, samples: &[f64]) {
+        assert_eq!(samples.len(), self.traces.len(), "sample/trace count mismatch");
+        for (t, &s) in self.traces.iter_mut().zip(samples) {
+            t.values.push(s);
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.traces.first().map_or(0, |t| t.values.len())
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Time axis in seconds.
+    pub fn times(&self) -> Vec<f64> {
+        (0..self.len()).map(|i| i as f64 * self.dt).collect()
+    }
+
+    /// Render as CSV: `t,<name1>,<name2>,...`.
+    pub fn to_csv(&self) -> String {
+        let mut out = String::from("t");
+        for t in &self.traces {
+            out.push(',');
+            out.push_str(&t.name);
+        }
+        out.push('\n');
+        for i in 0..self.len() {
+            out.push_str(&format!("{:.4e}", i as f64 * self.dt));
+            for t in &self.traces {
+                out.push_str(&format!(",{:.6e}", t.values[i]));
+            }
+            out.push('\n');
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn push_and_axes() {
+        let mut w = Waveform::new(1e-9, &["a".into(), "b".into()]);
+        assert!(w.is_empty());
+        w.push(&[1.0, 2.0]);
+        w.push(&[3.0, 4.0]);
+        assert_eq!(w.len(), 2);
+        assert_eq!(w.times(), vec![0.0, 1e-9]);
+        assert_eq!(w.traces[1].values, vec![2.0, 4.0]);
+    }
+
+    #[test]
+    fn csv_has_header_and_rows() {
+        let mut w = Waveform::new(0.5, &["x".into()]);
+        w.push(&[1.5]);
+        let csv = w.to_csv();
+        assert!(csv.starts_with("t,x\n"));
+        assert_eq!(csv.lines().count(), 2);
+    }
+
+    #[test]
+    #[should_panic(expected = "mismatch")]
+    fn push_wrong_arity_panics() {
+        let mut w = Waveform::new(1.0, &["x".into()]);
+        w.push(&[1.0, 2.0]);
+    }
+}

@@ -1,0 +1,370 @@
+//! Lazzaro O(N) current-mode winner-take-all network (paper §3.4–3.5,
+//! Fig. 3c) with excitatory feedback mirrors [22][23].
+//!
+//! Topology per rail i: input current I_zi charges node V_i; sourcing
+//! transistor T1_i (gate on the common rail V_c) sinks the node; output
+//! transistor T2_i (gate V_i, source V_c) carries
+//! `I_oi = I_o·exp((V_i−V_c)/ηV_T)` (paper Eq. 10); all I_oi sum into the
+//! common rail against the bias sink I_c, so ΣI_oi = I_c at equilibrium and
+//! the rail with the largest input ends up carrying ≈ all of I_c. The
+//! feedback mirror (T3/T4) returns β·I_oi to node i, sharpening the decision.
+//!
+//! Solvers:
+//! * [`Wta::settle`] — transient integration (explicit Euler with a
+//!   thermal-voltage slew clamp; the common rail is treated as the fast
+//!   algebraic constraint ΣI_oi = I_c, which is exact for C_c → 0). Yields
+//!   the *search delay* the paper measures plus full waveforms (Fig. 4b).
+//! * [`WtaInstance::winner_static`] — operating-point winner with frozen
+//!   input offsets, used by the fast Monte Carlo path (Fig. 7).
+
+use crate::config::{consts, WtaConfig};
+use crate::util::Rng;
+
+use super::waveform::Waveform;
+use crate::device::VariationSampler;
+
+/// Nominal WTA block.
+#[derive(Debug, Clone)]
+pub struct Wta {
+    pub cfg: WtaConfig,
+}
+
+/// A fabricated WTA instance: frozen per-rail input-referred offsets.
+#[derive(Debug, Clone)]
+pub struct WtaInstance {
+    pub cfg: WtaConfig,
+    /// Multiplicative input-referred error per rail (mirror + T1/T2 mismatch).
+    pub rail_gain: Vec<f64>,
+}
+
+/// Result of a transient settle.
+#[derive(Debug, Clone)]
+pub struct WtaOutcome {
+    /// Winning rail index (output current crossed the win threshold).
+    pub winner: usize,
+    /// Time from activation to decision (s). `t_max` if never settled.
+    pub latency: f64,
+    /// Whether the separation criterion was actually met before `t_max`.
+    pub settled: bool,
+    /// Time-averaged total supply current during the search (A) — feeds the
+    /// energy model (bias + output branches + feedback mirrors).
+    pub avg_supply_current: f64,
+    /// Optional waveform capture: per-rail output currents (Fig. 4b).
+    pub waveform: Option<Waveform>,
+}
+
+impl Wta {
+    pub fn new(cfg: WtaConfig) -> Self {
+        Wta { cfg }
+    }
+
+    /// Output-transistor prefactor I_o (A): sized so that a rail carrying the
+    /// full bias sits at a comfortable subthreshold V_GS.
+    fn i_o(&self) -> f64 {
+        1e-7
+    }
+
+    /// Sourcing-transistor prefactor I_s (A).
+    fn i_s(&self) -> f64 {
+        1e-9
+    }
+
+    /// Total bias current for an M-rail instance: the common-rail source is
+    /// sized with the array (one share per branch), which keeps the initial
+    /// per-rail output current — and with it the regenerative feedback
+    /// strength and settle latency — independent of M (§3.5), while total
+    /// WTA supply current grows linearly with rails (Fig. 6a energy trend).
+    fn i_c(&self, rails: usize) -> f64 {
+        self.cfg.i_bias * rails as f64
+    }
+
+    /// Solve the common-rail voltage from the algebraic constraint
+    /// ΣI_oi = I_c given node voltages (log-sum-exp, numerically safe).
+    fn solve_vc(&self, v: &[f64]) -> f64 {
+        let n_vt = self.cfg.eta * consts::V_T;
+        let vmax = v.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+        let sum: f64 = v.iter().map(|&vi| ((vi - vmax) / n_vt).exp()).sum();
+        // I_o · exp((V_i - V_c)/nVT) summed = I_c
+        vmax + n_vt * (self.i_o() * sum / self.i_c(v.len())).ln()
+    }
+
+    /// Transient settle. `inputs` are the rail input currents (A), applied as
+    /// a step at t = 0 (the paper activates the WTA only after the
+    /// translinear outputs are stable — Fig. 4b note). If `capture` is set,
+    /// waveforms of every rail's output current are recorded.
+    ///
+    /// Decision criterion: the winning rail's output current must exceed the
+    /// runner-up's by `win_separation`× and persist. This matches the paper's
+    /// scalability argument (§3.5): the *differential* dynamics dV₁/dI_z1 are
+    /// M-independent up to an (M−1)/M factor (Eq. 13–14), so the separation
+    /// latency is near-flat in the number of rails — unlike an
+    /// absolute-current criterion, which would pick up a log(M) term.
+    pub fn settle(&self, inputs: &[f64], capture: bool) -> WtaOutcome {
+        let c = &self.cfg;
+        let m = inputs.len();
+        assert!(m >= 2, "WTA needs at least two rails");
+        let n_vt = c.eta * consts::V_T;
+        let (i_o, i_s) = (self.i_o(), self.i_s());
+
+        // Node voltages start discharged.
+        let mut v = vec![0.0f64; m];
+        let steps = (c.t_max / c.dt).ceil() as usize;
+        let capture_stride = (steps / 4000).max(1);
+        let mut wf = capture.then(|| {
+            let names: Vec<String> =
+                (0..m).map(|i| format!("i_out_{i}")).chain(std::iter::once("v_c".into())).collect();
+            Waveform::new(c.dt * capture_stride as f64, &names)
+        });
+
+        let slew_clamp = n_vt; // max |ΔV| per step: one thermal voltage
+        let i_c = self.i_c(m);
+        let i_in_sum: f64 = inputs.iter().sum();
+        let mut supply_integral = 0.0f64;
+        let mut elapsed = 0.0f64;
+        let mut winner = 0usize;
+        let mut settled_at: Option<f64> = None;
+        let mut hold = 0usize;
+        let hold_needed = 8; // decision must persist to count as settled
+
+        for step in 0..steps {
+            let v_c = self.solve_vc(&v);
+            // Output currents (paper Eq. 10).
+            let i_out: Vec<f64> =
+                v.iter().map(|&vi| i_o * (((vi - v_c) / n_vt).clamp(-80.0, 80.0)).exp()).collect();
+            let i_out_sum: f64 = i_out.iter().sum();
+
+            // Supply accounting: bias sink + output branches + feedback
+            // mirrors + input branches (two mirror legs each, §4.1).
+            supply_integral +=
+                (i_c + i_out_sum + 2.0 * c.feedback_gain * i_out_sum + 2.0 * i_in_sum) * c.dt;
+            elapsed = (step + 1) as f64 * c.dt;
+
+            if let Some(w) = wf.as_mut() {
+                if step % capture_stride == 0 {
+                    let mut row = i_out.clone();
+                    row.push(v_c);
+                    w.push(&row);
+                }
+            }
+
+            // Decision check: winner separated from runner-up.
+            let (argmax, imax) = i_out
+                .iter()
+                .enumerate()
+                .map(|(i, &x)| (i, x))
+                .max_by(|a, b| a.1.partial_cmp(&b.1).expect("finite currents"))
+                .expect("nonempty");
+            let second = i_out
+                .iter()
+                .enumerate()
+                .filter(|&(i, _)| i != argmax)
+                .map(|(_, &x)| x)
+                .fold(f64::NEG_INFINITY, f64::max);
+            // Absolute floor: 1.5× the per-rail equal share, M-independent.
+            if imax >= c.win_separation * second && imax > 1.5 * c.i_bias {
+                if hold == 0 || argmax == winner {
+                    hold += 1;
+                } else {
+                    hold = 1;
+                }
+                winner = argmax;
+                if hold >= hold_needed && settled_at.is_none() {
+                    settled_at = Some(elapsed);
+                    if !capture {
+                        break; // waveform runs record the full window
+                    }
+                }
+            } else {
+                hold = 0;
+            }
+
+            // Rail ODEs: C_v dV_i/dt = I_zi + β·I_oi − I_1i.
+            // T1 sink: gate V_c, Early-effect dependence on the drain V_i.
+            for i in 0..m {
+                let i_sink = i_s
+                    * ((v_c / n_vt).clamp(-80.0, 80.0)).exp()
+                    * (1.0 + v[i].max(0.0) / c.early_voltage);
+                let net = inputs[i] + c.feedback_gain * i_out[i] - i_sink;
+                let dv = (net / c.c_node * c.dt).clamp(-slew_clamp, slew_clamp);
+                v[i] = (v[i] + dv).clamp(-0.2, c.vdd);
+            }
+        }
+
+        let latency = settled_at.unwrap_or(c.t_max);
+        let avg_supply = supply_integral / elapsed.max(c.dt);
+        WtaOutcome {
+            winner,
+            latency,
+            settled: settled_at.is_some(),
+            avg_supply_current: avg_supply,
+            waveform: wf,
+        }
+    }
+
+    /// Fabricate an instance with frozen per-rail mismatch.
+    pub fn instance(&self, rails: usize, sampler: &VariationSampler, rng: &mut Rng) -> WtaInstance {
+        // Rail mismatch is input-referred: the paper's WTA resolves ≈1 %
+        // current differences, so the offset scale is a ~1 % multiplicative
+        // error plus the supply variation common factor folded per-rail.
+        let sigma = self.cfg.sigma_offset_rel;
+        let rail_gain = (0..rails)
+            .map(|_| {
+                let g = sampler.stage_gain(rng);
+                // Compress the full mirror-stage spread down to the WTA's
+                // input-referred resolution floor.
+                1.0 + sigma * (g - 1.0) / 0.15_f64.max(1e-9)
+            })
+            .collect();
+        WtaInstance { cfg: self.cfg.clone(), rail_gain }
+    }
+
+    /// Ideal instance (no mismatch).
+    pub fn ideal_instance(&self, rails: usize) -> WtaInstance {
+        WtaInstance { cfg: self.cfg.clone(), rail_gain: vec![1.0; rails] }
+    }
+}
+
+impl WtaInstance {
+    /// Operating-point winner: argmax of mismatched effective inputs (ties
+    /// break to the lowest rail). Matches the transient solver's decision
+    /// for inputs within the WTA's resolving range but runs in O(M).
+    pub fn winner_static(&self, inputs: &[f64]) -> usize {
+        assert_eq!(inputs.len(), self.rail_gain.len(), "rail count mismatch");
+        let (mut winner, mut best) = (0usize, f64::NEG_INFINITY);
+        for (i, (&x, &g)) in inputs.iter().zip(&self.rail_gain).enumerate() {
+            let v = x * g;
+            if v > best {
+                winner = i;
+                best = v;
+            }
+        }
+        winner
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{CosimeConfig, WtaConfig};
+    use crate::util::rng;
+
+    fn wta() -> Wta {
+        Wta::new(WtaConfig::default())
+    }
+
+    #[test]
+    fn picks_clear_winner() {
+        let w = wta();
+        let mut inputs = vec![0.3e-6; 8];
+        inputs[5] = 0.9e-6;
+        let out = w.settle(&inputs, false);
+        assert!(out.settled, "must settle");
+        assert_eq!(out.winner, 5);
+        assert!(out.latency < w.cfg.t_max / 2.0);
+    }
+
+    #[test]
+    fn resolves_worst_case_pair() {
+        // Paper's worst case: squared cosines 1/4 vs 1/5 → 25 % relative gap.
+        let w = wta();
+        let scale = 1.2e-6;
+        let inputs = vec![scale * 0.25, scale * 0.20];
+        let out = w.settle(&inputs, false);
+        assert!(out.settled);
+        assert_eq!(out.winner, 0);
+    }
+
+    #[test]
+    fn resolves_one_percent_difference() {
+        // Paper §3.4: "can distinguish input currents with even 1 % difference".
+        let w = wta();
+        let inputs = vec![1.0e-6, 1.01e-6, 0.99e-6, 1.0e-6];
+        let out = w.settle(&inputs, false);
+        assert!(out.settled);
+        assert_eq!(out.winner, 1);
+    }
+
+    #[test]
+    fn latency_weakly_dependent_on_rail_count() {
+        // Paper §3.5 / Fig. 6a: latency ≈ flat as rails scale.
+        let w = wta();
+        let lat = |m: usize| {
+            let mut inputs = vec![0.20e-6 * 1.2; m];
+            inputs[m / 2] = 0.25e-6 * 1.2;
+            let o = w.settle(&inputs, false);
+            assert!(o.settled, "m={m}");
+            o.latency
+        };
+        let l16 = lat(16);
+        let l256 = lat(256);
+        assert!(
+            l256 / l16 < 2.0,
+            "latency must be near-flat in rails: {l16:.2e} vs {l256:.2e}"
+        );
+    }
+
+    #[test]
+    fn waveform_capture_shapes() {
+        let w = wta();
+        let out = w.settle(&[0.3e-6, 0.5e-6, 0.2e-6], true);
+        let wf = out.waveform.expect("capture requested");
+        assert_eq!(wf.traces.len(), 4); // 3 rails + v_c
+        assert!(wf.len() > 10);
+        // Winner's final output current dominates.
+        let last = wf.traces[1].values.last().copied().unwrap();
+        let other = wf.traces[0].values.last().copied().unwrap();
+        assert!(last > 5.0 * other);
+    }
+
+    #[test]
+    fn static_winner_matches_transient_for_resolved_gaps() {
+        let cfg = CosimeConfig::default();
+        let w = wta();
+        let inst = w.ideal_instance(6);
+        let mut r = rng(9);
+        for _ in 0..20 {
+            let inputs: Vec<f64> = (0..6).map(|_| 0.2e-6 + 1.0e-6 * r.f64()).collect();
+            let stat = inst.winner_static(&inputs);
+            let tran = w.settle(&inputs, false);
+            if tran.settled {
+                assert_eq!(stat, tran.winner, "inputs {inputs:?}");
+            }
+        }
+        let _ = cfg;
+    }
+
+    #[test]
+    fn instance_mismatch_can_flip_tiny_gaps() {
+        // With ~1 % input-referred offsets, a 0.1 % gap is below resolution:
+        // across many fabricated instances the "wrong" rail must win sometimes.
+        let cfg = CosimeConfig::default();
+        let sampler = crate::device::VariationSampler::new(&cfg);
+        let w = wta();
+        let mut r = rng(10);
+        let inputs = vec![1.000e-6, 1.001e-6];
+        let mut wrong = 0;
+        for _ in 0..200 {
+            let inst = w.instance(2, &sampler, &mut r);
+            if inst.winner_static(&inputs) != 1 {
+                wrong += 1;
+            }
+        }
+        assert!(wrong > 10, "sub-resolution gap should flip sometimes: {wrong}");
+        assert!(wrong < 190, "but not always: {wrong}");
+    }
+
+    #[test]
+    fn energy_scales_with_rail_count() {
+        // Fig. 6a: search energy grows with the number of rails (more input
+        // and output branches driven by the supply).
+        let w = wta();
+        let sup = |m: usize| {
+            let mut inputs = vec![0.24e-6; m];
+            inputs[0] = 0.3e-6;
+            w.settle(&inputs, false).avg_supply_current
+        };
+        let s8 = sup(8);
+        let s64 = sup(64);
+        assert!(s64 > 3.0 * s8, "supply current must grow with rails: {s8:.2e} vs {s64:.2e}");
+    }
+}

@@ -1,0 +1,544 @@
+//! Configuration system. Every physical constant, array geometry, calibration
+//! knob and serving policy lives here, loadable from a TOML-subset file so
+//! benches and examples share one source of truth (`configs/*.toml`).
+//!
+//! (De)serialization is hand-rolled over [`crate::util::toml_lite`] because
+//! the offline build has no serde: each section struct implements
+//! [`FromToml`] field-by-field, and unknown keys are hard errors so typos in
+//! config files cannot silently fall back to defaults.
+
+use crate::util::toml_lite::{self, TomlDoc, TomlValue};
+use anyhow::{bail, ensure, Context, Result};
+use std::path::Path;
+
+/// Physical constants used throughout the circuit models.
+pub mod consts {
+    /// Thermal voltage kT/q at 300 K (V).
+    pub const V_T: f64 = 0.02585;
+    /// Elementary charge (C).
+    pub const Q: f64 = 1.602_176_634e-19;
+}
+
+/// Field-by-field TOML binding for a config section.
+trait FromToml {
+    /// Apply one `key = value` pair; error on unknown key or wrong type.
+    fn set(&mut self, key: &str, value: &TomlValue) -> Result<()>;
+    /// Dump to key/value pairs (for round-trip serialization).
+    fn dump(&self) -> Vec<(String, TomlValue)>;
+}
+
+fn want_f64(key: &str, v: &TomlValue) -> Result<f64> {
+    v.as_f64().with_context(|| format!("key '{key}' must be a number"))
+}
+
+fn want_usize(key: &str, v: &TomlValue) -> Result<usize> {
+    v.as_usize().with_context(|| format!("key '{key}' must be a non-negative integer"))
+}
+
+fn want_u64(key: &str, v: &TomlValue) -> Result<u64> {
+    v.as_u64().with_context(|| format!("key '{key}' must be a non-negative integer"))
+}
+
+fn want_bool(key: &str, v: &TomlValue) -> Result<bool> {
+    v.as_bool().with_context(|| format!("key '{key}' must be a boolean"))
+}
+
+/// Generates the `FromToml` impl: `bind_toml!(Struct { field, ... } usize:
+/// { field ... } bool: { ... } u64: { ... })` — f64 fields listed first.
+macro_rules! bind_toml {
+    ($ty:ty {
+        f64: [$($f:ident),* $(,)?],
+        usize: [$($u:ident),* $(,)?],
+        u64: [$($q:ident),* $(,)?],
+        bool: [$($b:ident),* $(,)?] $(,)?
+    }) => {
+        impl FromToml for $ty {
+            fn set(&mut self, key: &str, value: &TomlValue) -> Result<()> {
+                match key {
+                    $(stringify!($f) => self.$f = want_f64(key, value)?,)*
+                    $(stringify!($u) => self.$u = want_usize(key, value)?,)*
+                    $(stringify!($q) => self.$q = want_u64(key, value)?,)*
+                    $(stringify!($b) => self.$b = want_bool(key, value)?,)*
+                    _ => bail!("unknown key '{key}' in section [{}]", stringify!($ty)),
+                }
+                Ok(())
+            }
+            fn dump(&self) -> Vec<(String, TomlValue)> {
+                let mut out: Vec<(String, TomlValue)> = Vec::new();
+                $(out.push((stringify!($f).into(), TomlValue::Float(self.$f)));)*
+                $(out.push((stringify!($u).into(), TomlValue::Int(self.$u as i64)));)*
+                $(out.push((stringify!($q).into(), TomlValue::Int(self.$q as i64)));)*
+                $(out.push((stringify!($b).into(), TomlValue::Bool(self.$b)));)*
+                out
+            }
+        }
+    };
+}
+
+/// FeFET + 1FeFET1R device parameters (paper §2.1, refs [12][13]).
+#[derive(Debug, Clone, PartialEq)]
+pub struct DeviceConfig {
+    /// Low-V_TH (erased, stores '1') threshold voltage (V).
+    pub vth_low: f64,
+    /// High-V_TH (programmed, stores '0') threshold voltage (V).
+    pub vth_high: f64,
+    /// Device-to-device V_TH sigma, low state (V). Paper: 54 mV [12].
+    pub sigma_vth_low: f64,
+    /// Device-to-device V_TH sigma, high state (V). Paper: 82 mV [12].
+    pub sigma_vth_high: f64,
+    /// Relative sigma of the series resistor (1R). Paper: 8 % [13].
+    pub sigma_r_rel: f64,
+    /// Gate read voltage for an input bit '1' (V).
+    pub v_read: f64,
+    /// Wordline (drain) bias during search (V).
+    pub v_wl: f64,
+    /// Write pulse amplitude (V). Paper: ±4 V.
+    pub v_write: f64,
+    /// Write pulse width (s).
+    pub t_write: f64,
+    /// Subthreshold slope factor η.
+    pub eta: f64,
+    /// Transconductance prefactor I_0·W/L (A) for the FeFET saturation branch.
+    pub i0: f64,
+    /// Nominal series resistance (Ω). Sets the R-limited ON current.
+    pub r_series: f64,
+    /// OFF/ON current ratio floor for a high-V_TH cell under read bias.
+    pub off_on_ratio: f64,
+}
+
+impl Default for DeviceConfig {
+    fn default() -> Self {
+        DeviceConfig {
+            vth_low: -0.2,
+            vth_high: 1.8,
+            sigma_vth_low: 0.054,
+            sigma_vth_high: 0.082,
+            sigma_r_rel: 0.08,
+            v_read: 1.0,
+            v_wl: 0.6,
+            v_write: 4.0,
+            t_write: 1e-6,
+            eta: 1.4,
+            i0: 1e-6,
+            r_series: 2.0e6,
+            off_on_ratio: 1e-5,
+        }
+    }
+}
+
+bind_toml!(DeviceConfig {
+    f64: [vth_low, vth_high, sigma_vth_low, sigma_vth_high, sigma_r_rel, v_read, v_wl,
+          v_write, t_write, eta, i0, r_series, off_on_ratio],
+    usize: [],
+    u64: [],
+    bool: [],
+});
+
+/// Translinear circuit parameters (paper §3.3, Fig. 3b / Fig. 4a).
+#[derive(Debug, Clone, PartialEq)]
+pub struct TranslinearConfig {
+    /// Operating voltage V_0 keeping the loop in subthreshold (V). Paper: 0.6 V.
+    pub v0: f64,
+    /// Nominal denominator current I_y for the average squared L2 norm (A).
+    /// Paper: ~600 nA.
+    pub i_y_nominal: f64,
+    /// Lower edge of the valid I_x operating range (A) — below this the loop
+    /// output is dominated by leakage (left flat region of Fig. 4a).
+    pub i_x_min: f64,
+    /// Upper edge of the valid I_x operating range (A) — above this the CW
+    /// transistors leave weak inversion and the output compresses.
+    pub i_x_max: f64,
+    /// Leakage floor added to the output (A).
+    pub i_leak: f64,
+    /// Sharpness of the soft saturation beyond `i_x_max` (dimensionless ≥ 1).
+    pub sat_sharpness: f64,
+    /// Residual *pair* V_TH mismatch sigma (V) within the matched analog
+    /// stages. The paper's 10 % global MOS V_TH variation is common-mode and
+    /// cancels around the translinear loop / mirror pairs; what survives is
+    /// the A_VT/√(WL)-style local mismatch (~2 mV for analog-sized devices).
+    /// Calibrated jointly with `sigma_wl_rel` so the Fig. 7 worst case lands
+    /// at the paper's ≈90 % accuracy.
+    pub sigma_vth_mismatch: f64,
+    /// Residual relative W/L mismatch sigma after common-centroid layout
+    /// (the 10 % global size variation cancels in ratios).
+    pub sigma_wl_rel: f64,
+    /// Settling time constant of the loop + mirrors (s).
+    pub t_settle: f64,
+}
+
+impl Default for TranslinearConfig {
+    fn default() -> Self {
+        TranslinearConfig {
+            v0: 0.6,
+            i_y_nominal: 600e-9,
+            i_x_min: 5e-9,
+            i_x_max: 2e-6,
+            i_leak: 1e-11,
+            sat_sharpness: 4.0,
+            sigma_vth_mismatch: 0.002,
+            sigma_wl_rel: 0.05,
+            t_settle: 0.8e-9,
+        }
+    }
+}
+
+bind_toml!(TranslinearConfig {
+    f64: [v0, i_y_nominal, i_x_min, i_x_max, i_leak, sat_sharpness, sigma_vth_mismatch,
+          sigma_wl_rel, t_settle],
+    usize: [],
+    u64: [],
+    bool: [],
+});
+
+/// Winner-take-all circuit parameters (paper §3.4–3.5, Fig. 3c).
+#[derive(Debug, Clone, PartialEq)]
+pub struct WtaConfig {
+    /// Per-rail bias current share (A): the common-rail source T_C is sized
+    /// with the array, I_c = i_bias × rails (keeps settle latency flat in M).
+    pub i_bias: f64,
+    /// Supply voltage (V).
+    pub vdd: f64,
+    /// Early voltage V_A (V) — sets the gain in Eq. 9/Eq. 14.
+    pub early_voltage: f64,
+    /// Per-rail node capacitance C_v (F).
+    pub c_node: f64,
+    /// Common-rail capacitance C_c (F).
+    pub c_common: f64,
+    /// Excitatory feedback mirror gain β (paper: feedback current mirror).
+    pub feedback_gain: f64,
+    /// Subthreshold slope factor of the WTA transistors.
+    pub eta: f64,
+    /// Output-current separation ratio (winner vs. runner-up) that declares
+    /// the search settled (see Wta::settle).
+    pub win_separation: f64,
+    /// Input-referred offset sigma as a fraction of the rail current (MC).
+    pub sigma_offset_rel: f64,
+    /// Integrator timestep (s).
+    pub dt: f64,
+    /// Hard cap on simulated transient time (s).
+    pub t_max: f64,
+}
+
+impl Default for WtaConfig {
+    fn default() -> Self {
+        WtaConfig {
+            i_bias: 0.25e-6,
+            vdd: 0.8,
+            early_voltage: 12.0,
+            c_node: 4e-15,
+            c_common: 8e-15,
+            feedback_gain: 0.5,
+            eta: 1.35,
+            win_separation: 10.0,
+            sigma_offset_rel: 0.01,
+            dt: 2e-12,
+            t_max: 60e-9,
+        }
+    }
+}
+
+bind_toml!(WtaConfig {
+    f64: [i_bias, vdd, early_voltage, c_node, c_common, feedback_gain, eta, win_separation,
+          sigma_offset_rel, dt, t_max],
+    usize: [],
+    u64: [],
+    bool: [],
+});
+
+/// Array geometry and current-tuning policy (paper §3.2–3.3, Eq. 7).
+#[derive(Debug, Clone, PartialEq)]
+pub struct ArrayConfig {
+    /// Number of rows (stored words / classes) per physical tile.
+    pub rows: usize,
+    /// Word length in bits (dimensions). Paper evaluates 64–1024.
+    pub dims: usize,
+    /// Target full-scale row current delivered into the translinear stage (A).
+    /// The 1R is retuned as rows/dims scale so this stays constant (Eq. 7).
+    pub i_row_full_scale: f64,
+    /// Expected bit density of stored words (used to center I_y).
+    pub expected_density: f64,
+}
+
+impl Default for ArrayConfig {
+    fn default() -> Self {
+        ArrayConfig { rows: 256, dims: 1024, i_row_full_scale: 1.2e-6, expected_density: 0.5 }
+    }
+}
+
+bind_toml!(ArrayConfig {
+    f64: [i_row_full_scale, expected_density],
+    usize: [rows, dims],
+    u64: [],
+    bool: [],
+});
+
+/// Energy/latency/area calibration (paper Table 1 + Fig. 6). The constants
+/// are fit so a 256×256 array lands on the paper's 0.286 fJ/bit, 3 ns,
+/// 0.0198 mm² with a ≈56 % WTA / ≈43 % translinear energy split.
+#[derive(Debug, Clone, PartialEq)]
+pub struct EnergyConfig {
+    /// Effective current multiplier of the translinear block and its
+    /// amplification mirrors, per row, relative to (I_x + I_y + I_z).
+    pub translinear_mirror_factor: f64,
+    /// Effective current multiplier of the WTA block per rail, relative to
+    /// the rail input current (covers T1/T2 pair + feedback mirror).
+    pub wta_mirror_factor: f64,
+    /// Static WTA bias overhead (A) independent of rail count.
+    pub wta_static_current: f64,
+    /// Array access energy per active cell per search (J) — FeFET read is
+    /// field-driven so this is small (paper aspect (1)).
+    pub array_energy_per_cell: f64,
+    /// Peripheral (driver/precharge) energy per bitline per search (J).
+    pub driver_energy_per_line: f64,
+    /// 1FeFET1R cell area (µm²) at 45 nm (BEOL resistor ⇒ no extra area [13]).
+    pub cell_area_um2: f64,
+    /// Per-row translinear + mirror area (µm²).
+    pub translinear_area_um2: f64,
+    /// Per-rail WTA branch area (µm²).
+    pub wta_area_um2: f64,
+    /// Fixed peripheral area (µm²) per tile (drivers, bias generation).
+    pub fixed_area_um2: f64,
+    /// Write energy per cell per programming pulse (J).
+    pub write_energy_per_cell: f64,
+}
+
+impl Default for EnergyConfig {
+    fn default() -> Self {
+        EnergyConfig {
+            translinear_mirror_factor: 13.0,
+            wta_mirror_factor: 169.0,
+            wta_static_current: 2e-6,
+            array_energy_per_cell: 2.0e-18,
+            driver_energy_per_line: 0.1e-15,
+            cell_area_um2: 0.10,
+            translinear_area_um2: 16.0,
+            wta_area_um2: 8.0,
+            fixed_area_um2: 550.0,
+            write_energy_per_cell: 1.0e-15,
+        }
+    }
+}
+
+bind_toml!(EnergyConfig {
+    f64: [translinear_mirror_factor, wta_mirror_factor, wta_static_current,
+          array_energy_per_cell, driver_energy_per_line, cell_area_um2,
+          translinear_area_um2, wta_area_um2, fixed_area_um2, write_energy_per_cell],
+    usize: [],
+    u64: [],
+    bool: [],
+});
+
+/// Monte Carlo variation switches (paper Fig. 7: "all device-to-device
+/// variations": FeFET V_TH, 1R, MOS size + V_TH, supply).
+#[derive(Debug, Clone, PartialEq)]
+pub struct VariationConfig {
+    pub fefet_vth: bool,
+    pub resistor: bool,
+    pub mos: bool,
+    pub supply: bool,
+    /// Relative supply-voltage sigma (paper: 10 %).
+    pub sigma_supply_rel: f64,
+}
+
+impl Default for VariationConfig {
+    fn default() -> Self {
+        VariationConfig {
+            fefet_vth: true,
+            resistor: true,
+            mos: true,
+            supply: true,
+            sigma_supply_rel: 0.10,
+        }
+    }
+}
+
+bind_toml!(VariationConfig {
+    f64: [sigma_supply_rel],
+    usize: [],
+    u64: [],
+    bool: [fefet_vth, resistor, mos, supply],
+});
+
+/// Coordinator / serving policy (L3).
+#[derive(Debug, Clone, PartialEq)]
+pub struct CoordinatorConfig {
+    /// Maximum queries batched into one engine dispatch.
+    pub max_batch: usize,
+    /// Maximum time a query waits for batch-mates (µs). 0 = greedy
+    /// (continuous batching): dispatch whatever is queued immediately.
+    pub max_wait_us: u64,
+    /// Bounded queue depth; submissions beyond this are rejected (backpressure).
+    pub queue_depth: usize,
+    /// Worker threads draining the batch queue.
+    pub workers: usize,
+}
+
+impl Default for CoordinatorConfig {
+    fn default() -> Self {
+        CoordinatorConfig { max_batch: 64, max_wait_us: 0, queue_depth: 4096, workers: 2 }
+    }
+}
+
+bind_toml!(CoordinatorConfig {
+    f64: [],
+    usize: [max_batch, queue_depth, workers],
+    u64: [max_wait_us],
+    bool: [],
+});
+
+/// Top-level configuration.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct CosimeConfig {
+    pub device: DeviceConfig,
+    pub translinear: TranslinearConfig,
+    pub wta: WtaConfig,
+    pub array: ArrayConfig,
+    pub energy: EnergyConfig,
+    pub variation: VariationConfig,
+    pub coordinator: CoordinatorConfig,
+}
+
+impl CosimeConfig {
+    /// Load from a TOML file.
+    pub fn from_toml_file<P: AsRef<Path>>(path: P) -> Result<Self> {
+        let text = std::fs::read_to_string(path.as_ref())
+            .with_context(|| format!("reading {:?}", path.as_ref()))?;
+        Self::from_toml_str(&text)
+    }
+
+    /// Parse from a TOML string.
+    pub fn from_toml_str(text: &str) -> Result<Self> {
+        let doc = toml_lite::parse(text)?;
+        let mut cfg = CosimeConfig::default();
+        cfg.apply_doc(&doc)?;
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    fn apply_doc(&mut self, doc: &TomlDoc) -> Result<()> {
+        for (section, kvs) in doc {
+            let target: &mut dyn FromToml = match section.as_str() {
+                "" => {
+                    ensure!(kvs.is_empty(), "top-level keys are not allowed; use sections");
+                    continue;
+                }
+                "device" => &mut self.device,
+                "translinear" => &mut self.translinear,
+                "wta" => &mut self.wta,
+                "array" => &mut self.array,
+                "energy" => &mut self.energy,
+                "variation" => &mut self.variation,
+                "coordinator" => &mut self.coordinator,
+                other => bail!("unknown config section [{other}]"),
+            };
+            for (k, v) in kvs {
+                target.set(k, v).with_context(|| format!("in section [{section}]"))?;
+            }
+        }
+        Ok(())
+    }
+
+    /// Serialize to TOML text (round-trips through `from_toml_str`).
+    pub fn to_toml_string(&self) -> String {
+        let mut doc: TomlDoc = TomlDoc::new();
+        doc.insert("device".into(), self.device.dump().into_iter().collect());
+        doc.insert("translinear".into(), self.translinear.dump().into_iter().collect());
+        doc.insert("wta".into(), self.wta.dump().into_iter().collect());
+        doc.insert("array".into(), self.array.dump().into_iter().collect());
+        doc.insert("energy".into(), self.energy.dump().into_iter().collect());
+        doc.insert("variation".into(), self.variation.dump().into_iter().collect());
+        doc.insert("coordinator".into(), self.coordinator.dump().into_iter().collect());
+        toml_lite::to_string(&doc)
+    }
+
+    /// Sanity-check physical and policy parameters.
+    pub fn validate(&self) -> Result<()> {
+        let d = &self.device;
+        ensure!(d.vth_low < d.vth_high, "vth_low must be below vth_high");
+        ensure!(d.r_series > 0.0, "series resistance must be positive");
+        ensure!(d.eta >= 1.0, "subthreshold slope factor η ≥ 1");
+        let t = &self.translinear;
+        ensure!(t.i_x_min < t.i_x_max, "translinear operating range empty");
+        ensure!(t.i_y_nominal > 0.0, "I_y nominal must be positive");
+        let w = &self.wta;
+        ensure!(w.i_bias > 0.0 && w.dt > 0.0 && w.t_max > w.dt, "bad WTA params");
+        ensure!(w.win_separation > 1.0, "win_separation must exceed 1");
+        let a = &self.array;
+        ensure!(a.rows >= 2, "array needs at least 2 rows to search");
+        ensure!(a.dims >= 1, "array needs at least 1 bit per word");
+        ensure!((0.0..=1.0).contains(&a.expected_density), "expected_density must be in [0,1]");
+        let c = &self.coordinator;
+        ensure!(c.max_batch >= 1 && c.queue_depth >= 1 && c.workers >= 1, "bad coordinator");
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_config_validates() {
+        CosimeConfig::default().validate().unwrap();
+    }
+
+    #[test]
+    fn toml_roundtrip() {
+        let cfg = CosimeConfig::default();
+        let text = cfg.to_toml_string();
+        let back = CosimeConfig::from_toml_str(&text).unwrap();
+        assert_eq!(cfg, back);
+    }
+
+    #[test]
+    fn partial_toml_uses_defaults() {
+        let cfg = CosimeConfig::from_toml_str("[array]\nrows = 512\n").unwrap();
+        assert_eq!(cfg.array.rows, 512);
+        assert_eq!(cfg.array.dims, ArrayConfig::default().dims);
+        assert_eq!(cfg.device, DeviceConfig::default());
+    }
+
+    #[test]
+    fn unknown_keys_and_sections_rejected() {
+        assert!(CosimeConfig::from_toml_str("[array]\nrowz = 512\n").is_err());
+        assert!(CosimeConfig::from_toml_str("[nonsense]\nx = 1\n").is_err());
+        assert!(CosimeConfig::from_toml_str("stray = 1\n").is_err());
+    }
+
+    #[test]
+    fn type_errors_rejected() {
+        assert!(CosimeConfig::from_toml_str("[array]\nrows = \"many\"\n").is_err());
+        assert!(CosimeConfig::from_toml_str("[variation]\nmos = 3\n").is_err());
+    }
+
+    #[test]
+    fn invalid_configs_rejected() {
+        let mut cfg = CosimeConfig::default();
+        cfg.array.rows = 1;
+        assert!(cfg.validate().is_err());
+
+        let mut cfg = CosimeConfig::default();
+        cfg.device.vth_low = 2.0;
+        assert!(cfg.validate().is_err());
+
+        let mut cfg = CosimeConfig::default();
+        cfg.translinear.i_x_min = 1.0;
+        assert!(cfg.validate().is_err());
+
+        let mut cfg = CosimeConfig::default();
+        cfg.wta.win_separation = 0.9;
+        assert!(cfg.validate().is_err());
+    }
+
+    #[test]
+    fn paper_constants_present() {
+        // The defaults encode the paper's published variation numbers.
+        let d = DeviceConfig::default();
+        assert!((d.sigma_vth_low - 0.054).abs() < 1e-12);
+        assert!((d.sigma_vth_high - 0.082).abs() < 1e-12);
+        assert!((d.sigma_r_rel - 0.08).abs() < 1e-12);
+        assert!((TranslinearConfig::default().v0 - 0.6).abs() < 1e-12);
+        assert!((TranslinearConfig::default().i_y_nominal - 600e-9).abs() < 1e-15);
+        assert!((VariationConfig::default().sigma_supply_rel - 0.10).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,169 @@
+//! Serving metrics: counters and latency histograms for the queue, the
+//! engine execution, and end-to-end request time.
+
+use std::sync::Mutex;
+use std::time::Duration;
+
+use crate::util::Histogram;
+
+struct Inner {
+    submitted: u64,
+    completed: u64,
+    rejected_busy: u64,
+    batches: u64,
+    batch_sizes: Vec<u64>,
+    queue_us: Histogram,
+    exec_us: Histogram,
+    total_us: Histogram,
+}
+
+/// Thread-safe metrics sink.
+pub struct Metrics {
+    inner: Mutex<Inner>,
+}
+
+/// Point-in-time snapshot for reporting.
+#[derive(Debug, Clone)]
+pub struct MetricsSnapshot {
+    pub submitted: u64,
+    pub completed: u64,
+    pub rejected_busy: u64,
+    pub batches: u64,
+    pub mean_batch_size: f64,
+    pub queue_p50_us: f64,
+    pub queue_p99_us: f64,
+    pub exec_p50_us: f64,
+    pub exec_p99_us: f64,
+    pub total_p50_us: f64,
+    pub total_p99_us: f64,
+    pub total_mean_us: f64,
+}
+
+impl Default for Metrics {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Metrics {
+    pub fn new() -> Self {
+        let h = || Histogram::log_spaced(0.5, 10_000_000.0, 120);
+        Metrics {
+            inner: Mutex::new(Inner {
+                submitted: 0,
+                completed: 0,
+                rejected_busy: 0,
+                batches: 0,
+                batch_sizes: Vec::new(),
+                queue_us: h(),
+                exec_us: h(),
+                total_us: h(),
+            }),
+        }
+    }
+
+    pub fn on_submit(&self) {
+        self.inner.lock().unwrap().submitted += 1;
+    }
+
+    pub fn on_reject_busy(&self) {
+        self.inner.lock().unwrap().rejected_busy += 1;
+    }
+
+    pub fn on_batch(&self, size: usize) {
+        let mut g = self.inner.lock().unwrap();
+        g.batches += 1;
+        g.batch_sizes.push(size as u64);
+    }
+
+    pub fn on_complete(&self, queued: Duration, exec: Duration) {
+        let mut g = self.inner.lock().unwrap();
+        g.completed += 1;
+        let qu = queued.as_secs_f64() * 1e6;
+        let ex = exec.as_secs_f64() * 1e6;
+        g.queue_us.record(qu.max(0.5));
+        g.exec_us.record(ex.max(0.5));
+        g.total_us.record((qu + ex).max(0.5));
+    }
+
+    pub fn snapshot(&self) -> MetricsSnapshot {
+        let g = self.inner.lock().unwrap();
+        let mean_batch = if g.batch_sizes.is_empty() {
+            0.0
+        } else {
+            g.batch_sizes.iter().sum::<u64>() as f64 / g.batch_sizes.len() as f64
+        };
+        MetricsSnapshot {
+            submitted: g.submitted,
+            completed: g.completed,
+            rejected_busy: g.rejected_busy,
+            batches: g.batches,
+            mean_batch_size: mean_batch,
+            queue_p50_us: g.queue_us.quantile(0.5),
+            queue_p99_us: g.queue_us.quantile(0.99),
+            exec_p50_us: g.exec_us.quantile(0.5),
+            exec_p99_us: g.exec_us.quantile(0.99),
+            total_p50_us: g.total_us.quantile(0.5),
+            total_p99_us: g.total_us.quantile(0.99),
+            total_mean_us: g.total_us.mean(),
+        }
+    }
+}
+
+impl MetricsSnapshot {
+    /// Human-readable report block.
+    pub fn report(&self) -> String {
+        format!(
+            "requests: submitted={} completed={} rejected(busy)={}\n\
+             batches: {} (mean size {:.1})\n\
+             queue  µs: p50={:.1} p99={:.1}\n\
+             exec   µs: p50={:.1} p99={:.1}\n\
+             total  µs: p50={:.1} p99={:.1} mean={:.1}",
+            self.submitted,
+            self.completed,
+            self.rejected_busy,
+            self.batches,
+            self.mean_batch_size,
+            self.queue_p50_us,
+            self.queue_p99_us,
+            self.exec_p50_us,
+            self.exec_p99_us,
+            self.total_p50_us,
+            self.total_p99_us,
+            self.total_mean_us,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_accumulate() {
+        let m = Metrics::new();
+        m.on_submit();
+        m.on_submit();
+        m.on_reject_busy();
+        m.on_batch(8);
+        m.on_batch(4);
+        m.on_complete(Duration::from_micros(100), Duration::from_micros(50));
+        let s = m.snapshot();
+        assert_eq!(s.submitted, 2);
+        assert_eq!(s.rejected_busy, 1);
+        assert_eq!(s.batches, 2);
+        assert_eq!(s.completed, 1);
+        assert!((s.mean_batch_size - 6.0).abs() < 1e-9);
+        assert!(s.total_p50_us >= 100.0);
+    }
+
+    #[test]
+    fn report_renders() {
+        let m = Metrics::new();
+        m.on_submit();
+        m.on_complete(Duration::from_micros(10), Duration::from_micros(5));
+        let text = m.snapshot().report();
+        assert!(text.contains("submitted=1"));
+        assert!(text.contains("total"));
+    }
+}

@@ -1,0 +1,30 @@
+//! L3 coordinator: the AM *serving engine* around the COSIME tiles.
+//!
+//! The paper's system contribution is an inference-accelerating associative
+//! memory; the coordinator is the machinery a deployment needs around it
+//! (vLLM-router-shaped):
+//!
+//! * [`request`] — request/response types and submit errors.
+//! * [`tiles`] — [`tiles::TileManager`]: shards stored words across
+//!   fixed-geometry COSIME tiles and merges per-tile winners (hierarchical
+//!   WTA — exactly how multiple physical arrays compose, §3.5).
+//! * [`batcher`] — dynamic batching queue (size + deadline policy) with
+//!   bounded-depth backpressure.
+//! * [`service`] — [`service::AmService`]: worker threads draining the
+//!   batcher into the tile manager; per-request timing; graceful shutdown.
+//! * [`metrics`] — counters + latency histograms (queue/execute/total).
+//!
+//! Engines are pluggable ([`crate::am::AmEngine`]): digital (bit-exact),
+//! XLA (compiled Pallas artifact), analog (circuit-sim), or the baselines.
+
+pub mod batcher;
+pub mod metrics;
+pub mod request;
+pub mod service;
+pub mod tiles;
+
+pub use batcher::Batcher;
+pub use metrics::{Metrics, MetricsSnapshot};
+pub use request::{RequestTiming, SearchResponse, SubmitError};
+pub use service::AmService;
+pub use tiles::TileManager;

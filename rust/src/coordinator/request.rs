@@ -1,0 +1,38 @@
+//! Request/response types for the serving path.
+
+use std::time::Duration;
+
+/// Why a submission was rejected.
+#[derive(Debug, Clone, PartialEq, Eq, thiserror::Error)]
+pub enum SubmitError {
+    /// Bounded queue is full — backpressure; retry later.
+    #[error("queue full (backpressure)")]
+    Busy,
+    /// Service is shutting down.
+    #[error("service closed")]
+    Closed,
+    /// Query malformed (e.g. wrong dimensionality).
+    #[error("bad query: {0}")]
+    BadQuery(String),
+}
+
+/// Per-request timing, filled by the service.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct RequestTiming {
+    /// Time spent waiting in the batch queue.
+    pub queued: Duration,
+    /// Time in engine execution (shared across the batch).
+    pub exec: Duration,
+    /// Size of the batch this request rode in.
+    pub batch_size: usize,
+}
+
+/// A completed search.
+#[derive(Debug, Clone)]
+pub struct SearchResponse {
+    /// Global winning row index (across all tiles).
+    pub winner: usize,
+    /// Winning score in the engine metric.
+    pub score: f64,
+    pub timing: RequestTiming,
+}

@@ -1,0 +1,282 @@
+//! The AM serving service: worker threads drain the dynamic batcher into
+//! the tile manager; responses flow back over per-request channels with
+//! queue/execute timing attached.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{mpsc, Arc};
+use std::time::{Duration, Instant};
+
+use crate::config::CoordinatorConfig;
+use crate::util::BitVec;
+
+use super::batcher::Batcher;
+use super::metrics::{Metrics, MetricsSnapshot};
+use super::request::{RequestTiming, SearchResponse, SubmitError};
+use super::tiles::TileManager;
+
+struct Job {
+    query: BitVec,
+    reply: mpsc::SyncSender<SearchResponse>,
+}
+
+struct Shared {
+    batcher: Batcher<Job>,
+    tiles: TileManager,
+    metrics: Metrics,
+    running: AtomicBool,
+}
+
+/// Handle to a running AM service. Cloneable; dropping all clones does NOT
+/// stop the service — call [`AmService::shutdown`].
+#[derive(Clone)]
+pub struct AmService {
+    shared: Arc<Shared>,
+    workers: Arc<Vec<std::thread::JoinHandle<()>>>,
+}
+
+impl AmService {
+    /// Start `cfg.workers` worker threads over a tile manager.
+    pub fn start(cfg: &CoordinatorConfig, tiles: TileManager) -> AmService {
+        let shared = Arc::new(Shared {
+            batcher: Batcher::new(
+                cfg.max_batch,
+                Duration::from_micros(cfg.max_wait_us),
+                cfg.queue_depth,
+            ),
+            tiles,
+            metrics: Metrics::new(),
+            running: AtomicBool::new(true),
+        });
+        let workers = (0..cfg.workers.max(1))
+            .map(|w| {
+                let shared = shared.clone();
+                std::thread::Builder::new()
+                    .name(format!("cosime-worker-{w}"))
+                    .spawn(move || worker_loop(&shared))
+                    .expect("spawn worker")
+            })
+            .collect();
+        AmService { shared, workers: Arc::new(workers) }
+    }
+
+    /// Submit a query; returns a receiver for the response.
+    /// Fails fast with `Busy` under backpressure.
+    pub fn submit(&self, query: BitVec) -> Result<mpsc::Receiver<SearchResponse>, SubmitError> {
+        if query.len() != self.shared.tiles.dims() {
+            return Err(SubmitError::BadQuery(format!(
+                "query has {} bits, engine expects {}",
+                query.len(),
+                self.shared.tiles.dims()
+            )));
+        }
+        if !self.shared.running.load(Ordering::Acquire) {
+            return Err(SubmitError::Closed);
+        }
+        let (reply, rx) = mpsc::sync_channel(1);
+        self.shared.metrics.on_submit();
+        match self.shared.batcher.submit(Job { query, reply }) {
+            Ok(()) => Ok(rx),
+            Err(e) => {
+                if e == SubmitError::Busy {
+                    self.shared.metrics.on_reject_busy();
+                }
+                Err(e)
+            }
+        }
+    }
+
+    /// Convenience: submit and block for the response.
+    pub fn search_blocking(&self, query: BitVec) -> Result<SearchResponse, SubmitError> {
+        let rx = self.submit(query)?;
+        rx.recv().map_err(|_| SubmitError::Closed)
+    }
+
+    /// Submit with bounded retries under backpressure.
+    pub fn search_with_retry(
+        &self,
+        query: BitVec,
+        max_retries: usize,
+    ) -> Result<SearchResponse, SubmitError> {
+        let mut tries = 0;
+        loop {
+            match self.search_blocking(query.clone()) {
+                Err(SubmitError::Busy) if tries < max_retries => {
+                    tries += 1;
+                    std::thread::sleep(Duration::from_micros(50 << tries.min(6)));
+                }
+                other => return other,
+            }
+        }
+    }
+
+    pub fn metrics(&self) -> MetricsSnapshot {
+        self.shared.metrics.snapshot()
+    }
+
+    pub fn rows(&self) -> usize {
+        self.shared.tiles.rows()
+    }
+
+    pub fn dims(&self) -> usize {
+        self.shared.tiles.dims()
+    }
+
+    pub fn queue_len(&self) -> usize {
+        self.shared.batcher.len()
+    }
+
+    /// Graceful shutdown: drain the queue, stop workers, join them.
+    pub fn shutdown(self) {
+        self.shared.running.store(false, Ordering::Release);
+        self.shared.batcher.close();
+        if let Ok(workers) = Arc::try_unwrap(self.workers) {
+            for w in workers {
+                let _ = w.join();
+            }
+        }
+    }
+}
+
+fn worker_loop(shared: &Shared) {
+    while let Some(batch) = shared.batcher.next_batch() {
+        let now = Instant::now();
+        shared.metrics.on_batch(batch.len());
+        let queries: Vec<BitVec> = batch.iter().map(|p| p.item.query.clone()).collect();
+        let results = shared.tiles.search_batch(&queries);
+        let exec = now.elapsed();
+        for (pending, result) in batch.into_iter().zip(results) {
+            let queued = now.duration_since(pending.enqueued);
+            shared.metrics.on_complete(queued, exec);
+            let timing = RequestTiming { queued, exec, batch_size: queries.len() };
+            let _ = pending.item.reply.send(SearchResponse {
+                winner: result.winner,
+                score: result.score,
+                timing,
+            });
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::am::{AmEngine, DigitalExactEngine};
+    use crate::util::rng;
+
+    fn service(rows: usize, dims: usize, cfg: &CoordinatorConfig) -> (AmService, Vec<BitVec>) {
+        let mut r = rng(7);
+        let words: Vec<BitVec> = (0..rows).map(|_| BitVec::random(dims, 0.5, &mut r)).collect();
+        let tiles = TileManager::build(words.clone(), 64, |w| {
+            Ok::<Box<dyn AmEngine>, anyhow::Error>(Box::new(DigitalExactEngine::new(w)))
+        })
+        .unwrap();
+        (AmService::start(cfg, tiles), words)
+    }
+
+    #[test]
+    fn serves_correct_results() {
+        let cfg = CoordinatorConfig::default();
+        let (svc, words) = service(100, 64, &cfg);
+        let reference = DigitalExactEngine::new(words.clone());
+        let mut r = rng(8);
+        for _ in 0..30 {
+            let q = BitVec::random(64, 0.5, &mut r);
+            let resp = svc.search_blocking(q.clone()).unwrap();
+            assert_eq!(resp.winner, reference.search(&q).winner);
+            assert!(resp.timing.batch_size >= 1);
+        }
+        let m = svc.metrics();
+        assert_eq!(m.completed, 30);
+        svc.shutdown();
+    }
+
+    #[test]
+    fn self_queries_return_self() {
+        let cfg = CoordinatorConfig::default();
+        let (svc, words) = service(50, 64, &cfg);
+        for (i, w) in words.iter().enumerate().take(10) {
+            let resp = svc.search_blocking(w.clone()).unwrap();
+            assert_eq!(resp.winner, i);
+        }
+        svc.shutdown();
+    }
+
+    #[test]
+    fn bad_query_rejected_immediately() {
+        let cfg = CoordinatorConfig::default();
+        let (svc, _) = service(10, 64, &cfg);
+        match svc.submit(BitVec::zeros(32)) {
+            Err(SubmitError::BadQuery(_)) => {}
+            other => panic!("expected BadQuery, got {other:?}"),
+        }
+        svc.shutdown();
+    }
+
+    #[test]
+    fn closed_after_shutdown() {
+        let cfg = CoordinatorConfig::default();
+        let (svc, _) = service(10, 64, &cfg);
+        let svc2 = svc.clone();
+        svc.shutdown();
+        assert!(matches!(svc2.submit(BitVec::zeros(64)), Err(SubmitError::Closed)));
+    }
+
+    #[test]
+    fn concurrent_clients_all_served() {
+        let cfg = CoordinatorConfig { max_batch: 16, max_wait_us: 100, queue_depth: 1024, workers: 3 };
+        let (svc, words) = service(200, 64, &cfg);
+        let reference = DigitalExactEngine::new(words);
+        let errors = std::sync::atomic::AtomicUsize::new(0);
+        std::thread::scope(|s| {
+            for t in 0..6 {
+                let svc = svc.clone();
+                let reference = &reference;
+                let errors = &errors;
+                s.spawn(move || {
+                    let mut r = rng(50 + t);
+                    for _ in 0..50 {
+                        let q = BitVec::random(64, 0.5, &mut r);
+                        match svc.search_with_retry(q.clone(), 10) {
+                            Ok(resp) => {
+                                if resp.winner != reference.search(&q).winner {
+                                    errors.fetch_add(1, Ordering::Relaxed);
+                                }
+                            }
+                            Err(_) => {
+                                errors.fetch_add(1, Ordering::Relaxed);
+                            }
+                        }
+                    }
+                });
+            }
+        });
+        assert_eq!(errors.load(Ordering::Relaxed), 0);
+        let m = svc.metrics();
+        assert_eq!(m.completed, 300);
+        assert!(m.mean_batch_size >= 1.0);
+        svc.shutdown();
+    }
+
+    #[test]
+    fn backpressure_under_tiny_queue() {
+        // One slow worker + depth 1: bursts must hit Busy, not hang.
+        let cfg = CoordinatorConfig { max_batch: 1, max_wait_us: 1, queue_depth: 1, workers: 1 };
+        let (svc, _) = service(2000, 256, &cfg);
+        let mut r = rng(9);
+        let mut busy = 0;
+        let mut rxs = Vec::new();
+        for _ in 0..200 {
+            match svc.submit(BitVec::random(256, 0.5, &mut r)) {
+                Ok(rx) => rxs.push(rx),
+                Err(SubmitError::Busy) => busy += 1,
+                Err(e) => panic!("{e}"),
+            }
+        }
+        assert!(busy > 0, "tiny queue must reject some of a 200-burst");
+        for rx in rxs {
+            let _ = rx.recv();
+        }
+        assert_eq!(svc.metrics().rejected_busy as usize, busy);
+        svc.shutdown();
+    }
+}

@@ -1,0 +1,177 @@
+//! Tile manager: shards stored words across fixed-geometry COSIME tiles and
+//! merges per-tile winners — the hierarchical WTA composition of multiple
+//! physical arrays (paper §3.5: per-array WTAs race locally; the global
+//! winner is the max of local winners, valid because cosine scores are
+//! absolute X²/Y values, not rank-only).
+
+use anyhow::Result;
+
+use crate::am::{AmEngine, SearchResult};
+use crate::util::BitVec;
+
+/// A sharded AM: `tiles[i]` stores rows [offsets[i], offsets[i+1]).
+pub struct TileManager {
+    tiles: Vec<Box<dyn AmEngine>>,
+    offsets: Vec<usize>,
+    dims: usize,
+    total_rows: usize,
+}
+
+impl TileManager {
+    /// Shard `words` into tiles of at most `tile_capacity` rows, building
+    /// each tile with `factory` (pluggable engine backend).
+    pub fn build(
+        words: Vec<BitVec>,
+        tile_capacity: usize,
+        factory: impl Fn(Vec<BitVec>) -> Result<Box<dyn AmEngine>>,
+    ) -> Result<TileManager> {
+        assert!(tile_capacity >= 1, "tile capacity must be positive");
+        assert!(!words.is_empty(), "tile manager needs stored words");
+        let dims = words[0].len();
+        let total_rows = words.len();
+        let mut tiles = Vec::new();
+        let mut offsets = vec![0usize];
+        let mut remaining = words;
+        while !remaining.is_empty() {
+            let take = remaining.len().min(tile_capacity);
+            let rest = remaining.split_off(take);
+            tiles.push(factory(remaining)?);
+            offsets.push(offsets.last().unwrap() + take);
+            remaining = rest;
+        }
+        Ok(TileManager { tiles, offsets, dims, total_rows })
+    }
+
+    pub fn tile_count(&self) -> usize {
+        self.tiles.len()
+    }
+
+    pub fn rows(&self) -> usize {
+        self.total_rows
+    }
+
+    pub fn dims(&self) -> usize {
+        self.dims
+    }
+
+    /// Global NN search: per-tile local WTA, then a max over local winners.
+    pub fn search(&self, query: &BitVec) -> SearchResult {
+        assert_eq!(query.len(), self.dims, "query dims mismatch");
+        let mut best = SearchResult { winner: 0, score: f64::NEG_INFINITY };
+        for (t, tile) in self.tiles.iter().enumerate() {
+            let local = tile.search(query);
+            if local.score > best.score {
+                best = SearchResult { winner: self.offsets[t] + local.winner, score: local.score };
+            }
+        }
+        best
+    }
+
+    /// Batched global search: per-tile batched execution, merged per query.
+    pub fn search_batch(&self, queries: &[BitVec]) -> Vec<SearchResult> {
+        let mut best: Vec<SearchResult> = queries
+            .iter()
+            .map(|_| SearchResult { winner: 0, score: f64::NEG_INFINITY })
+            .collect();
+        for (t, tile) in self.tiles.iter().enumerate() {
+            let locals = tile.search_batch(queries);
+            for (b, local) in locals.into_iter().enumerate() {
+                if local.score > best[b].score {
+                    best[b] =
+                        SearchResult { winner: self.offsets[t] + local.winner, score: local.score };
+                }
+            }
+        }
+        best
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::am::DigitalExactEngine;
+    use crate::util::{prop, rng, BitVec};
+
+    fn digital_factory(words: Vec<BitVec>) -> Result<Box<dyn AmEngine>> {
+        Ok(Box::new(DigitalExactEngine::new(words)))
+    }
+
+    #[test]
+    fn sharding_covers_all_rows() {
+        let mut r = rng(1);
+        let words: Vec<BitVec> = (0..100).map(|_| BitVec::random(64, 0.5, &mut r)).collect();
+        let tm = TileManager::build(words, 32, digital_factory).unwrap();
+        assert_eq!(tm.tile_count(), 4); // 32+32+32+4
+        assert_eq!(tm.rows(), 100);
+    }
+
+    #[test]
+    fn tiled_search_equals_flat_argmax_property() {
+        // The core coordinator invariant: hierarchical WTA == flat argmax.
+        prop::check("tiled == flat", 40, 2, |r| {
+            let rows = 2 + r.below(60);
+            let dims = 16 + 8 * r.below(8);
+            let cap = 1 + r.below(rows);
+            let words: Vec<BitVec> =
+                (0..rows).map(|_| BitVec::random(dims, 0.2 + 0.6 * r.f64(), r)).collect();
+            let flat = DigitalExactEngine::new(words.clone());
+            let tm = TileManager::build(words, cap, digital_factory).map_err(|e| e.to_string())?;
+            for _ in 0..5 {
+                let q = BitVec::random(dims, 0.5, r);
+                use crate::am::AmEngine;
+                let f = flat.search(&q);
+                let t = tm.search(&q);
+                crate::prop_assert!(
+                    (t.score - f.score).abs() < 1e-9,
+                    "scores diverge: {} vs {}",
+                    t.score,
+                    f.score
+                );
+                // Winners may differ only on exact score ties.
+                if t.winner != f.winner {
+                    let s = flat.scores(&q);
+                    crate::prop_assert!(
+                        (s[t.winner] - s[f.winner]).abs() < 1e-9,
+                        "non-tie winner mismatch"
+                    );
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn batch_matches_serial() {
+        let mut r = rng(3);
+        let words: Vec<BitVec> = (0..50).map(|_| BitVec::random(32, 0.5, &mut r)).collect();
+        let tm = TileManager::build(words, 16, digital_factory).unwrap();
+        let queries: Vec<BitVec> = (0..12).map(|_| BitVec::random(32, 0.5, &mut r)).collect();
+        let batch = tm.search_batch(&queries);
+        for (q, b) in queries.iter().zip(&batch) {
+            let s = tm.search(q);
+            assert_eq!(s.winner, b.winner);
+            assert_eq!(s.score, b.score);
+        }
+    }
+
+    #[test]
+    fn single_tile_passthrough() {
+        let mut r = rng(4);
+        let words: Vec<BitVec> = (0..10).map(|_| BitVec::random(32, 0.5, &mut r)).collect();
+        let tm = TileManager::build(words.clone(), 1000, digital_factory).unwrap();
+        assert_eq!(tm.tile_count(), 1);
+        use crate::am::AmEngine;
+        let flat = DigitalExactEngine::new(words);
+        let q = BitVec::random(32, 0.5, &mut r);
+        assert_eq!(tm.search(&q).winner, flat.search(&q).winner);
+    }
+
+    #[test]
+    #[should_panic(expected = "dims mismatch")]
+    fn wrong_query_dims_panics() {
+        let mut r = rng(5);
+        let words: Vec<BitVec> = (0..4).map(|_| BitVec::random(32, 0.5, &mut r)).collect();
+        let tm = TileManager::build(words, 2, digital_factory).unwrap();
+        let _ = tm.search(&BitVec::zeros(16));
+    }
+}

@@ -1,0 +1,173 @@
+//! 1FeFET1R cell (paper §2.1, refs [12][13]): a FeFET in series with a MΩ
+//! BEOL resistor. The resistor limits the ON current, so the cell's ON
+//! current is ≈ V/R and nearly independent of FeFET V_TH variation —
+//! the property that makes analog row summation robust (Fig. 2c).
+//!
+//! The cell is the paper's compact AND gate (Fig. 2d): it conducts I_ON only
+//! when (stored bit == 1) AND (gate input == 1).
+
+use crate::config::{consts, DeviceConfig};
+
+use super::fefet::FeFet;
+
+/// A fabricated 1FeFET1R cell instance with frozen variation.
+#[derive(Debug, Clone)]
+pub struct Cell1F1R {
+    pub fefet: FeFet,
+    /// Relative resistor deviation, frozen at fabrication (σ = 8 % [13]).
+    pub dr_rel: f64,
+    /// Current-tuning scale applied via the programmable 1R (Eq. 7):
+    /// `i_on_nominal = tune_scale * v_wl / r_series`.
+    pub tune_scale: f64,
+}
+
+/// The currents a cell can contribute during a search, fully characterized.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct CellSample {
+    /// Current when selected (stored 1, gate high) (A).
+    pub i_on: f64,
+    /// Current when deselected-by-input (stored 1, gate low) (A).
+    pub i_gate_off: f64,
+    /// Current when storing 0 under a high gate (A) — high-V_TH leakage.
+    pub i_store_off: f64,
+}
+
+impl Cell1F1R {
+    /// Build a cell with explicit frozen variation offsets.
+    pub fn new(dvth_low: f64, dvth_high: f64, dr_rel: f64) -> Self {
+        Cell1F1R { fefet: FeFet::with_offsets(dvth_low, dvth_high), dr_rel, tune_scale: 1.0 }
+    }
+
+    /// Nominal (variation-free) ON current for a given tuning scale (A).
+    pub fn i_on_nominal(cfg: &DeviceConfig, tune_scale: f64) -> f64 {
+        tune_scale * cfg.v_wl / cfg.r_series
+    }
+
+    /// Program the stored bit through the FeFET write path.
+    pub fn program(&mut self, bit: bool, cfg: &DeviceConfig) {
+        self.fefet.program(bit, cfg);
+    }
+
+    /// Stored bit as read back from the polarization state.
+    pub fn stored(&self) -> bool {
+        self.fefet.state().stores_one()
+    }
+
+    /// Characterize the cell's search-time currents.
+    ///
+    /// * ON branch: R-limited. `I ≈ V_WL/(R(1+δR))`, so `ΔI/I ≈ -δR` — the
+    ///   FeFET V_TH variation cancels (paper's key 1FeFET1R claim [12]).
+    /// * Gate-off branch: the FeFET gate sits at 0 V, far below low V_TH + read
+    ///   margin ⇒ subthreshold-suppressed.
+    /// * Store-off branch: high-V_TH device under the read voltage; leakage
+    ///   depends exponentially on the high-V_TH variation (σ_HVT = 82 mV).
+    pub fn sample(&self, cfg: &DeviceConfig) -> CellSample {
+        let i_nom = Self::i_on_nominal(cfg, self.tune_scale);
+        let n_vt = cfg.eta * consts::V_T;
+
+        // ON: series R dominates; small residual V_TH sensitivity through the
+        // FeFET channel resistance (second-order, ~1e-2 of the R term).
+        let r_eff = cfg.r_series * (1.0 + self.dr_rel);
+        let channel_factor = 1.0 + 0.01 * (-self.fefet.dvth_low / n_vt).tanh();
+        let i_on = self.tune_scale * cfg.v_wl / r_eff * channel_factor;
+
+        // Gate low, stored 1: overdrive = 0 - (vth_low + δ).
+        let vth_lo = cfg.vth_low + self.fefet.dvth_low;
+        let i_gate_off = (i_nom * ((-(cfg.v_read) - vth_lo + cfg.vth_low) / n_vt).exp())
+            .min(i_nom * cfg.off_on_ratio);
+
+        // Gate high, stored 0: overdrive = v_read - (vth_high + δ).
+        let dvth = self.fefet.dvth_high;
+        let i_store_off = i_nom * cfg.off_on_ratio * (-dvth / n_vt).exp().min(1e3);
+
+        CellSample { i_on, i_gate_off, i_store_off }
+    }
+
+    /// Current contributed during a search given the stored bit and the gate
+    /// input bit — the AND-gate truth table with analog leakage.
+    pub fn search_current(&self, input_high: bool, cfg: &DeviceConfig) -> f64 {
+        let s = self.sample(cfg);
+        match (self.stored(), input_high) {
+            (true, true) => s.i_on,
+            (true, false) => s.i_gate_off,
+            (false, true) => s.i_store_off,
+            (false, false) => 0.0, // gate grounded, high V_TH: negligible
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::DeviceConfig;
+
+    fn programmed(bit: bool) -> (Cell1F1R, DeviceConfig) {
+        let cfg = DeviceConfig::default();
+        let mut c = Cell1F1R::new(0.0, 0.0, 0.0);
+        c.program(bit, &cfg);
+        (c, cfg)
+    }
+
+    #[test]
+    fn and_gate_truth_table() {
+        let (one, cfg) = programmed(true);
+        let (zero, _) = programmed(false);
+        let i_nom = Cell1F1R::i_on_nominal(&cfg, 1.0);
+        assert!((one.search_current(true, &cfg) - i_nom).abs() / i_nom < 0.02);
+        assert!(one.search_current(false, &cfg) < i_nom * 1e-3);
+        assert!(zero.search_current(true, &cfg) < i_nom * 1e-3);
+        assert_eq!(zero.search_current(false, &cfg), 0.0);
+    }
+
+    #[test]
+    fn on_current_insensitive_to_vth_variation() {
+        // The 1FeFET1R claim: 3σ V_TH shift moves I_ON by <5 %.
+        let cfg = DeviceConfig::default();
+        let mut a = Cell1F1R::new(0.0, 0.0, 0.0);
+        let mut b = Cell1F1R::new(3.0 * cfg.sigma_vth_low, 0.0, 0.0);
+        a.program(true, &cfg);
+        b.program(true, &cfg);
+        let (ia, ib) = (a.sample(&cfg).i_on, b.sample(&cfg).i_on);
+        assert!((ia - ib).abs() / ia < 0.05, "ΔI/I = {}", (ia - ib).abs() / ia);
+    }
+
+    #[test]
+    fn on_current_tracks_resistor_variation() {
+        // ΔI/I ≈ -ΔR/R (paper §2.1).
+        let cfg = DeviceConfig::default();
+        let mut a = Cell1F1R::new(0.0, 0.0, 0.0);
+        let mut b = Cell1F1R::new(0.0, 0.0, 0.08);
+        a.program(true, &cfg);
+        b.program(true, &cfg);
+        let (ia, ib) = (a.sample(&cfg).i_on, b.sample(&cfg).i_on);
+        let rel = (ib - ia) / ia;
+        assert!((rel + 0.08 / 1.08).abs() < 0.01, "rel = {rel}");
+    }
+
+    #[test]
+    fn tune_scale_scales_current_linearly() {
+        // Eq. 7: scaling rows by N tunes per-cell current by 1/N.
+        let cfg = DeviceConfig::default();
+        let mut c = Cell1F1R::new(0.0, 0.0, 0.0);
+        c.program(true, &cfg);
+        let i1 = c.search_current(true, &cfg);
+        c.tune_scale = 0.25;
+        let i2 = c.search_current(true, &cfg);
+        assert!((i2 / i1 - 0.25).abs() < 1e-9);
+    }
+
+    #[test]
+    fn store_off_leakage_grows_with_low_vth_tail() {
+        // A high-V_TH device whose V_TH came out low leaks more — this is the
+        // variation channel that matters for false dot-product counts.
+        let cfg = DeviceConfig::default();
+        let mut nom = Cell1F1R::new(0.0, 0.0, 0.0);
+        let mut low_tail = Cell1F1R::new(0.0, -cfg.sigma_vth_high, 0.0);
+        nom.program(false, &cfg);
+        low_tail.program(false, &cfg);
+        assert!(
+            low_tail.sample(&cfg).i_store_off > nom.sample(&cfg).i_store_off,
+            "lower high-V_TH must leak more"
+        );
+    }
+}

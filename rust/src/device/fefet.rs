@@ -1,0 +1,172 @@
+//! Behavioral FeFET model: two-state nonvolatile V_TH with a Preisach-style
+//! switching characteristic for writes, and a simple subthreshold/ohmic I–V
+//! for reads (enough to reproduce Fig. 2a/b and the write path).
+
+use crate::config::{consts, DeviceConfig};
+
+/// Remanent polarization state of the ferroelectric layer, normalized to
+/// [-1, +1]. +1 ⇒ fully set (low V_TH, stores '1'); -1 ⇒ fully reset
+/// (high V_TH, stores '0').
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct PolarizationState(pub f64);
+
+impl PolarizationState {
+    pub fn set() -> Self {
+        PolarizationState(1.0)
+    }
+    pub fn reset() -> Self {
+        PolarizationState(-1.0)
+    }
+    /// Binary readout: a device is considered to store '1' when more than
+    /// half of its domains are polarized "set".
+    pub fn stores_one(&self) -> bool {
+        self.0 > 0.0
+    }
+}
+
+/// A single FeFET with an instance-specific V_TH offset (device-to-device
+/// variation is frozen at fabrication, not redrawn per read — paper Fig. 7
+/// samples *dies*, not reads).
+#[derive(Debug, Clone)]
+pub struct FeFet {
+    state: PolarizationState,
+    /// Frozen V_TH offsets for the two states (V), sampled at build time.
+    pub dvth_low: f64,
+    pub dvth_high: f64,
+}
+
+impl Default for FeFet {
+    fn default() -> Self {
+        FeFet { state: PolarizationState::reset(), dvth_low: 0.0, dvth_high: 0.0 }
+    }
+}
+
+impl FeFet {
+    /// Fresh device with explicit variation offsets.
+    pub fn with_offsets(dvth_low: f64, dvth_high: f64) -> Self {
+        FeFet { state: PolarizationState::reset(), dvth_low, dvth_high }
+    }
+
+    pub fn state(&self) -> PolarizationState {
+        self.state
+    }
+
+    /// Effective threshold voltage under the current polarization (V).
+    /// Partial polarization interpolates between the two states, which is how
+    /// the Preisach model's minor loops manifest at the terminal level.
+    pub fn vth(&self, cfg: &DeviceConfig) -> f64 {
+        let lo = cfg.vth_low + self.dvth_low;
+        let hi = cfg.vth_high + self.dvth_high;
+        let w = (self.state.0 + 1.0) / 2.0; // 0 → high-V_TH, 1 → low-V_TH
+        hi + (lo - hi) * w
+    }
+
+    /// Apply a gate write pulse of amplitude `v_g` (V) and width `t` (s).
+    ///
+    /// Preisach-lite: the saturated target polarization is a tanh of the
+    /// overdrive beyond the coercive voltage, and the state relaxes toward it
+    /// with a nucleation-limited time constant that shrinks exponentially
+    /// with overdrive (reproducing the strong pulse-amplitude dependence of
+    /// HfO₂ FeFET switching [26]).
+    pub fn write_pulse(&mut self, v_g: f64, t: f64, _cfg: &DeviceConfig) {
+        const V_COERCIVE: f64 = 2.2; // typical HfO₂ FeFET coercive gate voltage
+        const TAU0: f64 = 10e-6; // switching time at the coercive voltage
+        const V_ACT: f64 = 0.45; // activation slope (V/decade-ish)
+        const V_SAT: f64 = 0.35; // overdrive for full polarization saturation
+        let overdrive = (v_g.abs() - V_COERCIVE).max(0.0);
+        // Sub-coercive pulses only disturb toward depolarization (target 0);
+        // beyond the coercive voltage the target polarization saturates fast.
+        let target = v_g.signum() * (overdrive / V_SAT).tanh();
+        let tau = TAU0 * (-overdrive / V_ACT).exp();
+        let alpha = 1.0 - (-t / tau).exp();
+        self.state = PolarizationState(self.state.0 + (target - self.state.0) * alpha);
+    }
+
+    /// Program the device to store `bit` using the paper's ±4 V pulses.
+    pub fn program(&mut self, bit: bool, cfg: &DeviceConfig) {
+        let v = if bit { cfg.v_write } else { -cfg.v_write };
+        self.write_pulse(v, cfg.t_write, cfg);
+    }
+
+    /// Drain current at gate voltage `v_g`, drain bias `v_d` with no series
+    /// resistor (Fig. 2b): subthreshold exponential that soft-saturates at
+    /// the ohmic/saturation current once V_G clears V_TH.
+    pub fn id(&self, v_g: f64, v_d: f64, cfg: &DeviceConfig) -> f64 {
+        let vth = self.vth(cfg);
+        let n_vt = cfg.eta * consts::V_T;
+        // Subthreshold branch, clamped for numerical safety.
+        let sub = cfg.i0 * ((v_g - vth) / n_vt).min(40.0).exp();
+        // Above-threshold branch: crude square-law capped by i0 scale.
+        let sat = if v_g > vth { cfg.i0 * (1.0 + 8.0 * (v_g - vth)) } else { cfg.i0 };
+        let i = sub.min(sat);
+        // Linear drain dependence at small v_d, saturating (ohmic knee).
+        i * (v_d / (v_d + 0.05)).clamp(0.0, 1.0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::DeviceConfig;
+
+    #[test]
+    fn program_switches_state() {
+        let cfg = DeviceConfig::default();
+        let mut f = FeFet::default();
+        assert!(!f.state().stores_one());
+        f.program(true, &cfg);
+        assert!(f.state().stores_one(), "positive pulse must set low-V_TH");
+        assert!(f.state().0 > 0.95, "±4 V, 1 µs must fully switch");
+        f.program(false, &cfg);
+        assert!(!f.state().stores_one());
+        assert!(f.state().0 < -0.95);
+    }
+
+    #[test]
+    fn weak_pulse_only_partially_switches() {
+        let cfg = DeviceConfig::default();
+        let mut f = FeFet::default();
+        // At the coercive voltage the switching time blows up: 1 ns pulse
+        // barely moves the polarization.
+        f.write_pulse(2.2, 1e-9, &cfg);
+        assert!(f.state().0 < -0.9, "sub-coercive short pulse must not switch");
+    }
+
+    #[test]
+    fn vth_tracks_state_and_offsets() {
+        let cfg = DeviceConfig::default();
+        let mut f = FeFet::with_offsets(0.02, -0.03);
+        f.program(true, &cfg);
+        assert!((f.vth(&cfg) - (cfg.vth_low + 0.02)).abs() < 0.05);
+        f.program(false, &cfg);
+        assert!((f.vth(&cfg) - (cfg.vth_high - 0.03)).abs() < 0.05);
+    }
+
+    #[test]
+    fn id_vg_separation_between_states() {
+        // Fig. 2b: at the read voltage the two states differ by orders of
+        // magnitude in current.
+        let cfg = DeviceConfig::default();
+        let mut lo = FeFet::default();
+        lo.program(true, &cfg);
+        let mut hi = FeFet::default();
+        hi.program(false, &cfg);
+        let i_on = lo.id(cfg.v_read, cfg.v_wl, &cfg);
+        let i_off = hi.id(cfg.v_read, cfg.v_wl, &cfg);
+        assert!(i_on / i_off > 1e3, "on/off = {}", i_on / i_off);
+    }
+
+    #[test]
+    fn id_monotone_in_vg() {
+        let cfg = DeviceConfig::default();
+        let mut f = FeFet::default();
+        f.program(true, &cfg);
+        let mut prev = 0.0;
+        for step in 0..40 {
+            let vg = -1.0 + 0.08 * step as f64;
+            let i = f.id(vg, cfg.v_wl, &cfg);
+            assert!(i >= prev, "I_D must be nondecreasing in V_G");
+            prev = i;
+        }
+    }
+}

@@ -1,0 +1,23 @@
+//! Device layer: behavioral FeFET and 1FeFET1R cell models (paper §2.1).
+//!
+//! The paper simulates devices with the Preisach FeFET compact model [26] and
+//! 45 nm PTM transistors in Spectre. We reproduce the *behaviors the system
+//! depends on*:
+//!
+//! 1. two nonvolatile V_TH states written by gate pulses (Fig. 2a/b),
+//! 2. an R-limited ON current that is nearly independent of FeFET V_TH
+//!    variation in the 1FeFET1R cell (Fig. 2c, ref [12]),
+//! 3. the single-transistor AND gate: a cell conducts only when it stores '1'
+//!    *and* its gate is driven high (Fig. 2d),
+//! 4. published device-to-device variation statistics (σ_LVT = 54 mV,
+//!    σ_HVT = 82 mV, 8 % resistor variability).
+
+mod cell;
+mod fefet;
+pub mod reram;
+mod variation;
+
+pub use cell::{Cell1F1R, CellSample};
+pub use fefet::{FeFet, PolarizationState};
+pub use reram::Cell1T1R;
+pub use variation::VariationSampler;

@@ -1,0 +1,142 @@
+//! Device-to-device variation sampling (paper Fig. 7 setup): FeFET V_TH
+//! (σ_LVT = 54 mV, σ_HVT = 82 mV [12]), 1R resistor (8 % [13]), MOS size and
+//! V_TH (10 % each), and supply voltage (10 %). Each Monte Carlo trial is one
+//! fabricated die; all instance offsets are frozen per trial.
+
+use crate::config::{consts, CosimeConfig, VariationConfig};
+use crate::util::Rng;
+
+use super::cell::Cell1F1R;
+
+/// Draws frozen per-instance variation for every device class in COSIME.
+pub struct VariationSampler {
+    cfg: CosimeConfig,
+    s_vth_low: f64,
+    s_vth_high: f64,
+    s_r: f64,
+    s_mos_vth: f64,
+    s_mos_size: f64,
+    s_supply: f64,
+}
+
+impl VariationSampler {
+    pub fn new(cfg: &CosimeConfig) -> Self {
+        let d = &cfg.device;
+        let t = &cfg.translinear;
+        let v = &cfg.variation;
+        let gate = |on: bool, s: f64| if on { s } else { 0.0 };
+        VariationSampler {
+            s_vth_low: gate(v.fefet_vth, d.sigma_vth_low),
+            s_vth_high: gate(v.fefet_vth, d.sigma_vth_high),
+            s_r: gate(v.resistor, d.sigma_r_rel),
+            s_mos_vth: gate(v.mos, t.sigma_vth_mismatch),
+            s_mos_size: gate(v.mos, t.sigma_wl_rel),
+            s_supply: gate(v.supply, v.sigma_supply_rel),
+            cfg: cfg.clone(),
+        }
+    }
+
+    /// Variation toggles in effect.
+    pub fn variation(&self) -> &VariationConfig {
+        &self.cfg.variation
+    }
+
+    /// Sample a fabricated 1FeFET1R cell, programmed to `bit`.
+    pub fn cell(&self, bit: bool, rng: &mut Rng) -> Cell1F1R {
+        let mut c = Cell1F1R::new(
+            rng.normal(0.0, self.s_vth_low),
+            rng.normal(0.0, self.s_vth_high),
+            rng.normal(0.0, self.s_r).clamp(-0.5, 0.5),
+        );
+        c.program(bit, &self.cfg.device);
+        c
+    }
+
+    /// Sample a multiplicative gain error for one subthreshold analog stage
+    /// (current mirror leg or translinear loop): V_TH mismatch enters
+    /// exponentially (`exp(ΔV_TH/ηV_T)`), W/L mismatch linearly.
+    pub fn stage_gain(&self, rng: &mut Rng) -> f64 {
+        let n_vt = self.cfg.device.eta * consts::V_T;
+        let dvth = rng.normal(0.0, self.s_mos_vth);
+        let dsz = rng.normal(0.0, self.s_mos_size).clamp(-0.5, 0.5);
+        ((dvth / n_vt).clamp(-3.0, 3.0)).exp() * (1.0 + dsz)
+    }
+
+    /// Sample a supply-voltage scale factor (paper: 10 % variation).
+    pub fn supply_scale(&self, rng: &mut Rng) -> f64 {
+        (1.0 + rng.normal(0.0, self.s_supply)).clamp(0.5, 1.5)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::CosimeConfig;
+    use crate::util::{mean, rng, stddev};
+
+    #[test]
+    fn disabled_variation_is_deterministic() {
+        let mut cfg = CosimeConfig::default();
+        cfg.variation = crate::config::VariationConfig {
+            fefet_vth: false,
+            resistor: false,
+            mos: false,
+            supply: false,
+            sigma_supply_rel: 0.1,
+        };
+        let s = VariationSampler::new(&cfg);
+        let mut r = rng(1);
+        for _ in 0..16 {
+            assert_eq!(s.stage_gain(&mut r), 1.0);
+            assert_eq!(s.supply_scale(&mut r), 1.0);
+            let c = s.cell(true, &mut r);
+            assert_eq!(c.dr_rel, 0.0);
+        }
+    }
+
+    #[test]
+    fn cell_on_current_spread_matches_resistor_sigma() {
+        // With the 1FeFET1R structure the ON-current relative sigma tracks the
+        // resistor sigma (~8 %), not the much larger V_TH-induced spread.
+        let cfg = CosimeConfig::default();
+        let s = VariationSampler::new(&cfg);
+        let mut r = rng(2);
+        let currents: Vec<f64> =
+            (0..4000).map(|_| s.cell(true, &mut r).sample(&cfg.device).i_on).collect();
+        let rel_sigma = stddev(&currents) / mean(&currents);
+        assert!((rel_sigma - cfg.device.sigma_r_rel).abs() < 0.02, "relative ON sigma {rel_sigma}");
+    }
+
+    #[test]
+    fn stage_gain_centered_near_one() {
+        let cfg = CosimeConfig::default();
+        let s = VariationSampler::new(&cfg);
+        let mut r = rng(3);
+        let gains: Vec<f64> = (0..8000).map(|_| s.stage_gain(&mut r)).collect();
+        let m = mean(&gains);
+        assert!((m - 1.0).abs() < 0.15, "mean gain {m}");
+        let sd = stddev(&gains);
+        assert!(sd > 0.05 && sd < 0.8, "gain sigma {sd}");
+    }
+
+    #[test]
+    fn programmed_bit_survives_variation() {
+        let cfg = CosimeConfig::default();
+        let s = VariationSampler::new(&cfg);
+        let mut r = rng(4);
+        for _ in 0..200 {
+            assert!(s.cell(true, &mut r).stored());
+            assert!(!s.cell(false, &mut r).stored());
+        }
+    }
+
+    #[test]
+    fn supply_scale_spread() {
+        let cfg = CosimeConfig::default();
+        let s = VariationSampler::new(&cfg);
+        let mut r = rng(5);
+        let xs: Vec<f64> = (0..4000).map(|_| s.supply_scale(&mut r)).collect();
+        assert!((mean(&xs) - 1.0).abs() < 0.01);
+        assert!((stddev(&xs) - 0.10).abs() < 0.02);
+    }
+}

@@ -1,0 +1,160 @@
+//! HDC encoder: random-projection encoding of real feature vectors into
+//! binary hypervectors (the paper's AFL stage, Fig. 8a — LSH-style [6]).
+//!
+//! `h = step(P·f)` with P a fixed bipolar ±1 matrix (D×n). Random projection
+//! preserves angles (Johnson–Lindenstrauss), so cosine similarity between
+//! hypervectors tracks cosine similarity between feature vectors — exactly
+//! the property CSS exploits. Note: the threshold is at 0 *without* per-query
+//! balancing, so input-magnitude asymmetries survive as hypervector-density
+//! differences (the regime separating cosine from Hamming, Fig. 1).
+
+use crate::util::{BitVec, Rng};
+
+/// Fixed random bipolar projection P ∈ {−1,+1}^{D×n}, rows bit-packed
+/// (bit = 1 ⇔ +1), with an optional positive threshold θ.
+///
+/// θ > 0 makes the encoding *magnitude-sensitive*: inputs with larger norms
+/// produce denser hypervectors (P(P·f > θ) grows with ‖f‖). This is the
+/// density-varying regime real HDC pipelines operate in — and exactly where
+/// Hamming search loses to cosine (paper Fig. 1 / Fig. 9a).
+pub struct RandomProjectionEncoder {
+    dims: usize,
+    features: usize,
+    rows: Vec<BitVec>,
+    /// Encoding threshold θ (same units as the projection values).
+    pub threshold: f64,
+}
+
+impl RandomProjectionEncoder {
+    /// Build a D×n projection seeded deterministically (θ = 0).
+    pub fn new(dims: usize, features: usize, seed: u64) -> Self {
+        Self::with_threshold(dims, features, seed, 0.0)
+    }
+
+    /// Build with an explicit encoding threshold.
+    pub fn with_threshold(dims: usize, features: usize, seed: u64, threshold: f64) -> Self {
+        let mut rng = Rng::seed_from_u64(seed);
+        let rows = (0..dims).map(|_| BitVec::random(features, 0.5, &mut rng)).collect();
+        RandomProjectionEncoder { dims, features, rows, threshold }
+    }
+
+    pub fn dims(&self) -> usize {
+        self.dims
+    }
+
+    pub fn features(&self) -> usize {
+        self.features
+    }
+
+    /// Read one projection bit (true ⇔ +1) — used to marshal the projection
+    /// into the AOT artifact's input tensor.
+    pub fn projection_bit(&self, row: usize, col: usize) -> bool {
+        self.rows[row].get(col)
+    }
+
+    /// Signed projection of one feature vector (pre-threshold), exposed for
+    /// the XLA-path cross-check.
+    pub fn project(&self, f: &[f32]) -> Vec<f64> {
+        assert_eq!(f.len(), self.features, "feature length mismatch");
+        let total: f64 = f.iter().map(|&v| v as f64).sum();
+        self.rows
+            .iter()
+            .map(|row| {
+                // Σ f_j·(2b_j−1) = 2·Σ_{b_j=1} f_j − Σ f_j, via lane AND ops.
+                let mut pos = 0.0f64;
+                for (lane_idx, &lane) in row.lanes().iter().enumerate() {
+                    if lane == 0 {
+                        continue;
+                    }
+                    let base = lane_idx * 64;
+                    let mut bits = lane;
+                    while bits != 0 {
+                        let j = bits.trailing_zeros() as usize;
+                        pos += f[base + j] as f64;
+                        bits &= bits - 1;
+                    }
+                }
+                2.0 * pos - total
+            })
+            .collect()
+    }
+
+    /// Encode a feature vector into a binary hypervector.
+    pub fn encode(&self, f: &[f32]) -> BitVec {
+        let th = self.threshold;
+        BitVec::from_bools(self.project(f).into_iter().map(move |v| v > th))
+    }
+
+    /// Encode a batch.
+    pub fn encode_batch(&self, fs: &[Vec<f32>]) -> Vec<BitVec> {
+        fs.iter().map(|f| self.encode(f)).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_and_shape() {
+        let e1 = RandomProjectionEncoder::new(128, 10, 5);
+        let e2 = RandomProjectionEncoder::new(128, 10, 5);
+        let f: Vec<f32> = (0..10).map(|i| i as f32 - 4.5).collect();
+        assert_eq!(e1.encode(&f), e2.encode(&f));
+        assert_eq!(e1.encode(&f).len(), 128);
+    }
+
+    #[test]
+    fn project_matches_naive() {
+        let e = RandomProjectionEncoder::new(32, 7, 9);
+        let f: Vec<f32> = vec![0.5, -1.0, 2.0, 0.0, 3.25, -0.75, 1.5];
+        let fast = e.project(&f);
+        for (i, row) in e.rows.iter().enumerate() {
+            let naive: f64 = (0..7)
+                .map(|j| f[j] as f64 * if row.get(j) { 1.0 } else { -1.0 })
+                .sum();
+            assert!((fast[i] - naive).abs() < 1e-9, "row {i}: {} vs {naive}", fast[i]);
+        }
+    }
+
+    #[test]
+    fn similar_inputs_encode_similarly() {
+        let e = RandomProjectionEncoder::new(1024, 64, 11);
+        let mut r = Rng::seed_from_u64(12);
+        let a: Vec<f32> = (0..64).map(|_| r.gauss() as f32).collect();
+        // Small perturbation vs. an independent vector.
+        let near: Vec<f32> = a.iter().map(|&v| v + 0.1 * r.gauss() as f32).collect();
+        let far: Vec<f32> = (0..64).map(|_| r.gauss() as f32).collect();
+        let (ha, hnear, hfar) = (e.encode(&a), e.encode(&near), e.encode(&far));
+        assert!(ha.hamming(&hnear) < ha.hamming(&hfar));
+        assert!(ha.cos2(&hnear) > ha.cos2(&hfar));
+    }
+
+    #[test]
+    fn random_input_density_near_half() {
+        let e = RandomProjectionEncoder::new(2048, 32, 13);
+        let mut r = Rng::seed_from_u64(14);
+        let f: Vec<f32> = (0..32).map(|_| r.gauss() as f32).collect();
+        let h = e.encode(&f);
+        let d = h.count_ones() as f64 / 2048.0;
+        assert!((d - 0.5).abs() < 0.05, "density {d}");
+    }
+
+    #[test]
+    fn negated_input_flips_all_bits() {
+        let e = RandomProjectionEncoder::new(256, 16, 15);
+        let mut r = Rng::seed_from_u64(16);
+        // Use strictly nonzero projections: avoid ties at the threshold.
+        let f: Vec<f32> = (0..16).map(|_| (r.gauss() + 2.0) as f32).collect();
+        let neg: Vec<f32> = f.iter().map(|&v| -v).collect();
+        let (h, hn) = (e.encode(&f), e.encode(&neg));
+        assert_eq!(h.hamming(&hn), 256);
+    }
+
+    #[test]
+    #[should_panic(expected = "feature length")]
+    fn wrong_feature_length_panics() {
+        let e = RandomProjectionEncoder::new(64, 8, 17);
+        let _ = e.encode(&[1.0; 9]);
+    }
+}

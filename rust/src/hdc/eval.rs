@@ -1,0 +1,201 @@
+//! Evaluation harnesses: classification accuracy with a pluggable AM engine
+//! (Fig. 9a) and few-shot episodes (Fig. 1b).
+
+use crate::am::{AmEngine, ApproxCosineEngine, DigitalExactEngine, HammingEngine};
+use crate::util::{BitVec, Rng};
+
+use super::dataset::Dataset;
+use super::trainer::{HdcModel, TrainConfig};
+
+/// Accuracy report for one (dataset, metric, D) cell of Fig. 9a.
+#[derive(Debug, Clone)]
+pub struct EvalReport {
+    pub dataset: String,
+    pub engine: String,
+    pub dims: usize,
+    pub correct: usize,
+    pub total: usize,
+}
+
+impl EvalReport {
+    pub fn accuracy(&self) -> f64 {
+        self.correct as f64 / self.total.max(1) as f64
+    }
+}
+
+/// Train an HDC model on `ds` and evaluate test accuracy with the engine
+/// built by `make_engine` over the class hypervectors.
+pub fn evaluate_accuracy(
+    ds: &Dataset,
+    train: TrainConfig,
+    make_engine: impl Fn(Vec<BitVec>) -> Box<dyn AmEngine>,
+) -> EvalReport {
+    let model = HdcModel::train(ds, train);
+    let engine = make_engine(model.class_hypervectors());
+    let mut correct = 0;
+    for (x, &y) in ds.test_x.iter().zip(&ds.test_y) {
+        let h = model.encoder.encode(x);
+        if engine.search(&h).winner == y {
+            correct += 1;
+        }
+    }
+    EvalReport {
+        dataset: ds.name.clone(),
+        engine: engine.name().to_string(),
+        dims: train.dims,
+        correct,
+        total: ds.test_len(),
+    }
+}
+
+/// Convenience engine constructors for the metric comparison figures.
+pub fn cosine_engine(rows: Vec<BitVec>) -> Box<dyn AmEngine> {
+    Box::new(DigitalExactEngine::new(rows))
+}
+
+pub fn hamming_engine(rows: Vec<BitVec>) -> Box<dyn AmEngine> {
+    Box::new(HammingEngine::new(rows))
+}
+
+pub fn approx_engine(rows: Vec<BitVec>) -> Box<dyn AmEngine> {
+    Box::new(ApproxCosineEngine::new(rows))
+}
+
+/// Few-shot episode spec (Fig. 1b).
+#[derive(Debug, Clone, Copy)]
+pub struct FewShotSpec {
+    /// Ways: classes per episode.
+    pub ways: usize,
+    /// Shots: support samples bundled per class.
+    pub shots: usize,
+    /// Query samples per class per episode.
+    pub queries: usize,
+    /// Number of episodes.
+    pub episodes: usize,
+    /// Hypervector dimensionality.
+    pub dims: usize,
+    pub seed: u64,
+}
+
+/// Few-shot evaluation: per episode, bundle `shots` support vectors into a
+/// prototype per sampled class, then classify queries by NN under the engine.
+pub fn few_shot_accuracy(
+    ds: &Dataset,
+    spec: FewShotSpec,
+    make_engine: impl Fn(Vec<BitVec>) -> Box<dyn AmEngine>,
+) -> f64 {
+    assert!(spec.ways <= ds.classes, "ways exceed classes");
+    let encoder = super::trainer::AnyEncoder::build(
+        super::trainer::EncoderKind::Level { spread: 2.0 },
+        spec.dims,
+        ds.features,
+        spec.seed,
+    );
+    let mut rng = Rng::seed_from_u64(spec.seed ^ 0xFEED);
+
+    // Index train samples by class.
+    let mut by_class: Vec<Vec<usize>> = vec![Vec::new(); ds.classes];
+    for (i, &y) in ds.train_y.iter().enumerate() {
+        by_class[y].push(i);
+    }
+
+    let mut correct = 0usize;
+    let mut total = 0usize;
+    for _ in 0..spec.episodes {
+        let classes = rng.choose_indices(ds.classes, spec.ways);
+        // Build prototypes by majority-bundling `shots` encoded supports.
+        let mut protos: Vec<BitVec> = Vec::with_capacity(spec.ways);
+        let mut query_set: Vec<(usize, BitVec)> = Vec::new();
+        for (slot, &c) in classes.iter().enumerate() {
+            let pool = &by_class[c];
+            let picks = rng.choose_indices(pool.len(), (spec.shots + spec.queries).min(pool.len()));
+            let (support, queries) = picks.split_at(spec.shots.min(picks.len()));
+            let mut acc = vec![0i32; spec.dims];
+            for &pi in support {
+                let h = encoder.encode(&ds.train_x[pool[pi]]);
+                for d in 0..spec.dims {
+                    acc[d] += i32::from(h.get(d));
+                }
+            }
+            let thresh = support.len() as f64 / 2.0;
+            protos.push(BitVec::from_bools(acc.iter().map(|&v| v as f64 > thresh)));
+            for &qi in queries {
+                query_set.push((slot, encoder.encode(&ds.train_x[pool[qi]])));
+            }
+        }
+        let engine = make_engine(protos);
+        for (slot, h) in query_set {
+            if engine.search(&h).winner == slot {
+                correct += 1;
+            }
+            total += 1;
+        }
+    }
+    correct as f64 / total.max(1) as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hdc::dataset::{Dataset, DatasetSpec, SyntheticParams};
+
+    fn ds() -> Dataset {
+        Dataset::synthetic(
+            DatasetSpec::Isolet,
+            SyntheticParams { subsample: 0.04, ..Default::default() },
+            31,
+        )
+    }
+
+    #[test]
+    fn cosine_beats_hamming_on_skewed_data() {
+        // The Fig. 1 / Fig. 9a effect: with class-density skew, cosine-metric
+        // classification outperforms Hamming.
+        let d = ds();
+        let cfg = TrainConfig { dims: 1024, epochs: 1, seed: 7, ..Default::default() };
+        let cos = evaluate_accuracy(&d, cfg, cosine_engine);
+        let ham = evaluate_accuracy(&d, cfg, hamming_engine);
+        assert!(
+            cos.accuracy() >= ham.accuracy(),
+            "cosine {:.3} vs hamming {:.3}",
+            cos.accuracy(),
+            ham.accuracy()
+        );
+        assert!(cos.accuracy() > 0.5);
+    }
+
+    #[test]
+    fn report_fields_consistent() {
+        let d = ds();
+        let cfg = TrainConfig { dims: 256, epochs: 0, seed: 8, ..Default::default() };
+        let rep = evaluate_accuracy(&d, cfg, cosine_engine);
+        assert_eq!(rep.total, d.test_len());
+        assert!(rep.correct <= rep.total);
+        assert_eq!(rep.dims, 256);
+        assert_eq!(rep.dataset, "ISOLET");
+    }
+
+    #[test]
+    fn few_shot_beats_chance() {
+        let d = ds();
+        let spec = FewShotSpec { ways: 5, shots: 5, queries: 4, episodes: 20, dims: 512, seed: 9 };
+        let acc = few_shot_accuracy(&d, spec, cosine_engine);
+        assert!(acc > 0.4, "5-way acc {acc} vs chance 0.2");
+    }
+
+    #[test]
+    fn one_shot_harder_than_five_shot() {
+        let d = ds();
+        let mk = |shots| FewShotSpec {
+            ways: 5,
+            shots,
+            queries: 4,
+            episodes: 30,
+            dims: 512,
+            seed: 10,
+        };
+        let a1 = few_shot_accuracy(&d, mk(1), cosine_engine);
+        let a5 = few_shot_accuracy(&d, mk(5), cosine_engine);
+        assert!(a5 >= a1 - 0.05, "5-shot {a5} vs 1-shot {a1}");
+    }
+}

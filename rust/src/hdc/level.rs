@@ -1,0 +1,88 @@
+//! Locality-based level encoder (BRIC-style, paper ref [37]): each
+//! hypervector dimension d is assigned a random (feature, threshold) pair
+//! and fires when that feature exceeds its threshold:
+//!
+//! ```text
+//! h_d = [ f[j_d] > t_d ],   j_d ~ U(features),  t_d ~ N(0, spread)
+//! ```
+//!
+//! Properties the Fig. 1 / Fig. 9a comparison rests on:
+//! * locality: nearby feature vectors flip few bits (thresholds form a
+//!   thermometer code per feature),
+//! * density tracks magnitude: samples/classes with larger feature values
+//!   produce denser hypervectors — the regime where Hamming search is
+//!   biased by vector density while cosine normalizes it away.
+
+use crate::util::{BitVec, Rng};
+
+pub struct LevelEncoder {
+    dims: usize,
+    features: usize,
+    feat_idx: Vec<u32>,
+    thresh: Vec<f32>,
+}
+
+impl LevelEncoder {
+    /// `spread` is the threshold sigma in feature units (≈ feature dynamic
+    /// range); thresholds are drawn once, deterministically from `seed`.
+    pub fn new(dims: usize, features: usize, seed: u64, spread: f64) -> Self {
+        let mut rng = Rng::seed_from_u64(seed ^ 0x1E5E1);
+        let feat_idx = (0..dims).map(|_| rng.below(features) as u32).collect();
+        let thresh = (0..dims).map(|_| rng.normal(0.0, spread) as f32).collect();
+        LevelEncoder { dims, features, feat_idx, thresh }
+    }
+
+    pub fn dims(&self) -> usize {
+        self.dims
+    }
+
+    pub fn features(&self) -> usize {
+        self.features
+    }
+
+    pub fn encode(&self, f: &[f32]) -> BitVec {
+        assert_eq!(f.len(), self.features, "feature length mismatch");
+        BitVec::from_bools(
+            self.feat_idx
+                .iter()
+                .zip(&self.thresh)
+                .map(|(&j, &t)| f[j as usize] > t),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_and_shaped() {
+        let a = LevelEncoder::new(256, 10, 3, 2.0);
+        let b = LevelEncoder::new(256, 10, 3, 2.0);
+        let f: Vec<f32> = (0..10).map(|i| i as f32 / 5.0 - 1.0).collect();
+        assert_eq!(a.encode(&f), b.encode(&f));
+        assert_eq!(a.encode(&f).len(), 256);
+    }
+
+    #[test]
+    fn density_tracks_magnitude() {
+        let e = LevelEncoder::new(4096, 32, 4, 2.0);
+        let mut r = Rng::seed_from_u64(5);
+        let small: Vec<f32> = (0..32).map(|_| 0.3 * r.gauss() as f32).collect();
+        let large: Vec<f32> = small.iter().map(|&v| v + 2.0).collect();
+        let d_small = e.encode(&small).count_ones();
+        let d_large = e.encode(&large).count_ones();
+        assert!(d_large > d_small + 200, "density must grow with magnitude: {d_small} vs {d_large}");
+    }
+
+    #[test]
+    fn locality_preserved() {
+        let e = LevelEncoder::new(2048, 16, 6, 2.0);
+        let mut r = Rng::seed_from_u64(7);
+        let a: Vec<f32> = (0..16).map(|_| r.gauss() as f32).collect();
+        let near: Vec<f32> = a.iter().map(|&v| v + 0.05 * r.gauss() as f32).collect();
+        let far: Vec<f32> = (0..16).map(|_| r.gauss() as f32).collect();
+        let ha = e.encode(&a);
+        assert!(ha.hamming(&e.encode(&near)) < ha.hamming(&e.encode(&far)));
+    }
+}

@@ -1,0 +1,19 @@
+//! Hyperdimensional-computing application layer (paper §4.2).
+//!
+//! HDC classification pipeline: encode feature vectors into binary
+//! hypervectors (random projection), single-pass train per-class bundles,
+//! then classify queries by nearest neighbor over the class hypervectors —
+//! the search COSIME accelerates. Fig. 9a compares cosine vs. Hamming as the
+//! search metric; Fig. 9b/c compare COSIME against a GPU for the search.
+
+mod dataset;
+mod encoder;
+mod eval;
+mod level;
+mod trainer;
+
+pub use dataset::{Dataset, DatasetSpec, SyntheticParams};
+pub use encoder::RandomProjectionEncoder;
+pub use eval::{approx_engine, cosine_engine, evaluate_accuracy, few_shot_accuracy, hamming_engine, EvalReport, FewShotSpec};
+pub use level::LevelEncoder;
+pub use trainer::{AnyEncoder, EncoderKind, HdcModel, TrainConfig};

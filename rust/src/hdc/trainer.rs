@@ -1,0 +1,298 @@
+//! HDC training (paper §4.2): single-pass bundling of encoded hypervectors
+//! into one class hypervector per class, with optional perceptron-style
+//! retraining epochs (OnlineHD [36]). The binarized class hypervectors are
+//! what COSIME stores; inference is a CSS over them.
+
+use crate::util::{BitVec, Rng};
+
+use super::dataset::Dataset;
+use super::encoder::RandomProjectionEncoder;
+use super::level::LevelEncoder;
+
+/// Which AFL encoder the pipeline uses (paper Fig. 8a).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum EncoderKind {
+    /// Bipolar random projection (LSH-style [6]); optional threshold as a
+    /// multiple of √n.
+    RandomProjection { threshold_scale: f64 },
+    /// Locality/level encoding (BRIC-style [37]); threshold spread in
+    /// feature units. Hypervector density tracks input magnitude — the
+    /// regime of the paper's Fig. 1 / Fig. 9a comparison.
+    Level { spread: f64 },
+}
+
+/// A built encoder of either kind.
+pub enum AnyEncoder {
+    Rp(RandomProjectionEncoder),
+    Level(LevelEncoder),
+}
+
+impl AnyEncoder {
+    pub fn build(kind: EncoderKind, dims: usize, features: usize, seed: u64) -> AnyEncoder {
+        match kind {
+            EncoderKind::RandomProjection { threshold_scale } => {
+                let th = threshold_scale * (features as f64).sqrt();
+                AnyEncoder::Rp(RandomProjectionEncoder::with_threshold(dims, features, seed, th))
+            }
+            EncoderKind::Level { spread } => {
+                AnyEncoder::Level(LevelEncoder::new(dims, features, seed, spread))
+            }
+        }
+    }
+
+    pub fn encode(&self, f: &[f32]) -> BitVec {
+        match self {
+            AnyEncoder::Rp(e) => e.encode(f),
+            AnyEncoder::Level(e) => e.encode(f),
+        }
+    }
+
+    pub fn dims(&self) -> usize {
+        match self {
+            AnyEncoder::Rp(e) => e.dims(),
+            AnyEncoder::Level(e) => e.dims(),
+        }
+    }
+
+    /// The underlying random projection, when that kind was built (used by
+    /// the AOT-artifact path, which implements RP encoding in the kernel).
+    pub fn as_rp(&self) -> Option<&RandomProjectionEncoder> {
+        match self {
+            AnyEncoder::Rp(e) => Some(e),
+            AnyEncoder::Level(_) => None,
+        }
+    }
+}
+
+/// Training hyperparameters.
+#[derive(Debug, Clone, Copy)]
+pub struct TrainConfig {
+    /// Hypervector dimensionality D (paper sweeps 256–1024, Fig. 9a).
+    pub dims: usize,
+    /// Retraining epochs after the single pass (0 = pure single-pass).
+    pub epochs: usize,
+    /// Encoder/projection seed.
+    pub seed: u64,
+    /// AFL encoder.
+    pub encoder: EncoderKind,
+}
+
+impl Default for TrainConfig {
+    fn default() -> Self {
+        TrainConfig {
+            dims: 1024,
+            epochs: 2,
+            seed: 1,
+            encoder: EncoderKind::Level { spread: 1.0 },
+        }
+    }
+}
+
+/// A trained HDC model: encoder + integer class accumulators + binarized
+/// class hypervectors.
+pub struct HdcModel {
+    pub encoder: AnyEncoder,
+    /// Integer bundle counters, one per class per dimension.
+    acc: Vec<Vec<i32>>,
+    /// Samples bundled per class (for the majority threshold).
+    counts: Vec<usize>,
+    pub classes: usize,
+}
+
+impl HdcModel {
+    /// Single-pass training (+ optional retraining) over a dataset.
+    pub fn train(ds: &Dataset, cfg: TrainConfig) -> HdcModel {
+        let encoder = AnyEncoder::build(cfg.encoder, cfg.dims, ds.features, cfg.seed);
+        let mut model = HdcModel {
+            encoder,
+            acc: vec![vec![0i32; cfg.dims]; ds.classes],
+            counts: vec![0usize; ds.classes],
+            classes: ds.classes,
+        };
+
+        // Encode once, reuse across epochs.
+        let encoded: Vec<BitVec> = ds.train_x.iter().map(|x| model.encoder.encode(x)).collect();
+
+        // Pass 1: bundle every sample into its class accumulator.
+        for (h, &y) in encoded.iter().zip(&ds.train_y) {
+            model.bundle(y, h, 1);
+        }
+
+        // Retraining: on misclassification, strengthen the true class and
+        // weaken the predicted one (OnlineHD-style, integer updates).
+        let mut order: Vec<usize> = (0..encoded.len()).collect();
+        let mut rng = Rng::seed_from_u64(cfg.seed ^ 0xDEAD_BEEF);
+        for _ in 0..cfg.epochs {
+            rng.shuffle(&mut order);
+            let class_hvs = model.class_hypervectors();
+            let mut any_update = false;
+            for &i in &order {
+                let (h, y) = (&encoded[i], ds.train_y[i]);
+                let pred = Self::classify_against(&class_hvs, h);
+                if pred != y {
+                    model.bundle(y, h, 1);
+                    model.bundle(pred, h, -1);
+                    any_update = true;
+                }
+            }
+            if !any_update {
+                break;
+            }
+        }
+        model
+    }
+
+    /// Add (`sign`=+1) or subtract (−1) a hypervector into a class bundle.
+    fn bundle(&mut self, class: usize, h: &BitVec, sign: i32) {
+        let acc = &mut self.acc[class];
+        for (lane_idx, &lane) in h.lanes().iter().enumerate() {
+            let base = lane_idx * 64;
+            let mut bits = lane;
+            while bits != 0 {
+                let j = bits.trailing_zeros() as usize;
+                acc[base + j] += sign;
+                bits &= bits - 1;
+            }
+        }
+        if sign > 0 {
+            self.counts[class] += 1;
+        }
+    }
+
+    /// Binarized class hypervectors: majority vote per dimension
+    /// (bit = 1 ⇔ more than half the bundled samples had a 1 there).
+    pub fn class_hypervectors(&self) -> Vec<BitVec> {
+        self.acc
+            .iter()
+            .zip(&self.counts)
+            .map(|(acc, &n)| {
+                let thresh = n as f64 / 2.0;
+                BitVec::from_bools(acc.iter().map(|&v| v as f64 > thresh))
+            })
+            .collect()
+    }
+
+    /// Classify an encoded query against explicit class hypervectors using
+    /// exact squared cosine (software reference path).
+    pub fn classify_against(class_hvs: &[BitVec], h: &BitVec) -> usize {
+        let mut best = 0usize;
+        let mut best_score = f64::NEG_INFINITY;
+        for (c, hv) in class_hvs.iter().enumerate() {
+            let x = h.dot(hv) as f64;
+            let y = hv.count_ones() as f64;
+            let score = if y == 0.0 { 0.0 } else { x * x / y };
+            if score > best_score {
+                best_score = score;
+                best = c;
+            }
+        }
+        best
+    }
+
+    /// Encode + classify one raw feature vector (software reference).
+    pub fn infer(&self, f: &[f32]) -> usize {
+        let class_hvs = self.class_hypervectors();
+        Self::classify_against(&class_hvs, &self.encoder.encode(f))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hdc::dataset::{Dataset, DatasetSpec, SyntheticParams};
+
+    fn small_ds() -> Dataset {
+        Dataset::synthetic(
+            DatasetSpec::Isolet,
+            SyntheticParams { subsample: 0.04, ..Default::default() },
+            21,
+        )
+    }
+
+    #[test]
+    fn training_beats_chance_comfortably() {
+        let ds = small_ds();
+        let model = HdcModel::train(&ds, TrainConfig { dims: 1024, epochs: 2, seed: 2, ..Default::default() });
+        let class_hvs = model.class_hypervectors();
+        let mut correct = 0;
+        for (x, &y) in ds.test_x.iter().zip(&ds.test_y) {
+            if HdcModel::classify_against(&class_hvs, &model.encoder.encode(x)) == y {
+                correct += 1;
+            }
+        }
+        let acc = correct as f64 / ds.test_len() as f64;
+        let chance = 1.0 / ds.classes as f64;
+        assert!(acc > 5.0 * chance, "accuracy {acc} vs chance {chance}");
+        assert!(acc > 0.5, "accuracy {acc}");
+    }
+
+    #[test]
+    fn retraining_does_not_hurt() {
+        let ds = small_ds();
+        let acc = |epochs| {
+            let m = HdcModel::train(&ds, TrainConfig { dims: 512, epochs, seed: 3, ..Default::default() });
+            let hvs = m.class_hypervectors();
+            ds.test_x
+                .iter()
+                .zip(&ds.test_y)
+                .filter(|(x, &y)| HdcModel::classify_against(&hvs, &m.encoder.encode(x)) == y)
+                .count() as f64
+                / ds.test_len() as f64
+        };
+        let (a0, a2) = (acc(0), acc(2));
+        assert!(a2 >= a0 - 0.05, "retrain {a2} vs single-pass {a0}");
+    }
+
+    #[test]
+    fn class_hypervector_count_and_len() {
+        let ds = small_ds();
+        let m = HdcModel::train(&ds, TrainConfig { dims: 256, epochs: 0, seed: 4, ..Default::default() });
+        let hvs = m.class_hypervectors();
+        assert_eq!(hvs.len(), ds.classes);
+        assert!(hvs.iter().all(|h| h.len() == 256));
+    }
+
+    #[test]
+    fn bundle_majority_logic() {
+        // Three vectors, majority per dimension.
+        let ds = Dataset {
+            name: "toy".into(),
+            features: 2,
+            classes: 1,
+            train_x: vec![],
+            train_y: vec![],
+            test_x: vec![],
+            test_y: vec![],
+        };
+        let mut m = HdcModel {
+            encoder: AnyEncoder::Rp(RandomProjectionEncoder::new(4, 2, 0)),
+            acc: vec![vec![0; 4]; 1],
+            counts: vec![0; 1],
+            classes: 1,
+        };
+        m.bundle(0, &BitVec::from_bits(&[1, 1, 0, 0]), 1);
+        m.bundle(0, &BitVec::from_bits(&[1, 0, 1, 0]), 1);
+        m.bundle(0, &BitVec::from_bits(&[1, 1, 0, 0]), 1);
+        let hv = &m.class_hypervectors()[0];
+        assert_eq!(hv.to_bytes(), vec![1, 1, 0, 0]);
+        let _ = ds;
+    }
+
+    #[test]
+    fn higher_dims_no_worse() {
+        // Fig. 9a trend: accuracy improves (or saturates) with D.
+        let ds = small_ds();
+        let acc = |dims| {
+            let m = HdcModel::train(&ds, TrainConfig { dims, epochs: 1, seed: 5, ..Default::default() });
+            let hvs = m.class_hypervectors();
+            ds.test_x
+                .iter()
+                .zip(&ds.test_y)
+                .filter(|(x, &y)| HdcModel::classify_against(&hvs, &m.encoder.encode(x)) == y)
+                .count() as f64
+                / ds.test_len() as f64
+        };
+        let (a256, a1024) = (acc(256), acc(1024));
+        assert!(a1024 >= a256 - 0.03, "D=1024 {a1024} vs D=256 {a256}");
+    }
+}

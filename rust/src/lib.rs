@@ -1,0 +1,41 @@
+//! # COSIME — FeFET-based Associative Memory for In-Memory Cosine Similarity Search
+//!
+//! Full-system reproduction of Liu et al., *COSIME: FeFET based Associative Memory
+//! for In-Memory Cosine Similarity Search*, ICCAD 2022.
+//!
+//! The crate is organized bottom-up, mirroring the paper's stack:
+//!
+//! * [`device`] — FeFET / 1FeFET1R device models with device-to-device variation
+//!   (the paper's Preisach + PTM substrate, solved behaviorally instead of SPICE).
+//! * [`circuit`] — subthreshold analog building blocks: translinear `X²/Y` loop
+//!   (paper §3.3), current mirrors, and the Lazzaro O(N) winner-take-all circuit
+//!   with a transient ODE integrator (paper §3.4–3.5).
+//! * [`am`] — array-level associative-memory engines: the analog COSIME engine
+//!   (device + circuit backed), a bit-exact digital engine, and the
+//!   Hamming / approximate-cosine baseline AMs the paper compares against.
+//! * [`energy`] — energy / latency / area accounting calibrated to Table 1.
+//! * [`baselines`] — GPU cost model (GTX 1080) and published AM comparison rows.
+//! * [`hdc`] — hyperdimensional-computing application layer (paper §4.2):
+//!   encoder, single-pass trainer, synthetic datasets with Table 2 shapes.
+//! * [`coordinator`] — the L3 serving engine: request router, dynamic batcher,
+//!   tile manager with hierarchical winner merge, metrics, backpressure.
+//! * [`runtime`] — PJRT/XLA runtime that loads AOT-lowered JAX/Pallas artifacts
+//!   (`artifacts/*.hlo.txt`) and runs them from the Rust hot path.
+//! * [`repro`] — regeneration harnesses for every table and figure in the paper.
+//!
+//! See `DESIGN.md` for the experiment index and the substitution ledger, and
+//! `EXPERIMENTS.md` for measured-vs-paper results.
+
+pub mod am;
+pub mod baselines;
+pub mod circuit;
+pub mod config;
+pub mod coordinator;
+pub mod device;
+pub mod energy;
+pub mod hdc;
+pub mod repro;
+pub mod runtime;
+pub mod util;
+
+pub use config::CosimeConfig;

@@ -1,0 +1,272 @@
+//! COSIME CLI — the L3 leader entrypoint.
+//!
+//! Subcommands:
+//!   fig1 | fig2 | fig4a | fig4b | fig6 | fig7 | fig8 | fig9 | table1 | table2
+//!       regenerate the corresponding paper table/figure (see DESIGN.md §5)
+//!   all       run every regeneration (writes results/ + prints everything)
+//!   search    one-off NN search over random or worst-case stored words
+//!   serve     start the AM serving engine and drive a synthetic workload
+//!   hdc       train + evaluate the HDC case study end to end
+//!   artifacts list the AOT artifacts the runtime can load
+//!
+//! Common flags: --results DIR, --seed N, --subsample F (dataset fraction),
+//! --trials N (Monte Carlo), --engine digital|analog|xla.
+
+use anyhow::{bail, Result};
+use cosime::am::{AmEngine, DigitalExactEngine};
+use cosime::config::CosimeConfig;
+use cosime::coordinator::{AmService, TileManager};
+use cosime::hdc::{Dataset, DatasetSpec, HdcModel, SyntheticParams, TrainConfig};
+use cosime::repro;
+use cosime::runtime::{RuntimeHandle, XlaAmEngine};
+use cosime::util::cli::Args;
+use cosime::util::{rng, BitVec};
+use std::time::Instant;
+
+fn main() {
+    let args = Args::from_env();
+    let code = match dispatch(&args) {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            1
+        }
+    };
+    std::process::exit(code);
+}
+
+fn dispatch(args: &Args) -> Result<()> {
+    let results = args.get("results");
+    let sub = args.get_f64("subsample", 0.05);
+    let trials = args.get_usize("trials", 100);
+    match args.subcommand.as_deref() {
+        Some("fig1") => repro::fig1::run(sub, results),
+        Some("fig2") => repro::fig2::run(results),
+        Some("fig4a") => repro::fig4::run_a(results),
+        Some("fig4b") => repro::fig4::run_b(results),
+        Some("fig4") => {
+            repro::fig4::run_a(results)?;
+            repro::fig4::run_b(results)
+        }
+        Some("fig6") => repro::fig6::run(args.get_str("sweep", "both"), results),
+        Some("fig7") => match args.get_str("part", "both") {
+            "a" => repro::fig7::run_a(trials, results),
+            "b" => repro::fig7::run_b(trials, results),
+            _ => {
+                repro::fig7::run_a(trials, results)?;
+                repro::fig7::run_b(trials, results)
+            }
+        },
+        Some("fig8") => repro::fig8::run(results),
+        Some("fig9") => match args.get_str("part", "all") {
+            "a" => repro::fig9::run_a(sub, results),
+            "b" | "c" | "bc" => repro::fig9::run_bc(results),
+            _ => {
+                repro::fig9::run_a(sub, results)?;
+                repro::fig9::run_bc(results)
+            }
+        },
+        Some("table1") => repro::table1::run(),
+        Some("table2") => repro::table2::run(),
+        Some("all") => run_all(sub, trials, results),
+        Some("search") => cmd_search(args),
+        Some("serve") => cmd_serve(args),
+        Some("hdc") => cmd_hdc(args),
+        Some("artifacts") => cmd_artifacts(args),
+        Some(other) => bail!("unknown subcommand '{other}' (see README)"),
+        None => {
+            print_usage();
+            Ok(())
+        }
+    }
+}
+
+fn print_usage() {
+    println!(
+        "cosime — FeFET in-memory cosine-similarity search engine (ICCAD'22 reproduction)\n\n\
+         usage: cosime <subcommand> [flags]\n\n\
+         repro:  fig1 fig2 fig4a fig4b fig6 fig7 fig8 fig9 table1 table2 all\n\
+         system: search serve hdc artifacts\n\n\
+         flags:  --results DIR  --seed N  --subsample F  --trials N\n\
+                 --engine digital|analog|xla  --rows N --dims N --queries N"
+    );
+}
+
+fn run_all(sub: f64, trials: usize, results: Option<&str>) -> Result<()> {
+    repro::table2::run()?;
+    println!();
+    repro::table1::run()?;
+    println!();
+    repro::fig1::run(sub, results)?;
+    println!();
+    repro::fig2::run(results)?;
+    println!();
+    repro::fig4::run_a(results)?;
+    println!();
+    repro::fig4::run_b(results)?;
+    println!();
+    repro::fig6::run("both", results)?;
+    println!();
+    repro::fig7::run_a(trials, results)?;
+    println!();
+    repro::fig7::run_b(trials, results)?;
+    println!();
+    repro::fig8::run(results)?;
+    println!();
+    repro::fig9::run_a(sub, results)?;
+    println!();
+    repro::fig9::run_bc(results)
+}
+
+/// Build an engine per --engine over the given words.
+fn build_engine(kind: &str, words: Vec<BitVec>, seed: u64) -> Result<Box<dyn AmEngine>> {
+    let cfg = CosimeConfig::default();
+    match kind {
+        "digital" => Ok(Box::new(DigitalExactEngine::new(words))),
+        "analog" => {
+            let mut r = rng(seed);
+            Ok(Box::new(cosime::am::analog::AnalogCosimeEngine::new(&cfg, words, &mut r)))
+        }
+        "xla" => {
+            let rt = RuntimeHandle::spawn("artifacts")?;
+            let dims = words[0].len();
+            let rows = words.len();
+            // Pick the smallest matching artifact geometry.
+            let artifact = if rows <= 32 && dims == 128 {
+                "cosime_search_r32_d128_b4"
+            } else if rows <= 256 && dims == 1024 {
+                "cosime_search_r256_d1024_b8"
+            } else if rows <= 256 && dims == 256 {
+                "cosime_search_r256_d256_b8"
+            } else {
+                bail!("no artifact for rows={rows}, dims={dims}; run `make artifacts`")
+            };
+            Ok(Box::new(XlaAmEngine::new(&rt, artifact, &words)?))
+        }
+        other => bail!("unknown engine '{other}'"),
+    }
+}
+
+fn cmd_search(args: &Args) -> Result<()> {
+    let rows = args.get_usize("rows", 256);
+    let dims = args.get_usize("dims", 1024);
+    let seed = args.get_u64("seed", 1);
+    let engine_kind = args.get_str("engine", "digital");
+    let mut r = rng(seed);
+    let words: Vec<BitVec> = (0..rows).map(|_| BitVec::random(dims, 0.5, &mut r)).collect();
+    let query = words[rows / 2].clone();
+    let engine = build_engine(engine_kind, words, seed)?;
+    let t0 = Instant::now();
+    let res = engine.search(&query);
+    let dt = t0.elapsed();
+    println!(
+        "engine={} rows={rows} dims={dims} -> winner={} score={:.4} ({:.1} µs wall)",
+        engine.name(),
+        res.winner,
+        res.score,
+        dt.as_secs_f64() * 1e6
+    );
+    assert_eq!(res.winner, rows / 2, "self-query must match itself");
+    println!("self-query sanity: OK");
+    Ok(())
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    let rows = args.get_usize("rows", 1024);
+    let dims = args.get_usize("dims", 1024);
+    let queries = args.get_usize("queries", 2000);
+    let seed = args.get_u64("seed", 2);
+    let engine_kind = args.get_str("engine", "digital").to_string();
+    let cfg = CosimeConfig::default();
+
+    let mut r = rng(seed);
+    let words: Vec<BitVec> = (0..rows).map(|_| BitVec::random(dims, 0.5, &mut r)).collect();
+    let tile_rows = cfg.array.rows;
+    let ek = engine_kind.clone();
+    let tiles = TileManager::build(words, tile_rows, move |w| build_engine(&ek, w, seed))?;
+    println!(
+        "serving {rows} words x {dims} bits on {} tiles ({} engine), workers={}",
+        tiles.tile_count(),
+        engine_kind,
+        cfg.coordinator.workers
+    );
+    let svc = AmService::start(&cfg.coordinator, tiles);
+
+    let t0 = Instant::now();
+    std::thread::scope(|s| {
+        for c in 0..4u64 {
+            let svc = svc.clone();
+            s.spawn(move || {
+                let mut r = rng(seed ^ (c + 10));
+                for _ in 0..queries / 4 {
+                    let q = BitVec::random(dims, 0.5, &mut r);
+                    let _ = svc.search_with_retry(q, 20);
+                }
+            });
+        }
+    });
+    let wall = t0.elapsed();
+    let m = svc.metrics();
+    println!("\n{}", m.report());
+    println!(
+        "\nthroughput: {:.0} queries/s over {:.1} ms wall",
+        m.completed as f64 / wall.as_secs_f64(),
+        wall.as_secs_f64() * 1e3
+    );
+    svc.shutdown();
+    Ok(())
+}
+
+fn cmd_hdc(args: &Args) -> Result<()> {
+    let sub = args.get_f64("subsample", 0.05);
+    let dims = args.get_usize("dims-hv", 1024);
+    let dataset = match args.get_str("dataset", "isolet") {
+        "ucihar" => DatasetSpec::Ucihar,
+        "face" => DatasetSpec::Face,
+        "isolet" => DatasetSpec::Isolet,
+        other => bail!("unknown dataset '{other}'"),
+    };
+    let ds =
+        Dataset::synthetic(dataset, SyntheticParams { subsample: sub, ..Default::default() }, 1);
+    println!(
+        "HDC on {} (synthetic, Table 2 shape): {} train / {} test, K={}, D={dims}",
+        ds.name,
+        ds.train_len(),
+        ds.test_len(),
+        ds.classes
+    );
+    let t0 = Instant::now();
+    let model = HdcModel::train(&ds, TrainConfig { dims, epochs: 2, seed: 3, ..Default::default() });
+    println!("trained in {:.2} s", t0.elapsed().as_secs_f64());
+    let engine = build_engine(args.get_str("engine", "digital"), model.class_hypervectors(), 4)?;
+    let mut correct = 0;
+    let t1 = Instant::now();
+    for (x, &y) in ds.test_x.iter().zip(&ds.test_y) {
+        if engine.search(&model.encoder.encode(x)).winner == y {
+            correct += 1;
+        }
+    }
+    let dt = t1.elapsed();
+    println!(
+        "accuracy: {:.1} % ({}/{}) | inference {:.1} µs/query ({} engine)",
+        100.0 * correct as f64 / ds.test_len() as f64,
+        correct,
+        ds.test_len(),
+        dt.as_secs_f64() * 1e6 / ds.test_len() as f64,
+        engine.name()
+    );
+    Ok(())
+}
+
+fn cmd_artifacts(args: &Args) -> Result<()> {
+    let dir = args.get_str("dir", "artifacts");
+    let rt = RuntimeHandle::spawn(dir)?;
+    println!("platform: {}", rt.platform()?);
+    for name in rt.names()? {
+        let sig = rt.signature(&name)?;
+        let ins: Vec<String> =
+            sig.inputs.iter().map(|t| format!("{:?}:{}", t.shape, t.dtype)).collect();
+        println!("  {name}  inputs=[{}]", ins.join(", "));
+    }
+    Ok(())
+}

@@ -1,0 +1,77 @@
+//! Fig. 1 regeneration: accuracy of (a) nearest-neighbor classification and
+//! (b) few-shot learning with Hamming-distance search vs. cosine search —
+//! the motivation figure for building an exact-CSS AM.
+
+use anyhow::Result;
+
+use crate::hdc::{
+    cosine_engine, evaluate_accuracy, few_shot_accuracy, hamming_engine, Dataset, DatasetSpec,
+    FewShotSpec, SyntheticParams, TrainConfig,
+};
+use crate::repro::{results_dir, write_csv};
+
+pub fn run(subsample: f64, results: Option<&str>) -> Result<()> {
+    let params = SyntheticParams { subsample, ..Default::default() };
+    let dir = results_dir(results)?;
+
+    println!("== Fig. 1a: NN classification accuracy (D = 1024) ==");
+    println!("{:<10} {:>10} {:>10} {:>8}", "dataset", "Hamming", "Cosine", "Δ");
+    let mut csv_a = Vec::new();
+    for (i, spec) in DatasetSpec::all().iter().enumerate() {
+        let ds = Dataset::synthetic(*spec, params, 100 + i as u64);
+        let cfg = TrainConfig { dims: 1024, epochs: 1, seed: 11, ..Default::default() };
+        let cos = evaluate_accuracy(&ds, cfg, cosine_engine).accuracy();
+        let ham = evaluate_accuracy(&ds, cfg, hamming_engine).accuracy();
+        println!(
+            "{:<10} {:>9.1}% {:>9.1}% {:>+7.1}%",
+            ds.name,
+            ham * 100.0,
+            cos * 100.0,
+            (cos - ham) * 100.0
+        );
+        csv_a.push(vec![i as f64, ham, cos]);
+    }
+    write_csv(&dir.join("fig1a_nn_accuracy.csv"), &["dataset", "hamming", "cosine"], csv_a)?;
+
+    println!("\n== Fig. 1b: few-shot learning accuracy (5-way) ==");
+    println!("{:<10} {:>6} {:>10} {:>10} {:>8}", "dataset", "shots", "Hamming", "Cosine", "Δ");
+    let mut csv_b = Vec::new();
+    for (i, spec) in [DatasetSpec::Ucihar, DatasetSpec::Isolet].iter().enumerate() {
+        let ds = Dataset::synthetic(*spec, params, 200 + i as u64);
+        for shots in [1usize, 5] {
+            let mk = |seed| FewShotSpec {
+                ways: 5,
+                shots,
+                queries: 4,
+                episodes: 40,
+                dims: 1024,
+                seed,
+            };
+            let cos = few_shot_accuracy(&ds, mk(21), cosine_engine);
+            let ham = few_shot_accuracy(&ds, mk(21), hamming_engine);
+            println!(
+                "{:<10} {:>6} {:>9.1}% {:>9.1}% {:>+7.1}%",
+                ds.name,
+                shots,
+                ham * 100.0,
+                cos * 100.0,
+                (cos - ham) * 100.0
+            );
+            csv_b.push(vec![i as f64, shots as f64, ham, cos]);
+        }
+    }
+    write_csv(&dir.join("fig1b_fewshot.csv"), &["dataset", "shots", "hamming", "cosine"], csv_b)?;
+    println!("(csv under {})", dir.display());
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn fig1_runs_small() {
+        let dir = std::env::temp_dir().join("cosime-fig1-test");
+        super::run(0.02, dir.to_str()).unwrap();
+        assert!(dir.join("fig1a_nn_accuracy.csv").exists());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

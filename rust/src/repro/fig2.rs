@@ -1,0 +1,66 @@
+//! Fig. 2 regeneration: FeFET I_D–V_G characteristics for the two V_TH
+//! states, (b) bare FeFET and (c) with the series resistor (1FeFET1R), plus
+//! the AND-gate truth table of Fig. 2d.
+
+use anyhow::Result;
+
+use crate::config::CosimeConfig;
+use crate::device::{Cell1F1R, FeFet};
+use crate::repro::{results_dir, write_csv};
+
+pub fn run(results: Option<&str>) -> Result<()> {
+    let cfg = CosimeConfig::default();
+    let d = &cfg.device;
+
+    println!("== Fig. 2: FeFET I_D-V_G (behavioral model) ==");
+    let mut lo = FeFet::default();
+    lo.program(true, d);
+    let mut hi = FeFet::default();
+    hi.program(false, d);
+
+    let mut rows = Vec::new();
+    println!("{:>8} {:>14} {:>14} {:>14} {:>14}", "V_G", "I_lowVT", "I_highVT", "1F1R_low", "1F1R_high");
+    for step in 0..=60 {
+        let vg = -1.0 + 3.5 * step as f64 / 60.0;
+        let i_lo = lo.id(vg, d.v_wl, d);
+        let i_hi = hi.id(vg, d.v_wl, d);
+        // 1FeFET1R: series R limits the ON branch (Fig. 2c flattening).
+        let r_lim = d.v_wl / d.r_series;
+        let i_lo_r = i_lo * r_lim / (i_lo + r_lim);
+        let i_hi_r = i_hi * r_lim / (i_hi + r_lim);
+        rows.push(vec![vg, i_lo, i_hi, i_lo_r, i_hi_r]);
+        if step % 10 == 0 {
+            println!("{vg:>8.2} {i_lo:>14.3e} {i_hi:>14.3e} {i_lo_r:>14.3e} {i_hi_r:>14.3e}");
+        }
+    }
+    let dir = results_dir(results)?;
+    write_csv(&dir.join("fig2_idvg.csv"), &["vg", "i_lowvt", "i_highvt", "i1f1r_low", "i1f1r_high"], rows)?;
+
+    println!("\nFig. 2d AND-gate truth table (cell currents, A):");
+    let mut one = Cell1F1R::new(0.0, 0.0, 0.0);
+    one.program(true, d);
+    let mut zero = Cell1F1R::new(0.0, 0.0, 0.0);
+    zero.program(false, d);
+    for (stored, cell) in [("1", &one), ("0", &zero)] {
+        for input in [true, false] {
+            println!(
+                "  stored={stored} input={} -> I = {:.3e} A",
+                u8::from(input),
+                cell.search_current(input, d)
+            );
+        }
+    }
+    println!("(csv: {}/fig2_idvg.csv)", dir.display());
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn fig2_runs() {
+        let dir = std::env::temp_dir().join("cosime-fig2-test");
+        super::run(dir.to_str()).unwrap();
+        assert!(dir.join("fig2_idvg.csv").exists());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

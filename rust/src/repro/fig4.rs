@@ -1,0 +1,93 @@
+//! Fig. 4 regeneration: (a) translinear transfer characteristic — simulated
+//! behavioral model vs. the Eq. 6 theory line; (b) transient WTA waveforms
+//! for a small search (input step → translinear outputs → WTA race).
+
+use anyhow::Result;
+
+use crate::circuit::{Translinear, Wta};
+use crate::config::CosimeConfig;
+use crate::repro::{results_dir, write_csv};
+
+/// Part (a): I_z vs I_x at fixed I_y, log sweep across the operating range.
+pub fn run_a(results: Option<&str>) -> Result<()> {
+    let cfg = CosimeConfig::default();
+    let tl = Translinear::new(cfg.translinear.clone());
+    let i_y = cfg.translinear.i_y_nominal;
+
+    println!("== Fig. 4a: translinear transfer (I_y = {:.0} nA) ==", i_y * 1e9);
+    println!("{:>12} {:>14} {:>14} {:>10}", "I_x (A)", "I_z sim", "I_z theory", "dev %");
+    let mut rows = Vec::new();
+    let mut in_band = 0;
+    let mut total_band = 0;
+    for step in 0..=80 {
+        let ix = 1e-9 * (10f64).powf(4.0 * step as f64 / 80.0); // 1 nA → 10 µA
+        let sim = tl.transfer(ix, i_y);
+        let theory = tl.transfer_ideal(ix, i_y);
+        let dev = (sim - theory).abs() / theory.max(1e-15) * 100.0;
+        rows.push(vec![ix, sim, theory, dev]);
+        if step % 10 == 0 {
+            println!("{ix:>12.3e} {sim:>14.3e} {theory:>14.3e} {dev:>9.1}%");
+        }
+        if ix >= cfg.translinear.i_x_min && ix <= cfg.translinear.i_x_max {
+            total_band += 1;
+            if dev < 5.0 {
+                in_band += 1;
+            }
+        }
+    }
+    println!(
+        "operating region [{:.0e}, {:.0e}] A: {}/{} points within 5 % of theory",
+        cfg.translinear.i_x_min, cfg.translinear.i_x_max, in_band, total_band
+    );
+    let dir = results_dir(results)?;
+    write_csv(&dir.join("fig4a_translinear.csv"), &["ix", "iz_sim", "iz_theory", "dev_pct"], rows)?;
+    println!("(csv: {}/fig4a_translinear.csv)", dir.display());
+    Ok(())
+}
+
+/// Part (b): WTA transient waveforms for a 4-rail race including the paper's
+/// worst-case pair ratio (1/4 vs 1/5).
+pub fn run_b(results: Option<&str>) -> Result<()> {
+    let cfg = CosimeConfig::default();
+    let wta = Wta::new(cfg.wta.clone());
+    let scale = cfg.wta.i_bias;
+    // Rails: worst-case pair (0.25, 0.20) + two weaker competitors.
+    let inputs = vec![scale * 0.25 * 4.0, scale * 0.20 * 4.0, scale * 0.10 * 4.0, scale * 0.05 * 4.0];
+    let out = wta.settle(&inputs, true);
+
+    println!("== Fig. 4b: WTA transient (4 rails, worst-case pair) ==");
+    println!(
+        "winner = rail {} | settle latency = {:.2} ns | settled = {}",
+        out.winner,
+        out.latency * 1e9,
+        out.settled
+    );
+    let wf = out.waveform.expect("capture requested");
+    let dir = results_dir(results)?;
+    std::fs::write(dir.join("fig4b_wta_waveforms.csv"), wf.to_csv())?;
+    // Print a coarse ASCII summary of the winner/loser output separation.
+    let n = wf.len();
+    println!("{:>10} {:>12} {:>12} {:>10}", "t (ns)", "I_win (A)", "I_2nd (A)", "ratio");
+    for frac in [0.0, 0.1, 0.25, 0.5, 0.75, 1.0] {
+        let i = ((n - 1) as f64 * frac) as usize;
+        let t = i as f64 * wf.dt;
+        let iw = wf.traces[out.winner].values[i];
+        let i2 = wf.traces[1 - out.winner.min(1)].values[i];
+        println!("{:>10.2} {iw:>12.3e} {i2:>12.3e} {:>10.2}", t * 1e9, iw / i2.max(1e-15));
+    }
+    println!("(csv: {}/fig4b_wta_waveforms.csv)", dir.display());
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn fig4_runs() {
+        let dir = std::env::temp_dir().join("cosime-fig4-test");
+        super::run_a(dir.to_str()).unwrap();
+        super::run_b(dir.to_str()).unwrap();
+        assert!(dir.join("fig4a_translinear.csv").exists());
+        assert!(dir.join("fig4b_wta_waveforms.csv").exists());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

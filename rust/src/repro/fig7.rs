@@ -1,0 +1,111 @@
+//! Fig. 7 regeneration: Monte Carlo over all device-to-device variations
+//! (FeFET V_TH σ_LVT/σ_HVT, 1R 8 %, MOS mismatch, supply 10 %).
+//!
+//! (a) 100 fabricated dies search the worst-case pair (cos² = 1/4 vs 1/5);
+//!     the paper reports ≈90 % accuracy. Waveforms for a handful of dies are
+//!     dumped for the output-waveform panel.
+//! (b) error rate as the competing row's cosine approaches the winner's
+//!     (cos θ₁ = 0.5 fixed); the paper's max error is ≈10 %.
+
+use anyhow::Result;
+
+use crate::am::analog::AnalogCosimeEngine;
+use crate::am::AmEngine;
+use crate::config::CosimeConfig;
+use crate::repro::{results_dir, worst_case_pair, write_csv};
+use crate::util::{child_seed, par, BitVec};
+
+/// Monte Carlo accuracy for a given competitor cos² (winner fixed at 1/4).
+/// Each trial fabricates a fresh die (frozen variation) and runs the search.
+pub fn mc_accuracy(rows: usize, dims: usize, cos2_b: f64, trials: usize, seed: u64) -> f64 {
+    let cfg = CosimeConfig::default();
+    // Build the stored set: row 0 at cos² = 1/4; row 1 at cos² = cos2_b.
+    let (query, mut words, _) = worst_case_pair(rows, dims, seed);
+    // Row 1: same popcount as the query (Y = |a|²), overlap x chosen so
+    // cos² = x²/(|a|²·Y) = (x/|a|²)² = cos2_b  =>  x = |a|²·cosθ.
+    let na = query.count_ones() as usize;
+    let x = ((cos2_b * (na as f64) * (na as f64)).sqrt()).round() as usize;
+    let mut row_b = BitVec::zeros(dims);
+    for j in 0..x {
+        row_b.set(j, true); // shared with the query
+    }
+    for j in na..(na + (na - x)).min(dims) {
+        row_b.set(j, true); // outside the query, keeps Y = |a|²
+    }
+    words[1] = row_b;
+    debug_assert!(
+        (query.cos2(&words[1]) - cos2_b).abs() < 0.01,
+        "cos² construction off: {} vs {cos2_b}",
+        query.cos2(&words[1])
+    );
+
+    let hits: usize = par::par_map_idx(trials, |t| {
+        let mut rng = crate::util::rng(child_seed(seed, t as u64));
+        let engine = AnalogCosimeEngine::new(&cfg, words.clone(), &mut rng);
+        usize::from(engine.search(&query).winner == 0)
+    })
+    .into_iter()
+    .sum();
+    hits as f64 / trials as f64
+}
+
+pub fn run_a(trials: usize, results: Option<&str>) -> Result<()> {
+    println!("== Fig. 7a: worst-case Monte Carlo ({trials} dies, cos² = 1/4 vs 1/5) ==");
+    let acc = mc_accuracy(64, 1024, 0.20, trials, 71);
+    println!("search accuracy: {:.1} % (paper: ~90 %)", acc * 100.0);
+
+    // Output waveforms for a few dies (the Fig. 7a panel).
+    let cfg = CosimeConfig::default();
+    let (query, words, _) = worst_case_pair(16, 1024, 72);
+    let dir = results_dir(results)?;
+    for die in 0..3 {
+        let mut rng = crate::util::rng(child_seed(73, die));
+        let engine = AnalogCosimeEngine::new(&cfg, words.clone(), &mut rng);
+        let out = engine.search_detailed(&query, true);
+        if let Some(wf) = out.wta {
+            if let Some(w) = wf.waveform {
+                std::fs::write(dir.join(format!("fig7a_die{die}_waveforms.csv")), w.to_csv())?;
+            }
+        }
+    }
+    println!("(waveform csv under {})", dir.display());
+    Ok(())
+}
+
+pub fn run_b(trials: usize, results: Option<&str>) -> Result<()> {
+    println!("== Fig. 7b: error rate vs competing cos θ (winner at cos θ = 0.5) ==");
+    println!("{:>10} {:>10} {:>12}", "cos θ₂", "cos² θ₂", "error rate");
+    let mut rows = Vec::new();
+    for cos_b in [0.1, 0.2, 0.3, 0.35, 0.4, 0.42, 0.4472] {
+        let cos2_b = cos_b * cos_b;
+        let acc = mc_accuracy(64, 1024, cos2_b, trials, 74);
+        let err = 1.0 - acc;
+        println!("{cos_b:>10.3} {cos2_b:>10.3} {:>11.1} %", err * 100.0);
+        rows.push(vec![cos_b, cos2_b, err]);
+    }
+    let dir = results_dir(results)?;
+    write_csv(&dir.join("fig7b_error_rates.csv"), &["cos_theta2", "cos2_theta2", "error_rate"], rows)?;
+    println!("(csv: {}/fig7b_error_rates.csv)", dir.display());
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn worst_case_accuracy_near_paper_value() {
+        // Paper Fig. 7a: ≈90 % worst-case accuracy under full variation.
+        let acc = mc_accuracy(16, 1024, 0.20, 120, 7);
+        assert!((0.80..=0.98).contains(&acc), "worst-case MC accuracy {acc}");
+    }
+
+    #[test]
+    fn error_rate_increases_as_competitor_approaches() {
+        // Fig. 7b trend: closer cosine ⇒ higher error rate.
+        let far = 1.0 - mc_accuracy(16, 1024, 0.04, 80, 8); // cos θ = 0.2
+        let near = 1.0 - mc_accuracy(16, 1024, 0.20, 80, 8); // cos θ ≈ 0.447
+        assert!(near >= far, "near {near} must err at least as much as far {far}");
+        assert!(far < 0.08, "distant competitor error must be small: {far}");
+    }
+}

@@ -1,0 +1,129 @@
+//! Regeneration harnesses for every table and figure in the paper's
+//! evaluation (see DESIGN.md §5 for the experiment index). Each submodule
+//! prints the paper-style rows/series to stdout and dumps CSV/JSON under
+//! `results/` for plotting; EXPERIMENTS.md records paper-vs-measured.
+
+pub mod fig1;
+pub mod fig2;
+pub mod fig4;
+pub mod fig6;
+pub mod fig7;
+pub mod fig8;
+pub mod fig9;
+pub mod table1;
+pub mod table2;
+
+use anyhow::Result;
+use std::path::{Path, PathBuf};
+
+/// Where result CSV/JSON files go.
+pub fn results_dir(custom: Option<&str>) -> Result<PathBuf> {
+    let dir = PathBuf::from(custom.unwrap_or("results"));
+    std::fs::create_dir_all(&dir)?;
+    Ok(dir)
+}
+
+/// Write a CSV file with a header row and f64 rows.
+pub fn write_csv(
+    path: &Path,
+    header: &[&str],
+    rows: impl IntoIterator<Item = Vec<f64>>,
+) -> Result<()> {
+    let mut out = String::new();
+    out.push_str(&header.join(","));
+    out.push('\n');
+    for row in rows {
+        let cells: Vec<String> = row.iter().map(|v| format!("{v:.6e}")).collect();
+        out.push_str(&cells.join(","));
+        out.push('\n');
+    }
+    std::fs::write(path, out)?;
+    Ok(())
+}
+
+/// Worst-case stored pair (paper §4 setup): two rows whose squared cosines
+/// with the returned query are exactly 1/4 and 1/5 — the closest competitors
+/// the WTA must distinguish (score ratio 1.25). Remaining rows are filled
+/// with low-similarity distractors. Returns (query, rows, winner_index).
+pub fn worst_case_pair(
+    rows: usize,
+    dims: usize,
+    seed: u64,
+) -> (crate::util::BitVec, Vec<crate::util::BitVec>, usize) {
+    use crate::util::BitVec;
+    assert!(rows >= 2 && dims >= 16, "worst-case pair needs >= 16 dims");
+    // Query: 512 ones. Row A: overlap 256, total 512 ones -> cos^2 = 1/4.
+    // Row B: overlap 256, total 640 ones -> cos^2 = 1/5.
+    let na = 512.min(dims / 2);
+    let overlap = na / 2;
+    let mut query = BitVec::zeros(dims);
+    for j in 0..na {
+        query.set(j, true);
+    }
+    let mut row_a = BitVec::zeros(dims);
+    for j in 0..overlap {
+        row_a.set(j, true); // shared with the query
+    }
+    for j in na..(na + na - overlap) {
+        row_a.set(j, true); // outside the query
+    }
+    let mut row_b = BitVec::zeros(dims);
+    for j in 0..overlap {
+        row_b.set(j, true);
+    }
+    for j in na..(na + na / 4 + na - overlap) {
+        row_b.set(j, true); // extra ones push |b|^2 to 1.25x
+    }
+    debug_assert!((query.cos2(&row_a) - 0.25).abs() < 1e-9, "{}", query.cos2(&row_a));
+    debug_assert!((query.cos2(&row_b) - 0.20).abs() < 1e-9, "{}", query.cos2(&row_b));
+
+    let mut rng = crate::util::rng(seed);
+    let mut words = vec![row_a, row_b];
+    while words.len() < rows {
+        // Distractors drawn from the upper half of the bit range: tiny
+        // overlap with the query keeps their scores far below the pair.
+        let mut w = BitVec::zeros(dims);
+        for _ in 0..na {
+            let j = dims / 2 + rng.below(dims / 2);
+            w.set(j, true);
+        }
+        words.push(w);
+    }
+    (query, words, 0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn worst_case_pair_scores() {
+        let (q, words, winner) = worst_case_pair(16, 1024, 1);
+        assert_eq!(winner, 0);
+        assert!((q.cos2(&words[0]) - 0.25).abs() < 1e-9);
+        assert!((q.cos2(&words[1]) - 0.20).abs() < 1e-9);
+        for w in &words[2..] {
+            assert!(q.cos2(w) < 0.1, "distractor too close: {}", q.cos2(w));
+        }
+    }
+
+    #[test]
+    fn worst_case_pair_wins_exact_search() {
+        use crate::am::{AmEngine, DigitalExactEngine};
+        let (q, words, winner) = worst_case_pair(64, 1024, 2);
+        let e = DigitalExactEngine::new(words);
+        assert_eq!(e.search(&q).winner, winner);
+    }
+
+    #[test]
+    fn csv_writer_roundtrip() {
+        let dir = std::env::temp_dir().join(format!("cosime-test-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("t.csv");
+        write_csv(&p, &["a", "b"], vec![vec![1.0, 2.0], vec![3.0, 4.5]]).unwrap();
+        let text = std::fs::read_to_string(&p).unwrap();
+        assert!(text.starts_with("a,b\n"));
+        assert_eq!(text.lines().count(), 3);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -1,0 +1,51 @@
+//! Table 1 regeneration: comparison of existing AMs with different distance
+//! metrics. Literature rows are constants (as in the paper); the COSIME row
+//! is computed from the calibrated energy/latency/area models.
+
+use anyhow::Result;
+
+use crate::baselines::published::table1;
+use crate::config::CosimeConfig;
+
+pub fn run() -> Result<()> {
+    let cfg = CosimeConfig::default();
+    let rows = table1(&cfg);
+    let us = rows.last().expect("cosime row");
+
+    println!("== Table 1: AM comparison (256x256 array) ==");
+    println!(
+        "{:<22} {:<6} {:<15} {:>16} {:>14} {:>12} {:>8}",
+        "Memory", "Tech", "Metric", "E/bit (fJ)", "Latency (ns)", "Area (mm2)", "node"
+    );
+    for r in &rows {
+        println!(
+            "{:<22} {:<6} {:<15} {:>9.3} ({:>4.2}x) {:>7.2} ({:>5.2}x) {:>7.4} ({:>4.2}x) {:>5}",
+            r.name,
+            r.technology,
+            r.metric,
+            r.energy_fj_per_bit,
+            r.energy_fj_per_bit / us.energy_fj_per_bit,
+            r.latency_ns,
+            r.latency_ns / us.latency_ns,
+            r.area_mm2,
+            r.area_mm2 / us.area_mm2,
+            r.process_nm,
+        );
+    }
+    let approx = &rows[3];
+    println!(
+        "\nheadline: {:.1}x energy and {:.0}x latency improvement vs approximate CSS [10] \
+         (paper: 90.5x / 333x)",
+        approx.energy_fj_per_bit / us.energy_fj_per_bit,
+        approx.latency_ns / us.latency_ns
+    );
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn table1_prints() {
+        super::run().unwrap();
+    }
+}

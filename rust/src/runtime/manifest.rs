@@ -1,0 +1,150 @@
+//! Artifact manifest: the signature index written by `python/compile/aot.py`.
+
+use crate::util::json::Json;
+use anyhow::{anyhow, Context, Result};
+use std::path::Path;
+
+/// Tensor signature (shape + dtype string as jax reports it).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct TensorSpec {
+    pub shape: Vec<usize>,
+    pub dtype: String,
+}
+
+impl TensorSpec {
+    pub fn elements(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    fn from_json(v: &Json) -> Result<TensorSpec> {
+        let shape = v
+            .get("shape")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow!("tensor spec missing shape"))?
+            .iter()
+            .map(|d| d.as_usize().ok_or_else(|| anyhow!("bad dim")))
+            .collect::<Result<Vec<_>>>()?;
+        let dtype = v
+            .get("dtype")
+            .and_then(Json::as_str)
+            .ok_or_else(|| anyhow!("tensor spec missing dtype"))?
+            .to_string();
+        Ok(TensorSpec { shape, dtype })
+    }
+}
+
+/// One lowered entry point.
+#[derive(Debug, Clone)]
+pub struct ArtifactEntry {
+    pub name: String,
+    pub file: String,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+}
+
+/// The whole manifest.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    entries: Vec<ArtifactEntry>,
+}
+
+impl Manifest {
+    pub fn load<P: AsRef<Path>>(path: P) -> Result<Manifest> {
+        let text = std::fs::read_to_string(path.as_ref())
+            .with_context(|| format!("reading {:?}", path.as_ref()))?;
+        Self::parse(&text)
+    }
+
+    pub fn parse(text: &str) -> Result<Manifest> {
+        let root = Json::parse(text).context("parsing manifest.json")?;
+        let arr = root.as_arr().ok_or_else(|| anyhow!("manifest must be a JSON array"))?;
+        let mut entries = Vec::with_capacity(arr.len());
+        for e in arr {
+            let name = e
+                .get("name")
+                .and_then(Json::as_str)
+                .ok_or_else(|| anyhow!("entry missing name"))?
+                .to_string();
+            let file = e
+                .get("file")
+                .and_then(Json::as_str)
+                .ok_or_else(|| anyhow!("entry {name} missing file"))?
+                .to_string();
+            let specs = |key: &str| -> Result<Vec<TensorSpec>> {
+                e.get(key)
+                    .and_then(Json::as_arr)
+                    .ok_or_else(|| anyhow!("entry {name} missing {key}"))?
+                    .iter()
+                    .map(TensorSpec::from_json)
+                    .collect()
+            };
+            let (inputs, outputs) = (specs("inputs")?, specs("outputs")?);
+            entries.push(ArtifactEntry { name, file, inputs, outputs });
+        }
+        Ok(Manifest { entries })
+    }
+
+    pub fn get(&self, name: &str) -> Option<&ArtifactEntry> {
+        self.entries.iter().find(|e| e.name == name)
+    }
+
+    pub fn names(&self) -> Vec<&str> {
+        self.entries.iter().map(|e| e.name.as_str()).collect()
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// Find a cosime_search variant matching (rows, dims, batch).
+    pub fn find_search(&self, rows: usize, dims: usize, batch: usize) -> Option<&ArtifactEntry> {
+        self.get(&format!("cosime_search_r{rows}_d{dims}_b{batch}"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"[
+      {"name": "cosime_search_r32_d128_b4", "file": "cosime_search_r32_d128_b4.hlo.txt",
+       "inputs": [{"shape": [4, 128], "dtype": "float32"},
+                   {"shape": [32, 128], "dtype": "float32"},
+                   {"shape": [32], "dtype": "float32"}],
+       "outputs": [{"shape": [4], "dtype": "int32"},
+                    {"shape": [4], "dtype": "float32"}]}
+    ]"#;
+
+    #[test]
+    fn parse_sample() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        assert_eq!(m.len(), 1);
+        let e = m.get("cosime_search_r32_d128_b4").unwrap();
+        assert_eq!(e.inputs.len(), 3);
+        assert_eq!(e.inputs[0].shape, vec![4, 128]);
+        assert_eq!(e.inputs[0].elements(), 512);
+        assert_eq!(e.outputs[1].dtype, "float32");
+        assert!(m.find_search(32, 128, 4).is_some());
+        assert!(m.find_search(32, 128, 5).is_none());
+    }
+
+    #[test]
+    fn malformed_manifest_errors() {
+        assert!(Manifest::parse("{}").is_err());
+        assert!(Manifest::parse(r#"[{"name": "x"}]"#).is_err());
+        assert!(Manifest::parse("not json").is_err());
+    }
+
+    #[test]
+    fn real_manifest_parses_when_present() {
+        let path = concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts/manifest.json");
+        if let Ok(m) = Manifest::load(path) {
+            assert!(m.len() >= 8, "expected all entry points, got {}", m.len());
+            assert!(m.get("hdc_infer_n617_k32_d1024_b8").is_some());
+        }
+    }
+}

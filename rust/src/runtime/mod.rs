@@ -1,0 +1,257 @@
+//! PJRT/XLA runtime (the L3↔L2 bridge): loads the HLO-text artifacts that
+//! `python/compile/aot.py` lowered from the JAX/Pallas model, compiles them
+//! once on the PJRT CPU client, and executes them from the Rust hot path.
+//! Python never runs at request time.
+//!
+//! Artifact discovery is manifest-driven (`artifacts/manifest.json`), so the
+//! Rust side never hard-codes shapes: every executable knows its input and
+//! output signatures and validates calls against them.
+
+mod manifest;
+pub mod service;
+mod xla_engine;
+
+pub use manifest::{ArtifactEntry, Manifest, TensorSpec};
+pub use service::RuntimeHandle;
+pub use xla_engine::XlaAmEngine;
+
+use anyhow::{anyhow, bail, Context, Result};
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::Mutex;
+
+/// A loaded + compiled artifact with its signature.
+pub struct Executable {
+    pub entry: ArtifactEntry,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+/// Runtime: one PJRT client + lazily compiled executable cache.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    dir: PathBuf,
+    manifest: Manifest,
+    cache: Mutex<HashMap<String, std::sync::Arc<Executable>>>,
+}
+
+/// A typed host tensor for marshalling into/out of XLA literals.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Tensor {
+    F32(Vec<f32>, Vec<usize>),
+    I32(Vec<i32>, Vec<usize>),
+}
+
+impl Tensor {
+    pub fn shape(&self) -> &[usize] {
+        match self {
+            Tensor::F32(_, s) | Tensor::I32(_, s) => s,
+        }
+    }
+
+    pub fn dtype(&self) -> &'static str {
+        match self {
+            Tensor::F32(..) => "float32",
+            Tensor::I32(..) => "int32",
+        }
+    }
+
+    pub fn as_f32(&self) -> Result<&[f32]> {
+        match self {
+            Tensor::F32(v, _) => Ok(v),
+            _ => bail!("tensor is {}, wanted float32", self.dtype()),
+        }
+    }
+
+    pub fn as_i32(&self) -> Result<&[i32]> {
+        match self {
+            Tensor::I32(v, _) => Ok(v),
+            _ => bail!("tensor is {}, wanted int32", self.dtype()),
+        }
+    }
+
+    fn to_literal(&self) -> Result<xla::Literal> {
+        let dims: Vec<i64> = self.shape().iter().map(|&d| d as i64).collect();
+        let lit = match self {
+            Tensor::F32(v, _) => xla::Literal::vec1(v),
+            Tensor::I32(v, _) => xla::Literal::vec1(v),
+        };
+        Ok(lit.reshape(&dims)?)
+    }
+
+    fn from_literal(lit: &xla::Literal, spec: &TensorSpec) -> Result<Tensor> {
+        match spec.dtype.as_str() {
+            "float32" => Ok(Tensor::F32(lit.to_vec::<f32>()?, spec.shape.clone())),
+            "int32" => Ok(Tensor::I32(lit.to_vec::<i32>()?, spec.shape.clone())),
+            other => bail!("unsupported artifact dtype {other}"),
+        }
+    }
+}
+
+impl Runtime {
+    /// Create a runtime over an artifact directory (expects manifest.json).
+    pub fn new<P: AsRef<Path>>(artifact_dir: P) -> Result<Self> {
+        let dir = artifact_dir.as_ref().to_path_buf();
+        let manifest = Manifest::load(dir.join("manifest.json"))
+            .with_context(|| format!("loading manifest from {dir:?} (run `make artifacts`)"))?;
+        let client = xla::PjRtClient::cpu()?;
+        Ok(Runtime { client, dir, manifest, cache: Mutex::new(HashMap::new()) })
+    }
+
+    /// Default artifact location relative to the repo root.
+    pub fn from_default_dir() -> Result<Self> {
+        Self::new("artifacts")
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load + compile an artifact by manifest name (cached).
+    pub fn load(&self, name: &str) -> Result<std::sync::Arc<Executable>> {
+        if let Some(e) = self.cache.lock().expect("cache lock").get(name) {
+            return Ok(e.clone());
+        }
+        let entry = self
+            .manifest
+            .get(name)
+            .ok_or_else(|| anyhow!("artifact '{name}' not in manifest"))?
+            .clone();
+        let path = self.dir.join(&entry.file);
+        let proto = xla::HloModuleProto::from_text_file(&path)
+            .with_context(|| format!("parsing HLO text {path:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self.client.compile(&comp).with_context(|| format!("compiling {name}"))?;
+        let arc = std::sync::Arc::new(Executable { entry, exe });
+        self.cache.lock().expect("cache lock").insert(name.to_string(), arc.clone());
+        Ok(arc)
+    }
+
+    /// Execute an artifact with typed tensors, validating the signature.
+    pub fn run(&self, name: &str, inputs: &[Tensor]) -> Result<Vec<Tensor>> {
+        let exe = self.load(name)?;
+        exe.run(inputs)
+    }
+}
+
+impl Executable {
+    /// Execute with signature validation; returns the flattened outputs.
+    pub fn run(&self, inputs: &[Tensor]) -> Result<Vec<Tensor>> {
+        let sig = &self.entry;
+        if inputs.len() != sig.inputs.len() {
+            bail!("{}: got {} inputs, signature wants {}", sig.name, inputs.len(), sig.inputs.len());
+        }
+        for (i, (t, s)) in inputs.iter().zip(&sig.inputs).enumerate() {
+            if t.shape() != s.shape.as_slice() {
+                bail!("{} input {i}: shape {:?} != expected {:?}", sig.name, t.shape(), s.shape);
+            }
+            if t.dtype() != s.dtype {
+                bail!("{} input {i}: dtype {} != expected {}", sig.name, t.dtype(), s.dtype);
+            }
+        }
+        let literals: Vec<xla::Literal> =
+            inputs.iter().map(|t| t.to_literal()).collect::<Result<_>>()?;
+        let result = self.exe.execute::<xla::Literal>(&literals)?[0][0].to_literal_sync()?;
+        // aot.py lowers with return_tuple=True: flatten the output tuple.
+        let parts = result.to_tuple()?;
+        if parts.len() != sig.outputs.len() {
+            bail!("{}: got {} outputs, signature says {}", sig.name, parts.len(), sig.outputs.len());
+        }
+        parts
+            .iter()
+            .zip(&sig.outputs)
+            .map(|(lit, spec)| Tensor::from_literal(lit, spec))
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn runtime() -> Option<Runtime> {
+        // Integration-style tests: skip silently when artifacts are absent
+        // (CI runs `make artifacts` first; unit tests must not hard-fail).
+        Runtime::new(concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts")).ok()
+    }
+
+    #[test]
+    fn tensor_accessors_and_mismatches() {
+        let t = Tensor::F32(vec![1.0, 2.0], vec![2]);
+        assert_eq!(t.dtype(), "float32");
+        assert!(t.as_f32().is_ok());
+        assert!(t.as_i32().is_err());
+        let i = Tensor::I32(vec![1, 2, 3], vec![3]);
+        assert_eq!(i.shape(), &[3]);
+    }
+
+    #[test]
+    fn missing_artifact_dir_errors() {
+        assert!(Runtime::new("/nonexistent/artifacts").is_err());
+    }
+
+    #[test]
+    fn unknown_artifact_name_errors() {
+        let Some(rt) = runtime() else { return };
+        assert!(rt.load("no_such_artifact").is_err());
+    }
+
+    #[test]
+    fn small_cosime_search_runs_and_matches_reference() {
+        let Some(rt) = runtime() else { return };
+        // cosime_search_r32_d128_b4: q (4,128), cls (32,128), ycnt (32,).
+        let mut rng = crate::util::rng(42);
+        let words: Vec<crate::util::BitVec> =
+            (0..32).map(|_| crate::util::BitVec::random(128, 0.5, &mut rng)).collect();
+        let queries: Vec<crate::util::BitVec> =
+            (0..4).map(|_| crate::util::BitVec::random(128, 0.5, &mut rng)).collect();
+
+        let q: Vec<f32> = queries.iter().flat_map(|b| b.to_f32()).collect();
+        let cls: Vec<f32> = words.iter().flat_map(|b| b.to_f32()).collect();
+        let y: Vec<f32> = words.iter().map(|b| b.count_ones() as f32).collect();
+
+        let out = rt
+            .run(
+                "cosime_search_r32_d128_b4",
+                &[
+                    Tensor::F32(q, vec![4, 128]),
+                    Tensor::F32(cls, vec![32, 128]),
+                    Tensor::F32(y, vec![32]),
+                ],
+            )
+            .expect("execute");
+        let idx = out[0].as_i32().unwrap();
+        let scores = out[1].as_f32().unwrap();
+
+        let engine = crate::am::DigitalExactEngine::new(words);
+        use crate::am::AmEngine;
+        for (qi, query) in queries.iter().enumerate() {
+            let expect = engine.search(query);
+            assert_eq!(idx[qi] as usize, expect.winner, "query {qi}");
+            assert!(
+                (scores[qi] as f64 - expect.score).abs() < 1e-3,
+                "query {qi}: {} vs {}",
+                scores[qi],
+                expect.score
+            );
+        }
+    }
+
+    #[test]
+    fn wrong_shape_rejected() {
+        let Some(rt) = runtime() else { return };
+        let r = rt.run("cosime_search_r32_d128_b4", &[Tensor::F32(vec![0.0; 4], vec![4])]);
+        assert!(r.is_err());
+    }
+
+    #[test]
+    fn executable_cache_reuses_compilation() {
+        let Some(rt) = runtime() else { return };
+        let a = rt.load("cosime_search_r32_d128_b4").expect("load");
+        let b = rt.load("cosime_search_r32_d128_b4").expect("load again");
+        assert!(std::sync::Arc::ptr_eq(&a, &b));
+    }
+}

@@ -1,0 +1,172 @@
+//! Runtime service thread: the `xla` crate's PJRT types are neither `Send`
+//! nor `Sync` (internal `Rc`), so a single dedicated OS thread owns the
+//! [`Runtime`] and serves execute requests over channels. [`RuntimeHandle`]
+//! is the cheap, thread-safe façade the coordinator and engines hold —
+//! exactly one "device thread" per PJRT client, mirroring how a real
+//! accelerator queue is owned by one submission context.
+
+use anyhow::{anyhow, Result};
+use std::path::PathBuf;
+use std::sync::mpsc;
+use std::sync::{Arc, Mutex};
+
+use super::{ArtifactEntry, Runtime, Tensor};
+
+enum Req {
+    Run { name: String, inputs: Vec<Tensor>, reply: mpsc::SyncSender<Result<Vec<Tensor>>> },
+    Signature { name: String, reply: mpsc::SyncSender<Result<ArtifactEntry>> },
+    Names { reply: mpsc::SyncSender<Vec<String>> },
+    Platform { reply: mpsc::SyncSender<String> },
+}
+
+/// Thread-safe handle to the runtime service.
+#[derive(Clone)]
+pub struct RuntimeHandle {
+    tx: Arc<Mutex<mpsc::Sender<Req>>>,
+}
+
+impl RuntimeHandle {
+    /// Spawn the service thread over an artifact directory. Fails fast if
+    /// the manifest cannot be loaded.
+    pub fn spawn(artifact_dir: impl Into<PathBuf>) -> Result<RuntimeHandle> {
+        let dir = artifact_dir.into();
+        let (tx, rx) = mpsc::channel::<Req>();
+        let (init_tx, init_rx) = mpsc::sync_channel::<Result<()>>(1);
+        std::thread::Builder::new()
+            .name("cosime-runtime".into())
+            .spawn(move || {
+                let rt = match Runtime::new(&dir) {
+                    Ok(rt) => {
+                        let _ = init_tx.send(Ok(()));
+                        rt
+                    }
+                    Err(e) => {
+                        let _ = init_tx.send(Err(e));
+                        return;
+                    }
+                };
+                while let Ok(req) = rx.recv() {
+                    match req {
+                        Req::Run { name, inputs, reply } => {
+                            let _ = reply.send(rt.run(&name, &inputs));
+                        }
+                        Req::Signature { name, reply } => {
+                            let _ = reply.send(
+                                rt.load(&name).map(|e| e.entry.clone()),
+                            );
+                        }
+                        Req::Names { reply } => {
+                            let _ = reply.send(
+                                rt.manifest().names().iter().map(|s| s.to_string()).collect(),
+                            );
+                        }
+                        Req::Platform { reply } => {
+                            let _ = reply.send(rt.platform());
+                        }
+                    }
+                }
+            })
+            .expect("spawn runtime thread");
+        init_rx.recv().map_err(|_| anyhow!("runtime thread died during init"))??;
+        Ok(RuntimeHandle { tx: Arc::new(Mutex::new(tx)) })
+    }
+
+    fn send(&self, req: Req) -> Result<()> {
+        self.tx
+            .lock()
+            .expect("runtime handle lock")
+            .send(req)
+            .map_err(|_| anyhow!("runtime service thread has exited"))
+    }
+
+    /// Execute an artifact by name.
+    pub fn run(&self, name: &str, inputs: Vec<Tensor>) -> Result<Vec<Tensor>> {
+        let (reply, rx) = mpsc::sync_channel(1);
+        self.send(Req::Run { name: name.to_string(), inputs, reply })?;
+        rx.recv().map_err(|_| anyhow!("runtime dropped reply"))?
+    }
+
+    /// Load (compile if needed) and return an artifact's signature.
+    pub fn signature(&self, name: &str) -> Result<ArtifactEntry> {
+        let (reply, rx) = mpsc::sync_channel(1);
+        self.send(Req::Signature { name: name.to_string(), reply })?;
+        rx.recv().map_err(|_| anyhow!("runtime dropped reply"))?
+    }
+
+    /// Names of all available artifacts.
+    pub fn names(&self) -> Result<Vec<String>> {
+        let (reply, rx) = mpsc::sync_channel(1);
+        self.send(Req::Names { reply })?;
+        rx.recv().map_err(|_| anyhow!("runtime dropped reply"))
+    }
+
+    /// PJRT platform string (e.g. "cpu"; "tpu" with a TPU plugin).
+    pub fn platform(&self) -> Result<String> {
+        let (reply, rx) = mpsc::sync_channel(1);
+        self.send(Req::Platform { reply })?;
+        rx.recv().map_err(|_| anyhow!("runtime dropped reply"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn handle() -> Option<RuntimeHandle> {
+        RuntimeHandle::spawn(concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts")).ok()
+    }
+
+    #[test]
+    fn spawn_fails_cleanly_on_missing_dir() {
+        assert!(RuntimeHandle::spawn("/no/such/dir").is_err());
+    }
+
+    #[test]
+    fn handle_is_send_sync_and_clonable() {
+        fn assert_send_sync<T: Send + Sync + Clone>() {}
+        assert_send_sync::<RuntimeHandle>();
+    }
+
+    #[test]
+    fn signature_and_names_roundtrip() {
+        let Some(h) = handle() else { return };
+        let names = h.names().unwrap();
+        assert!(names.iter().any(|n| n == "cosime_search_r32_d128_b4"), "{names:?}");
+        let sig = h.signature("cosime_search_r32_d128_b4").unwrap();
+        assert_eq!(sig.inputs[0].shape, vec![4, 128]);
+        assert_eq!(h.platform().unwrap().to_lowercase(), "cpu");
+    }
+
+    #[test]
+    fn concurrent_runs_from_many_threads() {
+        let Some(h) = handle() else { return };
+        let mut rng = crate::util::rng(5);
+        let cls: Vec<f32> = (0..32 * 128).map(|_| f32::from(rng.bool(0.5))).collect();
+        let y: Vec<f32> = cls.chunks(128).map(|c| c.iter().sum()).collect();
+        std::thread::scope(|s| {
+            for t in 0..4 {
+                let h = h.clone();
+                let cls = cls.clone();
+                let y = y.clone();
+                s.spawn(move || {
+                    let mut r = crate::util::rng(100 + t);
+                    for _ in 0..3 {
+                        let q: Vec<f32> =
+                            (0..4 * 128).map(|_| f32::from(r.bool(0.5))).collect();
+                        let out = h
+                            .run(
+                                "cosime_search_r32_d128_b4",
+                                vec![
+                                    Tensor::F32(q, vec![4, 128]),
+                                    Tensor::F32(cls.clone(), vec![32, 128]),
+                                    Tensor::F32(y.clone(), vec![32]),
+                                ],
+                            )
+                            .expect("run");
+                        assert_eq!(out.len(), 2);
+                    }
+                });
+            }
+        });
+    }
+}

@@ -1,0 +1,188 @@
+//! [`XlaAmEngine`]: an [`AmEngine`] whose search runs through a compiled
+//! JAX/Pallas artifact via the runtime service — the digital twin of the
+//! COSIME tile, executing the *same lowered HLO* a TPU deployment would.
+//!
+//! The artifact has a fixed (rows, dims, batch) signature; queries are
+//! grouped into batches and short batches are padded with the first query
+//! (results for padding lanes are discarded). Stored words beyond the row
+//! count are rejected; missing rows are zero-padded (zero rows never win).
+
+use anyhow::{anyhow, Result};
+
+use crate::am::{AmEngine, Metric, SearchResult};
+use crate::util::BitVec;
+
+use super::service::RuntimeHandle;
+use super::Tensor;
+
+pub struct XlaAmEngine {
+    rt: RuntimeHandle,
+    artifact: String,
+    rows: usize,
+    dims: usize,
+    batch: usize,
+    cls_tensor: Tensor,
+    ycnt_tensor: Tensor,
+    name: String,
+}
+
+impl XlaAmEngine {
+    /// Build over a cosime_search artifact matching the stored words'
+    /// geometry.
+    pub fn new(rt: &RuntimeHandle, artifact: &str, words: &[BitVec]) -> Result<Self> {
+        let sig = rt.signature(artifact)?;
+        if sig.inputs.len() != 3 {
+            return Err(anyhow!("{artifact} is not a search artifact"));
+        }
+        let (batch, dims) = (sig.inputs[0].shape[0], sig.inputs[0].shape[1]);
+        let rows = sig.inputs[1].shape[0];
+        if words.is_empty() || words.len() > rows {
+            return Err(anyhow!("{} words for a {rows}-row artifact", words.len()));
+        }
+        if words[0].len() != dims {
+            return Err(anyhow!("word dims {} != artifact dims {dims}", words[0].len()));
+        }
+
+        let mut cls = vec![0.0f32; rows * dims];
+        let mut ycnt = vec![0.0f32; rows];
+        for (r, w) in words.iter().enumerate() {
+            for (j, bit) in w.iter().enumerate() {
+                cls[r * dims + j] = f32::from(u8::from(bit));
+            }
+            ycnt[r] = w.count_ones() as f32;
+        }
+
+        Ok(XlaAmEngine {
+            rt: rt.clone(),
+            artifact: artifact.to_string(),
+            rows: words.len(),
+            dims,
+            batch,
+            cls_tensor: Tensor::F32(cls, vec![rows, dims]),
+            ycnt_tensor: Tensor::F32(ycnt, vec![rows]),
+            name: format!("xla:{artifact}"),
+        })
+    }
+
+    /// The artifact's native batch size.
+    pub fn native_batch(&self) -> usize {
+        self.batch
+    }
+
+    fn run_batch(&self, queries: &[&BitVec]) -> Result<Vec<SearchResult>> {
+        assert!(!queries.is_empty() && queries.len() <= self.batch);
+        let mut q = vec![0.0f32; self.batch * self.dims];
+        for (b, query) in queries.iter().enumerate() {
+            assert_eq!(query.len(), self.dims, "query dims mismatch");
+            for (j, bit) in query.iter().enumerate() {
+                q[b * self.dims + j] = f32::from(u8::from(bit));
+            }
+        }
+        // Pad trailing lanes with the first query (cheap, discarded).
+        for b in queries.len()..self.batch {
+            let head: Vec<f32> = q[0..self.dims].to_vec();
+            q[b * self.dims..(b + 1) * self.dims].copy_from_slice(&head);
+        }
+        let out = self.rt.run(
+            &self.artifact,
+            vec![
+                Tensor::F32(q, vec![self.batch, self.dims]),
+                self.cls_tensor.clone(),
+                self.ycnt_tensor.clone(),
+            ],
+        )?;
+        let idx = out[0].as_i32()?;
+        let score = out[1].as_f32()?;
+        Ok(queries
+            .iter()
+            .enumerate()
+            .map(|(b, _)| SearchResult { winner: idx[b] as usize, score: score[b] as f64 })
+            .collect())
+    }
+}
+
+impl AmEngine for XlaAmEngine {
+    fn name(&self) -> &str {
+        &self.name
+    }
+    fn metric(&self) -> Metric {
+        Metric::Cosine
+    }
+    fn rows(&self) -> usize {
+        self.rows
+    }
+    fn dims(&self) -> usize {
+        self.dims
+    }
+
+    fn scores(&self, query: &BitVec) -> Vec<f64> {
+        // The search artifact returns only the argmax; full score vectors go
+        // through the digital engine. Provide the winner as a one-hot score.
+        let r = self.search(query);
+        let mut s = vec![0.0; self.rows];
+        s[r.winner] = r.score;
+        s
+    }
+
+    fn search(&self, query: &BitVec) -> SearchResult {
+        self.run_batch(&[query]).expect("xla execute")[0].clone()
+    }
+
+    fn search_batch(&self, queries: &[BitVec]) -> Vec<SearchResult> {
+        let mut out = Vec::with_capacity(queries.len());
+        for chunk in queries.chunks(self.batch) {
+            let refs: Vec<&BitVec> = chunk.iter().collect();
+            out.extend(self.run_batch(&refs).expect("xla execute"));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::am::DigitalExactEngine;
+    use crate::util::rng;
+
+    fn handle() -> Option<RuntimeHandle> {
+        RuntimeHandle::spawn(concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts")).ok()
+    }
+
+    #[test]
+    fn xla_engine_matches_digital_reference() {
+        let Some(rt) = handle() else { return };
+        let mut r = rng(1);
+        let words: Vec<BitVec> = (0..32).map(|_| BitVec::random(128, 0.5, &mut r)).collect();
+        let eng = XlaAmEngine::new(&rt, "cosime_search_r32_d128_b4", &words).expect("build");
+        let reference = DigitalExactEngine::new(words);
+        let queries: Vec<BitVec> = (0..10).map(|_| BitVec::random(128, 0.5, &mut r)).collect();
+        let batch = eng.search_batch(&queries);
+        for (q, res) in queries.iter().zip(&batch) {
+            assert_eq!(res.winner, reference.search(q).winner);
+        }
+    }
+
+    #[test]
+    fn padded_rows_never_win() {
+        let Some(rt) = handle() else { return };
+        let mut r = rng(2);
+        // Only 5 real words in a 32-row artifact.
+        let words: Vec<BitVec> = (0..5).map(|_| BitVec::random(128, 0.5, &mut r)).collect();
+        let eng = XlaAmEngine::new(&rt, "cosime_search_r32_d128_b4", &words).expect("build");
+        for _ in 0..20 {
+            let q = BitVec::random(128, 0.5, &mut r);
+            let res = eng.search(&q);
+            assert!(res.winner < 5, "padding row won: {}", res.winner);
+        }
+    }
+
+    #[test]
+    fn geometry_mismatch_rejected() {
+        let Some(rt) = handle() else { return };
+        let mut r = rng(3);
+        let words: Vec<BitVec> = (0..4).map(|_| BitVec::random(64, 0.5, &mut r)).collect();
+        assert!(XlaAmEngine::new(&rt, "cosime_search_r32_d128_b4", &words).is_err());
+        let too_many: Vec<BitVec> = (0..64).map(|_| BitVec::random(128, 0.5, &mut r)).collect();
+        assert!(XlaAmEngine::new(&rt, "cosime_search_r32_d128_b4", &too_many).is_err());
+    }
+}

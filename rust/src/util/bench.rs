@@ -1,0 +1,227 @@
+//! Micro-benchmark harness (criterion replacement for the offline
+//! environment). Used by the `rust/benches/*.rs` targets (built with
+//! `harness = false`) and by the in-binary perf commands.
+//!
+//! Method: warmup, then timed batches until both a minimum wall time and a
+//! minimum iteration count are reached; reports mean / p50 / p99 per-iteration
+//! times with outlier-robust statistics.
+
+use std::time::{Duration, Instant};
+
+use super::stats::{mean, percentile, stddev};
+
+/// One benchmark measurement.
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub iterations: u64,
+    pub mean_ns: f64,
+    pub p50_ns: f64,
+    pub p99_ns: f64,
+    pub stddev_ns: f64,
+    /// Throughput in user-provided elements/iteration, if set.
+    pub elems_per_iter: Option<f64>,
+}
+
+impl BenchResult {
+    /// Elements per second, when a throughput basis was provided.
+    pub fn throughput(&self) -> Option<f64> {
+        self.elems_per_iter.map(|e| e / (self.mean_ns * 1e-9))
+    }
+
+    /// One-line human-readable report row.
+    pub fn row(&self) -> String {
+        let tp = match self.throughput() {
+            Some(t) if t >= 1e9 => format!("  {:8.2} Gelem/s", t / 1e9),
+            Some(t) if t >= 1e6 => format!("  {:8.2} Melem/s", t / 1e6),
+            Some(t) => format!("  {:8.2} elem/s", t),
+            None => String::new(),
+        };
+        format!(
+            "{:<44} {:>12} {:>12} {:>12}  (n={}){tp}",
+            self.name,
+            fmt_ns(self.mean_ns),
+            fmt_ns(self.p50_ns),
+            fmt_ns(self.p99_ns),
+            self.iterations,
+        )
+    }
+}
+
+/// Format nanoseconds human-readably.
+pub fn fmt_ns(ns: f64) -> String {
+    if ns < 1e3 {
+        format!("{ns:.1} ns")
+    } else if ns < 1e6 {
+        format!("{:.2} µs", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.2} ms", ns / 1e6)
+    } else {
+        format!("{:.3} s", ns / 1e9)
+    }
+}
+
+/// Benchmark runner with configurable budget.
+pub struct Bench {
+    pub warmup: Duration,
+    pub measure: Duration,
+    pub min_iters: u64,
+    pub max_iters: u64,
+    results: Vec<BenchResult>,
+}
+
+impl Default for Bench {
+    fn default() -> Self {
+        Bench {
+            warmup: Duration::from_millis(150),
+            measure: Duration::from_millis(700),
+            min_iters: 10,
+            max_iters: 2_000_000,
+            results: Vec::new(),
+        }
+    }
+}
+
+impl Bench {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Quick-budget harness for use inside `cargo test`-adjacent smoke runs.
+    pub fn quick() -> Self {
+        Bench {
+            warmup: Duration::from_millis(20),
+            measure: Duration::from_millis(80),
+            min_iters: 3,
+            max_iters: 100_000,
+            results: Vec::new(),
+        }
+    }
+
+    /// Measure `f`, preventing the result from being optimized away via
+    /// `std::hint::black_box`.
+    pub fn bench<T>(&mut self, name: &str, mut f: impl FnMut() -> T) -> &BenchResult {
+        self.bench_with_throughput(name, None, move || {
+            std::hint::black_box(f());
+        })
+    }
+
+    /// Measure with a throughput basis (elements processed per iteration).
+    pub fn bench_throughput<T>(
+        &mut self,
+        name: &str,
+        elems: f64,
+        mut f: impl FnMut() -> T,
+    ) -> &BenchResult {
+        self.bench_with_throughput(name, Some(elems), move || {
+            std::hint::black_box(f());
+        })
+    }
+
+    fn bench_with_throughput(
+        &mut self,
+        name: &str,
+        elems: Option<f64>,
+        mut f: impl FnMut(),
+    ) -> &BenchResult {
+        // Warmup and per-iteration time estimate.
+        let wstart = Instant::now();
+        let mut wu_iters = 0u64;
+        while wstart.elapsed() < self.warmup || wu_iters < 3 {
+            f();
+            wu_iters += 1;
+            if wu_iters >= self.max_iters {
+                break;
+            }
+        }
+        let est_ns = (wstart.elapsed().as_nanos() as f64 / wu_iters as f64).max(1.0);
+
+        // Choose a batch size so each sample is ≥ ~50 µs (timer noise floor).
+        let batch = ((50_000.0 / est_ns).ceil() as u64).clamp(1, self.max_iters);
+        let mut samples_ns: Vec<f64> = Vec::new();
+        let mut iters = 0u64;
+        let mstart = Instant::now();
+        while (mstart.elapsed() < self.measure || iters < self.min_iters)
+            && iters < self.max_iters
+        {
+            let t0 = Instant::now();
+            for _ in 0..batch {
+                f();
+            }
+            let dt = t0.elapsed().as_nanos() as f64 / batch as f64;
+            samples_ns.push(dt);
+            iters += batch;
+        }
+
+        let result = BenchResult {
+            name: name.to_string(),
+            iterations: iters,
+            mean_ns: mean(&samples_ns),
+            p50_ns: percentile(&samples_ns, 50.0),
+            p99_ns: percentile(&samples_ns, 99.0),
+            stddev_ns: stddev(&samples_ns),
+            elems_per_iter: elems,
+        };
+        self.results.push(result);
+        self.results.last().unwrap()
+    }
+
+    /// All results so far.
+    pub fn results(&self) -> &[BenchResult] {
+        &self.results
+    }
+
+    /// Print a report table with a title.
+    pub fn report(&self, title: &str) {
+        println!("\n== {title} ==");
+        println!(
+            "{:<44} {:>12} {:>12} {:>12}",
+            "benchmark", "mean", "p50", "p99"
+        );
+        for r in &self.results {
+            println!("{}", r.row());
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_something_plausible() {
+        let mut b = Bench::quick();
+        let r = b.bench("spin", || {
+            // Data-dependent multiply chain: LLVM can neither const-fold nor
+            // closed-form this (unlike a sum of squares).
+            let n = std::hint::black_box(1000u64);
+            let mut s = 0x9E37_79B9u64;
+            for i in 0..n {
+                s = s.wrapping_mul(i | 1).rotate_left(7);
+            }
+            s
+        });
+        assert!(r.mean_ns > 100.0, "1000-deep multiply chain must take >100ns: {}", r.mean_ns);
+        assert!(r.mean_ns < 1e7, "and well under 10ms: {}", r.mean_ns);
+        assert!(r.iterations >= 3);
+    }
+
+    #[test]
+    fn throughput_computed() {
+        let mut b = Bench::quick();
+        let r = b.bench_throughput("tp", 1024.0, || std::hint::black_box(3u32 * 7));
+        let tp = r.throughput().unwrap();
+        assert!(tp > 0.0);
+    }
+
+    #[test]
+    fn report_rows_render() {
+        let mut b = Bench::quick();
+        b.bench("a", || 1 + 1);
+        assert!(b.results()[0].row().contains("a"));
+        assert!(fmt_ns(1.5e6).contains("ms"));
+        assert!(fmt_ns(500.0).contains("ns"));
+        assert!(fmt_ns(2.5e3).contains("µs"));
+        assert!(fmt_ns(3.0e9).contains(" s"));
+    }
+}

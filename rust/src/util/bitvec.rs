@@ -1,0 +1,230 @@
+//! Bit-packed binary vector. COSIME stores and searches *binary* words
+//! (paper §3.1 assumes bits ∈ {0,1}); the digital reference engine and the
+//! coordinator hot path operate on u64 lanes so a 1024-bit word is 16 words of
+//! AND + POPCNT instead of 1024 byte ops.
+
+/// A fixed-length binary vector packed into u64 lanes (LSB-first within lane).
+#[derive(Clone, PartialEq, Eq, Hash)]
+pub struct BitVec {
+    len: usize,
+    lanes: Vec<u64>,
+}
+
+impl std::fmt::Debug for BitVec {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "BitVec(len={}, ones={})", self.len, self.count_ones())
+    }
+}
+
+impl BitVec {
+    /// All-zeros vector of `len` bits.
+    pub fn zeros(len: usize) -> Self {
+        BitVec { len, lanes: vec![0; len.div_ceil(64)] }
+    }
+
+    /// Build from a slice of bits (anything nonzero is a 1).
+    pub fn from_bits(bits: &[u8]) -> Self {
+        let mut v = BitVec::zeros(bits.len());
+        for (i, &b) in bits.iter().enumerate() {
+            if b != 0 {
+                v.set(i, true);
+            }
+        }
+        v
+    }
+
+    /// Build from an iterator of booleans.
+    pub fn from_bools<I: IntoIterator<Item = bool>>(iter: I) -> Self {
+        let bits: Vec<u8> = iter.into_iter().map(u8::from).collect();
+        Self::from_bits(&bits)
+    }
+
+    /// Random vector with each bit ~ Bernoulli(density).
+    pub fn random(len: usize, density: f64, rng: &mut super::Rng) -> Self {
+        // Fast path for the ubiquitous unbiased case: one PRNG draw fills a
+        // whole lane (§Perf — load generation dominated several benches).
+        if (density - 0.5).abs() < 1e-12 {
+            let mut v = BitVec::zeros(len);
+            for lane in v.lanes.iter_mut() {
+                *lane = rng.next_u64();
+            }
+            // Clear the bits beyond len in the trailing lane.
+            let tail = len % 64;
+            if tail != 0 {
+                *v.lanes.last_mut().unwrap() &= (1u64 << tail) - 1;
+            }
+            return v;
+        }
+        Self::from_bools((0..len).map(|_| rng.bool(density)))
+    }
+
+    /// Number of bits.
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    /// True if the vector has zero bits.
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Raw u64 lanes (LSB-first). Trailing bits beyond `len` are zero.
+    pub fn lanes(&self) -> &[u64] {
+        &self.lanes
+    }
+
+    /// Get bit `i`.
+    pub fn get(&self, i: usize) -> bool {
+        assert!(i < self.len, "bit index {i} out of range {}", self.len);
+        (self.lanes[i / 64] >> (i % 64)) & 1 == 1
+    }
+
+    /// Set bit `i`.
+    pub fn set(&mut self, i: usize, val: bool) {
+        assert!(i < self.len, "bit index {i} out of range {}", self.len);
+        let (lane, off) = (i / 64, i % 64);
+        if val {
+            self.lanes[lane] |= 1 << off;
+        } else {
+            self.lanes[lane] &= !(1 << off);
+        }
+    }
+
+    /// Flip bit `i`, returning the new value.
+    pub fn flip(&mut self, i: usize) -> bool {
+        let v = !self.get(i);
+        self.set(i, v);
+        v
+    }
+
+    /// Popcount: number of 1s (`‖b‖²` for a binary vector — paper Eq. 2's Y).
+    pub fn count_ones(&self) -> u32 {
+        self.lanes.iter().map(|l| l.count_ones()).sum()
+    }
+
+    /// Binary dot product with `other` (`a·b` — paper Eq. 2's X).
+    pub fn dot(&self, other: &BitVec) -> u32 {
+        assert_eq!(self.len, other.len, "dot of mismatched lengths");
+        self.lanes
+            .iter()
+            .zip(&other.lanes)
+            .map(|(a, b)| (a & b).count_ones())
+            .sum()
+    }
+
+    /// Hamming distance to `other`.
+    pub fn hamming(&self, other: &BitVec) -> u32 {
+        assert_eq!(self.len, other.len, "hamming of mismatched lengths");
+        self.lanes
+            .iter()
+            .zip(&other.lanes)
+            .map(|(a, b)| (a ^ b).count_ones())
+            .sum()
+    }
+
+    /// Squared cosine similarity to `other`: `(a·b)² / (‖a‖²‖b‖²)` (paper Eq. 2).
+    /// Returns 0 for degenerate (all-zero) operands.
+    pub fn cos2(&self, other: &BitVec) -> f64 {
+        let x = self.dot(other) as f64;
+        let na = self.count_ones() as f64;
+        let nb = other.count_ones() as f64;
+        if na == 0.0 || nb == 0.0 {
+            return 0.0;
+        }
+        x * x / (na * nb)
+    }
+
+    /// Unpack to a byte-per-bit vector (for marshalling into XLA literals).
+    pub fn to_bytes(&self) -> Vec<u8> {
+        (0..self.len).map(|i| u8::from(self.get(i))).collect()
+    }
+
+    /// Unpack to f32 per bit (for the exact-cosine XLA path).
+    pub fn to_f32(&self) -> Vec<f32> {
+        (0..self.len).map(|i| f32::from(u8::from(self.get(i)))).collect()
+    }
+
+    /// Iterate over bits.
+    pub fn iter(&self) -> impl Iterator<Item = bool> + '_ {
+        (0..self.len).map(move |i| self.get(i))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_bits() {
+        let bits = [1u8, 0, 1, 1, 0, 0, 1, 0, 1];
+        let v = BitVec::from_bits(&bits);
+        assert_eq!(v.len(), 9);
+        assert_eq!(v.to_bytes(), bits);
+        assert_eq!(v.count_ones(), 5);
+    }
+
+    #[test]
+    fn dot_and_hamming() {
+        let a = BitVec::from_bits(&[1, 1, 0, 0, 1]);
+        let b = BitVec::from_bits(&[1, 0, 0, 1, 1]);
+        assert_eq!(a.dot(&b), 2);
+        assert_eq!(a.hamming(&b), 2);
+        assert_eq!(a.dot(&a), a.count_ones());
+        assert_eq!(a.hamming(&a), 0);
+    }
+
+    #[test]
+    fn cos2_matches_definition() {
+        let a = BitVec::from_bits(&[1, 1, 1, 0]);
+        let b = BitVec::from_bits(&[1, 1, 0, 0]);
+        // dot=2, |a|²=3, |b|²=2 → 4/6
+        assert!((a.cos2(&b) - 4.0 / 6.0).abs() < 1e-12);
+        assert!((a.cos2(&a) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn cos2_degenerate_zero_vector() {
+        let a = BitVec::zeros(8);
+        let b = BitVec::from_bits(&[1, 0, 0, 0, 0, 0, 0, 0]);
+        assert_eq!(a.cos2(&b), 0.0);
+        assert_eq!(b.cos2(&a), 0.0);
+        assert_eq!(a.cos2(&a), 0.0);
+    }
+
+    #[test]
+    fn set_get_flip_across_lane_boundary() {
+        let mut v = BitVec::zeros(130);
+        v.set(0, true);
+        v.set(63, true);
+        v.set(64, true);
+        v.set(129, true);
+        assert_eq!(v.count_ones(), 4);
+        assert!(v.get(63) && v.get(64));
+        assert!(!v.flip(63));
+        assert_eq!(v.count_ones(), 3);
+    }
+
+    #[test]
+    fn trailing_lane_bits_stay_zero() {
+        let v = BitVec::from_bits(&[1; 70]);
+        // 70 ones even though two u64 lanes could hold 128.
+        assert_eq!(v.count_ones(), 70);
+        assert_eq!(v.lanes()[1] >> 6, 0);
+    }
+
+    #[test]
+    #[should_panic(expected = "mismatched")]
+    fn dot_length_mismatch_panics() {
+        let a = BitVec::zeros(8);
+        let b = BitVec::zeros(9);
+        let _ = a.dot(&b);
+    }
+
+    #[test]
+    fn random_density_is_plausible() {
+        let mut r = crate::util::rng(7);
+        let v = BitVec::random(10_000, 0.3, &mut r);
+        let d = v.count_ones() as f64 / 10_000.0;
+        assert!((d - 0.3).abs() < 0.03, "density {d}");
+    }
+}

@@ -1,0 +1,127 @@
+//! Minimal command-line argument parser (clap replacement for the offline
+//! environment): `binary <subcommand> [--flag] [--key value] [positional...]`.
+
+use std::collections::BTreeMap;
+
+/// Parsed arguments for one invocation.
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    pub positional: Vec<String>,
+    flags: BTreeMap<String, String>,
+}
+
+pub const FLAG_SET: &str = "\u{1}"; // sentinel: flag present without value
+
+impl Args {
+    /// Parse from an iterator of raw args (excluding argv[0]). The first
+    /// non-flag token becomes the subcommand; `--key value` and `--key=value`
+    /// both work; a `--key` followed by another flag or end-of-args is a
+    /// boolean flag.
+    pub fn parse<I: IntoIterator<Item = String>>(raw: I) -> Args {
+        let tokens: Vec<String> = raw.into_iter().collect();
+        let mut args = Args::default();
+        let mut i = 0;
+        while i < tokens.len() {
+            let t = &tokens[i];
+            if let Some(key) = t.strip_prefix("--") {
+                if let Some((k, v)) = key.split_once('=') {
+                    args.flags.insert(k.to_string(), v.to_string());
+                } else if i + 1 < tokens.len() && !tokens[i + 1].starts_with("--") {
+                    args.flags.insert(key.to_string(), tokens[i + 1].clone());
+                    i += 1;
+                } else {
+                    args.flags.insert(key.to_string(), FLAG_SET.to_string());
+                }
+            } else if args.subcommand.is_none() {
+                args.subcommand = Some(t.clone());
+            } else {
+                args.positional.push(t.clone());
+            }
+            i += 1;
+        }
+        args
+    }
+
+    /// Parse from the process environment.
+    pub fn from_env() -> Args {
+        Args::parse(std::env::args().skip(1))
+    }
+
+    /// String value of `--key`, if present with a value.
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).map(|s| s.as_str()).filter(|s| *s != FLAG_SET)
+    }
+
+    /// Boolean: present either as a bare `--key` or `--key true`.
+    pub fn flag(&self, key: &str) -> bool {
+        match self.flags.get(key).map(|s| s.as_str()) {
+            Some(FLAG_SET) => true,
+            Some(v) => v != "false" && v != "0",
+            None => false,
+        }
+    }
+
+    /// Typed getters with defaults.
+    pub fn get_usize(&self, key: &str, default: usize) -> usize {
+        self.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn get_u64(&self, key: &str, default: u64) -> u64 {
+        self.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn get_f64(&self, key: &str, default: f64) -> f64 {
+        self.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn get_str<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
+        self.get(key).unwrap_or(default)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from))
+    }
+
+    #[test]
+    fn subcommand_and_positionals() {
+        let a = parse("fig6 rows dims");
+        assert_eq!(a.subcommand.as_deref(), Some("fig6"));
+        assert_eq!(a.positional, vec!["rows", "dims"]);
+    }
+
+    #[test]
+    fn key_value_both_syntaxes() {
+        let a = parse("serve --rows 512 --dims=1024");
+        assert_eq!(a.get_usize("rows", 0), 512);
+        assert_eq!(a.get_usize("dims", 0), 1024);
+    }
+
+    #[test]
+    fn bare_flags() {
+        let a = parse("fig7 --verbose --part a");
+        assert!(a.flag("verbose"));
+        assert!(!a.flag("quiet"));
+        assert_eq!(a.get("part"), Some("a"));
+    }
+
+    #[test]
+    fn flag_followed_by_flag() {
+        let a = parse("x --a --b 3");
+        assert!(a.flag("a"));
+        assert_eq!(a.get_u64("b", 0), 3);
+    }
+
+    #[test]
+    fn typed_defaults() {
+        let a = parse("x");
+        assert_eq!(a.get_usize("missing", 7), 7);
+        assert_eq!(a.get_f64("missing", 0.5), 0.5);
+        assert_eq!(a.get_str("missing", "d"), "d");
+    }
+}

@@ -1,0 +1,44 @@
+//! Shared utilities, all implemented in-crate because the build environment
+//! is fully offline (see `.cargo/config.toml`): bit-packed binary vectors,
+//! a seeded PRNG, JSON and TOML-subset codecs, a micro-benchmark harness,
+//! a property-testing runner, a parallel map, and a tiny CLI parser.
+
+mod bitvec;
+pub mod bench;
+pub mod cli;
+pub mod json;
+pub mod par;
+pub mod prop;
+mod rng;
+mod stats;
+pub mod toml_lite;
+
+pub use bitvec::BitVec;
+pub use rng::Rng;
+pub use stats::{mean, percentile, stddev, Histogram, RunningStats};
+
+/// Crate-wide deterministic RNG constructor. Every stochastic component takes
+/// an explicit seed so paper figures regenerate bit-identically.
+pub fn rng(seed: u64) -> Rng {
+    Rng::seed_from_u64(seed)
+}
+
+/// Derive a child seed from a parent seed and a stream index (splitmix64 hop).
+pub fn child_seed(seed: u64, stream: u64) -> u64 {
+    let mut z = seed ^ stream.wrapping_mul(0x9E37_79B9_7F4A_7C15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn child_seeds_distinct() {
+        let s = 42;
+        let a = super::child_seed(s, 0);
+        let b = super::child_seed(s, 1);
+        assert_ne!(a, b);
+        assert_eq!(a, super::child_seed(s, 0));
+    }
+}

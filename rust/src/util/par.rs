@@ -1,0 +1,102 @@
+//! Tiny data-parallel helpers on std::thread::scope (rayon replacement for
+//! the offline environment). Used by the Monte Carlo harness (Fig. 7) and
+//! the analog array engine, where trials are embarrassingly parallel.
+
+/// Parallel map over `items`, preserving order. Splits into contiguous
+/// chunks across up to `max_threads` OS threads (defaults to available
+/// parallelism). Falls back to serial for small inputs.
+pub fn par_map<T, U, F>(items: &[T], f: F) -> Vec<U>
+where
+    T: Sync,
+    U: Send,
+    F: Fn(&T) -> U + Sync,
+{
+    par_map_with(items, default_threads(), f)
+}
+
+/// As [`par_map`] with an explicit thread cap.
+pub fn par_map_with<T, U, F>(items: &[T], max_threads: usize, f: F) -> Vec<U>
+where
+    T: Sync,
+    U: Send,
+    F: Fn(&T) -> U + Sync,
+{
+    let n = items.len();
+    let threads = max_threads.max(1).min(n.max(1));
+    if threads <= 1 || n < 2 {
+        return items.iter().map(&f). collect();
+    }
+    let chunk = n.div_ceil(threads);
+    let mut out: Vec<Option<U>> = (0..n).map(|_| None).collect();
+    let fref = &f;
+    std::thread::scope(|s| {
+        let mut slots = out.as_mut_slice();
+        let mut start = 0usize;
+        let mut handles = Vec::new();
+        while start < n {
+            let take = chunk.min(n - start);
+            let (head, tail) = slots.split_at_mut(take);
+            slots = tail;
+            let src = &items[start..start + take];
+            handles.push(s.spawn(move || {
+                for (slot, item) in head.iter_mut().zip(src) {
+                    *slot = Some(fref(item));
+                }
+            }));
+            start += take;
+        }
+        for h in handles {
+            h.join().expect("par_map worker panicked");
+        }
+    });
+    out.into_iter().map(|o| o.expect("all slots filled")).collect()
+}
+
+/// Parallel index map: like `par_map` over `0..n`.
+pub fn par_map_idx<U, F>(n: usize, f: F) -> Vec<U>
+where
+    U: Send,
+    F: Fn(usize) -> U + Sync,
+{
+    let idx: Vec<usize> = (0..n).collect();
+    par_map(&idx, |&i| f(i))
+}
+
+fn default_threads() -> usize {
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn preserves_order() {
+        let xs: Vec<u64> = (0..1000).collect();
+        let ys = par_map(&xs, |&x| x * 2);
+        assert_eq!(ys, xs.iter().map(|x| x * 2).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn single_thread_fallback() {
+        let xs = vec![1, 2, 3];
+        assert_eq!(par_map_with(&xs, 1, |&x| x + 1), vec![2, 3, 4]);
+    }
+
+    #[test]
+    fn empty_input() {
+        let xs: Vec<u32> = vec![];
+        assert!(par_map(&xs, |&x| x).is_empty());
+    }
+
+    #[test]
+    fn uneven_chunks() {
+        let xs: Vec<usize> = (0..7).collect();
+        assert_eq!(par_map_with(&xs, 3, |&x| x), xs);
+    }
+
+    #[test]
+    fn idx_variant() {
+        assert_eq!(par_map_idx(4, |i| i * i), vec![0, 1, 4, 9]);
+    }
+}

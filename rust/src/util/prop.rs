@@ -1,0 +1,92 @@
+//! Property-based testing helper (proptest replacement for the offline
+//! environment): runs a property over many seeded random cases and, on
+//! failure, reports the failing case seed so it can be replayed.
+
+use super::rng::Rng;
+
+/// Outcome of a property check.
+#[derive(Debug)]
+pub struct PropFailure {
+    pub case: usize,
+    pub seed: u64,
+    pub message: String,
+}
+
+/// Run `cases` random trials of `property`. The property receives a
+/// deterministic per-case RNG; return `Err(msg)` to fail. Panics with the
+/// replayable seed on the first failure.
+pub fn check<F>(name: &str, cases: usize, base_seed: u64, mut property: F)
+where
+    F: FnMut(&mut Rng) -> Result<(), String>,
+{
+    if let Some(f) = check_quiet(cases, base_seed, &mut property) {
+        panic!(
+            "property '{name}' failed on case {}/{cases} (replay seed {}): {}",
+            f.case, f.seed, f.message
+        );
+    }
+}
+
+/// Non-panicking variant; returns the first failure if any.
+pub fn check_quiet<F>(cases: usize, base_seed: u64, property: &mut F) -> Option<PropFailure>
+where
+    F: FnMut(&mut Rng) -> Result<(), String>,
+{
+    for case in 0..cases {
+        let seed = base_seed
+            .wrapping_mul(0x9E37_79B9_7F4A_7C15)
+            .wrapping_add(case as u64);
+        let mut rng = Rng::seed_from_u64(seed);
+        if let Err(message) = property(&mut rng) {
+            return Some(PropFailure { case, seed, message });
+        }
+    }
+    None
+}
+
+/// Convenience: assert-like helper producing a property error.
+#[macro_export]
+macro_rules! prop_assert {
+    ($cond:expr, $($fmt:tt)*) => {
+        if !$cond {
+            return Err(format!($($fmt)*));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        check("sum-commutes", 50, 1, |rng| {
+            let (a, b) = (rng.f64(), rng.f64());
+            prop_assert!((a + b - (b + a)).abs() < 1e-15, "{a} {b}");
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn failing_property_reports_case() {
+        let f = check_quiet(100, 2, &mut |rng: &mut Rng| {
+            let x = rng.f64();
+            if x > 0.9 {
+                Err(format!("x too big: {x}"))
+            } else {
+                Ok(())
+            }
+        });
+        let f = f.expect("should fail within 100 cases");
+        assert!(f.message.contains("too big"));
+        // Replay the reported seed: must reproduce.
+        let mut rng = Rng::seed_from_u64(f.seed);
+        assert!(rng.f64() > 0.9);
+    }
+
+    #[test]
+    #[should_panic(expected = "replay seed")]
+    fn check_panics_with_seed() {
+        check("always-fails", 3, 3, |_| Err("nope".into()));
+    }
+}

@@ -1,0 +1,227 @@
+//! Minimal TOML-subset parser for the config system (offline environment —
+//! no `toml` crate). Supports exactly what `configs/*.toml` uses:
+//! `[section]` headers, `key = value` pairs with float / integer / boolean /
+//! string values, comments (`#`), and blank lines.
+
+use std::collections::BTreeMap;
+
+/// A parsed scalar value.
+#[derive(Debug, Clone, PartialEq)]
+pub enum TomlValue {
+    Float(f64),
+    Int(i64),
+    Bool(bool),
+    Str(String),
+}
+
+impl TomlValue {
+    /// Numeric coercion: ints read as floats too.
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            TomlValue::Float(f) => Some(*f),
+            TomlValue::Int(i) => Some(*i as f64),
+            _ => None,
+        }
+    }
+
+    pub fn as_usize(&self) -> Option<usize> {
+        match self {
+            TomlValue::Int(i) if *i >= 0 => Some(*i as usize),
+            _ => None,
+        }
+    }
+
+    pub fn as_u64(&self) -> Option<u64> {
+        match self {
+            TomlValue::Int(i) if *i >= 0 => Some(*i as u64),
+            _ => None,
+        }
+    }
+
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            TomlValue::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            TomlValue::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+}
+
+/// section → key → value. Top-level (pre-section) keys live under "".
+pub type TomlDoc = BTreeMap<String, BTreeMap<String, TomlValue>>;
+
+/// Parse error with line context.
+#[derive(Debug, thiserror::Error)]
+#[error("toml parse error on line {line}: {msg}")]
+pub struct TomlError {
+    pub line: usize,
+    pub msg: String,
+}
+
+/// Parse a TOML-subset document.
+pub fn parse(text: &str) -> Result<TomlDoc, TomlError> {
+    let mut doc: TomlDoc = BTreeMap::new();
+    let mut section = String::new();
+    doc.entry(section.clone()).or_default();
+
+    for (lineno, raw) in text.lines().enumerate() {
+        let line = strip_comment(raw).trim();
+        if line.is_empty() {
+            continue;
+        }
+        let err = |msg: &str| TomlError { line: lineno + 1, msg: msg.to_string() };
+
+        if let Some(rest) = line.strip_prefix('[') {
+            let name = rest.strip_suffix(']').ok_or_else(|| err("unterminated section"))?;
+            let name = name.trim();
+            if name.is_empty() {
+                return Err(err("empty section name"));
+            }
+            section = name.to_string();
+            doc.entry(section.clone()).or_default();
+            continue;
+        }
+
+        let eq = line.find('=').ok_or_else(|| err("expected key = value"))?;
+        let key = line[..eq].trim();
+        let val = line[eq + 1..].trim();
+        if key.is_empty() {
+            return Err(err("empty key"));
+        }
+        if val.is_empty() {
+            return Err(err("empty value"));
+        }
+        let value = parse_value(val).ok_or_else(|| err(&format!("cannot parse value '{val}'")))?;
+        doc.get_mut(&section).unwrap().insert(key.to_string(), value);
+    }
+    Ok(doc)
+}
+
+fn strip_comment(line: &str) -> &str {
+    // A '#' starts a comment unless inside a quoted string.
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(s: &str) -> Option<TomlValue> {
+    match s {
+        "true" => return Some(TomlValue::Bool(true)),
+        "false" => return Some(TomlValue::Bool(false)),
+        _ => {}
+    }
+    if let Some(q) = s.strip_prefix('"') {
+        let inner = q.strip_suffix('"')?;
+        // Minimal escape handling.
+        let unescaped = inner.replace("\\\"", "\"").replace("\\\\", "\\").replace("\\n", "\n");
+        return Some(TomlValue::Str(unescaped));
+    }
+    let clean = s.replace('_', "");
+    if !clean.contains(['.', 'e', 'E']) {
+        if let Ok(i) = clean.parse::<i64>() {
+            return Some(TomlValue::Int(i));
+        }
+    }
+    clean.parse::<f64>().ok().map(TomlValue::Float)
+}
+
+/// Serialize a doc back to TOML text (deterministic ordering).
+pub fn to_string(doc: &TomlDoc) -> String {
+    let mut out = String::new();
+    // Top-level keys first.
+    if let Some(top) = doc.get("") {
+        for (k, v) in top {
+            out.push_str(&format!("{k} = {}\n", fmt_value(v)));
+        }
+    }
+    for (sec, kvs) in doc {
+        if sec.is_empty() {
+            continue;
+        }
+        out.push_str(&format!("\n[{sec}]\n"));
+        for (k, v) in kvs {
+            out.push_str(&format!("{k} = {}\n", fmt_value(v)));
+        }
+    }
+    out
+}
+
+fn fmt_value(v: &TomlValue) -> String {
+    match v {
+        TomlValue::Float(f) => {
+            if f.fract() == 0.0 && f.abs() < 1e15 {
+                format!("{f:.1}")
+            } else {
+                format!("{f}")
+            }
+        }
+        TomlValue::Int(i) => format!("{i}"),
+        TomlValue::Bool(b) => format!("{b}"),
+        TomlValue::Str(s) => format!("\"{}\"", s.replace('\\', "\\\\").replace('"', "\\\"")),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_sections_and_types() {
+        let doc = parse(
+            "top = 1\n[device]\nvth_low = -0.2 # volts\nr_series = 2e6\nname = \"fefet\"\n\n[wta]\nenabled = true\nrails = 256\n",
+        )
+        .unwrap();
+        assert_eq!(doc[""]["top"], TomlValue::Int(1));
+        assert_eq!(doc["device"]["vth_low"], TomlValue::Float(-0.2));
+        assert_eq!(doc["device"]["r_series"], TomlValue::Float(2e6));
+        assert_eq!(doc["device"]["name"], TomlValue::Str("fefet".into()));
+        assert_eq!(doc["wta"]["enabled"], TomlValue::Bool(true));
+        assert_eq!(doc["wta"]["rails"].as_usize(), Some(256));
+    }
+
+    #[test]
+    fn comments_and_blank_lines_ignored() {
+        let doc = parse("# header\n\n[a]\nx = 1 # trailing\ns = \"ha#sh\"\n").unwrap();
+        assert_eq!(doc["a"]["x"], TomlValue::Int(1));
+        assert_eq!(doc["a"]["s"].as_str(), Some("ha#sh"));
+    }
+
+    #[test]
+    fn underscore_separators() {
+        let doc = parse("[a]\nbig = 1_000_000\n").unwrap();
+        assert_eq!(doc["a"]["big"].as_usize(), Some(1_000_000));
+    }
+
+    #[test]
+    fn errors_have_line_numbers() {
+        assert_eq!(parse("[a]\nbroken\n").unwrap_err().line, 2);
+        assert!(parse("[never closed\n").is_err());
+        assert!(parse("x = \n").is_err());
+    }
+
+    #[test]
+    fn roundtrip() {
+        let src = "[a]\nx = 1\ny = 2.5\nflag = false\nname = \"n\"\n";
+        let doc = parse(src).unwrap();
+        let text = to_string(&doc);
+        assert_eq!(parse(&text).unwrap(), doc);
+    }
+
+    #[test]
+    fn int_float_coercion() {
+        let doc = parse("[a]\nn = 3\n").unwrap();
+        assert_eq!(doc["a"]["n"].as_f64(), Some(3.0));
+    }
+}

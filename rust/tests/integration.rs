@@ -1,0 +1,288 @@
+//! Integration tests: cross-layer flows that unit tests cannot cover —
+//! runtime artifacts driving coordinator tiles, HDC pipeline over every
+//! engine backend, analog/digital/XLA agreement, and failure injection.
+
+use cosime::am::analog::AnalogCosimeEngine;
+use cosime::am::{AmEngine, ApproxCosineEngine, DigitalExactEngine, HammingEngine};
+use cosime::config::CosimeConfig;
+use cosime::coordinator::{AmService, SubmitError, TileManager};
+use cosime::hdc::{Dataset, DatasetSpec, EncoderKind, HdcModel, SyntheticParams, TrainConfig};
+use cosime::runtime::{RuntimeHandle, Tensor, XlaAmEngine};
+use cosime::util::{rng, BitVec};
+
+fn artifacts_dir() -> String {
+    format!("{}/artifacts", env!("CARGO_MANIFEST_DIR"))
+}
+
+fn runtime() -> Option<RuntimeHandle> {
+    RuntimeHandle::spawn(artifacts_dir()).ok()
+}
+
+fn random_words(n: usize, dims: usize, seed: u64) -> Vec<BitVec> {
+    let mut r = rng(seed);
+    (0..n).map(|_| BitVec::random(dims, 0.5, &mut r)).collect()
+}
+
+// ---------------------------------------------------------------------------
+// Engine agreement across all three realizations
+// ---------------------------------------------------------------------------
+
+#[test]
+fn digital_analog_xla_agree_on_winners() {
+    let cfg = CosimeConfig::default();
+    let words = random_words(32, 128, 1);
+    let digital = DigitalExactEngine::new(words.clone());
+    let analog = AnalogCosimeEngine::nominal(&cfg, words.clone());
+    let xla = runtime().map(|rt| XlaAmEngine::new(&rt, "cosime_search_r32_d128_b4", &words));
+
+    let mut r = rng(2);
+    let mut analog_disagreements = 0;
+    for _ in 0..50 {
+        let q = BitVec::random(128, 0.5, &mut r);
+        let d = digital.search(&q).winner;
+        // The analog path may legitimately flip exact near-ties through its
+        // leakage floor; it must agree on the overwhelming majority.
+        if analog.search(&q).winner != d {
+            analog_disagreements += 1;
+        }
+        if let Some(Ok(x)) = &xla {
+            assert_eq!(x.search(&q).winner, d, "xla vs digital");
+        }
+    }
+    assert!(analog_disagreements <= 2, "analog flipped {analog_disagreements}/50");
+}
+
+// ---------------------------------------------------------------------------
+// Coordinator over the XLA engine — the full L3→runtime→L1 serving path
+// ---------------------------------------------------------------------------
+
+#[test]
+fn coordinator_serves_through_xla_tiles() {
+    let Some(rt) = runtime() else { return };
+    let words = random_words(96, 128, 3); // 3 tiles of 32 rows
+    let reference = DigitalExactEngine::new(words.clone());
+    let tiles = TileManager::build(words, 32, move |w| {
+        Ok(Box::new(XlaAmEngine::new(&rt, "cosime_search_r32_d128_b4", &w)?) as Box<dyn AmEngine>)
+    })
+    .expect("tiles");
+    assert_eq!(tiles.tile_count(), 3);
+
+    let cfg = CosimeConfig::default();
+    let svc = AmService::start(&cfg.coordinator, tiles);
+    let mut r = rng(4);
+    for _ in 0..20 {
+        let q = BitVec::random(128, 0.5, &mut r);
+        let resp = svc.search_with_retry(q.clone(), 10).expect("serve");
+        assert_eq!(resp.winner, reference.search(&q).winner);
+    }
+    let m = svc.metrics();
+    assert_eq!(m.completed, 20);
+    svc.shutdown();
+}
+
+// ---------------------------------------------------------------------------
+// HDC end to end on each engine
+// ---------------------------------------------------------------------------
+
+#[test]
+fn hdc_pipeline_consistent_across_engines() {
+    let ds = Dataset::synthetic(
+        DatasetSpec::Isolet,
+        SyntheticParams { subsample: 0.03, ..Default::default() },
+        5,
+    );
+    let model = HdcModel::train(&ds, TrainConfig { dims: 256, epochs: 1, ..Default::default() });
+    let hvs = model.class_hypervectors();
+    let cfg = CosimeConfig::default();
+    let digital = DigitalExactEngine::new(hvs.clone());
+    let analog = AnalogCosimeEngine::nominal(&cfg, hvs);
+
+    let mut agree = 0;
+    let total = ds.test_len().min(60);
+    for x in ds.test_x.iter().take(total) {
+        let h = model.encoder.encode(x);
+        if digital.search(&h).winner == analog.search(&h).winner {
+            agree += 1;
+        }
+    }
+    assert!(agree as f64 / total as f64 > 0.9, "only {agree}/{total} agreed");
+}
+
+#[test]
+fn hdc_rp_encoder_matches_aot_artifact_semantics() {
+    // The hdc_encode artifact must implement exactly the RP encoder.
+    let Some(rt) = runtime() else { return };
+    let ds = Dataset::synthetic(
+        DatasetSpec::Isolet,
+        SyntheticParams { subsample: 0.01, ..Default::default() },
+        6,
+    );
+    let model = HdcModel::train(
+        &ds,
+        TrainConfig {
+            dims: 1024,
+            epochs: 0,
+            seed: 7,
+            encoder: EncoderKind::RandomProjection { threshold_scale: 0.0 },
+        },
+    );
+    let rp = model.encoder.as_rp().expect("rp");
+    let nfeat = ds.features;
+    let mut proj = vec![0.0f32; 1024 * nfeat];
+    for i in 0..1024 {
+        for j in 0..nfeat {
+            proj[i * nfeat + j] = if rp.projection_bit(i, j) { 1.0 } else { -1.0 };
+        }
+    }
+    let batch = 8;
+    let mut feats = vec![0.0f32; batch * nfeat];
+    for (b, x) in ds.test_x.iter().take(batch).enumerate() {
+        feats[b * nfeat..(b + 1) * nfeat].copy_from_slice(x);
+    }
+    let out = rt
+        .run(
+            "hdc_encode_n617_d1024_b8",
+            vec![Tensor::F32(feats, vec![batch, nfeat]), Tensor::F32(proj, vec![1024, nfeat])],
+        )
+        .expect("encode artifact");
+    let h = out[0].as_f32().expect("f32");
+    for (b, x) in ds.test_x.iter().take(batch).enumerate() {
+        let expect = rp.encode(x);
+        for j in 0..1024 {
+            assert_eq!(
+                h[b * 1024 + j] > 0.5,
+                expect.get(j),
+                "bit ({b},{j}) differs between artifact and rust encoder"
+            );
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Baseline engines behave per their metric under one workload
+// ---------------------------------------------------------------------------
+
+#[test]
+fn metric_engines_rank_differently_but_find_exact_matches() {
+    let words = random_words(64, 256, 8);
+    let engines: Vec<Box<dyn AmEngine>> = vec![
+        Box::new(DigitalExactEngine::new(words.clone())),
+        Box::new(HammingEngine::new(words.clone())),
+        Box::new(ApproxCosineEngine::new(words.clone())),
+    ];
+    for e in &engines {
+        for (i, w) in words.iter().enumerate().step_by(9) {
+            assert_eq!(e.search(w).winner, i, "{} must find exact match {i}", e.name());
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Failure injection
+// ---------------------------------------------------------------------------
+
+#[test]
+fn corrupt_artifact_rejected_cleanly() {
+    let dir = std::env::temp_dir().join(format!("cosime-corrupt-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    std::fs::write(
+        dir.join("manifest.json"),
+        r#"[{"name": "broken", "file": "broken.hlo.txt",
+            "inputs": [{"shape": [1], "dtype": "float32"}],
+            "outputs": [{"shape": [1], "dtype": "float32"}]}]"#,
+    )
+    .unwrap();
+    std::fs::write(dir.join("broken.hlo.txt"), "this is not hlo text").unwrap();
+    let rt = RuntimeHandle::spawn(&dir).expect("manifest parses");
+    let err = rt.run("broken", vec![Tensor::F32(vec![0.0], vec![1])]);
+    assert!(err.is_err(), "corrupt HLO must fail to compile, not crash");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn manifest_missing_is_an_error_with_hint() {
+    let dir = std::env::temp_dir().join(format!("cosime-empty-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let err = match RuntimeHandle::spawn(&dir) {
+        Err(e) => e,
+        Ok(_) => panic!("spawn must fail without a manifest"),
+    };
+    assert!(format!("{err:#}").contains("make artifacts"), "{err:#}");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn service_survives_overload_burst() {
+    let mut cfg = CosimeConfig::default();
+    cfg.coordinator.queue_depth = 4;
+    cfg.coordinator.workers = 1;
+    cfg.coordinator.max_batch = 2;
+    let words = random_words(2048, 512, 9);
+    let tiles = TileManager::build(words, 256, |w| {
+        Ok(Box::new(DigitalExactEngine::new(w)) as Box<dyn AmEngine>)
+    })
+    .unwrap();
+    let svc = AmService::start(&cfg.coordinator, tiles);
+    let mut r = rng(10);
+    let mut ok = 0;
+    let mut busy = 0;
+    let mut rxs = Vec::new();
+    for _ in 0..500 {
+        match svc.submit(BitVec::random(512, 0.5, &mut r)) {
+            Ok(rx) => {
+                ok += 1;
+                rxs.push(rx);
+            }
+            Err(SubmitError::Busy) => busy += 1,
+            Err(e) => panic!("unexpected {e}"),
+        }
+    }
+    assert!(busy > 0, "overload must trigger backpressure");
+    assert!(ok > 0, "some requests must get through");
+    for rx in rxs {
+        rx.recv().expect("accepted requests must complete");
+    }
+    assert_eq!(svc.metrics().completed as usize, ok);
+    svc.shutdown();
+}
+
+#[test]
+fn analog_engine_tolerates_adversarial_stores() {
+    // All-zeros, all-ones and single-bit words must not produce NaNs or
+    // panics anywhere in the analog chain.
+    let cfg = CosimeConfig::default();
+    let dims = 64;
+    let mut words = vec![BitVec::zeros(dims), BitVec::from_bools(vec![true; dims])];
+    let mut one = BitVec::zeros(dims);
+    one.set(3, true);
+    words.push(one);
+    let engine = AnalogCosimeEngine::nominal(&cfg, words);
+    for density in [0.0, 0.1, 0.5, 1.0] {
+        let mut r = rng(11);
+        let q = BitVec::random(dims, density, &mut r);
+        let out = engine.search_detailed(&q, false);
+        assert!(out.cost.total().is_finite());
+        assert!(out.i_z.iter().all(|z| z.is_finite()));
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Config file round trip drives a real engine
+// ---------------------------------------------------------------------------
+
+#[test]
+fn config_file_overrides_flow_to_engine() {
+    let dir = std::env::temp_dir().join(format!("cosime-cfg-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("custom.toml");
+    std::fs::write(&path, "[array]\nrows = 64\ndims = 256\n\n[coordinator]\nmax_batch = 4\n")
+        .unwrap();
+    let cfg = CosimeConfig::from_toml_file(&path).unwrap();
+    assert_eq!(cfg.array.rows, 64);
+    assert_eq!(cfg.coordinator.max_batch, 4);
+    let words = random_words(16, cfg.array.dims, 12);
+    let engine = AnalogCosimeEngine::nominal(&cfg, words.clone());
+    let q = words[5].clone();
+    assert_eq!(engine.search(&q).winner, 5);
+    std::fs::remove_dir_all(&dir).ok();
+}
