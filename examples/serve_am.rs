@@ -1,6 +1,7 @@
-//! Serving example: run the AM coordinator under a bursty synthetic load and
-//! report throughput, latency percentiles, batching efficiency and
-//! backpressure behavior — the L3 serving story around the COSIME tiles.
+//! Serving example: run the AM coordinator under a bursty synthetic load of
+//! mixed top-k requests and report throughput, latency percentiles (overall
+//! and per k), batching efficiency and backpressure behavior — the L3
+//! serving story around the COSIME tiles.
 //!
 //! Run: `cargo run --release --example serve_am [rows] [queries]`
 
@@ -38,18 +39,26 @@ fn main() -> anyhow::Result<()> {
 
     let busy_retries = AtomicU64::new(0);
     let clients = 8u64;
+    // Scenario-diverse load: most clients want the single winner, some want
+    // ranked top-k readouts (recommendation / few-shot shapes).
+    let ks: [usize; 8] = [1, 1, 1, 1, 1, 5, 10, 25];
     let t0 = Instant::now();
     std::thread::scope(|s| {
         for c in 0..clients {
             let svc = svc.clone();
             let busy_retries = &busy_retries;
+            let k = ks[c as usize % ks.len()];
             s.spawn(move || {
                 let mut r = rng(100 + c);
                 for i in 0..queries as u64 / clients {
                     let q = BitVec::random(dims, 0.5, &mut r);
                     loop {
-                        match svc.search_blocking(q.clone()) {
-                            Ok(_) => break,
+                        match svc.search_topk_blocking(q.clone(), k) {
+                            Ok(resp) => {
+                                assert_eq!(resp.hits.len(), k.min(rows), "ranked depth");
+                                assert_eq!(resp.hits[0].winner, resp.winner);
+                                break;
+                            }
                             Err(SubmitError::Busy) => {
                                 busy_retries.fetch_add(1, Ordering::Relaxed);
                                 std::thread::yield_now();

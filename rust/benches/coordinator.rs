@@ -1,8 +1,8 @@
 //! Bench: the L3 serving engine — end-to-end service throughput under
-//! concurrent load across batching policies, plus batcher microbenchmarks.
-//! This is the hot path the performance pass (EXPERIMENTS.md §Perf) tracks.
+//! concurrent load across batching policies, plus batcher and tile-kernel
+//! microbenchmarks. This is the hot path the performance pass tracks.
 
-use cosime::am::{AmEngine, DigitalExactEngine};
+use cosime::am::{AmEngine, BlockTopK, DigitalExactEngine, QueryBlock};
 use cosime::config::CosimeConfig;
 use cosime::coordinator::{AmService, Batcher, TileManager};
 use cosime::util::bench::Bench;
@@ -62,6 +62,16 @@ fn main() {
     b.bench_throughput("tiles/search_batch32/1024x1024", 32.0 * 1024.0, || {
         tiles.search_batch(&batch)
     });
+    // The allocation-free serving shape: reused block + scratch + selectors.
+    let mut block = QueryBlock::new(1024);
+    block.repack(&batch);
+    let mut scratch = tiles.scratch();
+    let mut out = BlockTopK::new();
+    for k in [1usize, 8, 32] {
+        b.bench_throughput(&format!("tiles/search_block32/k={k}/1024x1024"), 32.0 * 1024.0, || {
+            tiles.search_block(block.view(), k, &mut scratch, &mut out)
+        });
+    }
 
     b.report("Coordinator microbenchmarks");
 

@@ -1,0 +1,98 @@
+//! Bench: the batched, allocation-free SearchKernel path vs the seed-shaped
+//! single-query search loop, at the serving geometry (4096×1024, 4 tiles).
+//!
+//! All block-path buffers (query block, tile scratch, selectors) are
+//! created once and reused across iterations — the steady-state serving
+//! loop's zero-per-query-allocation shape. The closing summary compares
+//! queries/s of the batched kernel against the single-query path.
+
+use cosime::am::{AmEngine, BlockTopK, DigitalExactEngine, QueryBlock, SearchScratch};
+use cosime::coordinator::TileManager;
+use cosime::util::bench::Bench;
+use cosime::util::{rng, BitVec};
+
+fn main() {
+    let (rows, dims, batch) = (4096usize, 1024usize, 64usize);
+    let mut r = rng(1);
+    let words: Vec<BitVec> = (0..rows).map(|_| BitVec::random(dims, 0.5, &mut r)).collect();
+    let queries: Vec<BitVec> = (0..batch).map(|_| BitVec::random(dims, 0.5, &mut r)).collect();
+
+    let engine = DigitalExactEngine::new(words.clone());
+    let tm = TileManager::build(words, 1024, |w| {
+        Ok(Box::new(DigitalExactEngine::new(w)) as Box<dyn AmEngine>)
+    })
+    .unwrap();
+
+    let mut b = Bench::new();
+
+    // Seed-shaped path: one fused search per call, serial.
+    let mut i = 0usize;
+    let single_engine = b
+        .bench_throughput("engine/search x1 (seed path)", 1.0, || {
+            i = (i + 1) % batch;
+            engine.search(&queries[i])
+        })
+        .throughput()
+        .unwrap();
+
+    // Batched block kernel on the flat engine (same serial row scan, but
+    // amortized dispatch + reused buffers).
+    let mut block = QueryBlock::new(dims);
+    block.repack(&queries);
+    let mut scratch = SearchScratch::new();
+    let mut out = BlockTopK::new();
+    let block_engine = b
+        .bench_throughput(&format!("engine/search_block x{batch}/k=1"), batch as f64, || {
+            out.reset(batch, 1);
+            engine.search_block(block.view(), 0, &mut scratch, out.selectors_mut());
+        })
+        .throughput()
+        .unwrap();
+
+    // Deep-k on the flat engine: the fused selector instead of a sort.
+    b.bench_throughput(&format!("engine/search_block x{batch}/k=10"), batch as f64, || {
+        out.reset(batch, 10);
+        engine.search_block(block.view(), 0, &mut scratch, out.selectors_mut());
+    });
+
+    // Tile manager: serial single-query merge vs the parallel tile×batch
+    // kernel over reused scratch.
+    let q_one = queries[0].clone();
+    let single_tiles = b
+        .bench_throughput("tiles/search x1 (hierarchical k=1)", 1.0, || tm.search(&q_one))
+        .throughput()
+        .unwrap();
+    let mut tile_scratch = tm.scratch();
+    let mut tile_out = BlockTopK::new();
+    let block_tiles = b
+        .bench_throughput(&format!("tiles/search_block x{batch}/k=1"), batch as f64, || {
+            tm.search_block(block.view(), 1, &mut tile_scratch, &mut tile_out)
+        })
+        .throughput()
+        .unwrap();
+    b.bench_throughput(&format!("tiles/search_block x{batch}/k=10"), batch as f64, || {
+        tm.search_block(block.view(), 10, &mut tile_scratch, &mut tile_out)
+    });
+    b.bench_throughput(&format!("tiles/search_block x{batch}/k=100"), batch as f64, || {
+        tm.search_block(block.view(), 100, &mut tile_scratch, &mut tile_out)
+    });
+
+    b.report("SearchKernel — batched block top-k vs single-query search (queries/s)");
+
+    println!(
+        "\nbatched vs single-query throughput:\n\
+         \x20 flat engine: {:.2}x ({:.0} vs {:.0} queries/s)\n\
+         \x20 tiled      : {:.2}x ({:.0} vs {:.0} queries/s)",
+        block_engine / single_engine,
+        block_engine,
+        single_engine,
+        block_tiles / single_tiles,
+        block_tiles,
+        single_tiles,
+    );
+    if block_tiles >= single_tiles && block_engine >= 0.9 * single_engine {
+        println!("batched kernel throughput >= seed single-query path: OK");
+    } else {
+        println!("WARNING: batched kernel slower than single-query path on this host");
+    }
+}

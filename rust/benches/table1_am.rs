@@ -3,7 +3,7 @@
 //!
 //! Wall-clock numbers here are *simulator* throughput (how fast this crate
 //! searches); the paper-comparable metrics come from the calibrated energy
-//! model printed below (see EXPERIMENTS.md §Table 1).
+//! model printed below.
 
 use cosime::am::analog::AnalogCosimeEngine;
 use cosime::am::{AmEngine, ApproxCosineEngine, DigitalExactEngine, DotEngine, HammingEngine};

@@ -232,23 +232,29 @@ impl AmEngine for AnalogCosimeEngine {
         self.dims
     }
 
-    /// Analog scores: the (mismatched, amplified) WTA input currents.
-    fn scores(&self, query: &BitVec) -> Vec<f64> {
+    /// Block-API participation: fill the caller's score buffer through the
+    /// same signal chain as [`AnalogCosimeEngine::search_detailed`]
+    /// (row currents → translinear → amplification/rail mismatch). The
+    /// intermediate current vectors stay internal to the circuit simulation
+    /// — this is the variation-faithful path, not the serving hot loop.
+    fn scores_into(&self, query: &BitVec, out: &mut Vec<f64>) {
         let (i_x, i_y) = self.row_currents(query);
-        self.translinear_outputs(&i_x, &i_y)
-            .iter()
-            .zip(self.wta.rail_gain.iter().zip(&self.amp_gain))
-            .map(|(&z, (&g, &a))| z * a * g)
-            .collect()
+        let i_z = self.translinear_outputs(&i_x, &i_y);
+        out.clear();
+        out.extend(
+            i_z.iter()
+                .zip(self.wta.rail_gain.iter().zip(&self.amp_gain))
+                .map(|(&z, (&g, &a))| z * a * g),
+        );
     }
 
-    /// Fast search: static WTA winner (argmax of mismatched rail inputs) —
-    /// matches the transient decision whenever the gap is resolvable.
-    fn search(&self, query: &BitVec) -> SearchResult {
-        let scores = self.scores(query);
-        let winner = self.wta.winner_static(&scores);
-        SearchResult { winner, score: scores[winner] }
-    }
+    // `search` is the trait default: argmax of the rail input currents.
+    // The per-rail mismatch is applied exactly once, inside `scores_into`
+    // — the same inputs [`AnalogCosimeEngine::search_detailed`] hands the
+    // transient WTA. (The seed routed these already-mismatched scores back
+    // through `WtaInstance::winner_static`, which multiplies by `rail_gain`
+    // a second time; that double-count made the static winner diverge from
+    // both the transient decision and the batched kernel on varied dies.)
 }
 
 #[cfg(test)]

@@ -1,0 +1,508 @@
+//! The batched, allocation-free search-kernel interface.
+//!
+//! The paper's core primitive is "score every stored row at once, let the
+//! WTA pick the winner(s)" (§3.5: iterated WTA with winner inhibition for
+//! top-k). This module is the digital shape of that primitive, designed so
+//! the steady-state serving loop performs **zero per-query heap
+//! allocations**:
+//!
+//! * [`QueryBlock`] — a bit-packed block of queries (contiguous u64 lanes,
+//!   one row per query) built once and reused; [`QueriesRef`] is its cheap
+//!   `Copy` view, sliceable along the query axis so work can be split
+//!   tile×batch.
+//! * [`TopK`] — a small bounded insertion buffer keeping the best `k`
+//!   (descending score, ties to the lowest row index — the WTA race
+//!   semantics). NaN scores never win and never panic ([`rank_before`]).
+//! * [`BlockTopK`] — one selector per query in a block, with all buffers
+//!   reused across calls.
+//! * [`SearchScratch`] — engine scratch (score vector + query staging) owned
+//!   by the caller and reused across calls.
+//!
+//! Engines implement [`crate::am::AmEngine::search_block`] over these types;
+//! the tile manager composes per-tile blocks hierarchically and the
+//! coordinator's workers hold one set of buffers for their whole lifetime.
+
+use crate::util::BitVec;
+
+use super::SearchResult;
+
+/// Ranking predicate shared by every selector and merge step: does candidate
+/// `(score_a, idx_a)` rank strictly before `(score_b, idx_b)`?
+///
+/// Descending score with ties broken to the lowest row index (jnp.argmax /
+/// Pallas kernel convention). NaN is treated as negative infinity so a
+/// degenerate score can never win a race or panic a comparison — the
+/// hardening counterpart of the old `partial_cmp(..).expect("finite
+/// scores")` sort key. ±0.0 are deliberately unified so the zero produced by
+/// an empty row ties (and index-breaks) against a computed -0.0.
+#[inline]
+pub fn rank_before(score_a: f64, idx_a: usize, score_b: f64, idx_b: usize) -> bool {
+    #[inline]
+    fn key(score: f64) -> f64 {
+        if score.is_nan() {
+            f64::NEG_INFINITY
+        } else if score == 0.0 {
+            0.0 // fold -0.0 into +0.0 so ±0 tie-break by index
+        } else {
+            score
+        }
+    }
+    match key(score_a).total_cmp(&key(score_b)) {
+        std::cmp::Ordering::Greater => true,
+        std::cmp::Ordering::Less => false,
+        std::cmp::Ordering::Equal => idx_a < idx_b,
+    }
+}
+
+/// Validate a block-kernel call: one selector per query, matching dims.
+/// Shared by the trait default, the packed-store kernel and engine
+/// overrides so the contract lives in one place.
+pub fn check_block(queries: QueriesRef<'_>, out: &[TopK], engine_dims: usize) {
+    assert_eq!(queries.len(), out.len(), "one selector per query");
+    assert_eq!(
+        queries.dims(),
+        engine_dims,
+        "query dims {} != engine dims {}",
+        queries.dims(),
+        engine_dims
+    );
+}
+
+/// A bit-packed block of queries: `count` queries of `dims` bits each,
+/// stored row-major as u64 lanes. The serving analogue of the paper's
+/// "apply the query to the bitlines" step, batched.
+#[derive(Debug, Clone)]
+pub struct QueryBlock {
+    dims: usize,
+    lanes_per_query: usize,
+    count: usize,
+    lanes: Vec<u64>,
+}
+
+impl QueryBlock {
+    /// Empty block for `dims`-bit queries. The lane buffer is grown on first
+    /// use and reused thereafter.
+    pub fn new(dims: usize) -> Self {
+        assert!(dims >= 1, "query block needs at least one dimension");
+        QueryBlock { dims, lanes_per_query: dims.div_ceil(64), count: 0, lanes: Vec::new() }
+    }
+
+    /// Pack a slice of queries into a fresh block.
+    pub fn pack(queries: &[BitVec], dims: usize) -> Self {
+        let mut block = QueryBlock::new(dims);
+        for q in queries {
+            block.push(q);
+        }
+        block
+    }
+
+    /// Drop all queries, keeping the lane buffer for reuse.
+    pub fn clear(&mut self) {
+        self.count = 0;
+        self.lanes.clear();
+    }
+
+    /// Append one query's lanes to the block.
+    pub fn push(&mut self, query: &BitVec) {
+        assert_eq!(
+            query.len(),
+            self.dims,
+            "query length {} != block dims {}",
+            query.len(),
+            self.dims
+        );
+        self.lanes.extend_from_slice(query.lanes());
+        self.count += 1;
+    }
+
+    /// Clear, then pack `queries` (allocation-free once warmed up).
+    pub fn repack<'a>(&mut self, queries: impl IntoIterator<Item = &'a BitVec>) {
+        self.clear();
+        for q in queries {
+            self.push(q);
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.count
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.count == 0
+    }
+
+    pub fn dims(&self) -> usize {
+        self.dims
+    }
+
+    /// Cheap borrowed view over the whole block.
+    pub fn view(&self) -> QueriesRef<'_> {
+        QueriesRef {
+            lanes: &self.lanes,
+            lanes_per_query: self.lanes_per_query,
+            dims: self.dims,
+            count: self.count,
+        }
+    }
+}
+
+/// Borrowed, `Copy` view of (a contiguous range of) a [`QueryBlock`] —
+/// what kernels actually consume. Sliceable along the query axis so a
+/// tile manager can fan work out over tile×batch segments without copying.
+#[derive(Debug, Clone, Copy)]
+pub struct QueriesRef<'a> {
+    lanes: &'a [u64],
+    lanes_per_query: usize,
+    dims: usize,
+    count: usize,
+}
+
+impl<'a> QueriesRef<'a> {
+    pub fn len(&self) -> usize {
+        self.count
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.count == 0
+    }
+
+    pub fn dims(&self) -> usize {
+        self.dims
+    }
+
+    /// The packed u64 lanes of query `i` (trailing bits beyond `dims` zero).
+    #[inline]
+    pub fn lanes_of(&self, i: usize) -> &'a [u64] {
+        assert!(i < self.count, "query index {i} out of range {}", self.count);
+        &self.lanes[i * self.lanes_per_query..(i + 1) * self.lanes_per_query]
+    }
+
+    /// Popcount of query `i`.
+    #[inline]
+    pub fn count_ones_of(&self, i: usize) -> u32 {
+        self.lanes_of(i).iter().map(|l| l.count_ones()).sum()
+    }
+
+    /// Bit `j` of query `i`.
+    #[inline]
+    pub fn bit(&self, i: usize, j: usize) -> bool {
+        assert!(j < self.dims, "bit index {j} out of range {}", self.dims);
+        (self.lanes_of(i)[j / 64] >> (j % 64)) & 1 == 1
+    }
+
+    /// Sub-view over queries `[start, end)`.
+    pub fn slice(&self, start: usize, end: usize) -> QueriesRef<'a> {
+        assert!(start <= end && end <= self.count, "bad query range {start}..{end}");
+        QueriesRef {
+            lanes: &self.lanes[start * self.lanes_per_query..end * self.lanes_per_query],
+            lanes_per_query: self.lanes_per_query,
+            dims: self.dims,
+            count: end - start,
+        }
+    }
+}
+
+/// Bounded running top-k selector: a small sorted insertion buffer, the
+/// digital equivalent of iterating the WTA with winner inhibition (§3.5).
+/// Keeps at most `k` results in rank order (best first).
+#[derive(Debug, Clone)]
+pub struct TopK {
+    k: usize,
+    entries: Vec<SearchResult>,
+}
+
+impl TopK {
+    pub fn new(k: usize) -> Self {
+        TopK { k, entries: Vec::with_capacity(k) }
+    }
+
+    /// Reset for a new search, keeping the entry buffer for reuse.
+    pub fn reset(&mut self, k: usize) {
+        self.k = k;
+        self.entries.clear();
+        // len is 0 here, so this guarantees capacity >= k (no-op once warm).
+        self.entries.reserve(k);
+    }
+
+    pub fn k(&self) -> usize {
+        self.k
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// Offer one `(row index, score)` candidate. O(1) reject below the
+    /// current k-th score; O(k) insertion otherwise (k is small).
+    #[inline]
+    pub fn offer(&mut self, index: usize, score: f64) {
+        if self.k == 0 {
+            return;
+        }
+        if self.entries.len() == self.k {
+            let worst = &self.entries[self.entries.len() - 1];
+            if !rank_before(score, index, worst.score, worst.winner) {
+                return;
+            }
+            self.entries.pop();
+        }
+        let mut at = self.entries.len();
+        while at > 0 {
+            let e = &self.entries[at - 1];
+            if rank_before(score, index, e.score, e.winner) {
+                at -= 1;
+            } else {
+                break;
+            }
+        }
+        self.entries.insert(at, SearchResult { winner: index, score });
+    }
+
+    /// Merge every entry of `other` into this selector.
+    pub fn merge_from(&mut self, other: &TopK) {
+        for e in &other.entries {
+            self.offer(e.winner, e.score);
+        }
+    }
+
+    /// Ranked results, best first.
+    pub fn as_slice(&self) -> &[SearchResult] {
+        &self.entries
+    }
+
+    /// The current winner, if anything was offered.
+    pub fn best(&self) -> Option<&SearchResult> {
+        self.entries.first()
+    }
+}
+
+/// One [`TopK`] selector per query of a block, with every buffer reused
+/// across calls — the result side of the allocation-free kernel.
+#[derive(Debug, Clone, Default)]
+pub struct BlockTopK {
+    selectors: Vec<TopK>,
+    active: usize,
+}
+
+impl BlockTopK {
+    pub fn new() -> Self {
+        BlockTopK { selectors: Vec::new(), active: 0 }
+    }
+
+    /// Size for `queries` selectors of capacity `k`, reusing prior buffers.
+    pub fn reset(&mut self, queries: usize, k: usize) {
+        while self.selectors.len() < queries {
+            self.selectors.push(TopK::new(k));
+        }
+        for sel in &mut self.selectors[..queries] {
+            sel.reset(k);
+        }
+        self.active = queries;
+    }
+
+    /// Number of active selectors (== queries of the last `reset`).
+    pub fn queries(&self) -> usize {
+        self.active
+    }
+
+    pub fn selectors(&self) -> &[TopK] {
+        &self.selectors[..self.active]
+    }
+
+    pub fn selectors_mut(&mut self) -> &mut [TopK] {
+        &mut self.selectors[..self.active]
+    }
+
+    /// Ranked results for query `i`.
+    pub fn query(&self, i: usize) -> &[SearchResult] {
+        assert!(i < self.active, "query index {i} out of range {}", self.active);
+        self.selectors[i].as_slice()
+    }
+
+    /// Owned copy of every query's ranked results (convenience; allocates).
+    pub fn to_vecs(&self) -> Vec<Vec<SearchResult>> {
+        self.selectors().iter().map(|s| s.as_slice().to_vec()).collect()
+    }
+}
+
+/// Caller-owned scratch an engine may use while scoring a block: a reusable
+/// score vector and a staging [`BitVec`] for engines that score from an
+/// unpacked query view. Hold one per worker and reuse it forever.
+#[derive(Debug, Clone)]
+pub struct SearchScratch {
+    /// Per-row score buffer (length = engine rows after a fill).
+    pub scores: Vec<f64>,
+    /// Staging query for engines without a packed-lane fast path.
+    pub query: BitVec,
+}
+
+impl SearchScratch {
+    pub fn new() -> Self {
+        SearchScratch { scores: Vec::new(), query: BitVec::zeros(0) }
+    }
+}
+
+impl Default for SearchScratch {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng;
+
+    #[test]
+    fn block_packs_lanes_contiguously() {
+        let mut r = rng(1);
+        let queries: Vec<BitVec> = (0..5).map(|_| BitVec::random(130, 0.5, &mut r)).collect();
+        let block = QueryBlock::pack(&queries, 130);
+        assert_eq!(block.len(), 5);
+        let v = block.view();
+        for (i, q) in queries.iter().enumerate() {
+            assert_eq!(v.lanes_of(i), q.lanes(), "query {i} lanes");
+            assert_eq!(v.count_ones_of(i), q.count_ones());
+            for j in [0usize, 63, 64, 129] {
+                assert_eq!(v.bit(i, j), q.get(j), "bit ({i},{j})");
+            }
+        }
+    }
+
+    #[test]
+    fn block_repack_reuses_capacity() {
+        let mut r = rng(2);
+        let queries: Vec<BitVec> = (0..8).map(|_| BitVec::random(64, 0.5, &mut r)).collect();
+        let mut block = QueryBlock::new(64);
+        block.repack(&queries);
+        assert_eq!(block.len(), 8);
+        block.repack(queries.iter().take(3));
+        assert_eq!(block.len(), 3);
+        assert_eq!(block.view().lanes_of(2), queries[2].lanes());
+    }
+
+    #[test]
+    fn view_slice_matches_direct_indexing() {
+        let mut r = rng(3);
+        let queries: Vec<BitVec> = (0..10).map(|_| BitVec::random(96, 0.5, &mut r)).collect();
+        let block = QueryBlock::pack(&queries, 96);
+        let v = block.view();
+        let s = v.slice(4, 9);
+        assert_eq!(s.len(), 5);
+        for i in 0..5 {
+            assert_eq!(s.lanes_of(i), v.lanes_of(4 + i));
+        }
+        assert_eq!(s.slice(2, 4).lanes_of(0), v.lanes_of(6));
+    }
+
+    #[test]
+    #[should_panic(expected = "query length")]
+    fn block_rejects_wrong_dims() {
+        let mut block = QueryBlock::new(64);
+        block.push(&BitVec::zeros(32));
+    }
+
+    #[test]
+    fn topk_keeps_best_in_order() {
+        let mut t = TopK::new(3);
+        for (i, s) in [0.1, 0.9, 0.4, 0.9, 0.2, 0.95].iter().enumerate() {
+            t.offer(i, *s);
+        }
+        let got: Vec<(usize, f64)> = t.as_slice().iter().map(|e| (e.winner, e.score)).collect();
+        // 0.95 first, then the two 0.9s with the tie to the lower index.
+        assert_eq!(got, vec![(5, 0.95), (1, 0.9), (3, 0.9)]);
+    }
+
+    #[test]
+    fn topk_nan_never_wins_and_never_panics() {
+        let mut t = TopK::new(2);
+        t.offer(0, f64::NAN);
+        t.offer(1, 0.5);
+        t.offer(2, f64::NAN);
+        t.offer(3, 0.7);
+        let got: Vec<usize> = t.as_slice().iter().map(|e| e.winner).collect();
+        assert_eq!(got, vec![3, 1]);
+    }
+
+    #[test]
+    fn topk_all_nan_is_deterministic_by_index() {
+        let mut t = TopK::new(3);
+        for i in [4usize, 1, 3, 2] {
+            t.offer(i, f64::NAN);
+        }
+        let got: Vec<usize> = t.as_slice().iter().map(|e| e.winner).collect();
+        assert_eq!(got, vec![1, 2, 3]);
+    }
+
+    #[test]
+    fn topk_zero_k_accepts_nothing() {
+        let mut t = TopK::new(0);
+        t.offer(0, 1.0);
+        assert!(t.is_empty());
+    }
+
+    #[test]
+    fn topk_reset_reuses_buffer() {
+        let mut t = TopK::new(4);
+        for i in 0..10 {
+            t.offer(i, i as f64);
+        }
+        assert_eq!(t.len(), 4);
+        t.reset(2);
+        assert!(t.is_empty());
+        t.offer(7, 1.0);
+        assert_eq!(t.best().unwrap().winner, 7);
+    }
+
+    #[test]
+    fn topk_matches_full_sort_on_random_input() {
+        let mut r = rng(9);
+        for _ in 0..50 {
+            let n = 1 + r.below(40);
+            let k = 1 + r.below(8);
+            let scores: Vec<f64> = (0..n).map(|_| (r.below(6) as f64) / 2.0).collect();
+            let mut t = TopK::new(k);
+            for (i, &s) in scores.iter().enumerate() {
+                t.offer(i, s);
+            }
+            // Reference: stable sort by (score desc, index asc).
+            let mut idx: Vec<usize> = (0..n).collect();
+            idx.sort_by(|&a, &b| {
+                scores[b].total_cmp(&scores[a]).then(a.cmp(&b))
+            });
+            idx.truncate(k.min(n));
+            let got: Vec<usize> = t.as_slice().iter().map(|e| e.winner).collect();
+            assert_eq!(got, idx, "scores {scores:?} k {k}");
+        }
+    }
+
+    #[test]
+    fn rank_before_unifies_signed_zero() {
+        assert!(rank_before(0.0, 0, -0.0, 1), "ties break by index across ±0");
+        assert!(!rank_before(-0.0, 1, 0.0, 0));
+    }
+
+    #[test]
+    fn block_topk_reset_and_merge() {
+        let mut b = BlockTopK::new();
+        b.reset(3, 2);
+        assert_eq!(b.queries(), 3);
+        b.selectors_mut()[1].offer(5, 1.0);
+        assert_eq!(b.query(1)[0].winner, 5);
+        b.reset(2, 2);
+        assert!(b.query(1).is_empty(), "reset clears selectors");
+
+        let mut a = TopK::new(2);
+        a.offer(0, 0.3);
+        a.offer(1, 0.9);
+        let mut m = TopK::new(2);
+        m.offer(2, 0.5);
+        m.merge_from(&a);
+        let got: Vec<usize> = m.as_slice().iter().map(|e| e.winner).collect();
+        assert_eq!(got, vec![1, 2]);
+    }
+}

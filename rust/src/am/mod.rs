@@ -13,9 +13,18 @@
 //! * [`analog::AnalogCosimeEngine`] — the full analog path: 1FeFET1R arrays
 //!   → translinear X²/Y → WTA, with frozen device variation (Fig. 7).
 //! * [`write`] — the array programming path (±4 V pulses + write-verify).
+//!
+//! The serving hot path is the batched, allocation-free kernel interface in
+//! [`kernel`]: [`AmEngine::search_block`] scores a bit-packed [`QueryBlock`]
+//! into caller-provided [`SearchScratch`], feeding per-query [`TopK`]
+//! selectors — batch size and k are orthogonal axes everywhere above this
+//! layer (tiles, coordinator).
 
 pub mod analog;
+pub mod kernel;
 pub mod write;
+
+pub use kernel::{BlockTopK, QueriesRef, QueryBlock, SearchScratch, TopK};
 
 use crate::util::BitVec;
 
@@ -45,8 +54,26 @@ pub trait AmEngine: Send + Sync {
     fn rows(&self) -> usize;
     fn dims(&self) -> usize;
 
-    /// Scores for every stored row (higher = closer).
-    fn scores(&self, query: &BitVec) -> Vec<f64>;
+    /// Fill `out` with the score of every stored row (higher = closer),
+    /// reusing the caller's buffer — the allocation-free scoring primitive
+    /// every engine implements.
+    fn scores_into(&self, query: &BitVec, out: &mut Vec<f64>);
+
+    /// Scores for every stored row (higher = closer). Allocating
+    /// convenience over [`AmEngine::scores_into`].
+    fn scores(&self, query: &BitVec) -> Vec<f64> {
+        let mut out = Vec::new();
+        self.scores_into(query, &mut out);
+        out
+    }
+
+    /// Deepest per-query k this engine's [`AmEngine::search_block`] can
+    /// serve. Engines whose substrate only reads out the single winner
+    /// (e.g. a fixed argmax artifact) override this so callers can reject
+    /// deeper requests up front instead of failing mid-batch.
+    fn max_k(&self) -> usize {
+        usize::MAX
+    }
 
     /// Nearest-neighbor search (argmax of [`AmEngine::scores`]; ties break
     /// to the lowest row index, matching the Pallas kernel and jnp.argmax).
@@ -70,17 +97,69 @@ pub trait AmEngine: Send + Sync {
 
     /// Top-k nearest neighbors (descending score; ties to lower index).
     /// The analog realization is an iterated WTA with winner inhibition —
-    /// digitally this is a partial selection over the scores.
+    /// digitally this is a partial selection over the scores. NaN scores
+    /// never win and never panic (ordering of [`kernel::rank_before`]).
     fn search_topk(&self, query: &BitVec, k: usize) -> Vec<SearchResult> {
         let scores = self.scores(query);
-        let k = k.min(scores.len());
-        let mut idx: Vec<usize> = (0..scores.len()).collect();
-        idx.sort_by(|&a, &b| {
-            scores[b].partial_cmp(&scores[a]).expect("finite scores").then(a.cmp(&b))
-        });
-        idx.truncate(k);
-        idx.into_iter().map(|i| SearchResult { winner: i, score: scores[i] }).collect()
+        let mut sel = TopK::new(k.min(scores.len()));
+        for (i, &s) in scores.iter().enumerate() {
+            sel.offer(i, s);
+        }
+        sel.as_slice().to_vec()
     }
+
+    /// The batched, allocation-free search kernel: score every query in
+    /// `queries` against all stored rows, offering `(base + row, score)`
+    /// candidates to the matching selector of `out` (one per query, already
+    /// reset to the caller's k). `base` is the engine's global row offset —
+    /// tiles compose hierarchically by passing their shard offset.
+    ///
+    /// The default stages each query through `scratch` and reuses
+    /// [`AmEngine::scores_into`]; packed-store engines override this with a
+    /// fused loop that never materializes a score vector at all.
+    fn search_block(
+        &self,
+        queries: QueriesRef<'_>,
+        base: usize,
+        scratch: &mut SearchScratch,
+        out: &mut [TopK],
+    ) {
+        kernel::check_block(queries, out, self.dims());
+        for qi in 0..queries.len() {
+            scratch.query.assign_lanes(queries.dims(), queries.lanes_of(qi));
+            self.scores_into(&scratch.query, &mut scratch.scores);
+            let sel = &mut out[qi];
+            for (r, &s) in scratch.scores.iter().enumerate() {
+                sel.offer(base + r, s);
+            }
+        }
+    }
+
+    /// Convenience wrapper over [`AmEngine::search_block`]: batched top-k
+    /// with one ranked result list per query. Allocates its own buffers;
+    /// steady-state callers hold a [`QueryBlock`]/[`BlockTopK`]/
+    /// [`SearchScratch`] and call `search_block` directly.
+    fn search_topk_batch(&self, queries: &[BitVec], k: usize) -> Vec<Vec<SearchResult>> {
+        if queries.is_empty() {
+            return Vec::new();
+        }
+        let block = QueryBlock::pack(queries, self.dims());
+        let mut scratch = SearchScratch::new();
+        let mut out = BlockTopK::new();
+        out.reset(queries.len(), k.min(self.rows()));
+        self.search_block(block.view(), 0, &mut scratch, out.selectors_mut());
+        out.to_vecs()
+    }
+}
+
+/// Shared batched-search heuristic for the packed-store engines: serial
+/// under 4 queries (thread spawn outweighs the work), fan out across cores
+/// beyond — the coordinator's batch is exactly this shape.
+fn par_search_batch<E: AmEngine + ?Sized>(engine: &E, queries: &[BitVec]) -> Vec<SearchResult> {
+    if queries.len() < 4 {
+        return queries.iter().map(|q| engine.search(q)).collect();
+    }
+    crate::util::par::par_map(queries, |q| engine.search(q))
 }
 
 /// Shared storage for the digital engines: bit-packed rows + popcounts.
@@ -88,7 +167,7 @@ pub trait AmEngine: Send + Sync {
 /// Rows are additionally flattened into one contiguous u64 matrix
 /// (`packed`, row-major) so the search hot loop streams cache lines
 /// sequentially instead of chasing per-row heap allocations — the single
-/// biggest lever found in the §Perf pass (EXPERIMENTS.md).
+/// biggest lever found in the §Perf pass.
 #[derive(Debug, Clone)]
 struct Store {
     rows: Vec<BitVec>,
@@ -140,6 +219,31 @@ impl Store {
         }
         acc[0] + acc[1] + acc[2] + acc[3]
     }
+
+    /// Shared fused block kernel for every packed-store engine: streams the
+    /// packed matrix once per query, feeding the running selector directly —
+    /// no score vector, no per-row `BitVec` chasing, zero allocations.
+    /// `score(x, row, q_ones)` maps the binary dot product to the engine's
+    /// metric.
+    #[inline]
+    fn kernel_block(
+        &self,
+        queries: QueriesRef<'_>,
+        base: usize,
+        out: &mut [TopK],
+        score: impl Fn(u32, usize, u32) -> f64,
+    ) {
+        kernel::check_block(queries, out, self.dims);
+        for qi in 0..queries.len() {
+            let q = queries.lanes_of(qi);
+            let q_ones = queries.count_ones_of(qi);
+            let sel = &mut out[qi];
+            for r in 0..self.rows.len() {
+                let x = self.dot_packed(q, r);
+                sel.offer(base + r, score(x, r, q_ones));
+            }
+        }
+    }
 }
 
 /// Bit-exact squared-cosine AM (paper Eq. 2): score = X²/Y with X = a·b,
@@ -173,20 +277,41 @@ impl AmEngine for DigitalExactEngine {
         self.store.dims
     }
 
-    fn scores(&self, query: &BitVec) -> Vec<f64> {
+    fn scores_into(&self, query: &BitVec, out: &mut Vec<f64>) {
         self.store.check_query(query);
         let q = query.lanes();
-        (0..self.store.rows.len())
-            .map(|r| {
-                let x = self.store.dot_packed(q, r) as f64;
-                let y = self.store.popcounts[r];
-                if y == 0 {
-                    0.0
-                } else {
-                    x * x / y as f64
-                }
-            })
-            .collect()
+        out.clear();
+        out.extend((0..self.store.rows.len()).map(|r| {
+            let x = self.store.dot_packed(q, r) as f64;
+            let y = self.store.popcounts[r];
+            if y == 0 {
+                0.0
+            } else {
+                x * x / y as f64
+            }
+        }));
+    }
+
+    /// Fused batched top-k: streams the packed matrix once per query lane,
+    /// no score vector, no per-query allocation (Eq. 2 with the shared ‖a‖²
+    /// dropped, exactly like [`DigitalExactEngine::search`]).
+    fn search_block(
+        &self,
+        queries: QueriesRef<'_>,
+        base: usize,
+        _scratch: &mut SearchScratch,
+        out: &mut [TopK],
+    ) {
+        let pop = &self.store.popcounts;
+        self.store.kernel_block(queries, base, out, |x, r, _| {
+            let y = pop[r];
+            if y == 0 {
+                0.0
+            } else {
+                let xf = x as f64;
+                xf * xf / y as f64
+            }
+        });
     }
 
     /// Fused hot path: streams the packed matrix once, tracking the running
@@ -210,10 +335,7 @@ impl AmEngine for DigitalExactEngine {
     /// Batched search: queries are independent — fan out across cores
     /// (the coordinator's batch is exactly this shape).
     fn search_batch(&self, queries: &[BitVec]) -> Vec<SearchResult> {
-        if queries.len() < 4 {
-            return queries.iter().map(|q| self.search(q)).collect();
-        }
-        crate::util::par::par_map(queries, |q| self.search(q))
+        par_search_batch(self, queries)
     }
 }
 
@@ -243,24 +365,33 @@ impl AmEngine for HammingEngine {
         self.store.dims
     }
 
-    fn scores(&self, query: &BitVec) -> Vec<f64> {
+    fn scores_into(&self, query: &BitVec, out: &mut Vec<f64>) {
         self.store.check_query(query);
         // d(a,b) = |a| + |b| − 2·a·b, computed over the packed matrix.
         let q = query.lanes();
         let qa = query.count_ones();
-        (0..self.store.rows.len())
-            .map(|r| {
-                let x = self.store.dot_packed(q, r);
-                -((qa + self.store.popcounts[r]) as f64 - 2.0 * x as f64)
-            })
-            .collect()
+        out.clear();
+        out.extend((0..self.store.rows.len()).map(|r| {
+            let x = self.store.dot_packed(q, r);
+            -((qa + self.store.popcounts[r]) as f64 - 2.0 * x as f64)
+        }));
     }
 
     fn search_batch(&self, queries: &[BitVec]) -> Vec<SearchResult> {
-        if queries.len() < 4 {
-            return queries.iter().map(|q| self.search(q)).collect();
-        }
-        crate::util::par::par_map(queries, |q| self.search(q))
+        par_search_batch(self, queries)
+    }
+
+    fn search_block(
+        &self,
+        queries: QueriesRef<'_>,
+        base: usize,
+        _scratch: &mut SearchScratch,
+        out: &mut [TopK],
+    ) {
+        let pop = &self.store.popcounts;
+        self.store.kernel_block(queries, base, out, |x, r, q_ones| {
+            -((q_ones + pop[r]) as f64 - 2.0 * x as f64)
+        });
     }
 }
 
@@ -297,9 +428,31 @@ impl AmEngine for ApproxCosineEngine {
         self.store.dims
     }
 
-    fn scores(&self, query: &BitVec) -> Vec<f64> {
+    fn scores_into(&self, query: &BitVec, out: &mut Vec<f64>) {
         self.store.check_query(query);
-        self.store.rows.iter().map(|row| query.dot(row) as f64 / self.norm_const).collect()
+        // Packed-matrix streaming like the exact engine — no per-row BitVec
+        // heap pointers on the hot path.
+        let q = query.lanes();
+        out.clear();
+        out.extend(
+            (0..self.store.rows.len())
+                .map(|r| self.store.dot_packed(q, r) as f64 / self.norm_const),
+        );
+    }
+
+    fn search_batch(&self, queries: &[BitVec]) -> Vec<SearchResult> {
+        par_search_batch(self, queries)
+    }
+
+    fn search_block(
+        &self,
+        queries: QueriesRef<'_>,
+        base: usize,
+        _scratch: &mut SearchScratch,
+        out: &mut [TopK],
+    ) {
+        let norm = self.norm_const;
+        self.store.kernel_block(queries, base, out, |x, _, _| x as f64 / norm);
     }
 }
 
@@ -329,9 +482,25 @@ impl AmEngine for DotEngine {
         self.store.dims
     }
 
-    fn scores(&self, query: &BitVec) -> Vec<f64> {
+    fn scores_into(&self, query: &BitVec, out: &mut Vec<f64>) {
         self.store.check_query(query);
-        self.store.rows.iter().map(|row| query.dot(row) as f64).collect()
+        let q = query.lanes();
+        out.clear();
+        out.extend((0..self.store.rows.len()).map(|r| self.store.dot_packed(q, r) as f64));
+    }
+
+    fn search_batch(&self, queries: &[BitVec]) -> Vec<SearchResult> {
+        par_search_batch(self, queries)
+    }
+
+    fn search_block(
+        &self,
+        queries: QueriesRef<'_>,
+        base: usize,
+        _scratch: &mut SearchScratch,
+        out: &mut [TopK],
+    ) {
+        self.store.kernel_block(queries, base, out, |x, _, _| x as f64);
     }
 }
 
@@ -491,5 +660,184 @@ mod topk_tests {
         let e = DigitalExactEngine::new(rows);
         let top = e.search_topk(&BitVec::from_bits(&[1, 1]), 10);
         assert_eq!(top.len(), 2);
+    }
+
+    /// Regression (seed bug): `search_topk` ordered with
+    /// `partial_cmp(..).expect("finite scores")` and panicked on NaN. The
+    /// selector ordering must instead rank NaN last, deterministically.
+    #[test]
+    fn topk_tolerates_nan_scores() {
+        struct NanEngine;
+        impl AmEngine for NanEngine {
+            fn name(&self) -> &str {
+                "nan-mock"
+            }
+            fn metric(&self) -> Metric {
+                Metric::Dot
+            }
+            fn rows(&self) -> usize {
+                6
+            }
+            fn dims(&self) -> usize {
+                8
+            }
+            fn scores_into(&self, _query: &BitVec, out: &mut Vec<f64>) {
+                out.clear();
+                out.extend((0..6).map(|i| if i % 2 == 0 { f64::NAN } else { i as f64 }));
+            }
+        }
+        let e = NanEngine;
+        let q = BitVec::zeros(8);
+        let top = e.search_topk(&q, 3);
+        let winners: Vec<usize> = top.iter().map(|r| r.winner).collect();
+        assert_eq!(winners, vec![5, 3, 1], "NaN rows must never win");
+        let all = e.search_topk(&q, 6);
+        let winners: Vec<usize> = all.iter().map(|r| r.winner).collect();
+        assert_eq!(winners, vec![5, 3, 1, 0, 2, 4], "NaN tail ordered by index");
+        // The batched kernel path flows through the same ordering.
+        let batched = e.search_topk_batch(&[q.clone(), q], 2);
+        for hits in batched {
+            assert_eq!(hits[0].winner, 5);
+            assert_eq!(hits[1].winner, 3);
+        }
+    }
+}
+
+#[cfg(test)]
+mod kernel_engine_tests {
+    use super::*;
+    use crate::util::{prop, rng, BitVec};
+
+    fn all_digital(rows: Vec<BitVec>) -> Vec<Box<dyn AmEngine>> {
+        vec![
+            Box::new(DigitalExactEngine::new(rows.clone())),
+            Box::new(HammingEngine::new(rows.clone())),
+            Box::new(ApproxCosineEngine::new(rows.clone())),
+            Box::new(DotEngine::new(rows)),
+        ]
+    }
+
+    /// The tentpole property: for every engine, batched block top-k equals
+    /// serial top-k, and the k=1 head reproduces the single-winner `search`
+    /// bit-for-bit (winner and score).
+    #[test]
+    fn block_topk_equals_serial_topk_and_search_head() {
+        prop::check("batched == serial == argmax head", 25, 11, |r| {
+            let n_rows = 2 + r.below(40);
+            let dims = 16 + 8 * r.below(10);
+            let n_queries = 1 + r.below(9);
+            let k = 1 + r.below(6);
+            let words: Vec<BitVec> =
+                (0..n_rows).map(|_| BitVec::random(dims, 0.2 + 0.6 * r.f64(), r)).collect();
+            let queries: Vec<BitVec> =
+                (0..n_queries).map(|_| BitVec::random(dims, 0.5, r)).collect();
+            for engine in all_digital(words.clone()) {
+                let batched = engine.search_topk_batch(&queries, k);
+                crate::prop_assert!(batched.len() == queries.len(), "one result list per query");
+                for (q, got) in queries.iter().zip(&batched) {
+                    let serial = engine.search_topk(q, k);
+                    crate::prop_assert!(
+                        got.len() == serial.len(),
+                        "{}: batched len {} vs serial {}",
+                        engine.name(),
+                        got.len(),
+                        serial.len()
+                    );
+                    for (a, b) in got.iter().zip(&serial) {
+                        crate::prop_assert!(
+                            a.winner == b.winner && a.score == b.score,
+                            "{}: batched ({}, {}) vs serial ({}, {})",
+                            engine.name(),
+                            a.winner,
+                            a.score,
+                            b.winner,
+                            b.score
+                        );
+                    }
+                    let head = engine.search(q);
+                    crate::prop_assert!(
+                        got[0].winner == head.winner && got[0].score == head.score,
+                        "{}: k=1 head ({}, {}) != search ({}, {})",
+                        engine.name(),
+                        got[0].winner,
+                        got[0].score,
+                        head.winner,
+                        head.score
+                    );
+                }
+            }
+            Ok(())
+        });
+    }
+
+    /// Block kernel with a nonzero base offset shifts every winner index.
+    #[test]
+    fn block_base_offsets_winners() {
+        let mut r = rng(12);
+        let words: Vec<BitVec> = (0..10).map(|_| BitVec::random(64, 0.5, &mut r)).collect();
+        let engine = DigitalExactEngine::new(words);
+        let queries: Vec<BitVec> = (0..4).map(|_| BitVec::random(64, 0.5, &mut r)).collect();
+        let block = QueryBlock::pack(&queries, 64);
+        let mut scratch = SearchScratch::new();
+        let mut plain = BlockTopK::new();
+        plain.reset(4, 3);
+        engine.search_block(block.view(), 0, &mut scratch, plain.selectors_mut());
+        let mut shifted = BlockTopK::new();
+        shifted.reset(4, 3);
+        engine.search_block(block.view(), 100, &mut scratch, shifted.selectors_mut());
+        for qi in 0..4 {
+            for (a, b) in plain.query(qi).iter().zip(shifted.query(qi)) {
+                assert_eq!(a.winner + 100, b.winner);
+                assert_eq!(a.score, b.score);
+            }
+        }
+    }
+
+    /// Buffer reuse across calls must not leak state between blocks.
+    #[test]
+    fn reused_buffers_match_fresh_buffers() {
+        let mut r = rng(13);
+        let words: Vec<BitVec> = (0..24).map(|_| BitVec::random(96, 0.5, &mut r)).collect();
+        let engine = DigitalExactEngine::new(words);
+        let mut block = QueryBlock::new(96);
+        let mut scratch = SearchScratch::new();
+        let mut out = BlockTopK::new();
+        for round in 0..5 {
+            let queries: Vec<BitVec> =
+                (0..1 + round).map(|_| BitVec::random(96, 0.5, &mut r)).collect();
+            block.repack(&queries);
+            out.reset(queries.len(), 4);
+            engine.search_block(block.view(), 0, &mut scratch, out.selectors_mut());
+            let fresh = engine.search_topk_batch(&queries, 4);
+            for (qi, want) in fresh.iter().enumerate() {
+                let got = out.query(qi);
+                assert_eq!(got.len(), want.len());
+                for (a, b) in got.iter().zip(want) {
+                    assert_eq!(a.winner, b.winner, "round {round} query {qi}");
+                    assert_eq!(a.score, b.score);
+                }
+            }
+        }
+    }
+
+    /// The analog engine participates in the block API through the default
+    /// (scores_into-staged) path; on a nominal die its batched top-k must
+    /// match its serial top-k and its WTA winner.
+    #[test]
+    fn analog_block_path_matches_serial() {
+        let cfg = crate::config::CosimeConfig::default();
+        let mut r = rng(14);
+        let words: Vec<BitVec> = (0..12).map(|_| BitVec::random(128, 0.5, &mut r)).collect();
+        let engine = analog::AnalogCosimeEngine::nominal(&cfg, words);
+        let queries: Vec<BitVec> = (0..6).map(|_| BitVec::random(128, 0.5, &mut r)).collect();
+        let batched = engine.search_topk_batch(&queries, 3);
+        for (q, got) in queries.iter().zip(&batched) {
+            let serial = engine.search_topk(q, 3);
+            for (a, b) in got.iter().zip(&serial) {
+                assert_eq!(a.winner, b.winner);
+                assert_eq!(a.score, b.score);
+            }
+            assert_eq!(got[0].winner, engine.search(q).winner, "head == WTA winner");
+        }
     }
 }

@@ -371,17 +371,28 @@ pub struct CoordinatorConfig {
     pub queue_depth: usize,
     /// Worker threads draining the batch queue.
     pub workers: usize,
+    /// Deepest top-k a request may ask for. The whole batch is scored at
+    /// its deepest k, so one unbounded request would make every co-batched
+    /// query pay O(rows·k) selector maintenance; deeper submissions are
+    /// rejected as bad queries.
+    pub max_k: usize,
 }
 
 impl Default for CoordinatorConfig {
     fn default() -> Self {
-        CoordinatorConfig { max_batch: 64, max_wait_us: 0, queue_depth: 4096, workers: 2 }
+        CoordinatorConfig {
+            max_batch: 64,
+            max_wait_us: 0,
+            queue_depth: 4096,
+            workers: 2,
+            max_k: 1024,
+        }
     }
 }
 
 bind_toml!(CoordinatorConfig {
     f64: [],
-    usize: [max_batch, queue_depth, workers],
+    usize: [max_batch, queue_depth, workers, max_k],
     u64: [max_wait_us],
     bool: [],
 });
@@ -469,6 +480,7 @@ impl CosimeConfig {
         ensure!((0.0..=1.0).contains(&a.expected_density), "expected_density must be in [0,1]");
         let c = &self.coordinator;
         ensure!(c.max_batch >= 1 && c.queue_depth >= 1 && c.workers >= 1, "bad coordinator");
+        ensure!(c.max_k >= 1, "coordinator max_k must be at least 1");
         Ok(())
     }
 }

@@ -1,10 +1,38 @@
 //! Serving metrics: counters and latency histograms for the queue, the
 //! engine execution, and end-to-end request time.
 
+use std::collections::BTreeMap;
 use std::sync::Mutex;
 use std::time::Duration;
 
 use crate::util::Histogram;
+
+/// Per-k latency lane: requests asking for the same top-k depth share a
+/// histogram, so a deployment can see whether deep-k readouts (iterated WTA
+/// passes) cost more end to end.
+struct KLane {
+    completed: u64,
+    total_us: Histogram,
+}
+
+/// The one latency histogram shape (µs, log-spaced) every lane shares, so
+/// global and per-k percentiles stay comparable.
+fn latency_histogram() -> Histogram {
+    Histogram::log_spaced(0.5, 10_000_000.0, 120)
+}
+
+/// Lane key for a requested k: exact up to 16, rounded up to the next power
+/// of two beyond that. Even with the service's submit-time `max_k` policy
+/// cap, a caller recording raw k values here must not be able to grow one
+/// histogram per distinct k forever; this bounds the lane count.
+fn k_lane(k: usize) -> usize {
+    if k <= 16 {
+        k
+    } else {
+        // checked: k near usize::MAX has no next power of two.
+        k.checked_next_power_of_two().unwrap_or(usize::MAX)
+    }
+}
 
 struct Inner {
     submitted: u64,
@@ -15,11 +43,22 @@ struct Inner {
     queue_us: Histogram,
     exec_us: Histogram,
     total_us: Histogram,
+    per_k: BTreeMap<usize, KLane>,
 }
 
 /// Thread-safe metrics sink.
 pub struct Metrics {
     inner: Mutex<Inner>,
+}
+
+/// Per-k latency summary (one row per lane; the key is the requested k,
+/// exact up to 16 and rounded up to a power of two beyond that).
+#[derive(Debug, Clone)]
+pub struct PerKSnapshot {
+    pub k: usize,
+    pub completed: u64,
+    pub total_p50_us: f64,
+    pub total_p99_us: f64,
 }
 
 /// Point-in-time snapshot for reporting.
@@ -37,6 +76,8 @@ pub struct MetricsSnapshot {
     pub total_p50_us: f64,
     pub total_p99_us: f64,
     pub total_mean_us: f64,
+    /// Latency broken down by requested k, ascending k.
+    pub per_k: Vec<PerKSnapshot>,
 }
 
 impl Default for Metrics {
@@ -47,7 +88,7 @@ impl Default for Metrics {
 
 impl Metrics {
     pub fn new() -> Self {
-        let h = || Histogram::log_spaced(0.5, 10_000_000.0, 120);
+        let h = latency_histogram;
         Metrics {
             inner: Mutex::new(Inner {
                 submitted: 0,
@@ -58,6 +99,7 @@ impl Metrics {
                 queue_us: h(),
                 exec_us: h(),
                 total_us: h(),
+                per_k: BTreeMap::new(),
             }),
         }
     }
@@ -76,7 +118,7 @@ impl Metrics {
         g.batch_sizes.push(size as u64);
     }
 
-    pub fn on_complete(&self, queued: Duration, exec: Duration) {
+    pub fn on_complete(&self, queued: Duration, exec: Duration, k: usize) {
         let mut g = self.inner.lock().unwrap();
         g.completed += 1;
         let qu = queued.as_secs_f64() * 1e6;
@@ -84,6 +126,12 @@ impl Metrics {
         g.queue_us.record(qu.max(0.5));
         g.exec_us.record(ex.max(0.5));
         g.total_us.record((qu + ex).max(0.5));
+        let lane = g
+            .per_k
+            .entry(k_lane(k))
+            .or_insert_with(|| KLane { completed: 0, total_us: latency_histogram() });
+        lane.completed += 1;
+        lane.total_us.record((qu + ex).max(0.5));
     }
 
     pub fn snapshot(&self) -> MetricsSnapshot {
@@ -106,6 +154,16 @@ impl Metrics {
             total_p50_us: g.total_us.quantile(0.5),
             total_p99_us: g.total_us.quantile(0.99),
             total_mean_us: g.total_us.mean(),
+            per_k: g
+                .per_k
+                .iter()
+                .map(|(&k, lane)| PerKSnapshot {
+                    k,
+                    completed: lane.completed,
+                    total_p50_us: lane.total_us.quantile(0.5),
+                    total_p99_us: lane.total_us.quantile(0.99),
+                })
+                .collect(),
         }
     }
 }
@@ -113,7 +171,7 @@ impl Metrics {
 impl MetricsSnapshot {
     /// Human-readable report block.
     pub fn report(&self) -> String {
-        format!(
+        let mut out = format!(
             "requests: submitted={} completed={} rejected(busy)={}\n\
              batches: {} (mean size {:.1})\n\
              queue  µs: p50={:.1} p99={:.1}\n\
@@ -131,7 +189,14 @@ impl MetricsSnapshot {
             self.total_p50_us,
             self.total_p99_us,
             self.total_mean_us,
-        )
+        );
+        for lane in &self.per_k {
+            out.push_str(&format!(
+                "\n  k={:<4} n={:<8} total µs: p50={:.1} p99={:.1}",
+                lane.k, lane.completed, lane.total_p50_us, lane.total_p99_us
+            ));
+        }
+        out
     }
 }
 
@@ -147,7 +212,7 @@ mod tests {
         m.on_reject_busy();
         m.on_batch(8);
         m.on_batch(4);
-        m.on_complete(Duration::from_micros(100), Duration::from_micros(50));
+        m.on_complete(Duration::from_micros(100), Duration::from_micros(50), 1);
         let s = m.snapshot();
         assert_eq!(s.submitted, 2);
         assert_eq!(s.rejected_busy, 1);
@@ -158,12 +223,46 @@ mod tests {
     }
 
     #[test]
+    fn per_k_lanes_split_latency() {
+        let m = Metrics::new();
+        m.on_complete(Duration::from_micros(10), Duration::from_micros(10), 1);
+        m.on_complete(Duration::from_micros(10), Duration::from_micros(10), 1);
+        m.on_complete(Duration::from_micros(500), Duration::from_micros(500), 8);
+        let s = m.snapshot();
+        assert_eq!(s.per_k.len(), 2);
+        assert_eq!(s.per_k[0].k, 1);
+        assert_eq!(s.per_k[0].completed, 2);
+        assert_eq!(s.per_k[1].k, 8);
+        assert_eq!(s.per_k[1].completed, 1);
+        assert!(
+            s.per_k[1].total_p50_us > s.per_k[0].total_p50_us,
+            "deep-k lane must show its higher latency"
+        );
+    }
+
+    #[test]
+    fn large_k_values_share_bounded_lanes() {
+        let m = Metrics::new();
+        for k in [17usize, 25, 32, 1000, 1 << 40] {
+            m.on_complete(Duration::from_micros(10), Duration::from_micros(10), k);
+        }
+        let s = m.snapshot();
+        let keys: Vec<usize> = s.per_k.iter().map(|l| l.k).collect();
+        assert_eq!(keys, vec![32, 1024, 1 << 40], "power-of-two lanes above 16");
+        assert_eq!(s.per_k[0].completed, 3, "17, 25 and 32 share the 32 lane");
+        // Absurd k must not overflow the lane computation.
+        m.on_complete(Duration::from_micros(1), Duration::from_micros(1), usize::MAX - 1);
+        assert!(m.snapshot().per_k.iter().any(|l| l.k == usize::MAX));
+    }
+
+    #[test]
     fn report_renders() {
         let m = Metrics::new();
         m.on_submit();
-        m.on_complete(Duration::from_micros(10), Duration::from_micros(5));
+        m.on_complete(Duration::from_micros(10), Duration::from_micros(5), 3);
         let text = m.snapshot().report();
         assert!(text.contains("submitted=1"));
         assert!(text.contains("total"));
+        assert!(text.contains("k=3"), "{text}");
     }
 }

@@ -4,15 +4,20 @@
 //! memory; the coordinator is the machinery a deployment needs around it
 //! (vLLM-router-shaped):
 //!
-//! * [`request`] — request/response types and submit errors.
+//! * [`request`] — request/response types (requests carry a top-k depth,
+//!   responses carry the ranked winners) and submit errors.
 //! * [`tiles`] — [`tiles::TileManager`]: shards stored words across
-//!   fixed-geometry COSIME tiles and merges per-tile winners (hierarchical
-//!   WTA — exactly how multiple physical arrays compose, §3.5).
+//!   fixed-geometry COSIME tiles and merges per-tile top-k selectors
+//!   (hierarchical WTA — exactly how multiple physical arrays compose,
+//!   §3.5), parallelized over tile×batch work slots with reused buffers.
 //! * [`batcher`] — dynamic batching queue (size + deadline policy) with
 //!   bounded-depth backpressure.
 //! * [`service`] — [`service::AmService`]: worker threads draining the
-//!   batcher into the tile manager; per-request timing; graceful shutdown.
-//! * [`metrics`] — counters + latency histograms (queue/execute/total).
+//!   batcher into the tile manager's block kernel with worker-lifetime
+//!   buffers (zero per-query allocations); per-request timing; graceful
+//!   shutdown.
+//! * [`metrics`] — counters + latency histograms (queue/execute/total),
+//!   broken down per requested k.
 //!
 //! Engines are pluggable ([`crate::am::AmEngine`]): digital (bit-exact),
 //! XLA (compiled Pallas artifact), analog (circuit-sim), or the baselines.
@@ -24,7 +29,7 @@ pub mod service;
 pub mod tiles;
 
 pub use batcher::Batcher;
-pub use metrics::{Metrics, MetricsSnapshot};
+pub use metrics::{Metrics, MetricsSnapshot, PerKSnapshot};
 pub use request::{RequestTiming, SearchResponse, SubmitError};
 pub use service::AmService;
-pub use tiles::TileManager;
+pub use tiles::{TileManager, TileScratch};

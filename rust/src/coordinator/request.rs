@@ -2,19 +2,30 @@
 
 use std::time::Duration;
 
+use crate::am::SearchResult;
+
 /// Why a submission was rejected.
-#[derive(Debug, Clone, PartialEq, Eq, thiserror::Error)]
+#[derive(Debug, Clone, PartialEq, Eq)]
 pub enum SubmitError {
     /// Bounded queue is full — backpressure; retry later.
-    #[error("queue full (backpressure)")]
     Busy,
     /// Service is shutting down.
-    #[error("service closed")]
     Closed,
-    /// Query malformed (e.g. wrong dimensionality).
-    #[error("bad query: {0}")]
+    /// Query malformed (e.g. wrong dimensionality or k = 0).
     BadQuery(String),
 }
+
+impl std::fmt::Display for SubmitError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            SubmitError::Busy => write!(f, "queue full (backpressure)"),
+            SubmitError::Closed => write!(f, "service closed"),
+            SubmitError::BadQuery(msg) => write!(f, "bad query: {msg}"),
+        }
+    }
+}
+
+impl std::error::Error for SubmitError {}
 
 /// Per-request timing, filled by the service.
 #[derive(Debug, Clone, Copy, Default)]
@@ -27,12 +38,15 @@ pub struct RequestTiming {
     pub batch_size: usize,
 }
 
-/// A completed search.
+/// A completed search: the ranked winners the request's `k` asked for.
 #[derive(Debug, Clone)]
 pub struct SearchResponse {
-    /// Global winning row index (across all tiles).
+    /// Global winning row index (across all tiles) — the head of `hits`.
     pub winner: usize,
-    /// Winning score in the engine metric.
+    /// Winning score in the engine metric — the head of `hits`.
     pub score: f64,
+    /// Ranked winners, best first: `min(k, rows)` entries with global row
+    /// indices (the iterated-WTA-with-inhibition readout of §3.5).
+    pub hits: Vec<SearchResult>,
     pub timing: RequestTiming,
 }

@@ -1,11 +1,19 @@
 //! The AM serving service: worker threads drain the dynamic batcher into
-//! the tile manager; responses flow back over per-request channels with
-//! queue/execute timing attached.
+//! the tile manager's batched top-k kernel; responses flow back over
+//! per-request channels with queue/execute timing attached.
+//!
+//! Each worker owns one [`QueryBlock`], one [`TileScratch`] and one
+//! [`BlockTopK`] for its whole lifetime, so the steady-state loop performs
+//! zero per-query heap allocations on the scoring side: queries are packed
+//! straight from the queued jobs into the reused block, scored through the
+//! tile×batch kernel, and only the per-response `hits` vector (the data
+//! handed back across the channel) is allocated.
 
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{mpsc, Arc};
 use std::time::{Duration, Instant};
 
+use crate::am::{BlockTopK, QueryBlock, SearchResult};
 use crate::config::CoordinatorConfig;
 use crate::util::BitVec;
 
@@ -16,6 +24,7 @@ use super::tiles::TileManager;
 
 struct Job {
     query: BitVec,
+    k: usize,
     reply: mpsc::SyncSender<SearchResponse>,
 }
 
@@ -24,6 +33,13 @@ struct Shared {
     tiles: TileManager,
     metrics: Metrics,
     running: AtomicBool,
+    /// Policy cap on requested k ([`CoordinatorConfig::max_k`]): the whole
+    /// batch is scored at its deepest k, so one unbounded request would tax
+    /// every co-batched query.
+    max_k_policy: usize,
+    /// Cached [`TileManager::max_k`] (immutable after start; avoids a
+    /// min-fold over every tile engine on each submission).
+    engine_max_k: usize,
 }
 
 /// Handle to a running AM service. Cloneable; dropping all clones does NOT
@@ -37,6 +53,7 @@ pub struct AmService {
 impl AmService {
     /// Start `cfg.workers` worker threads over a tile manager.
     pub fn start(cfg: &CoordinatorConfig, tiles: TileManager) -> AmService {
+        let engine_max_k = tiles.max_k();
         let shared = Arc::new(Shared {
             batcher: Batcher::new(
                 cfg.max_batch,
@@ -46,6 +63,8 @@ impl AmService {
             tiles,
             metrics: Metrics::new(),
             running: AtomicBool::new(true),
+            max_k_policy: cfg.max_k.max(1),
+            engine_max_k,
         });
         let workers = (0..cfg.workers.max(1))
             .map(|w| {
@@ -59,9 +78,20 @@ impl AmService {
         AmService { shared, workers: Arc::new(workers) }
     }
 
-    /// Submit a query; returns a receiver for the response.
-    /// Fails fast with `Busy` under backpressure.
+    /// Submit a single-winner query (k = 1); returns a receiver for the
+    /// response. Fails fast with `Busy` under backpressure.
     pub fn submit(&self, query: BitVec) -> Result<mpsc::Receiver<SearchResponse>, SubmitError> {
+        self.submit_topk(query, 1)
+    }
+
+    /// Submit a top-k query: the response's `hits` carries the
+    /// `min(k, rows)` ranked winners. Fails fast with `Busy` under
+    /// backpressure.
+    pub fn submit_topk(
+        &self,
+        query: BitVec,
+        k: usize,
+    ) -> Result<mpsc::Receiver<SearchResponse>, SubmitError> {
         if query.len() != self.shared.tiles.dims() {
             return Err(SubmitError::BadQuery(format!(
                 "query has {} bits, engine expects {}",
@@ -69,12 +99,32 @@ impl AmService {
                 self.shared.tiles.dims()
             )));
         }
+        if k == 0 {
+            return Err(SubmitError::BadQuery("k must be at least 1".to_string()));
+        }
+        // Policy gate: deep k taxes the whole batch (scored at the batch's
+        // deepest k), so requests beyond the configured cap are rejected.
+        if k.min(self.shared.tiles.rows()) > self.shared.max_k_policy {
+            return Err(SubmitError::BadQuery(format!(
+                "k={k} exceeds the service's max_k policy ({})",
+                self.shared.max_k_policy
+            )));
+        }
+        // Capability gate: a tile backed by a single-winner substrate (e.g.
+        // a fixed-argmax XLA artifact) cannot serve deep k; reject here
+        // rather than failing inside a worker mid-batch.
+        let max_k = self.shared.engine_max_k;
+        if k.min(self.shared.tiles.rows()) > max_k {
+            return Err(SubmitError::BadQuery(format!(
+                "k={k} exceeds the engine's top-k capability ({max_k})"
+            )));
+        }
         if !self.shared.running.load(Ordering::Acquire) {
             return Err(SubmitError::Closed);
         }
         let (reply, rx) = mpsc::sync_channel(1);
         self.shared.metrics.on_submit();
-        match self.shared.batcher.submit(Job { query, reply }) {
+        match self.shared.batcher.submit(Job { query, k, reply }) {
             Ok(()) => Ok(rx),
             Err(e) => {
                 if e == SubmitError::Busy {
@@ -91,15 +141,35 @@ impl AmService {
         rx.recv().map_err(|_| SubmitError::Closed)
     }
 
+    /// Convenience: submit a top-k query and block for the ranked response.
+    pub fn search_topk_blocking(
+        &self,
+        query: BitVec,
+        k: usize,
+    ) -> Result<SearchResponse, SubmitError> {
+        let rx = self.submit_topk(query, k)?;
+        rx.recv().map_err(|_| SubmitError::Closed)
+    }
+
     /// Submit with bounded retries under backpressure.
     pub fn search_with_retry(
         &self,
         query: BitVec,
         max_retries: usize,
     ) -> Result<SearchResponse, SubmitError> {
+        self.search_topk_with_retry(query, 1, max_retries)
+    }
+
+    /// Top-k submit with bounded retries under backpressure.
+    pub fn search_topk_with_retry(
+        &self,
+        query: BitVec,
+        k: usize,
+        max_retries: usize,
+    ) -> Result<SearchResponse, SubmitError> {
         let mut tries = 0;
         loop {
-            match self.search_blocking(query.clone()) {
+            match self.search_topk_blocking(query.clone(), k) {
                 Err(SubmitError::Busy) if tries < max_retries => {
                     tries += 1;
                     std::thread::sleep(Duration::from_micros(50 << tries.min(6)));
@@ -138,19 +208,37 @@ impl AmService {
 }
 
 fn worker_loop(shared: &Shared) {
+    // Worker-lifetime buffers: the whole steady-state loop reuses these.
+    let mut block = QueryBlock::new(shared.tiles.dims());
+    let mut scratch = shared.tiles.scratch();
+    let mut out = BlockTopK::new();
     while let Some(batch) = shared.batcher.next_batch() {
         let now = Instant::now();
         shared.metrics.on_batch(batch.len());
-        let queries: Vec<BitVec> = batch.iter().map(|p| p.item.query.clone()).collect();
-        let results = shared.tiles.search_batch(&queries);
+        // Mixed-k batches ride together: score once at the batch's deepest
+        // k, then truncate each response to its own request's k (the ranked
+        // prefix of a deeper selector is exactly the shallower result).
+        let mut max_k = 1usize;
+        block.clear();
+        for pending in &batch {
+            block.push(&pending.item.query);
+            max_k = max_k.max(pending.item.k);
+        }
+        shared.tiles.search_block(block.view(), max_k, &mut scratch, &mut out);
         let exec = now.elapsed();
-        for (pending, result) in batch.into_iter().zip(results) {
+        let batch_size = batch.len();
+        for (qi, pending) in batch.into_iter().enumerate() {
             let queued = now.duration_since(pending.enqueued);
-            shared.metrics.on_complete(queued, exec);
-            let timing = RequestTiming { queued, exec, batch_size: queries.len() };
+            let k = pending.item.k;
+            shared.metrics.on_complete(queued, exec, k);
+            let ranked = out.query(qi);
+            let hits: Vec<SearchResult> = ranked.iter().take(k).cloned().collect();
+            let head = hits.first().expect("tile manager has rows");
+            let timing = RequestTiming { queued, exec, batch_size };
             let _ = pending.item.reply.send(SearchResponse {
-                winner: result.winner,
-                score: result.score,
+                winner: head.winner,
+                score: head.score,
+                hits,
                 timing,
             });
         }
@@ -183,10 +271,113 @@ mod tests {
             let q = BitVec::random(64, 0.5, &mut r);
             let resp = svc.search_blocking(q.clone()).unwrap();
             assert_eq!(resp.winner, reference.search(&q).winner);
+            assert_eq!(resp.hits.len(), 1, "k defaults to 1");
+            assert_eq!(resp.hits[0].winner, resp.winner);
             assert!(resp.timing.batch_size >= 1);
         }
         let m = svc.metrics();
         assert_eq!(m.completed, 30);
+        svc.shutdown();
+    }
+
+    #[test]
+    fn topk_responses_are_ranked_and_match_reference() {
+        let cfg = CoordinatorConfig::default();
+        let (svc, words) = service(80, 64, &cfg);
+        let reference = DigitalExactEngine::new(words);
+        let mut r = rng(9);
+        for _ in 0..20 {
+            let q = BitVec::random(64, 0.5, &mut r);
+            let k = 1 + r.below(6);
+            let resp = svc.search_topk_blocking(q.clone(), k).unwrap();
+            let want = reference.search_topk(&q, k);
+            assert_eq!(resp.hits.len(), want.len());
+            for (a, b) in resp.hits.iter().zip(&want) {
+                assert_eq!(a.winner, b.winner);
+                assert_eq!(a.score, b.score);
+            }
+            assert_eq!(resp.winner, want[0].winner);
+        }
+        svc.shutdown();
+    }
+
+    #[test]
+    fn k_larger_than_store_clamps() {
+        let cfg = CoordinatorConfig::default();
+        let (svc, _) = service(10, 64, &cfg);
+        let resp = svc.search_topk_blocking(BitVec::zeros(64), 50).unwrap();
+        assert_eq!(resp.hits.len(), 10);
+        svc.shutdown();
+    }
+
+    #[test]
+    fn k_beyond_policy_rejected() {
+        let cfg = CoordinatorConfig { max_k: 4, ..CoordinatorConfig::default() };
+        let (svc, _) = service(100, 64, &cfg);
+        match svc.submit_topk(BitVec::zeros(64), 5) {
+            Err(SubmitError::BadQuery(msg)) => assert!(msg.contains("max_k"), "{msg}"),
+            other => panic!("expected BadQuery, got {other:?}"),
+        }
+        // At the cap it still serves.
+        let resp = svc.search_topk_blocking(BitVec::zeros(64), 4).unwrap();
+        assert_eq!(resp.hits.len(), 4);
+        svc.shutdown();
+    }
+
+    /// A tile backed by a single-winner substrate (max_k = 1, like the XLA
+    /// argmax artifact) must reject deep-k submissions up front instead of
+    /// panicking a worker mid-batch.
+    #[test]
+    fn capability_limited_tiles_reject_deep_k_at_submit() {
+        struct SingleWinner(DigitalExactEngine);
+        impl AmEngine for SingleWinner {
+            fn name(&self) -> &str {
+                "single-winner"
+            }
+            fn metric(&self) -> crate::am::Metric {
+                self.0.metric()
+            }
+            fn rows(&self) -> usize {
+                self.0.rows()
+            }
+            fn dims(&self) -> usize {
+                self.0.dims()
+            }
+            fn scores_into(&self, query: &BitVec, out: &mut Vec<f64>) {
+                self.0.scores_into(query, out)
+            }
+            fn max_k(&self) -> usize {
+                1
+            }
+        }
+        let mut r = rng(11);
+        let words: Vec<BitVec> = (0..20).map(|_| BitVec::random(32, 0.5, &mut r)).collect();
+        let tiles = TileManager::build(words, 8, |w| {
+            Ok::<Box<dyn AmEngine>, anyhow::Error>(Box::new(SingleWinner(
+                DigitalExactEngine::new(w),
+            )))
+        })
+        .unwrap();
+        assert_eq!(tiles.max_k(), 1);
+        let svc = AmService::start(&CoordinatorConfig::default(), tiles);
+        match svc.submit_topk(BitVec::zeros(32), 5) {
+            Err(SubmitError::BadQuery(msg)) => assert!(msg.contains("capability"), "{msg}"),
+            other => panic!("expected BadQuery, got {other:?}"),
+        }
+        // k = 1 still serves normally.
+        let resp = svc.search_blocking(BitVec::zeros(32)).unwrap();
+        assert_eq!(resp.hits.len(), 1);
+        svc.shutdown();
+    }
+
+    #[test]
+    fn zero_k_rejected_immediately() {
+        let cfg = CoordinatorConfig::default();
+        let (svc, _) = service(10, 64, &cfg);
+        match svc.submit_topk(BitVec::zeros(64), 0) {
+            Err(SubmitError::BadQuery(msg)) => assert!(msg.contains("k"), "{msg}"),
+            other => panic!("expected BadQuery, got {other:?}"),
+        }
         svc.shutdown();
     }
 
@@ -223,7 +414,8 @@ mod tests {
 
     #[test]
     fn concurrent_clients_all_served() {
-        let cfg = CoordinatorConfig { max_batch: 16, max_wait_us: 100, queue_depth: 1024, workers: 3 };
+        let cfg =
+            CoordinatorConfig { max_batch: 16, max_wait_us: 100, queue_depth: 1024, workers: 3, ..CoordinatorConfig::default() };
         let (svc, words) = service(200, 64, &cfg);
         let reference = DigitalExactEngine::new(words);
         let errors = std::sync::atomic::AtomicUsize::new(0);
@@ -257,10 +449,59 @@ mod tests {
         svc.shutdown();
     }
 
+    /// Mixed-k requests submitted concurrently ride shared batches; each
+    /// response must carry exactly its own k (prefix of the deeper ranking).
+    #[test]
+    fn concurrent_mixed_k_requests_each_get_their_k() {
+        let cfg =
+            CoordinatorConfig { max_batch: 32, max_wait_us: 200, queue_depth: 2048, workers: 3, ..CoordinatorConfig::default() };
+        let (svc, words) = service(120, 64, &cfg);
+        let reference = DigitalExactEngine::new(words);
+        let errors = std::sync::atomic::AtomicUsize::new(0);
+        std::thread::scope(|s| {
+            for t in 0..6u64 {
+                let svc = svc.clone();
+                let reference = &reference;
+                let errors = &errors;
+                s.spawn(move || {
+                    let mut r = rng(400 + t);
+                    let k = 1 + (t as usize % 4) * 3; // 1, 4, 7, 10 mixed
+                    for _ in 0..40 {
+                        let q = BitVec::random(64, 0.5, &mut r);
+                        match svc.search_topk_with_retry(q.clone(), k, 10) {
+                            Ok(resp) => {
+                                let want = reference.search_topk(&q, k);
+                                let ok = resp.hits.len() == want.len()
+                                    && resp
+                                        .hits
+                                        .iter()
+                                        .zip(&want)
+                                        .all(|(a, b)| a.winner == b.winner && a.score == b.score);
+                                if !ok {
+                                    errors.fetch_add(1, Ordering::Relaxed);
+                                }
+                            }
+                            Err(_) => {
+                                errors.fetch_add(1, Ordering::Relaxed);
+                            }
+                        }
+                    }
+                });
+            }
+        });
+        assert_eq!(errors.load(Ordering::Relaxed), 0, "every mixed-k response exact");
+        let m = svc.metrics();
+        assert_eq!(m.completed, 240);
+        assert!(!m.per_k.is_empty(), "per-k lanes recorded");
+        let lanes: usize = m.per_k.iter().map(|l| l.completed as usize).sum();
+        assert_eq!(lanes, 240, "every completion lands in a k lane");
+        svc.shutdown();
+    }
+
     #[test]
     fn backpressure_under_tiny_queue() {
         // One slow worker + depth 1: bursts must hit Busy, not hang.
-        let cfg = CoordinatorConfig { max_batch: 1, max_wait_us: 1, queue_depth: 1, workers: 1 };
+        let cfg = CoordinatorConfig { max_batch: 1, max_wait_us: 1, queue_depth: 1, workers: 1, ..CoordinatorConfig::default() };
         let (svc, _) = service(2000, 256, &cfg);
         let mut r = rng(9);
         let mut busy = 0;

@@ -3,11 +3,18 @@
 //! physical arrays (paper §3.5: per-array WTAs race locally; the global
 //! winner is the max of local winners, valid because cosine scores are
 //! absolute X²/Y values, not rank-only).
+//!
+//! Top-k composes the same way: each tile keeps its local best-k (iterated
+//! WTA with inhibition), and the global best-k is the k best of the union —
+//! [`TileManager::search_block`] runs the per-tile kernels over tile×batch
+//! work slots in parallel, then merges the bounded selector buffers. All
+//! slot buffers live in a caller-held [`TileScratch`] and are reused, so the
+//! steady-state serving loop performs zero per-query allocations.
 
 use anyhow::Result;
 
-use crate::am::{AmEngine, SearchResult};
-use crate::util::BitVec;
+use crate::am::{AmEngine, BlockTopK, QueriesRef, QueryBlock, SearchResult, SearchScratch};
+use crate::util::{par, BitVec};
 
 /// A sharded AM: `tiles[i]` stores rows [offsets[i], offsets[i+1]).
 pub struct TileManager {
@@ -15,6 +22,29 @@ pub struct TileManager {
     offsets: Vec<usize>,
     dims: usize,
     total_rows: usize,
+}
+
+/// One tile×batch work slot: a query range against one tile, with its own
+/// reusable engine scratch and selector buffer.
+struct TileSlot {
+    tile: usize,
+    q0: usize,
+    q1: usize,
+    scratch: SearchScratch,
+    out: BlockTopK,
+}
+
+impl TileSlot {
+    fn new() -> Self {
+        TileSlot { tile: 0, q0: 0, q1: 0, scratch: SearchScratch::new(), out: BlockTopK::new() }
+    }
+}
+
+/// Caller-held, reusable scratch for [`TileManager::search_block`]: the
+/// per-slot selector buffers and engine scratch. Hold one per worker thread
+/// and reuse it for the worker's whole lifetime.
+pub struct TileScratch {
+    slots: Vec<TileSlot>,
 }
 
 impl TileManager {
@@ -54,7 +84,123 @@ impl TileManager {
         self.dims
     }
 
-    /// Global NN search: per-tile local WTA, then a max over local winners.
+    /// Deepest per-query k every tile can serve (min over tile engines;
+    /// e.g. 1 when any tile is a fixed-argmax XLA artifact). The service
+    /// rejects deeper requests at submit time.
+    pub fn max_k(&self) -> usize {
+        self.tiles.iter().map(|t| t.max_k()).min().unwrap_or(usize::MAX)
+    }
+
+    /// Fresh (empty) scratch for [`TileManager::search_block`]; buffers grow
+    /// on first use and are reused thereafter.
+    pub fn scratch(&self) -> TileScratch {
+        TileScratch { slots: Vec::new() }
+    }
+
+    /// The hierarchical batched top-k kernel: every query of `queries`
+    /// against every tile, results in `out` (one ranked selector per query,
+    /// global row indices, k clamped to the store size).
+    ///
+    /// Work is decomposed into tile×batch slots filled in parallel (each
+    /// slot is one tile against one contiguous query segment), then the
+    /// bounded per-slot selectors are merged — the digital analogue of
+    /// per-array WTAs racing locally before the global race. Single-tile and
+    /// single-query calls take a serial fast path that feeds `out` directly
+    /// with no intermediate buffers.
+    pub fn search_block(
+        &self,
+        queries: QueriesRef<'_>,
+        k: usize,
+        scratch: &mut TileScratch,
+        out: &mut BlockTopK,
+    ) {
+        assert_eq!(queries.dims(), self.dims, "query dims mismatch");
+        let kk = k.min(self.total_rows);
+        out.reset(queries.len(), kk);
+        if queries.is_empty() || kk == 0 {
+            return;
+        }
+
+        let n_tiles = self.tiles.len();
+        let threads = par::default_threads();
+        if scratch.slots.is_empty() {
+            scratch.slots.push(TileSlot::new());
+        }
+
+        // Serial fast path: offer every tile's rows straight into the global
+        // selectors (TopK::offer *is* the merge); mirrors the seed's serial
+        // per-tile loop but allocation-free and k-deep.
+        if n_tiles == 1 || queries.len() == 1 || threads <= 1 {
+            let slot = &mut scratch.slots[0];
+            for (t, tile) in self.tiles.iter().enumerate() {
+                tile.search_block(queries, self.offsets[t], &mut slot.scratch, out.selectors_mut());
+            }
+            return;
+        }
+
+        // Parallel path: tile×batch slots. Segments along the batch axis
+        // keep every core busy even when tiles are few.
+        let segments = threads.div_ceil(n_tiles).clamp(1, queries.len());
+        let needed = n_tiles * segments;
+        while scratch.slots.len() < needed {
+            scratch.slots.push(TileSlot::new());
+        }
+        let mut i = 0;
+        for tile in 0..n_tiles {
+            for seg in 0..segments {
+                let slot = &mut scratch.slots[i];
+                i += 1;
+                slot.tile = tile;
+                slot.q0 = seg * queries.len() / segments;
+                slot.q1 = (seg + 1) * queries.len() / segments;
+                slot.out.reset(slot.q1 - slot.q0, kk);
+            }
+        }
+        let slots = &mut scratch.slots[..needed];
+        par::par_for_each_mut(slots, |_, slot| {
+            if slot.q0 < slot.q1 {
+                let sub = queries.slice(slot.q0, slot.q1);
+                self.tiles[slot.tile].search_block(
+                    sub,
+                    self.offsets[slot.tile],
+                    &mut slot.scratch,
+                    slot.out.selectors_mut(),
+                );
+            }
+        });
+        // Hierarchical merge: per-slot bounded selectors into the global
+        // per-query selectors (indices are already global via the offsets).
+        for slot in slots.iter() {
+            for (j, sel) in slot.out.selectors().iter().enumerate() {
+                out.selectors_mut()[slot.q0 + j].merge_from(sel);
+            }
+        }
+    }
+
+    /// Global top-k for one query (convenience; allocates its own buffers).
+    pub fn search_topk(&self, query: &BitVec, k: usize) -> Vec<SearchResult> {
+        assert_eq!(query.len(), self.dims, "query dims mismatch");
+        let mut block = QueryBlock::new(self.dims);
+        block.push(query);
+        let mut scratch = self.scratch();
+        let mut out = BlockTopK::new();
+        self.search_block(block.view(), k, &mut scratch, &mut out);
+        out.query(0).to_vec()
+    }
+
+    /// Batched global top-k (convenience; allocates its own buffers).
+    pub fn search_topk_batch(&self, queries: &[BitVec], k: usize) -> Vec<Vec<SearchResult>> {
+        let block = QueryBlock::pack(queries, self.dims);
+        let mut scratch = self.scratch();
+        let mut out = BlockTopK::new();
+        self.search_block(block.view(), k, &mut scratch, &mut out);
+        out.to_vecs()
+    }
+
+    /// Global NN search: per-tile fused WTA, then a max over local winners
+    /// — allocation-free, and bit-for-bit the k = 1 head of the block
+    /// kernel (same scores, same lowest-index tie-break; the property tests
+    /// assert the equivalence).
     pub fn search(&self, query: &BitVec) -> SearchResult {
         assert_eq!(query.len(), self.dims, "query dims mismatch");
         let mut best = SearchResult { winner: 0, score: f64::NEG_INFINITY };
@@ -67,29 +213,24 @@ impl TileManager {
         best
     }
 
-    /// Batched global search: per-tile batched execution, merged per query.
+    /// Batched global search: one block through the tile×batch kernel with
+    /// k = 1, per-tile merges running in parallel over reused buffers.
     pub fn search_batch(&self, queries: &[BitVec]) -> Vec<SearchResult> {
-        let mut best: Vec<SearchResult> = queries
+        let block = QueryBlock::pack(queries, self.dims);
+        let mut scratch = self.scratch();
+        let mut out = BlockTopK::new();
+        self.search_block(block.view(), 1, &mut scratch, &mut out);
+        out.selectors()
             .iter()
-            .map(|_| SearchResult { winner: 0, score: f64::NEG_INFINITY })
-            .collect();
-        for (t, tile) in self.tiles.iter().enumerate() {
-            let locals = tile.search_batch(queries);
-            for (b, local) in locals.into_iter().enumerate() {
-                if local.score > best[b].score {
-                    best[b] =
-                        SearchResult { winner: self.offsets[t] + local.winner, score: local.score };
-                }
-            }
-        }
-        best
+            .map(|sel| sel.best().expect("tile manager has rows").clone())
+            .collect()
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::am::DigitalExactEngine;
+    use crate::am::{AmEngine, DigitalExactEngine, HammingEngine};
     use crate::util::{prop, rng, BitVec};
 
     fn digital_factory(words: Vec<BitVec>) -> Result<Box<dyn AmEngine>> {
@@ -140,6 +281,60 @@ mod tests {
         });
     }
 
+    /// End-to-end top-k invariant: tiled hierarchical top-k equals flat
+    /// top-k for every k, engine, and tile capacity; k = 1 reproduces the
+    /// flat single-winner search bit-for-bit.
+    #[test]
+    fn tiled_topk_equals_flat_topk_property() {
+        prop::check("tiled topk == flat topk", 30, 6, |r| {
+            let rows = 2 + r.below(60);
+            let dims = 16 + 8 * r.below(8);
+            let cap = 1 + r.below(rows);
+            let k = 1 + r.below(8);
+            let hamming = r.bool(0.5);
+            let words: Vec<BitVec> =
+                (0..rows).map(|_| BitVec::random(dims, 0.2 + 0.6 * r.f64(), r)).collect();
+            let factory = |w: Vec<BitVec>| -> Result<Box<dyn AmEngine>> {
+                if hamming {
+                    Ok(Box::new(HammingEngine::new(w)))
+                } else {
+                    Ok(Box::new(DigitalExactEngine::new(w)))
+                }
+            };
+            let flat = factory(words.clone()).unwrap();
+            let tm = TileManager::build(words, cap, factory).map_err(|e| e.to_string())?;
+            let queries: Vec<BitVec> =
+                (0..3 + r.below(6)).map(|_| BitVec::random(dims, 0.5, r)).collect();
+            let tiled = tm.search_topk_batch(&queries, k);
+            for (q, got) in queries.iter().zip(&tiled) {
+                let want = flat.search_topk(q, k);
+                crate::prop_assert!(
+                    got.len() == want.len(),
+                    "len {} vs {} (k {k}, cap {cap})",
+                    got.len(),
+                    want.len()
+                );
+                for (a, b) in got.iter().zip(&want) {
+                    crate::prop_assert!(
+                        a.winner == b.winner && a.score == b.score,
+                        "tiled ({}, {}) vs flat ({}, {}) [k {k}, cap {cap}]",
+                        a.winner,
+                        a.score,
+                        b.winner,
+                        b.score
+                    );
+                }
+                // k = 1 head must be bit-for-bit the flat single winner.
+                let head = flat.search(q);
+                crate::prop_assert!(
+                    got[0].winner == head.winner && got[0].score == head.score,
+                    "k=1 head diverges from flat search"
+                );
+            }
+            Ok(())
+        });
+    }
+
     #[test]
     fn batch_matches_serial() {
         let mut r = rng(3);
@@ -152,6 +347,43 @@ mod tests {
             assert_eq!(s.winner, b.winner);
             assert_eq!(s.score, b.score);
         }
+    }
+
+    #[test]
+    fn block_scratch_reuse_across_changing_batch_shapes() {
+        let mut r = rng(7);
+        let words: Vec<BitVec> = (0..80).map(|_| BitVec::random(64, 0.5, &mut r)).collect();
+        let tm = TileManager::build(words, 24, digital_factory).unwrap();
+        let mut block = QueryBlock::new(64);
+        let mut scratch = tm.scratch();
+        let mut out = BlockTopK::new();
+        for round in 0..6 {
+            let n = 1 + (round * 5) % 13;
+            let queries: Vec<BitVec> = (0..n).map(|_| BitVec::random(64, 0.5, &mut r)).collect();
+            block.repack(&queries);
+            let k = 1 + round % 4;
+            tm.search_block(block.view(), k, &mut scratch, &mut out);
+            let want = tm.search_topk_batch(&queries, k);
+            assert_eq!(out.queries(), queries.len());
+            for (qi, w) in want.iter().enumerate() {
+                let got = out.query(qi);
+                assert_eq!(got.len(), w.len(), "round {round} query {qi}");
+                for (a, b) in got.iter().zip(w) {
+                    assert_eq!(a.winner, b.winner);
+                    assert_eq!(a.score, b.score);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn topk_k_clamps_to_store_size() {
+        let mut r = rng(8);
+        let words: Vec<BitVec> = (0..7).map(|_| BitVec::random(32, 0.5, &mut r)).collect();
+        let tm = TileManager::build(words, 3, digital_factory).unwrap();
+        let q = BitVec::random(32, 0.5, &mut r);
+        assert_eq!(tm.search_topk(&q, 100).len(), 7);
+        assert!(tm.search_topk(&q, 0).is_empty());
     }
 
     #[test]

@@ -25,6 +25,11 @@ impl EvalReport {
 
 /// Train an HDC model on `ds` and evaluate test accuracy with the engine
 /// built by `make_engine` over the class hypervectors.
+///
+/// Inference is batched: the whole test set is encoded up front and handed
+/// to the engine in one `search_batch` dispatch (parallel fused searches
+/// for the packed-store engines) instead of one engine call per sample —
+/// the batch shape the serving coordinator drains.
 pub fn evaluate_accuracy(
     ds: &Dataset,
     train: TrainConfig,
@@ -32,13 +37,10 @@ pub fn evaluate_accuracy(
 ) -> EvalReport {
     let model = HdcModel::train(ds, train);
     let engine = make_engine(model.class_hypervectors());
-    let mut correct = 0;
-    for (x, &y) in ds.test_x.iter().zip(&ds.test_y) {
-        let h = model.encoder.encode(x);
-        if engine.search(&h).winner == y {
-            correct += 1;
-        }
-    }
+    let encoded: Vec<BitVec> = ds.test_x.iter().map(|x| model.encoder.encode(x)).collect();
+    let results = engine.search_batch(&encoded);
+    let correct =
+        results.iter().zip(&ds.test_y).filter(|(res, &y)| res.winner == y).count();
     EvalReport {
         dataset: ds.name.clone(),
         engine: engine.name().to_string(),
@@ -46,6 +48,28 @@ pub fn evaluate_accuracy(
         correct,
         total: ds.test_len(),
     }
+}
+
+/// Top-k recall: fraction of test samples whose true class appears among
+/// the engine's k best rows (k = 1 is plain accuracy). Runs through the
+/// batched top-k kernel end to end — the application-layer consumer of the
+/// iterated-WTA readout.
+pub fn evaluate_topk_recall(
+    ds: &Dataset,
+    train: TrainConfig,
+    k: usize,
+    make_engine: impl Fn(Vec<BitVec>) -> Box<dyn AmEngine>,
+) -> f64 {
+    let model = HdcModel::train(ds, train);
+    let engine = make_engine(model.class_hypervectors());
+    let encoded: Vec<BitVec> = ds.test_x.iter().map(|x| model.encoder.encode(x)).collect();
+    let ranked = engine.search_topk_batch(&encoded, k);
+    let hits = ranked
+        .iter()
+        .zip(&ds.test_y)
+        .filter(|(hits, &y)| hits.iter().any(|h| h.winner == y))
+        .count();
+    hits as f64 / ds.test_len().max(1) as f64
 }
 
 /// Convenience engine constructors for the metric comparison figures.
@@ -124,12 +148,11 @@ pub fn few_shot_accuracy(
             }
         }
         let engine = make_engine(protos);
-        for (slot, h) in query_set {
-            if engine.search(&h).winner == slot {
-                correct += 1;
-            }
-            total += 1;
-        }
+        // One batched dispatch per episode instead of per-query searches.
+        let (slots, queries): (Vec<usize>, Vec<BitVec>) = query_set.into_iter().unzip();
+        let results = engine.search_batch(&queries);
+        correct += results.iter().zip(&slots).filter(|(res, &slot)| res.winner == slot).count();
+        total += slots.len();
     }
     correct as f64 / total.max(1) as f64
 }
@@ -173,6 +196,17 @@ mod tests {
         assert!(rep.correct <= rep.total);
         assert_eq!(rep.dims, 256);
         assert_eq!(rep.dataset, "ISOLET");
+    }
+
+    #[test]
+    fn topk_recall_dominates_top1_accuracy() {
+        let d = ds();
+        let cfg = TrainConfig { dims: 512, epochs: 1, seed: 12, ..Default::default() };
+        let top1 = evaluate_topk_recall(&d, cfg, 1, cosine_engine);
+        let top3 = evaluate_topk_recall(&d, cfg, 3, cosine_engine);
+        let acc = evaluate_accuracy(&d, cfg, cosine_engine).accuracy();
+        assert!((top1 - acc).abs() < 1e-12, "top-1 recall {top1} == accuracy {acc}");
+        assert!(top3 >= top1, "top-3 {top3} must dominate top-1 {top1}");
     }
 
     #[test]

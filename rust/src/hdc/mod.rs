@@ -14,6 +14,9 @@ mod trainer;
 
 pub use dataset::{Dataset, DatasetSpec, SyntheticParams};
 pub use encoder::RandomProjectionEncoder;
-pub use eval::{approx_engine, cosine_engine, evaluate_accuracy, few_shot_accuracy, hamming_engine, EvalReport, FewShotSpec};
+pub use eval::{
+    approx_engine, cosine_engine, evaluate_accuracy, evaluate_topk_recall, few_shot_accuracy,
+    hamming_engine, EvalReport, FewShotSpec,
+};
 pub use level::LevelEncoder;
 pub use trainer::{AnyEncoder, EncoderKind, HdcModel, TrainConfig};

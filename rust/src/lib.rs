@@ -13,6 +13,8 @@
 //! * [`am`] — array-level associative-memory engines: the analog COSIME engine
 //!   (device + circuit backed), a bit-exact digital engine, and the
 //!   Hamming / approximate-cosine baseline AMs the paper compares against.
+//!   [`am::kernel`] is the batched, allocation-free search-kernel interface
+//!   (query blocks + bounded top-k selectors) every layer above serves with.
 //! * [`energy`] — energy / latency / area accounting calibrated to Table 1.
 //! * [`baselines`] — GPU cost model (GTX 1080) and published AM comparison rows.
 //! * [`hdc`] — hyperdimensional-computing application layer (paper §4.2):
@@ -23,8 +25,9 @@
 //!   (`artifacts/*.hlo.txt`) and runs them from the Rust hot path.
 //! * [`repro`] — regeneration harnesses for every table and figure in the paper.
 //!
-//! See `DESIGN.md` for the experiment index and the substitution ledger, and
-//! `EXPERIMENTS.md` for measured-vs-paper results.
+//! See `rust/README.md` for the kernel API walkthrough, the cargo feature
+//! flags (notably the off-by-default `xla` runtime backend), and the
+//! experiment index.
 
 pub mod am;
 pub mod baselines;

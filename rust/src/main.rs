@@ -2,7 +2,7 @@
 //!
 //! Subcommands:
 //!   fig1 | fig2 | fig4a | fig4b | fig6 | fig7 | fig8 | fig9 | table1 | table2
-//!       regenerate the corresponding paper table/figure (see DESIGN.md §5)
+//!       regenerate the corresponding paper table/figure (see rust/README.md)
 //!   all       run every regeneration (writes results/ + prints everything)
 //!   search    one-off NN search over random or worst-case stored words
 //!   serve     start the AM serving engine and drive a synthetic workload
@@ -88,7 +88,7 @@ fn print_usage() {
          repro:  fig1 fig2 fig4a fig4b fig6 fig7 fig8 fig9 table1 table2 all\n\
          system: search serve hdc artifacts\n\n\
          flags:  --results DIR  --seed N  --subsample F  --trials N\n\
-                 --engine digital|analog|xla  --rows N --dims N --queries N"
+                 --engine digital|analog|xla  --rows N --dims N --queries N --k N"
     );
 }
 
@@ -151,22 +151,25 @@ fn cmd_search(args: &Args) -> Result<()> {
     let rows = args.get_usize("rows", 256);
     let dims = args.get_usize("dims", 1024);
     let seed = args.get_u64("seed", 1);
+    let k = args.get_usize("k", 1);
     let engine_kind = args.get_str("engine", "digital");
     let mut r = rng(seed);
     let words: Vec<BitVec> = (0..rows).map(|_| BitVec::random(dims, 0.5, &mut r)).collect();
     let query = words[rows / 2].clone();
     let engine = build_engine(engine_kind, words, seed)?;
     let t0 = Instant::now();
-    let res = engine.search(&query);
+    let ranked = engine.search_topk(&query, k.max(1));
     let dt = t0.elapsed();
     println!(
-        "engine={} rows={rows} dims={dims} -> winner={} score={:.4} ({:.1} µs wall)",
+        "engine={} rows={rows} dims={dims} k={} ({:.1} µs wall)",
         engine.name(),
-        res.winner,
-        res.score,
+        ranked.len(),
         dt.as_secs_f64() * 1e6
     );
-    assert_eq!(res.winner, rows / 2, "self-query must match itself");
+    for (rank, res) in ranked.iter().enumerate() {
+        println!("  #{:<3} winner={} score={:.4}", rank + 1, res.winner, res.score);
+    }
+    assert_eq!(ranked[0].winner, rows / 2, "self-query must match itself");
     println!("self-query sanity: OK");
     Ok(())
 }
@@ -239,14 +242,12 @@ fn cmd_hdc(args: &Args) -> Result<()> {
     let model = HdcModel::train(&ds, TrainConfig { dims, epochs: 2, seed: 3, ..Default::default() });
     println!("trained in {:.2} s", t0.elapsed().as_secs_f64());
     let engine = build_engine(args.get_str("engine", "digital"), model.class_hypervectors(), 4)?;
-    let mut correct = 0;
+    // Batched inference through the block kernel (the serving shape).
+    let encoded: Vec<BitVec> = ds.test_x.iter().map(|x| model.encoder.encode(x)).collect();
     let t1 = Instant::now();
-    for (x, &y) in ds.test_x.iter().zip(&ds.test_y) {
-        if engine.search(&model.encoder.encode(x)).winner == y {
-            correct += 1;
-        }
-    }
+    let results = engine.search_batch(&encoded);
     let dt = t1.elapsed();
+    let correct = results.iter().zip(&ds.test_y).filter(|(res, &y)| res.winner == y).count();
     println!(
         "accuracy: {:.1} % ({}/{}) | inference {:.1} µs/query ({} engine)",
         100.0 * correct as f64 / ds.test_len() as f64,

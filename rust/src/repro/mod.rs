@@ -1,7 +1,7 @@
 //! Regeneration harnesses for every table and figure in the paper's
-//! evaluation (see DESIGN.md §5 for the experiment index). Each submodule
-//! prints the paper-style rows/series to stdout and dumps CSV/JSON under
-//! `results/` for plotting; EXPERIMENTS.md records paper-vs-measured.
+//! evaluation (see `rust/README.md` for the experiment index). Each
+//! submodule prints the paper-style rows/series to stdout and dumps
+//! CSV/JSON under `results/` for plotting.
 
 pub mod fig1;
 pub mod fig2;

@@ -9,7 +9,7 @@
 
 use anyhow::{anyhow, Result};
 
-use crate::am::{AmEngine, Metric, SearchResult};
+use crate::am::{AmEngine, Metric, QueriesRef, SearchResult, SearchScratch, TopK};
 use crate::util::BitVec;
 
 use super::service::RuntimeHandle;
@@ -69,7 +69,7 @@ impl XlaAmEngine {
         self.batch
     }
 
-    fn run_batch(&self, queries: &[&BitVec]) -> Result<Vec<SearchResult>> {
+    fn run_batch(&self, queries: &[BitVec]) -> Result<Vec<SearchResult>> {
         assert!(!queries.is_empty() && queries.len() <= self.batch);
         let mut q = vec![0.0f32; self.batch * self.dims];
         for (b, query) in queries.iter().enumerate() {
@@ -115,26 +115,69 @@ impl AmEngine for XlaAmEngine {
         self.dims
     }
 
-    fn scores(&self, query: &BitVec) -> Vec<f64> {
+    fn scores_into(&self, query: &BitVec, out: &mut Vec<f64>) {
         // The search artifact returns only the argmax; full score vectors go
         // through the digital engine. Provide the winner as a one-hot score.
         let r = self.search(query);
-        let mut s = vec![0.0; self.rows];
-        s[r.winner] = r.score;
-        s
+        out.clear();
+        out.resize(self.rows, 0.0);
+        out[r.winner] = r.score;
+    }
+
+    /// The lowered search artifact reads out only the single winner.
+    fn max_k(&self) -> usize {
+        1
     }
 
     fn search(&self, query: &BitVec) -> SearchResult {
-        self.run_batch(&[query]).expect("xla execute")[0].clone()
+        self.run_batch(std::slice::from_ref(query)).expect("xla execute")[0].clone()
     }
 
     fn search_batch(&self, queries: &[BitVec]) -> Vec<SearchResult> {
         let mut out = Vec::with_capacity(queries.len());
         for chunk in queries.chunks(self.batch) {
-            let refs: Vec<&BitVec> = chunk.iter().collect();
-            out.extend(self.run_batch(&refs).expect("xla execute"));
+            out.extend(self.run_batch(chunk).expect("xla execute"));
         }
         out
+    }
+
+    /// Block kernel over the fixed-batch artifact. The lowered search
+    /// artifact returns only the per-query argmax (hardware k = 1), so this
+    /// engine can only serve single-winner selectors — deeper k would
+    /// silently drop same-tile runners-up, so it is rejected loudly;
+    /// deployments needing k > 1 per tile route those tiles through a
+    /// digital engine.
+    fn search_block(
+        &self,
+        queries: QueriesRef<'_>,
+        base: usize,
+        _scratch: &mut SearchScratch,
+        out: &mut [TopK],
+    ) {
+        crate::am::kernel::check_block(queries, out, self.dims);
+        assert!(
+            out.iter().all(|sel| sel.k() <= 1),
+            "{}: the search artifact returns only the argmax; k > 1 requires a digital engine",
+            self.name
+        );
+        // Staging BitVecs are reused across chunks (assign_lanes rewrites
+        // in place), so only the first chunk allocates their buffers.
+        let mut owned: Vec<BitVec> = Vec::with_capacity(self.batch);
+        let mut qi = 0;
+        while qi < queries.len() {
+            let take = self.batch.min(queries.len() - qi);
+            while owned.len() < take {
+                owned.push(BitVec::zeros(0));
+            }
+            for (j, q) in owned[..take].iter_mut().enumerate() {
+                q.assign_lanes(queries.dims(), queries.lanes_of(qi + j));
+            }
+            let results = self.run_batch(&owned[..take]).expect("xla execute");
+            for (j, res) in results.into_iter().enumerate() {
+                out[qi + j].offer(base + res.winner, res.score);
+            }
+            qi += take;
+        }
     }
 }
 

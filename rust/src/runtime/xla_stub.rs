@@ -1,0 +1,111 @@
+//! Offline stand-in for the `xla` PJRT crate, compiled when the `xla` cargo
+//! feature is disabled (the default). It mirrors exactly the API surface the
+//! runtime uses so `runtime/` compiles unchanged; every operation that would
+//! touch a real PJRT client fails with a clear "feature disabled" error.
+//!
+//! Manifest loading and signature validation still work (they are pure
+//! Rust), so a `Runtime` can be constructed over an artifact directory and
+//! rejects bad calls exactly as the real backend would — only *execution*
+//! (HLO parse → compile → run) is stubbed out. Artifact-gated tests observe
+//! an `Err` from `load`/`run` and skip, matching the no-artifacts case.
+
+use anyhow::{anyhow, Result};
+
+const DISABLED: &str = "cosime was built without the `xla` cargo feature; \
+                        rebuild with `--features xla` (requires the xla PJRT \
+                        crate as a dependency) to execute compiled artifacts";
+
+fn disabled<T>() -> Result<T> {
+    Err(anyhow!(DISABLED))
+}
+
+/// Stub PJRT client: constructible so manifest-only flows work; any
+/// compile/execute attempt errors.
+pub struct PjRtClient;
+
+pub struct PjRtLoadedExecutable;
+
+pub struct PjRtBuffer;
+
+#[derive(Clone)]
+pub struct Literal;
+
+pub struct HloModuleProto;
+
+pub struct XlaComputation;
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        Ok(PjRtClient)
+    }
+
+    pub fn platform_name(&self) -> String {
+        "stub (xla feature disabled)".to_string()
+    }
+
+    pub fn compile(&self, _computation: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        disabled()
+    }
+}
+
+impl PjRtLoadedExecutable {
+    pub fn execute<T>(&self, _args: &[Literal]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        disabled()
+    }
+}
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        disabled()
+    }
+}
+
+impl Literal {
+    pub fn vec1<T: Copy>(_values: &[T]) -> Literal {
+        Literal
+    }
+
+    pub fn reshape(&self, _dims: &[i64]) -> Result<Literal> {
+        disabled()
+    }
+
+    pub fn to_vec<T>(&self) -> Result<Vec<T>> {
+        disabled()
+    }
+
+    pub fn to_tuple(&self) -> Result<Vec<Literal>> {
+        disabled()
+    }
+}
+
+impl HloModuleProto {
+    pub fn from_text_file<P: AsRef<std::path::Path>>(_path: P) -> Result<HloModuleProto> {
+        disabled()
+    }
+}
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn client_constructs_but_cannot_compile() {
+        let client = PjRtClient::cpu().expect("stub client");
+        assert!(client.platform_name().contains("stub"));
+        let comp = XlaComputation;
+        let err = client.compile(&comp).unwrap_err();
+        assert!(format!("{err}").contains("xla"), "{err}");
+    }
+
+    #[test]
+    fn hlo_parse_reports_disabled_feature() {
+        let err = HloModuleProto::from_text_file("/tmp/whatever.hlo.txt").unwrap_err();
+        assert!(format!("{err}").contains("--features xla"), "{err}");
+    }
+}

@@ -73,6 +73,24 @@ impl BitVec {
         &self.lanes
     }
 
+    /// Rewrite this vector in place to `len` bits copied from `lanes` (as
+    /// produced by [`BitVec::lanes`]: LSB-first, trailing bits zero),
+    /// reusing the existing allocation — the staging step of the
+    /// allocation-free search kernel.
+    pub fn assign_lanes(&mut self, len: usize, lanes: &[u64]) {
+        assert_eq!(lanes.len(), len.div_ceil(64), "lane count mismatch for {len} bits");
+        // Every score/popcount routine relies on the trailing bits being
+        // zero; a caller handing in dirty lanes would get silently wrong
+        // winners, so catch it in debug builds.
+        debug_assert!(
+            len % 64 == 0 || lanes[lanes.len() - 1] >> (len % 64) == 0,
+            "bits beyond len={len} must be zero"
+        );
+        self.len = len;
+        self.lanes.clear();
+        self.lanes.extend_from_slice(lanes);
+    }
+
     /// Get bit `i`.
     pub fn get(&self, i: usize) -> bool {
         assert!(i < self.len, "bit index {i} out of range {}", self.len);
@@ -218,6 +236,26 @@ mod tests {
         let a = BitVec::zeros(8);
         let b = BitVec::zeros(9);
         let _ = a.dot(&b);
+    }
+
+    #[test]
+    fn assign_lanes_reuses_storage_and_roundtrips() {
+        let mut r = crate::util::rng(9);
+        let src = BitVec::random(130, 0.5, &mut r);
+        let mut dst = BitVec::zeros(0);
+        dst.assign_lanes(src.len(), src.lanes());
+        assert_eq!(dst, src);
+        // Shrinking reassignment must also roundtrip.
+        let small = BitVec::from_bits(&[1, 0, 1]);
+        dst.assign_lanes(3, small.lanes());
+        assert_eq!(dst, small);
+    }
+
+    #[test]
+    #[should_panic(expected = "lane count mismatch")]
+    fn assign_lanes_rejects_bad_lane_count() {
+        let mut v = BitVec::zeros(0);
+        v.assign_lanes(70, &[0u64]);
     }
 
     #[test]

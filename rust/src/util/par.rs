@@ -62,7 +62,49 @@ where
     par_map(&idx, |&i| f(i))
 }
 
-fn default_threads() -> usize {
+/// Parallel in-place for-each over a mutable slice: `f(index, &mut item)`
+/// runs once per item, split into contiguous chunks across up to the default
+/// thread count. Used by the tile manager to fill per-slot top-k buffers
+/// across tile×batch work items without collecting intermediate vectors.
+pub fn par_for_each_mut<T, F>(items: &mut [T], f: F)
+where
+    T: Send,
+    F: Fn(usize, &mut T) + Sync,
+{
+    let n = items.len();
+    let threads = default_threads().max(1).min(n.max(1));
+    if threads <= 1 || n < 2 {
+        for (i, item) in items.iter_mut().enumerate() {
+            f(i, item);
+        }
+        return;
+    }
+    let chunk = n.div_ceil(threads);
+    let fref = &f;
+    std::thread::scope(|s| {
+        let mut rest = items;
+        let mut start = 0usize;
+        let mut handles = Vec::new();
+        while !rest.is_empty() {
+            let take = chunk.min(rest.len());
+            let (head, tail) = rest.split_at_mut(take);
+            rest = tail;
+            let base = start;
+            handles.push(s.spawn(move || {
+                for (off, item) in head.iter_mut().enumerate() {
+                    fref(base + off, item);
+                }
+            }));
+            start += take;
+        }
+        for h in handles {
+            h.join().expect("par_for_each_mut worker panicked");
+        }
+    });
+}
+
+/// Default worker count: the machine's available parallelism.
+pub fn default_threads() -> usize {
     std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4)
 }
 
@@ -98,5 +140,24 @@ mod tests {
     #[test]
     fn idx_variant() {
         assert_eq!(par_map_idx(4, |i| i * i), vec![0, 1, 4, 9]);
+    }
+
+    #[test]
+    fn for_each_mut_touches_every_item_once() {
+        let mut xs: Vec<u64> = (0..1000).collect();
+        par_for_each_mut(&mut xs, |i, x| {
+            assert_eq!(*x, i as u64, "index matches item");
+            *x *= 3;
+        });
+        assert!(xs.iter().enumerate().all(|(i, &x)| x == 3 * i as u64));
+    }
+
+    #[test]
+    fn for_each_mut_handles_empty_and_single() {
+        let mut none: Vec<u8> = vec![];
+        par_for_each_mut(&mut none, |_, _| {});
+        let mut one = vec![7u8];
+        par_for_each_mut(&mut one, |_, x| *x += 1);
+        assert_eq!(one, vec![8]);
     }
 }

@@ -81,6 +81,97 @@ fn coordinator_serves_through_xla_tiles() {
 }
 
 // ---------------------------------------------------------------------------
+// Batched top-k end to end: engine kernel → tile merge → coordinator
+// ---------------------------------------------------------------------------
+
+#[test]
+fn topk_flows_end_to_end_through_tiles_and_service() {
+    let words = random_words(150, 128, 20);
+    let reference = DigitalExactEngine::new(words.clone());
+    let tiles = TileManager::build(words, 32, |w| {
+        Ok(Box::new(DigitalExactEngine::new(w)) as Box<dyn AmEngine>)
+    })
+    .expect("tiles");
+    assert!(tiles.tile_count() > 1, "must actually exercise the hierarchical merge");
+
+    let cfg = CosimeConfig::default();
+    let svc = AmService::start(&cfg.coordinator, tiles);
+    let mut r = rng(21);
+    for _ in 0..25 {
+        let q = BitVec::random(128, 0.5, &mut r);
+        let k = 1 + r.below(12);
+        let resp = svc.search_topk_with_retry(q.clone(), k, 10).expect("serve");
+        let want = reference.search_topk(&q, k);
+        assert_eq!(resp.hits.len(), want.len(), "k={k}");
+        for (a, b) in resp.hits.iter().zip(&want) {
+            assert_eq!(a.winner, b.winner, "k={k}");
+            assert_eq!(a.score, b.score, "k={k}");
+        }
+        assert_eq!(resp.winner, want[0].winner, "head == flat argmax");
+    }
+    let m = svc.metrics();
+    assert_eq!(m.completed, 25);
+    assert!(!m.per_k.is_empty(), "per-k latency lanes populated");
+    svc.shutdown();
+}
+
+/// Mixed-k requests submitted concurrently from many clients: every
+/// response carries exactly its own k and matches the flat reference.
+#[test]
+fn coordinator_serves_concurrent_mixed_k_requests() {
+    let mut cfg = CosimeConfig::default();
+    cfg.coordinator.max_batch = 16;
+    cfg.coordinator.max_wait_us = 200;
+    cfg.coordinator.workers = 3;
+    let words = random_words(200, 64, 22);
+    let reference = DigitalExactEngine::new(words.clone());
+    let tiles = TileManager::build(words, 48, |w| {
+        Ok(Box::new(DigitalExactEngine::new(w)) as Box<dyn AmEngine>)
+    })
+    .expect("tiles");
+    let svc = AmService::start(&cfg.coordinator, tiles);
+
+    let errors = std::sync::atomic::AtomicUsize::new(0);
+    std::thread::scope(|s| {
+        for t in 0..8u64 {
+            let svc = svc.clone();
+            let reference = &reference;
+            let errors = &errors;
+            s.spawn(move || {
+                let mut r = rng(600 + t);
+                for j in 0..30usize {
+                    let q = BitVec::random(64, 0.5, &mut r);
+                    let k = [1usize, 3, 9, 50][(t as usize + j) % 4];
+                    match svc.search_topk_with_retry(q.clone(), k, 20) {
+                        Ok(resp) => {
+                            let want = reference.search_topk(&q, k);
+                            let ok = resp.hits.len() == want.len()
+                                && resp
+                                    .hits
+                                    .iter()
+                                    .zip(&want)
+                                    .all(|(a, b)| a.winner == b.winner && a.score == b.score);
+                            if !ok {
+                                errors.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                            }
+                        }
+                        Err(_) => {
+                            errors.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                        }
+                    }
+                }
+            });
+        }
+    });
+    assert_eq!(errors.load(std::sync::atomic::Ordering::Relaxed), 0);
+    let m = svc.metrics();
+    assert_eq!(m.completed, 240);
+    let per_k_total: u64 = m.per_k.iter().map(|l| l.completed).sum();
+    assert_eq!(per_k_total, 240, "per-k lanes account for every request");
+    svc.shutdown();
+}
+
+// ---------------------------------------------------------------------------
 // HDC end to end on each engine
 // ---------------------------------------------------------------------------
 
