@@ -3,11 +3,19 @@
 //! and per k), batching efficiency and backpressure behavior — the L3
 //! serving story around the COSIME tiles.
 //!
-//! Run: `cargo run --release --example serve_am [rows] [queries]`
+//! The store is built through the mutable-store path: every word is
+//! programmed with the ±4 V write-verify loop ([`cosime::am::store`]),
+//! snapshotted to disk and loaded back, so the server *warm-starts* from a
+//! persisted AM. While clients search, a writer thread applies live
+//! class-vector updates through the admin plane and verifies each one is
+//! immediately servable — the write→serve loop closed under load.
+//!
+//! Run: `cargo run --release --example serve_am [rows] [queries] [snapshot]`
 
+use cosime::am::store::AmStore;
 use cosime::am::{AmEngine, DigitalExactEngine};
 use cosime::config::CosimeConfig;
-use cosime::coordinator::{AmService, SubmitError, TileManager};
+use cosime::coordinator::{AdminOp, AmService, SubmitError, TileManager};
 use cosime::util::{rng, BitVec};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::time::Instant;
@@ -16,26 +24,56 @@ fn main() -> anyhow::Result<()> {
     let mut args = std::env::args().skip(1);
     let rows: usize = args.next().and_then(|s| s.parse().ok()).unwrap_or(4096);
     let queries: usize = args.next().and_then(|s| s.parse().ok()).unwrap_or(20_000);
-    let dims = 1024;
+    let snapshot_arg = args.next();
+    let build_dims = 1024; // used only when a fresh snapshot has to be built
 
     let mut cfg = CosimeConfig::default();
     cfg.coordinator.workers = 4;
     cfg.coordinator.max_batch = 32;
 
-    let mut r = rng(11);
-    let words: Vec<BitVec> = (0..rows).map(|_| BitVec::random(dims, 0.5, &mut r)).collect();
-    let tiles = TileManager::build(words, cfg.array.rows, |w| {
+    // ---- build + persist the store (write-verify accounted) ------------
+    let snap_path = match snapshot_arg {
+        Some(p) => std::path::PathBuf::from(p),
+        None => {
+            let dir = std::env::temp_dir().join(format!("cosime-serve-{}", std::process::id()));
+            std::fs::create_dir_all(&dir)?;
+            dir.join("am.json")
+        }
+    };
+    if !snap_path.exists() {
+        let mut r = rng(11);
+        let mut store = AmStore::new(&cfg, build_dims);
+        let t0 = Instant::now();
+        for i in 0..rows {
+            let w = BitVec::random(build_dims, 0.5, &mut r);
+            store.insert(&format!("row-{i}"), &w)?;
+        }
+        store.save(&snap_path)?;
+        println!(
+            "programmed + snapshotted {} rows in {:.2} s ({})",
+            store.rows(),
+            t0.elapsed().as_secs_f64(),
+            store.write_stats().report()
+        );
+    }
+
+    // ---- warm start from disk ------------------------------------------
+    let store = AmStore::load(&cfg, &snap_path)?;
+    anyhow::ensure!(!store.is_empty(), "snapshot {snap_path:?} has no rows to serve");
+    let rows = store.rows();
+    let dims = store.dims(); // queries/updates follow the snapshot's geometry
+    let tiles = TileManager::build(store.words().to_vec(), cfg.array.rows, |w| {
         Ok(Box::new(DigitalExactEngine::new(w)) as Box<dyn AmEngine>)
     })?;
     println!(
-        "serving {rows} words x {dims} b on {} tiles of {} rows | {} workers, batch<= {}, queue {}",
+        "warm start: {rows} words x {dims} b on {} tiles of {} rows | {} workers, batch<= {}, queue {}",
         tiles.tile_count(),
         cfg.array.rows,
         cfg.coordinator.workers,
         cfg.coordinator.max_batch,
         cfg.coordinator.queue_depth
     );
-    let svc = AmService::start(&cfg.coordinator, tiles);
+    let svc = AmService::start_with_config(&cfg, tiles);
 
     let busy_retries = AtomicU64::new(0);
     let clients = 8u64;
@@ -73,6 +111,28 @@ fn main() -> anyhow::Result<()> {
                 }
             });
         }
+        // Live-update writer riding alongside the load: reprogram rows
+        // through the admin plane and verify each is immediately servable.
+        let svc2 = svc.clone();
+        s.spawn(move || {
+            let mut r = rng(777);
+            for step in 0..16u64 {
+                let row = (step as usize * 251) % rows;
+                let word = BitVec::random(dims, 0.5, &mut r);
+                let resp = svc2
+                    .admin(AdminOp::Update { row, word: word.clone() })
+                    .expect("live update");
+                let report = resp.write.expect("update carries write cost");
+                assert_eq!(report.failures, 0);
+                // The clients keep the queue under backpressure by design,
+                // so the verification search must ride the retry path.
+                let hit =
+                    svc2.search_topk_with_retry(word, 1, 50).expect("serve updated word");
+                assert_eq!(hit.winner, row, "update visible to the next search");
+                assert!(hit.epoch >= resp.epoch, "epoch ordering");
+                std::thread::sleep(std::time::Duration::from_micros(500));
+            }
+        });
     });
     let wall = t0.elapsed();
     let m = svc.metrics();
@@ -83,6 +143,13 @@ fn main() -> anyhow::Result<()> {
         m.completed,
         wall.as_secs_f64(),
         busy_retries.load(Ordering::Relaxed)
+    );
+    println!(
+        "live updates: epoch {} | write cost {} pulses, {:.2} nJ, {:.1} µs array time",
+        svc.epoch(),
+        m.write.pulses,
+        m.write.energy_j * 1e9,
+        m.write.latency_s * 1e6
     );
     svc.shutdown();
     println!("serve_am OK");

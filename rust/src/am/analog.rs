@@ -218,6 +218,13 @@ impl AnalogCosimeEngine {
     }
 }
 
+/// Live-mutation note: the analog die freezes per-cell and per-stage
+/// variation at build time, so it deliberately keeps the trait's default
+/// `update_row`/`push_row`/`remove_row` (unsupported). A live class-vector
+/// update on an analog tile therefore re-fabricates that tile through the
+/// tile manager's factory — physically, reprogramming plus a fresh
+/// variation draw — rather than patching rows in place like the packed
+/// digital stores.
 impl AmEngine for AnalogCosimeEngine {
     fn name(&self) -> &str {
         "analog-cosime"

@@ -13,15 +13,28 @@
 //! * [`analog::AnalogCosimeEngine`] — the full analog path: 1FeFET1R arrays
 //!   → translinear X²/Y → WTA, with frozen device variation (Fig. 7).
 //! * [`write`] — the array programming path (±4 V pulses + write-verify).
+//! * [`store`] — the mutable class-vector store: labeled insert / update /
+//!   delete with write-verify cost accounting, plus snapshot persistence
+//!   (manifest JSON + packed binary) for warm-starting a server.
 //!
 //! The serving hot path is the batched, allocation-free kernel interface in
 //! [`kernel`]: [`AmEngine::search_block`] scores a bit-packed [`QueryBlock`]
 //! into caller-provided [`SearchScratch`], feeding per-query [`TopK`]
 //! selectors — batch size and k are orthogonal axes everywhere above this
 //! layer (tiles, coordinator).
+//!
+//! The packed-store engines additionally support *incremental repack*
+//! ([`AmEngine::update_row`] / [`AmEngine::push_row`] /
+//! [`AmEngine::remove_row`]): a live class-vector update patches the packed
+//! u64 matrix and popcounts in place, so the fused `search_block` kernels
+//! keep streaming one contiguous matrix — no rebuild, no per-row pointer
+//! chasing. Engines whose substrate cannot mutate in place (analog dies,
+//! fixed XLA artifacts) report the op unsupported and the tile manager
+//! falls back to rebuilding just that tile.
 
 pub mod analog;
 pub mod kernel;
+pub mod store;
 pub mod write;
 
 pub use kernel::{BlockTopK, QueriesRef, QueryBlock, SearchScratch, TopK};
@@ -135,6 +148,29 @@ pub trait AmEngine: Send + Sync {
         }
     }
 
+    /// Reprogram stored row `row` to `word` in place, returning `true` when
+    /// the engine supports live mutation (the packed-store engines patch
+    /// their fused matrix incrementally). Engines whose substrate is frozen
+    /// at build time (analog dies, fixed XLA artifacts) keep the default
+    /// `false` and the caller rebuilds the tile instead. Panics on a row or
+    /// dims out of range — bounds are the caller's contract.
+    fn update_row(&mut self, _row: usize, _word: &BitVec) -> bool {
+        false
+    }
+
+    /// Append a new stored row in place; same support contract as
+    /// [`AmEngine::update_row`].
+    fn push_row(&mut self, _word: &BitVec) -> bool {
+        false
+    }
+
+    /// Remove stored row `row` in place (rows above shift down by one);
+    /// same support contract as [`AmEngine::update_row`]. Engines never
+    /// shrink to zero rows — the caller drops the whole tile instead.
+    fn remove_row(&mut self, _row: usize) -> bool {
+        false
+    }
+
     /// Convenience wrapper over [`AmEngine::search_block`]: batched top-k
     /// with one ranked result list per query. Allocates its own buffers;
     /// steady-state callers hold a [`QueryBlock`]/[`BlockTopK`]/
@@ -194,6 +230,36 @@ impl Store {
 
     fn check_query(&self, query: &BitVec) {
         assert_eq!(query.len(), self.dims, "query length {} != dims {}", query.len(), self.dims);
+    }
+
+    /// Incremental repack: rewrite row `r` in place — O(lanes_per_row), the
+    /// packed matrix stays one contiguous allocation so the fused kernels
+    /// keep streaming it.
+    fn set_row(&mut self, r: usize, word: &BitVec) {
+        assert_eq!(word.len(), self.dims, "word length {} != dims {}", word.len(), self.dims);
+        self.popcounts[r] = word.count_ones();
+        let base = r * self.lanes_per_row;
+        self.packed[base..base + self.lanes_per_row].copy_from_slice(word.lanes());
+        self.rows[r] = word.clone();
+    }
+
+    /// Incremental repack: append a row at the end of the packed matrix.
+    fn push_row(&mut self, word: &BitVec) {
+        assert_eq!(word.len(), self.dims, "word length {} != dims {}", word.len(), self.dims);
+        self.popcounts.push(word.count_ones());
+        self.packed.extend_from_slice(word.lanes());
+        self.rows.push(word.clone());
+    }
+
+    /// Incremental repack: remove row `r`, shifting later rows down (one
+    /// contiguous memmove of the packed matrix). The store never shrinks to
+    /// zero rows — tiles are dropped whole instead.
+    fn remove_row(&mut self, r: usize) {
+        assert!(self.rows.len() > 1, "store cannot shrink to zero rows");
+        self.rows.remove(r);
+        self.popcounts.remove(r);
+        let base = r * self.lanes_per_row;
+        self.packed.drain(base..base + self.lanes_per_row);
     }
 
     /// Binary dot product of `query` with stored row `row` over the packed
@@ -337,6 +403,21 @@ impl AmEngine for DigitalExactEngine {
     fn search_batch(&self, queries: &[BitVec]) -> Vec<SearchResult> {
         par_search_batch(self, queries)
     }
+
+    fn update_row(&mut self, row: usize, word: &BitVec) -> bool {
+        self.store.set_row(row, word);
+        true
+    }
+
+    fn push_row(&mut self, word: &BitVec) -> bool {
+        self.store.push_row(word);
+        true
+    }
+
+    fn remove_row(&mut self, row: usize) -> bool {
+        self.store.remove_row(row);
+        true
+    }
 }
 
 /// Hamming-distance AM (refs [6][9]). Scores are negated distances.
@@ -393,6 +474,21 @@ impl AmEngine for HammingEngine {
             -((q_ones + pop[r]) as f64 - 2.0 * x as f64)
         });
     }
+
+    fn update_row(&mut self, row: usize, word: &BitVec) -> bool {
+        self.store.set_row(row, word);
+        true
+    }
+
+    fn push_row(&mut self, word: &BitVec) -> bool {
+        self.store.push_row(word);
+        true
+    }
+
+    fn remove_row(&mut self, row: usize) -> bool {
+        self.store.remove_row(row);
+        true
+    }
 }
 
 /// Approximate-cosine AM of ref [10]: the denominator ‖b‖ is frozen at its
@@ -408,9 +504,17 @@ pub struct ApproxCosineEngine {
 impl ApproxCosineEngine {
     pub fn new(rows: Vec<BitVec>) -> Self {
         let store = Store::new(rows);
+        let norm_const = Self::frozen_norm(&store);
+        ApproxCosineEngine { store, norm_const }
+    }
+
+    /// The frozen denominator √(E[Y]); re-frozen after a live row mutation
+    /// (this engine's whole point is that the denominator is a store-wide
+    /// constant, so updates re-derive it from the mutated store).
+    fn frozen_norm(store: &Store) -> f64 {
         let mean_y =
             store.popcounts.iter().map(|&y| y as f64).sum::<f64>() / store.rows.len() as f64;
-        ApproxCosineEngine { store, norm_const: mean_y.max(1.0).sqrt() }
+        mean_y.max(1.0).sqrt()
     }
 }
 
@@ -453,6 +557,24 @@ impl AmEngine for ApproxCosineEngine {
     ) {
         let norm = self.norm_const;
         self.store.kernel_block(queries, base, out, |x, _, _| x as f64 / norm);
+    }
+
+    fn update_row(&mut self, row: usize, word: &BitVec) -> bool {
+        self.store.set_row(row, word);
+        self.norm_const = Self::frozen_norm(&self.store);
+        true
+    }
+
+    fn push_row(&mut self, word: &BitVec) -> bool {
+        self.store.push_row(word);
+        self.norm_const = Self::frozen_norm(&self.store);
+        true
+    }
+
+    fn remove_row(&mut self, row: usize) -> bool {
+        self.store.remove_row(row);
+        self.norm_const = Self::frozen_norm(&self.store);
+        true
     }
 }
 
@@ -501,6 +623,21 @@ impl AmEngine for DotEngine {
         out: &mut [TopK],
     ) {
         self.store.kernel_block(queries, base, out, |x, _, _| x as f64);
+    }
+
+    fn update_row(&mut self, row: usize, word: &BitVec) -> bool {
+        self.store.set_row(row, word);
+        true
+    }
+
+    fn push_row(&mut self, word: &BitVec) -> bool {
+        self.store.push_row(word);
+        true
+    }
+
+    fn remove_row(&mut self, row: usize) -> bool {
+        self.store.remove_row(row);
+        true
     }
 }
 
@@ -700,6 +837,105 @@ mod topk_tests {
             assert_eq!(hits[0].winner, 5);
             assert_eq!(hits[1].winner, 3);
         }
+    }
+}
+
+#[cfg(test)]
+mod mutation_tests {
+    use super::*;
+    use crate::util::{prop, BitVec};
+
+    fn all_packed(rows: Vec<BitVec>) -> Vec<Box<dyn AmEngine>> {
+        vec![
+            Box::new(DigitalExactEngine::new(rows.clone())),
+            Box::new(HammingEngine::new(rows.clone())),
+            Box::new(ApproxCosineEngine::new(rows.clone())),
+            Box::new(DotEngine::new(rows)),
+        ]
+    }
+
+    /// The incremental-repack invariant: after any sequence of in-place
+    /// update/push/remove mutations, every packed-store engine is
+    /// score-for-score identical to an engine freshly built over the mutated
+    /// word list (packed matrix, popcounts and the approx engine's re-frozen
+    /// denominator all patched correctly).
+    #[test]
+    fn incremental_repack_matches_rebuilt_engine() {
+        prop::check("incremental repack == rebuild", 20, 31, |r| {
+            let dims = 16 + 8 * r.below(8);
+            let n0 = 2 + r.below(16);
+            let mut words: Vec<BitVec> =
+                (0..n0).map(|_| BitVec::random(dims, 0.2 + 0.6 * r.f64(), r)).collect();
+            let mut engines = all_packed(words.clone());
+            for _ in 0..8 {
+                let op = r.below(3);
+                if op == 0 {
+                    let row = r.below(words.len());
+                    let w = BitVec::random(dims, 0.2 + 0.6 * r.f64(), r);
+                    words[row] = w.clone();
+                    for e in engines.iter_mut() {
+                        crate::prop_assert!(e.update_row(row, &w), "update supported");
+                    }
+                } else if op == 1 {
+                    let w = BitVec::random(dims, 0.2 + 0.6 * r.f64(), r);
+                    words.push(w.clone());
+                    for e in engines.iter_mut() {
+                        crate::prop_assert!(e.push_row(&w), "push supported");
+                    }
+                } else if words.len() > 2 {
+                    let row = r.below(words.len());
+                    words.remove(row);
+                    for e in engines.iter_mut() {
+                        crate::prop_assert!(e.remove_row(row), "remove supported");
+                    }
+                }
+            }
+            let rebuilt = all_packed(words.clone());
+            let k = 1 + r.below(5);
+            for _ in 0..4 {
+                let q = BitVec::random(dims, 0.5, r);
+                for (mutated, fresh) in engines.iter().zip(&rebuilt) {
+                    crate::prop_assert!(
+                        mutated.rows() == fresh.rows(),
+                        "{}: rows {} vs {}",
+                        mutated.name(),
+                        mutated.rows(),
+                        fresh.rows()
+                    );
+                    let a = mutated.search_topk(&q, k);
+                    let b = fresh.search_topk(&q, k);
+                    for (x, y) in a.iter().zip(&b) {
+                        crate::prop_assert!(
+                            x.winner == y.winner && x.score == y.score,
+                            "{}: mutated ({}, {}) vs rebuilt ({}, {})",
+                            mutated.name(),
+                            x.winner,
+                            x.score,
+                            y.winner,
+                            y.score
+                        );
+                    }
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn store_mutations_validate_dims_and_floor() {
+        let mut e = DigitalExactEngine::new(vec![
+            BitVec::from_bits(&[1, 0, 1, 0]),
+            BitVec::from_bits(&[0, 1, 0, 1]),
+        ]);
+        let w = BitVec::from_bits(&[1, 1, 0, 0]);
+        assert!(e.update_row(0, &w));
+        assert_eq!(e.stored(0), &w);
+        assert!(e.remove_row(1));
+        assert_eq!(e.rows(), 1);
+        let panic = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            e.remove_row(0);
+        }));
+        assert!(panic.is_err(), "shrinking to zero rows must panic");
     }
 }
 

@@ -1,0 +1,588 @@
+//! The mutable class-vector store: labeled insert / update / delete with
+//! write-verify cost accounting, plus snapshot persistence.
+//!
+//! The serving stack searches an immutable packed store, but the paper's
+//! flagship HDC workload retrains class hypervectors continuously and
+//! related FeFET-CAM work (FeReX; Kazemi et al.) treats reprogramming cost
+//! as a first-class design axis. This module closes the write→serve loop:
+//!
+//! * [`program_word`] — program one word through the §4 ±4 V write-verify
+//!   path ([`super::write::program_array`]) and return what the array
+//!   actually stores plus the pulse-accurate [`WriteReport`].
+//! * [`AmStore`] — the logical store: per-row labels, the programmed words,
+//!   cumulative [`WriteStats`] and a monotonically increasing generation.
+//! * Snapshot persistence ([`AmStore::save`] / [`AmStore::load`]) — a
+//!   manifest-style JSON (labels, geometry, config fingerprint, write
+//!   stats) next to a packed little-endian u64 binary of the row lanes, so
+//!   a trained AM warm-starts a server without retraining or reprogramming.
+//!
+//! The snapshot records [`CosimeConfig::physical_fingerprint`]; loading
+//! under a different *physical* configuration (device/array/energy) is
+//! rejected — the stored bits were programmed into that substrate — while
+//! serving-policy changes stay compatible.
+
+use std::path::Path;
+
+use anyhow::{anyhow, ensure, Context, Result};
+
+use crate::config::CosimeConfig;
+use crate::util::json::Json;
+use crate::util::{BitVec, Rng};
+
+use super::write::{program_array, read_back, WriteReport};
+
+/// Magic string identifying an AM snapshot manifest.
+pub const SNAPSHOT_FORMAT: &str = "cosime-am-snapshot";
+/// Current snapshot schema version.
+pub const SNAPSHOT_VERSION: usize = 1;
+
+/// Cumulative write-verify cost over the life of a store.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct WriteStats {
+    /// Words programmed (insert + update operations).
+    pub words: u64,
+    /// Cells programmed across all operations.
+    pub cells: u64,
+    /// Total pulses issued (erase + program + verify re-pulses).
+    pub pulses: u64,
+    /// Cells that ever failed verify (0 for a healthy store).
+    pub failures: u64,
+    /// Total write energy (J).
+    pub energy_j: f64,
+    /// Total write latency (s), from the applied pulse widths.
+    pub latency_s: f64,
+}
+
+impl WriteStats {
+    /// Fold one programming operation into the running totals.
+    pub fn absorb(&mut self, report: &WriteReport) {
+        self.words += 1;
+        self.cells += report.cells as u64;
+        self.pulses += report.pulses as u64;
+        self.failures += report.failures as u64;
+        self.energy_j += report.energy;
+        self.latency_s += report.latency;
+    }
+
+    /// One-line human-readable summary.
+    pub fn report(&self) -> String {
+        format!(
+            "{} words / {} cells programmed, {} pulses, {:.2} nJ, {:.1} µs, {} failures",
+            self.words,
+            self.cells,
+            self.pulses,
+            self.energy_j * 1e9,
+            self.latency_s * 1e6,
+            self.failures
+        )
+    }
+
+    fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("words", Json::num(self.words as f64)),
+            ("cells", Json::num(self.cells as f64)),
+            ("pulses", Json::num(self.pulses as f64)),
+            ("failures", Json::num(self.failures as f64)),
+            ("energy_j", Json::num(self.energy_j)),
+            ("latency_s", Json::num(self.latency_s)),
+        ])
+    }
+
+    fn from_json(v: &Json) -> WriteStats {
+        let num = |key: &str| v.get(key).and_then(Json::as_f64).unwrap_or(0.0);
+        WriteStats {
+            words: num("words") as u64,
+            cells: num("cells") as u64,
+            pulses: num("pulses") as u64,
+            failures: num("failures") as u64,
+            energy_j: num("energy_j"),
+            latency_s: num("latency_s"),
+        }
+    }
+}
+
+/// Program one word through the write-verify loop (policy from
+/// `cfg.write`) and read back what the array actually stores. The caller
+/// decides what a nonzero [`WriteReport::failures`] means; use
+/// [`program_word_verified`] for the standard reject-on-failure policy.
+pub fn program_word(cfg: &CosimeConfig, word: &BitVec, rng: &mut Rng) -> (BitVec, WriteReport) {
+    let (cells, report) = program_array(
+        cfg,
+        std::slice::from_ref(word),
+        cfg.write.pulse_scale,
+        cfg.write.max_retries,
+        rng,
+    );
+    let programmed = read_back(&cells, 1, word.len()).pop().expect("one programmed word");
+    (programmed, report)
+}
+
+/// Verify failure: the word was pulsed but some cells stayed stuck. Carries
+/// the report so callers can still account the pulses that were spent.
+#[derive(Debug)]
+pub struct WriteVerifyError {
+    pub report: WriteReport,
+    pub max_retries: usize,
+}
+
+impl std::fmt::Display for WriteVerifyError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "write verify failed: {} of {} cells stuck after {} retries",
+            self.report.failures, self.report.cells, self.max_retries
+        )
+    }
+}
+
+impl std::error::Error for WriteVerifyError {}
+
+/// [`program_word`] with the standard verify policy shared by [`AmStore`]
+/// and the coordinator's admin plane: a word whose cells fail read-verify
+/// after the retry budget is rejected, never half-stored.
+pub fn program_word_verified(
+    cfg: &CosimeConfig,
+    word: &BitVec,
+    rng: &mut Rng,
+) -> std::result::Result<(BitVec, WriteReport), WriteVerifyError> {
+    let (programmed, report) = program_word(cfg, word, rng);
+    if report.failures > 0 {
+        Err(WriteVerifyError { report, max_retries: cfg.write.max_retries })
+    } else {
+        Ok((programmed, report))
+    }
+}
+
+/// The mutable class-vector store: labels + programmed words + write costs.
+///
+/// Every insert/update runs the real programming model, so the store's
+/// words are what the FeFET array would read back (with verify enforced:
+/// a word that fails verify is rejected, never silently half-stored).
+pub struct AmStore {
+    cfg: CosimeConfig,
+    rng: Rng,
+    fingerprint: String,
+    dims: usize,
+    labels: Vec<String>,
+    words: Vec<BitVec>,
+    stats: WriteStats,
+    generation: u64,
+}
+
+impl AmStore {
+    /// Empty store for `dims`-bit words; write policy and the stochasticity
+    /// seed come from `cfg.write`.
+    pub fn new(cfg: &CosimeConfig, dims: usize) -> AmStore {
+        assert!(dims >= 1, "store needs at least one dimension");
+        AmStore {
+            cfg: cfg.clone(),
+            rng: Rng::seed_from_u64(cfg.write.seed),
+            fingerprint: cfg.physical_fingerprint(),
+            dims,
+            labels: Vec::new(),
+            words: Vec::new(),
+            stats: WriteStats::default(),
+            generation: 0,
+        }
+    }
+
+    pub fn dims(&self) -> usize {
+        self.dims
+    }
+
+    pub fn rows(&self) -> usize {
+        self.words.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.words.is_empty()
+    }
+
+    /// Stored words in row order (what the arrays read back).
+    pub fn words(&self) -> &[BitVec] {
+        &self.words
+    }
+
+    /// Per-row labels, parallel to [`AmStore::words`].
+    pub fn labels(&self) -> &[String] {
+        &self.labels
+    }
+
+    pub fn word(&self, row: usize) -> &BitVec {
+        &self.words[row]
+    }
+
+    pub fn label(&self, row: usize) -> &str {
+        &self.labels[row]
+    }
+
+    /// Row index of `label`, if present.
+    pub fn find(&self, label: &str) -> Option<usize> {
+        self.labels.iter().position(|l| l == label)
+    }
+
+    /// Cumulative write-verify costs.
+    pub fn write_stats(&self) -> &WriteStats {
+        &self.stats
+    }
+
+    /// Monotonic mutation counter (bumped by insert/update/delete).
+    pub fn generation(&self) -> u64 {
+        self.generation
+    }
+
+    /// Fingerprint of the physical config this store was programmed under.
+    pub fn fingerprint(&self) -> &str {
+        &self.fingerprint
+    }
+
+    fn program(&mut self, word: &BitVec) -> Result<(BitVec, WriteReport)> {
+        ensure!(
+            word.len() == self.dims,
+            "word has {} bits, store expects {}",
+            word.len(),
+            self.dims
+        );
+        match program_word_verified(&self.cfg, word, &mut self.rng) {
+            Ok((programmed, report)) => {
+                self.stats.absorb(&report);
+                Ok((programmed, report))
+            }
+            Err(e) => {
+                // The pulses were spent even though verify failed — account
+                // them, then refuse to serve corrupted bits.
+                self.stats.absorb(&e.report);
+                Err(anyhow::Error::new(e))
+            }
+        }
+    }
+
+    /// Program and append a labeled word; returns its row and the write
+    /// report from the verify loop.
+    pub fn insert(&mut self, label: &str, word: &BitVec) -> Result<(usize, WriteReport)> {
+        let (programmed, report) = self.program(word)?;
+        self.labels.push(label.to_string());
+        self.words.push(programmed);
+        self.generation += 1;
+        Ok((self.words.len() - 1, report))
+    }
+
+    /// Reprogram row `row` in place (label unchanged).
+    pub fn update(&mut self, row: usize, word: &BitVec) -> Result<WriteReport> {
+        ensure!(row < self.words.len(), "row {row} out of range {}", self.words.len());
+        let (programmed, report) = self.program(word)?;
+        self.words[row] = programmed;
+        self.generation += 1;
+        Ok(report)
+    }
+
+    /// Update the row carrying `label`, or insert a new one — the online
+    /// HDC retraining shape (class hypervectors keyed by class label).
+    pub fn upsert(&mut self, label: &str, word: &BitVec) -> Result<(usize, WriteReport)> {
+        match self.find(label) {
+            Some(row) => Ok((row, self.update(row, word)?)),
+            None => self.insert(label, word),
+        }
+    }
+
+    /// Remove row `row`; rows above shift down by one.
+    pub fn delete(&mut self, row: usize) -> Result<()> {
+        ensure!(row < self.words.len(), "row {row} out of range {}", self.words.len());
+        self.words.remove(row);
+        self.labels.remove(row);
+        self.generation += 1;
+        Ok(())
+    }
+
+    // ---- snapshot persistence -------------------------------------------
+
+    /// Save to `path` (the JSON manifest) plus a sibling `<stem>.bits` file
+    /// holding the packed row lanes (little-endian u64, row-major).
+    pub fn save<P: AsRef<Path>>(&self, path: P) -> Result<()> {
+        let path = path.as_ref();
+        let stem = path.file_stem().and_then(|s| s.to_str()).unwrap_or("snapshot");
+        let data_name = format!("{stem}.bits");
+        let data_path = path.with_file_name(&data_name);
+
+        let lanes_per_row = self.dims.div_ceil(64);
+        let mut bytes = Vec::with_capacity(self.words.len() * lanes_per_row * 8);
+        for w in &self.words {
+            for lane in w.lanes() {
+                bytes.extend_from_slice(&lane.to_le_bytes());
+            }
+        }
+        std::fs::write(&data_path, &bytes)
+            .with_context(|| format!("writing snapshot data {data_path:?}"))?;
+
+        let manifest = Json::obj(vec![
+            ("format", Json::str(SNAPSHOT_FORMAT)),
+            ("version", Json::num(SNAPSHOT_VERSION as f64)),
+            ("dims", Json::num(self.dims as f64)),
+            ("rows", Json::num(self.words.len() as f64)),
+            ("lanes_per_row", Json::num(lanes_per_row as f64)),
+            ("labels", Json::arr(self.labels.iter().map(|l| Json::str(l)))),
+            ("config_fingerprint", Json::str(&self.fingerprint)),
+            ("data_file", Json::str(&data_name)),
+            ("write_stats", self.stats.to_json()),
+        ]);
+        std::fs::write(path, manifest.to_string_pretty())
+            .with_context(|| format!("writing snapshot manifest {path:?}"))?;
+        Ok(())
+    }
+
+    /// Load a snapshot saved by [`AmStore::save`]. Rejects manifests written
+    /// under a different physical configuration (the bits were programmed
+    /// into that substrate) and corrupt or truncated data files.
+    pub fn load<P: AsRef<Path>>(cfg: &CosimeConfig, path: P) -> Result<AmStore> {
+        let path = path.as_ref();
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading snapshot manifest {path:?}"))?;
+        let root = Json::parse(&text).context("parsing snapshot manifest")?;
+
+        let format = root.get("format").and_then(Json::as_str).unwrap_or("");
+        ensure!(format == SNAPSHOT_FORMAT, "not an AM snapshot (format '{format}')");
+        let version = root
+            .get("version")
+            .and_then(Json::as_usize)
+            .ok_or_else(|| anyhow!("snapshot missing version"))?;
+        ensure!(version == SNAPSHOT_VERSION, "unsupported snapshot version {version}");
+
+        let field = |key: &str| {
+            root.get(key).and_then(Json::as_usize).ok_or_else(|| anyhow!("snapshot missing {key}"))
+        };
+        let dims = field("dims")?;
+        let rows = field("rows")?;
+        let lanes_per_row = field("lanes_per_row")?;
+        ensure!(dims >= 1, "snapshot dims must be positive");
+        ensure!(
+            lanes_per_row == dims.div_ceil(64),
+            "lanes_per_row {lanes_per_row} inconsistent with dims {dims}"
+        );
+
+        let stored_fp = root
+            .get("config_fingerprint")
+            .and_then(Json::as_str)
+            .ok_or_else(|| anyhow!("snapshot missing config_fingerprint"))?;
+        let fp = cfg.physical_fingerprint();
+        ensure!(
+            stored_fp == fp,
+            "snapshot was programmed under a different physical config \
+             (fingerprint {stored_fp} != {fp}); load it with the matching \
+             device/array/energy configuration"
+        );
+
+        let labels: Vec<String> = root
+            .get("labels")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow!("snapshot missing labels"))?
+            .iter()
+            .map(|l| {
+                l.as_str().map(str::to_string).ok_or_else(|| anyhow!("label must be a string"))
+            })
+            .collect::<Result<_>>()?;
+        ensure!(labels.len() == rows, "label count {} != rows {rows}", labels.len());
+
+        let data_name = root
+            .get("data_file")
+            .and_then(Json::as_str)
+            .ok_or_else(|| anyhow!("snapshot missing data_file"))?;
+        let data_path = path.with_file_name(data_name);
+        let bytes = std::fs::read(&data_path)
+            .with_context(|| format!("reading snapshot data {data_path:?}"))?;
+        ensure!(
+            bytes.len() == rows * lanes_per_row * 8,
+            "snapshot data is {} bytes, expected {} ({} rows × {} lanes)",
+            bytes.len(),
+            rows * lanes_per_row * 8,
+            rows,
+            lanes_per_row
+        );
+
+        let tail = dims % 64;
+        let mut words = Vec::with_capacity(rows);
+        let mut lanes = vec![0u64; lanes_per_row];
+        for row in 0..rows {
+            let base = row * lanes_per_row * 8;
+            for (i, lane) in lanes.iter_mut().enumerate() {
+                let off = base + i * 8;
+                let mut raw = [0u8; 8];
+                raw.copy_from_slice(&bytes[off..off + 8]);
+                *lane = u64::from_le_bytes(raw);
+            }
+            // The kernels rely on bits beyond dims being zero; a dirty
+            // trailing lane means the file is corrupt, not merely odd.
+            ensure!(
+                tail == 0 || lanes[lanes_per_row - 1] >> tail == 0,
+                "row {row}: bits beyond dims={dims} are set (corrupt data file)"
+            );
+            let mut bv = BitVec::zeros(dims);
+            bv.assign_lanes(dims, &lanes);
+            words.push(bv);
+        }
+
+        let stats =
+            root.get("write_stats").map(WriteStats::from_json).unwrap_or_default();
+        Ok(AmStore {
+            cfg: cfg.clone(),
+            rng: Rng::seed_from_u64(cfg.write.seed),
+            fingerprint: fp,
+            dims,
+            labels,
+            words,
+            stats,
+            generation: 0,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::am::{AmEngine, DigitalExactEngine};
+    use crate::util::{prop, rng};
+
+    fn temp_dir(tag: &str) -> std::path::PathBuf {
+        let dir = std::env::temp_dir().join(format!("cosime-store-{tag}-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        dir
+    }
+
+    #[test]
+    fn insert_update_delete_bookkeeping() {
+        let cfg = CosimeConfig::default();
+        let mut store = AmStore::new(&cfg, 64);
+        let mut r = rng(1);
+        let a = BitVec::random(64, 0.5, &mut r);
+        let b = BitVec::random(64, 0.5, &mut r);
+
+        let (row_a, rep) = store.insert("alpha", &a).unwrap();
+        assert_eq!(row_a, 0);
+        assert_eq!(rep.failures, 0);
+        assert_eq!(store.word(0), &a, "full-amplitude programming is exact");
+        let (row_b, _) = store.insert("beta", &b).unwrap();
+        assert_eq!(row_b, 1);
+        assert_eq!(store.find("beta"), Some(1));
+        assert_eq!(store.generation(), 2);
+
+        // Upsert hits the existing label in place.
+        let b2 = BitVec::random(64, 0.5, &mut r);
+        let (row, _) = store.upsert("beta", &b2).unwrap();
+        assert_eq!(row, 1);
+        assert_eq!(store.word(1), &b2);
+        assert_eq!(store.rows(), 2);
+
+        // Write accounting accumulates across every programming op.
+        let stats = store.write_stats().clone();
+        assert_eq!(stats.words, 3);
+        assert_eq!(stats.cells, 3 * 64);
+        assert!(stats.energy_j > 0.0 && stats.latency_s > 0.0);
+        assert_eq!(stats.failures, 0);
+
+        store.delete(0).unwrap();
+        assert_eq!(store.rows(), 1);
+        assert_eq!(store.label(0), "beta");
+        assert_eq!(store.find("alpha"), None);
+        assert!(store.delete(5).is_err());
+    }
+
+    #[test]
+    fn dims_mismatch_and_verify_failures_rejected() {
+        let cfg = CosimeConfig::default();
+        let mut store = AmStore::new(&cfg, 32);
+        let mut r = rng(2);
+        assert!(store.insert("bad", &BitVec::random(16, 0.5, &mut r)).is_err());
+
+        // Sub-coercive pulses never switch: the verify loop must reject the
+        // word instead of storing corrupted bits.
+        let mut derated = CosimeConfig::default();
+        derated.write.pulse_scale = 0.4;
+        let mut store = AmStore::new(&derated, 32);
+        let err = store.insert("stuck", &BitVec::random(32, 0.5, &mut r));
+        assert!(err.is_err(), "hopeless amplitude must fail verify");
+        assert_eq!(store.rows(), 0, "failed writes must not be half-stored");
+    }
+
+    /// The persistence property: save → load round-trips words, labels and
+    /// write stats exactly, and batched top-k over the loaded store is
+    /// bit-identical to the in-memory one.
+    #[test]
+    fn snapshot_roundtrip_preserves_topk() {
+        let dir = temp_dir("roundtrip");
+        prop::check("save/load == identity", 8, 41, |r| {
+            let dims = 16 + r.below(200); // deliberately often not a lane multiple
+            let rows = 2 + r.below(20);
+            let cfg = CosimeConfig::default();
+            let mut store = AmStore::new(&cfg, dims);
+            for i in 0..rows {
+                let w = BitVec::random(dims, 0.2 + 0.6 * r.f64(), r);
+                store.insert(&format!("row-{i}"), &w).map_err(|e| e.to_string())?;
+            }
+            let path = dir.join(format!("snap-{dims}-{rows}.json"));
+            store.save(&path).map_err(|e| e.to_string())?;
+            let loaded = AmStore::load(&cfg, &path).map_err(|e| e.to_string())?;
+            crate::prop_assert!(loaded.words() == store.words(), "words round-trip");
+            crate::prop_assert!(loaded.labels() == store.labels(), "labels round-trip");
+            crate::prop_assert!(
+                loaded.write_stats() == store.write_stats(),
+                "write stats round-trip"
+            );
+
+            let mem = DigitalExactEngine::new(store.words().to_vec());
+            let disk = DigitalExactEngine::new(loaded.words().to_vec());
+            let queries: Vec<BitVec> =
+                (0..5).map(|_| BitVec::random(dims, 0.5, r)).collect();
+            let k = 1 + r.below(4);
+            let a = mem.search_topk_batch(&queries, k);
+            let b = disk.search_topk_batch(&queries, k);
+            for (x, y) in a.iter().zip(&b) {
+                for (p, q) in x.iter().zip(y) {
+                    crate::prop_assert!(
+                        p.winner == q.winner && p.score == q.score,
+                        "top-k diverges after round-trip"
+                    );
+                }
+            }
+            Ok(())
+        });
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn load_rejects_corruption_and_config_mismatch() {
+        let dir = temp_dir("reject");
+        let cfg = CosimeConfig::default();
+        let mut store = AmStore::new(&cfg, 70); // trailing-lane tail of 6 bits
+        let mut r = rng(3);
+        for i in 0..3 {
+            store.insert(&format!("w{i}"), &BitVec::random(70, 0.5, &mut r)).unwrap();
+        }
+        let path = dir.join("am.json");
+        store.save(&path).unwrap();
+        assert!(AmStore::load(&cfg, &path).is_ok());
+
+        // Different physical config: rejected.
+        let mut other = cfg.clone();
+        other.device.v_read = 1.1;
+        let err = AmStore::load(&other, &path).unwrap_err();
+        assert!(format!("{err:#}").contains("fingerprint"), "{err:#}");
+
+        // Truncated data file: rejected with the expected size.
+        let bits = dir.join("am.bits");
+        let mut bytes = std::fs::read(&bits).unwrap();
+        bytes.pop();
+        std::fs::write(&bits, &bytes).unwrap();
+        assert!(AmStore::load(&cfg, &path).is_err());
+
+        // Dirty bits beyond dims: rejected as corrupt.
+        let mut bytes = vec![0xFFu8; 3 * 2 * 8];
+        bytes.truncate(3 * 2 * 8);
+        std::fs::write(&bits, &bytes).unwrap();
+        let err = AmStore::load(&cfg, &path).unwrap_err();
+        assert!(format!("{err:#}").contains("beyond dims"), "{err:#}");
+
+        // Wrong format marker: rejected.
+        std::fs::write(&path, "{\"format\": \"nope\"}").unwrap();
+        assert!(AmStore::load(&cfg, &path).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -13,7 +13,7 @@ use crate::device::{Cell1F1R, VariationSampler};
 use crate::util::{BitVec, Rng};
 
 /// Outcome of programming one word array.
-#[derive(Debug, Clone, Copy)]
+#[derive(Debug, Clone)]
 pub struct WriteReport {
     /// Cells programmed (both polarities).
     pub cells: usize,
@@ -23,9 +23,14 @@ pub struct WriteReport {
     pub failures: usize,
     /// Write energy (J): pulses × per-cell write energy.
     pub energy: f64,
-    /// Write latency (s): verify rounds × pulse width (rows program
-    /// in parallel per round, as in a real array with row drivers).
+    /// Write latency (s): the sum of [`WriteReport::round_latencies`]. All
+    /// still-failing cells re-pulse *in parallel* each verify round (row
+    /// drivers), so a round lasts as long as its slowest jitter-scaled
+    /// pulse — not the nominal `t_write`.
     pub latency: f64,
+    /// Wall time of each round (s): the erase pass first (nominal width),
+    /// then one entry per verify round (its slowest applied pulse width).
+    pub round_latencies: Vec<f64>,
 }
 
 /// Program `words` into a freshly fabricated cell bank with write-verify.
@@ -42,45 +47,57 @@ pub fn program_array(
 ) -> (Vec<Cell1F1R>, WriteReport) {
     let sampler = VariationSampler::new(cfg);
     let dims = words.first().map_or(0, BitVec::len);
-    let mut cells: Vec<Cell1F1R> = Vec::with_capacity(words.len() * dims);
+    let n_cells = words.len() * dims;
+    let mut cells: Vec<Cell1F1R> = Vec::with_capacity(n_cells);
     // Fabricate unprogrammed cells (reset state).
-    for _ in 0..words.len() * dims {
+    for _ in 0..n_cells {
         cells.push(sampler.cell(false, rng));
     }
-    // Erase-to-known-state counts as the first pulse on every cell.
-    let mut pulses = words.len() * dims;
+    // Erase-to-known-state counts as the first pulse on every cell; all
+    // rows erase in parallel at the nominal width — the first round.
+    let mut pulses = n_cells;
+    let mut round_latencies = vec![cfg.device.t_write];
 
     let v_write = cfg.device.v_write * pulse_scale;
-    let mut rounds = 1usize;
-    let mut failures = 0usize;
+    // Cells whose read-verify still fails, as flat (cell index, target bit).
+    let mut pending: Vec<(usize, bool)> = Vec::new();
     for (w, word) in words.iter().enumerate() {
         for j in 0..dims {
-            let cell = &mut cells[w * dims + j];
             let target = word.get(j);
-            let mut ok = cell.stored() == target;
-            let mut tries = 0;
-            while !ok && tries <= max_retries {
-                let v = if target { v_write } else { -v_write };
-                // Cycle-to-cycle write stochasticity: pulse width jitter.
-                let t = cfg.device.t_write * (1.0 + 0.2 * rng.gauss()).clamp(0.2, 3.0);
-                cell.fefet.write_pulse(v, t, &cfg.device);
-                pulses += 1;
-                tries += 1;
-                ok = cell.stored() == target; // read-verify
-            }
-            rounds = rounds.max(tries);
-            if !ok {
-                failures += 1;
+            if cells[w * dims + j].stored() != target {
+                pending.push((w * dims + j, target));
             }
         }
     }
+    // Write-verify: every still-failing cell re-pulses in parallel each
+    // round (row drivers fire together), so a round's wall time is its
+    // slowest jitter-scaled pulse — the accounting accumulates the widths
+    // actually applied, not the nominal t_write. Per cell this allows the
+    // same 1 + max_retries attempts as the old per-cell retry loop.
+    for _round in 0..=max_retries {
+        if pending.is_empty() {
+            break;
+        }
+        let mut slowest = 0.0f64;
+        for &(idx, target) in &pending {
+            let v = if target { v_write } else { -v_write };
+            // Cycle-to-cycle write stochasticity: pulse width jitter.
+            let t = cfg.device.t_write * (1.0 + 0.2 * rng.gauss()).clamp(0.2, 3.0);
+            cells[idx].fefet.write_pulse(v, t, &cfg.device);
+            pulses += 1;
+            slowest = slowest.max(t);
+        }
+        round_latencies.push(slowest);
+        pending.retain(|&(idx, target)| cells[idx].stored() != target); // read-verify
+    }
 
     let report = WriteReport {
-        cells: words.len() * dims,
+        cells: n_cells,
         pulses,
-        failures,
+        failures: pending.len(),
         energy: pulses as f64 * cfg.energy.write_energy_per_cell,
-        latency: (rounds + 1) as f64 * cfg.device.t_write,
+        latency: round_latencies.iter().sum(),
+        round_latencies,
     };
     (cells, report)
 }
@@ -131,6 +148,45 @@ mod tests {
             "derated writes should re-pulse: {} pulses / {} cells",
             rep.pulses,
             rep.cells
+        );
+    }
+
+    /// Regression: latency used to be `(rounds + 1) × t_write` with `rounds`
+    /// conflating per-cell retry counts with parallel array rounds, while the
+    /// loop actually issued jitter-scaled pulses up to 3× the nominal width.
+    /// The report must pin latency to the pulse widths actually applied.
+    #[test]
+    fn latency_accounts_real_pulse_widths() {
+        let cfg = CosimeConfig::default();
+        let t = cfg.device.t_write;
+        let ws = words(4, 128, 11);
+        let mut r = rng(12);
+        let (_, rep) = program_array(&cfg, &ws, 1.0, 3, &mut r);
+        // Full amplitude: the erase pass plus exactly one program round.
+        assert_eq!(rep.failures, 0);
+        assert_eq!(rep.round_latencies.len(), 2, "erase + one program round");
+        assert_eq!(rep.round_latencies[0], t, "erase runs at the nominal width");
+        let program = rep.round_latencies[1];
+        assert!(
+            program >= 0.2 * t && program <= 3.0 * t,
+            "round width {program} outside the jitter clamp"
+        );
+        // Hundreds of parallel pulses: the slowest is above nominal w.h.p.
+        assert!(program > t, "max of many jittered widths must exceed t_write");
+        let sum: f64 = rep.round_latencies.iter().sum();
+        assert!((rep.latency - sum).abs() < 1e-18, "latency == Σ round widths");
+
+        // Derated amplitude: several verify rounds, latency still the sum of
+        // the slowest applied width per round.
+        let (_, rep2) = program_array(&cfg, &ws, 0.62, 20, &mut r);
+        assert_eq!(rep2.failures, 0);
+        assert!(rep2.round_latencies.len() > 2, "derated writes need retries");
+        let sum2: f64 = rep2.round_latencies.iter().sum();
+        assert!((rep2.latency - sum2).abs() < 1e-18);
+        assert!(
+            rep2.round_latencies.iter().all(|&w| w > 0.0 && w <= 3.0 * t),
+            "every round within the jitter clamp: {:?}",
+            rep2.round_latencies
         );
     }
 

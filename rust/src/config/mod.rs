@@ -359,6 +359,32 @@ bind_toml!(VariationConfig {
     bool: [fefet_vth, resistor, mos, supply],
 });
 
+/// Write-path policy (§4 ±4 V programming + verify) used by the mutable
+/// store ([`crate::am::store`]) and the coordinator's admin path.
+#[derive(Debug, Clone, PartialEq)]
+pub struct WriteConfig {
+    /// Write pulse amplitude derating (1.0 = the paper's ±4 V). Values < 1
+    /// land near the coercive margin where the verify loop re-pulses.
+    pub pulse_scale: f64,
+    /// Verify re-pulse budget per cell beyond the first attempt.
+    pub max_retries: usize,
+    /// Seed of the cycle-to-cycle write-stochasticity stream.
+    pub seed: u64,
+}
+
+impl Default for WriteConfig {
+    fn default() -> Self {
+        WriteConfig { pulse_scale: 1.0, max_retries: 3, seed: 0xC051 }
+    }
+}
+
+bind_toml!(WriteConfig {
+    f64: [pulse_scale],
+    usize: [max_retries],
+    u64: [seed],
+    bool: [],
+});
+
 /// Coordinator / serving policy (L3).
 #[derive(Debug, Clone, PartialEq)]
 pub struct CoordinatorConfig {
@@ -407,6 +433,7 @@ pub struct CosimeConfig {
     pub energy: EnergyConfig,
     pub variation: VariationConfig,
     pub coordinator: CoordinatorConfig,
+    pub write: WriteConfig,
 }
 
 impl CosimeConfig {
@@ -440,6 +467,7 @@ impl CosimeConfig {
                 "energy" => &mut self.energy,
                 "variation" => &mut self.variation,
                 "coordinator" => &mut self.coordinator,
+                "write" => &mut self.write,
                 other => bail!("unknown config section [{other}]"),
             };
             for (k, v) in kvs {
@@ -459,7 +487,26 @@ impl CosimeConfig {
         doc.insert("energy".into(), self.energy.dump().into_iter().collect());
         doc.insert("variation".into(), self.variation.dump().into_iter().collect());
         doc.insert("coordinator".into(), self.coordinator.dump().into_iter().collect());
+        doc.insert("write".into(), self.write.dump().into_iter().collect());
         toml_lite::to_string(&doc)
+    }
+
+    /// FNV-1a fingerprint of the *physical* sections (device, array, energy)
+    /// — everything a programmed-array snapshot depends on. Serving policy
+    /// (coordinator, write retry budget, variation switches) can change
+    /// without invalidating saved snapshots, so it is excluded.
+    pub fn physical_fingerprint(&self) -> String {
+        let mut doc: TomlDoc = TomlDoc::new();
+        doc.insert("device".into(), self.device.dump().into_iter().collect());
+        doc.insert("array".into(), self.array.dump().into_iter().collect());
+        doc.insert("energy".into(), self.energy.dump().into_iter().collect());
+        let text = toml_lite::to_string(&doc);
+        let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+        for b in text.bytes() {
+            h ^= u64::from(b);
+            h = h.wrapping_mul(0x0000_0100_0000_01b3);
+        }
+        format!("{h:016x}")
     }
 
     /// Sanity-check physical and policy parameters.
@@ -481,6 +528,7 @@ impl CosimeConfig {
         let c = &self.coordinator;
         ensure!(c.max_batch >= 1 && c.queue_depth >= 1 && c.workers >= 1, "bad coordinator");
         ensure!(c.max_k >= 1, "coordinator max_k must be at least 1");
+        ensure!(self.write.pulse_scale > 0.0, "write pulse_scale must be positive");
         Ok(())
     }
 }
@@ -540,6 +588,34 @@ mod tests {
         let mut cfg = CosimeConfig::default();
         cfg.wta.win_separation = 0.9;
         assert!(cfg.validate().is_err());
+    }
+
+    #[test]
+    fn physical_fingerprint_ignores_serving_policy() {
+        let base = CosimeConfig::default();
+        let fp = base.physical_fingerprint();
+        assert_eq!(fp.len(), 16, "hex-encoded 64-bit hash");
+        // Serving/policy knobs do not invalidate snapshots.
+        let mut policy = base.clone();
+        policy.coordinator.max_batch = 7;
+        policy.write.max_retries = 9;
+        assert_eq!(policy.physical_fingerprint(), fp);
+        // Physical knobs do.
+        let mut device = base.clone();
+        device.device.v_read = 1.1;
+        assert_ne!(device.physical_fingerprint(), fp);
+        let mut array = base;
+        array.array.rows = 128;
+        assert_ne!(array.physical_fingerprint(), fp);
+    }
+
+    #[test]
+    fn write_section_parses_and_validates() {
+        let cfg =
+            CosimeConfig::from_toml_str("[write]\npulse_scale = 0.8\nmax_retries = 10\n").unwrap();
+        assert!((cfg.write.pulse_scale - 0.8).abs() < 1e-12);
+        assert_eq!(cfg.write.max_retries, 10);
+        assert!(CosimeConfig::from_toml_str("[write]\npulse_scale = 0.0\n").is_err());
     }
 
     #[test]

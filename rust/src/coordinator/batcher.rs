@@ -156,22 +156,37 @@ mod tests {
         assert_eq!(b.len(), 7);
     }
 
+    /// De-flaked: no fixed sleeps. The item is queued *before* the consumer
+    /// starts, so the test cannot race on producer timing; the deadline
+    /// property under test is that a partial batch (1 of max 64) is
+    /// released at all instead of waiting forever for batch-mates, with a
+    /// generous wall-clock ceiling that even a heavily loaded CI runner
+    /// clears.
     #[test]
     fn deadline_releases_partial_batch() {
-        let b: Arc<Batcher<u32>> = Arc::new(Batcher::new(64, Duration::from_millis(20), 100));
+        let b: Arc<Batcher<u32>> = Arc::new(Batcher::new(64, Duration::from_millis(10), 100));
+        b.submit(42).unwrap();
         let b2 = b.clone();
         let t = std::thread::spawn(move || {
             let start = Instant::now();
             let batch = b2.next_batch().unwrap();
             (batch.len(), start.elapsed())
         });
-        std::thread::sleep(Duration::from_millis(5));
-        b.submit(42).unwrap();
         let (len, took) = t.join().unwrap();
-        assert_eq!(len, 1);
-        assert!(took < Duration::from_millis(500), "released by deadline, not hang: {took:?}");
+        assert_eq!(len, 1, "deadline must release the partial batch");
+        assert!(took < Duration::from_secs(30), "released by deadline, not hang: {took:?}");
+
+        // Consumer-first order as well: the consumer blocks for the first
+        // item, then the deadline releases it without 63 batch-mates.
+        let b2 = b.clone();
+        let t = std::thread::spawn(move || b2.next_batch().unwrap().len());
+        b.submit(43).unwrap();
+        assert_eq!(t.join().unwrap(), 1);
     }
 
+    /// De-flaked: instead of sleeping a fixed 300 ms and hoping producers
+    /// finished, join every producer first and only then close the queue —
+    /// consumers drain the remainder and exit, however slow the runner.
     #[test]
     fn no_items_lost_under_concurrency() {
         let b: Arc<Batcher<u64>> = Arc::new(Batcher::new(8, Duration::from_micros(200), 100_000));
@@ -179,20 +194,22 @@ mod tests {
         let per_producer = 500u64;
         let collected = std::sync::Mutex::new(Vec::<u64>::new());
         std::thread::scope(|s| {
-            for p in 0..n_producers {
-                let b = b.clone();
-                s.spawn(move || {
-                    for i in 0..per_producer {
-                        loop {
-                            match b.submit(p * per_producer + i) {
-                                Ok(()) => break,
-                                Err(SubmitError::Busy) => std::thread::yield_now(),
-                                Err(e) => panic!("{e}"),
+            let producers: Vec<_> = (0..n_producers)
+                .map(|p| {
+                    let b = b.clone();
+                    s.spawn(move || {
+                        for i in 0..per_producer {
+                            loop {
+                                match b.submit(p * per_producer + i) {
+                                    Ok(()) => break,
+                                    Err(SubmitError::Busy) => std::thread::yield_now(),
+                                    Err(e) => panic!("{e}"),
+                                }
                             }
                         }
-                    }
-                });
-            }
+                    })
+                })
+                .collect();
             let consumers: Vec<_> = (0..2)
                 .map(|_| {
                     let b = b.clone();
@@ -205,8 +222,10 @@ mod tests {
                     })
                 })
                 .collect();
-            // Give producers time to finish, then close.
-            std::thread::sleep(Duration::from_millis(300));
+            // Close only after every producer has submitted everything.
+            for p in producers {
+                p.join().unwrap();
+            }
             b.close();
             for c in consumers {
                 c.join().unwrap();

@@ -1,11 +1,41 @@
 //! Serving metrics: counters and latency histograms for the queue, the
-//! engine execution, and end-to-end request time.
+//! engine execution, and end-to-end request time — plus admin-plane lanes
+//! (live store mutations) with cumulative write-verify cost accounting.
 
 use std::collections::BTreeMap;
 use std::sync::Mutex;
 use std::time::Duration;
 
+use crate::am::write::WriteReport;
 use crate::util::Histogram;
+
+/// Admin-plane operation kind — each gets its own metrics lane.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum AdminKind {
+    Update,
+    Insert,
+    Delete,
+}
+
+impl AdminKind {
+    pub fn name(self) -> &'static str {
+        match self {
+            AdminKind::Update => "update",
+            AdminKind::Insert => "insert",
+            AdminKind::Delete => "delete",
+        }
+    }
+
+    fn idx(self) -> usize {
+        match self {
+            AdminKind::Update => 0,
+            AdminKind::Insert => 1,
+            AdminKind::Delete => 2,
+        }
+    }
+
+    const ALL: [AdminKind; 3] = [AdminKind::Update, AdminKind::Insert, AdminKind::Delete];
+}
 
 /// Per-k latency lane: requests asking for the same top-k depth share a
 /// histogram, so a deployment can see whether deep-k readouts (iterated WTA
@@ -34,6 +64,12 @@ fn k_lane(k: usize) -> usize {
     }
 }
 
+/// Per-admin-kind latency lane.
+struct AdminLane {
+    completed: u64,
+    total_us: Histogram,
+}
+
 struct Inner {
     submitted: u64,
     completed: u64,
@@ -44,6 +80,21 @@ struct Inner {
     exec_us: Histogram,
     total_us: Histogram,
     per_k: BTreeMap<usize, KLane>,
+    admin: [AdminLane; 3],
+    admin_rejected: u64,
+    write_cells: u64,
+    write_pulses: u64,
+    write_energy_j: f64,
+    write_latency_s: f64,
+}
+
+impl Inner {
+    fn absorb_write(&mut self, r: &WriteReport) {
+        self.write_cells += r.cells as u64;
+        self.write_pulses += r.pulses as u64;
+        self.write_energy_j += r.energy;
+        self.write_latency_s += r.latency;
+    }
 }
 
 /// Thread-safe metrics sink.
@@ -59,6 +110,25 @@ pub struct PerKSnapshot {
     pub completed: u64,
     pub total_p50_us: f64,
     pub total_p99_us: f64,
+}
+
+/// Per-admin-kind latency summary (only kinds that completed at least once).
+#[derive(Debug, Clone)]
+pub struct AdminLaneSnapshot {
+    pub kind: &'static str,
+    pub completed: u64,
+    pub total_p50_us: f64,
+    pub total_p99_us: f64,
+}
+
+/// Cumulative write-verify cost of the admin plane (from the ±4 V
+/// programming loop's pulse-accurate reports).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct WriteCostSnapshot {
+    pub cells: u64,
+    pub pulses: u64,
+    pub energy_j: f64,
+    pub latency_s: f64,
 }
 
 /// Point-in-time snapshot for reporting.
@@ -78,6 +148,12 @@ pub struct MetricsSnapshot {
     pub total_mean_us: f64,
     /// Latency broken down by requested k, ascending k.
     pub per_k: Vec<PerKSnapshot>,
+    /// Admin-plane lanes (update/insert/delete), only the active ones.
+    pub admin: Vec<AdminLaneSnapshot>,
+    /// Admin ops rejected (bad row, dims mismatch, verify failure).
+    pub admin_rejected: u64,
+    /// Cumulative write cost of the admin plane.
+    pub write: WriteCostSnapshot,
 }
 
 impl Default for Metrics {
@@ -100,6 +176,16 @@ impl Metrics {
                 exec_us: h(),
                 total_us: h(),
                 per_k: BTreeMap::new(),
+                admin: [
+                    AdminLane { completed: 0, total_us: h() },
+                    AdminLane { completed: 0, total_us: h() },
+                    AdminLane { completed: 0, total_us: h() },
+                ],
+                admin_rejected: 0,
+                write_cells: 0,
+                write_pulses: 0,
+                write_energy_j: 0.0,
+                write_latency_s: 0.0,
             }),
         }
     }
@@ -134,6 +220,29 @@ impl Metrics {
         lane.total_us.record((qu + ex).max(0.5));
     }
 
+    /// Record one committed admin op with its wall time and (for ops that
+    /// programmed the array) the write-verify cost report.
+    pub fn on_admin(&self, kind: AdminKind, total: Duration, report: Option<&WriteReport>) {
+        let mut g = self.inner.lock().unwrap();
+        let lane = &mut g.admin[kind.idx()];
+        lane.completed += 1;
+        lane.total_us.record((total.as_secs_f64() * 1e6).max(0.5));
+        if let Some(r) = report {
+            g.absorb_write(r);
+        }
+    }
+
+    /// Account write pulses that were spent even though the op was rejected
+    /// (verify failure): the array fired them regardless.
+    pub fn on_write_spent(&self, report: &WriteReport) {
+        self.inner.lock().unwrap().absorb_write(report);
+    }
+
+    /// Record a rejected admin op (bad row, dims mismatch, verify failure).
+    pub fn on_admin_rejected(&self) {
+        self.inner.lock().unwrap().admin_rejected += 1;
+    }
+
     pub fn snapshot(&self) -> MetricsSnapshot {
         let g = self.inner.lock().unwrap();
         let mean_batch = if g.batch_sizes.is_empty() {
@@ -164,6 +273,26 @@ impl Metrics {
                     total_p99_us: lane.total_us.quantile(0.99),
                 })
                 .collect(),
+            admin: AdminKind::ALL
+                .iter()
+                .filter(|kind| g.admin[kind.idx()].completed > 0)
+                .map(|kind| {
+                    let lane = &g.admin[kind.idx()];
+                    AdminLaneSnapshot {
+                        kind: kind.name(),
+                        completed: lane.completed,
+                        total_p50_us: lane.total_us.quantile(0.5),
+                        total_p99_us: lane.total_us.quantile(0.99),
+                    }
+                })
+                .collect(),
+            admin_rejected: g.admin_rejected,
+            write: WriteCostSnapshot {
+                cells: g.write_cells,
+                pulses: g.write_pulses,
+                energy_j: g.write_energy_j,
+                latency_s: g.write_latency_s,
+            },
         }
     }
 }
@@ -194,6 +323,22 @@ impl MetricsSnapshot {
             out.push_str(&format!(
                 "\n  k={:<4} n={:<8} total µs: p50={:.1} p99={:.1}",
                 lane.k, lane.completed, lane.total_p50_us, lane.total_p99_us
+            ));
+        }
+        for lane in &self.admin {
+            out.push_str(&format!(
+                "\n  admin {:<7} n={:<6} total µs: p50={:.1} p99={:.1}",
+                lane.kind, lane.completed, lane.total_p50_us, lane.total_p99_us
+            ));
+        }
+        if !self.admin.is_empty() || self.admin_rejected > 0 {
+            out.push_str(&format!(
+                "\n  writes: {} cells / {} pulses, {:.2} nJ, {:.1} µs array time, {} rejected",
+                self.write.cells,
+                self.write.pulses,
+                self.write.energy_j * 1e9,
+                self.write.latency_s * 1e6,
+                self.admin_rejected
             ));
         }
         out
@@ -264,5 +409,37 @@ mod tests {
         assert!(text.contains("submitted=1"));
         assert!(text.contains("total"));
         assert!(text.contains("k=3"), "{text}");
+    }
+
+    #[test]
+    fn admin_lanes_accumulate_write_costs() {
+        let m = Metrics::new();
+        assert!(m.snapshot().admin.is_empty(), "no lanes before any admin op");
+        let report = WriteReport {
+            cells: 64,
+            pulses: 100,
+            failures: 0,
+            energy: 1e-13,
+            latency: 3e-6,
+            round_latencies: vec![1e-6, 2e-6],
+        };
+        m.on_admin(AdminKind::Update, Duration::from_micros(40), Some(&report));
+        m.on_admin(AdminKind::Update, Duration::from_micros(60), Some(&report));
+        m.on_admin(AdminKind::Delete, Duration::from_micros(5), None);
+        m.on_admin_rejected();
+        let s = m.snapshot();
+        assert_eq!(s.admin.len(), 2, "only active lanes reported");
+        assert_eq!(s.admin[0].kind, "update");
+        assert_eq!(s.admin[0].completed, 2);
+        assert_eq!(s.admin[1].kind, "delete");
+        assert_eq!(s.admin[1].completed, 1);
+        assert_eq!(s.admin_rejected, 1);
+        assert_eq!(s.write.cells, 128);
+        assert_eq!(s.write.pulses, 200);
+        assert!((s.write.energy_j - 2e-13).abs() < 1e-25);
+        assert!((s.write.latency_s - 6e-6).abs() < 1e-15);
+        let text = s.report();
+        assert!(text.contains("admin update"), "{text}");
+        assert!(text.contains("writes:"), "{text}");
     }
 }

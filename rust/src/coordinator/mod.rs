@@ -5,19 +5,24 @@
 //! (vLLM-router-shaped):
 //!
 //! * [`request`] — request/response types (requests carry a top-k depth,
-//!   responses carry the ranked winners) and submit errors.
+//!   responses carry the ranked winners and the serving epoch), the admin
+//!   ops ([`request::AdminOp`]) and submit errors.
 //! * [`tiles`] — [`tiles::TileManager`]: shards stored words across
 //!   fixed-geometry COSIME tiles and merges per-tile top-k selectors
 //!   (hierarchical WTA — exactly how multiple physical arrays compose,
 //!   §3.5), parallelized over tile×batch work slots with reused buffers.
+//!   Live-updatable with epoch/generation coherence: mutations commit under
+//!   a write lock while in-flight batches score one consistent snapshot.
 //! * [`batcher`] — dynamic batching queue (size + deadline policy) with
 //!   bounded-depth backpressure.
 //! * [`service`] — [`service::AmService`]: worker threads draining the
 //!   batcher into the tile manager's block kernel with worker-lifetime
-//!   buffers (zero per-query allocations); per-request timing; graceful
-//!   shutdown.
+//!   buffers (zero per-query allocations); per-request timing; the admin
+//!   plane ([`service::AmService::admin`]) applying write-verified class
+//!   updates; graceful shutdown.
 //! * [`metrics`] — counters + latency histograms (queue/execute/total),
-//!   broken down per requested k.
+//!   broken down per requested k, plus admin lanes with cumulative
+//!   write-verify cost (pulses, energy, array time).
 //!
 //! Engines are pluggable ([`crate::am::AmEngine`]): digital (bit-exact),
 //! XLA (compiled Pallas artifact), analog (circuit-sim), or the baselines.
@@ -29,7 +34,9 @@ pub mod service;
 pub mod tiles;
 
 pub use batcher::Batcher;
-pub use metrics::{Metrics, MetricsSnapshot, PerKSnapshot};
-pub use request::{RequestTiming, SearchResponse, SubmitError};
+pub use metrics::{
+    AdminKind, AdminLaneSnapshot, Metrics, MetricsSnapshot, PerKSnapshot, WriteCostSnapshot,
+};
+pub use request::{AdminOp, AdminResponse, RequestTiming, SearchResponse, SubmitError};
 pub use service::AmService;
-pub use tiles::{TileManager, TileScratch};
+pub use tiles::{Commit, TileFactory, TileManager, TileScratch};

@@ -1,8 +1,13 @@
-//! Request/response types for the serving path.
+//! Request/response types for the serving path: search submissions plus the
+//! admin plane (live class-vector updates through the write-verify path).
 
 use std::time::Duration;
 
+use crate::am::write::WriteReport;
 use crate::am::SearchResult;
+use crate::util::BitVec;
+
+use super::metrics::AdminKind;
 
 /// Why a submission was rejected.
 #[derive(Debug, Clone, PartialEq, Eq)]
@@ -13,6 +18,9 @@ pub enum SubmitError {
     Closed,
     /// Query malformed (e.g. wrong dimensionality or k = 0).
     BadQuery(String),
+    /// Admin write rejected: cells failed read-verify after the retry
+    /// budget — the word was *not* applied to the serving store.
+    WriteFailed(String),
 }
 
 impl std::fmt::Display for SubmitError {
@@ -21,6 +29,7 @@ impl std::fmt::Display for SubmitError {
             SubmitError::Busy => write!(f, "queue full (backpressure)"),
             SubmitError::Closed => write!(f, "service closed"),
             SubmitError::BadQuery(msg) => write!(f, "bad query: {msg}"),
+            SubmitError::WriteFailed(msg) => write!(f, "write failed: {msg}"),
         }
     }
 }
@@ -48,5 +57,48 @@ pub struct SearchResponse {
     /// Ranked winners, best first: `min(k, rows)` entries with global row
     /// indices (the iterated-WTA-with-inhibition readout of §3.5).
     pub hits: Vec<SearchResult>,
+    /// Store epoch this search was served at: the whole batch scored one
+    /// consistent snapshot of the (possibly live-updating) tile set.
+    pub epoch: u64,
     pub timing: RequestTiming,
+}
+
+/// An admin-plane mutation of the serving store. Update/Insert words pass
+/// through the §4 ±4 V write-verify programming path first, so what the
+/// store serves is what the array would actually read back — and the
+/// response carries the pulse-accurate write cost.
+#[derive(Debug, Clone)]
+pub enum AdminOp {
+    /// Reprogram stored row `row` to `word`.
+    Update { row: usize, word: BitVec },
+    /// Append `word` as a new row (tiles grow as needed).
+    Insert { word: BitVec },
+    /// Remove stored row `row`; rows above shift down by one.
+    Delete { row: usize },
+}
+
+impl AdminOp {
+    /// Metrics lane this op lands in.
+    pub fn kind(&self) -> AdminKind {
+        match self {
+            AdminOp::Update { .. } => AdminKind::Update,
+            AdminOp::Insert { .. } => AdminKind::Insert,
+            AdminOp::Delete { .. } => AdminKind::Delete,
+        }
+    }
+}
+
+/// Outcome of a committed [`AdminOp`].
+#[derive(Debug, Clone)]
+pub struct AdminResponse {
+    /// Row the op affected (for Insert: the new global row index).
+    pub row: usize,
+    /// Store epoch after the commit — searches stamped with an epoch ≥ this
+    /// are guaranteed to observe the mutation.
+    pub epoch: u64,
+    /// Total stored rows after the commit.
+    pub rows: usize,
+    /// Write-verify cost of the programming pass (None for Delete, which
+    /// only retires rows).
+    pub write: Option<WriteReport>,
 }

@@ -8,24 +8,42 @@
 //! straight from the queued jobs into the reused block, scored through the
 //! tile×batch kernel, and only the per-response `hits` vector (the data
 //! handed back across the channel) is allocated.
+//!
+//! Alongside the search plane sits the *admin plane*
+//! ([`AmService::admin`]): live class-vector updates. An Update/Insert word
+//! first passes through the §4 ±4 V write-verify programming model (so the
+//! store serves what the array would actually read back, and the response
+//! carries the pulse-accurate write cost), then commits to the tile manager
+//! under its epoch lock. In-flight batches keep scoring the old snapshot;
+//! every response is stamped with the epoch it was served at.
 
 use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::{mpsc, Arc};
+use std::sync::{mpsc, Arc, Mutex};
 use std::time::{Duration, Instant};
 
+use crate::am::store::program_word_verified;
+use crate::am::write::WriteReport;
 use crate::am::{BlockTopK, QueryBlock, SearchResult};
-use crate::config::CoordinatorConfig;
-use crate::util::BitVec;
+use crate::config::{CoordinatorConfig, CosimeConfig};
+use crate::util::{BitVec, Rng};
 
 use super::batcher::Batcher;
 use super::metrics::{Metrics, MetricsSnapshot};
-use super::request::{RequestTiming, SearchResponse, SubmitError};
+use super::request::{AdminOp, AdminResponse, RequestTiming, SearchResponse, SubmitError};
 use super::tiles::TileManager;
 
 struct Job {
     query: BitVec,
     k: usize,
     reply: mpsc::SyncSender<SearchResponse>,
+}
+
+/// The admin plane's programming model: device/energy config (including
+/// the `[write]` policy) and the cycle-to-cycle stochasticity stream. One
+/// mutex serializes programming passes (a real array has one write port).
+struct WritePath {
+    cfg: CosimeConfig,
+    rng: Rng,
 }
 
 struct Shared {
@@ -37,9 +55,7 @@ struct Shared {
     /// batch is scored at its deepest k, so one unbounded request would tax
     /// every co-batched query.
     max_k_policy: usize,
-    /// Cached [`TileManager::max_k`] (immutable after start; avoids a
-    /// min-fold over every tile engine on each submission).
-    engine_max_k: usize,
+    write: Mutex<WritePath>,
 }
 
 /// Handle to a running AM service. Cloneable; dropping all clones does NOT
@@ -51,9 +67,20 @@ pub struct AmService {
 }
 
 impl AmService {
-    /// Start `cfg.workers` worker threads over a tile manager.
+    /// Start `cfg.workers` worker threads over a tile manager. The admin
+    /// plane's programming model uses default physical parameters; use
+    /// [`AmService::start_with_config`] to supply a full [`CosimeConfig`].
     pub fn start(cfg: &CoordinatorConfig, tiles: TileManager) -> AmService {
-        let engine_max_k = tiles.max_k();
+        let mut full = CosimeConfig::default();
+        full.coordinator = cfg.clone();
+        Self::start_with_config(&full, tiles)
+    }
+
+    /// Start the service with a full configuration: `cfg.coordinator` sets
+    /// the serving policy, `cfg.device`/`cfg.energy` the admin plane's
+    /// programming model and `cfg.write` its pulse/retry policy.
+    pub fn start_with_config(full: &CosimeConfig, tiles: TileManager) -> AmService {
+        let cfg = &full.coordinator;
         let shared = Arc::new(Shared {
             batcher: Batcher::new(
                 cfg.max_batch,
@@ -64,7 +91,10 @@ impl AmService {
             metrics: Metrics::new(),
             running: AtomicBool::new(true),
             max_k_policy: cfg.max_k.max(1),
-            engine_max_k,
+            write: Mutex::new(WritePath {
+                cfg: full.clone(),
+                rng: Rng::seed_from_u64(full.write.seed),
+            }),
         });
         let workers = (0..cfg.workers.max(1))
             .map(|w| {
@@ -102,9 +132,10 @@ impl AmService {
         if k == 0 {
             return Err(SubmitError::BadQuery("k must be at least 1".to_string()));
         }
+        let rows = self.shared.tiles.rows();
         // Policy gate: deep k taxes the whole batch (scored at the batch's
         // deepest k), so requests beyond the configured cap are rejected.
-        if k.min(self.shared.tiles.rows()) > self.shared.max_k_policy {
+        if k.min(rows) > self.shared.max_k_policy {
             return Err(SubmitError::BadQuery(format!(
                 "k={k} exceeds the service's max_k policy ({})",
                 self.shared.max_k_policy
@@ -112,9 +143,11 @@ impl AmService {
         }
         // Capability gate: a tile backed by a single-winner substrate (e.g.
         // a fixed-argmax XLA artifact) cannot serve deep k; reject here
-        // rather than failing inside a worker mid-batch.
-        let max_k = self.shared.engine_max_k;
-        if k.min(self.shared.tiles.rows()) > max_k {
+        // rather than failing inside a worker mid-batch. `max_k` is one
+        // atomic load — every admin commit refreshes it under the tile
+        // write lock, so it cannot go stale under racing mutations.
+        let max_k = self.shared.tiles.max_k();
+        if k.min(rows) > max_k {
             return Err(SubmitError::BadQuery(format!(
                 "k={k} exceeds the engine's top-k capability ({max_k})"
             )));
@@ -179,6 +212,96 @@ impl AmService {
         }
     }
 
+    /// Apply a live store mutation (the admin plane). Update/Insert words
+    /// are programmed through the write-verify model first — a word whose
+    /// cells fail verify is rejected with [`SubmitError::WriteFailed`] and
+    /// never served. Commits are epoch-ordered against in-flight batches:
+    /// every search response stamped with an epoch ≥ the returned one
+    /// observes this mutation.
+    pub fn admin(&self, op: AdminOp) -> Result<AdminResponse, SubmitError> {
+        if !self.shared.running.load(Ordering::Acquire) {
+            return Err(SubmitError::Closed);
+        }
+        let kind = op.kind();
+        let t0 = Instant::now();
+        match self.apply_admin(op) {
+            Ok((row, commit, write)) => {
+                self.shared.metrics.on_admin(kind, t0.elapsed(), write.as_ref());
+                // rows comes from the commit itself (captured under the tile
+                // write lock), so it cannot disagree with the epoch when
+                // admin ops race each other.
+                Ok(AdminResponse { row, epoch: commit.epoch, rows: commit.rows, write })
+            }
+            Err(e) => {
+                self.shared.metrics.on_admin_rejected();
+                Err(e)
+            }
+        }
+    }
+
+    fn apply_admin(
+        &self,
+        op: AdminOp,
+    ) -> Result<(usize, super::tiles::Commit, Option<WriteReport>), SubmitError> {
+        let bad = |e: anyhow::Error| SubmitError::BadQuery(format!("{e:#}"));
+        match op {
+            AdminOp::Update { row, word } => {
+                // Cheap bounds pre-check before spending programming pulses
+                // (the tile manager re-validates under its lock).
+                if row >= self.shared.tiles.rows() {
+                    return Err(SubmitError::BadQuery(format!(
+                        "row {row} out of range {}",
+                        self.shared.tiles.rows()
+                    )));
+                }
+                let (programmed, report) = self.program(&word)?;
+                let commit = self.shared.tiles.update_row(row, &programmed).map_err(bad)?;
+                Ok((row, commit, Some(report)))
+            }
+            AdminOp::Insert { word } => {
+                let (programmed, report) = self.program(&word)?;
+                let (row, commit) = self.shared.tiles.insert_row(&programmed).map_err(bad)?;
+                Ok((row, commit, Some(report)))
+            }
+            AdminOp::Delete { row } => {
+                let commit = self.shared.tiles.delete_row(row).map_err(bad)?;
+                Ok((row, commit, None))
+            }
+        }
+    }
+
+    /// Run one word through the ±4 V write-verify programming model,
+    /// returning what the array reads back plus the pulse-accurate cost.
+    fn program(&self, word: &BitVec) -> Result<(BitVec, WriteReport), SubmitError> {
+        if word.len() != self.shared.tiles.dims() {
+            return Err(SubmitError::BadQuery(format!(
+                "word has {} bits, engine expects {}",
+                word.len(),
+                self.shared.tiles.dims()
+            )));
+        }
+        let mut w = self.shared.write.lock().unwrap();
+        let WritePath { cfg, rng } = &mut *w;
+        program_word_verified(cfg, word, rng).map_err(|e| {
+            // The array fired the pulses whether or not verify passed —
+            // account the spent cost before rejecting the word (mirrors
+            // AmStore::program's policy).
+            self.shared.metrics.on_write_spent(&e.report);
+            SubmitError::WriteFailed(e.to_string())
+        })
+    }
+
+    /// Current store epoch (bumped by every committed admin mutation).
+    pub fn epoch(&self) -> u64 {
+        self.shared.tiles.epoch()
+    }
+
+    /// Consistent flat copy of the stored words — feed this to
+    /// [`crate::am::store::AmStore`] to persist a live server.
+    pub fn snapshot_words(&self) -> Vec<BitVec> {
+        self.shared.tiles.snapshot_words()
+    }
+
     pub fn metrics(&self) -> MetricsSnapshot {
         self.shared.metrics.snapshot()
     }
@@ -224,7 +347,7 @@ fn worker_loop(shared: &Shared) {
             block.push(&pending.item.query);
             max_k = max_k.max(pending.item.k);
         }
-        shared.tiles.search_block(block.view(), max_k, &mut scratch, &mut out);
+        let epoch = shared.tiles.search_block(block.view(), max_k, &mut scratch, &mut out);
         let exec = now.elapsed();
         let batch_size = batch.len();
         for (qi, pending) in batch.into_iter().enumerate() {
@@ -239,6 +362,7 @@ fn worker_loop(shared: &Shared) {
                 winner: head.winner,
                 score: head.score,
                 hits,
+                epoch,
                 timing,
             });
         }
@@ -495,6 +619,129 @@ mod tests {
         assert!(!m.per_k.is_empty(), "per-k lanes recorded");
         let lanes: usize = m.per_k.iter().map(|l| l.completed as usize).sum();
         assert_eq!(lanes, 240, "every completion lands in a k lane");
+        svc.shutdown();
+    }
+
+    #[test]
+    fn admin_update_reflects_in_subsequent_searches() {
+        let cfg = CoordinatorConfig::default();
+        let (svc, words) = service(60, 64, &cfg);
+        let epoch0 = svc.epoch();
+        assert_eq!(epoch0, 0);
+
+        // Update row 7 to a fresh word through the admin plane.
+        let mut r = rng(31);
+        let new_word = BitVec::random(64, 0.5, &mut r);
+        let resp = svc.admin(AdminOp::Update { row: 7, word: new_word.clone() }).unwrap();
+        assert_eq!(resp.row, 7);
+        assert_eq!(resp.rows, 60);
+        assert!(resp.epoch > epoch0);
+        let report = resp.write.expect("update programs the array");
+        assert_eq!(report.failures, 0);
+        assert!(report.energy > 0.0 && report.latency > 0.0);
+
+        // Subsequent searches observe the update and carry the new epoch.
+        let hit = svc.search_topk_blocking(new_word.clone(), 2).unwrap();
+        assert_eq!(hit.winner, 7, "updated word must win its own search");
+        assert!(hit.epoch >= resp.epoch);
+        // The old word no longer lives at row 7 (an exact self-match would
+        // score exactly its popcount).
+        let old = svc.search_blocking(words[7].clone()).unwrap();
+        let self_score = f64::from(words[7].count_ones());
+        assert!(
+            old.winner != 7 || (old.score - self_score).abs() > 1e-9,
+            "row 7 still serves the pre-update word"
+        );
+
+        let m = svc.metrics();
+        assert_eq!(m.admin.len(), 1);
+        assert_eq!(m.admin[0].kind, "update");
+        assert_eq!(m.admin[0].completed, 1);
+        assert_eq!(m.write.cells, 64);
+        assert!(m.write.pulses as usize >= 64);
+        assert!(m.write.energy_j > 0.0);
+        svc.shutdown();
+    }
+
+    #[test]
+    fn admin_insert_and_delete_resize_the_store() {
+        let cfg = CoordinatorConfig::default();
+        let (svc, _) = service(10, 64, &cfg);
+        let mut r = rng(33);
+        let w = BitVec::random(64, 0.5, &mut r);
+        let resp = svc.admin(AdminOp::Insert { word: w.clone() }).unwrap();
+        assert_eq!(resp.row, 10);
+        assert_eq!(resp.rows, 11);
+        assert_eq!(svc.rows(), 11);
+        let hit = svc.search_blocking(w.clone()).unwrap();
+        assert_eq!(hit.winner, 10, "inserted row is searchable");
+
+        let resp = svc.admin(AdminOp::Delete { row: 10 }).unwrap();
+        assert_eq!(resp.rows, 10);
+        assert!(resp.write.is_none(), "delete spends no programming pulses");
+        assert_eq!(svc.rows(), 10);
+        assert_eq!(svc.snapshot_words().len(), 10);
+
+        let m = svc.metrics();
+        let kinds: Vec<&str> = m.admin.iter().map(|l| l.kind).collect();
+        assert_eq!(kinds, vec!["insert", "delete"]);
+        svc.shutdown();
+    }
+
+    #[test]
+    fn admin_rejects_bad_ops_and_counts_them() {
+        let cfg = CoordinatorConfig::default();
+        let (svc, _) = service(10, 64, &cfg);
+        // Wrong dims.
+        match svc.admin(AdminOp::Insert { word: BitVec::zeros(32) }) {
+            Err(SubmitError::BadQuery(msg)) => assert!(msg.contains("64"), "{msg}"),
+            other => panic!("expected BadQuery, got {other:?}"),
+        }
+        // Row out of range.
+        assert!(matches!(
+            svc.admin(AdminOp::Update { row: 99, word: BitVec::zeros(64) }),
+            Err(SubmitError::BadQuery(_))
+        ));
+        assert!(matches!(
+            svc.admin(AdminOp::Delete { row: 99 }),
+            Err(SubmitError::BadQuery(_))
+        ));
+        assert_eq!(svc.metrics().admin_rejected, 3);
+        let svc2 = svc.clone();
+        svc.shutdown();
+        assert!(matches!(
+            svc2.admin(AdminOp::Delete { row: 0 }),
+            Err(SubmitError::Closed)
+        ));
+    }
+
+    /// A word whose cells fail write-verify must be rejected — the serving
+    /// store never holds bits the array could not actually program.
+    #[test]
+    fn admin_write_verify_failure_rejected() {
+        let mut full = CosimeConfig::default();
+        full.write.pulse_scale = 0.4; // sub-coercive: can never switch
+        let mut r = rng(35);
+        let words: Vec<BitVec> = (0..10).map(|_| BitVec::random(64, 0.5, &mut r)).collect();
+        let tiles = TileManager::build(words.clone(), 64, |w| {
+            Ok::<Box<dyn AmEngine>, anyhow::Error>(Box::new(DigitalExactEngine::new(w)))
+        })
+        .unwrap();
+        let svc = AmService::start_with_config(&full, tiles);
+        let target = BitVec::random(64, 0.5, &mut r);
+        match svc.admin(AdminOp::Update { row: 2, word: target }) {
+            Err(SubmitError::WriteFailed(msg)) => assert!(msg.contains("stuck"), "{msg}"),
+            other => panic!("expected WriteFailed, got {other:?}"),
+        }
+        // Store unchanged: the old word still serves.
+        let hit = svc.search_blocking(words[2].clone()).unwrap();
+        assert_eq!(hit.winner, 2);
+        assert_eq!(hit.epoch, 0, "no epoch bump on a rejected write");
+        let m = svc.metrics();
+        assert_eq!(m.admin_rejected, 1);
+        // The pulses were fired even though verify failed: the cost metrics
+        // must account them (mirroring AmStore's accounting policy).
+        assert!(m.write.pulses > 0 && m.write.energy_j > 0.0, "spent pulses accounted");
         svc.shutdown();
     }
 

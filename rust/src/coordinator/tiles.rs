@@ -10,18 +10,83 @@
 //! work slots in parallel, then merges the bounded selector buffers. All
 //! slot buffers live in a caller-held [`TileScratch`] and are reused, so the
 //! steady-state serving loop performs zero per-query allocations.
+//!
+//! # Live mutation and epoch coherence
+//!
+//! The tile set is mutable: [`TileManager::update_row`] /
+//! [`TileManager::insert_row`] / [`TileManager::delete_row`] apply live
+//! class-vector changes. Coherence is generation-based: every mutation
+//! commits under the write half of an `RwLock` and bumps the *epoch*
+//! counter; every batched search holds the read half for the whole block,
+//! so an in-flight batch always sees one consistent snapshot — a tile can
+//! grow, shrink or rebalance between batches but never under one.
+//! [`TileManager::search_block`] returns the epoch it served so responses
+//! can be stamped.
+//!
+//! Mutations prefer the engines' *incremental repack*
+//! ([`AmEngine::update_row`] and friends — the packed-store engines patch
+//! their fused u64 matrix in O(word) without rebuilding); engines that
+//! cannot mutate in place (analog dies, fixed XLA artifacts) fall back to
+//! rebuilding just the affected tile through the stored factory.
 
-use anyhow::Result;
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::RwLock;
+
+use anyhow::{bail, Result};
 
 use crate::am::{AmEngine, BlockTopK, QueriesRef, QueryBlock, SearchResult, SearchScratch};
 use crate::util::{par, BitVec};
 
-/// A sharded AM: `tiles[i]` stores rows [offsets[i], offsets[i+1]).
-pub struct TileManager {
+/// Engine constructor used to build tiles and to rebuild one tile when its
+/// engine cannot apply a mutation in place.
+pub type TileFactory = Box<dyn Fn(Vec<BitVec>) -> Result<Box<dyn AmEngine>> + Send + Sync>;
+
+/// One consistent snapshot of the sharded store: `tiles[i]` stores rows
+/// [offsets[i], offsets[i+1]), with `words` the per-tile source of truth
+/// (kept for rebuilds and snapshot persistence of a live server).
+struct TileSet {
     tiles: Vec<Box<dyn AmEngine>>,
+    words: Vec<Vec<BitVec>>,
     offsets: Vec<usize>,
-    dims: usize,
     total_rows: usize,
+}
+
+impl TileSet {
+    /// (tile, local row) owning global `row`. Caller guarantees bounds.
+    fn tile_of(&self, row: usize) -> (usize, usize) {
+        let t = self.offsets.partition_point(|&o| o <= row) - 1;
+        (t, row - self.offsets[t])
+    }
+}
+
+/// Outcome of one committed mutation, captured under the same write lock
+/// that ordered it — epoch, row count and engine capability are mutually
+/// consistent (reading them afterwards could interleave with a concurrent
+/// writer's commit).
+#[derive(Debug, Clone, Copy)]
+pub struct Commit {
+    /// Store epoch after this commit.
+    pub epoch: u64,
+    /// Total stored rows after this commit.
+    pub rows: usize,
+    /// Deepest per-query k every tile can serve after this commit.
+    pub max_k: usize,
+}
+
+/// A sharded, live-updatable AM (see module docs for coherence semantics).
+pub struct TileManager {
+    inner: RwLock<TileSet>,
+    factory: TileFactory,
+    tile_capacity: usize,
+    dims: usize,
+    /// Generation counter: bumped once per committed mutation, read by
+    /// every search under the same lock that orders the mutations.
+    epoch: AtomicU64,
+    /// Cached min-fold of the tile engines' `max_k`, refreshed by every
+    /// commit *while the write lock is held* (so racing admins cannot leave
+    /// a stale value behind). Lets the submit hot path gate on engine
+    /// capability with one atomic load instead of a lock + O(tiles) fold.
+    max_k_cache: AtomicUsize,
 }
 
 /// One tile×batch work slot: a query range against one tile, with its own
@@ -49,46 +114,71 @@ pub struct TileScratch {
 
 impl TileManager {
     /// Shard `words` into tiles of at most `tile_capacity` rows, building
-    /// each tile with `factory` (pluggable engine backend).
+    /// each tile with `factory` (pluggable engine backend). The factory is
+    /// retained for live mutations: tiles whose engine cannot mutate in
+    /// place are rebuilt through it.
     pub fn build(
         words: Vec<BitVec>,
         tile_capacity: usize,
-        factory: impl Fn(Vec<BitVec>) -> Result<Box<dyn AmEngine>>,
+        factory: impl Fn(Vec<BitVec>) -> Result<Box<dyn AmEngine>> + Send + Sync + 'static,
     ) -> Result<TileManager> {
         assert!(tile_capacity >= 1, "tile capacity must be positive");
         assert!(!words.is_empty(), "tile manager needs stored words");
         let dims = words[0].len();
         let total_rows = words.len();
         let mut tiles = Vec::new();
+        let mut tile_words = Vec::new();
         let mut offsets = vec![0usize];
         let mut remaining = words;
         while !remaining.is_empty() {
             let take = remaining.len().min(tile_capacity);
             let rest = remaining.split_off(take);
-            tiles.push(factory(remaining)?);
+            tiles.push(factory(remaining.clone())?);
+            tile_words.push(remaining);
             offsets.push(offsets.last().unwrap() + take);
             remaining = rest;
         }
-        Ok(TileManager { tiles, offsets, dims, total_rows })
+        let max_k = tiles.iter().map(|t| t.max_k()).min().unwrap_or(usize::MAX);
+        Ok(TileManager {
+            inner: RwLock::new(TileSet { tiles, words: tile_words, offsets, total_rows }),
+            factory: Box::new(factory),
+            tile_capacity,
+            dims,
+            epoch: AtomicU64::new(0),
+            max_k_cache: AtomicUsize::new(max_k),
+        })
     }
 
     pub fn tile_count(&self) -> usize {
-        self.tiles.len()
+        self.inner.read().unwrap().tiles.len()
     }
 
     pub fn rows(&self) -> usize {
-        self.total_rows
+        self.inner.read().unwrap().total_rows
     }
 
     pub fn dims(&self) -> usize {
         self.dims
     }
 
+    /// Current store generation (bumped by every committed mutation).
+    pub fn epoch(&self) -> u64 {
+        self.epoch.load(Ordering::Acquire)
+    }
+
     /// Deepest per-query k every tile can serve (min over tile engines;
     /// e.g. 1 when any tile is a fixed-argmax XLA artifact). The service
-    /// rejects deeper requests at submit time.
+    /// rejects deeper requests at submit time. One atomic load — the value
+    /// is maintained by every commit under the write lock.
     pub fn max_k(&self) -> usize {
-        self.tiles.iter().map(|t| t.max_k()).min().unwrap_or(usize::MAX)
+        self.max_k_cache.load(Ordering::Acquire)
+    }
+
+    /// Flat copy of every stored word in global row order — the persistence
+    /// path of a live server (consistent: taken under the read lock).
+    pub fn snapshot_words(&self) -> Vec<BitVec> {
+        let set = self.inner.read().unwrap();
+        set.words.iter().flat_map(|w| w.iter().cloned()).collect()
     }
 
     /// Fresh (empty) scratch for [`TileManager::search_block`]; buffers grow
@@ -97,9 +187,109 @@ impl TileManager {
         TileScratch { slots: Vec::new() }
     }
 
+    // ---- live mutation (write side of the epoch lock) --------------------
+
+    /// Bump the epoch and capture the commit outcome while still holding
+    /// the write guard, so epoch/rows/max_k cannot interleave with another
+    /// writer's commit. Also refreshes [`TileManager::max_k`]'s cache —
+    /// writers are serialized here, so the cache always reflects the
+    /// latest committed tile set.
+    fn commit(&self, set: &TileSet) -> Commit {
+        let max_k = set.tiles.iter().map(|t| t.max_k()).min().unwrap_or(usize::MAX);
+        self.max_k_cache.store(max_k, Ordering::Release);
+        Commit {
+            epoch: self.epoch.fetch_add(1, Ordering::AcqRel) + 1,
+            rows: set.total_rows,
+            max_k,
+        }
+    }
+
+    /// Reprogram global row `row` to `word`. In-place incremental repack
+    /// when the tile engine supports it, tile rebuild otherwise.
+    pub fn update_row(&self, row: usize, word: &BitVec) -> Result<Commit> {
+        if word.len() != self.dims {
+            bail!("word has {} bits, engine expects {}", word.len(), self.dims);
+        }
+        let mut set = self.inner.write().unwrap();
+        if row >= set.total_rows {
+            bail!("row {row} out of range {}", set.total_rows);
+        }
+        let (t, local) = set.tile_of(row);
+        if !set.tiles[t].update_row(local, word) {
+            let mut ws = set.words[t].clone();
+            ws[local] = word.clone();
+            set.tiles[t] = (self.factory)(ws)?;
+        }
+        set.words[t][local] = word.clone();
+        Ok(self.commit(&set))
+    }
+
+    /// Append `word` as a new global row: into the last tile while it has
+    /// capacity, otherwise a fresh tile is built (the store grows tile by
+    /// tile, like racking another physical array). Returns (row, commit).
+    pub fn insert_row(&self, word: &BitVec) -> Result<(usize, Commit)> {
+        if word.len() != self.dims {
+            bail!("word has {} bits, engine expects {}", word.len(), self.dims);
+        }
+        let mut set = self.inner.write().unwrap();
+        let row = set.total_rows;
+        let t = set.tiles.len() - 1;
+        if set.words[t].len() < self.tile_capacity {
+            if !set.tiles[t].push_row(word) {
+                let mut ws = set.words[t].clone();
+                ws.push(word.clone());
+                set.tiles[t] = (self.factory)(ws)?;
+            }
+            set.words[t].push(word.clone());
+            *set.offsets.last_mut().unwrap() = row + 1;
+        } else {
+            let engine = (self.factory)(vec![word.clone()])?;
+            set.tiles.push(engine);
+            set.words.push(vec![word.clone()]);
+            set.offsets.push(row + 1);
+        }
+        set.total_rows = row + 1;
+        Ok((row, self.commit(&set)))
+    }
+
+    /// Remove global row `row`; rows above shift down by one. A tile that
+    /// empties is dropped whole. The last remaining row cannot be deleted
+    /// (engines need at least one stored word).
+    pub fn delete_row(&self, row: usize) -> Result<Commit> {
+        let mut set = self.inner.write().unwrap();
+        if row >= set.total_rows {
+            bail!("row {row} out of range {}", set.total_rows);
+        }
+        if set.total_rows == 1 {
+            bail!("cannot delete the last stored row");
+        }
+        let (t, local) = set.tile_of(row);
+        if set.words[t].len() == 1 {
+            set.tiles.remove(t);
+            set.words.remove(t);
+            set.offsets.remove(t + 1);
+        } else {
+            if !set.tiles[t].remove_row(local) {
+                let mut ws = set.words[t].clone();
+                ws.remove(local);
+                set.tiles[t] = (self.factory)(ws)?;
+            }
+            set.words[t].remove(local);
+        }
+        for o in set.offsets.iter_mut().skip(t + 1) {
+            *o -= 1;
+        }
+        set.total_rows -= 1;
+        Ok(self.commit(&set))
+    }
+
+    // ---- search (read side of the epoch lock) ----------------------------
+
     /// The hierarchical batched top-k kernel: every query of `queries`
     /// against every tile, results in `out` (one ranked selector per query,
-    /// global row indices, k clamped to the store size).
+    /// global row indices, k clamped to the store size). Returns the epoch
+    /// of the snapshot served — the whole block scores against one
+    /// consistent tile set even while writers queue.
     ///
     /// Work is decomposed into tile×batch slots filled in parallel (each
     /// slot is one tile against one contiguous query segment), then the
@@ -113,15 +303,18 @@ impl TileManager {
         k: usize,
         scratch: &mut TileScratch,
         out: &mut BlockTopK,
-    ) {
+    ) -> u64 {
         assert_eq!(queries.dims(), self.dims, "query dims mismatch");
-        let kk = k.min(self.total_rows);
+        let guard = self.inner.read().unwrap();
+        let set: &TileSet = &guard;
+        let epoch = self.epoch.load(Ordering::Acquire);
+        let kk = k.min(set.total_rows);
         out.reset(queries.len(), kk);
         if queries.is_empty() || kk == 0 {
-            return;
+            return epoch;
         }
 
-        let n_tiles = self.tiles.len();
+        let n_tiles = set.tiles.len();
         let threads = par::default_threads();
         if scratch.slots.is_empty() {
             scratch.slots.push(TileSlot::new());
@@ -132,10 +325,10 @@ impl TileManager {
         // per-tile loop but allocation-free and k-deep.
         if n_tiles == 1 || queries.len() == 1 || threads <= 1 {
             let slot = &mut scratch.slots[0];
-            for (t, tile) in self.tiles.iter().enumerate() {
-                tile.search_block(queries, self.offsets[t], &mut slot.scratch, out.selectors_mut());
+            for (t, tile) in set.tiles.iter().enumerate() {
+                tile.search_block(queries, set.offsets[t], &mut slot.scratch, out.selectors_mut());
             }
-            return;
+            return epoch;
         }
 
         // Parallel path: tile×batch slots. Segments along the batch axis
@@ -160,9 +353,9 @@ impl TileManager {
         par::par_for_each_mut(slots, |_, slot| {
             if slot.q0 < slot.q1 {
                 let sub = queries.slice(slot.q0, slot.q1);
-                self.tiles[slot.tile].search_block(
+                set.tiles[slot.tile].search_block(
                     sub,
-                    self.offsets[slot.tile],
+                    set.offsets[slot.tile],
                     &mut slot.scratch,
                     slot.out.selectors_mut(),
                 );
@@ -175,6 +368,7 @@ impl TileManager {
                 out.selectors_mut()[slot.q0 + j].merge_from(sel);
             }
         }
+        epoch
     }
 
     /// Global top-k for one query (convenience; allocates its own buffers).
@@ -203,11 +397,12 @@ impl TileManager {
     /// assert the equivalence).
     pub fn search(&self, query: &BitVec) -> SearchResult {
         assert_eq!(query.len(), self.dims, "query dims mismatch");
+        let set = self.inner.read().unwrap();
         let mut best = SearchResult { winner: 0, score: f64::NEG_INFINITY };
-        for (t, tile) in self.tiles.iter().enumerate() {
+        for (t, tile) in set.tiles.iter().enumerate() {
             let local = tile.search(query);
             if local.score > best.score {
-                best = SearchResult { winner: self.offsets[t] + local.winner, score: local.score };
+                best = SearchResult { winner: set.offsets[t] + local.winner, score: local.score };
             }
         }
         best
@@ -230,7 +425,7 @@ impl TileManager {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::am::{AmEngine, DigitalExactEngine, HammingEngine};
+    use crate::am::{AmEngine, ApproxCosineEngine, DigitalExactEngine, HammingEngine};
     use crate::util::{prop, rng, BitVec};
 
     fn digital_factory(words: Vec<BitVec>) -> Result<Box<dyn AmEngine>> {
@@ -294,7 +489,7 @@ mod tests {
             let hamming = r.bool(0.5);
             let words: Vec<BitVec> =
                 (0..rows).map(|_| BitVec::random(dims, 0.2 + 0.6 * r.f64(), r)).collect();
-            let factory = |w: Vec<BitVec>| -> Result<Box<dyn AmEngine>> {
+            let factory = move |w: Vec<BitVec>| -> Result<Box<dyn AmEngine>> {
                 if hamming {
                     Ok(Box::new(HammingEngine::new(w)))
                 } else {
@@ -405,5 +600,271 @@ mod tests {
         let words: Vec<BitVec> = (0..4).map(|_| BitVec::random(32, 0.5, &mut r)).collect();
         let tm = TileManager::build(words, 2, digital_factory).unwrap();
         let _ = tm.search(&BitVec::zeros(16));
+    }
+
+    // ---- live mutation ---------------------------------------------------
+
+    /// Mirror-model property: any sequence of update/insert/delete applied
+    /// to the tile manager matches a flat engine rebuilt from the mirrored
+    /// word list — for both an in-place-capable engine (digital) and one
+    /// that forces the tile-rebuild path (approx, which also re-freezes its
+    /// norm, exercising the factory fallback equivalence).
+    #[test]
+    fn mutations_match_rebuilt_flat_reference() {
+        prop::check("tile mutations == flat rebuild", 15, 9, |r| {
+            let dims = 16 + 8 * r.below(6);
+            let rows = 3 + r.below(30);
+            let cap = 1 + r.below(12);
+            let mut mirror: Vec<BitVec> =
+                (0..rows).map(|_| BitVec::random(dims, 0.2 + 0.6 * r.f64(), r)).collect();
+            let tm = TileManager::build(mirror.clone(), cap, digital_factory)
+                .map_err(|e| e.to_string())?;
+            let mut last_epoch = tm.epoch();
+            for _ in 0..10 {
+                match r.below(3) {
+                    0 => {
+                        let row = r.below(mirror.len());
+                        let w = BitVec::random(dims, 0.2 + 0.6 * r.f64(), r);
+                        mirror[row] = w.clone();
+                        let c = tm.update_row(row, &w).map_err(|e| e.to_string())?;
+                        crate::prop_assert!(c.epoch > last_epoch, "epoch must advance");
+                        crate::prop_assert!(c.rows == mirror.len(), "commit row count");
+                        last_epoch = c.epoch;
+                    }
+                    1 => {
+                        let w = BitVec::random(dims, 0.2 + 0.6 * r.f64(), r);
+                        mirror.push(w.clone());
+                        let (row, c) = tm.insert_row(&w).map_err(|e| e.to_string())?;
+                        crate::prop_assert!(row == mirror.len() - 1, "insert appends");
+                        crate::prop_assert!(c.rows == mirror.len(), "commit row count");
+                        last_epoch = c.epoch;
+                    }
+                    _ => {
+                        if mirror.len() > 1 {
+                            let row = r.below(mirror.len());
+                            mirror.remove(row);
+                            last_epoch =
+                                tm.delete_row(row).map_err(|e| e.to_string())?.epoch;
+                        }
+                    }
+                }
+                crate::prop_assert!(tm.rows() == mirror.len(), "row count tracks mirror");
+            }
+            let flat = DigitalExactEngine::new(mirror.clone());
+            let queries: Vec<BitVec> = (0..4).map(|_| BitVec::random(dims, 0.5, r)).collect();
+            let k = 1 + r.below(6);
+            let got = tm.search_topk_batch(&queries, k);
+            for (q, hits) in queries.iter().zip(&got) {
+                let want = flat.search_topk(q, k);
+                crate::prop_assert!(hits.len() == want.len(), "result depth");
+                for (a, b) in hits.iter().zip(&want) {
+                    crate::prop_assert!(
+                        a.winner == b.winner && a.score == b.score,
+                        "mutated tiles ({}, {}) vs flat ({}, {})",
+                        a.winner,
+                        a.score,
+                        b.winner,
+                        b.score
+                    );
+                }
+            }
+            crate::prop_assert!(
+                tm.snapshot_words() == mirror,
+                "snapshot_words must equal the mirrored store"
+            );
+            Ok(())
+        });
+    }
+
+    /// The factory-rebuild fallback path (engines without in-place
+    /// mutation) must produce the same results as in-place repack.
+    #[test]
+    fn rebuild_fallback_matches_inplace_path() {
+        struct Frozen(DigitalExactEngine);
+        impl AmEngine for Frozen {
+            fn name(&self) -> &str {
+                "frozen"
+            }
+            fn metric(&self) -> crate::am::Metric {
+                self.0.metric()
+            }
+            fn rows(&self) -> usize {
+                self.0.rows()
+            }
+            fn dims(&self) -> usize {
+                self.0.dims()
+            }
+            fn scores_into(&self, query: &BitVec, out: &mut Vec<f64>) {
+                self.0.scores_into(query, out)
+            }
+            // No update_row/push_row/remove_row overrides: the tile manager
+            // must fall back to rebuilding the tile via the factory.
+        }
+        let mut r = rng(17);
+        let words: Vec<BitVec> = (0..20).map(|_| BitVec::random(64, 0.5, &mut r)).collect();
+        let frozen = TileManager::build(words.clone(), 6, |w| {
+            Ok(Box::new(Frozen(DigitalExactEngine::new(w))) as Box<dyn AmEngine>)
+        })
+        .unwrap();
+        let inplace = TileManager::build(words.clone(), 6, digital_factory).unwrap();
+
+        let w = BitVec::random(64, 0.5, &mut r);
+        frozen.update_row(13, &w).unwrap();
+        inplace.update_row(13, &w).unwrap();
+        let extra = BitVec::random(64, 0.5, &mut r);
+        frozen.insert_row(&extra).unwrap();
+        inplace.insert_row(&extra).unwrap();
+        frozen.delete_row(2).unwrap();
+        inplace.delete_row(2).unwrap();
+
+        for _ in 0..10 {
+            let q = BitVec::random(64, 0.5, &mut r);
+            let a = frozen.search_topk(&q, 4);
+            let b = inplace.search_topk(&q, 4);
+            for (x, y) in a.iter().zip(&b) {
+                assert_eq!(x.winner, y.winner);
+                assert_eq!(x.score, y.score);
+            }
+        }
+    }
+
+    /// The approx engine re-freezes its store-wide denominator on mutation;
+    /// through the tile manager it must stay identical to a fresh engine.
+    #[test]
+    fn approx_engine_refreezes_norm_through_tiles() {
+        let mut r = rng(19);
+        let words: Vec<BitVec> = (0..12).map(|_| BitVec::random(64, 0.3, &mut r)).collect();
+        let tm = TileManager::build(words.clone(), 100, |w| {
+            Ok(Box::new(ApproxCosineEngine::new(w)) as Box<dyn AmEngine>)
+        })
+        .unwrap();
+        // A much denser word shifts E[Y]: the frozen denominator must follow.
+        let dense = BitVec::from_bools(vec![true; 64]);
+        tm.update_row(0, &dense).unwrap();
+        let mut mirror = words;
+        mirror[0] = dense;
+        let fresh = ApproxCosineEngine::new(mirror);
+        for _ in 0..10 {
+            let q = BitVec::random(64, 0.5, &mut r);
+            let a = tm.search_topk(&q, 3);
+            let b = fresh.search_topk(&q, 3);
+            for (x, y) in a.iter().zip(&b) {
+                assert_eq!(x.winner, y.winner);
+                assert_eq!(x.score, y.score, "re-frozen norm must match a fresh build");
+            }
+        }
+    }
+
+    #[test]
+    fn insert_grows_tiles_and_delete_drops_empty_tiles() {
+        let mut r = rng(21);
+        let words: Vec<BitVec> = (0..6).map(|_| BitVec::random(32, 0.5, &mut r)).collect();
+        let tm = TileManager::build(words.clone(), 3, digital_factory).unwrap();
+        assert_eq!(tm.tile_count(), 2);
+
+        // Filling the last tile then one more: a third tile appears.
+        let w = BitVec::random(32, 0.5, &mut r);
+        let (row, _) = tm.insert_row(&w).unwrap();
+        assert_eq!(row, 6);
+        assert_eq!(tm.tile_count(), 3);
+        assert_eq!(tm.rows(), 7);
+        assert_eq!(tm.search(&w).winner, 6, "new row is globally addressable");
+
+        // Deleting the new tile's only row drops the tile entirely.
+        tm.delete_row(6).unwrap();
+        assert_eq!(tm.tile_count(), 2);
+        assert_eq!(tm.rows(), 6);
+
+        // Deleting from the middle shifts global indices down.
+        let last = words[5].clone();
+        tm.delete_row(0).unwrap();
+        assert_eq!(tm.rows(), 5);
+        assert_eq!(tm.search(&last).winner, 4, "indices above the hole shift down");
+
+        // Guard rails.
+        assert!(tm.update_row(99, &w).is_err());
+        assert!(tm.delete_row(99).is_err());
+        assert!(tm.insert_row(&BitVec::zeros(16)).is_err());
+        for _ in 0..4 {
+            let rows = tm.rows();
+            tm.delete_row(rows - 1).unwrap();
+        }
+        assert_eq!(tm.rows(), 1);
+        assert!(tm.delete_row(0).is_err(), "last row is undeletable");
+    }
+
+    /// Coherence under racing readers: batched searches concurrent with a
+    /// writer must never observe a torn store — every response is exactly
+    /// consistent with *some* epoch's snapshot, epochs are monotone per
+    /// reader, and winners stay in bounds while rows come and go.
+    #[test]
+    fn racing_updates_never_tear_searches() {
+        let dims = 128;
+        let rows = 48;
+        // Equal-popcount construction: every word in both generations has
+        // exactly dims/2 ones, so any *consistent* snapshot bounds every
+        // score by P = dims/2 (X ≤ P ⇒ X²/Y ≤ P). A torn row could only
+        // arise from a racing repack, which the epoch lock forbids.
+        let mut r = rng(23);
+        let half_dense = |r: &mut crate::util::Rng| {
+            let mut bits = vec![false; dims];
+            for b in bits.iter_mut().take(dims / 2) {
+                *b = true;
+            }
+            r.shuffle(&mut bits);
+            BitVec::from_bools(bits)
+        };
+        let old: Vec<BitVec> = (0..rows).map(|_| half_dense(&mut r)).collect();
+        let new: Vec<BitVec> = (0..rows).map(|_| half_dense(&mut r)).collect();
+        let tm = TileManager::build(old.clone(), 12, digital_factory).unwrap();
+        let p = (dims / 2) as f64;
+
+        let done = std::sync::atomic::AtomicBool::new(false);
+        std::thread::scope(|s| {
+            let tm = &tm;
+            let done = &done;
+            let new = &new;
+            let old = &old;
+            s.spawn(move || {
+                for (i, w) in new.iter().enumerate() {
+                    tm.update_row(i, w).unwrap();
+                }
+                done.store(true, Ordering::Release);
+            });
+            for t in 0..3u64 {
+                s.spawn(move || {
+                    let mut r = rng(100 + t);
+                    let mut block = QueryBlock::new(dims);
+                    let mut scratch = tm.scratch();
+                    let mut out = BlockTopK::new();
+                    let mut last_epoch = 0u64;
+                    while !done.load(Ordering::Acquire) {
+                        let i = r.below(rows);
+                        let queries = [old[i].clone(), new[i].clone()];
+                        block.repack(queries.iter());
+                        let epoch = tm.search_block(block.view(), 2, &mut scratch, &mut out);
+                        assert!(epoch >= last_epoch, "epochs must be monotone per reader");
+                        last_epoch = epoch;
+                        for qi in 0..2 {
+                            for hit in out.query(qi) {
+                                assert!(hit.winner < rows, "winner in bounds");
+                                assert!(
+                                    hit.score <= p + 1e-9,
+                                    "score {} exceeds the consistent-snapshot bound {p}",
+                                    hit.score
+                                );
+                            }
+                        }
+                    }
+                });
+            }
+        });
+        // Quiesced: every row serves its new word exactly.
+        for (i, w) in new.iter().enumerate() {
+            let hit = tm.search(w);
+            assert_eq!(hit.winner, i, "row {i} must serve its updated word");
+            assert!((hit.score - p).abs() < 1e-9, "exact self-match score");
+        }
+        assert_eq!(tm.epoch(), rows as u64, "one epoch per committed update");
     }
 }

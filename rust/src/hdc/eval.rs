@@ -72,6 +72,39 @@ pub fn evaluate_topk_recall(
     hits as f64 / ds.test_len().max(1) as f64
 }
 
+/// Classification accuracy of a *live* AM service over the encoded test
+/// set — the warm-start / online-update evaluation path: the class
+/// hypervectors live inside the coordinator (possibly loaded from a
+/// snapshot and mutated through the admin plane), and every inference rides
+/// the batched serving stack instead of a local engine.
+///
+/// Panics if the service cannot answer a query even after backpressure
+/// retries (Closed, persistent Busy): a transport failure must surface as
+/// such, not silently score as a misclassification.
+pub fn evaluate_service_accuracy(
+    ds: &Dataset,
+    model: &HdcModel,
+    svc: &crate::coordinator::AmService,
+) -> EvalReport {
+    let mut correct = 0usize;
+    for (x, &y) in ds.test_x.iter().zip(&ds.test_y) {
+        let h = model.encoder.encode(x);
+        let resp = svc
+            .search_with_retry(h, 20)
+            .expect("AM service failed to answer during evaluation");
+        if resp.winner == y {
+            correct += 1;
+        }
+    }
+    EvalReport {
+        dataset: ds.name.clone(),
+        engine: "service".to_string(),
+        dims: model.encoder.dims(),
+        correct,
+        total: ds.test_len(),
+    }
+}
+
 /// Convenience engine constructors for the metric comparison figures.
 pub fn cosine_engine(rows: Vec<BitVec>) -> Box<dyn AmEngine> {
     Box::new(DigitalExactEngine::new(rows))
@@ -207,6 +240,32 @@ mod tests {
         let acc = evaluate_accuracy(&d, cfg, cosine_engine).accuracy();
         assert!((top1 - acc).abs() < 1e-12, "top-1 recall {top1} == accuracy {acc}");
         assert!(top3 >= top1, "top-3 {top3} must dominate top-1 {top1}");
+    }
+
+    /// Service-path accuracy must match the local reference engine exactly
+    /// (same class hypervectors, same metric — only the transport differs).
+    #[test]
+    fn service_accuracy_matches_local_engine() {
+        use crate::am::{AmEngine, DigitalExactEngine};
+        use crate::config::CosimeConfig;
+        use crate::coordinator::{AmService, TileManager};
+
+        let d = ds();
+        let cfg = TrainConfig { dims: 256, epochs: 1, seed: 14, ..Default::default() };
+        let model = HdcModel::train(&d, cfg);
+        let hvs = model.class_hypervectors();
+        let local = evaluate_accuracy(&d, cfg, cosine_engine);
+
+        let tiles = TileManager::build(hvs, 64, |w| {
+            Ok(Box::new(DigitalExactEngine::new(w)) as Box<dyn AmEngine>)
+        })
+        .unwrap();
+        let svc = AmService::start(&CosimeConfig::default().coordinator, tiles);
+        let served = evaluate_service_accuracy(&d, &model, &svc);
+        assert_eq!(served.correct, local.correct, "transport must not change answers");
+        assert_eq!(served.total, local.total);
+        assert_eq!(served.engine, "service");
+        svc.shutdown();
     }
 
     #[test]

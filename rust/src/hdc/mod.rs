@@ -15,8 +15,8 @@ mod trainer;
 pub use dataset::{Dataset, DatasetSpec, SyntheticParams};
 pub use encoder::RandomProjectionEncoder;
 pub use eval::{
-    approx_engine, cosine_engine, evaluate_accuracy, evaluate_topk_recall, few_shot_accuracy,
-    hamming_engine, EvalReport, FewShotSpec,
+    approx_engine, cosine_engine, evaluate_accuracy, evaluate_service_accuracy,
+    evaluate_topk_recall, few_shot_accuracy, hamming_engine, EvalReport, FewShotSpec,
 };
 pub use level::LevelEncoder;
 pub use trainer::{AnyEncoder, EncoderKind, HdcModel, TrainConfig};

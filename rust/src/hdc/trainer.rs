@@ -162,14 +162,31 @@ impl HdcModel {
     /// Binarized class hypervectors: majority vote per dimension
     /// (bit = 1 ⇔ more than half the bundled samples had a 1 there).
     pub fn class_hypervectors(&self) -> Vec<BitVec> {
-        self.acc
-            .iter()
-            .zip(&self.counts)
-            .map(|(acc, &n)| {
-                let thresh = n as f64 / 2.0;
-                BitVec::from_bools(acc.iter().map(|&v| v as f64 > thresh))
-            })
-            .collect()
+        (0..self.classes).map(|c| self.class_hypervector(c)).collect()
+    }
+
+    /// Binarized hypervector of one class (what the AM stores for it).
+    pub fn class_hypervector(&self, class: usize) -> BitVec {
+        let thresh = self.counts[class] as f64 / 2.0;
+        BitVec::from_bools(self.acc[class].iter().map(|&v| v as f64 > thresh))
+    }
+
+    /// One OnlineHD-style retraining step on a single labeled sample:
+    /// encode, classify, and on a mistake strengthen the true class while
+    /// weakening the prediction. Returns the classes whose *binarized*
+    /// hypervectors may have changed (empty when the sample was already
+    /// classified correctly) — exactly the rows a live server needs to
+    /// reprogram through the coordinator's admin plane.
+    pub fn online_update(&mut self, x: &[f32], y: usize) -> Vec<usize> {
+        let h = self.encoder.encode(x);
+        let class_hvs = self.class_hypervectors();
+        let pred = Self::classify_against(&class_hvs, &h);
+        if pred == y {
+            return Vec::new();
+        }
+        self.bundle(y, &h, 1);
+        self.bundle(pred, &h, -1);
+        vec![y, pred]
     }
 
     /// Classify an encoded query against explicit class hypervectors using
@@ -276,6 +293,35 @@ mod tests {
         let hv = &m.class_hypervectors()[0];
         assert_eq!(hv.to_bytes(), vec![1, 1, 0, 0]);
         let _ = ds;
+    }
+
+    #[test]
+    fn online_updates_touch_only_mistaken_classes() {
+        let ds = small_ds();
+        let mut m = HdcModel::train(&ds, TrainConfig { dims: 256, epochs: 0, seed: 6, ..Default::default() });
+        let mut touched_any = false;
+        let mut errors = 0usize;
+        for (x, &y) in ds.train_x.iter().zip(&ds.train_y).take(60) {
+            let touched = m.online_update(x, y);
+            if touched.is_empty() {
+                continue;
+            }
+            errors += 1;
+            touched_any = true;
+            assert_eq!(touched.len(), 2, "true class + mistaken prediction");
+            assert!(touched.contains(&y));
+            for &c in &touched {
+                assert!(c < ds.classes);
+                assert_eq!(m.class_hypervector(c).len(), 256);
+            }
+        }
+        assert!(touched_any, "a single-pass model should still make mistakes");
+        // Per-class accessor agrees with the batch accessor after updates.
+        let after = m.class_hypervectors();
+        for (c, hv) in after.iter().enumerate() {
+            assert_eq!(&m.class_hypervector(c), hv);
+        }
+        assert!(errors < 60, "not every sample should be wrong");
     }
 
     #[test]

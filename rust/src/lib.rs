@@ -14,13 +14,17 @@
 //!   (device + circuit backed), a bit-exact digital engine, and the
 //!   Hamming / approximate-cosine baseline AMs the paper compares against.
 //!   [`am::kernel`] is the batched, allocation-free search-kernel interface
-//!   (query blocks + bounded top-k selectors) every layer above serves with.
+//!   (query blocks + bounded top-k selectors) every layer above serves with;
+//!   [`am::store`] is the mutable class-vector store (write-verified
+//!   insert/update/delete + snapshot persistence for warm starts).
 //! * [`energy`] — energy / latency / area accounting calibrated to Table 1.
 //! * [`baselines`] — GPU cost model (GTX 1080) and published AM comparison rows.
 //! * [`hdc`] — hyperdimensional-computing application layer (paper §4.2):
 //!   encoder, single-pass trainer, synthetic datasets with Table 2 shapes.
 //! * [`coordinator`] — the L3 serving engine: request router, dynamic batcher,
-//!   tile manager with hierarchical winner merge, metrics, backpressure.
+//!   tile manager with hierarchical winner merge (live-updatable, epoch
+//!   coherent), the admin plane for write-verified class updates, metrics,
+//!   backpressure.
 //! * [`runtime`] — PJRT/XLA runtime that loads AOT-lowered JAX/Pallas artifacts
 //!   (`artifacts/*.hlo.txt`) and runs them from the Rust hot path.
 //! * [`repro`] — regeneration harnesses for every table and figure in the paper.

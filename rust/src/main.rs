@@ -6,17 +6,24 @@
 //!   all       run every regeneration (writes results/ + prints everything)
 //!   search    one-off NN search over random or worst-case stored words
 //!   serve     start the AM serving engine and drive a synthetic workload
+//!             (--snapshot PATH warm-starts from a saved AM snapshot)
 //!   hdc       train + evaluate the HDC case study end to end
+//!             (--snapshot PATH saves the trained AM, write costs included)
+//!   live      train → snapshot → warm-start a server → stream online HDC
+//!             class updates through the coordinator's admin plane
 //!   artifacts list the AOT artifacts the runtime can load
 //!
 //! Common flags: --results DIR, --seed N, --subsample F (dataset fraction),
 //! --trials N (Monte Carlo), --engine digital|analog|xla.
 
 use anyhow::{bail, Result};
+use cosime::am::store::AmStore;
 use cosime::am::{AmEngine, DigitalExactEngine};
 use cosime::config::CosimeConfig;
-use cosime::coordinator::{AmService, TileManager};
-use cosime::hdc::{Dataset, DatasetSpec, HdcModel, SyntheticParams, TrainConfig};
+use cosime::coordinator::{AdminOp, AmService, TileManager};
+use cosime::hdc::{
+    evaluate_service_accuracy, Dataset, DatasetSpec, HdcModel, SyntheticParams, TrainConfig,
+};
 use cosime::repro;
 use cosime::runtime::{RuntimeHandle, XlaAmEngine};
 use cosime::util::cli::Args;
@@ -72,6 +79,7 @@ fn dispatch(args: &Args) -> Result<()> {
         Some("search") => cmd_search(args),
         Some("serve") => cmd_serve(args),
         Some("hdc") => cmd_hdc(args),
+        Some("live") => cmd_live(args),
         Some("artifacts") => cmd_artifacts(args),
         Some(other) => bail!("unknown subcommand '{other}' (see README)"),
         None => {
@@ -86,9 +94,10 @@ fn print_usage() {
         "cosime — FeFET in-memory cosine-similarity search engine (ICCAD'22 reproduction)\n\n\
          usage: cosime <subcommand> [flags]\n\n\
          repro:  fig1 fig2 fig4a fig4b fig6 fig7 fig8 fig9 table1 table2 all\n\
-         system: search serve hdc artifacts\n\n\
+         system: search serve hdc live artifacts\n\n\
          flags:  --results DIR  --seed N  --subsample F  --trials N\n\
-                 --engine digital|analog|xla  --rows N --dims N --queries N --k N"
+                 --engine digital|analog|xla  --rows N --dims N --queries N --k N\n\
+                 --snapshot PATH (hdc: save trained AM; serve: warm-start from it)"
     );
 }
 
@@ -175,15 +184,29 @@ fn cmd_search(args: &Args) -> Result<()> {
 }
 
 fn cmd_serve(args: &Args) -> Result<()> {
-    let rows = args.get_usize("rows", 1024);
-    let dims = args.get_usize("dims", 1024);
     let queries = args.get_usize("queries", 2000);
     let seed = args.get_u64("seed", 2);
     let engine_kind = args.get_str("engine", "digital").to_string();
     let cfg = CosimeConfig::default();
 
-    let mut r = rng(seed);
-    let words: Vec<BitVec> = (0..rows).map(|_| BitVec::random(dims, 0.5, &mut r)).collect();
+    // Warm start from a snapshot when given, random words otherwise.
+    let words: Vec<BitVec> = if let Some(snap) = args.get("snapshot") {
+        let store = AmStore::load(&cfg, snap)?;
+        anyhow::ensure!(!store.is_empty(), "snapshot {snap} has no rows to serve");
+        println!(
+            "warm start: {} rows x {} bits from {snap} (programmed cost: {})",
+            store.rows(),
+            store.dims(),
+            store.write_stats().report()
+        );
+        store.words().to_vec()
+    } else {
+        let rows = args.get_usize("rows", 1024);
+        let dims = args.get_usize("dims", 1024);
+        let mut r = rng(seed);
+        (0..rows).map(|_| BitVec::random(dims, 0.5, &mut r)).collect()
+    };
+    let (rows, dims) = (words.len(), words[0].len());
     let tile_rows = cfg.array.rows;
     let ek = engine_kind.clone();
     let tiles = TileManager::build(words, tile_rows, move |w| build_engine(&ek, w, seed))?;
@@ -193,7 +216,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
         engine_kind,
         cfg.coordinator.workers
     );
-    let svc = AmService::start(&cfg.coordinator, tiles);
+    let svc = AmService::start_with_config(&cfg, tiles);
 
     let t0 = Instant::now();
     std::thread::scope(|s| {
@@ -256,6 +279,90 @@ fn cmd_hdc(args: &Args) -> Result<()> {
         dt.as_secs_f64() * 1e6 / ds.test_len() as f64,
         engine.name()
     );
+
+    // Persist the trained AM (programming every class hypervector through
+    // the write-verify path, so the snapshot carries the real write cost).
+    if let Some(path) = args.get("snapshot") {
+        let cfg = CosimeConfig::default();
+        let mut store = AmStore::new(&cfg, dims);
+        for (c, hv) in model.class_hypervectors().iter().enumerate() {
+            store.insert(&format!("class-{c}"), hv)?;
+        }
+        store.save(path)?;
+        println!("snapshot: {} rows -> {path} ({})", store.rows(), store.write_stats().report());
+    }
+    Ok(())
+}
+
+/// End-to-end live-update demo: train HDC, snapshot the AM to disk,
+/// warm-start a server from the snapshot, then stream online retraining
+/// updates through the coordinator's admin plane and re-evaluate — the
+/// write→serve loop closed, with write energy/latency from the verify loop.
+fn cmd_live(args: &Args) -> Result<()> {
+    let sub = args.get_f64("subsample", 0.05);
+    let dims = args.get_usize("dims-hv", 512);
+    let updates = args.get_usize("updates", 200);
+    let cfg = CosimeConfig::default();
+    let ds = Dataset::synthetic(
+        DatasetSpec::Isolet,
+        SyntheticParams { subsample: sub, ..Default::default() },
+        1,
+    );
+    // epochs = 0 leaves mistakes for the online phase to fix.
+    let mut model =
+        HdcModel::train(&ds, TrainConfig { dims, epochs: 0, seed: 3, ..Default::default() });
+
+    // Snapshot the trained AM.
+    let dir = std::env::temp_dir().join(format!("cosime-live-{}", std::process::id()));
+    std::fs::create_dir_all(&dir)?;
+    let snap = dir.join("am.json");
+    let mut store = AmStore::new(&cfg, dims);
+    for (c, hv) in model.class_hypervectors().iter().enumerate() {
+        store.insert(&format!("class-{c}"), hv)?;
+    }
+    store.save(&snap)?;
+    println!("snapshot: {} classes -> {:?} ({})", store.rows(), snap, store.write_stats().report());
+
+    // Warm-start the serving stack from disk.
+    let store = AmStore::load(&cfg, &snap)?;
+    let tiles = TileManager::build(store.words().to_vec(), cfg.array.rows, |w| {
+        Ok(Box::new(DigitalExactEngine::new(w)) as Box<dyn AmEngine>)
+    })?;
+    let svc = AmService::start_with_config(&cfg, tiles);
+    let before = evaluate_service_accuracy(&ds, &model, &svc);
+    println!(
+        "warm-started server: {} rows, accuracy {:.1} % (epoch {})",
+        svc.rows(),
+        100.0 * before.accuracy(),
+        svc.epoch()
+    );
+
+    // Online retraining: each mistaken train sample reprograms the touched
+    // class rows through the admin plane.
+    let n = updates.min(ds.train_len());
+    let mut reprogrammed = 0usize;
+    for i in 0..n {
+        for c in model.online_update(&ds.train_x[i], ds.train_y[i]) {
+            svc.admin(AdminOp::Update { row: c, word: model.class_hypervector(c) })?;
+            reprogrammed += 1;
+        }
+    }
+    let after = evaluate_service_accuracy(&ds, &model, &svc);
+    let m = svc.metrics();
+    println!(
+        "online phase: {n} samples, {reprogrammed} class reprograms -> epoch {}\n\
+         write cost: {} pulses, {:.2} nJ, {:.1} µs array time\n\
+         accuracy: {:.1} % -> {:.1} %",
+        svc.epoch(),
+        m.write.pulses,
+        m.write.energy_j * 1e9,
+        m.write.latency_s * 1e6,
+        100.0 * before.accuracy(),
+        100.0 * after.accuracy(),
+    );
+    println!("\n{}", m.report());
+    svc.shutdown();
+    std::fs::remove_dir_all(&dir).ok();
     Ok(())
 }
 

@@ -121,11 +121,17 @@ impl Histogram {
         self.stats.max()
     }
 
-    /// Approximate quantile from bucket boundaries.
+    /// Approximate quantile from bucket boundaries. `q = 0` returns the
+    /// tracked minimum (the bucket scan's target count would be 0 there, so
+    /// the very first — possibly empty — bucket's upper bound would win
+    /// regardless of the data).
     pub fn quantile(&self, q: f64) -> f64 {
         let total = self.count();
         if total == 0 {
             return 0.0;
+        }
+        if q <= 0.0 {
+            return self.stats.min();
         }
         let target = (q.clamp(0.0, 1.0) * total as f64).ceil() as u64;
         let mut acc = 0u64;
@@ -171,6 +177,21 @@ mod tests {
         assert!((rs.stddev() - stddev(&xs)).abs() < 1e-12);
         assert_eq!(rs.min(), 1.0);
         assert_eq!(rs.max(), 9.0);
+    }
+
+    /// Regression: with only large values recorded, `quantile(0.0)` used to
+    /// return the first bucket's upper bound (the target count is 0, so the
+    /// scan stopped immediately); it must return the tracked minimum.
+    #[test]
+    fn quantile_zero_returns_min_not_first_bucket() {
+        let mut h = Histogram::log_spaced(1.0, 1000.0, 30);
+        h.record(500.0);
+        h.record(900.0);
+        assert_eq!(h.quantile(0.0), 500.0);
+        assert!(h.quantile(1.0) >= 900.0);
+        // Empty histogram stays at the 0.0 sentinel.
+        let empty = Histogram::log_spaced(1.0, 1000.0, 30);
+        assert_eq!(empty.quantile(0.0), 0.0);
     }
 
     #[test]

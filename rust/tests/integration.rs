@@ -3,10 +3,14 @@
 //! engine backend, analog/digital/XLA agreement, and failure injection.
 
 use cosime::am::analog::AnalogCosimeEngine;
+use cosime::am::store::AmStore;
 use cosime::am::{AmEngine, ApproxCosineEngine, DigitalExactEngine, HammingEngine};
 use cosime::config::CosimeConfig;
-use cosime::coordinator::{AmService, SubmitError, TileManager};
-use cosime::hdc::{Dataset, DatasetSpec, EncoderKind, HdcModel, SyntheticParams, TrainConfig};
+use cosime::coordinator::{AdminOp, AmService, SubmitError, TileManager};
+use cosime::hdc::{
+    evaluate_service_accuracy, Dataset, DatasetSpec, EncoderKind, HdcModel, SyntheticParams,
+    TrainConfig,
+};
 use cosime::runtime::{RuntimeHandle, Tensor, XlaAmEngine};
 use cosime::util::{rng, BitVec};
 
@@ -247,6 +251,128 @@ fn hdc_rp_encoder_matches_aot_artifact_semantics() {
             );
         }
     }
+}
+
+// ---------------------------------------------------------------------------
+// The write→serve loop: snapshot persistence + live updates end to end
+// ---------------------------------------------------------------------------
+
+/// The acceptance path of the mutable-store subsystem: program a store with
+/// write-verify accounting, snapshot it to disk, warm-start a server from
+/// the snapshot, apply a class-vector update through the coordinator, and
+/// see the subsequent batched top-k reflect it — with write energy/latency
+/// reported from the verify loop.
+#[test]
+fn snapshot_warm_start_and_live_update_end_to_end() {
+    let dir = std::env::temp_dir().join(format!("cosime-e2e-snap-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let cfg = CosimeConfig::default();
+
+    // Program a store (every word passes the ±4 V write-verify loop).
+    let words = random_words(40, 256, 77);
+    let mut store = AmStore::new(&cfg, 256);
+    for (i, w) in words.iter().enumerate() {
+        store.insert(&format!("w{i}"), w).expect("program word");
+    }
+    assert_eq!(store.write_stats().failures, 0);
+    assert!(store.write_stats().energy_j > 0.0 && store.write_stats().latency_s > 0.0);
+
+    // Snapshot to disk and load it back.
+    let snap = dir.join("am.json");
+    store.save(&snap).unwrap();
+    let loaded = AmStore::load(&cfg, &snap).unwrap();
+    assert_eq!(loaded.words(), store.words());
+    assert_eq!(loaded.labels(), store.labels());
+
+    // A different physical config must refuse the snapshot.
+    let mut other = cfg.clone();
+    other.device.v_read = 1.1;
+    assert!(AmStore::load(&other, &snap).is_err());
+
+    // Warm-start the serving stack from the loaded words.
+    let tiles = TileManager::build(loaded.words().to_vec(), 16, |w| {
+        Ok(Box::new(DigitalExactEngine::new(w)) as Box<dyn AmEngine>)
+    })
+    .unwrap();
+    let svc = AmService::start_with_config(&cfg, tiles);
+    let resp = svc.search_blocking(words[3].clone()).unwrap();
+    assert_eq!(resp.winner, 3, "warm-started store serves the programmed words");
+    let epoch0 = resp.epoch;
+
+    // Live class-vector update through the coordinator's admin plane.
+    let mut r = rng(99);
+    let new_word = BitVec::random(256, 0.5, &mut r);
+    let admin = svc.admin(AdminOp::Update { row: 3, word: new_word.clone() }).unwrap();
+    assert!(admin.epoch > epoch0);
+    let report = admin.write.expect("update reports its write cost");
+    assert_eq!(report.failures, 0);
+    assert!(report.energy > 0.0 && report.latency > 0.0);
+    assert_eq!(report.latency, report.round_latencies.iter().sum::<f64>());
+
+    // Subsequent batched top-k reflects the update.
+    let resp = svc.search_topk_blocking(new_word.clone(), 3).unwrap();
+    assert_eq!(resp.winner, 3, "updated word wins its own search");
+    assert!(resp.epoch >= admin.epoch, "served at or after the commit epoch");
+
+    // Metrics carry the admin lane + cumulative write cost.
+    let m = svc.metrics();
+    assert!(m.admin.iter().any(|l| l.kind == "update" && l.completed == 1), "{:?}", m.admin);
+    assert_eq!(m.write.cells, 256);
+    assert!(m.write.pulses > 0 && m.write.energy_j > 0.0 && m.write.latency_s > 0.0);
+
+    // A live server snapshots back to disk, round-tripping the update.
+    let mut store2 = AmStore::new(&cfg, 256);
+    for (i, w) in svc.snapshot_words().iter().enumerate() {
+        store2.insert(&format!("w{i}"), w).expect("reprogram");
+    }
+    assert_eq!(store2.word(3), &new_word);
+    svc.shutdown();
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// The HDC retraining loop over the serving stack: warm-start from class
+/// hypervectors, stream OnlineHD updates through the admin plane, and the
+/// service must end up serving exactly the retrained model.
+#[test]
+fn hdc_online_updates_flow_through_admin_plane() {
+    let ds = Dataset::synthetic(
+        DatasetSpec::Isolet,
+        SyntheticParams { subsample: 0.03, ..Default::default() },
+        7,
+    );
+    let cfg = CosimeConfig::default();
+    let mut model =
+        HdcModel::train(&ds, TrainConfig { dims: 256, epochs: 0, ..Default::default() });
+    let tiles = TileManager::build(model.class_hypervectors(), 8, |w| {
+        Ok(Box::new(DigitalExactEngine::new(w)) as Box<dyn AmEngine>)
+    })
+    .unwrap();
+    let svc = AmService::start_with_config(&cfg, tiles);
+    let before = evaluate_service_accuracy(&ds, &model, &svc);
+
+    let mut reprogrammed = 0usize;
+    for (x, &y) in ds.train_x.iter().zip(&ds.train_y).take(120) {
+        for c in model.online_update(x, y) {
+            svc.admin(AdminOp::Update { row: c, word: model.class_hypervector(c) })
+                .expect("admin update");
+            reprogrammed += 1;
+        }
+    }
+    assert!(reprogrammed > 0, "a single-pass model must have had mistakes to fix");
+
+    // The served store now equals the retrained model bit-for-bit.
+    assert_eq!(svc.snapshot_words(), model.class_hypervectors());
+    assert_eq!(svc.epoch(), reprogrammed as u64);
+    let after = evaluate_service_accuracy(&ds, &model, &svc);
+    assert!(
+        after.accuracy() >= before.accuracy() - 0.05,
+        "online retraining must not collapse accuracy: {} -> {}",
+        before.accuracy(),
+        after.accuracy()
+    );
+    let m = svc.metrics();
+    assert_eq!(m.write.cells, 256 * reprogrammed as u64);
+    svc.shutdown();
 }
 
 // ---------------------------------------------------------------------------
