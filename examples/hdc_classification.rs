@@ -1,4 +1,4 @@
-//! End-to-end driver (deliverable (b)/EXPERIMENTS.md §E2E): the full HDC
+//! End-to-end driver (rust/DESIGN.md §E2E): the full HDC
 //! classification pipeline of paper §4.2 on a real small workload, proving
 //! all layers compose:
 //!

@@ -1,0 +1,187 @@
+//! Load generator for the `cosimed` TCP frontend: N client threads drive a
+//! server over real sockets and report throughput plus latency percentiles
+//! — the benchmarkable host interface the serving story needs.
+//!
+//! Two phases per client thread:
+//!   1. *latency probe* — strict request/response round trips, one batched
+//!      search frame at a time, each wall-timed individually;
+//!   2. *throughput* — pipelined windows (`depth` frames of `batch` queries
+//!      back to back on one socket), wall-timed per window.
+//!
+//! Run against an external server:
+//!   cargo run --release -- serve --listen 127.0.0.1:7411 --shards 2
+//!   cargo run --release --example loadgen 127.0.0.1:7411
+//! or self-hosted (no arguments): the example spins up an in-process
+//! 2-shard server on an ephemeral port and drives that.
+//!
+//! Usage: loadgen [addr|self] [clients] [frames-per-client] [batch] [k] [depth]
+
+use std::sync::Mutex;
+use std::time::{Duration, Instant};
+
+use cosime::am::{AmEngine, DigitalExactEngine};
+use cosime::config::CosimeConfig;
+use cosime::server::{Client, CosimeServer, ErrorCode, ShardRouter, WireError};
+use cosime::util::{percentile, rng, BitVec};
+
+fn main() -> anyhow::Result<()> {
+    let mut args = std::env::args().skip(1);
+    let addr_arg = args.next().unwrap_or_else(|| "self".to_string());
+    let clients: usize = args.next().and_then(|s| s.parse().ok()).unwrap_or(4);
+    let frames: usize = args.next().and_then(|s| s.parse().ok()).unwrap_or(400);
+    let batch: usize = args.next().and_then(|s| s.parse().ok()).unwrap_or(8);
+    let k: usize = args.next().and_then(|s| s.parse().ok()).unwrap_or(3);
+    let depth: usize = args.next().and_then(|s| s.parse().ok()).unwrap_or(4);
+
+    // Self-host when no address was given: an in-process 2-shard server.
+    let (addr, server) = if addr_arg == "self" {
+        let mut cfg = CosimeConfig::default();
+        cfg.server.listen = "127.0.0.1:0".to_string();
+        cfg.server.shards = 2;
+        cfg.coordinator.workers = 2;
+        let mut r = rng(11);
+        let words: Vec<BitVec> =
+            (0..2048).map(|_| BitVec::random(1024, 0.5, &mut r)).collect();
+        let router = ShardRouter::build(&cfg, cfg.server.shards, cfg.array.rows, words, |w| {
+            Ok(Box::new(DigitalExactEngine::new(w)) as Box<dyn AmEngine>)
+        })?;
+        let server = CosimeServer::serve(&cfg.server, router)?;
+        println!("self-hosted cosimed on {} (2 shards)", server.local_addr());
+        (server.local_addr().to_string(), Some(server))
+    } else {
+        (addr_arg, None)
+    };
+
+    // Discover the served store's shape.
+    let mut probe = Client::connect_retry(addr.as_str(), 10, Duration::from_millis(50))?;
+    let health = probe.health()?;
+    println!(
+        "server: {} rows x {} bits, {} shard(s), epoch {}",
+        health.rows, health.dims, health.shards, health.epoch
+    );
+    let dims = health.dims as usize;
+    drop(probe);
+
+    let latencies_us = Mutex::new(Vec::<f64>::new()); // phase 1, per frame
+    let windows_us = Mutex::new(Vec::<f64>::new()); // phase 2, per window
+    let busy_retries = std::sync::atomic::AtomicUsize::new(0);
+    let probe_frames = (frames / 4).max(1);
+    let t0 = Instant::now();
+    std::thread::scope(|s| {
+        for c in 0..clients as u64 {
+            let addr = addr.as_str();
+            let latencies_us = &latencies_us;
+            let windows_us = &windows_us;
+            let busy_retries = &busy_retries;
+            s.spawn(move || {
+                let mut r = rng(100 + c);
+                let mut client = Client::connect_retry(addr, 10, Duration::from_millis(50))
+                    .expect("connect");
+                let queries = |r: &mut cosime::util::Rng, n: usize| -> Vec<BitVec> {
+                    (0..n).map(|_| BitVec::random(dims, 0.5, r)).collect()
+                };
+
+                // Phase 1: strict round trips, exact per-frame latency.
+                let mut mine = Vec::with_capacity(probe_frames);
+                for _ in 0..probe_frames {
+                    let qs = queries(&mut r, batch);
+                    let t = Instant::now();
+                    match client.search_batch(&qs, k) {
+                        Ok(resp) => {
+                            assert_eq!(resp.results.len(), batch);
+                            mine.push(t.elapsed().as_secs_f64() * 1e6);
+                        }
+                        Err(e) if is_busy(&e) => {
+                            busy_retries.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                            std::thread::sleep(Duration::from_micros(200));
+                        }
+                        Err(e) => panic!("search failed: {e:#}"),
+                    }
+                }
+                latencies_us.lock().unwrap().extend(mine);
+
+                // Phase 2: pipelined windows for throughput.
+                let mut mine = Vec::new();
+                let mut done = 0usize;
+                while done < frames {
+                    let take = depth.min(frames - done);
+                    let t = Instant::now();
+                    let mut pipe = client.pipeline();
+                    for _ in 0..take {
+                        let qs = queries(&mut r, batch);
+                        pipe.search_batch(&qs, k).expect("queue frame");
+                    }
+                    match pipe.finish() {
+                        Ok(responses) => {
+                            assert_eq!(responses.len(), take);
+                            mine.push(t.elapsed().as_secs_f64() * 1e6);
+                            done += take;
+                        }
+                        Err(e) if is_busy(&e) => {
+                            // The connection is out of sync after a failed
+                            // pipeline: reconnect and retry the window.
+                            busy_retries.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                            client = Client::connect_retry(addr, 10, Duration::from_millis(50))
+                                .expect("reconnect");
+                            std::thread::sleep(Duration::from_micros(500));
+                        }
+                        Err(e) => panic!("pipelined search failed: {e:#}"),
+                    }
+                }
+                windows_us.lock().unwrap().extend(mine);
+            });
+        }
+    });
+    let wall = t0.elapsed().as_secs_f64();
+
+    let lats = latencies_us.into_inner().unwrap();
+    let wins = windows_us.into_inner().unwrap();
+    let probe_queries = lats.len() * batch;
+    let pipelined_queries = clients * frames * batch;
+    println!(
+        "\nlatency probe ({probe_queries} queries, {batch}/frame, k={k}):\n  \
+         per-frame µs: p50={:.1} p90={:.1} p99={:.1} max={:.1}",
+        percentile(&lats, 50.0),
+        percentile(&lats, 90.0),
+        percentile(&lats, 99.0),
+        percentile(&lats, 100.0),
+    );
+    println!(
+        "pipelined ({pipelined_queries} queries, depth {depth}):\n  \
+         per-window µs: p50={:.1} p90={:.1} p99={:.1}",
+        percentile(&wins, 50.0),
+        percentile(&wins, 90.0),
+        percentile(&wins, 99.0),
+    );
+    println!(
+        "throughput: {:.0} queries/s over {:.2} s wall ({} clients, {} busy retries)",
+        (probe_queries + pipelined_queries) as f64 / wall,
+        wall,
+        clients,
+        busy_retries.load(std::sync::atomic::Ordering::Relaxed)
+    );
+
+    // Server-side view over the same wire.
+    let mut probe = Client::connect(addr.as_str())?;
+    let m = probe.metrics()?;
+    println!(
+        "server metrics: submitted={} completed={} busy={} mean_batch={:.1} \
+         total µs p50={:.1} p99={:.1}",
+        m.submitted,
+        m.completed,
+        m.rejected_busy,
+        m.mean_batch_size,
+        m.total_p50_us,
+        m.total_p99_us
+    );
+    drop(probe);
+    if let Some(server) = server {
+        server.shutdown();
+    }
+    Ok(())
+}
+
+/// True when the error chain carries a server Busy (backpressure) frame.
+fn is_busy(e: &anyhow::Error) -> bool {
+    e.downcast_ref::<WireError>().is_some_and(|w| w.code == ErrorCode::Busy)
+}

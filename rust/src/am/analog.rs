@@ -12,7 +12,8 @@
 //!                all-high → I_y (norm array) ─┤→ I_z = I_x²/I_y → WTA → NN
 //! ```
 //!
-//! Cell currents are pre-characterized at build time ([`CellSample`]) so a
+//! Cell currents are pre-characterized at build time
+//! ([`CellSample`](crate::device::CellSample)) so a
 //! search is pure arithmetic (no exp() on the hot path).
 
 use crate::circuit::{Translinear, TranslinearInstance, Wta, WtaInstance, WtaOutcome};
@@ -395,7 +396,7 @@ mod tests {
 
 #[cfg(test)]
 mod ablation_tests {
-    //! Ablation of the Eq. 7 current-tuning claim (DESIGN.md §5): without
+    //! Ablation of the Eq. 7 current-tuning claim (rust/DESIGN.md §5): without
     //! retuning the 1R as geometry scales, row currents exceed the
     //! translinear operating range and the scores compress — the design
     //! choice the paper's §3.3 scalability argument rests on.

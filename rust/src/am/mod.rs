@@ -497,7 +497,7 @@ impl AmEngine for HammingEngine {
 #[derive(Debug, Clone)]
 pub struct ApproxCosineEngine {
     store: Store,
-    /// The frozen denominator: √(E[Y]) (constant across rows).
+    /// The frozen denominator: `√(E[Y])` (constant across rows).
     norm_const: f64,
 }
 
@@ -508,7 +508,7 @@ impl ApproxCosineEngine {
         ApproxCosineEngine { store, norm_const }
     }
 
-    /// The frozen denominator √(E[Y]); re-frozen after a live row mutation
+    /// The frozen denominator `√(E[Y])`; re-frozen after a live row mutation
     /// (this engine's whole point is that the denominator is a store-wide
     /// constant, so updates re-derive it from the mutated store).
     fn frozen_norm(store: &Store) -> f64 {

@@ -3,9 +3,9 @@
 //! benches and examples share one source of truth (`configs/*.toml`).
 //!
 //! (De)serialization is hand-rolled over [`crate::util::toml_lite`] because
-//! the offline build has no serde: each section struct implements
-//! [`FromToml`] field-by-field, and unknown keys are hard errors so typos in
-//! config files cannot silently fall back to defaults.
+//! the offline build has no serde: each section struct implements the
+//! crate-private `FromToml` trait field-by-field, and unknown keys are hard
+//! errors so typos in config files cannot silently fall back to defaults.
 
 use crate::util::toml_lite::{self, TomlDoc, TomlValue};
 use anyhow::{bail, ensure, Context, Result};
@@ -423,6 +423,67 @@ bind_toml!(CoordinatorConfig {
     bool: [],
 });
 
+/// Networked serving frontend policy (L4, `cosime serve --listen`): the
+/// TCP listener, shard fan-out and per-connection frame limits consumed by
+/// [`crate::server`].
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ServerConfig {
+    /// Listen address (`host:port`). Port 0 binds an ephemeral port — the
+    /// server prints/returns the address it actually bound.
+    pub listen: String,
+    /// Independent [`crate::coordinator::AmService`] shards the logical
+    /// store is fanned across (scatter-gather top-k, routed admin ops).
+    pub shards: usize,
+    /// Hard cap on one frame's payload (bytes). Oversized frames are
+    /// rejected *before* the payload is read, and the connection is closed
+    /// (the stream cannot be re-synchronized past an unread payload).
+    pub max_frame: usize,
+    /// Per-connection bound on in-flight pipelined frames: a client that
+    /// stops reading responses blocks its own connection at this depth
+    /// instead of ballooning server memory or starving the shared queue.
+    pub max_inflight: usize,
+}
+
+impl Default for ServerConfig {
+    fn default() -> Self {
+        ServerConfig {
+            listen: "127.0.0.1:7411".to_string(),
+            shards: 1,
+            max_frame: 16 << 20,
+            max_inflight: 32,
+        }
+    }
+}
+
+// Hand-rolled (not `bind_toml!`): `listen` is the config surface's only
+// string-typed key.
+impl FromToml for ServerConfig {
+    fn set(&mut self, key: &str, value: &TomlValue) -> Result<()> {
+        match key {
+            "listen" => {
+                self.listen = value
+                    .as_str()
+                    .with_context(|| format!("key '{key}' must be a string"))?
+                    .to_string();
+            }
+            "shards" => self.shards = want_usize(key, value)?,
+            "max_frame" => self.max_frame = want_usize(key, value)?,
+            "max_inflight" => self.max_inflight = want_usize(key, value)?,
+            _ => bail!("unknown key '{key}' in section [ServerConfig]"),
+        }
+        Ok(())
+    }
+
+    fn dump(&self) -> Vec<(String, TomlValue)> {
+        vec![
+            ("listen".into(), TomlValue::Str(self.listen.clone())),
+            ("shards".into(), TomlValue::Int(self.shards as i64)),
+            ("max_frame".into(), TomlValue::Int(self.max_frame as i64)),
+            ("max_inflight".into(), TomlValue::Int(self.max_inflight as i64)),
+        ]
+    }
+}
+
 /// Top-level configuration.
 #[derive(Debug, Clone, Default, PartialEq)]
 pub struct CosimeConfig {
@@ -434,6 +495,7 @@ pub struct CosimeConfig {
     pub variation: VariationConfig,
     pub coordinator: CoordinatorConfig,
     pub write: WriteConfig,
+    pub server: ServerConfig,
 }
 
 impl CosimeConfig {
@@ -468,6 +530,7 @@ impl CosimeConfig {
                 "variation" => &mut self.variation,
                 "coordinator" => &mut self.coordinator,
                 "write" => &mut self.write,
+                "server" => &mut self.server,
                 other => bail!("unknown config section [{other}]"),
             };
             for (k, v) in kvs {
@@ -488,6 +551,7 @@ impl CosimeConfig {
         doc.insert("variation".into(), self.variation.dump().into_iter().collect());
         doc.insert("coordinator".into(), self.coordinator.dump().into_iter().collect());
         doc.insert("write".into(), self.write.dump().into_iter().collect());
+        doc.insert("server".into(), self.server.dump().into_iter().collect());
         toml_lite::to_string(&doc)
     }
 
@@ -501,12 +565,7 @@ impl CosimeConfig {
         doc.insert("array".into(), self.array.dump().into_iter().collect());
         doc.insert("energy".into(), self.energy.dump().into_iter().collect());
         let text = toml_lite::to_string(&doc);
-        let mut h: u64 = 0xcbf2_9ce4_8422_2325;
-        for b in text.bytes() {
-            h ^= u64::from(b);
-            h = h.wrapping_mul(0x0000_0100_0000_01b3);
-        }
-        format!("{h:016x}")
+        format!("{:016x}", crate::util::fnv1a_bytes(text.bytes()))
     }
 
     /// Sanity-check physical and policy parameters.
@@ -529,6 +588,12 @@ impl CosimeConfig {
         ensure!(c.max_batch >= 1 && c.queue_depth >= 1 && c.workers >= 1, "bad coordinator");
         ensure!(c.max_k >= 1, "coordinator max_k must be at least 1");
         ensure!(self.write.pulse_scale > 0.0, "write pulse_scale must be positive");
+        let s = &self.server;
+        ensure!(!s.listen.is_empty(), "server listen address must be set");
+        ensure!(s.shards >= 1, "server needs at least one shard");
+        ensure!(s.shards <= 1 << 16, "server shard count exceeds the 16-bit global-id space");
+        ensure!(s.max_frame >= 64, "server max_frame too small to carry any request");
+        ensure!(s.max_inflight >= 1, "server max_inflight must be at least 1");
         Ok(())
     }
 }
@@ -616,6 +681,30 @@ mod tests {
         assert!((cfg.write.pulse_scale - 0.8).abs() < 1e-12);
         assert_eq!(cfg.write.max_retries, 10);
         assert!(CosimeConfig::from_toml_str("[write]\npulse_scale = 0.0\n").is_err());
+    }
+
+    #[test]
+    fn server_section_parses_and_validates() {
+        let text = concat!(
+            "[server]\nlisten = \"0.0.0.0:9000\"\nshards = 4\n",
+            "max_frame = 1048576\nmax_inflight = 8\n"
+        );
+        let cfg = CosimeConfig::from_toml_str(text).unwrap();
+        assert_eq!(cfg.server.listen, "0.0.0.0:9000");
+        assert_eq!(cfg.server.shards, 4);
+        assert_eq!(cfg.server.max_frame, 1 << 20);
+        assert_eq!(cfg.server.max_inflight, 8);
+        // Defaults round-trip through TOML text (string key included).
+        let back = CosimeConfig::from_toml_str(&cfg.to_toml_string()).unwrap();
+        assert_eq!(back, cfg);
+        // Type/validity errors are rejected.
+        assert!(CosimeConfig::from_toml_str("[server]\nlisten = 9000\n").is_err());
+        assert!(CosimeConfig::from_toml_str("[server]\nshards = 0\n").is_err());
+        assert!(CosimeConfig::from_toml_str("[server]\nmax_frame = 8\n").is_err());
+        // Server policy never invalidates physical snapshots.
+        let mut policy = CosimeConfig::default();
+        policy.server.shards = 8;
+        assert_eq!(policy.physical_fingerprint(), CosimeConfig::default().physical_fingerprint());
     }
 
     #[test]

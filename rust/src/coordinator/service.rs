@@ -2,7 +2,8 @@
 //! the tile manager's batched top-k kernel; responses flow back over
 //! per-request channels with queue/execute timing attached.
 //!
-//! Each worker owns one [`QueryBlock`], one [`TileScratch`] and one
+//! Each worker owns one [`QueryBlock`], one
+//! [`TileScratch`](super::tiles::TileScratch) and one
 //! [`BlockTopK`] for its whole lifetime, so the steady-state loop performs
 //! zero per-query heap allocations on the scoring side: queries are packed
 //! straight from the queued jobs into the reused block, scored through the

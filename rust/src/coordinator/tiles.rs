@@ -42,7 +42,7 @@ use crate::util::{par, BitVec};
 pub type TileFactory = Box<dyn Fn(Vec<BitVec>) -> Result<Box<dyn AmEngine>> + Send + Sync>;
 
 /// One consistent snapshot of the sharded store: `tiles[i]` stores rows
-/// [offsets[i], offsets[i+1]), with `words` the per-tile source of truth
+/// `[offsets[i], offsets[i+1])`, with `words` the per-tile source of truth
 /// (kept for rebuilds and snapshot persistence of a live server).
 struct TileSet {
     tiles: Vec<Box<dyn AmEngine>>,

@@ -11,7 +11,7 @@
 //!   thresholding encoding yields class hypervectors of *varying density* —
 //!   the regime where cosine beats Hamming (paper Fig. 1 / Fig. 9a).
 //!
-//! See DESIGN.md §2 for why this substitution preserves the evaluated
+//! See rust/DESIGN.md §2 for why this substitution preserves the evaluated
 //! behaviors. Generation is seeded and deterministic.
 
 use crate::util::Rng;

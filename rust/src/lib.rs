@@ -25,6 +25,11 @@
 //!   tile manager with hierarchical winner merge (live-updatable, epoch
 //!   coherent), the admin plane for write-verified class updates, metrics,
 //!   backpressure.
+//! * [`server`] — the L4 networked frontend (`cosimed`): length-prefixed
+//!   binary wire protocol, threaded TCP server with per-connection bounded
+//!   pipelining, blocking client library, and scatter-gather sharding
+//!   across independent coordinator stacks
+//!   (`cosime serve --listen ADDR --shards S`).
 //! * [`runtime`] — PJRT/XLA runtime that loads AOT-lowered JAX/Pallas artifacts
 //!   (`artifacts/*.hlo.txt`) and runs them from the Rust hot path.
 //! * [`repro`] — regeneration harnesses for every table and figure in the paper.
@@ -43,6 +48,7 @@ pub mod energy;
 pub mod hdc;
 pub mod repro;
 pub mod runtime;
+pub mod server;
 pub mod util;
 
 pub use config::CosimeConfig;

@@ -6,7 +6,11 @@
 //!   all       run every regeneration (writes results/ + prints everything)
 //!   search    one-off NN search over random or worst-case stored words
 //!   serve     start the AM serving engine and drive a synthetic workload
-//!             (--snapshot PATH warm-starts from a saved AM snapshot)
+//!             (--snapshot PATH warm-starts from a saved AM snapshot);
+//!             with --listen ADDR it instead serves the cosimed wire
+//!             protocol over TCP (--shards S fans the store across S
+//!             coordinator stacks; --duration SECS exits after a while,
+//!             0 = run until killed; see examples/loadgen.rs for a client)
 //!   hdc       train + evaluate the HDC case study end to end
 //!             (--snapshot PATH saves the trained AM, write costs included)
 //!   live      train → snapshot → warm-start a server → stream online HDC
@@ -26,6 +30,7 @@ use cosime::hdc::{
 };
 use cosime::repro;
 use cosime::runtime::{RuntimeHandle, XlaAmEngine};
+use cosime::server::{CosimeServer, ShardRouter};
 use cosime::util::cli::Args;
 use cosime::util::{rng, BitVec};
 use std::time::Instant;
@@ -97,7 +102,9 @@ fn print_usage() {
          system: search serve hdc live artifacts\n\n\
          flags:  --results DIR  --seed N  --subsample F  --trials N\n\
                  --engine digital|analog|xla  --rows N --dims N --queries N --k N\n\
-                 --snapshot PATH (hdc: save trained AM; serve: warm-start from it)"
+                 --snapshot PATH (hdc: save trained AM; serve: warm-start from it)\n\
+                 --listen ADDR --shards S --duration SECS --config FILE (serve: TCP\n\
+                 frontend; drive it with `cargo run --release --example loadgen`)"
     );
 }
 
@@ -183,15 +190,11 @@ fn cmd_search(args: &Args) -> Result<()> {
     Ok(())
 }
 
-fn cmd_serve(args: &Args) -> Result<()> {
-    let queries = args.get_usize("queries", 2000);
-    let seed = args.get_u64("seed", 2);
-    let engine_kind = args.get_str("engine", "digital").to_string();
-    let cfg = CosimeConfig::default();
-
-    // Warm start from a snapshot when given, random words otherwise.
-    let words: Vec<BitVec> = if let Some(snap) = args.get("snapshot") {
-        let store = AmStore::load(&cfg, snap)?;
+/// Load the store for `serve`: snapshot warm-start when given, random
+/// words otherwise.
+fn serve_words(args: &Args, cfg: &CosimeConfig, seed: u64) -> Result<Vec<BitVec>> {
+    if let Some(snap) = args.get("snapshot") {
+        let store = AmStore::load(cfg, snap)?;
         anyhow::ensure!(!store.is_empty(), "snapshot {snap} has no rows to serve");
         println!(
             "warm start: {} rows x {} bits from {snap} (programmed cost: {})",
@@ -199,13 +202,74 @@ fn cmd_serve(args: &Args) -> Result<()> {
             store.dims(),
             store.write_stats().report()
         );
-        store.words().to_vec()
+        Ok(store.words().to_vec())
     } else {
         let rows = args.get_usize("rows", 1024);
         let dims = args.get_usize("dims", 1024);
+        anyhow::ensure!(rows >= 1, "need at least one row to serve (--rows)");
+        anyhow::ensure!(dims >= 1, "need at least one bit per word (--dims)");
         let mut r = rng(seed);
-        (0..rows).map(|_| BitVec::random(dims, 0.5, &mut r)).collect()
+        Ok((0..rows).map(|_| BitVec::random(dims, 0.5, &mut r)).collect())
+    }
+}
+
+/// `serve --listen ADDR`: the networked frontend. Binds the cosimed wire
+/// protocol, fans the store across `--shards` coordinator stacks, and
+/// serves until `--duration` seconds elapse (0 = until killed).
+fn cmd_serve_tcp(args: &Args) -> Result<()> {
+    let mut cfg = match args.get("config") {
+        Some(path) => CosimeConfig::from_toml_file(path)?,
+        None => CosimeConfig::default(),
     };
+    if let Some(listen) = args.get("listen") {
+        cfg.server.listen = listen.to_string();
+    }
+    cfg.server.shards = args.get_usize("shards", cfg.server.shards);
+    cfg.validate()?;
+    let seed = args.get_u64("seed", 2);
+    let engine_kind = args.get_str("engine", "digital").to_string();
+    let words = serve_words(args, &cfg, seed)?;
+    let (rows, dims) = (words.len(), words[0].len());
+    let ek = engine_kind.clone();
+    let router = ShardRouter::build(&cfg, cfg.server.shards, cfg.array.rows, words, move |w| {
+        build_engine(&ek, w, seed)
+    })?;
+    println!(
+        "sharded {rows} words x {dims} bits across {} shard(s) ({} engine, {} workers each)",
+        router.shard_count(),
+        engine_kind,
+        cfg.coordinator.workers
+    );
+    let server = CosimeServer::serve(&cfg.server, router)?;
+    println!(
+        "cosimed listening on {} (max_frame {} B, {} in-flight frames/conn)",
+        server.local_addr(),
+        cfg.server.max_frame,
+        cfg.server.max_inflight
+    );
+    let duration = args.get_u64("duration", 0);
+    if duration > 0 {
+        std::thread::sleep(std::time::Duration::from_secs(duration));
+        println!("\n{}", server.router().metrics().report());
+        server.shutdown();
+        Ok(())
+    } else {
+        println!("(serving until killed; pass --duration SECS to exit on a timer)");
+        loop {
+            std::thread::sleep(std::time::Duration::from_secs(3600));
+        }
+    }
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    if args.get("listen").is_some() {
+        return cmd_serve_tcp(args);
+    }
+    let queries = args.get_usize("queries", 2000);
+    let seed = args.get_u64("seed", 2);
+    let engine_kind = args.get_str("engine", "digital").to_string();
+    let cfg = CosimeConfig::default();
+    let words = serve_words(args, &cfg, seed)?;
     let (rows, dims) = (words.len(), words[0].len());
     let tile_rows = cfg.array.rows;
     let ek = engine_kind.clone();

@@ -6,7 +6,7 @@
 //!     cost model;
 //! (c) energy-efficiency improvement over the GPU.
 //!
-//! Energy-ratio calibration note (see DESIGN.md §Fig9): the paper's 98.5×
+//! Energy-ratio calibration note (see rust/DESIGN.md §Fig9): the paper's 98.5×
 //! average implies a COSIME *system-level* energy budget far above the AM
 //! array's picojoules (interface, drivers, encode). We report both: the raw
 //! AM-subsystem ratio from our energy model, and the ratio with the implied

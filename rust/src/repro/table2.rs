@@ -1,5 +1,5 @@
 //! Table 2 regeneration: the HDC case-study datasets (shapes are exact;
-//! contents are seeded synthetic — see DESIGN.md §2 substitution ledger).
+//! contents are seeded synthetic — see rust/DESIGN.md §2 substitution ledger).
 
 use anyhow::Result;
 

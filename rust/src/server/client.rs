@@ -1,0 +1,218 @@
+//! Blocking client for the `cosimed` wire protocol.
+//!
+//! One [`Client`] wraps one TCP connection. Plain calls
+//! ([`Client::search_batch`], [`Client::update`], …) are strict
+//! request/response round trips; [`Client::pipeline`] switches the same
+//! connection into pipelined mode — many search frames written back to
+//! back, responses collected in order at the end — which is how the
+//! `loadgen` example saturates a server from few sockets.
+//!
+//! Server-side rejections (backpressure, bad queries, failed write-verify)
+//! surface as [`WireError`] values inside the `anyhow` error chain:
+//! `err.downcast_ref::<WireError>()` recovers the typed code, e.g. to retry
+//! on [`ErrorCode::Busy`](super::protocol::ErrorCode::Busy).
+
+use std::io::{BufReader, BufWriter, Write};
+use std::net::{TcpStream, ToSocketAddrs};
+use std::time::Duration;
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::BitVec;
+
+use super::protocol::{
+    self, Op, WireAdminOp, WireAdminResponse, WireError, WireHealth, WireHit, WireMetrics,
+    WireSearchResponse, VERSION,
+};
+
+/// Default cap on response frames the client will accept. Deliberately far
+/// above the server's default *request* cap (`[server] max_frame`):
+/// a search response scales with `batch × k × 16` bytes, so a legal 16 MB
+/// request can legitimately produce a response several times its size.
+/// Raise it further with [`Client::set_max_frame`] for extreme batch×k
+/// combinations (an oversized response kills the connection, because a
+/// frame stream cannot be re-synchronized past an unread payload).
+pub const DEFAULT_MAX_FRAME: usize = 256 << 20;
+
+/// A blocking connection to a `cosimed` server.
+pub struct Client {
+    reader: BufReader<TcpStream>,
+    writer: BufWriter<TcpStream>,
+    max_frame: usize,
+}
+
+impl Client {
+    /// Connect once.
+    pub fn connect<A: ToSocketAddrs + std::fmt::Debug>(addr: A) -> Result<Client> {
+        let stream =
+            TcpStream::connect(&addr).with_context(|| format!("connecting to {addr:?}"))?;
+        let _ = stream.set_nodelay(true);
+        let write_half = stream.try_clone().context("cloning stream")?;
+        Ok(Client {
+            reader: BufReader::new(stream),
+            writer: BufWriter::new(write_half),
+            max_frame: DEFAULT_MAX_FRAME,
+        })
+    }
+
+    /// Connect with bounded retries and linear backoff — for racing a
+    /// server that is still binding its socket.
+    pub fn connect_retry<A: ToSocketAddrs + std::fmt::Debug + Copy>(
+        addr: A,
+        attempts: usize,
+        backoff: Duration,
+    ) -> Result<Client> {
+        let attempts = attempts.max(1);
+        let mut last = None;
+        for attempt in 0..attempts {
+            match Client::connect(addr) {
+                Ok(c) => return Ok(c),
+                Err(e) => {
+                    last = Some(e);
+                    if attempt + 1 < attempts {
+                        std::thread::sleep(backoff * (attempt as u32 + 1));
+                    }
+                }
+            }
+        }
+        Err(last.unwrap())
+    }
+
+    /// Cap on accepted response frames (raise it for huge batches).
+    pub fn set_max_frame(&mut self, max_frame: usize) {
+        self.max_frame = max_frame;
+    }
+
+    fn send(&mut self, op: Op, payload: &[u8]) -> Result<()> {
+        protocol::write_frame(&mut self.writer, op, payload).context("writing frame")?;
+        self.writer.flush().context("flushing frame")
+    }
+
+    /// Read one response frame; error frames become typed [`WireError`]s.
+    fn read_response(&mut self, want: Op) -> Result<Vec<u8>> {
+        let (header, payload) =
+            protocol::read_frame(&mut self.reader, self.max_frame).context("reading response")?;
+        if header.version != VERSION {
+            bail!("server speaks protocol version {}, client speaks {VERSION}", header.version);
+        }
+        if header.flags != 0 {
+            bail!("server set reserved header flags {:#06x}", header.flags);
+        }
+        match Op::from_u8(header.op) {
+            Some(Op::Error) => {
+                let e: WireError = protocol::decode_error_response(&payload)?;
+                Err(anyhow::Error::new(e))
+            }
+            Some(op) if op == want => Ok(payload),
+            Some(op) => bail!("expected {want:?} response, got {op:?}"),
+            None => bail!("unknown response opcode {:#04x}", header.op),
+        }
+    }
+
+    fn round_trip(&mut self, op: Op, payload: &[u8], want: Op) -> Result<Vec<u8>> {
+        self.send(op, payload)?;
+        self.read_response(want)
+    }
+
+    /// Server health/identity.
+    pub fn health(&mut self) -> Result<WireHealth> {
+        let payload = self.round_trip(Op::Health, &[], Op::HealthOk)?;
+        Ok(protocol::decode_health_response(&payload)?)
+    }
+
+    /// Aggregate serving metrics.
+    pub fn metrics(&mut self) -> Result<WireMetrics> {
+        let payload = self.round_trip(Op::Metrics, &[], Op::MetricsOk)?;
+        Ok(protocol::decode_metrics_response(&payload)?)
+    }
+
+    /// One top-k search: `(epoch, ranked hits)`.
+    pub fn search_topk(&mut self, query: &BitVec, k: usize) -> Result<(u64, Vec<WireHit>)> {
+        let mut resp = self.search_batch(std::slice::from_ref(query), k)?;
+        debug_assert_eq!(resp.results.len(), 1);
+        Ok((resp.epoch, resp.results.pop().unwrap_or_default()))
+    }
+
+    /// Batched top-k search: one frame carrying `queries.len()` queries,
+    /// one ranked hit list back per query.
+    pub fn search_batch(&mut self, queries: &[BitVec], k: usize) -> Result<WireSearchResponse> {
+        let payload = protocol::encode_search_request(queries, k);
+        let resp = self.round_trip(Op::Search, &payload, Op::SearchOk)?;
+        let decoded = protocol::decode_search_response(&resp)?;
+        if decoded.results.len() != queries.len() {
+            bail!(
+                "server answered {} result lists for {} queries",
+                decoded.results.len(),
+                queries.len()
+            );
+        }
+        Ok(decoded)
+    }
+
+    /// Reprogram the row with global id `row` (write-verified server-side).
+    pub fn update(&mut self, row: u64, word: &BitVec) -> Result<WireAdminResponse> {
+        self.admin(&WireAdminOp::Update { row, word: word.clone() })
+    }
+
+    /// Insert `word` as a new row; the response carries its global id.
+    pub fn insert(&mut self, word: &BitVec) -> Result<WireAdminResponse> {
+        self.admin(&WireAdminOp::Insert { word: word.clone() })
+    }
+
+    /// Delete the row with global id `row`.
+    pub fn delete(&mut self, row: u64) -> Result<WireAdminResponse> {
+        self.admin(&WireAdminOp::Delete { row })
+    }
+
+    fn admin(&mut self, op: &WireAdminOp) -> Result<WireAdminResponse> {
+        let (code, payload) = protocol::encode_admin_request(op);
+        let resp = self.round_trip(code, &payload, Op::AdminOk)?;
+        Ok(protocol::decode_admin_response(&resp)?)
+    }
+
+    /// Switch to pipelined mode: queue many search frames on this
+    /// connection, then collect every response in order.
+    pub fn pipeline(&mut self) -> Pipeline<'_> {
+        Pipeline { client: self, queued: 0 }
+    }
+}
+
+/// Pipelined search mode over one [`Client`] connection (see
+/// [`Client::pipeline`]). Queue frames with [`Pipeline::search_batch`];
+/// nothing is guaranteed flushed until [`Pipeline::finish`], which writes
+/// out the queue and reads every response in request order.
+pub struct Pipeline<'a> {
+    client: &'a mut Client,
+    queued: usize,
+}
+
+impl Pipeline<'_> {
+    /// Queue one batched search frame (buffered; not yet flushed).
+    pub fn search_batch(&mut self, queries: &[BitVec], k: usize) -> Result<()> {
+        let payload = protocol::encode_search_request(queries, k);
+        protocol::write_frame(&mut self.client.writer, Op::Search, &payload)
+            .context("queueing pipelined frame")?;
+        self.queued += 1;
+        Ok(())
+    }
+
+    /// Frames queued so far.
+    pub fn queued(&self) -> usize {
+        self.queued
+    }
+
+    /// Flush the queue and collect one response per queued frame, in
+    /// order. A server-side rejection of any frame fails the whole batch
+    /// (the error carries the typed [`WireError`]); responses queued
+    /// *behind* the failing frame are left unread, so after an error the
+    /// connection is out of sync — drop it and reconnect.
+    pub fn finish(self) -> Result<Vec<WireSearchResponse>> {
+        self.client.writer.flush().context("flushing pipeline")?;
+        let mut out = Vec::with_capacity(self.queued);
+        for _ in 0..self.queued {
+            let payload = self.client.read_response(Op::SearchOk)?;
+            out.push(protocol::decode_search_response(&payload)?);
+        }
+        Ok(out)
+    }
+}

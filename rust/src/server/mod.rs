@@ -1,0 +1,45 @@
+//! The networked serving frontend (`cosimed`): everything between a TCP
+//! socket and the [`coordinator`](crate::coordinator).
+//!
+//! The paper's whole argument is that moving class vectors to the query is
+//! the expensive part of similarity search; a serving engine that can only
+//! be *linked against* re-creates that wall one level up — every deployment
+//! would have to move the store into its own process. This module makes the
+//! coordinator reachable as a process:
+//!
+//! * [`protocol`] — the versioned, length-prefixed binary frame format:
+//!   batched search, admin update/insert/delete, metrics and health ops,
+//!   and typed error frames mapping
+//!   [`SubmitError`](crate::coordinator::SubmitError) (including `Busy`
+//!   backpressure and `WriteFailed`) plus the protocol-level failures.
+//! * [`shard`] — [`shard::ShardRouter`]: one logical store fanned across
+//!   `S` independent [`AmService`](crate::coordinator::AmService) shards.
+//!   Deterministic content-hash placement (the store's FNV-1a family),
+//!   scatter-gather top-k merged through
+//!   [`TopK::merge_from`](crate::am::TopK::merge_from), admin ops routed to
+//!   the owning shard via global row ids, metrics aggregated across shards.
+//! * [`tcp`] — [`tcp::CosimeServer`]: a threaded TCP server. Per
+//!   connection, a reader thread scatters decoded frames through the
+//!   router and a writer thread gathers and responds in request order —
+//!   pipelining with **bounded in-flight frames per connection**, so one
+//!   slow client throttles itself instead of the shared queue.
+//! * [`client`] — [`client::Client`]: the blocking client library with
+//!   connect/retry and a pipelined batch mode; the `loadgen` example
+//!   drives a server with it and reports throughput/latency percentiles.
+//!
+//! `cosime serve --listen ADDR --shards S` is the CLI entrypoint; see
+//! `rust/README.md` for the wire-format and configuration reference
+//! (`[server]` section).
+
+pub mod client;
+pub mod protocol;
+pub mod shard;
+pub mod tcp;
+
+pub use client::{Client, Pipeline};
+pub use protocol::{
+    ErrorCode, Op, WireAdminOp, WireAdminResponse, WireError, WireHealth, WireHit, WireMetrics,
+    WireSearchResponse,
+};
+pub use shard::{global_row, split_row, PendingSearch, RoutedAdminResponse, ShardRouter};
+pub use tcp::CosimeServer;

@@ -1,0 +1,961 @@
+//! The `cosimed` wire protocol: length-prefixed binary frames over TCP.
+//!
+//! Every message is one *frame*: a fixed 12-byte header followed by a
+//! payload of exactly `len` bytes. All integers are little-endian.
+//!
+//! ```text
+//! offset  size  field
+//! 0       4     magic   0x454D5343 ("CSME" as LE bytes)
+//! 4       1     version (currently [`VERSION`] = 1)
+//! 5       1     op      (see [`Op`])
+//! 6       2     flags   (reserved, must be 0; receivers reject nonzero)
+//! 8       4     len     payload length in bytes
+//! ```
+//!
+//! Requests and responses are correlated by *order*: a connection's
+//! responses arrive in the same order its requests were written (Redis-style
+//! pipelining), so a client may keep many frames in flight on one socket.
+//!
+//! Queries and stored words travel bit-packed, exactly as [`BitVec`] holds
+//! them in memory: `dims.div_ceil(64)` u64 lanes per vector, LSB-first,
+//! trailing bits beyond `dims` zero. The decoder *rejects* dirty trailing
+//! bits ([`ErrorCode::BadFrame`]) — every score routine in the engine
+//! relies on them being zero, so a sloppy peer must not be able to corrupt
+//! winners.
+//!
+//! Error frames carry an [`ErrorCode`] mapping
+//! [`SubmitError`](crate::coordinator::SubmitError) (including `Busy`
+//! backpressure and `WriteFailed` verify rejections) plus the
+//! protocol-level failures (bad frame, oversized frame, unknown op or
+//! version). Frame-sync-destroying failures (bad magic, oversized frame)
+//! are *fatal*: the server answers with an error frame when it can and
+//! closes the connection, because the byte stream can no longer be
+//! re-synchronized. Failures decoded from a well-formed header (unknown op,
+//! unsupported version, malformed payload) are non-fatal: the payload has
+//! been consumed, so the connection stays usable.
+
+use std::io::{self, Read, Write};
+
+use crate::am::write::WriteReport;
+use crate::coordinator::{MetricsSnapshot, SubmitError};
+use crate::util::BitVec;
+
+/// Frame magic: the bytes `CSME` read as a little-endian u32.
+pub const MAGIC: u32 = u32::from_le_bytes(*b"CSME");
+/// Current protocol version.
+pub const VERSION: u8 = 1;
+/// Fixed frame-header size in bytes.
+pub const HEADER_LEN: usize = 12;
+
+/// Frame opcodes. Requests have the high bit clear; responses set it.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[repr(u8)]
+pub enum Op {
+    /// Batched top-k search: `k:u32, dims:u32, count:u32, count×lanes`.
+    Search = 0x01,
+    /// Admin update: `row:u64, dims:u32, lanes`.
+    AdminUpdate = 0x02,
+    /// Admin insert: `dims:u32, lanes`.
+    AdminInsert = 0x03,
+    /// Admin delete: `row:u64`.
+    AdminDelete = 0x04,
+    /// Metrics snapshot request (empty payload).
+    Metrics = 0x05,
+    /// Health/identity request (empty payload).
+    Health = 0x06,
+    /// Search response: `epoch:u64, count:u32, count×(n:u32, n×(row:u64, score:f64))`.
+    SearchOk = 0x81,
+    /// Admin response: `row:u64, epoch:u64, rows:u64, has_write:u8[, report]`.
+    AdminOk = 0x82,
+    /// Metrics response (see [`WireMetrics`]).
+    MetricsOk = 0x85,
+    /// Health response: `rows:u64, dims:u64, epoch:u64, shards:u32`.
+    HealthOk = 0x86,
+    /// Error response: `code:u8, msg_len:u32, msg`.
+    Error = 0xFF,
+}
+
+impl Op {
+    pub fn from_u8(b: u8) -> Option<Op> {
+        Some(match b {
+            0x01 => Op::Search,
+            0x02 => Op::AdminUpdate,
+            0x03 => Op::AdminInsert,
+            0x04 => Op::AdminDelete,
+            0x05 => Op::Metrics,
+            0x06 => Op::Health,
+            0x81 => Op::SearchOk,
+            0x82 => Op::AdminOk,
+            0x85 => Op::MetricsOk,
+            0x86 => Op::HealthOk,
+            0xFF => Op::Error,
+            _ => return None,
+        })
+    }
+}
+
+/// Error codes carried by [`Op::Error`] frames.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[repr(u8)]
+pub enum ErrorCode {
+    /// Bounded queue full — backpressure; retry later.
+    Busy = 1,
+    /// Service is shutting down.
+    Closed = 2,
+    /// Request semantically invalid (dims mismatch, k = 0, bad row, …).
+    BadQuery = 3,
+    /// Admin write rejected by the write-verify loop; store unchanged.
+    WriteFailed = 4,
+    /// Frame malformed (bad magic, short payload, trailing bytes, dirty
+    /// lane bits). Bad magic is fatal to the connection.
+    BadFrame = 5,
+    /// Declared payload length exceeds the server's `max_frame`. Fatal to
+    /// the connection (the oversized payload is never read, so the stream
+    /// cannot be re-synchronized).
+    FrameTooLarge = 6,
+    /// Header version is not [`VERSION`].
+    BadVersion = 7,
+    /// Header op is not a request opcode.
+    UnknownOp = 8,
+    /// Server-side failure outside the request's control.
+    Internal = 9,
+}
+
+impl ErrorCode {
+    pub fn from_u8(b: u8) -> Option<ErrorCode> {
+        Some(match b {
+            1 => ErrorCode::Busy,
+            2 => ErrorCode::Closed,
+            3 => ErrorCode::BadQuery,
+            4 => ErrorCode::WriteFailed,
+            5 => ErrorCode::BadFrame,
+            6 => ErrorCode::FrameTooLarge,
+            7 => ErrorCode::BadVersion,
+            8 => ErrorCode::UnknownOp,
+            9 => ErrorCode::Internal,
+            _ => return None,
+        })
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            ErrorCode::Busy => "busy",
+            ErrorCode::Closed => "closed",
+            ErrorCode::BadQuery => "bad-query",
+            ErrorCode::WriteFailed => "write-failed",
+            ErrorCode::BadFrame => "bad-frame",
+            ErrorCode::FrameTooLarge => "frame-too-large",
+            ErrorCode::BadVersion => "bad-version",
+            ErrorCode::UnknownOp => "unknown-op",
+            ErrorCode::Internal => "internal",
+        }
+    }
+}
+
+/// A decoded protocol-level error: the typed payload of an [`Op::Error`]
+/// frame on the client side, and the server's internal rejection type.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct WireError {
+    pub code: ErrorCode,
+    pub message: String,
+}
+
+impl WireError {
+    pub fn new(code: ErrorCode, message: impl Into<String>) -> Self {
+        WireError { code, message: message.into() }
+    }
+}
+
+impl std::fmt::Display for WireError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}: {}", self.code.name(), self.message)
+    }
+}
+
+impl std::error::Error for WireError {}
+
+impl From<SubmitError> for WireError {
+    fn from(e: SubmitError) -> Self {
+        let code = match &e {
+            SubmitError::Busy => ErrorCode::Busy,
+            SubmitError::Closed => ErrorCode::Closed,
+            SubmitError::BadQuery(_) => ErrorCode::BadQuery,
+            SubmitError::WriteFailed(_) => ErrorCode::WriteFailed,
+        };
+        WireError { code, message: e.to_string() }
+    }
+}
+
+fn bad_frame(msg: impl Into<String>) -> WireError {
+    WireError::new(ErrorCode::BadFrame, msg)
+}
+
+// ---------------------------------------------------------------------------
+// Frame I/O
+// ---------------------------------------------------------------------------
+
+/// A decoded frame header (magic already validated).
+#[derive(Debug, Clone, Copy)]
+pub struct FrameHeader {
+    pub version: u8,
+    pub op: u8,
+    /// Reserved; senders write 0 and receivers reject nonzero, so the
+    /// field stays available for must-understand extensions.
+    pub flags: u16,
+    pub len: u32,
+}
+
+/// Why [`read_frame`] failed. `BadMagic` and `TooLarge` are fatal to the
+/// connection: the stream position is no longer frame-aligned.
+#[derive(Debug)]
+pub enum FrameReadError {
+    /// Underlying I/O error (including EOF mid-frame — a truncated frame).
+    Io(io::Error),
+    /// Header magic mismatch: the peer is not speaking this protocol.
+    BadMagic,
+    /// Declared payload length exceeds the reader's cap.
+    TooLarge { len: u32, max: usize },
+}
+
+impl std::fmt::Display for FrameReadError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            FrameReadError::Io(e) => write!(f, "frame i/o: {e}"),
+            FrameReadError::BadMagic => write!(f, "bad frame magic"),
+            FrameReadError::TooLarge { len, max } => {
+                write!(f, "frame payload {len} bytes exceeds max_frame {max}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for FrameReadError {}
+
+/// True when the error means "the peer closed the socket before any frame
+/// byte arrived" — the normal way a connection ends.
+pub fn is_clean_eof(e: &FrameReadError) -> bool {
+    matches!(e, FrameReadError::Io(io) if io.kind() == io::ErrorKind::UnexpectedEof)
+}
+
+/// Write one frame: header + payload. Fails (without emitting a lying
+/// header) when the payload exceeds the u32 length field.
+pub fn write_frame<W: Write>(w: &mut W, op: Op, payload: &[u8]) -> io::Result<()> {
+    let len: u32 = payload.len().try_into().map_err(|_| {
+        io::Error::new(
+            io::ErrorKind::InvalidInput,
+            format!("frame payload {} bytes exceeds the u32 length field", payload.len()),
+        )
+    })?;
+    let mut header = [0u8; HEADER_LEN];
+    header[0..4].copy_from_slice(&MAGIC.to_le_bytes());
+    header[4] = VERSION;
+    header[5] = op as u8;
+    // flags (6..8) reserved as zero
+    header[8..12].copy_from_slice(&len.to_le_bytes());
+    w.write_all(&header)?;
+    w.write_all(payload)
+}
+
+/// Read one frame, enforcing `max_frame` on the declared payload length
+/// *before* reading the payload (a hostile peer cannot force a huge
+/// allocation). Version and op are *not* validated here — the payload has
+/// to be consumed either way to keep the stream frame-aligned, so those
+/// checks belong to the caller.
+pub fn read_frame<R: Read>(
+    r: &mut R,
+    max_frame: usize,
+) -> Result<(FrameHeader, Vec<u8>), FrameReadError> {
+    let mut header = [0u8; HEADER_LEN];
+    r.read_exact(&mut header).map_err(FrameReadError::Io)?;
+    let magic = u32::from_le_bytes(header[0..4].try_into().unwrap());
+    if magic != MAGIC {
+        return Err(FrameReadError::BadMagic);
+    }
+    let len = u32::from_le_bytes(header[8..12].try_into().unwrap());
+    if len as usize > max_frame {
+        return Err(FrameReadError::TooLarge { len, max: max_frame });
+    }
+    let mut payload = vec![0u8; len as usize];
+    r.read_exact(&mut payload).map_err(FrameReadError::Io)?;
+    let flags = u16::from_le_bytes(header[6..8].try_into().unwrap());
+    Ok((FrameHeader { version: header[4], op: header[5], flags, len }, payload))
+}
+
+// ---------------------------------------------------------------------------
+// Payload cursor
+// ---------------------------------------------------------------------------
+
+/// Bounds-checked little-endian reader over a frame payload.
+struct Cursor<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Cursor<'a> {
+    fn new(buf: &'a [u8]) -> Self {
+        Cursor { buf, pos: 0 }
+    }
+
+    fn take(&mut self, n: usize) -> Result<&'a [u8], WireError> {
+        let end = self.pos.checked_add(n).ok_or_else(|| bad_frame("payload offset overflow"))?;
+        if end > self.buf.len() {
+            return Err(bad_frame(format!(
+                "payload truncated: need {n} bytes at offset {}, have {}",
+                self.pos,
+                self.buf.len() - self.pos
+            )));
+        }
+        let s = &self.buf[self.pos..end];
+        self.pos = end;
+        Ok(s)
+    }
+
+    fn u8(&mut self) -> Result<u8, WireError> {
+        Ok(self.take(1)?[0])
+    }
+
+    fn u32(&mut self) -> Result<u32, WireError> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    fn u64(&mut self) -> Result<u64, WireError> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    fn f64(&mut self) -> Result<f64, WireError> {
+        Ok(f64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    /// Fail unless the whole payload was consumed (trailing garbage would
+    /// mean the peer and this decoder disagree about the message layout).
+    fn finish(self) -> Result<(), WireError> {
+        if self.pos != self.buf.len() {
+            return Err(bad_frame(format!(
+                "{} trailing bytes after message",
+                self.buf.len() - self.pos
+            )));
+        }
+        Ok(())
+    }
+}
+
+fn put_u32(out: &mut Vec<u8>, v: u32) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_u64(out: &mut Vec<u8>, v: u64) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_f64(out: &mut Vec<u8>, v: f64) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+/// Encode one bit-packed vector: `dims:u32` + its u64 lanes.
+fn put_bitvec(out: &mut Vec<u8>, v: &BitVec) {
+    put_u32(out, v.len() as u32);
+    for &lane in v.lanes() {
+        put_u64(out, lane);
+    }
+}
+
+/// Read one `dims`-bit vector's packed lanes, validating that trailing
+/// bits beyond `dims` are zero (the engine's score kernels rely on it) —
+/// the one lane decoder shared by every vector-carrying message.
+fn read_lanes(c: &mut Cursor<'_>, dims: usize) -> Result<BitVec, WireError> {
+    let lanes_per = dims.div_ceil(64);
+    let mut lanes = Vec::with_capacity(lanes_per);
+    for _ in 0..lanes_per {
+        lanes.push(c.u64()?);
+    }
+    let tail = dims % 64;
+    if tail != 0 && lanes[lanes_per - 1] >> tail != 0 {
+        return Err(bad_frame(format!("bits beyond dims={dims} must be zero")));
+    }
+    let mut v = BitVec::zeros(0);
+    v.assign_lanes(dims, &lanes);
+    Ok(v)
+}
+
+/// Decode one length-prefixed bit-packed vector (`dims:u32` + lanes).
+fn get_bitvec(c: &mut Cursor<'_>) -> Result<BitVec, WireError> {
+    let dims = c.u32()? as usize;
+    if dims == 0 {
+        return Err(bad_frame("vector dims must be at least 1"));
+    }
+    read_lanes(c, dims)
+}
+
+// ---------------------------------------------------------------------------
+// Search
+// ---------------------------------------------------------------------------
+
+/// Encode a batched search request. All queries must share one dimension.
+pub fn encode_search_request(queries: &[BitVec], k: usize) -> Vec<u8> {
+    let dims = queries.first().map_or(0, BitVec::len);
+    let lanes_per = dims.div_ceil(64);
+    let mut out = Vec::with_capacity(12 + queries.len() * lanes_per * 8);
+    put_u32(&mut out, k as u32);
+    put_u32(&mut out, dims as u32);
+    put_u32(&mut out, queries.len() as u32);
+    for q in queries {
+        assert_eq!(q.len(), dims, "search batch mixes query dims");
+        for &lane in q.lanes() {
+            put_u64(&mut out, lane);
+        }
+    }
+    out
+}
+
+/// Decode a batched search request into `(k, queries)`.
+pub fn decode_search_request(payload: &[u8]) -> Result<(usize, Vec<BitVec>), WireError> {
+    let mut c = Cursor::new(payload);
+    let k = c.u32()? as usize;
+    let dims = c.u32()? as usize;
+    let count = c.u32()? as usize;
+    if dims == 0 {
+        return Err(bad_frame("search dims must be at least 1"));
+    }
+    let mut queries = Vec::with_capacity(count.min(payload.len() / 8 + 1));
+    for _ in 0..count {
+        queries.push(read_lanes(&mut c, dims)?);
+    }
+    c.finish()?;
+    Ok((k, queries))
+}
+
+/// One ranked hit as it travels the wire. `row` is the *global* row id:
+/// with sharding, the owning shard lives in the high bits (see
+/// [`super::shard`]), so the id round-trips through admin ops. Ids stay
+/// valid until a *delete on the same shard* shifts higher rows down — see
+/// the id-stability caveat in [`super::shard`]'s docs.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct WireHit {
+    pub row: u64,
+    pub score: f64,
+}
+
+/// A decoded search response: one ranked hit list per query of the request
+/// batch, stamped with the serving epoch (for a sharded store: the
+/// aggregate epoch — the sum over shards).
+#[derive(Debug, Clone, PartialEq)]
+pub struct WireSearchResponse {
+    pub epoch: u64,
+    pub results: Vec<Vec<WireHit>>,
+}
+
+/// Encode a search response frame payload.
+pub fn encode_search_response(epoch: u64, results: &[Vec<WireHit>]) -> Vec<u8> {
+    let hits: usize = results.iter().map(Vec::len).sum();
+    let mut out = Vec::with_capacity(12 + results.len() * 4 + hits * 16);
+    put_u64(&mut out, epoch);
+    put_u32(&mut out, results.len() as u32);
+    for ranked in results {
+        put_u32(&mut out, ranked.len() as u32);
+        for hit in ranked {
+            put_u64(&mut out, hit.row);
+            put_f64(&mut out, hit.score);
+        }
+    }
+    out
+}
+
+/// Decode a search response frame payload.
+pub fn decode_search_response(payload: &[u8]) -> Result<WireSearchResponse, WireError> {
+    let mut c = Cursor::new(payload);
+    let epoch = c.u64()?;
+    let count = c.u32()? as usize;
+    let mut results = Vec::with_capacity(count.min(payload.len() / 4 + 1));
+    for _ in 0..count {
+        let n = c.u32()? as usize;
+        let mut ranked = Vec::with_capacity(n.min(payload.len() / 16 + 1));
+        for _ in 0..n {
+            let row = c.u64()?;
+            let score = c.f64()?;
+            ranked.push(WireHit { row, score });
+        }
+        results.push(ranked);
+    }
+    c.finish()?;
+    Ok(WireSearchResponse { epoch, results })
+}
+
+// ---------------------------------------------------------------------------
+// Admin
+// ---------------------------------------------------------------------------
+
+/// An admin request as decoded off the wire (rows are global ids).
+#[derive(Debug, Clone)]
+pub enum WireAdminOp {
+    Update { row: u64, word: BitVec },
+    Insert { word: BitVec },
+    Delete { row: u64 },
+}
+
+/// Encode an admin request, returning `(op, payload)`.
+pub fn encode_admin_request(op: &WireAdminOp) -> (Op, Vec<u8>) {
+    let mut out = Vec::new();
+    match op {
+        WireAdminOp::Update { row, word } => {
+            put_u64(&mut out, *row);
+            put_bitvec(&mut out, word);
+            (Op::AdminUpdate, out)
+        }
+        WireAdminOp::Insert { word } => {
+            put_bitvec(&mut out, word);
+            (Op::AdminInsert, out)
+        }
+        WireAdminOp::Delete { row } => {
+            put_u64(&mut out, *row);
+            (Op::AdminDelete, out)
+        }
+    }
+}
+
+/// Decode an admin request payload for the given request opcode.
+pub fn decode_admin_request(op: Op, payload: &[u8]) -> Result<WireAdminOp, WireError> {
+    let mut c = Cursor::new(payload);
+    let decoded = match op {
+        Op::AdminUpdate => {
+            let row = c.u64()?;
+            let word = get_bitvec(&mut c)?;
+            WireAdminOp::Update { row, word }
+        }
+        Op::AdminInsert => WireAdminOp::Insert { word: get_bitvec(&mut c)? },
+        Op::AdminDelete => WireAdminOp::Delete { row: c.u64()? },
+        other => return Err(bad_frame(format!("{other:?} is not an admin op"))),
+    };
+    c.finish()?;
+    Ok(decoded)
+}
+
+/// Write-verify cost summary as it travels the wire (the scalar fields of
+/// [`WriteReport`]; per-round latencies stay server-side).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct WireWriteReport {
+    pub cells: u64,
+    pub pulses: u64,
+    pub failures: u64,
+    pub energy_j: f64,
+    pub latency_s: f64,
+}
+
+/// A decoded admin response.
+#[derive(Debug, Clone, PartialEq)]
+pub struct WireAdminResponse {
+    /// Global row the op affected (for Insert: the new row's global id).
+    pub row: u64,
+    /// Aggregate store epoch after the commit.
+    pub epoch: u64,
+    /// Total stored rows (across all shards) after the commit.
+    pub rows: u64,
+    /// Write-verify cost (None for Delete, which spends no pulses).
+    pub write: Option<WireWriteReport>,
+}
+
+/// Encode an admin response frame payload.
+pub fn encode_admin_response(
+    row: u64,
+    epoch: u64,
+    rows: u64,
+    write: Option<&WriteReport>,
+) -> Vec<u8> {
+    let mut out = Vec::with_capacity(25 + write.map_or(0, |_| 40));
+    put_u64(&mut out, row);
+    put_u64(&mut out, epoch);
+    put_u64(&mut out, rows);
+    match write {
+        None => out.push(0),
+        Some(r) => {
+            out.push(1);
+            put_u64(&mut out, r.cells as u64);
+            put_u64(&mut out, r.pulses as u64);
+            put_u64(&mut out, r.failures as u64);
+            put_f64(&mut out, r.energy);
+            put_f64(&mut out, r.latency);
+        }
+    }
+    out
+}
+
+/// Decode an admin response frame payload.
+pub fn decode_admin_response(payload: &[u8]) -> Result<WireAdminResponse, WireError> {
+    let mut c = Cursor::new(payload);
+    let row = c.u64()?;
+    let epoch = c.u64()?;
+    let rows = c.u64()?;
+    let write = match c.u8()? {
+        0 => None,
+        1 => Some(WireWriteReport {
+            cells: c.u64()?,
+            pulses: c.u64()?,
+            failures: c.u64()?,
+            energy_j: c.f64()?,
+            latency_s: c.f64()?,
+        }),
+        other => return Err(bad_frame(format!("bad write-report marker {other}"))),
+    };
+    c.finish()?;
+    Ok(WireAdminResponse { row, epoch, rows, write })
+}
+
+// ---------------------------------------------------------------------------
+// Metrics / health
+// ---------------------------------------------------------------------------
+
+/// The metrics summary a server reports over the wire: the scalar fields of
+/// [`MetricsSnapshot`], aggregated across shards (per-k and per-admin-kind
+/// lanes stay server-side — `report()` them there).
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
+pub struct WireMetrics {
+    pub submitted: u64,
+    pub completed: u64,
+    pub rejected_busy: u64,
+    pub batches: u64,
+    pub mean_batch_size: f64,
+    pub queue_p50_us: f64,
+    pub queue_p99_us: f64,
+    pub exec_p50_us: f64,
+    pub exec_p99_us: f64,
+    pub total_p50_us: f64,
+    pub total_p99_us: f64,
+    pub total_mean_us: f64,
+    pub admin_rejected: u64,
+    pub write_cells: u64,
+    pub write_pulses: u64,
+    pub write_energy_j: f64,
+    pub write_latency_s: f64,
+}
+
+impl WireMetrics {
+    pub fn from_snapshot(s: &MetricsSnapshot) -> Self {
+        WireMetrics {
+            submitted: s.submitted,
+            completed: s.completed,
+            rejected_busy: s.rejected_busy,
+            batches: s.batches,
+            mean_batch_size: s.mean_batch_size,
+            queue_p50_us: s.queue_p50_us,
+            queue_p99_us: s.queue_p99_us,
+            exec_p50_us: s.exec_p50_us,
+            exec_p99_us: s.exec_p99_us,
+            total_p50_us: s.total_p50_us,
+            total_p99_us: s.total_p99_us,
+            total_mean_us: s.total_mean_us,
+            admin_rejected: s.admin_rejected,
+            write_cells: s.write.cells,
+            write_pulses: s.write.pulses,
+            write_energy_j: s.write.energy_j,
+            write_latency_s: s.write.latency_s,
+        }
+    }
+}
+
+/// Encode a metrics response frame payload.
+pub fn encode_metrics_response(m: &WireMetrics) -> Vec<u8> {
+    let mut out = Vec::with_capacity(17 * 8);
+    put_u64(&mut out, m.submitted);
+    put_u64(&mut out, m.completed);
+    put_u64(&mut out, m.rejected_busy);
+    put_u64(&mut out, m.batches);
+    put_f64(&mut out, m.mean_batch_size);
+    put_f64(&mut out, m.queue_p50_us);
+    put_f64(&mut out, m.queue_p99_us);
+    put_f64(&mut out, m.exec_p50_us);
+    put_f64(&mut out, m.exec_p99_us);
+    put_f64(&mut out, m.total_p50_us);
+    put_f64(&mut out, m.total_p99_us);
+    put_f64(&mut out, m.total_mean_us);
+    put_u64(&mut out, m.admin_rejected);
+    put_u64(&mut out, m.write_cells);
+    put_u64(&mut out, m.write_pulses);
+    put_f64(&mut out, m.write_energy_j);
+    put_f64(&mut out, m.write_latency_s);
+    out
+}
+
+/// Decode a metrics response frame payload.
+pub fn decode_metrics_response(payload: &[u8]) -> Result<WireMetrics, WireError> {
+    let mut c = Cursor::new(payload);
+    let m = WireMetrics {
+        submitted: c.u64()?,
+        completed: c.u64()?,
+        rejected_busy: c.u64()?,
+        batches: c.u64()?,
+        mean_batch_size: c.f64()?,
+        queue_p50_us: c.f64()?,
+        queue_p99_us: c.f64()?,
+        exec_p50_us: c.f64()?,
+        exec_p99_us: c.f64()?,
+        total_p50_us: c.f64()?,
+        total_p99_us: c.f64()?,
+        total_mean_us: c.f64()?,
+        admin_rejected: c.u64()?,
+        write_cells: c.u64()?,
+        write_pulses: c.u64()?,
+        write_energy_j: c.f64()?,
+        write_latency_s: c.f64()?,
+    };
+    c.finish()?;
+    Ok(m)
+}
+
+/// A decoded health response: the served store's identity.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct WireHealth {
+    pub rows: u64,
+    pub dims: u64,
+    pub epoch: u64,
+    pub shards: u32,
+}
+
+/// Encode a health response frame payload.
+pub fn encode_health_response(h: &WireHealth) -> Vec<u8> {
+    let mut out = Vec::with_capacity(28);
+    put_u64(&mut out, h.rows);
+    put_u64(&mut out, h.dims);
+    put_u64(&mut out, h.epoch);
+    put_u32(&mut out, h.shards);
+    out
+}
+
+/// Decode a health response frame payload.
+pub fn decode_health_response(payload: &[u8]) -> Result<WireHealth, WireError> {
+    let mut c = Cursor::new(payload);
+    let h = WireHealth { rows: c.u64()?, dims: c.u64()?, epoch: c.u64()?, shards: c.u32()? };
+    c.finish()?;
+    Ok(h)
+}
+
+/// Encode an error response frame payload.
+pub fn encode_error_response(e: &WireError) -> Vec<u8> {
+    let msg = e.message.as_bytes();
+    let mut out = Vec::with_capacity(5 + msg.len());
+    out.push(e.code as u8);
+    put_u32(&mut out, msg.len() as u32);
+    out.extend_from_slice(msg);
+    out
+}
+
+/// Decode an error response frame payload.
+pub fn decode_error_response(payload: &[u8]) -> Result<WireError, WireError> {
+    let mut c = Cursor::new(payload);
+    let code =
+        ErrorCode::from_u8(c.u8()?).ok_or_else(|| bad_frame("unknown error code"))?;
+    let len = c.u32()? as usize;
+    let msg = String::from_utf8_lossy(c.take(len)?).into_owned();
+    c.finish()?;
+    Ok(WireError { code, message: msg })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng;
+
+    #[test]
+    fn frame_roundtrip_over_cursor() {
+        let payload = vec![1u8, 2, 3, 4, 5];
+        let mut buf = Vec::new();
+        write_frame(&mut buf, Op::Search, &payload).unwrap();
+        assert_eq!(buf.len(), HEADER_LEN + payload.len());
+        let mut r = std::io::Cursor::new(buf);
+        let (h, p) = read_frame(&mut r, 1024).unwrap();
+        assert_eq!(h.version, VERSION);
+        assert_eq!(Op::from_u8(h.op), Some(Op::Search));
+        assert_eq!(p, payload);
+    }
+
+    #[test]
+    fn frame_rejects_bad_magic_and_oversize() {
+        let mut buf = Vec::new();
+        write_frame(&mut buf, Op::Health, &[0u8; 64]).unwrap();
+        buf[0] ^= 0xFF;
+        let mut r = std::io::Cursor::new(buf.clone());
+        assert!(matches!(read_frame(&mut r, 1024), Err(FrameReadError::BadMagic)));
+
+        buf[0] ^= 0xFF; // restore magic
+        let mut r = std::io::Cursor::new(buf);
+        match read_frame(&mut r, 16) {
+            Err(FrameReadError::TooLarge { len: 64, max: 16 }) => {}
+            other => panic!("expected TooLarge, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn truncated_frame_is_io_eof() {
+        let mut buf = Vec::new();
+        write_frame(&mut buf, Op::Metrics, &[0u8; 32]).unwrap();
+        buf.truncate(HEADER_LEN + 10); // payload cut short
+        let mut r = std::io::Cursor::new(buf);
+        match read_frame(&mut r, 1024) {
+            Err(e @ FrameReadError::Io(_)) => assert!(is_clean_eof(&e)),
+            other => panic!("expected Io(EOF), got {other:?}"),
+        }
+        // Header itself cut short.
+        let mut r = std::io::Cursor::new(vec![0x43u8, 0x53]);
+        assert!(matches!(read_frame(&mut r, 1024), Err(FrameReadError::Io(_))));
+    }
+
+    #[test]
+    fn search_request_roundtrip() {
+        let mut r = rng(1);
+        let queries: Vec<BitVec> = (0..5).map(|_| BitVec::random(130, 0.5, &mut r)).collect();
+        let payload = encode_search_request(&queries, 7);
+        let (k, back) = decode_search_request(&payload).unwrap();
+        assert_eq!(k, 7);
+        assert_eq!(back, queries);
+    }
+
+    #[test]
+    fn search_request_rejects_dirty_tail_bits() {
+        let q = BitVec::from_bools((0..70).map(|i| i % 2 == 0));
+        let mut payload = encode_search_request(std::slice::from_ref(&q), 1);
+        // Set a bit beyond dims=70 in the second lane (last 8 payload bytes).
+        let n = payload.len();
+        payload[n - 1] |= 0x80;
+        let err = decode_search_request(&payload).unwrap_err();
+        assert_eq!(err.code, ErrorCode::BadFrame);
+        assert!(err.message.contains("beyond dims"), "{err}");
+    }
+
+    #[test]
+    fn search_request_rejects_truncation_and_trailing_garbage() {
+        let mut r = rng(2);
+        let queries: Vec<BitVec> = (0..3).map(|_| BitVec::random(64, 0.5, &mut r)).collect();
+        let payload = encode_search_request(&queries, 2);
+        let err = decode_search_request(&payload[..payload.len() - 4]).unwrap_err();
+        assert_eq!(err.code, ErrorCode::BadFrame);
+        let mut fat = payload.clone();
+        fat.extend_from_slice(&[0u8; 3]);
+        let err = decode_search_request(&fat).unwrap_err();
+        assert!(err.message.contains("trailing"), "{err}");
+        // Declared count larger than the payload carries must not allocate
+        // or panic, just fail cleanly.
+        let mut lying = payload;
+        lying[8..12].copy_from_slice(&u32::MAX.to_le_bytes());
+        assert_eq!(decode_search_request(&lying).unwrap_err().code, ErrorCode::BadFrame);
+    }
+
+    #[test]
+    fn search_response_roundtrip() {
+        let results = vec![
+            vec![WireHit { row: 3, score: 12.5 }, WireHit { row: 9, score: 11.0 }],
+            vec![],
+            vec![WireHit { row: (7u64 << 48) | 2, score: 0.25 }],
+        ];
+        let payload = encode_search_response(42, &results);
+        let back = decode_search_response(&payload).unwrap();
+        assert_eq!(back.epoch, 42);
+        assert_eq!(back.results, results);
+    }
+
+    #[test]
+    fn admin_roundtrips() {
+        let mut r = rng(3);
+        let word = BitVec::random(96, 0.4, &mut r);
+        for op in [
+            WireAdminOp::Update { row: (1u64 << 48) | 5, word: word.clone() },
+            WireAdminOp::Insert { word: word.clone() },
+            WireAdminOp::Delete { row: 11 },
+        ] {
+            let (code, payload) = encode_admin_request(&op);
+            let back = decode_admin_request(code, &payload).unwrap();
+            match (&op, &back) {
+                (
+                    WireAdminOp::Update { row: a, word: wa },
+                    WireAdminOp::Update { row: b, word: wb },
+                ) => {
+                    assert_eq!(a, b);
+                    assert_eq!(wa, wb);
+                }
+                (WireAdminOp::Insert { word: wa }, WireAdminOp::Insert { word: wb }) => {
+                    assert_eq!(wa, wb)
+                }
+                (WireAdminOp::Delete { row: a }, WireAdminOp::Delete { row: b }) => {
+                    assert_eq!(a, b)
+                }
+                other => panic!("op kind changed in roundtrip: {other:?}"),
+            }
+        }
+
+        let report = WriteReport {
+            cells: 96,
+            pulses: 130,
+            failures: 0,
+            energy: 1.5e-13,
+            latency: 4e-6,
+            round_latencies: vec![1e-6],
+        };
+        let payload = encode_admin_response(5, 9, 100, Some(&report));
+        let back = decode_admin_response(&payload).unwrap();
+        assert_eq!((back.row, back.epoch, back.rows), (5, 9, 100));
+        let w = back.write.unwrap();
+        assert_eq!((w.cells, w.pulses, w.failures), (96, 130, 0));
+        assert_eq!(w.energy_j, 1.5e-13);
+
+        let payload = encode_admin_response(5, 9, 100, None);
+        assert!(decode_admin_response(&payload).unwrap().write.is_none());
+    }
+
+    #[test]
+    fn metrics_health_error_roundtrips() {
+        let m = WireMetrics {
+            submitted: 10,
+            completed: 9,
+            rejected_busy: 1,
+            batches: 4,
+            mean_batch_size: 2.25,
+            total_p50_us: 12.0,
+            total_p99_us: 80.0,
+            ..Default::default()
+        };
+        let back = decode_metrics_response(&encode_metrics_response(&m)).unwrap();
+        assert_eq!(back, m);
+
+        let h = WireHealth { rows: 100, dims: 1024, epoch: 3, shards: 2 };
+        assert_eq!(decode_health_response(&encode_health_response(&h)).unwrap(), h);
+
+        let e = WireError::new(ErrorCode::Busy, "queue full (backpressure)");
+        let back = decode_error_response(&encode_error_response(&e)).unwrap();
+        assert_eq!(back, e);
+    }
+
+    #[test]
+    fn submit_errors_map_to_codes() {
+        assert_eq!(WireError::from(SubmitError::Busy).code, ErrorCode::Busy);
+        assert_eq!(WireError::from(SubmitError::Closed).code, ErrorCode::Closed);
+        assert_eq!(
+            WireError::from(SubmitError::BadQuery("k".into())).code,
+            ErrorCode::BadQuery
+        );
+        assert_eq!(
+            WireError::from(SubmitError::WriteFailed("stuck".into())).code,
+            ErrorCode::WriteFailed
+        );
+    }
+
+    #[test]
+    fn opcode_and_error_code_tables_are_involutions() {
+        for op in [
+            Op::Search,
+            Op::AdminUpdate,
+            Op::AdminInsert,
+            Op::AdminDelete,
+            Op::Metrics,
+            Op::Health,
+            Op::SearchOk,
+            Op::AdminOk,
+            Op::MetricsOk,
+            Op::HealthOk,
+            Op::Error,
+        ] {
+            assert_eq!(Op::from_u8(op as u8), Some(op));
+        }
+        assert_eq!(Op::from_u8(0x42), None);
+        for code in 1..=9u8 {
+            assert_eq!(ErrorCode::from_u8(code).unwrap() as u8, code);
+        }
+        assert_eq!(ErrorCode::from_u8(200), None);
+    }
+}

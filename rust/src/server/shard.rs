@@ -1,0 +1,554 @@
+//! Scatter-gather sharding: one logical store fanned across `S` independent
+//! [`AmService`] shards.
+//!
+//! Each shard is a full serving stack (its own tile manager, batcher and
+//! worker pool), so shards scale the write path and the epoch lock as well
+//! as the score path — the software analogue of racking independent COSIME
+//! boards behind one front door.
+//!
+//! # Global row ids
+//!
+//! A row is addressed by a *global id* that encodes its owner:
+//! `global = shard << 48 | local` ([`global_row`] / [`split_row`]). Search
+//! hits come back with global ids, so a client can hand the id straight to
+//! an admin op and the router routes it to the owning shard. With `S = 1`
+//! the global id equals the local row index.
+//!
+//! **Id stability caveat:** a delete shifts the owning shard's higher
+//! local rows down by one (the tile manager's semantics), so ids held
+//! across a concurrent *delete on the same shard* can silently address a
+//! different row. Updates and inserts never move existing rows. Single
+//! admin writer (or delete-free workloads): ids are stable; multi-writer
+//! delete safety needs the compare-and-swap admin extension tracked in
+//! ROADMAP "Open items".
+//!
+//! # Placement
+//!
+//! Insert placement is deterministic content hashing: the word's packed
+//! lanes run through the same FNV-1a hash the store fingerprint uses
+//! ([`fnv1a_word`]), and `hash % S` picks the shard — no placement table to
+//! persist, and re-inserting the same word lands on the same shard. The
+//! initial build places words the same way, then rebalances only as far as
+//! needed to guarantee every shard at least one row (engines cannot serve
+//! an empty store).
+//!
+//! # Scatter-gather search
+//!
+//! A query is submitted to *every* shard ([`ShardRouter::submit_topk`]
+//! scatters without blocking); the gather ([`PendingSearch::wait`]) merges
+//! the per-shard ranked lists through [`TopK::merge_from`] — the same
+//! bounded-selector merge the tile manager uses across tiles, one level up.
+//! The merged response is stamped with the *aggregate epoch*: the sum of
+//! the shard epochs, which is monotone under every commit. Per-shard
+//! ordering guarantees ("searches stamped ≥ this epoch observe the
+//! mutation") hold within a shard; across shards the aggregate is a
+//! monotone progress indicator, not a total order.
+
+use std::sync::mpsc;
+
+use anyhow::{bail, ensure, Result};
+
+use crate::am::kernel::TopK;
+use crate::am::write::WriteReport;
+use crate::am::AmEngine;
+use crate::config::CosimeConfig;
+use crate::coordinator::{
+    AdminOp, AmService, MetricsSnapshot, RequestTiming, SearchResponse, SubmitError, TileManager,
+    WriteCostSnapshot,
+};
+use crate::util::BitVec;
+
+/// Bits reserved for the local row index inside a global id.
+pub const SHARD_SHIFT: u32 = 48;
+/// Mask extracting the local row index from a global id.
+pub const LOCAL_MASK: u64 = (1u64 << SHARD_SHIFT) - 1;
+/// Hard cap on shard count (the shard id must fit above [`SHARD_SHIFT`]).
+pub const MAX_SHARDS: usize = 1 << 16;
+
+/// Compose a global row id from `(shard, local)`.
+#[inline]
+pub fn global_row(shard: usize, local: usize) -> u64 {
+    debug_assert!(shard < MAX_SHARDS && (local as u64) <= LOCAL_MASK);
+    ((shard as u64) << SHARD_SHIFT) | local as u64
+}
+
+/// Split a global row id into `(shard, local)`.
+#[inline]
+pub fn split_row(global: u64) -> (usize, u64) {
+    ((global >> SHARD_SHIFT) as usize, global & LOCAL_MASK)
+}
+
+/// FNV-1a over a word's packed lanes (plus its bit length, so a 64-bit word
+/// and its zero-extension hash differently) — the same hash
+/// ([`crate::util::fnv1a_bytes`]) the store fingerprint uses, reused for
+/// placement.
+pub fn fnv1a_word(word: &BitVec) -> u64 {
+    let len_bytes = (word.len() as u64).to_le_bytes();
+    let lane_bytes = word.lanes().iter().flat_map(|l| l.to_le_bytes());
+    crate::util::fnv1a_bytes(len_bytes.into_iter().chain(lane_bytes))
+}
+
+/// Outcome of a routed admin op, in global terms.
+#[derive(Debug, Clone)]
+pub struct RoutedAdminResponse {
+    /// Global id of the affected row (for Insert: the new row).
+    pub row: u64,
+    /// Aggregate store epoch (sum over shards) after the commit.
+    pub epoch: u64,
+    /// Total stored rows across all shards after the commit.
+    pub rows: u64,
+    /// Write-verify cost (None for Delete).
+    pub write: Option<WriteReport>,
+}
+
+/// One logical store fanned across `S` independent [`AmService`] shards.
+/// See the module docs for placement, global ids and epoch semantics.
+pub struct ShardRouter {
+    shards: Vec<AmService>,
+    dims: usize,
+}
+
+/// An in-flight scattered search: one pending response per shard. Call
+/// [`PendingSearch::wait`] to gather and merge.
+pub struct PendingSearch {
+    rxs: Vec<mpsc::Receiver<SearchResponse>>,
+    k: usize,
+}
+
+impl PendingSearch {
+    /// Block for every shard's response and merge the ranked lists into one
+    /// global top-k (ids globalized, selectors merged via
+    /// [`TopK::merge_from`]). Timing reports the slowest shard; the epoch
+    /// is the aggregate (sum of shard epochs at serve time).
+    pub fn wait(self) -> Result<SearchResponse, SubmitError> {
+        let mut merged = TopK::new(self.k);
+        let mut shard_sel = TopK::new(self.k);
+        let mut epoch = 0u64;
+        let mut timing = RequestTiming::default();
+        for (shard, rx) in self.rxs.into_iter().enumerate() {
+            let resp = rx.recv().map_err(|_| SubmitError::Closed)?;
+            shard_sel.reset(self.k);
+            for hit in &resp.hits {
+                shard_sel.offer(global_row(shard, hit.winner) as usize, hit.score);
+            }
+            merged.merge_from(&shard_sel);
+            epoch += resp.epoch;
+            timing.queued = timing.queued.max(resp.timing.queued);
+            timing.exec = timing.exec.max(resp.timing.exec);
+            timing.batch_size = timing.batch_size.max(resp.timing.batch_size);
+        }
+        let hits = merged.as_slice().to_vec();
+        let head = hits.first().expect("every shard serves at least one row");
+        Ok(SearchResponse { winner: head.winner, score: head.score, hits, epoch, timing })
+    }
+}
+
+impl ShardRouter {
+    /// Shard `words` across `shards` serving stacks (content-hash
+    /// placement), each sharded into tiles of at most `tile_capacity` rows
+    /// and served with `cfg`'s coordinator/write policy. Requires at least
+    /// one word per shard.
+    pub fn build<F>(
+        cfg: &CosimeConfig,
+        shards: usize,
+        tile_capacity: usize,
+        words: Vec<BitVec>,
+        factory: F,
+    ) -> Result<ShardRouter>
+    where
+        F: Fn(Vec<BitVec>) -> Result<Box<dyn AmEngine>> + Send + Sync + Clone + 'static,
+    {
+        ensure!(shards >= 1, "need at least one shard");
+        ensure!(shards <= MAX_SHARDS, "shard count {shards} exceeds {MAX_SHARDS}");
+        ensure!(!words.is_empty(), "shard router needs stored words");
+        ensure!(
+            words.len() >= shards,
+            "cannot spread {} words across {shards} shards (each needs at least one)",
+            words.len()
+        );
+        let dims = words[0].len();
+        let mut placed: Vec<Vec<BitVec>> = (0..shards).map(|_| Vec::new()).collect();
+        for w in words {
+            if w.len() != dims {
+                bail!("word has {} bits, expected {dims}", w.len());
+            }
+            placed[(fnv1a_word(&w) % shards as u64) as usize].push(w);
+        }
+        // Content hashing can leave a shard empty on small stores; engines
+        // need at least one row, so steal deterministically from the
+        // currently largest shard.
+        let empties: Vec<usize> =
+            placed.iter().enumerate().filter(|(_, p)| p.is_empty()).map(|(i, _)| i).collect();
+        for i in empties {
+            let donor =
+                (0..shards).max_by_key(|&j| placed[j].len()).expect("at least one shard");
+            ensure!(placed[donor].len() > 1, "not enough words to fill every shard");
+            let w = placed[donor].pop().unwrap();
+            placed[i].push(w);
+        }
+        let mut services = Vec::with_capacity(shards);
+        for shard_words in placed {
+            let tiles = TileManager::build(shard_words, tile_capacity, factory.clone())?;
+            services.push(AmService::start_with_config(cfg, tiles));
+        }
+        Ok(ShardRouter { shards: services, dims })
+    }
+
+    /// Wrap already-running services as shards (advanced callers / tests).
+    /// All services must serve the same dimensionality.
+    pub fn from_services(shards: Vec<AmService>) -> Result<ShardRouter> {
+        ensure!(!shards.is_empty(), "need at least one shard");
+        ensure!(shards.len() <= MAX_SHARDS, "too many shards");
+        let dims = shards[0].dims();
+        for s in &shards {
+            ensure!(s.dims() == dims, "shards disagree on dims");
+        }
+        Ok(ShardRouter { shards, dims })
+    }
+
+    pub fn shard_count(&self) -> usize {
+        self.shards.len()
+    }
+
+    pub fn dims(&self) -> usize {
+        self.dims
+    }
+
+    /// Total stored rows across all shards.
+    pub fn rows(&self) -> usize {
+        self.shards.iter().map(AmService::rows).sum()
+    }
+
+    /// Aggregate epoch: the sum of shard epochs. Monotone under every
+    /// commit on any shard.
+    pub fn epoch(&self) -> u64 {
+        self.shards.iter().map(AmService::epoch).sum()
+    }
+
+    /// Scatter a top-k query to every shard without blocking; gather with
+    /// [`PendingSearch::wait`]. Fails fast if *any* shard rejects the
+    /// submit (already-queued shards still serve their copies; those
+    /// responses are dropped).
+    pub fn submit_topk(&self, query: &BitVec, k: usize) -> Result<PendingSearch, SubmitError> {
+        let mut rxs = Vec::with_capacity(self.shards.len());
+        for shard in &self.shards {
+            rxs.push(shard.submit_topk(query.clone(), k)?);
+        }
+        Ok(PendingSearch { rxs, k })
+    }
+
+    /// Blocking scatter-gather top-k.
+    pub fn search_topk(&self, query: &BitVec, k: usize) -> Result<SearchResponse, SubmitError> {
+        self.submit_topk(query, k)?.wait()
+    }
+
+    /// Reprogram the row with global id `row` to `word` (routed to the
+    /// owning shard; write-verified there).
+    pub fn update(&self, row: u64, word: BitVec) -> Result<RoutedAdminResponse, SubmitError> {
+        let (shard, local) = self.locate(row)?;
+        let resp = self.shards[shard].admin(AdminOp::Update { row: local, word })?;
+        Ok(self.globalize(shard, resp))
+    }
+
+    /// Insert `word` as a new row on its content-hashed shard; the response
+    /// carries the new row's global id.
+    pub fn insert(&self, word: BitVec) -> Result<RoutedAdminResponse, SubmitError> {
+        let shard = (fnv1a_word(&word) % self.shards.len() as u64) as usize;
+        let resp = self.shards[shard].admin(AdminOp::Insert { word })?;
+        Ok(self.globalize(shard, resp))
+    }
+
+    /// Delete the row with global id `row`. Deleting a shard's last
+    /// remaining row is rejected (every shard must keep serving).
+    pub fn delete(&self, row: u64) -> Result<RoutedAdminResponse, SubmitError> {
+        let (shard, local) = self.locate(row)?;
+        let resp = self.shards[shard].admin(AdminOp::Delete { row: local })?;
+        Ok(self.globalize(shard, resp))
+    }
+
+    fn locate(&self, row: u64) -> Result<(usize, usize), SubmitError> {
+        let (shard, local) = split_row(row);
+        if shard >= self.shards.len() {
+            return Err(SubmitError::BadQuery(format!(
+                "global row {row:#x} names shard {shard}, but only {} exist",
+                self.shards.len()
+            )));
+        }
+        Ok((shard, local as usize))
+    }
+
+    fn globalize(
+        &self,
+        shard: usize,
+        resp: crate::coordinator::AdminResponse,
+    ) -> RoutedAdminResponse {
+        RoutedAdminResponse {
+            row: global_row(shard, resp.row),
+            epoch: self.epoch(),
+            rows: self.rows() as u64,
+            write: resp.write,
+        }
+    }
+
+    /// Per-shard metrics snapshots, shard order.
+    pub fn metrics_per_shard(&self) -> Vec<MetricsSnapshot> {
+        self.shards.iter().map(AmService::metrics).collect()
+    }
+
+    /// Aggregate metrics across shards: counters and write costs are
+    /// summed; latency percentiles are the *worst shard's* (a conservative
+    /// tail view — true cross-shard percentiles would need merged
+    /// histograms); mean latencies and batch sizes are weighted means.
+    pub fn metrics(&self) -> MetricsSnapshot {
+        aggregate_metrics(&self.metrics_per_shard())
+    }
+
+    /// Graceful shutdown of every shard.
+    pub fn shutdown(self) {
+        for shard in self.shards {
+            shard.shutdown();
+        }
+    }
+
+    /// Close every shard for submissions without consuming the router:
+    /// further submits see [`SubmitError::Closed`]; workers drain their
+    /// queues and exit asynchronously. Used by the TCP frontend, whose
+    /// connection handlers may still hold references during shutdown.
+    pub fn close(&self) {
+        for shard in &self.shards {
+            shard.clone().shutdown();
+        }
+    }
+}
+
+/// Merge shard snapshots into one logical-store view (see
+/// [`ShardRouter::metrics`] for the semantics).
+pub fn aggregate_metrics(snaps: &[MetricsSnapshot]) -> MetricsSnapshot {
+    let mut agg = MetricsSnapshot {
+        submitted: 0,
+        completed: 0,
+        rejected_busy: 0,
+        batches: 0,
+        mean_batch_size: 0.0,
+        queue_p50_us: 0.0,
+        queue_p99_us: 0.0,
+        exec_p50_us: 0.0,
+        exec_p99_us: 0.0,
+        total_p50_us: 0.0,
+        total_p99_us: 0.0,
+        total_mean_us: 0.0,
+        per_k: Vec::new(),
+        admin: Vec::new(),
+        admin_rejected: 0,
+        write: WriteCostSnapshot::default(),
+    };
+    let mut batch_weight = 0.0f64;
+    let mut mean_weight = 0.0f64;
+    for s in snaps {
+        agg.submitted += s.submitted;
+        agg.completed += s.completed;
+        agg.rejected_busy += s.rejected_busy;
+        agg.batches += s.batches;
+        agg.mean_batch_size += s.mean_batch_size * s.batches as f64;
+        batch_weight += s.batches as f64;
+        agg.queue_p50_us = agg.queue_p50_us.max(s.queue_p50_us);
+        agg.queue_p99_us = agg.queue_p99_us.max(s.queue_p99_us);
+        agg.exec_p50_us = agg.exec_p50_us.max(s.exec_p50_us);
+        agg.exec_p99_us = agg.exec_p99_us.max(s.exec_p99_us);
+        agg.total_p50_us = agg.total_p50_us.max(s.total_p50_us);
+        agg.total_p99_us = agg.total_p99_us.max(s.total_p99_us);
+        agg.total_mean_us += s.total_mean_us * s.completed as f64;
+        mean_weight += s.completed as f64;
+        agg.admin_rejected += s.admin_rejected;
+        agg.write.cells += s.write.cells;
+        agg.write.pulses += s.write.pulses;
+        agg.write.energy_j += s.write.energy_j;
+        agg.write.latency_s += s.write.latency_s;
+        for lane in &s.per_k {
+            match agg.per_k.iter_mut().find(|l| l.k == lane.k) {
+                Some(l) => {
+                    l.completed += lane.completed;
+                    l.total_p50_us = l.total_p50_us.max(lane.total_p50_us);
+                    l.total_p99_us = l.total_p99_us.max(lane.total_p99_us);
+                }
+                None => agg.per_k.push(lane.clone()),
+            }
+        }
+        for lane in &s.admin {
+            match agg.admin.iter_mut().find(|l| l.kind == lane.kind) {
+                Some(l) => {
+                    l.completed += lane.completed;
+                    l.total_p50_us = l.total_p50_us.max(lane.total_p50_us);
+                    l.total_p99_us = l.total_p99_us.max(lane.total_p99_us);
+                }
+                None => agg.admin.push(lane.clone()),
+            }
+        }
+    }
+    if batch_weight > 0.0 {
+        agg.mean_batch_size /= batch_weight;
+    }
+    if mean_weight > 0.0 {
+        agg.total_mean_us /= mean_weight;
+    }
+    agg.per_k.sort_by_key(|l| l.k);
+    agg
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::am::DigitalExactEngine;
+    use crate::util::rng;
+
+    fn digital_factory(words: Vec<BitVec>) -> Result<Box<dyn AmEngine>> {
+        Ok(Box::new(DigitalExactEngine::new(words)))
+    }
+
+    fn router(rows: usize, dims: usize, shards: usize, seed: u64) -> (ShardRouter, Vec<BitVec>) {
+        let mut r = rng(seed);
+        let words: Vec<BitVec> = (0..rows).map(|_| BitVec::random(dims, 0.5, &mut r)).collect();
+        let cfg = CosimeConfig::default();
+        let router = ShardRouter::build(&cfg, shards, 64, words.clone(), digital_factory).unwrap();
+        (router, words)
+    }
+
+    #[test]
+    fn global_id_roundtrip() {
+        for (shard, local) in [(0usize, 0usize), (1, 7), (65_535, (1 << 40) + 3)] {
+            let g = global_row(shard, local);
+            assert_eq!(split_row(g), (shard, local as u64));
+        }
+        // Single shard: global id == local index.
+        assert_eq!(global_row(0, 42), 42);
+    }
+
+    #[test]
+    fn fnv_placement_is_deterministic_and_length_sensitive() {
+        let mut r = rng(5);
+        let w = BitVec::random(128, 0.5, &mut r);
+        assert_eq!(fnv1a_word(&w), fnv1a_word(&w.clone()));
+        // Zero-extension must hash differently (length is absorbed).
+        let mut longer = BitVec::zeros(192);
+        for (i, bit) in w.iter().enumerate() {
+            longer.set(i, bit);
+        }
+        assert_ne!(fnv1a_word(&w), fnv1a_word(&longer));
+    }
+
+    #[test]
+    fn scatter_gather_matches_flat_reference() {
+        for shards in [1usize, 2, 4] {
+            let (router, words) = router_words(shards);
+            let flat = DigitalExactEngine::new(words);
+            assert_eq!(router.shard_count(), shards);
+            assert_eq!(router.rows(), flat.rows());
+            let mut r = rng(100 + shards as u64);
+            for _ in 0..15 {
+                let q = BitVec::random(64, 0.5, &mut r);
+                let k = 1 + r.below(6);
+                let got = router.search_topk(&q, k).unwrap();
+                let want = flat.search_topk(&q, k);
+                assert_eq!(got.hits.len(), want.len(), "depth (shards {shards}, k {k})");
+                for (a, b) in got.hits.iter().zip(&want) {
+                    assert_eq!(a.score, b.score, "score sequence (shards {shards}, k {k})");
+                }
+                assert_eq!(got.score, want[0].score);
+            }
+            router.shutdown();
+        }
+    }
+
+    fn router_words(shards: usize) -> (ShardRouter, Vec<BitVec>) {
+        router(60, 64, shards, 7)
+    }
+
+    #[test]
+    fn self_queries_win_with_full_score() {
+        let (router, words) = router(40, 64, 3, 9);
+        for w in words.iter().take(10) {
+            let resp = router.search_topk(w, 1).unwrap();
+            assert_eq!(resp.score, f64::from(w.count_ones()), "exact self-match");
+        }
+        router.shutdown();
+    }
+
+    #[test]
+    fn admin_ops_route_to_owning_shard() {
+        let (router, _) = router(30, 64, 2, 11);
+        let rows0 = router.rows();
+        let epoch0 = router.epoch();
+        let mut r = rng(13);
+
+        // Insert: content-hashed placement, searchable under its global id.
+        let w = BitVec::random(64, 0.5, &mut r);
+        let ins = router.insert(w.clone()).unwrap();
+        assert_eq!(ins.rows as usize, rows0 + 1);
+        assert!(ins.epoch > epoch0, "insert bumps the aggregate epoch");
+        assert!(ins.write.is_some(), "insert programs the array");
+        let expected_shard = (fnv1a_word(&w) % 2) as usize;
+        assert_eq!(split_row(ins.row).0, expected_shard, "content-hash placement");
+        let hit = router.search_topk(&w, 1).unwrap();
+        assert_eq!(hit.hits[0].winner as u64, ins.row, "hit carries the global id");
+
+        // Update through the returned global id.
+        let w2 = BitVec::random(64, 0.5, &mut r);
+        let upd = router.update(ins.row, w2.clone()).unwrap();
+        assert_eq!(upd.row, ins.row);
+        assert!(upd.epoch > ins.epoch);
+        let hit = router.search_topk(&w2, 1).unwrap();
+        assert_eq!(hit.hits[0].winner as u64, ins.row, "updated word wins under the same id");
+
+        // Delete restores the row count.
+        let del = router.delete(ins.row).unwrap();
+        assert_eq!(del.rows as usize, rows0);
+        assert!(del.write.is_none(), "delete spends no pulses");
+
+        // Routing a nonexistent shard is a BadQuery, not a panic.
+        match router.update(global_row(9, 0), BitVec::zeros(64)) {
+            Err(SubmitError::BadQuery(msg)) => assert!(msg.contains("shard"), "{msg}"),
+            other => panic!("expected BadQuery, got {other:?}"),
+        }
+        router.shutdown();
+    }
+
+    #[test]
+    fn build_rejects_impossible_shardings() {
+        let mut r = rng(17);
+        let words: Vec<BitVec> = (0..3).map(|_| BitVec::random(32, 0.5, &mut r)).collect();
+        let cfg = CosimeConfig::default();
+        assert!(ShardRouter::build(&cfg, 4, 8, words.clone(), digital_factory).is_err());
+        assert!(ShardRouter::build(&cfg, 0, 8, words.clone(), digital_factory).is_err());
+        // Exactly one word per shard still builds (steal fix-up).
+        let router = ShardRouter::build(&cfg, 3, 8, words, digital_factory).unwrap();
+        assert_eq!(router.rows(), 3);
+        for s in 0..3 {
+            // Every shard serves something: deleting its only row is refused.
+            assert!(matches!(
+                router.delete(global_row(s, 0)),
+                Err(SubmitError::BadQuery(_))
+            ));
+        }
+        router.shutdown();
+    }
+
+    #[test]
+    fn aggregate_metrics_sums_and_takes_worst_tails() {
+        let (router, _) = router(40, 64, 2, 21);
+        let mut r = rng(22);
+        for _ in 0..10 {
+            let q = BitVec::random(64, 0.5, &mut r);
+            router.search_topk(&q, 2).unwrap();
+        }
+        let per = router.metrics_per_shard();
+        assert_eq!(per.len(), 2);
+        let agg = router.metrics();
+        // Every query was scattered to both shards.
+        assert_eq!(agg.completed, 20);
+        assert_eq!(agg.completed, per[0].completed + per[1].completed);
+        assert_eq!(agg.total_p99_us, per[0].total_p99_us.max(per[1].total_p99_us));
+        let lane = agg.per_k.iter().find(|l| l.k == 2).expect("k=2 lane");
+        assert_eq!(lane.completed, 20);
+        router.shutdown();
+    }
+}

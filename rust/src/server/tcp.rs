@@ -1,0 +1,407 @@
+//! The threaded TCP frontend: `cosimed`.
+//!
+//! One accept thread; per connection, a *reader* thread and a *writer*
+//! thread bridged by a bounded reply channel:
+//!
+//! * the reader decodes frames and dispatches them — search frames are
+//!   scattered through the [`ShardRouter`] *without waiting* and their
+//!   pending gathers pushed onto the channel; admin/metrics/health are
+//!   handled synchronously and pushed as finished frames;
+//! * the writer pops replies in request order, finishes pending gathers,
+//!   and writes response frames.
+//!
+//! This gives every connection Redis-style pipelining (responses in request
+//! order, many frames in flight) with **bounded in-flight frames**: the
+//! reply channel holds at most `max_inflight` entries, so a client that
+//! stops reading its responses blocks its own reader — TCP backpressure —
+//! instead of ballooning server memory or starving the shared batch queue.
+//!
+//! Submit rejections ([`SubmitError`]) travel back as error frames and the
+//! connection stays usable. Frame-sync-destroying input (bad magic,
+//! oversized frame) gets a final error frame and the connection is closed;
+//! a truncated frame or mid-batch disconnect just ends the connection —
+//! in-flight work completes against the service and the responses are
+//! dropped, wedging nothing.
+
+use std::io::{BufReader, BufWriter, Write};
+use std::net::{IpAddr, Ipv4Addr, Ipv6Addr, SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{mpsc, Arc};
+use std::thread::JoinHandle;
+
+use anyhow::{Context, Result};
+
+use crate::config::ServerConfig;
+use crate::coordinator::SubmitError;
+
+use super::protocol::{
+    self, encode_error_response, ErrorCode, FrameReadError, Op, WireAdminOp, WireError, WireHit,
+    WireMetrics, VERSION,
+};
+use super::shard::{PendingSearch, ShardRouter};
+
+struct Shared {
+    router: ShardRouter,
+    running: AtomicBool,
+    max_frame: usize,
+    max_inflight: usize,
+}
+
+/// A running `cosimed` instance. Dropping the handle does **not** stop the
+/// server — call [`CosimeServer::shutdown`].
+pub struct CosimeServer {
+    addr: SocketAddr,
+    shared: Arc<Shared>,
+    accept: Option<JoinHandle<()>>,
+}
+
+impl CosimeServer {
+    /// Bind `cfg.listen` (port 0 picks an ephemeral port — read the real
+    /// one back from [`CosimeServer::local_addr`]) and serve `router` until
+    /// [`CosimeServer::shutdown`].
+    pub fn serve(cfg: &ServerConfig, router: ShardRouter) -> Result<CosimeServer> {
+        let listener = TcpListener::bind(cfg.listen.as_str())
+            .with_context(|| format!("binding {}", cfg.listen))?;
+        let addr = listener.local_addr().context("reading bound address")?;
+        let shared = Arc::new(Shared {
+            router,
+            running: AtomicBool::new(true),
+            max_frame: cfg.max_frame.max(protocol::HEADER_LEN),
+            max_inflight: cfg.max_inflight.max(1),
+        });
+        let accept_shared = shared.clone();
+        let accept = std::thread::Builder::new()
+            .name("cosimed-accept".to_string())
+            .spawn(move || accept_loop(listener, accept_shared))
+            .context("spawning accept thread")?;
+        Ok(CosimeServer { addr, shared, accept: Some(accept) })
+    }
+
+    /// The address actually bound (resolves `:0` ephemeral ports).
+    pub fn local_addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// The served shard router (for in-process metrics/epoch inspection).
+    pub fn router(&self) -> &ShardRouter {
+        &self.shared.router
+    }
+
+    /// Stop accepting connections and close every shard for submissions.
+    /// Connection threads finish their in-flight replies and exit when
+    /// their client disconnects or their next submit sees `Closed`.
+    pub fn shutdown(mut self) {
+        self.shared.running.store(false, Ordering::Release);
+        // Wake the blocking accept() with a throwaway connection. A
+        // wildcard bind address (0.0.0.0 / [::]) is not connectable on
+        // every platform — aim the wake-up at loopback on the same port.
+        let mut wake = self.addr;
+        if wake.ip().is_unspecified() {
+            wake.set_ip(match self.addr {
+                SocketAddr::V4(_) => IpAddr::V4(Ipv4Addr::LOCALHOST),
+                SocketAddr::V6(_) => IpAddr::V6(Ipv6Addr::LOCALHOST),
+            });
+        }
+        let _ = TcpStream::connect_timeout(&wake, std::time::Duration::from_secs(1));
+        if let Some(h) = self.accept.take() {
+            let _ = h.join();
+        }
+        self.shared.router.close();
+    }
+}
+
+fn accept_loop(listener: TcpListener, shared: Arc<Shared>) {
+    loop {
+        match listener.accept() {
+            Ok((stream, _peer)) => {
+                if !shared.running.load(Ordering::Acquire) {
+                    return;
+                }
+                let conn_shared = shared.clone();
+                let _ = std::thread::Builder::new()
+                    .name("cosimed-conn".to_string())
+                    .spawn(move || handle_conn(stream, conn_shared));
+            }
+            Err(_) => {
+                if !shared.running.load(Ordering::Acquire) {
+                    return;
+                }
+                // Transient accept failure (EMFILE etc.): keep serving.
+                std::thread::sleep(std::time::Duration::from_millis(10));
+            }
+        }
+    }
+}
+
+/// One reply in the per-connection pipeline, pushed in request order.
+enum Reply {
+    /// A finished response frame.
+    Immediate(Op, Vec<u8>),
+    /// A scattered search batch still being served: the writer gathers.
+    Search(Vec<PendingSearch>),
+    /// Send this error frame, then close the connection (stream unsynced).
+    Fatal(Vec<u8>),
+}
+
+fn handle_conn(stream: TcpStream, shared: Arc<Shared>) {
+    let _ = stream.set_nodelay(true);
+    let write_half = match stream.try_clone() {
+        Ok(s) => s,
+        Err(_) => return,
+    };
+    let (tx, rx) = mpsc::sync_channel::<Reply>(shared.max_inflight);
+    let writer = std::thread::Builder::new()
+        .name("cosimed-conn-write".to_string())
+        .spawn(move || write_loop(write_half, rx));
+    read_loop(stream, &shared, &tx);
+    drop(tx); // writer drains the remaining replies and exits
+    if let Ok(w) = writer {
+        let _ = w.join();
+    }
+}
+
+fn read_loop(stream: TcpStream, shared: &Shared, tx: &mpsc::SyncSender<Reply>) {
+    let mut r = BufReader::new(stream);
+    loop {
+        let (header, payload) = match protocol::read_frame(&mut r, shared.max_frame) {
+            Ok(frame) => frame,
+            Err(e) => {
+                // Clean EOF between frames is the normal end of a
+                // connection; a mid-frame cut (truncated frame) or reset
+                // has nothing useful to answer. Only sync-destroying
+                // *decoded* garbage earns a parting error frame.
+                let farewell = match &e {
+                    FrameReadError::BadMagic => Some(WireError::new(
+                        ErrorCode::BadFrame,
+                        "bad frame magic: not a cosimed client?",
+                    )),
+                    FrameReadError::TooLarge { len, max } => Some(WireError::new(
+                        ErrorCode::FrameTooLarge,
+                        format!("frame payload {len} bytes exceeds max_frame {max}"),
+                    )),
+                    FrameReadError::Io(_) => None,
+                };
+                if let Some(err) = farewell {
+                    let _ = tx.send(Reply::Fatal(encode_error_response(&err)));
+                }
+                return;
+            }
+        };
+        let reply = if header.version != VERSION {
+            error_reply(WireError::new(
+                ErrorCode::BadVersion,
+                format!(
+                    "protocol version {} unsupported (this server speaks {VERSION})",
+                    header.version
+                ),
+            ))
+        } else if header.flags != 0 {
+            // Reserved for must-understand extensions: a frame carrying
+            // flag bits this server does not know must not be half-served.
+            error_reply(WireError::new(
+                ErrorCode::BadFrame,
+                format!("reserved header flags {:#06x} must be zero", header.flags),
+            ))
+        } else {
+            match Op::from_u8(header.op) {
+                Some(op) => handle_request(shared, op, &payload),
+                None => error_reply(WireError::new(
+                    ErrorCode::UnknownOp,
+                    format!("unknown opcode {:#04x}", header.op),
+                )),
+            }
+        };
+        // A full channel blocks here: max_inflight frames are being served,
+        // so this connection stops reading until its client drains replies.
+        if tx.send(reply).is_err() {
+            return; // writer is gone (client stopped reading)
+        }
+    }
+}
+
+fn error_reply(e: WireError) -> Reply {
+    Reply::Immediate(Op::Error, encode_error_response(&e))
+}
+
+fn handle_request(shared: &Shared, op: Op, payload: &[u8]) -> Reply {
+    match try_handle_request(shared, op, payload) {
+        Ok(reply) => reply,
+        Err(e) => error_reply(e),
+    }
+}
+
+fn try_handle_request(shared: &Shared, op: Op, payload: &[u8]) -> Result<Reply, WireError> {
+    match op {
+        Op::Search => {
+            let (k, queries) = protocol::decode_search_request(payload)?;
+            let mut pending = Vec::with_capacity(queries.len());
+            for q in &queries {
+                pending.push(shared.router.submit_topk(q, k).map_err(WireError::from)?);
+            }
+            Ok(Reply::Search(pending))
+        }
+        Op::AdminUpdate | Op::AdminInsert | Op::AdminDelete => {
+            let decoded = protocol::decode_admin_request(op, payload)?;
+            let resp = match decoded {
+                WireAdminOp::Update { row, word } => shared.router.update(row, word),
+                WireAdminOp::Insert { word } => shared.router.insert(word),
+                WireAdminOp::Delete { row } => shared.router.delete(row),
+            }
+            .map_err(WireError::from)?;
+            let payload = protocol::encode_admin_response(
+                resp.row,
+                resp.epoch,
+                resp.rows,
+                resp.write.as_ref(),
+            );
+            Ok(Reply::Immediate(Op::AdminOk, payload))
+        }
+        Op::Metrics => {
+            let snap = shared.router.metrics();
+            Ok(Reply::Immediate(
+                Op::MetricsOk,
+                protocol::encode_metrics_response(&WireMetrics::from_snapshot(&snap)),
+            ))
+        }
+        Op::Health => Ok(Reply::Immediate(
+            Op::HealthOk,
+            protocol::encode_health_response(&protocol::WireHealth {
+                rows: shared.router.rows() as u64,
+                dims: shared.router.dims() as u64,
+                epoch: shared.router.epoch(),
+                shards: shared.router.shard_count() as u32,
+            }),
+        )),
+        _ => Err(WireError::new(ErrorCode::UnknownOp, format!("{op:?} is not a request opcode"))),
+    }
+}
+
+fn write_loop(stream: TcpStream, rx: mpsc::Receiver<Reply>) {
+    let mut w = BufWriter::new(stream);
+    while let Ok(reply) = rx.recv() {
+        let ok = match reply {
+            Reply::Immediate(op, payload) => protocol::write_frame(&mut w, op, &payload).is_ok(),
+            Reply::Fatal(payload) => {
+                let _ = protocol::write_frame(&mut w, Op::Error, &payload);
+                let _ = w.flush();
+                return;
+            }
+            Reply::Search(pending) => match gather(pending) {
+                Ok((epoch, results)) => protocol::write_frame(
+                    &mut w,
+                    Op::SearchOk,
+                    &protocol::encode_search_response(epoch, &results),
+                )
+                .is_ok(),
+                Err(e) => protocol::write_frame(
+                    &mut w,
+                    Op::Error,
+                    &encode_error_response(&WireError::from(e)),
+                )
+                .is_ok(),
+            },
+        };
+        if !ok || w.flush().is_err() {
+            return; // client gone; pending replies are dropped harmlessly
+        }
+    }
+    let _ = w.flush();
+}
+
+/// Gather a batch's scattered searches into wire results. The frame epoch
+/// is the highest aggregate epoch any query in the batch was served at.
+fn gather(pending: Vec<PendingSearch>) -> Result<(u64, Vec<Vec<WireHit>>), SubmitError> {
+    let mut epoch = 0u64;
+    let mut results = Vec::with_capacity(pending.len());
+    for p in pending {
+        let resp = p.wait()?;
+        epoch = epoch.max(resp.epoch);
+        results.push(
+            resp.hits
+                .iter()
+                .map(|h| WireHit { row: h.winner as u64, score: h.score })
+                .collect(),
+        );
+    }
+    Ok((epoch, results))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::am::{AmEngine, DigitalExactEngine};
+    use crate::config::CosimeConfig;
+    use crate::util::{rng, BitVec};
+
+    fn start(rows: usize, dims: usize, shards: usize) -> (CosimeServer, Vec<BitVec>) {
+        let mut r = rng(3);
+        let words: Vec<BitVec> = (0..rows).map(|_| BitVec::random(dims, 0.5, &mut r)).collect();
+        let cfg = CosimeConfig::default();
+        let router = ShardRouter::build(&cfg, shards, 64, words.clone(), |w| {
+            Ok(Box::new(DigitalExactEngine::new(w)) as Box<dyn AmEngine>)
+        })
+        .unwrap();
+        let mut scfg = cfg.server.clone();
+        scfg.listen = "127.0.0.1:0".to_string();
+        (CosimeServer::serve(&scfg, router).unwrap(), words)
+    }
+
+    #[test]
+    fn serves_health_over_a_raw_socket() {
+        let (server, _) = start(20, 64, 2);
+        let mut stream = TcpStream::connect(server.local_addr()).unwrap();
+        protocol::write_frame(&mut stream, Op::Health, &[]).unwrap();
+        let (h, payload) = protocol::read_frame(&mut stream, 1 << 20).unwrap();
+        assert_eq!(Op::from_u8(h.op), Some(Op::HealthOk));
+        let health = protocol::decode_health_response(&payload).unwrap();
+        assert_eq!(health.rows, 20);
+        assert_eq!(health.dims, 64);
+        assert_eq!(health.shards, 2);
+        drop(stream);
+        server.shutdown();
+    }
+
+    #[test]
+    fn bad_version_unknown_op_and_flags_keep_the_connection_alive() {
+        let (server, _) = start(10, 32, 1);
+        let mut stream = TcpStream::connect(server.local_addr()).unwrap();
+
+        // Hand-build a frame with a wrong version byte.
+        let mut frame = Vec::new();
+        protocol::write_frame(&mut frame, Op::Health, &[]).unwrap();
+        frame[4] = 99;
+        stream.write_all(&frame).unwrap();
+        let (h, payload) = protocol::read_frame(&mut stream, 1 << 20).unwrap();
+        assert_eq!(Op::from_u8(h.op), Some(Op::Error));
+        let e = protocol::decode_error_response(&payload).unwrap();
+        assert_eq!(e.code, ErrorCode::BadVersion);
+
+        // Unknown opcode, valid header: payload is consumed, error returned.
+        let mut frame = Vec::new();
+        protocol::write_frame(&mut frame, Op::Health, &[1, 2, 3]).unwrap();
+        frame[5] = 0x42;
+        stream.write_all(&frame).unwrap();
+        let (h, payload) = protocol::read_frame(&mut stream, 1 << 20).unwrap();
+        assert_eq!(Op::from_u8(h.op), Some(Op::Error));
+        assert_eq!(protocol::decode_error_response(&payload).unwrap().code, ErrorCode::UnknownOp);
+
+        // Nonzero reserved flags: rejected (must-understand semantics),
+        // connection stays in sync.
+        let mut frame = Vec::new();
+        protocol::write_frame(&mut frame, Op::Health, &[]).unwrap();
+        frame[6] = 0x01;
+        stream.write_all(&frame).unwrap();
+        let (h, payload) = protocol::read_frame(&mut stream, 1 << 20).unwrap();
+        assert_eq!(Op::from_u8(h.op), Some(Op::Error));
+        let e = protocol::decode_error_response(&payload).unwrap();
+        assert_eq!(e.code, ErrorCode::BadFrame);
+        assert!(e.message.contains("flags"), "{e}");
+
+        // The same connection still answers a well-formed request.
+        protocol::write_frame(&mut stream, Op::Health, &[]).unwrap();
+        let (h, _) = protocol::read_frame(&mut stream, 1 << 20).unwrap();
+        assert_eq!(Op::from_u8(h.op), Some(Op::HealthOk));
+        drop(stream);
+        server.shutdown();
+    }
+}

@@ -23,6 +23,19 @@ pub fn rng(seed: u64) -> Rng {
     Rng::seed_from_u64(seed)
 }
 
+/// 64-bit FNV-1a over a byte stream — the one hash family shared by the
+/// snapshot fingerprint ([`crate::config::CosimeConfig::physical_fingerprint`])
+/// and shard placement ([`crate::server::shard::fnv1a_word`]), so the two
+/// cannot drift apart.
+pub fn fnv1a_bytes(bytes: impl IntoIterator<Item = u8>) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for b in bytes {
+        h ^= u64::from(b);
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
 /// Derive a child seed from a parent seed and a stream index (splitmix64 hop).
 pub fn child_seed(seed: u64, stream: u64) -> u64 {
     let mut z = seed ^ stream.wrapping_mul(0x9E37_79B9_7F4A_7C15);
@@ -40,5 +53,14 @@ mod tests {
         let b = super::child_seed(s, 1);
         assert_ne!(a, b);
         assert_eq!(a, super::child_seed(s, 0));
+    }
+
+    /// Published FNV-1a 64-bit test vectors: the offset basis for the empty
+    /// stream and the reference hash of "a".
+    #[test]
+    fn fnv1a_matches_reference_vectors() {
+        assert_eq!(super::fnv1a_bytes([]), 0xcbf2_9ce4_8422_2325);
+        assert_eq!(super::fnv1a_bytes(*b"a"), 0xaf63_dc4c_8601_ec8c);
+        assert_eq!(super::fnv1a_bytes(b"foobar".iter().copied()), 0x8594_4171_f739_67e8);
     }
 }

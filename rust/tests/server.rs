@@ -1,0 +1,374 @@
+//! Integration tests for the networked serving frontend: a real
+//! `CosimeServer` on an ephemeral port, driven by real TCP clients —
+//! search correctness against a flat reference engine, live admin updates
+//! observed across the wire, protocol edge cases (malformed, truncated and
+//! oversized frames, disconnect mid-batch), backpressure, pipelining and
+//! scatter-gather sharding.
+
+use std::io::Write;
+use std::net::TcpStream;
+use std::time::Duration;
+
+use cosime::am::{AmEngine, DigitalExactEngine};
+use cosime::config::CosimeConfig;
+use cosime::server::protocol::{self, Op};
+use cosime::server::{
+    split_row, Client, CosimeServer, ErrorCode, ShardRouter, WireError,
+};
+use cosime::util::{rng, BitVec};
+
+const DIMS: usize = 128;
+
+fn start_server(
+    rows: usize,
+    shards: usize,
+    tweak: impl FnOnce(&mut CosimeConfig),
+) -> (CosimeServer, Vec<BitVec>) {
+    let mut cfg = CosimeConfig::default();
+    cfg.server.listen = "127.0.0.1:0".to_string();
+    cfg.server.shards = shards;
+    cfg.coordinator.workers = 2;
+    tweak(&mut cfg);
+    let mut r = rng(42);
+    let words: Vec<BitVec> = (0..rows).map(|_| BitVec::random(DIMS, 0.5, &mut r)).collect();
+    let router = ShardRouter::build(&cfg, cfg.server.shards, 64, words.clone(), |w| {
+        Ok(Box::new(DigitalExactEngine::new(w)) as Box<dyn AmEngine>)
+    })
+    .unwrap();
+    (CosimeServer::serve(&cfg.server, router).unwrap(), words)
+}
+
+fn connect(server: &CosimeServer) -> Client {
+    Client::connect_retry(server.local_addr(), 10, Duration::from_millis(20)).unwrap()
+}
+
+#[test]
+fn search_over_the_wire_matches_flat_reference() {
+    for shards in [1usize, 2] {
+        let (server, words) = start_server(100, shards, |_| {});
+        let reference = DigitalExactEngine::new(words);
+        let mut client = connect(&server);
+        let health = client.health().unwrap();
+        assert_eq!(health.rows, 100);
+        assert_eq!(health.dims, DIMS as u64);
+        assert_eq!(health.shards, shards as u32);
+
+        let mut r = rng(7);
+        for _ in 0..20 {
+            let q = BitVec::random(DIMS, 0.5, &mut r);
+            let k = 1 + r.below(5);
+            let (_, hits) = client.search_topk(&q, k).unwrap();
+            let want = reference.search_topk(&q, k);
+            assert_eq!(hits.len(), want.len(), "depth (shards {shards}, k {k})");
+            for (got, exp) in hits.iter().zip(&want) {
+                assert_eq!(got.score, exp.score, "score sequence (shards {shards})");
+            }
+            if shards == 1 {
+                // Single shard: global ids are plain row indices.
+                assert_eq!(hits[0].row as usize, want[0].winner);
+            }
+        }
+        drop(client);
+        server.shutdown();
+    }
+}
+
+#[test]
+fn batched_and_pipelined_searches_round_trip() {
+    let (server, words) = start_server(80, 2, |_| {});
+    let reference = DigitalExactEngine::new(words);
+    let mut client = connect(&server);
+    let mut r = rng(9);
+
+    // One frame carrying a batch: one ranked list per query.
+    let queries: Vec<BitVec> = (0..12).map(|_| BitVec::random(DIMS, 0.5, &mut r)).collect();
+    let resp = client.search_batch(&queries, 3).unwrap();
+    assert_eq!(resp.results.len(), 12);
+    for (q, hits) in queries.iter().zip(&resp.results) {
+        let want = reference.search_topk(q, 3);
+        assert_eq!(hits.len(), want.len());
+        for (got, exp) in hits.iter().zip(&want) {
+            assert_eq!(got.score, exp.score);
+        }
+    }
+
+    // Pipelined: several frames in flight on one socket, responses in order.
+    let mut pipe = client.pipeline();
+    for chunk in queries.chunks(3) {
+        pipe.search_batch(chunk, 2).unwrap();
+    }
+    let responses = pipe.finish().unwrap();
+    assert_eq!(responses.len(), 4);
+    for (chunk, resp) in queries.chunks(3).zip(&responses) {
+        assert_eq!(resp.results.len(), chunk.len());
+        for (q, hits) in chunk.iter().zip(&resp.results) {
+            let want = reference.search_topk(q, 2);
+            for (got, exp) in hits.iter().zip(&want) {
+                assert_eq!(got.score, exp.score);
+            }
+        }
+    }
+    drop(client);
+    server.shutdown();
+}
+
+/// The acceptance-path test: a live admin update applied over the socket
+/// must be observed by subsequent top-k searches over the same wire.
+#[test]
+fn live_update_over_the_wire_is_observed_by_searches() {
+    let (server, _) = start_server(60, 2, |_| {});
+    let mut client = connect(&server);
+    let mut r = rng(11);
+    let epoch0 = client.health().unwrap().epoch;
+
+    // Find some currently stored row via a search.
+    let q = BitVec::random(DIMS, 0.5, &mut r);
+    let (_, hits) = client.search_topk(&q, 1).unwrap();
+    let target = hits[0].row;
+
+    // Reprogram it to a fresh word through the admin plane.
+    let fresh = BitVec::random(DIMS, 0.5, &mut r);
+    let resp = client.update(target, &fresh).unwrap();
+    assert_eq!(resp.row, target);
+    assert!(resp.epoch > epoch0, "update bumps the aggregate epoch");
+    let report = resp.write.expect("update programs the array");
+    assert_eq!(report.cells, DIMS as u64);
+    assert!(report.energy_j > 0.0 && report.latency_s > 0.0);
+
+    // The update is visible in subsequent top-k results, with the epoch
+    // stamp proving the response came from a post-commit snapshot.
+    let (epoch, hits) = client.search_topk(&fresh, 2).unwrap();
+    assert_eq!(hits[0].row, target, "updated word wins its own search");
+    assert_eq!(hits[0].score, f64::from(fresh.count_ones()), "exact self-match");
+    assert!(epoch >= resp.epoch);
+
+    // Insert + delete round trip with global ids.
+    let extra = BitVec::random(DIMS, 0.5, &mut r);
+    let ins = client.insert(&extra).unwrap();
+    assert_eq!(ins.rows, 61);
+    assert!(split_row(ins.row).0 < 2, "owner shard encoded in the id");
+    let (_, hits) = client.search_topk(&extra, 1).unwrap();
+    assert_eq!(hits[0].row, ins.row);
+    let del = client.delete(ins.row).unwrap();
+    assert_eq!(del.rows, 60);
+    assert!(del.write.is_none(), "delete spends no programming pulses");
+
+    // Admin rejections travel back as typed errors.
+    let err = client.update(u64::MAX, &fresh).unwrap_err();
+    let wire = err.downcast_ref::<WireError>().expect("typed wire error");
+    assert_eq!(wire.code, ErrorCode::BadQuery);
+    let err = client.insert(&BitVec::zeros(32)).unwrap_err();
+    assert_eq!(err.downcast_ref::<WireError>().unwrap().code, ErrorCode::BadQuery);
+
+    // Metrics over the wire reflect the admin traffic. (Only the dims
+    // mismatch reached a shard; the bad global row was rejected by the
+    // router before touching any shard's metrics.)
+    let m = client.metrics().unwrap();
+    assert!(m.completed >= 3);
+    assert!(m.write_pulses > 0 && m.write_energy_j > 0.0);
+    assert_eq!(m.admin_rejected, 1);
+    drop(client);
+    server.shutdown();
+}
+
+#[test]
+fn concurrent_clients_all_served_correctly() {
+    let (server, words) = start_server(200, 2, |cfg| {
+        cfg.coordinator.queue_depth = 4096;
+        cfg.coordinator.workers = 3;
+    });
+    let reference = &DigitalExactEngine::new(words);
+    let addr = server.local_addr();
+    let errors = std::sync::atomic::AtomicUsize::new(0);
+    std::thread::scope(|s| {
+        for t in 0..6u64 {
+            let errors = &errors;
+            s.spawn(move || {
+                let mut client =
+                    Client::connect_retry(addr, 10, Duration::from_millis(20)).unwrap();
+                let mut r = rng(100 + t);
+                for _ in 0..40 {
+                    let q = BitVec::random(DIMS, 0.5, &mut r);
+                    match client.search_topk(&q, 2) {
+                        Ok((_, hits)) => {
+                            let want = reference.search_topk(&q, 2);
+                            if hits.len() != want.len()
+                                || hits.iter().zip(&want).any(|(a, b)| a.score != b.score)
+                            {
+                                errors.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                            }
+                        }
+                        Err(_) => {
+                            errors.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                        }
+                    }
+                }
+            });
+        }
+    });
+    assert_eq!(errors.load(std::sync::atomic::Ordering::Relaxed), 0);
+    let m = server.router().metrics();
+    // 6 clients x 40 queries, each scattered to 2 shards.
+    assert_eq!(m.completed, 480);
+    server.shutdown();
+}
+
+// ---------------------------------------------------------------------------
+// Wire-protocol edge cases: none of these may wedge a worker — the service
+// must keep answering a fresh, well-formed client afterwards.
+// ---------------------------------------------------------------------------
+
+fn assert_still_serving(server: &CosimeServer) {
+    let mut client = connect(server);
+    let health = client.health().unwrap();
+    assert!(health.rows > 0, "service must still answer after the abuse");
+}
+
+#[test]
+fn malformed_frame_is_rejected_and_service_survives() {
+    let (server, _) = start_server(20, 1, |_| {});
+    let mut stream = TcpStream::connect(server.local_addr()).unwrap();
+    // Garbage that is not even a frame header.
+    stream.write_all(b"GET / HTTP/1.1\r\n\r\n").unwrap();
+    stream.flush().unwrap();
+    // The server answers with a BadFrame error frame, then closes.
+    let (h, payload) = protocol::read_frame(&mut stream, 1 << 20).unwrap();
+    assert_eq!(Op::from_u8(h.op), Some(Op::Error));
+    let e = protocol::decode_error_response(&payload).unwrap();
+    assert_eq!(e.code, ErrorCode::BadFrame);
+    assert_still_serving(&server);
+    server.shutdown();
+}
+
+#[test]
+fn truncated_frame_drops_the_connection_without_wedging() {
+    let (server, _) = start_server(20, 1, |_| {});
+    {
+        let mut stream = TcpStream::connect(server.local_addr()).unwrap();
+        // A valid header promising 64 payload bytes, then only 10, then EOF.
+        let mut frame = Vec::new();
+        protocol::write_frame(&mut frame, Op::Search, &[0u8; 64]).unwrap();
+        stream.write_all(&frame[..protocol::HEADER_LEN + 10]).unwrap();
+        stream.flush().unwrap();
+    } // disconnect mid-frame
+    assert_still_serving(&server);
+    server.shutdown();
+}
+
+#[test]
+fn oversized_frame_is_refused_before_reading_the_payload() {
+    let (server, _) = start_server(20, 1, |cfg| {
+        cfg.server.max_frame = 1024;
+    });
+    let mut stream = TcpStream::connect(server.local_addr()).unwrap();
+    // Header declaring a payload far beyond max_frame; never send it.
+    let mut header = [0u8; protocol::HEADER_LEN];
+    header[0..4].copy_from_slice(&protocol::MAGIC.to_le_bytes());
+    header[4] = protocol::VERSION;
+    header[5] = Op::Search as u8;
+    header[8..12].copy_from_slice(&(64u32 << 20).to_le_bytes());
+    stream.write_all(&header).unwrap();
+    stream.flush().unwrap();
+    let (h, payload) = protocol::read_frame(&mut stream, 1 << 20).unwrap();
+    assert_eq!(Op::from_u8(h.op), Some(Op::Error));
+    let e = protocol::decode_error_response(&payload).unwrap();
+    assert_eq!(e.code, ErrorCode::FrameTooLarge);
+    assert_still_serving(&server);
+    server.shutdown();
+}
+
+#[test]
+fn disconnect_mid_batch_does_not_wedge_workers() {
+    let (server, _) = start_server(500, 2, |_| {});
+    let mut r = rng(13);
+    // Fire a pile of pipelined batches and vanish without reading a byte.
+    for _ in 0..3 {
+        let mut stream = TcpStream::connect(server.local_addr()).unwrap();
+        let queries: Vec<BitVec> =
+            (0..32).map(|_| BitVec::random(DIMS, 0.5, &mut r)).collect();
+        let payload = protocol::encode_search_request(&queries, 4);
+        for _ in 0..8 {
+            protocol::write_frame(&mut stream, Op::Search, &payload).unwrap();
+        }
+        stream.flush().unwrap();
+        drop(stream); // client gone: responses have nowhere to go
+    }
+    // The in-flight work completes against the service and the responses
+    // are dropped; a fresh client gets correct answers immediately.
+    let mut client = connect(&server);
+    let q = BitVec::random(DIMS, 0.5, &mut r);
+    let (_, hits) = client.search_topk(&q, 3).unwrap();
+    assert_eq!(hits.len(), 3);
+    drop(client);
+    server.shutdown();
+}
+
+#[test]
+fn zero_k_and_dim_mismatch_are_typed_rejections() {
+    let (server, _) = start_server(20, 1, |_| {});
+    let mut client = connect(&server);
+    let err = client.search_topk(&BitVec::zeros(DIMS), 0).unwrap_err();
+    assert_eq!(err.downcast_ref::<WireError>().unwrap().code, ErrorCode::BadQuery);
+    let err = client.search_topk(&BitVec::zeros(DIMS / 2), 1).unwrap_err();
+    assert_eq!(err.downcast_ref::<WireError>().unwrap().code, ErrorCode::BadQuery);
+    // The connection survives semantic rejections.
+    assert!(client.health().is_ok());
+    drop(client);
+    server.shutdown();
+}
+
+#[test]
+fn backpressure_surfaces_as_busy_error_frames() {
+    let (server, _) = start_server(2000, 1, |cfg| {
+        cfg.coordinator.max_batch = 1;
+        cfg.coordinator.max_wait_us = 1;
+        cfg.coordinator.queue_depth = 1;
+        cfg.coordinator.workers = 1;
+    });
+    let addr = server.local_addr();
+    let busy = std::sync::atomic::AtomicUsize::new(0);
+    std::thread::scope(|s| {
+        for t in 0..4u64 {
+            let busy = &busy;
+            s.spawn(move || {
+                let mut client =
+                    Client::connect_retry(addr, 10, Duration::from_millis(20)).unwrap();
+                let mut r = rng(300 + t);
+                for _ in 0..50 {
+                    let q = BitVec::random(DIMS, 0.5, &mut r);
+                    match client.search_topk(&q, 1) {
+                        Ok(_) => {}
+                        Err(e) => {
+                            let wire = e.downcast_ref::<WireError>().expect("typed error");
+                            assert_eq!(wire.code, ErrorCode::Busy, "only Busy expected: {wire}");
+                            busy.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                        }
+                    }
+                }
+            });
+        }
+    });
+    // With a depth-1 queue and one worker, a 4-client burst must bounce at
+    // least once — and every bounce was a clean, typed Busy frame.
+    assert!(busy.load(std::sync::atomic::Ordering::Relaxed) > 0, "tiny queue never said Busy");
+    assert_still_serving(&server);
+    server.shutdown();
+}
+
+#[test]
+fn shutdown_closes_submissions() {
+    let (server, _) = start_server(20, 1, |_| {});
+    let mut client = connect(&server);
+    assert!(client.health().is_ok());
+    server.shutdown();
+    // The next request either fails to transit or comes back Closed.
+    let q = BitVec::zeros(DIMS);
+    match client.search_topk(&q, 1) {
+        Err(e) => {
+            if let Some(wire) = e.downcast_ref::<WireError>() {
+                assert_eq!(wire.code, ErrorCode::Closed);
+            } // else: connection already torn down — equally acceptable
+        }
+        Ok(_) => panic!("search served after shutdown"),
+    }
+}
