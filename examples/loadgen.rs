@@ -11,16 +11,20 @@
 //! Run against an external server:
 //!   cargo run --release -- serve --listen 127.0.0.1:7411 --shards 2
 //!   cargo run --release --example loadgen 127.0.0.1:7411
-//! or self-hosted (no arguments): the example spins up an in-process
-//! 2-shard server on an ephemeral port and drives that.
+//! or self-hosted (no address / `self`): the example spins up an
+//! in-process 2-shard server on an ephemeral port and drives that —
+//! `self:eventloop` / `self:threaded` picks its I/O engine, so the two
+//! can be compared on identical stores (the event-loop engine is built to
+//! hold its throughput as the client count grows past what two OS threads
+//! per connection can carry).
 //!
-//! Usage: loadgen [addr|self] [clients] [frames-per-client] [batch] [k] [depth]
+//! Usage: loadgen [addr|self[:io]] [clients] [frames-per-client] [batch] [k] [depth]
 
 use std::sync::Mutex;
 use std::time::{Duration, Instant};
 
 use cosime::am::{AmEngine, DigitalExactEngine};
-use cosime::config::CosimeConfig;
+use cosime::config::{CosimeConfig, IoMode};
 use cosime::server::{Client, CosimeServer, ErrorCode, ShardRouter, WireError};
 use cosime::util::{percentile, rng, BitVec};
 
@@ -33,11 +37,16 @@ fn main() -> anyhow::Result<()> {
     let k: usize = args.next().and_then(|s| s.parse().ok()).unwrap_or(3);
     let depth: usize = args.next().and_then(|s| s.parse().ok()).unwrap_or(4);
 
-    // Self-host when no address was given: an in-process 2-shard server.
-    let (addr, server) = if addr_arg == "self" {
+    // Self-host when no address was given: an in-process 2-shard server,
+    // on either I/O engine (`self` = threaded, `self:eventloop` etc.).
+    let (addr, server) = if addr_arg == "self" || addr_arg.starts_with("self:") {
         let mut cfg = CosimeConfig::default();
         cfg.server.listen = "127.0.0.1:0".to_string();
         cfg.server.shards = 2;
+        cfg.server.io = match addr_arg.strip_prefix("self:") {
+            Some(io) => IoMode::parse(io)?,
+            None => IoMode::Threaded,
+        };
         cfg.coordinator.workers = 2;
         let mut r = rng(11);
         let words: Vec<BitVec> =
@@ -46,7 +55,11 @@ fn main() -> anyhow::Result<()> {
             Ok(Box::new(DigitalExactEngine::new(w)) as Box<dyn AmEngine>)
         })?;
         let server = CosimeServer::serve(&cfg.server, router)?;
-        println!("self-hosted cosimed on {} (2 shards)", server.local_addr());
+        println!(
+            "self-hosted cosimed on {} (2 shards, {} io)",
+            server.local_addr(),
+            server.io_mode().as_str()
+        );
         (server.local_addr().to_string(), Some(server))
     } else {
         (addr_arg, None)

@@ -10,12 +10,18 @@
 //! class-vector updates through the admin plane and verifies each one is
 //! immediately servable — the write→serve loop closed under load.
 //!
+//! The client side drives the completion-based
+//! [`Backend`](cosime::coordinator::Backend) surface (submit a batch,
+//! wait on the [`Ticket`](cosime::coordinator::Ticket)) — the same trait
+//! the TCP frontend serves from, here over a [`LocalBackend`] with zero
+//! transport in between.
+//!
 //! Run: `cargo run --release --example serve_am [rows] [queries] [snapshot]`
 
 use cosime::am::store::AmStore;
 use cosime::am::{AmEngine, DigitalExactEngine};
 use cosime::config::CosimeConfig;
-use cosime::coordinator::{AdminOp, AmService, SubmitError, TileManager};
+use cosime::coordinator::{AdminOp, AmService, Backend, LocalBackend, SubmitError, TileManager};
 use cosime::util::{rng, BitVec};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::time::Instant;
@@ -74,6 +80,9 @@ fn main() -> anyhow::Result<()> {
         cfg.coordinator.queue_depth
     );
     let svc = AmService::start_with_config(&cfg, tiles);
+    // The client side talks to the completion-based trait surface — the
+    // exact shape the TCP frontend serves — over a local adapter.
+    let backend = LocalBackend::new(svc.clone());
 
     let busy_retries = AtomicU64::new(0);
     let clients = 8u64;
@@ -83,7 +92,7 @@ fn main() -> anyhow::Result<()> {
     let t0 = Instant::now();
     std::thread::scope(|s| {
         for c in 0..clients {
-            let svc = svc.clone();
+            let backend = &backend;
             let busy_retries = &busy_retries;
             let k = ks[c as usize % ks.len()];
             s.spawn(move || {
@@ -91,10 +100,15 @@ fn main() -> anyhow::Result<()> {
                 for i in 0..queries as u64 / clients {
                     let q = BitVec::random(dims, 0.5, &mut r);
                     loop {
-                        match svc.search_topk_blocking(q.clone(), k) {
-                            Ok(resp) => {
-                                assert_eq!(resp.hits.len(), k.min(rows), "ranked depth");
-                                assert_eq!(resp.hits[0].winner, resp.winner);
+                        // Submit without blocking, then wait on the ticket
+                        // (poll() would slot into an event loop instead).
+                        match backend
+                            .submit_search(std::slice::from_ref(&q), k)
+                            .and_then(|ticket| ticket.wait())
+                        {
+                            Ok(batch) => {
+                                assert_eq!(batch.results.len(), 1);
+                                assert_eq!(batch.results[0].len(), k.min(rows), "ranked depth");
                                 break;
                             }
                             Err(SubmitError::Busy) => {
@@ -151,6 +165,7 @@ fn main() -> anyhow::Result<()> {
         m.write.energy_j * 1e9,
         m.write.latency_s * 1e6
     );
+    drop(backend); // last service clone below joins the workers
     svc.shutdown();
     println!("serve_am OK");
     Ok(())

@@ -1,18 +1,20 @@
 //! Bench: the networked frontend — wire-protocol codec costs and loopback
 //! round trips through a real `cosimed` TCP server (strict request/response
-//! vs pipelined, single query vs batched frames, 1 vs 2 shards).
+//! vs pipelined, single query vs batched frames, 1 vs 2 shards, threaded
+//! vs event-loop I/O engine).
 
 use cosime::am::{AmEngine, DigitalExactEngine};
-use cosime::config::CosimeConfig;
+use cosime::config::{CosimeConfig, IoMode};
 use cosime::server::protocol::{decode_search_request, encode_search_request};
 use cosime::server::{Client, CosimeServer, ShardRouter};
 use cosime::util::bench::Bench;
 use cosime::util::{rng, BitVec};
 use std::time::Duration;
 
-fn start_server(rows: usize, dims: usize, shards: usize) -> CosimeServer {
+fn start_server(rows: usize, dims: usize, shards: usize, io: IoMode) -> CosimeServer {
     let mut cfg = CosimeConfig::default();
     cfg.server.listen = "127.0.0.1:0".to_string();
+    cfg.server.io = io;
     cfg.coordinator.workers = 2;
     let mut r = rng(17);
     let words: Vec<BitVec> = (0..rows).map(|_| BitVec::random(dims, 0.5, &mut r)).collect();
@@ -37,29 +39,41 @@ fn main() {
         decode_search_request(&payload).unwrap()
     });
 
-    // Loopback round trips: the full stack (codec + TCP + batcher + kernel).
-    for shards in [1usize, 2] {
-        let server = start_server(2048, 1024, shards);
-        let mut client =
-            Client::connect_retry(server.local_addr(), 10, Duration::from_millis(20)).unwrap();
-        let q = BitVec::random(1024, 0.5, &mut r);
-        b.bench_throughput(&format!("tcp/roundtrip/1q/k1/{shards}-shard"), 1.0, || {
-            client.search_topk(&q, 1).unwrap()
-        });
-        let batch: Vec<BitVec> = (0..16).map(|_| BitVec::random(1024, 0.5, &mut r)).collect();
-        b.bench_throughput(&format!("tcp/roundtrip/16q/k4/{shards}-shard"), 16.0, || {
-            client.search_batch(&batch, 4).unwrap()
-        });
-        // Pipelined: 8 frames of 16 queries in flight per window.
-        b.bench_throughput(&format!("tcp/pipelined/8x16q/k4/{shards}-shard"), 128.0, || {
-            let mut pipe = client.pipeline();
-            for _ in 0..8 {
-                pipe.search_batch(&batch, 4).unwrap();
-            }
-            pipe.finish().unwrap()
-        });
-        drop(client);
-        server.shutdown();
+    // Loopback round trips: the full stack (codec + TCP + batcher +
+    // kernel), on both I/O engines — same wire protocol, same backend.
+    for io in [IoMode::Threaded, IoMode::EventLoop] {
+        for shards in [1usize, 2] {
+            let tag = io.as_str();
+            let server = start_server(2048, 1024, shards, io);
+            let mut client =
+                Client::connect_retry(server.local_addr(), 10, Duration::from_millis(20))
+                    .unwrap();
+            let q = BitVec::random(1024, 0.5, &mut r);
+            b.bench_throughput(&format!("tcp-{tag}/roundtrip/1q/k1/{shards}-shard"), 1.0, || {
+                client.search_topk(&q, 1).unwrap()
+            });
+            let batch: Vec<BitVec> =
+                (0..16).map(|_| BitVec::random(1024, 0.5, &mut r)).collect();
+            b.bench_throughput(
+                &format!("tcp-{tag}/roundtrip/16q/k4/{shards}-shard"),
+                16.0,
+                || client.search_batch(&batch, 4).unwrap(),
+            );
+            // Pipelined: 8 frames of 16 queries in flight per window.
+            b.bench_throughput(
+                &format!("tcp-{tag}/pipelined/8x16q/k4/{shards}-shard"),
+                128.0,
+                || {
+                    let mut pipe = client.pipeline();
+                    for _ in 0..8 {
+                        pipe.search_batch(&batch, 4).unwrap();
+                    }
+                    pipe.finish().unwrap()
+                },
+            );
+            drop(client);
+            server.shutdown();
+        }
     }
 
     b.report("server wire + loopback");

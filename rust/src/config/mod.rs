@@ -423,17 +423,59 @@ bind_toml!(CoordinatorConfig {
     bool: [],
 });
 
+/// How the TCP frontend drives its sockets (`[server] io`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum IoMode {
+    /// Two OS threads per connection (reader + writer pair). Simple and
+    /// latency-friendly at low connection counts; thread cost scales with
+    /// connections.
+    #[default]
+    Threaded,
+    /// One event-loop thread for every connection: nonblocking sockets
+    /// driven by a readiness loop, frames decoded/encoded incrementally,
+    /// search completions polled. Holds thousands of connections on a
+    /// fixed thread budget.
+    EventLoop,
+}
+
+impl IoMode {
+    /// The config-file spelling of this mode.
+    pub fn as_str(self) -> &'static str {
+        match self {
+            IoMode::Threaded => "threaded",
+            IoMode::EventLoop => "eventloop",
+        }
+    }
+
+    /// Parse the config-file spelling.
+    pub fn parse(s: &str) -> Result<IoMode> {
+        match s {
+            "threaded" => Ok(IoMode::Threaded),
+            "eventloop" => Ok(IoMode::EventLoop),
+            other => bail!("io mode must be \"threaded\" or \"eventloop\", got \"{other}\""),
+        }
+    }
+}
+
 /// Networked serving frontend policy (L4, `cosime serve --listen`): the
-/// TCP listener, shard fan-out and per-connection frame limits consumed by
-/// [`crate::server`].
+/// TCP listener, I/O model, shard fan-out and per-connection frame limits
+/// consumed by [`crate::server`].
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct ServerConfig {
     /// Listen address (`host:port`). Port 0 binds an ephemeral port — the
     /// server prints/returns the address it actually bound.
     pub listen: String,
+    /// Socket-driving model: `"threaded"` (reader+writer thread pair per
+    /// connection) or `"eventloop"` (single-threaded readiness loop over
+    /// nonblocking sockets). Both speak the identical wire protocol.
+    pub io: IoMode,
     /// Independent [`crate::coordinator::AmService`] shards the logical
     /// store is fanned across (scatter-gather top-k, routed admin ops).
     pub shards: usize,
+    /// Remote shard addresses for the `cosime route` tier: when non-empty,
+    /// the router fans over these `cosimed` servers (one
+    /// [`crate::server::RemoteBackend`] each) instead of in-process stacks.
+    pub remote_shards: Vec<String>,
     /// Hard cap on one frame's payload (bytes). Oversized frames are
     /// rejected *before* the payload is read, and the connection is closed
     /// (the stream cannot be re-synchronized past an unread payload).
@@ -448,15 +490,17 @@ impl Default for ServerConfig {
     fn default() -> Self {
         ServerConfig {
             listen: "127.0.0.1:7411".to_string(),
+            io: IoMode::Threaded,
             shards: 1,
+            remote_shards: Vec::new(),
             max_frame: 16 << 20,
             max_inflight: 32,
         }
     }
 }
 
-// Hand-rolled (not `bind_toml!`): `listen` is the config surface's only
-// string-typed key.
+// Hand-rolled (not `bind_toml!`): the config surface's only string-typed
+// and list-typed keys live here.
 impl FromToml for ServerConfig {
     fn set(&mut self, key: &str, value: &TomlValue) -> Result<()> {
         match key {
@@ -465,6 +509,17 @@ impl FromToml for ServerConfig {
                     .as_str()
                     .with_context(|| format!("key '{key}' must be a string"))?
                     .to_string();
+            }
+            "io" => {
+                let s = value
+                    .as_str()
+                    .with_context(|| format!("key '{key}' must be a string"))?;
+                self.io = IoMode::parse(s).with_context(|| format!("key '{key}'"))?;
+            }
+            "remote_shards" => {
+                self.remote_shards = value
+                    .as_str_list()
+                    .with_context(|| format!("key '{key}' must be a list of strings"))?;
             }
             "shards" => self.shards = want_usize(key, value)?,
             "max_frame" => self.max_frame = want_usize(key, value)?,
@@ -477,6 +532,13 @@ impl FromToml for ServerConfig {
     fn dump(&self) -> Vec<(String, TomlValue)> {
         vec![
             ("listen".into(), TomlValue::Str(self.listen.clone())),
+            ("io".into(), TomlValue::Str(self.io.as_str().to_string())),
+            (
+                "remote_shards".into(),
+                TomlValue::List(
+                    self.remote_shards.iter().map(|s| TomlValue::Str(s.clone())).collect(),
+                ),
+            ),
             ("shards".into(), TomlValue::Int(self.shards as i64)),
             ("max_frame".into(), TomlValue::Int(self.max_frame as i64)),
             ("max_inflight".into(), TomlValue::Int(self.max_inflight as i64)),
@@ -590,6 +652,10 @@ impl CosimeConfig {
         ensure!(self.write.pulse_scale > 0.0, "write pulse_scale must be positive");
         let s = &self.server;
         ensure!(!s.listen.is_empty(), "server listen address must be set");
+        ensure!(
+            s.remote_shards.iter().all(|a| !a.is_empty()),
+            "server remote_shards entries must be non-empty addresses"
+        );
         ensure!(s.shards >= 1, "server needs at least one shard");
         ensure!(s.shards <= 1 << 16, "server shard count exceeds the 16-bit global-id space");
         ensure!(s.max_frame >= 64, "server max_frame too small to carry any request");
@@ -686,14 +752,21 @@ mod tests {
     #[test]
     fn server_section_parses_and_validates() {
         let text = concat!(
-            "[server]\nlisten = \"0.0.0.0:9000\"\nshards = 4\n",
+            "[server]\nlisten = \"0.0.0.0:9000\"\nshards = 4\nio = \"eventloop\"\n",
+            "remote_shards = [\"10.0.0.1:7411\", \"10.0.0.2:7411\"]\n",
             "max_frame = 1048576\nmax_inflight = 8\n"
         );
         let cfg = CosimeConfig::from_toml_str(text).unwrap();
         assert_eq!(cfg.server.listen, "0.0.0.0:9000");
+        assert_eq!(cfg.server.io, IoMode::EventLoop);
         assert_eq!(cfg.server.shards, 4);
+        assert_eq!(cfg.server.remote_shards, vec!["10.0.0.1:7411", "10.0.0.2:7411"]);
         assert_eq!(cfg.server.max_frame, 1 << 20);
         assert_eq!(cfg.server.max_inflight, 8);
+        // io defaults to threaded and rejects unknown spellings.
+        assert_eq!(ServerConfig::default().io, IoMode::Threaded);
+        assert!(CosimeConfig::from_toml_str("[server]\nio = \"epoll\"\n").is_err());
+        assert!(CosimeConfig::from_toml_str("[server]\nremote_shards = \"host\"\n").is_err());
         // Defaults round-trip through TOML text (string key included).
         let back = CosimeConfig::from_toml_str(&cfg.to_toml_string()).unwrap();
         assert_eq!(back, cfg);

@@ -1,0 +1,472 @@
+//! The transport-agnostic serving surface: one completion-based [`Backend`]
+//! trait that every way of reaching a COSIME store implements.
+//!
+//! The repo grew three incompatible serving surfaces — the in-process
+//! [`AmService`], the scatter-gather
+//! [`ShardRouter`](crate::server::ShardRouter), and the blocking TCP
+//! [`Client`](crate::server::Client). Each forced its callers to commit to
+//! a topology at compile time. The `Backend` trait collapses them into one
+//! shape with *ticket/completion* semantics:
+//!
+//! * [`Backend::submit_search`] hands a whole query batch to the backend
+//!   **without blocking** and returns a [`Ticket`];
+//! * [`Ticket::poll`] asks whether the batch finished (also nonblocking);
+//!   [`Ticket::wait`] blocks until it does — the adapter the legacy
+//!   blocking call sites ride on;
+//! * [`Backend::admin`], [`Backend::health`] and [`Backend::metrics`] are
+//!   the control plane: synchronous, rare, and uniform across transports.
+//!
+//! Three implementations ship:
+//!
+//! * [`LocalBackend`] (here) — wraps an [`AmService`]; the completion is
+//!   the service's existing per-request mpsc receiver.
+//! * [`RouterBackend`](crate::server::RouterBackend) — fans a batch over
+//!   `Box<dyn Backend>` children (in-process stacks *or* remote servers),
+//!   merging ranked lists under the `shard << 48 | local` global-id
+//!   scheme.
+//! * [`RemoteBackend`](crate::server::RemoteBackend) — a nonblocking
+//!   client for the `cosimed` wire protocol; the completion is an
+//!   in-order response-frame slot on a shared connection.
+//!
+//! Because the TCP frontend ([`crate::server::tcp`]) serves from a
+//! `dyn Backend`, a `cosimed` process is *one code path* whether it fronts
+//! a single in-process store, S local shards, or a routing tier over
+//! remote shard servers.
+//!
+//! # Row ids
+//!
+//! All rows crossing this surface are **global u64 ids**: for a flat store
+//! they equal the local row index; a router encodes the owning child in
+//! the high bits (see [`crate::server::shard`]). Hits come back with
+//! global ids so callers can hand them straight to [`Backend::admin`].
+//!
+//! # Completion discipline
+//!
+//! A [`Ticket`] is single-shot: once [`Ticket::poll`] returns
+//! `Ok(Some(result))` (or [`Ticket::wait`] returns), the ticket is spent
+//! and must be dropped. Polling is cheap enough to sit in an event loop's
+//! hot path.
+
+use std::sync::mpsc;
+use std::time::Duration;
+
+use crate::am::write::WriteReport;
+use crate::util::BitVec;
+
+use super::metrics::MetricsSnapshot;
+use super::request::{AdminOp, SearchResponse, SubmitError};
+use super::service::AmService;
+
+/// One ranked hit as every backend reports it: a **global** row id plus the
+/// engine-metric score. (The wire protocol re-exports this as `WireHit`.)
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Hit {
+    pub row: u64,
+    pub score: f64,
+}
+
+/// A completed search batch: one ranked hit list per submitted query, in
+/// submission order, stamped with the highest (aggregate) epoch any query
+/// in the batch was served at.
+#[derive(Debug, Clone, PartialEq)]
+pub struct BatchResult {
+    pub epoch: u64,
+    pub results: Vec<Vec<Hit>>,
+}
+
+/// A backend's identity and self-describing serving policy. The
+/// `max_batch`/`max_k` fields are the *batching hints*: clients size their
+/// frames from them instead of discovering limits through `BadQuery`
+/// rejections. `0` means "unknown" (a pre-v2 peer that did not advertise).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct BackendHealth {
+    pub rows: u64,
+    pub dims: u64,
+    pub epoch: u64,
+    pub shards: u32,
+    /// Server-side dynamic batch cap — the sweet spot for frame sizing.
+    pub max_batch: u32,
+    /// Deepest top-k the backend will accept (policy ∩ engine capability).
+    pub max_k: u32,
+}
+
+/// Write-verify cost summary as it crosses the backend surface (the scalar
+/// fields of [`WriteReport`]; per-round latencies stay server-side).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct WriteCost {
+    pub cells: u64,
+    pub pulses: u64,
+    pub failures: u64,
+    pub energy_j: f64,
+    pub latency_s: f64,
+}
+
+impl WriteCost {
+    /// Project the scalar cost out of a full programming report.
+    pub fn from_report(r: &WriteReport) -> WriteCost {
+        WriteCost {
+            cells: r.cells as u64,
+            pulses: r.pulses as u64,
+            failures: r.failures as u64,
+            energy_j: r.energy,
+            latency_s: r.latency,
+        }
+    }
+}
+
+/// An admin mutation addressed in global row ids (contrast
+/// [`AdminOp`], whose rows are service-local). The optional
+/// compare-and-swap pin travels alongside it in [`Backend::admin`].
+#[derive(Debug, Clone)]
+pub enum AdminCmd {
+    /// Reprogram the row with global id `row` to `word`.
+    Update { row: u64, word: BitVec },
+    /// Insert `word` as a new row (placement is the backend's concern).
+    Insert { word: BitVec },
+    /// Delete the row with global id `row`.
+    Delete { row: u64 },
+}
+
+/// Outcome of a committed [`AdminCmd`].
+#[derive(Debug, Clone, PartialEq)]
+pub struct AdminOutcome {
+    /// Global id of the affected row (for Insert: the new row).
+    pub row: u64,
+    /// Aggregate epoch (sum over shards) after the commit. Best-effort on
+    /// a router: an unreachable shard contributes 0, so this can move
+    /// backwards across failures — treat it as a progress hint and pin
+    /// [`AdminOutcome::shard_epoch`] (exact, from the commit itself) for
+    /// CAS retries.
+    pub epoch: u64,
+    /// The **owning shard's** epoch after the commit — the value to pin as
+    /// `expected_epoch` on the next CAS retry against the same row.
+    pub shard_epoch: u64,
+    /// Total stored rows after the commit.
+    pub rows: u64,
+    /// Write-verify cost (None for Delete, which spends no pulses).
+    pub write: Option<WriteCost>,
+}
+
+/// Backend-specific completion state behind a [`Ticket`]. Implementations
+/// must make [`Completion::poll`] nonblocking and cheap — it sits in the
+/// event-loop hot path.
+pub trait Completion: Send {
+    /// Nonblocking readiness check. Returns `Ok(Some(_))` exactly once;
+    /// the ticket is spent afterwards.
+    fn poll(&mut self) -> Result<Option<BatchResult>, SubmitError>;
+
+    /// Block until the batch completes. The default spins on
+    /// [`Completion::poll`] with a short sleep; implementations with a
+    /// genuinely blocking primitive (e.g. an mpsc receiver) override it.
+    fn wait(&mut self) -> Result<BatchResult, SubmitError> {
+        loop {
+            if let Some(result) = self.poll()? {
+                return Ok(result);
+            }
+            std::thread::sleep(Duration::from_micros(50));
+        }
+    }
+}
+
+/// Handle to an in-flight search batch (see the module docs for the
+/// single-shot discipline).
+pub struct Ticket(Box<dyn Completion>);
+
+impl Ticket {
+    /// Wrap backend-specific completion state.
+    pub fn new(completion: Box<dyn Completion>) -> Ticket {
+        Ticket(completion)
+    }
+
+    /// Nonblocking: `Ok(Some(result))` when the batch has finished,
+    /// `Ok(None)` while it is still in flight.
+    pub fn poll(&mut self) -> Result<Option<BatchResult>, SubmitError> {
+        self.0.poll()
+    }
+
+    /// Block until the batch finishes — the adapter that keeps the legacy
+    /// blocking call sites working on top of the completion model.
+    pub fn wait(mut self) -> Result<BatchResult, SubmitError> {
+        self.0.wait()
+    }
+}
+
+/// One transport-agnostic, completion-based serving surface (module docs).
+pub trait Backend: Send + Sync {
+    /// Stored word length in bits; queries must match.
+    fn dims(&self) -> usize;
+
+    /// Hand a whole search batch to the backend without blocking. The
+    /// returned [`Ticket`] completes with one ranked hit list per query,
+    /// in submission order. Fails fast on malformed queries, policy
+    /// violations and backpressure ([`SubmitError::Busy`]).
+    fn submit_search(&self, queries: &[BitVec], k: usize) -> Result<Ticket, SubmitError>;
+
+    /// Apply an admin mutation, optionally pinned to an expected owning-
+    /// shard epoch (compare-and-swap: a concurrent commit in between
+    /// rejects with [`SubmitError::EpochMismatch`], store unchanged).
+    fn admin(
+        &self,
+        cmd: AdminCmd,
+        expected_epoch: Option<u64>,
+    ) -> Result<AdminOutcome, SubmitError>;
+
+    /// Identity + self-describing serving policy (batching hints).
+    fn health(&self) -> Result<BackendHealth, SubmitError>;
+
+    /// Point-in-time serving metrics. Snapshots carry their latency
+    /// histograms where the transport allows, so aggregation across
+    /// backends merges percentiles exactly.
+    fn metrics(&self) -> Result<MetricsSnapshot, SubmitError>;
+
+    /// Stop accepting submissions. In-flight work drains asynchronously;
+    /// the call does not block on it.
+    fn close(&self);
+
+    /// Convenience: submit and block for the result.
+    fn search_batch(&self, queries: &[BitVec], k: usize) -> Result<BatchResult, SubmitError> {
+        self.submit_search(queries, k)?.wait()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// LocalBackend
+// ---------------------------------------------------------------------------
+
+/// [`Backend`] over an in-process [`AmService`]: the completion is the
+/// service's existing per-request mpsc receiver, polled with `try_recv`.
+/// Global row ids equal local row indices (a flat, single-shard store).
+pub struct LocalBackend {
+    svc: AmService,
+}
+
+impl LocalBackend {
+    pub fn new(svc: AmService) -> LocalBackend {
+        LocalBackend { svc }
+    }
+
+    /// The wrapped service (for epoch/metrics inspection and snapshots).
+    pub fn service(&self) -> &AmService {
+        &self.svc
+    }
+}
+
+/// Completion over the service's per-query reply channels.
+struct LocalCompletion {
+    rxs: Vec<mpsc::Receiver<SearchResponse>>,
+    collected: Vec<Option<Vec<Hit>>>,
+    epoch: u64,
+}
+
+fn hits_of(resp: &SearchResponse) -> Vec<Hit> {
+    resp.hits.iter().map(|h| Hit { row: h.winner as u64, score: h.score }).collect()
+}
+
+impl LocalCompletion {
+    fn take_results(&mut self) -> BatchResult {
+        let results = self.collected.iter_mut().map(|c| c.take().unwrap_or_default()).collect();
+        BatchResult { epoch: self.epoch, results }
+    }
+}
+
+impl Completion for LocalCompletion {
+    fn poll(&mut self) -> Result<Option<BatchResult>, SubmitError> {
+        let mut done = true;
+        for (i, rx) in self.rxs.iter().enumerate() {
+            if self.collected[i].is_some() {
+                continue;
+            }
+            match rx.try_recv() {
+                Ok(resp) => {
+                    self.epoch = self.epoch.max(resp.epoch);
+                    self.collected[i] = Some(hits_of(&resp));
+                }
+                Err(mpsc::TryRecvError::Empty) => done = false,
+                Err(mpsc::TryRecvError::Disconnected) => return Err(SubmitError::Closed),
+            }
+        }
+        if !done {
+            return Ok(None);
+        }
+        Ok(Some(self.take_results()))
+    }
+
+    fn wait(&mut self) -> Result<BatchResult, SubmitError> {
+        for (i, rx) in self.rxs.iter().enumerate() {
+            if self.collected[i].is_some() {
+                continue;
+            }
+            let resp = rx.recv().map_err(|_| SubmitError::Closed)?;
+            self.epoch = self.epoch.max(resp.epoch);
+            self.collected[i] = Some(hits_of(&resp));
+        }
+        Ok(self.take_results())
+    }
+}
+
+/// Convert a global row id to this flat store's local index.
+fn local_row(row: u64) -> Result<usize, SubmitError> {
+    usize::try_from(row).map_err(|_| {
+        SubmitError::BadQuery(format!("row id {row:#x} does not fit this platform's usize"))
+    })
+}
+
+impl Backend for LocalBackend {
+    fn dims(&self) -> usize {
+        self.svc.dims()
+    }
+
+    fn submit_search(&self, queries: &[BitVec], k: usize) -> Result<Ticket, SubmitError> {
+        let mut rxs = Vec::with_capacity(queries.len());
+        for q in queries {
+            rxs.push(self.svc.submit_topk(q.clone(), k)?);
+        }
+        let collected = (0..rxs.len()).map(|_| None).collect();
+        Ok(Ticket::new(Box::new(LocalCompletion { rxs, collected, epoch: 0 })))
+    }
+
+    fn admin(
+        &self,
+        cmd: AdminCmd,
+        expected_epoch: Option<u64>,
+    ) -> Result<AdminOutcome, SubmitError> {
+        let op = match cmd {
+            AdminCmd::Update { row, word } => AdminOp::Update { row: local_row(row)?, word },
+            AdminCmd::Insert { word } => AdminOp::Insert { word },
+            AdminCmd::Delete { row } => AdminOp::Delete { row: local_row(row)? },
+        };
+        let resp = self.svc.admin_cas(op, expected_epoch)?;
+        Ok(AdminOutcome {
+            row: resp.row as u64,
+            epoch: resp.epoch,
+            shard_epoch: resp.epoch,
+            rows: resp.rows as u64,
+            write: resp.write.as_ref().map(WriteCost::from_report),
+        })
+    }
+
+    fn health(&self) -> Result<BackendHealth, SubmitError> {
+        Ok(BackendHealth {
+            rows: self.svc.rows() as u64,
+            dims: self.svc.dims() as u64,
+            epoch: self.svc.epoch(),
+            shards: 1,
+            max_batch: self.svc.policy().max_batch.min(u32::MAX as usize) as u32,
+            max_k: self.svc.effective_max_k().min(u32::MAX as usize) as u32,
+        })
+    }
+
+    fn metrics(&self) -> Result<MetricsSnapshot, SubmitError> {
+        Ok(self.svc.metrics())
+    }
+
+    fn close(&self) {
+        // Closing is idempotent and non-joining: the cloned handle marks
+        // the service closed and lets workers drain asynchronously.
+        self.svc.clone().shutdown();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::am::{AmEngine, DigitalExactEngine};
+    use crate::config::CoordinatorConfig;
+    use crate::coordinator::TileManager;
+    use crate::util::rng;
+
+    fn local(rows: usize, dims: usize) -> (LocalBackend, Vec<BitVec>) {
+        let mut r = rng(19);
+        let words: Vec<BitVec> = (0..rows).map(|_| BitVec::random(dims, 0.5, &mut r)).collect();
+        let tiles = TileManager::build(words.clone(), 32, |w| {
+            Ok::<Box<dyn AmEngine>, anyhow::Error>(Box::new(DigitalExactEngine::new(w)))
+        })
+        .unwrap();
+        (LocalBackend::new(AmService::start(&CoordinatorConfig::default(), tiles)), words)
+    }
+
+    #[test]
+    fn submit_poll_completes_with_correct_results() {
+        let (backend, words) = local(50, 64);
+        let reference = DigitalExactEngine::new(words);
+        let mut r = rng(20);
+        let queries: Vec<BitVec> = (0..7).map(|_| BitVec::random(64, 0.5, &mut r)).collect();
+        let mut ticket = backend.submit_search(&queries, 3).unwrap();
+        // Poll (nonblocking) until completion; must terminate.
+        let result = loop {
+            if let Some(done) = ticket.poll().unwrap() {
+                break done;
+            }
+            std::thread::sleep(Duration::from_micros(20));
+        };
+        assert_eq!(result.results.len(), 7);
+        for (q, hits) in queries.iter().zip(&result.results) {
+            let want = reference.search_topk(q, 3);
+            assert_eq!(hits.len(), want.len());
+            for (got, exp) in hits.iter().zip(&want) {
+                assert_eq!(got.row as usize, exp.winner);
+                assert_eq!(got.score, exp.score);
+            }
+        }
+        backend.close();
+    }
+
+    #[test]
+    fn wait_blocks_and_empty_batches_complete_immediately() {
+        let (backend, words) = local(30, 64);
+        let reference = DigitalExactEngine::new(words);
+        let mut r = rng(21);
+        let q = BitVec::random(64, 0.5, &mut r);
+        let result = backend.search_batch(std::slice::from_ref(&q), 2).unwrap();
+        let want = reference.search_topk(&q, 2);
+        assert_eq!(result.results[0].len(), want.len());
+        assert_eq!(result.results[0][0].score, want[0].score);
+
+        // Zero queries: a legal no-op batch.
+        let empty = backend.search_batch(&[], 1).unwrap();
+        assert!(empty.results.is_empty());
+        backend.close();
+    }
+
+    #[test]
+    fn health_advertises_policy_and_admin_round_trips() {
+        let (backend, _) = local(20, 64);
+        let h = backend.health().unwrap();
+        assert_eq!(h.rows, 20);
+        assert_eq!(h.dims, 64);
+        assert_eq!(h.shards, 1);
+        assert_eq!(h.max_batch as usize, CoordinatorConfig::default().max_batch);
+        assert!(h.max_k >= 1);
+
+        let mut r = rng(22);
+        let w = BitVec::random(64, 0.5, &mut r);
+        let out = backend.admin(AdminCmd::Insert { word: w.clone() }, None).unwrap();
+        assert_eq!(out.rows, 21);
+        assert_eq!(out.epoch, out.shard_epoch, "flat store: shard epoch == epoch");
+        assert!(out.write.is_some());
+        let hit = backend.search_batch(std::slice::from_ref(&w), 1).unwrap();
+        assert_eq!(hit.results[0][0].row, out.row);
+
+        // Stale CAS pin is a typed mismatch.
+        match backend.admin(AdminCmd::Delete { row: out.row }, Some(out.shard_epoch + 7)) {
+            Err(SubmitError::EpochMismatch { actual, .. }) => {
+                assert_eq!(actual, out.shard_epoch)
+            }
+            other => panic!("expected EpochMismatch, got {other:?}"),
+        }
+        // Matching pin commits.
+        let del = backend.admin(AdminCmd::Delete { row: out.row }, Some(out.shard_epoch)).unwrap();
+        assert_eq!(del.rows, 20);
+        backend.close();
+    }
+
+    #[test]
+    fn close_rejects_further_submissions() {
+        let (backend, _) = local(10, 32);
+        backend.close();
+        match backend.submit_search(&[BitVec::zeros(32)], 1) {
+            Err(SubmitError::Closed) => {}
+            other => panic!("expected Closed, got {other:?}"),
+        }
+    }
+}

@@ -45,10 +45,22 @@ struct KLane {
     total_us: Histogram,
 }
 
+/// Bucket layout of the shared latency histogram shape (µs):
+/// `Histogram::log_spaced(LATENCY_HIST_LO, LATENCY_HIST_HI, LATENCY_HIST_BUCKETS)`.
+/// Every latency lane — local or decoded off the wire — uses this exact
+/// layout, which is what makes [`Histogram::merge_from`] across lanes (and
+/// across shards) an *exact* quantile merge.
+pub const LATENCY_HIST_LO: f64 = 0.5;
+/// See [`LATENCY_HIST_LO`].
+pub const LATENCY_HIST_HI: f64 = 10_000_000.0;
+/// See [`LATENCY_HIST_LO`].
+pub const LATENCY_HIST_BUCKETS: usize = 120;
+
 /// The one latency histogram shape (µs, log-spaced) every lane shares, so
-/// global and per-k percentiles stay comparable.
-fn latency_histogram() -> Histogram {
-    Histogram::log_spaced(0.5, 10_000_000.0, 120)
+/// global and per-k percentiles stay comparable — and mergeable across
+/// shards bucket by bucket.
+pub fn latency_histogram() -> Histogram {
+    Histogram::log_spaced(LATENCY_HIST_LO, LATENCY_HIST_HI, LATENCY_HIST_BUCKETS)
 }
 
 /// Lane key for a requested k: exact up to 16, rounded up to the next power
@@ -110,6 +122,9 @@ pub struct PerKSnapshot {
     pub completed: u64,
     pub total_p50_us: f64,
     pub total_p99_us: f64,
+    /// The lane's full histogram (shared layout, see [`latency_histogram`]);
+    /// `None` on snapshots reconstructed from sources that do not carry it.
+    pub hist: Option<Histogram>,
 }
 
 /// Per-admin-kind latency summary (only kinds that completed at least once).
@@ -119,6 +134,18 @@ pub struct AdminLaneSnapshot {
     pub completed: u64,
     pub total_p50_us: f64,
     pub total_p99_us: f64,
+    /// The lane's full histogram; `None` when the source did not carry it.
+    pub hist: Option<Histogram>,
+}
+
+/// The three main latency histograms of a snapshot (shared layout). Their
+/// presence is what turns cross-shard aggregation into an *exact* quantile
+/// merge instead of a worst-shard approximation.
+#[derive(Debug, Clone)]
+pub struct LatencyHists {
+    pub queue_us: Histogram,
+    pub exec_us: Histogram,
+    pub total_us: Histogram,
 }
 
 /// Cumulative write-verify cost of the admin plane (from the ±4 V
@@ -154,6 +181,11 @@ pub struct MetricsSnapshot {
     pub admin_rejected: u64,
     /// Cumulative write cost of the admin plane.
     pub write: WriteCostSnapshot,
+    /// Full queue/exec/total histograms behind the percentile fields.
+    /// Present on snapshots taken from a live [`Metrics`] (and on wire
+    /// snapshots whose peer shipped them); `None` only for legacy sources,
+    /// which then aggregate with the worst-shard fallback.
+    pub lat: Option<LatencyHists>,
 }
 
 impl Default for Metrics {
@@ -271,6 +303,7 @@ impl Metrics {
                     completed: lane.completed,
                     total_p50_us: lane.total_us.quantile(0.5),
                     total_p99_us: lane.total_us.quantile(0.99),
+                    hist: Some(lane.total_us.clone()),
                 })
                 .collect(),
             admin: AdminKind::ALL
@@ -283,6 +316,7 @@ impl Metrics {
                         completed: lane.completed,
                         total_p50_us: lane.total_us.quantile(0.5),
                         total_p99_us: lane.total_us.quantile(0.99),
+                        hist: Some(lane.total_us.clone()),
                     }
                 })
                 .collect(),
@@ -293,6 +327,11 @@ impl Metrics {
                 energy_j: g.write_energy_j,
                 latency_s: g.write_latency_s,
             },
+            lat: Some(LatencyHists {
+                queue_us: g.queue_us.clone(),
+                exec_us: g.exec_us.clone(),
+                total_us: g.total_us.clone(),
+            }),
         }
     }
 }

@@ -22,21 +22,35 @@
 //!   updates; graceful shutdown.
 //! * [`metrics`] — counters + latency histograms (queue/execute/total),
 //!   broken down per requested k, plus admin lanes with cumulative
-//!   write-verify cost (pulses, energy, array time).
+//!   write-verify cost (pulses, energy, array time). Histogram buckets are
+//!   log-spaced and aligned across lanes, so cross-shard aggregation merges
+//!   them exactly ([`crate::util::Histogram::merge_from`]).
+//! * [`backend`] — the [`backend::Backend`] trait: one transport-agnostic,
+//!   completion-based serving surface (`submit_search` → [`backend::Ticket`]
+//!   → poll) that local stacks ([`backend::LocalBackend`]), shard routers
+//!   ([`crate::server::RouterBackend`]) and remote connections
+//!   ([`crate::server::RemoteBackend`]) all implement — the seam the TCP
+//!   frontend serves from.
 //!
 //! Engines are pluggable ([`crate::am::AmEngine`]): digital (bit-exact),
 //! XLA (compiled Pallas artifact), analog (circuit-sim), or the baselines.
 
+pub mod backend;
 pub mod batcher;
 pub mod metrics;
 pub mod request;
 pub mod service;
 pub mod tiles;
 
+pub use backend::{
+    AdminCmd, AdminOutcome, Backend, BackendHealth, BatchResult, Hit, LocalBackend, Ticket,
+    WriteCost,
+};
 pub use batcher::Batcher;
 pub use metrics::{
-    AdminKind, AdminLaneSnapshot, Metrics, MetricsSnapshot, PerKSnapshot, WriteCostSnapshot,
+    latency_histogram, AdminKind, AdminLaneSnapshot, LatencyHists, Metrics, MetricsSnapshot,
+    PerKSnapshot, WriteCostSnapshot,
 };
 pub use request::{AdminOp, AdminResponse, RequestTiming, SearchResponse, SubmitError};
 pub use service::AmService;
-pub use tiles::{Commit, TileFactory, TileManager, TileScratch};
+pub use tiles::{Commit, EpochMismatch, TileFactory, TileManager, TileScratch};

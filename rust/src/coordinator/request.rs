@@ -21,6 +21,19 @@ pub enum SubmitError {
     /// Admin write rejected: cells failed read-verify after the retry
     /// budget — the word was *not* applied to the serving store.
     WriteFailed(String),
+    /// Admin compare-and-swap rejected: the op carried an `expected_epoch`
+    /// that no longer matches the owning shard's epoch — another writer
+    /// committed in between. The store is unchanged; re-read and retry.
+    EpochMismatch {
+        /// The epoch the caller expected the owning shard to be at.
+        expected: u64,
+        /// The shard epoch actually observed under the commit lock.
+        actual: u64,
+    },
+    /// Transport failure talking to a remote backend (connection refused,
+    /// reset, or a protocol-level frame error). The request may or may not
+    /// have reached the server.
+    Io(String),
 }
 
 impl std::fmt::Display for SubmitError {
@@ -30,6 +43,11 @@ impl std::fmt::Display for SubmitError {
             SubmitError::Closed => write!(f, "service closed"),
             SubmitError::BadQuery(msg) => write!(f, "bad query: {msg}"),
             SubmitError::WriteFailed(msg) => write!(f, "write failed: {msg}"),
+            SubmitError::EpochMismatch { expected, actual } => write!(
+                f,
+                "epoch mismatch: expected shard epoch {expected}, store is at {actual}"
+            ),
+            SubmitError::Io(msg) => write!(f, "backend i/o: {msg}"),
         }
     }
 }

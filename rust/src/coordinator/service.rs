@@ -56,6 +56,10 @@ struct Shared {
     /// batch is scored at its deepest k, so one unbounded request would tax
     /// every co-batched query.
     max_k_policy: usize,
+    /// The serving policy this service was started with — read-only after
+    /// start; exposed so frontends can advertise `max_batch`/`max_k` to
+    /// clients (wire-level batching hints).
+    policy: CoordinatorConfig,
     write: Mutex<WritePath>,
 }
 
@@ -92,6 +96,7 @@ impl AmService {
             metrics: Metrics::new(),
             running: AtomicBool::new(true),
             max_k_policy: cfg.max_k.max(1),
+            policy: cfg.clone(),
             write: Mutex::new(WritePath {
                 cfg: full.clone(),
                 rng: Rng::seed_from_u64(full.write.seed),
@@ -220,12 +225,26 @@ impl AmService {
     /// every search response stamped with an epoch ≥ the returned one
     /// observes this mutation.
     pub fn admin(&self, op: AdminOp) -> Result<AdminResponse, SubmitError> {
+        self.admin_cas(op, None)
+    }
+
+    /// [`AmService::admin`] with an optional compare-and-swap guard: with
+    /// `expected_epoch = Some(e)`, the mutation commits only if the store
+    /// epoch still equals `e` at commit time (checked atomically under the
+    /// tile write lock); a concurrent writer's commit in between rejects
+    /// the op with [`SubmitError::EpochMismatch`] and leaves the store
+    /// unchanged — the retry-safe multi-writer admin path.
+    pub fn admin_cas(
+        &self,
+        op: AdminOp,
+        expected_epoch: Option<u64>,
+    ) -> Result<AdminResponse, SubmitError> {
         if !self.shared.running.load(Ordering::Acquire) {
             return Err(SubmitError::Closed);
         }
         let kind = op.kind();
         let t0 = Instant::now();
-        match self.apply_admin(op) {
+        match self.apply_admin(op, expected_epoch) {
             Ok((row, commit, write)) => {
                 self.shared.metrics.on_admin(kind, t0.elapsed(), write.as_ref());
                 // rows comes from the commit itself (captured under the tile
@@ -240,11 +259,30 @@ impl AmService {
         }
     }
 
+    /// Map a tile-manager rejection to the typed submit error: a CAS
+    /// failure surfaces as [`SubmitError::EpochMismatch`], everything else
+    /// as a bad query.
+    fn admin_err(e: anyhow::Error) -> SubmitError {
+        match e.downcast_ref::<super::tiles::EpochMismatch>() {
+            Some(m) => SubmitError::EpochMismatch { expected: m.expected, actual: m.actual },
+            None => SubmitError::BadQuery(format!("{e:#}")),
+        }
+    }
+
     fn apply_admin(
         &self,
         op: AdminOp,
+        expected_epoch: Option<u64>,
     ) -> Result<(usize, super::tiles::Commit, Option<WriteReport>), SubmitError> {
-        let bad = |e: anyhow::Error| SubmitError::BadQuery(format!("{e:#}"));
+        // Fast-fail a doomed CAS before spending programming pulses. This
+        // is only an optimization — the authoritative check happens again
+        // under the tile write lock at commit time.
+        if let Some(expected) = expected_epoch {
+            let actual = self.shared.tiles.epoch();
+            if expected != actual {
+                return Err(SubmitError::EpochMismatch { expected, actual });
+            }
+        }
         match op {
             AdminOp::Update { row, word } => {
                 // Cheap bounds pre-check before spending programming pulses
@@ -256,16 +294,28 @@ impl AmService {
                     )));
                 }
                 let (programmed, report) = self.program(&word)?;
-                let commit = self.shared.tiles.update_row(row, &programmed).map_err(bad)?;
+                let commit = self
+                    .shared
+                    .tiles
+                    .update_row_cas(row, &programmed, expected_epoch)
+                    .map_err(Self::admin_err)?;
                 Ok((row, commit, Some(report)))
             }
             AdminOp::Insert { word } => {
                 let (programmed, report) = self.program(&word)?;
-                let (row, commit) = self.shared.tiles.insert_row(&programmed).map_err(bad)?;
+                let (row, commit) = self
+                    .shared
+                    .tiles
+                    .insert_row_cas(&programmed, expected_epoch)
+                    .map_err(Self::admin_err)?;
                 Ok((row, commit, Some(report)))
             }
             AdminOp::Delete { row } => {
-                let commit = self.shared.tiles.delete_row(row).map_err(bad)?;
+                let commit = self
+                    .shared
+                    .tiles
+                    .delete_row_cas(row, expected_epoch)
+                    .map_err(Self::admin_err)?;
                 Ok((row, commit, None))
             }
         }
@@ -305,6 +355,19 @@ impl AmService {
 
     pub fn metrics(&self) -> MetricsSnapshot {
         self.shared.metrics.snapshot()
+    }
+
+    /// The serving policy this service was started with (batching caps,
+    /// queue depth, `max_k`). Frontends advertise `max_batch`/`max_k` from
+    /// here so clients can self-tune instead of probing with `BadQuery`.
+    pub fn policy(&self) -> &CoordinatorConfig {
+        &self.shared.policy
+    }
+
+    /// The deepest k a request can currently ask for: the policy cap
+    /// intersected with the engines' live capability.
+    pub fn effective_max_k(&self) -> usize {
+        self.shared.max_k_policy.min(self.shared.tiles.max_k())
     }
 
     pub fn rows(&self) -> usize {
@@ -714,6 +777,37 @@ mod tests {
             svc2.admin(AdminOp::Delete { row: 0 }),
             Err(SubmitError::Closed)
         ));
+    }
+
+    /// Admin CAS at the service level: a pinned epoch only commits while it
+    /// still matches; a stale pin is a typed `EpochMismatch` rejection and
+    /// the store stays unchanged — the safe concurrent-writer retry loop.
+    #[test]
+    fn admin_cas_rejects_stale_expected_epoch() {
+        let cfg = CoordinatorConfig::default();
+        let (svc, _) = service(20, 64, &cfg);
+        let mut r = rng(41);
+        let w = BitVec::random(64, 0.5, &mut r);
+        let e0 = svc.epoch();
+        let resp = svc.admin_cas(AdminOp::Update { row: 1, word: w.clone() }, Some(e0)).unwrap();
+        assert!(resp.epoch > e0, "matching CAS commits");
+
+        let w2 = BitVec::random(64, 0.5, &mut r);
+        match svc.admin_cas(AdminOp::Update { row: 2, word: w2 }, Some(e0)) {
+            Err(SubmitError::EpochMismatch { expected, actual }) => {
+                assert_eq!(expected, e0);
+                assert_eq!(actual, resp.epoch);
+            }
+            other => panic!("expected EpochMismatch, got {other:?}"),
+        }
+        assert_eq!(svc.epoch(), resp.epoch, "rejected CAS must not bump the epoch");
+        assert_eq!(svc.metrics().admin_rejected, 1);
+
+        // The canonical retry: re-read the epoch, pin it, commit.
+        let w3 = BitVec::random(64, 0.5, &mut r);
+        let retry = svc.admin_cas(AdminOp::Update { row: 2, word: w3 }, Some(svc.epoch())).unwrap();
+        assert!(retry.epoch > resp.epoch);
+        svc.shutdown();
     }
 
     /// A word whose cells fail write-verify must be rejected — the serving

@@ -41,6 +41,30 @@ use crate::util::{par, BitVec};
 /// engine cannot apply a mutation in place.
 pub type TileFactory = Box<dyn Fn(Vec<BitVec>) -> Result<Box<dyn AmEngine>> + Send + Sync>;
 
+/// Typed compare-and-swap rejection: a mutation carried an `expected_epoch`
+/// that no longer matched the store epoch *under the commit lock* — another
+/// writer got in between. The store is unchanged. Travels inside the
+/// `anyhow` chain; callers recover it with `downcast_ref::<EpochMismatch>()`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct EpochMismatch {
+    /// The epoch the caller expected.
+    pub expected: u64,
+    /// The epoch actually observed under the write lock.
+    pub actual: u64,
+}
+
+impl std::fmt::Display for EpochMismatch {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "epoch mismatch: expected {}, store is at {} (concurrent commit)",
+            self.expected, self.actual
+        )
+    }
+}
+
+impl std::error::Error for EpochMismatch {}
+
 /// One consistent snapshot of the sharded store: `tiles[i]` stores rows
 /// `[offsets[i], offsets[i+1])`, with `words` the per-tile source of truth
 /// (kept for rebuilds and snapshot persistence of a live server).
@@ -204,13 +228,40 @@ impl TileManager {
         }
     }
 
+    /// While holding the write lock: reject the mutation if the caller
+    /// pinned an expected epoch and a concurrent writer moved it. Writers
+    /// are serialized by the lock, so this check-then-commit is atomic.
+    fn check_expected_epoch(&self, expected: Option<u64>) -> Result<()> {
+        if let Some(expected) = expected {
+            let actual = self.epoch.load(Ordering::Acquire);
+            if expected != actual {
+                return Err(anyhow::Error::new(EpochMismatch { expected, actual }));
+            }
+        }
+        Ok(())
+    }
+
     /// Reprogram global row `row` to `word`. In-place incremental repack
     /// when the tile engine supports it, tile rebuild otherwise.
     pub fn update_row(&self, row: usize, word: &BitVec) -> Result<Commit> {
+        self.update_row_cas(row, word, None)
+    }
+
+    /// [`TileManager::update_row`] with an optional compare-and-swap guard:
+    /// with `expected_epoch = Some(e)`, the mutation commits only if the
+    /// store epoch still equals `e` under the write lock; otherwise it is
+    /// rejected with a typed [`EpochMismatch`] and the store is unchanged.
+    pub fn update_row_cas(
+        &self,
+        row: usize,
+        word: &BitVec,
+        expected_epoch: Option<u64>,
+    ) -> Result<Commit> {
         if word.len() != self.dims {
             bail!("word has {} bits, engine expects {}", word.len(), self.dims);
         }
         let mut set = self.inner.write().unwrap();
+        self.check_expected_epoch(expected_epoch)?;
         if row >= set.total_rows {
             bail!("row {row} out of range {}", set.total_rows);
         }
@@ -228,10 +279,21 @@ impl TileManager {
     /// capacity, otherwise a fresh tile is built (the store grows tile by
     /// tile, like racking another physical array). Returns (row, commit).
     pub fn insert_row(&self, word: &BitVec) -> Result<(usize, Commit)> {
+        self.insert_row_cas(word, None)
+    }
+
+    /// [`TileManager::insert_row`] with the optional compare-and-swap guard
+    /// (see [`TileManager::update_row_cas`]).
+    pub fn insert_row_cas(
+        &self,
+        word: &BitVec,
+        expected_epoch: Option<u64>,
+    ) -> Result<(usize, Commit)> {
         if word.len() != self.dims {
             bail!("word has {} bits, engine expects {}", word.len(), self.dims);
         }
         let mut set = self.inner.write().unwrap();
+        self.check_expected_epoch(expected_epoch)?;
         let row = set.total_rows;
         let t = set.tiles.len() - 1;
         if set.words[t].len() < self.tile_capacity {
@@ -256,7 +318,14 @@ impl TileManager {
     /// empties is dropped whole. The last remaining row cannot be deleted
     /// (engines need at least one stored word).
     pub fn delete_row(&self, row: usize) -> Result<Commit> {
+        self.delete_row_cas(row, None)
+    }
+
+    /// [`TileManager::delete_row`] with the optional compare-and-swap guard
+    /// (see [`TileManager::update_row_cas`]).
+    pub fn delete_row_cas(&self, row: usize, expected_epoch: Option<u64>) -> Result<Commit> {
         let mut set = self.inner.write().unwrap();
+        self.check_expected_epoch(expected_epoch)?;
         if row >= set.total_rows {
             bail!("row {row} out of range {}", set.total_rows);
         }
@@ -674,6 +743,42 @@ mod tests {
             );
             Ok(())
         });
+    }
+
+    /// CAS mutations: a pinned expected epoch commits only while it still
+    /// matches, and a stale pin is rejected with the typed
+    /// [`EpochMismatch`] — atomically, under the same lock that orders
+    /// commits.
+    #[test]
+    fn cas_mutations_check_epoch_under_the_lock() {
+        let mut r = rng(23);
+        let words: Vec<BitVec> = (0..10).map(|_| BitVec::random(32, 0.5, &mut r)).collect();
+        let tm = TileManager::build(words, 4, digital_factory).unwrap();
+        let w = BitVec::random(32, 0.5, &mut r);
+
+        // Matching pin commits and advances the epoch.
+        let e0 = tm.epoch();
+        let c = tm.update_row_cas(1, &w, Some(e0)).unwrap();
+        assert!(c.epoch > e0);
+
+        // Stale pin: every mutation kind rejects with the typed error and
+        // leaves epoch/rows unchanged.
+        let rows_before = tm.rows();
+        for result in [
+            tm.update_row_cas(1, &w, Some(e0)).map(|_| ()),
+            tm.insert_row_cas(&w, Some(e0)).map(|_| ()),
+            tm.delete_row_cas(1, Some(e0)).map(|_| ()),
+        ] {
+            let err = result.expect_err("stale CAS must be rejected");
+            let m = err.downcast_ref::<EpochMismatch>().expect("typed EpochMismatch");
+            assert_eq!(m.expected, e0);
+            assert_eq!(m.actual, c.epoch);
+        }
+        assert_eq!(tm.epoch(), c.epoch, "rejected CAS must not bump the epoch");
+        assert_eq!(tm.rows(), rows_before, "rejected CAS must not mutate the store");
+
+        // `None` keeps the unconditional behavior.
+        assert!(tm.update_row_cas(2, &w, None).is_ok());
     }
 
     /// The factory-rebuild fallback path (engines without in-place

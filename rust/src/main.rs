@@ -9,8 +9,13 @@
 //!             (--snapshot PATH warm-starts from a saved AM snapshot);
 //!             with --listen ADDR it instead serves the cosimed wire
 //!             protocol over TCP (--shards S fans the store across S
-//!             coordinator stacks; --duration SECS exits after a while,
-//!             0 = run until killed; see examples/loadgen.rs for a client)
+//!             coordinator stacks; --io threaded|eventloop picks the I/O
+//!             engine; --duration SECS exits after a while, 0 = run until
+//!             killed; see examples/loadgen.rs for a client)
+//!   route     start a routing tier: a cosimed server whose shards are
+//!             *remote* cosimed servers (--remote a:p,b:p or
+//!             `[server] remote_shards` in --config), scatter-gather over
+//!             the wire with the same global-id scheme as local shards
 //!   hdc       train + evaluate the HDC case study end to end
 //!             (--snapshot PATH saves the trained AM, write costs included)
 //!   live      train → snapshot → warm-start a server → stream online HDC
@@ -23,14 +28,14 @@
 use anyhow::{bail, Result};
 use cosime::am::store::AmStore;
 use cosime::am::{AmEngine, DigitalExactEngine};
-use cosime::config::CosimeConfig;
-use cosime::coordinator::{AdminOp, AmService, TileManager};
+use cosime::config::{CosimeConfig, IoMode};
+use cosime::coordinator::{AdminOp, AmService, Backend, TileManager};
 use cosime::hdc::{
     evaluate_service_accuracy, Dataset, DatasetSpec, HdcModel, SyntheticParams, TrainConfig,
 };
 use cosime::repro;
 use cosime::runtime::{RuntimeHandle, XlaAmEngine};
-use cosime::server::{CosimeServer, ShardRouter};
+use cosime::server::{CosimeServer, RemoteBackend, RouterBackend, ShardRouter};
 use cosime::util::cli::Args;
 use cosime::util::{rng, BitVec};
 use std::time::Instant;
@@ -83,6 +88,7 @@ fn dispatch(args: &Args) -> Result<()> {
         Some("all") => run_all(sub, trials, results),
         Some("search") => cmd_search(args),
         Some("serve") => cmd_serve(args),
+        Some("route") => cmd_route(args),
         Some("hdc") => cmd_hdc(args),
         Some("live") => cmd_live(args),
         Some("artifacts") => cmd_artifacts(args),
@@ -99,12 +105,14 @@ fn print_usage() {
         "cosime — FeFET in-memory cosine-similarity search engine (ICCAD'22 reproduction)\n\n\
          usage: cosime <subcommand> [flags]\n\n\
          repro:  fig1 fig2 fig4a fig4b fig6 fig7 fig8 fig9 table1 table2 all\n\
-         system: search serve hdc live artifacts\n\n\
+         system: search serve route hdc live artifacts\n\n\
          flags:  --results DIR  --seed N  --subsample F  --trials N\n\
                  --engine digital|analog|xla  --rows N --dims N --queries N --k N\n\
                  --snapshot PATH (hdc: save trained AM; serve: warm-start from it)\n\
-                 --listen ADDR --shards S --duration SECS --config FILE (serve: TCP\n\
-                 frontend; drive it with `cargo run --release --example loadgen`)"
+                 --listen ADDR --shards S --io threaded|eventloop --duration SECS\n\
+                 --config FILE (serve: TCP frontend; drive it with\n\
+                 `cargo run --release --example loadgen`)\n\
+                 --remote A:P,B:P (route: the remote shard servers to fan over)"
     );
 }
 
@@ -225,6 +233,9 @@ fn cmd_serve_tcp(args: &Args) -> Result<()> {
         cfg.server.listen = listen.to_string();
     }
     cfg.server.shards = args.get_usize("shards", cfg.server.shards);
+    if let Some(io) = args.get("io") {
+        cfg.server.io = IoMode::parse(io)?;
+    }
     cfg.validate()?;
     let seed = args.get_u64("seed", 2);
     let engine_kind = args.get_str("engine", "digital").to_string();
@@ -242,15 +253,25 @@ fn cmd_serve_tcp(args: &Args) -> Result<()> {
     );
     let server = CosimeServer::serve(&cfg.server, router)?;
     println!(
-        "cosimed listening on {} (max_frame {} B, {} in-flight frames/conn)",
+        "cosimed listening on {} ({} io, max_frame {} B, {} in-flight frames/conn)",
         server.local_addr(),
+        server.io_mode().as_str(),
         cfg.server.max_frame,
         cfg.server.max_inflight
     );
+    serve_until_done(args, server)
+}
+
+/// Shared tail of `serve`/`route`: hold the server open for `--duration`
+/// seconds (0 = until killed), then report and shut down.
+fn serve_until_done(args: &Args, server: CosimeServer) -> Result<()> {
     let duration = args.get_u64("duration", 0);
     if duration > 0 {
         std::thread::sleep(std::time::Duration::from_secs(duration));
-        println!("\n{}", server.router().metrics().report());
+        match server.backend().metrics() {
+            Ok(m) => println!("\n{}", m.report()),
+            Err(e) => println!("\n(metrics unavailable at shutdown: {e})"),
+        }
         server.shutdown();
         Ok(())
     } else {
@@ -259,6 +280,54 @@ fn cmd_serve_tcp(args: &Args) -> Result<()> {
             std::thread::sleep(std::time::Duration::from_secs(3600));
         }
     }
+}
+
+/// `route --listen ADDR --remote A:P,B:P`: a routing tier. Each remote
+/// address becomes one nonblocking wire connection ([`RemoteBackend`]);
+/// the router scatter-gathers over them with the same `shard << 48 | local`
+/// global-id scheme as in-process shards, so clients cannot tell a routing
+/// tier from a flat server.
+fn cmd_route(args: &Args) -> Result<()> {
+    let mut cfg = match args.get("config") {
+        Some(path) => CosimeConfig::from_toml_file(path)?,
+        None => CosimeConfig::default(),
+    };
+    if let Some(listen) = args.get("listen") {
+        cfg.server.listen = listen.to_string();
+    }
+    if let Some(io) = args.get("io") {
+        cfg.server.io = IoMode::parse(io)?;
+    }
+    if let Some(remote) = args.get("remote") {
+        cfg.server.remote_shards =
+            remote.split(',').map(|s| s.trim().to_string()).filter(|s| !s.is_empty()).collect();
+    }
+    cfg.validate()?;
+    anyhow::ensure!(
+        !cfg.server.remote_shards.is_empty(),
+        "route needs shard addresses: --remote A:P,B:P or [server] remote_shards in --config"
+    );
+    let mut children: Vec<Box<dyn Backend>> = Vec::with_capacity(cfg.server.remote_shards.len());
+    for addr in &cfg.server.remote_shards {
+        let child = RemoteBackend::connect_retry(
+            addr.as_str(),
+            10,
+            std::time::Duration::from_millis(200),
+        )?;
+        let h = child.connect_health();
+        println!("shard {addr}: {} rows x {} bits, epoch {}", h.rows, h.dims, h.epoch);
+        children.push(Box::new(child));
+    }
+    let router = RouterBackend::from_backends(children)?;
+    let shards = router.shard_count();
+    let server = CosimeServer::serve(&cfg.server, router)?;
+    println!(
+        "routing tier on {} ({} io) over {} remote shard(s)",
+        server.local_addr(),
+        server.io_mode().as_str(),
+        shards
+    );
+    serve_until_done(args, server)
 }
 
 fn cmd_serve(args: &Args) -> Result<()> {

@@ -22,7 +22,7 @@ use crate::util::BitVec;
 
 use super::protocol::{
     self, Op, WireAdminOp, WireAdminResponse, WireError, WireHealth, WireHit, WireMetrics,
-    WireSearchResponse, VERSION,
+    WireSearchResponse,
 };
 
 /// Default cap on response frames the client will accept. Deliberately far
@@ -92,8 +92,13 @@ impl Client {
     fn read_response(&mut self, want: Op) -> Result<Vec<u8>> {
         let (header, payload) =
             protocol::read_frame(&mut self.reader, self.max_frame).context("reading response")?;
-        if header.version != VERSION {
-            bail!("server speaks protocol version {}, client speaks {VERSION}", header.version);
+        if !protocol::version_supported(header.version) {
+            bail!(
+                "server speaks protocol version {}, client speaks {}..={}",
+                header.version,
+                protocol::MIN_VERSION,
+                protocol::VERSION
+            );
         }
         if header.flags != 0 {
             bail!("server set reserved header flags {:#06x}", header.flags);
@@ -151,21 +156,31 @@ impl Client {
 
     /// Reprogram the row with global id `row` (write-verified server-side).
     pub fn update(&mut self, row: u64, word: &BitVec) -> Result<WireAdminResponse> {
-        self.admin(&WireAdminOp::Update { row, word: word.clone() })
+        self.admin(&WireAdminOp::Update { row, word: word.clone() }, None)
     }
 
     /// Insert `word` as a new row; the response carries its global id.
     pub fn insert(&mut self, word: &BitVec) -> Result<WireAdminResponse> {
-        self.admin(&WireAdminOp::Insert { word: word.clone() })
+        self.admin(&WireAdminOp::Insert { word: word.clone() }, None)
     }
 
     /// Delete the row with global id `row`.
     pub fn delete(&mut self, row: u64) -> Result<WireAdminResponse> {
-        self.admin(&WireAdminOp::Delete { row })
+        self.admin(&WireAdminOp::Delete { row }, None)
     }
 
-    fn admin(&mut self, op: &WireAdminOp) -> Result<WireAdminResponse> {
-        let (code, payload) = protocol::encode_admin_request(op);
+    /// Any admin op, optionally pinned to an expected owning-shard epoch
+    /// (compare-and-swap, protocol v2): a stale pin is rejected server-side
+    /// with a typed `epoch-mismatch` [`WireError`] whose
+    /// [`epochs`](WireError::epochs) field carries `(expected, actual)` —
+    /// pin the `shard_epoch` from the last admin response, and on mismatch
+    /// re-read and retry. `None` is the unconditional path.
+    pub fn admin(
+        &mut self,
+        op: &WireAdminOp,
+        expected_epoch: Option<u64>,
+    ) -> Result<WireAdminResponse> {
+        let (code, payload) = protocol::encode_admin_request(op, expected_epoch);
         let resp = self.round_trip(code, &payload, Op::AdminOk)?;
         Ok(protocol::decode_admin_response(&resp)?)
     }

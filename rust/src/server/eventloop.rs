@@ -1,0 +1,322 @@
+//! The single-threaded event-loop I/O engine (`[server] io = "eventloop"`).
+//!
+//! One thread drives the listener and every connection with nonblocking
+//! sockets and a readiness loop — no `libc` dependency, no poll/epoll
+//! binding, just `WouldBlock` as the readiness signal. Per iteration the
+//! loop:
+//!
+//! 1. accepts any pending connections (nonblocking listener);
+//! 2. for each connection: reads available bytes, carves complete frames
+//!    out of the input buffer and dispatches them through the same
+//!    [`handle_frame`](super::tcp) logic the threaded engine uses —
+//!    searches become [`Ticket`]s queued on the connection's in-flight
+//!    list, control ops become finished frames;
+//! 3. completes in-flight work **in request order**: only the queue head
+//!    is ever polled/encoded, so pipelining order is preserved by
+//!    construction;
+//! 4. writes as much buffered output as each socket accepts.
+//!
+//! If a full sweep makes no progress the loop parks briefly (200 µs), so
+//! an idle server costs near-zero CPU while a loaded one runs hot on one
+//! core.
+//!
+//! # Invariants
+//!
+//! * **Ordering** — responses leave a connection in exactly the order its
+//!   requests arrived: in-flight replies live in a FIFO and only the front
+//!   is completed. A fatal protocol error is itself queued, so even the
+//!   farewell error frame waits for the replies ahead of it.
+//! * **Bounded in-flight** — a connection with `max_inflight` queued
+//!   replies is not read from (its frames stay in the kernel buffer → TCP
+//!   backpressure), so a client that stops draining responses throttles
+//!   itself. Output is bounded by the same count of encoded responses.
+//! * **No wedging** — a truncated frame, reset, or mid-batch disconnect
+//!   marks the connection finished; its in-flight tickets are dropped
+//!   (the backend completes the work; results go nowhere) and the loop
+//!   moves on.
+
+use std::collections::VecDeque;
+use std::io::{Read, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::Ordering;
+use std::sync::Arc;
+use std::time::Duration;
+
+use super::protocol::{self, ErrorCode, Op, WireError, HEADER_LEN, MAGIC};
+use super::tcp::{handle_frame, Handled, Shared};
+use crate::coordinator::backend::Ticket;
+
+/// One queued reply (request order).
+enum Pending {
+    /// Finished frame: negotiated version, opcode, payload.
+    Done(u8, Op, Vec<u8>),
+    /// Search still in flight.
+    Search(u8, Ticket),
+    /// Farewell error frame; once written, the connection closes.
+    Fatal(Vec<u8>),
+}
+
+struct Conn {
+    stream: TcpStream,
+    inbuf: Vec<u8>,
+    outbuf: VecDeque<u8>,
+    inflight: VecDeque<Pending>,
+    /// Peer sent EOF (or a fatal frame was queued): read no more requests.
+    stop_reading: bool,
+    /// Flush what is buffered, then drop the connection.
+    closing: bool,
+    /// Ready to be dropped by the sweep.
+    dead: bool,
+}
+
+impl Conn {
+    fn new(stream: TcpStream) -> Conn {
+        Conn {
+            stream,
+            inbuf: Vec::new(),
+            outbuf: VecDeque::new(),
+            inflight: VecDeque::new(),
+            stop_reading: false,
+            closing: false,
+            dead: false,
+        }
+    }
+
+    /// Drive this connection one sweep; true if any byte or completion
+    /// moved.
+    fn step(&mut self, shared: &Shared) -> bool {
+        let mut progress = false;
+        progress |= self.read_phase(shared);
+        progress |= self.parse_phase(shared);
+        progress |= self.complete_phase();
+        progress |= self.write_phase();
+        if self.closing && self.outbuf.is_empty() {
+            self.dead = true;
+        }
+        if self.stop_reading
+            && self.inflight.is_empty()
+            && self.outbuf.is_empty()
+            && !self.parseable_frame(shared)
+        {
+            // Clean end: peer closed and everything owed has been written.
+            // A *parseable* frame still in `inbuf` (possible when the peer
+            // pipelined more than `max_inflight` requests and half-closed —
+            // parsing stopped at the window this sweep) keeps the
+            // connection alive for the next sweep; a partial frame left
+            // after EOF is a truncated tail that can never complete, so it
+            // is dropped, wedging nothing.
+            self.dead = true;
+        }
+        progress
+    }
+
+    /// Whether `inbuf` holds something the parse phase could still act on:
+    /// a complete frame, or a sync-destroying header (bad magic, oversized
+    /// declared length) that owes the peer a farewell error frame.
+    fn parseable_frame(&self, shared: &Shared) -> bool {
+        if self.inbuf.len() < HEADER_LEN {
+            return false;
+        }
+        let magic = u32::from_le_bytes(self.inbuf[0..4].try_into().unwrap());
+        if magic != MAGIC {
+            return true;
+        }
+        let len = u32::from_le_bytes(self.inbuf[8..12].try_into().unwrap()) as usize;
+        len > shared.max_frame || self.inbuf.len() >= HEADER_LEN + len
+    }
+
+    /// Pull available bytes while the in-flight window has room.
+    fn read_phase(&mut self, shared: &Shared) -> bool {
+        if self.stop_reading || self.closing || self.inflight.len() >= shared.max_inflight {
+            return false;
+        }
+        let mut progress = false;
+        let mut chunk = [0u8; 64 * 1024];
+        loop {
+            match self.stream.read(&mut chunk) {
+                Ok(0) => {
+                    self.stop_reading = true;
+                    break;
+                }
+                Ok(n) => {
+                    self.inbuf.extend_from_slice(&chunk[..n]);
+                    progress = true;
+                    // Cap how much one connection buffers per sweep: parse
+                    // what we have before pulling more.
+                    if self.inbuf.len() >= shared.max_frame + HEADER_LEN {
+                        break;
+                    }
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => break,
+                Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+                Err(_) => {
+                    // Reset mid-stream: nothing to answer.
+                    self.dead = true;
+                    break;
+                }
+            }
+        }
+        progress
+    }
+
+    /// Carve complete frames out of `inbuf` and dispatch them. Frames that
+    /// arrived fully before an EOF are still served (`stop_reading` stops
+    /// the socket, not the parser).
+    fn parse_phase(&mut self, shared: &Shared) -> bool {
+        let mut progress = false;
+        while !self.closing && self.inflight.len() < shared.max_inflight {
+            if self.inbuf.len() < HEADER_LEN {
+                break;
+            }
+            let magic = u32::from_le_bytes(self.inbuf[0..4].try_into().unwrap());
+            if magic != MAGIC {
+                self.queue_fatal(WireError::new(
+                    ErrorCode::BadFrame,
+                    "bad frame magic: not a cosimed client?",
+                ));
+                return true;
+            }
+            let len = u32::from_le_bytes(self.inbuf[8..12].try_into().unwrap()) as usize;
+            if len > shared.max_frame {
+                self.queue_fatal(WireError::new(
+                    ErrorCode::FrameTooLarge,
+                    format!("frame payload {len} bytes exceeds max_frame {}", shared.max_frame),
+                ));
+                return true;
+            }
+            if self.inbuf.len() < HEADER_LEN + len {
+                break;
+            }
+            let version = self.inbuf[4];
+            let op_byte = self.inbuf[5];
+            let flags = u16::from_le_bytes(self.inbuf[6..8].try_into().unwrap());
+            let payload: Vec<u8> = self.inbuf[HEADER_LEN..HEADER_LEN + len].to_vec();
+            self.inbuf.drain(..HEADER_LEN + len);
+            let (version, handled) = handle_frame(shared, version, op_byte, flags, &payload);
+            self.inflight.push_back(match handled {
+                Handled::Immediate(op, bytes) => Pending::Done(version, op, bytes),
+                Handled::Search(ticket) => Pending::Search(version, ticket),
+            });
+            progress = true;
+        }
+        progress
+    }
+
+    /// Queue the farewell error frame and stop consuming input: the byte
+    /// stream can no longer be re-synchronized.
+    fn queue_fatal(&mut self, e: WireError) {
+        self.inflight.push_back(Pending::Fatal(protocol::encode_error_response(&e)));
+        self.stop_reading = true;
+        self.inbuf.clear();
+    }
+
+    /// Encode completed replies into `outbuf`, strictly from the queue
+    /// front (pipelining order): an unfinished search at the head parks the
+    /// whole queue, so responses can never overtake each other.
+    fn complete_phase(&mut self) -> bool {
+        let mut progress = false;
+        while let Some(pending) = self.inflight.pop_front() {
+            match pending {
+                Pending::Done(version, op, payload) => {
+                    self.stage_frame(version, op, &payload);
+                    progress = true;
+                }
+                Pending::Fatal(payload) => {
+                    self.stage_frame(protocol::VERSION, Op::Error, &payload);
+                    self.closing = true;
+                    progress = true;
+                }
+                Pending::Search(version, mut ticket) => match ticket.poll() {
+                    Ok(None) => {
+                        // Head still in flight: put it back and stop — the
+                        // replies behind it must wait their turn.
+                        self.inflight.push_front(Pending::Search(version, ticket));
+                        break;
+                    }
+                    Ok(Some(result)) => {
+                        let payload =
+                            protocol::encode_search_response(result.epoch, &result.results);
+                        self.stage_frame(version, Op::SearchOk, &payload);
+                        progress = true;
+                    }
+                    Err(e) => {
+                        let payload = protocol::encode_error_response(&WireError::from(e));
+                        self.stage_frame(version, Op::Error, &payload);
+                        progress = true;
+                    }
+                },
+            }
+        }
+        progress
+    }
+
+    /// Append one frame (header + payload) to the output buffer.
+    fn stage_frame(&mut self, version: u8, op: Op, payload: &[u8]) {
+        let mut header = [0u8; HEADER_LEN];
+        if protocol::encode_frame_header(&mut header, version, op, payload.len()).is_err() {
+            // A response too large for the length field cannot be framed;
+            // the stream would desync, so close instead.
+            self.closing = true;
+            return;
+        }
+        self.outbuf.extend(header.iter().copied());
+        self.outbuf.extend(payload.iter().copied());
+    }
+
+    /// Push buffered output into the socket.
+    fn write_phase(&mut self) -> bool {
+        let mut progress = false;
+        while !self.outbuf.is_empty() {
+            let (front, _) = self.outbuf.as_slices();
+            match self.stream.write(front) {
+                Ok(0) => {
+                    self.dead = true;
+                    break;
+                }
+                Ok(n) => {
+                    self.outbuf.drain(..n);
+                    progress = true;
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => break,
+                Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+                Err(_) => {
+                    self.dead = true;
+                    break;
+                }
+            }
+        }
+        progress
+    }
+}
+
+/// The loop body: owns the nonblocking listener and every connection until
+/// shutdown flips `shared.running`.
+pub(super) fn run(listener: TcpListener, shared: Arc<Shared>) {
+    let mut conns: Vec<Conn> = Vec::new();
+    while shared.running.load(Ordering::Acquire) {
+        let mut progress = false;
+        // Accept everything pending.
+        loop {
+            match listener.accept() {
+                Ok((stream, _peer)) => {
+                    let _ = stream.set_nodelay(true);
+                    if stream.set_nonblocking(true).is_ok() {
+                        conns.push(Conn::new(stream));
+                        progress = true;
+                    }
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => break,
+                Err(_) => break, // transient (EMFILE etc.): retry next sweep
+            }
+        }
+        for conn in &mut conns {
+            progress |= conn.step(&shared);
+        }
+        conns.retain(|c| !c.dead);
+        if !progress {
+            std::thread::sleep(Duration::from_micros(200));
+        }
+    }
+    // Shutdown: connections drop; in-flight tickets complete against the
+    // backend with nowhere to deliver — harmless by design.
+}

@@ -5,34 +5,47 @@
 //! the expensive part of similarity search; a serving engine that can only
 //! be *linked against* re-creates that wall one level up — every deployment
 //! would have to move the store into its own process. This module makes the
-//! coordinator reachable as a process:
+//! coordinator reachable as a process, all of it behind the one
+//! completion-based [`Backend`](crate::coordinator::Backend) trait:
 //!
 //! * [`protocol`] — the versioned, length-prefixed binary frame format:
-//!   batched search, admin update/insert/delete, metrics and health ops,
-//!   and typed error frames mapping
-//!   [`SubmitError`](crate::coordinator::SubmitError) (including `Busy`
-//!   backpressure and `WriteFailed`) plus the protocol-level failures.
-//! * [`shard`] — [`shard::ShardRouter`]: one logical store fanned across
-//!   `S` independent [`AmService`](crate::coordinator::AmService) shards.
-//!   Deterministic content-hash placement (the store's FNV-1a family),
-//!   scatter-gather top-k merged through
-//!   [`TopK::merge_from`](crate::am::TopK::merge_from), admin ops routed to
-//!   the owning shard via global row ids, metrics aggregated across shards.
-//! * [`tcp`] — [`tcp::CosimeServer`]: a threaded TCP server. Per
-//!   connection, a reader thread scatters decoded frames through the
-//!   router and a writer thread gathers and responds in request order —
-//!   pipelining with **bounded in-flight frames per connection**, so one
-//!   slow client throttles itself instead of the shared queue.
+//!   batched search, admin update/insert/delete (with optional
+//!   compare-and-swap epoch pins), metrics and health ops (health carries
+//!   the server's `max_batch`/`max_k` batching hints since v2), and typed
+//!   error frames mapping [`SubmitError`](crate::coordinator::SubmitError)
+//!   (including `Busy` backpressure, `WriteFailed` and `EpochMismatch`)
+//!   plus the protocol-level failures.
+//! * [`shard`] — [`shard::RouterBackend`] (historically `ShardRouter`):
+//!   one logical store fanned across child `Backend`s — in-process serving
+//!   stacks *or* remote `cosimed` servers. Deterministic content-hash
+//!   placement (the store's FNV-1a family), scatter-gather top-k merged
+//!   through [`TopK::merge_from`](crate::am::TopK::merge_from), admin ops
+//!   routed to the owning shard via `shard << 48 | local` global row ids,
+//!   metrics aggregated across shards with **exact** merged percentiles
+//!   ([`shard::aggregate_metrics`]).
+//! * [`remote`] — [`remote::RemoteBackend`]: the wire protocol as a
+//!   nonblocking, completion-based `Backend`, so a remote server slots in
+//!   anywhere an in-process stack does (including as a router child).
+//! * [`tcp`] — [`tcp::CosimeServer`]: the TCP frontend, serving any
+//!   `Backend` with one of two I/O engines
+//!   ([`IoMode`](crate::config::IoMode)): the threaded engine (reader +
+//!   writer thread pair per connection) or the [`eventloop`] engine (one
+//!   thread, nonblocking sockets, incremental decode/encode, completion
+//!   polling). Both give Redis-style pipelining with bounded in-flight
+//!   frames per connection.
 //! * [`client`] — [`client::Client`]: the blocking client library with
 //!   connect/retry and a pipelined batch mode; the `loadgen` example
 //!   drives a server with it and reports throughput/latency percentiles.
 //!
-//! `cosime serve --listen ADDR --shards S` is the CLI entrypoint; see
-//! `rust/README.md` for the wire-format and configuration reference
-//! (`[server]` section).
+//! `cosime serve --listen ADDR` is the CLI entrypoint for a shard server;
+//! `cosime route --listen ADDR` starts a routing tier over
+//! `[server] remote_shards`. See `rust/README.md` for the wire-format and
+//! configuration reference (`[server]` section).
 
 pub mod client;
+pub mod eventloop;
 pub mod protocol;
+pub mod remote;
 pub mod shard;
 pub mod tcp;
 
@@ -41,5 +54,9 @@ pub use protocol::{
     ErrorCode, Op, WireAdminOp, WireAdminResponse, WireError, WireHealth, WireHit, WireMetrics,
     WireSearchResponse,
 };
-pub use shard::{global_row, split_row, PendingSearch, RoutedAdminResponse, ShardRouter};
+pub use remote::RemoteBackend;
+pub use shard::{
+    aggregate_metrics, global_row, split_row, PendingSearch, RoutedAdminResponse, RouterBackend,
+    ShardRouter,
+};
 pub use tcp::CosimeServer;

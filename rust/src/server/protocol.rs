@@ -6,7 +6,8 @@
 //! ```text
 //! offset  size  field
 //! 0       4     magic   0x454D5343 ("CSME" as LE bytes)
-//! 4       1     version (currently [`VERSION`] = 1)
+//! 4       1     version ([`MIN_VERSION`]..=[`VERSION`]; servers answer in
+//!               the version the request carried — see [`version_supported`])
 //! 5       1     op      (see [`Op`])
 //! 6       2     flags   (reserved, must be 0; receivers reject nonzero)
 //! 8       4     len     payload length in bytes
@@ -36,16 +37,39 @@
 
 use std::io::{self, Read, Write};
 
-use crate::am::write::WriteReport;
-use crate::coordinator::{MetricsSnapshot, SubmitError};
-use crate::util::BitVec;
+use crate::coordinator::metrics::{
+    latency_histogram, LatencyHists, LATENCY_HIST_BUCKETS, LATENCY_HIST_HI, LATENCY_HIST_LO,
+};
+use crate::coordinator::{MetricsSnapshot, SubmitError, WriteCostSnapshot};
+use crate::util::{BitVec, Histogram, RunningStats};
+
+// The wire data model *is* the backend data model: the protocol is one
+// transport for `coordinator::backend`, so the structs cross it unchanged
+// (re-exported under their historical wire names).
+pub use crate::coordinator::backend::AdminCmd as WireAdminOp;
+pub use crate::coordinator::backend::AdminOutcome as WireAdminResponse;
+pub use crate::coordinator::backend::BackendHealth as WireHealth;
+pub use crate::coordinator::backend::Hit as WireHit;
+pub use crate::coordinator::backend::WriteCost as WireWriteReport;
 
 /// Frame magic: the bytes `CSME` read as a little-endian u32.
 pub const MAGIC: u32 = u32::from_le_bytes(*b"CSME");
-/// Current protocol version.
-pub const VERSION: u8 = 1;
+/// Current protocol version. Version 2 added: batching hints
+/// (`max_batch`/`max_k`) in the health response, the owning shard's epoch
+/// in admin responses, optional compare-and-swap pins on admin requests,
+/// and full latency histograms in the metrics response.
+pub const VERSION: u8 = 2;
+/// Oldest protocol version this build still speaks. A server answers every
+/// frame in the version the *request* carried, so old clients keep working
+/// ([`version_supported`]).
+pub const MIN_VERSION: u8 = 1;
 /// Fixed frame-header size in bytes.
 pub const HEADER_LEN: usize = 12;
+
+/// Whether this build can serve a frame of protocol version `v`.
+pub fn version_supported(v: u8) -> bool {
+    (MIN_VERSION..=VERSION).contains(&v)
+}
 
 /// Frame opcodes. Requests have the high bit clear; responses set it.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -53,11 +77,12 @@ pub const HEADER_LEN: usize = 12;
 pub enum Op {
     /// Batched top-k search: `k:u32, dims:u32, count:u32, count×lanes`.
     Search = 0x01,
-    /// Admin update: `row:u64, dims:u32, lanes`.
+    /// Admin update: `row:u64, dims:u32, lanes[, cas]` (the optional v2
+    /// compare-and-swap tail: `1:u8, expected_epoch:u64`).
     AdminUpdate = 0x02,
-    /// Admin insert: `dims:u32, lanes`.
+    /// Admin insert: `dims:u32, lanes[, cas]`.
     AdminInsert = 0x03,
-    /// Admin delete: `row:u64`.
+    /// Admin delete: `row:u64[, cas]`.
     AdminDelete = 0x04,
     /// Metrics snapshot request (empty payload).
     Metrics = 0x05,
@@ -65,13 +90,17 @@ pub enum Op {
     Health = 0x06,
     /// Search response: `epoch:u64, count:u32, count×(n:u32, n×(row:u64, score:f64))`.
     SearchOk = 0x81,
-    /// Admin response: `row:u64, epoch:u64, rows:u64, has_write:u8[, report]`.
+    /// Admin response: `row:u64, epoch:u64, rows:u64, has_write:u8[,
+    /// report][, shard_epoch:u64 (v2)]`.
     AdminOk = 0x82,
-    /// Metrics response (see [`WireMetrics`]).
+    /// Metrics response (see [`WireMetrics`]; v2 appends the latency
+    /// histograms).
     MetricsOk = 0x85,
-    /// Health response: `rows:u64, dims:u64, epoch:u64, shards:u32`.
+    /// Health response: `rows:u64, dims:u64, epoch:u64, shards:u32[,
+    /// max_batch:u32, max_k:u32 (v2)]`.
     HealthOk = 0x86,
-    /// Error response: `code:u8, msg_len:u32, msg`.
+    /// Error response: `code:u8, msg_len:u32, msg[, expected:u64,
+    /// actual:u64 (epoch-mismatch)]`.
     Error = 0xFF,
 }
 
@@ -119,6 +148,10 @@ pub enum ErrorCode {
     UnknownOp = 8,
     /// Server-side failure outside the request's control.
     Internal = 9,
+    /// Admin compare-and-swap pin did not match the owning shard's epoch
+    /// (v2). The error payload carries the expected/actual epochs; re-read
+    /// and retry.
+    EpochMismatch = 10,
 }
 
 impl ErrorCode {
@@ -133,6 +166,7 @@ impl ErrorCode {
             7 => ErrorCode::BadVersion,
             8 => ErrorCode::UnknownOp,
             9 => ErrorCode::Internal,
+            10 => ErrorCode::EpochMismatch,
             _ => return None,
         })
     }
@@ -148,6 +182,7 @@ impl ErrorCode {
             ErrorCode::BadVersion => "bad-version",
             ErrorCode::UnknownOp => "unknown-op",
             ErrorCode::Internal => "internal",
+            ErrorCode::EpochMismatch => "epoch-mismatch",
         }
     }
 }
@@ -158,11 +193,31 @@ impl ErrorCode {
 pub struct WireError {
     pub code: ErrorCode,
     pub message: String,
+    /// For [`ErrorCode::EpochMismatch`]: the `(expected, actual)` epochs,
+    /// machine-readable so retry loops need not parse the message.
+    pub epochs: Option<(u64, u64)>,
 }
 
 impl WireError {
     pub fn new(code: ErrorCode, message: impl Into<String>) -> Self {
-        WireError { code, message: message.into() }
+        WireError { code, message: message.into(), epochs: None }
+    }
+
+    /// Map a wire error back into the typed submit error a local backend
+    /// would have returned — the inverse of `From<SubmitError>`, used by
+    /// the remote backend so errors are transport-invariant.
+    pub fn to_submit_error(&self) -> SubmitError {
+        match self.code {
+            ErrorCode::Busy => SubmitError::Busy,
+            ErrorCode::Closed => SubmitError::Closed,
+            ErrorCode::BadQuery => SubmitError::BadQuery(self.message.clone()),
+            ErrorCode::WriteFailed => SubmitError::WriteFailed(self.message.clone()),
+            ErrorCode::EpochMismatch => {
+                let (expected, actual) = self.epochs.unwrap_or((0, 0));
+                SubmitError::EpochMismatch { expected, actual }
+            }
+            _ => SubmitError::Io(self.to_string()),
+        }
     }
 }
 
@@ -181,8 +236,14 @@ impl From<SubmitError> for WireError {
             SubmitError::Closed => ErrorCode::Closed,
             SubmitError::BadQuery(_) => ErrorCode::BadQuery,
             SubmitError::WriteFailed(_) => ErrorCode::WriteFailed,
+            SubmitError::EpochMismatch { .. } => ErrorCode::EpochMismatch,
+            SubmitError::Io(_) => ErrorCode::Internal,
         };
-        WireError { code, message: e.to_string() }
+        let epochs = match &e {
+            SubmitError::EpochMismatch { expected, actual } => Some((*expected, *actual)),
+            _ => None,
+        };
+        WireError { code, message: e.to_string(), epochs }
     }
 }
 
@@ -238,22 +299,44 @@ pub fn is_clean_eof(e: &FrameReadError) -> bool {
 }
 
 /// Write one frame: header + payload. Fails (without emitting a lying
-/// header) when the payload exceeds the u32 length field.
+/// header) when the payload exceeds the u32 length field. Frames carry the
+/// current [`VERSION`]; a server answering an old client uses
+/// [`write_frame_v`] to stamp the negotiated version instead.
 pub fn write_frame<W: Write>(w: &mut W, op: Op, payload: &[u8]) -> io::Result<()> {
-    let len: u32 = payload.len().try_into().map_err(|_| {
-        io::Error::new(
-            io::ErrorKind::InvalidInput,
-            format!("frame payload {} bytes exceeds the u32 length field", payload.len()),
-        )
-    })?;
+    write_frame_v(w, VERSION, op, payload)
+}
+
+/// [`write_frame`] with an explicit version byte (the per-connection
+/// negotiated version: a server answers every frame in the version the
+/// request carried).
+pub fn write_frame_v<W: Write>(w: &mut W, version: u8, op: Op, payload: &[u8]) -> io::Result<()> {
     let mut header = [0u8; HEADER_LEN];
-    header[0..4].copy_from_slice(&MAGIC.to_le_bytes());
-    header[4] = VERSION;
-    header[5] = op as u8;
-    // flags (6..8) reserved as zero
-    header[8..12].copy_from_slice(&len.to_le_bytes());
+    encode_frame_header(&mut header, version, op, payload.len()).map_err(|msg| {
+        io::Error::new(io::ErrorKind::InvalidInput, msg)
+    })?;
     w.write_all(&header)?;
     w.write_all(payload)
+}
+
+/// Fill a 12-byte frame header in place (the allocation-free path the
+/// event loop uses to stage frames straight into a connection's output
+/// buffer). Fails when the payload exceeds the u32 length field.
+pub fn encode_frame_header(
+    header: &mut [u8; HEADER_LEN],
+    version: u8,
+    op: Op,
+    payload_len: usize,
+) -> Result<(), String> {
+    let len: u32 = payload_len.try_into().map_err(|_| {
+        format!("frame payload {payload_len} bytes exceeds the u32 length field")
+    })?;
+    header[0..4].copy_from_slice(&MAGIC.to_le_bytes());
+    header[4] = version;
+    header[5] = op as u8;
+    header[6] = 0; // flags reserved as zero
+    header[7] = 0;
+    header[8..12].copy_from_slice(&len.to_le_bytes());
+    Ok(())
 }
 
 /// Read one frame, enforcing `max_frame` on the declared payload length
@@ -324,6 +407,12 @@ impl<'a> Cursor<'a> {
 
     fn f64(&mut self) -> Result<f64, WireError> {
         Ok(f64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    /// Bytes not yet consumed (versioned messages use this to detect
+    /// optional trailing sections).
+    fn remaining(&self) -> usize {
+        self.buf.len() - self.pos
     }
 
     /// Fail unless the whole payload was consumed (trailing garbage would
@@ -424,16 +513,11 @@ pub fn decode_search_request(payload: &[u8]) -> Result<(usize, Vec<BitVec>), Wir
     Ok((k, queries))
 }
 
-/// One ranked hit as it travels the wire. `row` is the *global* row id:
-/// with sharding, the owning shard lives in the high bits (see
-/// [`super::shard`]), so the id round-trips through admin ops. Ids stay
-/// valid until a *delete on the same shard* shifts higher rows down — see
-/// the id-stability caveat in [`super::shard`]'s docs.
-#[derive(Debug, Clone, Copy, PartialEq)]
-pub struct WireHit {
-    pub row: u64,
-    pub score: f64,
-}
+// [`WireHit`] (= [`crate::coordinator::backend::Hit`], re-exported above)
+// carries the *global* row id: with sharding, the owning shard lives in the
+// high bits (see [`super::shard`]), so the id round-trips through admin
+// ops. Ids stay valid until a *delete on the same shard* shifts higher rows
+// down — see the id-stability caveat in [`super::shard`]'s docs.
 
 /// A decoded search response: one ranked hit list per query of the request
 /// batch, stamped with the serving epoch (for a sharded store: the
@@ -484,36 +568,41 @@ pub fn decode_search_response(payload: &[u8]) -> Result<WireSearchResponse, Wire
 // Admin
 // ---------------------------------------------------------------------------
 
-/// An admin request as decoded off the wire (rows are global ids).
-#[derive(Debug, Clone)]
-pub enum WireAdminOp {
-    Update { row: u64, word: BitVec },
-    Insert { word: BitVec },
-    Delete { row: u64 },
-}
-
-/// Encode an admin request, returning `(op, payload)`.
-pub fn encode_admin_request(op: &WireAdminOp) -> (Op, Vec<u8>) {
+/// Encode an admin request, returning `(op, payload)`. The optional
+/// `expected_epoch` is the v2 compare-and-swap pin: it rides as a trailing
+/// marker + u64, absent entirely for unconditional ops, so v1 frames decode
+/// unchanged (and a v1 server rejects a pinned frame as trailing garbage
+/// rather than silently dropping the pin).
+pub fn encode_admin_request(op: &WireAdminOp, expected_epoch: Option<u64>) -> (Op, Vec<u8>) {
     let mut out = Vec::new();
-    match op {
+    let code = match op {
         WireAdminOp::Update { row, word } => {
             put_u64(&mut out, *row);
             put_bitvec(&mut out, word);
-            (Op::AdminUpdate, out)
+            Op::AdminUpdate
         }
         WireAdminOp::Insert { word } => {
             put_bitvec(&mut out, word);
-            (Op::AdminInsert, out)
+            Op::AdminInsert
         }
         WireAdminOp::Delete { row } => {
             put_u64(&mut out, *row);
-            (Op::AdminDelete, out)
+            Op::AdminDelete
         }
+    };
+    if let Some(epoch) = expected_epoch {
+        out.push(1);
+        put_u64(&mut out, epoch);
     }
+    (code, out)
 }
 
-/// Decode an admin request payload for the given request opcode.
-pub fn decode_admin_request(op: Op, payload: &[u8]) -> Result<WireAdminOp, WireError> {
+/// Decode an admin request payload for the given request opcode, returning
+/// the op plus the optional compare-and-swap pin.
+pub fn decode_admin_request(
+    op: Op,
+    payload: &[u8],
+) -> Result<(WireAdminOp, Option<u64>), WireError> {
     let mut c = Cursor::new(payload);
     let decoded = match op {
         Op::AdminUpdate => {
@@ -525,60 +614,46 @@ pub fn decode_admin_request(op: Op, payload: &[u8]) -> Result<WireAdminOp, WireE
         Op::AdminDelete => WireAdminOp::Delete { row: c.u64()? },
         other => return Err(bad_frame(format!("{other:?} is not an admin op"))),
     };
+    let expected_epoch = if c.remaining() > 0 {
+        match c.u8()? {
+            1 => Some(c.u64()?),
+            other => return Err(bad_frame(format!("bad admin CAS marker {other}"))),
+        }
+    } else {
+        None
+    };
     c.finish()?;
-    Ok(decoded)
+    Ok((decoded, expected_epoch))
 }
 
-/// Write-verify cost summary as it travels the wire (the scalar fields of
-/// [`WriteReport`]; per-round latencies stay server-side).
-#[derive(Debug, Clone, Copy, PartialEq)]
-pub struct WireWriteReport {
-    pub cells: u64,
-    pub pulses: u64,
-    pub failures: u64,
-    pub energy_j: f64,
-    pub latency_s: f64,
-}
-
-/// A decoded admin response.
-#[derive(Debug, Clone, PartialEq)]
-pub struct WireAdminResponse {
-    /// Global row the op affected (for Insert: the new row's global id).
-    pub row: u64,
-    /// Aggregate store epoch after the commit.
-    pub epoch: u64,
-    /// Total stored rows (across all shards) after the commit.
-    pub rows: u64,
-    /// Write-verify cost (None for Delete, which spends no pulses).
-    pub write: Option<WireWriteReport>,
-}
-
-/// Encode an admin response frame payload.
-pub fn encode_admin_response(
-    row: u64,
-    epoch: u64,
-    rows: u64,
-    write: Option<&WriteReport>,
-) -> Vec<u8> {
-    let mut out = Vec::with_capacity(25 + write.map_or(0, |_| 40));
-    put_u64(&mut out, row);
-    put_u64(&mut out, epoch);
-    put_u64(&mut out, rows);
-    match write {
+/// Encode an admin response frame payload in the connection's negotiated
+/// `version`: v1 peers get the legacy layout (no owning-shard epoch —
+/// their decoder rejects trailing bytes), v2 appends `shard_epoch`.
+pub fn encode_admin_response(resp: &WireAdminResponse, version: u8) -> Vec<u8> {
+    let mut out = Vec::with_capacity(33 + resp.write.map_or(0, |_| 40));
+    put_u64(&mut out, resp.row);
+    put_u64(&mut out, resp.epoch);
+    put_u64(&mut out, resp.rows);
+    match &resp.write {
         None => out.push(0),
         Some(r) => {
             out.push(1);
-            put_u64(&mut out, r.cells as u64);
-            put_u64(&mut out, r.pulses as u64);
-            put_u64(&mut out, r.failures as u64);
-            put_f64(&mut out, r.energy);
-            put_f64(&mut out, r.latency);
+            put_u64(&mut out, r.cells);
+            put_u64(&mut out, r.pulses);
+            put_u64(&mut out, r.failures);
+            put_f64(&mut out, r.energy_j);
+            put_f64(&mut out, r.latency_s);
         }
+    }
+    if version >= 2 {
+        put_u64(&mut out, resp.shard_epoch);
     }
     out
 }
 
-/// Decode an admin response frame payload.
+/// Decode an admin response frame payload (either version: a legacy frame
+/// without the owning-shard epoch falls back to `shard_epoch = epoch`,
+/// exact for unsharded servers and conservative otherwise).
 pub fn decode_admin_response(payload: &[u8]) -> Result<WireAdminResponse, WireError> {
     let mut c = Cursor::new(payload);
     let row = c.u64()?;
@@ -595,18 +670,62 @@ pub fn decode_admin_response(payload: &[u8]) -> Result<WireAdminResponse, WireEr
         }),
         other => return Err(bad_frame(format!("bad write-report marker {other}"))),
     };
+    let shard_epoch = if c.remaining() > 0 { c.u64()? } else { epoch };
     c.finish()?;
-    Ok(WireAdminResponse { row, epoch, rows, write })
+    Ok(WireAdminResponse { row, epoch, shard_epoch, rows, write })
 }
 
 // ---------------------------------------------------------------------------
 // Metrics / health
 // ---------------------------------------------------------------------------
 
+/// One latency histogram as it travels the wire: the summary accumulator's
+/// raw parts plus the per-bucket counts of the shared layout
+/// ([`latency_histogram`]).
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct WireHistogram {
+    pub n: u64,
+    pub mean: f64,
+    pub m2: f64,
+    pub min: f64,
+    pub max: f64,
+    pub counts: Vec<u64>,
+}
+
+impl WireHistogram {
+    /// Project a live histogram into its wire form.
+    pub fn from_hist(h: &Histogram) -> WireHistogram {
+        let (n, mean, m2, min, max) = h.stats().raw();
+        WireHistogram { n, mean, m2, min, max, counts: h.counts().to_vec() }
+    }
+
+    /// Rebuild the live histogram; `None` when the peer's bucket count
+    /// does not match this build's shared layout.
+    pub fn to_hist(&self) -> Option<Histogram> {
+        Histogram::from_parts(
+            LATENCY_HIST_LO,
+            LATENCY_HIST_HI,
+            LATENCY_HIST_BUCKETS,
+            &self.counts,
+            RunningStats::from_raw(self.n, self.mean, self.m2, self.min, self.max),
+        )
+    }
+}
+
+/// The three main latency histograms of a metrics response (v2) — what
+/// makes the routing tier's cross-shard percentiles *exact* over the wire.
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct WireLatencyHists {
+    pub queue: WireHistogram,
+    pub exec: WireHistogram,
+    pub total: WireHistogram,
+}
+
 /// The metrics summary a server reports over the wire: the scalar fields of
-/// [`MetricsSnapshot`], aggregated across shards (per-k and per-admin-kind
-/// lanes stay server-side — `report()` them there).
-#[derive(Debug, Clone, Copy, PartialEq, Default)]
+/// [`MetricsSnapshot`], aggregated across shards, plus (v2) the full
+/// queue/exec/total histograms (per-k and per-admin-kind lanes stay
+/// server-side — `report()` them there).
+#[derive(Debug, Clone, PartialEq, Default)]
 pub struct WireMetrics {
     pub submitted: u64,
     pub completed: u64,
@@ -625,6 +744,8 @@ pub struct WireMetrics {
     pub write_pulses: u64,
     pub write_energy_j: f64,
     pub write_latency_s: f64,
+    /// Full latency histograms (v2 peers only; `None` off a v1 frame).
+    pub hists: Option<WireLatencyHists>,
 }
 
 impl WireMetrics {
@@ -647,12 +768,84 @@ impl WireMetrics {
             write_pulses: s.write.pulses,
             write_energy_j: s.write.energy_j,
             write_latency_s: s.write.latency_s,
+            hists: s.lat.as_ref().map(|lat| WireLatencyHists {
+                queue: WireHistogram::from_hist(&lat.queue_us),
+                exec: WireHistogram::from_hist(&lat.exec_us),
+                total: WireHistogram::from_hist(&lat.total_us),
+            }),
+        }
+    }
+
+    /// Rebuild a [`MetricsSnapshot`] a router can aggregate: scalar fields
+    /// copied, histograms reconstructed when the peer shipped them (exact
+    /// percentile merging), per-k/admin lanes empty (they stay
+    /// server-side).
+    pub fn to_snapshot(&self) -> MetricsSnapshot {
+        let lat = self.hists.as_ref().and_then(|h| {
+            Some(LatencyHists {
+                queue_us: h.queue.to_hist()?,
+                exec_us: h.exec.to_hist()?,
+                total_us: h.total.to_hist()?,
+            })
+        });
+        MetricsSnapshot {
+            submitted: self.submitted,
+            completed: self.completed,
+            rejected_busy: self.rejected_busy,
+            batches: self.batches,
+            mean_batch_size: self.mean_batch_size,
+            queue_p50_us: self.queue_p50_us,
+            queue_p99_us: self.queue_p99_us,
+            exec_p50_us: self.exec_p50_us,
+            exec_p99_us: self.exec_p99_us,
+            total_p50_us: self.total_p50_us,
+            total_p99_us: self.total_p99_us,
+            total_mean_us: self.total_mean_us,
+            per_k: Vec::new(),
+            admin: Vec::new(),
+            admin_rejected: self.admin_rejected,
+            write: WriteCostSnapshot {
+                cells: self.write_cells,
+                pulses: self.write_pulses,
+                energy_j: self.write_energy_j,
+                latency_s: self.write_latency_s,
+            },
+            lat,
         }
     }
 }
 
-/// Encode a metrics response frame payload.
-pub fn encode_metrics_response(m: &WireMetrics) -> Vec<u8> {
+fn put_histogram(out: &mut Vec<u8>, h: &WireHistogram) {
+    put_u64(out, h.n);
+    put_f64(out, h.mean);
+    put_f64(out, h.m2);
+    put_f64(out, h.min);
+    put_f64(out, h.max);
+    put_u32(out, h.counts.len() as u32);
+    for &c in &h.counts {
+        put_u64(out, c);
+    }
+}
+
+fn get_histogram(c: &mut Cursor<'_>) -> Result<WireHistogram, WireError> {
+    let n = c.u64()?;
+    let mean = c.f64()?;
+    let m2 = c.f64()?;
+    let min = c.f64()?;
+    let max = c.f64()?;
+    let buckets = c.u32()? as usize;
+    // A lying bucket count cannot force a huge allocation: every count
+    // costs 8 payload bytes, so cap the reservation by what is present.
+    let mut counts = Vec::with_capacity(buckets.min(c.remaining() / 8 + 1));
+    for _ in 0..buckets {
+        counts.push(c.u64()?);
+    }
+    Ok(WireHistogram { n, mean, m2, min, max, counts })
+}
+
+/// Encode a metrics response frame payload in the connection's negotiated
+/// `version` (v1 peers get the scalar-only legacy layout).
+pub fn encode_metrics_response(m: &WireMetrics, version: u8) -> Vec<u8> {
     let mut out = Vec::with_capacity(17 * 8);
     put_u64(&mut out, m.submitted);
     put_u64(&mut out, m.completed);
@@ -671,13 +864,24 @@ pub fn encode_metrics_response(m: &WireMetrics) -> Vec<u8> {
     put_u64(&mut out, m.write_pulses);
     put_f64(&mut out, m.write_energy_j);
     put_f64(&mut out, m.write_latency_s);
+    if version >= 2 {
+        match &m.hists {
+            Some(h) => {
+                out.push(1);
+                put_histogram(&mut out, &h.queue);
+                put_histogram(&mut out, &h.exec);
+                put_histogram(&mut out, &h.total);
+            }
+            None => out.push(0),
+        }
+    }
     out
 }
 
-/// Decode a metrics response frame payload.
+/// Decode a metrics response frame payload (either version).
 pub fn decode_metrics_response(payload: &[u8]) -> Result<WireMetrics, WireError> {
     let mut c = Cursor::new(payload);
-    let m = WireMetrics {
+    let mut m = WireMetrics {
         submitted: c.u64()?,
         completed: c.u64()?,
         rejected_busy: c.u64()?,
@@ -695,45 +899,71 @@ pub fn decode_metrics_response(payload: &[u8]) -> Result<WireMetrics, WireError>
         write_pulses: c.u64()?,
         write_energy_j: c.f64()?,
         write_latency_s: c.f64()?,
+        hists: None,
     };
+    if c.remaining() > 0 {
+        m.hists = match c.u8()? {
+            0 => None,
+            1 => Some(WireLatencyHists {
+                queue: get_histogram(&mut c)?,
+                exec: get_histogram(&mut c)?,
+                total: get_histogram(&mut c)?,
+            }),
+            other => return Err(bad_frame(format!("bad metrics histogram marker {other}"))),
+        };
+    }
     c.finish()?;
     Ok(m)
 }
 
-/// A decoded health response: the served store's identity.
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
-pub struct WireHealth {
-    pub rows: u64,
-    pub dims: u64,
-    pub epoch: u64,
-    pub shards: u32,
-}
-
-/// Encode a health response frame payload.
-pub fn encode_health_response(h: &WireHealth) -> Vec<u8> {
-    let mut out = Vec::with_capacity(28);
+/// Encode a health response frame payload in the connection's negotiated
+/// `version`: v2 appends the batching hints (`max_batch`/`max_k`) clients
+/// self-tune from; v1 peers get the legacy 28-byte identity.
+pub fn encode_health_response(h: &WireHealth, version: u8) -> Vec<u8> {
+    let mut out = Vec::with_capacity(36);
     put_u64(&mut out, h.rows);
     put_u64(&mut out, h.dims);
     put_u64(&mut out, h.epoch);
     put_u32(&mut out, h.shards);
+    if version >= 2 {
+        put_u32(&mut out, h.max_batch);
+        put_u32(&mut out, h.max_k);
+    }
     out
 }
 
-/// Decode a health response frame payload.
+/// Decode a health response frame payload (either version: a legacy frame
+/// without the hints decodes with `max_batch = max_k = 0`, i.e. unknown).
 pub fn decode_health_response(payload: &[u8]) -> Result<WireHealth, WireError> {
     let mut c = Cursor::new(payload);
-    let h = WireHealth { rows: c.u64()?, dims: c.u64()?, epoch: c.u64()?, shards: c.u32()? };
+    let mut h = WireHealth {
+        rows: c.u64()?,
+        dims: c.u64()?,
+        epoch: c.u64()?,
+        shards: c.u32()?,
+        max_batch: 0,
+        max_k: 0,
+    };
+    if c.remaining() > 0 {
+        h.max_batch = c.u32()?;
+        h.max_k = c.u32()?;
+    }
     c.finish()?;
     Ok(h)
 }
 
-/// Encode an error response frame payload.
+/// Encode an error response frame payload. An epoch-mismatch error carries
+/// its `(expected, actual)` epochs after the message, machine-readable.
 pub fn encode_error_response(e: &WireError) -> Vec<u8> {
     let msg = e.message.as_bytes();
-    let mut out = Vec::with_capacity(5 + msg.len());
+    let mut out = Vec::with_capacity(5 + msg.len() + 16);
     out.push(e.code as u8);
     put_u32(&mut out, msg.len() as u32);
     out.extend_from_slice(msg);
+    if let Some((expected, actual)) = e.epochs {
+        put_u64(&mut out, expected);
+        put_u64(&mut out, actual);
+    }
     out
 }
 
@@ -744,8 +974,9 @@ pub fn decode_error_response(payload: &[u8]) -> Result<WireError, WireError> {
         ErrorCode::from_u8(c.u8()?).ok_or_else(|| bad_frame("unknown error code"))?;
     let len = c.u32()? as usize;
     let msg = String::from_utf8_lossy(c.take(len)?).into_owned();
+    let epochs = if c.remaining() > 0 { Some((c.u64()?, c.u64()?)) } else { None };
     c.finish()?;
-    Ok(WireError { code, message: msg })
+    Ok(WireError { code, message: msg, epochs })
 }
 
 #[cfg(test)]
@@ -854,48 +1085,62 @@ mod tests {
     fn admin_roundtrips() {
         let mut r = rng(3);
         let word = BitVec::random(96, 0.4, &mut r);
-        for op in [
-            WireAdminOp::Update { row: (1u64 << 48) | 5, word: word.clone() },
-            WireAdminOp::Insert { word: word.clone() },
-            WireAdminOp::Delete { row: 11 },
-        ] {
-            let (code, payload) = encode_admin_request(&op);
-            let back = decode_admin_request(code, &payload).unwrap();
-            match (&op, &back) {
-                (
-                    WireAdminOp::Update { row: a, word: wa },
-                    WireAdminOp::Update { row: b, word: wb },
-                ) => {
-                    assert_eq!(a, b);
-                    assert_eq!(wa, wb);
+        for expected_epoch in [None, Some(7u64)] {
+            for op in [
+                WireAdminOp::Update { row: (1u64 << 48) | 5, word: word.clone() },
+                WireAdminOp::Insert { word: word.clone() },
+                WireAdminOp::Delete { row: 11 },
+            ] {
+                let (code, payload) = encode_admin_request(&op, expected_epoch);
+                let (back, pin) = decode_admin_request(code, &payload).unwrap();
+                assert_eq!(pin, expected_epoch, "CAS pin survives the roundtrip");
+                match (&op, &back) {
+                    (
+                        WireAdminOp::Update { row: a, word: wa },
+                        WireAdminOp::Update { row: b, word: wb },
+                    ) => {
+                        assert_eq!(a, b);
+                        assert_eq!(wa, wb);
+                    }
+                    (WireAdminOp::Insert { word: wa }, WireAdminOp::Insert { word: wb }) => {
+                        assert_eq!(wa, wb)
+                    }
+                    (WireAdminOp::Delete { row: a }, WireAdminOp::Delete { row: b }) => {
+                        assert_eq!(a, b)
+                    }
+                    other => panic!("op kind changed in roundtrip: {other:?}"),
                 }
-                (WireAdminOp::Insert { word: wa }, WireAdminOp::Insert { word: wb }) => {
-                    assert_eq!(wa, wb)
-                }
-                (WireAdminOp::Delete { row: a }, WireAdminOp::Delete { row: b }) => {
-                    assert_eq!(a, b)
-                }
-                other => panic!("op kind changed in roundtrip: {other:?}"),
             }
         }
 
-        let report = WriteReport {
-            cells: 96,
-            pulses: 130,
-            failures: 0,
-            energy: 1.5e-13,
-            latency: 4e-6,
-            round_latencies: vec![1e-6],
+        let resp = WireAdminResponse {
+            row: 5,
+            epoch: 9,
+            shard_epoch: 4,
+            rows: 100,
+            write: Some(WireWriteReport {
+                cells: 96,
+                pulses: 130,
+                failures: 0,
+                energy_j: 1.5e-13,
+                latency_s: 4e-6,
+            }),
         };
-        let payload = encode_admin_response(5, 9, 100, Some(&report));
+        let payload = encode_admin_response(&resp, VERSION);
         let back = decode_admin_response(&payload).unwrap();
-        assert_eq!((back.row, back.epoch, back.rows), (5, 9, 100));
-        let w = back.write.unwrap();
-        assert_eq!((w.cells, w.pulses, w.failures), (96, 130, 0));
-        assert_eq!(w.energy_j, 1.5e-13);
+        assert_eq!(back, resp);
 
-        let payload = encode_admin_response(5, 9, 100, None);
-        assert!(decode_admin_response(&payload).unwrap().write.is_none());
+        // A v1-framed response omits the shard epoch; the decoder falls
+        // back to the aggregate.
+        let payload = encode_admin_response(&resp, 1);
+        let back = decode_admin_response(&payload).unwrap();
+        assert_eq!(back.shard_epoch, resp.epoch);
+
+        let none = WireAdminResponse { write: None, ..resp };
+        assert!(decode_admin_response(&encode_admin_response(&none, VERSION))
+            .unwrap()
+            .write
+            .is_none());
     }
 
     #[test]
@@ -910,15 +1155,65 @@ mod tests {
             total_p99_us: 80.0,
             ..Default::default()
         };
-        let back = decode_metrics_response(&encode_metrics_response(&m)).unwrap();
+        let back = decode_metrics_response(&encode_metrics_response(&m, VERSION)).unwrap();
         assert_eq!(back, m);
 
-        let h = WireHealth { rows: 100, dims: 1024, epoch: 3, shards: 2 };
-        assert_eq!(decode_health_response(&encode_health_response(&h)).unwrap(), h);
+        let h =
+            WireHealth { rows: 100, dims: 1024, epoch: 3, shards: 2, max_batch: 64, max_k: 16 };
+        assert_eq!(decode_health_response(&encode_health_response(&h, VERSION)).unwrap(), h);
+        // A v1-framed health omits the hints; they decode as 0 = unknown.
+        let legacy = decode_health_response(&encode_health_response(&h, 1)).unwrap();
+        assert_eq!((legacy.rows, legacy.dims, legacy.epoch, legacy.shards), (100, 1024, 3, 2));
+        assert_eq!((legacy.max_batch, legacy.max_k), (0, 0));
 
         let e = WireError::new(ErrorCode::Busy, "queue full (backpressure)");
         let back = decode_error_response(&encode_error_response(&e)).unwrap();
         assert_eq!(back, e);
+
+        // Epoch-mismatch errors carry machine-readable epochs.
+        let e = WireError::from(SubmitError::EpochMismatch { expected: 4, actual: 9 });
+        let back = decode_error_response(&encode_error_response(&e)).unwrap();
+        assert_eq!(back.epochs, Some((4, 9)));
+        assert_eq!(
+            back.to_submit_error(),
+            SubmitError::EpochMismatch { expected: 4, actual: 9 }
+        );
+    }
+
+    /// The v2 metrics frame ships the full latency histograms and they
+    /// reconstruct exactly; a v1 frame ships none.
+    #[test]
+    fn metrics_histograms_roundtrip_exactly() {
+        let mut total = latency_histogram();
+        let mut queue = latency_histogram();
+        let exec = latency_histogram();
+        for x in [1.0, 12.0, 140.0, 9000.0] {
+            total.record(x);
+            queue.record(x / 2.0);
+        }
+        let m = WireMetrics {
+            completed: 4,
+            total_p50_us: total.quantile(0.5),
+            hists: Some(WireLatencyHists {
+                queue: WireHistogram::from_hist(&queue),
+                exec: WireHistogram::from_hist(&exec),
+                total: WireHistogram::from_hist(&total),
+            }),
+            ..Default::default()
+        };
+        let back = decode_metrics_response(&encode_metrics_response(&m, VERSION)).unwrap();
+        assert_eq!(back, m);
+        let snap = back.to_snapshot();
+        let lat = snap.lat.expect("histograms reconstruct");
+        assert_eq!(lat.total_us.counts(), total.counts());
+        assert_eq!(lat.total_us.quantile(0.99), total.quantile(0.99));
+        assert_eq!(lat.queue_us.mean(), queue.mean());
+
+        // v1 framing drops the section entirely.
+        let legacy = decode_metrics_response(&encode_metrics_response(&m, 1)).unwrap();
+        assert!(legacy.hists.is_none());
+        assert!(legacy.to_snapshot().lat.is_none());
+        assert_eq!(legacy.completed, 4);
     }
 
     #[test]
@@ -933,6 +1228,24 @@ mod tests {
             WireError::from(SubmitError::WriteFailed("stuck".into())).code,
             ErrorCode::WriteFailed
         );
+        assert_eq!(
+            WireError::from(SubmitError::EpochMismatch { expected: 1, actual: 2 }).code,
+            ErrorCode::EpochMismatch
+        );
+        assert_eq!(
+            WireError::from(SubmitError::Io("reset".into())).code,
+            ErrorCode::Internal
+        );
+        // And back: the typed round trip the remote backend relies on.
+        for e in [
+            SubmitError::Busy,
+            SubmitError::Closed,
+            SubmitError::BadQuery("dims".into()),
+            SubmitError::WriteFailed("stuck".into()),
+            SubmitError::EpochMismatch { expected: 3, actual: 5 },
+        ] {
+            assert_eq!(WireError::from(e.clone()).to_submit_error(), e);
+        }
     }
 
     #[test]
@@ -953,9 +1266,22 @@ mod tests {
             assert_eq!(Op::from_u8(op as u8), Some(op));
         }
         assert_eq!(Op::from_u8(0x42), None);
-        for code in 1..=9u8 {
+        for code in 1..=10u8 {
             assert_eq!(ErrorCode::from_u8(code).unwrap() as u8, code);
         }
         assert_eq!(ErrorCode::from_u8(200), None);
+    }
+
+    #[test]
+    fn version_negotiation_bounds() {
+        assert!(version_supported(MIN_VERSION));
+        assert!(version_supported(VERSION));
+        assert!(!version_supported(0));
+        assert!(!version_supported(VERSION + 1));
+        // write_frame_v stamps the requested version.
+        let mut buf = Vec::new();
+        write_frame_v(&mut buf, 1, Op::Health, &[]).unwrap();
+        let (h, _) = read_frame(&mut std::io::Cursor::new(buf), 1024).unwrap();
+        assert_eq!(h.version, 1);
     }
 }

@@ -1,0 +1,462 @@
+//! [`RemoteBackend`]: the wire protocol as a completion-based
+//! [`Backend`] — a nonblocking client connection that makes a remote
+//! `cosimed` server indistinguishable from an in-process serving stack.
+//!
+//! One `RemoteBackend` wraps one TCP connection in nonblocking mode. Every
+//! request is assigned a *sequence slot*; because the protocol answers a
+//! connection's frames strictly in request order, inbound frames pair with
+//! the oldest in-flight slot — no correlation ids on the wire. Search
+//! submissions return a [`Ticket`] whose poll *pumps* the connection
+//! (flushes pending output, drains readable input, decodes complete
+//! frames) and completes when its slot's frame has arrived. Control-plane
+//! calls (admin/health/metrics) ride the same sequenced connection and
+//! block by pumping until their slot fills.
+//!
+//! Because pumping happens inside `poll`, a single-threaded caller — the
+//! event-loop server's routing tier — can drive many in-flight searches
+//! over one socket without ever blocking on it. A transport failure
+//! (reset, EOF mid-stream, malformed frame) poisons the connection: every
+//! in-flight and future request fails with [`SubmitError::Io`] (or
+//! `Closed`), and the caller re-connects.
+
+use std::collections::{HashMap, HashSet, VecDeque};
+use std::io::{Read, Write};
+use std::net::{TcpStream, ToSocketAddrs};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+use anyhow::{Context, Result};
+
+use crate::coordinator::backend::{
+    AdminCmd, AdminOutcome, Backend, BackendHealth, BatchResult, Completion, Ticket,
+};
+use crate::coordinator::{MetricsSnapshot, SubmitError};
+use crate::util::BitVec;
+
+use super::protocol::{self, FrameHeader, Op, HEADER_LEN, MAGIC, VERSION};
+
+/// Cap on response frames accepted from the server — matches the blocking
+/// client's reasoning: responses legitimately outgrow requests
+/// (`batch × k × 16` bytes), so this sits far above `[server] max_frame`.
+pub const DEFAULT_MAX_FRAME: usize = 256 << 20;
+
+/// What a sequence slot is waiting for.
+struct Inflight {
+    seq: u64,
+    want: Op,
+}
+
+/// A frame outcome parked for its slot: the decoded payload, or the typed
+/// error the server answered instead.
+type SlotResult = Result<Vec<u8>, SubmitError>;
+
+struct RemoteConn {
+    stream: TcpStream,
+    /// Outbound bytes not yet accepted by the socket.
+    outbuf: VecDeque<u8>,
+    /// Inbound bytes not yet forming a complete frame.
+    inbuf: Vec<u8>,
+    /// Oldest-first in-flight slots; inbound frames pair with the front.
+    inflight: VecDeque<Inflight>,
+    /// Completed slots awaiting pickup.
+    completed: HashMap<u64, SlotResult>,
+    /// Slots whose ticket was dropped unpolled (e.g. the serving frontend
+    /// lost its client mid-search): their frames must still be consumed to
+    /// keep the order correlation, but the outcome is discarded instead of
+    /// parking in `completed` forever.
+    abandoned: HashSet<u64>,
+    next_seq: u64,
+    max_frame: usize,
+    /// Sticky transport failure: set once, fails everything after.
+    dead: Option<SubmitError>,
+}
+
+impl RemoteConn {
+    fn poison(&mut self, e: SubmitError) -> SubmitError {
+        if self.dead.is_none() {
+            self.dead = Some(e.clone());
+            // Every in-flight slot fails with the same transport error
+            // (abandoned slots have no one waiting; drop them instead).
+            while let Some(slot) = self.inflight.pop_front() {
+                if !self.abandoned.remove(&slot.seq) {
+                    self.completed.insert(slot.seq, Err(e.clone()));
+                }
+            }
+        }
+        self.dead.clone().unwrap_or(e)
+    }
+
+    /// Mark slot `seq` as no longer awaited: discard its outcome if it
+    /// already arrived, or flag it so [`RemoteConn::dispatch`]/`poison`
+    /// discard it on arrival — without this, a ticket dropped unpolled
+    /// would leak its response in `completed` forever.
+    fn abandon(&mut self, seq: u64) {
+        if self.completed.remove(&seq).is_none()
+            && self.inflight.iter().any(|s| s.seq == seq)
+        {
+            self.abandoned.insert(seq);
+        }
+    }
+
+    /// Queue one request frame and return its sequence slot.
+    fn enqueue(&mut self, op: Op, want: Op, payload: &[u8]) -> Result<u64, SubmitError> {
+        if let Some(e) = &self.dead {
+            return Err(e.clone());
+        }
+        let mut header = [0u8; HEADER_LEN];
+        protocol::encode_frame_header(&mut header, VERSION, op, payload.len())
+            .map_err(SubmitError::Io)?;
+        self.outbuf.extend(header.iter().copied());
+        self.outbuf.extend(payload.iter().copied());
+        let seq = self.next_seq;
+        self.next_seq += 1;
+        self.inflight.push_back(Inflight { seq, want });
+        // Opportunistic flush so the request hits the wire without waiting
+        // for the next poll.
+        self.pump();
+        Ok(seq)
+    }
+
+    /// Drive the connection as far as it will go without blocking: flush
+    /// pending output, drain readable input, decode complete frames into
+    /// their slots.
+    fn pump(&mut self) {
+        if self.dead.is_some() {
+            return;
+        }
+        // Writes first: requests must reach the server for responses to
+        // exist.
+        while !self.outbuf.is_empty() {
+            let (front, _) = self.outbuf.as_slices();
+            match self.stream.write(front) {
+                Ok(0) => {
+                    self.poison(SubmitError::Io("connection closed while writing".into()));
+                    return;
+                }
+                Ok(n) => {
+                    self.outbuf.drain(..n);
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => break,
+                Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+                Err(e) => {
+                    self.poison(SubmitError::Io(format!("write failed: {e}")));
+                    return;
+                }
+            }
+        }
+        // Reads: pull whatever is available, then carve complete frames.
+        let mut chunk = [0u8; 64 * 1024];
+        loop {
+            match self.stream.read(&mut chunk) {
+                Ok(0) => {
+                    let e = if self.inflight.is_empty() {
+                        SubmitError::Closed
+                    } else {
+                        SubmitError::Io("connection closed mid-response".into())
+                    };
+                    self.poison(e);
+                    return;
+                }
+                Ok(n) => self.inbuf.extend_from_slice(&chunk[..n]),
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => break,
+                Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+                Err(e) => {
+                    self.poison(SubmitError::Io(format!("read failed: {e}")));
+                    return;
+                }
+            }
+        }
+        while let Some((header, body_end)) = self.peek_frame() {
+            let payload = self.inbuf[HEADER_LEN..body_end].to_vec();
+            self.inbuf.drain(..body_end);
+            self.dispatch(header, payload);
+            if self.dead.is_some() {
+                return;
+            }
+        }
+    }
+
+    /// If `inbuf` holds one complete frame, return its validated header and
+    /// end offset. Poisons the connection on an unsalvageable stream (bad
+    /// magic, oversized frame).
+    fn peek_frame(&mut self) -> Option<(FrameHeader, usize)> {
+        if self.inbuf.len() < HEADER_LEN {
+            return None;
+        }
+        let magic = u32::from_le_bytes(self.inbuf[0..4].try_into().unwrap());
+        if magic != MAGIC {
+            self.poison(SubmitError::Io("bad frame magic from server".into()));
+            return None;
+        }
+        let len = u32::from_le_bytes(self.inbuf[8..12].try_into().unwrap()) as usize;
+        if len > self.max_frame {
+            self.poison(SubmitError::Io(format!(
+                "server frame of {len} bytes exceeds client cap {}",
+                self.max_frame
+            )));
+            return None;
+        }
+        if self.inbuf.len() < HEADER_LEN + len {
+            return None;
+        }
+        let header = FrameHeader {
+            version: self.inbuf[4],
+            op: self.inbuf[5],
+            flags: u16::from_le_bytes(self.inbuf[6..8].try_into().unwrap()),
+            len: len as u32,
+        };
+        Some((header, HEADER_LEN + len))
+    }
+
+    /// Pair one decoded frame with the oldest in-flight slot.
+    fn dispatch(&mut self, header: FrameHeader, payload: Vec<u8>) {
+        let Some(slot) = self.inflight.pop_front() else {
+            self.poison(SubmitError::Io("server sent an unsolicited frame".into()));
+            return;
+        };
+        if !protocol::version_supported(header.version) || header.flags != 0 {
+            self.poison(SubmitError::Io(format!(
+                "server answered with unsupported framing (version {}, flags {:#06x})",
+                header.version, header.flags
+            )));
+            return;
+        }
+        let outcome: SlotResult = match Op::from_u8(header.op) {
+            Some(Op::Error) => match protocol::decode_error_response(&payload) {
+                Ok(e) => Err(e.to_submit_error()),
+                Err(e) => Err(SubmitError::Io(format!("undecodable error frame: {e}"))),
+            },
+            Some(op) if op == slot.want => Ok(payload),
+            Some(op) => {
+                self.poison(SubmitError::Io(format!(
+                    "expected {:?} response, got {op:?}",
+                    slot.want
+                )));
+                return;
+            }
+            None => {
+                self.poison(SubmitError::Io(format!(
+                    "unknown response opcode {:#04x}",
+                    header.op
+                )));
+                return;
+            }
+        };
+        if self.abandoned.remove(&slot.seq) {
+            return; // nobody is waiting; the frame only kept us in sync
+        }
+        self.completed.insert(slot.seq, outcome);
+    }
+
+    /// Nonblocking: take slot `seq`'s outcome if it has arrived.
+    fn check(&mut self, seq: u64) -> Option<SlotResult> {
+        if let Some(r) = self.completed.remove(&seq) {
+            return Some(r);
+        }
+        if let Some(e) = &self.dead {
+            return Some(Err(e.clone()));
+        }
+        None
+    }
+}
+
+/// A remote `cosimed` server as a completion-based [`Backend`] (module
+/// docs). Cheap to share behind the routing tier: submissions and polls
+/// synchronize on one internal connection lock.
+pub struct RemoteBackend {
+    conn: Arc<Mutex<RemoteConn>>,
+    dims: usize,
+    health0: BackendHealth,
+}
+
+impl RemoteBackend {
+    /// Connect and fetch the server's identity (one blocking health round
+    /// trip), then switch the socket to nonblocking mode for serving.
+    pub fn connect<A: ToSocketAddrs + std::fmt::Debug>(addr: A) -> Result<RemoteBackend> {
+        let mut stream =
+            TcpStream::connect(&addr).with_context(|| format!("connecting to {addr:?}"))?;
+        let _ = stream.set_nodelay(true);
+        // Blocking hello: learn dims before any search can be submitted.
+        protocol::write_frame(&mut stream, Op::Health, &[]).context("writing health frame")?;
+        let (header, payload) = protocol::read_frame(&mut stream, DEFAULT_MAX_FRAME)
+            .context("reading health response")?;
+        let health = match Op::from_u8(header.op) {
+            Some(Op::HealthOk) => protocol::decode_health_response(&payload)?,
+            Some(Op::Error) => {
+                let e = protocol::decode_error_response(&payload)?;
+                anyhow::bail!("server rejected the hello: {e}");
+            }
+            other => anyhow::bail!("unexpected hello response {other:?}"),
+        };
+        stream.set_nonblocking(true).context("switching to nonblocking mode")?;
+        Ok(RemoteBackend {
+            conn: Arc::new(Mutex::new(RemoteConn {
+                stream,
+                outbuf: VecDeque::new(),
+                inbuf: Vec::new(),
+                inflight: VecDeque::new(),
+                completed: HashMap::new(),
+                abandoned: HashSet::new(),
+                next_seq: 0,
+                max_frame: DEFAULT_MAX_FRAME,
+                dead: None,
+            })),
+            dims: health.dims as usize,
+            health0: health,
+        })
+    }
+
+    /// [`RemoteBackend::connect`] with bounded retries and linear backoff —
+    /// for racing a server that is still binding its socket.
+    pub fn connect_retry<A: ToSocketAddrs + std::fmt::Debug + Copy>(
+        addr: A,
+        attempts: usize,
+        backoff: Duration,
+    ) -> Result<RemoteBackend> {
+        let attempts = attempts.max(1);
+        let mut last = None;
+        for attempt in 0..attempts {
+            match RemoteBackend::connect(addr) {
+                Ok(b) => return Ok(b),
+                Err(e) => {
+                    last = Some(e);
+                    if attempt + 1 < attempts {
+                        std::thread::sleep(backoff * (attempt as u32 + 1));
+                    }
+                }
+            }
+        }
+        Err(last.unwrap())
+    }
+
+    /// The identity captured at connect time (rows/epoch may since have
+    /// moved; [`Backend::health`] re-queries live).
+    pub fn connect_health(&self) -> BackendHealth {
+        self.health0
+    }
+
+    /// Enqueue one frame and block (by pumping) until its slot fills.
+    fn round_trip(&self, op: Op, want: Op, payload: &[u8]) -> Result<Vec<u8>, SubmitError> {
+        let seq = self.conn.lock().unwrap().enqueue(op, want, payload)?;
+        loop {
+            {
+                let mut conn = self.conn.lock().unwrap();
+                conn.pump();
+                if let Some(outcome) = conn.check(seq) {
+                    return outcome;
+                }
+            }
+            std::thread::sleep(Duration::from_micros(50));
+        }
+    }
+}
+
+/// Completion of one in-flight remote search: pump the shared connection,
+/// look for this slot's frame.
+struct RemoteCompletion {
+    conn: Arc<Mutex<RemoteConn>>,
+    seq: u64,
+    queries: usize,
+    /// The slot's outcome has been picked up; nothing left to abandon.
+    spent: bool,
+}
+
+impl Drop for RemoteCompletion {
+    fn drop(&mut self) {
+        // A ticket dropped before completing (the frontend lost its
+        // client) must deregister its slot, or the arriving response
+        // would park in the connection's completed map forever.
+        if !self.spent {
+            if let Ok(mut conn) = self.conn.lock() {
+                conn.abandon(self.seq);
+            }
+        }
+    }
+}
+
+impl Completion for RemoteCompletion {
+    fn poll(&mut self) -> Result<Option<BatchResult>, SubmitError> {
+        let outcome = {
+            let mut conn = self.conn.lock().unwrap();
+            conn.pump();
+            conn.check(self.seq)
+        };
+        let payload = match outcome {
+            None => return Ok(None),
+            Some(Err(e)) => {
+                self.spent = true;
+                return Err(e);
+            }
+            Some(Ok(payload)) => {
+                self.spent = true;
+                payload
+            }
+        };
+        let resp = protocol::decode_search_response(&payload)
+            .map_err(|e| SubmitError::Io(format!("undecodable search response: {e}")))?;
+        if resp.results.len() != self.queries {
+            return Err(SubmitError::Io(format!(
+                "server answered {} result lists for {} queries",
+                resp.results.len(),
+                self.queries
+            )));
+        }
+        Ok(Some(BatchResult { epoch: resp.epoch, results: resp.results }))
+    }
+}
+
+impl Backend for RemoteBackend {
+    fn dims(&self) -> usize {
+        self.dims
+    }
+
+    fn submit_search(&self, queries: &[BitVec], k: usize) -> Result<Ticket, SubmitError> {
+        for q in queries {
+            if q.len() != self.dims {
+                return Err(SubmitError::BadQuery(format!(
+                    "query has {} bits, server stores {}",
+                    q.len(),
+                    self.dims
+                )));
+            }
+        }
+        let payload = protocol::encode_search_request(queries, k);
+        let seq = self.conn.lock().unwrap().enqueue(Op::Search, Op::SearchOk, &payload)?;
+        Ok(Ticket::new(Box::new(RemoteCompletion {
+            conn: self.conn.clone(),
+            seq,
+            queries: queries.len(),
+            spent: false,
+        })))
+    }
+
+    fn admin(
+        &self,
+        cmd: AdminCmd,
+        expected_epoch: Option<u64>,
+    ) -> Result<AdminOutcome, SubmitError> {
+        let (op, payload) = protocol::encode_admin_request(&cmd, expected_epoch);
+        let resp = self.round_trip(op, Op::AdminOk, &payload)?;
+        protocol::decode_admin_response(&resp)
+            .map_err(|e| SubmitError::Io(format!("undecodable admin response: {e}")))
+    }
+
+    fn health(&self) -> Result<BackendHealth, SubmitError> {
+        let resp = self.round_trip(Op::Health, Op::HealthOk, &[])?;
+        protocol::decode_health_response(&resp)
+            .map_err(|e| SubmitError::Io(format!("undecodable health response: {e}")))
+    }
+
+    fn metrics(&self) -> Result<MetricsSnapshot, SubmitError> {
+        let resp = self.round_trip(Op::Metrics, Op::MetricsOk, &[])?;
+        let m = protocol::decode_metrics_response(&resp)
+            .map_err(|e| SubmitError::Io(format!("undecodable metrics response: {e}")))?;
+        Ok(m.to_snapshot())
+    }
+
+    fn close(&self) {
+        let mut conn = self.conn.lock().unwrap();
+        let _ = conn.stream.shutdown(std::net::Shutdown::Both);
+        conn.poison(SubmitError::Closed);
+    }
+}

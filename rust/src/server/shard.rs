@@ -1,10 +1,13 @@
-//! Scatter-gather sharding: one logical store fanned across `S` independent
-//! [`AmService`] shards.
+//! Scatter-gather routing: one logical store fanned across child
+//! [`Backend`]s — in-process serving stacks, **remote `cosimed` servers**,
+//! or any mix of the two behind one [`RouterBackend`].
 //!
-//! Each shard is a full serving stack (its own tile manager, batcher and
-//! worker pool), so shards scale the write path and the epoch lock as well
-//! as the score path — the software analogue of racking independent COSIME
-//! boards behind one front door.
+//! Each in-process child is a full serving stack (its own tile manager,
+//! batcher and worker pool), so shards scale the write path and the epoch
+//! lock as well as the score path — the software analogue of racking
+//! independent COSIME boards behind one front door. A remote child
+//! ([`super::RemoteBackend`]) moves the same fan-out across processes: the
+//! router tier holds one nonblocking wire connection per shard server.
 //!
 //! # Global row ids
 //!
@@ -12,15 +15,18 @@
 //! `global = shard << 48 | local` ([`global_row`] / [`split_row`]). Search
 //! hits come back with global ids, so a client can hand the id straight to
 //! an admin op and the router routes it to the owning shard. With `S = 1`
-//! the global id equals the local row index.
+//! the global id equals the local row index. Children must be *flat*
+//! (their own ids must fit the 48-bit local space — enforced against the
+//! child's health at construction), so the id scheme does not nest.
 //!
 //! **Id stability caveat:** a delete shifts the owning shard's higher
 //! local rows down by one (the tile manager's semantics), so ids held
 //! across a concurrent *delete on the same shard* can silently address a
-//! different row. Updates and inserts never move existing rows. Single
-//! admin writer (or delete-free workloads): ids are stable; multi-writer
-//! delete safety needs the compare-and-swap admin extension tracked in
-//! ROADMAP "Open items".
+//! different row. Updates and inserts never move existing rows. The
+//! compare-and-swap pin (`expected_epoch` on admin ops, rejected with a
+//! typed `EpochMismatch` against the owning shard's epoch) makes
+//! multi-writer retries safe: pin the `shard_epoch` returned by the last
+//! admin response and retry on mismatch.
 //!
 //! # Placement
 //!
@@ -34,26 +40,38 @@
 //!
 //! # Scatter-gather search
 //!
-//! A query is submitted to *every* shard ([`ShardRouter::submit_topk`]
-//! scatters without blocking); the gather ([`PendingSearch::wait`]) merges
-//! the per-shard ranked lists through [`TopK::merge_from`] — the same
+//! A batch is submitted to *every* child ([`Backend::submit_search`]
+//! scatters without blocking); the completion merges the per-shard ranked
+//! lists query by query through [`TopK::merge_from`] — the same
 //! bounded-selector merge the tile manager uses across tiles, one level up.
-//! The merged response is stamped with the *aggregate epoch*: the sum of
-//! the shard epochs, which is monotone under every commit. Per-shard
-//! ordering guarantees ("searches stamped ≥ this epoch observe the
-//! mutation") hold within a shard; across shards the aggregate is a
-//! monotone progress indicator, not a total order.
-
-use std::sync::mpsc;
+//! The merged result is stamped with the *aggregate epoch*: the sum of the
+//! child epochs, which is monotone under every commit while every shard
+//! stays reachable (an unreachable shard drops out of the sum — see
+//! [`RouterBackend::epoch`]). Per-shard ordering guarantees ("searches
+//! stamped ≥ this epoch observe the mutation") hold within a shard; across
+//! shards the aggregate is a progress indicator, not a total order.
+//!
+//! # Metrics
+//!
+//! Child snapshots carry their latency histograms (log-spaced buckets,
+//! aligned across lanes), so [`aggregate_metrics`] merges them through
+//! [`Histogram::merge_from`](crate::util::Histogram::merge_from) and
+//! reports **exact** cross-shard percentiles; only when a child snapshot
+//! arrives without histograms (a pre-v2 wire peer) does aggregation fall
+//! back to the conservative worst-shard tail.
 
 use anyhow::{bail, ensure, Result};
 
 use crate::am::kernel::TopK;
-use crate::am::write::WriteReport;
 use crate::am::AmEngine;
 use crate::config::CosimeConfig;
+use crate::coordinator::backend::{
+    AdminCmd, AdminOutcome, Backend, BackendHealth, BatchResult, Completion, Hit, LocalBackend,
+    Ticket,
+};
+use crate::coordinator::metrics::LatencyHists;
 use crate::coordinator::{
-    AdminOp, AmService, MetricsSnapshot, RequestTiming, SearchResponse, SubmitError, TileManager,
+    AmService, MetricsSnapshot, RequestTiming, SearchResponse, SubmitError, TileManager,
     WriteCostSnapshot,
 };
 use crate::util::BitVec;
@@ -88,73 +106,162 @@ pub fn fnv1a_word(word: &BitVec) -> u64 {
     crate::util::fnv1a_bytes(len_bytes.into_iter().chain(lane_bytes))
 }
 
-/// Outcome of a routed admin op, in global terms.
-#[derive(Debug, Clone)]
-pub struct RoutedAdminResponse {
-    /// Global id of the affected row (for Insert: the new row).
-    pub row: u64,
-    /// Aggregate store epoch (sum over shards) after the commit.
-    pub epoch: u64,
-    /// Total stored rows across all shards after the commit.
-    pub rows: u64,
-    /// Write-verify cost (None for Delete).
-    pub write: Option<WriteReport>,
-}
+/// Outcome of a routed admin op, in global terms (the backend-wide
+/// [`AdminOutcome`] under its historical router-era name).
+pub type RoutedAdminResponse = AdminOutcome;
 
-/// One logical store fanned across `S` independent [`AmService`] shards.
-/// See the module docs for placement, global ids and epoch semantics.
-pub struct ShardRouter {
-    shards: Vec<AmService>,
+/// One logical store fanned across child backends. See the module docs for
+/// placement, global ids and epoch semantics. The historical name
+/// [`ShardRouter`] aliases this type.
+pub struct RouterBackend {
+    children: Vec<Box<dyn Backend>>,
     dims: usize,
 }
 
-/// An in-flight scattered search: one pending response per shard. Call
-/// [`PendingSearch::wait`] to gather and merge.
+/// The pre-backend-trait name of [`RouterBackend`], kept so existing call
+/// sites and docs stay valid.
+pub type ShardRouter = RouterBackend;
+
+/// An in-flight scattered search (the blocking, single-query adapter):
+/// one child ticket per shard. Call [`PendingSearch::wait`] to gather and
+/// merge.
 pub struct PendingSearch {
-    rxs: Vec<mpsc::Receiver<SearchResponse>>,
+    tickets: Vec<Ticket>,
     k: usize,
 }
 
-impl PendingSearch {
-    /// Block for every shard's response and merge the ranked lists into one
-    /// global top-k (ids globalized, selectors merged via
-    /// [`TopK::merge_from`]). Timing reports the slowest shard; the epoch
-    /// is the aggregate (sum of shard epochs at serve time).
-    pub fn wait(self) -> Result<SearchResponse, SubmitError> {
-        let mut merged = TopK::new(self.k);
-        let mut shard_sel = TopK::new(self.k);
-        let mut epoch = 0u64;
-        let mut timing = RequestTiming::default();
-        for (shard, rx) in self.rxs.into_iter().enumerate() {
-            let resp = rx.recv().map_err(|_| SubmitError::Closed)?;
-            shard_sel.reset(self.k);
-            for hit in &resp.hits {
-                shard_sel.offer(global_row(shard, hit.winner) as usize, hit.score);
-            }
-            merged.merge_from(&shard_sel);
-            epoch += resp.epoch;
-            timing.queued = timing.queued.max(resp.timing.queued);
-            timing.exec = timing.exec.max(resp.timing.exec);
-            timing.batch_size = timing.batch_size.max(resp.timing.batch_size);
+/// Merge one query's ranked per-child hit lists into a global top-k.
+/// `lists` yields `(child_index, hits)`; ids are globalized as they are
+/// offered into the bounded selector.
+fn merge_ranked(lists: &[(usize, &[Hit])], k: usize) -> Vec<Hit> {
+    let mut merged = TopK::new(k);
+    let mut child_sel = TopK::new(k);
+    for &(child, hits) in lists {
+        child_sel.reset(k);
+        for h in hits {
+            child_sel.offer(global_row(child, h.row as usize) as usize, h.score);
         }
-        let hits = merged.as_slice().to_vec();
+        merged.merge_from(&child_sel);
+    }
+    merged.as_slice().iter().map(|r| Hit { row: r.winner as u64, score: r.score }).collect()
+}
+
+impl PendingSearch {
+    /// Block for every child's response and merge the ranked lists into one
+    /// global top-k (ids globalized, selectors merged via
+    /// [`TopK::merge_from`]). The epoch is the aggregate (sum of child
+    /// epochs at serve time).
+    pub fn wait(self) -> Result<SearchResponse, SubmitError> {
+        let mut epoch = 0u64;
+        let mut per_child: Vec<(usize, Vec<Hit>)> = Vec::with_capacity(self.tickets.len());
+        for (child, ticket) in self.tickets.into_iter().enumerate() {
+            let mut result = ticket.wait()?;
+            epoch += result.epoch;
+            let hits = if result.results.is_empty() {
+                Vec::new()
+            } else {
+                result.results.swap_remove(0)
+            };
+            per_child.push((child, hits));
+        }
+        let lists: Vec<(usize, &[Hit])> =
+            per_child.iter().map(|(c, h)| (*c, h.as_slice())).collect();
+        let merged = merge_ranked(&lists, self.k);
+        let hits: Vec<crate::am::SearchResult> = merged
+            .iter()
+            .map(|h| crate::am::SearchResult { winner: h.row as usize, score: h.score })
+            .collect();
         let head = hits.first().expect("every shard serves at least one row");
-        Ok(SearchResponse { winner: head.winner, score: head.score, hits, epoch, timing })
+        Ok(SearchResponse {
+            winner: head.winner,
+            score: head.score,
+            hits,
+            epoch,
+            timing: RequestTiming::default(),
+        })
     }
 }
 
-impl ShardRouter {
-    /// Shard `words` across `shards` serving stacks (content-hash
-    /// placement), each sharded into tiles of at most `tile_capacity` rows
-    /// and served with `cfg`'s coordinator/write policy. Requires at least
-    /// one word per shard.
+/// Completion of a router-scattered batch: one child ticket per shard,
+/// each covering the whole batch; ready when every child is.
+struct RouterCompletion {
+    /// `pending[i]` holds child `i`'s ticket until it completes into
+    /// `done[i]`.
+    pending: Vec<Option<Ticket>>,
+    done: Vec<Option<BatchResult>>,
+    queries: usize,
+    k: usize,
+}
+
+impl RouterCompletion {
+    fn merge(&mut self) -> BatchResult {
+        let mut epoch = 0u64;
+        let children: Vec<BatchResult> =
+            self.done.iter_mut().map(|d| d.take().expect("all children done")).collect();
+        for c in &children {
+            epoch += c.epoch;
+        }
+        let mut results = Vec::with_capacity(self.queries);
+        for qi in 0..self.queries {
+            let lists: Vec<(usize, &[Hit])> = children
+                .iter()
+                .enumerate()
+                .map(|(ci, c)| {
+                    (ci, c.results.get(qi).map(Vec::as_slice).unwrap_or(&[]))
+                })
+                .collect();
+            results.push(merge_ranked(&lists, self.k));
+        }
+        BatchResult { epoch, results }
+    }
+}
+
+impl Completion for RouterCompletion {
+    fn poll(&mut self) -> Result<Option<BatchResult>, SubmitError> {
+        let mut all_done = true;
+        for i in 0..self.pending.len() {
+            if self.done[i].is_some() {
+                continue;
+            }
+            let ticket = self.pending[i].as_mut().expect("pending ticket");
+            match ticket.poll()? {
+                Some(result) => {
+                    self.done[i] = Some(result);
+                    self.pending[i] = None;
+                }
+                None => all_done = false,
+            }
+        }
+        if !all_done {
+            return Ok(None);
+        }
+        Ok(Some(self.merge()))
+    }
+
+    fn wait(&mut self) -> Result<BatchResult, SubmitError> {
+        for i in 0..self.pending.len() {
+            if self.done[i].is_some() {
+                continue;
+            }
+            let ticket = self.pending[i].take().expect("pending ticket");
+            self.done[i] = Some(ticket.wait()?);
+        }
+        Ok(self.merge())
+    }
+}
+
+impl RouterBackend {
+    /// Shard `words` across `shards` in-process serving stacks
+    /// (content-hash placement), each sharded into tiles of at most
+    /// `tile_capacity` rows and served with `cfg`'s coordinator/write
+    /// policy. Requires at least one word per shard.
     pub fn build<F>(
         cfg: &CosimeConfig,
         shards: usize,
         tile_capacity: usize,
         words: Vec<BitVec>,
         factory: F,
-    ) -> Result<ShardRouter>
+    ) -> Result<RouterBackend>
     where
         F: Fn(Vec<BitVec>) -> Result<Box<dyn AmEngine>> + Send + Sync + Clone + 'static,
     {
@@ -186,43 +293,79 @@ impl ShardRouter {
             let w = placed[donor].pop().unwrap();
             placed[i].push(w);
         }
-        let mut services = Vec::with_capacity(shards);
+        let mut children: Vec<Box<dyn Backend>> = Vec::with_capacity(shards);
         for shard_words in placed {
             let tiles = TileManager::build(shard_words, tile_capacity, factory.clone())?;
-            services.push(AmService::start_with_config(cfg, tiles));
+            children
+                .push(Box::new(LocalBackend::new(AmService::start_with_config(cfg, tiles))));
         }
-        Ok(ShardRouter { shards: services, dims })
+        Ok(RouterBackend { children, dims })
     }
 
     /// Wrap already-running services as shards (advanced callers / tests).
     /// All services must serve the same dimensionality.
-    pub fn from_services(shards: Vec<AmService>) -> Result<ShardRouter> {
-        ensure!(!shards.is_empty(), "need at least one shard");
-        ensure!(shards.len() <= MAX_SHARDS, "too many shards");
-        let dims = shards[0].dims();
-        for s in &shards {
-            ensure!(s.dims() == dims, "shards disagree on dims");
+    pub fn from_services(shards: Vec<AmService>) -> Result<RouterBackend> {
+        Self::from_backends(
+            shards
+                .into_iter()
+                .map(|s| Box::new(LocalBackend::new(s)) as Box<dyn Backend>)
+                .collect(),
+        )
+    }
+
+    /// Fan over arbitrary child backends — this is how a routing tier
+    /// fronts **remote** shard servers ([`super::RemoteBackend`] children).
+    /// Children must agree on dimensionality and be flat (unsharded, rows
+    /// within the 48-bit local-id space), so the `shard << 48 | local`
+    /// global-id scheme stays unambiguous.
+    pub fn from_backends(children: Vec<Box<dyn Backend>>) -> Result<RouterBackend> {
+        ensure!(!children.is_empty(), "need at least one shard");
+        ensure!(children.len() <= MAX_SHARDS, "too many shards");
+        let dims = children[0].dims();
+        for (i, c) in children.iter().enumerate() {
+            ensure!(
+                c.dims() == dims,
+                "shard {i} serves {} bits, shard 0 serves {dims}",
+                c.dims()
+            );
+            let h = c
+                .health()
+                .map_err(|e| anyhow::anyhow!("health check on shard {i} failed: {e}"))?;
+            ensure!(
+                h.shards <= 1,
+                "shard {i} is itself sharded ({} ways): global row ids would nest; \
+                 point the router at flat shard servers",
+                h.shards
+            );
+            ensure!(
+                h.rows <= LOCAL_MASK,
+                "shard {i} holds {} rows, beyond the 48-bit local-id space",
+                h.rows
+            );
         }
-        Ok(ShardRouter { shards, dims })
+        Ok(RouterBackend { children, dims })
     }
 
     pub fn shard_count(&self) -> usize {
-        self.shards.len()
+        self.children.len()
     }
 
-    pub fn dims(&self) -> usize {
-        self.dims
-    }
-
-    /// Total stored rows across all shards.
+    /// Total stored rows across all shards (best effort: an unreachable
+    /// remote shard contributes 0 — check [`Backend::health`] for errors).
     pub fn rows(&self) -> usize {
-        self.shards.iter().map(AmService::rows).sum()
+        self.children
+            .iter()
+            .filter_map(|c| c.health().ok())
+            .map(|h| h.rows as usize)
+            .sum()
     }
 
     /// Aggregate epoch: the sum of shard epochs. Monotone under every
-    /// commit on any shard.
+    /// commit while all shards stay reachable; an unreachable shard
+    /// contributes 0, so across failures this can regress — it is a
+    /// progress hint, not a fence (CAS pins use the owning shard's epoch).
     pub fn epoch(&self) -> u64 {
-        self.shards.iter().map(AmService::epoch).sum()
+        self.children.iter().filter_map(|c| c.health().ok()).map(|h| h.epoch).sum()
     }
 
     /// Scatter a top-k query to every shard without blocking; gather with
@@ -230,11 +373,11 @@ impl ShardRouter {
     /// submit (already-queued shards still serve their copies; those
     /// responses are dropped).
     pub fn submit_topk(&self, query: &BitVec, k: usize) -> Result<PendingSearch, SubmitError> {
-        let mut rxs = Vec::with_capacity(self.shards.len());
-        for shard in &self.shards {
-            rxs.push(shard.submit_topk(query.clone(), k)?);
+        let mut tickets = Vec::with_capacity(self.children.len());
+        for child in &self.children {
+            tickets.push(child.submit_search(std::slice::from_ref(query), k)?);
         }
-        Ok(PendingSearch { rxs, k })
+        Ok(PendingSearch { tickets, k })
     }
 
     /// Blocking scatter-gather top-k.
@@ -245,84 +388,157 @@ impl ShardRouter {
     /// Reprogram the row with global id `row` to `word` (routed to the
     /// owning shard; write-verified there).
     pub fn update(&self, row: u64, word: BitVec) -> Result<RoutedAdminResponse, SubmitError> {
-        let (shard, local) = self.locate(row)?;
-        let resp = self.shards[shard].admin(AdminOp::Update { row: local, word })?;
-        Ok(self.globalize(shard, resp))
+        self.admin(AdminCmd::Update { row, word }, None)
     }
 
     /// Insert `word` as a new row on its content-hashed shard; the response
     /// carries the new row's global id.
     pub fn insert(&self, word: BitVec) -> Result<RoutedAdminResponse, SubmitError> {
-        let shard = (fnv1a_word(&word) % self.shards.len() as u64) as usize;
-        let resp = self.shards[shard].admin(AdminOp::Insert { word })?;
-        Ok(self.globalize(shard, resp))
+        self.admin(AdminCmd::Insert { word }, None)
     }
 
     /// Delete the row with global id `row`. Deleting a shard's last
     /// remaining row is rejected (every shard must keep serving).
     pub fn delete(&self, row: u64) -> Result<RoutedAdminResponse, SubmitError> {
-        let (shard, local) = self.locate(row)?;
-        let resp = self.shards[shard].admin(AdminOp::Delete { row: local })?;
-        Ok(self.globalize(shard, resp))
+        self.admin(AdminCmd::Delete { row }, None)
     }
 
-    fn locate(&self, row: u64) -> Result<(usize, usize), SubmitError> {
+    fn locate(&self, row: u64) -> Result<(usize, u64), SubmitError> {
         let (shard, local) = split_row(row);
-        if shard >= self.shards.len() {
+        if shard >= self.children.len() {
             return Err(SubmitError::BadQuery(format!(
                 "global row {row:#x} names shard {shard}, but only {} exist",
-                self.shards.len()
+                self.children.len()
             )));
         }
-        Ok((shard, local as usize))
+        Ok((shard, local))
     }
 
-    fn globalize(
-        &self,
-        shard: usize,
-        resp: crate::coordinator::AdminResponse,
-    ) -> RoutedAdminResponse {
-        RoutedAdminResponse {
-            row: global_row(shard, resp.row),
-            epoch: self.epoch(),
-            rows: self.rows() as u64,
-            write: resp.write,
-        }
-    }
-
-    /// Per-shard metrics snapshots, shard order.
+    /// Per-shard metrics snapshots, shard order (unreachable shards are
+    /// skipped).
     pub fn metrics_per_shard(&self) -> Vec<MetricsSnapshot> {
-        self.shards.iter().map(AmService::metrics).collect()
-    }
-
-    /// Aggregate metrics across shards: counters and write costs are
-    /// summed; latency percentiles are the *worst shard's* (a conservative
-    /// tail view — true cross-shard percentiles would need merged
-    /// histograms); mean latencies and batch sizes are weighted means.
-    pub fn metrics(&self) -> MetricsSnapshot {
-        aggregate_metrics(&self.metrics_per_shard())
+        self.children.iter().filter_map(|c| c.metrics().ok()).collect()
     }
 
     /// Graceful shutdown of every shard.
     pub fn shutdown(self) {
-        for shard in self.shards {
-            shard.shutdown();
-        }
-    }
-
-    /// Close every shard for submissions without consuming the router:
-    /// further submits see [`SubmitError::Closed`]; workers drain their
-    /// queues and exit asynchronously. Used by the TCP frontend, whose
-    /// connection handlers may still hold references during shutdown.
-    pub fn close(&self) {
-        for shard in &self.shards {
-            shard.clone().shutdown();
+        for child in &self.children {
+            child.close();
         }
     }
 }
 
-/// Merge shard snapshots into one logical-store view (see
-/// [`ShardRouter::metrics`] for the semantics).
+impl Backend for RouterBackend {
+    fn dims(&self) -> usize {
+        self.dims
+    }
+
+    fn submit_search(&self, queries: &[BitVec], k: usize) -> Result<Ticket, SubmitError> {
+        let mut pending = Vec::with_capacity(self.children.len());
+        for child in &self.children {
+            pending.push(Some(child.submit_search(queries, k)?));
+        }
+        let done = (0..pending.len()).map(|_| None).collect();
+        Ok(Ticket::new(Box::new(RouterCompletion {
+            pending,
+            done,
+            queries: queries.len(),
+            k,
+        })))
+    }
+
+    fn admin(
+        &self,
+        cmd: AdminCmd,
+        expected_epoch: Option<u64>,
+    ) -> Result<AdminOutcome, SubmitError> {
+        let (shard, child_cmd) = match cmd {
+            AdminCmd::Update { row, word } => {
+                let (shard, local) = self.locate(row)?;
+                (shard, AdminCmd::Update { row: local, word })
+            }
+            AdminCmd::Delete { row } => {
+                let (shard, local) = self.locate(row)?;
+                (shard, AdminCmd::Delete { row: local })
+            }
+            AdminCmd::Insert { word } => {
+                let shard = (fnv1a_word(&word) % self.children.len() as u64) as usize;
+                (shard, AdminCmd::Insert { word })
+            }
+        };
+        let outcome = self.children[shard].admin(child_cmd, expected_epoch)?;
+        // One health sweep fills both aggregate fields — for remote
+        // children each `health()` is a wire round trip, so computing
+        // epoch and rows separately would double the cost. The owning
+        // shard's post-commit state is taken from the outcome itself
+        // rather than re-queried.
+        let (mut rows, mut epoch) = (outcome.rows, outcome.shard_epoch);
+        for (i, child) in self.children.iter().enumerate() {
+            if i == shard {
+                continue;
+            }
+            if let Ok(h) = child.health() {
+                rows += h.rows;
+                epoch += h.epoch;
+            }
+        }
+        Ok(AdminOutcome {
+            row: global_row(shard, outcome.row as usize),
+            epoch,
+            shard_epoch: outcome.shard_epoch,
+            rows,
+            write: outcome.write,
+        })
+    }
+
+    fn health(&self) -> Result<BackendHealth, SubmitError> {
+        let mut agg = BackendHealth {
+            rows: 0,
+            dims: self.dims as u64,
+            epoch: 0,
+            shards: self.children.len() as u32,
+            max_batch: 0,
+            max_k: 0,
+        };
+        for child in &self.children {
+            let h = child.health()?;
+            agg.rows += h.rows;
+            agg.epoch += h.epoch;
+            // Hints: the fan-out can only serve what every child serves, so
+            // take the min of the *known* advertisements (0 = unknown).
+            for (slot, hint) in
+                [(&mut agg.max_batch, h.max_batch), (&mut agg.max_k, h.max_k)]
+            {
+                if hint != 0 {
+                    *slot = if *slot == 0 { hint } else { (*slot).min(hint) };
+                }
+            }
+        }
+        Ok(agg)
+    }
+
+    fn metrics(&self) -> Result<MetricsSnapshot, SubmitError> {
+        let mut snaps = Vec::with_capacity(self.children.len());
+        for child in &self.children {
+            snaps.push(child.metrics()?);
+        }
+        Ok(aggregate_metrics(&snaps))
+    }
+
+    fn close(&self) {
+        for child in &self.children {
+            child.close();
+        }
+    }
+}
+
+/// Merge shard snapshots into one logical-store view: counters and write
+/// costs are summed, mean latencies and batch sizes are weighted means, and
+/// latency percentiles are **exact** — the underlying histograms (fixed
+/// log-spaced buckets, aligned across lanes) are merged bucket by bucket
+/// and re-quantiled. Only when a snapshot arrives without histograms (a
+/// legacy wire peer) do the percentile fields fall back to the worst
+/// shard's values, the old conservative tail view.
 pub fn aggregate_metrics(snaps: &[MetricsSnapshot]) -> MetricsSnapshot {
     let mut agg = MetricsSnapshot {
         submitted: 0,
@@ -341,9 +557,12 @@ pub fn aggregate_metrics(snaps: &[MetricsSnapshot]) -> MetricsSnapshot {
         admin: Vec::new(),
         admin_rejected: 0,
         write: WriteCostSnapshot::default(),
+        lat: None,
     };
     let mut batch_weight = 0.0f64;
     let mut mean_weight = 0.0f64;
+    let mut merged: Option<LatencyHists> = None;
+    let mut every_snap_has_hists = !snaps.is_empty();
     for s in snaps {
         agg.submitted += s.submitted;
         agg.completed += s.completed;
@@ -351,6 +570,8 @@ pub fn aggregate_metrics(snaps: &[MetricsSnapshot]) -> MetricsSnapshot {
         agg.batches += s.batches;
         agg.mean_batch_size += s.mean_batch_size * s.batches as f64;
         batch_weight += s.batches as f64;
+        // Worst-shard fallback values; overwritten below when every
+        // snapshot carries its histograms.
         agg.queue_p50_us = agg.queue_p50_us.max(s.queue_p50_us);
         agg.queue_p99_us = agg.queue_p99_us.max(s.queue_p99_us);
         agg.exec_p50_us = agg.exec_p50_us.max(s.exec_p50_us);
@@ -359,6 +580,17 @@ pub fn aggregate_metrics(snaps: &[MetricsSnapshot]) -> MetricsSnapshot {
         agg.total_p99_us = agg.total_p99_us.max(s.total_p99_us);
         agg.total_mean_us += s.total_mean_us * s.completed as f64;
         mean_weight += s.completed as f64;
+        match &s.lat {
+            None => every_snap_has_hists = false,
+            Some(lat) => match &mut merged {
+                None => merged = Some(lat.clone()),
+                Some(m) => {
+                    m.queue_us.merge_from(&lat.queue_us);
+                    m.exec_us.merge_from(&lat.exec_us);
+                    m.total_us.merge_from(&lat.total_us);
+                }
+            },
+        }
         agg.admin_rejected += s.admin_rejected;
         agg.write.cells += s.write.cells;
         agg.write.pulses += s.write.pulses;
@@ -368,8 +600,18 @@ pub fn aggregate_metrics(snaps: &[MetricsSnapshot]) -> MetricsSnapshot {
             match agg.per_k.iter_mut().find(|l| l.k == lane.k) {
                 Some(l) => {
                     l.completed += lane.completed;
-                    l.total_p50_us = l.total_p50_us.max(lane.total_p50_us);
-                    l.total_p99_us = l.total_p99_us.max(lane.total_p99_us);
+                    match (&mut l.hist, &lane.hist) {
+                        (Some(h), Some(other)) => {
+                            h.merge_from(other);
+                            l.total_p50_us = h.quantile(0.5);
+                            l.total_p99_us = h.quantile(0.99);
+                        }
+                        _ => {
+                            l.hist = None;
+                            l.total_p50_us = l.total_p50_us.max(lane.total_p50_us);
+                            l.total_p99_us = l.total_p99_us.max(lane.total_p99_us);
+                        }
+                    }
                 }
                 None => agg.per_k.push(lane.clone()),
             }
@@ -378,8 +620,18 @@ pub fn aggregate_metrics(snaps: &[MetricsSnapshot]) -> MetricsSnapshot {
             match agg.admin.iter_mut().find(|l| l.kind == lane.kind) {
                 Some(l) => {
                     l.completed += lane.completed;
-                    l.total_p50_us = l.total_p50_us.max(lane.total_p50_us);
-                    l.total_p99_us = l.total_p99_us.max(lane.total_p99_us);
+                    match (&mut l.hist, &lane.hist) {
+                        (Some(h), Some(other)) => {
+                            h.merge_from(other);
+                            l.total_p50_us = h.quantile(0.5);
+                            l.total_p99_us = h.quantile(0.99);
+                        }
+                        _ => {
+                            l.hist = None;
+                            l.total_p50_us = l.total_p50_us.max(lane.total_p50_us);
+                            l.total_p99_us = l.total_p99_us.max(lane.total_p99_us);
+                        }
+                    }
                 }
                 None => agg.admin.push(lane.clone()),
             }
@@ -390,6 +642,18 @@ pub fn aggregate_metrics(snaps: &[MetricsSnapshot]) -> MetricsSnapshot {
     }
     if mean_weight > 0.0 {
         agg.total_mean_us /= mean_weight;
+    }
+    if every_snap_has_hists {
+        if let Some(m) = merged {
+            agg.queue_p50_us = m.queue_us.quantile(0.5);
+            agg.queue_p99_us = m.queue_us.quantile(0.99);
+            agg.exec_p50_us = m.exec_us.quantile(0.5);
+            agg.exec_p99_us = m.exec_us.quantile(0.99);
+            agg.total_p50_us = m.total_us.quantile(0.5);
+            agg.total_p99_us = m.total_us.quantile(0.99);
+            agg.total_mean_us = m.total_us.mean();
+            agg.lat = Some(m);
+        }
     }
     agg.per_k.sort_by_key(|l| l.k);
     agg
@@ -459,6 +723,31 @@ mod tests {
         }
     }
 
+    /// The batched trait path must produce the same merged rankings the
+    /// blocking per-query adapter does.
+    #[test]
+    fn backend_batch_matches_blocking_adapter() {
+        let (router, words) = router(60, 64, 3, 31);
+        let flat = DigitalExactEngine::new(words);
+        let mut r = rng(32);
+        let queries: Vec<BitVec> = (0..9).map(|_| BitVec::random(64, 0.5, &mut r)).collect();
+        let batch = router.search_batch(&queries, 4).unwrap();
+        assert_eq!(batch.results.len(), queries.len());
+        for (q, hits) in queries.iter().zip(&batch.results) {
+            let want = flat.search_topk(q, 4);
+            assert_eq!(hits.len(), want.len());
+            for (got, exp) in hits.iter().zip(&want) {
+                assert_eq!(got.score, exp.score);
+            }
+            let blocking = router.search_topk(q, 4).unwrap();
+            for (got, exp) in hits.iter().zip(&blocking.hits) {
+                assert_eq!(got.row, exp.winner as u64);
+                assert_eq!(got.score, exp.score);
+            }
+        }
+        router.shutdown();
+    }
+
     fn router_words(shards: usize) -> (ShardRouter, Vec<BitVec>) {
         router(60, 64, shards, 7)
     }
@@ -512,6 +801,44 @@ mod tests {
         router.shutdown();
     }
 
+    /// CAS routing: the pin is checked against the *owning shard's* epoch,
+    /// and the outcome's `shard_epoch` is the value to pin on retry.
+    #[test]
+    fn admin_cas_pins_the_owning_shards_epoch() {
+        let (router, _) = router(30, 64, 2, 15);
+        let mut r = rng(16);
+        let w = BitVec::random(64, 0.5, &mut r);
+        let ins = router.insert(w).unwrap();
+        let (shard, _) = split_row(ins.row);
+
+        // A commit on the *other* shard must not invalidate this pin.
+        let mut other_word = BitVec::random(64, 0.5, &mut r);
+        while (fnv1a_word(&other_word) % 2) as usize == shard {
+            other_word = BitVec::random(64, 0.5, &mut r);
+        }
+        router.insert(other_word).unwrap();
+
+        let w2 = BitVec::random(64, 0.5, &mut r);
+        let upd = router
+            .admin(
+                AdminCmd::Update { row: ins.row, word: w2 },
+                Some(ins.shard_epoch),
+            )
+            .expect("pin against the owning shard survives commits elsewhere");
+        assert!(upd.shard_epoch > ins.shard_epoch);
+
+        // A stale pin on the owning shard is a typed mismatch.
+        let w3 = BitVec::random(64, 0.5, &mut r);
+        match router.admin(AdminCmd::Update { row: ins.row, word: w3 }, Some(ins.shard_epoch)) {
+            Err(SubmitError::EpochMismatch { expected, actual }) => {
+                assert_eq!(expected, ins.shard_epoch);
+                assert_eq!(actual, upd.shard_epoch);
+            }
+            other => panic!("expected EpochMismatch, got {other:?}"),
+        }
+        router.shutdown();
+    }
+
     #[test]
     fn build_rejects_impossible_shardings() {
         let mut r = rng(17);
@@ -532,8 +859,17 @@ mod tests {
         router.shutdown();
     }
 
+    /// Nested routers are rejected: their ids would not fit the flat
+    /// `shard << 48 | local` scheme.
     #[test]
-    fn aggregate_metrics_sums_and_takes_worst_tails() {
+    fn from_backends_rejects_sharded_children() {
+        let (inner, _) = router(20, 64, 2, 19);
+        let err = ShardRouter::from_backends(vec![Box::new(inner)]).unwrap_err();
+        assert!(err.to_string().contains("sharded"), "{err}");
+    }
+
+    #[test]
+    fn aggregate_metrics_sums_and_merges_exact_percentiles() {
         let (router, _) = router(40, 64, 2, 21);
         let mut r = rng(22);
         for _ in 0..10 {
@@ -542,13 +878,43 @@ mod tests {
         }
         let per = router.metrics_per_shard();
         assert_eq!(per.len(), 2);
-        let agg = router.metrics();
+        let agg = aggregate_metrics(&per);
         // Every query was scattered to both shards.
         assert_eq!(agg.completed, 20);
         assert_eq!(agg.completed, per[0].completed + per[1].completed);
-        assert_eq!(agg.total_p99_us, per[0].total_p99_us.max(per[1].total_p99_us));
+        // Exact merge: the aggregate percentile equals the quantile of the
+        // merged histogram, not the worst shard's field.
+        let mut reference = per[0].lat.as_ref().unwrap().total_us.clone();
+        reference.merge_from(&per[1].lat.as_ref().unwrap().total_us);
+        assert_eq!(agg.total_p99_us, reference.quantile(0.99));
+        assert_eq!(agg.total_p50_us, reference.quantile(0.5));
+        assert_eq!(agg.total_mean_us, reference.mean());
+        assert!(agg.lat.is_some(), "merged histograms are carried forward");
         let lane = agg.per_k.iter().find(|l| l.k == 2).expect("k=2 lane");
         assert_eq!(lane.completed, 20);
+        router.shutdown();
+    }
+
+    /// Snapshots without histograms (legacy wire peers) fall back to the
+    /// worst shard's percentile fields.
+    #[test]
+    fn aggregate_metrics_falls_back_without_histograms() {
+        let (router, _) = router(40, 64, 2, 25);
+        let mut r = rng(26);
+        for _ in 0..6 {
+            let q = BitVec::random(64, 0.5, &mut r);
+            router.search_topk(&q, 1).unwrap();
+        }
+        let mut per = router.metrics_per_shard();
+        for s in &mut per {
+            s.lat = None;
+            for lane in &mut s.per_k {
+                lane.hist = None;
+            }
+        }
+        let agg = aggregate_metrics(&per);
+        assert_eq!(agg.total_p99_us, per[0].total_p99_us.max(per[1].total_p99_us));
+        assert!(agg.lat.is_none());
         router.shutdown();
     }
 }

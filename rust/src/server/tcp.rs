@@ -1,27 +1,40 @@
-//! The threaded TCP frontend: `cosimed`.
+//! The TCP frontend: `cosimed`. One public server type, two I/O engines
+//! ([`IoMode`]), both serving any [`Backend`] and speaking the identical
+//! wire protocol:
 //!
-//! One accept thread; per connection, a *reader* thread and a *writer*
-//! thread bridged by a bounded reply channel:
+//! * **Threaded** (`[server] io = "threaded"`): one accept thread; per
+//!   connection, a *reader* thread and a *writer* thread bridged by a
+//!   bounded reply channel. The reader decodes frames and dispatches them —
+//!   search frames are scattered through the backend *without waiting* and
+//!   their [`Ticket`]s pushed onto the channel; admin/metrics/health are
+//!   handled synchronously and pushed as finished frames. The writer pops
+//!   replies in request order, waits on tickets, and writes response
+//!   frames.
+//! * **Event loop** (`[server] io = "eventloop"`,
+//!   [`super::eventloop`]): a single thread drives *every* connection with
+//!   nonblocking sockets — incremental frame decode, completion polling,
+//!   incremental encode — holding thousands of connections on a fixed
+//!   thread budget instead of two OS threads each.
 //!
-//! * the reader decodes frames and dispatches them — search frames are
-//!   scattered through the [`ShardRouter`] *without waiting* and their
-//!   pending gathers pushed onto the channel; admin/metrics/health are
-//!   handled synchronously and pushed as finished frames;
-//! * the writer pops replies in request order, finishes pending gathers,
-//!   and writes response frames.
+//! Both engines give every connection Redis-style pipelining (responses in
+//! request order, many frames in flight) with **bounded in-flight
+//! frames**: at most `max_inflight` requests per connection are being
+//! served at once, so a client that stops reading its responses throttles
+//! itself — TCP backpressure — instead of ballooning server memory or
+//! starving the shared batch queue.
 //!
-//! This gives every connection Redis-style pipelining (responses in request
-//! order, many frames in flight) with **bounded in-flight frames**: the
-//! reply channel holds at most `max_inflight` entries, so a client that
-//! stops reading its responses blocks its own reader — TCP backpressure —
-//! instead of ballooning server memory or starving the shared batch queue.
-//!
-//! Submit rejections ([`SubmitError`]) travel back as error frames and the
+//! Submit rejections ([`SubmitError`](crate::coordinator::SubmitError))
+//! travel back as error frames and the
 //! connection stays usable. Frame-sync-destroying input (bad magic,
 //! oversized frame) gets a final error frame and the connection is closed;
 //! a truncated frame or mid-batch disconnect just ends the connection —
-//! in-flight work completes against the service and the responses are
+//! in-flight work completes against the backend and the responses are
 //! dropped, wedging nothing.
+//!
+//! Protocol versions are negotiated per frame: the server answers every
+//! request in the version it carried (within
+//! [`protocol::MIN_VERSION`]..=[`protocol::VERSION`]), so old clients keep
+//! decoding the frames they expect.
 
 use std::io::{BufReader, BufWriter, Write};
 use std::net::{IpAddr, Ipv4Addr, Ipv6Addr, SocketAddr, TcpListener, TcpStream};
@@ -31,20 +44,22 @@ use std::thread::JoinHandle;
 
 use anyhow::{Context, Result};
 
-use crate::config::ServerConfig;
-use crate::coordinator::SubmitError;
+use crate::config::{IoMode, ServerConfig};
+use crate::coordinator::backend::{Backend, Ticket};
 
 use super::protocol::{
-    self, encode_error_response, ErrorCode, FrameReadError, Op, WireAdminOp, WireError, WireHit,
-    WireMetrics, VERSION,
+    self, encode_error_response, ErrorCode, FrameReadError, Op, WireError, WireMetrics,
+    VERSION,
 };
-use super::shard::{PendingSearch, ShardRouter};
+use super::shard::RouterBackend;
 
-struct Shared {
-    router: ShardRouter,
-    running: AtomicBool,
-    max_frame: usize,
-    max_inflight: usize,
+/// State shared by every connection of a running server (both I/O
+/// engines).
+pub(super) struct Shared {
+    pub(super) backend: Arc<dyn Backend>,
+    pub(super) running: AtomicBool,
+    pub(super) max_frame: usize,
+    pub(super) max_inflight: usize,
 }
 
 /// A running `cosimed` instance. Dropping the handle does **not** stop the
@@ -52,29 +67,57 @@ struct Shared {
 pub struct CosimeServer {
     addr: SocketAddr,
     shared: Arc<Shared>,
-    accept: Option<JoinHandle<()>>,
+    join: Option<JoinHandle<()>>,
+    router: Option<Arc<RouterBackend>>,
+    mode: IoMode,
 }
 
 impl CosimeServer {
     /// Bind `cfg.listen` (port 0 picks an ephemeral port — read the real
     /// one back from [`CosimeServer::local_addr`]) and serve `router` until
-    /// [`CosimeServer::shutdown`].
-    pub fn serve(cfg: &ServerConfig, router: ShardRouter) -> Result<CosimeServer> {
+    /// [`CosimeServer::shutdown`], using the I/O engine `cfg.io` selects.
+    pub fn serve(cfg: &ServerConfig, router: RouterBackend) -> Result<CosimeServer> {
+        let router = Arc::new(router);
+        let backend: Arc<dyn Backend> = router.clone();
+        Self::serve_any(cfg, backend, Some(router))
+    }
+
+    /// Serve an arbitrary [`Backend`] (a `LocalBackend`, a routing tier
+    /// over remote shards, …). [`CosimeServer::router`] is unavailable on
+    /// servers started this way.
+    pub fn serve_backend(cfg: &ServerConfig, backend: Arc<dyn Backend>) -> Result<CosimeServer> {
+        Self::serve_any(cfg, backend, None)
+    }
+
+    fn serve_any(
+        cfg: &ServerConfig,
+        backend: Arc<dyn Backend>,
+        router: Option<Arc<RouterBackend>>,
+    ) -> Result<CosimeServer> {
         let listener = TcpListener::bind(cfg.listen.as_str())
             .with_context(|| format!("binding {}", cfg.listen))?;
         let addr = listener.local_addr().context("reading bound address")?;
         let shared = Arc::new(Shared {
-            router,
+            backend,
             running: AtomicBool::new(true),
             max_frame: cfg.max_frame.max(protocol::HEADER_LEN),
             max_inflight: cfg.max_inflight.max(1),
         });
-        let accept_shared = shared.clone();
-        let accept = std::thread::Builder::new()
-            .name("cosimed-accept".to_string())
-            .spawn(move || accept_loop(listener, accept_shared))
-            .context("spawning accept thread")?;
-        Ok(CosimeServer { addr, shared, accept: Some(accept) })
+        let loop_shared = shared.clone();
+        let join = match cfg.io {
+            IoMode::Threaded => std::thread::Builder::new()
+                .name("cosimed-accept".to_string())
+                .spawn(move || accept_loop(listener, loop_shared))
+                .context("spawning accept thread")?,
+            IoMode::EventLoop => {
+                listener.set_nonblocking(true).context("nonblocking listener")?;
+                std::thread::Builder::new()
+                    .name("cosimed-eventloop".to_string())
+                    .spawn(move || super::eventloop::run(listener, loop_shared))
+                    .context("spawning event-loop thread")?
+            }
+        };
+        Ok(CosimeServer { addr, shared, join: Some(join), router, mode: cfg.io })
     }
 
     /// The address actually bound (resolves `:0` ephemeral ports).
@@ -82,17 +125,32 @@ impl CosimeServer {
         self.addr
     }
 
-    /// The served shard router (for in-process metrics/epoch inspection).
-    pub fn router(&self) -> &ShardRouter {
-        &self.shared.router
+    /// The I/O engine this server runs on.
+    pub fn io_mode(&self) -> IoMode {
+        self.mode
     }
 
-    /// Stop accepting connections and close every shard for submissions.
-    /// Connection threads finish their in-flight replies and exit when
+    /// The served backend.
+    pub fn backend(&self) -> &Arc<dyn Backend> {
+        &self.shared.backend
+    }
+
+    /// The served shard router (for in-process metrics/epoch inspection).
+    ///
+    /// # Panics
+    /// On servers started with [`CosimeServer::serve_backend`], which have
+    /// no router tier.
+    pub fn router(&self) -> &RouterBackend {
+        self.router.as_deref().expect("server was started with serve_backend, not serve")
+    }
+
+    /// Stop accepting connections and close the backend for submissions.
+    /// Connection handlers finish their in-flight replies and exit when
     /// their client disconnects or their next submit sees `Closed`.
     pub fn shutdown(mut self) {
         self.shared.running.store(false, Ordering::Release);
-        // Wake the blocking accept() with a throwaway connection. A
+        // Wake a blocking accept() with a throwaway connection (the event
+        // loop needs no wake-up, but the connect is harmless there). A
         // wildcard bind address (0.0.0.0 / [::]) is not connectable on
         // every platform — aim the wake-up at loopback on the same port.
         let mut wake = self.addr;
@@ -103,12 +161,128 @@ impl CosimeServer {
             });
         }
         let _ = TcpStream::connect_timeout(&wake, std::time::Duration::from_secs(1));
-        if let Some(h) = self.accept.take() {
+        if let Some(h) = self.join.take() {
             let _ = h.join();
         }
-        self.shared.router.close();
+        self.shared.backend.close();
     }
 }
+
+// ---------------------------------------------------------------------------
+// Request handling shared by both I/O engines
+// ---------------------------------------------------------------------------
+
+/// How one decoded frame is answered: a finished response frame, or a
+/// search completion still being served.
+pub(super) enum Handled {
+    Immediate(Op, Vec<u8>),
+    Search(Ticket),
+}
+
+/// Serve one well-formed frame (header already read, payload complete).
+/// Returns `(respond_version, handled)` — the version stamp every response
+/// to this frame must carry.
+pub(super) fn handle_frame(
+    shared: &Shared,
+    version: u8,
+    op_byte: u8,
+    flags: u16,
+    payload: &[u8],
+) -> (u8, Handled) {
+    if !protocol::version_supported(version) {
+        return (
+            VERSION,
+            error_handled(WireError::new(
+                ErrorCode::BadVersion,
+                format!(
+                    "protocol version {version} unsupported (this server speaks {}..={VERSION})",
+                    protocol::MIN_VERSION
+                ),
+            )),
+        );
+    }
+    if flags != 0 {
+        // Reserved for must-understand extensions: a frame carrying flag
+        // bits this server does not know must not be half-served.
+        return (
+            version,
+            error_handled(WireError::new(
+                ErrorCode::BadFrame,
+                format!("reserved header flags {flags:#06x} must be zero"),
+            )),
+        );
+    }
+    let handled = match Op::from_u8(op_byte) {
+        Some(op) => match try_handle_request(shared, version, op, payload) {
+            Ok(handled) => handled,
+            Err(e) => error_handled(e),
+        },
+        None => error_handled(WireError::new(
+            ErrorCode::UnknownOp,
+            format!("unknown opcode {op_byte:#04x}"),
+        )),
+    };
+    (version, handled)
+}
+
+fn error_handled(e: WireError) -> Handled {
+    Handled::Immediate(Op::Error, encode_error_response(&e))
+}
+
+fn try_handle_request(
+    shared: &Shared,
+    version: u8,
+    op: Op,
+    payload: &[u8],
+) -> Result<Handled, WireError> {
+    match op {
+        Op::Search => {
+            let (k, queries) = protocol::decode_search_request(payload)?;
+            let ticket =
+                shared.backend.submit_search(&queries, k).map_err(WireError::from)?;
+            Ok(Handled::Search(ticket))
+        }
+        Op::AdminUpdate | Op::AdminInsert | Op::AdminDelete => {
+            let (cmd, expected_epoch) = protocol::decode_admin_request(op, payload)?;
+            let outcome =
+                shared.backend.admin(cmd, expected_epoch).map_err(WireError::from)?;
+            Ok(Handled::Immediate(
+                Op::AdminOk,
+                protocol::encode_admin_response(&outcome, version),
+            ))
+        }
+        Op::Metrics => {
+            let snap = shared.backend.metrics().map_err(WireError::from)?;
+            Ok(Handled::Immediate(
+                Op::MetricsOk,
+                protocol::encode_metrics_response(&WireMetrics::from_snapshot(&snap), version),
+            ))
+        }
+        Op::Health => {
+            let health = shared.backend.health().map_err(WireError::from)?;
+            Ok(Handled::Immediate(
+                Op::HealthOk,
+                protocol::encode_health_response(&health, version),
+            ))
+        }
+        _ => Err(WireError::new(ErrorCode::UnknownOp, format!("{op:?} is not a request opcode"))),
+    }
+}
+
+/// Encode a completed (or failed) search ticket into its response frame
+/// payload.
+pub(super) fn finish_search(ticket: Ticket) -> (Op, Vec<u8>) {
+    match ticket.wait() {
+        Ok(result) => {
+            (Op::SearchOk, protocol::encode_search_response(result.epoch, &result.results))
+        }
+        Err(e) => (Op::Error, encode_error_response(&WireError::from(e))),
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Threaded engine
+// ---------------------------------------------------------------------------
 
 fn accept_loop(listener: TcpListener, shared: Arc<Shared>) {
     loop {
@@ -135,10 +309,10 @@ fn accept_loop(listener: TcpListener, shared: Arc<Shared>) {
 
 /// One reply in the per-connection pipeline, pushed in request order.
 enum Reply {
-    /// A finished response frame.
-    Immediate(Op, Vec<u8>),
-    /// A scattered search batch still being served: the writer gathers.
-    Search(Vec<PendingSearch>),
+    /// A finished response frame, stamped with its negotiated version.
+    Immediate(u8, Op, Vec<u8>),
+    /// A search batch still being served: the writer waits on the ticket.
+    Search(u8, Ticket),
     /// Send this error frame, then close the connection (stream unsynced).
     Fatal(Vec<u8>),
 }
@@ -187,29 +361,11 @@ fn read_loop(stream: TcpStream, shared: &Shared, tx: &mpsc::SyncSender<Reply>) {
                 return;
             }
         };
-        let reply = if header.version != VERSION {
-            error_reply(WireError::new(
-                ErrorCode::BadVersion,
-                format!(
-                    "protocol version {} unsupported (this server speaks {VERSION})",
-                    header.version
-                ),
-            ))
-        } else if header.flags != 0 {
-            // Reserved for must-understand extensions: a frame carrying
-            // flag bits this server does not know must not be half-served.
-            error_reply(WireError::new(
-                ErrorCode::BadFrame,
-                format!("reserved header flags {:#06x} must be zero", header.flags),
-            ))
-        } else {
-            match Op::from_u8(header.op) {
-                Some(op) => handle_request(shared, op, &payload),
-                None => error_reply(WireError::new(
-                    ErrorCode::UnknownOp,
-                    format!("unknown opcode {:#04x}", header.op),
-                )),
-            }
+        let (version, handled) =
+            handle_frame(shared, header.version, header.op, header.flags, &payload);
+        let reply = match handled {
+            Handled::Immediate(op, payload) => Reply::Immediate(version, op, payload),
+            Handled::Search(ticket) => Reply::Search(version, ticket),
         };
         // A full channel blocks here: max_inflight frames are being served,
         // so this connection stops reading until its client drains replies.
@@ -219,111 +375,28 @@ fn read_loop(stream: TcpStream, shared: &Shared, tx: &mpsc::SyncSender<Reply>) {
     }
 }
 
-fn error_reply(e: WireError) -> Reply {
-    Reply::Immediate(Op::Error, encode_error_response(&e))
-}
-
-fn handle_request(shared: &Shared, op: Op, payload: &[u8]) -> Reply {
-    match try_handle_request(shared, op, payload) {
-        Ok(reply) => reply,
-        Err(e) => error_reply(e),
-    }
-}
-
-fn try_handle_request(shared: &Shared, op: Op, payload: &[u8]) -> Result<Reply, WireError> {
-    match op {
-        Op::Search => {
-            let (k, queries) = protocol::decode_search_request(payload)?;
-            let mut pending = Vec::with_capacity(queries.len());
-            for q in &queries {
-                pending.push(shared.router.submit_topk(q, k).map_err(WireError::from)?);
-            }
-            Ok(Reply::Search(pending))
-        }
-        Op::AdminUpdate | Op::AdminInsert | Op::AdminDelete => {
-            let decoded = protocol::decode_admin_request(op, payload)?;
-            let resp = match decoded {
-                WireAdminOp::Update { row, word } => shared.router.update(row, word),
-                WireAdminOp::Insert { word } => shared.router.insert(word),
-                WireAdminOp::Delete { row } => shared.router.delete(row),
-            }
-            .map_err(WireError::from)?;
-            let payload = protocol::encode_admin_response(
-                resp.row,
-                resp.epoch,
-                resp.rows,
-                resp.write.as_ref(),
-            );
-            Ok(Reply::Immediate(Op::AdminOk, payload))
-        }
-        Op::Metrics => {
-            let snap = shared.router.metrics();
-            Ok(Reply::Immediate(
-                Op::MetricsOk,
-                protocol::encode_metrics_response(&WireMetrics::from_snapshot(&snap)),
-            ))
-        }
-        Op::Health => Ok(Reply::Immediate(
-            Op::HealthOk,
-            protocol::encode_health_response(&protocol::WireHealth {
-                rows: shared.router.rows() as u64,
-                dims: shared.router.dims() as u64,
-                epoch: shared.router.epoch(),
-                shards: shared.router.shard_count() as u32,
-            }),
-        )),
-        _ => Err(WireError::new(ErrorCode::UnknownOp, format!("{op:?} is not a request opcode"))),
-    }
-}
-
 fn write_loop(stream: TcpStream, rx: mpsc::Receiver<Reply>) {
     let mut w = BufWriter::new(stream);
     while let Ok(reply) = rx.recv() {
         let ok = match reply {
-            Reply::Immediate(op, payload) => protocol::write_frame(&mut w, op, &payload).is_ok(),
+            Reply::Immediate(version, op, payload) => {
+                protocol::write_frame_v(&mut w, version, op, &payload).is_ok()
+            }
             Reply::Fatal(payload) => {
                 let _ = protocol::write_frame(&mut w, Op::Error, &payload);
                 let _ = w.flush();
                 return;
             }
-            Reply::Search(pending) => match gather(pending) {
-                Ok((epoch, results)) => protocol::write_frame(
-                    &mut w,
-                    Op::SearchOk,
-                    &protocol::encode_search_response(epoch, &results),
-                )
-                .is_ok(),
-                Err(e) => protocol::write_frame(
-                    &mut w,
-                    Op::Error,
-                    &encode_error_response(&WireError::from(e)),
-                )
-                .is_ok(),
-            },
+            Reply::Search(version, ticket) => {
+                let (op, payload) = finish_search(ticket);
+                protocol::write_frame_v(&mut w, version, op, &payload).is_ok()
+            }
         };
         if !ok || w.flush().is_err() {
             return; // client gone; pending replies are dropped harmlessly
         }
     }
     let _ = w.flush();
-}
-
-/// Gather a batch's scattered searches into wire results. The frame epoch
-/// is the highest aggregate epoch any query in the batch was served at.
-fn gather(pending: Vec<PendingSearch>) -> Result<(u64, Vec<Vec<WireHit>>), SubmitError> {
-    let mut epoch = 0u64;
-    let mut results = Vec::with_capacity(pending.len());
-    for p in pending {
-        let resp = p.wait()?;
-        epoch = epoch.max(resp.epoch);
-        results.push(
-            resp.hits
-                .iter()
-                .map(|h| WireHit { row: h.winner as u64, score: h.score })
-                .collect(),
-        );
-    }
-    Ok((epoch, results))
 }
 
 #[cfg(test)]
@@ -333,75 +406,107 @@ mod tests {
     use crate::config::CosimeConfig;
     use crate::util::{rng, BitVec};
 
-    fn start(rows: usize, dims: usize, shards: usize) -> (CosimeServer, Vec<BitVec>) {
+    fn start(rows: usize, dims: usize, shards: usize, io: IoMode) -> (CosimeServer, Vec<BitVec>) {
         let mut r = rng(3);
         let words: Vec<BitVec> = (0..rows).map(|_| BitVec::random(dims, 0.5, &mut r)).collect();
         let cfg = CosimeConfig::default();
-        let router = ShardRouter::build(&cfg, shards, 64, words.clone(), |w| {
+        let router = RouterBackend::build(&cfg, shards, 64, words.clone(), |w| {
             Ok(Box::new(DigitalExactEngine::new(w)) as Box<dyn AmEngine>)
         })
         .unwrap();
         let mut scfg = cfg.server.clone();
         scfg.listen = "127.0.0.1:0".to_string();
+        scfg.io = io;
         (CosimeServer::serve(&scfg, router).unwrap(), words)
     }
 
     #[test]
     fn serves_health_over_a_raw_socket() {
-        let (server, _) = start(20, 64, 2);
-        let mut stream = TcpStream::connect(server.local_addr()).unwrap();
-        protocol::write_frame(&mut stream, Op::Health, &[]).unwrap();
-        let (h, payload) = protocol::read_frame(&mut stream, 1 << 20).unwrap();
-        assert_eq!(Op::from_u8(h.op), Some(Op::HealthOk));
-        let health = protocol::decode_health_response(&payload).unwrap();
-        assert_eq!(health.rows, 20);
-        assert_eq!(health.dims, 64);
-        assert_eq!(health.shards, 2);
-        drop(stream);
-        server.shutdown();
+        for io in [IoMode::Threaded, IoMode::EventLoop] {
+            let (server, _) = start(20, 64, 2, io);
+            let mut stream = TcpStream::connect(server.local_addr()).unwrap();
+            protocol::write_frame(&mut stream, Op::Health, &[]).unwrap();
+            let (h, payload) = protocol::read_frame(&mut stream, 1 << 20).unwrap();
+            assert_eq!(Op::from_u8(h.op), Some(Op::HealthOk), "{io:?}");
+            assert_eq!(h.version, VERSION, "server answers in the request's version");
+            let health = protocol::decode_health_response(&payload).unwrap();
+            assert_eq!(health.rows, 20);
+            assert_eq!(health.dims, 64);
+            assert_eq!(health.shards, 2);
+            assert!(health.max_batch > 0, "v2 health advertises the batch hint");
+            assert!(health.max_k > 0, "v2 health advertises the k hint");
+            drop(stream);
+            server.shutdown();
+        }
+    }
+
+    /// A v1-framed request is answered with a v1 frame whose payload uses
+    /// the legacy layout — old clients keep decoding.
+    #[test]
+    fn v1_clients_get_v1_frames_back() {
+        for io in [IoMode::Threaded, IoMode::EventLoop] {
+            let (server, _) = start(12, 32, 1, io);
+            let mut stream = TcpStream::connect(server.local_addr()).unwrap();
+            protocol::write_frame_v(&mut stream, 1, Op::Health, &[]).unwrap();
+            let (h, payload) = protocol::read_frame(&mut stream, 1 << 20).unwrap();
+            assert_eq!(h.version, 1, "{io:?}");
+            assert_eq!(Op::from_u8(h.op), Some(Op::HealthOk));
+            assert_eq!(payload.len(), 28, "legacy 28-byte health payload");
+            let health = protocol::decode_health_response(&payload).unwrap();
+            assert_eq!(health.rows, 12);
+            assert_eq!((health.max_batch, health.max_k), (0, 0), "hints absent on v1");
+            drop(stream);
+            server.shutdown();
+        }
     }
 
     #[test]
     fn bad_version_unknown_op_and_flags_keep_the_connection_alive() {
-        let (server, _) = start(10, 32, 1);
-        let mut stream = TcpStream::connect(server.local_addr()).unwrap();
+        for io in [IoMode::Threaded, IoMode::EventLoop] {
+            let (server, _) = start(10, 32, 1, io);
+            let mut stream = TcpStream::connect(server.local_addr()).unwrap();
 
-        // Hand-build a frame with a wrong version byte.
-        let mut frame = Vec::new();
-        protocol::write_frame(&mut frame, Op::Health, &[]).unwrap();
-        frame[4] = 99;
-        stream.write_all(&frame).unwrap();
-        let (h, payload) = protocol::read_frame(&mut stream, 1 << 20).unwrap();
-        assert_eq!(Op::from_u8(h.op), Some(Op::Error));
-        let e = protocol::decode_error_response(&payload).unwrap();
-        assert_eq!(e.code, ErrorCode::BadVersion);
+            // Hand-build a frame with a wrong version byte.
+            let mut frame = Vec::new();
+            protocol::write_frame(&mut frame, Op::Health, &[]).unwrap();
+            frame[4] = 99;
+            stream.write_all(&frame).unwrap();
+            let (h, payload) = protocol::read_frame(&mut stream, 1 << 20).unwrap();
+            assert_eq!(Op::from_u8(h.op), Some(Op::Error), "{io:?}");
+            let e = protocol::decode_error_response(&payload).unwrap();
+            assert_eq!(e.code, ErrorCode::BadVersion);
 
-        // Unknown opcode, valid header: payload is consumed, error returned.
-        let mut frame = Vec::new();
-        protocol::write_frame(&mut frame, Op::Health, &[1, 2, 3]).unwrap();
-        frame[5] = 0x42;
-        stream.write_all(&frame).unwrap();
-        let (h, payload) = protocol::read_frame(&mut stream, 1 << 20).unwrap();
-        assert_eq!(Op::from_u8(h.op), Some(Op::Error));
-        assert_eq!(protocol::decode_error_response(&payload).unwrap().code, ErrorCode::UnknownOp);
+            // Unknown opcode, valid header: payload is consumed, error
+            // returned.
+            let mut frame = Vec::new();
+            protocol::write_frame(&mut frame, Op::Health, &[1, 2, 3]).unwrap();
+            frame[5] = 0x42;
+            stream.write_all(&frame).unwrap();
+            let (h, payload) = protocol::read_frame(&mut stream, 1 << 20).unwrap();
+            assert_eq!(Op::from_u8(h.op), Some(Op::Error));
+            assert_eq!(
+                protocol::decode_error_response(&payload).unwrap().code,
+                ErrorCode::UnknownOp
+            );
 
-        // Nonzero reserved flags: rejected (must-understand semantics),
-        // connection stays in sync.
-        let mut frame = Vec::new();
-        protocol::write_frame(&mut frame, Op::Health, &[]).unwrap();
-        frame[6] = 0x01;
-        stream.write_all(&frame).unwrap();
-        let (h, payload) = protocol::read_frame(&mut stream, 1 << 20).unwrap();
-        assert_eq!(Op::from_u8(h.op), Some(Op::Error));
-        let e = protocol::decode_error_response(&payload).unwrap();
-        assert_eq!(e.code, ErrorCode::BadFrame);
-        assert!(e.message.contains("flags"), "{e}");
+            // Nonzero reserved flags: rejected (must-understand semantics),
+            // connection stays in sync.
+            let mut frame = Vec::new();
+            protocol::write_frame(&mut frame, Op::Health, &[]).unwrap();
+            frame[6] = 0x01;
+            stream.write_all(&frame).unwrap();
+            let (h, payload) = protocol::read_frame(&mut stream, 1 << 20).unwrap();
+            assert_eq!(Op::from_u8(h.op), Some(Op::Error));
+            let e = protocol::decode_error_response(&payload).unwrap();
+            assert_eq!(e.code, ErrorCode::BadFrame);
+            assert!(e.message.contains("flags"), "{e}");
 
-        // The same connection still answers a well-formed request.
-        protocol::write_frame(&mut stream, Op::Health, &[]).unwrap();
-        let (h, _) = protocol::read_frame(&mut stream, 1 << 20).unwrap();
-        assert_eq!(Op::from_u8(h.op), Some(Op::HealthOk));
-        drop(stream);
-        server.shutdown();
+            // The same connection still answers a well-formed request.
+            protocol::write_frame(&mut stream, Op::Health, &[]).unwrap();
+            let (h, _) = protocol::read_frame(&mut stream, 1 << 20).unwrap();
+            assert_eq!(Op::from_u8(h.op), Some(Op::HealthOk));
+            drop(stream);
+            server.shutdown();
+        }
     }
 }

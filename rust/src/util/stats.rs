@@ -81,6 +81,41 @@ impl RunningStats {
     pub fn max(&self) -> f64 {
         if self.n == 0 { 0.0 } else { self.max }
     }
+
+    /// Fold another accumulator into this one (parallel Welford combine:
+    /// Chan et al.'s pairwise update), as if every sample pushed into
+    /// `other` had been pushed here.
+    pub fn merge_from(&mut self, other: &RunningStats) {
+        if other.n == 0 {
+            return;
+        }
+        if self.n == 0 {
+            *self = other.clone();
+            return;
+        }
+        let n1 = self.n as f64;
+        let n2 = other.n as f64;
+        let d = other.mean - self.mean;
+        self.mean += d * n2 / (n1 + n2);
+        self.m2 += other.m2 + d * d * n1 * n2 / (n1 + n2);
+        self.n += other.n;
+        self.min = self.min.min(other.min);
+        self.max = self.max.max(other.max);
+    }
+
+    /// Reconstruct from raw parts (the wire metrics codec ships these).
+    pub fn from_raw(n: u64, mean: f64, m2: f64, min: f64, max: f64) -> Self {
+        if n == 0 {
+            return RunningStats::new();
+        }
+        RunningStats { n, mean, m2, min, max }
+    }
+
+    /// Raw parts `(n, mean, m2, min, max)` for serialization; the inverse
+    /// of [`RunningStats::from_raw`].
+    pub fn raw(&self) -> (u64, f64, f64, f64, f64) {
+        (self.n, self.mean, self.m2, self.min, self.max)
+    }
 }
 
 /// Fixed-bucket latency histogram (log-spaced), used by coordinator metrics.
@@ -107,6 +142,47 @@ impl Histogram {
         let idx = self.bounds.iter().position(|&b| x <= b).unwrap_or(self.bounds.len());
         self.counts[idx] += 1;
         self.stats.push(x);
+    }
+
+    /// Fold another histogram with the *same bucket layout* into this one,
+    /// as if every sample recorded there had been recorded here — the exact
+    /// cross-lane quantile merge (buckets are fixed and aligned, so adding
+    /// counts loses nothing the single-lane histogram had). Panics if the
+    /// bucket bounds differ (different construction parameters).
+    pub fn merge_from(&mut self, other: &Histogram) {
+        assert_eq!(
+            self.bounds, other.bounds,
+            "Histogram::merge_from requires identical bucket layouts"
+        );
+        for (c, o) in self.counts.iter_mut().zip(&other.counts) {
+            *c += o;
+        }
+        self.stats.merge_from(&other.stats);
+    }
+
+    /// Per-bucket counts (one per bound, plus the trailing overflow bucket).
+    pub fn counts(&self) -> &[u64] {
+        &self.counts
+    }
+
+    /// The summary accumulator behind [`Histogram::mean`]/`max`/quantile
+    /// endpoints (for serialization alongside [`Histogram::counts`]).
+    pub fn stats(&self) -> &RunningStats {
+        &self.stats
+    }
+
+    /// Rebuild a histogram from serialized parts. The caller supplies the
+    /// same construction parameters (`lo`/`hi`/`n` of
+    /// [`Histogram::log_spaced`]); `counts` must match that layout's bucket
+    /// count or the reconstruction is rejected with `None`.
+    pub fn from_parts(lo: f64, hi: f64, n: usize, counts: &[u64], stats: RunningStats) -> Option<Histogram> {
+        let mut h = Histogram::log_spaced(lo, hi, n);
+        if counts.len() != h.counts.len() {
+            return None;
+        }
+        h.counts.copy_from_slice(counts);
+        h.stats = stats;
+        Some(h)
     }
 
     pub fn count(&self) -> u64 {
@@ -192,6 +268,85 @@ mod tests {
         // Empty histogram stays at the 0.0 sentinel.
         let empty = Histogram::log_spaced(1.0, 1000.0, 30);
         assert_eq!(empty.quantile(0.0), 0.0);
+    }
+
+    /// Merging two histograms must be indistinguishable from recording
+    /// every sample into one — the property the cross-shard percentile
+    /// aggregation relies on.
+    #[test]
+    fn histogram_merge_equals_single_recording() {
+        let mut a = Histogram::log_spaced(1.0, 1000.0, 30);
+        let mut b = Histogram::log_spaced(1.0, 1000.0, 30);
+        let mut all = Histogram::log_spaced(1.0, 1000.0, 30);
+        for i in 1..=500 {
+            let x = (i * 7 % 990 + 1) as f64;
+            if i % 3 == 0 {
+                a.record(x);
+            } else {
+                b.record(x);
+            }
+            all.record(x);
+        }
+        a.merge_from(&b);
+        assert_eq!(a.count(), all.count());
+        assert_eq!(a.counts(), all.counts());
+        for q in [0.0, 0.5, 0.9, 0.99, 1.0] {
+            assert_eq!(a.quantile(q), all.quantile(q), "quantile {q}");
+        }
+        assert!((a.mean() - all.mean()).abs() < 1e-9);
+        assert_eq!(a.max(), all.max());
+        // Merging an empty histogram is a no-op.
+        let before = a.count();
+        a.merge_from(&Histogram::log_spaced(1.0, 1000.0, 30));
+        assert_eq!(a.count(), before);
+    }
+
+    #[test]
+    fn running_stats_merge_matches_combined_stream() {
+        let xs = [3.0, 1.0, 4.0, 1.0, 5.0, 9.0, 2.0, 6.0];
+        let mut left = RunningStats::new();
+        let mut right = RunningStats::new();
+        let mut whole = RunningStats::new();
+        for (i, &x) in xs.iter().enumerate() {
+            if i < 3 {
+                left.push(x);
+            } else {
+                right.push(x);
+            }
+            whole.push(x);
+        }
+        left.merge_from(&right);
+        assert_eq!(left.count(), whole.count());
+        assert!((left.mean() - whole.mean()).abs() < 1e-12);
+        assert!((left.stddev() - whole.stddev()).abs() < 1e-12);
+        assert_eq!(left.min(), whole.min());
+        assert_eq!(left.max(), whole.max());
+        // Raw round trip.
+        let (n, mean, m2, min, max) = whole.raw();
+        let back = RunningStats::from_raw(n, mean, m2, min, max);
+        assert_eq!(back.count(), whole.count());
+        assert!((back.variance() - whole.variance()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn histogram_from_parts_round_trips() {
+        let mut h = Histogram::log_spaced(0.5, 10_000_000.0, 120);
+        for x in [1.0, 50.0, 900.0, 1e6] {
+            h.record(x);
+        }
+        let back = Histogram::from_parts(
+            0.5,
+            10_000_000.0,
+            120,
+            h.counts(),
+            h.stats().clone(),
+        )
+        .expect("layout matches");
+        assert_eq!(back.counts(), h.counts());
+        assert_eq!(back.quantile(0.5), h.quantile(0.5));
+        assert_eq!(back.mean(), h.mean());
+        // Wrong layout is rejected, not silently misbinned.
+        assert!(Histogram::from_parts(0.5, 100.0, 10, h.counts(), h.stats().clone()).is_none());
     }
 
     #[test]

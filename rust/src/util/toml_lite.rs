@@ -5,13 +5,16 @@
 
 use std::collections::BTreeMap;
 
-/// A parsed scalar value.
+/// A parsed scalar value (or a flat list of scalars).
 #[derive(Debug, Clone, PartialEq)]
 pub enum TomlValue {
     Float(f64),
     Int(i64),
     Bool(bool),
     Str(String),
+    /// A single-line array of scalars, e.g. `["a:1", "b:2"]`. Nested arrays
+    /// are not part of the supported subset.
+    List(Vec<TomlValue>),
 }
 
 impl TomlValue {
@@ -48,6 +51,21 @@ impl TomlValue {
     pub fn as_str(&self) -> Option<&str> {
         match self {
             TomlValue::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    /// A list whose every element is a string (e.g. an address list).
+    /// An empty list qualifies.
+    pub fn as_str_list(&self) -> Option<Vec<String>> {
+        match self {
+            TomlValue::List(items) => {
+                let mut out = Vec::with_capacity(items.len());
+                for item in items {
+                    out.push(item.as_str()?.to_string());
+                }
+                Some(out)
+            }
             _ => None,
         }
     }
@@ -129,6 +147,21 @@ fn parse_value(s: &str) -> Option<TomlValue> {
         "false" => return Some(TomlValue::Bool(false)),
         _ => {}
     }
+    if let Some(body) = s.strip_prefix('[') {
+        let body = body.strip_suffix(']')?.trim();
+        if body.is_empty() {
+            return Some(TomlValue::List(Vec::new()));
+        }
+        let mut items = Vec::new();
+        for part in split_list_items(body) {
+            let part = part.trim();
+            if part.is_empty() || part.starts_with('[') {
+                return None; // empty element or nested array: unsupported
+            }
+            items.push(parse_value(part)?);
+        }
+        return Some(TomlValue::List(items));
+    }
     if let Some(q) = s.strip_prefix('"') {
         let inner = q.strip_suffix('"')?;
         // Minimal escape handling.
@@ -142,6 +175,25 @@ fn parse_value(s: &str) -> Option<TomlValue> {
         }
     }
     clean.parse::<f64>().ok().map(TomlValue::Float)
+}
+
+/// Split a single-line array body on commas that sit outside quoted strings.
+fn split_list_items(body: &str) -> Vec<&str> {
+    let mut items = Vec::new();
+    let mut start = 0;
+    let mut in_str = false;
+    for (i, c) in body.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            ',' if !in_str => {
+                items.push(&body[start..i]);
+                start = i + 1;
+            }
+            _ => {}
+        }
+    }
+    items.push(&body[start..]);
+    items
 }
 
 /// Serialize a doc back to TOML text (deterministic ordering).
@@ -177,6 +229,10 @@ fn fmt_value(v: &TomlValue) -> String {
         TomlValue::Int(i) => format!("{i}"),
         TomlValue::Bool(b) => format!("{b}"),
         TomlValue::Str(s) => format!("\"{}\"", s.replace('\\', "\\\\").replace('"', "\\\"")),
+        TomlValue::List(items) => {
+            let inner: Vec<String> = items.iter().map(fmt_value).collect();
+            format!("[{}]", inner.join(", "))
+        }
     }
 }
 
@@ -230,5 +286,28 @@ mod tests {
     fn int_float_coercion() {
         let doc = parse("[a]\nn = 3\n").unwrap();
         assert_eq!(doc["a"]["n"].as_f64(), Some(3.0));
+    }
+
+    #[test]
+    fn string_lists_parse_and_roundtrip() {
+        let doc = parse("[server]\nremote_shards = [\"h1:7411\", \"h2:7411\"]\nempty = []\n")
+            .unwrap();
+        assert_eq!(
+            doc["server"]["remote_shards"].as_str_list(),
+            Some(vec!["h1:7411".to_string(), "h2:7411".to_string()])
+        );
+        assert_eq!(doc["server"]["empty"].as_str_list(), Some(Vec::new()));
+        // Commas inside quoted elements do not split.
+        let doc = parse("[a]\nxs = [\"x,y\", \"z\"]\n").unwrap();
+        assert_eq!(doc["a"]["xs"].as_str_list(), Some(vec!["x,y".into(), "z".into()]));
+        // Round trip through the serializer.
+        let text = to_string(&parse("[a]\nxs = [\"p\", \"q\"]\n").unwrap());
+        assert_eq!(parse(&text).unwrap()["a"]["xs"].as_str_list().unwrap(), vec!["p", "q"]);
+        // A scalar is not a string list; a mixed list is not either.
+        assert_eq!(parse("[a]\nx = 3\n").unwrap()["a"]["x"].as_str_list(), None);
+        assert_eq!(parse("[a]\nx = [\"s\", 3]\n").unwrap()["a"]["x"].as_str_list(), None);
+        // Unterminated and nested arrays are parse errors.
+        assert!(parse("[a]\nx = [\"s\"\n").is_err());
+        assert!(parse("[a]\nx = [[\"s\"]]\n").is_err());
     }
 }

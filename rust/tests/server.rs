@@ -4,29 +4,41 @@
 //! observed across the wire, protocol edge cases (malformed, truncated and
 //! oversized frames, disconnect mid-batch), backpressure, pipelining and
 //! scatter-gather sharding.
+//!
+//! Every wire-level test runs under **both** I/O engines
+//! ([`IoMode::Threaded`] and [`IoMode::EventLoop`]) — the two must be
+//! indistinguishable on the wire. On top sit the [`Backend`]-conformance
+//! suite (the same assertions over a local stack, an in-process router and
+//! a router over *remote* shard servers) and a regression test that the
+//! event loop never reorders pipelined responses under a slow consumer.
 
 use std::io::Write;
 use std::net::TcpStream;
 use std::time::Duration;
 
 use cosime::am::{AmEngine, DigitalExactEngine};
-use cosime::config::CosimeConfig;
+use cosime::config::{CosimeConfig, IoMode};
+use cosime::coordinator::{AdminCmd, AmService, Backend, LocalBackend, SubmitError, TileManager};
 use cosime::server::protocol::{self, Op};
 use cosime::server::{
-    split_row, Client, CosimeServer, ErrorCode, ShardRouter, WireError,
+    split_row, Client, CosimeServer, ErrorCode, RemoteBackend, RouterBackend, ShardRouter,
+    WireError,
 };
 use cosime::util::{rng, BitVec};
 
 const DIMS: usize = 128;
+const BOTH_IO: [IoMode; 2] = [IoMode::Threaded, IoMode::EventLoop];
 
-fn start_server(
+fn start_server_io(
     rows: usize,
     shards: usize,
+    io: IoMode,
     tweak: impl FnOnce(&mut CosimeConfig),
 ) -> (CosimeServer, Vec<BitVec>) {
     let mut cfg = CosimeConfig::default();
     cfg.server.listen = "127.0.0.1:0".to_string();
     cfg.server.shards = shards;
+    cfg.server.io = io;
     cfg.coordinator.workers = 2;
     tweak(&mut cfg);
     let mut r = rng(42);
@@ -44,28 +56,72 @@ fn connect(server: &CosimeServer) -> Client {
 
 #[test]
 fn search_over_the_wire_matches_flat_reference() {
-    for shards in [1usize, 2] {
-        let (server, words) = start_server(100, shards, |_| {});
+    for io in BOTH_IO {
+        for shards in [1usize, 2] {
+            let (server, words) = start_server_io(100, shards, io, |_| {});
+            let reference = DigitalExactEngine::new(words);
+            let mut client = connect(&server);
+            let health = client.health().unwrap();
+            assert_eq!(health.rows, 100, "{io:?}");
+            assert_eq!(health.dims, DIMS as u64);
+            assert_eq!(health.shards, shards as u32);
+
+            let mut r = rng(7);
+            for _ in 0..20 {
+                let q = BitVec::random(DIMS, 0.5, &mut r);
+                let k = 1 + r.below(5);
+                let (_, hits) = client.search_topk(&q, k).unwrap();
+                let want = reference.search_topk(&q, k);
+                assert_eq!(hits.len(), want.len(), "depth ({io:?}, shards {shards}, k {k})");
+                for (got, exp) in hits.iter().zip(&want) {
+                    assert_eq!(got.score, exp.score, "score sequence ({io:?}, {shards} shards)");
+                }
+                if shards == 1 {
+                    // Single shard: global ids are plain row indices.
+                    assert_eq!(hits[0].row as usize, want[0].winner);
+                }
+            }
+            drop(client);
+            server.shutdown();
+        }
+    }
+}
+
+#[test]
+fn batched_and_pipelined_searches_round_trip() {
+    for io in BOTH_IO {
+        let (server, words) = start_server_io(80, 2, io, |_| {});
         let reference = DigitalExactEngine::new(words);
         let mut client = connect(&server);
-        let health = client.health().unwrap();
-        assert_eq!(health.rows, 100);
-        assert_eq!(health.dims, DIMS as u64);
-        assert_eq!(health.shards, shards as u32);
+        let mut r = rng(9);
 
-        let mut r = rng(7);
-        for _ in 0..20 {
-            let q = BitVec::random(DIMS, 0.5, &mut r);
-            let k = 1 + r.below(5);
-            let (_, hits) = client.search_topk(&q, k).unwrap();
-            let want = reference.search_topk(&q, k);
-            assert_eq!(hits.len(), want.len(), "depth (shards {shards}, k {k})");
+        // One frame carrying a batch: one ranked list per query.
+        let queries: Vec<BitVec> = (0..12).map(|_| BitVec::random(DIMS, 0.5, &mut r)).collect();
+        let resp = client.search_batch(&queries, 3).unwrap();
+        assert_eq!(resp.results.len(), 12, "{io:?}");
+        for (q, hits) in queries.iter().zip(&resp.results) {
+            let want = reference.search_topk(q, 3);
+            assert_eq!(hits.len(), want.len());
             for (got, exp) in hits.iter().zip(&want) {
-                assert_eq!(got.score, exp.score, "score sequence (shards {shards})");
+                assert_eq!(got.score, exp.score);
             }
-            if shards == 1 {
-                // Single shard: global ids are plain row indices.
-                assert_eq!(hits[0].row as usize, want[0].winner);
+        }
+
+        // Pipelined: several frames in flight on one socket, responses in
+        // order.
+        let mut pipe = client.pipeline();
+        for chunk in queries.chunks(3) {
+            pipe.search_batch(chunk, 2).unwrap();
+        }
+        let responses = pipe.finish().unwrap();
+        assert_eq!(responses.len(), 4);
+        for (chunk, resp) in queries.chunks(3).zip(&responses) {
+            assert_eq!(resp.results.len(), chunk.len());
+            for (q, hits) in chunk.iter().zip(&resp.results) {
+                let want = reference.search_topk(q, 2);
+                for (got, exp) in hits.iter().zip(&want) {
+                    assert_eq!(got.score, exp.score);
+                }
             }
         }
         drop(client);
@@ -73,144 +129,450 @@ fn search_over_the_wire_matches_flat_reference() {
     }
 }
 
+/// The acceptance-path test: a live admin update applied over the socket
+/// must be observed by subsequent top-k searches over the same wire.
 #[test]
-fn batched_and_pipelined_searches_round_trip() {
-    let (server, words) = start_server(80, 2, |_| {});
-    let reference = DigitalExactEngine::new(words);
-    let mut client = connect(&server);
-    let mut r = rng(9);
+fn live_update_over_the_wire_is_observed_by_searches() {
+    for io in BOTH_IO {
+        let (server, _) = start_server_io(60, 2, io, |_| {});
+        let mut client = connect(&server);
+        let mut r = rng(11);
+        let epoch0 = client.health().unwrap().epoch;
 
-    // One frame carrying a batch: one ranked list per query.
-    let queries: Vec<BitVec> = (0..12).map(|_| BitVec::random(DIMS, 0.5, &mut r)).collect();
-    let resp = client.search_batch(&queries, 3).unwrap();
-    assert_eq!(resp.results.len(), 12);
-    for (q, hits) in queries.iter().zip(&resp.results) {
-        let want = reference.search_topk(q, 3);
+        // Find some currently stored row via a search.
+        let q = BitVec::random(DIMS, 0.5, &mut r);
+        let (_, hits) = client.search_topk(&q, 1).unwrap();
+        let target = hits[0].row;
+
+        // Reprogram it to a fresh word through the admin plane.
+        let fresh = BitVec::random(DIMS, 0.5, &mut r);
+        let resp = client.update(target, &fresh).unwrap();
+        assert_eq!(resp.row, target, "{io:?}");
+        assert!(resp.epoch > epoch0, "update bumps the aggregate epoch");
+        let report = resp.write.expect("update programs the array");
+        assert_eq!(report.cells, DIMS as u64);
+        assert!(report.energy_j > 0.0 && report.latency_s > 0.0);
+
+        // The update is visible in subsequent top-k results, with the epoch
+        // stamp proving the response came from a post-commit snapshot.
+        let (epoch, hits) = client.search_topk(&fresh, 2).unwrap();
+        assert_eq!(hits[0].row, target, "updated word wins its own search");
+        assert_eq!(hits[0].score, f64::from(fresh.count_ones()), "exact self-match");
+        assert!(epoch >= resp.epoch);
+
+        // Insert + delete round trip with global ids.
+        let extra = BitVec::random(DIMS, 0.5, &mut r);
+        let ins = client.insert(&extra).unwrap();
+        assert_eq!(ins.rows, 61);
+        assert!(split_row(ins.row).0 < 2, "owner shard encoded in the id");
+        let (_, hits) = client.search_topk(&extra, 1).unwrap();
+        assert_eq!(hits[0].row, ins.row);
+        let del = client.delete(ins.row).unwrap();
+        assert_eq!(del.rows, 60);
+        assert!(del.write.is_none(), "delete spends no programming pulses");
+
+        // Admin rejections travel back as typed errors.
+        let err = client.update(u64::MAX, &fresh).unwrap_err();
+        let wire = err.downcast_ref::<WireError>().expect("typed wire error");
+        assert_eq!(wire.code, ErrorCode::BadQuery);
+        let err = client.insert(&BitVec::zeros(32)).unwrap_err();
+        assert_eq!(err.downcast_ref::<WireError>().unwrap().code, ErrorCode::BadQuery);
+
+        // Metrics over the wire reflect the admin traffic. (Only the dims
+        // mismatch reached a shard; the bad global row was rejected by the
+        // router before touching any shard's metrics.)
+        let m = client.metrics().unwrap();
+        assert!(m.completed >= 3);
+        assert!(m.write_pulses > 0 && m.write_energy_j > 0.0);
+        assert_eq!(m.admin_rejected, 1);
+        drop(client);
+        server.shutdown();
+    }
+}
+
+/// Admin compare-and-swap over the wire: a pin against the owning shard's
+/// epoch commits exactly once; the loser gets a typed `epoch-mismatch`
+/// frame carrying machine-readable `(expected, actual)`.
+#[test]
+fn admin_cas_over_the_wire() {
+    for io in BOTH_IO {
+        let (server, _) = start_server_io(40, 2, io, |_| {});
+        let mut client = connect(&server);
+        let mut r = rng(27);
+
+        let w = BitVec::random(DIMS, 0.5, &mut r);
+        let ins = client.insert(&w).unwrap();
+
+        // Pin the owning shard's epoch: the first conditional update wins…
+        let w2 = BitVec::random(DIMS, 0.5, &mut r);
+        let upd = client
+            .admin(
+                &cosime::server::WireAdminOp::Update { row: ins.row, word: w2 },
+                Some(ins.shard_epoch),
+            )
+            .unwrap();
+        assert!(upd.shard_epoch > ins.shard_epoch, "{io:?}");
+
+        // …and a retry with the now-stale pin is a typed mismatch.
+        let w3 = BitVec::random(DIMS, 0.5, &mut r);
+        let err = client
+            .admin(
+                &cosime::server::WireAdminOp::Update { row: ins.row, word: w3 },
+                Some(ins.shard_epoch),
+            )
+            .unwrap_err();
+        let wire = err.downcast_ref::<WireError>().expect("typed wire error");
+        assert_eq!(wire.code, ErrorCode::EpochMismatch);
+        assert_eq!(wire.epochs, Some((ins.shard_epoch, upd.shard_epoch)));
+
+        // The canonical retry: pin the epoch from the mismatch and commit.
+        let (_, actual) = wire.epochs.unwrap();
+        let retry = client
+            .admin(
+                &cosime::server::WireAdminOp::Delete { row: ins.row },
+                Some(actual),
+            )
+            .unwrap();
+        assert_eq!(retry.rows, 40);
+        drop(client);
+        server.shutdown();
+    }
+}
+
+#[test]
+fn concurrent_clients_all_served_correctly() {
+    for io in BOTH_IO {
+        let (server, words) = start_server_io(200, 2, io, |cfg| {
+            cfg.coordinator.queue_depth = 4096;
+            cfg.coordinator.workers = 3;
+        });
+        let reference = &DigitalExactEngine::new(words);
+        let addr = server.local_addr();
+        let errors = std::sync::atomic::AtomicUsize::new(0);
+        std::thread::scope(|s| {
+            for t in 0..6u64 {
+                let errors = &errors;
+                s.spawn(move || {
+                    let mut client =
+                        Client::connect_retry(addr, 10, Duration::from_millis(20)).unwrap();
+                    let mut r = rng(100 + t);
+                    for _ in 0..40 {
+                        let q = BitVec::random(DIMS, 0.5, &mut r);
+                        match client.search_topk(&q, 2) {
+                            Ok((_, hits)) => {
+                                let want = reference.search_topk(&q, 2);
+                                if hits.len() != want.len()
+                                    || hits.iter().zip(&want).any(|(a, b)| a.score != b.score)
+                                {
+                                    errors.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                                }
+                            }
+                            Err(_) => {
+                                errors.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                            }
+                        }
+                    }
+                });
+            }
+        });
+        assert_eq!(errors.load(std::sync::atomic::Ordering::Relaxed), 0, "{io:?}");
+        let m = server.backend().metrics().unwrap();
+        // 6 clients x 40 queries, each scattered to 2 shards.
+        assert_eq!(m.completed, 480);
+        server.shutdown();
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Router over remote shards: a routing tier whose children are other
+// cosimed servers, reached through the wire protocol.
+// ---------------------------------------------------------------------------
+
+/// Start `n` flat shard servers, each over its slice of `words`, and a
+/// routing tier fanned over them. Returns (tier, shard servers).
+fn start_remote_topology(
+    words: &[BitVec],
+    n: usize,
+    tier_io: IoMode,
+) -> (CosimeServer, Vec<CosimeServer>) {
+    let mut shard_servers = Vec::with_capacity(n);
+    let per = words.len().div_ceil(n);
+    for (i, chunk) in words.chunks(per).enumerate() {
+        let mut cfg = CosimeConfig::default();
+        cfg.server.listen = "127.0.0.1:0".to_string();
+        cfg.server.shards = 1; // children must be flat for global ids
+        cfg.server.io = BOTH_IO[i % 2]; // mix engines across the fleet
+        cfg.coordinator.workers = 2;
+        let router = ShardRouter::build(&cfg, 1, 64, chunk.to_vec(), |w| {
+            Ok(Box::new(DigitalExactEngine::new(w)) as Box<dyn AmEngine>)
+        })
+        .unwrap();
+        shard_servers.push(CosimeServer::serve(&cfg.server, router).unwrap());
+    }
+    let children: Vec<Box<dyn Backend>> = shard_servers
+        .iter()
+        .map(|s| {
+            Box::new(
+                RemoteBackend::connect_retry(s.local_addr(), 10, Duration::from_millis(20))
+                    .unwrap(),
+            ) as Box<dyn Backend>
+        })
+        .collect();
+    let tier = RouterBackend::from_backends(children).unwrap();
+    let mut cfg = CosimeConfig::default();
+    cfg.server.listen = "127.0.0.1:0".to_string();
+    cfg.server.io = tier_io;
+    (CosimeServer::serve(&cfg.server, tier).unwrap(), shard_servers)
+}
+
+/// The acceptance-criterion test: a scatter-gather search over ≥2 *remote*
+/// shard backends returns results bit-identical (scores, depth, order) to
+/// a flat single-store reference — through a full client → tier → shards
+/// wire path.
+#[test]
+fn router_over_remote_shards_matches_flat_reference() {
+    for tier_io in BOTH_IO {
+        let mut r = rng(61);
+        let words: Vec<BitVec> = (0..90).map(|_| BitVec::random(DIMS, 0.5, &mut r)).collect();
+        let reference = DigitalExactEngine::new(words.clone());
+        let (tier, shard_servers) = start_remote_topology(&words, 3, tier_io);
+
+        let mut client = connect(&tier);
+        let health = client.health().unwrap();
+        assert_eq!(health.rows, 90, "{tier_io:?}");
+        assert_eq!(health.shards, 3, "tier advertises its remote fan-out");
+        assert!(health.max_batch > 0, "hints survive the extra hop");
+
+        for _ in 0..15 {
+            let q = BitVec::random(DIMS, 0.5, &mut r);
+            let k = 1 + r.below(6);
+            let (_, hits) = client.search_topk(&q, k).unwrap();
+            let want = reference.search_topk(&q, k);
+            assert_eq!(hits.len(), want.len(), "depth ({tier_io:?}, k {k})");
+            for (got, exp) in hits.iter().zip(&want) {
+                assert_eq!(got.score, exp.score, "bit-identical score sequence");
+            }
+            // Every id names a real shard of the tier.
+            for h in &hits {
+                assert!(split_row(h.row).0 < 3);
+            }
+        }
+
+        // Batched searches cross both hops too.
+        let queries: Vec<BitVec> = (0..8).map(|_| BitVec::random(DIMS, 0.5, &mut r)).collect();
+        let resp = client.search_batch(&queries, 4).unwrap();
+        for (q, hits) in queries.iter().zip(&resp.results) {
+            let want = reference.search_topk(q, 4);
+            assert_eq!(hits.len(), want.len());
+            for (got, exp) in hits.iter().zip(&want) {
+                assert_eq!(got.score, exp.score);
+            }
+        }
+
+        // Admin routes through the tier to the owning remote shard.
+        let extra = BitVec::random(DIMS, 0.5, &mut r);
+        let ins = client.insert(&extra).unwrap();
+        assert_eq!(ins.rows, 91);
+        let (_, hits) = client.search_topk(&extra, 1).unwrap();
+        assert_eq!(hits[0].row, ins.row, "insert via the tier is searchable via the tier");
+        let del = client.delete(ins.row).unwrap();
+        assert_eq!(del.rows, 90);
+
+        drop(client);
+        tier.shutdown();
+        for s in shard_servers {
+            s.shutdown();
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Backend conformance: the same assertions over every Backend shape.
+// ---------------------------------------------------------------------------
+
+/// Assertions every [`Backend`] implementation must satisfy, regardless of
+/// transport or topology. `words` is the full logical store the backend
+/// serves.
+fn assert_backend_conformance(backend: &dyn Backend, words: &[BitVec], seed: u64) {
+    let reference = DigitalExactEngine::new(words.to_vec());
+    let mut r = rng(seed);
+    assert_eq!(backend.dims(), DIMS);
+
+    // Health: identity plus self-describing batching hints.
+    let h = backend.health().unwrap();
+    assert_eq!(h.rows as usize, words.len());
+    assert_eq!(h.dims as usize, DIMS);
+    assert!(h.max_batch > 0, "every served stack advertises max_batch");
+    assert!(h.max_k >= 8, "policy ∩ capability leaves useful depth");
+
+    // Batched search matches the flat reference, ranked, per query.
+    let queries: Vec<BitVec> = (0..7).map(|_| BitVec::random(DIMS, 0.5, &mut r)).collect();
+    let batch = backend.search_batch(&queries, 5).unwrap();
+    assert_eq!(batch.results.len(), queries.len());
+    for (q, hits) in queries.iter().zip(&batch.results) {
+        let want = reference.search_topk(q, 5);
         assert_eq!(hits.len(), want.len());
         for (got, exp) in hits.iter().zip(&want) {
             assert_eq!(got.score, exp.score);
         }
     }
 
-    // Pipelined: several frames in flight on one socket, responses in order.
-    let mut pipe = client.pipeline();
-    for chunk in queries.chunks(3) {
-        pipe.search_batch(chunk, 2).unwrap();
-    }
-    let responses = pipe.finish().unwrap();
-    assert_eq!(responses.len(), 4);
-    for (chunk, resp) in queries.chunks(3).zip(&responses) {
-        assert_eq!(resp.results.len(), chunk.len());
-        for (q, hits) in chunk.iter().zip(&resp.results) {
-            let want = reference.search_topk(q, 2);
-            for (got, exp) in hits.iter().zip(&want) {
-                assert_eq!(got.score, exp.score);
-            }
+    // Nonblocking completion: submit, then poll to completion.
+    let mut ticket = backend.submit_search(&queries[..2], 3).unwrap();
+    let polled = loop {
+        match ticket.poll().unwrap() {
+            Some(result) => break result,
+            None => std::thread::sleep(Duration::from_micros(20)),
         }
+    };
+    assert_eq!(polled.results.len(), 2);
+    for (q, hits) in queries[..2].iter().zip(&polled.results) {
+        assert_eq!(hits[0].score, reference.search_topk(q, 1)[0].score);
     }
-    drop(client);
-    server.shutdown();
-}
 
-/// The acceptance-path test: a live admin update applied over the socket
-/// must be observed by subsequent top-k searches over the same wire.
-#[test]
-fn live_update_over_the_wire_is_observed_by_searches() {
-    let (server, _) = start_server(60, 2, |_| {});
-    let mut client = connect(&server);
-    let mut r = rng(11);
-    let epoch0 = client.health().unwrap().epoch;
+    // Malformed submissions are typed rejections, not transport errors.
+    match backend.submit_search(&[BitVec::zeros(DIMS / 2)], 1) {
+        Err(SubmitError::BadQuery(_)) => {}
+        other => panic!("expected BadQuery for a dims mismatch, got {other:?}"),
+    }
+    match backend.submit_search(&[BitVec::zeros(DIMS)], 0) {
+        Err(SubmitError::BadQuery(_)) => {}
+        other => panic!("expected BadQuery for k = 0, got {other:?}"),
+    }
 
-    // Find some currently stored row via a search.
-    let q = BitVec::random(DIMS, 0.5, &mut r);
-    let (_, hits) = client.search_topk(&q, 1).unwrap();
-    let target = hits[0].row;
+    // Admin: insert → searchable under the returned id → CAS-guarded
+    // delete (stale pin typed-rejected, matching pin commits).
+    let w = BitVec::random(DIMS, 0.5, &mut r);
+    let ins = backend.admin(AdminCmd::Insert { word: w.clone() }, None).unwrap();
+    assert_eq!(ins.rows as usize, words.len() + 1);
+    assert!(ins.write.is_some(), "insert programs the array");
+    let hit = backend.search_batch(std::slice::from_ref(&w), 1).unwrap();
+    assert_eq!(hit.results[0][0].row, ins.row, "hit carries the admin-usable id");
+    match backend.admin(AdminCmd::Delete { row: ins.row }, Some(ins.shard_epoch + 99)) {
+        Err(SubmitError::EpochMismatch { expected, actual }) => {
+            assert_eq!(expected, ins.shard_epoch + 99);
+            assert_eq!(actual, ins.shard_epoch);
+        }
+        other => panic!("expected EpochMismatch, got {other:?}"),
+    }
+    let del = backend.admin(AdminCmd::Delete { row: ins.row }, Some(ins.shard_epoch)).unwrap();
+    assert_eq!(del.rows as usize, words.len());
 
-    // Reprogram it to a fresh word through the admin plane.
-    let fresh = BitVec::random(DIMS, 0.5, &mut r);
-    let resp = client.update(target, &fresh).unwrap();
-    assert_eq!(resp.row, target);
-    assert!(resp.epoch > epoch0, "update bumps the aggregate epoch");
-    let report = resp.write.expect("update programs the array");
-    assert_eq!(report.cells, DIMS as u64);
-    assert!(report.energy_j > 0.0 && report.latency_s > 0.0);
-
-    // The update is visible in subsequent top-k results, with the epoch
-    // stamp proving the response came from a post-commit snapshot.
-    let (epoch, hits) = client.search_topk(&fresh, 2).unwrap();
-    assert_eq!(hits[0].row, target, "updated word wins its own search");
-    assert_eq!(hits[0].score, f64::from(fresh.count_ones()), "exact self-match");
-    assert!(epoch >= resp.epoch);
-
-    // Insert + delete round trip with global ids.
-    let extra = BitVec::random(DIMS, 0.5, &mut r);
-    let ins = client.insert(&extra).unwrap();
-    assert_eq!(ins.rows, 61);
-    assert!(split_row(ins.row).0 < 2, "owner shard encoded in the id");
-    let (_, hits) = client.search_topk(&extra, 1).unwrap();
-    assert_eq!(hits[0].row, ins.row);
-    let del = client.delete(ins.row).unwrap();
-    assert_eq!(del.rows, 60);
-    assert!(del.write.is_none(), "delete spends no programming pulses");
-
-    // Admin rejections travel back as typed errors.
-    let err = client.update(u64::MAX, &fresh).unwrap_err();
-    let wire = err.downcast_ref::<WireError>().expect("typed wire error");
-    assert_eq!(wire.code, ErrorCode::BadQuery);
-    let err = client.insert(&BitVec::zeros(32)).unwrap_err();
-    assert_eq!(err.downcast_ref::<WireError>().unwrap().code, ErrorCode::BadQuery);
-
-    // Metrics over the wire reflect the admin traffic. (Only the dims
-    // mismatch reached a shard; the bad global row was rejected by the
-    // router before touching any shard's metrics.)
-    let m = client.metrics().unwrap();
-    assert!(m.completed >= 3);
-    assert!(m.write_pulses > 0 && m.write_energy_j > 0.0);
-    assert_eq!(m.admin_rejected, 1);
-    drop(client);
-    server.shutdown();
+    // Metrics flow regardless of transport, with histograms for exact
+    // cross-backend percentile merging.
+    let m = backend.metrics().unwrap();
+    assert!(m.completed > 0);
+    assert!(m.lat.is_some(), "snapshot carries its latency histograms");
 }
 
 #[test]
-fn concurrent_clients_all_served_correctly() {
-    let (server, words) = start_server(200, 2, |cfg| {
-        cfg.coordinator.queue_depth = 4096;
-        cfg.coordinator.workers = 3;
-    });
-    let reference = &DigitalExactEngine::new(words);
-    let addr = server.local_addr();
-    let errors = std::sync::atomic::AtomicUsize::new(0);
-    std::thread::scope(|s| {
-        for t in 0..6u64 {
-            let errors = &errors;
-            s.spawn(move || {
-                let mut client =
-                    Client::connect_retry(addr, 10, Duration::from_millis(20)).unwrap();
-                let mut r = rng(100 + t);
-                for _ in 0..40 {
-                    let q = BitVec::random(DIMS, 0.5, &mut r);
-                    match client.search_topk(&q, 2) {
-                        Ok((_, hits)) => {
-                            let want = reference.search_topk(&q, 2);
-                            if hits.len() != want.len()
-                                || hits.iter().zip(&want).any(|(a, b)| a.score != b.score)
-                            {
-                                errors.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
-                            }
-                        }
-                        Err(_) => {
-                            errors.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
-                        }
-                    }
-                }
-            });
+fn backend_conformance_local() {
+    let mut r = rng(71);
+    let words: Vec<BitVec> = (0..50).map(|_| BitVec::random(DIMS, 0.5, &mut r)).collect();
+    let tiles = TileManager::build(words.clone(), 64, |w| {
+        Ok(Box::new(DigitalExactEngine::new(w)) as Box<dyn AmEngine>)
+    })
+    .unwrap();
+    let cfg = CosimeConfig::default();
+    let backend = LocalBackend::new(AmService::start_with_config(&cfg, tiles));
+    assert_backend_conformance(&backend, &words, 72);
+    backend.close();
+}
+
+#[test]
+fn backend_conformance_router_in_process() {
+    let mut r = rng(73);
+    let words: Vec<BitVec> = (0..50).map(|_| BitVec::random(DIMS, 0.5, &mut r)).collect();
+    let cfg = CosimeConfig::default();
+    let backend = RouterBackend::build(&cfg, 3, 64, words.clone(), |w| {
+        Ok(Box::new(DigitalExactEngine::new(w)) as Box<dyn AmEngine>)
+    })
+    .unwrap();
+    assert_backend_conformance(&backend, &words, 74);
+    backend.close();
+}
+
+#[test]
+fn backend_conformance_router_over_remote_shards() {
+    let mut r = rng(75);
+    let words: Vec<BitVec> = (0..50).map(|_| BitVec::random(DIMS, 0.5, &mut r)).collect();
+    let mut shard_servers = Vec::new();
+    for chunk in words.chunks(25) {
+        let mut cfg = CosimeConfig::default();
+        cfg.server.listen = "127.0.0.1:0".to_string();
+        cfg.coordinator.workers = 2;
+        let router = ShardRouter::build(&cfg, 1, 64, chunk.to_vec(), |w| {
+            Ok(Box::new(DigitalExactEngine::new(w)) as Box<dyn AmEngine>)
+        })
+        .unwrap();
+        shard_servers.push(CosimeServer::serve(&cfg.server, router).unwrap());
+    }
+    let children: Vec<Box<dyn Backend>> = shard_servers
+        .iter()
+        .map(|s| {
+            Box::new(
+                RemoteBackend::connect_retry(s.local_addr(), 10, Duration::from_millis(20))
+                    .unwrap(),
+            ) as Box<dyn Backend>
+        })
+        .collect();
+    let backend = RouterBackend::from_backends(children).unwrap();
+    assert_backend_conformance(&backend, &words, 76);
+    backend.close();
+    for s in shard_servers {
+        s.shutdown();
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Event-loop ordering: poll-mode completion must never reorder pipelined
+// responses, even when the head of the line is slow or the client drains
+// lazily.
+// ---------------------------------------------------------------------------
+
+/// Regression test: pipeline frames with *distinct batch sizes* through a
+/// small in-flight window and read the responses one by one with delays —
+/// each response must carry exactly its request's batch size, in request
+/// order. A reordering event loop (completing whichever ticket finishes
+/// first) fails this immediately, because small batches finish before big
+/// ones.
+#[test]
+fn pipelined_responses_keep_request_order_under_slow_consumer() {
+    for io in BOTH_IO {
+        let (server, _) = start_server_io(300, 2, io, |cfg| {
+            cfg.server.max_inflight = 4; // stress the read-throttle path too
+            cfg.coordinator.queue_depth = 4096;
+        });
+        let mut stream = TcpStream::connect(server.local_addr()).unwrap();
+        let mut r = rng(81);
+
+        // 12 frames, frame i carrying i+1 queries (its fingerprint); the
+        // biggest batches go first so out-of-order completion would surface.
+        let frames = 12usize;
+        for i in (0..frames).rev() {
+            let queries: Vec<BitVec> =
+                (0..i + 1).map(|_| BitVec::random(DIMS, 0.5, &mut r)).collect();
+            let payload = protocol::encode_search_request(&queries, 2);
+            protocol::write_frame(&mut stream, Op::Search, &payload).unwrap();
         }
-    });
-    assert_eq!(errors.load(std::sync::atomic::Ordering::Relaxed), 0);
-    let m = server.router().metrics();
-    // 6 clients x 40 queries, each scattered to 2 shards.
-    assert_eq!(m.completed, 480);
-    server.shutdown();
+        stream.flush().unwrap();
+
+        // Drain slowly: the server's in-flight window (4) refills as we
+        // read, and order must hold across refills.
+        for i in (0..frames).rev() {
+            std::thread::sleep(Duration::from_millis(10));
+            let (h, payload) = protocol::read_frame(&mut stream, 256 << 20).unwrap();
+            assert_eq!(Op::from_u8(h.op), Some(Op::SearchOk), "{io:?}");
+            let resp = protocol::decode_search_response(&payload).unwrap();
+            assert_eq!(
+                resp.results.len(),
+                i + 1,
+                "response out of request order ({io:?})"
+            );
+        }
+        drop(stream);
+        server.shutdown();
+    }
 }
 
 // ---------------------------------------------------------------------------
@@ -226,149 +588,172 @@ fn assert_still_serving(server: &CosimeServer) {
 
 #[test]
 fn malformed_frame_is_rejected_and_service_survives() {
-    let (server, _) = start_server(20, 1, |_| {});
-    let mut stream = TcpStream::connect(server.local_addr()).unwrap();
-    // Garbage that is not even a frame header.
-    stream.write_all(b"GET / HTTP/1.1\r\n\r\n").unwrap();
-    stream.flush().unwrap();
-    // The server answers with a BadFrame error frame, then closes.
-    let (h, payload) = protocol::read_frame(&mut stream, 1 << 20).unwrap();
-    assert_eq!(Op::from_u8(h.op), Some(Op::Error));
-    let e = protocol::decode_error_response(&payload).unwrap();
-    assert_eq!(e.code, ErrorCode::BadFrame);
-    assert_still_serving(&server);
-    server.shutdown();
+    for io in BOTH_IO {
+        let (server, _) = start_server_io(20, 1, io, |_| {});
+        let mut stream = TcpStream::connect(server.local_addr()).unwrap();
+        // Garbage that is not even a frame header.
+        stream.write_all(b"GET / HTTP/1.1\r\n\r\n").unwrap();
+        stream.flush().unwrap();
+        // The server answers with a BadFrame error frame, then closes.
+        let (h, payload) = protocol::read_frame(&mut stream, 1 << 20).unwrap();
+        assert_eq!(Op::from_u8(h.op), Some(Op::Error), "{io:?}");
+        let e = protocol::decode_error_response(&payload).unwrap();
+        assert_eq!(e.code, ErrorCode::BadFrame);
+        assert_still_serving(&server);
+        server.shutdown();
+    }
 }
 
 #[test]
 fn truncated_frame_drops_the_connection_without_wedging() {
-    let (server, _) = start_server(20, 1, |_| {});
-    {
-        let mut stream = TcpStream::connect(server.local_addr()).unwrap();
-        // A valid header promising 64 payload bytes, then only 10, then EOF.
-        let mut frame = Vec::new();
-        protocol::write_frame(&mut frame, Op::Search, &[0u8; 64]).unwrap();
-        stream.write_all(&frame[..protocol::HEADER_LEN + 10]).unwrap();
-        stream.flush().unwrap();
-    } // disconnect mid-frame
-    assert_still_serving(&server);
-    server.shutdown();
+    for io in BOTH_IO {
+        let (server, _) = start_server_io(20, 1, io, |_| {});
+        {
+            let mut stream = TcpStream::connect(server.local_addr()).unwrap();
+            // A valid header promising 64 payload bytes, then only 10, EOF.
+            let mut frame = Vec::new();
+            protocol::write_frame(&mut frame, Op::Search, &[0u8; 64]).unwrap();
+            stream.write_all(&frame[..protocol::HEADER_LEN + 10]).unwrap();
+            stream.flush().unwrap();
+        } // disconnect mid-frame
+        assert_still_serving(&server);
+        server.shutdown();
+    }
 }
 
 #[test]
 fn oversized_frame_is_refused_before_reading_the_payload() {
-    let (server, _) = start_server(20, 1, |cfg| {
-        cfg.server.max_frame = 1024;
-    });
-    let mut stream = TcpStream::connect(server.local_addr()).unwrap();
-    // Header declaring a payload far beyond max_frame; never send it.
-    let mut header = [0u8; protocol::HEADER_LEN];
-    header[0..4].copy_from_slice(&protocol::MAGIC.to_le_bytes());
-    header[4] = protocol::VERSION;
-    header[5] = Op::Search as u8;
-    header[8..12].copy_from_slice(&(64u32 << 20).to_le_bytes());
-    stream.write_all(&header).unwrap();
-    stream.flush().unwrap();
-    let (h, payload) = protocol::read_frame(&mut stream, 1 << 20).unwrap();
-    assert_eq!(Op::from_u8(h.op), Some(Op::Error));
-    let e = protocol::decode_error_response(&payload).unwrap();
-    assert_eq!(e.code, ErrorCode::FrameTooLarge);
-    assert_still_serving(&server);
-    server.shutdown();
+    for io in BOTH_IO {
+        let (server, _) = start_server_io(20, 1, io, |cfg| {
+            cfg.server.max_frame = 1024;
+        });
+        let mut stream = TcpStream::connect(server.local_addr()).unwrap();
+        // Header declaring a payload far beyond max_frame; never send it.
+        let mut header = [0u8; protocol::HEADER_LEN];
+        header[0..4].copy_from_slice(&protocol::MAGIC.to_le_bytes());
+        header[4] = protocol::VERSION;
+        header[5] = Op::Search as u8;
+        header[8..12].copy_from_slice(&(64u32 << 20).to_le_bytes());
+        stream.write_all(&header).unwrap();
+        stream.flush().unwrap();
+        let (h, payload) = protocol::read_frame(&mut stream, 1 << 20).unwrap();
+        assert_eq!(Op::from_u8(h.op), Some(Op::Error), "{io:?}");
+        let e = protocol::decode_error_response(&payload).unwrap();
+        assert_eq!(e.code, ErrorCode::FrameTooLarge);
+        assert_still_serving(&server);
+        server.shutdown();
+    }
 }
 
 #[test]
 fn disconnect_mid_batch_does_not_wedge_workers() {
-    let (server, _) = start_server(500, 2, |_| {});
-    let mut r = rng(13);
-    // Fire a pile of pipelined batches and vanish without reading a byte.
-    for _ in 0..3 {
-        let mut stream = TcpStream::connect(server.local_addr()).unwrap();
-        let queries: Vec<BitVec> =
-            (0..32).map(|_| BitVec::random(DIMS, 0.5, &mut r)).collect();
-        let payload = protocol::encode_search_request(&queries, 4);
-        for _ in 0..8 {
-            protocol::write_frame(&mut stream, Op::Search, &payload).unwrap();
+    for io in BOTH_IO {
+        let (server, _) = start_server_io(500, 2, io, |_| {});
+        let mut r = rng(13);
+        // Fire a pile of pipelined batches and vanish without reading a
+        // byte.
+        for _ in 0..3 {
+            let mut stream = TcpStream::connect(server.local_addr()).unwrap();
+            let queries: Vec<BitVec> =
+                (0..32).map(|_| BitVec::random(DIMS, 0.5, &mut r)).collect();
+            let payload = protocol::encode_search_request(&queries, 4);
+            for _ in 0..8 {
+                protocol::write_frame(&mut stream, Op::Search, &payload).unwrap();
+            }
+            stream.flush().unwrap();
+            drop(stream); // client gone: responses have nowhere to go
         }
-        stream.flush().unwrap();
-        drop(stream); // client gone: responses have nowhere to go
+        // The in-flight work completes against the service and the
+        // responses are dropped; a fresh client gets correct answers
+        // immediately.
+        let mut client = connect(&server);
+        let q = BitVec::random(DIMS, 0.5, &mut r);
+        let (_, hits) = client.search_topk(&q, 3).unwrap();
+        assert_eq!(hits.len(), 3, "{io:?}");
+        drop(client);
+        server.shutdown();
     }
-    // The in-flight work completes against the service and the responses
-    // are dropped; a fresh client gets correct answers immediately.
-    let mut client = connect(&server);
-    let q = BitVec::random(DIMS, 0.5, &mut r);
-    let (_, hits) = client.search_topk(&q, 3).unwrap();
-    assert_eq!(hits.len(), 3);
-    drop(client);
-    server.shutdown();
 }
 
 #[test]
 fn zero_k_and_dim_mismatch_are_typed_rejections() {
-    let (server, _) = start_server(20, 1, |_| {});
-    let mut client = connect(&server);
-    let err = client.search_topk(&BitVec::zeros(DIMS), 0).unwrap_err();
-    assert_eq!(err.downcast_ref::<WireError>().unwrap().code, ErrorCode::BadQuery);
-    let err = client.search_topk(&BitVec::zeros(DIMS / 2), 1).unwrap_err();
-    assert_eq!(err.downcast_ref::<WireError>().unwrap().code, ErrorCode::BadQuery);
-    // The connection survives semantic rejections.
-    assert!(client.health().is_ok());
-    drop(client);
-    server.shutdown();
+    for io in BOTH_IO {
+        let (server, _) = start_server_io(20, 1, io, |_| {});
+        let mut client = connect(&server);
+        let err = client.search_topk(&BitVec::zeros(DIMS), 0).unwrap_err();
+        assert_eq!(err.downcast_ref::<WireError>().unwrap().code, ErrorCode::BadQuery, "{io:?}");
+        let err = client.search_topk(&BitVec::zeros(DIMS / 2), 1).unwrap_err();
+        assert_eq!(err.downcast_ref::<WireError>().unwrap().code, ErrorCode::BadQuery);
+        // The connection survives semantic rejections.
+        assert!(client.health().is_ok());
+        drop(client);
+        server.shutdown();
+    }
 }
 
 #[test]
 fn backpressure_surfaces_as_busy_error_frames() {
-    let (server, _) = start_server(2000, 1, |cfg| {
-        cfg.coordinator.max_batch = 1;
-        cfg.coordinator.max_wait_us = 1;
-        cfg.coordinator.queue_depth = 1;
-        cfg.coordinator.workers = 1;
-    });
-    let addr = server.local_addr();
-    let busy = std::sync::atomic::AtomicUsize::new(0);
-    std::thread::scope(|s| {
-        for t in 0..4u64 {
-            let busy = &busy;
-            s.spawn(move || {
-                let mut client =
-                    Client::connect_retry(addr, 10, Duration::from_millis(20)).unwrap();
-                let mut r = rng(300 + t);
-                for _ in 0..50 {
-                    let q = BitVec::random(DIMS, 0.5, &mut r);
-                    match client.search_topk(&q, 1) {
-                        Ok(_) => {}
-                        Err(e) => {
-                            let wire = e.downcast_ref::<WireError>().expect("typed error");
-                            assert_eq!(wire.code, ErrorCode::Busy, "only Busy expected: {wire}");
-                            busy.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+    for io in BOTH_IO {
+        let (server, _) = start_server_io(2000, 1, io, |cfg| {
+            cfg.coordinator.max_batch = 1;
+            cfg.coordinator.max_wait_us = 1;
+            cfg.coordinator.queue_depth = 1;
+            cfg.coordinator.workers = 1;
+        });
+        let addr = server.local_addr();
+        let busy = std::sync::atomic::AtomicUsize::new(0);
+        std::thread::scope(|s| {
+            for t in 0..4u64 {
+                let busy = &busy;
+                s.spawn(move || {
+                    let mut client =
+                        Client::connect_retry(addr, 10, Duration::from_millis(20)).unwrap();
+                    let mut r = rng(300 + t);
+                    for _ in 0..50 {
+                        let q = BitVec::random(DIMS, 0.5, &mut r);
+                        match client.search_topk(&q, 1) {
+                            Ok(_) => {}
+                            Err(e) => {
+                                let wire = e.downcast_ref::<WireError>().expect("typed error");
+                                assert_eq!(
+                                    wire.code,
+                                    ErrorCode::Busy,
+                                    "only Busy expected: {wire}"
+                                );
+                                busy.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                            }
                         }
                     }
-                }
-            });
-        }
-    });
-    // With a depth-1 queue and one worker, a 4-client burst must bounce at
-    // least once — and every bounce was a clean, typed Busy frame.
-    assert!(busy.load(std::sync::atomic::Ordering::Relaxed) > 0, "tiny queue never said Busy");
-    assert_still_serving(&server);
-    server.shutdown();
+                });
+            }
+        });
+        // With a depth-1 queue and one worker, a 4-client burst must bounce
+        // at least once — and every bounce was a clean, typed Busy frame.
+        assert!(
+            busy.load(std::sync::atomic::Ordering::Relaxed) > 0,
+            "tiny queue never said Busy ({io:?})"
+        );
+        assert_still_serving(&server);
+        server.shutdown();
+    }
 }
 
 #[test]
 fn shutdown_closes_submissions() {
-    let (server, _) = start_server(20, 1, |_| {});
-    let mut client = connect(&server);
-    assert!(client.health().is_ok());
-    server.shutdown();
-    // The next request either fails to transit or comes back Closed.
-    let q = BitVec::zeros(DIMS);
-    match client.search_topk(&q, 1) {
-        Err(e) => {
-            if let Some(wire) = e.downcast_ref::<WireError>() {
-                assert_eq!(wire.code, ErrorCode::Closed);
-            } // else: connection already torn down — equally acceptable
+    for io in BOTH_IO {
+        let (server, _) = start_server_io(20, 1, io, |_| {});
+        let mut client = connect(&server);
+        assert!(client.health().is_ok());
+        server.shutdown();
+        // The next request either fails to transit or comes back Closed.
+        let q = BitVec::zeros(DIMS);
+        match client.search_topk(&q, 1) {
+            Err(e) => {
+                if let Some(wire) = e.downcast_ref::<WireError>() {
+                    assert_eq!(wire.code, ErrorCode::Closed, "{io:?}");
+                } // else: connection already torn down — equally acceptable
+            }
+            Ok(_) => panic!("search served after shutdown ({io:?})"),
         }
-        Ok(_) => panic!("search served after shutdown"),
     }
 }
