@@ -19,6 +19,12 @@
 //! per connection can carry).
 //!
 //! Usage: loadgen [addr|self[:io]] [clients] [frames-per-client] [batch] [k] [depth]
+//!
+//! The single-client version of the same probe/pipeline shape is what
+//! `cosime bench` records into the repo-root `BENCH_serving.json`
+//! (p50/p99 µs + pipelined qps per I/O engine) — use this example when you
+//! need multi-client scaling, the bench rail when you need a committed,
+//! schema-validated number.
 
 use std::sync::Mutex;
 use std::time::{Duration, Instant};

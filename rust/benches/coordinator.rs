@@ -57,9 +57,12 @@ fn main() {
     })
     .unwrap();
     let q = BitVec::random(1024, 0.5, &mut r);
-    b.bench_throughput("tiles/search/1024x1024/4-tiles", 1024.0, || tiles.search(&q));
+    // Shared units (see util::bench::bench_gbps): elems = row scores produced,
+    // bytes = the unique packed-matrix footprint streamed per iteration.
+    let matrix_bytes = (1024 * 1024_usize.div_ceil(64) * 8) as f64;
+    b.bench_gbps("tiles/search/1024x1024/4-tiles", 1024.0, matrix_bytes, || tiles.search(&q));
     let batch: Vec<BitVec> = (0..32).map(|_| BitVec::random(1024, 0.5, &mut r)).collect();
-    b.bench_throughput("tiles/search_batch32/1024x1024", 32.0 * 1024.0, || {
+    b.bench_gbps("tiles/search_batch32/1024x1024", 32.0 * 1024.0, matrix_bytes, || {
         tiles.search_batch(&batch)
     });
     // The allocation-free serving shape: reused block + scratch + selectors.
@@ -68,9 +71,12 @@ fn main() {
     let mut scratch = tiles.scratch();
     let mut out = BlockTopK::new();
     for k in [1usize, 8, 32] {
-        b.bench_throughput(&format!("tiles/search_block32/k={k}/1024x1024"), 32.0 * 1024.0, || {
-            tiles.search_block(block.view(), k, &mut scratch, &mut out)
-        });
+        b.bench_gbps(
+            &format!("tiles/search_block32/k={k}/1024x1024"),
+            32.0 * 1024.0,
+            matrix_bytes,
+            || tiles.search_block(block.view(), k, &mut scratch, &mut out),
+        );
     }
 
     b.report("Coordinator microbenchmarks");

@@ -5,6 +5,11 @@
 //! created once and reused across iterations — the steady-state serving
 //! loop's zero-per-query-allocation shape. The closing summary compares
 //! queries/s of the batched kernel against the single-query path.
+//!
+//! Units: every case reports through the shared `bench_gbps` helper with the
+//! convention used crate-wide (see `BENCH_kernel.json`): bytes = the unique
+//! packed-matrix footprint streamed per iteration, elems = queries scored.
+//! Cache-blocked batching shows up directly as higher GB/s at equal bytes.
 
 use cosime::am::{AmEngine, BlockTopK, DigitalExactEngine, QueryBlock, SearchScratch};
 use cosime::coordinator::TileManager;
@@ -24,11 +29,13 @@ fn main() {
     .unwrap();
 
     let mut b = Bench::new();
+    // Unique packed-matrix bytes one full scan streams (the GB/s basis).
+    let matrix_bytes = (rows * dims.div_ceil(64) * 8) as f64;
 
     // Seed-shaped path: one fused search per call, serial.
     let mut i = 0usize;
     let single_engine = b
-        .bench_throughput("engine/search x1 (seed path)", 1.0, || {
+        .bench_gbps("engine/search x1 (seed path)", 1.0, matrix_bytes, || {
             i = (i + 1) % batch;
             engine.search(&queries[i])
         })
@@ -42,7 +49,7 @@ fn main() {
     let mut scratch = SearchScratch::new();
     let mut out = BlockTopK::new();
     let block_engine = b
-        .bench_throughput(&format!("engine/search_block x{batch}/k=1"), batch as f64, || {
+        .bench_gbps(&format!("engine/search_block x{batch}/k=1"), batch as f64, matrix_bytes, || {
             out.reset(batch, 1);
             engine.search_block(block.view(), 0, &mut scratch, out.selectors_mut());
         })
@@ -50,7 +57,7 @@ fn main() {
         .unwrap();
 
     // Deep-k on the flat engine: the fused selector instead of a sort.
-    b.bench_throughput(&format!("engine/search_block x{batch}/k=10"), batch as f64, || {
+    b.bench_gbps(&format!("engine/search_block x{batch}/k=10"), batch as f64, matrix_bytes, || {
         out.reset(batch, 10);
         engine.search_block(block.view(), 0, &mut scratch, out.selectors_mut());
     });
@@ -59,21 +66,21 @@ fn main() {
     // kernel over reused scratch.
     let q_one = queries[0].clone();
     let single_tiles = b
-        .bench_throughput("tiles/search x1 (hierarchical k=1)", 1.0, || tm.search(&q_one))
+        .bench_gbps("tiles/search x1 (hierarchical k=1)", 1.0, matrix_bytes, || tm.search(&q_one))
         .throughput()
         .unwrap();
     let mut tile_scratch = tm.scratch();
     let mut tile_out = BlockTopK::new();
     let block_tiles = b
-        .bench_throughput(&format!("tiles/search_block x{batch}/k=1"), batch as f64, || {
+        .bench_gbps(&format!("tiles/search_block x{batch}/k=1"), batch as f64, matrix_bytes, || {
             tm.search_block(block.view(), 1, &mut tile_scratch, &mut tile_out)
         })
         .throughput()
         .unwrap();
-    b.bench_throughput(&format!("tiles/search_block x{batch}/k=10"), batch as f64, || {
+    b.bench_gbps(&format!("tiles/search_block x{batch}/k=10"), batch as f64, matrix_bytes, || {
         tm.search_block(block.view(), 10, &mut tile_scratch, &mut tile_out)
     });
-    b.bench_throughput(&format!("tiles/search_block x{batch}/k=100"), batch as f64, || {
+    b.bench_gbps(&format!("tiles/search_block x{batch}/k=100"), batch as f64, matrix_bytes, || {
         tm.search_block(block.view(), 100, &mut tile_scratch, &mut tile_out)
     });
 

@@ -22,6 +22,8 @@
 //! the tile manager composes per-tile blocks hierarchically and the
 //! coordinator's workers hold one set of buffers for their whole lifetime.
 
+pub mod simd;
+
 use crate::util::BitVec;
 
 use super::SearchResult;

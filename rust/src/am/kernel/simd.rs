@@ -1,0 +1,639 @@
+//! Vectorized popcount primitives with runtime feature dispatch — the one
+//! place in the crate that implements the AND/XOR + POPCNT inner loop.
+//!
+//! COSIME's speedup story is only honest if the CPU baseline actually tries
+//! (FeReX and the FeFET multi-bit CAM line are judged against CPU kernels
+//! too), so the digital search kernel dispatches at runtime to the widest
+//! popcount the host offers:
+//!
+//! * **AVX-512** `VPOPCNTQ` (`_mm512_popcnt_epi64`) — compiled only behind
+//!   the off-by-default `avx512` cargo feature because the intrinsics
+//!   stabilized late (Rust 1.89); selected when the CPU reports
+//!   `avx512f` + `avx512vpopcntdq`.
+//! * **AVX2** lookup popcount (Muła nibble-LUT + `_mm256_sad_epu8`) —
+//!   selected on `avx2` + `popcnt` hosts.
+//! * **NEON** `vcntq_u8` on aarch64.
+//! * **Scalar** 4-accumulator `u64::count_ones` loop — always compiled,
+//!   always correct, the reference every other path is property-tested
+//!   against (bit-exact, including dirty tail bits: every path counts raw
+//!   lanes identically).
+//!
+//! The dispatch table ([`KernelImpl`]) is resolved once per process into
+//! [`active`]: the `COSIME_KERNEL` env var wins, then a config-file override
+//! pinned via [`pin`] (`[kernel] path` in cosime.toml), then auto-detection.
+//! Requesting a path the host or build cannot run falls back to the best
+//! available path with a warning — never an illegal instruction.
+//!
+//! Consumers: [`crate::util::BitVec::dot`] / `hamming`, the packed store's
+//! `dot_packed`, and the cache-blocked `Store::kernel_block` strip kernel
+//! ([`KernelImpl::dot_rows`]).
+
+use std::sync::OnceLock;
+
+/// Environment variable that forces a dispatch path for the whole process.
+pub const ENV_VAR: &str = "COSIME_KERNEL";
+
+/// Rows per cache-blocked strip in `Store::kernel_block`: one strip of
+/// `ROW_TILE` packed rows is scored against every query of a block before
+/// moving on, so the strip stays hot in L1/L2 across the whole query batch
+/// (at 1024 dims a strip is 8 KiB). Also the size of the stack-allocated
+/// per-strip dot buffer, so keep it modest.
+pub const ROW_TILE: usize = 64;
+
+/// Identifies one compiled dispatch path.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum KernelPath {
+    Scalar,
+    Avx2,
+    Avx512,
+    Neon,
+}
+
+impl KernelPath {
+    /// Every path name, in fallback-preference order (widest first).
+    pub const ALL: [KernelPath; 4] =
+        [KernelPath::Avx512, KernelPath::Avx2, KernelPath::Neon, KernelPath::Scalar];
+
+    pub fn as_str(self) -> &'static str {
+        match self {
+            KernelPath::Scalar => "scalar",
+            KernelPath::Avx2 => "avx2",
+            KernelPath::Avx512 => "avx512",
+            KernelPath::Neon => "neon",
+        }
+    }
+
+    /// Parse a user-facing path name (`COSIME_KERNEL` / `[kernel] path`).
+    pub fn parse(name: &str) -> Option<KernelPath> {
+        match name {
+            "scalar" => Some(KernelPath::Scalar),
+            "avx2" => Some(KernelPath::Avx2),
+            "avx512" => Some(KernelPath::Avx512),
+            "neon" => Some(KernelPath::Neon),
+            _ => None,
+        }
+    }
+}
+
+/// One resolved dispatch table: the popcount primitives of a single path.
+///
+/// `Copy` and three fn pointers wide, so engines grab it once per block (not
+/// per row) and the indirect call amortizes over a whole [`ROW_TILE`] strip.
+#[derive(Debug, Clone, Copy)]
+pub struct KernelImpl {
+    path: KernelPath,
+    /// `out[i] = popcount(q & rows[i*lanes_per_row..][..lanes_per_row])`.
+    dot_fn: unsafe fn(&[u64], &[u64], usize, &mut [u32]),
+    /// Popcount of `a & b` over equal-length lane slices.
+    and_fn: unsafe fn(&[u64], &[u64]) -> u32,
+    /// Popcount of `a ^ b` over equal-length lane slices.
+    xor_fn: unsafe fn(&[u64], &[u64]) -> u32,
+}
+
+impl KernelImpl {
+    pub fn path(&self) -> KernelPath {
+        self.path
+    }
+
+    /// The dispatch table for `path`, or `None` when the path is not
+    /// compiled into this binary or the CPU lacks the required features.
+    pub fn for_path(path: KernelPath) -> Option<KernelImpl> {
+        match path {
+            KernelPath::Scalar => Some(SCALAR_IMPL),
+            #[cfg(target_arch = "x86_64")]
+            KernelPath::Avx2 => {
+                if std::arch::is_x86_feature_detected!("avx2")
+                    && std::arch::is_x86_feature_detected!("popcnt")
+                {
+                    Some(AVX2_IMPL)
+                } else {
+                    None
+                }
+            }
+            #[cfg(all(target_arch = "x86_64", feature = "avx512"))]
+            KernelPath::Avx512 => {
+                if std::arch::is_x86_feature_detected!("avx512f")
+                    && std::arch::is_x86_feature_detected!("avx512vpopcntdq")
+                {
+                    Some(AVX512_IMPL)
+                } else {
+                    None
+                }
+            }
+            #[cfg(target_arch = "aarch64")]
+            KernelPath::Neon => Some(NEON_IMPL),
+            _ => None,
+        }
+    }
+
+    /// Every path this binary can actually run on this host, widest first.
+    pub fn available() -> Vec<KernelPath> {
+        KernelPath::ALL.iter().copied().filter(|&p| KernelImpl::for_path(p).is_some()).collect()
+    }
+
+    /// Popcount of `a & b` (binary dot product). Slices must be equal length.
+    #[inline]
+    pub fn and_popcount(&self, a: &[u64], b: &[u64]) -> u32 {
+        assert_eq!(a.len(), b.len(), "popcount over mismatched lane counts");
+        // SAFETY: for_path only vends tables whose CPU features were
+        // verified, and the slices are equal-length.
+        unsafe { (self.and_fn)(a, b) }
+    }
+
+    /// Popcount of `a ^ b` (Hamming distance). Slices must be equal length.
+    #[inline]
+    pub fn xor_popcount(&self, a: &[u64], b: &[u64]) -> u32 {
+        assert_eq!(a.len(), b.len(), "popcount over mismatched lane counts");
+        // SAFETY: as in and_popcount.
+        unsafe { (self.xor_fn)(a, b) }
+    }
+
+    /// Score one query against a strip of packed rows:
+    /// `out[i] = popcount(q & strip[i])` for `out.len()` consecutive rows.
+    #[inline]
+    pub fn dot_rows(&self, q: &[u64], rows: &[u64], lanes_per_row: usize, out: &mut [u32]) {
+        assert_eq!(q.len(), lanes_per_row, "query lane count != lanes_per_row");
+        assert_eq!(rows.len(), lanes_per_row * out.len(), "row strip size mismatch");
+        // SAFETY: as in and_popcount; the asserts pin the slice geometry.
+        unsafe { (self.dot_fn)(q, rows, lanes_per_row, out) }
+    }
+}
+
+const SCALAR_IMPL: KernelImpl = KernelImpl {
+    path: KernelPath::Scalar,
+    dot_fn: scalar::dot_rows,
+    and_fn: scalar::and_popcount,
+    xor_fn: scalar::xor_popcount,
+};
+
+#[cfg(target_arch = "x86_64")]
+const AVX2_IMPL: KernelImpl = KernelImpl {
+    path: KernelPath::Avx2,
+    dot_fn: avx2::dot_rows,
+    and_fn: avx2::and_popcount,
+    xor_fn: avx2::xor_popcount,
+};
+
+#[cfg(all(target_arch = "x86_64", feature = "avx512"))]
+const AVX512_IMPL: KernelImpl = KernelImpl {
+    path: KernelPath::Avx512,
+    dot_fn: avx512::dot_rows,
+    and_fn: avx512::and_popcount,
+    xor_fn: avx512::xor_popcount,
+};
+
+#[cfg(target_arch = "aarch64")]
+const NEON_IMPL: KernelImpl = KernelImpl {
+    path: KernelPath::Neon,
+    dot_fn: neon::dot_rows,
+    and_fn: neon::and_popcount,
+    xor_fn: neon::xor_popcount,
+};
+
+/// Widest path this binary + host supports (scalar at worst).
+fn best_available() -> KernelImpl {
+    for p in KernelPath::ALL {
+        if let Some(k) = KernelImpl::for_path(p) {
+            return k;
+        }
+    }
+    SCALAR_IMPL
+}
+
+/// Resolve a requested path name to a runnable table. Pure (no process
+/// state), so tests can exercise the fallback logic without mutating the
+/// environment. Returns the table plus a warning when the request could not
+/// be honored (unknown name, or path unavailable on this build/host).
+pub fn resolve(request: Option<&str>) -> (KernelImpl, Option<String>) {
+    let name = match request {
+        None | Some("") | Some("auto") => return (best_available(), None),
+        Some(name) => name,
+    };
+    match KernelPath::parse(name) {
+        None => {
+            let fb = best_available();
+            (
+                fb,
+                Some(format!(
+                    "unknown kernel '{name}' (expected auto|scalar|avx2|avx512|neon); \
+                     using {}",
+                    fb.path().as_str()
+                )),
+            )
+        }
+        Some(path) => match KernelImpl::for_path(path) {
+            Some(k) => (k, None),
+            None => {
+                let fb = best_available();
+                (
+                    fb,
+                    Some(format!(
+                        "kernel '{name}' is not available on this host/build; \
+                         falling back to {}",
+                        fb.path().as_str()
+                    )),
+                )
+            }
+        },
+    }
+}
+
+static ACTIVE: OnceLock<KernelImpl> = OnceLock::new();
+
+fn init_active(config_request: Option<&str>) -> KernelImpl {
+    let env = std::env::var(ENV_VAR).ok();
+    let request = env.as_deref().or(config_request);
+    let (kernel, warning) = resolve(request);
+    if let Some(w) = warning {
+        eprintln!("cosime: warning: {w}");
+    }
+    kernel
+}
+
+/// The process-wide dispatch table, resolved once on first use from
+/// `COSIME_KERNEL` (or auto-detection when unset).
+#[inline]
+pub fn active() -> KernelImpl {
+    *ACTIVE.get_or_init(|| init_active(None))
+}
+
+/// Pin the process-wide path from a config value (`[kernel] path`). The env
+/// var still wins; the first resolution — whether via [`pin`] or [`active`]
+/// — is final for the process lifetime, so call this before any search.
+pub fn pin(config_request: &str) -> KernelImpl {
+    *ACTIVE.get_or_init(|| init_active(Some(config_request)))
+}
+
+/// Popcount of `a & b` via the active kernel (binary dot product).
+#[inline]
+pub fn and_popcount(a: &[u64], b: &[u64]) -> u32 {
+    active().and_popcount(a, b)
+}
+
+/// Popcount of `a ^ b` via the active kernel (Hamming distance).
+#[inline]
+pub fn xor_popcount(a: &[u64], b: &[u64]) -> u32 {
+    active().xor_popcount(a, b)
+}
+
+/// Best-effort prefetch of the head of the next row strip into L1 while the
+/// current strip is being scored. No-op off x86_64.
+#[inline]
+pub fn prefetch_lanes(data: &[u64]) {
+    #[cfg(target_arch = "x86_64")]
+    {
+        use std::arch::x86_64::{_mm_prefetch, _MM_HINT_T0};
+        // Touch up to 8 cache lines (512 B) — enough to hide the first
+        // strip-miss without thrashing the L1 fill buffers.
+        let lines = data.len().min(64).div_ceil(8);
+        for line in 0..lines {
+            // SAFETY: `line * 8 < data.len()`, so the pointer is in-bounds;
+            // prefetch has no side effects beyond the cache.
+            unsafe { _mm_prefetch::<_MM_HINT_T0>(data.as_ptr().add(line * 8).cast()) };
+        }
+    }
+    #[cfg(not(target_arch = "x86_64"))]
+    let _ = data;
+}
+
+/// Scalar reference backend: the original 4-accumulator loop. Four
+/// independent accumulators break the dependency chain so the popcounts
+/// pipeline (~4 lanes/cycle on modern cores).
+mod scalar {
+    macro_rules! pair_popcount {
+        ($name:ident, $op:tt) => {
+            pub fn $name(a: &[u64], b: &[u64]) -> u32 {
+                let mut acc = [0u32; 4];
+                let mut chunks_a = a.chunks_exact(4);
+                let mut chunks_b = b.chunks_exact(4);
+                for (ca, cb) in (&mut chunks_a).zip(&mut chunks_b) {
+                    acc[0] += (ca[0] $op cb[0]).count_ones();
+                    acc[1] += (ca[1] $op cb[1]).count_ones();
+                    acc[2] += (ca[2] $op cb[2]).count_ones();
+                    acc[3] += (ca[3] $op cb[3]).count_ones();
+                }
+                let mut total = acc[0] + acc[1] + acc[2] + acc[3];
+                for (x, y) in chunks_a.remainder().iter().zip(chunks_b.remainder()) {
+                    total += (x $op y).count_ones();
+                }
+                total
+            }
+        };
+    }
+
+    pair_popcount!(and_popcount, &);
+    pair_popcount!(xor_popcount, ^);
+
+    pub fn dot_rows(q: &[u64], rows: &[u64], lanes_per_row: usize, out: &mut [u32]) {
+        for (i, x) in out.iter_mut().enumerate() {
+            let base = i * lanes_per_row;
+            *x = and_popcount(q, &rows[base..base + lanes_per_row]);
+        }
+    }
+}
+
+/// AVX2 backend: Muła nibble-LUT popcount. Each 256-bit vector is split
+/// into low/high nibbles, both looked up via `vpshufb`, and the per-byte
+/// counts horizontally summed with `vpsadbw` into four u64 accumulators —
+/// 4 lanes per step with no cross-lane dependency chain.
+#[cfg(target_arch = "x86_64")]
+mod avx2 {
+    use std::arch::x86_64::*;
+
+    macro_rules! pair_popcount {
+        ($name:ident, $combine:ident, $op:tt) => {
+            #[target_feature(enable = "avx2,popcnt")]
+            pub unsafe fn $name(a: &[u64], b: &[u64]) -> u32 {
+                let n = a.len();
+                #[rustfmt::skip]
+                let lut = _mm256_setr_epi8(
+                    0, 1, 1, 2, 1, 2, 2, 3, 1, 2, 2, 3, 2, 3, 3, 4,
+                    0, 1, 1, 2, 1, 2, 2, 3, 1, 2, 2, 3, 2, 3, 3, 4,
+                );
+                let low_mask = _mm256_set1_epi8(0x0f);
+                let zero = _mm256_setzero_si256();
+                let mut acc = zero;
+                let mut i = 0;
+                while i + 4 <= n {
+                    let va = _mm256_loadu_si256(a.as_ptr().add(i).cast());
+                    let vb = _mm256_loadu_si256(b.as_ptr().add(i).cast());
+                    let v = $combine(va, vb);
+                    let lo = _mm256_and_si256(v, low_mask);
+                    let hi = _mm256_and_si256(_mm256_srli_epi16::<4>(v), low_mask);
+                    let cnt = _mm256_add_epi8(
+                        _mm256_shuffle_epi8(lut, lo),
+                        _mm256_shuffle_epi8(lut, hi),
+                    );
+                    acc = _mm256_add_epi64(acc, _mm256_sad_epu8(cnt, zero));
+                    i += 4;
+                }
+                let lanes: [u64; 4] = std::mem::transmute(acc);
+                let mut total = (lanes[0] + lanes[1] + lanes[2] + lanes[3]) as u32;
+                while i < n {
+                    total += (a[i] $op b[i]).count_ones();
+                    i += 1;
+                }
+                total
+            }
+        };
+    }
+
+    pair_popcount!(and_popcount, _mm256_and_si256, &);
+    pair_popcount!(xor_popcount, _mm256_xor_si256, ^);
+
+    #[target_feature(enable = "avx2,popcnt")]
+    pub unsafe fn dot_rows(q: &[u64], rows: &[u64], lanes_per_row: usize, out: &mut [u32]) {
+        for (i, x) in out.iter_mut().enumerate() {
+            let base = i * lanes_per_row;
+            *x = and_popcount(q, &rows[base..base + lanes_per_row]);
+        }
+    }
+}
+
+/// AVX-512 backend: native 64-bit lane popcount (`VPOPCNTQ`), 8 lanes per
+/// instruction. Behind the `avx512` cargo feature — see the module docs.
+#[cfg(all(target_arch = "x86_64", feature = "avx512"))]
+mod avx512 {
+    use std::arch::x86_64::*;
+
+    macro_rules! pair_popcount {
+        ($name:ident, $combine:ident, $op:tt) => {
+            #[target_feature(enable = "avx512f,avx512vpopcntdq")]
+            pub unsafe fn $name(a: &[u64], b: &[u64]) -> u32 {
+                let n = a.len();
+                let mut acc = _mm512_setzero_si512();
+                let mut i = 0;
+                while i + 8 <= n {
+                    let va = _mm512_loadu_si512(a.as_ptr().add(i).cast());
+                    let vb = _mm512_loadu_si512(b.as_ptr().add(i).cast());
+                    acc = _mm512_add_epi64(acc, _mm512_popcnt_epi64($combine(va, vb)));
+                    i += 8;
+                }
+                let mut total = _mm512_reduce_add_epi64(acc) as u32;
+                while i < n {
+                    total += (a[i] $op b[i]).count_ones();
+                    i += 1;
+                }
+                total
+            }
+        };
+    }
+
+    pair_popcount!(and_popcount, _mm512_and_si512, &);
+    pair_popcount!(xor_popcount, _mm512_xor_si512, ^);
+
+    #[target_feature(enable = "avx512f,avx512vpopcntdq")]
+    pub unsafe fn dot_rows(q: &[u64], rows: &[u64], lanes_per_row: usize, out: &mut [u32]) {
+        for (i, x) in out.iter_mut().enumerate() {
+            let base = i * lanes_per_row;
+            *x = and_popcount(q, &rows[base..base + lanes_per_row]);
+        }
+    }
+}
+
+/// NEON backend: `vcntq_u8` per-byte popcount with a pairwise-widening
+/// reduction tree into u64 accumulators.
+#[cfg(target_arch = "aarch64")]
+mod neon {
+    use std::arch::aarch64::*;
+
+    macro_rules! pair_popcount {
+        ($name:ident, $combine:ident, $op:tt) => {
+            #[target_feature(enable = "neon")]
+            pub unsafe fn $name(a: &[u64], b: &[u64]) -> u32 {
+                let n = a.len();
+                let mut acc = vdupq_n_u64(0);
+                let mut i = 0;
+                while i + 2 <= n {
+                    let va = vld1q_u64(a.as_ptr().add(i));
+                    let vb = vld1q_u64(b.as_ptr().add(i));
+                    let v = $combine(va, vb);
+                    let cnt = vcntq_u8(vreinterpretq_u8_u64(v));
+                    acc = vaddq_u64(acc, vpaddlq_u32(vpaddlq_u16(vpaddlq_u8(cnt))));
+                    i += 2;
+                }
+                let mut total = (vgetq_lane_u64::<0>(acc) + vgetq_lane_u64::<1>(acc)) as u32;
+                while i < n {
+                    total += (a[i] $op b[i]).count_ones();
+                    i += 1;
+                }
+                total
+            }
+        };
+    }
+
+    pair_popcount!(and_popcount, vandq_u64, &);
+    pair_popcount!(xor_popcount, veorq_u64, ^);
+
+    #[target_feature(enable = "neon")]
+    pub unsafe fn dot_rows(q: &[u64], rows: &[u64], lanes_per_row: usize, out: &mut [u32]) {
+        for (i, x) in out.iter_mut().enumerate() {
+            let base = i * lanes_per_row;
+            *x = and_popcount(q, &rows[base..base + lanes_per_row]);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::{prop, rng, Rng};
+
+    fn random_lanes(r: &mut Rng, n: usize) -> Vec<u64> {
+        (0..n).map(|_| r.next_u64()).collect()
+    }
+
+    /// Scalar backend against the plainest possible reference.
+    #[test]
+    fn simd_scalar_matches_lane_reference() {
+        let mut r = rng(11);
+        for n in [0usize, 1, 2, 3, 4, 5, 7, 8, 9, 16, 31, 33, 130] {
+            let a = random_lanes(&mut r, n);
+            let b = random_lanes(&mut r, n);
+            let and_ref: u32 = a.iter().zip(&b).map(|(x, y)| (x & y).count_ones()).sum();
+            let xor_ref: u32 = a.iter().zip(&b).map(|(x, y)| (x ^ y).count_ones()).sum();
+            assert_eq!(SCALAR_IMPL.and_popcount(&a, &b), and_ref, "and n={n}");
+            assert_eq!(SCALAR_IMPL.xor_popcount(&a, &b), xor_ref, "xor n={n}");
+        }
+    }
+
+    /// Every dispatch path compiled into this binary and runnable on this
+    /// host is bit-exact against scalar — across odd lane counts (vector
+    /// tails), zero-length inputs, and dirty tail bits (the lanes here are
+    /// raw random u64s, not masked to a bit length: paths must agree on
+    /// exactly what they count).
+    #[test]
+    fn simd_paths_bit_exact_vs_scalar() {
+        let paths = KernelImpl::available();
+        assert!(paths.contains(&KernelPath::Scalar), "scalar always available");
+        prop::check("simd paths vs scalar", 200, 0xC051_4E00, |r| {
+            let n = r.below(70);
+            let a = random_lanes(r, n);
+            let b = random_lanes(r, n);
+            let and_ref = SCALAR_IMPL.and_popcount(&a, &b);
+            let xor_ref = SCALAR_IMPL.xor_popcount(&a, &b);
+            for &p in &paths {
+                let k = KernelImpl::for_path(p).unwrap();
+                let name = p.as_str();
+                crate::prop_assert!(
+                    k.and_popcount(&a, &b) == and_ref,
+                    "and mismatch on {name} at n={n}"
+                );
+                crate::prop_assert!(
+                    k.xor_popcount(&a, &b) == xor_ref,
+                    "xor mismatch on {name} at n={n}"
+                );
+            }
+            Ok(())
+        });
+    }
+
+    /// The strip kernel equals per-row pair popcounts on every path,
+    /// including strips larger and smaller than ROW_TILE.
+    #[test]
+    fn simd_dot_rows_matches_pairwise() {
+        let paths = KernelImpl::available();
+        prop::check("simd dot_rows vs pairwise", 60, 0xD07_A0B5, |r| {
+            let lanes_per_row = 1 + r.below(20);
+            let rows_n = r.below(2 * ROW_TILE + 5);
+            let q = random_lanes(r, lanes_per_row);
+            let rows = random_lanes(r, lanes_per_row * rows_n);
+            let expect: Vec<u32> = (0..rows_n)
+                .map(|i| {
+                    let row = &rows[i * lanes_per_row..(i + 1) * lanes_per_row];
+                    SCALAR_IMPL.and_popcount(&q, row)
+                })
+                .collect();
+            let mut got = vec![0u32; rows_n];
+            for &p in &paths {
+                let k = KernelImpl::for_path(p).unwrap();
+                got.iter_mut().for_each(|x| *x = 0);
+                k.dot_rows(&q, &rows, lanes_per_row, &mut got);
+                crate::prop_assert!(
+                    got == expect,
+                    "dot_rows mismatch on {} (lanes={lanes_per_row}, rows={rows_n})",
+                    p.as_str()
+                );
+            }
+            Ok(())
+        });
+    }
+
+    /// Regression: forcing an unavailable path (e.g. `COSIME_KERNEL=avx512`
+    /// on a host/build without it) resolves to a runnable fallback with a
+    /// warning — never an illegal instruction. On hosts where the path *is*
+    /// available the same request must be honored exactly.
+    #[test]
+    fn simd_unavailable_path_falls_back_with_warning() {
+        for path in KernelPath::ALL {
+            let (kernel, warning) = resolve(Some(path.as_str()));
+            match KernelImpl::for_path(path) {
+                Some(k) => {
+                    assert_eq!(kernel.path(), k.path(), "{} honored", path.as_str());
+                    assert!(warning.is_none(), "no warning for available {}", path.as_str());
+                }
+                None => {
+                    let w = warning.expect("fallback must warn");
+                    assert!(w.contains(path.as_str()), "warning names the request: {w}");
+                    assert!(
+                        KernelImpl::for_path(kernel.path()).is_some(),
+                        "fallback path must be runnable"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn simd_resolve_handles_auto_and_unknown() {
+        let (auto, warn) = resolve(Some("auto"));
+        assert!(warn.is_none());
+        assert_eq!(auto.path(), resolve(None).0.path());
+        let (fb, warn) = resolve(Some("not-a-kernel"));
+        assert!(warn.unwrap().contains("not-a-kernel"));
+        assert!(KernelImpl::for_path(fb.path()).is_some());
+    }
+
+    /// The process-wide table respects `COSIME_KERNEL` when set (CI runs the
+    /// suite once with `COSIME_KERNEL=scalar` to pin the fallback path) and
+    /// matches auto-detection when unset.
+    #[test]
+    fn simd_active_respects_env_request() {
+        let expect = match std::env::var(ENV_VAR) {
+            Ok(req) => resolve(Some(&req)).0.path(),
+            Err(_) => resolve(None).0.path(),
+        };
+        assert_eq!(active().path(), expect);
+        // A later pin cannot re-resolve: first resolution is final.
+        assert_eq!(pin("scalar").path(), active().path());
+    }
+
+    #[test]
+    fn simd_path_names_roundtrip() {
+        for p in KernelPath::ALL {
+            assert_eq!(KernelPath::parse(p.as_str()), Some(p));
+        }
+        assert_eq!(KernelPath::parse("AVX2"), None, "names are lowercase");
+    }
+
+    #[test]
+    fn simd_prefetch_is_safe_on_any_length() {
+        for n in [0usize, 1, 7, 8, 9, 64, 65, 200] {
+            let data = vec![0u64; n];
+            prefetch_lanes(&data);
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "mismatched lane counts")]
+    fn simd_pair_popcount_rejects_mismatch() {
+        let _ = SCALAR_IMPL.and_popcount(&[0u64; 2], &[0u64; 3]);
+    }
+
+    #[test]
+    #[should_panic(expected = "strip size mismatch")]
+    fn simd_dot_rows_rejects_bad_geometry() {
+        let mut out = [0u32; 2];
+        SCALAR_IMPL.dot_rows(&[0u64; 2], &[0u64; 3], 2, &mut out);
+    }
+}

@@ -40,6 +40,7 @@ pub mod write;
 pub use kernel::{BlockTopK, QueriesRef, QueryBlock, SearchScratch, TopK};
 
 use crate::util::BitVec;
+use kernel::simd;
 
 /// Distance/similarity metric an engine implements (Table 1 column).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -263,34 +264,28 @@ impl Store {
     }
 
     /// Binary dot product of `query` with stored row `row` over the packed
-    /// matrix. Four accumulators break the POPCNT dependency chain.
+    /// matrix, via the runtime-dispatched popcount kernel
+    /// ([`kernel::simd::active`]).
     #[inline]
     fn dot_packed(&self, q: &[u64], row: usize) -> u32 {
         let base = row * self.lanes_per_row;
-        let lanes = &self.packed[base..base + self.lanes_per_row];
-        debug_assert_eq!(q.len(), lanes.len());
-        // chunks_exact elides bounds checks; four accumulators break the
-        // POPCNT dependency chain (§Perf).
-        let mut acc = [0u32; 4];
-        let mut it_l = lanes.chunks_exact(4);
-        let mut it_q = q.chunks_exact(4);
-        for (l, qq) in (&mut it_l).zip(&mut it_q) {
-            acc[0] += (l[0] & qq[0]).count_ones();
-            acc[1] += (l[1] & qq[1]).count_ones();
-            acc[2] += (l[2] & qq[2]).count_ones();
-            acc[3] += (l[3] & qq[3]).count_ones();
-        }
-        for (l, qq) in it_l.remainder().iter().zip(it_q.remainder()) {
-            acc[0] += (l & qq).count_ones();
-        }
-        acc[0] + acc[1] + acc[2] + acc[3]
+        simd::active().and_popcount(q, &self.packed[base..base + self.lanes_per_row])
     }
 
-    /// Shared fused block kernel for every packed-store engine: streams the
-    /// packed matrix once per query, feeding the running selector directly —
-    /// no score vector, no per-row `BitVec` chasing, zero allocations.
+    /// Shared fused block kernel for every packed-store engine — no score
+    /// vector, no per-row `BitVec` chasing, zero allocations.
     /// `score(x, row, q_ones)` maps the binary dot product to the engine's
     /// metric.
+    ///
+    /// Traversal is register- and cache-blocked: the packed matrix is walked
+    /// in strips of [`simd::ROW_TILE`] rows, and each strip is scored
+    /// against *every* query of the block before moving on, so a strip
+    /// loaded once from DRAM is reused `queries.len()` times from L1/L2
+    /// (row-at-a-time streamed the whole matrix once per query). The head of
+    /// the next strip is prefetched while the current one is scored, and the
+    /// per-strip dots land in a stack buffer so the SIMD inner loop
+    /// ([`simd::KernelImpl::dot_rows`]) runs branch-free before the
+    /// selector's compare-heavy `offer` pass.
     #[inline]
     fn kernel_block(
         &self,
@@ -300,14 +295,32 @@ impl Store {
         score: impl Fn(u32, usize, u32) -> f64,
     ) {
         kernel::check_block(queries, out, self.dims);
-        for qi in 0..queries.len() {
-            let q = queries.lanes_of(qi);
-            let q_ones = queries.count_ones_of(qi);
-            let sel = &mut out[qi];
-            for r in 0..self.rows.len() {
-                let x = self.dot_packed(q, r);
-                sel.offer(base + r, score(x, r, q_ones));
+        if queries.is_empty() {
+            return;
+        }
+        let kern = simd::active();
+        let lpr = self.lanes_per_row;
+        let n_rows = self.rows.len();
+        let mut dots = [0u32; simd::ROW_TILE];
+        let mut row0 = 0;
+        while row0 < n_rows {
+            let n = (n_rows - row0).min(simd::ROW_TILE);
+            let strip = &self.packed[row0 * lpr..(row0 + n) * lpr];
+            let next = (row0 + n) * lpr;
+            if next < self.packed.len() {
+                simd::prefetch_lanes(&self.packed[next..]);
             }
+            for qi in 0..queries.len() {
+                let q = queries.lanes_of(qi);
+                let q_ones = queries.count_ones_of(qi);
+                kern.dot_rows(q, strip, lpr, &mut dots[..n]);
+                let sel = &mut out[qi];
+                for (i, &x) in dots[..n].iter().enumerate() {
+                    let r = row0 + i;
+                    sel.offer(base + r, score(x, r, q_ones));
+                }
+            }
+            row0 += n;
         }
     }
 }
@@ -1054,6 +1067,58 @@ mod kernel_engine_tests {
                 }
             }
         }
+    }
+
+    /// The cache-blocked traversal (strips of [`simd::ROW_TILE`] rows scored
+    /// through the dispatched SIMD kernel) must stay bit-exact against an
+    /// independent per-bit reference — including row counts that straddle
+    /// strip boundaries, odd dims with dirty lane tails, and nonzero base
+    /// offsets. This is the end-to-end anchor for the per-primitive
+    /// properties in `kernel::simd::tests`.
+    #[test]
+    fn blocked_simd_traversal_matches_bit_reference() {
+        prop::check("blocked traversal == bit loop", 12, 0x51AD, |r| {
+            let n_rows = [1, simd::ROW_TILE - 1, simd::ROW_TILE, simd::ROW_TILE + 1, 130]
+                [r.below(5)]
+            .max(2);
+            let dims = [65, 127, 128, 1000][r.below(4)];
+            let words: Vec<BitVec> =
+                (0..n_rows).map(|_| BitVec::random(dims, 0.5, r)).collect();
+            let queries: Vec<BitVec> = (0..3).map(|_| BitVec::random(dims, 0.5, r)).collect();
+            let engine = DigitalExactEngine::new(words.clone());
+            let block = QueryBlock::pack(&queries, dims);
+            let mut scratch = SearchScratch::new();
+            let mut out = BlockTopK::new();
+            out.reset(queries.len(), 2);
+            engine.search_block(block.view(), 7, &mut scratch, out.selectors_mut());
+            for (qi, q) in queries.iter().enumerate() {
+                // Per-bit reference: no lanes, no popcount kernel.
+                let dot = |w: &BitVec| (0..dims).filter(|&i| q.get(i) && w.get(i)).count();
+                let mut best: Option<(usize, f64)> = None;
+                for (wi, w) in words.iter().enumerate() {
+                    let x = dot(w) as f64;
+                    let y = w.count_ones() as f64;
+                    let s = if y == 0.0 { 0.0 } else { x * x / y };
+                    let better = match best {
+                        None => true,
+                        Some((_, bs)) => s > bs,
+                    };
+                    if better {
+                        best = Some((wi, s));
+                    }
+                }
+                let (want_w, want_s) = best.unwrap();
+                let got = &out.query(qi)[0];
+                crate::prop_assert!(
+                    got.winner == want_w + 7 && got.score == want_s,
+                    "query {qi}: got ({}, {}), want ({}, {want_s})",
+                    got.winner,
+                    got.score,
+                    want_w + 7
+                );
+            }
+            Ok(())
+        });
     }
 
     /// The analog engine participates in the block API through the default

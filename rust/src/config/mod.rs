@@ -546,6 +546,45 @@ impl FromToml for ServerConfig {
     }
 }
 
+/// Search-kernel dispatch policy (`[kernel]`): which popcount path the
+/// digital engines use ([`crate::am::kernel::simd`]). The `COSIME_KERNEL`
+/// env var overrides this; an unavailable request falls back to the best
+/// runnable path with a warning. Pure serving policy — excluded from
+/// [`CosimeConfig::physical_fingerprint`], so changing it never invalidates
+/// programmed-array snapshots.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct KernelConfig {
+    /// Dispatch path: `"auto"` (widest available), `"scalar"`, `"avx2"`,
+    /// `"avx512"` or `"neon"`.
+    pub path: String,
+}
+
+impl Default for KernelConfig {
+    fn default() -> Self {
+        KernelConfig { path: "auto".to_string() }
+    }
+}
+
+// Hand-rolled (not `bind_toml!`): string-typed key.
+impl FromToml for KernelConfig {
+    fn set(&mut self, key: &str, value: &TomlValue) -> Result<()> {
+        match key {
+            "path" => {
+                self.path = value
+                    .as_str()
+                    .with_context(|| format!("key '{key}' must be a string"))?
+                    .to_string();
+            }
+            _ => bail!("unknown key '{key}' in section [KernelConfig]"),
+        }
+        Ok(())
+    }
+
+    fn dump(&self) -> Vec<(String, TomlValue)> {
+        vec![("path".into(), TomlValue::Str(self.path.clone()))]
+    }
+}
+
 /// Top-level configuration.
 #[derive(Debug, Clone, Default, PartialEq)]
 pub struct CosimeConfig {
@@ -558,6 +597,7 @@ pub struct CosimeConfig {
     pub coordinator: CoordinatorConfig,
     pub write: WriteConfig,
     pub server: ServerConfig,
+    pub kernel: KernelConfig,
 }
 
 impl CosimeConfig {
@@ -593,6 +633,7 @@ impl CosimeConfig {
                 "coordinator" => &mut self.coordinator,
                 "write" => &mut self.write,
                 "server" => &mut self.server,
+                "kernel" => &mut self.kernel,
                 other => bail!("unknown config section [{other}]"),
             };
             for (k, v) in kvs {
@@ -614,6 +655,7 @@ impl CosimeConfig {
         doc.insert("coordinator".into(), self.coordinator.dump().into_iter().collect());
         doc.insert("write".into(), self.write.dump().into_iter().collect());
         doc.insert("server".into(), self.server.dump().into_iter().collect());
+        doc.insert("kernel".into(), self.kernel.dump().into_iter().collect());
         toml_lite::to_string(&doc)
     }
 
@@ -660,6 +702,11 @@ impl CosimeConfig {
         ensure!(s.shards <= 1 << 16, "server shard count exceeds the 16-bit global-id space");
         ensure!(s.max_frame >= 64, "server max_frame too small to carry any request");
         ensure!(s.max_inflight >= 1, "server max_inflight must be at least 1");
+        ensure!(
+            matches!(self.kernel.path.as_str(), "auto" | "scalar" | "avx2" | "avx512" | "neon"),
+            "kernel path must be auto|scalar|avx2|avx512|neon, got \"{}\"",
+            self.kernel.path
+        );
         Ok(())
     }
 }
@@ -719,6 +766,24 @@ mod tests {
         let mut cfg = CosimeConfig::default();
         cfg.wta.win_separation = 0.9;
         assert!(cfg.validate().is_err());
+    }
+
+    #[test]
+    fn kernel_section_parses_and_validates() {
+        let cfg = CosimeConfig::from_toml_str("[kernel]\npath = \"scalar\"\n").unwrap();
+        assert_eq!(cfg.kernel.path, "scalar");
+        assert_eq!(CosimeConfig::default().kernel.path, "auto");
+        // Misspelled paths are rejected at validate, not silently ignored.
+        assert!(CosimeConfig::from_toml_str("[kernel]\npath = \"avx1024\"\n").is_err());
+        assert!(CosimeConfig::from_toml_str("[kernel]\npath = 3\n").is_err());
+        assert!(CosimeConfig::from_toml_str("[kernel]\npth = \"auto\"\n").is_err());
+        // Kernel choice is serving policy: snapshots stay valid across it.
+        let mut pinned = CosimeConfig::default();
+        pinned.kernel.path = "scalar".to_string();
+        assert_eq!(
+            pinned.physical_fingerprint(),
+            CosimeConfig::default().physical_fingerprint()
+        );
     }
 
     #[test]

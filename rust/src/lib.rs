@@ -32,6 +32,10 @@
 //!   (`cosime serve --listen ADDR --shards S`).
 //! * [`runtime`] — PJRT/XLA runtime that loads AOT-lowered JAX/Pallas artifacts
 //!   (`artifacts/*.hlo.txt`) and runs them from the Rust hot path.
+//! * [`perf`] — the measured-performance rail: `cosime bench` regenerates
+//!   schema-versioned `BENCH_kernel.json` / `BENCH_serving.json` at the repo
+//!   root (per-dispatch-path GB/s + Melems/s, serving p50/p99 + pipelined
+//!   throughput), validated in CI.
 //! * [`repro`] — regeneration harnesses for every table and figure in the paper.
 //!
 //! See `rust/README.md` for the kernel API walkthrough, the cargo feature
@@ -46,6 +50,7 @@ pub mod coordinator;
 pub mod device;
 pub mod energy;
 pub mod hdc;
+pub mod perf;
 pub mod repro;
 pub mod runtime;
 pub mod server;

@@ -21,11 +21,21 @@
 //!   live      train → snapshot → warm-start a server → stream online HDC
 //!             class updates through the coordinator's admin plane
 //!   artifacts list the AOT artifacts the runtime can load
+//!   bench     regenerate the machine-readable perf rail: runs the kernel
+//!             and serving benches and writes BENCH_kernel.json /
+//!             BENCH_serving.json (--out DIR, default repo root `.`;
+//!             --quick trims the grid for CI smoke; --only kernel|serving
+//!             runs one rail; --check only validates existing artifacts)
 //!
 //! Common flags: --results DIR, --seed N, --subsample F (dataset fraction),
 //! --trials N (Monte Carlo), --engine digital|analog|xla.
+//!
+//! Kernel dispatch: the popcount kernel path (scalar/avx2/avx512/neon) is
+//! resolved once at startup from `COSIME_KERNEL`, falling back to the
+//! `[kernel] path` config key, then to the widest path the CPU supports.
 
 use anyhow::{bail, Result};
+use cosime::am::kernel::simd;
 use cosime::am::store::AmStore;
 use cosime::am::{AmEngine, DigitalExactEngine};
 use cosime::config::{CosimeConfig, IoMode};
@@ -92,6 +102,7 @@ fn dispatch(args: &Args) -> Result<()> {
         Some("hdc") => cmd_hdc(args),
         Some("live") => cmd_live(args),
         Some("artifacts") => cmd_artifacts(args),
+        Some("bench") => cmd_bench(args),
         Some(other) => bail!("unknown subcommand '{other}' (see README)"),
         None => {
             print_usage();
@@ -105,14 +116,17 @@ fn print_usage() {
         "cosime — FeFET in-memory cosine-similarity search engine (ICCAD'22 reproduction)\n\n\
          usage: cosime <subcommand> [flags]\n\n\
          repro:  fig1 fig2 fig4a fig4b fig6 fig7 fig8 fig9 table1 table2 all\n\
-         system: search serve route hdc live artifacts\n\n\
+         system: search serve route hdc live artifacts bench\n\n\
          flags:  --results DIR  --seed N  --subsample F  --trials N\n\
                  --engine digital|analog|xla  --rows N --dims N --queries N --k N\n\
                  --snapshot PATH (hdc: save trained AM; serve: warm-start from it)\n\
                  --listen ADDR --shards S --io threaded|eventloop --duration SECS\n\
                  --config FILE (serve: TCP frontend; drive it with\n\
                  `cargo run --release --example loadgen`)\n\
-                 --remote A:P,B:P (route: the remote shard servers to fan over)"
+                 --remote A:P,B:P (route: the remote shard servers to fan over)\n\
+                 --out DIR --quick --only kernel|serving --check (bench)\n\
+         env:    COSIME_KERNEL=auto|scalar|avx2|avx512|neon forces the popcount\n\
+                 kernel dispatch path (unavailable paths fall back with a warning)"
     );
 }
 
@@ -237,6 +251,8 @@ fn cmd_serve_tcp(args: &Args) -> Result<()> {
         cfg.server.io = IoMode::parse(io)?;
     }
     cfg.validate()?;
+    let kern = simd::pin(&cfg.kernel.path);
+    println!("search kernel: {} dispatch", kern.path().as_str());
     let seed = args.get_u64("seed", 2);
     let engine_kind = args.get_str("engine", "digital").to_string();
     let words = serve_words(args, &cfg, seed)?;
@@ -338,6 +354,8 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let seed = args.get_u64("seed", 2);
     let engine_kind = args.get_str("engine", "digital").to_string();
     let cfg = CosimeConfig::default();
+    let kern = simd::pin(&cfg.kernel.path);
+    println!("search kernel: {} dispatch", kern.path().as_str());
     let words = serve_words(args, &cfg, seed)?;
     let (rows, dims) = (words.len(), words[0].len());
     let tile_rows = cfg.array.rows;
@@ -496,6 +514,41 @@ fn cmd_live(args: &Args) -> Result<()> {
     println!("\n{}", m.report());
     svc.shutdown();
     std::fs::remove_dir_all(&dir).ok();
+    Ok(())
+}
+
+/// `bench`: regenerate (or `--check`) the machine-readable perf rail.
+/// One invocation rewrites both `BENCH_kernel.json` and `BENCH_serving.json`
+/// under `--out` (default `.`, i.e. the repo root when run from there).
+fn cmd_bench(args: &Args) -> Result<()> {
+    let cfg = match args.get("config") {
+        Some(path) => CosimeConfig::from_toml_file(path)?,
+        None => CosimeConfig::default(),
+    };
+    cfg.validate()?;
+    let kern = simd::pin(&cfg.kernel.path);
+    let avail: Vec<&str> =
+        simd::KernelImpl::available().iter().map(|p| p.as_str()).collect();
+    println!(
+        "kernel dispatch: active={} available=[{}] (override with {}=PATH)",
+        kern.path().as_str(),
+        avail.join(", "),
+        simd::ENV_VAR
+    );
+    let out_dir = std::path::PathBuf::from(args.get_str("out", "."));
+    if args.flag("check") {
+        cosime::perf::check_artifacts(&out_dir)?;
+        println!(
+            "BENCH_kernel.json and BENCH_serving.json in {} are schema-valid",
+            out_dir.display()
+        );
+        return Ok(());
+    }
+    let quick = args.flag("quick");
+    let written = cosime::perf::write_artifacts(&out_dir, quick, args.get("only"))?;
+    for p in &written {
+        println!("wrote {}", p.display());
+    }
     Ok(())
 }
 

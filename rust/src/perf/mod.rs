@@ -1,0 +1,526 @@
+//! Measured-performance rail: the `cosime bench` runner.
+//!
+//! Every speedup claim in this repo (and in the paper's 333×-vs-CPU
+//! framing) is only meaningful against a measured software baseline, so this
+//! module turns the micro-bench harness ([`crate::util::bench`]) into a
+//! machine-readable perf trajectory: one `cosime bench` invocation
+//! regenerates `BENCH_kernel.json` and `BENCH_serving.json` at the repo
+//! root, and CI's bench-smoke job re-emits and schema-validates them on
+//! every push.
+//!
+//! * **Kernel rail** — raw strip-kernel throughput
+//!   ([`crate::am::kernel::simd::KernelImpl::dot_rows`]) for every dispatch
+//!   path available on the host, across a dims × rows grid, in GB/s
+//!   (packed-matrix bytes streamed) and Melems/s (bit-MACs); plus the fused
+//!   engine path (`search_block`) on the active kernel, and per-shape
+//!   best-SIMD-vs-scalar speedup records.
+//! * **Serving rail** — loopback `cosimed` latency (p50/p99 µs over strict
+//!   request/response probes) and pipelined loadgen-style throughput
+//!   (queries/s), per I/O engine and shard count.
+//!
+//! Schemas are versioned (`cosime-bench-kernel/v1`, `cosime-bench-serving/v1`)
+//! and validated by [`validate_kernel_json`] / [`validate_serving_json`] —
+//! the same functions back `cosime bench --check` and the committed-artifact
+//! test. A committed file may carry `"placeholder": true` plus a `"note"`
+//! when it was last written in an environment that could not run the bench;
+//! the next `cosime bench` run replaces it with measured numbers.
+
+use std::path::{Path, PathBuf};
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, ensure, Context, Result};
+
+use crate::am::kernel::simd::{self, KernelImpl, KernelPath};
+use crate::am::{AmEngine, BlockTopK, DigitalExactEngine, QueryBlock, SearchScratch};
+use crate::config::{CosimeConfig, IoMode};
+use crate::server::{Client, CosimeServer, ShardRouter};
+use crate::util::bench::{Bench, BenchResult};
+use crate::util::json::Json;
+use crate::util::{percentile, rng, BitVec};
+
+/// Schema tag of `BENCH_kernel.json`.
+pub const KERNEL_SCHEMA: &str = "cosime-bench-kernel/v1";
+/// Schema tag of `BENCH_serving.json`.
+pub const SERVING_SCHEMA: &str = "cosime-bench-serving/v1";
+
+/// Engine-level (`search_block`) cases are skipped above this row count:
+/// the raw strip kernel covers the 1M-row point without duplicating the
+/// packed matrix into per-row `BitVec`s.
+const ENGINE_ROWS_CAP: usize = 65_536;
+
+fn bench_budget(quick: bool) -> Bench {
+    if quick {
+        Bench::quick()
+    } else {
+        Bench::new()
+    }
+}
+
+fn host_json(quick: bool) -> Json {
+    Json::obj(vec![
+        ("arch", Json::str(std::env::consts::ARCH)),
+        ("os", Json::str(std::env::consts::OS)),
+        ("active", Json::str(simd::active().path().as_str())),
+        (
+            "paths",
+            Json::arr(KernelImpl::available().iter().map(|p| Json::str(p.as_str()))),
+        ),
+        ("quick", Json::Bool(quick)),
+    ])
+}
+
+/// One bench measurement as a JSON record, with normalized units attached.
+fn result_json(r: &BenchResult, extra: Vec<(&str, Json)>) -> Json {
+    let mut fields = vec![
+        ("name", Json::str(&r.name)),
+        ("iterations", Json::num(r.iterations as f64)),
+        ("mean_ns", Json::num(r.mean_ns)),
+        ("p50_ns", Json::num(r.p50_ns)),
+        ("p99_ns", Json::num(r.p99_ns)),
+    ];
+    if let Some(m) = r.melems_per_s() {
+        fields.push(("melems_per_s", Json::num(m)));
+    }
+    if let Some(g) = r.gb_per_s() {
+        fields.push(("gb_per_s", Json::num(g)));
+    }
+    fields.extend(extra);
+    Json::obj(fields)
+}
+
+/// Kernel rail over the default grid: dims {512, 2048, 8192} × rows
+/// {1k, 64k, 1M} (quick mode trims the grid and the measure budget so the
+/// CI smoke job stays fast).
+pub fn run_kernel(quick: bool) -> Result<Json> {
+    let (dims_grid, rows_grid): (&[usize], &[usize]) = if quick {
+        (&[512, 2048], &[1024, 16384])
+    } else {
+        (&[512, 2048, 8192], &[1024, 65_536, 1_048_576])
+    };
+    kernel_bench_json(dims_grid, rows_grid, quick)
+}
+
+fn kernel_bench_json(dims_grid: &[usize], rows_grid: &[usize], quick: bool) -> Result<Json> {
+    let mut bench = bench_budget(quick);
+    let avail = KernelImpl::available();
+    let active = simd::active();
+    let mut results: Vec<Json> = Vec::new();
+    let mut speedups: Vec<Json> = Vec::new();
+
+    for &dims in dims_grid {
+        let lanes = dims.div_ceil(64);
+        for &rows_n in rows_grid {
+            ensure!(rows_n >= 1 && dims >= 1, "grid entries must be positive");
+            let bytes = (rows_n * lanes * 8) as f64;
+            let elems = (rows_n * dims) as f64; // bit-MACs per full scan
+            let mut r = rng(0xBE5C ^ ((dims as u64) << 24) ^ rows_n as u64);
+            let packed: Vec<u64> = (0..rows_n * lanes).map(|_| r.next_u64()).collect();
+            let q: Vec<u64> = (0..lanes).map(|_| r.next_u64()).collect();
+            let shape = vec![
+                ("dims", Json::num(dims as f64)),
+                ("rows", Json::num(rows_n as f64)),
+            ];
+
+            // Raw strip kernel, every available dispatch path.
+            let mut per_path: Vec<(KernelPath, f64)> = Vec::new();
+            for &p in &avail {
+                let k = KernelImpl::for_path(p).expect("available path");
+                let name = format!("dot_rows/{}/d{}/r{}", p.as_str(), dims, rows_n);
+                let mut dots = [0u32; simd::ROW_TILE];
+                let res = bench.bench_gbps(&name, elems, bytes, || {
+                    let mut acc = 0u32;
+                    let mut row0 = 0;
+                    while row0 < rows_n {
+                        let n = (rows_n - row0).min(simd::ROW_TILE);
+                        let strip = &packed[row0 * lanes..(row0 + n) * lanes];
+                        k.dot_rows(&q, strip, lanes, &mut dots[..n]);
+                        acc ^= dots[n - 1];
+                        row0 += n;
+                    }
+                    acc
+                });
+                per_path.push((p, res.gb_per_s().unwrap_or(0.0)));
+                let mut extra = shape.clone();
+                extra.push(("path", Json::str(p.as_str())));
+                results.push(result_json(res, extra));
+            }
+
+            // Best SIMD path vs scalar, per shape — the ≥2× acceptance rail.
+            let scalar = per_path
+                .iter()
+                .find(|(p, _)| *p == KernelPath::Scalar)
+                .map(|&(_, g)| g)
+                .unwrap_or(0.0);
+            let best_simd = per_path
+                .iter()
+                .filter(|(p, _)| *p != KernelPath::Scalar)
+                .max_by(|a, b| a.1.total_cmp(&b.1));
+            if let Some(&(bp, bg)) = best_simd {
+                if scalar > 0.0 {
+                    speedups.push(Json::obj(vec![
+                        ("dims", Json::num(dims as f64)),
+                        ("rows", Json::num(rows_n as f64)),
+                        ("best_path", Json::str(bp.as_str())),
+                        ("best_gb_per_s", Json::num(bg)),
+                        ("scalar_gb_per_s", Json::num(scalar)),
+                        ("vs_scalar", Json::num(bg / scalar)),
+                    ]));
+                }
+            }
+
+            // Fused engine path (selectors included), active kernel only.
+            if rows_n <= ENGINE_ROWS_CAP {
+                let words: Vec<BitVec> =
+                    (0..rows_n).map(|_| BitVec::random(dims, 0.5, &mut r)).collect();
+                let engine = DigitalExactEngine::new(words);
+                let queries: Vec<BitVec> =
+                    (0..8).map(|_| BitVec::random(dims, 0.5, &mut r)).collect();
+                let block = QueryBlock::pack(&queries, dims);
+                let mut scratch = SearchScratch::new();
+                let mut out = BlockTopK::new();
+                let name = format!(
+                    "search_block/{}/d{}/r{}/q8/k10",
+                    active.path().as_str(),
+                    dims,
+                    rows_n
+                );
+                let res = bench.bench_gbps(&name, elems * 8.0, bytes, || {
+                    out.reset(8, 10);
+                    engine.search_block(block.view(), 0, &mut scratch, out.selectors_mut());
+                    out.query(0)[0].winner
+                });
+                let mut extra = shape.clone();
+                extra.push(("path", Json::str(active.path().as_str())));
+                results.push(result_json(res, extra));
+            }
+        }
+    }
+
+    bench.report("kernel rail");
+    for s in &speedups {
+        let d = s.get("dims").and_then(Json::as_usize).unwrap_or(0);
+        let rw = s.get("rows").and_then(Json::as_usize).unwrap_or(0);
+        let bp = s.get("best_path").and_then(Json::as_str).unwrap_or("?");
+        let x = s.get("vs_scalar").and_then(Json::as_f64).unwrap_or(0.0);
+        println!("speedup d{d} r{rw}: {bp} {x:.2}x vs scalar");
+    }
+
+    Ok(Json::obj(vec![
+        ("schema", Json::str(KERNEL_SCHEMA)),
+        ("host", host_json(quick)),
+        ("results", Json::Arr(results)),
+        ("speedup", Json::Arr(speedups)),
+    ]))
+}
+
+/// Serving rail: loopback `cosimed` p50/p99 latency plus pipelined
+/// loadgen-style throughput, per I/O engine (and shard count in full mode).
+pub fn run_serving(quick: bool) -> Result<Json> {
+    let (rows, dims, lat_reqs, tput_rounds) =
+        if quick { (2048, 512, 200, 20) } else { (16_384, 1024, 2000, 150) };
+    let shard_counts: &[usize] = if quick { &[1] } else { &[1, 2] };
+    serving_bench_json(
+        rows,
+        dims,
+        lat_reqs,
+        tput_rounds,
+        &[IoMode::Threaded, IoMode::EventLoop],
+        shard_counts,
+        quick,
+    )
+}
+
+fn start_server(rows: usize, dims: usize, shards: usize, io: IoMode) -> Result<CosimeServer> {
+    let mut cfg = CosimeConfig::default();
+    cfg.server.listen = "127.0.0.1:0".to_string();
+    cfg.server.io = io;
+    cfg.coordinator.workers = 2;
+    let mut r = rng(0x5EED ^ rows as u64);
+    let words: Vec<BitVec> = (0..rows).map(|_| BitVec::random(dims, 0.5, &mut r)).collect();
+    let router = ShardRouter::build(&cfg, shards, 256, words, |w| {
+        Ok(Box::new(DigitalExactEngine::new(w)) as Box<dyn AmEngine>)
+    })?;
+    CosimeServer::serve(&cfg.server, router)
+}
+
+#[allow(clippy::too_many_arguments)]
+fn serving_bench_json(
+    rows: usize,
+    dims: usize,
+    lat_reqs: usize,
+    tput_rounds: usize,
+    ios: &[IoMode],
+    shard_counts: &[usize],
+    quick: bool,
+) -> Result<Json> {
+    let mut results: Vec<Json> = Vec::new();
+    let mut r = rng(0x5E11);
+    for &io in ios {
+        for &shards in shard_counts {
+            let server = start_server(rows, dims, shards, io)
+                .with_context(|| format!("starting {} server", io.as_str()))?;
+            let mut client =
+                Client::connect_retry(server.local_addr(), 10, Duration::from_millis(20))
+                    .context("connecting to loopback server")?;
+
+            // Latency: strict request/response probes, one query, k=1.
+            let q = BitVec::random(dims, 0.5, &mut r);
+            let mut lat_us: Vec<f64> = Vec::with_capacity(lat_reqs);
+            for _ in 0..lat_reqs {
+                let t0 = Instant::now();
+                client.search_topk(&q, 1).context("latency probe")?;
+                lat_us.push(t0.elapsed().as_nanos() as f64 / 1e3);
+            }
+
+            // Throughput: pipelined windows of 8 frames × 16 queries — the
+            // loadgen shape (`examples/loadgen.rs`), minus the process hop.
+            let batch: Vec<BitVec> =
+                (0..16).map(|_| BitVec::random(dims, 0.5, &mut r)).collect();
+            let t0 = Instant::now();
+            for _ in 0..tput_rounds {
+                let mut pipe = client.pipeline();
+                for _ in 0..8 {
+                    pipe.search_batch(&batch, 4).context("pipelined frame")?;
+                }
+                pipe.finish().context("pipeline drain")?;
+            }
+            let secs = t0.elapsed().as_secs_f64().max(1e-9);
+            let qps = (tput_rounds * 8 * 16) as f64 / secs;
+
+            results.push(Json::obj(vec![
+                ("name", Json::str(&format!("wire/{}/{}shard", io.as_str(), shards))),
+                ("io", Json::str(io.as_str())),
+                ("shards", Json::num(shards as f64)),
+                ("rows", Json::num(rows as f64)),
+                ("dims", Json::num(dims as f64)),
+                ("latency_requests", Json::num(lat_reqs as f64)),
+                ("p50_us", Json::num(percentile(&lat_us, 50.0))),
+                ("p99_us", Json::num(percentile(&lat_us, 99.0))),
+                ("pipelined_qps", Json::num(qps)),
+            ]));
+
+            drop(client);
+            server.shutdown();
+        }
+    }
+
+    Ok(Json::obj(vec![
+        ("schema", Json::str(SERVING_SCHEMA)),
+        ("host", host_json(quick)),
+        ("results", Json::Arr(results)),
+    ]))
+}
+
+// ---- schema validation (shared by --check, CI, and tests) ----------------
+
+fn want_str<'a>(j: &'a Json, key: &str, what: &str) -> Result<&'a str> {
+    j.get(key).and_then(Json::as_str).with_context(|| format!("{what}.{key} must be a string"))
+}
+
+fn want_pos_f64(j: &Json, key: &str, what: &str) -> Result<f64> {
+    let v = j
+        .get(key)
+        .and_then(Json::as_f64)
+        .with_context(|| format!("{what}.{key} must be a number"))?;
+    ensure!(v.is_finite() && v > 0.0, "{what}.{key} must be finite and positive, got {v}");
+    Ok(v)
+}
+
+fn want_pos_usize(j: &Json, key: &str, what: &str) -> Result<usize> {
+    let v = j
+        .get(key)
+        .and_then(Json::as_usize)
+        .with_context(|| format!("{what}.{key} must be a non-negative integer"))?;
+    ensure!(v >= 1, "{what}.{key} must be at least 1");
+    Ok(v)
+}
+
+/// Validate common envelope (schema tag, host block, results array) and
+/// return `(results, placeholder)`.
+fn validate_envelope<'a>(j: &'a Json, schema: &str) -> Result<(&'a [Json], bool)> {
+    let got = want_str(j, "schema", "bench")?;
+    ensure!(got == schema, "schema mismatch: got \"{got}\", want \"{schema}\"");
+    let host = j.get("host").context("missing host block")?;
+    want_str(host, "arch", "host")?;
+    want_str(host, "active", "host")?;
+    ensure!(
+        host.get("paths").and_then(Json::as_arr).is_some(),
+        "host.paths must be an array"
+    );
+    let results = j.get("results").and_then(Json::as_arr).context("results must be an array")?;
+    let placeholder = j.get("placeholder").and_then(Json::as_bool).unwrap_or(false);
+    if placeholder {
+        want_str(j, "note", "placeholder bench")?;
+    } else {
+        ensure!(!results.is_empty(), "results must be non-empty (or placeholder: true)");
+    }
+    Ok((results, placeholder))
+}
+
+/// Schema check for `BENCH_kernel.json`.
+pub fn validate_kernel_json(j: &Json) -> Result<()> {
+    let (results, placeholder) = validate_envelope(j, KERNEL_SCHEMA)?;
+    for e in results {
+        let name = want_str(e, "name", "kernel result")?;
+        let what = format!("kernel result \"{name}\"");
+        want_str(e, "path", &what)?;
+        want_pos_usize(e, "dims", &what)?;
+        want_pos_usize(e, "rows", &what)?;
+        want_pos_f64(e, "mean_ns", &what)?;
+        want_pos_f64(e, "p50_ns", &what)?;
+        want_pos_f64(e, "p99_ns", &what)?;
+        want_pos_f64(e, "gb_per_s", &what)?;
+        want_pos_f64(e, "melems_per_s", &what)?;
+    }
+    let speedups = j.get("speedup").and_then(Json::as_arr).context("speedup must be an array")?;
+    if !placeholder {
+        for s in speedups {
+            want_pos_usize(s, "dims", "speedup")?;
+            want_pos_usize(s, "rows", "speedup")?;
+            want_str(s, "best_path", "speedup")?;
+            want_pos_f64(s, "vs_scalar", "speedup")?;
+        }
+    }
+    Ok(())
+}
+
+/// Schema check for `BENCH_serving.json`.
+pub fn validate_serving_json(j: &Json) -> Result<()> {
+    let (results, _placeholder) = validate_envelope(j, SERVING_SCHEMA)?;
+    for e in results {
+        let name = want_str(e, "name", "serving result")?;
+        let what = format!("serving result \"{name}\"");
+        want_str(e, "io", &what)?;
+        want_pos_usize(e, "shards", &what)?;
+        want_pos_usize(e, "rows", &what)?;
+        want_pos_usize(e, "dims", &what)?;
+        let p50 = want_pos_f64(e, "p50_us", &what)?;
+        let p99 = want_pos_f64(e, "p99_us", &what)?;
+        ensure!(p99 >= p50, "{what}: p99 ({p99}) below p50 ({p50})");
+        want_pos_f64(e, "pipelined_qps", &what)?;
+    }
+    Ok(())
+}
+
+// ---- artifact plumbing ---------------------------------------------------
+
+/// `BENCH_kernel.json` under `dir`.
+pub fn kernel_path_in(dir: &Path) -> PathBuf {
+    dir.join("BENCH_kernel.json")
+}
+
+/// `BENCH_serving.json` under `dir`.
+pub fn serving_path_in(dir: &Path) -> PathBuf {
+    dir.join("BENCH_serving.json")
+}
+
+/// Run the selected rails (`only`: `None` = both, `Some("kernel")`,
+/// `Some("serving")`), self-validate, and write the artifacts under
+/// `out_dir`. Returns the written paths.
+pub fn write_artifacts(out_dir: &Path, quick: bool, only: Option<&str>) -> Result<Vec<PathBuf>> {
+    match only {
+        None | Some("kernel") | Some("serving") => {}
+        Some(other) => bail!("--only must be kernel or serving, got \"{other}\""),
+    }
+    let mut written = Vec::new();
+    if only.is_none() || only == Some("kernel") {
+        let j = run_kernel(quick)?;
+        validate_kernel_json(&j).context("BENCH_kernel self-validation")?;
+        let p = kernel_path_in(out_dir);
+        std::fs::write(&p, j.to_string_pretty() + "\n")
+            .with_context(|| format!("writing {}", p.display()))?;
+        written.push(p);
+    }
+    if only.is_none() || only == Some("serving") {
+        let j = run_serving(quick)?;
+        validate_serving_json(&j).context("BENCH_serving self-validation")?;
+        let p = serving_path_in(out_dir);
+        std::fs::write(&p, j.to_string_pretty() + "\n")
+            .with_context(|| format!("writing {}", p.display()))?;
+        written.push(p);
+    }
+    Ok(written)
+}
+
+/// Parse and schema-validate the artifacts in `dir` (`cosime bench --check`).
+pub fn check_artifacts(dir: &Path) -> Result<()> {
+    let kp = kernel_path_in(dir);
+    let kj = Json::parse(
+        &std::fs::read_to_string(&kp).with_context(|| format!("reading {}", kp.display()))?,
+    )
+    .with_context(|| format!("parsing {}", kp.display()))?;
+    validate_kernel_json(&kj).with_context(|| format!("validating {}", kp.display()))?;
+    let sp = serving_path_in(dir);
+    let sj = Json::parse(
+        &std::fs::read_to_string(&sp).with_context(|| format!("reading {}", sp.display()))?,
+    )
+    .with_context(|| format!("parsing {}", sp.display()))?;
+    validate_serving_json(&sj).with_context(|| format!("validating {}", sp.display()))?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// A tiny live kernel run emits schema-valid JSON with a speedup record
+    /// for every shape whenever a SIMD path is available.
+    #[test]
+    fn tiny_kernel_bench_is_schema_valid() {
+        let j = kernel_bench_json(&[64], &[100], true).unwrap();
+        validate_kernel_json(&j).unwrap();
+        let n_simd = KernelImpl::available()
+            .iter()
+            .filter(|&&p| p != KernelPath::Scalar)
+            .count();
+        let speedups = j.get("speedup").and_then(Json::as_arr).unwrap();
+        if n_simd > 0 {
+            assert_eq!(speedups.len(), 1, "one speedup record per shape");
+        } else {
+            assert!(speedups.is_empty());
+        }
+    }
+
+    /// A tiny live serving run (one I/O mode, one shard) emits schema-valid
+    /// JSON.
+    #[test]
+    fn tiny_serving_bench_is_schema_valid() {
+        let j =
+            serving_bench_json(256, 128, 20, 2, &[IoMode::Threaded], &[1], true).unwrap();
+        validate_serving_json(&j).unwrap();
+        let results = j.get("results").and_then(Json::as_arr).unwrap();
+        assert_eq!(results.len(), 1);
+    }
+
+    /// The committed repo-root artifacts must always be schema-valid —
+    /// whether measured or placeholder.
+    #[test]
+    fn committed_bench_artifacts_are_schema_valid() {
+        let root = Path::new(env!("CARGO_MANIFEST_DIR")).parent().unwrap();
+        check_artifacts(root).unwrap();
+    }
+
+    #[test]
+    fn validator_rejects_wrong_or_empty_payloads() {
+        let wrong = Json::obj(vec![("schema", Json::str("nope/v0"))]);
+        assert!(validate_kernel_json(&wrong).is_err());
+        // Right schema but empty, non-placeholder results: rejected.
+        let empty = Json::obj(vec![
+            ("schema", Json::str(KERNEL_SCHEMA)),
+            ("host", host_json(true)),
+            ("results", Json::Arr(Vec::new())),
+            ("speedup", Json::Arr(Vec::new())),
+        ]);
+        assert!(validate_kernel_json(&empty).is_err());
+        // Placeholder with a note: accepted (structure-only validation).
+        let placeholder = Json::obj(vec![
+            ("schema", Json::str(KERNEL_SCHEMA)),
+            ("placeholder", Json::Bool(true)),
+            ("note", Json::str("regenerate with `cosime bench`")),
+            ("host", host_json(true)),
+            ("results", Json::Arr(Vec::new())),
+            ("speedup", Json::Arr(Vec::new())),
+        ]);
+        validate_kernel_json(&placeholder).unwrap();
+    }
+}

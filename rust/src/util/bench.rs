@@ -21,6 +21,9 @@ pub struct BenchResult {
     pub stddev_ns: f64,
     /// Throughput in user-provided elements/iteration, if set.
     pub elems_per_iter: Option<f64>,
+    /// Bytes streamed per iteration, if set — the GB/s basis, so kernel
+    /// numbers are comparable across dims/rows and across PRs.
+    pub bytes_per_iter: Option<f64>,
 }
 
 impl BenchResult {
@@ -29,7 +32,20 @@ impl BenchResult {
         self.elems_per_iter.map(|e| e / (self.mean_ns * 1e-9))
     }
 
-    /// One-line human-readable report row.
+    /// Millions of elements per second — the cross-bench normalized unit.
+    pub fn melems_per_s(&self) -> Option<f64> {
+        self.throughput().map(|t| t / 1e6)
+    }
+
+    /// Gigabytes per second, when a bytes basis was provided
+    /// (bytes/ns ≡ GB/s).
+    pub fn gb_per_s(&self) -> Option<f64> {
+        self.bytes_per_iter.map(|b| b / self.mean_ns)
+    }
+
+    /// One-line human-readable report row: mean/p50/p99 plus normalized
+    /// Melems/s and (with a bytes basis) GB/s — every bench target reports
+    /// through this one formatter so units stay comparable.
     pub fn row(&self) -> String {
         let tp = match self.throughput() {
             Some(t) if t >= 1e9 => format!("  {:8.2} Gelem/s", t / 1e9),
@@ -37,8 +53,12 @@ impl BenchResult {
             Some(t) => format!("  {:8.2} elem/s", t),
             None => String::new(),
         };
+        let gb = match self.gb_per_s() {
+            Some(g) => format!("  {g:8.2} GB/s"),
+            None => String::new(),
+        };
         format!(
-            "{:<44} {:>12} {:>12} {:>12}  (n={}){tp}",
+            "{:<44} {:>12} {:>12} {:>12}  (n={}){tp}{gb}",
             self.name,
             fmt_ns(self.mean_ns),
             fmt_ns(self.p50_ns),
@@ -101,7 +121,7 @@ impl Bench {
     /// Measure `f`, preventing the result from being optimized away via
     /// `std::hint::black_box`.
     pub fn bench<T>(&mut self, name: &str, mut f: impl FnMut() -> T) -> &BenchResult {
-        self.bench_with_throughput(name, None, move || {
+        self.bench_with_throughput(name, None, None, move || {
             std::hint::black_box(f());
         })
     }
@@ -113,7 +133,21 @@ impl Bench {
         elems: f64,
         mut f: impl FnMut() -> T,
     ) -> &BenchResult {
-        self.bench_with_throughput(name, Some(elems), move || {
+        self.bench_with_throughput(name, Some(elems), None, move || {
+            std::hint::black_box(f());
+        })
+    }
+
+    /// Measure with both an element basis (Melems/s) and a bytes basis
+    /// (GB/s) — the shared helper every kernel-shaped bench reports through.
+    pub fn bench_gbps<T>(
+        &mut self,
+        name: &str,
+        elems: f64,
+        bytes: f64,
+        mut f: impl FnMut() -> T,
+    ) -> &BenchResult {
+        self.bench_with_throughput(name, Some(elems), Some(bytes), move || {
             std::hint::black_box(f());
         })
     }
@@ -122,6 +156,7 @@ impl Bench {
         &mut self,
         name: &str,
         elems: Option<f64>,
+        bytes: Option<f64>,
         mut f: impl FnMut(),
     ) -> &BenchResult {
         // Warmup and per-iteration time estimate.
@@ -161,6 +196,7 @@ impl Bench {
             p99_ns: percentile(&samples_ns, 99.0),
             stddev_ns: stddev(&samples_ns),
             elems_per_iter: elems,
+            bytes_per_iter: bytes,
         };
         self.results.push(result);
         self.results.last().unwrap()
@@ -212,6 +248,20 @@ mod tests {
         let r = b.bench_throughput("tp", 1024.0, || std::hint::black_box(3u32 * 7));
         let tp = r.throughput().unwrap();
         assert!(tp > 0.0);
+        assert!(r.gb_per_s().is_none(), "no bytes basis unless provided");
+    }
+
+    #[test]
+    fn gbps_and_melems_units_consistent() {
+        let mut b = Bench::quick();
+        let r = b.bench_gbps("units", 1000.0, 8000.0, || std::hint::black_box(3u32 * 7));
+        let gb = r.gb_per_s().unwrap();
+        let me = r.melems_per_s().unwrap();
+        assert!(gb > 0.0 && me > 0.0);
+        // 8 bytes/elem: GB/s and Melems/s are locked together by definition
+        // (1 GB/s == 125 Melems/s at 8 B/elem).
+        assert!((gb * 1000.0 / 8.0 - me).abs() < me * 1e-9, "gb={gb} me={me}");
+        assert!(r.row().contains("GB/s"));
     }
 
     #[test]

@@ -120,24 +120,17 @@ impl BitVec {
         self.lanes.iter().map(|l| l.count_ones()).sum()
     }
 
-    /// Binary dot product with `other` (`a·b` — paper Eq. 2's X).
+    /// Binary dot product with `other` (`a·b` — paper Eq. 2's X), via the
+    /// crate's one popcount inner loop ([`crate::am::kernel::simd`]).
     pub fn dot(&self, other: &BitVec) -> u32 {
         assert_eq!(self.len, other.len, "dot of mismatched lengths");
-        self.lanes
-            .iter()
-            .zip(&other.lanes)
-            .map(|(a, b)| (a & b).count_ones())
-            .sum()
+        crate::am::kernel::simd::and_popcount(&self.lanes, &other.lanes)
     }
 
     /// Hamming distance to `other`.
     pub fn hamming(&self, other: &BitVec) -> u32 {
         assert_eq!(self.len, other.len, "hamming of mismatched lengths");
-        self.lanes
-            .iter()
-            .zip(&other.lanes)
-            .map(|(a, b)| (a ^ b).count_ones())
-            .sum()
+        crate::am::kernel::simd::xor_popcount(&self.lanes, &other.lanes)
     }
 
     /// Squared cosine similarity to `other`: `(a·b)² / (‖a‖²‖b‖²)` (paper Eq. 2).
