@@ -53,6 +53,7 @@ pub struct AnalogCosimeEngine {
 
 /// Detailed outcome of one analog search (feeds Fig. 4b / Fig. 6 / Fig. 7).
 pub struct AnalogSearchOutcome {
+    /// The winning row and its score.
     pub result: SearchResult,
     /// Row currents from the dot-product array (A).
     pub i_x: Vec<f64>,
@@ -141,6 +142,7 @@ impl AnalogCosimeEngine {
         Self::new(&cfg, words, &mut rng)
     }
 
+    /// Borrow stored row `i` (test and repro support).
     pub fn stored(&self, i: usize) -> &BitVec {
         &self.stored[i]
     }

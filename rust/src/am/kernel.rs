@@ -22,6 +22,7 @@
 //! the tile manager composes per-tile blocks hierarchically and the
 //! coordinator's workers hold one set of buffers for their whole lifetime.
 
+/// Runtime-dispatched SIMD popcount kernels (AVX2/AVX-512/NEON/scalar).
 pub mod simd;
 
 use crate::util::BitVec;
@@ -125,14 +126,17 @@ impl QueryBlock {
         }
     }
 
+    /// Queries packed so far.
     pub fn len(&self) -> usize {
         self.count
     }
 
+    /// Whether the block holds no queries.
     pub fn is_empty(&self) -> bool {
         self.count == 0
     }
 
+    /// Word width in bits.
     pub fn dims(&self) -> usize {
         self.dims
     }
@@ -160,14 +164,17 @@ pub struct QueriesRef<'a> {
 }
 
 impl<'a> QueriesRef<'a> {
+    /// Queries in this view.
     pub fn len(&self) -> usize {
         self.count
     }
 
+    /// Whether the view is empty.
     pub fn is_empty(&self) -> bool {
         self.count == 0
     }
 
+    /// Word width in bits.
     pub fn dims(&self) -> usize {
         self.dims
     }
@@ -214,6 +221,7 @@ pub struct TopK {
 }
 
 impl TopK {
+    /// Empty selector that will keep the best `k` hits.
     pub fn new(k: usize) -> Self {
         TopK { k, entries: Vec::with_capacity(k) }
     }
@@ -226,14 +234,17 @@ impl TopK {
         self.entries.reserve(k);
     }
 
+    /// Capacity of this selector.
     pub fn k(&self) -> usize {
         self.k
     }
 
+    /// Hits held so far (≤ k).
     pub fn len(&self) -> usize {
         self.entries.len()
     }
 
+    /// Whether no hit has been offered yet.
     pub fn is_empty(&self) -> bool {
         self.entries.is_empty()
     }
@@ -291,6 +302,7 @@ pub struct BlockTopK {
 }
 
 impl BlockTopK {
+    /// Empty block selector; size it with [`BlockTopK::reset`].
     pub fn new() -> Self {
         BlockTopK { selectors: Vec::new(), active: 0 }
     }
@@ -311,10 +323,12 @@ impl BlockTopK {
         self.active
     }
 
+    /// Borrow the active selectors (one per query).
     pub fn selectors(&self) -> &[TopK] {
         &self.selectors[..self.active]
     }
 
+    /// Mutably borrow the active selectors (one per query).
     pub fn selectors_mut(&mut self) -> &mut [TopK] {
         &mut self.selectors[..self.active]
     }
@@ -343,6 +357,7 @@ pub struct SearchScratch {
 }
 
 impl SearchScratch {
+    /// Empty scratch; buffers grow on first use.
     pub fn new() -> Self {
         SearchScratch { scores: Vec::new(), query: BitVec::zeros(0) }
     }

@@ -43,9 +43,13 @@ pub const ROW_TILE: usize = 64;
 /// Identifies one compiled dispatch path.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum KernelPath {
+    /// Portable 4-accumulator `u64::count_ones` loop (always available).
     Scalar,
+    /// AVX2 Muła nibble-LUT popcount (x86_64 with `avx2` + `popcnt`).
     Avx2,
+    /// AVX-512 `VPOPCNTQ` (behind the `avx512` cargo feature).
     Avx512,
+    /// `vcntq_u8` byte popcount with widening reduction (aarch64).
     Neon,
 }
 
@@ -54,6 +58,7 @@ impl KernelPath {
     pub const ALL: [KernelPath; 4] =
         [KernelPath::Avx512, KernelPath::Avx2, KernelPath::Neon, KernelPath::Scalar];
 
+    /// User-facing path name (`COSIME_KERNEL` value / log labels).
     pub fn as_str(self) -> &'static str {
         match self {
             KernelPath::Scalar => "scalar",
@@ -91,6 +96,7 @@ pub struct KernelImpl {
 }
 
 impl KernelImpl {
+    /// Which dispatch path this table implements.
     pub fn path(&self) -> KernelPath {
         self.path
     }
@@ -131,6 +137,10 @@ impl KernelImpl {
         KernelPath::ALL.iter().copied().filter(|&p| KernelImpl::for_path(p).is_some()).collect()
     }
 
+    // The dispatch methods below are the innermost per-row work of every
+    // search; the lint keeps allocations out of them.
+    // lint: hot-path
+
     /// Popcount of `a & b` (binary dot product). Slices must be equal length.
     #[inline]
     pub fn and_popcount(&self, a: &[u64], b: &[u64]) -> u32 {
@@ -157,6 +167,8 @@ impl KernelImpl {
         // SAFETY: as in and_popcount; the asserts pin the slice geometry.
         unsafe { (self.dot_fn)(q, rows, lanes_per_row, out) }
     }
+
+    // lint: end-hot-path
 }
 
 const SCALAR_IMPL: KernelImpl = KernelImpl {
@@ -342,6 +354,10 @@ mod avx2 {
 
     macro_rules! pair_popcount {
         ($name:ident, $combine:ident, $op:tt) => {
+            // SAFETY: caller must ensure the CPU supports avx2+popcnt (the
+            // dispatch table in `KernelImpl::for_path` verifies this before
+            // vending a pointer to these fns) and that `a.len() == b.len()`
+            // (asserted by the safe `KernelImpl` wrappers).
             #[target_feature(enable = "avx2,popcnt")]
             pub unsafe fn $name(a: &[u64], b: &[u64]) -> u32 {
                 let n = a.len();
@@ -355,8 +371,11 @@ mod avx2 {
                 let mut acc = zero;
                 let mut i = 0;
                 while i + 4 <= n {
-                    let va = _mm256_loadu_si256(a.as_ptr().add(i).cast());
-                    let vb = _mm256_loadu_si256(b.as_ptr().add(i).cast());
+                    // SAFETY: `i + 4 <= n` keeps both unaligned 256-bit
+                    // loads inside the equal-length slices.
+                    let va = unsafe { _mm256_loadu_si256(a.as_ptr().add(i).cast()) };
+                    // SAFETY: as above, for `b`.
+                    let vb = unsafe { _mm256_loadu_si256(b.as_ptr().add(i).cast()) };
                     let v = $combine(va, vb);
                     let lo = _mm256_and_si256(v, low_mask);
                     let hi = _mm256_and_si256(_mm256_srli_epi16::<4>(v), low_mask);
@@ -367,7 +386,9 @@ mod avx2 {
                     acc = _mm256_add_epi64(acc, _mm256_sad_epu8(cnt, zero));
                     i += 4;
                 }
-                let lanes: [u64; 4] = std::mem::transmute(acc);
+                // SAFETY: `__m256i` and `[u64; 4]` are both 32 bytes with
+                // no invalid bit patterns.
+                let lanes: [u64; 4] = unsafe { std::mem::transmute(acc) };
                 let mut total = (lanes[0] + lanes[1] + lanes[2] + lanes[3]) as u32;
                 while i < n {
                     total += (a[i] $op b[i]).count_ones();
@@ -381,11 +402,16 @@ mod avx2 {
     pair_popcount!(and_popcount, _mm256_and_si256, &);
     pair_popcount!(xor_popcount, _mm256_xor_si256, ^);
 
+    // SAFETY: caller must ensure the CPU supports avx2+popcnt and the slice
+    // geometry `q.len() == lanes_per_row`, `rows.len() == lanes_per_row *
+    // out.len()` (asserted by `KernelImpl::dot_rows`).
     #[target_feature(enable = "avx2,popcnt")]
     pub unsafe fn dot_rows(q: &[u64], rows: &[u64], lanes_per_row: usize, out: &mut [u32]) {
         for (i, x) in out.iter_mut().enumerate() {
             let base = i * lanes_per_row;
-            *x = and_popcount(q, &rows[base..base + lanes_per_row]);
+            // SAFETY: same target features as this fn; the row slice is
+            // `lanes_per_row == q.len()` lanes.
+            *x = unsafe { and_popcount(q, &rows[base..base + lanes_per_row]) };
         }
     }
 }
@@ -398,14 +424,20 @@ mod avx512 {
 
     macro_rules! pair_popcount {
         ($name:ident, $combine:ident, $op:tt) => {
+            // SAFETY: caller must ensure the CPU supports
+            // avx512f+avx512vpopcntdq (verified by `KernelImpl::for_path`)
+            // and equal-length slices (asserted by the safe wrappers).
             #[target_feature(enable = "avx512f,avx512vpopcntdq")]
             pub unsafe fn $name(a: &[u64], b: &[u64]) -> u32 {
                 let n = a.len();
                 let mut acc = _mm512_setzero_si512();
                 let mut i = 0;
                 while i + 8 <= n {
-                    let va = _mm512_loadu_si512(a.as_ptr().add(i).cast());
-                    let vb = _mm512_loadu_si512(b.as_ptr().add(i).cast());
+                    // SAFETY: `i + 8 <= n` keeps both unaligned 512-bit
+                    // loads inside the equal-length slices.
+                    let va = unsafe { _mm512_loadu_si512(a.as_ptr().add(i).cast()) };
+                    // SAFETY: as above, for `b`.
+                    let vb = unsafe { _mm512_loadu_si512(b.as_ptr().add(i).cast()) };
                     acc = _mm512_add_epi64(acc, _mm512_popcnt_epi64($combine(va, vb)));
                     i += 8;
                 }
@@ -422,11 +454,15 @@ mod avx512 {
     pair_popcount!(and_popcount, _mm512_and_si512, &);
     pair_popcount!(xor_popcount, _mm512_xor_si512, ^);
 
+    // SAFETY: caller must ensure the CPU supports avx512f+avx512vpopcntdq
+    // and the slice geometry (asserted by `KernelImpl::dot_rows`).
     #[target_feature(enable = "avx512f,avx512vpopcntdq")]
     pub unsafe fn dot_rows(q: &[u64], rows: &[u64], lanes_per_row: usize, out: &mut [u32]) {
         for (i, x) in out.iter_mut().enumerate() {
             let base = i * lanes_per_row;
-            *x = and_popcount(q, &rows[base..base + lanes_per_row]);
+            // SAFETY: same target features as this fn; the row slice is
+            // `lanes_per_row == q.len()` lanes.
+            *x = unsafe { and_popcount(q, &rows[base..base + lanes_per_row]) };
         }
     }
 }
@@ -439,14 +475,20 @@ mod neon {
 
     macro_rules! pair_popcount {
         ($name:ident, $combine:ident, $op:tt) => {
+            // SAFETY: caller must ensure the CPU supports neon (always true
+            // on aarch64, and `KernelImpl::for_path` only vends this table
+            // there) and equal-length slices (asserted by the safe wrappers).
             #[target_feature(enable = "neon")]
             pub unsafe fn $name(a: &[u64], b: &[u64]) -> u32 {
                 let n = a.len();
                 let mut acc = vdupq_n_u64(0);
                 let mut i = 0;
                 while i + 2 <= n {
-                    let va = vld1q_u64(a.as_ptr().add(i));
-                    let vb = vld1q_u64(b.as_ptr().add(i));
+                    // SAFETY: `i + 2 <= n` keeps both 128-bit loads inside
+                    // the equal-length slices.
+                    let va = unsafe { vld1q_u64(a.as_ptr().add(i)) };
+                    // SAFETY: as above, for `b`.
+                    let vb = unsafe { vld1q_u64(b.as_ptr().add(i)) };
                     let v = $combine(va, vb);
                     let cnt = vcntq_u8(vreinterpretq_u8_u64(v));
                     acc = vaddq_u64(acc, vpaddlq_u32(vpaddlq_u16(vpaddlq_u8(cnt))));
@@ -465,11 +507,15 @@ mod neon {
     pair_popcount!(and_popcount, vandq_u64, &);
     pair_popcount!(xor_popcount, veorq_u64, ^);
 
+    // SAFETY: caller must ensure neon support and the slice geometry
+    // (asserted by `KernelImpl::dot_rows`).
     #[target_feature(enable = "neon")]
     pub unsafe fn dot_rows(q: &[u64], rows: &[u64], lanes_per_row: usize, out: &mut [u32]) {
         for (i, x) in out.iter_mut().enumerate() {
             let base = i * lanes_per_row;
-            *x = and_popcount(q, &rows[base..base + lanes_per_row]);
+            // SAFETY: same target features as this fn; the row slice is
+            // `lanes_per_row == q.len()` lanes.
+            *x = unsafe { and_popcount(q, &rows[base..base + lanes_per_row]) };
         }
     }
 }

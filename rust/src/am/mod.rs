@@ -32,9 +32,13 @@
 //! fixed XLA artifacts) report the op unsupported and the tile manager
 //! falls back to rebuilding just that tile.
 
+/// Analog AM realizations (translinear cosine, WTA Hamming).
 pub mod analog;
+/// The shared digital search kernel (SIMD popcount, tile×batch blocks).
 pub mod kernel;
+/// Row-major bit-packed storage shared by the digital engines.
 pub mod store;
+/// Write-verify programming model for the admin plane.
 pub mod write;
 
 pub use kernel::{BlockTopK, QueriesRef, QueryBlock, SearchScratch, TopK};
@@ -45,9 +49,13 @@ use kernel::simd;
 /// Distance/similarity metric an engine implements (Table 1 column).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Metric {
+    /// True cosine similarity (normalized dot product).
     Cosine,
+    /// Hamming distance (negated so higher = closer).
     Hamming,
+    /// COSIME's approximation: dot product scaled by a frozen norm constant.
     ApproxCosine,
+    /// Raw unnormalized dot product (popcount of the AND).
     Dot,
 }
 
@@ -63,9 +71,13 @@ pub struct SearchResult {
 
 /// Common interface over every AM realization.
 pub trait AmEngine: Send + Sync {
+    /// Engine name, as printed in reports (e.g. `digital-exact`).
     fn name(&self) -> &str;
+    /// The metric this engine realizes.
     fn metric(&self) -> Metric;
+    /// Number of stored rows.
     fn rows(&self) -> usize;
+    /// Word width in bits.
     fn dims(&self) -> usize;
 
     /// Fill `out` with the score of every stored row (higher = closer),
@@ -333,10 +345,12 @@ pub struct DigitalExactEngine {
 }
 
 impl DigitalExactEngine {
+    /// Build over the given stored words.
     pub fn new(rows: Vec<BitVec>) -> Self {
         DigitalExactEngine { store: Store::new(rows) }
     }
 
+    /// Borrow stored row `i` (test and repro support).
     pub fn stored(&self, i: usize) -> &BitVec {
         &self.store.rows[i]
     }
@@ -440,6 +454,7 @@ pub struct HammingEngine {
 }
 
 impl HammingEngine {
+    /// Build over the given stored words.
     pub fn new(rows: Vec<BitVec>) -> Self {
         HammingEngine { store: Store::new(rows) }
     }
@@ -515,6 +530,7 @@ pub struct ApproxCosineEngine {
 }
 
 impl ApproxCosineEngine {
+    /// Build over the given stored words; the norm constant freezes here.
     pub fn new(rows: Vec<BitVec>) -> Self {
         let store = Store::new(rows);
         let norm_const = Self::frozen_norm(&store);
@@ -598,6 +614,7 @@ pub struct DotEngine {
 }
 
 impl DotEngine {
+    /// Build over the given stored words.
     pub fn new(rows: Vec<BitVec>) -> Self {
         DotEngine { store: Store::new(rows) }
     }

@@ -121,7 +121,9 @@ pub fn program_word(cfg: &CosimeConfig, word: &BitVec, rng: &mut Rng) -> (BitVec
 /// the report so callers can still account the pulses that were spent.
 #[derive(Debug)]
 pub struct WriteVerifyError {
+    /// Pulse-accurate cost report of the failed write.
     pub report: WriteReport,
+    /// Retry budget that was exhausted.
     pub max_retries: usize,
 }
 
@@ -186,14 +188,17 @@ impl AmStore {
         }
     }
 
+    /// Word width in bits.
     pub fn dims(&self) -> usize {
         self.dims
     }
 
+    /// Stored row count.
     pub fn rows(&self) -> usize {
         self.words.len()
     }
 
+    /// Whether the store holds no rows.
     pub fn is_empty(&self) -> bool {
         self.words.is_empty()
     }
@@ -208,10 +213,12 @@ impl AmStore {
         &self.labels
     }
 
+    /// Borrow stored word `row`.
     pub fn word(&self, row: usize) -> &BitVec {
         &self.words[row]
     }
 
+    /// Borrow the label of `row`.
     pub fn label(&self, row: usize) -> &str {
         &self.labels[row]
     }

@@ -9,6 +9,7 @@
 //!   E²-MCAM, approximate cosine), kept as constants exactly as the paper
 //!   does, alongside the COSIME row computed from our models.
 
+/// Published per-design numbers used in Table 1.
 pub mod published;
 
 /// Roofline + overhead model of a GTX 1080 running batched associative

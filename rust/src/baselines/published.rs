@@ -8,8 +8,11 @@ use crate::energy::{EnergyModel, T_WTA_NOMINAL};
 /// One row of Table 1.
 #[derive(Debug, Clone)]
 pub struct AmRow {
+    /// Accelerator name as published.
     pub name: &'static str,
+    /// Process/technology node.
     pub technology: &'static str,
+    /// Distance metric the design implements.
     pub metric: &'static str,
     /// Search energy per bit (fJ).
     pub energy_fj_per_bit: f64,

@@ -15,10 +15,12 @@ pub struct CurrentMirror {
 }
 
 impl CurrentMirror {
+    /// Perfect mirror with the given gain (no mismatch, no compliance cap).
     pub fn ideal(gain: f64) -> Self {
         CurrentMirror { gain, mismatch: 1.0, i_max: f64::INFINITY }
     }
 
+    /// Mirror with a frozen multiplicative mismatch factor.
     pub fn with_mismatch(gain: f64, mismatch: f64) -> Self {
         CurrentMirror { gain, mismatch, i_max: f64::INFINITY }
     }

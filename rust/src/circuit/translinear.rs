@@ -17,12 +17,14 @@ use crate::util::Rng;
 /// Design-level (nominal) translinear block.
 #[derive(Debug, Clone)]
 pub struct Translinear {
+    /// Design parameters.
     pub cfg: TranslinearConfig,
 }
 
 /// A fabricated instance with frozen mismatch, as used per array row.
 #[derive(Debug, Clone)]
 pub struct TranslinearInstance {
+    /// Design parameters.
     pub cfg: TranslinearConfig,
     /// Frozen multiplicative gain error of the loop (V_TH mismatch around the
     /// translinear loop enters as a current-gain factor).
@@ -32,6 +34,7 @@ pub struct TranslinearInstance {
 }
 
 impl Translinear {
+    /// Nominal block with the given parameters.
     pub fn new(cfg: TranslinearConfig) -> Self {
         Translinear { cfg }
     }

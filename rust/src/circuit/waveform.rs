@@ -4,6 +4,7 @@
 /// One named signal over time.
 #[derive(Debug, Clone)]
 pub struct Trace {
+    /// Signal name.
     pub name: String,
     /// Sample values, one per stored timestep.
     pub values: Vec<f64>,
@@ -14,10 +15,12 @@ pub struct Trace {
 pub struct Waveform {
     /// Time between stored samples (s).
     pub dt: f64,
+    /// The traces, in construction order.
     pub traces: Vec<Trace>,
 }
 
 impl Waveform {
+    /// Empty waveform for the named signals, sampled every `dt` seconds.
     pub fn new(dt: f64, names: &[String]) -> Self {
         Waveform {
             dt,
@@ -33,10 +36,12 @@ impl Waveform {
         }
     }
 
+    /// Stored timesteps.
     pub fn len(&self) -> usize {
         self.traces.first().map_or(0, |t| t.values.len())
     }
 
+    /// Whether no samples have been pushed.
     pub fn is_empty(&self) -> bool {
         self.len() == 0
     }

@@ -26,12 +26,14 @@ use crate::device::VariationSampler;
 /// Nominal WTA block.
 #[derive(Debug, Clone)]
 pub struct Wta {
+    /// Design parameters.
     pub cfg: WtaConfig,
 }
 
 /// A fabricated WTA instance: frozen per-rail input-referred offsets.
 #[derive(Debug, Clone)]
 pub struct WtaInstance {
+    /// Design parameters.
     pub cfg: WtaConfig,
     /// Multiplicative input-referred error per rail (mirror + T1/T2 mismatch).
     pub rail_gain: Vec<f64>,
@@ -54,6 +56,7 @@ pub struct WtaOutcome {
 }
 
 impl Wta {
+    /// Nominal block with the given parameters.
     pub fn new(cfg: WtaConfig) -> Self {
         Wta { cfg }
     }

@@ -332,9 +332,13 @@ bind_toml!(EnergyConfig {
 /// variations": FeFET V_TH, 1R, MOS size + V_TH, supply).
 #[derive(Debug, Clone, PartialEq)]
 pub struct VariationConfig {
+    /// Sample FeFET threshold-voltage variation.
     pub fefet_vth: bool,
+    /// Sample 1R resistor variation.
     pub resistor: bool,
+    /// Sample MOS size and threshold variation.
     pub mos: bool,
+    /// Sample supply-voltage variation.
     pub supply: bool,
     /// Relative supply-voltage sigma (paper: 10 %).
     pub sigma_supply_rel: f64,
@@ -588,15 +592,25 @@ impl FromToml for KernelConfig {
 /// Top-level configuration.
 #[derive(Debug, Clone, Default, PartialEq)]
 pub struct CosimeConfig {
+    /// FeFET device parameters (`[device]`).
     pub device: DeviceConfig,
+    /// Translinear cosine core (`[translinear]`).
     pub translinear: TranslinearConfig,
+    /// Winner-take-all stage (`[wta]`).
     pub wta: WtaConfig,
+    /// Array geometry (`[array]`).
     pub array: ArrayConfig,
+    /// Energy accounting constants (`[energy]`).
     pub energy: EnergyConfig,
+    /// Monte Carlo variation switches (`[variation]`).
     pub variation: VariationConfig,
+    /// Serving coordinator: batching and queue policy (`[coordinator]`).
     pub coordinator: CoordinatorConfig,
+    /// Write-verify programming loop (`[write]`).
     pub write: WriteConfig,
+    /// Network serving (`[server]`).
     pub server: ServerConfig,
+    /// Search kernel selection (`[kernel]`).
     pub kernel: KernelConfig,
 }
 

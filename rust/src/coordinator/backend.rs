@@ -61,7 +61,9 @@ use super::service::AmService;
 /// engine-metric score. (The wire protocol re-exports this as `WireHit`.)
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct Hit {
+    /// Global row id of the hit.
     pub row: u64,
+    /// Score in the engine's own metric (higher = closer).
     pub score: f64,
 }
 
@@ -70,7 +72,9 @@ pub struct Hit {
 /// in the batch was served at.
 #[derive(Debug, Clone, PartialEq)]
 pub struct BatchResult {
+    /// Highest aggregate epoch any query in the batch was served at.
     pub epoch: u64,
+    /// One ranked hit list per query, in submission order.
     pub results: Vec<Vec<Hit>>,
 }
 
@@ -80,9 +84,13 @@ pub struct BatchResult {
 /// rejections. `0` means "unknown" (a pre-v2 peer that did not advertise).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct BackendHealth {
+    /// Total stored rows across shards.
     pub rows: u64,
+    /// Word width in bits.
     pub dims: u64,
+    /// Aggregate store epoch (sum over shards).
     pub epoch: u64,
+    /// Shard count behind this backend (1 for a local store).
     pub shards: u32,
     /// Server-side dynamic batch cap — the sweet spot for frame sizing.
     pub max_batch: u32,
@@ -94,10 +102,15 @@ pub struct BackendHealth {
 /// fields of [`WriteReport`]; per-round latencies stay server-side).
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct WriteCost {
+    /// Cells touched by the verified write.
     pub cells: u64,
+    /// Program/verify pulses issued.
     pub pulses: u64,
+    /// Cells still failing verify after the retry budget.
     pub failures: u64,
+    /// Modeled write energy in joules.
     pub energy_j: f64,
+    /// Modeled write latency in seconds.
     pub latency_s: f64,
 }
 
@@ -241,6 +254,7 @@ pub struct LocalBackend {
 }
 
 impl LocalBackend {
+    /// Wrap a running service as an in-process backend.
     pub fn new(svc: AmService) -> LocalBackend {
         LocalBackend { svc }
     }

@@ -11,10 +11,13 @@ use std::sync::{Condvar, Mutex};
 use std::time::{Duration, Instant};
 
 use super::request::SubmitError;
+use crate::util::sync::{lock_recover, wait_recover, wait_timeout_recover};
 
 /// A queued item: payload + enqueue timestamp.
 pub struct Pending<T> {
+    /// The queued payload.
     pub item: T,
+    /// When the item entered the queue (queue-wait metrics).
     pub enqueued: Instant,
 }
 
@@ -27,12 +30,16 @@ struct State<T> {
 pub struct Batcher<T> {
     state: Mutex<State<T>>,
     cv: Condvar,
+    /// Largest batch the worker will drain at once.
     pub max_batch: usize,
+    /// Longest a partial batch waits for more work before executing.
     pub max_wait: Duration,
+    /// Queue depth that triggers `busy` backpressure.
     pub depth: usize,
 }
 
 impl<T> Batcher<T> {
+    /// Queue with the given batching policy (`max_batch`, `depth` ≥ 1).
     pub fn new(max_batch: usize, max_wait: Duration, depth: usize) -> Self {
         assert!(max_batch >= 1 && depth >= 1);
         Batcher {
@@ -46,7 +53,7 @@ impl<T> Batcher<T> {
 
     /// Non-blocking submit with backpressure.
     pub fn submit(&self, item: T) -> Result<(), SubmitError> {
-        let mut g = self.state.lock().unwrap();
+        let mut g = lock_recover(&self.state);
         if g.closed {
             return Err(SubmitError::Closed);
         }
@@ -61,9 +68,10 @@ impl<T> Batcher<T> {
 
     /// Current queue depth.
     pub fn len(&self) -> usize {
-        self.state.lock().unwrap().queue.len()
+        lock_recover(&self.state).queue.len()
     }
 
+    /// Whether the queue is currently empty.
     pub fn is_empty(&self) -> bool {
         self.len() == 0
     }
@@ -71,7 +79,7 @@ impl<T> Batcher<T> {
     /// Blocking: wait for at least one item, then gather batch-mates until
     /// `max_batch` or `max_wait` elapses. Returns `None` once closed+drained.
     pub fn next_batch(&self) -> Option<Vec<Pending<T>>> {
-        let mut g = self.state.lock().unwrap();
+        let mut g = lock_recover(&self.state);
         // Wait for the first item (or shutdown).
         loop {
             if !g.queue.is_empty() {
@@ -80,7 +88,7 @@ impl<T> Batcher<T> {
             if g.closed {
                 return None;
             }
-            g = self.cv.wait(g).unwrap();
+            g = wait_recover(&self.cv, g);
         }
         // Gather batch-mates. max_wait == 0 is the *greedy / continuous
         // batching* policy (§Perf): take whatever is already queued and go —
@@ -98,7 +106,7 @@ impl<T> Batcher<T> {
                 if now >= deadline {
                     break;
                 }
-                let (guard, timeout) = self.cv.wait_timeout(g, deadline - now).unwrap();
+                let (guard, timeout) = wait_timeout_recover(&self.cv, g, deadline - now);
                 g = guard;
                 if timeout.timed_out() {
                     break;
@@ -115,7 +123,7 @@ impl<T> Batcher<T> {
 
     /// Close the queue: submits fail with `Closed`; workers drain then exit.
     pub fn close(&self) {
-        self.state.lock().unwrap().closed = true;
+        lock_recover(&self.state).closed = true;
         self.cv.notify_all();
     }
 }

@@ -7,17 +7,22 @@ use std::sync::Mutex;
 use std::time::Duration;
 
 use crate::am::write::WriteReport;
+use crate::util::sync::lock_recover;
 use crate::util::Histogram;
 
 /// Admin-plane operation kind — each gets its own metrics lane.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum AdminKind {
+    /// Reprogram an existing row in place.
     Update,
+    /// Append a new row to the store.
     Insert,
+    /// Remove a row (rows above shift down).
     Delete,
 }
 
 impl AdminKind {
+    /// Stable lowercase name, as printed in reports and wire payloads.
     pub fn name(self) -> &'static str {
         match self {
             AdminKind::Update => "update",
@@ -118,9 +123,13 @@ pub struct Metrics {
 /// exact up to 16 and rounded up to a power of two beyond that).
 #[derive(Debug, Clone)]
 pub struct PerKSnapshot {
+    /// Requested k of this lane (exact up to 16, else next power of two).
     pub k: usize,
+    /// Searches completed in this lane.
     pub completed: u64,
+    /// End-to-end p50 in microseconds.
     pub total_p50_us: f64,
+    /// End-to-end p99 in microseconds.
     pub total_p99_us: f64,
     /// The lane's full histogram (shared layout, see [`latency_histogram`]);
     /// `None` on snapshots reconstructed from sources that do not carry it.
@@ -130,9 +139,13 @@ pub struct PerKSnapshot {
 /// Per-admin-kind latency summary (only kinds that completed at least once).
 #[derive(Debug, Clone)]
 pub struct AdminLaneSnapshot {
+    /// Lane name (`update`/`insert`/`delete`).
     pub kind: &'static str,
+    /// Admin ops completed in this lane.
     pub completed: u64,
+    /// End-to-end p50 in microseconds.
     pub total_p50_us: f64,
+    /// End-to-end p99 in microseconds.
     pub total_p99_us: f64,
     /// The lane's full histogram; `None` when the source did not carry it.
     pub hist: Option<Histogram>,
@@ -143,8 +156,11 @@ pub struct AdminLaneSnapshot {
 /// merge instead of a worst-shard approximation.
 #[derive(Debug, Clone)]
 pub struct LatencyHists {
+    /// Queue-wait latency in microseconds.
     pub queue_us: Histogram,
+    /// Kernel-execution latency in microseconds.
     pub exec_us: Histogram,
+    /// End-to-end latency in microseconds.
     pub total_us: Histogram,
 }
 
@@ -152,26 +168,42 @@ pub struct LatencyHists {
 /// programming loop's pulse-accurate reports).
 #[derive(Debug, Clone, Copy, Default)]
 pub struct WriteCostSnapshot {
+    /// Cells touched by verified writes.
     pub cells: u64,
+    /// Program/verify pulses issued.
     pub pulses: u64,
+    /// Modeled write energy in joules.
     pub energy_j: f64,
+    /// Modeled cumulative write latency in seconds.
     pub latency_s: f64,
 }
 
 /// Point-in-time snapshot for reporting.
 #[derive(Debug, Clone)]
 pub struct MetricsSnapshot {
+    /// Search requests accepted into the queue.
     pub submitted: u64,
+    /// Search requests completed.
     pub completed: u64,
+    /// Search requests rejected with `busy` backpressure.
     pub rejected_busy: u64,
+    /// Batches executed by the worker.
     pub batches: u64,
+    /// Mean formed-batch size.
     pub mean_batch_size: f64,
+    /// Queue-wait p50 in microseconds.
     pub queue_p50_us: f64,
+    /// Queue-wait p99 in microseconds.
     pub queue_p99_us: f64,
+    /// Kernel-execution p50 in microseconds.
     pub exec_p50_us: f64,
+    /// Kernel-execution p99 in microseconds.
     pub exec_p99_us: f64,
+    /// End-to-end p50 in microseconds.
     pub total_p50_us: f64,
+    /// End-to-end p99 in microseconds.
     pub total_p99_us: f64,
+    /// End-to-end mean in microseconds.
     pub total_mean_us: f64,
     /// Latency broken down by requested k, ascending k.
     pub per_k: Vec<PerKSnapshot>,
@@ -195,6 +227,7 @@ impl Default for Metrics {
 }
 
 impl Metrics {
+    /// Fresh counters, empty histograms.
     pub fn new() -> Self {
         let h = latency_histogram;
         Metrics {
@@ -222,22 +255,26 @@ impl Metrics {
         }
     }
 
+    /// Record a request accepted into the queue.
     pub fn on_submit(&self) {
-        self.inner.lock().unwrap().submitted += 1;
+        lock_recover(&self.inner).submitted += 1;
     }
 
+    /// Record a request rejected with `busy` backpressure.
     pub fn on_reject_busy(&self) {
-        self.inner.lock().unwrap().rejected_busy += 1;
+        lock_recover(&self.inner).rejected_busy += 1;
     }
 
+    /// Record one formed batch of `size` requests.
     pub fn on_batch(&self, size: usize) {
-        let mut g = self.inner.lock().unwrap();
+        let mut g = lock_recover(&self.inner);
         g.batches += 1;
         g.batch_sizes.push(size as u64);
     }
 
+    /// Record one completed search with its queue/exec split.
     pub fn on_complete(&self, queued: Duration, exec: Duration, k: usize) {
-        let mut g = self.inner.lock().unwrap();
+        let mut g = lock_recover(&self.inner);
         g.completed += 1;
         let qu = queued.as_secs_f64() * 1e6;
         let ex = exec.as_secs_f64() * 1e6;
@@ -255,7 +292,7 @@ impl Metrics {
     /// Record one committed admin op with its wall time and (for ops that
     /// programmed the array) the write-verify cost report.
     pub fn on_admin(&self, kind: AdminKind, total: Duration, report: Option<&WriteReport>) {
-        let mut g = self.inner.lock().unwrap();
+        let mut g = lock_recover(&self.inner);
         let lane = &mut g.admin[kind.idx()];
         lane.completed += 1;
         lane.total_us.record((total.as_secs_f64() * 1e6).max(0.5));
@@ -267,16 +304,17 @@ impl Metrics {
     /// Account write pulses that were spent even though the op was rejected
     /// (verify failure): the array fired them regardless.
     pub fn on_write_spent(&self, report: &WriteReport) {
-        self.inner.lock().unwrap().absorb_write(report);
+        lock_recover(&self.inner).absorb_write(report);
     }
 
     /// Record a rejected admin op (bad row, dims mismatch, verify failure).
     pub fn on_admin_rejected(&self) {
-        self.inner.lock().unwrap().admin_rejected += 1;
+        lock_recover(&self.inner).admin_rejected += 1;
     }
 
+    /// Consistent point-in-time copy of every counter and histogram.
     pub fn snapshot(&self) -> MetricsSnapshot {
-        let g = self.inner.lock().unwrap();
+        let g = lock_recover(&self.inner);
         let mean_batch = if g.batch_sizes.is_empty() {
             0.0
         } else {

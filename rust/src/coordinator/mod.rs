@@ -35,11 +35,17 @@
 //! Engines are pluggable ([`crate::am::AmEngine`]): digital (bit-exact),
 //! XLA (compiled Pallas artifact), analog (circuit-sim), or the baselines.
 
+/// The completion-based `Backend` trait and its local implementation.
 pub mod backend;
+/// Lock-and-condvar batching queue.
 pub mod batcher;
+/// Request/response types and typed submit errors.
 pub mod metrics;
+/// The batching search service: worker loop + admin plane.
 pub mod request;
+/// Tile manager: sharded storage with epoch-guarded mutation.
 pub mod service;
+/// Tile manager: epoch-guarded sharded storage and block search.
 pub mod tiles;
 
 pub use backend::{

@@ -78,6 +78,7 @@ pub struct SearchResponse {
     /// Store epoch this search was served at: the whole batch scored one
     /// consistent snapshot of the (possibly live-updating) tile set.
     pub epoch: u64,
+    /// Queue/exec/batch breakdown of this request's latency.
     pub timing: RequestTiming,
 }
 

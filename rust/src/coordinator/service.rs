@@ -26,6 +26,7 @@ use crate::am::store::program_word_verified;
 use crate::am::write::WriteReport;
 use crate::am::{BlockTopK, QueryBlock, SearchResult};
 use crate::config::{CoordinatorConfig, CosimeConfig};
+use crate::util::sync::lock_recover;
 use crate::util::{BitVec, Rng};
 
 use super::batcher::Batcher;
@@ -108,6 +109,9 @@ impl AmService {
                 std::thread::Builder::new()
                     .name(format!("cosime-worker-{w}"))
                     .spawn(move || worker_loop(&shared))
+                    // lint: allow(no-panic) -- startup-time: a service that
+                    // cannot spawn its workers cannot serve at all, and this
+                    // runs before any request is accepted.
                     .expect("spawn worker")
             })
             .collect();
@@ -331,7 +335,7 @@ impl AmService {
                 self.shared.tiles.dims()
             )));
         }
-        let mut w = self.shared.write.lock().unwrap();
+        let mut w = lock_recover(&self.shared.write);
         let WritePath { cfg, rng } = &mut *w;
         program_word_verified(cfg, word, rng).map_err(|e| {
             // The array fired the pulses whether or not verify passed —
@@ -353,6 +357,7 @@ impl AmService {
         self.shared.tiles.snapshot_words()
     }
 
+    /// Point-in-time metrics snapshot.
     pub fn metrics(&self) -> MetricsSnapshot {
         self.shared.metrics.snapshot()
     }
@@ -370,14 +375,17 @@ impl AmService {
         self.shared.max_k_policy.min(self.shared.tiles.max_k())
     }
 
+    /// Stored row count (live; changes under admin traffic).
     pub fn rows(&self) -> usize {
         self.shared.tiles.rows()
     }
 
+    /// Word width in bits.
     pub fn dims(&self) -> usize {
         self.shared.tiles.dims()
     }
 
+    /// Search requests currently queued.
     pub fn queue_len(&self) -> usize {
         self.shared.batcher.len()
     }
@@ -405,13 +413,18 @@ fn worker_loop(shared: &Shared) {
         // Mixed-k batches ride together: score once at the batch's deepest
         // k, then truncate each response to its own request's k (the ranked
         // prefix of a deeper selector is exactly the shallower result).
+        // lint: hot-path
         let mut max_k = 1usize;
         block.clear();
         for pending in &batch {
+            // lint: allow(hot-path-alloc) -- QueryBlock::push copies into the
+            // worker-lifetime lane buffer; it only grows until the buffer has
+            // warmed to the deepest batch, then reuses it.
             block.push(&pending.item.query);
             max_k = max_k.max(pending.item.k);
         }
         let epoch = shared.tiles.search_block(block.view(), max_k, &mut scratch, &mut out);
+        // lint: end-hot-path
         let exec = now.elapsed();
         let batch_size = batch.len();
         for (qi, pending) in batch.into_iter().enumerate() {
@@ -420,6 +433,10 @@ fn worker_loop(shared: &Shared) {
             shared.metrics.on_complete(queued, exec, k);
             let ranked = out.query(qi);
             let hits: Vec<SearchResult> = ranked.iter().take(k).cloned().collect();
+            // lint: allow(no-panic) -- non-empty by construction: the store
+            // refuses to delete its last row, submit_topk rejects k == 0, and
+            // search_block clamps k to the row count, so every selector holds
+            // at least one ranked hit.
             let head = hits.first().expect("tile manager has rows");
             let timing = RequestTiming { queued, exec, batch_size };
             let _ = pending.item.reply.send(SearchResponse {

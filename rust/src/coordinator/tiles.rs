@@ -159,6 +159,7 @@ impl TileManager {
             let rest = remaining.split_off(take);
             tiles.push(factory(remaining.clone())?);
             tile_words.push(remaining);
+            // lint: allow(no-panic) -- offsets starts as vec![0], so last() is always Some.
             offsets.push(offsets.last().unwrap() + take);
             remaining = rest;
         }
@@ -173,14 +174,19 @@ impl TileManager {
         })
     }
 
+    /// Number of tiles currently backing the store.
     pub fn tile_count(&self) -> usize {
+        // lint: allow(no-panic) -- a poisoned epoch lock means a mutator panicked mid-commit; serving or mutating a possibly-torn store would silently corrupt results, so propagating the panic is the correct policy.
         self.inner.read().unwrap().tiles.len()
     }
 
+    /// Total stored rows across tiles.
     pub fn rows(&self) -> usize {
+        // lint: allow(no-panic) -- a poisoned epoch lock means a mutator panicked mid-commit; serving or mutating a possibly-torn store would silently corrupt results, so propagating the panic is the correct policy.
         self.inner.read().unwrap().total_rows
     }
 
+    /// Word width in bits.
     pub fn dims(&self) -> usize {
         self.dims
     }
@@ -201,6 +207,7 @@ impl TileManager {
     /// Flat copy of every stored word in global row order — the persistence
     /// path of a live server (consistent: taken under the read lock).
     pub fn snapshot_words(&self) -> Vec<BitVec> {
+        // lint: allow(no-panic) -- a poisoned epoch lock means a mutator panicked mid-commit; serving or mutating a possibly-torn store would silently corrupt results, so propagating the panic is the correct policy.
         let set = self.inner.read().unwrap();
         set.words.iter().flat_map(|w| w.iter().cloned()).collect()
     }
@@ -260,6 +267,7 @@ impl TileManager {
         if word.len() != self.dims {
             bail!("word has {} bits, engine expects {}", word.len(), self.dims);
         }
+        // lint: allow(no-panic) -- a poisoned epoch lock means a mutator panicked mid-commit; serving or mutating a possibly-torn store would silently corrupt results, so propagating the panic is the correct policy.
         let mut set = self.inner.write().unwrap();
         self.check_expected_epoch(expected_epoch)?;
         if row >= set.total_rows {
@@ -292,6 +300,7 @@ impl TileManager {
         if word.len() != self.dims {
             bail!("word has {} bits, engine expects {}", word.len(), self.dims);
         }
+        // lint: allow(no-panic) -- a poisoned epoch lock means a mutator panicked mid-commit; serving or mutating a possibly-torn store would silently corrupt results, so propagating the panic is the correct policy.
         let mut set = self.inner.write().unwrap();
         self.check_expected_epoch(expected_epoch)?;
         let row = set.total_rows;
@@ -303,6 +312,7 @@ impl TileManager {
                 set.tiles[t] = (self.factory)(ws)?;
             }
             set.words[t].push(word.clone());
+            // lint: allow(no-panic) -- offsets starts as vec![0] and only grows, so last_mut() is always Some.
             *set.offsets.last_mut().unwrap() = row + 1;
         } else {
             let engine = (self.factory)(vec![word.clone()])?;
@@ -324,6 +334,7 @@ impl TileManager {
     /// [`TileManager::delete_row`] with the optional compare-and-swap guard
     /// (see [`TileManager::update_row_cas`]).
     pub fn delete_row_cas(&self, row: usize, expected_epoch: Option<u64>) -> Result<Commit> {
+        // lint: allow(no-panic) -- a poisoned epoch lock means a mutator panicked mid-commit; serving or mutating a possibly-torn store would silently corrupt results, so propagating the panic is the correct policy.
         let mut set = self.inner.write().unwrap();
         self.check_expected_epoch(expected_epoch)?;
         if row >= set.total_rows {
@@ -374,6 +385,7 @@ impl TileManager {
         out: &mut BlockTopK,
     ) -> u64 {
         assert_eq!(queries.dims(), self.dims, "query dims mismatch");
+        // lint: allow(no-panic) -- a poisoned epoch lock means a mutator panicked mid-commit; serving or mutating a possibly-torn store would silently corrupt results, so propagating the panic is the correct policy.
         let guard = self.inner.read().unwrap();
         let set: &TileSet = &guard;
         let epoch = self.epoch.load(Ordering::Acquire);
@@ -392,6 +404,7 @@ impl TileManager {
         // Serial fast path: offer every tile's rows straight into the global
         // selectors (TopK::offer *is* the merge); mirrors the seed's serial
         // per-tile loop but allocation-free and k-deep.
+        // lint: hot-path
         if n_tiles == 1 || queries.len() == 1 || threads <= 1 {
             let slot = &mut scratch.slots[0];
             for (t, tile) in set.tiles.iter().enumerate() {
@@ -399,6 +412,7 @@ impl TileManager {
             }
             return epoch;
         }
+        // lint: end-hot-path
 
         // Parallel path: tile×batch slots. Segments along the batch axis
         // keep every core busy even when tiles are few.
@@ -407,6 +421,10 @@ impl TileManager {
         while scratch.slots.len() < needed {
             scratch.slots.push(TileSlot::new());
         }
+        // Steady-state parallel scoring: the slot pool above is the only
+        // thing allowed to grow; everything from here to the merge reuses
+        // warmed buffers.
+        // lint: hot-path
         let mut i = 0;
         for tile in 0..n_tiles {
             for seg in 0..segments {
@@ -437,6 +455,7 @@ impl TileManager {
                 out.selectors_mut()[slot.q0 + j].merge_from(sel);
             }
         }
+        // lint: end-hot-path
         epoch
     }
 
@@ -466,6 +485,7 @@ impl TileManager {
     /// assert the equivalence).
     pub fn search(&self, query: &BitVec) -> SearchResult {
         assert_eq!(query.len(), self.dims, "query dims mismatch");
+        // lint: allow(no-panic) -- a poisoned epoch lock means a mutator panicked mid-commit; serving or mutating a possibly-torn store would silently corrupt results, so propagating the panic is the correct policy.
         let set = self.inner.read().unwrap();
         let mut best = SearchResult { winner: 0, score: f64::NEG_INFINITY };
         for (t, tile) in set.tiles.iter().enumerate() {
@@ -486,6 +506,7 @@ impl TileManager {
         self.search_block(block.view(), 1, &mut scratch, &mut out);
         out.selectors()
             .iter()
+            // lint: allow(no-panic) -- the store is never empty (delete refuses the last row) and k is clamped to >= 1, so every selector holds at least one hit.
             .map(|sel| sel.best().expect("tile manager has rows").clone())
             .collect()
     }

@@ -13,6 +13,7 @@ use super::fefet::FeFet;
 /// A fabricated 1FeFET1R cell instance with frozen variation.
 #[derive(Debug, Clone)]
 pub struct Cell1F1R {
+    /// The cell's FeFET (access + storage).
     pub fefet: FeFet,
     /// Relative resistor deviation, frozen at fabrication (σ = 8 % [13]).
     pub dr_rel: f64,

@@ -11,9 +11,11 @@ use crate::config::{consts, DeviceConfig};
 pub struct PolarizationState(pub f64);
 
 impl PolarizationState {
+    /// Fully set polarization (stores '1').
     pub fn set() -> Self {
         PolarizationState(1.0)
     }
+    /// Fully reset polarization (stores '0').
     pub fn reset() -> Self {
         PolarizationState(-1.0)
     }
@@ -32,6 +34,7 @@ pub struct FeFet {
     state: PolarizationState,
     /// Frozen V_TH offsets for the two states (V), sampled at build time.
     pub dvth_low: f64,
+    /// Frozen V_TH offset of the high-V_TH (reset) state (V).
     pub dvth_high: f64,
 }
 
@@ -47,6 +50,7 @@ impl FeFet {
         FeFet { state: PolarizationState::reset(), dvth_low, dvth_high }
     }
 
+    /// Current polarization.
     pub fn state(&self) -> PolarizationState {
         self.state
     }

@@ -14,6 +14,7 @@
 
 mod cell;
 mod fefet;
+/// ReRAM (1T1R) comparison cell model.
 pub mod reram;
 mod variation;
 

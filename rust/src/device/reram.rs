@@ -14,6 +14,7 @@ use crate::util::Rng;
 
 /// Published-order-of-magnitude ReRAM conductance spreads (e.g. HfOx RRAM).
 pub const SIGMA_LRS_REL: f64 = 0.30;
+/// High-resistance-state relative conductance spread.
 pub const SIGMA_HRS_REL: f64 = 0.50;
 /// HRS/LRS resistance window.
 pub const ON_OFF_RATIO: f64 = 1e2;
@@ -38,6 +39,7 @@ impl Cell1T1R {
         Cell1T1R { stored: bit, dg_rel, tune_scale: 1.0 }
     }
 
+    /// The stored bit this cell was programmed with.
     pub fn stored(&self) -> bool {
         self.stored
     }

@@ -20,6 +20,7 @@ pub struct VariationSampler {
 }
 
 impl VariationSampler {
+    /// Sampler honoring the config's variation switches.
     pub fn new(cfg: &CosimeConfig) -> Self {
         let d = &cfg.device;
         let t = &cfg.translinear;

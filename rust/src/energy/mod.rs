@@ -44,6 +44,7 @@ pub struct SearchCost {
 }
 
 impl SearchCost {
+    /// Total search energy (J): array + driver + translinear + WTA.
     pub fn total(&self) -> f64 {
         self.e_array + self.e_driver + self.e_translinear + self.e_wta
     }
@@ -68,13 +69,18 @@ impl SearchCost {
 /// Area breakdown (µm²).
 #[derive(Debug, Clone, Copy)]
 pub struct AreaBreakdown {
+    /// FeFET array area.
     pub arrays_um2: f64,
+    /// Translinear-core area.
     pub translinear_um2: f64,
+    /// WTA-stage area.
     pub wta_um2: f64,
+    /// Geometry-independent overhead (drivers, bias, routing).
     pub fixed_um2: f64,
 }
 
 impl AreaBreakdown {
+    /// Total die area in mm².
     pub fn total_mm2(&self) -> f64 {
         (self.arrays_um2 + self.translinear_um2 + self.wta_um2 + self.fixed_um2) * 1e-6
     }
@@ -95,6 +101,7 @@ pub const T_ARRAY_SETTLE: f64 = 0.2e-9;
 pub const T_WTA_NOMINAL: f64 = 2.0e-9;
 
 impl EnergyModel {
+    /// Model bound to one configuration.
     pub fn new(cfg: &CosimeConfig) -> Self {
         EnergyModel { cfg: cfg.clone() }
     }

@@ -28,6 +28,7 @@ pub enum DatasetSpec {
 }
 
 impl DatasetSpec {
+    /// Canonical uppercase name, as the paper spells it.
     pub fn name(&self) -> &'static str {
         match self {
             DatasetSpec::Ucihar => "UCIHAR",
@@ -45,6 +46,7 @@ impl DatasetSpec {
         }
     }
 
+    /// Every dataset of Table 2, in paper order.
     pub fn all() -> [DatasetSpec; 3] {
         [DatasetSpec::Ucihar, DatasetSpec::Face, DatasetSpec::Isolet]
     }
@@ -72,12 +74,19 @@ impl Default for SyntheticParams {
 
 /// A materialized dataset.
 pub struct Dataset {
+    /// Dataset name.
     pub name: String,
+    /// Feature dimension n.
     pub features: usize,
+    /// Class count K.
     pub classes: usize,
+    /// Training feature rows.
     pub train_x: Vec<Vec<f32>>,
+    /// Training labels (class indices).
     pub train_y: Vec<usize>,
+    /// Test feature rows.
     pub test_x: Vec<Vec<f32>>,
+    /// Test labels (class indices).
     pub test_y: Vec<usize>,
 }
 
@@ -152,10 +161,12 @@ impl Dataset {
         }
     }
 
+    /// Number of training examples.
     pub fn train_len(&self) -> usize {
         self.train_x.len()
     }
 
+    /// Number of test examples.
     pub fn test_len(&self) -> usize {
         self.test_x.len()
     }

@@ -38,10 +38,12 @@ impl RandomProjectionEncoder {
         RandomProjectionEncoder { dims, features, rows, threshold }
     }
 
+    /// Hypervector dimensionality.
     pub fn dims(&self) -> usize {
         self.dims
     }
 
+    /// Expected feature-vector length.
     pub fn features(&self) -> usize {
         self.features
     }

@@ -10,14 +10,20 @@ use super::trainer::{HdcModel, TrainConfig};
 /// Accuracy report for one (dataset, metric, D) cell of Fig. 9a.
 #[derive(Debug, Clone)]
 pub struct EvalReport {
+    /// Dataset name.
     pub dataset: String,
+    /// Engine name the batch ran on.
     pub engine: String,
+    /// Hypervector dimension.
     pub dims: usize,
+    /// Correctly classified test examples.
     pub correct: usize,
+    /// Total test examples.
     pub total: usize,
 }
 
 impl EvalReport {
+    /// Fraction correct (0 when the test set is empty).
     pub fn accuracy(&self) -> f64 {
         self.correct as f64 / self.total.max(1) as f64
     }
@@ -110,10 +116,12 @@ pub fn cosine_engine(rows: Vec<BitVec>) -> Box<dyn AmEngine> {
     Box::new(DigitalExactEngine::new(rows))
 }
 
+/// Boxed Hamming-distance engine over the given class vectors.
 pub fn hamming_engine(rows: Vec<BitVec>) -> Box<dyn AmEngine> {
     Box::new(HammingEngine::new(rows))
 }
 
+/// Boxed approx-cosine (COSIME) engine over the given class vectors.
 pub fn approx_engine(rows: Vec<BitVec>) -> Box<dyn AmEngine> {
     Box::new(ApproxCosineEngine::new(rows))
 }
@@ -131,6 +139,7 @@ pub struct FewShotSpec {
     pub episodes: usize,
     /// Hypervector dimensionality.
     pub dims: usize,
+    /// RNG seed for episode sampling.
     pub seed: u64,
 }
 

@@ -15,6 +15,7 @@
 
 use crate::util::{BitVec, Rng};
 
+/// Level-hypervector encoder: quantizes each feature into correlated levels.
 pub struct LevelEncoder {
     dims: usize,
     features: usize,
@@ -32,14 +33,17 @@ impl LevelEncoder {
         LevelEncoder { dims, features, feat_idx, thresh }
     }
 
+    /// Hypervector dimensionality.
     pub fn dims(&self) -> usize {
         self.dims
     }
 
+    /// Expected feature-vector length.
     pub fn features(&self) -> usize {
         self.features
     }
 
+    /// Encode one feature vector into a binary hypervector.
     pub fn encode(&self, f: &[f32]) -> BitVec {
         assert_eq!(f.len(), self.features, "feature length mismatch");
         BitVec::from_bools(

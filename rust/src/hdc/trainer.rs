@@ -23,11 +23,14 @@ pub enum EncoderKind {
 
 /// A built encoder of either kind.
 pub enum AnyEncoder {
+    /// Random-projection encoder.
     Rp(RandomProjectionEncoder),
+    /// Level (quantized-feature) encoder.
     Level(LevelEncoder),
 }
 
 impl AnyEncoder {
+    /// Construct the encoder kind described by `kind`.
     pub fn build(kind: EncoderKind, dims: usize, features: usize, seed: u64) -> AnyEncoder {
         match kind {
             EncoderKind::RandomProjection { threshold_scale } => {
@@ -40,6 +43,7 @@ impl AnyEncoder {
         }
     }
 
+    /// Encode one feature vector into a binary hypervector.
     pub fn encode(&self, f: &[f32]) -> BitVec {
         match self {
             AnyEncoder::Rp(e) => e.encode(f),
@@ -47,6 +51,7 @@ impl AnyEncoder {
         }
     }
 
+    /// Hypervector dimensionality.
     pub fn dims(&self) -> usize {
         match self {
             AnyEncoder::Rp(e) => e.dims(),
@@ -91,11 +96,13 @@ impl Default for TrainConfig {
 /// A trained HDC model: encoder + integer class accumulators + binarized
 /// class hypervectors.
 pub struct HdcModel {
+    /// The encoder the model was trained with.
     pub encoder: AnyEncoder,
     /// Integer bundle counters, one per class per dimension.
     acc: Vec<Vec<i32>>,
     /// Samples bundled per class (for the majority threshold).
     counts: Vec<usize>,
+    /// Number of classes.
     pub classes: usize,
 }
 

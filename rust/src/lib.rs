@@ -38,22 +38,47 @@
 //!   throughput), validated in CI.
 //! * [`repro`] — regeneration harnesses for every table and figure in the paper.
 //!
+//! * [`lint`] — the in-crate invariant linter behind `cosime lint`:
+//!   SAFETY-comment, no-panic, hot-path-allocation, and wire/config
+//!   exhaustiveness rules over the whole tree (tier-1 gated).
+//!
 //! See `rust/README.md` for the kernel API walkthrough, the cargo feature
 //! flags (notably the off-by-default `xla` runtime backend), and the
 //! experiment index.
 
+// Every `unsafe` operation inside an `unsafe fn` must be wrapped in its own
+// `unsafe {}` block (each with a `// SAFETY:` comment enforced by
+// `cosime lint`), and every public item must be documented.
+#![deny(unsafe_op_in_unsafe_fn)]
+#![warn(missing_docs)]
+
+/// Associative-memory engines: digital exact/Hamming/approx-cosine/dot.
 pub mod am;
+/// Published accelerator numbers used for comparison tables.
 pub mod baselines;
+/// Analog circuit models: translinear core, WTA, mirrors, waveforms.
 pub mod circuit;
+/// TOML config loading and the `cosime.toml` schema.
 pub mod config;
+/// Tile manager, batching service, metrics — the serving data plane.
 pub mod coordinator;
+/// FeFET/ReRAM device models and variation sampling.
 pub mod device;
+/// Energy/latency accounting shared by the repro figures.
 pub mod energy;
+/// Hyperdimensional-computing workload: encoder, trainer, datasets.
 pub mod hdc;
+/// In-crate invariant linter behind `cosime lint`.
+pub mod lint;
+/// Performance counters and flamegraph-friendly timers.
 pub mod perf;
+/// Paper figure/table reproductions (`cosime repro`).
 pub mod repro;
+/// XLA/PjRt artifact plumbing (stubbed unless the `xla` feature is on).
 pub mod runtime;
+/// Networked serving: wire protocol, servers, client, sharding router.
 pub mod server;
+/// Support code: bitvectors, stats, JSON, TOML, CLI, RNG, sync helpers.
 pub mod util;
 
 pub use config::CosimeConfig;

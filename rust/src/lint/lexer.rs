@@ -1,0 +1,485 @@
+//! A minimal, dependency-free Rust lexer for the invariant linter.
+//!
+//! This is **not** a full Rust front end — it splits source text into just
+//! enough structure for token-sequence rules: identifiers, punctuation,
+//! string/char literals, numbers, and comments, each tagged with the 1-based
+//! line it starts on. Getting comments and literals right is the whole point:
+//! a substring scan would flag `unwrap` inside a doc comment or a string, and
+//! would miss that `r#"…"#` can contain anything at all. The lexer handles
+//! line comments, nested block comments, raw/byte/raw-byte strings, and the
+//! char-literal vs. lifetime ambiguity (`'a'` vs. `'a`), which is the only
+//! genuinely fiddly part of tokenizing Rust without a parser.
+//!
+//! The rules in [`super::rules`] consume the output three ways:
+//!
+//! * token-sequence matching (e.g. `.` `unwrap` `(`) for call-site rules,
+//! * the comment list for `// SAFETY:` and `// lint:` directives,
+//! * per-line shape info (code / attribute / comment-only / blank) for the
+//!   "immediately preceded by" attachment walk.
+
+/// What kind of token a [`Tok`] is.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TokKind {
+    /// Identifier or keyword (`unsafe`, `unwrap`, `Vec`, …).
+    Ident,
+    /// Single punctuation character (`.`, `(`, `{`, `!`, `#`, …).
+    Punct(char),
+    /// String literal of any flavor (`"…"`, `r#"…"#`, `b"…"`).
+    Str,
+    /// Character or byte literal (`'x'`, `b'\n'`).
+    Char,
+    /// Lifetime or loop label (`'a`, `'outer`).
+    Lifetime,
+    /// Numeric literal, including suffixes and hex (`1_000`, `0x1F`, `2.5e3`).
+    Num,
+}
+
+/// One lexed token with its source position.
+#[derive(Debug, Clone)]
+pub struct Tok {
+    /// 1-based line the token starts on.
+    pub line: u32,
+    /// Token classification.
+    pub kind: TokKind,
+    /// Verbatim source text of the token (string literals keep their quotes).
+    pub text: String,
+}
+
+impl Tok {
+    /// True if this token is the identifier `name`.
+    pub fn is_ident(&self, name: &str) -> bool {
+        self.kind == TokKind::Ident && self.text == name
+    }
+
+    /// True if this token is the punctuation character `c`.
+    pub fn is_punct(&self, c: char) -> bool {
+        self.kind == TokKind::Punct(c)
+    }
+}
+
+/// One comment (line or block) with the line it starts on.
+#[derive(Debug, Clone)]
+pub struct Comment {
+    /// 1-based line the comment starts on.
+    pub line: u32,
+    /// Verbatim comment text including the `//` / `/* */` delimiters.
+    pub text: String,
+}
+
+/// Per-line shape classification, used by the SAFETY attachment walk.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct LineInfo {
+    /// A non-comment token starts on this line.
+    pub has_code: bool,
+    /// A comment starts on this line.
+    pub has_comment: bool,
+    /// The first token on this line is `#` (an attribute line).
+    pub starts_attr: bool,
+}
+
+/// The full lexer output for one source file.
+#[derive(Debug, Default)]
+pub struct Lexed {
+    /// All non-comment tokens in source order.
+    pub toks: Vec<Tok>,
+    /// All comments in source order.
+    pub comments: Vec<Comment>,
+    /// `lines[n]` describes line `n` (index 0 is unused padding).
+    pub lines: Vec<LineInfo>,
+}
+
+impl Lexed {
+    /// Shape info for 1-based line `n` (default/blank if out of range).
+    pub fn line(&self, n: u32) -> LineInfo {
+        self.lines.get(n as usize).copied().unwrap_or_default()
+    }
+
+    /// Iterator over comments that start on 1-based line `n`.
+    pub fn comments_on(&self, n: u32) -> impl Iterator<Item = &Comment> {
+        self.comments.iter().filter(move |c| c.line == n)
+    }
+}
+
+fn is_ident_start(b: u8) -> bool {
+    b.is_ascii_alphabetic() || b == b'_'
+}
+
+fn is_ident_cont(b: u8) -> bool {
+    b.is_ascii_alphanumeric() || b == b'_'
+}
+
+/// Byte length of the UTF-8 character starting with `b` (1 for malformed
+/// input, which keeps the lexer moving on garbage bytes).
+fn utf8_len(b: u8) -> usize {
+    match b {
+        0x00..=0x7F => 1,
+        0xC0..=0xDF => 2,
+        0xE0..=0xEF => 3,
+        0xF0..=0xF7 => 4,
+        _ => 1,
+    }
+}
+
+/// Tokenize one Rust source file.
+///
+/// Never fails: malformed input (unterminated strings, stray bytes) degrades
+/// to best-effort tokens rather than an error, because the linter must keep
+/// walking the rest of the tree even if one file is mid-edit.
+pub fn lex(src: &str) -> Lexed {
+    let b = src.as_bytes();
+    let n = b.len();
+    let mut out = Lexed::default();
+    let mut line: u32 = 1;
+    let mut i = 0usize;
+
+    // Track which line each emitted item starts on so per-line shape info can
+    // be filled in as we go.
+    fn mark(lines: &mut Vec<LineInfo>, line: u32) -> &mut LineInfo {
+        let idx = line as usize;
+        if lines.len() <= idx {
+            lines.resize(idx + 1, LineInfo::default());
+        }
+        &mut lines[idx]
+    }
+
+    while i < n {
+        let c = b[i];
+        match c {
+            b'\n' => {
+                line += 1;
+                i += 1;
+            }
+            c if c.is_ascii_whitespace() => i += 1,
+            // Line comment (also `///` and `//!` doc comments).
+            b'/' if i + 1 < n && b[i + 1] == b'/' => {
+                let start = i;
+                let l0 = line;
+                while i < n && b[i] != b'\n' {
+                    i += 1;
+                }
+                mark(&mut out.lines, l0).has_comment = true;
+                out.comments.push(Comment {
+                    line: l0,
+                    text: src[start..i].to_string(),
+                });
+            }
+            // Block comment; Rust block comments nest.
+            b'/' if i + 1 < n && b[i + 1] == b'*' => {
+                let start = i;
+                let l0 = line;
+                let mut depth = 1usize;
+                i += 2;
+                while i < n && depth > 0 {
+                    if b[i] == b'\n' {
+                        line += 1;
+                        i += 1;
+                    } else if b[i] == b'/' && i + 1 < n && b[i + 1] == b'*' {
+                        depth += 1;
+                        i += 2;
+                    } else if b[i] == b'*' && i + 1 < n && b[i + 1] == b'/' {
+                        depth -= 1;
+                        i += 2;
+                    } else {
+                        i += 1;
+                    }
+                }
+                mark(&mut out.lines, l0).has_comment = true;
+                out.comments.push(Comment {
+                    line: l0,
+                    text: src[start..i].to_string(),
+                });
+            }
+            // Plain string literal.
+            b'"' => {
+                let l0 = line;
+                let start = i;
+                i = scan_string(b, i, &mut line);
+                push_tok(&mut out, l0, TokKind::Str, &src[start..i]);
+            }
+            // Char literal or lifetime.
+            b'\'' => {
+                let l0 = line;
+                let start = i;
+                let (end, kind) = scan_char_or_lifetime(b, i);
+                i = end;
+                push_tok(&mut out, l0, kind, &src[start..i]);
+            }
+            // `r"…"`, `r#"…"#`, `r#ident`, or a plain ident starting with r.
+            b'r' => {
+                let l0 = line;
+                let start = i;
+                if let Some(end) = try_scan_raw_string(b, i, &mut line) {
+                    i = end;
+                    push_tok(&mut out, l0, TokKind::Str, &src[start..i]);
+                } else if i + 1 < n && b[i + 1] == b'#' && i + 2 < n && is_ident_start(b[i + 2]) {
+                    // Raw identifier `r#type`.
+                    i += 2;
+                    while i < n && is_ident_cont(b[i]) {
+                        i += 1;
+                    }
+                    push_tok(&mut out, l0, TokKind::Ident, &src[start..i]);
+                } else {
+                    i = scan_ident(b, i);
+                    push_tok(&mut out, l0, TokKind::Ident, &src[start..i]);
+                }
+            }
+            // `b"…"`, `b'…'`, `br"…"`, or a plain ident starting with b.
+            b'b' => {
+                let l0 = line;
+                let start = i;
+                if i + 1 < n && b[i + 1] == b'"' {
+                    i = scan_string(b, i + 1, &mut line);
+                    push_tok(&mut out, l0, TokKind::Str, &src[start..i]);
+                } else if i + 1 < n && b[i + 1] == b'\'' {
+                    let (end, _) = scan_char_or_lifetime(b, i + 1);
+                    i = end;
+                    push_tok(&mut out, l0, TokKind::Char, &src[start..i]);
+                } else if i + 1 < n && b[i + 1] == b'r' {
+                    if let Some(end) = try_scan_raw_string(b, i + 1, &mut line) {
+                        i = end;
+                        push_tok(&mut out, l0, TokKind::Str, &src[start..i]);
+                    } else {
+                        i = scan_ident(b, i);
+                        push_tok(&mut out, l0, TokKind::Ident, &src[start..i]);
+                    }
+                } else {
+                    i = scan_ident(b, i);
+                    push_tok(&mut out, l0, TokKind::Ident, &src[start..i]);
+                }
+            }
+            c if is_ident_start(c) => {
+                let l0 = line;
+                let start = i;
+                i = scan_ident(b, i);
+                push_tok(&mut out, l0, TokKind::Ident, &src[start..i]);
+            }
+            c if c.is_ascii_digit() => {
+                let l0 = line;
+                let start = i;
+                i += 1;
+                while i < n {
+                    if is_ident_cont(b[i]) {
+                        i += 1;
+                    } else if b[i] == b'.' && i + 1 < n && b[i + 1].is_ascii_digit() {
+                        // `1.5` continues the number; `1.max(…)` and `0..10`
+                        // stop at the dot.
+                        i += 1;
+                    } else {
+                        break;
+                    }
+                }
+                push_tok(&mut out, l0, TokKind::Num, &src[start..i]);
+            }
+            _ => {
+                let l0 = line;
+                // Punctuation is emitted one char at a time; multi-char
+                // operators (`::`, `=>`, `..`) are matched as sequences by
+                // the rules that care.
+                let ch = src[i..].chars().next().unwrap_or('\u{FFFD}');
+                push_tok(&mut out, l0, TokKind::Punct(ch), &src[i..i + ch.len_utf8()]);
+                i += ch.len_utf8();
+            }
+        }
+    }
+
+    // Second pass over tokens: attribute-line classification.
+    let mut first_on_line: Option<u32> = None;
+    for t in &out.toks {
+        if first_on_line != Some(t.line) {
+            first_on_line = Some(t.line);
+            if t.is_punct('#') {
+                mark(&mut out.lines, t.line).starts_attr = true;
+            }
+        }
+    }
+    out
+}
+
+fn push_tok(out: &mut Lexed, line: u32, kind: TokKind, text: &str) {
+    let idx = line as usize;
+    if out.lines.len() <= idx {
+        out.lines.resize(idx + 1, LineInfo::default());
+    }
+    out.lines[idx].has_code = true;
+    out.toks.push(Tok {
+        line,
+        kind,
+        text: text.to_string(),
+    });
+}
+
+fn scan_ident(b: &[u8], mut i: usize) -> usize {
+    while i < b.len() && is_ident_cont(b[i]) {
+        i += 1;
+    }
+    i
+}
+
+/// Scan a `"…"` string starting at the opening quote; returns the index one
+/// past the closing quote (or EOF for unterminated strings).
+fn scan_string(b: &[u8], mut i: usize, line: &mut u32) -> usize {
+    debug_assert_eq!(b[i], b'"');
+    i += 1;
+    while i < b.len() {
+        match b[i] {
+            b'\\' => i += 2,
+            b'"' => return i + 1,
+            b'\n' => {
+                *line += 1;
+                i += 1;
+            }
+            _ => i += 1,
+        }
+    }
+    i
+}
+
+/// Scan a raw string `r"…"` / `r#"…"#` starting at the `r`; returns `None`
+/// if the text at `i` is not actually a raw string opener.
+fn try_scan_raw_string(b: &[u8], i: usize, line: &mut u32) -> Option<usize> {
+    debug_assert_eq!(b[i], b'r');
+    let mut j = i + 1;
+    let mut hashes = 0usize;
+    while j < b.len() && b[j] == b'#' {
+        hashes += 1;
+        j += 1;
+    }
+    if j >= b.len() || b[j] != b'"' {
+        return None;
+    }
+    j += 1;
+    while j < b.len() {
+        if b[j] == b'\n' {
+            *line += 1;
+            j += 1;
+        } else if b[j] == b'"' {
+            let mut k = j + 1;
+            let mut seen = 0usize;
+            while k < b.len() && b[k] == b'#' && seen < hashes {
+                seen += 1;
+                k += 1;
+            }
+            if seen == hashes {
+                return Some(k);
+            }
+            j += 1;
+        } else {
+            j += 1;
+        }
+    }
+    Some(j)
+}
+
+/// Disambiguate `'x'` (char literal) from `'label` (lifetime/loop label),
+/// starting at the quote. Returns the end index and the token kind.
+fn scan_char_or_lifetime(b: &[u8], i: usize) -> (usize, TokKind) {
+    debug_assert_eq!(b[i], b'\'');
+    let n = b.len();
+    let j = i + 1;
+    if j >= n {
+        return (j, TokKind::Char);
+    }
+    if b[j] == b'\\' {
+        // Escaped char literal: scan to the closing quote.
+        let mut k = j + 1;
+        while k < n {
+            if b[k] == b'\\' {
+                k += 2;
+            } else if b[k] == b'\'' {
+                return (k + 1, TokKind::Char);
+            } else {
+                k += 1;
+            }
+        }
+        return (k, TokKind::Char);
+    }
+    // One (possibly multi-byte) char followed by a quote is a char literal;
+    // anything else is a lifetime or loop label.
+    let ch_len = utf8_len(b[j]);
+    let k = j + ch_len;
+    if k < n && b[k] == b'\'' {
+        return (k + 1, TokKind::Char);
+    }
+    let mut k = j;
+    while k < n && is_ident_cont(b[k]) {
+        k += 1;
+    }
+    (k, TokKind::Lifetime)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn idents(src: &str) -> Vec<String> {
+        lex(src)
+            .toks
+            .into_iter()
+            .filter(|t| t.kind == TokKind::Ident)
+            .map(|t| t.text)
+            .collect()
+    }
+
+    #[test]
+    fn comments_are_not_tokens() {
+        let l = lex("// unwrap\n/* expect */ let x = 1;\n");
+        assert!(l.toks.iter().all(|t| t.text != "unwrap" && t.text != "expect"));
+        assert_eq!(l.comments.len(), 2);
+        assert_eq!(l.comments[0].line, 1);
+        assert_eq!(l.comments[1].line, 2);
+    }
+
+    #[test]
+    fn strings_hide_their_contents() {
+        let l = lex(r##"let s = r#"unsafe { panic!() }"#; let t = "unwrap()";"##);
+        assert!(l.toks.iter().all(|t| t.text != "unsafe" && t.text != "panic" && t.text != "unwrap"));
+        assert_eq!(l.toks.iter().filter(|t| t.kind == TokKind::Str).count(), 2);
+    }
+
+    #[test]
+    fn char_vs_lifetime() {
+        let l = lex("let c = 'x'; fn f<'a>(v: &'a str) {} 'outer: loop { break 'outer; }");
+        let chars: Vec<_> = l.toks.iter().filter(|t| t.kind == TokKind::Char).collect();
+        let lifes: Vec<_> = l.toks.iter().filter(|t| t.kind == TokKind::Lifetime).collect();
+        assert_eq!(chars.len(), 1);
+        assert_eq!(chars[0].text, "'x'");
+        assert_eq!(lifes.len(), 4); // 'a twice, 'outer twice
+    }
+
+    #[test]
+    fn numbers_do_not_eat_ranges_or_methods() {
+        let l = lex("for i in 0..10 { let y = 1.max(2); let z = 2.5; }");
+        let nums: Vec<_> = l
+            .toks
+            .iter()
+            .filter(|t| t.kind == TokKind::Num)
+            .map(|t| t.text.as_str())
+            .collect();
+        assert_eq!(nums, ["0", "10", "1", "2", "2.5"]);
+        assert!(idents("let y = 1.max(2);").contains(&"max".to_string()));
+    }
+
+    #[test]
+    fn nested_block_comments() {
+        let l = lex("/* outer /* inner */ still comment */ fn f() {}");
+        assert_eq!(l.comments.len(), 1);
+        assert!(l.comments[0].text.contains("inner"));
+        assert!(idents("/* a /* b */ c */ fn f() {}").contains(&"f".to_string()));
+    }
+
+    #[test]
+    fn line_shapes() {
+        let l = lex("// just a comment\n#[inline]\nfn f() {}\n\n");
+        assert!(l.line(1).has_comment && !l.line(1).has_code);
+        assert!(l.line(2).starts_attr && l.line(2).has_code);
+        assert!(l.line(3).has_code && !l.line(3).starts_attr);
+        assert!(!l.line(4).has_code && !l.line(4).has_comment);
+    }
+
+    #[test]
+    fn byte_and_raw_forms() {
+        let l = lex(r#"let a = b"bytes"; let c = b'\n'; let d = br"raw";"#);
+        assert_eq!(l.toks.iter().filter(|t| t.kind == TokKind::Str).count(), 2);
+        assert_eq!(l.toks.iter().filter(|t| t.kind == TokKind::Char).count(), 1);
+    }
+}

@@ -1,0 +1,250 @@
+//! `cosime lint` — the in-crate invariant linter.
+//!
+//! A self-contained static-analysis pass (no `syn`, no external tooling)
+//! that walks `rust/src`, `rust/benches`, `rust/tests`, and `examples/` and
+//! enforces the project invariants the compiler can't:
+//!
+//! | rule | invariant |
+//! |------|-----------|
+//! | `safety-comment`  | every `unsafe` block/fn/impl is immediately preceded by `// SAFETY:` |
+//! | `no-panic`        | no `unwrap`/`expect`/`panic!`/`todo!`/`unimplemented!`/`unreachable!` in server, coordinator, or kernel code paths |
+//! | `hot-path-alloc`  | no allocation inside `// lint: hot-path` … `// lint: end-hot-path` regions |
+//! | `wire-exhaustive` | every `Op`/`ErrorCode` variant in `server/protocol.rs` is dispatched/produced in the serving layer |
+//! | `config-doc`      | every config key parsed in `config/` is documented in rust/README.md |
+//!
+//! Violations can be waived in place with
+//! `// lint: allow(<rule>) -- <reason>` (the reason is mandatory).
+//!
+//! The pass runs three ways, all through [`lint_tree`]:
+//!
+//! * `cosime lint [--json]` — CLI entry, non-zero exit on findings,
+//! * `cargo test` — `rust/tests/lint.rs` is a tier-1 gate,
+//! * CI — the `lint-invariants` job.
+
+/// Hand-rolled token-level Rust lexer (comments, strings, line shapes).
+pub mod lexer;
+/// The individual lint rules and their token-sequence matchers.
+pub mod rules;
+
+use std::fmt;
+use std::fs;
+use std::path::{Path, PathBuf};
+
+use anyhow::{Context, Result};
+
+use crate::util::json::Json;
+
+/// Which invariant a [`Finding`] violates.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Rule {
+    /// `unsafe` without an immediately preceding `// SAFETY:` comment.
+    SafetyComment,
+    /// Panicking call/macro in a serving code path.
+    NoPanic,
+    /// Allocation inside a `// lint: hot-path` region.
+    HotPathAlloc,
+    /// Wire enum variant never dispatched in the serving layer.
+    WireExhaustive,
+    /// Config key parsed but undocumented in rust/README.md.
+    ConfigDoc,
+}
+
+impl Rule {
+    /// The rule's stable name, as used in `lint: allow(<name>)` directives
+    /// and in output.
+    pub fn name(self) -> &'static str {
+        match self {
+            Rule::SafetyComment => "safety-comment",
+            Rule::NoPanic => "no-panic",
+            Rule::HotPathAlloc => "hot-path-alloc",
+            Rule::WireExhaustive => "wire-exhaustive",
+            Rule::ConfigDoc => "config-doc",
+        }
+    }
+}
+
+/// One lint violation: `file:line: rule: message`.
+#[derive(Debug, Clone)]
+pub struct Finding {
+    /// Path relative to the repo root, `/`-separated.
+    pub file: String,
+    /// 1-based line number.
+    pub line: u32,
+    /// Which rule fired.
+    pub rule: Rule,
+    /// Human-readable description, including the fix or waiver syntax.
+    pub message: String,
+}
+
+impl fmt::Display for Finding {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "{}:{}: {}: {}",
+            self.file,
+            self.line,
+            self.rule.name(),
+            self.message
+        )
+    }
+}
+
+/// Locate the repo root (the directory containing `rust/src/lib.rs`) by
+/// walking up from `start`. Returns `None` if no ancestor qualifies.
+pub fn find_repo_root(start: &Path) -> Option<PathBuf> {
+    let mut dir = start.to_path_buf();
+    for _ in 0..6 {
+        if dir.join("rust/src/lib.rs").is_file() {
+            return Some(dir);
+        }
+        if !dir.pop() {
+            break;
+        }
+    }
+    None
+}
+
+/// Locate the repo root from the current working directory (works both from
+/// the repo root and from `rust/`, where `cargo test` runs).
+pub fn repo_root() -> Option<PathBuf> {
+    find_repo_root(&std::env::current_dir().ok()?)
+}
+
+/// The directories (relative to the repo root) the linter walks.
+const WALK_ROOTS: &[&str] = &["rust/src", "rust/benches", "rust/tests", "examples"];
+
+/// Recursively collect `.rs` files under `dir`, appending repo-relative
+/// `/`-separated paths to `out`. Deterministic: entries are sorted.
+fn collect_rs(root: &Path, dir: &Path, out: &mut Vec<String>) -> Result<()> {
+    let mut entries: Vec<PathBuf> = fs::read_dir(dir)
+        .with_context(|| format!("reading {}", dir.display()))?
+        .filter_map(|e| e.ok().map(|e| e.path()))
+        .collect();
+    entries.sort();
+    for path in entries {
+        if path.is_dir() {
+            collect_rs(root, &path, out)?;
+        } else if path.extension().is_some_and(|e| e == "rs") {
+            let rel = path
+                .strip_prefix(root)
+                .unwrap_or(&path)
+                .to_string_lossy()
+                .replace('\\', "/");
+            out.push(rel);
+        }
+    }
+    Ok(())
+}
+
+/// Run the single-file rules over one source string. This is the entry the
+/// self-tests use for fixture snippets; `rel` decides rule scoping exactly
+/// as it does for on-disk files.
+pub fn lint_source(rel: &str, src: &str) -> Vec<Finding> {
+    let mut out = Vec::new();
+    rules::lint_file(rel, &lexer::lex(src), &mut out);
+    out
+}
+
+/// Lint the whole tree rooted at `root` (the repo root). Returns all
+/// findings, sorted by file then line.
+pub fn lint_tree(root: &Path) -> Result<Vec<Finding>> {
+    let mut files = Vec::new();
+    for walk in WALK_ROOTS {
+        let dir = root.join(walk);
+        if dir.is_dir() {
+            collect_rs(root, &dir, &mut files)?;
+        }
+    }
+
+    let mut findings = Vec::new();
+    let mut lexed_cache: Vec<(String, lexer::Lexed)> = Vec::with_capacity(files.len());
+    for rel in &files {
+        let src = fs::read_to_string(root.join(rel))
+            .with_context(|| format!("reading {rel}"))?;
+        let lexed = lexer::lex(&src);
+        rules::lint_file(rel, &lexed, &mut findings);
+        lexed_cache.push((rel.clone(), lexed));
+    }
+
+    // Cross-file rules.
+    let get = |name: &str| {
+        lexed_cache
+            .iter()
+            .find(|(rel, _)| rel == name)
+            .map(|(rel, lexed)| (rel.as_str(), lexed))
+    };
+    if let Some(protocol) = get("rust/src/server/protocol.rs") {
+        let serving: Vec<(&str, &lexer::Lexed)> = [
+            "rust/src/server/tcp.rs",
+            "rust/src/server/eventloop.rs",
+            "rust/src/server/client.rs",
+            "rust/src/server/remote.rs",
+        ]
+        .iter()
+        .filter_map(|n| get(n))
+        .collect();
+        rules::wire_exhaustive(protocol, &serving, &mut findings);
+    }
+    if let Some(config) = get("rust/src/config/mod.rs") {
+        let readme = fs::read_to_string(root.join("rust/README.md")).unwrap_or_default();
+        rules::config_doc(config, &readme, &mut findings);
+    }
+
+    findings.sort_by(|a, b| (&a.file, a.line).cmp(&(&b.file, b.line)));
+    Ok(findings)
+}
+
+/// Render findings as a JSON document (the `--json` mode):
+/// `{"findings": [{"file", "line", "rule", "message"}, …], "count": N}`.
+pub fn render_json(findings: &[Finding]) -> String {
+    let items = findings.iter().map(|f| {
+        Json::obj(vec![
+            ("file", Json::str(&f.file)),
+            ("line", Json::num(f.line as f64)),
+            ("rule", Json::str(f.rule.name())),
+            ("message", Json::str(&f.message)),
+        ])
+    });
+    Json::obj(vec![
+        ("count", Json::num(findings.len() as f64)),
+        ("findings", Json::arr(items)),
+    ])
+    .to_string_pretty()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_is_file_line_rule_message() {
+        let f = Finding {
+            file: "rust/src/x.rs".into(),
+            line: 7,
+            rule: Rule::NoPanic,
+            message: "boom".into(),
+        };
+        assert_eq!(f.to_string(), "rust/src/x.rs:7: no-panic: boom");
+    }
+
+    #[test]
+    fn json_round_trips_through_util_json() {
+        let f = vec![Finding {
+            file: "a.rs".into(),
+            line: 1,
+            rule: Rule::SafetyComment,
+            message: "m".into(),
+        }];
+        let parsed = Json::parse(&render_json(&f)).expect("valid json");
+        assert_eq!(parsed.get("count").and_then(Json::as_usize), Some(1));
+        let arr = parsed.get("findings").and_then(Json::as_arr).expect("arr");
+        assert_eq!(arr[0].get("rule").and_then(Json::as_str), Some("safety-comment"));
+    }
+
+    #[test]
+    fn repo_root_is_found_from_rust_dir() {
+        // Tests run with cwd == rust/; the root must still resolve.
+        let root = repo_root().expect("repo root");
+        assert!(root.join("rust/src/lint/mod.rs").is_file());
+    }
+}

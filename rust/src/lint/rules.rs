@@ -1,0 +1,752 @@
+//! The invariant rules enforced by `cosime lint`.
+//!
+//! Each rule works on the token/comment stream produced by [`super::lexer`];
+//! none of them parse Rust properly, and they don't need to — the invariants
+//! are local token shapes (`.unwrap(`, `unsafe {`) plus a handful of
+//! cross-file set-membership checks. See `DESIGN.md` §Static analysis for the
+//! rule catalog and the annotation grammar.
+//!
+//! ## Escape hatch
+//!
+//! A violation can be waived in place with
+//!
+//! ```text
+//! // lint: allow(<rule>) -- <reason>
+//! ```
+//!
+//! on the offending line or the line directly above it. The reason is
+//! mandatory: a bare `allow` without ` -- ` text does not count, so every
+//! waiver in the tree documents *why* the invariant doesn't apply.
+
+use super::lexer::{Lexed, TokKind};
+use super::{Finding, Rule};
+
+/// Paths (relative to the repo root, `/`-separated) where the `no-panic`
+/// rule applies: the serving stack and the search kernel, where a panic
+/// kills a worker thread or a connection instead of returning a wire error.
+fn in_no_panic_scope(rel: &str) -> bool {
+    rel.starts_with("rust/src/server/")
+        || rel.starts_with("rust/src/coordinator/")
+        || rel == "rust/src/am/kernel.rs"
+        || rel.starts_with("rust/src/am/kernel/")
+}
+
+/// Run all single-file rules over one lexed source file.
+pub fn lint_file(rel: &str, lexed: &Lexed, out: &mut Vec<Finding>) {
+    let allows = AllowSet::parse(lexed);
+    let tests = test_spans(lexed);
+    safety_comment(rel, lexed, &allows, out);
+    if in_no_panic_scope(rel) {
+        no_panic(rel, lexed, &allows, &tests, out);
+    }
+    hot_path_alloc(rel, lexed, &allows, out);
+}
+
+// ---------------------------------------------------------------------------
+// allow directives
+
+/// Parsed `// lint: allow(<rule>) -- <reason>` directives, keyed by rule
+/// name. A directive covers its own line (so it can trail the waived
+/// statement) and the next line that carries code, skipping any further
+/// comment lines in between (so a multi-line reason still attaches).
+struct AllowSet {
+    entries: Vec<(String, u32, u32)>,
+}
+
+impl AllowSet {
+    fn parse(lexed: &Lexed) -> Self {
+        let mut entries = Vec::new();
+        for c in &lexed.comments {
+            let mut rest = c.text.as_str();
+            while let Some(pos) = rest.find("lint: allow(") {
+                let tail = &rest[pos + "lint: allow(".len()..];
+                if let Some(close) = tail.find(')') {
+                    let rule = &tail[..close];
+                    // The reason after ` -- ` is mandatory.
+                    let after = &tail[close + 1..];
+                    let reasoned = after
+                        .trim_start()
+                        .strip_prefix("--")
+                        .is_some_and(|r| !r.trim().is_empty());
+                    if reasoned {
+                        // First code-bearing line after the directive, within
+                        // a short window so a stray directive can't waive
+                        // code pages away.
+                        let target = (c.line + 1..c.line + 8)
+                            .find(|&l| lexed.line(l).has_code)
+                            .unwrap_or(c.line);
+                        entries.push((rule.to_string(), c.line, target));
+                    }
+                    rest = after;
+                } else {
+                    break;
+                }
+            }
+        }
+        AllowSet { entries }
+    }
+
+    /// Is `rule` waived on `line`?
+    fn allows(&self, rule: &str, line: u32) -> bool {
+        self.entries
+            .iter()
+            .any(|(r, own, target)| r == rule && (*own == line || *target == line))
+    }
+}
+
+// ---------------------------------------------------------------------------
+// #[cfg(test)] exclusion
+
+/// Token-index ranges covered by `#[cfg(test)]` items (in practice: the
+/// `mod tests { … }` blocks). Panicking assertions are idiomatic in tests,
+/// so `no-panic` and the wire-exhaustiveness scans skip these spans.
+fn test_spans(lexed: &Lexed) -> Vec<(usize, usize)> {
+    let t = &lexed.toks;
+    let mut spans = Vec::new();
+    let mut i = 0usize;
+    while i + 6 < t.len() {
+        let is_cfg_test = t[i].is_punct('#')
+            && t[i + 1].is_punct('[')
+            && t[i + 2].is_ident("cfg")
+            && t[i + 3].is_punct('(')
+            && t[i + 4].is_ident("test")
+            && t[i + 5].is_punct(')')
+            && t[i + 6].is_punct(']');
+        if !is_cfg_test {
+            i += 1;
+            continue;
+        }
+        // Skip any further attributes, then find the item's body braces
+        // (stop at `;` for brace-less items like `#[cfg(test)] use …;`).
+        let mut j = i + 7;
+        while j + 1 < t.len() && t[j].is_punct('#') && t[j + 1].is_punct('[') {
+            let mut depth = 0usize;
+            j += 1;
+            while j < t.len() {
+                if t[j].is_punct('[') {
+                    depth += 1;
+                } else if t[j].is_punct(']') {
+                    depth -= 1;
+                    if depth == 0 {
+                        j += 1;
+                        break;
+                    }
+                }
+                j += 1;
+            }
+        }
+        let mut open = None;
+        while j < t.len() {
+            if t[j].is_punct('{') {
+                open = Some(j);
+                break;
+            }
+            if t[j].is_punct(';') {
+                break;
+            }
+            j += 1;
+        }
+        if let Some(open) = open {
+            let mut depth = 0usize;
+            let mut k = open;
+            while k < t.len() {
+                if t[k].is_punct('{') {
+                    depth += 1;
+                } else if t[k].is_punct('}') {
+                    depth -= 1;
+                    if depth == 0 {
+                        break;
+                    }
+                }
+                k += 1;
+            }
+            spans.push((i, k));
+            i = k + 1;
+        } else {
+            i = j + 1;
+        }
+    }
+    spans
+}
+
+fn in_spans(spans: &[(usize, usize)], idx: usize) -> bool {
+    spans.iter().any(|&(a, b)| idx >= a && idx <= b)
+}
+
+// ---------------------------------------------------------------------------
+// rule: safety-comment
+
+/// Every `unsafe` block, fn, impl, or trait must be immediately preceded by
+/// a `// SAFETY:` comment (attribute lines and further comment lines may sit
+/// between; a blank or code line breaks the attachment).
+fn safety_comment(rel: &str, lexed: &Lexed, allows: &AllowSet, out: &mut Vec<Finding>) {
+    let t = &lexed.toks;
+    for i in 0..t.len() {
+        if !t[i].is_ident("unsafe") {
+            continue;
+        }
+        let what = match t.get(i + 1) {
+            Some(n) if n.is_punct('{') => "block",
+            Some(n) if n.is_ident("fn") => {
+                // `unsafe fn name(` is a declaration; `unsafe fn(` is a
+                // function-pointer *type* and needs no SAFETY comment.
+                match t.get(i + 2) {
+                    Some(m) if m.kind == TokKind::Ident => "fn",
+                    _ => continue,
+                }
+            }
+            Some(n) if n.is_ident("impl") => "impl",
+            Some(n) if n.is_ident("trait") => "trait",
+            Some(n) if n.is_ident("extern") => "extern block",
+            _ => continue,
+        };
+        let line = t[i].line;
+        if has_safety_comment(lexed, line) || allows.allows("safety-comment", line) {
+            continue;
+        }
+        out.push(Finding {
+            file: rel.to_string(),
+            line,
+            rule: Rule::SafetyComment,
+            message: format!(
+                "`unsafe` {what} without an immediately preceding `// SAFETY:` comment"
+            ),
+        });
+    }
+}
+
+fn has_safety_comment(lexed: &Lexed, line: u32) -> bool {
+    // A trailing `// SAFETY:` on the same line counts.
+    if lexed.comments_on(line).any(|c| c.text.contains("SAFETY:")) {
+        return true;
+    }
+    // Walk upward through comment-only and attribute lines.
+    let mut j = line.saturating_sub(1);
+    while j >= 1 {
+        let info = lexed.line(j);
+        if info.has_comment && !info.has_code {
+            if lexed.comments_on(j).any(|c| c.text.contains("SAFETY:")) {
+                return true;
+            }
+            j -= 1;
+        } else if info.starts_attr {
+            j -= 1;
+        } else {
+            return false;
+        }
+    }
+    false
+}
+
+// ---------------------------------------------------------------------------
+// rule: no-panic
+
+const PANIC_MACROS: &[&str] = &["panic", "todo", "unimplemented", "unreachable"];
+
+/// No `.unwrap()` / `.expect()` / `panic!` / `todo!` / `unimplemented!` /
+/// `unreachable!` in serving code paths. Waive deliberate invariants with
+/// `// lint: allow(no-panic) -- <reason>`.
+fn no_panic(
+    rel: &str,
+    lexed: &Lexed,
+    allows: &AllowSet,
+    tests: &[(usize, usize)],
+    out: &mut Vec<Finding>,
+) {
+    let t = &lexed.toks;
+    for i in 0..t.len() {
+        if in_spans(tests, i) {
+            continue;
+        }
+        let hit = if t[i].is_punct('.')
+            && t.get(i + 1).is_some_and(|n| n.is_ident("unwrap") || n.is_ident("expect"))
+            && t.get(i + 2).is_some_and(|n| n.is_punct('('))
+        {
+            Some((t[i + 1].line, format!(".{}()", t[i + 1].text)))
+        } else if t[i].kind == TokKind::Ident
+            && PANIC_MACROS.contains(&t[i].text.as_str())
+            && t.get(i + 1).is_some_and(|n| n.is_punct('!'))
+        {
+            Some((t[i].line, format!("{}!", t[i].text)))
+        } else {
+            None
+        };
+        let Some((line, what)) = hit else { continue };
+        if allows.allows("no-panic", line) {
+            continue;
+        }
+        out.push(Finding {
+            file: rel.to_string(),
+            line,
+            rule: Rule::NoPanic,
+            message: format!(
+                "`{what}` can panic in a serving code path; return a typed error or add \
+                 `// lint: allow(no-panic) -- <reason>`"
+            ),
+        });
+    }
+}
+
+// ---------------------------------------------------------------------------
+// rule: hot-path-alloc
+
+/// Method calls that allocate (or may reallocate) on common containers.
+const ALLOC_METHODS: &[&str] = &[
+    "push",
+    "to_vec",
+    "collect",
+    "clone",
+    "cloned",
+    "to_owned",
+    "to_string",
+    "extend",
+    "extend_from_slice",
+];
+
+/// `Type::ctor` pairs that allocate.
+const ALLOC_TYPES: &[&str] = &["Vec", "Box", "String", "VecDeque", "HashMap", "BTreeMap"];
+const ALLOC_CTORS: &[&str] = &["new", "with_capacity", "from"];
+
+/// Allocating macros.
+const ALLOC_MACROS: &[&str] = &["format", "vec"];
+
+/// No allocation inside `// lint: hot-path` … `// lint: end-hot-path`
+/// regions. Markers must sit on their own lines; the region covers the
+/// lines strictly between them.
+fn hot_path_alloc(rel: &str, lexed: &Lexed, allows: &AllowSet, out: &mut Vec<Finding>) {
+    // Collect regions from the marker comments.
+    let mut regions: Vec<(u32, u32)> = Vec::new();
+    let mut open: Option<u32> = None;
+    for c in &lexed.comments {
+        // A marker is a comment that *is* the directive, not one that merely
+        // mentions it — otherwise prose like this rule's own documentation
+        // ("allocation inside a `lint: hot-path` region") would open phantom
+        // regions. Strip the comment delimiters and require the directive at
+        // the start.
+        let body = c.text.trim_start_matches(['/', '*', '!']).trim();
+        // Check the end marker first: "lint: hot-path" is a prefix of
+        // "lint: end-hot-path"'s sibling form.
+        if body.starts_with("lint: end-hot-path") {
+            match open.take() {
+                Some(start) => regions.push((start, c.line)),
+                None => out.push(Finding {
+                    file: rel.to_string(),
+                    line: c.line,
+                    rule: Rule::HotPathAlloc,
+                    message: "`lint: end-hot-path` without a matching `lint: hot-path`".into(),
+                }),
+            }
+        } else if body.starts_with("lint: hot-path") {
+            if let Some(start) = open.replace(c.line) {
+                out.push(Finding {
+                    file: rel.to_string(),
+                    line: start,
+                    rule: Rule::HotPathAlloc,
+                    message: "`lint: hot-path` region is never closed before the next one".into(),
+                });
+            }
+        }
+    }
+    if let Some(start) = open {
+        out.push(Finding {
+            file: rel.to_string(),
+            line: start,
+            rule: Rule::HotPathAlloc,
+            message: "unterminated `lint: hot-path` region (missing `lint: end-hot-path`)".into(),
+        });
+    }
+    if regions.is_empty() {
+        return;
+    }
+    let in_region = |line: u32| regions.iter().any(|&(a, b)| line > a && line < b);
+
+    let t = &lexed.toks;
+    for i in 0..t.len() {
+        let hit = if t[i].is_punct('.')
+            && t.get(i + 1)
+                .is_some_and(|n| n.kind == TokKind::Ident && ALLOC_METHODS.contains(&n.text.as_str()))
+            && t.get(i + 2).is_some_and(|n| n.is_punct('('))
+        {
+            Some((t[i + 1].line, format!(".{}()", t[i + 1].text)))
+        } else if t[i].kind == TokKind::Ident
+            && ALLOC_TYPES.contains(&t[i].text.as_str())
+            && t.get(i + 1).is_some_and(|n| n.is_punct(':'))
+            && t.get(i + 2).is_some_and(|n| n.is_punct(':'))
+            && t.get(i + 3)
+                .is_some_and(|n| n.kind == TokKind::Ident && ALLOC_CTORS.contains(&n.text.as_str()))
+        {
+            Some((t[i].line, format!("{}::{}", t[i].text, t[i + 3].text)))
+        } else if t[i].kind == TokKind::Ident
+            && ALLOC_MACROS.contains(&t[i].text.as_str())
+            && t.get(i + 1).is_some_and(|n| n.is_punct('!'))
+        {
+            Some((t[i].line, format!("{}!", t[i].text)))
+        } else {
+            None
+        };
+        let Some((line, what)) = hit else { continue };
+        if !in_region(line) || allows.allows("hot-path-alloc", line) {
+            continue;
+        }
+        out.push(Finding {
+            file: rel.to_string(),
+            line,
+            rule: Rule::HotPathAlloc,
+            message: format!(
+                "`{what}` allocates inside a `lint: hot-path` region; hoist it to warm-up \
+                 or add `// lint: allow(hot-path-alloc) -- <reason>`"
+            ),
+        });
+    }
+}
+
+// ---------------------------------------------------------------------------
+// rule: wire-exhaustive
+
+/// Variant names (and decl lines) of `enum <name>` in a lexed file.
+fn enum_variants(lexed: &Lexed, name: &str) -> Vec<(String, u32)> {
+    let t = &lexed.toks;
+    let mut i = 0usize;
+    while i + 1 < t.len() {
+        if !(t[i].is_ident("enum") && t[i + 1].is_ident(name)) {
+            i += 1;
+            continue;
+        }
+        let mut j = i + 2;
+        while j < t.len() && !t[j].is_punct('{') {
+            j += 1;
+        }
+        let mut vars = Vec::new();
+        let mut depth = 0usize; // braces nested inside the enum body
+        let mut pd = 0usize; // parens (tuple variants)
+        let mut bd = 0usize; // brackets (attributes)
+        let mut prev: Option<char> = Some('{');
+        let mut k = j + 1;
+        while k < t.len() {
+            let tok = &t[k];
+            match tok.kind {
+                TokKind::Punct('{') => depth += 1,
+                TokKind::Punct('}') => {
+                    if depth == 0 {
+                        break;
+                    }
+                    depth -= 1;
+                }
+                TokKind::Punct('(') => pd += 1,
+                TokKind::Punct(')') => pd = pd.saturating_sub(1),
+                TokKind::Punct('[') => bd += 1,
+                TokKind::Punct(']') => bd = bd.saturating_sub(1),
+                _ => {}
+            }
+            if depth == 0
+                && pd == 0
+                && bd == 0
+                && tok.kind == TokKind::Ident
+                && matches!(prev, Some('{') | Some(',') | Some(']') | Some('}'))
+            {
+                vars.push((tok.text.clone(), tok.line));
+            }
+            prev = match tok.kind {
+                TokKind::Punct(c) => Some(c),
+                _ => None,
+            };
+            k += 1;
+        }
+        return vars;
+    }
+    Vec::new()
+}
+
+/// Does any file contain the path reference `ty::variant` outside its
+/// `#[cfg(test)]` spans?
+fn any_path_ref(files: &[(&Lexed, &[(usize, usize)])], ty: &str, variant: &str) -> bool {
+    for (lexed, tests) in files {
+        let t = &lexed.toks;
+        for i in 0..t.len().saturating_sub(3) {
+            if t[i].is_ident(ty)
+                && t[i + 1].is_punct(':')
+                && t[i + 2].is_punct(':')
+                && t[i + 3].is_ident(variant)
+                && !in_spans(tests, i)
+            {
+                return true;
+            }
+        }
+    }
+    false
+}
+
+/// Cross-file exhaustiveness over the wire enums: every `Op` variant must
+/// be dispatched somewhere in `tcp.rs` / `eventloop.rs` / `client.rs`, and
+/// every `ErrorCode` variant must be produced or translated somewhere in the
+/// serving layer (including `protocol.rs`'s own conversion impls — the enum
+/// declaration itself doesn't count because variant uses inside the decl are
+/// unqualified). Test-only references don't count.
+pub fn wire_exhaustive(
+    protocol: (&str, &Lexed),
+    serving: &[(&str, &Lexed)],
+    out: &mut Vec<Finding>,
+) {
+    let (proto_rel, proto) = protocol;
+    let proto_tests = test_spans(proto);
+    let serving_lex: Vec<(&Lexed, Vec<(usize, usize)>)> = serving
+        .iter()
+        .map(|(_, l)| (*l, test_spans(l)))
+        .collect();
+    let dispatch: Vec<(&Lexed, &[(usize, usize)])> = serving_lex
+        .iter()
+        .map(|(l, s)| (*l, s.as_slice()))
+        .collect();
+    let mut with_proto: Vec<(&Lexed, &[(usize, usize)])> = dispatch.clone();
+    with_proto.push((proto, proto_tests.as_slice()));
+
+    for (variant, line) in enum_variants(proto, "Op") {
+        if !any_path_ref(&dispatch, "Op", &variant) {
+            out.push(Finding {
+                file: proto_rel.to_string(),
+                line,
+                rule: Rule::WireExhaustive,
+                message: format!(
+                    "opcode `Op::{variant}` is declared but never dispatched in \
+                     tcp.rs / eventloop.rs / client.rs"
+                ),
+            });
+        }
+    }
+    for (variant, line) in enum_variants(proto, "ErrorCode") {
+        if !any_path_ref(&with_proto, "ErrorCode", &variant) {
+            out.push(Finding {
+                file: proto_rel.to_string(),
+                line,
+                rule: Rule::WireExhaustive,
+                message: format!(
+                    "`ErrorCode::{variant}` is declared but never produced or translated \
+                     in the serving layer"
+                ),
+            });
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// rule: config-doc
+
+/// Config keys parsed by `config/mod.rs`: identifiers listed inside the
+/// `bind_toml!` bracket groups plus bare string-literal match-arm patterns
+/// (`"listen" => …`), which cover both hand-written `FromToml` impls and the
+/// `[section]` dispatch.
+fn config_keys(lexed: &Lexed) -> Vec<(String, u32)> {
+    let t = &lexed.toks;
+    let mut keys: Vec<(String, u32)> = Vec::new();
+    let mut push = |name: &str, line: u32, keys: &mut Vec<(String, u32)>| {
+        if !name.is_empty() && !keys.iter().any(|(k, _)| k == name) {
+            keys.push((name.to_string(), line));
+        }
+    };
+
+    // bind_toml! invocations: idents inside [ … ] groups are field names,
+    // which double as the TOML key names.
+    let mut i = 0usize;
+    while i + 1 < t.len() {
+        if t[i].is_ident("bind_toml") && t[i + 1].is_punct('!') {
+            let mut j = i + 2;
+            // Find the macro's opening delimiter and walk to its close.
+            let (open, close) = match t.get(j).map(|x| x.kind) {
+                Some(TokKind::Punct('(')) => ('(', ')'),
+                Some(TokKind::Punct('{')) => ('{', '}'),
+                Some(TokKind::Punct('[')) => ('[', ']'),
+                _ => {
+                    i += 1;
+                    continue;
+                }
+            };
+            let mut depth = 0usize;
+            let mut bracket = 0usize;
+            while j < t.len() {
+                if t[j].is_punct(open) {
+                    depth += 1;
+                } else if t[j].is_punct(close) {
+                    depth -= 1;
+                    if depth == 0 {
+                        break;
+                    }
+                } else if t[j].is_punct('[') {
+                    bracket += 1;
+                } else if t[j].is_punct(']') {
+                    bracket = bracket.saturating_sub(1);
+                } else if bracket > 0 && t[j].kind == TokKind::Ident {
+                    push(&t[j].text, t[j].line, &mut keys);
+                }
+                j += 1;
+            }
+            i = j;
+        }
+        i += 1;
+    }
+
+    // Bare string-literal match arms: `"key" => …`.
+    for i in 0..t.len().saturating_sub(2) {
+        if t[i].kind == TokKind::Str
+            && t[i + 1].is_punct('=')
+            && t[i + 2].is_punct('>')
+        {
+            let raw = t[i].text.trim_matches('"');
+            push(raw, t[i].line, &mut keys);
+        }
+    }
+    keys
+}
+
+/// Every config key parsed in `config/` must appear in the rust/README.md
+/// configuration reference — backticked (`` `key` ``), as a section header
+/// (`[key]`), or quoted inside a TOML example (`"key"`).
+pub fn config_doc(config: (&str, &Lexed), readme: &str, out: &mut Vec<Finding>) {
+    let (rel, lexed) = config;
+    for (key, line) in config_keys(lexed) {
+        let documented = readme.contains(&format!("`{key}`"))
+            || readme.contains(&format!("[{key}]"))
+            || readme.contains(&format!("\"{key}\""))
+            || readme.contains(&format!("`{key} "));
+        if !documented {
+            out.push(Finding {
+                file: rel.to_string(),
+                line,
+                rule: Rule::ConfigDoc,
+                message: format!(
+                    "config key `{key}` is parsed here but not documented in \
+                     rust/README.md's configuration reference"
+                ),
+            });
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::lexer::lex;
+    use super::*;
+
+    fn findings(rel: &str, src: &str) -> Vec<Finding> {
+        let mut out = Vec::new();
+        lint_file(rel, &lex(src), &mut out);
+        out
+    }
+
+    #[test]
+    fn unsafe_without_safety_fires() {
+        let out = findings("rust/src/x.rs", "fn f() {\n    unsafe { core::hint::unreachable_unchecked() }\n}\n");
+        assert_eq!(out.len(), 1);
+        assert_eq!(out[0].line, 2);
+        assert_eq!(out[0].rule, Rule::SafetyComment);
+    }
+
+    #[test]
+    fn unsafe_with_safety_is_clean() {
+        let src = "fn f() {\n    // SAFETY: caller checked the bounds.\n    unsafe { op() }\n}\n";
+        assert!(findings("rust/src/x.rs", src).is_empty());
+    }
+
+    #[test]
+    fn attrs_between_safety_and_unsafe_are_fine() {
+        let src = "// SAFETY: target_feature matches runtime dispatch.\n#[target_feature(enable = \"avx2\")]\nunsafe fn kernel() {}\n";
+        assert!(findings("rust/src/x.rs", src).is_empty());
+    }
+
+    #[test]
+    fn fn_pointer_types_are_not_flagged() {
+        let src = "struct K { f: unsafe fn(&[u64], &[u64]) -> u64 }\n";
+        assert!(findings("rust/src/x.rs", src).is_empty());
+    }
+
+    #[test]
+    fn unwrap_flagged_only_in_scope() {
+        let src = "fn f(v: Option<u32>) -> u32 { v.unwrap() }\n";
+        assert_eq!(findings("rust/src/server/x.rs", src).len(), 1);
+        assert_eq!(findings("rust/src/coordinator/x.rs", src).len(), 1);
+        assert!(findings("rust/src/device/x.rs", src).is_empty());
+        assert!(findings("rust/benches/x.rs", src).is_empty());
+    }
+
+    #[test]
+    fn allow_directive_waives_with_reason_only() {
+        let with_reason =
+            "fn f(v: Option<u32>) -> u32 {\n    // lint: allow(no-panic) -- checked above\n    v.unwrap()\n}\n";
+        assert!(findings("rust/src/server/x.rs", with_reason).is_empty());
+        let no_reason =
+            "fn f(v: Option<u32>) -> u32 {\n    // lint: allow(no-panic)\n    v.unwrap()\n}\n";
+        assert_eq!(findings("rust/src/server/x.rs", no_reason).len(), 1);
+    }
+
+    #[test]
+    fn test_mods_are_exempt() {
+        let src = "#[cfg(test)]\nmod tests {\n    #[test]\n    fn t() { Some(1).unwrap(); panic!(\"x\"); }\n}\n";
+        assert!(findings("rust/src/server/x.rs", src).is_empty());
+    }
+
+    #[test]
+    fn panic_macros_fire() {
+        let src = "fn f() { todo!() }\n";
+        let out = findings("rust/src/coordinator/x.rs", src);
+        assert_eq!(out.len(), 1);
+        assert!(out[0].message.contains("todo!"));
+    }
+
+    #[test]
+    fn unwrap_in_comment_or_string_is_ignored() {
+        let src = "// calls unwrap() internally\nfn f() { let s = \".unwrap()\"; let _ = s; }\n";
+        assert!(findings("rust/src/server/x.rs", src).is_empty());
+    }
+
+    #[test]
+    fn hot_path_alloc_fires_inside_region() {
+        let src = "fn f(v: &mut Vec<u32>) {\n    // lint: hot-path\n    v.push(1);\n    // lint: end-hot-path\n    v.push(2);\n}\n";
+        let out = findings("rust/src/x.rs", src);
+        assert_eq!(out.len(), 1);
+        assert_eq!(out[0].line, 3);
+        assert_eq!(out[0].rule, Rule::HotPathAlloc);
+    }
+
+    #[test]
+    fn hot_path_region_must_terminate() {
+        let src = "fn f() {\n    // lint: hot-path\n}\n";
+        let out = findings("rust/src/x.rs", src);
+        assert_eq!(out.len(), 1);
+        assert!(out[0].message.contains("unterminated"));
+    }
+
+    #[test]
+    fn hot_path_ctor_and_macro_forms() {
+        let src = "fn f() {\n    // lint: hot-path\n    let v: Vec<u32> = Vec::new();\n    let s = format!(\"x\");\n    // lint: end-hot-path\n    let _ = (v, s);\n}\n";
+        let out = findings("rust/src/x.rs", src);
+        assert_eq!(out.len(), 2);
+    }
+
+    #[test]
+    fn enum_variants_parse_payloads_and_discriminants() {
+        let l = lex(
+            "pub enum E {\n    A = 0x01,\n    B(String),\n    #[allow(dead_code)]\n    C { x: u64, y: u64 },\n    D,\n}\n",
+        );
+        let vars: Vec<String> = enum_variants(&l, "E").into_iter().map(|(n, _)| n).collect();
+        assert_eq!(vars, ["A", "B", "C", "D"]);
+    }
+
+    #[test]
+    fn wire_exhaustive_finds_undisipatched_op() {
+        let proto = lex("pub enum Op { Search = 0x01, Ghost = 0x7F }\npub enum ErrorCode { Busy = 1 }\nimpl ErrorCode { fn c(&self) { let _ = ErrorCode::Busy; } }\n");
+        let tcp = lex("fn d(op: Op) { match op { Op::Search => {}, _ => {} } }\n");
+        let mut out = Vec::new();
+        wire_exhaustive(("p.rs", &proto), &[("tcp.rs", &tcp)], &mut out);
+        assert_eq!(out.len(), 1);
+        assert!(out[0].message.contains("Op::Ghost"));
+    }
+
+    #[test]
+    fn config_doc_flags_undocumented_key() {
+        let cfg = lex("impl FromToml for C {\n    fn set(&mut self, key: &str) {\n        match key {\n            \"listen\" => {}\n            \"mystery_knob\" => {}\n            _ => {}\n        }\n    }\n}\n");
+        let mut out = Vec::new();
+        config_doc(("c.rs", &cfg), "docs: `listen` is the bind address", &mut out);
+        assert_eq!(out.len(), 1);
+        assert!(out[0].message.contains("mystery_knob"));
+        assert_eq!(out[0].line, 5);
+    }
+}

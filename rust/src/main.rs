@@ -26,6 +26,10 @@
 //!             BENCH_serving.json (--out DIR, default repo root `.`;
 //!             --quick trims the grid for CI smoke; --only kernel|serving
 //!             runs one rail; --check only validates existing artifacts)
+//!   lint      run the in-crate invariant linter (SAFETY comments, no-panic
+//!             serving paths, hot-path allocation regions, wire/config
+//!             exhaustiveness; --json for machine-readable findings,
+//!             non-zero exit when anything fires)
 //!
 //! Common flags: --results DIR, --seed N, --subsample F (dataset fraction),
 //! --trials N (Monte Carlo), --engine digital|analog|xla.
@@ -103,6 +107,7 @@ fn dispatch(args: &Args) -> Result<()> {
         Some("live") => cmd_live(args),
         Some("artifacts") => cmd_artifacts(args),
         Some("bench") => cmd_bench(args),
+        Some("lint") => cmd_lint(args),
         Some(other) => bail!("unknown subcommand '{other}' (see README)"),
         None => {
             print_usage();
@@ -116,7 +121,7 @@ fn print_usage() {
         "cosime — FeFET in-memory cosine-similarity search engine (ICCAD'22 reproduction)\n\n\
          usage: cosime <subcommand> [flags]\n\n\
          repro:  fig1 fig2 fig4a fig4b fig6 fig7 fig8 fig9 table1 table2 all\n\
-         system: search serve route hdc live artifacts bench\n\n\
+         system: search serve route hdc live artifacts bench lint\n\n\
          flags:  --results DIR  --seed N  --subsample F  --trials N\n\
                  --engine digital|analog|xla  --rows N --dims N --queries N --k N\n\
                  --snapshot PATH (hdc: save trained AM; serve: warm-start from it)\n\
@@ -550,6 +555,34 @@ fn cmd_bench(args: &Args) -> Result<()> {
         println!("wrote {}", p.display());
     }
     Ok(())
+}
+
+fn cmd_lint(args: &Args) -> Result<()> {
+    let root = match args.get("root") {
+        Some(dir) => std::path::PathBuf::from(dir),
+        None => cosime::lint::repo_root()
+            .ok_or_else(|| anyhow::anyhow!("could not locate the repo root (rust/src/lib.rs)"))?,
+    };
+    let findings = cosime::lint::lint_tree(&root)?;
+    if args.flag("json") {
+        println!("{}", cosime::lint::render_json(&findings));
+    } else {
+        for f in &findings {
+            println!("{f}");
+        }
+        println!(
+            "cosime lint: {} finding{} across the tree",
+            findings.len(),
+            if findings.len() == 1 { "" } else { "s" }
+        );
+    }
+    if findings.is_empty() {
+        Ok(())
+    } else {
+        // Non-zero exit without the `error:` banner noise on top of the
+        // already-printed findings.
+        std::process::exit(2);
+    }
 }
 
 fn cmd_artifacts(args: &Args) -> Result<()> {

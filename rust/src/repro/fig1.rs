@@ -10,6 +10,7 @@ use crate::hdc::{
 };
 use crate::repro::{results_dir, write_csv};
 
+/// Fig. 1: accuracy gap between cosine and Hamming matching.
 pub fn run(subsample: f64, results: Option<&str>) -> Result<()> {
     let params = SyntheticParams { subsample, ..Default::default() };
     let dir = results_dir(results)?;

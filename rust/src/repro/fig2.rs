@@ -8,6 +8,7 @@ use crate::config::CosimeConfig;
 use crate::device::{Cell1F1R, FeFet};
 use crate::repro::{results_dir, write_csv};
 
+/// Fig. 2: FeFET cell transfer curves.
 pub fn run(results: Option<&str>) -> Result<()> {
     let cfg = CosimeConfig::default();
     let d = &cfg.device;

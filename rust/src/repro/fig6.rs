@@ -9,12 +9,19 @@ use crate::am::analog::AnalogCosimeEngine;
 use crate::config::CosimeConfig;
 use crate::repro::{results_dir, worst_case_pair, write_csv};
 
+/// One (rows, dims) point of the Fig. 6 sweep.
 pub struct Fig6Point {
+    /// Array row count.
     pub rows: usize,
+    /// Word width in bits.
     pub dims: usize,
+    /// Search latency in nanoseconds.
     pub latency_ns: f64,
+    /// Per-search energy in picojoules.
     pub energy_pj: f64,
+    /// Fraction of latency spent in the WTA stage.
     pub wta_frac: f64,
+    /// Fraction of latency spent in the translinear core.
     pub tl_frac: f64,
 }
 
@@ -62,6 +69,7 @@ pub fn measure(rows: usize, dims: usize, seed: u64) -> Fig6Point {
     }
 }
 
+/// Fig. 6: energy & delay vs rows (`a`), dims (`b`), or `both`.
 pub fn run(sweep: &str, results: Option<&str>) -> Result<()> {
     let dir = results_dir(results)?;
     if sweep == "rows" || sweep == "both" {

@@ -49,6 +49,7 @@ pub fn mc_accuracy(rows: usize, dims: usize, cos2_b: f64, trials: usize, seed: u
     hits as f64 / trials as f64
 }
 
+/// Fig. 7a: worst-case search accuracy over Monte Carlo dies.
 pub fn run_a(trials: usize, results: Option<&str>) -> Result<()> {
     println!("== Fig. 7a: worst-case Monte Carlo ({trials} dies, cos² = 1/4 vs 1/5) ==");
     let acc = mc_accuracy(64, 1024, 0.20, trials, 71);
@@ -72,6 +73,7 @@ pub fn run_a(trials: usize, results: Option<&str>) -> Result<()> {
     Ok(())
 }
 
+/// Fig. 7b: accuracy vs input-similarity separation.
 pub fn run_b(trials: usize, results: Option<&str>) -> Result<()> {
     println!("== Fig. 7b: error rate vs competing cos θ (winner at cos θ = 0.5) ==");
     println!("{:>10} {:>10} {:>12}", "cos θ₂", "cos² θ₂", "error rate");

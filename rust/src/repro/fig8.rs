@@ -15,6 +15,7 @@ const DRAM_PJ_PER_BYTE: f64 = 20.0;
 /// CPU energy per MAC (pJ), 45 nm-class scalar core.
 const CPU_PJ_PER_MAC: f64 = 2.0;
 
+/// Fig. 8: end-to-end search quality vs input noise.
 pub fn run(results: Option<&str>) -> Result<()> {
     let cfg = CosimeConfig::default();
     let (rows, dims) = (256usize, 1024usize);

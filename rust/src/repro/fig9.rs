@@ -33,6 +33,7 @@ pub const SYSTEM_ENERGY_PER_QUERY: f64 = 2.6e-7;
 /// inference; a 2048-query batch amortizes launch overhead).
 const GPU_BATCH: usize = 2048;
 
+/// Fig. 9a: HDC classification accuracy vs hypervector dimension D.
 pub fn run_a(subsample: f64, results: Option<&str>) -> Result<()> {
     let params = SyntheticParams { subsample, ..Default::default() };
     println!("== Fig. 9a: HDC accuracy vs D (cosine = COSIME vs Hamming) ==");
@@ -61,12 +62,19 @@ pub fn run_a(subsample: f64, results: Option<&str>) -> Result<()> {
     Ok(())
 }
 
+/// One dataset row of the Fig. 9b/c comparison.
 pub struct Fig9Ratio {
+    /// Dataset name.
     pub dataset: &'static str,
+    /// Class count (the AM row count).
     pub classes: usize,
+    /// Hypervector dimension.
     pub dims: usize,
+    /// COSIME speedup over the GPU baseline.
     pub speedup: f64,
+    /// System-level energy ratio (GPU / COSIME).
     pub energy_ratio_system: f64,
+    /// AM-only energy ratio (GPU / COSIME core).
     pub energy_ratio_am_only: f64,
 }
 
@@ -95,6 +103,7 @@ pub fn ratios(spec: DatasetSpec, dims: usize) -> Fig9Ratio {
     }
 }
 
+/// Fig. 9b/c: speedup and energy ratio vs the GTX 1080 baseline.
 pub fn run_bc(results: Option<&str>) -> Result<()> {
     println!("== Fig. 9b/c: COSIME vs GTX 1080 (batch {GPU_BATCH}) ==");
     println!(

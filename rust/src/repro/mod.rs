@@ -3,14 +3,23 @@
 //! submodule prints the paper-style rows/series to stdout and dumps
 //! CSV/JSON under `results/` for plotting.
 
+/// Fig. 1: motivating accuracy gap (cosine vs Hamming matching).
 pub mod fig1;
+/// Fig. 2: FeFET cell transfer curves.
 pub mod fig2;
+/// Fig. 4: translinear-core operating points.
 pub mod fig4;
+/// Fig. 6: energy and delay vs array geometry.
 pub mod fig6;
+/// Fig. 7: Monte Carlo accuracy under device variation.
 pub mod fig7;
+/// Fig. 8: end-to-end search quality vs noise.
 pub mod fig8;
+/// Fig. 9: HDC workload — accuracy, speedup, energy vs GPU.
 pub mod fig9;
+/// Table 1: cross-accelerator comparison.
 pub mod table1;
+/// Table 2: HDC dataset shapes and accuracy.
 pub mod table2;
 
 use anyhow::Result;

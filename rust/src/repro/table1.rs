@@ -7,6 +7,7 @@ use anyhow::Result;
 use crate::baselines::published::table1;
 use crate::config::CosimeConfig;
 
+/// Table 1: COSIME vs published associative memories.
 pub fn run() -> Result<()> {
     let cfg = CosimeConfig::default();
     let rows = table1(&cfg);

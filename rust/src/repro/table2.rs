@@ -5,6 +5,7 @@ use anyhow::Result;
 
 use crate::hdc::DatasetSpec;
 
+/// Table 2: HDC dataset shapes and accuracies.
 pub fn run() -> Result<()> {
     println!("== Table 2: datasets (n: features, K: classes) ==");
     println!("{:<10} {:>6} {:>4} {:>10} {:>10}  description", "", "n", "K", "train", "test");

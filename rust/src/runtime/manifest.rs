@@ -7,11 +7,14 @@ use std::path::Path;
 /// Tensor signature (shape + dtype string as jax reports it).
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct TensorSpec {
+    /// Dimension sizes, outermost first.
     pub shape: Vec<usize>,
+    /// Dtype string as jax spells it (e.g. `float32`).
     pub dtype: String,
 }
 
 impl TensorSpec {
+    /// Total element count (product of the shape).
     pub fn elements(&self) -> usize {
         self.shape.iter().product()
     }
@@ -36,9 +39,13 @@ impl TensorSpec {
 /// One lowered entry point.
 #[derive(Debug, Clone)]
 pub struct ArtifactEntry {
+    /// Entry-point name (the manifest key).
     pub name: String,
+    /// HLO text file holding the lowered computation, manifest-relative.
     pub file: String,
+    /// Input tensor signatures, in call order.
     pub inputs: Vec<TensorSpec>,
+    /// Output tensor signatures.
     pub outputs: Vec<TensorSpec>,
 }
 
@@ -49,12 +56,14 @@ pub struct Manifest {
 }
 
 impl Manifest {
+    /// Read and parse a `manifest.json` from disk.
     pub fn load<P: AsRef<Path>>(path: P) -> Result<Manifest> {
         let text = std::fs::read_to_string(path.as_ref())
             .with_context(|| format!("reading {:?}", path.as_ref()))?;
         Self::parse(&text)
     }
 
+    /// Parse manifest JSON text.
     pub fn parse(text: &str) -> Result<Manifest> {
         let root = Json::parse(text).context("parsing manifest.json")?;
         let arr = root.as_arr().ok_or_else(|| anyhow!("manifest must be a JSON array"))?;
@@ -84,18 +93,22 @@ impl Manifest {
         Ok(Manifest { entries })
     }
 
+    /// Look up an entry point by name.
     pub fn get(&self, name: &str) -> Option<&ArtifactEntry> {
         self.entries.iter().find(|e| e.name == name)
     }
 
+    /// Every entry-point name, in manifest order.
     pub fn names(&self) -> Vec<&str> {
         self.entries.iter().map(|e| e.name.as_str()).collect()
     }
 
+    /// Number of entry points.
     pub fn len(&self) -> usize {
         self.entries.len()
     }
 
+    /// Whether the manifest has no entries.
     pub fn is_empty(&self) -> bool {
         self.entries.is_empty()
     }

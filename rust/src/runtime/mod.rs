@@ -8,6 +8,7 @@
 //! output signatures and validates calls against them.
 
 mod manifest;
+/// Search service over compiled XLA artifacts.
 pub mod service;
 mod xla_engine;
 
@@ -39,6 +40,7 @@ use std::sync::Mutex;
 
 /// A loaded + compiled artifact with its signature.
 pub struct Executable {
+    /// The manifest entry this executable was compiled from.
     pub entry: ArtifactEntry,
     exe: xla::PjRtLoadedExecutable,
 }
@@ -54,17 +56,21 @@ pub struct Runtime {
 /// A typed host tensor for marshalling into/out of XLA literals.
 #[derive(Debug, Clone, PartialEq)]
 pub enum Tensor {
+    /// Dense f32 tensor: values + shape.
     F32(Vec<f32>, Vec<usize>),
+    /// Dense i32 tensor: values + shape.
     I32(Vec<i32>, Vec<usize>),
 }
 
 impl Tensor {
+    /// Dimension sizes, outermost first.
     pub fn shape(&self) -> &[usize] {
         match self {
             Tensor::F32(_, s) | Tensor::I32(_, s) => s,
         }
     }
 
+    /// Dtype string as jax spells it.
     pub fn dtype(&self) -> &'static str {
         match self {
             Tensor::F32(..) => "float32",
@@ -72,6 +78,7 @@ impl Tensor {
         }
     }
 
+    /// Borrow the f32 payload; errors if this is an i32 tensor.
     pub fn as_f32(&self) -> Result<&[f32]> {
         match self {
             Tensor::F32(v, _) => Ok(v),
@@ -79,6 +86,7 @@ impl Tensor {
         }
     }
 
+    /// Borrow the i32 payload; errors if this is an f32 tensor.
     pub fn as_i32(&self) -> Result<&[i32]> {
         match self {
             Tensor::I32(v, _) => Ok(v),
@@ -119,10 +127,12 @@ impl Runtime {
         Self::new("artifacts")
     }
 
+    /// The manifest this runtime serves.
     pub fn manifest(&self) -> &Manifest {
         &self.manifest
     }
 
+    /// PJRT platform name (`stub` without the `xla` feature).
     pub fn platform(&self) -> String {
         self.client.platform_name()
     }

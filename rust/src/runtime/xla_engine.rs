@@ -15,6 +15,7 @@ use crate::util::BitVec;
 use super::service::RuntimeHandle;
 use super::Tensor;
 
+/// AM engine that scores via a compiled XLA artifact.
 pub struct XlaAmEngine {
     rt: RuntimeHandle,
     artifact: String,

@@ -23,68 +23,84 @@ fn disabled<T>() -> Result<T> {
 /// compile/execute attempt errors.
 pub struct PjRtClient;
 
+/// Stub compiled executable; never obtainable (compilation errors first).
 pub struct PjRtLoadedExecutable;
 
+/// Stub device buffer; never obtainable at runtime.
 pub struct PjRtBuffer;
 
 #[derive(Clone)]
+/// Stub host literal; constructible but empty.
 pub struct Literal;
 
+/// Stub HLO module proto; file loads error.
 pub struct HloModuleProto;
 
+/// Stub XLA computation wrapper.
 pub struct XlaComputation;
 
 impl PjRtClient {
+    /// Construct the stub client (always succeeds; does nothing).
     pub fn cpu() -> Result<PjRtClient> {
         Ok(PjRtClient)
     }
 
+    /// Reports `stub` so callers can tell no real runtime is present.
     pub fn platform_name(&self) -> String {
         "stub (xla feature disabled)".to_string()
     }
 
+    /// Always errors: the `xla` feature is off.
     pub fn compile(&self, _computation: &XlaComputation) -> Result<PjRtLoadedExecutable> {
         disabled()
     }
 }
 
 impl PjRtLoadedExecutable {
+    /// Always errors: the `xla` feature is off.
     pub fn execute<T>(&self, _args: &[Literal]) -> Result<Vec<Vec<PjRtBuffer>>> {
         disabled()
     }
 }
 
 impl PjRtBuffer {
+    /// Always errors: the `xla` feature is off.
     pub fn to_literal_sync(&self) -> Result<Literal> {
         disabled()
     }
 }
 
 impl Literal {
+    /// Build an empty placeholder literal (values are dropped).
     pub fn vec1<T: Copy>(_values: &[T]) -> Literal {
         Literal
     }
 
+    /// Always errors: the `xla` feature is off.
     pub fn reshape(&self, _dims: &[i64]) -> Result<Literal> {
         disabled()
     }
 
+    /// Always errors: the `xla` feature is off.
     pub fn to_vec<T>(&self) -> Result<Vec<T>> {
         disabled()
     }
 
+    /// Always errors: the `xla` feature is off.
     pub fn to_tuple(&self) -> Result<Vec<Literal>> {
         disabled()
     }
 }
 
 impl HloModuleProto {
+    /// Always errors: the `xla` feature is off.
     pub fn from_text_file<P: AsRef<std::path::Path>>(_path: P) -> Result<HloModuleProto> {
         disabled()
     }
 }
 
 impl XlaComputation {
+    /// Wrap a stub proto in a stub computation.
     pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
         XlaComputation
     }

@@ -62,20 +62,18 @@ impl Client {
         attempts: usize,
         backoff: Duration,
     ) -> Result<Client> {
-        let attempts = attempts.max(1);
-        let mut last = None;
-        for attempt in 0..attempts {
+        let mut last = match Client::connect(addr) {
+            Ok(c) => return Ok(c),
+            Err(e) => e,
+        };
+        for attempt in 1..attempts {
+            std::thread::sleep(backoff * attempt as u32);
             match Client::connect(addr) {
                 Ok(c) => return Ok(c),
-                Err(e) => {
-                    last = Some(e);
-                    if attempt + 1 < attempts {
-                        std::thread::sleep(backoff * (attempt as u32 + 1));
-                    }
-                }
+                Err(e) => last = e,
             }
         }
-        Err(last.unwrap())
+        Err(last)
     }
 
     /// Cap on accepted response frames (raise it for huge batches).

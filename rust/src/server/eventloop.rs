@@ -117,11 +117,11 @@ impl Conn {
         if self.inbuf.len() < HEADER_LEN {
             return false;
         }
-        let magic = u32::from_le_bytes(self.inbuf[0..4].try_into().unwrap());
+        let magic = protocol::le_u32(&self.inbuf[0..4]);
         if magic != MAGIC {
             return true;
         }
-        let len = u32::from_le_bytes(self.inbuf[8..12].try_into().unwrap()) as usize;
+        let len = protocol::le_u32(&self.inbuf[8..12]) as usize;
         len > shared.max_frame || self.inbuf.len() >= HEADER_LEN + len
     }
 
@@ -168,7 +168,7 @@ impl Conn {
             if self.inbuf.len() < HEADER_LEN {
                 break;
             }
-            let magic = u32::from_le_bytes(self.inbuf[0..4].try_into().unwrap());
+            let magic = protocol::le_u32(&self.inbuf[0..4]);
             if magic != MAGIC {
                 self.queue_fatal(WireError::new(
                     ErrorCode::BadFrame,
@@ -176,7 +176,7 @@ impl Conn {
                 ));
                 return true;
             }
-            let len = u32::from_le_bytes(self.inbuf[8..12].try_into().unwrap()) as usize;
+            let len = protocol::le_u32(&self.inbuf[8..12]) as usize;
             if len > shared.max_frame {
                 self.queue_fatal(WireError::new(
                     ErrorCode::FrameTooLarge,
@@ -189,7 +189,7 @@ impl Conn {
             }
             let version = self.inbuf[4];
             let op_byte = self.inbuf[5];
-            let flags = u16::from_le_bytes(self.inbuf[6..8].try_into().unwrap());
+            let flags = protocol::le_u16(&self.inbuf[6..8]);
             let payload: Vec<u8> = self.inbuf[HEADER_LEN..HEADER_LEN + len].to_vec();
             self.inbuf.drain(..HEADER_LEN + len);
             let (version, handled) = handle_frame(shared, version, op_byte, flags, &payload);

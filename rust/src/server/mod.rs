@@ -42,11 +42,17 @@
 //! `[server] remote_shards`. See `rust/README.md` for the wire-format and
 //! configuration reference (`[server]` section).
 
+/// Blocking client for the wire protocol.
 pub mod client;
+/// Single-threaded nonblocking I/O engine (`io = "eventloop"`).
 pub mod eventloop;
+/// Frame format, opcodes, and payload codecs.
 pub mod protocol;
+/// Client-side backend speaking the wire protocol to a remote server.
 pub mod remote;
+/// Scatter-gather router over multiple shard backends.
 pub mod shard;
+/// Thread-per-connection I/O engine (`io = "threaded"`).
 pub mod tcp;
 
 pub use client::{Client, Pipeline};

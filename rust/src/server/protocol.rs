@@ -105,6 +105,7 @@ pub enum Op {
 }
 
 impl Op {
+    /// Decode a wire opcode byte; `None` for unknown opcodes.
     pub fn from_u8(b: u8) -> Option<Op> {
         Some(match b {
             0x01 => Op::Search,
@@ -155,6 +156,7 @@ pub enum ErrorCode {
 }
 
 impl ErrorCode {
+    /// Decode a wire error-code byte; `None` for unknown codes.
     pub fn from_u8(b: u8) -> Option<ErrorCode> {
         Some(match b {
             1 => ErrorCode::Busy,
@@ -171,6 +173,7 @@ impl ErrorCode {
         })
     }
 
+    /// Stable kebab-case name, as printed in logs and CLI output.
     pub fn name(self) -> &'static str {
         match self {
             ErrorCode::Busy => "busy",
@@ -191,7 +194,9 @@ impl ErrorCode {
 /// frame on the client side, and the server's internal rejection type.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct WireError {
+    /// Machine-readable rejection category.
     pub code: ErrorCode,
+    /// Human-readable detail (never required for correct client behavior).
     pub message: String,
     /// For [`ErrorCode::EpochMismatch`]: the `(expected, actual)` epochs,
     /// machine-readable so retry loops need not parse the message.
@@ -199,6 +204,7 @@ pub struct WireError {
 }
 
 impl WireError {
+    /// A plain error with no epoch payload.
     pub fn new(code: ErrorCode, message: impl Into<String>) -> Self {
         WireError { code, message: message.into(), epochs: None }
     }
@@ -258,11 +264,14 @@ fn bad_frame(msg: impl Into<String>) -> WireError {
 /// A decoded frame header (magic already validated).
 #[derive(Debug, Clone, Copy)]
 pub struct FrameHeader {
+    /// Protocol version the sender speaks.
     pub version: u8,
+    /// Raw opcode byte (decode with [`Op::from_u8`]).
     pub op: u8,
     /// Reserved; senders write 0 and receivers reject nonzero, so the
     /// field stays available for must-understand extensions.
     pub flags: u16,
+    /// Payload length in bytes (already validated against the frame cap).
     pub len: u32,
 }
 
@@ -339,6 +348,35 @@ pub fn encode_frame_header(
     Ok(())
 }
 
+/// Little-endian `u16` from the first 2 bytes of `b` (zero-padded if short:
+/// callers pass fixed header offsets, and a panic-free read keeps the wire
+/// layer free of `unwrap`).
+pub(crate) fn le_u16(b: &[u8]) -> u16 {
+    let mut v = [0u8; 2];
+    for (d, s) in v.iter_mut().zip(b) {
+        *d = *s;
+    }
+    u16::from_le_bytes(v)
+}
+
+/// Little-endian `u32` from the first 4 bytes of `b` (zero-padded if short).
+pub(crate) fn le_u32(b: &[u8]) -> u32 {
+    let mut v = [0u8; 4];
+    for (d, s) in v.iter_mut().zip(b) {
+        *d = *s;
+    }
+    u32::from_le_bytes(v)
+}
+
+/// Little-endian `u64` from the first 8 bytes of `b` (zero-padded if short).
+pub(crate) fn le_u64(b: &[u8]) -> u64 {
+    let mut v = [0u8; 8];
+    for (d, s) in v.iter_mut().zip(b) {
+        *d = *s;
+    }
+    u64::from_le_bytes(v)
+}
+
 /// Read one frame, enforcing `max_frame` on the declared payload length
 /// *before* reading the payload (a hostile peer cannot force a huge
 /// allocation). Version and op are *not* validated here — the payload has
@@ -350,17 +388,17 @@ pub fn read_frame<R: Read>(
 ) -> Result<(FrameHeader, Vec<u8>), FrameReadError> {
     let mut header = [0u8; HEADER_LEN];
     r.read_exact(&mut header).map_err(FrameReadError::Io)?;
-    let magic = u32::from_le_bytes(header[0..4].try_into().unwrap());
+    let magic = le_u32(&header[0..4]);
     if magic != MAGIC {
         return Err(FrameReadError::BadMagic);
     }
-    let len = u32::from_le_bytes(header[8..12].try_into().unwrap());
+    let len = le_u32(&header[8..12]);
     if len as usize > max_frame {
         return Err(FrameReadError::TooLarge { len, max: max_frame });
     }
     let mut payload = vec![0u8; len as usize];
     r.read_exact(&mut payload).map_err(FrameReadError::Io)?;
-    let flags = u16::from_le_bytes(header[6..8].try_into().unwrap());
+    let flags = le_u16(&header[6..8]);
     Ok((FrameHeader { version: header[4], op: header[5], flags, len }, payload))
 }
 
@@ -398,15 +436,15 @@ impl<'a> Cursor<'a> {
     }
 
     fn u32(&mut self) -> Result<u32, WireError> {
-        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+        Ok(le_u32(self.take(4)?))
     }
 
     fn u64(&mut self) -> Result<u64, WireError> {
-        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+        Ok(le_u64(self.take(8)?))
     }
 
     fn f64(&mut self) -> Result<f64, WireError> {
-        Ok(f64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+        Ok(f64::from_bits(le_u64(self.take(8)?)))
     }
 
     /// Bytes not yet consumed (versioned messages use this to detect
@@ -453,6 +491,15 @@ fn put_bitvec(out: &mut Vec<u8>, v: &BitVec) {
 /// the one lane decoder shared by every vector-carrying message.
 fn read_lanes(c: &mut Cursor<'_>, dims: usize) -> Result<BitVec, WireError> {
     let lanes_per = dims.div_ceil(64);
+    // Check the declared lane count against the bytes actually present
+    // *before* allocating: a length-lying `dims` (u32 on the wire) must not
+    // be able to reserve ~512 MiB from a tiny payload.
+    if c.remaining() / 8 < lanes_per {
+        return Err(bad_frame(format!(
+            "payload truncated: dims={dims} declares {lanes_per} lanes, have {} bytes",
+            c.remaining()
+        )));
+    }
     let mut lanes = Vec::with_capacity(lanes_per);
     for _ in 0..lanes_per {
         lanes.push(c.u64()?);
@@ -524,7 +571,9 @@ pub fn decode_search_request(payload: &[u8]) -> Result<(usize, Vec<BitVec>), Wir
 /// aggregate epoch — the sum over shards).
 #[derive(Debug, Clone, PartialEq)]
 pub struct WireSearchResponse {
+    /// Serving epoch at execution time (sum over shards when sharded).
     pub epoch: u64,
+    /// One ranked hit list per query, in request order.
     pub results: Vec<Vec<WireHit>>,
 }
 
@@ -684,11 +733,17 @@ pub fn decode_admin_response(payload: &[u8]) -> Result<WireAdminResponse, WireEr
 /// ([`latency_histogram`]).
 #[derive(Debug, Clone, PartialEq, Default)]
 pub struct WireHistogram {
+    /// Sample count.
     pub n: u64,
+    /// Running mean of the samples.
     pub mean: f64,
+    /// Sum of squared deviations (Welford's M2 accumulator).
     pub m2: f64,
+    /// Smallest sample seen (`+inf` when empty).
     pub min: f64,
+    /// Largest sample seen (`-inf` when empty).
     pub max: f64,
+    /// Per-bucket counts over the shared log-spaced layout.
     pub counts: Vec<u64>,
 }
 
@@ -716,8 +771,11 @@ impl WireHistogram {
 /// makes the routing tier's cross-shard percentiles *exact* over the wire.
 #[derive(Debug, Clone, PartialEq, Default)]
 pub struct WireLatencyHists {
+    /// Time spent queued before a batch formed.
     pub queue: WireHistogram,
+    /// Kernel execution time of the owning batch.
     pub exec: WireHistogram,
+    /// End-to-end submit-to-complete latency.
     pub total: WireHistogram,
 }
 
@@ -727,28 +785,46 @@ pub struct WireLatencyHists {
 /// server-side — `report()` them there).
 #[derive(Debug, Clone, PartialEq, Default)]
 pub struct WireMetrics {
+    /// Search requests accepted into the queue.
     pub submitted: u64,
+    /// Search requests completed (responses sent).
     pub completed: u64,
+    /// Search requests rejected with `busy` backpressure.
     pub rejected_busy: u64,
+    /// Batches executed by the worker.
     pub batches: u64,
+    /// Mean formed-batch size.
     pub mean_batch_size: f64,
+    /// Queue-wait p50 in microseconds.
     pub queue_p50_us: f64,
+    /// Queue-wait p99 in microseconds.
     pub queue_p99_us: f64,
+    /// Kernel-execution p50 in microseconds.
     pub exec_p50_us: f64,
+    /// Kernel-execution p99 in microseconds.
     pub exec_p99_us: f64,
+    /// End-to-end p50 in microseconds.
     pub total_p50_us: f64,
+    /// End-to-end p99 in microseconds.
     pub total_p99_us: f64,
+    /// End-to-end mean in microseconds.
     pub total_mean_us: f64,
+    /// Admin ops rejected (validation or epoch mismatch).
     pub admin_rejected: u64,
+    /// Cells touched by verified writes.
     pub write_cells: u64,
+    /// Program/verify pulses issued by the write model.
     pub write_pulses: u64,
+    /// Modeled write energy in joules.
     pub write_energy_j: f64,
+    /// Modeled cumulative write latency in seconds.
     pub write_latency_s: f64,
     /// Full latency histograms (v2 peers only; `None` off a v1 frame).
     pub hists: Option<WireLatencyHists>,
 }
 
 impl WireMetrics {
+    /// Project a local metrics snapshot into its wire form.
     pub fn from_snapshot(s: &MetricsSnapshot) -> Self {
         WireMetrics {
             submitted: s.submitted,

@@ -31,6 +31,7 @@ use crate::coordinator::backend::{
     AdminCmd, AdminOutcome, Backend, BackendHealth, BatchResult, Completion, Ticket,
 };
 use crate::coordinator::{MetricsSnapshot, SubmitError};
+use crate::util::sync::lock_recover;
 use crate::util::BitVec;
 
 use super::protocol::{self, FrameHeader, Op, HEADER_LEN, MAGIC, VERSION};
@@ -183,12 +184,12 @@ impl RemoteConn {
         if self.inbuf.len() < HEADER_LEN {
             return None;
         }
-        let magic = u32::from_le_bytes(self.inbuf[0..4].try_into().unwrap());
+        let magic = protocol::le_u32(&self.inbuf[0..4]);
         if magic != MAGIC {
             self.poison(SubmitError::Io("bad frame magic from server".into()));
             return None;
         }
-        let len = u32::from_le_bytes(self.inbuf[8..12].try_into().unwrap()) as usize;
+        let len = protocol::le_u32(&self.inbuf[8..12]) as usize;
         if len > self.max_frame {
             self.poison(SubmitError::Io(format!(
                 "server frame of {len} bytes exceeds client cap {}",
@@ -202,7 +203,7 @@ impl RemoteConn {
         let header = FrameHeader {
             version: self.inbuf[4],
             op: self.inbuf[5],
-            flags: u16::from_le_bytes(self.inbuf[6..8].try_into().unwrap()),
+            flags: protocol::le_u16(&self.inbuf[6..8]),
             len: len as u32,
         };
         Some((header, HEADER_LEN + len))
@@ -313,20 +314,18 @@ impl RemoteBackend {
         attempts: usize,
         backoff: Duration,
     ) -> Result<RemoteBackend> {
-        let attempts = attempts.max(1);
-        let mut last = None;
-        for attempt in 0..attempts {
+        let mut last = match RemoteBackend::connect(addr) {
+            Ok(b) => return Ok(b),
+            Err(e) => e,
+        };
+        for attempt in 1..attempts {
+            std::thread::sleep(backoff * attempt as u32);
             match RemoteBackend::connect(addr) {
                 Ok(b) => return Ok(b),
-                Err(e) => {
-                    last = Some(e);
-                    if attempt + 1 < attempts {
-                        std::thread::sleep(backoff * (attempt as u32 + 1));
-                    }
-                }
+                Err(e) => last = e,
             }
         }
-        Err(last.unwrap())
+        Err(last)
     }
 
     /// The identity captured at connect time (rows/epoch may since have
@@ -337,10 +336,10 @@ impl RemoteBackend {
 
     /// Enqueue one frame and block (by pumping) until its slot fills.
     fn round_trip(&self, op: Op, want: Op, payload: &[u8]) -> Result<Vec<u8>, SubmitError> {
-        let seq = self.conn.lock().unwrap().enqueue(op, want, payload)?;
+        let seq = lock_recover(&self.conn).enqueue(op, want, payload)?;
         loop {
             {
-                let mut conn = self.conn.lock().unwrap();
+                let mut conn = lock_recover(&self.conn);
                 conn.pump();
                 if let Some(outcome) = conn.check(seq) {
                     return outcome;
@@ -367,9 +366,7 @@ impl Drop for RemoteCompletion {
         // client) must deregister its slot, or the arriving response
         // would park in the connection's completed map forever.
         if !self.spent {
-            if let Ok(mut conn) = self.conn.lock() {
-                conn.abandon(self.seq);
-            }
+            lock_recover(&self.conn).abandon(self.seq);
         }
     }
 }
@@ -377,7 +374,7 @@ impl Drop for RemoteCompletion {
 impl Completion for RemoteCompletion {
     fn poll(&mut self) -> Result<Option<BatchResult>, SubmitError> {
         let outcome = {
-            let mut conn = self.conn.lock().unwrap();
+            let mut conn = lock_recover(&self.conn);
             conn.pump();
             conn.check(self.seq)
         };
@@ -421,7 +418,7 @@ impl Backend for RemoteBackend {
             }
         }
         let payload = protocol::encode_search_request(queries, k);
-        let seq = self.conn.lock().unwrap().enqueue(Op::Search, Op::SearchOk, &payload)?;
+        let seq = lock_recover(&self.conn).enqueue(Op::Search, Op::SearchOk, &payload)?;
         Ok(Ticket::new(Box::new(RemoteCompletion {
             conn: self.conn.clone(),
             seq,
@@ -455,7 +452,7 @@ impl Backend for RemoteBackend {
     }
 
     fn close(&self) {
-        let mut conn = self.conn.lock().unwrap();
+        let mut conn = lock_recover(&self.conn);
         let _ = conn.stream.shutdown(std::net::Shutdown::Both);
         conn.poison(SubmitError::Closed);
     }

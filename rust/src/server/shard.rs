@@ -171,7 +171,17 @@ impl PendingSearch {
             .iter()
             .map(|h| crate::am::SearchResult { winner: h.row as usize, score: h.score })
             .collect();
-        let head = hits.first().expect("every shard serves at least one row");
+        // A hostile or broken remote shard can answer with an empty ranked
+        // list; that must surface as a typed error on this request, not a
+        // panic in the router.
+        let head = match hits.first() {
+            Some(h) => h,
+            None => {
+                return Err(SubmitError::Io(
+                    "scatter-gather merge produced no hits (every shard returned empty)".into(),
+                ))
+            }
+        };
         Ok(SearchResponse {
             winner: head.winner,
             score: head.score,
@@ -197,6 +207,9 @@ impl RouterCompletion {
     fn merge(&mut self) -> BatchResult {
         let mut epoch = 0u64;
         let children: Vec<BatchResult> =
+            // lint: allow(no-panic) -- merge() is only reachable from poll/wait
+            // after every done[i] slot is filled; an empty slot is a local
+            // logic error, not remote-controlled state.
             self.done.iter_mut().map(|d| d.take().expect("all children done")).collect();
         for c in &children {
             epoch += c.epoch;
@@ -223,6 +236,8 @@ impl Completion for RouterCompletion {
             if self.done[i].is_some() {
                 continue;
             }
+            // lint: allow(no-panic) -- done[i].is_none() implies pending[i] is
+            // still occupied (the two vecs trade slots atomically above).
             let ticket = self.pending[i].as_mut().expect("pending ticket");
             match ticket.poll()? {
                 Some(result) => {
@@ -243,6 +258,8 @@ impl Completion for RouterCompletion {
             if self.done[i].is_some() {
                 continue;
             }
+            // lint: allow(no-panic) -- done[i].is_none() implies pending[i] is
+            // still occupied, as in poll().
             let ticket = self.pending[i].take().expect("pending ticket");
             self.done[i] = Some(ticket.wait()?);
         }
@@ -287,10 +304,13 @@ impl RouterBackend {
         let empties: Vec<usize> =
             placed.iter().enumerate().filter(|(_, p)| p.is_empty()).map(|(i, _)| i).collect();
         for i in empties {
-            let donor =
-                (0..shards).max_by_key(|&j| placed[j].len()).expect("at least one shard");
+            let Some(donor) = (0..shards).max_by_key(|&j| placed[j].len()) else {
+                bail!("shard count must be at least 1");
+            };
             ensure!(placed[donor].len() > 1, "not enough words to fill every shard");
-            let w = placed[donor].pop().unwrap();
+            let Some(w) = placed[donor].pop() else {
+                bail!("not enough words to fill every shard");
+            };
             placed[i].push(w);
         }
         let mut children: Vec<Box<dyn Backend>> = Vec::with_capacity(shards);
@@ -346,6 +366,7 @@ impl RouterBackend {
         Ok(RouterBackend { children, dims })
     }
 
+    /// Number of shard backends behind this router.
     pub fn shard_count(&self) -> usize {
         self.children.len()
     }

@@ -141,6 +141,9 @@ impl CosimeServer {
     /// On servers started with [`CosimeServer::serve_backend`], which have
     /// no router tier.
     pub fn router(&self) -> &RouterBackend {
+        // lint: allow(no-panic) -- documented `# Panics` contract: a local
+        // test/tooling accessor misused at startup, never reachable from
+        // request handling.
         self.router.as_deref().expect("server was started with serve_backend, not serve")
     }
 

@@ -13,11 +13,17 @@ use super::stats::{mean, percentile, stddev};
 /// One benchmark measurement.
 #[derive(Debug, Clone)]
 pub struct BenchResult {
+    /// Benchmark name, as printed and as keyed in BENCH artifacts.
     pub name: String,
+    /// Iterations actually measured.
     pub iterations: u64,
+    /// Mean iteration time in nanoseconds.
     pub mean_ns: f64,
+    /// Median iteration time in nanoseconds.
     pub p50_ns: f64,
+    /// 99th-percentile iteration time in nanoseconds.
     pub p99_ns: f64,
+    /// Iteration-time standard deviation in nanoseconds.
     pub stddev_ns: f64,
     /// Throughput in user-provided elements/iteration, if set.
     pub elems_per_iter: Option<f64>,
@@ -83,9 +89,13 @@ pub fn fmt_ns(ns: f64) -> String {
 
 /// Benchmark runner with configurable budget.
 pub struct Bench {
+    /// Time spent warming before measurement starts.
     pub warmup: Duration,
+    /// Measurement budget.
     pub measure: Duration,
+    /// Floor on measured iterations (overrides the time budget).
     pub min_iters: u64,
+    /// Ceiling on measured iterations.
     pub max_iters: u64,
     results: Vec<BenchResult>,
 }
@@ -103,6 +113,7 @@ impl Default for Bench {
 }
 
 impl Bench {
+    /// Runner with the default budget.
     pub fn new() -> Self {
         Self::default()
     }

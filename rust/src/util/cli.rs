@@ -6,11 +6,14 @@ use std::collections::BTreeMap;
 /// Parsed arguments for one invocation.
 #[derive(Debug, Clone, Default)]
 pub struct Args {
+    /// The first non-flag token, e.g. `serve` in `cosime serve`.
     pub subcommand: Option<String>,
+    /// Non-flag tokens after the subcommand, in order.
     pub positional: Vec<String>,
     flags: BTreeMap<String, String>,
 }
 
+/// Sentinel value marking a flag that appeared without a value.
 pub const FLAG_SET: &str = "\u{1}"; // sentinel: flag present without value
 
 impl Args {
@@ -67,14 +70,17 @@ impl Args {
         self.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
     }
 
+    /// Flag value as u64, or `default` when absent/unparseable.
     pub fn get_u64(&self, key: &str, default: u64) -> u64 {
         self.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
     }
 
+    /// Flag value as f64, or `default` when absent/unparseable.
     pub fn get_f64(&self, key: &str, default: f64) -> f64 {
         self.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
     }
 
+    /// Flag value as a string, or `default` when absent.
     pub fn get_str<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
         self.get(key).unwrap_or(default)
     }

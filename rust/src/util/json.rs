@@ -9,18 +9,26 @@ use std::fmt;
 /// A JSON value. Objects use BTreeMap so serialization is deterministic.
 #[derive(Debug, Clone, PartialEq)]
 pub enum Json {
+    /// JSON `null`.
     Null,
+    /// JSON boolean.
     Bool(bool),
+    /// JSON number (always stored as f64).
     Num(f64),
+    /// JSON string.
     Str(String),
+    /// JSON array.
     Arr(Vec<Json>),
+    /// JSON object (sorted keys for deterministic output).
     Obj(BTreeMap<String, Json>),
 }
 
 /// Parse error with byte offset context.
 #[derive(Debug)]
 pub struct JsonError {
+    /// Byte offset of the failure in the input.
     pub pos: usize,
+    /// What the parser expected or found.
     pub msg: String,
 }
 
@@ -35,6 +43,7 @@ impl std::error::Error for JsonError {}
 impl Json {
     // ---- accessors ------------------------------------------------------
 
+    /// The string value, if this is a `Str`.
     pub fn as_str(&self) -> Option<&str> {
         match self {
             Json::Str(s) => Some(s),
@@ -42,6 +51,7 @@ impl Json {
         }
     }
 
+    /// The numeric value, if this is a `Num`.
     pub fn as_f64(&self) -> Option<f64> {
         match self {
             Json::Num(n) => Some(*n),
@@ -49,6 +59,7 @@ impl Json {
         }
     }
 
+    /// The value as a non-negative integer index, if it is one exactly.
     pub fn as_usize(&self) -> Option<usize> {
         self.as_f64().and_then(|n| {
             if n >= 0.0 && n.fract() == 0.0 {
@@ -59,6 +70,7 @@ impl Json {
         })
     }
 
+    /// The boolean value, if this is a `Bool`.
     pub fn as_bool(&self) -> Option<bool> {
         match self {
             Json::Bool(b) => Some(*b),
@@ -66,6 +78,7 @@ impl Json {
         }
     }
 
+    /// The elements, if this is an `Arr`.
     pub fn as_arr(&self) -> Option<&[Json]> {
         match self {
             Json::Arr(a) => Some(a),
@@ -73,6 +86,7 @@ impl Json {
         }
     }
 
+    /// The key→value map, if this is an `Obj`.
     pub fn as_obj(&self) -> Option<&BTreeMap<String, Json>> {
         match self {
             Json::Obj(o) => Some(o),
@@ -87,28 +101,34 @@ impl Json {
 
     // ---- construction helpers -------------------------------------------
 
+    /// Build an object from `(key, value)` pairs.
     pub fn obj(fields: Vec<(&str, Json)>) -> Json {
         Json::Obj(fields.into_iter().map(|(k, v)| (k.to_string(), v)).collect())
     }
 
+    /// Build an array from any iterator of values.
     pub fn arr<I: IntoIterator<Item = Json>>(items: I) -> Json {
         Json::Arr(items.into_iter().collect())
     }
 
+    /// Wrap a number.
     pub fn num(n: f64) -> Json {
         Json::Num(n)
     }
 
+    /// Wrap a string (copied).
     pub fn str(s: &str) -> Json {
         Json::Str(s.to_string())
     }
 
+    /// An array of numbers from a slice.
     pub fn from_f64_slice(xs: &[f64]) -> Json {
         Json::Arr(xs.iter().map(|&x| Json::Num(x)).collect())
     }
 
     // ---- parse ------------------------------------------------------------
 
+    /// Parse a complete JSON document (trailing garbage is an error).
     pub fn parse(text: &str) -> Result<Json, JsonError> {
         let mut p = Parser { b: text.as_bytes(), pos: 0 };
         p.skip_ws();

@@ -4,13 +4,21 @@
 //! a property-testing runner, a parallel map, and a tiny CLI parser.
 
 mod bitvec;
+/// Micro-benchmark runner behind `cosime bench`.
 pub mod bench;
+/// Dependency-free CLI argument parsing.
 pub mod cli;
+/// Minimal JSON value, parser, and pretty-printer.
 pub mod json;
+/// Scoped-thread fork/join helpers.
 pub mod par;
+/// Tiny property-testing harness (seeded shrinking).
 pub mod prop;
 mod rng;
 mod stats;
+/// Poison-recovering lock/condvar helpers and the recovery policy.
+pub mod sync;
+/// Minimal TOML subset parser for `cosime.toml`.
 pub mod toml_lite;
 
 pub use bitvec::BitVec;

@@ -7,8 +7,11 @@ use super::rng::Rng;
 /// Outcome of a property check.
 #[derive(Debug)]
 pub struct PropFailure {
+    /// 0-based case index that failed.
     pub case: usize,
+    /// Seed that reproduces the failing case.
     pub seed: u64,
+    /// What the property reported.
     pub message: String,
 }
 

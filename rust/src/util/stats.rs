@@ -45,10 +45,12 @@ pub struct RunningStats {
 }
 
 impl RunningStats {
+    /// Empty accumulator.
     pub fn new() -> Self {
         RunningStats { n: 0, mean: 0.0, m2: 0.0, min: f64::INFINITY, max: f64::NEG_INFINITY }
     }
 
+    /// Fold in one sample (Welford update).
     pub fn push(&mut self, x: f64) {
         self.n += 1;
         let d = x - self.mean;
@@ -58,26 +60,32 @@ impl RunningStats {
         self.max = self.max.max(x);
     }
 
+    /// Samples seen.
     pub fn count(&self) -> u64 {
         self.n
     }
 
+    /// Mean of the samples (0 when empty).
     pub fn mean(&self) -> f64 {
         if self.n == 0 { 0.0 } else { self.mean }
     }
 
+    /// Unbiased sample variance (0 below two samples).
     pub fn variance(&self) -> f64 {
         if self.n < 2 { 0.0 } else { self.m2 / (self.n - 1) as f64 }
     }
 
+    /// Sample standard deviation.
     pub fn stddev(&self) -> f64 {
         self.variance().sqrt()
     }
 
+    /// Smallest sample (0 when empty).
     pub fn min(&self) -> f64 {
         if self.n == 0 { 0.0 } else { self.min }
     }
 
+    /// Largest sample (0 when empty).
     pub fn max(&self) -> f64 {
         if self.n == 0 { 0.0 } else { self.max }
     }
@@ -138,6 +146,7 @@ impl Histogram {
         Histogram { bounds, counts: vec![0; len], stats: RunningStats::new() }
     }
 
+    /// Record one sample into its bucket and the running summary.
     pub fn record(&mut self, x: f64) {
         let idx = self.bounds.iter().position(|&b| x <= b).unwrap_or(self.bounds.len());
         self.counts[idx] += 1;
@@ -185,14 +194,17 @@ impl Histogram {
         Some(h)
     }
 
+    /// Samples recorded.
     pub fn count(&self) -> u64 {
         self.stats.count()
     }
 
+    /// Mean of the recorded samples.
     pub fn mean(&self) -> f64 {
         self.stats.mean()
     }
 
+    /// Largest recorded sample.
     pub fn max(&self) -> f64 {
         self.stats.max()
     }

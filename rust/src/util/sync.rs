@@ -1,0 +1,69 @@
+//! Poison-recovering lock helpers for serving-path state.
+//!
+//! `std`'s mutexes poison when a holder panics, and the idiomatic
+//! `lock().unwrap()` turns one panicked thread into a cascade that takes the
+//! whole process down. For *recoverable* state — metrics counters, the
+//! batcher queue, a remote connection's request table — that cascade is the
+//! wrong trade: each of those structures is valid after any partial update
+//! (counters may be off by one sample; the connection layer has its own
+//! explicit poisoning protocol that fails pending requests with typed
+//! errors). These helpers recover the guard and keep serving.
+//!
+//! They are deliberately **not** used for the tile-store epoch lock
+//! ([`crate::coordinator::TileManager`]): a writer that panicked mid-commit
+//! may have left a torn tile set, and serving wrong similarity results is
+//! strictly worse than crashing. That lock keeps the panicking `unwrap`,
+//! with a `// lint: allow(no-panic)` waiver documenting exactly this choice.
+
+use std::sync::{Condvar, Mutex, MutexGuard, PoisonError, WaitTimeoutResult};
+use std::time::Duration;
+
+/// Lock `m`, recovering the guard if a previous holder panicked.
+pub fn lock_recover<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(PoisonError::into_inner)
+}
+
+/// Block on `cv`, recovering the reacquired guard from poisoning.
+pub fn wait_recover<'a, T>(cv: &Condvar, g: MutexGuard<'a, T>) -> MutexGuard<'a, T> {
+    cv.wait(g).unwrap_or_else(PoisonError::into_inner)
+}
+
+/// Block on `cv` with a timeout, recovering the reacquired guard from
+/// poisoning.
+pub fn wait_timeout_recover<'a, T>(
+    cv: &Condvar,
+    g: MutexGuard<'a, T>,
+    dur: Duration,
+) -> (MutexGuard<'a, T>, WaitTimeoutResult) {
+    cv.wait_timeout(g, dur).unwrap_or_else(PoisonError::into_inner)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::{Arc, Mutex};
+
+    #[test]
+    fn lock_recover_survives_a_panicked_holder() {
+        let m = Arc::new(Mutex::new(7u32));
+        let m2 = Arc::clone(&m);
+        let _ = std::thread::spawn(move || {
+            let _g = m2.lock().unwrap();
+            panic!("poison the lock");
+        })
+        .join();
+        assert!(m.lock().is_err(), "lock must actually be poisoned");
+        assert_eq!(*lock_recover(&m), 7);
+        *lock_recover(&m) = 8;
+        assert_eq!(*lock_recover(&m), 8);
+    }
+
+    #[test]
+    fn wait_timeout_recover_times_out_normally() {
+        let m = Mutex::new(());
+        let cv = Condvar::new();
+        let g = lock_recover(&m);
+        let (_g, res) = wait_timeout_recover(&cv, g, Duration::from_millis(1));
+        assert!(res.timed_out());
+    }
+}

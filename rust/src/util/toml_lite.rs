@@ -8,9 +8,13 @@ use std::collections::BTreeMap;
 /// A parsed scalar value (or a flat list of scalars).
 #[derive(Debug, Clone, PartialEq)]
 pub enum TomlValue {
+    /// Floating-point literal.
     Float(f64),
+    /// Integer literal.
     Int(i64),
+    /// Boolean literal.
     Bool(bool),
+    /// Quoted string literal.
     Str(String),
     /// A single-line array of scalars, e.g. `["a:1", "b:2"]`. Nested arrays
     /// are not part of the supported subset.
@@ -27,6 +31,7 @@ impl TomlValue {
         }
     }
 
+    /// The value as usize, if it is a non-negative integer.
     pub fn as_usize(&self) -> Option<usize> {
         match self {
             TomlValue::Int(i) if *i >= 0 => Some(*i as usize),
@@ -34,6 +39,7 @@ impl TomlValue {
         }
     }
 
+    /// The value as u64, if it is a non-negative integer.
     pub fn as_u64(&self) -> Option<u64> {
         match self {
             TomlValue::Int(i) if *i >= 0 => Some(*i as u64),
@@ -41,6 +47,7 @@ impl TomlValue {
         }
     }
 
+    /// The boolean value, if this is a `Bool`.
     pub fn as_bool(&self) -> Option<bool> {
         match self {
             TomlValue::Bool(b) => Some(*b),
@@ -48,6 +55,7 @@ impl TomlValue {
         }
     }
 
+    /// The string value, if this is a `Str`.
     pub fn as_str(&self) -> Option<&str> {
         match self {
             TomlValue::Str(s) => Some(s),
@@ -77,7 +85,9 @@ pub type TomlDoc = BTreeMap<String, BTreeMap<String, TomlValue>>;
 /// Parse error with line context.
 #[derive(Debug)]
 pub struct TomlError {
+    /// 1-based line number of the failure.
     pub line: usize,
+    /// What the parser expected or found.
     pub msg: String,
 }
 

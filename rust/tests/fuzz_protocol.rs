@@ -1,0 +1,247 @@
+//! Structure-aware protocol fuzz smoke: mutate *valid* frames and throw
+//! them at a real server over loopback, under both I/O engines.
+//!
+//! This is the deterministic rail of the correctness story: a fixed-seed
+//! xorshift RNG derives every mutation, so a failure reproduces exactly
+//! from the printed iteration number. Three mutation families cover the
+//! interesting failure classes:
+//!
+//! * **truncation** — cut the stream anywhere (header boundary, mid-length
+//!   field, mid-payload);
+//! * **bitflip** — flip 1–8 bits anywhere in the frame (corrupt magic,
+//!   version, opcode, flags, lengths, payload);
+//! * **length-lie** — keep the payload but overwrite a length field
+//!   (header `len`, or an in-payload count) with an arbitrary value,
+//!   including allocation-bomb territory far beyond the bytes that follow.
+//!
+//! The invariant under test: the server must never crash and never wedge.
+//! Any individual connection may be answered with a typed error frame or
+//! dropped — both are legal — but a health round-trip on a *fresh*
+//! connection must keep working throughout and after the storm. Response
+//! frames that do arrive must parse and carry a known opcode.
+//!
+//! Iteration budget: `COSIME_FUZZ_ITERS` (default 10 000) mutations per
+//! I/O engine.
+
+use std::io::{Read, Write};
+use std::net::TcpStream;
+use std::time::Duration;
+
+use cosime::am::{AmEngine, DigitalExactEngine};
+use cosime::config::{CosimeConfig, IoMode};
+use cosime::server::protocol::{self, Op};
+use cosime::server::{CosimeServer, ShardRouter};
+use cosime::util::{rng, BitVec};
+
+const DIMS: usize = 128;
+const ROWS: usize = 64;
+
+/// Deterministic xorshift64* — independent from `cosime::util::rng` so
+/// changes to the library RNG cannot silently reshuffle the fuzz corpus.
+struct Xorshift(u64);
+
+impl Xorshift {
+    fn new(seed: u64) -> Self {
+        Xorshift(seed.max(1))
+    }
+    fn next(&mut self) -> u64 {
+        let mut x = self.0;
+        x ^= x << 13;
+        x ^= x >> 7;
+        x ^= x << 17;
+        self.0 = x;
+        x.wrapping_mul(0x2545_F491_4F6C_DD1D)
+    }
+    fn below(&mut self, n: usize) -> usize {
+        (self.next() % n.max(1) as u64) as usize
+    }
+}
+
+fn start_server(io: IoMode) -> CosimeServer {
+    let mut cfg = CosimeConfig::default();
+    cfg.server.listen = "127.0.0.1:0".to_string();
+    cfg.server.shards = 1;
+    cfg.server.io = io;
+    cfg.coordinator.workers = 1;
+    let mut r = rng(1234);
+    let words: Vec<BitVec> = (0..ROWS).map(|_| BitVec::random(DIMS, 0.5, &mut r)).collect();
+    let router = ShardRouter::build(&cfg, 1, 64, words, |w| {
+        Ok(Box::new(DigitalExactEngine::new(w)) as Box<dyn AmEngine>)
+    })
+    .expect("build router");
+    CosimeServer::serve(&cfg.server, router).expect("bind server")
+}
+
+/// A pool of valid frames (header + payload, ready to send) spanning both
+/// protocol versions and every request opcode the server dispatches.
+fn seed_frames() -> Vec<Vec<u8>> {
+    let mut r = rng(99);
+    let queries: Vec<BitVec> = (0..4).map(|_| BitVec::random(DIMS, 0.5, &mut r)).collect();
+    let word = BitVec::random(DIMS, 0.5, &mut r);
+
+    let mut frames = Vec::new();
+    let mut push = |version: u8, op: Op, payload: &[u8]| {
+        let mut buf = Vec::with_capacity(protocol::HEADER_LEN + payload.len());
+        protocol::write_frame_v(&mut buf, version, op, payload).expect("encode seed frame");
+        frames.push(buf);
+    };
+
+    for version in [protocol::MIN_VERSION, protocol::VERSION] {
+        push(version, Op::Search, &protocol::encode_search_request(&queries[..1], 1));
+        push(version, Op::Search, &protocol::encode_search_request(&queries, 3));
+        push(version, Op::Health, &[]);
+        push(version, Op::Metrics, &[]);
+        let admins = [
+            protocol::encode_admin_request(
+                &protocol::WireAdminOp::Update { row: 0, word: word.clone() },
+                None,
+            ),
+            protocol::encode_admin_request(
+                &protocol::WireAdminOp::Insert { word: word.clone() },
+                None,
+            ),
+            protocol::encode_admin_request(&protocol::WireAdminOp::Delete { row: 1 }, None),
+        ];
+        for (op, payload) in admins {
+            push(version, op, &payload);
+        }
+    }
+    frames
+}
+
+/// Apply one seeded mutation; always returns a non-empty byte string.
+fn mutate(frame: &[u8], r: &mut Xorshift) -> Vec<u8> {
+    let mut buf = frame.to_vec();
+    match r.below(3) {
+        // Truncate: anywhere from 1 byte to len-1 (0 bytes is just a
+        // connect/disconnect, which the accept loop already sees plenty of).
+        0 => {
+            let keep = 1 + r.below(buf.len().saturating_sub(1).max(1));
+            buf.truncate(keep);
+        }
+        // Bitflip: 1..=8 flips at arbitrary positions.
+        1 => {
+            for _ in 0..(1 + r.below(8)) {
+                let i = r.below(buf.len());
+                buf[i] ^= 1 << r.below(8);
+            }
+        }
+        // Length-lie: rewrite a 4-byte little-endian field. Half the time
+        // the header `len` (offset 8), otherwise a random aligned offset
+        // inside the payload (hits batch counts, dims, k, word lengths).
+        _ => {
+            let off = if r.below(2) == 0 || buf.len() <= protocol::HEADER_LEN + 4 {
+                8
+            } else {
+                protocol::HEADER_LEN + r.below(buf.len() - protocol::HEADER_LEN - 3)
+            };
+            let lie: u32 = match r.below(3) {
+                0 => r.next() as u32,                      // arbitrary garbage
+                1 => u32::MAX - r.below(1024) as u32,      // near-overflow
+                _ => (64 << 20) + r.next() as u32 % 1024,  // past the frame cap
+            };
+            buf[off..off + 4].copy_from_slice(&lie.to_le_bytes());
+        }
+    }
+    buf
+}
+
+/// Health round-trip on a fresh connection with a hard timeout. Panics
+/// (failing the test) if the server is dead or wedged.
+fn assert_alive(server: &CosimeServer, context: &str) {
+    let stream = connect_with_retry(server);
+    stream.set_read_timeout(Some(Duration::from_secs(5))).expect("set timeout");
+    let mut stream = stream;
+    protocol::write_frame(&mut stream, Op::Health, &[]).expect("write health frame");
+    stream.flush().expect("flush health frame");
+    let (header, payload) = protocol::read_frame(&mut stream, 1 << 20)
+        .unwrap_or_else(|e| panic!("server unresponsive after {context}: {e:?}"));
+    assert_eq!(Op::from_u8(header.op), Some(Op::HealthOk), "health failed after {context}");
+    let health = protocol::decode_health_response(&payload).expect("decode health");
+    assert_eq!(health.dims, DIMS as u64, "served store changed shape after {context}");
+}
+
+fn connect_with_retry(server: &CosimeServer) -> TcpStream {
+    let addr = server.local_addr();
+    let mut last = None;
+    for _ in 0..50 {
+        match TcpStream::connect(addr) {
+            Ok(s) => return s,
+            Err(e) => {
+                last = Some(e);
+                std::thread::sleep(Duration::from_millis(20));
+            }
+        }
+    }
+    panic!("could not connect to fuzz server: {last:?}");
+}
+
+fn fuzz_iters() -> usize {
+    std::env::var("COSIME_FUZZ_ITERS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(10_000)
+}
+
+fn fuzz_engine(io: IoMode, seed: u64) {
+    let server = start_server(io);
+    let seeds = seed_frames();
+    let mut r = Xorshift::new(seed);
+    let iters = fuzz_iters();
+
+    assert_alive(&server, "startup");
+    for i in 0..iters {
+        let base = &seeds[r.below(seeds.len())];
+        let mutated = mutate(base, &mut r);
+
+        let mut stream = connect_with_retry(&server);
+        stream.set_read_timeout(Some(Duration::from_millis(25))).expect("set timeout");
+        stream.set_nodelay(true).ok();
+        // The server may legally drop the connection mid-write (e.g. it
+        // already rejected the header while we are still sending payload) —
+        // a write error is not a failure.
+        let _ = stream.write_all(&mutated);
+        let _ = stream.flush();
+
+        // Sample the response path: if a frame comes back it must be
+        // well-formed and carry a known opcode. No response / connection
+        // reset / short read are all legal outcomes for garbage input.
+        if i % 16 == 0 {
+            let mut resp = [0u8; 4096];
+            if let Ok(n) = stream.read(&mut resp) {
+                if n >= protocol::HEADER_LEN {
+                    let magic = u32::from_le_bytes([resp[0], resp[1], resp[2], resp[3]]);
+                    assert_eq!(
+                        magic,
+                        protocol::MAGIC,
+                        "({io:?}, iter {i}) response does not start with a frame header"
+                    );
+                    assert!(
+                        Op::from_u8(resp[5]).is_some(),
+                        "({io:?}, iter {i}) response carries unknown opcode {:#04x}",
+                        resp[5]
+                    );
+                }
+            }
+        }
+        drop(stream);
+
+        // Periodic liveness probe: the storm must never take the server
+        // down for well-behaved clients.
+        if i % 1000 == 999 {
+            assert_alive(&server, &format!("{io:?} iteration {i}"));
+        }
+    }
+    assert_alive(&server, "the full storm");
+    server.shutdown();
+}
+
+#[test]
+fn fuzzed_frames_never_kill_the_threaded_server() {
+    fuzz_engine(IoMode::Threaded, 0x5EED_0001);
+}
+
+#[test]
+fn fuzzed_frames_never_kill_the_eventloop_server() {
+    fuzz_engine(IoMode::EventLoop, 0x5EED_0002);
+}

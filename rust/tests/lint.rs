@@ -1,0 +1,139 @@
+//! The invariant-lint rail: `cosime lint` must be clean at HEAD, and the
+//! rules must actually fire on known-bad code.
+//!
+//! The first test is the tier-1 gate — it walks the real tree exactly like
+//! the CLI does, so a PR that introduces an undocumented unsafe block, a
+//! panic in a serving path, an allocation inside a `lint: hot-path` region,
+//! an undispatched wire opcode, or an undocumented config key fails
+//! `cargo test` before it ever reaches CI.
+
+use cosime::lint::{lint_source, lint_tree, render_json, repo_root, Rule};
+
+#[test]
+fn tree_is_lint_clean_at_head() {
+    let root = repo_root().expect("repo root not found (rust/src/lib.rs marker)");
+    let findings = lint_tree(&root).expect("lint walk failed");
+    assert!(
+        findings.is_empty(),
+        "cosime lint found {} violation(s) at HEAD:\n{}",
+        findings.len(),
+        findings.iter().map(|f| f.to_string()).collect::<Vec<_>>().join("\n")
+    );
+}
+
+// ---------------------------------------------------------------------------
+// Negative fixtures: every rule must fire, with the right file:line.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn safety_comment_fires_on_bare_unsafe_block() {
+    let src = "fn f() {\n    let x = unsafe { *std::ptr::null::<u32>() };\n    drop(x);\n}\n";
+    let out = lint_source("rust/src/am/kernel/bad.rs", src);
+    assert_eq!(out.len(), 1, "{out:?}");
+    assert_eq!(out[0].rule, Rule::SafetyComment);
+    assert_eq!(out[0].line, 2);
+    assert_eq!(out[0].file, "rust/src/am/kernel/bad.rs");
+}
+
+#[test]
+fn safety_comment_fires_on_bare_unsafe_fn() {
+    let src = "pub unsafe fn k(p: *const u8) -> u8 {\n    unsafe { *p }\n}\n";
+    let out = lint_source("rust/src/x.rs", src);
+    // The fn decl is missing its SAFETY contract; the body block is too.
+    assert!(out.iter().any(|f| f.rule == Rule::SafetyComment && f.line == 1), "{out:?}");
+}
+
+#[test]
+fn safety_comment_accepts_commented_unsafe() {
+    let src = "fn f(s: &[u8]) -> u8 {\n    // SAFETY: caller guarantees s is non-empty.\n    unsafe { *s.get_unchecked(0) }\n}\n";
+    assert!(lint_source("rust/src/x.rs", src).is_empty());
+}
+
+#[test]
+fn no_panic_fires_inside_server_scope_only() {
+    let src = "fn f(v: Option<u32>) -> u32 {\n    v.unwrap()\n}\n";
+    let in_scope = lint_source("rust/src/server/bad.rs", src);
+    assert_eq!(in_scope.len(), 1, "{in_scope:?}");
+    assert_eq!(in_scope[0].rule, Rule::NoPanic);
+    assert_eq!(in_scope[0].line, 2);
+    // The same code outside the no-panic scope is legal.
+    assert!(lint_source("rust/src/repro/fine.rs", src).is_empty());
+}
+
+#[test]
+fn no_panic_fires_on_panic_macros() {
+    for mac in ["panic!(\"boom\")", "todo!()", "unimplemented!()", "unreachable!()"] {
+        let src = format!("fn f() {{\n    {mac};\n}}\n");
+        let out = lint_source("rust/src/coordinator/bad.rs", &src);
+        assert_eq!(out.len(), 1, "{mac}: {out:?}");
+        assert_eq!(out[0].rule, Rule::NoPanic);
+        assert_eq!(out[0].line, 2);
+    }
+}
+
+#[test]
+fn no_panic_respects_allow_with_reason() {
+    let src = "fn f(v: Option<u32>) -> u32 {\n    // lint: allow(no-panic) -- checked non-empty three lines up.\n    v.unwrap()\n}\n";
+    assert!(lint_source("rust/src/server/ok.rs", src).is_empty());
+}
+
+#[test]
+fn allow_without_reason_does_not_waive() {
+    let src = "fn f(v: Option<u32>) -> u32 {\n    // lint: allow(no-panic)\n    v.unwrap()\n}\n";
+    let out = lint_source("rust/src/server/bad.rs", src);
+    assert!(out.iter().any(|f| f.rule == Rule::NoPanic), "{out:?}");
+}
+
+#[test]
+fn no_panic_skips_test_modules() {
+    let src = "#[cfg(test)]\nmod tests {\n    #[test]\n    fn t() {\n        Some(1u32).unwrap();\n    }\n}\n";
+    assert!(lint_source("rust/src/server/ok.rs", src).is_empty());
+}
+
+#[test]
+fn hot_path_alloc_fires_between_markers() {
+    let src = "fn f(xs: &[u32]) -> Vec<u32> {\n    // lint: hot-path\n    let v: Vec<u32> = xs.to_vec();\n    // lint: end-hot-path\n    v\n}\n";
+    let out = lint_source("rust/src/repro/bad.rs", src);
+    assert_eq!(out.len(), 1, "{out:?}");
+    assert_eq!(out[0].rule, Rule::HotPathAlloc);
+    assert_eq!(out[0].line, 3);
+}
+
+#[test]
+fn hot_path_alloc_is_quiet_outside_markers() {
+    let src = "fn f(xs: &[u32]) -> Vec<u32> {\n    xs.to_vec()\n}\n";
+    assert!(lint_source("rust/src/repro/ok.rs", src).is_empty());
+}
+
+#[test]
+fn unterminated_hot_path_region_is_a_violation() {
+    let src = "fn f() {\n    // lint: hot-path\n    let _x = 1;\n}\n";
+    let out = lint_source("rust/src/repro/bad.rs", src);
+    assert!(out.iter().any(|f| f.rule == Rule::HotPathAlloc), "{out:?}");
+}
+
+#[test]
+fn json_rendering_is_machine_readable() {
+    let src = "fn f(v: Option<u32>) -> u32 {\n    v.unwrap()\n}\n";
+    let out = lint_source("rust/src/server/bad.rs", src);
+    let rendered = render_json(&out);
+    let parsed = cosime::util::json::Json::parse(&rendered).expect("render_json emits valid JSON");
+    let obj = parsed.as_obj().expect("top level is an object");
+    assert_eq!(obj["count"].as_usize(), Some(out.len()));
+    let findings = obj["findings"].as_arr().expect("findings array");
+    assert_eq!(findings.len(), out.len());
+    let first = findings[0].as_obj().expect("finding object");
+    assert_eq!(first["rule"].as_str(), Some("no-panic"));
+    assert_eq!(first["line"].as_usize(), Some(2));
+}
+
+#[test]
+fn findings_display_as_file_line_rule_message() {
+    let src = "fn f(v: Option<u32>) -> u32 {\n    v.unwrap()\n}\n";
+    let out = lint_source("rust/src/server/bad.rs", src);
+    let line = out[0].to_string();
+    assert!(
+        line.starts_with("rust/src/server/bad.rs:2: no-panic: "),
+        "unexpected rendering: {line}"
+    );
+}
