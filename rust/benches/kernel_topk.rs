@@ -11,7 +11,7 @@
 //! packed-matrix footprint streamed per iteration, elems = queries scored.
 //! Cache-blocked batching shows up directly as higher GB/s at equal bytes.
 
-use cosime::am::{AmEngine, BlockTopK, DigitalExactEngine, QueryBlock, SearchScratch};
+use cosime::am::{AmEngine, BlockSink, BlockTopK, DigitalExactEngine, QueryBlock, SearchScratch};
 use cosime::coordinator::TileManager;
 use cosime::util::bench::Bench;
 use cosime::util::{rng, BitVec};
@@ -51,7 +51,7 @@ fn main() {
     let block_engine = b
         .bench_gbps(&format!("engine/search_block x{batch}/k=1"), batch as f64, matrix_bytes, || {
             out.reset(batch, 1);
-            engine.search_block(block.view(), 0, &mut scratch, out.selectors_mut());
+            engine.search_block(block.view(), 0, &mut scratch, BlockSink::TopK(out.selectors_mut()));
         })
         .throughput()
         .unwrap();
@@ -59,7 +59,7 @@ fn main() {
     // Deep-k on the flat engine: the fused selector instead of a sort.
     b.bench_gbps(&format!("engine/search_block x{batch}/k=10"), batch as f64, matrix_bytes, || {
         out.reset(batch, 10);
-        engine.search_block(block.view(), 0, &mut scratch, out.selectors_mut());
+        engine.search_block(block.view(), 0, &mut scratch, BlockSink::TopK(out.selectors_mut()));
     });
 
     // Tile manager: serial single-query merge vs the parallel tile×batch

@@ -10,11 +10,18 @@
 //!   one row per query) built once and reused; [`QueriesRef`] is its cheap
 //!   `Copy` view, sliceable along the query axis so work can be split
 //!   tile×batch.
+//! * [`QueryKind`] — the typed query family: ranked [`QueryKind::TopK`]
+//!   versus range [`QueryKind::Threshold`] matches, threaded from the
+//!   coordinator down to the packed kernels.
 //! * [`TopK`] — a small bounded insertion buffer keeping the best `k`
 //!   (descending score, ties to the lowest row index — the WTA race
 //!   semantics). NaN scores never win and never panic ([`rank_before`]).
-//! * [`BlockTopK`] — one selector per query in a block, with all buffers
-//!   reused across calls.
+//! * [`Matches`] — its threshold counterpart: every row scoring at least
+//!   `d`, bounded by a spill-safe cap with a typed truncation flag, and
+//!   mergeable across tiles/shards exactly like [`TopK::merge_from`].
+//! * [`BlockTopK`] / [`BlockMatches`] — one selector per query in a block,
+//!   with all buffers reused across calls; [`BlockSink`] is the borrowed
+//!   either-kind view engines consume.
 //! * [`SearchScratch`] — engine scratch (score vector + query staging) owned
 //!   by the caller and reused across calls.
 //!
@@ -57,11 +64,37 @@ pub fn rank_before(score_a: f64, idx_a: usize, score_b: f64, idx_b: usize) -> bo
     }
 }
 
-/// Validate a block-kernel call: one selector per query, matching dims.
-/// Shared by the trait default, the packed-store kernel and engine
-/// overrides so the contract lives in one place.
-pub fn check_block(queries: QueriesRef<'_>, out: &[TopK], engine_dims: usize) {
-    assert_eq!(queries.len(), out.len(), "one selector per query");
+/// The typed query family served by every engine and every serving layer.
+///
+/// `TopK(k)` is the classic ranked search (best `k` rows, WTA semantics);
+/// `Threshold(d)` asks for *every* row whose score is at least `d` — the
+/// natural query shape of multi-bit FeFET CAMs, which report all matchlines
+/// above a sensing threshold rather than a ranked winner. Collectors are
+/// [`TopK`] and [`Matches`] respectively.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum QueryKind {
+    /// Ranked search: keep the best `k` rows.
+    TopK(usize),
+    /// Range search: keep every row with `score >= d` (NaN never matches).
+    Threshold(f64),
+}
+
+impl QueryKind {
+    /// Short stable label for metrics/debug output.
+    pub fn name(&self) -> &'static str {
+        match self {
+            QueryKind::TopK(_) => "topk",
+            QueryKind::Threshold(_) => "threshold",
+        }
+    }
+}
+
+/// Validate a block-kernel call: one selector per query (`selectors` is the
+/// output slice length), matching dims. Shared by the trait default, the
+/// packed-store kernel and engine overrides so the contract lives in one
+/// place.
+pub fn check_block(queries: QueriesRef<'_>, selectors: usize, engine_dims: usize) {
+    assert_eq!(queries.len(), selectors, "one selector per query");
     assert_eq!(
         queries.dims(),
         engine_dims,
@@ -293,6 +326,116 @@ impl TopK {
     }
 }
 
+/// Bounded threshold-match collector: every row scoring at least `d`, kept
+/// in rank order, the digital shape of a multi-bit CAM's "all matchlines
+/// above the sensing threshold" readout.
+///
+/// The collector is spill-safe: it never holds more than `bound` entries.
+/// When more than `bound` rows qualify it keeps the best `bound` by the
+/// shared [`rank_before`] order and raises the typed [`Matches::truncated`]
+/// flag instead of allocating without bound. Because the kept set is always
+/// "the best `bound` qualifying rows", two collectors over disjoint row
+/// ranges merge exactly like [`TopK::merge_from`]: offer the other side's
+/// entries and OR the truncation flags.
+#[derive(Debug, Clone)]
+pub struct Matches {
+    threshold: f64,
+    bound: usize,
+    entries: Vec<SearchResult>,
+    truncated: bool,
+}
+
+impl Matches {
+    /// Empty collector for `score >= threshold`, keeping at most `bound`.
+    pub fn new(threshold: f64, bound: usize) -> Self {
+        Matches { threshold, bound, entries: Vec::new(), truncated: false }
+    }
+
+    /// Reset for a new search, keeping the entry buffer for reuse.
+    pub fn reset(&mut self, threshold: f64, bound: usize) {
+        self.threshold = threshold;
+        self.bound = bound;
+        self.entries.clear();
+        self.truncated = false;
+    }
+
+    /// The match threshold `d` (rows need `score >= d`).
+    pub fn threshold(&self) -> f64 {
+        self.threshold
+    }
+
+    /// Spill cap: the most entries this collector will hold.
+    pub fn bound(&self) -> usize {
+        self.bound
+    }
+
+    /// Matches held so far (≤ bound).
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    /// Whether no row has matched yet.
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// Whether a qualifying row was dropped because the bound was hit.
+    pub fn truncated(&self) -> bool {
+        self.truncated
+    }
+
+    /// Offer one `(row index, score)` candidate. Sub-threshold and NaN
+    /// scores are ignored; qualifying rows insert in [`rank_before`] order
+    /// so a full collector keeps exactly the best `bound` matches.
+    #[inline]
+    pub fn offer(&mut self, index: usize, score: f64) {
+        if !(score >= self.threshold) {
+            return; // NaN compares false, so degenerate scores never match
+        }
+        if self.entries.len() >= self.bound {
+            // A qualifying row will be dropped either way: spill, typed.
+            self.truncated = true;
+            let worst = match self.entries.last() {
+                Some(w) => w,
+                None => return, // bound == 0 keeps nothing
+            };
+            if !rank_before(score, index, worst.score, worst.winner) {
+                return;
+            }
+            self.entries.pop();
+        }
+        let mut at = self.entries.len();
+        while at > 0 {
+            let e = &self.entries[at - 1];
+            if rank_before(score, index, e.score, e.winner) {
+                at -= 1;
+            } else {
+                break;
+            }
+        }
+        self.entries.insert(at, SearchResult { winner: index, score });
+    }
+
+    /// Merge every entry of `other` into this collector, OR-ing the
+    /// truncation flags — the hierarchical tile/shard merge step.
+    pub fn merge_from(&mut self, other: &Matches) {
+        for e in &other.entries {
+            self.offer(e.winner, e.score);
+        }
+        self.truncated |= other.truncated;
+    }
+
+    /// Matches in rank order (best first).
+    pub fn as_slice(&self) -> &[SearchResult] {
+        &self.entries
+    }
+
+    /// The best match, if any row qualified.
+    pub fn best(&self) -> Option<&SearchResult> {
+        self.entries.first()
+    }
+}
+
 /// One [`TopK`] selector per query of a block, with every buffer reused
 /// across calls — the result side of the allocation-free kernel.
 #[derive(Debug, Clone, Default)]
@@ -345,6 +488,106 @@ impl BlockTopK {
     }
 }
 
+/// One [`Matches`] collector per query of a block, with every buffer
+/// reused across calls — the threshold twin of [`BlockTopK`].
+#[derive(Debug, Clone, Default)]
+pub struct BlockMatches {
+    selectors: Vec<Matches>,
+    active: usize,
+}
+
+impl BlockMatches {
+    /// Empty block collector; size it with [`BlockMatches::reset`].
+    pub fn new() -> Self {
+        BlockMatches { selectors: Vec::new(), active: 0 }
+    }
+
+    /// Size for `queries` collectors with a shared threshold and bound,
+    /// reusing prior buffers. Per-query thresholds can be set afterwards
+    /// via [`BlockMatches::selectors_mut`] + [`Matches::reset`].
+    pub fn reset(&mut self, queries: usize, threshold: f64, bound: usize) {
+        while self.selectors.len() < queries {
+            self.selectors.push(Matches::new(threshold, bound));
+        }
+        for sel in &mut self.selectors[..queries] {
+            sel.reset(threshold, bound);
+        }
+        self.active = queries;
+    }
+
+    /// Number of active collectors (== queries of the last `reset`).
+    pub fn queries(&self) -> usize {
+        self.active
+    }
+
+    /// Borrow the active collectors (one per query).
+    pub fn selectors(&self) -> &[Matches] {
+        &self.selectors[..self.active]
+    }
+
+    /// Mutably borrow the active collectors (one per query).
+    pub fn selectors_mut(&mut self) -> &mut [Matches] {
+        &mut self.selectors[..self.active]
+    }
+
+    /// Ranked matches for query `i`.
+    pub fn query(&self, i: usize) -> &[SearchResult] {
+        assert!(i < self.active, "query index {i} out of range {}", self.active);
+        self.selectors[i].as_slice()
+    }
+
+    /// Whether query `i`'s match set spilled past its bound.
+    pub fn truncated(&self, i: usize) -> bool {
+        assert!(i < self.active, "query index {i} out of range {}", self.active);
+        self.selectors[i].truncated()
+    }
+}
+
+/// Borrowed, either-kind result sink consumed by
+/// [`crate::am::AmEngine::search_block`]: one selector per query, either
+/// ranked ([`TopK`]) or threshold ([`Matches`]). This is what lets every
+/// engine serve the whole [`QueryKind`] family through one entry point.
+#[derive(Debug)]
+pub enum BlockSink<'a> {
+    /// Ranked top-k selectors, one per query.
+    TopK(&'a mut [TopK]),
+    /// Threshold match collectors, one per query.
+    Matches(&'a mut [Matches]),
+}
+
+impl<'a> BlockSink<'a> {
+    /// Number of selectors (must equal the query count of the block).
+    pub fn len(&self) -> usize {
+        match self {
+            BlockSink::TopK(s) => s.len(),
+            BlockSink::Matches(m) => m.len(),
+        }
+    }
+
+    /// Whether the sink holds no selectors.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Reborrow, so a sink can be handed to a helper without consuming it.
+    pub fn reborrow(&mut self) -> BlockSink<'_> {
+        match self {
+            BlockSink::TopK(s) => BlockSink::TopK(s),
+            BlockSink::Matches(m) => BlockSink::Matches(m),
+        }
+    }
+
+    /// Offer a `(row index, score)` candidate to query `i`'s selector,
+    /// whichever kind it is — the staged (non-packed) engine path.
+    #[inline]
+    pub fn offer(&mut self, i: usize, index: usize, score: f64) {
+        match self {
+            BlockSink::TopK(s) => s[i].offer(index, score),
+            BlockSink::Matches(m) => m[i].offer(index, score),
+        }
+    }
+}
+
 /// Caller-owned scratch an engine may use while scoring a block: a reusable
 /// score vector and a staging [`BitVec`] for engines that score from an
 /// unpacked query view. Hold one per worker and reuse it forever.
@@ -354,12 +597,15 @@ pub struct SearchScratch {
     pub scores: Vec<f64>,
     /// Staging query for engines without a packed-lane fast path.
     pub query: BitVec,
+    /// Packed bit-plane staging for multi-bit engines: each query's
+    /// extracted planes, plane-major per query, reused across strips.
+    pub plane_lanes: Vec<u64>,
 }
 
 impl SearchScratch {
     /// Empty scratch; buffers grow on first use.
     pub fn new() -> Self {
-        SearchScratch { scores: Vec::new(), query: BitVec::zeros(0) }
+        SearchScratch { scores: Vec::new(), query: BitVec::zeros(0), plane_lanes: Vec::new() }
     }
 }
 
@@ -501,6 +747,112 @@ mod tests {
     fn rank_before_unifies_signed_zero() {
         assert!(rank_before(0.0, 0, -0.0, 1), "ties break by index across ±0");
         assert!(!rank_before(-0.0, 1, 0.0, 0));
+    }
+
+    #[test]
+    fn matches_keeps_qualifying_rows_in_rank_order() {
+        let mut m = Matches::new(0.5, 16);
+        for (i, s) in [0.1, 0.9, 0.5, 0.49, 0.7, f64::NAN].iter().enumerate() {
+            m.offer(i, *s);
+        }
+        let got: Vec<(usize, f64)> = m.as_slice().iter().map(|e| (e.winner, e.score)).collect();
+        assert_eq!(got, vec![(1, 0.9), (4, 0.7), (2, 0.5)]);
+        assert!(!m.truncated());
+    }
+
+    #[test]
+    fn matches_bound_spills_with_typed_flag() {
+        let mut m = Matches::new(0.0, 2);
+        m.offer(0, 1.0);
+        m.offer(1, 3.0);
+        assert!(!m.truncated());
+        m.offer(2, 2.0); // evicts (0, 1.0): a qualifying row was dropped
+        assert!(m.truncated());
+        let got: Vec<usize> = m.as_slice().iter().map(|e| e.winner).collect();
+        assert_eq!(got, vec![1, 2]);
+        // A rejected (but qualifying) candidate also marks truncation.
+        let mut r = Matches::new(0.0, 2);
+        r.offer(0, 3.0);
+        r.offer(1, 2.0);
+        r.offer(2, 1.0);
+        assert!(r.truncated());
+        assert_eq!(r.len(), 2);
+    }
+
+    #[test]
+    fn matches_zero_bound_keeps_nothing_but_flags() {
+        let mut m = Matches::new(0.5, 0);
+        m.offer(0, 0.1);
+        assert!(!m.truncated(), "sub-threshold rows never spill");
+        m.offer(1, 0.9);
+        assert!(m.is_empty());
+        assert!(m.truncated());
+    }
+
+    #[test]
+    fn matches_merge_matches_flat_reference() {
+        // Split a score stream across two collectors, merge, and compare
+        // with one collector that saw everything — the tile/shard merge
+        // invariant.
+        let mut r = rng(11);
+        for _ in 0..50 {
+            let n = 1 + r.below(60);
+            let bound = 1 + r.below(10);
+            let d = (r.below(6) as f64) / 2.0;
+            let scores: Vec<f64> = (0..n).map(|_| (r.below(8) as f64) / 2.0).collect();
+            let cut = r.below(n + 1);
+            let (mut a, mut b) = (Matches::new(d, bound), Matches::new(d, bound));
+            let mut flat = Matches::new(d, bound);
+            for (i, &s) in scores.iter().enumerate() {
+                if i < cut {
+                    a.offer(i, s);
+                } else {
+                    b.offer(i, s);
+                }
+                flat.offer(i, s);
+            }
+            a.merge_from(&b);
+            assert_eq!(a.as_slice(), flat.as_slice(), "scores {scores:?} d {d} bound {bound}");
+            assert_eq!(a.truncated(), flat.truncated());
+        }
+    }
+
+    #[test]
+    fn matches_reset_reuses_buffer() {
+        let mut m = Matches::new(0.0, 4);
+        for i in 0..10 {
+            m.offer(i, i as f64);
+        }
+        assert!(m.truncated());
+        m.reset(2.0, 8);
+        assert!(m.is_empty());
+        assert!(!m.truncated());
+        assert_eq!(m.threshold(), 2.0);
+        assert_eq!(m.bound(), 8);
+        m.offer(3, 2.0);
+        assert_eq!(m.best().unwrap().winner, 3);
+    }
+
+    #[test]
+    fn block_matches_reset_and_sink_offer() {
+        let mut b = BlockMatches::new();
+        b.reset(3, 0.5, 4);
+        assert_eq!(b.queries(), 3);
+        let mut sink = BlockSink::Matches(b.selectors_mut());
+        assert_eq!(sink.len(), 3);
+        sink.offer(1, 7, 0.9);
+        sink.offer(1, 8, 0.1);
+        assert_eq!(b.query(1).len(), 1);
+        assert_eq!(b.query(1)[0].winner, 7);
+        assert!(!b.truncated(1));
+        b.reset(2, 0.5, 4);
+        assert!(b.query(1).is_empty(), "reset clears collectors");
+    }
+
+    #[test]
+    fn query_kind_names_are_stable() {
+        assert_eq!(QueryKind::TopK(3).name(), "topk");
+        assert_eq!(QueryKind::Threshold(0.5).name(), "threshold");
     }
 
     #[test]

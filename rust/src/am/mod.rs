@@ -41,7 +41,10 @@ pub mod store;
 /// Write-verify programming model for the admin plane.
 pub mod write;
 
-pub use kernel::{BlockTopK, QueriesRef, QueryBlock, SearchScratch, TopK};
+pub use kernel::{
+    BlockMatches, BlockSink, BlockTopK, Matches, QueriesRef, QueryBlock, QueryKind,
+    SearchScratch, TopK,
+};
 
 use crate::util::BitVec;
 use kernel::simd;
@@ -60,7 +63,7 @@ pub enum Metric {
 }
 
 /// Result of one nearest-neighbor search.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct SearchResult {
     /// Winning row index.
     pub winner: usize,
@@ -101,6 +104,14 @@ pub trait AmEngine: Send + Sync {
         usize::MAX
     }
 
+    /// Whether this engine can serve [`QueryKind::Threshold`] blocks.
+    /// Engines whose substrate reads out only a ranked winner (fixed argmax
+    /// artifacts) override this so callers can reject threshold requests up
+    /// front instead of failing mid-batch.
+    fn supports_threshold(&self) -> bool {
+        true
+    }
+
     /// Nearest-neighbor search (argmax of [`AmEngine::scores`]; ties break
     /// to the lowest row index, matching the Pallas kernel and jnp.argmax).
     fn search(&self, query: &BitVec) -> SearchResult {
@@ -134,11 +145,13 @@ pub trait AmEngine: Send + Sync {
         sel.as_slice().to_vec()
     }
 
-    /// The batched, allocation-free search kernel: score every query in
-    /// `queries` against all stored rows, offering `(base + row, score)`
-    /// candidates to the matching selector of `out` (one per query, already
-    /// reset to the caller's k). `base` is the engine's global row offset —
-    /// tiles compose hierarchically by passing their shard offset.
+    /// The batched, allocation-free search kernel for the whole
+    /// [`QueryKind`] family: score every query in `queries` against all
+    /// stored rows, offering `(base + row, score)` candidates to the
+    /// matching selector of `out` — either ranked [`TopK`] selectors or
+    /// threshold [`Matches`] collectors, one per query, already reset by
+    /// the caller. `base` is the engine's global row offset — tiles compose
+    /// hierarchically by passing their shard offset.
     ///
     /// The default stages each query through `scratch` and reuses
     /// [`AmEngine::scores_into`]; packed-store engines override this with a
@@ -148,17 +161,47 @@ pub trait AmEngine: Send + Sync {
         queries: QueriesRef<'_>,
         base: usize,
         scratch: &mut SearchScratch,
-        out: &mut [TopK],
+        mut out: BlockSink<'_>,
     ) {
-        kernel::check_block(queries, out, self.dims());
+        kernel::check_block(queries, out.len(), self.dims());
         for qi in 0..queries.len() {
             scratch.query.assign_lanes(queries.dims(), queries.lanes_of(qi));
             self.scores_into(&scratch.query, &mut scratch.scores);
-            let sel = &mut out[qi];
             for (r, &s) in scratch.scores.iter().enumerate() {
-                sel.offer(base + r, s);
+                out.offer(qi, base + r, s);
             }
         }
+    }
+
+    /// Threshold search: every stored row with `score >= threshold`, in
+    /// rank order, capped (spill-safe) at `bound` entries with a typed
+    /// truncation flag — the [`QueryKind::Threshold`] twin of
+    /// [`AmEngine::search_topk`]. Flows through the same
+    /// [`AmEngine::search_block`] kernel the ranked path uses.
+    fn search_matches(&self, query: &BitVec, threshold: f64, bound: usize) -> Matches {
+        let mut out = self.search_matches_batch(std::slice::from_ref(query), threshold, bound);
+        out.pop().expect("one collector per query")
+    }
+
+    /// Batched threshold search; one [`Matches`] collector per query.
+    /// Allocates its own buffers; steady-state callers hold a
+    /// [`QueryBlock`]/[`BlockMatches`]/[`SearchScratch`] and call
+    /// `search_block` directly.
+    fn search_matches_batch(
+        &self,
+        queries: &[BitVec],
+        threshold: f64,
+        bound: usize,
+    ) -> Vec<Matches> {
+        if queries.is_empty() {
+            return Vec::new();
+        }
+        let block = QueryBlock::pack(queries, self.dims());
+        let mut scratch = SearchScratch::new();
+        let mut out = BlockMatches::new();
+        out.reset(queries.len(), threshold, bound);
+        self.search_block(block.view(), 0, &mut scratch, BlockSink::Matches(out.selectors_mut()));
+        out.selectors().to_vec()
     }
 
     /// Reprogram stored row `row` to `word` in place, returning `true` when
@@ -196,7 +239,7 @@ pub trait AmEngine: Send + Sync {
         let mut scratch = SearchScratch::new();
         let mut out = BlockTopK::new();
         out.reset(queries.len(), k.min(self.rows()));
-        self.search_block(block.view(), 0, &mut scratch, out.selectors_mut());
+        self.search_block(block.view(), 0, &mut scratch, BlockSink::TopK(out.selectors_mut()));
         out.to_vecs()
     }
 }
@@ -287,7 +330,28 @@ impl Store {
     /// Shared fused block kernel for every packed-store engine — no score
     /// vector, no per-row `BitVec` chasing, zero allocations.
     /// `score(x, row, q_ones)` maps the binary dot product to the engine's
-    /// metric.
+    /// metric; the sink decides what "keep" means ([`TopK`] rank vs
+    /// [`Matches`] threshold), so both [`QueryKind`]s share one traversal.
+    #[inline]
+    fn kernel_block(
+        &self,
+        queries: QueriesRef<'_>,
+        base: usize,
+        out: BlockSink<'_>,
+        score: impl Fn(u32, usize, u32) -> f64,
+    ) {
+        kernel::check_block(queries, out.len(), self.dims);
+        match out {
+            BlockSink::TopK(sels) => {
+                self.kernel_block_into(queries, base, sels, &score, TopK::offer)
+            }
+            BlockSink::Matches(ms) => {
+                self.kernel_block_into(queries, base, ms, &score, Matches::offer)
+            }
+        }
+    }
+
+    /// The monomorphized traversal behind [`Store::kernel_block`].
     ///
     /// Traversal is register- and cache-blocked: the packed matrix is walked
     /// in strips of [`simd::ROW_TILE`] rows, and each strip is scored
@@ -299,14 +363,14 @@ impl Store {
     /// ([`simd::KernelImpl::dot_rows`]) runs branch-free before the
     /// selector's compare-heavy `offer` pass.
     #[inline]
-    fn kernel_block(
+    fn kernel_block_into<S>(
         &self,
         queries: QueriesRef<'_>,
         base: usize,
-        out: &mut [TopK],
-        score: impl Fn(u32, usize, u32) -> f64,
+        out: &mut [S],
+        score: &impl Fn(u32, usize, u32) -> f64,
+        offer: impl Fn(&mut S, usize, f64),
     ) {
-        kernel::check_block(queries, out, self.dims);
         if queries.is_empty() {
             return;
         }
@@ -329,11 +393,45 @@ impl Store {
                 let sel = &mut out[qi];
                 for (i, &x) in dots[..n].iter().enumerate() {
                     let r = row0 + i;
-                    sel.offer(base + r, score(x, r, q_ones));
+                    offer(sel, base + r, score(x, r, q_ones));
                 }
             }
             row0 += n;
         }
+    }
+}
+
+/// The one shared packed-search body behind every digital engine's
+/// `search_block` — what used to be four near-identical per-engine
+/// implementations differing only in the score map. Picks the metric's
+/// closure and runs the fused cache-blocked kernel; `norm_const` is only
+/// read by [`Metric::ApproxCosine`].
+fn packed_search_block(
+    store: &Store,
+    metric: Metric,
+    norm_const: f64,
+    queries: QueriesRef<'_>,
+    base: usize,
+    out: BlockSink<'_>,
+) {
+    let pop = &store.popcounts;
+    match metric {
+        Metric::Cosine => store.kernel_block(queries, base, out, |x, r, _| {
+            let y = pop[r];
+            if y == 0 {
+                0.0
+            } else {
+                let xf = x as f64;
+                xf * xf / y as f64
+            }
+        }),
+        Metric::Hamming => store.kernel_block(queries, base, out, |x, r, q_ones| {
+            -((q_ones + pop[r]) as f64 - 2.0 * x as f64)
+        }),
+        Metric::ApproxCosine => {
+            store.kernel_block(queries, base, out, |x, _, _| x as f64 / norm_const)
+        }
+        Metric::Dot => store.kernel_block(queries, base, out, |x, _, _| x as f64),
     }
 }
 
@@ -385,7 +483,7 @@ impl AmEngine for DigitalExactEngine {
         }));
     }
 
-    /// Fused batched top-k: streams the packed matrix once per query lane,
+    /// Fused batched search: streams the packed matrix once per query lane,
     /// no score vector, no per-query allocation (Eq. 2 with the shared ‖a‖²
     /// dropped, exactly like [`DigitalExactEngine::search`]).
     fn search_block(
@@ -393,18 +491,9 @@ impl AmEngine for DigitalExactEngine {
         queries: QueriesRef<'_>,
         base: usize,
         _scratch: &mut SearchScratch,
-        out: &mut [TopK],
+        out: BlockSink<'_>,
     ) {
-        let pop = &self.store.popcounts;
-        self.store.kernel_block(queries, base, out, |x, r, _| {
-            let y = pop[r];
-            if y == 0 {
-                0.0
-            } else {
-                let xf = x as f64;
-                xf * xf / y as f64
-            }
-        });
+        packed_search_block(&self.store, Metric::Cosine, 1.0, queries, base, out);
     }
 
     /// Fused hot path: streams the packed matrix once, tracking the running
@@ -495,12 +584,9 @@ impl AmEngine for HammingEngine {
         queries: QueriesRef<'_>,
         base: usize,
         _scratch: &mut SearchScratch,
-        out: &mut [TopK],
+        out: BlockSink<'_>,
     ) {
-        let pop = &self.store.popcounts;
-        self.store.kernel_block(queries, base, out, |x, r, q_ones| {
-            -((q_ones + pop[r]) as f64 - 2.0 * x as f64)
-        });
+        packed_search_block(&self.store, Metric::Hamming, 1.0, queries, base, out);
     }
 
     fn update_row(&mut self, row: usize, word: &BitVec) -> bool {
@@ -582,10 +668,9 @@ impl AmEngine for ApproxCosineEngine {
         queries: QueriesRef<'_>,
         base: usize,
         _scratch: &mut SearchScratch,
-        out: &mut [TopK],
+        out: BlockSink<'_>,
     ) {
-        let norm = self.norm_const;
-        self.store.kernel_block(queries, base, out, |x, _, _| x as f64 / norm);
+        packed_search_block(&self.store, Metric::ApproxCosine, self.norm_const, queries, base, out);
     }
 
     fn update_row(&mut self, row: usize, word: &BitVec) -> bool {
@@ -650,9 +735,9 @@ impl AmEngine for DotEngine {
         queries: QueriesRef<'_>,
         base: usize,
         _scratch: &mut SearchScratch,
-        out: &mut [TopK],
+        out: BlockSink<'_>,
     ) {
-        self.store.kernel_block(queries, base, out, |x, _, _| x as f64);
+        packed_search_block(&self.store, Metric::Dot, 1.0, queries, base, out);
     }
 
     fn update_row(&mut self, row: usize, word: &BitVec) -> bool {
@@ -667,6 +752,245 @@ impl AmEngine for DotEngine {
 
     fn remove_row(&mut self, row: usize) -> bool {
         self.store.remove_row(row);
+        true
+    }
+}
+
+/// Multi-bit packed AM: every `bits` consecutive bits of a stored word (and
+/// of the query) encode one 2- or 4-bit cell, the storage model of the
+/// FeReX / multi-bit FeFET CAM generation. The score is the exact integer
+/// multi-bit dot product `Σ_cells q_cell · w_cell`.
+///
+/// Storage is decomposed into `bits` bit planes (plane `p` holds bit `p` of
+/// every cell), each packed row-major like [`Store`], so the search kernel
+/// is a weighted sum of plane-pair binary dot products —
+/// `Σ_{p,r} 2^{p+r} · popcount(qplane_p & wplane_r)` — and every plane pair
+/// reuses the runtime-dispatched [`simd::KernelImpl`] table via
+/// [`simd::KernelImpl::dot_rows_planes`]. All arithmetic is integer until
+/// the final cast, so the fused path is bit-exact against the per-cell
+/// reference in [`MultiBitEngine::scores_into`].
+#[derive(Debug, Clone)]
+pub struct MultiBitEngine {
+    rows: Vec<BitVec>,
+    bits: usize,
+    cells: usize,
+    dims: usize,
+    lanes_per_row: usize,
+    /// Plane-major packed matrices: `planes[p]` is rows × lanes_per_row
+    /// lanes over the `cells`-bit plane-`p` projection of every row.
+    planes: Vec<Vec<u64>>,
+}
+
+/// Extract bit plane `p` of a `dims`-bit word interpreted as `bits`-bit
+/// cells, into `out` (`cells.div_ceil(64)` lanes, zeroed here). Cell `j`
+/// reads word bit `j*bits + p`; a trailing partial cell contributes only
+/// the bits that exist.
+fn extract_plane(lanes: &[u64], dims: usize, bits: usize, p: usize, out: &mut [u64]) {
+    for lane in out.iter_mut() {
+        *lane = 0;
+    }
+    let cells = dims.div_ceil(bits);
+    for j in 0..cells {
+        let bit = j * bits + p;
+        if bit < dims && (lanes[bit / 64] >> (bit % 64)) & 1 == 1 {
+            out[j / 64] |= 1u64 << (j % 64);
+        }
+    }
+}
+
+/// Value of cell `j` of a `dims`-bit word under the `bits`-bit-cell
+/// interpretation (little-endian within the cell).
+fn cell_value(word: &BitVec, j: usize, bits: usize) -> u64 {
+    let mut v = 0u64;
+    for b in 0..bits {
+        let bit = j * bits + b;
+        if bit < word.len() && word.get(bit) {
+            v |= 1u64 << b;
+        }
+    }
+    v
+}
+
+impl MultiBitEngine {
+    /// Build over `dims`-bit words reinterpreted as `bits`-bit cells
+    /// (`bits` ∈ {2, 4}, the cited FeFET multi-bit CAM precisions).
+    pub fn new(rows: Vec<BitVec>, bits: usize) -> Self {
+        assert!(bits == 2 || bits == 4, "multi-bit cells are 2 or 4 bits, got {bits}");
+        assert!(!rows.is_empty(), "AM needs at least one stored word");
+        let dims = rows[0].len();
+        assert!(rows.iter().all(|r| r.len() == dims), "stored words must share a length");
+        let cells = dims.div_ceil(bits);
+        let lanes_per_row = cells.div_ceil(64);
+        let mut planes: Vec<Vec<u64>> =
+            (0..bits).map(|_| Vec::with_capacity(rows.len() * lanes_per_row)).collect();
+        let mut lane_buf = vec![0u64; lanes_per_row];
+        for row in &rows {
+            for (p, plane) in planes.iter_mut().enumerate() {
+                extract_plane(row.lanes(), dims, bits, p, &mut lane_buf);
+                plane.extend_from_slice(&lane_buf);
+            }
+        }
+        MultiBitEngine { rows, bits, cells, dims, lanes_per_row, planes }
+    }
+
+    /// Bits per cell (2 or 4).
+    pub fn bits(&self) -> usize {
+        self.bits
+    }
+
+    /// Cells per word (`dims / bits`, rounded up for a partial tail cell).
+    pub fn cells(&self) -> usize {
+        self.cells
+    }
+
+    /// Borrow stored row `i` (test and snapshot support).
+    pub fn stored(&self, i: usize) -> &BitVec {
+        &self.rows[i]
+    }
+
+    /// Re-extract row `r`'s planes in place (incremental repack).
+    fn repack_row(&mut self, r: usize) {
+        let base = r * self.lanes_per_row;
+        let (dims, bits, lpr) = (self.dims, self.bits, self.lanes_per_row);
+        let lanes = self.rows[r].lanes();
+        for (p, plane) in self.planes.iter_mut().enumerate() {
+            extract_plane(lanes, dims, bits, p, &mut plane[base..base + lpr]);
+        }
+    }
+}
+
+impl AmEngine for MultiBitEngine {
+    fn name(&self) -> &str {
+        match self.bits {
+            2 => "multibit-2",
+            _ => "multibit-4",
+        }
+    }
+    fn metric(&self) -> Metric {
+        Metric::Dot
+    }
+    fn rows(&self) -> usize {
+        self.rows.len()
+    }
+    fn dims(&self) -> usize {
+        self.dims
+    }
+
+    /// Per-cell reference scoring — deliberately independent of the plane
+    /// decomposition and the SIMD kernels, so the fused block path below is
+    /// property-tested against genuinely different code.
+    fn scores_into(&self, query: &BitVec, out: &mut Vec<f64>) {
+        assert_eq!(query.len(), self.dims, "query length {} != dims {}", query.len(), self.dims);
+        out.clear();
+        out.extend(self.rows.iter().map(|row| {
+            let mut acc = 0u64;
+            for j in 0..self.cells {
+                acc += cell_value(query, j, self.bits) * cell_value(row, j, self.bits);
+            }
+            acc as f64
+        }));
+    }
+
+    fn search_batch(&self, queries: &[BitVec]) -> Vec<SearchResult> {
+        par_search_batch(self, queries)
+    }
+
+    /// Fused multi-plane kernel: stages every query's bit planes once in
+    /// `scratch`, then walks the plane matrices in [`simd::ROW_TILE`] strips.
+    /// Each query plane `p` scores the strip's stored planes through the
+    /// dispatched [`simd::KernelImpl::dot_rows_planes`] (weights `2^r`),
+    /// and the outer `2^p` weighting fuses the planes into the exact
+    /// multi-bit dot product.
+    fn search_block(
+        &self,
+        queries: QueriesRef<'_>,
+        base: usize,
+        scratch: &mut SearchScratch,
+        mut out: BlockSink<'_>,
+    ) {
+        kernel::check_block(queries, out.len(), self.dims);
+        if queries.is_empty() {
+            return;
+        }
+        let kern = simd::active();
+        let (bits, lpr) = (self.bits, self.lanes_per_row);
+        let n_rows = self.rows.len();
+        // Stage every query's planes once; reused across all strips.
+        scratch.plane_lanes.clear();
+        scratch.plane_lanes.resize(queries.len() * bits * lpr, 0);
+        for qi in 0..queries.len() {
+            for p in 0..bits {
+                let off = (qi * bits + p) * lpr;
+                extract_plane(
+                    queries.lanes_of(qi),
+                    self.dims,
+                    bits,
+                    p,
+                    &mut scratch.plane_lanes[off..off + lpr],
+                );
+            }
+        }
+        let mut plane_dots = [0u32; simd::ROW_TILE];
+        let mut acc = [0u64; simd::ROW_TILE];
+        let mut totals = [0u64; simd::ROW_TILE];
+        let mut strip_planes: [&[u64]; 4] = [&[]; 4];
+        let mut row0 = 0;
+        while row0 < n_rows {
+            let n = (n_rows - row0).min(simd::ROW_TILE);
+            for (p, plane) in self.planes.iter().enumerate() {
+                strip_planes[p] = &plane[row0 * lpr..(row0 + n) * lpr];
+            }
+            for qi in 0..queries.len() {
+                for t in totals[..n].iter_mut() {
+                    *t = 0;
+                }
+                for p in 0..bits {
+                    let off = (qi * bits + p) * lpr;
+                    let q_plane = &scratch.plane_lanes[off..off + lpr];
+                    kern.dot_rows_planes(
+                        q_plane,
+                        &strip_planes[..bits],
+                        lpr,
+                        &mut plane_dots[..n],
+                        &mut acc[..n],
+                    );
+                    let weight = 1u64 << p;
+                    for (t, &a) in totals[..n].iter_mut().zip(acc[..n].iter()) {
+                        *t += weight * a;
+                    }
+                }
+                for (i, &t) in totals[..n].iter().enumerate() {
+                    out.offer(qi, base + row0 + i, t as f64);
+                }
+            }
+            row0 += n;
+        }
+    }
+
+    fn update_row(&mut self, row: usize, word: &BitVec) -> bool {
+        assert_eq!(word.len(), self.dims, "word length {} != dims {}", word.len(), self.dims);
+        self.rows[row] = word.clone();
+        self.repack_row(row);
+        true
+    }
+
+    fn push_row(&mut self, word: &BitVec) -> bool {
+        assert_eq!(word.len(), self.dims, "word length {} != dims {}", word.len(), self.dims);
+        self.rows.push(word.clone());
+        for plane in self.planes.iter_mut() {
+            plane.resize(self.rows.len() * self.lanes_per_row, 0);
+        }
+        self.repack_row(self.rows.len() - 1);
+        true
+    }
+
+    fn remove_row(&mut self, row: usize) -> bool {
+        assert!(self.rows.len() > 1, "store cannot shrink to zero rows");
+        self.rows.remove(row);
+        let base = row * self.lanes_per_row;
+        for plane in self.planes.iter_mut() {
+            plane.drain(base..base + self.lanes_per_row);
+        }
         true
     }
 }
@@ -880,7 +1204,9 @@ mod mutation_tests {
             Box::new(DigitalExactEngine::new(rows.clone())),
             Box::new(HammingEngine::new(rows.clone())),
             Box::new(ApproxCosineEngine::new(rows.clone())),
-            Box::new(DotEngine::new(rows)),
+            Box::new(DotEngine::new(rows.clone())),
+            Box::new(MultiBitEngine::new(rows.clone(), 2)),
+            Box::new(MultiBitEngine::new(rows, 4)),
         ]
     }
 
@@ -979,7 +1305,9 @@ mod kernel_engine_tests {
             Box::new(DigitalExactEngine::new(rows.clone())),
             Box::new(HammingEngine::new(rows.clone())),
             Box::new(ApproxCosineEngine::new(rows.clone())),
-            Box::new(DotEngine::new(rows)),
+            Box::new(DotEngine::new(rows.clone())),
+            Box::new(MultiBitEngine::new(rows.clone(), 2)),
+            Box::new(MultiBitEngine::new(rows, 4)),
         ]
     }
 
@@ -1047,10 +1375,15 @@ mod kernel_engine_tests {
         let mut scratch = SearchScratch::new();
         let mut plain = BlockTopK::new();
         plain.reset(4, 3);
-        engine.search_block(block.view(), 0, &mut scratch, plain.selectors_mut());
+        engine.search_block(block.view(), 0, &mut scratch, BlockSink::TopK(plain.selectors_mut()));
         let mut shifted = BlockTopK::new();
         shifted.reset(4, 3);
-        engine.search_block(block.view(), 100, &mut scratch, shifted.selectors_mut());
+        engine.search_block(
+            block.view(),
+            100,
+            &mut scratch,
+            BlockSink::TopK(shifted.selectors_mut()),
+        );
         for qi in 0..4 {
             for (a, b) in plain.query(qi).iter().zip(shifted.query(qi)) {
                 assert_eq!(a.winner + 100, b.winner);
@@ -1073,7 +1406,7 @@ mod kernel_engine_tests {
                 (0..1 + round).map(|_| BitVec::random(96, 0.5, &mut r)).collect();
             block.repack(&queries);
             out.reset(queries.len(), 4);
-            engine.search_block(block.view(), 0, &mut scratch, out.selectors_mut());
+            engine.search_block(block.view(), 0, &mut scratch, BlockSink::TopK(out.selectors_mut()));
             let fresh = engine.search_topk_batch(&queries, 4);
             for (qi, want) in fresh.iter().enumerate() {
                 let got = out.query(qi);
@@ -1107,7 +1440,7 @@ mod kernel_engine_tests {
             let mut scratch = SearchScratch::new();
             let mut out = BlockTopK::new();
             out.reset(queries.len(), 2);
-            engine.search_block(block.view(), 7, &mut scratch, out.selectors_mut());
+            engine.search_block(block.view(), 7, &mut scratch, BlockSink::TopK(out.selectors_mut()));
             for (qi, q) in queries.iter().enumerate() {
                 // Per-bit reference: no lanes, no popcount kernel.
                 let dot = |w: &BitVec| (0..dims).filter(|&i| q.get(i) && w.get(i)).count();
@@ -1138,6 +1471,143 @@ mod kernel_engine_tests {
         });
     }
 
+    /// Independent threshold reference: filter the flat `scores_into`
+    /// vector by `score >= d`, rank by the shared (score desc, index asc)
+    /// order with ±0 unified, and truncate to `bound` — no [`Matches`]
+    /// code involved.
+    fn threshold_reference(
+        engine: &dyn AmEngine,
+        q: &BitVec,
+        d: f64,
+        bound: usize,
+    ) -> (Vec<SearchResult>, bool) {
+        fn key(s: f64) -> f64 {
+            if s == 0.0 {
+                0.0
+            } else {
+                s
+            }
+        }
+        let scores = engine.scores(q);
+        let mut hits: Vec<(usize, f64)> =
+            scores.iter().copied().enumerate().filter(|&(_, s)| s >= d).collect();
+        hits.sort_by(|a, b| key(b.1).total_cmp(&key(a.1)).then(a.0.cmp(&b.0)));
+        let truncated = hits.len() > bound;
+        hits.truncate(bound);
+        (hits.into_iter().map(|(winner, score)| SearchResult { winner, score }).collect(), truncated)
+    }
+
+    /// Threshold results equal the flat `scores_into` filter reference,
+    /// bit-exact, for every engine — the packed quartet and both multi-bit
+    /// widths — through the fused `search_block` Matches path. Thresholds
+    /// sweep the live score range so empty, partial, full and spilled
+    /// (truncated) match sets all occur.
+    #[test]
+    fn threshold_matches_equal_filtered_scores_reference() {
+        prop::check("threshold == filtered scores", 20, 0x7D0_11F5, |r| {
+            let n_rows = 2 + r.below(40);
+            let dims = 16 + 8 * r.below(10);
+            let n_queries = 1 + r.below(6);
+            let words: Vec<BitVec> =
+                (0..n_rows).map(|_| BitVec::random(dims, 0.2 + 0.6 * r.f64(), r)).collect();
+            let queries: Vec<BitVec> =
+                (0..n_queries).map(|_| BitVec::random(dims, 0.5, r)).collect();
+            let bound = 1 + r.below(n_rows + 4);
+            let frac = r.f64();
+            for engine in all_digital(words.clone()) {
+                // Pick a threshold inside this engine's live score range so
+                // the filter actually bisects it.
+                let scores = engine.scores(&queries[0]);
+                let lo = scores.iter().cloned().fold(f64::INFINITY, f64::min);
+                let hi = scores.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+                let d = lo + (hi - lo) * frac;
+                let got = engine.search_matches_batch(&queries, d, bound);
+                for (q, m) in queries.iter().zip(&got) {
+                    let (want, want_trunc) = threshold_reference(engine.as_ref(), q, d, bound);
+                    crate::prop_assert!(
+                        m.as_slice() == want.as_slice(),
+                        "{}: d={d} bound={bound}: got {:?}, want {:?}",
+                        engine.name(),
+                        m.as_slice(),
+                        want
+                    );
+                    crate::prop_assert!(
+                        m.truncated() == want_trunc,
+                        "{}: truncated {} vs {}",
+                        engine.name(),
+                        m.truncated(),
+                        want_trunc
+                    );
+                }
+            }
+            Ok(())
+        });
+    }
+
+    /// The multi-bit fused plane kernel is bit-exact vs the per-cell
+    /// `scores_into` reference on awkward shapes: dims not divisible by the
+    /// cell width (partial tail cell), cell counts straddling u64 lane
+    /// boundaries, and row counts straddling ROW_TILE strips — for both
+    /// query kinds.
+    #[test]
+    fn multibit_fused_planes_match_cell_reference() {
+        prop::check("multibit fused == per-cell", 16, 0xB175, |r| {
+            let bits = if r.below(2) == 0 { 2 } else { 4 };
+            let dims = [63, 65, 127, 129, 130, 256, 1000][r.below(7)];
+            let n_rows =
+                [2, 3, simd::ROW_TILE - 1, simd::ROW_TILE + 1, 100][r.below(5)];
+            let words: Vec<BitVec> =
+                (0..n_rows).map(|_| BitVec::random(dims, 0.5, r)).collect();
+            let queries: Vec<BitVec> = (0..3).map(|_| BitVec::random(dims, 0.5, r)).collect();
+            let engine = MultiBitEngine::new(words, bits);
+            let batched = engine.search_topk_batch(&queries, 3);
+            for (q, got) in queries.iter().zip(&batched) {
+                let serial = engine.search_topk(q, 3); // scores_into reference
+                crate::prop_assert!(got.len() == serial.len(), "bits={bits} dims={dims}");
+                for (a, b) in got.iter().zip(&serial) {
+                    crate::prop_assert!(
+                        a.winner == b.winner && a.score == b.score,
+                        "bits={bits} dims={dims}: fused ({}, {}) vs cell ({}, {})",
+                        a.winner,
+                        a.score,
+                        b.winner,
+                        b.score
+                    );
+                }
+            }
+            let d = batched[0].last().map(|e| e.score).unwrap_or(0.0);
+            let got = engine.search_matches_batch(&queries, d, n_rows);
+            for (q, m) in queries.iter().zip(&got) {
+                let (want, want_trunc) = threshold_reference(&engine, q, d, n_rows);
+                crate::prop_assert!(
+                    m.as_slice() == want.as_slice() && m.truncated() == want_trunc,
+                    "bits={bits} dims={dims} threshold path"
+                );
+            }
+            Ok(())
+        });
+    }
+
+    /// Cell semantics pinned by hand: bits are little-endian within a cell,
+    /// cells are consecutive bit groups, and the score is the exact integer
+    /// multi-bit dot product.
+    #[test]
+    fn multibit_scores_follow_cell_semantics() {
+        // Word [1,0,1,1] as 2-bit cells: cell0 = 1, cell1 = 3.
+        // Query [1,1,0,1]:               cell0 = 3, cell1 = 2.
+        let e = MultiBitEngine::new(vec![BitVec::from_bits(&[1, 0, 1, 1])], 2);
+        assert_eq!(e.cells(), 2);
+        let q = BitVec::from_bits(&[1, 1, 0, 1]);
+        assert_eq!(e.scores(&q), vec![1.0 * 3.0 + 3.0 * 2.0]);
+        assert_eq!(e.search(&q).score, 9.0);
+        // A partial tail cell only contributes the bits that exist:
+        // dims=3 at 2 bits/cell → cell1 is just bit 2.
+        let t = MultiBitEngine::new(vec![BitVec::from_bits(&[0, 1, 1])], 2);
+        assert_eq!(t.cells(), 2);
+        let tq = BitVec::from_bits(&[1, 1, 1]);
+        assert_eq!(t.scores(&tq), vec![(2.0 * 3.0) + (1.0 * 1.0)]);
+    }
+
     /// The analog engine participates in the block API through the default
     /// (scores_into-staged) path; on a nominal die its batched top-k must
     /// match its serial top-k and its WTA winner.
@@ -1156,6 +1626,12 @@ mod kernel_engine_tests {
                 assert_eq!(a.score, b.score);
             }
             assert_eq!(got[0].winner, engine.search(q).winner, "head == WTA winner");
+            // The threshold kind flows through the same staged path.
+            let d = serial[2].score;
+            let m = engine.search_matches(q, d, 12);
+            let (want, want_trunc) = threshold_reference(&engine, q, d, 12);
+            assert_eq!(m.as_slice(), want.as_slice(), "analog threshold == reference");
+            assert_eq!(m.truncated(), want_trunc);
         }
     }
 }

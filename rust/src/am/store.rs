@@ -33,8 +33,12 @@ use super::write::{program_array, read_back, WriteReport};
 
 /// Magic string identifying an AM snapshot manifest.
 pub const SNAPSHOT_FORMAT: &str = "cosime-am-snapshot";
-/// Current snapshot schema version.
-pub const SNAPSHOT_VERSION: usize = 1;
+/// Current snapshot schema version. Version 2 added `bits_per_cell`: the
+/// manifest now declares how many bits each stored cell carries, so packed
+/// multi-bit planes (the multibit engine's lane layout) are versioned at
+/// the manifest level instead of being guessed from file sizes. Version-1
+/// manifests (no field) load as 1 bit per cell.
+pub const SNAPSHOT_VERSION: usize = 2;
 
 /// Cumulative write-verify cost over the life of a store.
 #[derive(Debug, Clone, Default, PartialEq)]
@@ -327,6 +331,9 @@ impl AmStore {
             ("dims", Json::num(self.dims as f64)),
             ("rows", Json::num(self.words.len() as f64)),
             ("lanes_per_row", Json::num(lanes_per_row as f64)),
+            // AmStore cells are binary; multi-bit planes declare 2 or 4
+            // here and stack `bits_per_cell` lane planes per row.
+            ("bits_per_cell", Json::num(1.0)),
             ("labels", Json::arr(self.labels.iter().map(|l| Json::str(l)))),
             ("config_fingerprint", Json::str(&self.fingerprint)),
             ("data_file", Json::str(&data_name)),
@@ -352,7 +359,18 @@ impl AmStore {
             .get("version")
             .and_then(Json::as_usize)
             .ok_or_else(|| anyhow!("snapshot missing version"))?;
-        ensure!(version == SNAPSHOT_VERSION, "unsupported snapshot version {version}");
+        ensure!(
+            (1..=SNAPSHOT_VERSION).contains(&version),
+            "unsupported snapshot version {version}"
+        );
+        // v1 manifests predate the field: they are 1-bit by construction.
+        let bits_per_cell =
+            root.get("bits_per_cell").and_then(Json::as_usize).unwrap_or(1);
+        ensure!(
+            bits_per_cell == 1,
+            "snapshot stores {bits_per_cell}-bit cells; this store loads 1-bit words \
+             (serve multi-bit planes with the multibit engine)"
+        );
 
         let field = |key: &str| {
             root.get(key).and_then(Json::as_usize).ok_or_else(|| anyhow!("snapshot missing {key}"))
@@ -589,6 +607,46 @@ mod tests {
 
         // Wrong format marker: rejected.
         std::fs::write(&path, "{\"format\": \"nope\"}").unwrap();
+        assert!(AmStore::load(&cfg, &path).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    /// Manifest versioning of the cell encoding: a v1 manifest (no
+    /// `bits_per_cell`) loads as 1-bit, a declared multi-bit snapshot is
+    /// rejected with a pointer at the multibit engine, and an unknown
+    /// future version is rejected outright.
+    #[test]
+    fn manifest_versions_the_cell_encoding() {
+        let dir = temp_dir("bits-per-cell");
+        let cfg = CosimeConfig::default();
+        let mut store = AmStore::new(&cfg, 64);
+        let mut r = rng(4);
+        store.insert("w", &BitVec::random(64, 0.5, &mut r)).unwrap();
+        let path = dir.join("am.json");
+        store.save(&path).unwrap();
+        let saved = std::fs::read_to_string(&path).unwrap();
+        assert!(saved.contains("bits_per_cell"), "v2 manifests declare the cell encoding");
+
+        // Tolerant loader: a v1 manifest without the field still loads.
+        let v1 = saved
+            .replace("\"version\": 2", "\"version\": 1")
+            .replace("\"bits_per_cell\": 1,", "");
+        assert_ne!(v1, saved, "tamper must hit the expected fields");
+        std::fs::write(&path, &v1).unwrap();
+        let loaded = AmStore::load(&cfg, &path).unwrap();
+        assert_eq!(loaded.rows(), 1);
+
+        // A multi-bit snapshot cannot be served as 1-bit words.
+        let multibit = saved.replace("\"bits_per_cell\": 1", "\"bits_per_cell\": 2");
+        assert_ne!(multibit, saved);
+        std::fs::write(&path, &multibit).unwrap();
+        let err = AmStore::load(&cfg, &path).unwrap_err();
+        assert!(format!("{err:#}").contains("multibit"), "{err:#}");
+
+        // Future schema versions are rejected, not misread.
+        let future = saved.replace("\"version\": 2", "\"version\": 9");
+        assert_ne!(future, saved);
+        std::fs::write(&path, &future).unwrap();
         assert!(AmStore::load(&cfg, &path).is_err());
         std::fs::remove_dir_all(&dir).ok();
     }

@@ -406,6 +406,11 @@ pub struct CoordinatorConfig {
     /// query pay O(rows·k) selector maintenance; deeper submissions are
     /// rejected as bad queries.
     pub max_k: usize,
+    /// Largest match-set bound a threshold query may ask for (its `limit`).
+    /// A threshold selector costs O(limit) insertion maintenance per
+    /// qualifying row, so — like `max_k` — unbounded requests would tax the
+    /// whole batch; deeper submissions are rejected as bad queries.
+    pub max_matches: usize,
 }
 
 impl Default for CoordinatorConfig {
@@ -416,13 +421,14 @@ impl Default for CoordinatorConfig {
             queue_depth: 4096,
             workers: 2,
             max_k: 1024,
+            max_matches: 4096,
         }
     }
 }
 
 bind_toml!(CoordinatorConfig {
     f64: [],
-    usize: [max_batch, queue_depth, workers, max_k],
+    usize: [max_batch, queue_depth, workers, max_k, max_matches],
     u64: [max_wait_us],
     bool: [],
 });
@@ -589,6 +595,53 @@ impl FromToml for KernelConfig {
     }
 }
 
+/// Search-engine selection (`[engine]`): which [`crate::am::AmEngine`]
+/// implementation `cosime serve`/`route` build over the stored words, and —
+/// for the multi-bit packed engine — the per-cell precision. Pure serving
+/// policy (the same words can be re-served under any engine), so like
+/// `[kernel]` it is excluded from [`CosimeConfig::physical_fingerprint`].
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct EngineConfig {
+    /// Engine family: `"digital"` (exact popcount cosine), `"analog"`
+    /// (translinear + WTA circuit model), `"xla"` (AOT runtime artifacts)
+    /// or `"multibit"` (2/4-bit packed planes, fused per-plane popcount).
+    /// CLI `--engine` overrides this key.
+    pub kind: String,
+    /// Bits per stored cell for `kind = "multibit"` (2 or 4). Ignored by
+    /// the single-bit engines.
+    pub bits: usize,
+}
+
+impl Default for EngineConfig {
+    fn default() -> Self {
+        EngineConfig { kind: "digital".to_string(), bits: 2 }
+    }
+}
+
+// Hand-rolled (not `bind_toml!`): mixed string + integer keys.
+impl FromToml for EngineConfig {
+    fn set(&mut self, key: &str, value: &TomlValue) -> Result<()> {
+        match key {
+            "kind" => {
+                self.kind = value
+                    .as_str()
+                    .with_context(|| format!("key '{key}' must be a string"))?
+                    .to_string();
+            }
+            "bits" => self.bits = want_usize(key, value)?,
+            _ => bail!("unknown key '{key}' in section [EngineConfig]"),
+        }
+        Ok(())
+    }
+
+    fn dump(&self) -> Vec<(String, TomlValue)> {
+        vec![
+            ("kind".into(), TomlValue::Str(self.kind.clone())),
+            ("bits".into(), TomlValue::Int(self.bits as i64)),
+        ]
+    }
+}
+
 /// Top-level configuration.
 #[derive(Debug, Clone, Default, PartialEq)]
 pub struct CosimeConfig {
@@ -612,6 +665,8 @@ pub struct CosimeConfig {
     pub server: ServerConfig,
     /// Search kernel selection (`[kernel]`).
     pub kernel: KernelConfig,
+    /// Serving engine selection (`[engine]`).
+    pub engine: EngineConfig,
 }
 
 impl CosimeConfig {
@@ -648,6 +703,7 @@ impl CosimeConfig {
                 "write" => &mut self.write,
                 "server" => &mut self.server,
                 "kernel" => &mut self.kernel,
+                "engine" => &mut self.engine,
                 other => bail!("unknown config section [{other}]"),
             };
             for (k, v) in kvs {
@@ -670,6 +726,7 @@ impl CosimeConfig {
         doc.insert("write".into(), self.write.dump().into_iter().collect());
         doc.insert("server".into(), self.server.dump().into_iter().collect());
         doc.insert("kernel".into(), self.kernel.dump().into_iter().collect());
+        doc.insert("engine".into(), self.engine.dump().into_iter().collect());
         toml_lite::to_string(&doc)
     }
 
@@ -705,6 +762,7 @@ impl CosimeConfig {
         let c = &self.coordinator;
         ensure!(c.max_batch >= 1 && c.queue_depth >= 1 && c.workers >= 1, "bad coordinator");
         ensure!(c.max_k >= 1, "coordinator max_k must be at least 1");
+        ensure!(c.max_matches >= 1, "coordinator max_matches must be at least 1");
         ensure!(self.write.pulse_scale > 0.0, "write pulse_scale must be positive");
         let s = &self.server;
         ensure!(!s.listen.is_empty(), "server listen address must be set");
@@ -720,6 +778,17 @@ impl CosimeConfig {
             matches!(self.kernel.path.as_str(), "auto" | "scalar" | "avx2" | "avx512" | "neon"),
             "kernel path must be auto|scalar|avx2|avx512|neon, got \"{}\"",
             self.kernel.path
+        );
+        let e = &self.engine;
+        ensure!(
+            matches!(e.kind.as_str(), "digital" | "analog" | "xla" | "multibit"),
+            "engine kind must be digital|analog|xla|multibit, got \"{}\"",
+            e.kind
+        );
+        ensure!(
+            matches!(e.bits, 2 | 4),
+            "engine bits must be 2 or 4 (got {}); use kind = \"digital\" for 1-bit words",
+            e.bits
         );
         Ok(())
     }
@@ -856,6 +925,30 @@ mod tests {
         // Server policy never invalidates physical snapshots.
         let mut policy = CosimeConfig::default();
         policy.server.shards = 8;
+        assert_eq!(policy.physical_fingerprint(), CosimeConfig::default().physical_fingerprint());
+    }
+
+    #[test]
+    fn engine_section_parses_and_validates() {
+        let cfg =
+            CosimeConfig::from_toml_str("[engine]\nkind = \"multibit\"\nbits = 4\n").unwrap();
+        assert_eq!(cfg.engine.kind, "multibit");
+        assert_eq!(cfg.engine.bits, 4);
+        assert_eq!(EngineConfig::default().kind, "digital");
+        assert_eq!(EngineConfig::default().bits, 2);
+        // Bad kinds/bits are rejected at validate, not silently ignored.
+        assert!(CosimeConfig::from_toml_str("[engine]\nkind = \"quantum\"\n").is_err());
+        assert!(CosimeConfig::from_toml_str("[engine]\nbits = 3\n").is_err());
+        assert!(CosimeConfig::from_toml_str("[engine]\nkind = 2\n").is_err());
+        assert!(CosimeConfig::from_toml_str("[engine]\nknd = \"digital\"\n").is_err());
+        // Coordinator threshold bound must be sane.
+        assert!(CosimeConfig::from_toml_str("[coordinator]\nmax_matches = 0\n").is_err());
+        // Defaults round-trip through TOML text.
+        let back = CosimeConfig::from_toml_str(&cfg.to_toml_string()).unwrap();
+        assert_eq!(back, cfg);
+        // Engine choice is serving policy: snapshots stay valid across it.
+        let mut policy = CosimeConfig::default();
+        policy.engine.kind = "multibit".to_string();
         assert_eq!(policy.physical_fingerprint(), CosimeConfig::default().physical_fingerprint());
     }
 

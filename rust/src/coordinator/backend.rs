@@ -76,6 +76,10 @@ pub struct BatchResult {
     pub epoch: u64,
     /// One ranked hit list per query, in submission order.
     pub results: Vec<Vec<Hit>>,
+    /// Per-query truncation flags, parallel to `results`: true when a
+    /// threshold query's match set exceeded the request `limit` and was cut
+    /// to the best `limit` rows. Always all-false for top-k batches.
+    pub truncated: Vec<bool>,
 }
 
 /// A backend's identity and self-describing serving policy. The
@@ -215,6 +219,20 @@ pub trait Backend: Send + Sync {
     /// violations and backpressure ([`SubmitError::Busy`]).
     fn submit_search(&self, queries: &[BitVec], k: usize) -> Result<Ticket, SubmitError>;
 
+    /// Hand a whole **threshold** batch to the backend without blocking:
+    /// each query completes with every row scoring `>= threshold` in the
+    /// engine metric, rank-ordered and capped at `limit`. A cap spill is
+    /// reported per query through [`BatchResult::truncated`] — the entries
+    /// kept are still the best `limit`, so the flag marks incompleteness,
+    /// not wrongness. Backends over single-winner substrates reject with
+    /// [`SubmitError::BadQuery`].
+    fn submit_threshold(
+        &self,
+        queries: &[BitVec],
+        threshold: f64,
+        limit: usize,
+    ) -> Result<Ticket, SubmitError>;
+
     /// Apply an admin mutation, optionally pinned to an expected owning-
     /// shard epoch (compare-and-swap: a concurrent commit in between
     /// rejects with [`SubmitError::EpochMismatch`], store unchanged).
@@ -239,6 +257,16 @@ pub trait Backend: Send + Sync {
     /// Convenience: submit and block for the result.
     fn search_batch(&self, queries: &[BitVec], k: usize) -> Result<BatchResult, SubmitError> {
         self.submit_search(queries, k)?.wait()
+    }
+
+    /// Convenience: submit a threshold batch and block for the result.
+    fn search_threshold_batch(
+        &self,
+        queries: &[BitVec],
+        threshold: f64,
+        limit: usize,
+    ) -> Result<BatchResult, SubmitError> {
+        self.submit_threshold(queries, threshold, limit)?.wait()
     }
 }
 
@@ -265,10 +293,11 @@ impl LocalBackend {
     }
 }
 
-/// Completion over the service's per-query reply channels.
+/// Completion over the service's per-query reply channels. Each slot
+/// collects the query's hit list plus its threshold truncation flag.
 struct LocalCompletion {
     rxs: Vec<mpsc::Receiver<SearchResponse>>,
-    collected: Vec<Option<Vec<Hit>>>,
+    collected: Vec<Option<(Vec<Hit>, bool)>>,
     epoch: u64,
 }
 
@@ -278,8 +307,14 @@ fn hits_of(resp: &SearchResponse) -> Vec<Hit> {
 
 impl LocalCompletion {
     fn take_results(&mut self) -> BatchResult {
-        let results = self.collected.iter_mut().map(|c| c.take().unwrap_or_default()).collect();
-        BatchResult { epoch: self.epoch, results }
+        let mut results = Vec::with_capacity(self.collected.len());
+        let mut truncated = Vec::with_capacity(self.collected.len());
+        for c in self.collected.iter_mut() {
+            let (hits, trunc) = c.take().unwrap_or_default();
+            results.push(hits);
+            truncated.push(trunc);
+        }
+        BatchResult { epoch: self.epoch, results, truncated }
     }
 }
 
@@ -293,7 +328,7 @@ impl Completion for LocalCompletion {
             match rx.try_recv() {
                 Ok(resp) => {
                     self.epoch = self.epoch.max(resp.epoch);
-                    self.collected[i] = Some(hits_of(&resp));
+                    self.collected[i] = Some((hits_of(&resp), resp.truncated));
                 }
                 Err(mpsc::TryRecvError::Empty) => done = false,
                 Err(mpsc::TryRecvError::Disconnected) => return Err(SubmitError::Closed),
@@ -312,7 +347,7 @@ impl Completion for LocalCompletion {
             }
             let resp = rx.recv().map_err(|_| SubmitError::Closed)?;
             self.epoch = self.epoch.max(resp.epoch);
-            self.collected[i] = Some(hits_of(&resp));
+            self.collected[i] = Some((hits_of(&resp), resp.truncated));
         }
         Ok(self.take_results())
     }
@@ -334,6 +369,20 @@ impl Backend for LocalBackend {
         let mut rxs = Vec::with_capacity(queries.len());
         for q in queries {
             rxs.push(self.svc.submit_topk(q.clone(), k)?);
+        }
+        let collected = (0..rxs.len()).map(|_| None).collect();
+        Ok(Ticket::new(Box::new(LocalCompletion { rxs, collected, epoch: 0 })))
+    }
+
+    fn submit_threshold(
+        &self,
+        queries: &[BitVec],
+        threshold: f64,
+        limit: usize,
+    ) -> Result<Ticket, SubmitError> {
+        let mut rxs = Vec::with_capacity(queries.len());
+        for q in queries {
+            rxs.push(self.svc.submit_threshold(q.clone(), threshold, limit)?);
         }
         let collected = (0..rxs.len()).map(|_| None).collect();
         Ok(Ticket::new(Box::new(LocalCompletion { rxs, collected, epoch: 0 })))
@@ -471,6 +520,36 @@ mod tests {
         // Matching pin commits.
         let del = backend.admin(AdminCmd::Delete { row: out.row }, Some(out.shard_epoch)).unwrap();
         assert_eq!(del.rows, 20);
+        backend.close();
+    }
+
+    #[test]
+    fn threshold_batches_match_flat_reference_and_flag_truncation() {
+        let (backend, words) = local(60, 64);
+        let reference = DigitalExactEngine::new(words);
+        let mut r = rng(23);
+        let queries: Vec<BitVec> = (0..5).map(|_| BitVec::random(64, 0.5, &mut r)).collect();
+        let d = 36.0;
+        let result = backend.search_threshold_batch(&queries, d, 64).unwrap();
+        assert_eq!(result.results.len(), 5);
+        assert_eq!(result.truncated.len(), 5);
+        for (i, q) in queries.iter().enumerate() {
+            let want = reference.search_matches(q, d, 64);
+            assert_eq!(result.results[i].len(), want.len());
+            for (got, exp) in result.results[i].iter().zip(want.as_slice()) {
+                assert_eq!(got.row as usize, exp.winner);
+                assert_eq!(got.score, exp.score);
+            }
+            assert_eq!(result.truncated[i], want.truncated());
+        }
+
+        // A limit of 1 under an accept-everything threshold must keep the
+        // single best row and raise the per-query spill flag.
+        let tight = backend.search_threshold_batch(&queries[..1], f64::MIN, 1).unwrap();
+        assert_eq!(tight.results[0].len(), 1);
+        assert!(tight.truncated[0]);
+        let best = reference.search_topk(&queries[0], 1);
+        assert_eq!(tight.results[0][0].row as usize, best[0].winner);
         backend.close();
     }
 

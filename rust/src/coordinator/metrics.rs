@@ -42,6 +42,42 @@ impl AdminKind {
     const ALL: [AdminKind; 3] = [AdminKind::Update, AdminKind::Insert, AdminKind::Delete];
 }
 
+/// Search query kind — each gets its own completion lane, so a deployment
+/// serving both top-k and threshold traffic can see the split.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SearchKind {
+    /// Ranked best-k readout.
+    TopK,
+    /// Bounded match-set enumeration at a score threshold.
+    Threshold,
+}
+
+impl SearchKind {
+    /// Stable lowercase name, as printed in reports and wire payloads.
+    pub fn name(self) -> &'static str {
+        match self {
+            SearchKind::TopK => "topk",
+            SearchKind::Threshold => "threshold",
+        }
+    }
+
+    fn idx(self) -> usize {
+        match self {
+            SearchKind::TopK => 0,
+            SearchKind::Threshold => 1,
+        }
+    }
+
+    const ALL: [SearchKind; 2] = [SearchKind::TopK, SearchKind::Threshold];
+}
+
+/// Per-query-kind completion lane.
+struct KindLane {
+    completed: u64,
+    truncated: u64,
+    total_us: Histogram,
+}
+
 /// Per-k latency lane: requests asking for the same top-k depth share a
 /// histogram, so a deployment can see whether deep-k readouts (iterated WTA
 /// passes) cost more end to end.
@@ -97,6 +133,7 @@ struct Inner {
     exec_us: Histogram,
     total_us: Histogram,
     per_k: BTreeMap<usize, KLane>,
+    kinds: [KindLane; 2],
     admin: [AdminLane; 3],
     admin_rejected: u64,
     write_cells: u64,
@@ -133,6 +170,25 @@ pub struct PerKSnapshot {
     pub total_p99_us: f64,
     /// The lane's full histogram (shared layout, see [`latency_histogram`]);
     /// `None` on snapshots reconstructed from sources that do not carry it.
+    pub hist: Option<Histogram>,
+}
+
+/// Per-query-kind completion summary (only kinds that completed at least
+/// once).
+#[derive(Debug, Clone)]
+pub struct KindLaneSnapshot {
+    /// Lane name (`topk`/`threshold`).
+    pub kind: &'static str,
+    /// Searches completed in this lane.
+    pub completed: u64,
+    /// Threshold lane only: responses whose match set spilled past the
+    /// request's bound (always 0 in the top-k lane).
+    pub truncated: u64,
+    /// End-to-end p50 in microseconds.
+    pub total_p50_us: f64,
+    /// End-to-end p99 in microseconds.
+    pub total_p99_us: f64,
+    /// The lane's full histogram; `None` when the source did not carry it.
     pub hist: Option<Histogram>,
 }
 
@@ -207,6 +263,9 @@ pub struct MetricsSnapshot {
     pub total_mean_us: f64,
     /// Latency broken down by requested k, ascending k.
     pub per_k: Vec<PerKSnapshot>,
+    /// Completions broken down by query kind (`topk`/`threshold`), only the
+    /// active lanes; the threshold lane also counts truncated responses.
+    pub kinds: Vec<KindLaneSnapshot>,
     /// Admin-plane lanes (update/insert/delete), only the active ones.
     pub admin: Vec<AdminLaneSnapshot>,
     /// Admin ops rejected (bad row, dims mismatch, verify failure).
@@ -241,6 +300,10 @@ impl Metrics {
                 exec_us: h(),
                 total_us: h(),
                 per_k: BTreeMap::new(),
+                kinds: [
+                    KindLane { completed: 0, truncated: 0, total_us: h() },
+                    KindLane { completed: 0, truncated: 0, total_us: h() },
+                ],
                 admin: [
                     AdminLane { completed: 0, total_us: h() },
                     AdminLane { completed: 0, total_us: h() },
@@ -272,21 +335,46 @@ impl Metrics {
         g.batch_sizes.push(size as u64);
     }
 
-    /// Record one completed search with its queue/exec split.
+    /// Record one completed top-k search with its queue/exec split.
     pub fn on_complete(&self, queued: Duration, exec: Duration, k: usize) {
         let mut g = lock_recover(&self.inner);
-        g.completed += 1;
-        let qu = queued.as_secs_f64() * 1e6;
-        let ex = exec.as_secs_f64() * 1e6;
-        g.queue_us.record(qu.max(0.5));
-        g.exec_us.record(ex.max(0.5));
-        g.total_us.record((qu + ex).max(0.5));
+        let tot = Self::record_shared(&mut g, queued, exec);
         let lane = g
             .per_k
             .entry(k_lane(k))
             .or_insert_with(|| KLane { completed: 0, total_us: latency_histogram() });
         lane.completed += 1;
-        lane.total_us.record((qu + ex).max(0.5));
+        lane.total_us.record(tot);
+        let kind = &mut g.kinds[SearchKind::TopK.idx()];
+        kind.completed += 1;
+        kind.total_us.record(tot);
+    }
+
+    /// Record one completed threshold search: same queue/exec accounting as
+    /// top-k, but landing in the threshold kind lane (no per-k lane — a
+    /// threshold query has no k) with its spill flag counted.
+    pub fn on_complete_threshold(&self, queued: Duration, exec: Duration, truncated: bool) {
+        let mut g = lock_recover(&self.inner);
+        let tot = Self::record_shared(&mut g, queued, exec);
+        let kind = &mut g.kinds[SearchKind::Threshold.idx()];
+        kind.completed += 1;
+        if truncated {
+            kind.truncated += 1;
+        }
+        kind.total_us.record(tot);
+    }
+
+    /// Shared completion accounting (global counters + the three latency
+    /// histograms); returns the clamped total in µs for the caller's lane.
+    fn record_shared(g: &mut Inner, queued: Duration, exec: Duration) -> f64 {
+        g.completed += 1;
+        let qu = queued.as_secs_f64() * 1e6;
+        let ex = exec.as_secs_f64() * 1e6;
+        g.queue_us.record(qu.max(0.5));
+        g.exec_us.record(ex.max(0.5));
+        let tot = (qu + ex).max(0.5);
+        g.total_us.record(tot);
+        tot
     }
 
     /// Record one committed admin op with its wall time and (for ops that
@@ -342,6 +430,21 @@ impl Metrics {
                     total_p50_us: lane.total_us.quantile(0.5),
                     total_p99_us: lane.total_us.quantile(0.99),
                     hist: Some(lane.total_us.clone()),
+                })
+                .collect(),
+            kinds: SearchKind::ALL
+                .iter()
+                .filter(|kind| g.kinds[kind.idx()].completed > 0)
+                .map(|kind| {
+                    let lane = &g.kinds[kind.idx()];
+                    KindLaneSnapshot {
+                        kind: kind.name(),
+                        completed: lane.completed,
+                        truncated: lane.truncated,
+                        total_p50_us: lane.total_us.quantile(0.5),
+                        total_p99_us: lane.total_us.quantile(0.99),
+                        hist: Some(lane.total_us.clone()),
+                    }
                 })
                 .collect(),
             admin: AdminKind::ALL
@@ -400,6 +503,12 @@ impl MetricsSnapshot {
             out.push_str(&format!(
                 "\n  k={:<4} n={:<8} total µs: p50={:.1} p99={:.1}",
                 lane.k, lane.completed, lane.total_p50_us, lane.total_p99_us
+            ));
+        }
+        for lane in &self.kinds {
+            out.push_str(&format!(
+                "\n  kind {:<9} n={:<6} truncated={:<6} total µs: p50={:.1} p99={:.1}",
+                lane.kind, lane.completed, lane.truncated, lane.total_p50_us, lane.total_p99_us
             ));
         }
         for lane in &self.admin {
@@ -475,6 +584,28 @@ mod tests {
         // Absurd k must not overflow the lane computation.
         m.on_complete(Duration::from_micros(1), Duration::from_micros(1), usize::MAX - 1);
         assert!(m.snapshot().per_k.iter().any(|l| l.k == usize::MAX));
+    }
+
+    /// Top-k and threshold completions split into their own kind lanes;
+    /// only the threshold lane counts truncated responses.
+    #[test]
+    fn kind_lanes_split_completions() {
+        let m = Metrics::new();
+        assert!(m.snapshot().kinds.is_empty(), "no lanes before any completion");
+        m.on_complete(Duration::from_micros(10), Duration::from_micros(10), 2);
+        m.on_complete_threshold(Duration::from_micros(20), Duration::from_micros(20), false);
+        m.on_complete_threshold(Duration::from_micros(20), Duration::from_micros(20), true);
+        let s = m.snapshot();
+        assert_eq!(s.completed, 3, "kind lanes share the global counter");
+        assert_eq!(s.kinds.len(), 2);
+        assert_eq!(s.kinds[0].kind, "topk");
+        assert_eq!(s.kinds[0].completed, 1);
+        assert_eq!(s.kinds[0].truncated, 0);
+        assert_eq!(s.kinds[1].kind, "threshold");
+        assert_eq!(s.kinds[1].completed, 2);
+        assert_eq!(s.kinds[1].truncated, 1);
+        let text = s.report();
+        assert!(text.contains("kind threshold"), "{text}");
     }
 
     #[test]

@@ -65,16 +65,30 @@ pub struct RequestTiming {
     pub batch_size: usize,
 }
 
-/// A completed search: the ranked winners the request's `k` asked for.
+/// A completed search, for either query kind.
+///
+/// Top-k responses carry the ranked `min(k, rows)` winners and never set
+/// `truncated`. Threshold responses carry every row scoring at or above the
+/// requested threshold, rank-ordered and capped at the request's `limit`;
+/// `truncated` is the typed spill flag. A threshold query can legitimately
+/// match nothing — then `hits` is empty and `winner`/`score` degrade to
+/// `0` / `-inf`.
 #[derive(Debug, Clone)]
 pub struct SearchResponse {
-    /// Global winning row index (across all tiles) — the head of `hits`.
+    /// Global winning row index (across all tiles) — the head of `hits`,
+    /// or 0 when a threshold query matched nothing.
     pub winner: usize,
-    /// Winning score in the engine metric — the head of `hits`.
+    /// Winning score in the engine metric — the head of `hits`, or
+    /// `f64::NEG_INFINITY` when a threshold query matched nothing.
     pub score: f64,
-    /// Ranked winners, best first: `min(k, rows)` entries with global row
-    /// indices (the iterated-WTA-with-inhibition readout of §3.5).
+    /// Ranked winners, best first: `min(k, rows)` entries for top-k, the
+    /// bounded match set for threshold — global row indices either way
+    /// (the iterated-WTA-with-inhibition readout of §3.5).
     pub hits: Vec<SearchResult>,
+    /// Threshold queries only: true when the match set exceeded the
+    /// request's `limit` and was cut to the best `limit` rows. Always false
+    /// for top-k.
+    pub truncated: bool,
     /// Store epoch this search was served at: the whole batch scored one
     /// consistent snapshot of the (possibly live-updating) tile set.
     pub epoch: u64,

@@ -2,13 +2,14 @@
 //! the tile manager's batched top-k kernel; responses flow back over
 //! per-request channels with queue/execute timing attached.
 //!
-//! Each worker owns one [`QueryBlock`], one
-//! [`TileScratch`](super::tiles::TileScratch) and one
-//! [`BlockTopK`] for its whole lifetime, so the steady-state loop performs
-//! zero per-query heap allocations on the scoring side: queries are packed
-//! straight from the queued jobs into the reused block, scored through the
-//! tile×batch kernel, and only the per-response `hits` vector (the data
-//! handed back across the channel) is allocated.
+//! Each worker owns one [`QueryBlock`] per query kind, one
+//! [`TileScratch`](super::tiles::TileScratch), one [`BlockTopK`] and one
+//! [`BlockMatches`] for its whole lifetime, so the steady-state loop
+//! performs zero per-query heap allocations on the scoring side: queries
+//! are packed straight from the queued jobs into the reused blocks (a mixed
+//! batch is partitioned by [`QueryKind`]), scored through the tile×batch
+//! kernel, and only the per-response `hits` vector (the data handed back
+//! across the channel) is allocated.
 //!
 //! Alongside the search plane sits the *admin plane*
 //! ([`AmService::admin`]): live class-vector updates. An Update/Insert word
@@ -24,7 +25,7 @@ use std::time::{Duration, Instant};
 
 use crate::am::store::program_word_verified;
 use crate::am::write::WriteReport;
-use crate::am::{BlockTopK, QueryBlock, SearchResult};
+use crate::am::{BlockMatches, BlockTopK, QueryBlock, QueryKind, SearchResult};
 use crate::config::{CoordinatorConfig, CosimeConfig};
 use crate::util::sync::lock_recover;
 use crate::util::{BitVec, Rng};
@@ -36,7 +37,11 @@ use super::tiles::TileManager;
 
 struct Job {
     query: BitVec,
-    k: usize,
+    /// What the query asks for: ranked top-k or a bounded threshold scan.
+    kind: QueryKind,
+    /// Response-size bound: `k` for top-k (mirrors the kind), the match-set
+    /// `limit` for threshold.
+    limit: usize,
     reply: mpsc::SyncSender<SearchResponse>,
 }
 
@@ -57,6 +62,11 @@ struct Shared {
     /// batch is scored at its deepest k, so one unbounded request would tax
     /// every co-batched query.
     max_k_policy: usize,
+    /// Policy cap on a threshold query's match-set `limit`
+    /// ([`CoordinatorConfig::max_matches`]): a threshold selector costs
+    /// O(limit) maintenance per qualifying row, so unbounded requests would
+    /// tax the batch the same way deep k does.
+    max_matches_policy: usize,
     /// The serving policy this service was started with — read-only after
     /// start; exposed so frontends can advertise `max_batch`/`max_k` to
     /// clients (wire-level batching hints).
@@ -97,6 +107,7 @@ impl AmService {
             metrics: Metrics::new(),
             running: AtomicBool::new(true),
             max_k_policy: cfg.max_k.max(1),
+            max_matches_policy: cfg.max_matches.max(1),
             policy: cfg.clone(),
             write: Mutex::new(WritePath {
                 cfg: full.clone(),
@@ -167,7 +178,73 @@ impl AmService {
         }
         let (reply, rx) = mpsc::sync_channel(1);
         self.shared.metrics.on_submit();
-        match self.shared.batcher.submit(Job { query, k, reply }) {
+        match self.shared.batcher.submit(Job { query, kind: QueryKind::TopK(k), limit: k, reply })
+        {
+            Ok(()) => Ok(rx),
+            Err(e) => {
+                if e == SubmitError::Busy {
+                    self.shared.metrics.on_reject_busy();
+                }
+                Err(e)
+            }
+        }
+    }
+
+    /// Submit a threshold (range) query: the response's `hits` carries every
+    /// row scoring `>= threshold`, rank-ordered, capped at `limit` (with the
+    /// response's `truncated` flag set when the cap cut qualifying rows).
+    /// Fails fast with `Busy` under backpressure; rejected up front when the
+    /// engine substrate cannot rank beyond its winner (see
+    /// [`AmService::supports_threshold`]).
+    pub fn submit_threshold(
+        &self,
+        query: BitVec,
+        threshold: f64,
+        limit: usize,
+    ) -> Result<mpsc::Receiver<SearchResponse>, SubmitError> {
+        if query.len() != self.shared.tiles.dims() {
+            return Err(SubmitError::BadQuery(format!(
+                "query has {} bits, engine expects {}",
+                query.len(),
+                self.shared.tiles.dims()
+            )));
+        }
+        if limit == 0 {
+            return Err(SubmitError::BadQuery("limit must be at least 1".to_string()));
+        }
+        if !threshold.is_finite() {
+            return Err(SubmitError::BadQuery(format!(
+                "threshold must be finite, got {threshold}"
+            )));
+        }
+        // Policy gate, mirroring max_k: a threshold selector costs O(limit)
+        // insertion maintenance per qualifying row.
+        if limit > self.shared.max_matches_policy {
+            return Err(SubmitError::BadQuery(format!(
+                "limit={limit} exceeds the service's max_matches policy ({})",
+                self.shared.max_matches_policy
+            )));
+        }
+        // Capability gate: a single-winner substrate (e.g. a fixed-argmax
+        // XLA artifact) cannot enumerate a match set; reject here rather
+        // than failing inside a worker mid-batch. One atomic load, refreshed
+        // by every admin commit under the tile write lock.
+        if !self.shared.tiles.supports_threshold() {
+            return Err(SubmitError::BadQuery(
+                "engine does not support threshold queries (single-winner substrate)".to_string(),
+            ));
+        }
+        if !self.shared.running.load(Ordering::Acquire) {
+            return Err(SubmitError::Closed);
+        }
+        let (reply, rx) = mpsc::sync_channel(1);
+        self.shared.metrics.on_submit();
+        match self.shared.batcher.submit(Job {
+            query,
+            kind: QueryKind::Threshold(threshold),
+            limit,
+            reply,
+        }) {
             Ok(()) => Ok(rx),
             Err(e) => {
                 if e == SubmitError::Busy {
@@ -191,6 +268,18 @@ impl AmService {
         k: usize,
     ) -> Result<SearchResponse, SubmitError> {
         let rx = self.submit_topk(query, k)?;
+        rx.recv().map_err(|_| SubmitError::Closed)
+    }
+
+    /// Convenience: submit a threshold query and block for the bounded
+    /// match set.
+    pub fn search_threshold_blocking(
+        &self,
+        query: BitVec,
+        threshold: f64,
+        limit: usize,
+    ) -> Result<SearchResponse, SubmitError> {
+        let rx = self.submit_threshold(query, threshold, limit)?;
         rx.recv().map_err(|_| SubmitError::Closed)
     }
 
@@ -375,6 +464,12 @@ impl AmService {
         self.shared.max_k_policy.min(self.shared.tiles.max_k())
     }
 
+    /// Whether the live engine substrate can serve threshold queries (all
+    /// tiles can enumerate their match set, not just a single winner).
+    pub fn supports_threshold(&self) -> bool {
+        self.shared.tiles.supports_threshold()
+    }
+
     /// Stored row count (live; changes under admin traffic).
     pub fn rows(&self) -> usize {
         self.shared.tiles.rows()
@@ -405,47 +500,107 @@ impl AmService {
 fn worker_loop(shared: &Shared) {
     // Worker-lifetime buffers: the whole steady-state loop reuses these.
     let mut block = QueryBlock::new(shared.tiles.dims());
+    let mut tblock = QueryBlock::new(shared.tiles.dims());
     let mut scratch = shared.tiles.scratch();
     let mut out = BlockTopK::new();
+    let mut matches = BlockMatches::new();
+    // Per-job slot index into its kind's block (top-k and threshold queries
+    // are packed into separate blocks, in arrival order).
+    let mut slots: Vec<usize> = Vec::new();
     while let Some(batch) = shared.batcher.next_batch() {
         let now = Instant::now();
         shared.metrics.on_batch(batch.len());
-        // Mixed-k batches ride together: score once at the batch's deepest
-        // k, then truncate each response to its own request's k (the ranked
-        // prefix of a deeper selector is exactly the shallower result).
+        // Mixed batches ride together. Top-k jobs are scored once at the
+        // batch's deepest k, then each response truncates to its own k (the
+        // ranked prefix of a deeper selector is exactly the shallower
+        // result). Threshold jobs keep per-query selectors — each carries
+        // its own (threshold, limit) — so they batch without interfering.
         // lint: hot-path
         let mut max_k = 1usize;
         block.clear();
+        tblock.clear();
+        slots.clear();
         for pending in &batch {
-            // lint: allow(hot-path-alloc) -- QueryBlock::push copies into the
-            // worker-lifetime lane buffer; it only grows until the buffer has
-            // warmed to the deepest batch, then reuses it.
-            block.push(&pending.item.query);
-            max_k = max_k.max(pending.item.k);
+            match pending.item.kind {
+                QueryKind::TopK(k) => {
+                    slots.push(block.len());
+                    // lint: allow(hot-path-alloc) -- QueryBlock::push copies
+                    // into the worker-lifetime lane buffer; it only grows
+                    // until the buffer has warmed to the deepest batch, then
+                    // reuses it.
+                    block.push(&pending.item.query);
+                    max_k = max_k.max(k);
+                }
+                QueryKind::Threshold(_) => {
+                    slots.push(tblock.len());
+                    // lint: allow(hot-path-alloc) -- same warmed lane buffer.
+                    tblock.push(&pending.item.query);
+                }
+            }
         }
-        let epoch = shared.tiles.search_block(block.view(), max_k, &mut scratch, &mut out);
+        let epoch_topk = if !block.is_empty() {
+            shared.tiles.search_block(block.view(), max_k, &mut scratch, &mut out)
+        } else {
+            0
+        };
+        let epoch_thresh = if !tblock.is_empty() {
+            matches.reset(tblock.len(), 0.0, 0);
+            let mut ti = 0usize;
+            for pending in &batch {
+                if let QueryKind::Threshold(d) = pending.item.kind {
+                    matches.selectors_mut()[ti].reset(d, pending.item.limit);
+                    ti += 1;
+                }
+            }
+            shared.tiles.search_block_matches(tblock.view(), &mut scratch, &mut matches)
+        } else {
+            0
+        };
         // lint: end-hot-path
         let exec = now.elapsed();
         let batch_size = batch.len();
         for (qi, pending) in batch.into_iter().enumerate() {
             let queued = now.duration_since(pending.enqueued);
-            let k = pending.item.k;
-            shared.metrics.on_complete(queued, exec, k);
-            let ranked = out.query(qi);
-            let hits: Vec<SearchResult> = ranked.iter().take(k).cloned().collect();
-            // lint: allow(no-panic) -- non-empty by construction: the store
-            // refuses to delete its last row, submit_topk rejects k == 0, and
-            // search_block clamps k to the row count, so every selector holds
-            // at least one ranked hit.
-            let head = hits.first().expect("tile manager has rows");
             let timing = RequestTiming { queued, exec, batch_size };
-            let _ = pending.item.reply.send(SearchResponse {
-                winner: head.winner,
-                score: head.score,
-                hits,
-                epoch,
-                timing,
-            });
+            match pending.item.kind {
+                QueryKind::TopK(k) => {
+                    shared.metrics.on_complete(queued, exec, k);
+                    let ranked = out.query(slots[qi]);
+                    let hits: Vec<SearchResult> = ranked.iter().take(k).cloned().collect();
+                    // lint: allow(no-panic) -- non-empty by construction: the
+                    // store refuses to delete its last row, submit_topk
+                    // rejects k == 0, and search_block clamps k to the row
+                    // count, so every selector holds at least one ranked hit.
+                    let head = hits.first().expect("tile manager has rows");
+                    let _ = pending.item.reply.send(SearchResponse {
+                        winner: head.winner,
+                        score: head.score,
+                        hits,
+                        truncated: false,
+                        epoch: epoch_topk,
+                        timing,
+                    });
+                }
+                QueryKind::Threshold(_) => {
+                    let ti = slots[qi];
+                    let truncated = matches.truncated(ti);
+                    shared.metrics.on_complete_threshold(queued, exec, truncated);
+                    let hits: Vec<SearchResult> = matches.query(ti).to_vec();
+                    // A threshold query can legitimately match nothing.
+                    let (winner, score) = match hits.first() {
+                        Some(head) => (head.winner, head.score),
+                        None => (0, f64::NEG_INFINITY),
+                    };
+                    let _ = pending.item.reply.send(SearchResponse {
+                        winner,
+                        score,
+                        hits,
+                        truncated,
+                        epoch: epoch_thresh,
+                        timing,
+                    });
+                }
+            }
         }
     }
 }
@@ -554,6 +709,9 @@ mod tests {
             fn max_k(&self) -> usize {
                 1
             }
+            fn supports_threshold(&self) -> bool {
+                false
+            }
         }
         let mut r = rng(11);
         let words: Vec<BitVec> = (0..20).map(|_| BitVec::random(32, 0.5, &mut r)).collect();
@@ -569,10 +727,179 @@ mod tests {
             Err(SubmitError::BadQuery(msg)) => assert!(msg.contains("capability"), "{msg}"),
             other => panic!("expected BadQuery, got {other:?}"),
         }
+        // The same substrate cannot enumerate a match set either: threshold
+        // submissions are rejected up front, and the handle advertises it.
+        assert!(!svc.supports_threshold());
+        match svc.submit_threshold(BitVec::zeros(32), 1.0, 8) {
+            Err(SubmitError::BadQuery(msg)) => assert!(msg.contains("threshold"), "{msg}"),
+            other => panic!("expected BadQuery, got {other:?}"),
+        }
         // k = 1 still serves normally.
         let resp = svc.search_blocking(BitVec::zeros(32)).unwrap();
         assert_eq!(resp.hits.len(), 1);
         svc.shutdown();
+    }
+
+    /// Threshold responses through the batched service must equal the flat
+    /// engine's filtered-and-ranked score scan, entries and spill flag both.
+    #[test]
+    fn threshold_responses_match_flat_filter_reference() {
+        let cfg = CoordinatorConfig::default();
+        let (svc, words) = service(90, 64, &cfg);
+        assert!(svc.supports_threshold());
+        let reference = DigitalExactEngine::new(words);
+        let mut r = rng(21);
+        let mut scores = Vec::new();
+        let mut saw_nonempty = 0usize;
+        let mut saw_truncated = 0usize;
+        for _ in 0..40 {
+            let q = BitVec::random(64, 0.5, &mut r);
+            reference.scores_into(&q, &mut scores);
+            let (lo, hi) = scores.iter().fold((f64::MAX, f64::MIN), |(lo, hi), &s| {
+                (lo.min(s), hi.max(s))
+            });
+            // Sweep thresholds from below-min (match everything) to
+            // above-max (match nothing).
+            let d = lo + (hi - lo + 1.0) * (r.f64() * 1.3 - 0.1);
+            let limit = 1 + r.below(20);
+            let want = reference.search_matches(&q, d, limit);
+            let resp = svc.search_threshold_blocking(q, d, limit).unwrap();
+            assert_eq!(resp.hits, want.as_slice(), "d={d} limit={limit}");
+            assert_eq!(resp.truncated, want.truncated(), "d={d} limit={limit}");
+            match want.best() {
+                Some(head) => {
+                    assert_eq!(resp.winner, head.winner);
+                    assert_eq!(resp.score, head.score);
+                    saw_nonempty += 1;
+                }
+                None => {
+                    assert_eq!(resp.winner, 0);
+                    assert_eq!(resp.score, f64::NEG_INFINITY);
+                }
+            }
+            if resp.truncated {
+                saw_truncated += 1;
+            }
+        }
+        assert!(saw_nonempty > 0, "sweep never produced a match");
+        assert!(saw_truncated > 0, "sweep never spilled a bound");
+        let m = svc.metrics();
+        let lane = m.kinds.iter().find(|l| l.kind == "threshold").expect("threshold lane");
+        assert_eq!(lane.completed, 40);
+        assert_eq!(lane.truncated, saw_truncated as u64);
+        svc.shutdown();
+    }
+
+    /// Top-k and threshold queries riding the same batches must each come
+    /// back exact — the worker partitions the mixed batch by kind.
+    #[test]
+    fn concurrent_mixed_kind_requests_each_served_exactly() {
+        let cfg = CoordinatorConfig {
+            max_batch: 32,
+            max_wait_us: 200,
+            queue_depth: 2048,
+            workers: 3,
+            ..CoordinatorConfig::default()
+        };
+        let (svc, words) = service(120, 64, &cfg);
+        let reference = DigitalExactEngine::new(words);
+        let errors = std::sync::atomic::AtomicUsize::new(0);
+        std::thread::scope(|s| {
+            for t in 0..6u64 {
+                let svc = svc.clone();
+                let reference = &reference;
+                let errors = &errors;
+                s.spawn(move || {
+                    let mut r = rng(700 + t);
+                    let mut scores = Vec::new();
+                    for i in 0..40 {
+                        let q = BitVec::random(64, 0.5, &mut r);
+                        if (t as usize + i) % 2 == 0 {
+                            let k = 1 + r.below(6);
+                            match svc.search_topk_with_retry(q.clone(), k, 10) {
+                                Ok(resp) => {
+                                    let want = reference.search_topk(&q, k);
+                                    if resp.hits != want || resp.truncated {
+                                        errors.fetch_add(1, Ordering::Relaxed);
+                                    }
+                                }
+                                Err(_) => {
+                                    errors.fetch_add(1, Ordering::Relaxed);
+                                }
+                            }
+                        } else {
+                            reference.scores_into(&q, &mut scores);
+                            let hi = scores.iter().fold(f64::MIN, |a, &s| a.max(s));
+                            let d = hi - (r.f64() * 8.0);
+                            let limit = 1 + r.below(12);
+                            let want = reference.search_matches(&q, d, limit);
+                            // Threshold submissions share the retry shape.
+                            let mut resp = svc.search_threshold_blocking(q.clone(), d, limit);
+                            let mut tries = 0;
+                            while matches!(resp, Err(SubmitError::Busy)) && tries < 10 {
+                                tries += 1;
+                                std::thread::sleep(Duration::from_micros(100));
+                                resp = svc.search_threshold_blocking(q.clone(), d, limit);
+                            }
+                            match resp {
+                                Ok(resp) => {
+                                    if resp.hits != want.as_slice()
+                                        || resp.truncated != want.truncated()
+                                    {
+                                        errors.fetch_add(1, Ordering::Relaxed);
+                                    }
+                                }
+                                Err(_) => {
+                                    errors.fetch_add(1, Ordering::Relaxed);
+                                }
+                            }
+                        }
+                    }
+                });
+            }
+        });
+        assert_eq!(errors.load(Ordering::Relaxed), 0, "every mixed-kind response exact");
+        let m = svc.metrics();
+        assert_eq!(m.completed, 240);
+        let by_kind: u64 = m.kinds.iter().map(|l| l.completed).sum();
+        assert_eq!(by_kind, 240, "every completion lands in a kind lane");
+        assert_eq!(m.kinds.len(), 2, "both kind lanes active");
+        svc.shutdown();
+    }
+
+    /// Threshold gate battery: zero limit, non-finite thresholds and
+    /// beyond-policy limits are typed rejections before any queueing.
+    #[test]
+    fn threshold_gates_reject_bad_submissions() {
+        let cfg = CoordinatorConfig { max_matches: 16, ..CoordinatorConfig::default() };
+        let (svc, _) = service(30, 64, &cfg);
+        match svc.submit_threshold(BitVec::zeros(64), 1.0, 0) {
+            Err(SubmitError::BadQuery(msg)) => assert!(msg.contains("limit"), "{msg}"),
+            other => panic!("expected BadQuery, got {other:?}"),
+        }
+        match svc.submit_threshold(BitVec::zeros(64), f64::NAN, 4) {
+            Err(SubmitError::BadQuery(msg)) => assert!(msg.contains("finite"), "{msg}"),
+            other => panic!("expected BadQuery, got {other:?}"),
+        }
+        match svc.submit_threshold(BitVec::zeros(64), 1.0, 17) {
+            Err(SubmitError::BadQuery(msg)) => assert!(msg.contains("max_matches"), "{msg}"),
+            other => panic!("expected BadQuery, got {other:?}"),
+        }
+        match svc.submit_threshold(BitVec::zeros(32), 1.0, 4) {
+            Err(SubmitError::BadQuery(msg)) => assert!(msg.contains("64"), "{msg}"),
+            other => panic!("expected BadQuery, got {other:?}"),
+        }
+        // At the cap it still serves (threshold below min matches all rows,
+        // so the bound spills and the typed flag comes back set).
+        let resp = svc.search_threshold_blocking(BitVec::zeros(64), f64::MIN, 16).unwrap();
+        assert_eq!(resp.hits.len(), 16);
+        assert!(resp.truncated, "30 rows through a 16-limit must truncate");
+        let svc2 = svc.clone();
+        svc.shutdown();
+        assert!(matches!(
+            svc2.submit_threshold(BitVec::zeros(64), 1.0, 4),
+            Err(SubmitError::Closed)
+        ));
     }
 
     #[test]

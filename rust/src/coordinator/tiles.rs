@@ -29,12 +29,15 @@
 //! cannot mutate in place (analog dies, fixed XLA artifacts) fall back to
 //! rebuilding just the affected tile through the stored factory.
 
-use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::RwLock;
 
 use anyhow::{bail, Result};
 
-use crate::am::{AmEngine, BlockTopK, QueriesRef, QueryBlock, SearchResult, SearchScratch};
+use crate::am::{
+    AmEngine, BlockMatches, BlockSink, BlockTopK, QueriesRef, QueryBlock, SearchResult,
+    SearchScratch,
+};
 use crate::util::{par, BitVec};
 
 /// Engine constructor used to build tiles and to rebuild one tile when its
@@ -111,6 +114,11 @@ pub struct TileManager {
     /// a stale value behind). Lets the submit hot path gate on engine
     /// capability with one atomic load instead of a lock + O(tiles) fold.
     max_k_cache: AtomicUsize,
+    /// Cached all-fold of the tile engines' `supports_threshold`, maintained
+    /// exactly like `max_k_cache`: refreshed by every commit under the write
+    /// lock, read lock-free by the submit gate. Threshold queries are served
+    /// only while *every* tile can enumerate its match set.
+    threshold_cache: AtomicBool,
 }
 
 /// One tile×batch work slot: a query range against one tile, with its own
@@ -121,11 +129,19 @@ struct TileSlot {
     q1: usize,
     scratch: SearchScratch,
     out: BlockTopK,
+    matches: BlockMatches,
 }
 
 impl TileSlot {
     fn new() -> Self {
-        TileSlot { tile: 0, q0: 0, q1: 0, scratch: SearchScratch::new(), out: BlockTopK::new() }
+        TileSlot {
+            tile: 0,
+            q0: 0,
+            q1: 0,
+            scratch: SearchScratch::new(),
+            out: BlockTopK::new(),
+            matches: BlockMatches::new(),
+        }
     }
 }
 
@@ -164,6 +180,7 @@ impl TileManager {
             remaining = rest;
         }
         let max_k = tiles.iter().map(|t| t.max_k()).min().unwrap_or(usize::MAX);
+        let thresholds = tiles.iter().all(|t| t.supports_threshold());
         Ok(TileManager {
             inner: RwLock::new(TileSet { tiles, words: tile_words, offsets, total_rows }),
             factory: Box::new(factory),
@@ -171,6 +188,7 @@ impl TileManager {
             dims,
             epoch: AtomicU64::new(0),
             max_k_cache: AtomicUsize::new(max_k),
+            threshold_cache: AtomicBool::new(thresholds),
         })
     }
 
@@ -204,6 +222,13 @@ impl TileManager {
         self.max_k_cache.load(Ordering::Acquire)
     }
 
+    /// Whether every tile can enumerate threshold match sets (false as soon
+    /// as any tile is an argmax-only artifact, e.g. XLA). Same lock-free
+    /// maintenance discipline as [`TileManager::max_k`].
+    pub fn supports_threshold(&self) -> bool {
+        self.threshold_cache.load(Ordering::Acquire)
+    }
+
     /// Flat copy of every stored word in global row order — the persistence
     /// path of a live server (consistent: taken under the read lock).
     pub fn snapshot_words(&self) -> Vec<BitVec> {
@@ -228,6 +253,8 @@ impl TileManager {
     fn commit(&self, set: &TileSet) -> Commit {
         let max_k = set.tiles.iter().map(|t| t.max_k()).min().unwrap_or(usize::MAX);
         self.max_k_cache.store(max_k, Ordering::Release);
+        let thresholds = set.tiles.iter().all(|t| t.supports_threshold());
+        self.threshold_cache.store(thresholds, Ordering::Release);
         Commit {
             epoch: self.epoch.fetch_add(1, Ordering::AcqRel) + 1,
             rows: set.total_rows,
@@ -408,7 +435,12 @@ impl TileManager {
         if n_tiles == 1 || queries.len() == 1 || threads <= 1 {
             let slot = &mut scratch.slots[0];
             for (t, tile) in set.tiles.iter().enumerate() {
-                tile.search_block(queries, set.offsets[t], &mut slot.scratch, out.selectors_mut());
+                tile.search_block(
+                    queries,
+                    set.offsets[t],
+                    &mut slot.scratch,
+                    BlockSink::TopK(out.selectors_mut()),
+                );
             }
             return epoch;
         }
@@ -444,7 +476,7 @@ impl TileManager {
                     sub,
                     set.offsets[slot.tile],
                     &mut slot.scratch,
-                    slot.out.selectors_mut(),
+                    BlockSink::TopK(slot.out.selectors_mut()),
                 );
             }
         });
@@ -457,6 +489,123 @@ impl TileManager {
         }
         // lint: end-hot-path
         epoch
+    }
+
+    /// The hierarchical batched *threshold* kernel: the range-query sibling
+    /// of [`TileManager::search_block`]. The caller pre-resets `out` with one
+    /// [`Matches`](crate::am::Matches) selector per query carrying that
+    /// query's threshold and bound; this fills them with every stored row
+    /// scoring `>= threshold` (best `bound` kept, typed truncation flag when
+    /// a match set spills). Returns the epoch of the snapshot served.
+    ///
+    /// Exactness through the hierarchy: each tile enumerates its local match
+    /// set under the *global* bound, and [`Matches::merge_from`]
+    /// (crate::am::Matches::merge_from) guarantees the best-`bound` of
+    /// per-tile best-`bound` sets equals the flat best-`bound` — with the
+    /// truncation flag raised iff the flat match set exceeds the bound,
+    /// whether the spill happened inside a tile or only at the merge.
+    pub fn search_block_matches(
+        &self,
+        queries: QueriesRef<'_>,
+        scratch: &mut TileScratch,
+        out: &mut BlockMatches,
+    ) -> u64 {
+        assert_eq!(queries.dims(), self.dims, "query dims mismatch");
+        assert_eq!(out.queries(), queries.len(), "selector count mismatch");
+        // lint: allow(no-panic) -- a poisoned epoch lock means a mutator panicked mid-commit; serving or mutating a possibly-torn store would silently corrupt results, so propagating the panic is the correct policy.
+        let guard = self.inner.read().unwrap();
+        let set: &TileSet = &guard;
+        let epoch = self.epoch.load(Ordering::Acquire);
+        if queries.is_empty() {
+            return epoch;
+        }
+
+        let n_tiles = set.tiles.len();
+        let threads = par::default_threads();
+        if scratch.slots.is_empty() {
+            scratch.slots.push(TileSlot::new());
+        }
+
+        // Serial fast path: offer every tile's rows straight into the global
+        // selectors (Matches::offer *is* the merge, spill flag included).
+        // lint: hot-path
+        if n_tiles == 1 || queries.len() == 1 || threads <= 1 {
+            let slot = &mut scratch.slots[0];
+            for (t, tile) in set.tiles.iter().enumerate() {
+                tile.search_block(
+                    queries,
+                    set.offsets[t],
+                    &mut slot.scratch,
+                    BlockSink::Matches(out.selectors_mut()),
+                );
+            }
+            return epoch;
+        }
+        // lint: end-hot-path
+
+        // Parallel path: the same tile×batch slot grid as top-k, with each
+        // slot selector inheriting its query's threshold/bound from `out`.
+        let segments = threads.div_ceil(n_tiles).clamp(1, queries.len());
+        let needed = n_tiles * segments;
+        while scratch.slots.len() < needed {
+            scratch.slots.push(TileSlot::new());
+        }
+        // lint: hot-path
+        let mut i = 0;
+        for tile in 0..n_tiles {
+            for seg in 0..segments {
+                let slot = &mut scratch.slots[i];
+                i += 1;
+                slot.tile = tile;
+                slot.q0 = seg * queries.len() / segments;
+                slot.q1 = (seg + 1) * queries.len() / segments;
+                slot.matches.reset(slot.q1 - slot.q0, 0.0, 0);
+                for (j, sel) in slot.matches.selectors_mut().iter_mut().enumerate() {
+                    let src = &out.selectors()[slot.q0 + j];
+                    sel.reset(src.threshold(), src.bound());
+                }
+            }
+        }
+        let slots = &mut scratch.slots[..needed];
+        par::par_for_each_mut(slots, |_, slot| {
+            if slot.q0 < slot.q1 {
+                let sub = queries.slice(slot.q0, slot.q1);
+                set.tiles[slot.tile].search_block(
+                    sub,
+                    set.offsets[slot.tile],
+                    &mut slot.scratch,
+                    BlockSink::Matches(slot.matches.selectors_mut()),
+                );
+            }
+        });
+        // Hierarchical merge: bounded per-slot match sets into the global
+        // per-query selectors; truncation flags OR through.
+        for slot in slots.iter() {
+            for (j, sel) in slot.matches.selectors().iter().enumerate() {
+                out.selectors_mut()[slot.q0 + j].merge_from(sel);
+            }
+        }
+        // lint: end-hot-path
+        epoch
+    }
+
+    /// Global threshold match set for one query (convenience; allocates its
+    /// own buffers). Returns the bounded, rank-ordered matches and whether
+    /// the set was truncated at `bound`.
+    pub fn search_matches(
+        &self,
+        query: &BitVec,
+        threshold: f64,
+        bound: usize,
+    ) -> (Vec<SearchResult>, bool) {
+        assert_eq!(query.len(), self.dims, "query dims mismatch");
+        let mut block = QueryBlock::new(self.dims);
+        block.push(query);
+        let mut scratch = self.scratch();
+        let mut out = BlockMatches::new();
+        out.reset(1, threshold, bound);
+        self.search_block_matches(block.view(), &mut scratch, &mut out);
+        (out.query(0).to_vec(), out.truncated(0))
     }
 
     /// Global top-k for one query (convenience; allocates its own buffers).
@@ -618,6 +767,119 @@ mod tests {
             }
             Ok(())
         });
+    }
+
+    /// Threshold sibling of the top-k invariant: the hierarchically merged,
+    /// bounded match set equals the flat engine's match set — entries,
+    /// order, and truncation flag — for every tile capacity, including
+    /// spills that only materialize at the merge (no tile locally truncates
+    /// but the union exceeds the bound).
+    #[test]
+    fn tiled_threshold_equals_flat_matches_property() {
+        prop::check("tiled threshold == flat matches", 30, 12, |r| {
+            let rows = 2 + r.below(60);
+            let dims = 16 + 8 * r.below(8);
+            let cap = 1 + r.below(rows);
+            let hamming = r.bool(0.5);
+            let words: Vec<BitVec> =
+                (0..rows).map(|_| BitVec::random(dims, 0.2 + 0.6 * r.f64(), r)).collect();
+            let factory = move |w: Vec<BitVec>| -> Result<Box<dyn AmEngine>> {
+                if hamming {
+                    Ok(Box::new(HammingEngine::new(w)))
+                } else {
+                    Ok(Box::new(DigitalExactEngine::new(w)))
+                }
+            };
+            let flat = factory(words.clone()).unwrap();
+            let tm = TileManager::build(words, cap, factory).map_err(|e| e.to_string())?;
+            crate::prop_assert!(tm.supports_threshold(), "digital tiles serve thresholds");
+
+            let queries: Vec<BitVec> =
+                (0..2 + r.below(6)).map(|_| BitVec::random(dims, 0.5, r)).collect();
+            let bound = 1 + r.below(rows + 3);
+            // Per-query thresholds drawn from each query's own score range so
+            // match sets are non-trivially sized (empty and full included).
+            let block = QueryBlock::pack(&queries, dims);
+            let mut out = BlockMatches::new();
+            out.reset(queries.len(), 0.0, bound);
+            let mut thresholds = Vec::new();
+            let mut scores = Vec::new();
+            for (qi, q) in queries.iter().enumerate() {
+                flat.scores_into(q, &mut scores);
+                let lo = scores.iter().cloned().fold(f64::INFINITY, f64::min);
+                let hi = scores.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+                let d = lo + (hi - lo + 1.0) * (r.f64() * 1.3 - 0.1);
+                thresholds.push(d);
+                out.selectors_mut()[qi].reset(d, bound);
+            }
+            let mut scratch = tm.scratch();
+            tm.search_block_matches(block.view(), &mut scratch, &mut out);
+            for (qi, q) in queries.iter().enumerate() {
+                let want = flat.search_matches(q, thresholds[qi], bound);
+                crate::prop_assert!(
+                    out.query(qi) == want.as_slice(),
+                    "match set diverges (q {qi}, cap {cap}, bound {bound}): {:?} vs {:?}",
+                    out.query(qi),
+                    want.as_slice()
+                );
+                crate::prop_assert!(
+                    out.truncated(qi) == want.truncated(),
+                    "truncation flag diverges (q {qi}, cap {cap}, bound {bound})"
+                );
+                // Convenience single-query path agrees with the block path.
+                let (single, trunc) = tm.search_matches(q, thresholds[qi], bound);
+                crate::prop_assert!(
+                    single.as_slice() == want.as_slice() && trunc == want.truncated(),
+                    "single-query convenience diverges"
+                );
+            }
+            Ok(())
+        });
+    }
+
+    /// The threshold capability cache tracks tile composition across
+    /// commits, exactly like `max_k`.
+    #[test]
+    fn threshold_capability_cache_follows_commits() {
+        struct ArgmaxOnly(DigitalExactEngine);
+        impl AmEngine for ArgmaxOnly {
+            fn name(&self) -> &str {
+                "argmax-only"
+            }
+            fn metric(&self) -> crate::am::Metric {
+                self.0.metric()
+            }
+            fn rows(&self) -> usize {
+                self.0.rows()
+            }
+            fn dims(&self) -> usize {
+                self.0.dims()
+            }
+            fn scores_into(&self, query: &BitVec, out: &mut Vec<f64>) {
+                self.0.scores_into(query, out)
+            }
+            fn supports_threshold(&self) -> bool {
+                false
+            }
+        }
+        let mut r = rng(29);
+        let words: Vec<BitVec> = (0..6).map(|_| BitVec::random(32, 0.5, &mut r)).collect();
+        let tm = TileManager::build(words, 3, |w| {
+            Ok(Box::new(ArgmaxOnly(DigitalExactEngine::new(w))) as Box<dyn AmEngine>)
+        })
+        .unwrap();
+        assert!(!tm.supports_threshold(), "argmax-only tiles cannot serve thresholds");
+        let digital = TileManager::build(
+            (0..6).map(|_| BitVec::random(32, 0.5, &mut r)).collect(),
+            3,
+            digital_factory,
+        )
+        .unwrap();
+        assert!(digital.supports_threshold());
+        // Commits keep the cache fresh.
+        let w = BitVec::random(32, 0.5, &mut r);
+        digital.update_row(0, &w).unwrap();
+        assert!(digital.supports_threshold());
     }
 
     #[test]

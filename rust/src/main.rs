@@ -32,7 +32,7 @@
 //!             non-zero exit when anything fires)
 //!
 //! Common flags: --results DIR, --seed N, --subsample F (dataset fraction),
-//! --trials N (Monte Carlo), --engine digital|analog|xla.
+//! --trials N (Monte Carlo), --engine digital|analog|xla|multibit.
 //!
 //! Kernel dispatch: the popcount kernel path (scalar/avx2/avx512/neon) is
 //! resolved once at startup from `COSIME_KERNEL`, falling back to the
@@ -123,7 +123,7 @@ fn print_usage() {
          repro:  fig1 fig2 fig4a fig4b fig6 fig7 fig8 fig9 table1 table2 all\n\
          system: search serve route hdc live artifacts bench lint\n\n\
          flags:  --results DIR  --seed N  --subsample F  --trials N\n\
-                 --engine digital|analog|xla  --rows N --dims N --queries N --k N\n\
+                 --engine digital|analog|xla|multibit  --rows N --dims N --queries N --k N\n\
                  --snapshot PATH (hdc: save trained AM; serve: warm-start from it)\n\
                  --listen ADDR --shards S --io threaded|eventloop --duration SECS\n\
                  --config FILE (serve: TCP frontend; drive it with\n\
@@ -161,11 +161,14 @@ fn run_all(sub: f64, trials: usize, results: Option<&str>) -> Result<()> {
     repro::fig9::run_bc(results)
 }
 
-/// Build an engine per --engine over the given words.
+/// Build an engine per --engine over the given words. `multibit` packs the
+/// words into 2-bit cell planes by default; the `[engine] bits` config key
+/// selects 4-bit cells.
 fn build_engine(kind: &str, words: Vec<BitVec>, seed: u64) -> Result<Box<dyn AmEngine>> {
     let cfg = CosimeConfig::default();
     match kind {
         "digital" => Ok(Box::new(DigitalExactEngine::new(words))),
+        "multibit" => Ok(Box::new(cosime::am::MultiBitEngine::new(words, cfg.engine.bits))),
         "analog" => {
             let mut r = rng(seed);
             Ok(Box::new(cosime::am::analog::AnalogCosimeEngine::new(&cfg, words, &mut r)))

@@ -31,7 +31,10 @@ use std::time::{Duration, Instant};
 use anyhow::{bail, ensure, Context, Result};
 
 use crate::am::kernel::simd::{self, KernelImpl, KernelPath};
-use crate::am::{AmEngine, BlockTopK, DigitalExactEngine, QueryBlock, SearchScratch};
+use crate::am::{
+    AmEngine, BlockMatches, BlockSink, BlockTopK, DigitalExactEngine, MultiBitEngine, QueryBlock,
+    SearchScratch,
+};
 use crate::config::{CosimeConfig, IoMode};
 use crate::server::{Client, CosimeServer, ShardRouter};
 use crate::util::bench::{Bench, BenchResult};
@@ -168,11 +171,13 @@ fn kernel_bench_json(dims_grid: &[usize], rows_grid: &[usize], quick: bool) -> R
                 }
             }
 
-            // Fused engine path (selectors included), active kernel only.
+            // Fused engine paths (selectors included), active kernel only:
+            // the 1-bit top-k block kernel, its threshold sibling, and the
+            // multi-bit (2/4-bit plane) engines on both query kinds.
             if rows_n <= ENGINE_ROWS_CAP {
                 let words: Vec<BitVec> =
                     (0..rows_n).map(|_| BitVec::random(dims, 0.5, &mut r)).collect();
-                let engine = DigitalExactEngine::new(words);
+                let engine = DigitalExactEngine::new(words.clone());
                 let queries: Vec<BitVec> =
                     (0..8).map(|_| BitVec::random(dims, 0.5, &mut r)).collect();
                 let block = QueryBlock::pack(&queries, dims);
@@ -186,12 +191,75 @@ fn kernel_bench_json(dims_grid: &[usize], rows_grid: &[usize], quick: bool) -> R
                 );
                 let res = bench.bench_gbps(&name, elems * 8.0, bytes, || {
                     out.reset(8, 10);
-                    engine.search_block(block.view(), 0, &mut scratch, out.selectors_mut());
+                    engine.search_block(
+                        block.view(),
+                        0,
+                        &mut scratch,
+                        BlockSink::TopK(out.selectors_mut()),
+                    );
                     out.query(0)[0].winner
                 });
                 let mut extra = shape.clone();
                 extra.push(("path", Json::str(active.path().as_str())));
+                extra.push(("kind", Json::str("topk")));
                 results.push(result_json(res, extra));
+
+                // Threshold kind: same traversal, Matches collector. The
+                // threshold sits near the top of the score range so the
+                // match sets stay small (the collector cost, not the scan,
+                // is what differs between kinds).
+                let d_thresh = (dims as f64) * 0.45;
+                let mut matches = BlockMatches::new();
+                let name = format!(
+                    "search_threshold/{}/d{}/r{}/q8/b64",
+                    active.path().as_str(),
+                    dims,
+                    rows_n
+                );
+                let res = bench.bench_gbps(&name, elems * 8.0, bytes, || {
+                    matches.reset(8, d_thresh, 64);
+                    engine.search_block(
+                        block.view(),
+                        0,
+                        &mut scratch,
+                        BlockSink::Matches(matches.selectors_mut()),
+                    );
+                    matches.queries()
+                });
+                let mut extra = shape.clone();
+                extra.push(("path", Json::str(active.path().as_str())));
+                extra.push(("kind", Json::str("threshold")));
+                results.push(result_json(res, extra));
+
+                // Multi-bit planes: 2- and 4-bit cells through the fused
+                // multi-plane AND+POPCNT path (one dot_rows pass per plane
+                // pair, so bytes scale with the plane count).
+                for bits in [2usize, 4] {
+                    let mb = MultiBitEngine::new(words.clone(), bits);
+                    let mb_bytes = (rows_n * dims.div_ceil(bits).div_ceil(64) * 8 * bits) as f64;
+                    let name = format!(
+                        "multibit{}_block/{}/d{}/r{}/q8/k10",
+                        bits,
+                        active.path().as_str(),
+                        dims,
+                        rows_n
+                    );
+                    let res = bench.bench_gbps(&name, elems * 8.0, mb_bytes, || {
+                        out.reset(8, 10);
+                        mb.search_block(
+                            block.view(),
+                            0,
+                            &mut scratch,
+                            BlockSink::TopK(out.selectors_mut()),
+                        );
+                        out.query(0)[0].winner
+                    });
+                    let mut extra = shape.clone();
+                    extra.push(("path", Json::str(active.path().as_str())));
+                    extra.push(("kind", Json::str("topk")));
+                    extra.push(("bits", Json::num(bits as f64)));
+                    results.push(result_json(res, extra));
+                }
             }
         }
     }
@@ -371,6 +439,20 @@ pub fn validate_kernel_json(j: &Json) -> Result<()> {
         want_pos_f64(e, "p99_ns", &what)?;
         want_pos_f64(e, "gb_per_s", &what)?;
         want_pos_f64(e, "melems_per_s", &what)?;
+        // Query-family rows (engine-level cases): optional kind tag, and a
+        // plane count on multi-bit rows.
+        if let Some(kind) = e.get("kind") {
+            let kind = kind.as_str().with_context(|| format!("{what}.kind must be a string"))?;
+            ensure!(
+                kind == "topk" || kind == "threshold",
+                "{what}.kind must be topk or threshold, got \"{kind}\""
+            );
+        }
+        if let Some(bits) = e.get("bits") {
+            let bits =
+                bits.as_usize().with_context(|| format!("{what}.bits must be an integer"))?;
+            ensure!(bits == 2 || bits == 4, "{what}.bits must be 2 or 4, got {bits}");
+        }
     }
     let speedups = j.get("speedup").and_then(Json::as_arr).context("speedup must be an array")?;
     if !placeholder {

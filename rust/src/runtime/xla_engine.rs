@@ -9,7 +9,7 @@
 
 use anyhow::{anyhow, Result};
 
-use crate::am::{AmEngine, Metric, QueriesRef, SearchResult, SearchScratch, TopK};
+use crate::am::{AmEngine, BlockSink, Metric, QueriesRef, SearchResult, SearchScratch};
 use crate::util::BitVec;
 
 use super::service::RuntimeHandle;
@@ -130,6 +130,12 @@ impl AmEngine for XlaAmEngine {
         1
     }
 
+    /// The argmax readout cannot enumerate a match set, so threshold
+    /// queries are routed to digital engines by the capability gate.
+    fn supports_threshold(&self) -> bool {
+        false
+    }
+
     fn search(&self, query: &BitVec) -> SearchResult {
         self.run_batch(std::slice::from_ref(query)).expect("xla execute")[0].clone()
     }
@@ -153,9 +159,17 @@ impl AmEngine for XlaAmEngine {
         queries: QueriesRef<'_>,
         base: usize,
         _scratch: &mut SearchScratch,
-        out: &mut [TopK],
+        out: BlockSink<'_>,
     ) {
-        crate::am::kernel::check_block(queries, out, self.dims);
+        crate::am::kernel::check_block(queries, out.len(), self.dims);
+        let out = match out {
+            BlockSink::TopK(sels) => sels,
+            BlockSink::Matches(_) => panic!(
+                "{}: the search artifact returns only the argmax; threshold queries \
+                 require a digital engine",
+                self.name
+            ),
+        };
         assert!(
             out.iter().all(|sel| sel.k() <= 1),
             "{}: the search artifact returns only the argmax; k > 1 requires a digital engine",

@@ -21,8 +21,8 @@ use anyhow::{bail, Context, Result};
 use crate::util::BitVec;
 
 use super::protocol::{
-    self, Op, WireAdminOp, WireAdminResponse, WireError, WireHealth, WireHit, WireMetrics,
-    WireSearchResponse,
+    self, Op, WireAdminOp, WireAdminResponse, WireError, WireHealth, WireHit, WireMatchList,
+    WireMetrics, WireSearchResponse, WireThresholdResponse,
 };
 
 /// Default cap on response frames the client will accept. Deliberately far
@@ -145,6 +145,41 @@ impl Client {
         if decoded.results.len() != queries.len() {
             bail!(
                 "server answered {} result lists for {} queries",
+                decoded.results.len(),
+                queries.len()
+            );
+        }
+        Ok(decoded)
+    }
+
+    /// One threshold search (protocol v3): `(epoch, bounded match list)` —
+    /// every row scoring `>= threshold`, best first, capped at `limit`,
+    /// with the per-query truncation flag on the list.
+    pub fn search_threshold(
+        &mut self,
+        query: &BitVec,
+        threshold: f64,
+        limit: usize,
+    ) -> Result<(u64, WireMatchList)> {
+        let mut resp = self.search_threshold_batch(std::slice::from_ref(query), threshold, limit)?;
+        debug_assert_eq!(resp.results.len(), 1);
+        Ok((resp.epoch, resp.results.pop().unwrap_or_default()))
+    }
+
+    /// Batched threshold search (protocol v3): one frame carrying
+    /// `queries.len()` queries, one bounded match list back per query.
+    pub fn search_threshold_batch(
+        &mut self,
+        queries: &[BitVec],
+        threshold: f64,
+        limit: usize,
+    ) -> Result<WireThresholdResponse> {
+        let payload = protocol::encode_threshold_request(queries, threshold, limit);
+        let resp = self.round_trip(Op::SearchThreshold, &payload, Op::SearchThresholdOk)?;
+        let decoded = protocol::decode_threshold_response(&resp)?;
+        if decoded.results.len() != queries.len() {
+            bail!(
+                "server answered {} match lists for {} queries",
                 decoded.results.len(),
                 queries.len()
             );

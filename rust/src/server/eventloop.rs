@@ -42,16 +42,17 @@ use std::sync::atomic::Ordering;
 use std::sync::Arc;
 use std::time::Duration;
 
-use super::protocol::{self, ErrorCode, Op, WireError, HEADER_LEN, MAGIC};
-use super::tcp::{handle_frame, Handled, Shared};
+use super::protocol::{self, ErrorCode, Op, WireError, WireMatchList, HEADER_LEN, MAGIC};
+use super::tcp::{handle_frame, Handled, SearchKind, Shared};
 use crate::coordinator::backend::Ticket;
 
 /// One queued reply (request order).
 enum Pending {
     /// Finished frame: negotiated version, opcode, payload.
     Done(u8, Op, Vec<u8>),
-    /// Search still in flight.
-    Search(u8, Ticket),
+    /// Search still in flight, tagged with the response layout its query
+    /// kind calls for.
+    Search(u8, SearchKind, Ticket),
     /// Farewell error frame; once written, the connection closes.
     Fatal(Vec<u8>),
 }
@@ -195,7 +196,7 @@ impl Conn {
             let (version, handled) = handle_frame(shared, version, op_byte, flags, &payload);
             self.inflight.push_back(match handled {
                 Handled::Immediate(op, bytes) => Pending::Done(version, op, bytes),
-                Handled::Search(ticket) => Pending::Search(version, ticket),
+                Handled::Search(kind, ticket) => Pending::Search(version, kind, ticket),
             });
             progress = true;
         }
@@ -226,17 +227,33 @@ impl Conn {
                     self.closing = true;
                     progress = true;
                 }
-                Pending::Search(version, mut ticket) => match ticket.poll() {
+                Pending::Search(version, kind, mut ticket) => match ticket.poll() {
                     Ok(None) => {
                         // Head still in flight: put it back and stop — the
                         // replies behind it must wait their turn.
-                        self.inflight.push_front(Pending::Search(version, ticket));
+                        self.inflight.push_front(Pending::Search(version, kind, ticket));
                         break;
                     }
                     Ok(Some(result)) => {
-                        let payload =
-                            protocol::encode_search_response(result.epoch, &result.results);
-                        self.stage_frame(version, Op::SearchOk, &payload);
+                        let (op, payload) = match kind {
+                            SearchKind::TopK => (
+                                Op::SearchOk,
+                                protocol::encode_search_response(result.epoch, &result.results),
+                            ),
+                            SearchKind::Threshold => {
+                                let lists: Vec<WireMatchList> = result
+                                    .results
+                                    .into_iter()
+                                    .zip(result.truncated)
+                                    .map(|(hits, truncated)| WireMatchList { hits, truncated })
+                                    .collect();
+                                (
+                                    Op::SearchThresholdOk,
+                                    protocol::encode_threshold_response(result.epoch, &lists),
+                                )
+                            }
+                        };
+                        self.stage_frame(version, op, &payload);
                         progress = true;
                     }
                     Err(e) => {

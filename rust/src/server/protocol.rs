@@ -57,8 +57,11 @@ pub const MAGIC: u32 = u32::from_le_bytes(*b"CSME");
 /// Current protocol version. Version 2 added: batching hints
 /// (`max_batch`/`max_k`) in the health response, the owning shard's epoch
 /// in admin responses, optional compare-and-swap pins on admin requests,
-/// and full latency histograms in the metrics response.
-pub const VERSION: u8 = 2;
+/// and full latency histograms in the metrics response. Version 3 added the
+/// threshold query kind ([`Op::SearchThreshold`]/[`Op::SearchThresholdOk`],
+/// with a typed per-query truncation flag) and per-query-kind metrics lanes
+/// in the metrics response.
+pub const VERSION: u8 = 3;
 /// Oldest protocol version this build still speaks. A server answers every
 /// frame in the version the *request* carried, so old clients keep working
 /// ([`version_supported`]).
@@ -88,8 +91,15 @@ pub enum Op {
     Metrics = 0x05,
     /// Health/identity request (empty payload).
     Health = 0x06,
+    /// Batched threshold search (v3): `threshold:f64, limit:u32, dims:u32,
+    /// count:u32, count×lanes` — every row scoring `>= threshold`, capped
+    /// at `limit` per query.
+    SearchThreshold = 0x07,
     /// Search response: `epoch:u64, count:u32, count×(n:u32, n×(row:u64, score:f64))`.
     SearchOk = 0x81,
+    /// Threshold search response (v3): `epoch:u64, count:u32,
+    /// count×(truncated:u8, n:u32, n×(row:u64, score:f64))`.
+    SearchThresholdOk = 0x87,
     /// Admin response: `row:u64, epoch:u64, rows:u64, has_write:u8[,
     /// report][, shard_epoch:u64 (v2)]`.
     AdminOk = 0x82,
@@ -114,7 +124,9 @@ impl Op {
             0x04 => Op::AdminDelete,
             0x05 => Op::Metrics,
             0x06 => Op::Health,
+            0x07 => Op::SearchThreshold,
             0x81 => Op::SearchOk,
+            0x87 => Op::SearchThresholdOk,
             0x82 => Op::AdminOk,
             0x85 => Op::MetricsOk,
             0x86 => Op::HealthOk,
@@ -560,6 +572,46 @@ pub fn decode_search_request(payload: &[u8]) -> Result<(usize, Vec<BitVec>), Wir
     Ok((k, queries))
 }
 
+/// Encode a batched threshold search request (v3). All queries must share
+/// one dimension.
+pub fn encode_threshold_request(queries: &[BitVec], threshold: f64, limit: usize) -> Vec<u8> {
+    let dims = queries.first().map_or(0, BitVec::len);
+    let lanes_per = dims.div_ceil(64);
+    let mut out = Vec::with_capacity(20 + queries.len() * lanes_per * 8);
+    put_f64(&mut out, threshold);
+    put_u32(&mut out, limit as u32);
+    put_u32(&mut out, dims as u32);
+    put_u32(&mut out, queries.len() as u32);
+    for q in queries {
+        assert_eq!(q.len(), dims, "search batch mixes query dims");
+        for &lane in q.lanes() {
+            put_u64(&mut out, lane);
+        }
+    }
+    out
+}
+
+/// Decode a batched threshold search request into
+/// `(threshold, limit, queries)`.
+pub fn decode_threshold_request(
+    payload: &[u8],
+) -> Result<(f64, usize, Vec<BitVec>), WireError> {
+    let mut c = Cursor::new(payload);
+    let threshold = c.f64()?;
+    let limit = c.u32()? as usize;
+    let dims = c.u32()? as usize;
+    let count = c.u32()? as usize;
+    if dims == 0 {
+        return Err(bad_frame("search dims must be at least 1"));
+    }
+    let mut queries = Vec::with_capacity(count.min(payload.len() / 8 + 1));
+    for _ in 0..count {
+        queries.push(read_lanes(&mut c, dims)?);
+    }
+    c.finish()?;
+    Ok((threshold, limit, queries))
+}
+
 // [`WireHit`] (= [`crate::coordinator::backend::Hit`], re-exported above)
 // carries the *global* row id: with sharding, the owning shard lives in the
 // high bits (see [`super::shard`]), so the id round-trips through admin
@@ -611,6 +663,68 @@ pub fn decode_search_response(payload: &[u8]) -> Result<WireSearchResponse, Wire
     }
     c.finish()?;
     Ok(WireSearchResponse { epoch, results })
+}
+
+/// One query's threshold result as it travels the wire: the bounded match
+/// set plus the typed spill flag.
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct WireMatchList {
+    /// Qualifying rows, best first, capped at the request's `limit`.
+    pub hits: Vec<WireHit>,
+    /// Whether qualifying rows were dropped because the cap was hit.
+    pub truncated: bool,
+}
+
+/// A decoded threshold search response (v3): one bounded match list per
+/// query of the request batch, stamped with the serving epoch.
+#[derive(Debug, Clone, PartialEq)]
+pub struct WireThresholdResponse {
+    /// Serving epoch at execution time (sum over shards when sharded).
+    pub epoch: u64,
+    /// One match list per query, in request order.
+    pub results: Vec<WireMatchList>,
+}
+
+/// Encode a threshold search response frame payload (v3).
+pub fn encode_threshold_response(epoch: u64, results: &[WireMatchList]) -> Vec<u8> {
+    let hits: usize = results.iter().map(|m| m.hits.len()).sum();
+    let mut out = Vec::with_capacity(12 + results.len() * 5 + hits * 16);
+    put_u64(&mut out, epoch);
+    put_u32(&mut out, results.len() as u32);
+    for m in results {
+        out.push(u8::from(m.truncated));
+        put_u32(&mut out, m.hits.len() as u32);
+        for hit in &m.hits {
+            put_u64(&mut out, hit.row);
+            put_f64(&mut out, hit.score);
+        }
+    }
+    out
+}
+
+/// Decode a threshold search response frame payload (v3).
+pub fn decode_threshold_response(payload: &[u8]) -> Result<WireThresholdResponse, WireError> {
+    let mut c = Cursor::new(payload);
+    let epoch = c.u64()?;
+    let count = c.u32()? as usize;
+    let mut results = Vec::with_capacity(count.min(payload.len() / 5 + 1));
+    for _ in 0..count {
+        let truncated = match c.u8()? {
+            0 => false,
+            1 => true,
+            other => return Err(bad_frame(format!("bad truncation marker {other}"))),
+        };
+        let n = c.u32()? as usize;
+        let mut hits = Vec::with_capacity(n.min(payload.len() / 16 + 1));
+        for _ in 0..n {
+            let row = c.u64()?;
+            let score = c.f64()?;
+            hits.push(WireHit { row, score });
+        }
+        results.push(WireMatchList { hits, truncated });
+    }
+    c.finish()?;
+    Ok(WireThresholdResponse { epoch, results })
 }
 
 // ---------------------------------------------------------------------------
@@ -779,10 +893,28 @@ pub struct WireLatencyHists {
     pub total: WireHistogram,
 }
 
+/// One per-query-kind metrics lane as it travels the wire (v3): completion
+/// and truncation counts plus the lane's end-to-end latency summary.
+#[derive(Debug, Clone, PartialEq)]
+pub struct WireKindLane {
+    /// Lane tag: 0 = top-k, 1 = threshold.
+    pub kind: u8,
+    /// Searches completed in this lane.
+    pub completed: u64,
+    /// Threshold lane only: responses whose match set spilled its bound.
+    pub truncated: u64,
+    /// End-to-end p50 in microseconds.
+    pub total_p50_us: f64,
+    /// End-to-end p99 in microseconds.
+    pub total_p99_us: f64,
+    /// The lane's full latency histogram, when the peer shipped it.
+    pub hist: Option<WireHistogram>,
+}
+
 /// The metrics summary a server reports over the wire: the scalar fields of
 /// [`MetricsSnapshot`], aggregated across shards, plus (v2) the full
-/// queue/exec/total histograms (per-k and per-admin-kind lanes stay
-/// server-side — `report()` them there).
+/// queue/exec/total histograms and (v3) the per-query-kind lanes (per-k and
+/// per-admin-kind lanes stay server-side — `report()` them there).
 #[derive(Debug, Clone, PartialEq, Default)]
 pub struct WireMetrics {
     /// Search requests accepted into the queue.
@@ -821,6 +953,8 @@ pub struct WireMetrics {
     pub write_latency_s: f64,
     /// Full latency histograms (v2 peers only; `None` off a v1 frame).
     pub hists: Option<WireLatencyHists>,
+    /// Per-query-kind lanes (v3 peers only; empty off an older frame).
+    pub kinds: Vec<WireKindLane>,
 }
 
 impl WireMetrics {
@@ -849,6 +983,18 @@ impl WireMetrics {
                 exec: WireHistogram::from_hist(&lat.exec_us),
                 total: WireHistogram::from_hist(&lat.total_us),
             }),
+            kinds: s
+                .kinds
+                .iter()
+                .map(|l| WireKindLane {
+                    kind: u8::from(l.kind == "threshold"),
+                    completed: l.completed,
+                    truncated: l.truncated,
+                    total_p50_us: l.total_p50_us,
+                    total_p99_us: l.total_p99_us,
+                    hist: l.hist.as_ref().map(WireHistogram::from_hist),
+                })
+                .collect(),
         }
     }
 
@@ -878,6 +1024,18 @@ impl WireMetrics {
             total_p99_us: self.total_p99_us,
             total_mean_us: self.total_mean_us,
             per_k: Vec::new(),
+            kinds: self
+                .kinds
+                .iter()
+                .map(|l| crate::coordinator::metrics::KindLaneSnapshot {
+                    kind: if l.kind == 1 { "threshold" } else { "topk" },
+                    completed: l.completed,
+                    truncated: l.truncated,
+                    total_p50_us: l.total_p50_us,
+                    total_p99_us: l.total_p99_us,
+                    hist: l.hist.as_ref().and_then(WireHistogram::to_hist),
+                })
+                .collect(),
             admin: Vec::new(),
             admin_rejected: self.admin_rejected,
             write: WriteCostSnapshot {
@@ -951,6 +1109,23 @@ pub fn encode_metrics_response(m: &WireMetrics, version: u8) -> Vec<u8> {
             None => out.push(0),
         }
     }
+    if version >= 3 {
+        put_u32(&mut out, m.kinds.len() as u32);
+        for lane in &m.kinds {
+            out.push(lane.kind);
+            put_u64(&mut out, lane.completed);
+            put_u64(&mut out, lane.truncated);
+            put_f64(&mut out, lane.total_p50_us);
+            put_f64(&mut out, lane.total_p99_us);
+            match &lane.hist {
+                Some(h) => {
+                    out.push(1);
+                    put_histogram(&mut out, h);
+                }
+                None => out.push(0),
+            }
+        }
+    }
     out
 }
 
@@ -976,6 +1151,7 @@ pub fn decode_metrics_response(payload: &[u8]) -> Result<WireMetrics, WireError>
         write_energy_j: c.f64()?,
         write_latency_s: c.f64()?,
         hists: None,
+        kinds: Vec::new(),
     };
     if c.remaining() > 0 {
         m.hists = match c.u8()? {
@@ -987,6 +1163,35 @@ pub fn decode_metrics_response(payload: &[u8]) -> Result<WireMetrics, WireError>
             }),
             other => return Err(bad_frame(format!("bad metrics histogram marker {other}"))),
         };
+    }
+    // v3 appends the per-query-kind lanes; older frames simply end here.
+    if c.remaining() > 0 {
+        let n = c.u32()? as usize;
+        let mut kinds = Vec::with_capacity(n.min(c.remaining() / 41 + 1));
+        for _ in 0..n {
+            let kind = c.u8()?;
+            if kind > 1 {
+                return Err(bad_frame(format!("bad metrics kind tag {kind}")));
+            }
+            let completed = c.u64()?;
+            let truncated = c.u64()?;
+            let total_p50_us = c.f64()?;
+            let total_p99_us = c.f64()?;
+            let hist = match c.u8()? {
+                0 => None,
+                1 => Some(get_histogram(&mut c)?),
+                other => return Err(bad_frame(format!("bad kind histogram marker {other}"))),
+            };
+            kinds.push(WireKindLane {
+                kind,
+                completed,
+                truncated,
+                total_p50_us,
+                total_p99_us,
+                hist,
+            });
+        }
+        m.kinds = kinds;
     }
     c.finish()?;
     Ok(m)
@@ -1155,6 +1360,114 @@ mod tests {
         let back = decode_search_response(&payload).unwrap();
         assert_eq!(back.epoch, 42);
         assert_eq!(back.results, results);
+    }
+
+    #[test]
+    fn threshold_request_roundtrip_and_rejections() {
+        let mut r = rng(5);
+        let queries: Vec<BitVec> = (0..4).map(|_| BitVec::random(130, 0.5, &mut r)).collect();
+        let payload = encode_threshold_request(&queries, 41.5, 12);
+        let (threshold, limit, back) = decode_threshold_request(&payload).unwrap();
+        assert_eq!(threshold, 41.5);
+        assert_eq!(limit, 12);
+        assert_eq!(back, queries);
+
+        // Dirty tail bits are rejected like the top-k decoder rejects them.
+        let one = BitVec::from_bools((0..70).map(|i| i % 3 == 0));
+        let mut dirty = encode_threshold_request(std::slice::from_ref(&one), 1.0, 4);
+        let n = dirty.len();
+        dirty[n - 1] |= 0x80;
+        assert_eq!(decode_threshold_request(&dirty).unwrap_err().code, ErrorCode::BadFrame);
+
+        // Truncation and trailing garbage fail cleanly.
+        let err = decode_threshold_request(&payload[..payload.len() - 4]).unwrap_err();
+        assert_eq!(err.code, ErrorCode::BadFrame);
+        let mut fat = payload.clone();
+        fat.extend_from_slice(&[0u8; 3]);
+        assert!(decode_threshold_request(&fat).unwrap_err().message.contains("trailing"));
+        let mut lying = payload;
+        lying[16..20].copy_from_slice(&u32::MAX.to_le_bytes());
+        assert_eq!(decode_threshold_request(&lying).unwrap_err().code, ErrorCode::BadFrame);
+    }
+
+    #[test]
+    fn threshold_response_roundtrip() {
+        let results = vec![
+            WireMatchList {
+                hits: vec![WireHit { row: 3, score: 12.5 }, WireHit { row: 9, score: 11.0 }],
+                truncated: true,
+            },
+            WireMatchList { hits: vec![], truncated: false },
+            WireMatchList {
+                hits: vec![WireHit { row: (7u64 << 48) | 2, score: 0.25 }],
+                truncated: false,
+            },
+        ];
+        let payload = encode_threshold_response(42, &results);
+        let back = decode_threshold_response(&payload).unwrap();
+        assert_eq!(back.epoch, 42);
+        assert_eq!(back.results, results);
+
+        // A bad truncation marker is a bad frame, not a silent bool cast.
+        let mut bad = encode_threshold_response(1, &results);
+        bad[12] = 7;
+        assert_eq!(decode_threshold_response(&bad).unwrap_err().code, ErrorCode::BadFrame);
+    }
+
+    /// v3 metrics frames ship the per-kind lanes and they survive the
+    /// roundtrip (histogram included); v2 frames drop the section.
+    #[test]
+    fn metrics_kind_lanes_roundtrip_and_degrade() {
+        let mut hist = latency_histogram();
+        for x in [3.0, 40.0, 900.0] {
+            hist.record(x);
+        }
+        let m = WireMetrics {
+            completed: 3,
+            kinds: vec![
+                WireKindLane {
+                    kind: 0,
+                    completed: 2,
+                    truncated: 0,
+                    total_p50_us: 12.0,
+                    total_p99_us: 90.0,
+                    hist: None,
+                },
+                WireKindLane {
+                    kind: 1,
+                    completed: 1,
+                    truncated: 1,
+                    total_p50_us: 40.0,
+                    total_p99_us: 900.0,
+                    hist: Some(WireHistogram::from_hist(&hist)),
+                },
+            ],
+            ..Default::default()
+        };
+        let back = decode_metrics_response(&encode_metrics_response(&m, VERSION)).unwrap();
+        assert_eq!(back, m);
+        let snap = back.to_snapshot();
+        assert_eq!(snap.kinds.len(), 2);
+        assert_eq!(snap.kinds[0].kind, "topk");
+        assert_eq!(snap.kinds[1].kind, "threshold");
+        assert_eq!(snap.kinds[1].truncated, 1);
+        let lane_hist = snap.kinds[1].hist.as_ref().expect("lane histogram reconstructs");
+        assert_eq!(lane_hist.counts(), hist.counts());
+        // And back out through from_snapshot: the wire form is stable.
+        assert_eq!(WireMetrics::from_snapshot(&snap).kinds, m.kinds);
+
+        // v2 framing drops the lanes; v1 drops histograms too.
+        let v2 = decode_metrics_response(&encode_metrics_response(&m, 2)).unwrap();
+        assert!(v2.kinds.is_empty());
+        let v1 = decode_metrics_response(&encode_metrics_response(&m, 1)).unwrap();
+        assert!(v1.kinds.is_empty() && v1.hists.is_none());
+
+        // A bad kind tag is a bad frame.
+        let one = WireMetrics { kinds: vec![m.kinds[0].clone()], ..Default::default() };
+        let mut bad = encode_metrics_response(&one, VERSION);
+        // 17 scalar fields (136 B) + hists marker (1 B) + lane count (4 B).
+        bad[141] = 9;
+        assert_eq!(decode_metrics_response(&bad).unwrap_err().code, ErrorCode::BadFrame);
     }
 
     #[test]
@@ -1333,7 +1646,9 @@ mod tests {
             Op::AdminDelete,
             Op::Metrics,
             Op::Health,
+            Op::SearchThreshold,
             Op::SearchOk,
+            Op::SearchThresholdOk,
             Op::AdminOk,
             Op::MetricsOk,
             Op::HealthOk,

@@ -35,6 +35,7 @@ use crate::util::sync::lock_recover;
 use crate::util::BitVec;
 
 use super::protocol::{self, FrameHeader, Op, HEADER_LEN, MAGIC, VERSION};
+use super::tcp::SearchKind;
 
 /// Cap on response frames accepted from the server — matches the blocking
 /// client's reasoning: responses legitimately outgrow requests
@@ -356,6 +357,8 @@ struct RemoteCompletion {
     conn: Arc<Mutex<RemoteConn>>,
     seq: u64,
     queries: usize,
+    /// Which response layout the slot's frame decodes as.
+    kind: SearchKind,
     /// The slot's outcome has been picked up; nothing left to abandon.
     spent: bool,
 }
@@ -389,16 +392,34 @@ impl Completion for RemoteCompletion {
                 payload
             }
         };
-        let resp = protocol::decode_search_response(&payload)
-            .map_err(|e| SubmitError::Io(format!("undecodable search response: {e}")))?;
-        if resp.results.len() != self.queries {
+        let result = match self.kind {
+            SearchKind::TopK => {
+                let resp = protocol::decode_search_response(&payload)
+                    .map_err(|e| SubmitError::Io(format!("undecodable search response: {e}")))?;
+                let truncated = vec![false; resp.results.len()];
+                BatchResult { epoch: resp.epoch, results: resp.results, truncated }
+            }
+            SearchKind::Threshold => {
+                let resp = protocol::decode_threshold_response(&payload).map_err(|e| {
+                    SubmitError::Io(format!("undecodable threshold response: {e}"))
+                })?;
+                let mut results = Vec::with_capacity(resp.results.len());
+                let mut truncated = Vec::with_capacity(resp.results.len());
+                for m in resp.results {
+                    results.push(m.hits);
+                    truncated.push(m.truncated);
+                }
+                BatchResult { epoch: resp.epoch, results, truncated }
+            }
+        };
+        if result.results.len() != self.queries {
             return Err(SubmitError::Io(format!(
                 "server answered {} result lists for {} queries",
-                resp.results.len(),
+                result.results.len(),
                 self.queries
             )));
         }
-        Ok(Some(BatchResult { epoch: resp.epoch, results: resp.results }))
+        Ok(Some(result))
     }
 }
 
@@ -423,6 +444,34 @@ impl Backend for RemoteBackend {
             conn: self.conn.clone(),
             seq,
             queries: queries.len(),
+            kind: SearchKind::TopK,
+            spent: false,
+        })))
+    }
+
+    fn submit_threshold(
+        &self,
+        queries: &[BitVec],
+        threshold: f64,
+        limit: usize,
+    ) -> Result<Ticket, SubmitError> {
+        for q in queries {
+            if q.len() != self.dims {
+                return Err(SubmitError::BadQuery(format!(
+                    "query has {} bits, server stores {}",
+                    q.len(),
+                    self.dims
+                )));
+            }
+        }
+        let payload = protocol::encode_threshold_request(queries, threshold, limit);
+        let seq = lock_recover(&self.conn)
+            .enqueue(Op::SearchThreshold, Op::SearchThresholdOk, &payload)?;
+        Ok(Ticket::new(Box::new(RemoteCompletion {
+            conn: self.conn.clone(),
+            seq,
+            queries: queries.len(),
+            kind: SearchKind::Threshold,
             spent: false,
         })))
     }

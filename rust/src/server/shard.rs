@@ -62,7 +62,7 @@
 
 use anyhow::{bail, ensure, Result};
 
-use crate::am::kernel::TopK;
+use crate::am::kernel::{Matches, TopK};
 use crate::am::AmEngine;
 use crate::config::CosimeConfig;
 use crate::coordinator::backend::{
@@ -75,6 +75,8 @@ use crate::coordinator::{
     WriteCostSnapshot,
 };
 use crate::util::BitVec;
+
+use super::tcp::SearchKind;
 
 /// Bits reserved for the local row index inside a global id.
 pub const SHARD_SHIFT: u32 = 48;
@@ -146,6 +148,34 @@ fn merge_ranked(lists: &[(usize, &[Hit])], k: usize) -> Vec<Hit> {
     merged.as_slice().iter().map(|r| Hit { row: r.winner as u64, score: r.score }).collect()
 }
 
+/// Merge one query's bounded per-child match lists into one global bounded
+/// match set. `lists` yields `(child_index, hits, child_truncated)`. The
+/// merged flag is the OR of the child flags with the global selector's own
+/// spill: a child that truncated had more than `limit` qualifying rows (so
+/// the flat store would truncate too), and a union that outgrows `limit`
+/// spills here — together that reproduces the flat store's flag exactly.
+fn merge_matches(
+    lists: &[(usize, &[Hit], bool)],
+    threshold: f64,
+    limit: usize,
+) -> (Vec<Hit>, bool) {
+    let mut merged = Matches::new(threshold, limit);
+    let mut child_sel = Matches::new(threshold, limit);
+    let mut truncated = false;
+    for &(child, hits, child_trunc) in lists {
+        child_sel.reset(threshold, limit);
+        for h in hits {
+            child_sel.offer(global_row(child, h.row as usize) as usize, h.score);
+        }
+        merged.merge_from(&child_sel);
+        truncated |= child_trunc;
+    }
+    truncated |= merged.truncated();
+    let hits =
+        merged.as_slice().iter().map(|r| Hit { row: r.winner as u64, score: r.score }).collect();
+    (hits, truncated)
+}
+
 impl PendingSearch {
     /// Block for every child's response and merge the ranked lists into one
     /// global top-k (ids globalized, selectors merged via
@@ -186,6 +216,7 @@ impl PendingSearch {
             winner: head.winner,
             score: head.score,
             hits,
+            truncated: false,
             epoch,
             timing: RequestTiming::default(),
         })
@@ -193,14 +224,22 @@ impl PendingSearch {
 }
 
 /// Completion of a router-scattered batch: one child ticket per shard,
-/// each covering the whole batch; ready when every child is.
+/// each covering the whole batch; ready when every child is. The merge is
+/// kind-aware: top-k batches rank-merge through [`merge_ranked`], threshold
+/// batches union-merge through [`merge_matches`] with exact per-query
+/// truncation flags.
 struct RouterCompletion {
     /// `pending[i]` holds child `i`'s ticket until it completes into
     /// `done[i]`.
     pending: Vec<Option<Ticket>>,
     done: Vec<Option<BatchResult>>,
     queries: usize,
+    /// Top-k depth, or the threshold batch's per-query match bound.
     k: usize,
+    /// Which merge the gathered results go through.
+    kind: SearchKind,
+    /// Threshold batches only (`NEG_INFINITY` for top-k, unused there).
+    threshold: f64,
 }
 
 impl RouterCompletion {
@@ -215,17 +254,39 @@ impl RouterCompletion {
             epoch += c.epoch;
         }
         let mut results = Vec::with_capacity(self.queries);
+        let mut truncated = Vec::with_capacity(self.queries);
         for qi in 0..self.queries {
-            let lists: Vec<(usize, &[Hit])> = children
-                .iter()
-                .enumerate()
-                .map(|(ci, c)| {
-                    (ci, c.results.get(qi).map(Vec::as_slice).unwrap_or(&[]))
-                })
-                .collect();
-            results.push(merge_ranked(&lists, self.k));
+            match self.kind {
+                SearchKind::TopK => {
+                    let lists: Vec<(usize, &[Hit])> = children
+                        .iter()
+                        .enumerate()
+                        .map(|(ci, c)| {
+                            (ci, c.results.get(qi).map(Vec::as_slice).unwrap_or(&[]))
+                        })
+                        .collect();
+                    results.push(merge_ranked(&lists, self.k));
+                    truncated.push(false);
+                }
+                SearchKind::Threshold => {
+                    let lists: Vec<(usize, &[Hit], bool)> = children
+                        .iter()
+                        .enumerate()
+                        .map(|(ci, c)| {
+                            (
+                                ci,
+                                c.results.get(qi).map(Vec::as_slice).unwrap_or(&[]),
+                                c.truncated.get(qi).copied().unwrap_or(false),
+                            )
+                        })
+                        .collect();
+                    let (hits, trunc) = merge_matches(&lists, self.threshold, self.k);
+                    results.push(hits);
+                    truncated.push(trunc);
+                }
+            }
         }
-        BatchResult { epoch, results }
+        BatchResult { epoch, results, truncated }
     }
 }
 
@@ -465,6 +526,29 @@ impl Backend for RouterBackend {
             done,
             queries: queries.len(),
             k,
+            kind: SearchKind::TopK,
+            threshold: f64::NEG_INFINITY,
+        })))
+    }
+
+    fn submit_threshold(
+        &self,
+        queries: &[BitVec],
+        threshold: f64,
+        limit: usize,
+    ) -> Result<Ticket, SubmitError> {
+        let mut pending = Vec::with_capacity(self.children.len());
+        for child in &self.children {
+            pending.push(Some(child.submit_threshold(queries, threshold, limit)?));
+        }
+        let done = (0..pending.len()).map(|_| None).collect();
+        Ok(Ticket::new(Box::new(RouterCompletion {
+            pending,
+            done,
+            queries: queries.len(),
+            k: limit,
+            kind: SearchKind::Threshold,
+            threshold,
         })))
     }
 
@@ -575,6 +659,7 @@ pub fn aggregate_metrics(snaps: &[MetricsSnapshot]) -> MetricsSnapshot {
         total_p99_us: 0.0,
         total_mean_us: 0.0,
         per_k: Vec::new(),
+        kinds: Vec::new(),
         admin: Vec::new(),
         admin_rejected: 0,
         write: WriteCostSnapshot::default(),
@@ -637,6 +722,27 @@ pub fn aggregate_metrics(snaps: &[MetricsSnapshot]) -> MetricsSnapshot {
                 None => agg.per_k.push(lane.clone()),
             }
         }
+        for lane in &s.kinds {
+            match agg.kinds.iter_mut().find(|l| l.kind == lane.kind) {
+                Some(l) => {
+                    l.completed += lane.completed;
+                    l.truncated += lane.truncated;
+                    match (&mut l.hist, &lane.hist) {
+                        (Some(h), Some(other)) => {
+                            h.merge_from(other);
+                            l.total_p50_us = h.quantile(0.5);
+                            l.total_p99_us = h.quantile(0.99);
+                        }
+                        _ => {
+                            l.hist = None;
+                            l.total_p50_us = l.total_p50_us.max(lane.total_p50_us);
+                            l.total_p99_us = l.total_p99_us.max(lane.total_p99_us);
+                        }
+                    }
+                }
+                None => agg.kinds.push(lane.clone()),
+            }
+        }
         for lane in &s.admin {
             match agg.admin.iter_mut().find(|l| l.kind == lane.kind) {
                 Some(l) => {
@@ -677,6 +783,7 @@ pub fn aggregate_metrics(snaps: &[MetricsSnapshot]) -> MetricsSnapshot {
         }
     }
     agg.per_k.sort_by_key(|l| l.k);
+    agg.kinds.sort_by_key(|l| l.kind != "topk");
     agg
 }
 
@@ -771,6 +878,60 @@ mod tests {
 
     fn router_words(shards: usize) -> (ShardRouter, Vec<BitVec>) {
         router(60, 64, shards, 7)
+    }
+
+    /// Threshold scatter-gather: merged match sets agree with the flat
+    /// store's [`Matches`] reference — same lengths, same score sequences,
+    /// same truncation flags — for every shard count. (Row *ids* differ by
+    /// construction: the router reports global ids over content-hashed
+    /// placement, so like the top-k tests this pins the score sequence.)
+    #[test]
+    fn threshold_scatter_matches_flat_reference() {
+        for shards in [1usize, 2, 4] {
+            let (router, words) = router(60, 64, shards, 41);
+            let flat = DigitalExactEngine::new(words);
+            let mut r = rng(200 + shards as u64);
+            let mut saw_nonempty = false;
+            let mut saw_truncated = false;
+            for _ in 0..25 {
+                let q = BitVec::random(64, 0.5, &mut r);
+                let d = 28.0 + r.f64() * 12.0;
+                let limit = 1 + r.below(8);
+                let got =
+                    router.search_threshold_batch(std::slice::from_ref(&q), d, limit).unwrap();
+                let want = flat.search_matches(&q, d, limit);
+                assert_eq!(got.results[0].len(), want.len(), "shards {shards}, d {d}");
+                for (g, e) in got.results[0].iter().zip(want.as_slice()) {
+                    assert_eq!(g.score, e.score, "shards {shards}, d {d}");
+                }
+                assert_eq!(got.truncated[0], want.truncated(), "shards {shards}, d {d}");
+                saw_nonempty |= !want.is_empty();
+                saw_truncated |= want.truncated();
+            }
+            assert!(saw_nonempty, "threshold sweep never matched anything");
+            assert!(saw_truncated, "threshold sweep never exercised truncation");
+            router.shutdown();
+        }
+    }
+
+    /// Threshold hits carry *global* ids that resolve to the right stored
+    /// word: a stored word queried against itself at its own self-score
+    /// must come back, and updating through the returned id must stick.
+    #[test]
+    fn threshold_hits_carry_routable_global_ids() {
+        let (router, words) = router(40, 64, 3, 43);
+        for w in words.iter().take(8) {
+            let d = f64::from(w.count_ones());
+            let got = router.search_threshold_batch(std::slice::from_ref(w), d, 4).unwrap();
+            assert!(!got.results[0].is_empty(), "self-match at the self-score");
+            let head = got.results[0][0];
+            assert_eq!(head.score, d);
+            let (shard, _) = split_row(head.row);
+            assert!(shard < 3, "global id names a real shard");
+            // The id is routable: an unconditional update through it lands.
+            router.update(head.row, w.clone()).unwrap();
+        }
+        router.shutdown();
     }
 
     #[test]
@@ -897,11 +1058,15 @@ mod tests {
             let q = BitVec::random(64, 0.5, &mut r);
             router.search_topk(&q, 2).unwrap();
         }
+        for _ in 0..4 {
+            let q = BitVec::random(64, 0.5, &mut r);
+            router.search_threshold_batch(std::slice::from_ref(&q), 20.0, 8).unwrap();
+        }
         let per = router.metrics_per_shard();
         assert_eq!(per.len(), 2);
         let agg = aggregate_metrics(&per);
-        // Every query was scattered to both shards.
-        assert_eq!(agg.completed, 20);
+        // Every query (10 top-k + 4 threshold) was scattered to both shards.
+        assert_eq!(agg.completed, 28);
         assert_eq!(agg.completed, per[0].completed + per[1].completed);
         // Exact merge: the aggregate percentile equals the quantile of the
         // merged histogram, not the worst shard's field.
@@ -913,6 +1078,12 @@ mod tests {
         assert!(agg.lat.is_some(), "merged histograms are carried forward");
         let lane = agg.per_k.iter().find(|l| l.k == 2).expect("k=2 lane");
         assert_eq!(lane.completed, 20);
+        // Kind lanes merge across shards too, topk first.
+        assert_eq!(agg.kinds[0].kind, "topk");
+        assert_eq!(agg.kinds[0].completed, 20);
+        let tlane = agg.kinds.iter().find(|l| l.kind == "threshold").expect("threshold lane");
+        assert_eq!(tlane.completed, 8, "4 threshold queries scattered to 2 shards");
+        assert!(tlane.hist.is_some(), "lane histograms merge across shards");
         router.shutdown();
     }
 

@@ -48,8 +48,8 @@ use crate::config::{IoMode, ServerConfig};
 use crate::coordinator::backend::{Backend, Ticket};
 
 use super::protocol::{
-    self, encode_error_response, ErrorCode, FrameReadError, Op, WireError, WireMetrics,
-    VERSION,
+    self, encode_error_response, ErrorCode, FrameReadError, Op, WireError, WireMatchList,
+    WireMetrics, VERSION,
 };
 use super::shard::RouterBackend;
 
@@ -175,11 +175,21 @@ impl CosimeServer {
 // Request handling shared by both I/O engines
 // ---------------------------------------------------------------------------
 
+/// Which response layout a completed search ticket encodes to: the ranked
+/// top-k frame ([`Op::SearchOk`]) or the v3 bounded match-list frame
+/// ([`Op::SearchThresholdOk`]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub(super) enum SearchKind {
+    TopK,
+    Threshold,
+}
+
 /// How one decoded frame is answered: a finished response frame, or a
-/// search completion still being served.
+/// search completion still being served (tagged with the response layout
+/// its query kind calls for).
 pub(super) enum Handled {
     Immediate(Op, Vec<u8>),
-    Search(Ticket),
+    Search(SearchKind, Ticket),
 }
 
 /// Serve one well-formed frame (header already read, payload complete).
@@ -243,7 +253,23 @@ fn try_handle_request(
             let (k, queries) = protocol::decode_search_request(payload)?;
             let ticket =
                 shared.backend.submit_search(&queries, k).map_err(WireError::from)?;
-            Ok(Handled::Search(ticket))
+            Ok(Handled::Search(SearchKind::TopK, ticket))
+        }
+        Op::SearchThreshold => {
+            // v3-only op: the response layout does not exist in older
+            // versions, so a pre-v3 frame cannot be answered coherently.
+            if version < 3 {
+                return Err(WireError::new(
+                    ErrorCode::BadVersion,
+                    format!("SearchThreshold requires protocol version 3 (frame carried {version})"),
+                ));
+            }
+            let (threshold, limit, queries) = protocol::decode_threshold_request(payload)?;
+            let ticket = shared
+                .backend
+                .submit_threshold(&queries, threshold, limit)
+                .map_err(WireError::from)?;
+            Ok(Handled::Search(SearchKind::Threshold, ticket))
         }
         Op::AdminUpdate | Op::AdminInsert | Op::AdminDelete => {
             let (cmd, expected_epoch) = protocol::decode_admin_request(op, payload)?;
@@ -273,12 +299,26 @@ fn try_handle_request(
 }
 
 /// Encode a completed (or failed) search ticket into its response frame
-/// payload.
-pub(super) fn finish_search(ticket: Ticket) -> (Op, Vec<u8>) {
+/// payload, in the layout its query kind calls for.
+pub(super) fn finish_search(kind: SearchKind, ticket: Ticket) -> (Op, Vec<u8>) {
     match ticket.wait() {
-        Ok(result) => {
-            (Op::SearchOk, protocol::encode_search_response(result.epoch, &result.results))
-        }
+        Ok(result) => match kind {
+            SearchKind::TopK => {
+                (Op::SearchOk, protocol::encode_search_response(result.epoch, &result.results))
+            }
+            SearchKind::Threshold => {
+                let lists: Vec<WireMatchList> = result
+                    .results
+                    .into_iter()
+                    .zip(result.truncated)
+                    .map(|(hits, truncated)| WireMatchList { hits, truncated })
+                    .collect();
+                (
+                    Op::SearchThresholdOk,
+                    protocol::encode_threshold_response(result.epoch, &lists),
+                )
+            }
+        },
         Err(e) => (Op::Error, encode_error_response(&WireError::from(e))),
     }
 }
@@ -314,8 +354,9 @@ fn accept_loop(listener: TcpListener, shared: Arc<Shared>) {
 enum Reply {
     /// A finished response frame, stamped with its negotiated version.
     Immediate(u8, Op, Vec<u8>),
-    /// A search batch still being served: the writer waits on the ticket.
-    Search(u8, Ticket),
+    /// A search batch still being served: the writer waits on the ticket
+    /// and encodes the response layout its kind calls for.
+    Search(u8, SearchKind, Ticket),
     /// Send this error frame, then close the connection (stream unsynced).
     Fatal(Vec<u8>),
 }
@@ -368,7 +409,7 @@ fn read_loop(stream: TcpStream, shared: &Shared, tx: &mpsc::SyncSender<Reply>) {
             handle_frame(shared, header.version, header.op, header.flags, &payload);
         let reply = match handled {
             Handled::Immediate(op, payload) => Reply::Immediate(version, op, payload),
-            Handled::Search(ticket) => Reply::Search(version, ticket),
+            Handled::Search(kind, ticket) => Reply::Search(version, kind, ticket),
         };
         // A full channel blocks here: max_inflight frames are being served,
         // so this connection stops reading until its client drains replies.
@@ -390,8 +431,8 @@ fn write_loop(stream: TcpStream, rx: mpsc::Receiver<Reply>) {
                 let _ = w.flush();
                 return;
             }
-            Reply::Search(version, ticket) => {
-                let (op, payload) = finish_search(ticket);
+            Reply::Search(version, kind, ticket) => {
+                let (op, payload) = finish_search(kind, ticket);
                 protocol::write_frame_v(&mut w, version, op, &payload).is_ok()
             }
         };
@@ -458,6 +499,59 @@ mod tests {
             let health = protocol::decode_health_response(&payload).unwrap();
             assert_eq!(health.rows, 12);
             assert_eq!((health.max_batch, health.max_k), (0, 0), "hints absent on v1");
+            drop(stream);
+            server.shutdown();
+        }
+    }
+
+    /// Threshold searches over the raw socket: bit-exact against the flat
+    /// [`Matches`](crate::am::Matches) reference, truncation flagged per
+    /// query, and the op rejected on pre-v3 frames — on both I/O engines.
+    #[test]
+    fn threshold_search_over_a_raw_socket_matches_reference() {
+        for io in [IoMode::Threaded, IoMode::EventLoop] {
+            let (server, words) = start(40, 64, 1, io);
+            let reference = DigitalExactEngine::new(words);
+            let mut r = rng(9);
+            let queries: Vec<BitVec> = (0..4).map(|_| BitVec::random(64, 0.5, &mut r)).collect();
+            let d = 36.0;
+            let mut stream = TcpStream::connect(server.local_addr()).unwrap();
+            let req = protocol::encode_threshold_request(&queries, d, 16);
+            protocol::write_frame(&mut stream, Op::SearchThreshold, &req).unwrap();
+            let (h, payload) = protocol::read_frame(&mut stream, 1 << 20).unwrap();
+            assert_eq!(Op::from_u8(h.op), Some(Op::SearchThresholdOk), "{io:?}");
+            let resp = protocol::decode_threshold_response(&payload).unwrap();
+            assert_eq!(resp.results.len(), 4);
+            for (q, got) in queries.iter().zip(&resp.results) {
+                let want = reference.search_matches(q, d, 16);
+                assert_eq!(got.hits.len(), want.len());
+                for (g, e) in got.hits.iter().zip(want.as_slice()) {
+                    assert_eq!(g.row as usize, e.winner);
+                    assert_eq!(g.score, e.score);
+                }
+                assert_eq!(got.truncated, want.truncated());
+            }
+
+            // An accept-everything threshold under a tight limit spills:
+            // the best `limit` rows come back with the truncation flag set.
+            let req = protocol::encode_threshold_request(&queries[..1], f64::MIN, 2);
+            protocol::write_frame(&mut stream, Op::SearchThreshold, &req).unwrap();
+            let (_, payload) = protocol::read_frame(&mut stream, 1 << 20).unwrap();
+            let resp = protocol::decode_threshold_response(&payload).unwrap();
+            assert_eq!(resp.results[0].hits.len(), 2);
+            assert!(resp.results[0].truncated);
+
+            // The threshold op is v3-only: a v2-framed request is rejected
+            // with a typed version error and the connection stays usable.
+            let req = protocol::encode_threshold_request(&queries[..1], d, 4);
+            protocol::write_frame_v(&mut stream, 2, Op::SearchThreshold, &req).unwrap();
+            let (h, payload) = protocol::read_frame(&mut stream, 1 << 20).unwrap();
+            assert_eq!(Op::from_u8(h.op), Some(Op::Error));
+            let e = protocol::decode_error_response(&payload).unwrap();
+            assert_eq!(e.code, ErrorCode::BadVersion);
+            protocol::write_frame(&mut stream, Op::Health, &[]).unwrap();
+            let (h, _) = protocol::read_frame(&mut stream, 1 << 20).unwrap();
+            assert_eq!(Op::from_u8(h.op), Some(Op::HealthOk));
             drop(stream);
             server.shutdown();
         }

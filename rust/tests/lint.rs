@@ -7,7 +7,9 @@
 //! an undispatched wire opcode, or an undocumented config key fails
 //! `cargo test` before it ever reaches CI.
 
-use cosime::lint::{lint_source, lint_tree, render_json, repo_root, Rule};
+use cosime::lint::lexer::lex;
+use cosime::lint::rules::wire_exhaustive;
+use cosime::lint::{lint_source, lint_tree, render_json, repo_root, Finding, Rule};
 
 #[test]
 fn tree_is_lint_clean_at_head() {
@@ -110,6 +112,82 @@ fn unterminated_hot_path_region_is_a_violation() {
     let src = "fn f() {\n    // lint: hot-path\n    let _x = 1;\n}\n";
     let out = lint_source("rust/src/repro/bad.rs", src);
     assert!(out.iter().any(|f| f.rule == Rule::HotPathAlloc), "{out:?}");
+}
+
+// ---------------------------------------------------------------------------
+// wire-exhaustive: cross-file fixtures. The tree gate above runs the real
+// rule over the real protocol; these pin the missing-variant failure mode so
+// a future opcode (the way `SearchThreshold`/`SearchThresholdOk` landed in
+// protocol v3) cannot be declared without being dispatched.
+// ---------------------------------------------------------------------------
+
+/// A protocol fixture shaped like the real one: paired request/response
+/// opcodes including the v3 threshold pair, and an `ErrorCode` whose
+/// variants are referenced by the protocol's own conversion impl.
+const PROTO_FIXTURE: &str = "\
+pub enum Op {\n\
+    Search = 0x01,\n\
+    SearchThreshold = 0x07,\n\
+    SearchOk = 0x81,\n\
+    SearchThresholdOk = 0x87,\n\
+}\n\
+pub enum ErrorCode { BadQuery = 1 }\n\
+impl ErrorCode { fn of(&self) -> u8 { let _ = ErrorCode::BadQuery; 1 } }\n";
+
+fn wire_findings(serving: &[(&str, &str)]) -> Vec<Finding> {
+    let proto = lex(PROTO_FIXTURE);
+    let lexed: Vec<(&str, cosime::lint::lexer::Lexed)> =
+        serving.iter().map(|(rel, src)| (*rel, lex(src))).collect();
+    let refs: Vec<(&str, &cosime::lint::lexer::Lexed)> =
+        lexed.iter().map(|(rel, l)| (*rel, l)).collect();
+    let mut out = Vec::new();
+    wire_exhaustive(("rust/src/server/protocol.rs", &proto), &refs, &mut out);
+    out
+}
+
+#[test]
+fn wire_exhaustive_fires_when_a_threshold_opcode_is_not_dispatched() {
+    // tcp.rs handles the request op but nobody ever emits the response op:
+    // exactly the regression this rule exists to catch.
+    let tcp = "fn d(op: Op) { match op { Op::Search => {}, Op::SearchThreshold => {}, _ => {} } }\n\
+               fn r() -> Op { Op::SearchOk }\n";
+    let out = wire_findings(&[("rust/src/server/tcp.rs", tcp)]);
+    assert_eq!(out.len(), 1, "{out:?}");
+    assert_eq!(out[0].rule, Rule::WireExhaustive);
+    assert!(out[0].message.contains("Op::SearchThresholdOk"), "{}", out[0].message);
+    assert_eq!(out[0].file, "rust/src/server/protocol.rs");
+}
+
+#[test]
+fn wire_exhaustive_accepts_dispatch_spread_across_serving_files() {
+    // Coverage may be split the way the real tree splits it: the blocking
+    // path handles both ops, the event loop emits the response op, the
+    // client round-trips the pair.
+    let tcp = "fn d(op: Op) { match op { Op::Search => {}, Op::SearchThreshold => {}, _ => {} } }\n";
+    let evl = "fn c() -> (Op, Op) { (Op::SearchOk, Op::SearchThresholdOk) }\n";
+    let cli = "fn q() { let _ = (Op::SearchThreshold, Op::SearchThresholdOk); }\n";
+    let out = wire_findings(&[
+        ("rust/src/server/tcp.rs", tcp),
+        ("rust/src/server/eventloop.rs", evl),
+        ("rust/src/server/client.rs", cli),
+    ]);
+    assert!(out.is_empty(), "{out:?}");
+}
+
+#[test]
+fn wire_exhaustive_ignores_test_only_dispatch() {
+    // A variant exercised only from #[cfg(test)] code is still undispatched
+    // as far as the serving layer is concerned.
+    let tcp = "fn d(op: Op) { match op { Op::Search => {}, Op::SearchThreshold => {}, _ => {} } }\n\
+               fn r() -> Op { Op::SearchOk }\n\
+               #[cfg(test)]\n\
+               mod tests {\n\
+                   #[test]\n\
+                   fn t() { let _ = super::Op::SearchThresholdOk; }\n\
+               }\n";
+    let out = wire_findings(&[("rust/src/server/tcp.rs", tcp)]);
+    assert_eq!(out.len(), 1, "{out:?}");
+    assert!(out[0].message.contains("Op::SearchThresholdOk"), "{}", out[0].message);
 }
 
 #[test]

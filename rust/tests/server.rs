@@ -386,6 +386,67 @@ fn router_over_remote_shards_matches_flat_reference() {
     }
 }
 
+/// Threshold queries across the same two-hop topology: client → routing
+/// tier → two remote shard servers. Match sets must be bit-identical
+/// (depth, score order, truncation flag) to a flat single-store
+/// `search_matches` reference, under both tier I/O engines.
+#[test]
+fn router_over_remote_shards_threshold_matches_flat_reference() {
+    for tier_io in BOTH_IO {
+        let mut r = rng(63);
+        let words: Vec<BitVec> = (0..80).map(|_| BitVec::random(DIMS, 0.5, &mut r)).collect();
+        let reference = DigitalExactEngine::new(words.clone());
+        let (tier, shard_servers) = start_remote_topology(&words, 2, tier_io);
+        let mut client = connect(&tier);
+
+        let mut saw_nonempty = false;
+        for _ in 0..15 {
+            let q = BitVec::random(DIMS, 0.5, &mut r);
+            let d = 56.0 + r.f64() * 24.0;
+            let limit = 1 + r.below(16);
+            let (_, got) = client.search_threshold(&q, d, limit).unwrap();
+            let want = reference.search_matches(&q, d, limit);
+            assert_eq!(got.hits.len(), want.len(), "depth ({tier_io:?}, d {d}, limit {limit})");
+            for (hit, exp) in got.hits.iter().zip(want.as_slice()) {
+                assert_eq!(hit.score, exp.score, "bit-identical score sequence");
+            }
+            assert_eq!(got.truncated, want.truncated(), "merged flag == flat flag");
+            for hit in &got.hits {
+                assert!(split_row(hit.row).0 < 2, "ids name a real remote shard");
+            }
+            saw_nonempty |= !got.hits.is_empty();
+        }
+        assert!(saw_nonempty, "threshold band never matched anything ({tier_io:?})");
+
+        // Batched threshold frames cross both hops too.
+        let queries: Vec<BitVec> = (0..6).map(|_| BitVec::random(DIMS, 0.5, &mut r)).collect();
+        let resp = client.search_threshold_batch(&queries, 58.0, 32).unwrap();
+        assert_eq!(resp.results.len(), queries.len());
+        for (q, list) in queries.iter().zip(&resp.results) {
+            let want = reference.search_matches(q, 58.0, 32);
+            assert_eq!(list.hits.len(), want.len());
+            for (hit, exp) in list.hits.iter().zip(want.as_slice()) {
+                assert_eq!(hit.score, exp.score);
+            }
+            assert_eq!(list.truncated, want.truncated());
+        }
+
+        // An accept-everything threshold under a tight bound spills: one
+        // hit back (the global best), flagged truncated — end to end.
+        let (_, tight) = client.search_threshold(&queries[0], f64::MIN, 1).unwrap();
+        assert_eq!(tight.hits.len(), 1, "{tier_io:?}");
+        assert!(tight.truncated, "spill at the bound must be flagged across the merge");
+        let best = reference.search_topk(&queries[0], 1);
+        assert_eq!(tight.hits[0].score, best[0].score);
+
+        drop(client);
+        tier.shutdown();
+        for s in shard_servers {
+            s.shutdown();
+        }
+    }
+}
+
 // ---------------------------------------------------------------------------
 // Backend conformance: the same assertions over every Backend shape.
 // ---------------------------------------------------------------------------
@@ -415,6 +476,20 @@ fn assert_backend_conformance(backend: &dyn Backend, words: &[BitVec], seed: u64
         for (got, exp) in hits.iter().zip(&want) {
             assert_eq!(got.score, exp.score);
         }
+    }
+
+    // Threshold batches: match sets equal the flat reference, with exact
+    // per-query truncation flags, on every backend shape.
+    let th = backend.search_threshold_batch(&queries, DIMS as f64 * 0.45, 16).unwrap();
+    assert_eq!(th.results.len(), queries.len());
+    assert_eq!(th.truncated.len(), queries.len());
+    for (i, q) in queries.iter().enumerate() {
+        let want = reference.search_matches(q, DIMS as f64 * 0.45, 16);
+        assert_eq!(th.results[i].len(), want.len());
+        for (got, exp) in th.results[i].iter().zip(want.as_slice()) {
+            assert_eq!(got.score, exp.score);
+        }
+        assert_eq!(th.truncated[i], want.truncated());
     }
 
     // Nonblocking completion: submit, then poll to completion.
