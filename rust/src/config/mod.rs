@@ -494,6 +494,13 @@ pub struct ServerConfig {
     /// stops reading responses blocks its own connection at this depth
     /// instead of ballooning server memory or starving the shared queue.
     pub max_inflight: usize,
+    /// Shared secret for the hello handshake. Empty (the default) disables
+    /// authentication. When set, every connection must open with a v4
+    /// `Hello` frame carrying this exact secret before any other op; frames
+    /// on an unauthenticated connection are rejected with the typed
+    /// `unauthorized` error (the connection stays open so the client can
+    /// hello and retry).
+    pub auth_secret: String,
 }
 
 impl Default for ServerConfig {
@@ -505,6 +512,7 @@ impl Default for ServerConfig {
             remote_shards: Vec::new(),
             max_frame: 16 << 20,
             max_inflight: 32,
+            auth_secret: String::new(),
         }
     }
 }
@@ -531,6 +539,12 @@ impl FromToml for ServerConfig {
                     .as_str_list()
                     .with_context(|| format!("key '{key}' must be a list of strings"))?;
             }
+            "auth_secret" => {
+                self.auth_secret = value
+                    .as_str()
+                    .with_context(|| format!("key '{key}' must be a string"))?
+                    .to_string();
+            }
             "shards" => self.shards = want_usize(key, value)?,
             "max_frame" => self.max_frame = want_usize(key, value)?,
             "max_inflight" => self.max_inflight = want_usize(key, value)?,
@@ -552,9 +566,40 @@ impl FromToml for ServerConfig {
             ("shards".into(), TomlValue::Int(self.shards as i64)),
             ("max_frame".into(), TomlValue::Int(self.max_frame as i64)),
             ("max_inflight".into(), TomlValue::Int(self.max_inflight as i64)),
+            ("auth_secret".into(), TomlValue::Str(self.auth_secret.clone())),
         ]
     }
 }
+
+/// Replication tier policy (`[replication]`): the bounded catch-up log a
+/// primary keeps for joining replicas, snapshot-streaming chunk size and
+/// the router's shard-recovery probing cadence.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ReplicationConfig {
+    /// Committed admin ops retained in the catch-up log. A replica whose
+    /// epoch has fallen more than this many commits behind must take a
+    /// full snapshot (typed `log-truncated` rejection carrying the floor).
+    pub log_capacity: usize,
+    /// Server-side cap on rows per streamed snapshot chunk: pullers asking
+    /// for more get a shorter chunk and advance by what they received.
+    pub snapshot_chunk_rows: usize,
+    /// Base backoff (milliseconds) between reconnect probes at an ejected
+    /// or disconnected remote shard; attempt `n` waits `n × this`.
+    pub probe_backoff_ms: u64,
+}
+
+impl Default for ReplicationConfig {
+    fn default() -> Self {
+        ReplicationConfig { log_capacity: 1024, snapshot_chunk_rows: 256, probe_backoff_ms: 200 }
+    }
+}
+
+bind_toml!(ReplicationConfig {
+    f64: [],
+    usize: [log_capacity, snapshot_chunk_rows],
+    u64: [probe_backoff_ms],
+    bool: [],
+});
 
 /// Search-kernel dispatch policy (`[kernel]`): which popcount path the
 /// digital engines use ([`crate::am::kernel::simd`]). The `COSIME_KERNEL`
@@ -663,6 +708,9 @@ pub struct CosimeConfig {
     pub write: WriteConfig,
     /// Network serving (`[server]`).
     pub server: ServerConfig,
+    /// Replication tier: catch-up log, snapshot streaming, shard-recovery
+    /// probing (`[replication]`).
+    pub replication: ReplicationConfig,
     /// Search kernel selection (`[kernel]`).
     pub kernel: KernelConfig,
     /// Serving engine selection (`[engine]`).
@@ -702,6 +750,7 @@ impl CosimeConfig {
                 "coordinator" => &mut self.coordinator,
                 "write" => &mut self.write,
                 "server" => &mut self.server,
+                "replication" => &mut self.replication,
                 "kernel" => &mut self.kernel,
                 "engine" => &mut self.engine,
                 other => bail!("unknown config section [{other}]"),
@@ -725,6 +774,7 @@ impl CosimeConfig {
         doc.insert("coordinator".into(), self.coordinator.dump().into_iter().collect());
         doc.insert("write".into(), self.write.dump().into_iter().collect());
         doc.insert("server".into(), self.server.dump().into_iter().collect());
+        doc.insert("replication".into(), self.replication.dump().into_iter().collect());
         doc.insert("kernel".into(), self.kernel.dump().into_iter().collect());
         doc.insert("engine".into(), self.engine.dump().into_iter().collect());
         toml_lite::to_string(&doc)
@@ -774,6 +824,10 @@ impl CosimeConfig {
         ensure!(s.shards <= 1 << 16, "server shard count exceeds the 16-bit global-id space");
         ensure!(s.max_frame >= 64, "server max_frame too small to carry any request");
         ensure!(s.max_inflight >= 1, "server max_inflight must be at least 1");
+        let r = &self.replication;
+        ensure!(r.log_capacity >= 1, "replication log_capacity must be at least 1");
+        ensure!(r.snapshot_chunk_rows >= 1, "replication snapshot_chunk_rows must be at least 1");
+        ensure!(r.probe_backoff_ms >= 1, "replication probe_backoff_ms must be at least 1");
         ensure!(
             matches!(self.kernel.path.as_str(), "auto" | "scalar" | "avx2" | "avx512" | "neon"),
             "kernel path must be auto|scalar|avx2|avx512|neon, got \"{}\"",
@@ -925,6 +979,38 @@ mod tests {
         // Server policy never invalidates physical snapshots.
         let mut policy = CosimeConfig::default();
         policy.server.shards = 8;
+        assert_eq!(policy.physical_fingerprint(), CosimeConfig::default().physical_fingerprint());
+    }
+
+    #[test]
+    fn replication_section_parses_and_validates() {
+        let text = concat!(
+            "[replication]\nlog_capacity = 64\nsnapshot_chunk_rows = 32\n",
+            "probe_backoff_ms = 50\n",
+            "[server]\nauth_secret = \"hunter2\"\n"
+        );
+        let cfg = CosimeConfig::from_toml_str(text).unwrap();
+        assert_eq!(cfg.replication.log_capacity, 64);
+        assert_eq!(cfg.replication.snapshot_chunk_rows, 32);
+        assert_eq!(cfg.replication.probe_backoff_ms, 50);
+        assert_eq!(cfg.server.auth_secret, "hunter2");
+        // Defaults: auth off, log bounded.
+        let d = CosimeConfig::default();
+        assert!(d.server.auth_secret.is_empty());
+        assert_eq!(d.replication, ReplicationConfig::default());
+        // Round-trips through TOML text (auth_secret string key included).
+        let back = CosimeConfig::from_toml_str(&cfg.to_toml_string()).unwrap();
+        assert_eq!(back, cfg);
+        // Degenerate bounds and type errors are rejected.
+        assert!(CosimeConfig::from_toml_str("[replication]\nlog_capacity = 0\n").is_err());
+        assert!(CosimeConfig::from_toml_str("[replication]\nsnapshot_chunk_rows = 0\n").is_err());
+        assert!(CosimeConfig::from_toml_str("[replication]\nprobe_backoff_ms = 0\n").is_err());
+        assert!(CosimeConfig::from_toml_str("[replication]\nlog_cap = 9\n").is_err());
+        assert!(CosimeConfig::from_toml_str("[server]\nauth_secret = 42\n").is_err());
+        // Replication policy never invalidates physical snapshots.
+        let mut policy = CosimeConfig::default();
+        policy.replication.log_capacity = 9;
+        policy.server.auth_secret = "s".into();
         assert_eq!(policy.physical_fingerprint(), CosimeConfig::default().physical_fingerprint());
     }
 

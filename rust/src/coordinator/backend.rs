@@ -80,6 +80,11 @@ pub struct BatchResult {
     /// threshold query's match set exceeded the request `limit` and was cut
     /// to the best `limit` rows. Always all-false for top-k batches.
     pub truncated: Vec<bool>,
+    /// Degraded-scatter marker: true when a routing tier served this batch
+    /// from fewer than all of its shards (ejected members excluded), so the
+    /// hit lists are complete over the *surviving* shards only. Always
+    /// false for flat backends.
+    pub partial: bool,
 }
 
 /// A backend's identity and self-describing serving policy. The
@@ -100,6 +105,10 @@ pub struct BackendHealth {
     pub max_batch: u32,
     /// Deepest top-k the backend will accept (policy ∩ engine capability).
     pub max_k: u32,
+    /// Shards currently ejected from the scatter by health-based failover
+    /// (0 for flat backends and pre-v4 peers). When nonzero, searches are
+    /// served degraded with [`BatchResult::partial`] set.
+    pub shards_unhealthy: u32,
 }
 
 /// Write-verify cost summary as it crosses the backend surface (the scalar
@@ -134,7 +143,7 @@ impl WriteCost {
 /// An admin mutation addressed in global row ids (contrast
 /// [`AdminOp`], whose rows are service-local). The optional
 /// compare-and-swap pin travels alongside it in [`Backend::admin`].
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub enum AdminCmd {
     /// Reprogram the row with global id `row` to `word`.
     Update { row: u64, word: BitVec },
@@ -142,6 +151,53 @@ pub enum AdminCmd {
     Insert { word: BitVec },
     /// Delete the row with global id `row`.
     Delete { row: u64 },
+}
+
+/// One epoch-consistent slice of a store's programmed words, as pulled by
+/// a joining replica (one [`Backend::snapshot_chunk`] round trip). The
+/// words are post-write-verify — exactly what the primary serves — so a
+/// replica rebuilding from them is bit-exact without re-running the
+/// stochastic programming model.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SnapshotChunk {
+    /// Store epoch the cut was taken at. Every chunk of one stream must
+    /// carry the same epoch (enforced by the request pin).
+    pub epoch: u64,
+    /// Total rows in the store at the cut.
+    pub total_rows: u64,
+    /// Word width in bits.
+    pub dims: u64,
+    /// Oldest epoch the server's catch-up log can still replay *from*: a
+    /// replica finishing this snapshot must start its catch-up pulls at an
+    /// epoch `>= log_floor` or restart.
+    pub log_floor: u64,
+    /// First row of this chunk.
+    pub start_row: u64,
+    /// The chunk's programmed words, `start_row` first. Empty when
+    /// `start_row >= total_rows` (the stream is complete).
+    pub rows: Vec<BitVec>,
+}
+
+/// One committed admin op in the catch-up log. `cmd` carries the
+/// *programmed* word (post write-verify) so replay commits the primary's
+/// exact bits instead of re-programming with a different RNG stream.
+#[derive(Debug, Clone, PartialEq)]
+pub struct CatchupEntry {
+    /// Store epoch this op committed at (each commit bumps the epoch by 1).
+    pub epoch: u64,
+    /// The op, addressed in the owning store's global row ids.
+    pub cmd: AdminCmd,
+}
+
+/// A catch-up log pull: every retained op after the requested epoch, plus
+/// the serving epoch so the replica knows when it has fully caught up.
+#[derive(Debug, Clone, PartialEq)]
+pub struct CatchupBatch {
+    /// The store's serving epoch at pull time; a replica is caught up when
+    /// its own epoch reaches this.
+    pub serving_epoch: u64,
+    /// Retained ops with `epoch > from_epoch`, oldest first.
+    pub entries: Vec<CatchupEntry>,
 }
 
 /// Outcome of a committed [`AdminCmd`].
@@ -250,6 +306,30 @@ pub trait Backend: Send + Sync {
     /// backends merges percentiles exactly.
     fn metrics(&self) -> Result<MetricsSnapshot, SubmitError>;
 
+    /// Pull one epoch-consistent slice of the store's programmed words
+    /// (replication, v4). `pin = None` on the first chunk learns the cut
+    /// epoch; later chunks pin it, and a store that moved in between
+    /// rejects with [`SubmitError::EpochMismatch`] — restart from row 0.
+    /// Backends that cannot serve snapshots (e.g. routers, whose children
+    /// each own their rows) reject with [`SubmitError::BadQuery`].
+    fn snapshot_chunk(
+        &self,
+        pin: Option<u64>,
+        start_row: u64,
+        max_rows: u64,
+    ) -> Result<SnapshotChunk, SubmitError> {
+        let _ = (pin, start_row, max_rows);
+        Err(SubmitError::BadQuery("backend does not serve snapshots".into()))
+    }
+
+    /// Pull the retained catch-up log after `from_epoch` (replication,
+    /// v4). A pull below the log floor rejects with
+    /// [`SubmitError::LogTruncated`] — restart from a full snapshot.
+    fn catchup(&self, from_epoch: u64) -> Result<CatchupBatch, SubmitError> {
+        let _ = from_epoch;
+        Err(SubmitError::BadQuery("backend does not serve the catch-up log".into()))
+    }
+
     /// Stop accepting submissions. In-flight work drains asynchronously;
     /// the call does not block on it.
     fn close(&self);
@@ -314,7 +394,7 @@ impl LocalCompletion {
             results.push(hits);
             truncated.push(trunc);
         }
-        BatchResult { epoch: self.epoch, results, truncated }
+        BatchResult { epoch: self.epoch, results, truncated, partial: false }
     }
 }
 
@@ -416,11 +496,25 @@ impl Backend for LocalBackend {
             shards: 1,
             max_batch: self.svc.policy().max_batch.min(u32::MAX as usize) as u32,
             max_k: self.svc.effective_max_k().min(u32::MAX as usize) as u32,
+            shards_unhealthy: 0,
         })
     }
 
     fn metrics(&self) -> Result<MetricsSnapshot, SubmitError> {
         Ok(self.svc.metrics())
+    }
+
+    fn snapshot_chunk(
+        &self,
+        pin: Option<u64>,
+        start_row: u64,
+        max_rows: u64,
+    ) -> Result<SnapshotChunk, SubmitError> {
+        self.svc.snapshot_chunk(pin, start_row, max_rows)
+    }
+
+    fn catchup(&self, from_epoch: u64) -> Result<CatchupBatch, SubmitError> {
+        self.svc.catchup(from_epoch)
     }
 
     fn close(&self) {

@@ -136,6 +136,7 @@ struct Inner {
     kinds: [KindLane; 2],
     admin: [AdminLane; 3],
     admin_rejected: u64,
+    degraded: u64,
     write_cells: u64,
     write_pulses: u64,
     write_energy_j: f64,
@@ -270,6 +271,10 @@ pub struct MetricsSnapshot {
     pub admin: Vec<AdminLaneSnapshot>,
     /// Admin ops rejected (bad row, dims mismatch, verify failure).
     pub admin_rejected: u64,
+    /// Search batches served *degraded*: a scatter-gather answer assembled
+    /// without one or more unhealthy shards (its responses carried the
+    /// typed partial flag). Always 0 on a flat local stack.
+    pub degraded: u64,
     /// Cumulative write cost of the admin plane.
     pub write: WriteCostSnapshot,
     /// Full queue/exec/total histograms behind the percentile fields.
@@ -310,6 +315,7 @@ impl Metrics {
                     AdminLane { completed: 0, total_us: h() },
                 ],
                 admin_rejected: 0,
+                degraded: 0,
                 write_cells: 0,
                 write_pulses: 0,
                 write_energy_j: 0.0,
@@ -400,6 +406,12 @@ impl Metrics {
         lock_recover(&self.inner).admin_rejected += 1;
     }
 
+    /// Record a scatter-gather batch served without one or more unhealthy
+    /// shards (the responses carried the typed partial flag).
+    pub fn on_degraded(&self) {
+        lock_recover(&self.inner).degraded += 1;
+    }
+
     /// Consistent point-in-time copy of every counter and histogram.
     pub fn snapshot(&self) -> MetricsSnapshot {
         let g = lock_recover(&self.inner);
@@ -462,6 +474,7 @@ impl Metrics {
                 })
                 .collect(),
             admin_rejected: g.admin_rejected,
+            degraded: g.degraded,
             write: WriteCostSnapshot {
                 cells: g.write_cells,
                 pulses: g.write_pulses,
@@ -527,6 +540,12 @@ impl MetricsSnapshot {
                 self.admin_rejected
             ));
         }
+        if self.degraded > 0 {
+            out.push_str(&format!(
+                "\n  degraded: {} scatter batches served with shards missing",
+                self.degraded
+            ));
+        }
         out
     }
 }
@@ -551,6 +570,11 @@ mod tests {
         assert_eq!(s.completed, 1);
         assert!((s.mean_batch_size - 6.0).abs() < 1e-9);
         assert!(s.total_p50_us >= 100.0);
+        assert_eq!(s.degraded, 0);
+        m.on_degraded();
+        let s = m.snapshot();
+        assert_eq!(s.degraded, 1);
+        assert!(s.report().contains("degraded: 1"));
     }
 
     #[test]

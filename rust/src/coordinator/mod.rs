@@ -49,8 +49,8 @@ pub mod service;
 pub mod tiles;
 
 pub use backend::{
-    AdminCmd, AdminOutcome, Backend, BackendHealth, BatchResult, Hit, LocalBackend, Ticket,
-    WriteCost,
+    AdminCmd, AdminOutcome, Backend, BackendHealth, BatchResult, CatchupBatch, CatchupEntry, Hit,
+    LocalBackend, SnapshotChunk, Ticket, WriteCost,
 };
 pub use batcher::Batcher;
 pub use metrics::{

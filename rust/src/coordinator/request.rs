@@ -30,6 +30,17 @@ pub enum SubmitError {
         /// The shard epoch actually observed under the commit lock.
         actual: u64,
     },
+    /// The connection has not completed the shared-secret hello handshake
+    /// (or presented the wrong secret) against a server that configures
+    /// `[server] auth_secret`. Hello and retry.
+    Unauthorized,
+    /// A catch-up pull asked for epochs the bounded replication log has
+    /// already evicted. Restart from a full snapshot.
+    LogTruncated {
+        /// Oldest epoch the log can still replay *from* (exclusive): pulls
+        /// with `from_epoch >= floor` succeed.
+        floor: u64,
+    },
     /// Transport failure talking to a remote backend (connection refused,
     /// reset, or a protocol-level frame error). The request may or may not
     /// have reached the server.
@@ -46,6 +57,13 @@ impl std::fmt::Display for SubmitError {
             SubmitError::EpochMismatch { expected, actual } => write!(
                 f,
                 "epoch mismatch: expected shard epoch {expected}, store is at {actual}"
+            ),
+            SubmitError::Unauthorized => {
+                write!(f, "unauthorized: hello handshake required or secret mismatch")
+            }
+            SubmitError::LogTruncated { floor } => write!(
+                f,
+                "catch-up log truncated: oldest replayable epoch is {floor}, take a full snapshot"
             ),
             SubmitError::Io(msg) => write!(f, "backend i/o: {msg}"),
         }

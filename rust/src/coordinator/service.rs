@@ -19,6 +19,7 @@
 //! under its epoch lock. In-flight batches keep scoring the old snapshot;
 //! every response is stamped with the epoch it was served at.
 
+use std::collections::VecDeque;
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{mpsc, Arc, Mutex};
 use std::time::{Duration, Instant};
@@ -30,6 +31,7 @@ use crate::config::{CoordinatorConfig, CosimeConfig};
 use crate::util::sync::lock_recover;
 use crate::util::{BitVec, Rng};
 
+use super::backend::{AdminCmd, CatchupBatch, CatchupEntry, SnapshotChunk};
 use super::batcher::Batcher;
 use super::metrics::{Metrics, MetricsSnapshot};
 use super::request::{AdminOp, AdminResponse, RequestTiming, SearchResponse, SubmitError};
@@ -53,6 +55,41 @@ struct WritePath {
     rng: Rng,
 }
 
+/// Bounded catch-up log of committed admin ops — the replication feed.
+///
+/// Entries carry the *programmed* word exactly as it was committed on this
+/// node (post write-verify), so replaying an entry on a replica is bit-exact
+/// by construction: the replica commits the carried bits directly and never
+/// re-runs the stochastic programming model. Entries are kept oldest-first
+/// with strictly increasing epochs; eviction advances `floor`.
+struct ReplLog {
+    entries: VecDeque<CatchupEntry>,
+    /// Oldest epoch a catch-up pull can start *from*: a pull with
+    /// `from_epoch >= floor` can be served entirely from `entries`; below it
+    /// the requested history is gone and the puller must take a snapshot.
+    floor: u64,
+    capacity: usize,
+}
+
+impl ReplLog {
+    /// Insert a committed entry, keeping epoch order. Commits serialize
+    /// under the tile write lock but pushes happen after it is released, so
+    /// two writers can arrive here out of order — walk back from the tail
+    /// (in practice this is a straight append).
+    fn push(&mut self, entry: CatchupEntry) {
+        let mut i = self.entries.len();
+        while i > 0 && self.entries[i - 1].epoch > entry.epoch {
+            i -= 1;
+        }
+        self.entries.insert(i, entry);
+        while self.entries.len() > self.capacity {
+            if let Some(evicted) = self.entries.pop_front() {
+                self.floor = self.floor.max(evicted.epoch);
+            }
+        }
+    }
+}
+
 struct Shared {
     batcher: Batcher<Job>,
     tiles: TileManager,
@@ -72,6 +109,13 @@ struct Shared {
     /// clients (wire-level batching hints).
     policy: CoordinatorConfig,
     write: Mutex<WritePath>,
+    /// Replication feed: committed admin ops with their programmed words,
+    /// bounded by `[replication] log_capacity`.
+    log: Mutex<ReplLog>,
+    /// Server-side cap on one snapshot chunk's row count
+    /// (`[replication] snapshot_chunk_rows`); pullers asking for more get a
+    /// shorter chunk and advance by what they received.
+    snapshot_chunk_rows: usize,
 }
 
 /// Handle to a running AM service. Cloneable; dropping all clones does NOT
@@ -97,6 +141,10 @@ impl AmService {
     /// programming model and `cfg.write` its pulse/retry policy.
     pub fn start_with_config(full: &CosimeConfig, tiles: TileManager) -> AmService {
         let cfg = &full.coordinator;
+        // A replica seeds its tile epoch to the snapshot cut *before*
+        // starting the service, so the log's floor starts at the cut: the
+        // history below it was never seen here and cannot be replayed.
+        let log_floor = tiles.epoch();
         let shared = Arc::new(Shared {
             batcher: Batcher::new(
                 cfg.max_batch,
@@ -113,6 +161,12 @@ impl AmService {
                 cfg: full.clone(),
                 rng: Rng::seed_from_u64(full.write.seed),
             }),
+            log: Mutex::new(ReplLog {
+                entries: VecDeque::new(),
+                floor: log_floor,
+                capacity: full.replication.log_capacity.max(1),
+            }),
+            snapshot_chunk_rows: full.replication.snapshot_chunk_rows.max(1),
         });
         let workers = (0..cfg.workers.max(1))
             .map(|w| {
@@ -392,6 +446,10 @@ impl AmService {
                     .tiles
                     .update_row_cas(row, &programmed, expected_epoch)
                     .map_err(Self::admin_err)?;
+                self.push_log(CatchupEntry {
+                    epoch: commit.epoch,
+                    cmd: AdminCmd::Update { row: row as u64, word: programmed },
+                });
                 Ok((row, commit, Some(report)))
             }
             AdminOp::Insert { word } => {
@@ -401,6 +459,10 @@ impl AmService {
                     .tiles
                     .insert_row_cas(&programmed, expected_epoch)
                     .map_err(Self::admin_err)?;
+                self.push_log(CatchupEntry {
+                    epoch: commit.epoch,
+                    cmd: AdminCmd::Insert { word: programmed },
+                });
                 Ok((row, commit, Some(report)))
             }
             AdminOp::Delete { row } => {
@@ -409,6 +471,10 @@ impl AmService {
                     .tiles
                     .delete_row_cas(row, expected_epoch)
                     .map_err(Self::admin_err)?;
+                self.push_log(CatchupEntry {
+                    epoch: commit.epoch,
+                    cmd: AdminCmd::Delete { row: row as u64 },
+                });
                 Ok((row, commit, None))
             }
         }
@@ -433,6 +499,129 @@ impl AmService {
             self.shared.metrics.on_write_spent(&e.report);
             SubmitError::WriteFailed(e.to_string())
         })
+    }
+
+    /// Record a committed mutation in the replication feed.
+    fn push_log(&self, entry: CatchupEntry) {
+        lock_recover(&self.shared.log).push(entry);
+    }
+
+    /// Serve one epoch-consistent slice of the store for a joining replica.
+    ///
+    /// The slice is cut under the tile read lock, so its rows and its
+    /// `epoch` stamp belong to one consistent store state. A multi-chunk
+    /// pull pins the first chunk's epoch on every later request
+    /// (`pin = Some(e)`): if an admin commit moved the store in between,
+    /// the pull is rejected with [`SubmitError::EpochMismatch`] and the
+    /// replica restarts from row 0 — chunks from different epochs never
+    /// mix. Rows are the *programmed* words as served here, so a replica
+    /// loading them is bit-exact. The server caps the chunk at its
+    /// configured `[replication] snapshot_chunk_rows`; pullers advance by
+    /// the row count actually returned.
+    pub fn snapshot_chunk(
+        &self,
+        pin: Option<u64>,
+        start_row: u64,
+        max_rows: u64,
+    ) -> Result<SnapshotChunk, SubmitError> {
+        if !self.shared.running.load(Ordering::Acquire) {
+            return Err(SubmitError::Closed);
+        }
+        if max_rows == 0 {
+            return Err(SubmitError::BadQuery("snapshot chunk max_rows must be at least 1".into()));
+        }
+        let start = usize::try_from(start_row).map_err(|_| {
+            SubmitError::BadQuery(format!(
+                "snapshot start row {start_row:#x} does not fit this platform's usize"
+            ))
+        })?;
+        let max =
+            usize::try_from(max_rows).unwrap_or(usize::MAX).min(self.shared.snapshot_chunk_rows);
+        let (epoch, total, rows) = self.shared.tiles.snapshot_range(start, max);
+        if let Some(p) = pin {
+            if p != epoch {
+                return Err(SubmitError::EpochMismatch { expected: p, actual: epoch });
+            }
+        }
+        let log_floor = lock_recover(&self.shared.log).floor;
+        Ok(SnapshotChunk {
+            epoch,
+            total_rows: total as u64,
+            dims: self.shared.tiles.dims() as u64,
+            log_floor,
+            start_row,
+            rows,
+        })
+    }
+
+    /// Serve the catch-up feed: every logged mutation with epoch
+    /// `> from_epoch`, plus the serving epoch the puller should replay up
+    /// to. A pull below the log's floor (the history was evicted) is
+    /// rejected with [`SubmitError::LogTruncated`] carrying the floor — the
+    /// puller restarts from a full snapshot. The returned `serving_epoch`
+    /// is read after the entries are collected, so it is always ≥ every
+    /// returned entry's epoch; an entry committed but not yet logged at
+    /// collection time simply arrives on the puller's next round.
+    pub fn catchup(&self, from_epoch: u64) -> Result<CatchupBatch, SubmitError> {
+        if !self.shared.running.load(Ordering::Acquire) {
+            return Err(SubmitError::Closed);
+        }
+        let entries: Vec<CatchupEntry> = {
+            let log = lock_recover(&self.shared.log);
+            if from_epoch < log.floor {
+                return Err(SubmitError::LogTruncated { floor: log.floor });
+            }
+            log.entries.iter().filter(|e| e.epoch > from_epoch).cloned().collect()
+        };
+        let serving_epoch = self.shared.tiles.epoch();
+        Ok(CatchupBatch { serving_epoch, entries })
+    }
+
+    /// Apply one replicated catch-up entry bit-exact.
+    ///
+    /// The entry carries the word exactly as the primary committed it
+    /// (post write-verify), so this commits the bits directly — bypassing
+    /// the local programming model, which the primary already paid for —
+    /// with a CAS pin of `entry.epoch - 1`: the commit lands only if this
+    /// store is exactly one epoch behind the entry, which guarantees the
+    /// post-commit epoch equals the entry's. Any mismatch surfaces as
+    /// [`SubmitError::EpochMismatch`] — the replica's history would
+    /// otherwise fork from the primary's. Applied entries re-enter the
+    /// local replication feed, so a caught-up replica can serve
+    /// [`AmService::catchup`] itself.
+    pub fn apply_replicated(&self, entry: CatchupEntry) -> Result<(), SubmitError> {
+        if !self.shared.running.load(Ordering::Acquire) {
+            return Err(SubmitError::Closed);
+        }
+        if entry.epoch == 0 {
+            return Err(SubmitError::BadQuery(
+                "catch-up entry epoch 0 is not a committed mutation".into(),
+            ));
+        }
+        let local_row = |row: u64| -> Result<usize, SubmitError> {
+            usize::try_from(row).map_err(|_| {
+                SubmitError::BadQuery(format!(
+                    "row id {row:#x} does not fit this platform's usize"
+                ))
+            })
+        };
+        let pin = Some(entry.epoch - 1);
+        match &entry.cmd {
+            AdminCmd::Update { row, word } => {
+                self.shared
+                    .tiles
+                    .update_row_cas(local_row(*row)?, word, pin)
+                    .map_err(Self::admin_err)?;
+            }
+            AdminCmd::Insert { word } => {
+                self.shared.tiles.insert_row_cas(word, pin).map_err(Self::admin_err)?;
+            }
+            AdminCmd::Delete { row } => {
+                self.shared.tiles.delete_row_cas(local_row(*row)?, pin).map_err(Self::admin_err)?;
+            }
+        }
+        self.push_log(entry);
+        Ok(())
     }
 
     /// Current store epoch (bumped by every committed admin mutation).
@@ -1204,6 +1393,139 @@ mod tests {
             let _ = rx.recv();
         }
         assert_eq!(svc.metrics().rejected_busy as usize, busy);
+        svc.shutdown();
+    }
+
+    /// Pull every snapshot chunk from `primary` (pinning the first chunk's
+    /// epoch), build a fresh service over the streamed rows, and seed its
+    /// epoch to the cut.
+    fn replica_from_snapshot(primary: &AmService, cfg: &CosimeConfig) -> AmService {
+        let mut rows: Vec<BitVec> = Vec::new();
+        let mut pin = None;
+        loop {
+            let chunk = primary.snapshot_chunk(pin, rows.len() as u64, 7).unwrap();
+            pin = Some(chunk.epoch);
+            rows.extend(chunk.rows);
+            if rows.len() as u64 >= chunk.total_rows {
+                let tiles = TileManager::build(rows, 64, |w| {
+                    Ok::<Box<dyn AmEngine>, anyhow::Error>(Box::new(DigitalExactEngine::new(w)))
+                })
+                .unwrap();
+                tiles.seed_epoch(chunk.epoch);
+                return AmService::start_with_config(cfg, tiles);
+            }
+        }
+    }
+
+    #[test]
+    fn snapshot_plus_catchup_replays_bit_exact() {
+        let full = CosimeConfig::default();
+        let (svc, _) = service(40, 64, &full.coordinator);
+        let mut r = rng(21);
+        // Commit some history before the cut...
+        for _ in 0..3 {
+            svc.admin(AdminOp::Insert { word: BitVec::random(64, 0.5, &mut r) }).unwrap();
+        }
+        let replica = replica_from_snapshot(&svc, &full);
+        assert_eq!(replica.epoch(), svc.epoch(), "replica seeded to the cut epoch");
+        assert_eq!(replica.rows(), svc.rows());
+        // ...then more after it: update, insert, delete.
+        svc.admin(AdminOp::Update { row: 5, word: BitVec::random(64, 0.5, &mut r) }).unwrap();
+        svc.admin(AdminOp::Insert { word: BitVec::random(64, 0.5, &mut r) }).unwrap();
+        svc.admin(AdminOp::Delete { row: 0 }).unwrap();
+        // Replay the catch-up feed to the serving epoch.
+        loop {
+            let batch = svc.catchup(replica.epoch()).unwrap();
+            for e in batch.entries {
+                replica.apply_replicated(e).unwrap();
+            }
+            if replica.epoch() >= batch.serving_epoch {
+                break;
+            }
+        }
+        assert_eq!(replica.epoch(), svc.epoch());
+        // Bit-exact: identical winners and scores on both stores (the log
+        // carries the programmed words, so no RNG divergence).
+        for _ in 0..20 {
+            let q = BitVec::random(64, 0.5, &mut r);
+            let a = svc.search_topk_blocking(q.clone(), 3).unwrap();
+            let b = replica.search_topk_blocking(q, 3).unwrap();
+            assert_eq!(a.hits.len(), b.hits.len());
+            for (x, y) in a.hits.iter().zip(&b.hits) {
+                assert_eq!((x.winner, x.score), (y.winner, y.score));
+            }
+        }
+        // The caught-up replica can itself serve replication.
+        let batch = replica.catchup(svc.epoch() - 1).unwrap();
+        assert_eq!(batch.entries.len(), 1);
+        replica.shutdown();
+        svc.shutdown();
+    }
+
+    #[test]
+    fn catchup_log_is_bounded_and_truncation_is_typed() {
+        let mut full = CosimeConfig::default();
+        full.replication.log_capacity = 4;
+        let mut r = rng(22);
+        let words: Vec<BitVec> = (0..8).map(|_| BitVec::random(64, 0.5, &mut r)).collect();
+        let tiles = TileManager::build(words, 64, |w| {
+            Ok::<Box<dyn AmEngine>, anyhow::Error>(Box::new(DigitalExactEngine::new(w)))
+        })
+        .unwrap();
+        let svc = AmService::start_with_config(&full, tiles);
+        for _ in 0..7 {
+            svc.admin(AdminOp::Insert { word: BitVec::random(64, 0.5, &mut r) }).unwrap();
+        }
+        // Epochs 1..=7 committed, capacity 4: the log holds (3, 7].
+        let ok = svc.catchup(3).unwrap();
+        assert_eq!(ok.entries.len(), 4);
+        assert_eq!(ok.serving_epoch, 7);
+        match svc.catchup(2) {
+            Err(SubmitError::LogTruncated { floor }) => assert_eq!(floor, 3),
+            other => panic!("expected LogTruncated, got {other:?}"),
+        }
+        // The floor is also advertised on snapshot chunks.
+        let chunk = svc.snapshot_chunk(None, 0, 1).unwrap();
+        assert_eq!(chunk.log_floor, 3);
+        assert_eq!(chunk.total_rows, 15);
+        svc.shutdown();
+    }
+
+    #[test]
+    fn snapshot_pin_rejects_mid_stream_commits() {
+        let full = CosimeConfig::default();
+        let (svc, _) = service(10, 64, &full.coordinator);
+        let first = svc.snapshot_chunk(None, 0, 4).unwrap();
+        assert_eq!(first.rows.len(), 4);
+        let mut r = rng(23);
+        svc.admin(AdminOp::Insert { word: BitVec::random(64, 0.5, &mut r) }).unwrap();
+        match svc.snapshot_chunk(Some(first.epoch), 4, 4) {
+            Err(SubmitError::EpochMismatch { expected, actual }) => {
+                assert_eq!(expected, first.epoch);
+                assert_eq!(actual, first.epoch + 1);
+            }
+            other => panic!("expected EpochMismatch, got {other:?}"),
+        }
+        // An unpinned pull (restart) sees the new epoch.
+        assert_eq!(svc.snapshot_chunk(None, 0, 4).unwrap().epoch, first.epoch + 1);
+        svc.shutdown();
+    }
+
+    #[test]
+    fn replicated_entries_must_arrive_in_epoch_order() {
+        let full = CosimeConfig::default();
+        let (svc, _) = service(10, 64, &full.coordinator);
+        let mut r = rng(24);
+        let word = BitVec::random(64, 0.5, &mut r);
+        // Store is at epoch 0; an entry claiming epoch 5 must not apply.
+        let entry = CatchupEntry { epoch: 5, cmd: AdminCmd::Insert { word } };
+        match svc.apply_replicated(entry) {
+            Err(SubmitError::EpochMismatch { expected, actual }) => {
+                assert_eq!((expected, actual), (4, 0));
+            }
+            other => panic!("expected EpochMismatch, got {other:?}"),
+        }
+        assert_eq!(svc.rows(), 10, "store unchanged after the rejected entry");
         svc.shutdown();
     }
 }

@@ -237,6 +237,35 @@ impl TileManager {
         set.words.iter().flat_map(|w| w.iter().cloned()).collect()
     }
 
+    /// One epoch-consistent slice of the stored words for snapshot
+    /// streaming: `(epoch, total_rows, words[start..start+max])` in global
+    /// row order. Epoch and rows are read under the same read guard that
+    /// copies the words — commits take the write lock, so the three cannot
+    /// tear against a concurrent mutation.
+    pub fn snapshot_range(&self, start: usize, max: usize) -> (u64, usize, Vec<BitVec>) {
+        // lint: allow(no-panic) -- a poisoned epoch lock means a mutator panicked mid-commit; serving or mutating a possibly-torn store would silently corrupt results, so propagating the panic is the correct policy.
+        let set = self.inner.read().unwrap();
+        let epoch = self.epoch.load(Ordering::Acquire);
+        let total = set.total_rows;
+        let rows = set
+            .words
+            .iter()
+            .flat_map(|w| w.iter())
+            .skip(start.min(total))
+            .take(max)
+            .cloned()
+            .collect();
+        (epoch, total, rows)
+    }
+
+    /// Overwrite the store epoch — a replica that just loaded a streamed
+    /// snapshot seeds the primary's cut epoch here so catch-up replay and
+    /// epoch-stamped responses line up with the primary's history. Never
+    /// call this on a store already serving mutations.
+    pub fn seed_epoch(&self, epoch: u64) {
+        self.epoch.store(epoch, Ordering::Release);
+    }
+
     /// Fresh (empty) scratch for [`TileManager::search_block`]; buffers grow
     /// on first use and are reused thereafter.
     pub fn scratch(&self) -> TileScratch {

@@ -11,11 +11,18 @@
 //!             protocol over TCP (--shards S fans the store across S
 //!             coordinator stacks; --io threaded|eventloop picks the I/O
 //!             engine; --duration SECS exits after a while, 0 = run until
-//!             killed; see examples/loadgen.rs for a client)
+//!             killed; see examples/loadgen.rs for a client;
+//!             --replica-of HOST:PORT joins a primary instead of loading a
+//!             local store: snapshot pull + catch-up replay, then serve
+//!             while a background thread keeps tracking)
 //!   route     start a routing tier: a cosimed server whose shards are
 //!             *remote* cosimed servers (--remote a:p,b:p or
 //!             `[server] remote_shards` in --config), scatter-gather over
 //!             the wire with the same global-id scheme as local shards
+//!   replicate pull one epoch-consistent snapshot from a live primary over
+//!             the wire (--from HOST:PORT) and persist it as a local AM
+//!             snapshot (--out PATH), catch-up log replayed to the serving
+//!             epoch first
 //!   hdc       train + evaluate the HDC case study end to end
 //!             (--snapshot PATH saves the trained AM, write costs included)
 //!   live      train → snapshot → warm-start a server → stream online HDC
@@ -43,13 +50,15 @@ use cosime::am::kernel::simd;
 use cosime::am::store::AmStore;
 use cosime::am::{AmEngine, DigitalExactEngine};
 use cosime::config::{CosimeConfig, IoMode};
-use cosime::coordinator::{AdminOp, AmService, Backend, TileManager};
+use cosime::coordinator::{AdminOp, AmService, Backend, LocalBackend, TileManager};
 use cosime::hdc::{
     evaluate_service_accuracy, Dataset, DatasetSpec, HdcModel, SyntheticParams, TrainConfig,
 };
 use cosime::repro;
 use cosime::runtime::{RuntimeHandle, XlaAmEngine};
-use cosime::server::{CosimeServer, RemoteBackend, RouterBackend, ShardRouter};
+use cosime::server::{
+    bootstrap, CosimeServer, RemoteBackend, ReplicaSync, RouterBackend, ShardRouter,
+};
 use cosime::util::cli::Args;
 use cosime::util::{rng, BitVec};
 use std::time::Instant;
@@ -103,6 +112,7 @@ fn dispatch(args: &Args) -> Result<()> {
         Some("search") => cmd_search(args),
         Some("serve") => cmd_serve(args),
         Some("route") => cmd_route(args),
+        Some("replicate") => cmd_replicate(args),
         Some("hdc") => cmd_hdc(args),
         Some("live") => cmd_live(args),
         Some("artifacts") => cmd_artifacts(args),
@@ -121,7 +131,7 @@ fn print_usage() {
         "cosime — FeFET in-memory cosine-similarity search engine (ICCAD'22 reproduction)\n\n\
          usage: cosime <subcommand> [flags]\n\n\
          repro:  fig1 fig2 fig4a fig4b fig6 fig7 fig8 fig9 table1 table2 all\n\
-         system: search serve route hdc live artifacts bench lint\n\n\
+         system: search serve route replicate hdc live artifacts bench lint\n\n\
          flags:  --results DIR  --seed N  --subsample F  --trials N\n\
                  --engine digital|analog|xla|multibit  --rows N --dims N --queries N --k N\n\
                  --snapshot PATH (hdc: save trained AM; serve: warm-start from it)\n\
@@ -129,6 +139,8 @@ fn print_usage() {
                  --config FILE (serve: TCP frontend; drive it with\n\
                  `cargo run --release --example loadgen`)\n\
                  --remote A:P,B:P (route: the remote shard servers to fan over)\n\
+                 --replica-of HOST:PORT (serve: join a primary over the wire)\n\
+                 --from HOST:PORT --out PATH (replicate: snapshot a primary)\n\
                  --out DIR --quick --only kernel|serving --check (bench)\n\
          env:    COSIME_KERNEL=auto|scalar|avx2|avx512|neon forces the popcount\n\
                  kernel dispatch path (unavailable paths fall back with a warning)"
@@ -261,6 +273,9 @@ fn cmd_serve_tcp(args: &Args) -> Result<()> {
     cfg.validate()?;
     let kern = simd::pin(&cfg.kernel.path);
     println!("search kernel: {} dispatch", kern.path().as_str());
+    if let Some(primary) = args.get("replica-of") {
+        return serve_replica(args, &cfg, primary);
+    }
     let seed = args.get_u64("seed", 2);
     let engine_kind = args.get_str("engine", "digital").to_string();
     let words = serve_words(args, &cfg, seed)?;
@@ -352,6 +367,106 @@ fn cmd_route(args: &Args) -> Result<()> {
         shards
     );
     serve_until_done(args, server)
+}
+
+/// `serve --listen ADDR --replica-of PRIMARY`: join a primary over the wire
+/// — pull an epoch-consistent snapshot cut, replay the catch-up log to the
+/// primary's serving epoch — then serve the replica store while a
+/// background sync thread keeps tracking new commits. The sync cadence and
+/// snapshot chunk size come from `[replication]`; the hello secret (if the
+/// primary requires one) from `[server] auth_secret`.
+fn serve_replica(args: &Args, cfg: &CosimeConfig, primary: &str) -> Result<()> {
+    let seed = args.get_u64("seed", 2);
+    let engine_kind = args.get_str("engine", "digital").to_string();
+    let backoff = std::time::Duration::from_millis(cfg.replication.probe_backoff_ms);
+    let source = RemoteBackend::connect_opts(primary, cfg.server.auth_secret.as_bytes(), backoff)?;
+    let h = source.connect_health();
+    println!("primary {primary}: {} rows x {} bits, epoch {}", h.rows, h.dims, h.epoch);
+    let ek = engine_kind.clone();
+    let factory = move |w: Vec<BitVec>| build_engine(&ek, w, seed);
+    let svc = bootstrap(
+        &source,
+        cfg,
+        cfg.array.rows,
+        cfg.replication.snapshot_chunk_rows as u64,
+        factory,
+    )
+    .map_err(|e| anyhow::anyhow!("replica bootstrap from {primary}: {e}"))?;
+    println!(
+        "replica store: {} rows x {} bits at epoch {} ({} engine)",
+        svc.rows(),
+        svc.dims(),
+        svc.epoch(),
+        engine_kind
+    );
+    let sync = ReplicaSync::spawn(Box::new(source), svc.clone(), backoff);
+    let server =
+        CosimeServer::serve_backend(&cfg.server, std::sync::Arc::new(LocalBackend::new(svc)))?;
+    println!(
+        "cosimed replica listening on {} ({} io), tracking {primary} every {} ms",
+        server.local_addr(),
+        server.io_mode().as_str(),
+        cfg.replication.probe_backoff_ms
+    );
+    let done = serve_until_done(args, server);
+    if sync.stale() {
+        eprintln!("warning: replica fell below the primary's catch-up log; re-run to re-snapshot");
+    }
+    sync.stop();
+    done
+}
+
+/// `replicate --from PRIMARY --out PATH`: pull one epoch-consistent
+/// snapshot cut from a live primary over the wire, replay the catch-up log
+/// to the serving epoch, and persist the result as a local AM snapshot.
+/// Every row goes through the write-verify programming path on the way to
+/// disk, so the saved store carries real write costs like any other
+/// snapshot and warm-starts `serve --snapshot` directly.
+fn cmd_replicate(args: &Args) -> Result<()> {
+    let cfg = match args.get("config") {
+        Some(path) => CosimeConfig::from_toml_file(path)?,
+        None => CosimeConfig::default(),
+    };
+    cfg.validate()?;
+    let primary = match args.get("from") {
+        Some(a) => a,
+        None => bail!("replicate needs a primary: --from HOST:PORT"),
+    };
+    let out = match args.get("out") {
+        Some(p) => p,
+        None => bail!("replicate needs a destination: --out PATH"),
+    };
+    let backoff = std::time::Duration::from_millis(cfg.replication.probe_backoff_ms);
+    let source = RemoteBackend::connect_opts(primary, cfg.server.auth_secret.as_bytes(), backoff)?;
+    let h = source.connect_health();
+    println!("primary {primary}: {} rows x {} bits, epoch {}", h.rows, h.dims, h.epoch);
+    // A short-lived local service lets the catch-up replay run through the
+    // same epoch-CAS path a serving replica uses, so the persisted cut is
+    // the primary's *serving* epoch, not just the snapshot pin.
+    let svc = bootstrap(
+        &source,
+        &cfg,
+        cfg.array.rows,
+        cfg.replication.snapshot_chunk_rows as u64,
+        |w| Ok(Box::new(DigitalExactEngine::new(w)) as Box<dyn AmEngine>),
+    )
+    .map_err(|e| anyhow::anyhow!("replica pull from {primary}: {e}"))?;
+    let words = svc.snapshot_words();
+    let epoch = svc.epoch();
+    svc.shutdown();
+    source.close();
+    let mut store = AmStore::new(&cfg, words[0].len());
+    for (i, w) in words.iter().enumerate() {
+        store.insert(&format!("row-{i}"), w)?;
+    }
+    store.save(out)?;
+    println!(
+        "replicated {} rows x {} bits (cut epoch {epoch}) -> {out} ({})",
+        store.rows(),
+        store.dims(),
+        store.write_stats().report()
+    );
+    Ok(())
 }
 
 fn cmd_serve(args: &Args) -> Result<()> {

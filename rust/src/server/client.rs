@@ -21,8 +21,8 @@ use anyhow::{bail, Context, Result};
 use crate::util::BitVec;
 
 use super::protocol::{
-    self, Op, WireAdminOp, WireAdminResponse, WireError, WireHealth, WireHit, WireMatchList,
-    WireMetrics, WireSearchResponse, WireThresholdResponse,
+    self, Op, WireAdminOp, WireAdminResponse, WireCatchupBatch, WireError, WireHealth, WireHit,
+    WireMatchList, WireMetrics, WireSearchResponse, WireSnapshotChunk, WireThresholdResponse,
 };
 
 /// Default cap on response frames the client will accept. Deliberately far
@@ -216,6 +216,47 @@ impl Client {
         let (code, payload) = protocol::encode_admin_request(op, expected_epoch);
         let resp = self.round_trip(code, &payload, Op::AdminOk)?;
         Ok(protocol::decode_admin_response(&resp)?)
+    }
+
+    /// Authenticate this connection with the server's shared secret
+    /// (protocol v4 hello handshake). Required before any other op against
+    /// a server configured with `[server] auth_secret`; a wrong secret is
+    /// rejected with a typed `unauthorized` [`WireError`] and the
+    /// connection stays open for another attempt.
+    pub fn hello(&mut self, secret: &[u8]) -> Result<()> {
+        let payload = protocol::encode_hello_request(secret);
+        let resp = self.round_trip(Op::Hello, &payload, Op::HelloOk)?;
+        if !resp.is_empty() {
+            bail!("HelloOk carried {} unexpected payload bytes", resp.len());
+        }
+        Ok(())
+    }
+
+    /// Pull one epoch-consistent snapshot chunk (protocol v4): rows
+    /// `start_row..` of the store, at most `max_rows` of them (the server
+    /// may cap lower — advance by the returned row count). Pin later
+    /// chunks to the first chunk's epoch; a commit in between surfaces as
+    /// a typed `epoch-mismatch` [`WireError`] — restart from row 0.
+    pub fn snapshot_chunk(
+        &mut self,
+        pin: Option<u64>,
+        start_row: u64,
+        max_rows: u64,
+    ) -> Result<WireSnapshotChunk> {
+        let payload = protocol::encode_snapshot_request(pin, start_row, max_rows);
+        let resp = self.round_trip(Op::Snapshot, &payload, Op::SnapshotOk)?;
+        Ok(protocol::decode_snapshot_response(&resp)?)
+    }
+
+    /// Pull the catch-up feed (protocol v4): every logged mutation with
+    /// epoch `> from_epoch` plus the serving epoch to replay up to. A pull
+    /// below the log's floor is rejected with a typed `log-truncated`
+    /// [`WireError`] whose [`epochs`](WireError::epochs) field carries the
+    /// floor — take a full snapshot instead.
+    pub fn catchup(&mut self, from_epoch: u64) -> Result<WireCatchupBatch> {
+        let payload = protocol::encode_replicate_request(from_epoch);
+        let resp = self.round_trip(Op::Replicate, &payload, Op::ReplicateOk)?;
+        Ok(protocol::decode_replicate_response(&resp)?)
     }
 
     /// Switch to pipelined mode: queue many search frames on this

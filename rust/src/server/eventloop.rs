@@ -43,7 +43,7 @@ use std::sync::Arc;
 use std::time::Duration;
 
 use super::protocol::{self, ErrorCode, Op, WireError, WireMatchList, HEADER_LEN, MAGIC};
-use super::tcp::{handle_frame, Handled, SearchKind, Shared};
+use super::tcp::{handle_frame, ConnState, Handled, SearchKind, Shared};
 use crate::coordinator::backend::Ticket;
 
 /// One queued reply (request order).
@@ -62,6 +62,8 @@ struct Conn {
     inbuf: Vec<u8>,
     outbuf: VecDeque<u8>,
     inflight: VecDeque<Pending>,
+    /// Protocol-level connection state (hello-handshake progress).
+    state: ConnState,
     /// Peer sent EOF (or a fatal frame was queued): read no more requests.
     stop_reading: bool,
     /// Flush what is buffered, then drop the connection.
@@ -77,6 +79,7 @@ impl Conn {
             inbuf: Vec::new(),
             outbuf: VecDeque::new(),
             inflight: VecDeque::new(),
+            state: ConnState::default(),
             stop_reading: false,
             closing: false,
             dead: false,
@@ -193,7 +196,8 @@ impl Conn {
             let flags = protocol::le_u16(&self.inbuf[6..8]);
             let payload: Vec<u8> = self.inbuf[HEADER_LEN..HEADER_LEN + len].to_vec();
             self.inbuf.drain(..HEADER_LEN + len);
-            let (version, handled) = handle_frame(shared, version, op_byte, flags, &payload);
+            let (version, handled) =
+                handle_frame(shared, &mut self.state, version, op_byte, flags, &payload);
             self.inflight.push_back(match handled {
                 Handled::Immediate(op, bytes) => Pending::Done(version, op, bytes),
                 Handled::Search(kind, ticket) => Pending::Search(version, kind, ticket),
@@ -238,9 +242,16 @@ impl Conn {
                         let (op, payload) = match kind {
                             SearchKind::TopK => (
                                 Op::SearchOk,
-                                protocol::encode_search_response(result.epoch, &result.results),
+                                protocol::encode_search_response(
+                                    result.epoch,
+                                    &result.results,
+                                    version,
+                                    result.partial,
+                                ),
                             ),
                             SearchKind::Threshold => {
+                                let epoch = result.epoch;
+                                let partial = result.partial;
                                 let lists: Vec<WireMatchList> = result
                                     .results
                                     .into_iter()
@@ -249,7 +260,9 @@ impl Conn {
                                     .collect();
                                 (
                                     Op::SearchThresholdOk,
-                                    protocol::encode_threshold_response(result.epoch, &lists),
+                                    protocol::encode_threshold_response(
+                                        epoch, &lists, version, partial,
+                                    ),
                                 )
                             }
                         };

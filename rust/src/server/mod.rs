@@ -25,7 +25,14 @@
 //!   ([`shard::aggregate_metrics`]).
 //! * [`remote`] — [`remote::RemoteBackend`]: the wire protocol as a
 //!   nonblocking, completion-based `Backend`, so a remote server slots in
-//!   anywhere an in-process stack does (including as a router child).
+//!   anywhere an in-process stack does (including as a router child), with
+//!   transparent reconnect-with-backoff after transport failures.
+//! * [`replica`] — replica bootstrap and tracking: pull an epoch-consistent
+//!   snapshot cut over the wire ([`replica::pull_store`]), replay the
+//!   primary's bounded catch-up log to the serving epoch
+//!   ([`replica::catch_up`] / [`replica::bootstrap`]), then keep tracking
+//!   on a background thread ([`replica::ReplicaSync`]). This is what
+//!   `cosime serve --replica-of ADDR` runs.
 //! * [`tcp`] — [`tcp::CosimeServer`]: the TCP frontend, serving any
 //!   `Backend` with one of two I/O engines
 //!   ([`IoMode`](crate::config::IoMode)): the threaded engine (reader +
@@ -50,6 +57,8 @@ pub mod eventloop;
 pub mod protocol;
 /// Client-side backend speaking the wire protocol to a remote server.
 pub mod remote;
+/// Replica bootstrap (snapshot pull + catch-up replay) and live tracking.
+pub mod replica;
 /// Scatter-gather router over multiple shard backends.
 pub mod shard;
 /// Thread-per-connection I/O engine (`io = "threaded"`).
@@ -61,6 +70,7 @@ pub use protocol::{
     WireSearchResponse,
 };
 pub use remote::RemoteBackend;
+pub use replica::{bootstrap, catch_up, pull_store, ReplicaSync};
 pub use shard::{
     aggregate_metrics, global_row, split_row, PendingSearch, RoutedAdminResponse, RouterBackend,
     ShardRouter,

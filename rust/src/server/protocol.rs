@@ -49,7 +49,10 @@ use crate::util::{BitVec, Histogram, RunningStats};
 pub use crate::coordinator::backend::AdminCmd as WireAdminOp;
 pub use crate::coordinator::backend::AdminOutcome as WireAdminResponse;
 pub use crate::coordinator::backend::BackendHealth as WireHealth;
+pub use crate::coordinator::backend::CatchupBatch as WireCatchupBatch;
+pub use crate::coordinator::backend::CatchupEntry as WireCatchupEntry;
 pub use crate::coordinator::backend::Hit as WireHit;
+pub use crate::coordinator::backend::SnapshotChunk as WireSnapshotChunk;
 pub use crate::coordinator::backend::WriteCost as WireWriteReport;
 
 /// Frame magic: the bytes `CSME` read as a little-endian u32.
@@ -60,8 +63,13 @@ pub const MAGIC: u32 = u32::from_le_bytes(*b"CSME");
 /// and full latency histograms in the metrics response. Version 3 added the
 /// threshold query kind ([`Op::SearchThreshold`]/[`Op::SearchThresholdOk`],
 /// with a typed per-query truncation flag) and per-query-kind metrics lanes
-/// in the metrics response.
-pub const VERSION: u8 = 3;
+/// in the metrics response. Version 4 added the replication tier: the
+/// shared-secret auth handshake ([`Op::Hello`]), epoch-consistent snapshot
+/// streaming ([`Op::Snapshot`]), the catch-up log pull ([`Op::Replicate`]),
+/// the degraded-scatter `partial` flag on search/threshold responses, the
+/// `shards_unhealthy` gauge in the health response, and the `degraded`
+/// counter in the metrics response.
+pub const VERSION: u8 = 4;
 /// Oldest protocol version this build still speaks. A server answers every
 /// frame in the version the *request* carried, so old clients keep working
 /// ([`version_supported`]).
@@ -95,11 +103,32 @@ pub enum Op {
     /// count:u32, count×lanes` — every row scoring `>= threshold`, capped
     /// at `limit` per query.
     SearchThreshold = 0x07,
-    /// Search response: `epoch:u64, count:u32, count×(n:u32, n×(row:u64, score:f64))`.
+    /// Auth handshake (v4): `len:u32, secret bytes`. Mandatory first frame
+    /// on a connection when the server configures `[server] auth_secret`;
+    /// a no-op greeting otherwise.
+    Hello = 0x08,
+    /// Snapshot chunk pull (v4): `pin:u64 (u64::MAX = none), start_row:u64,
+    /// max_rows:u64` — one epoch-consistent slice of the store's programmed
+    /// words per round trip.
+    Snapshot = 0x09,
+    /// Catch-up log pull (v4): `from_epoch:u64` — every admin op committed
+    /// after `from_epoch` that the bounded log still holds.
+    Replicate = 0x0A,
+    /// Search response: `epoch:u64, count:u32, count×(n:u32, n×(row:u64,
+    /// score:f64))[, flags:u8 (v4; bit 0 = partial)]`.
     SearchOk = 0x81,
     /// Threshold search response (v3): `epoch:u64, count:u32,
-    /// count×(truncated:u8, n:u32, n×(row:u64, score:f64))`.
+    /// count×(truncated:u8, n:u32, n×(row:u64, score:f64))[, flags:u8 (v4;
+    /// bit 0 = partial)]`.
     SearchThresholdOk = 0x87,
+    /// Auth handshake accepted (v4; empty payload).
+    HelloOk = 0x88,
+    /// Snapshot chunk response (v4): `epoch:u64, total_rows:u64, dims:u64,
+    /// log_floor:u64, start_row:u64, n:u32, n×(dims:u32, lanes)`.
+    SnapshotOk = 0x89,
+    /// Catch-up log response (v4): `serving_epoch:u64, n:u32,
+    /// n×(epoch:u64, tag:u8, op body)`.
+    ReplicateOk = 0x8A,
     /// Admin response: `row:u64, epoch:u64, rows:u64, has_write:u8[,
     /// report][, shard_epoch:u64 (v2)]`.
     AdminOk = 0x82,
@@ -125,8 +154,14 @@ impl Op {
             0x05 => Op::Metrics,
             0x06 => Op::Health,
             0x07 => Op::SearchThreshold,
+            0x08 => Op::Hello,
+            0x09 => Op::Snapshot,
+            0x0A => Op::Replicate,
             0x81 => Op::SearchOk,
             0x87 => Op::SearchThresholdOk,
+            0x88 => Op::HelloOk,
+            0x89 => Op::SnapshotOk,
+            0x8A => Op::ReplicateOk,
             0x82 => Op::AdminOk,
             0x85 => Op::MetricsOk,
             0x86 => Op::HealthOk,
@@ -165,6 +200,14 @@ pub enum ErrorCode {
     /// (v2). The error payload carries the expected/actual epochs; re-read
     /// and retry.
     EpochMismatch = 10,
+    /// The connection has not completed the [`Op::Hello`] handshake (or
+    /// presented the wrong secret) on a server that configures
+    /// `[server] auth_secret` (v4). Non-fatal: hello and retry.
+    Unauthorized = 11,
+    /// A [`Op::Replicate`] pull asked for epochs the bounded catch-up log
+    /// has already evicted (v4). The error payload carries the log floor in
+    /// its first epoch slot; restart from a full snapshot.
+    LogTruncated = 12,
 }
 
 impl ErrorCode {
@@ -181,6 +224,8 @@ impl ErrorCode {
             8 => ErrorCode::UnknownOp,
             9 => ErrorCode::Internal,
             10 => ErrorCode::EpochMismatch,
+            11 => ErrorCode::Unauthorized,
+            12 => ErrorCode::LogTruncated,
             _ => return None,
         })
     }
@@ -198,6 +243,8 @@ impl ErrorCode {
             ErrorCode::UnknownOp => "unknown-op",
             ErrorCode::Internal => "internal",
             ErrorCode::EpochMismatch => "epoch-mismatch",
+            ErrorCode::Unauthorized => "unauthorized",
+            ErrorCode::LogTruncated => "log-truncated",
         }
     }
 }
@@ -211,7 +258,9 @@ pub struct WireError {
     /// Human-readable detail (never required for correct client behavior).
     pub message: String,
     /// For [`ErrorCode::EpochMismatch`]: the `(expected, actual)` epochs,
-    /// machine-readable so retry loops need not parse the message.
+    /// machine-readable so retry loops need not parse the message. For
+    /// [`ErrorCode::LogTruncated`]: `(log_floor, 0)`, so a replica can
+    /// decide to restart a full snapshot without parsing the message.
     pub epochs: Option<(u64, u64)>,
 }
 
@@ -234,6 +283,10 @@ impl WireError {
                 let (expected, actual) = self.epochs.unwrap_or((0, 0));
                 SubmitError::EpochMismatch { expected, actual }
             }
+            ErrorCode::Unauthorized => SubmitError::Unauthorized,
+            ErrorCode::LogTruncated => {
+                SubmitError::LogTruncated { floor: self.epochs.map_or(0, |e| e.0) }
+            }
             _ => SubmitError::Io(self.to_string()),
         }
     }
@@ -255,10 +308,13 @@ impl From<SubmitError> for WireError {
             SubmitError::BadQuery(_) => ErrorCode::BadQuery,
             SubmitError::WriteFailed(_) => ErrorCode::WriteFailed,
             SubmitError::EpochMismatch { .. } => ErrorCode::EpochMismatch,
+            SubmitError::Unauthorized => ErrorCode::Unauthorized,
+            SubmitError::LogTruncated { .. } => ErrorCode::LogTruncated,
             SubmitError::Io(_) => ErrorCode::Internal,
         };
         let epochs = match &e {
             SubmitError::EpochMismatch { expected, actual } => Some((*expected, *actual)),
+            SubmitError::LogTruncated { floor } => Some((*floor, 0)),
             _ => None,
         };
         WireError { code, message: e.to_string(), epochs }
@@ -627,12 +683,38 @@ pub struct WireSearchResponse {
     pub epoch: u64,
     /// One ranked hit list per query, in request order.
     pub results: Vec<Vec<WireHit>>,
+    /// Degraded-scatter marker (v4): `true` when a routing tier served
+    /// this batch from fewer than all shards. Always `false` off a
+    /// pre-v4 frame.
+    pub partial: bool,
 }
 
-/// Encode a search response frame payload.
-pub fn encode_search_response(epoch: u64, results: &[Vec<WireHit>]) -> Vec<u8> {
+/// Decode the optional v4 response-flags tail byte shared by the search
+/// and threshold response decoders: bit 0 is the degraded-scatter
+/// `partial` marker, other bits must be zero.
+fn get_response_flags(c: &mut Cursor<'_>) -> Result<bool, WireError> {
+    if c.remaining() == 0 {
+        return Ok(false);
+    }
+    match c.u8()? {
+        0 => Ok(false),
+        1 => Ok(true),
+        other => Err(bad_frame(format!("bad response flags {other:#04x}"))),
+    }
+}
+
+/// Encode a search response frame payload in the connection's negotiated
+/// `version`: v4 appends the flags byte carrying the degraded-scatter
+/// `partial` marker; pre-v4 peers get the legacy layout (their decoders
+/// reject trailing bytes) and so never learn a result was partial.
+pub fn encode_search_response(
+    epoch: u64,
+    results: &[Vec<WireHit>],
+    version: u8,
+    partial: bool,
+) -> Vec<u8> {
     let hits: usize = results.iter().map(Vec::len).sum();
-    let mut out = Vec::with_capacity(12 + results.len() * 4 + hits * 16);
+    let mut out = Vec::with_capacity(13 + results.len() * 4 + hits * 16);
     put_u64(&mut out, epoch);
     put_u32(&mut out, results.len() as u32);
     for ranked in results {
@@ -642,10 +724,14 @@ pub fn encode_search_response(epoch: u64, results: &[Vec<WireHit>]) -> Vec<u8> {
             put_f64(&mut out, hit.score);
         }
     }
+    if version >= 4 {
+        out.push(u8::from(partial));
+    }
     out
 }
 
-/// Decode a search response frame payload.
+/// Decode a search response frame payload (either version: a pre-v4 frame
+/// has no flags tail and decodes with `partial = false`).
 pub fn decode_search_response(payload: &[u8]) -> Result<WireSearchResponse, WireError> {
     let mut c = Cursor::new(payload);
     let epoch = c.u64()?;
@@ -661,8 +747,9 @@ pub fn decode_search_response(payload: &[u8]) -> Result<WireSearchResponse, Wire
         }
         results.push(ranked);
     }
+    let partial = get_response_flags(&mut c)?;
     c.finish()?;
-    Ok(WireSearchResponse { epoch, results })
+    Ok(WireSearchResponse { epoch, results, partial })
 }
 
 /// One query's threshold result as it travels the wire: the bounded match
@@ -683,12 +770,22 @@ pub struct WireThresholdResponse {
     pub epoch: u64,
     /// One match list per query, in request order.
     pub results: Vec<WireMatchList>,
+    /// Degraded-scatter marker (v4): `true` when a routing tier served
+    /// this batch from fewer than all shards. Always `false` off a
+    /// pre-v4 frame.
+    pub partial: bool,
 }
 
-/// Encode a threshold search response frame payload (v3).
-pub fn encode_threshold_response(epoch: u64, results: &[WireMatchList]) -> Vec<u8> {
+/// Encode a threshold search response frame payload (v3; v4 appends the
+/// flags byte carrying the degraded-scatter `partial` marker).
+pub fn encode_threshold_response(
+    epoch: u64,
+    results: &[WireMatchList],
+    version: u8,
+    partial: bool,
+) -> Vec<u8> {
     let hits: usize = results.iter().map(|m| m.hits.len()).sum();
-    let mut out = Vec::with_capacity(12 + results.len() * 5 + hits * 16);
+    let mut out = Vec::with_capacity(13 + results.len() * 5 + hits * 16);
     put_u64(&mut out, epoch);
     put_u32(&mut out, results.len() as u32);
     for m in results {
@@ -699,10 +796,14 @@ pub fn encode_threshold_response(epoch: u64, results: &[WireMatchList]) -> Vec<u
             put_f64(&mut out, hit.score);
         }
     }
+    if version >= 4 {
+        out.push(u8::from(partial));
+    }
     out
 }
 
-/// Decode a threshold search response frame payload (v3).
+/// Decode a threshold search response frame payload (v3+; a pre-v4 frame
+/// has no flags tail and decodes with `partial = false`).
 pub fn decode_threshold_response(payload: &[u8]) -> Result<WireThresholdResponse, WireError> {
     let mut c = Cursor::new(payload);
     let epoch = c.u64()?;
@@ -723,8 +824,9 @@ pub fn decode_threshold_response(payload: &[u8]) -> Result<WireThresholdResponse
         }
         results.push(WireMatchList { hits, truncated });
     }
+    let partial = get_response_flags(&mut c)?;
     c.finish()?;
-    Ok(WireThresholdResponse { epoch, results })
+    Ok(WireThresholdResponse { epoch, results, partial })
 }
 
 // ---------------------------------------------------------------------------
@@ -836,6 +938,162 @@ pub fn decode_admin_response(payload: &[u8]) -> Result<WireAdminResponse, WireEr
     let shard_epoch = if c.remaining() > 0 { c.u64()? } else { epoch };
     c.finish()?;
     Ok(WireAdminResponse { row, epoch, shard_epoch, rows, write })
+}
+
+// ---------------------------------------------------------------------------
+// Replication (v4): hello / snapshot / catch-up log
+// ---------------------------------------------------------------------------
+
+/// Encode an auth-handshake request (v4): the shared secret, length-prefixed.
+pub fn encode_hello_request(secret: &[u8]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(4 + secret.len());
+    put_u32(&mut out, secret.len() as u32);
+    out.extend_from_slice(secret);
+    out
+}
+
+/// Decode an auth-handshake request into the presented secret bytes.
+pub fn decode_hello_request(payload: &[u8]) -> Result<Vec<u8>, WireError> {
+    let mut c = Cursor::new(payload);
+    let len = c.u32()? as usize;
+    let secret = c.take(len)?.to_vec();
+    c.finish()?;
+    Ok(secret)
+}
+
+/// Wire value of "no epoch pin" on a snapshot request: the first chunk of a
+/// stream passes this to learn the cut epoch, later chunks pin it.
+pub const SNAPSHOT_PIN_NONE: u64 = u64::MAX;
+
+/// Encode a snapshot chunk request (v4). `pin = None` (first chunk) lets
+/// the server pick the cut epoch; `Some(e)` demands the store still be at
+/// epoch `e` (a moved store answers with a typed `epoch-mismatch`).
+pub fn encode_snapshot_request(pin: Option<u64>, start_row: u64, max_rows: u64) -> Vec<u8> {
+    let mut out = Vec::with_capacity(24);
+    put_u64(&mut out, pin.unwrap_or(SNAPSHOT_PIN_NONE));
+    put_u64(&mut out, start_row);
+    put_u64(&mut out, max_rows);
+    out
+}
+
+/// Decode a snapshot chunk request into `(pin, start_row, max_rows)`.
+pub fn decode_snapshot_request(payload: &[u8]) -> Result<(Option<u64>, u64, u64), WireError> {
+    let mut c = Cursor::new(payload);
+    let pin = c.u64()?;
+    let start_row = c.u64()?;
+    let max_rows = c.u64()?;
+    c.finish()?;
+    Ok((
+        if pin == SNAPSHOT_PIN_NONE { None } else { Some(pin) },
+        start_row,
+        max_rows,
+    ))
+}
+
+/// Encode a snapshot chunk response (v4): the cut header plus the chunk's
+/// programmed words, bit-packed like every other vector on the wire.
+pub fn encode_snapshot_response(chunk: &WireSnapshotChunk) -> Vec<u8> {
+    let lanes: usize = chunk.rows.iter().map(|r| r.lanes().len()).sum();
+    let mut out = Vec::with_capacity(44 + chunk.rows.len() * 4 + lanes * 8);
+    put_u64(&mut out, chunk.epoch);
+    put_u64(&mut out, chunk.total_rows);
+    put_u64(&mut out, chunk.dims);
+    put_u64(&mut out, chunk.log_floor);
+    put_u64(&mut out, chunk.start_row);
+    put_u32(&mut out, chunk.rows.len() as u32);
+    for row in &chunk.rows {
+        put_bitvec(&mut out, row);
+    }
+    out
+}
+
+/// Decode a snapshot chunk response, validating every row against the
+/// header's dimension.
+pub fn decode_snapshot_response(payload: &[u8]) -> Result<WireSnapshotChunk, WireError> {
+    let mut c = Cursor::new(payload);
+    let epoch = c.u64()?;
+    let total_rows = c.u64()?;
+    let dims = c.u64()?;
+    let log_floor = c.u64()?;
+    let start_row = c.u64()?;
+    let n = c.u32()? as usize;
+    let mut rows = Vec::with_capacity(n.min(payload.len() / 8 + 1));
+    for _ in 0..n {
+        let row = get_bitvec(&mut c)?;
+        if row.len() as u64 != dims {
+            return Err(bad_frame(format!(
+                "snapshot row dims {} mismatch header dims {dims}",
+                row.len()
+            )));
+        }
+        rows.push(row);
+    }
+    c.finish()?;
+    Ok(WireSnapshotChunk { epoch, total_rows, dims, log_floor, start_row, rows })
+}
+
+/// Encode a catch-up log pull request (v4): replay everything after
+/// `from_epoch`.
+pub fn encode_replicate_request(from_epoch: u64) -> Vec<u8> {
+    let mut out = Vec::with_capacity(8);
+    put_u64(&mut out, from_epoch);
+    out
+}
+
+/// Decode a catch-up log pull request into `from_epoch`.
+pub fn decode_replicate_request(payload: &[u8]) -> Result<u64, WireError> {
+    let mut c = Cursor::new(payload);
+    let from_epoch = c.u64()?;
+    c.finish()?;
+    Ok(from_epoch)
+}
+
+/// Encode a catch-up log response (v4). Entries carry the *programmed*
+/// words exactly as the primary committed them (post write-verify), so
+/// replay is bit-exact and never re-runs the stochastic write model.
+pub fn encode_replicate_response(batch: &WireCatchupBatch) -> Vec<u8> {
+    let mut out = Vec::with_capacity(12 + batch.entries.len() * 24);
+    put_u64(&mut out, batch.serving_epoch);
+    put_u32(&mut out, batch.entries.len() as u32);
+    for entry in &batch.entries {
+        put_u64(&mut out, entry.epoch);
+        match &entry.cmd {
+            WireAdminOp::Update { row, word } => {
+                out.push(0);
+                put_u64(&mut out, *row);
+                put_bitvec(&mut out, word);
+            }
+            WireAdminOp::Insert { word } => {
+                out.push(1);
+                put_bitvec(&mut out, word);
+            }
+            WireAdminOp::Delete { row } => {
+                out.push(2);
+                put_u64(&mut out, *row);
+            }
+        }
+    }
+    out
+}
+
+/// Decode a catch-up log response.
+pub fn decode_replicate_response(payload: &[u8]) -> Result<WireCatchupBatch, WireError> {
+    let mut c = Cursor::new(payload);
+    let serving_epoch = c.u64()?;
+    let n = c.u32()? as usize;
+    let mut entries = Vec::with_capacity(n.min(payload.len() / 9 + 1));
+    for _ in 0..n {
+        let epoch = c.u64()?;
+        let cmd = match c.u8()? {
+            0 => WireAdminOp::Update { row: c.u64()?, word: get_bitvec(&mut c)? },
+            1 => WireAdminOp::Insert { word: get_bitvec(&mut c)? },
+            2 => WireAdminOp::Delete { row: c.u64()? },
+            other => return Err(bad_frame(format!("bad catch-up op tag {other}"))),
+        };
+        entries.push(WireCatchupEntry { epoch, cmd });
+    }
+    c.finish()?;
+    Ok(WireCatchupBatch { serving_epoch, entries })
 }
 
 // ---------------------------------------------------------------------------
@@ -955,6 +1213,9 @@ pub struct WireMetrics {
     pub hists: Option<WireLatencyHists>,
     /// Per-query-kind lanes (v3 peers only; empty off an older frame).
     pub kinds: Vec<WireKindLane>,
+    /// Scatter batches served degraded — from fewer than all shards —
+    /// by a routing tier (v4 peers only; 0 off an older frame).
+    pub degraded: u64,
 }
 
 impl WireMetrics {
@@ -995,6 +1256,7 @@ impl WireMetrics {
                     hist: l.hist.as_ref().map(WireHistogram::from_hist),
                 })
                 .collect(),
+            degraded: s.degraded,
         }
     }
 
@@ -1038,6 +1300,7 @@ impl WireMetrics {
                 .collect(),
             admin: Vec::new(),
             admin_rejected: self.admin_rejected,
+            degraded: self.degraded,
             write: WriteCostSnapshot {
                 cells: self.write_cells,
                 pulses: self.write_pulses,
@@ -1126,6 +1389,9 @@ pub fn encode_metrics_response(m: &WireMetrics, version: u8) -> Vec<u8> {
             }
         }
     }
+    if version >= 4 {
+        put_u64(&mut out, m.degraded);
+    }
     out
 }
 
@@ -1152,6 +1418,7 @@ pub fn decode_metrics_response(payload: &[u8]) -> Result<WireMetrics, WireError>
         write_latency_s: c.f64()?,
         hists: None,
         kinds: Vec::new(),
+        degraded: 0,
     };
     if c.remaining() > 0 {
         m.hists = match c.u8()? {
@@ -1193,15 +1460,20 @@ pub fn decode_metrics_response(payload: &[u8]) -> Result<WireMetrics, WireError>
         }
         m.kinds = kinds;
     }
+    // v4 appends the degraded-scatter counter; older frames end here.
+    if c.remaining() > 0 {
+        m.degraded = c.u64()?;
+    }
     c.finish()?;
     Ok(m)
 }
 
 /// Encode a health response frame payload in the connection's negotiated
 /// `version`: v2 appends the batching hints (`max_batch`/`max_k`) clients
-/// self-tune from; v1 peers get the legacy 28-byte identity.
+/// self-tune from, v4 appends the ejected-shard gauge; v1 peers get the
+/// legacy 28-byte identity.
 pub fn encode_health_response(h: &WireHealth, version: u8) -> Vec<u8> {
-    let mut out = Vec::with_capacity(36);
+    let mut out = Vec::with_capacity(40);
     put_u64(&mut out, h.rows);
     put_u64(&mut out, h.dims);
     put_u64(&mut out, h.epoch);
@@ -1210,11 +1482,15 @@ pub fn encode_health_response(h: &WireHealth, version: u8) -> Vec<u8> {
         put_u32(&mut out, h.max_batch);
         put_u32(&mut out, h.max_k);
     }
+    if version >= 4 {
+        put_u32(&mut out, h.shards_unhealthy);
+    }
     out
 }
 
 /// Decode a health response frame payload (either version: a legacy frame
-/// without the hints decodes with `max_batch = max_k = 0`, i.e. unknown).
+/// without the hints decodes with `max_batch = max_k = 0`, i.e. unknown,
+/// and a pre-v4 frame decodes with `shards_unhealthy = 0`).
 pub fn decode_health_response(payload: &[u8]) -> Result<WireHealth, WireError> {
     let mut c = Cursor::new(payload);
     let mut h = WireHealth {
@@ -1224,10 +1500,14 @@ pub fn decode_health_response(payload: &[u8]) -> Result<WireHealth, WireError> {
         shards: c.u32()?,
         max_batch: 0,
         max_k: 0,
+        shards_unhealthy: 0,
     };
     if c.remaining() > 0 {
         h.max_batch = c.u32()?;
         h.max_k = c.u32()?;
+    }
+    if c.remaining() > 0 {
+        h.shards_unhealthy = c.u32()?;
     }
     c.finish()?;
     Ok(h)
@@ -1356,10 +1636,40 @@ mod tests {
             vec![],
             vec![WireHit { row: (7u64 << 48) | 2, score: 0.25 }],
         ];
-        let payload = encode_search_response(42, &results);
+        let payload = encode_search_response(42, &results, VERSION, false);
         let back = decode_search_response(&payload).unwrap();
         assert_eq!(back.epoch, 42);
         assert_eq!(back.results, results);
+        assert!(!back.partial);
+    }
+
+    /// The v4 flags tail carries the degraded-scatter marker on both
+    /// search response kinds; pre-v4 frames drop it (their decoders
+    /// reject trailing bytes) and decode with `partial = false`.
+    #[test]
+    fn partial_flag_roundtrip_and_version_degrade() {
+        let results = vec![vec![WireHit { row: 1, score: 2.0 }]];
+        let back =
+            decode_search_response(&encode_search_response(7, &results, VERSION, true)).unwrap();
+        assert!(back.partial);
+        let legacy =
+            decode_search_response(&encode_search_response(7, &results, 3, true)).unwrap();
+        assert!(!legacy.partial);
+
+        let matches = vec![WireMatchList { hits: vec![], truncated: false }];
+        let back =
+            decode_threshold_response(&encode_threshold_response(7, &matches, VERSION, true))
+                .unwrap();
+        assert!(back.partial);
+        let legacy =
+            decode_threshold_response(&encode_threshold_response(7, &matches, 3, true)).unwrap();
+        assert!(!legacy.partial);
+
+        // Undefined flag bits are a bad frame, not silently ignored.
+        let mut bad = encode_search_response(7, &results, VERSION, true);
+        let n = bad.len();
+        bad[n - 1] = 0x82;
+        assert_eq!(decode_search_response(&bad).unwrap_err().code, ErrorCode::BadFrame);
     }
 
     #[test]
@@ -1403,13 +1713,14 @@ mod tests {
                 truncated: false,
             },
         ];
-        let payload = encode_threshold_response(42, &results);
+        let payload = encode_threshold_response(42, &results, VERSION, false);
         let back = decode_threshold_response(&payload).unwrap();
         assert_eq!(back.epoch, 42);
         assert_eq!(back.results, results);
+        assert!(!back.partial);
 
         // A bad truncation marker is a bad frame, not a silent bool cast.
-        let mut bad = encode_threshold_response(1, &results);
+        let mut bad = encode_threshold_response(1, &results, VERSION, false);
         bad[12] = 7;
         assert_eq!(decode_threshold_response(&bad).unwrap_err().code, ErrorCode::BadFrame);
     }
@@ -1547,13 +1858,23 @@ mod tests {
         let back = decode_metrics_response(&encode_metrics_response(&m, VERSION)).unwrap();
         assert_eq!(back, m);
 
-        let h =
-            WireHealth { rows: 100, dims: 1024, epoch: 3, shards: 2, max_batch: 64, max_k: 16 };
+        let h = WireHealth {
+            rows: 100,
+            dims: 1024,
+            epoch: 3,
+            shards: 2,
+            max_batch: 64,
+            max_k: 16,
+            shards_unhealthy: 1,
+        };
         assert_eq!(decode_health_response(&encode_health_response(&h, VERSION)).unwrap(), h);
         // A v1-framed health omits the hints; they decode as 0 = unknown.
         let legacy = decode_health_response(&encode_health_response(&h, 1)).unwrap();
         assert_eq!((legacy.rows, legacy.dims, legacy.epoch, legacy.shards), (100, 1024, 3, 2));
         assert_eq!((legacy.max_batch, legacy.max_k), (0, 0));
+        // A v2/v3 frame carries the hints but not the ejected-shard gauge.
+        let v3 = decode_health_response(&encode_health_response(&h, 3)).unwrap();
+        assert_eq!((v3.max_batch, v3.max_k, v3.shards_unhealthy), (64, 16, 0));
 
         let e = WireError::new(ErrorCode::Busy, "queue full (backpressure)");
         let back = decode_error_response(&encode_error_response(&e)).unwrap();
@@ -1625,6 +1946,11 @@ mod tests {
             WireError::from(SubmitError::Io("reset".into())).code,
             ErrorCode::Internal
         );
+        assert_eq!(WireError::from(SubmitError::Unauthorized).code, ErrorCode::Unauthorized);
+        assert_eq!(
+            WireError::from(SubmitError::LogTruncated { floor: 9 }).code,
+            ErrorCode::LogTruncated
+        );
         // And back: the typed round trip the remote backend relies on.
         for e in [
             SubmitError::Busy,
@@ -1632,9 +1958,15 @@ mod tests {
             SubmitError::BadQuery("dims".into()),
             SubmitError::WriteFailed("stuck".into()),
             SubmitError::EpochMismatch { expected: 3, actual: 5 },
+            SubmitError::Unauthorized,
+            SubmitError::LogTruncated { floor: 7 },
         ] {
             assert_eq!(WireError::from(e.clone()).to_submit_error(), e);
         }
+        // The log floor survives the encoded error frame, machine-readable.
+        let e = WireError::from(SubmitError::LogTruncated { floor: 41 });
+        let back = decode_error_response(&encode_error_response(&e)).unwrap();
+        assert_eq!(back.to_submit_error(), SubmitError::LogTruncated { floor: 41 });
     }
 
     #[test]
@@ -1647,8 +1979,14 @@ mod tests {
             Op::Metrics,
             Op::Health,
             Op::SearchThreshold,
+            Op::Hello,
+            Op::Snapshot,
+            Op::Replicate,
             Op::SearchOk,
             Op::SearchThresholdOk,
+            Op::HelloOk,
+            Op::SnapshotOk,
+            Op::ReplicateOk,
             Op::AdminOk,
             Op::MetricsOk,
             Op::HealthOk,
@@ -1657,10 +1995,89 @@ mod tests {
             assert_eq!(Op::from_u8(op as u8), Some(op));
         }
         assert_eq!(Op::from_u8(0x42), None);
-        for code in 1..=10u8 {
+        for code in 1..=12u8 {
             assert_eq!(ErrorCode::from_u8(code).unwrap() as u8, code);
         }
         assert_eq!(ErrorCode::from_u8(200), None);
+    }
+
+    #[test]
+    fn hello_roundtrip() {
+        for secret in [&b""[..], b"s3cret", &[0u8, 255, 7][..]] {
+            let payload = encode_hello_request(secret);
+            assert_eq!(decode_hello_request(&payload).unwrap(), secret);
+        }
+        // A length-lying prefix fails cleanly.
+        let mut lying = encode_hello_request(b"abc");
+        lying[0..4].copy_from_slice(&u32::MAX.to_le_bytes());
+        assert_eq!(decode_hello_request(&lying).unwrap_err().code, ErrorCode::BadFrame);
+        let mut fat = encode_hello_request(b"abc");
+        fat.push(0);
+        assert!(decode_hello_request(&fat).unwrap_err().message.contains("trailing"));
+    }
+
+    #[test]
+    fn snapshot_roundtrips() {
+        for (pin, start, max) in [(None, 0u64, 64u64), (Some(9u64), 128, 32)] {
+            let payload = encode_snapshot_request(pin, start, max);
+            assert_eq!(decode_snapshot_request(&payload).unwrap(), (pin, start, max));
+        }
+
+        let mut r = rng(11);
+        let rows: Vec<BitVec> = (0..3).map(|_| BitVec::random(130, 0.5, &mut r)).collect();
+        let chunk = WireSnapshotChunk {
+            epoch: 7,
+            total_rows: 100,
+            dims: 130,
+            log_floor: 3,
+            start_row: 64,
+            rows,
+        };
+        let payload = encode_snapshot_response(&chunk);
+        assert_eq!(decode_snapshot_response(&payload).unwrap(), chunk);
+
+        // Rows disagreeing with the header dims are a bad frame.
+        let short = WireSnapshotChunk { dims: 131, ..chunk.clone() };
+        let payload = encode_snapshot_response(&short);
+        assert_eq!(decode_snapshot_response(&payload).unwrap_err().code, ErrorCode::BadFrame);
+
+        // A lying row count fails cleanly, without a huge allocation.
+        let mut lying = encode_snapshot_response(&chunk);
+        lying[40..44].copy_from_slice(&u32::MAX.to_le_bytes());
+        assert_eq!(decode_snapshot_response(&lying).unwrap_err().code, ErrorCode::BadFrame);
+    }
+
+    #[test]
+    fn replicate_roundtrips() {
+        let payload = encode_replicate_request(41);
+        assert_eq!(decode_replicate_request(&payload).unwrap(), 41);
+
+        let mut r = rng(12);
+        let word = BitVec::random(96, 0.5, &mut r);
+        let batch = WireCatchupBatch {
+            serving_epoch: 12,
+            entries: vec![
+                WireCatchupEntry {
+                    epoch: 10,
+                    cmd: WireAdminOp::Update { row: 3, word: word.clone() },
+                },
+                WireCatchupEntry { epoch: 11, cmd: WireAdminOp::Insert { word } },
+                WireCatchupEntry { epoch: 12, cmd: WireAdminOp::Delete { row: 1 } },
+            ],
+        };
+        let payload = encode_replicate_response(&batch);
+        assert_eq!(decode_replicate_response(&payload).unwrap(), batch);
+
+        // A bad op tag is a bad frame.
+        let mut bad = encode_replicate_response(&batch);
+        bad[20] = 9; // serving_epoch 8 + count 4 + entry epoch 8 = first tag
+        assert_eq!(decode_replicate_response(&bad).unwrap_err().code, ErrorCode::BadFrame);
+        // Truncation fails cleanly.
+        let n = payload.len();
+        assert_eq!(
+            decode_replicate_response(&payload[..n - 3]).unwrap_err().code,
+            ErrorCode::BadFrame
+        );
     }
 
     #[test]

@@ -15,20 +15,26 @@
 //! Because pumping happens inside `poll`, a single-threaded caller — the
 //! event-loop server's routing tier — can drive many in-flight searches
 //! over one socket without ever blocking on it. A transport failure
-//! (reset, EOF mid-stream, malformed frame) poisons the connection: every
-//! in-flight and future request fails with [`SubmitError::Io`] (or
-//! `Closed`), and the caller re-connects.
+//! (reset, EOF mid-stream, malformed frame) downs the connection: every
+//! in-flight request and every request while down fails with
+//! [`SubmitError::Io`] — but the connection is *not* permanently
+//! poisoned. The next submission after the linear reconnect backoff
+//! (`[replication] probe_backoff_ms`) re-dials the server, re-validates
+//! its identity (same dims) and re-authenticates, so an ejected shard
+//! heals by itself once its server is back. Only [`Backend::close`] is
+//! final.
 
 use std::collections::{HashMap, HashSet, VecDeque};
 use std::io::{Read, Write};
 use std::net::{TcpStream, ToSocketAddrs};
 use std::sync::{Arc, Mutex};
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 use anyhow::{Context, Result};
 
 use crate::coordinator::backend::{
-    AdminCmd, AdminOutcome, Backend, BackendHealth, BatchResult, Completion, Ticket,
+    AdminCmd, AdminOutcome, Backend, BackendHealth, BatchResult, CatchupBatch, Completion,
+    SnapshotChunk, Ticket,
 };
 use crate::coordinator::{MetricsSnapshot, SubmitError};
 use crate::util::sync::lock_recover;
@@ -69,14 +75,32 @@ struct RemoteConn {
     abandoned: HashSet<u64>,
     next_seq: u64,
     max_frame: usize,
-    /// Sticky transport failure: set once, fails everything after.
+    /// Transport failure: fails everything until a reconnect succeeds.
     dead: Option<SubmitError>,
+    /// Dial target for reconnects (the address `connect` resolved).
+    addr: String,
+    /// Shared secret replayed on every (re)connect; empty = no hello.
+    secret: Vec<u8>,
+    /// Word width the server must still report after a reconnect — a
+    /// different store answering on the same address must not be adopted.
+    dims: usize,
+    /// Base reconnect backoff; attempt `n` waits `n × backoff`.
+    backoff: Duration,
+    /// Failed reconnect attempts since the connection went down.
+    attempts: u32,
+    /// When the last reconnect attempt was made (None right after a
+    /// failure, so the first retry is immediate).
+    last_attempt: Option<Instant>,
+    /// [`Backend::close`] was called: never reconnect.
+    closed: bool,
 }
 
 impl RemoteConn {
     fn poison(&mut self, e: SubmitError) -> SubmitError {
         if self.dead.is_none() {
             self.dead = Some(e.clone());
+            self.attempts = 0;
+            self.last_attempt = None;
             // Every in-flight slot fails with the same transport error
             // (abandoned slots have no one waiting; drop them instead).
             while let Some(slot) = self.inflight.pop_front() {
@@ -86,6 +110,40 @@ impl RemoteConn {
             }
         }
         self.dead.clone().unwrap_or(e)
+    }
+
+    /// Try to heal a downed connection: linear backoff (attempt `n` waits
+    /// `n × backoff`; the first attempt is immediate), full re-handshake
+    /// (dial, hello, health) and identity validation — the server must
+    /// still report the same word width. On success the connection is
+    /// fresh: buffers cleared, failure state reset; sequence numbers keep
+    /// counting, old completed outcomes stay for their waiters.
+    fn maybe_reconnect(&mut self) {
+        if self.closed || self.dead.is_none() {
+            return;
+        }
+        if let Some(t) = self.last_attempt {
+            let wait = self.backoff.saturating_mul(self.attempts.clamp(1, 60));
+            if t.elapsed() < wait {
+                return;
+            }
+        }
+        self.attempts = self.attempts.saturating_add(1);
+        self.last_attempt = Some(Instant::now());
+        let Ok((stream, health)) = handshake(&self.addr, &self.secret) else {
+            return;
+        };
+        if health.dims as usize != self.dims || stream.set_nonblocking(true).is_err() {
+            return;
+        }
+        self.stream = stream;
+        self.outbuf.clear();
+        self.inbuf.clear();
+        self.inflight.clear();
+        self.abandoned.clear();
+        self.dead = None;
+        self.attempts = 0;
+        self.last_attempt = None;
     }
 
     /// Mark slot `seq` as no longer awaited: discard its outcome if it
@@ -100,8 +158,12 @@ impl RemoteConn {
         }
     }
 
-    /// Queue one request frame and return its sequence slot.
+    /// Queue one request frame and return its sequence slot. A downed
+    /// connection first gets a reconnect attempt (backoff permitting).
     fn enqueue(&mut self, op: Op, want: Op, payload: &[u8]) -> Result<u64, SubmitError> {
+        if self.dead.is_some() {
+            self.maybe_reconnect();
+        }
         if let Some(e) = &self.dead {
             return Err(e.clone());
         }
@@ -262,6 +324,41 @@ impl RemoteConn {
     }
 }
 
+/// Blocking (re)connect handshake: dial `addr`, authenticate with `secret`
+/// when one is configured (v4 hello), and fetch the server's identity with
+/// a health round trip. The returned stream is still in blocking mode.
+fn handshake(addr: &str, secret: &[u8]) -> Result<(TcpStream, BackendHealth)> {
+    let mut stream = TcpStream::connect(addr).with_context(|| format!("connecting to {addr}"))?;
+    let _ = stream.set_nodelay(true);
+    if !secret.is_empty() {
+        let payload = protocol::encode_hello_request(secret);
+        protocol::write_frame(&mut stream, Op::Hello, &payload).context("writing hello frame")?;
+        let (header, payload) = protocol::read_frame(&mut stream, DEFAULT_MAX_FRAME)
+            .context("reading hello response")?;
+        match Op::from_u8(header.op) {
+            Some(Op::HelloOk) => {}
+            Some(Op::Error) => {
+                let e = protocol::decode_error_response(&payload)?;
+                anyhow::bail!("server rejected the hello handshake: {e}");
+            }
+            other => anyhow::bail!("unexpected hello response {other:?}"),
+        }
+    }
+    // Blocking identity probe: learn dims before any search is submitted.
+    protocol::write_frame(&mut stream, Op::Health, &[]).context("writing health frame")?;
+    let (header, payload) =
+        protocol::read_frame(&mut stream, DEFAULT_MAX_FRAME).context("reading health response")?;
+    let health = match Op::from_u8(header.op) {
+        Some(Op::HealthOk) => protocol::decode_health_response(&payload)?,
+        Some(Op::Error) => {
+            let e = protocol::decode_error_response(&payload)?;
+            anyhow::bail!("server rejected the identity probe: {e}");
+        }
+        other => anyhow::bail!("unexpected health response {other:?}"),
+    };
+    Ok((stream, health))
+}
+
 /// A remote `cosimed` server as a completion-based [`Backend`] (module
 /// docs). Cheap to share behind the routing tier: submissions and polls
 /// synchronize on one internal connection lock.
@@ -273,23 +370,23 @@ pub struct RemoteBackend {
 
 impl RemoteBackend {
     /// Connect and fetch the server's identity (one blocking health round
-    /// trip), then switch the socket to nonblocking mode for serving.
-    pub fn connect<A: ToSocketAddrs + std::fmt::Debug>(addr: A) -> Result<RemoteBackend> {
-        let mut stream =
-            TcpStream::connect(&addr).with_context(|| format!("connecting to {addr:?}"))?;
-        let _ = stream.set_nodelay(true);
-        // Blocking hello: learn dims before any search can be submitted.
-        protocol::write_frame(&mut stream, Op::Health, &[]).context("writing health frame")?;
-        let (header, payload) = protocol::read_frame(&mut stream, DEFAULT_MAX_FRAME)
-            .context("reading health response")?;
-        let health = match Op::from_u8(header.op) {
-            Some(Op::HealthOk) => protocol::decode_health_response(&payload)?,
-            Some(Op::Error) => {
-                let e = protocol::decode_error_response(&payload)?;
-                anyhow::bail!("server rejected the hello: {e}");
-            }
-            other => anyhow::bail!("unexpected hello response {other:?}"),
-        };
+    /// trip), then switch the socket to nonblocking mode for serving. No
+    /// auth secret, default reconnect backoff — see
+    /// [`RemoteBackend::connect_opts`] for both knobs.
+    pub fn connect<A: ToSocketAddrs + std::fmt::Display>(addr: A) -> Result<RemoteBackend> {
+        Self::connect_opts(&addr.to_string(), b"", Duration::from_millis(200))
+    }
+
+    /// [`RemoteBackend::connect`] with a shared auth secret (replayed on
+    /// every reconnect; empty = no hello) and the base reconnect backoff
+    /// (`[replication] probe_backoff_ms`; attempt `n` after a failure
+    /// waits `n × backoff`).
+    pub fn connect_opts(
+        addr: &str,
+        secret: &[u8],
+        probe_backoff: Duration,
+    ) -> Result<RemoteBackend> {
+        let (stream, health) = handshake(addr, secret)?;
         stream.set_nonblocking(true).context("switching to nonblocking mode")?;
         Ok(RemoteBackend {
             conn: Arc::new(Mutex::new(RemoteConn {
@@ -302,6 +399,13 @@ impl RemoteBackend {
                 next_seq: 0,
                 max_frame: DEFAULT_MAX_FRAME,
                 dead: None,
+                addr: addr.to_string(),
+                secret: secret.to_vec(),
+                dims: health.dims as usize,
+                backoff: probe_backoff.max(Duration::from_millis(1)),
+                attempts: 0,
+                last_attempt: None,
+                closed: false,
             })),
             dims: health.dims as usize,
             health0: health,
@@ -310,7 +414,7 @@ impl RemoteBackend {
 
     /// [`RemoteBackend::connect`] with bounded retries and linear backoff —
     /// for racing a server that is still binding its socket.
-    pub fn connect_retry<A: ToSocketAddrs + std::fmt::Debug + Copy>(
+    pub fn connect_retry<A: ToSocketAddrs + std::fmt::Display + Copy>(
         addr: A,
         attempts: usize,
         backoff: Duration,
@@ -397,7 +501,12 @@ impl Completion for RemoteCompletion {
                 let resp = protocol::decode_search_response(&payload)
                     .map_err(|e| SubmitError::Io(format!("undecodable search response: {e}")))?;
                 let truncated = vec![false; resp.results.len()];
-                BatchResult { epoch: resp.epoch, results: resp.results, truncated }
+                BatchResult {
+                    epoch: resp.epoch,
+                    results: resp.results,
+                    truncated,
+                    partial: resp.partial,
+                }
             }
             SearchKind::Threshold => {
                 let resp = protocol::decode_threshold_response(&payload).map_err(|e| {
@@ -409,7 +518,7 @@ impl Completion for RemoteCompletion {
                     results.push(m.hits);
                     truncated.push(m.truncated);
                 }
-                BatchResult { epoch: resp.epoch, results, truncated }
+                BatchResult { epoch: resp.epoch, results, truncated, partial: resp.partial }
             }
         };
         if result.results.len() != self.queries {
@@ -500,8 +609,28 @@ impl Backend for RemoteBackend {
         Ok(m.to_snapshot())
     }
 
+    fn snapshot_chunk(
+        &self,
+        pin: Option<u64>,
+        start_row: u64,
+        max_rows: u64,
+    ) -> Result<SnapshotChunk, SubmitError> {
+        let payload = protocol::encode_snapshot_request(pin, start_row, max_rows);
+        let resp = self.round_trip(Op::Snapshot, Op::SnapshotOk, &payload)?;
+        protocol::decode_snapshot_response(&resp)
+            .map_err(|e| SubmitError::Io(format!("undecodable snapshot response: {e}")))
+    }
+
+    fn catchup(&self, from_epoch: u64) -> Result<CatchupBatch, SubmitError> {
+        let payload = protocol::encode_replicate_request(from_epoch);
+        let resp = self.round_trip(Op::Replicate, Op::ReplicateOk, &payload)?;
+        protocol::decode_replicate_response(&resp)
+            .map_err(|e| SubmitError::Io(format!("undecodable replicate response: {e}")))
+    }
+
     fn close(&self) {
         let mut conn = lock_recover(&self.conn);
+        conn.closed = true;
         let _ = conn.stream.shutdown(std::net::Shutdown::Both);
         conn.poison(SubmitError::Closed);
     }

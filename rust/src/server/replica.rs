@@ -1,0 +1,394 @@
+//! Replica bootstrap and catch-up: turn any [`Backend`] — in practice a
+//! [`RemoteBackend`](super::RemoteBackend) dialing the primary — into a
+//! local serving store that tracks it.
+//!
+//! The joining sequence (DESIGN.md §Replication):
+//!
+//! 1. **Snapshot pull** ([`pull_store`]): chunked
+//!    [`Backend::snapshot_chunk`] requests walk the primary's rows in
+//!    global order. The first chunk fixes the *cut*: its epoch pins every
+//!    later request, so a commit landing mid-stream surfaces as a typed
+//!    `EpochMismatch` and the pull restarts from row 0 — the assembled
+//!    word list is always one epoch-consistent cut, never a torn mix.
+//! 2. **Seed** — the replica's [`TileManager`] is built from the cut and
+//!    seeded with the cut epoch, so its history lines up with the
+//!    primary's from that point on.
+//! 3. **Catch-up replay** ([`catch_up`]): [`Backend::catchup`] streams the
+//!    primary's admin log above the replica's epoch; every entry carries
+//!    the *programmed* (post write-verify) word, applied through the
+//!    epoch-CAS replication path, so replica rows are bit-exact copies of
+//!    the primary's cells, not a re-run of the stochastic write loop.
+//!    A replica that fell below the primary's bounded log gets a typed
+//!    `LogTruncated` and restarts from a fresh snapshot ([`bootstrap`]
+//!    does this automatically, a bounded number of times).
+//! 4. **Tracking** ([`ReplicaSync`]): a background thread repeats the
+//!    catch-up round on an interval. Transport failures are left to the
+//!    backend's own reconnect-with-backoff; `LogTruncated` after serving
+//!    starts flags the replica [`ReplicaSync::stale`] instead of silently
+//!    serving an ever-older store.
+
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Arc;
+use std::thread;
+use std::time::Duration;
+
+use crate::am::AmEngine;
+use crate::config::CosimeConfig;
+use crate::coordinator::backend::Backend;
+use crate::coordinator::{AmService, SubmitError, TileManager};
+use crate::util::BitVec;
+
+/// How many times a snapshot pull restarts after mid-stream commits
+/// (`EpochMismatch`) before giving up. Each restart begins at row 0 with a
+/// fresh pin; a primary under nonstop writes can starve a puller, so the
+/// bound turns livelock into a typed error.
+pub const SNAPSHOT_RESTART_LIMIT: usize = 8;
+
+/// How many times [`bootstrap`] re-pulls a fresh snapshot after the
+/// catch-up replay fell below the primary's bounded log (`LogTruncated`).
+pub const CATCHUP_RESTART_LIMIT: usize = 4;
+
+/// Pull one epoch-consistent snapshot from `source` (chunked, pinned to
+/// the first chunk's epoch) and build a local tile store from it, seeded
+/// to the cut epoch. `chunk_rows` is the per-request row ask; the server
+/// may answer less and the puller advances by what actually arrived.
+///
+/// Two failure modes restart the pull from row 0 (at most
+/// [`SNAPSHOT_RESTART_LIMIT`] times): a commit landing mid-stream
+/// (`EpochMismatch` against the pin — the cut is stale) and a transport
+/// failure (`Io`/`Closed` — a [`RemoteBackend`](super::RemoteBackend)
+/// source reconnects with backoff underneath, so a dropped link mid-pull
+/// heals into a fresh, still-consistent cut instead of aborting the join).
+pub fn pull_store<F>(
+    source: &dyn Backend,
+    tile_capacity: usize,
+    chunk_rows: u64,
+    factory: F,
+) -> Result<TileManager, SubmitError>
+where
+    F: Fn(Vec<BitVec>) -> anyhow::Result<Box<dyn AmEngine>> + Send + Sync + Clone + 'static,
+{
+    let mut last_restart: Option<SubmitError> = None;
+    'attempt: for _ in 0..SNAPSHOT_RESTART_LIMIT {
+        let first = match source.snapshot_chunk(None, 0, chunk_rows) {
+            Ok(c) => c,
+            Err(e @ (SubmitError::Io(_) | SubmitError::Closed)) => {
+                last_restart = Some(e);
+                continue 'attempt;
+            }
+            Err(e) => return Err(e),
+        };
+        let pin = first.epoch;
+        let dims = first.dims;
+        let total = first.total_rows;
+        if total == 0 {
+            return Err(SubmitError::BadQuery(
+                "snapshot source serves an empty store".into(),
+            ));
+        }
+        let mut words = first.rows;
+        while (words.len() as u64) < total {
+            match source.snapshot_chunk(Some(pin), words.len() as u64, chunk_rows) {
+                Ok(chunk) => {
+                    if chunk.rows.is_empty() {
+                        return Err(SubmitError::Io(format!(
+                            "snapshot stream stalled at row {} of {total}",
+                            words.len()
+                        )));
+                    }
+                    if chunk.dims != dims || chunk.total_rows != total {
+                        return Err(SubmitError::Io(
+                            "snapshot chunks disagree on the store shape".into(),
+                        ));
+                    }
+                    words.extend(chunk.rows);
+                }
+                Err(e @ SubmitError::EpochMismatch { .. }) => {
+                    // A commit landed mid-stream; the cut is stale. Restart
+                    // from row 0 under a fresh pin.
+                    last_restart = Some(e);
+                    continue 'attempt;
+                }
+                Err(e @ (SubmitError::Io(_) | SubmitError::Closed)) => {
+                    // The link dropped mid-pull; the backend reconnects on
+                    // the next request. A fresh cut is cheaper than proving
+                    // the half-pulled one still consistent.
+                    last_restart = Some(e);
+                    continue 'attempt;
+                }
+                Err(e) => return Err(e),
+            }
+        }
+        if words.len() as u64 != total || words.iter().any(|w| w.len() as u64 != dims) {
+            return Err(SubmitError::Io(
+                "snapshot stream answered a different shape than it declared".into(),
+            ));
+        }
+        let tiles = TileManager::build(words, tile_capacity, factory.clone())
+            .map_err(|e| SubmitError::Io(format!("building the replica store: {e}")))?;
+        tiles.seed_epoch(pin);
+        return Ok(tiles);
+    }
+    Err(last_restart.unwrap_or_else(|| {
+        SubmitError::Io("snapshot pull restarted past its limit".into())
+    }))
+}
+
+/// One catch-up round: replay the primary's admin log from the replica's
+/// current epoch until a pull comes back empty (caught up to the serving
+/// epoch at that moment). Returns the replica's epoch after the round.
+/// `LogTruncated` means the replica is below the primary's bounded log —
+/// only a fresh snapshot can recover ([`bootstrap`] automates that).
+pub fn catch_up(source: &dyn Backend, svc: &AmService) -> Result<u64, SubmitError> {
+    loop {
+        let batch = source.catchup(svc.epoch())?;
+        if batch.entries.is_empty() {
+            return Ok(svc.epoch());
+        }
+        for entry in batch.entries {
+            svc.apply_replicated(entry)?;
+        }
+    }
+}
+
+/// Join a primary end to end: pull an epoch-consistent snapshot, start a
+/// local service over it (serving policy and write plane from `cfg`), and
+/// replay the catch-up log to the primary's serving epoch. If the replay
+/// falls below the primary's bounded log, the whole sequence restarts from
+/// a fresh snapshot, at most [`CATCHUP_RESTART_LIMIT`] times.
+pub fn bootstrap<F>(
+    source: &dyn Backend,
+    cfg: &CosimeConfig,
+    tile_capacity: usize,
+    chunk_rows: u64,
+    factory: F,
+) -> Result<AmService, SubmitError>
+where
+    F: Fn(Vec<BitVec>) -> anyhow::Result<Box<dyn AmEngine>> + Send + Sync + Clone + 'static,
+{
+    let mut last_truncation: Option<SubmitError> = None;
+    for _ in 0..CATCHUP_RESTART_LIMIT {
+        let tiles = pull_store(source, tile_capacity, chunk_rows, factory.clone())?;
+        let svc = AmService::start_with_config(cfg, tiles);
+        match catch_up(source, &svc) {
+            Ok(_) => return Ok(svc),
+            Err(e @ SubmitError::LogTruncated { .. }) => {
+                svc.shutdown();
+                last_truncation = Some(e);
+            }
+            Err(e) => {
+                svc.shutdown();
+                return Err(e);
+            }
+        }
+    }
+    Err(last_truncation.unwrap_or_else(|| {
+        SubmitError::Io("catch-up restart limit exceeded".into())
+    }))
+}
+
+/// Background catch-up: a thread repeating [`catch_up`] rounds on an
+/// interval so a serving replica keeps tracking its primary. See the
+/// module docs for the failure policy.
+pub struct ReplicaSync {
+    stop: Arc<AtomicBool>,
+    stale: Arc<AtomicBool>,
+    rounds: Arc<AtomicU64>,
+    thread: Option<thread::JoinHandle<()>>,
+}
+
+impl ReplicaSync {
+    /// Start tracking: one catch-up round now-ish, then every `interval`.
+    /// The backend's own reconnect logic handles primary outages; the sync
+    /// thread just keeps asking.
+    pub fn spawn(source: Box<dyn Backend>, svc: AmService, interval: Duration) -> ReplicaSync {
+        let stop = Arc::new(AtomicBool::new(false));
+        let stale = Arc::new(AtomicBool::new(false));
+        let rounds = Arc::new(AtomicU64::new(0));
+        let (t_stop, t_stale, t_rounds) = (stop.clone(), stale.clone(), rounds.clone());
+        let thread = thread::Builder::new()
+            .name("cosime-replica-sync".into())
+            .spawn(move || {
+                while !t_stop.load(Ordering::Acquire) {
+                    match catch_up(source.as_ref(), &svc) {
+                        Ok(_) => {
+                            t_rounds.fetch_add(1, Ordering::AcqRel);
+                        }
+                        Err(SubmitError::LogTruncated { .. }) => {
+                            // Below the primary's log: replay can never
+                            // recover. Flag it loudly and stop tracking
+                            // rather than serving an ever-older store as if
+                            // it were healthy.
+                            t_stale.store(true, Ordering::Release);
+                            break;
+                        }
+                        Err(_) => {
+                            // Transport-level: the backend reconnects with
+                            // backoff on its own; keep polling.
+                        }
+                    }
+                    thread::sleep(interval);
+                }
+                source.close();
+            })
+            .ok();
+        ReplicaSync { stop, stale, rounds, thread }
+    }
+
+    /// The replica fell below the primary's bounded catch-up log and
+    /// stopped tracking; it needs a fresh snapshot (re-[`bootstrap`]).
+    pub fn stale(&self) -> bool {
+        self.stale.load(Ordering::Acquire)
+    }
+
+    /// Completed catch-up rounds (a progress heartbeat for tests/ops).
+    pub fn rounds(&self) -> u64 {
+        self.rounds.load(Ordering::Acquire)
+    }
+
+    /// Stop the sync thread and close its backend connection.
+    pub fn stop(mut self) {
+        self.stop.store(true, Ordering::Release);
+        if let Some(t) = self.thread.take() {
+            let _ = t.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::am::DigitalExactEngine;
+    use crate::coordinator::backend::LocalBackend;
+    use crate::util::{rng, BitVec};
+    use anyhow::Result;
+
+    fn digital_factory(words: Vec<BitVec>) -> Result<Box<dyn AmEngine>> {
+        Ok(Box::new(DigitalExactEngine::new(words)))
+    }
+
+    fn primary(rows: usize, dims: usize, seed: u64) -> (AmService, CosimeConfig) {
+        let mut r = rng(seed);
+        let words: Vec<BitVec> = (0..rows).map(|_| BitVec::random(dims, 0.5, &mut r)).collect();
+        let cfg = CosimeConfig::default();
+        let tiles = TileManager::build(words, 16, digital_factory).unwrap();
+        (AmService::start_with_config(&cfg, tiles), cfg)
+    }
+
+    fn topk(svc: &AmService, q: &BitVec, k: usize) -> Vec<(usize, f64)> {
+        let resp = svc.submit_topk(q.clone(), k).unwrap().recv().unwrap();
+        resp.hits.iter().map(|h| (h.winner, h.score)).collect()
+    }
+
+    /// bootstrap() = snapshot + replay: after primary-side commits, the
+    /// replica serves bit-exact results at the primary's epoch.
+    #[test]
+    fn bootstrap_tracks_the_primary_bit_exactly() {
+        let (svc, cfg) = primary(40, 64, 71);
+        let mut r = rng(72);
+        for _ in 0..5 {
+            svc.admin(crate::coordinator::AdminOp::Insert {
+                word: BitVec::random(64, 0.5, &mut r),
+            })
+            .unwrap();
+        }
+        let source = LocalBackend::new(svc.clone());
+        let replica = bootstrap(&source, &cfg, 16, 7, digital_factory).unwrap();
+        assert_eq!(replica.epoch(), svc.epoch());
+        assert_eq!(replica.rows(), svc.rows());
+        for _ in 0..20 {
+            let q = BitVec::random(64, 0.5, &mut r);
+            assert_eq!(topk(&replica, &q, 3), topk(&svc, &q, 3));
+        }
+        replica.shutdown();
+        svc.shutdown();
+    }
+
+    /// The background sync loop follows live commits and its staleness flag
+    /// stays clear while the log holds.
+    #[test]
+    fn replica_sync_follows_live_commits() {
+        let (svc, cfg) = primary(30, 64, 73);
+        let source = LocalBackend::new(svc.clone());
+        let replica = bootstrap(&source, &cfg, 16, 8, digital_factory).unwrap();
+        let sync = ReplicaSync::spawn(
+            Box::new(LocalBackend::new(svc.clone())),
+            replica.clone(),
+            Duration::from_millis(5),
+        );
+        let mut r = rng(74);
+        let mut last = None;
+        for _ in 0..6 {
+            let w = BitVec::random(64, 0.5, &mut r);
+            svc.admin(crate::coordinator::AdminOp::Insert { word: w.clone() }).unwrap();
+            last = Some(w);
+        }
+        let last = last.unwrap();
+        let target = svc.epoch();
+        for _ in 0..400 {
+            if replica.epoch() >= target {
+                break;
+            }
+            std::thread::sleep(Duration::from_millis(5));
+        }
+        assert_eq!(replica.epoch(), target, "sync loop caught up to the primary");
+        assert!(!sync.stale());
+        assert!(sync.rounds() > 0);
+        // The last inserted word must win on the replica with its full
+        // self-score — proof the replayed rows carry programmed bits.
+        let got = topk(&replica, &last, 1);
+        assert_eq!(got[0].1, f64::from(last.count_ones()));
+        sync.stop();
+        replica.shutdown();
+        svc.shutdown();
+    }
+
+    /// A replica that fell below the primary's bounded log is flagged
+    /// stale by the sync loop; bootstrap() recovers by re-snapshotting.
+    #[test]
+    fn log_truncation_flags_stale_and_bootstrap_recovers() {
+        let mut cfg = CosimeConfig::default();
+        cfg.replication.log_capacity = 2;
+        let mut r = rng(75);
+        let words: Vec<BitVec> = (0..10).map(|_| BitVec::random(64, 0.5, &mut r)).collect();
+        let tiles = TileManager::build(words, 16, digital_factory).unwrap();
+        let svc = AmService::start_with_config(&cfg, tiles);
+
+        let source = LocalBackend::new(svc.clone());
+        let replica = bootstrap(&source, &cfg, 16, 8, digital_factory).unwrap();
+
+        // Outrun the 2-entry log while the replica is not syncing.
+        for _ in 0..6 {
+            svc.admin(crate::coordinator::AdminOp::Insert {
+                word: BitVec::random(64, 0.5, &mut r),
+            })
+            .unwrap();
+        }
+        match catch_up(&source, &replica) {
+            Err(SubmitError::LogTruncated { floor }) => assert!(floor > replica.epoch()),
+            other => panic!("expected LogTruncated, got {other:?}"),
+        }
+        let sync = ReplicaSync::spawn(
+            Box::new(LocalBackend::new(svc.clone())),
+            replica.clone(),
+            Duration::from_millis(2),
+        );
+        for _ in 0..500 {
+            if sync.stale() {
+                break;
+            }
+            std::thread::sleep(Duration::from_millis(2));
+        }
+        assert!(sync.stale(), "sync loop must flag the truncation");
+        sync.stop();
+        replica.shutdown();
+
+        // bootstrap() from the same source recovers via a fresh snapshot.
+        let fresh = bootstrap(&source, &cfg, 16, 8, digital_factory).unwrap();
+        assert_eq!(fresh.epoch(), svc.epoch());
+        let q = BitVec::random(64, 0.5, &mut r);
+        assert_eq!(topk(&fresh, &q, 3), topk(&svc, &q, 3));
+        fresh.shutdown();
+        svc.shutdown();
+    }
+}

@@ -51,6 +51,28 @@
 //! stamped ≥ this epoch observe the mutation") hold within a shard; across
 //! shards the aggregate is a progress indicator, not a total order.
 //!
+//! # Failover: ejection, degraded scatter, rejoin
+//!
+//! The router tracks one health bit per shard. A transport failure —
+//! a submit that fails with an I/O error, or a child whose in-flight
+//! ticket errors mid-gather — **ejects** the shard: its contribution is
+//! dropped, the surviving K-1 shards are merged as usual, and the batch
+//! is stamped [`BatchResult::partial`] so clients can tell a degraded
+//! answer from a complete one (on the wire: the v3+ partial flag).
+//! Ejected shards are skipped by subsequent scatters, so one dead server
+//! costs one degraded batch, not a timeout per request. Semantic
+//! rejections (`BadQuery`, `Busy`, epoch mismatches) still fail the whole
+//! batch — they mean the *request* is wrong or the store is loaded, not
+//! that a shard is gone.
+//!
+//! **Rejoin** rides the health probe: [`RouterBackend::health`] re-probes
+//! ejected children (for a [`super::RemoteBackend`] child the probe is
+//! what triggers its reconnect handshake), and a child that answers with
+//! the right dimensionality is marked healthy again and resumes serving
+//! the next scatter. [`BackendHealth::shards_unhealthy`] reports the
+//! current ejection count; degraded batches, ejections and rejoins are
+//! counted in the router's metrics lane.
+//!
 //! # Metrics
 //!
 //! Child snapshots carry their latency histograms (log-spaced buckets,
@@ -60,14 +82,17 @@
 //! arrives without histograms (a pre-v2 wire peer) does aggregation fall
 //! back to the conservative worst-shard tail.
 
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Arc;
+
 use anyhow::{bail, ensure, Result};
 
 use crate::am::kernel::{Matches, TopK};
 use crate::am::AmEngine;
 use crate::config::CosimeConfig;
 use crate::coordinator::backend::{
-    AdminCmd, AdminOutcome, Backend, BackendHealth, BatchResult, Completion, Hit, LocalBackend,
-    Ticket,
+    AdminCmd, AdminOutcome, Backend, BackendHealth, BatchResult, CatchupBatch, Completion, Hit,
+    LocalBackend, SnapshotChunk, Ticket,
 };
 use crate::coordinator::metrics::LatencyHists;
 use crate::coordinator::{
@@ -112,12 +137,61 @@ pub fn fnv1a_word(word: &BitVec) -> u64 {
 /// [`AdminOutcome`] under its historical router-era name).
 pub type RoutedAdminResponse = AdminOutcome;
 
+/// Shared failover state: one health bit per shard plus the counters the
+/// metrics lane reports. Lives behind an [`Arc`] so in-flight completions
+/// can eject a shard after the submitting call returned.
+struct RouterState {
+    /// `healthy[i]` — shard `i` participates in scatters.
+    healthy: Vec<AtomicBool>,
+    /// Batches served with at least one shard missing (partial results).
+    degraded: AtomicU64,
+    /// Healthy→unhealthy transitions.
+    ejections: AtomicU64,
+    /// Unhealthy→healthy transitions (probe found the shard serving again).
+    rejoins: AtomicU64,
+}
+
+impl RouterState {
+    fn new(shards: usize) -> Arc<RouterState> {
+        Arc::new(RouterState {
+            healthy: (0..shards).map(|_| AtomicBool::new(true)).collect(),
+            degraded: AtomicU64::new(0),
+            ejections: AtomicU64::new(0),
+            rejoins: AtomicU64::new(0),
+        })
+    }
+
+    fn is_healthy(&self, shard: usize) -> bool {
+        self.healthy[shard].load(Ordering::Acquire)
+    }
+
+    /// Mark `shard` unhealthy; counts the transition exactly once even when
+    /// several in-flight batches observe the same failure.
+    fn eject(&self, shard: usize) {
+        if self.healthy[shard].swap(false, Ordering::AcqRel) {
+            self.ejections.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
+    /// Mark `shard` healthy again (probe succeeded).
+    fn rejoin(&self, shard: usize) {
+        if !self.healthy[shard].swap(true, Ordering::AcqRel) {
+            self.rejoins.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
+    fn unhealthy_count(&self) -> u32 {
+        self.healthy.iter().filter(|h| !h.load(Ordering::Acquire)).count() as u32
+    }
+}
+
 /// One logical store fanned across child backends. See the module docs for
-/// placement, global ids and epoch semantics. The historical name
-/// [`ShardRouter`] aliases this type.
+/// placement, global ids, epoch semantics and failover. The historical
+/// name [`ShardRouter`] aliases this type.
 pub struct RouterBackend {
     children: Vec<Box<dyn Backend>>,
     dims: usize,
+    state: Arc<RouterState>,
 }
 
 /// The pre-backend-trait name of [`RouterBackend`], kept so existing call
@@ -223,16 +297,26 @@ impl PendingSearch {
     }
 }
 
-/// Completion of a router-scattered batch: one child ticket per shard,
-/// each covering the whole batch; ready when every child is. The merge is
-/// kind-aware: top-k batches rank-merge through [`merge_ranked`], threshold
-/// batches union-merge through [`merge_matches`] with exact per-query
-/// truncation flags.
+/// Completion of a router-scattered batch: one child ticket per queried
+/// shard, ready when every surviving child is. The merge is kind-aware:
+/// top-k batches rank-merge through [`merge_ranked`], threshold batches
+/// union-merge through [`merge_matches`] with exact per-query truncation
+/// flags. A child whose ticket errors mid-gather is **ejected** (module
+/// docs): its contribution is dropped, the rest merge, and the batch is
+/// stamped partial. Only when *every* child fails does the gather itself
+/// fail.
 struct RouterCompletion {
-    /// `pending[i]` holds child `i`'s ticket until it completes into
-    /// `done[i]`.
+    state: Arc<RouterState>,
+    /// Original shard index per slot — global row ids must keep naming the
+    /// owning shard even when some shards were skipped at submit.
+    shards: Vec<usize>,
+    /// `pending[i]` holds slot `i`'s ticket until it completes into
+    /// `done[i]` (or fails into `failed[i]`).
     pending: Vec<Option<Ticket>>,
     done: Vec<Option<BatchResult>>,
+    failed: Vec<bool>,
+    /// The last child failure, surfaced only if no shard survives.
+    last_err: Option<SubmitError>,
     queries: usize,
     /// Top-k depth, or the threshold batch's per-query match bound.
     k: usize,
@@ -240,18 +324,43 @@ struct RouterCompletion {
     kind: SearchKind,
     /// Threshold batches only (`NEG_INFINITY` for top-k, unused there).
     threshold: f64,
+    /// A shard was skipped at submit or ejected mid-gather.
+    partial: bool,
 }
 
 impl RouterCompletion {
-    fn merge(&mut self) -> BatchResult {
+    /// Record slot `i`'s child failure: eject the shard, drop its
+    /// contribution, stamp the batch partial.
+    fn fail_slot(&mut self, i: usize, e: SubmitError) {
+        self.pending[i] = None;
+        self.failed[i] = true;
+        self.partial = true;
+        self.state.eject(self.shards[i]);
+        self.last_err = Some(e);
+    }
+
+    /// Merge the surviving children; `None` when every child failed (the
+    /// caller surfaces `last_err`).
+    fn merge(&mut self) -> Option<BatchResult> {
         let mut epoch = 0u64;
-        let children: Vec<BatchResult> =
-            // lint: allow(no-panic) -- merge() is only reachable from poll/wait
-            // after every done[i] slot is filled; an empty slot is a local
-            // logic error, not remote-controlled state.
-            self.done.iter_mut().map(|d| d.take().expect("all children done")).collect();
-        for c in &children {
+        let mut partial = self.partial;
+        let children: Vec<(usize, BatchResult)> = self
+            .done
+            .iter_mut()
+            .enumerate()
+            .filter_map(|(i, d)| d.take().map(|r| (self.shards[i], r)))
+            .collect();
+        if children.is_empty() {
+            return None;
+        }
+        for (_, c) in &children {
             epoch += c.epoch;
+            // A child can itself answer degraded (a remote peer serving
+            // through its own failure); the flag must survive the merge.
+            partial |= c.partial;
+        }
+        if partial {
+            self.state.degraded.fetch_add(1, Ordering::Relaxed);
         }
         let mut results = Vec::with_capacity(self.queries);
         let mut truncated = Vec::with_capacity(self.queries);
@@ -260,9 +369,8 @@ impl RouterCompletion {
                 SearchKind::TopK => {
                     let lists: Vec<(usize, &[Hit])> = children
                         .iter()
-                        .enumerate()
-                        .map(|(ci, c)| {
-                            (ci, c.results.get(qi).map(Vec::as_slice).unwrap_or(&[]))
+                        .map(|(shard, c)| {
+                            (*shard, c.results.get(qi).map(Vec::as_slice).unwrap_or(&[]))
                         })
                         .collect();
                     results.push(merge_ranked(&lists, self.k));
@@ -271,10 +379,9 @@ impl RouterCompletion {
                 SearchKind::Threshold => {
                     let lists: Vec<(usize, &[Hit], bool)> = children
                         .iter()
-                        .enumerate()
-                        .map(|(ci, c)| {
+                        .map(|(shard, c)| {
                             (
-                                ci,
+                                *shard,
                                 c.results.get(qi).map(Vec::as_slice).unwrap_or(&[]),
                                 c.truncated.get(qi).copied().unwrap_or(false),
                             )
@@ -286,7 +393,17 @@ impl RouterCompletion {
                 }
             }
         }
-        BatchResult { epoch, results, truncated }
+        Some(BatchResult { epoch, results, truncated, partial })
+    }
+
+    fn finish(&mut self) -> Result<BatchResult, SubmitError> {
+        match self.merge() {
+            Some(result) => Ok(result),
+            None => Err(self
+                .last_err
+                .take()
+                .unwrap_or_else(|| SubmitError::Io("every shard failed".into()))),
+        }
     }
 }
 
@@ -294,37 +411,41 @@ impl Completion for RouterCompletion {
     fn poll(&mut self) -> Result<Option<BatchResult>, SubmitError> {
         let mut all_done = true;
         for i in 0..self.pending.len() {
-            if self.done[i].is_some() {
+            if self.done[i].is_some() || self.failed[i] {
                 continue;
             }
-            // lint: allow(no-panic) -- done[i].is_none() implies pending[i] is
-            // still occupied (the two vecs trade slots atomically above).
+            // lint: allow(no-panic) -- an unfinished slot implies pending[i]
+            // is still occupied (the vecs trade slots atomically above).
             let ticket = self.pending[i].as_mut().expect("pending ticket");
-            match ticket.poll()? {
-                Some(result) => {
+            match ticket.poll() {
+                Ok(Some(result)) => {
                     self.done[i] = Some(result);
                     self.pending[i] = None;
                 }
-                None => all_done = false,
+                Ok(None) => all_done = false,
+                Err(e) => self.fail_slot(i, e),
             }
         }
         if !all_done {
             return Ok(None);
         }
-        Ok(Some(self.merge()))
+        self.finish().map(Some)
     }
 
     fn wait(&mut self) -> Result<BatchResult, SubmitError> {
         for i in 0..self.pending.len() {
-            if self.done[i].is_some() {
+            if self.done[i].is_some() || self.failed[i] {
                 continue;
             }
-            // lint: allow(no-panic) -- done[i].is_none() implies pending[i] is
-            // still occupied, as in poll().
+            // lint: allow(no-panic) -- an unfinished slot implies pending[i]
+            // is still occupied, as in poll().
             let ticket = self.pending[i].take().expect("pending ticket");
-            self.done[i] = Some(ticket.wait()?);
+            match ticket.wait() {
+                Ok(result) => self.done[i] = Some(result),
+                Err(e) => self.fail_slot(i, e),
+            }
         }
-        Ok(self.merge())
+        self.finish()
     }
 }
 
@@ -380,7 +501,7 @@ impl RouterBackend {
             children
                 .push(Box::new(LocalBackend::new(AmService::start_with_config(cfg, tiles))));
         }
-        Ok(RouterBackend { children, dims })
+        Ok(RouterBackend { state: RouterState::new(children.len()), children, dims })
     }
 
     /// Wrap already-running services as shards (advanced callers / tests).
@@ -424,12 +545,63 @@ impl RouterBackend {
                 h.rows
             );
         }
-        Ok(RouterBackend { children, dims })
+        Ok(RouterBackend { state: RouterState::new(children.len()), children, dims })
     }
 
     /// Number of shard backends behind this router.
     pub fn shard_count(&self) -> usize {
         self.children.len()
+    }
+
+    /// Whether `shard` currently participates in scatters (not ejected).
+    pub fn shard_healthy(&self, shard: usize) -> bool {
+        shard < self.children.len() && self.state.is_healthy(shard)
+    }
+
+    /// Healthy→unhealthy transitions since construction.
+    pub fn ejections(&self) -> u64 {
+        self.state.ejections.load(Ordering::Relaxed)
+    }
+
+    /// Unhealthy→healthy transitions (successful rejoin probes).
+    pub fn rejoins(&self) -> u64 {
+        self.state.rejoins.load(Ordering::Relaxed)
+    }
+
+    /// Scatter one submission across the healthy children. Transport
+    /// failures (`Io`/`Closed`) eject the failing shard and continue;
+    /// semantic rejections fail the whole batch. Returns the queried shard
+    /// indices, their tickets, and whether anything was skipped.
+    fn scatter<F>(&self, submit: F) -> Result<(Vec<usize>, Vec<Option<Ticket>>, bool), SubmitError>
+    where
+        F: Fn(&dyn Backend) -> Result<Ticket, SubmitError>,
+    {
+        let mut shards = Vec::with_capacity(self.children.len());
+        let mut pending = Vec::with_capacity(self.children.len());
+        let mut partial = false;
+        let mut last_err: Option<SubmitError> = None;
+        for (i, child) in self.children.iter().enumerate() {
+            if !self.state.is_healthy(i) {
+                partial = true;
+                continue;
+            }
+            match submit(child.as_ref()) {
+                Ok(ticket) => {
+                    shards.push(i);
+                    pending.push(Some(ticket));
+                }
+                Err(e @ (SubmitError::Io(_) | SubmitError::Closed)) => {
+                    self.state.eject(i);
+                    partial = true;
+                    last_err = Some(e);
+                }
+                Err(e) => return Err(e),
+            }
+        }
+        if pending.is_empty() {
+            return Err(last_err.unwrap_or(SubmitError::Closed));
+        }
+        Ok((shards, pending, partial))
     }
 
     /// Total stored rows across all shards (best effort: an unreachable
@@ -516,18 +688,21 @@ impl Backend for RouterBackend {
     }
 
     fn submit_search(&self, queries: &[BitVec], k: usize) -> Result<Ticket, SubmitError> {
-        let mut pending = Vec::with_capacity(self.children.len());
-        for child in &self.children {
-            pending.push(Some(child.submit_search(queries, k)?));
-        }
+        let (shards, pending, partial) = self.scatter(|child| child.submit_search(queries, k))?;
         let done = (0..pending.len()).map(|_| None).collect();
+        let failed = vec![false; pending.len()];
         Ok(Ticket::new(Box::new(RouterCompletion {
+            state: self.state.clone(),
+            shards,
             pending,
             done,
+            failed,
+            last_err: None,
             queries: queries.len(),
             k,
             kind: SearchKind::TopK,
             threshold: f64::NEG_INFINITY,
+            partial,
         })))
     }
 
@@ -537,18 +712,22 @@ impl Backend for RouterBackend {
         threshold: f64,
         limit: usize,
     ) -> Result<Ticket, SubmitError> {
-        let mut pending = Vec::with_capacity(self.children.len());
-        for child in &self.children {
-            pending.push(Some(child.submit_threshold(queries, threshold, limit)?));
-        }
+        let (shards, pending, partial) =
+            self.scatter(|child| child.submit_threshold(queries, threshold, limit))?;
         let done = (0..pending.len()).map(|_| None).collect();
+        let failed = vec![false; pending.len()];
         Ok(Ticket::new(Box::new(RouterCompletion {
+            state: self.state.clone(),
+            shards,
             pending,
             done,
+            failed,
+            last_err: None,
             queries: queries.len(),
             k: limit,
             kind: SearchKind::Threshold,
             threshold,
+            partial,
         })))
     }
 
@@ -596,38 +775,110 @@ impl Backend for RouterBackend {
         })
     }
 
+    /// Probe every child — including ejected ones, for which the probe is
+    /// the rejoin path (on a remote child it triggers the reconnect
+    /// handshake). A child that answers with the right dimensionality is
+    /// (re-)marked healthy; one that fails is ejected and reported via
+    /// `shards_unhealthy`. Fails only when *no* child answers.
     fn health(&self) -> Result<BackendHealth, SubmitError> {
         let mut agg = BackendHealth {
             rows: 0,
             dims: self.dims as u64,
             epoch: 0,
             shards: self.children.len() as u32,
+            shards_unhealthy: 0,
             max_batch: 0,
             max_k: 0,
         };
-        for child in &self.children {
-            let h = child.health()?;
-            agg.rows += h.rows;
-            agg.epoch += h.epoch;
-            // Hints: the fan-out can only serve what every child serves, so
-            // take the min of the *known* advertisements (0 = unknown).
-            for (slot, hint) in
-                [(&mut agg.max_batch, h.max_batch), (&mut agg.max_k, h.max_k)]
-            {
-                if hint != 0 {
-                    *slot = if *slot == 0 { hint } else { (*slot).min(hint) };
+        let mut last_err: Option<SubmitError> = None;
+        let mut answered = 0usize;
+        for (i, child) in self.children.iter().enumerate() {
+            match child.health() {
+                Ok(h) if h.dims == self.dims as u64 => {
+                    self.state.rejoin(i);
+                    answered += 1;
+                    agg.rows += h.rows;
+                    agg.epoch += h.epoch;
+                    // Hints: the fan-out can only serve what every child
+                    // serves, so take the min of the *known* advertisements
+                    // (0 = unknown).
+                    for (slot, hint) in
+                        [(&mut agg.max_batch, h.max_batch), (&mut agg.max_k, h.max_k)]
+                    {
+                        if hint != 0 {
+                            *slot = if *slot == 0 { hint } else { (*slot).min(hint) };
+                        }
+                    }
+                }
+                Ok(h) => {
+                    // Wrong store answering on the shard's address: never
+                    // merge its rows into this logical store.
+                    self.state.eject(i);
+                    last_err = Some(SubmitError::BadQuery(format!(
+                        "shard {i} now serves {} bits, router expects {}",
+                        h.dims, self.dims
+                    )));
+                }
+                Err(e) => {
+                    self.state.eject(i);
+                    last_err = Some(e);
                 }
             }
         }
+        if answered == 0 {
+            return Err(last_err.unwrap_or(SubmitError::Closed));
+        }
+        agg.shards_unhealthy = self.state.unhealthy_count();
         Ok(agg)
     }
 
     fn metrics(&self) -> Result<MetricsSnapshot, SubmitError> {
         let mut snaps = Vec::with_capacity(self.children.len());
-        for child in &self.children {
-            snaps.push(child.metrics()?);
+        for (i, child) in self.children.iter().enumerate() {
+            // Unreachable shards are skipped: a degraded router still
+            // reports the survivors' lanes (plus its own failover counters).
+            if !self.state.is_healthy(i) {
+                continue;
+            }
+            match child.metrics() {
+                Ok(s) => snaps.push(s),
+                Err(_) => self.state.eject(i),
+            }
         }
-        Ok(aggregate_metrics(&snaps))
+        let mut agg = aggregate_metrics(&snaps);
+        agg.degraded += self.state.degraded.load(Ordering::Relaxed);
+        Ok(agg)
+    }
+
+    fn snapshot_chunk(
+        &self,
+        pin: Option<u64>,
+        start_row: u64,
+        max_rows: u64,
+    ) -> Result<SnapshotChunk, SubmitError> {
+        // Replication's unit is one flat shard: global row ids are a
+        // property of *this* router's fan-out, so a streamed multi-shard cut
+        // would bake the shard count into the replica. Single-child routers
+        // (the common `serve` topology) forward transparently.
+        match self.children.as_slice() {
+            [only] => only.snapshot_chunk(pin, start_row, max_rows),
+            _ => Err(SubmitError::BadQuery(format!(
+                "snapshot streaming serves flat stores; this router fans over {} shards \
+                 (replicate each shard server directly)",
+                self.children.len()
+            ))),
+        }
+    }
+
+    fn catchup(&self, from_epoch: u64) -> Result<CatchupBatch, SubmitError> {
+        match self.children.as_slice() {
+            [only] => only.catchup(from_epoch),
+            _ => Err(SubmitError::BadQuery(format!(
+                "catch-up replay serves flat stores; this router fans over {} shards \
+                 (replicate each shard server directly)",
+                self.children.len()
+            ))),
+        }
     }
 
     fn close(&self) {
@@ -662,6 +913,7 @@ pub fn aggregate_metrics(snaps: &[MetricsSnapshot]) -> MetricsSnapshot {
         kinds: Vec::new(),
         admin: Vec::new(),
         admin_rejected: 0,
+        degraded: 0,
         write: WriteCostSnapshot::default(),
         lat: None,
     };
@@ -698,6 +950,7 @@ pub fn aggregate_metrics(snaps: &[MetricsSnapshot]) -> MetricsSnapshot {
             },
         }
         agg.admin_rejected += s.admin_rejected;
+        agg.degraded += s.degraded;
         agg.write.cells += s.write.cells;
         agg.write.pulses += s.write.pulses;
         agg.write.energy_j += s.write.energy_j;
@@ -1107,6 +1360,206 @@ mod tests {
         let agg = aggregate_metrics(&per);
         assert_eq!(agg.total_p99_us, per[0].total_p99_us.max(per[1].total_p99_us));
         assert!(agg.lat.is_none());
+        router.shutdown();
+    }
+
+    use std::sync::atomic::{AtomicU8, Ordering as AOrd};
+    use std::sync::Arc;
+
+    const FLAKY_OK: u8 = 0;
+    /// Submissions fail synchronously (connection refused).
+    const FLAKY_SUBMIT: u8 = 1;
+    /// Submissions queue, then the ticket fails (shard died mid-flight).
+    const FLAKY_GATHER: u8 = 2;
+
+    /// A child that fails on command: healthy passthrough, sync submit
+    /// failure, or failure surfacing only when the ticket completes.
+    struct FlakyBackend {
+        inner: Box<dyn Backend>,
+        mode: Arc<AtomicU8>,
+    }
+
+    struct FailInFlight;
+    impl Completion for FailInFlight {
+        fn poll(&mut self) -> Result<Option<BatchResult>, SubmitError> {
+            Err(SubmitError::Io("shard died mid-flight".into()))
+        }
+    }
+
+    impl FlakyBackend {
+        fn gate(&self) -> Result<(), SubmitError> {
+            match self.mode.load(AOrd::SeqCst) {
+                FLAKY_SUBMIT => Err(SubmitError::Io("connection refused".into())),
+                _ => Ok(()),
+            }
+        }
+    }
+
+    impl Backend for FlakyBackend {
+        fn dims(&self) -> usize {
+            self.inner.dims()
+        }
+        fn submit_search(&self, queries: &[BitVec], k: usize) -> Result<Ticket, SubmitError> {
+            self.gate()?;
+            let ticket = self.inner.submit_search(queries, k)?;
+            if self.mode.load(AOrd::SeqCst) == FLAKY_GATHER {
+                drop(ticket);
+                return Ok(Ticket::new(Box::new(FailInFlight)));
+            }
+            Ok(ticket)
+        }
+        fn submit_threshold(
+            &self,
+            queries: &[BitVec],
+            threshold: f64,
+            limit: usize,
+        ) -> Result<Ticket, SubmitError> {
+            self.gate()?;
+            self.inner.submit_threshold(queries, threshold, limit)
+        }
+        fn admin(
+            &self,
+            cmd: AdminCmd,
+            expected_epoch: Option<u64>,
+        ) -> Result<AdminOutcome, SubmitError> {
+            self.gate()?;
+            self.inner.admin(cmd, expected_epoch)
+        }
+        fn health(&self) -> Result<BackendHealth, SubmitError> {
+            if self.mode.load(AOrd::SeqCst) != FLAKY_OK {
+                return Err(SubmitError::Io("connection refused".into()));
+            }
+            self.inner.health()
+        }
+        fn metrics(&self) -> Result<MetricsSnapshot, SubmitError> {
+            self.gate()?;
+            self.inner.metrics()
+        }
+        fn close(&self) {
+            self.inner.close();
+        }
+    }
+
+    fn local_shard(words: Vec<BitVec>) -> Box<dyn Backend> {
+        let cfg = CosimeConfig::default();
+        let tiles = TileManager::build(words, 64, digital_factory).unwrap();
+        Box::new(LocalBackend::new(AmService::start_with_config(&cfg, tiles)))
+    }
+
+    fn flaky_pair(seed: u64) -> (RouterBackend, Vec<BitVec>, Arc<AtomicU8>) {
+        let mut r = rng(seed);
+        let words0: Vec<BitVec> = (0..20).map(|_| BitVec::random(64, 0.5, &mut r)).collect();
+        let words1: Vec<BitVec> = (0..20).map(|_| BitVec::random(64, 0.5, &mut r)).collect();
+        let mode = Arc::new(AtomicU8::new(FLAKY_OK));
+        let flaky = FlakyBackend { inner: local_shard(words1), mode: mode.clone() };
+        let router = RouterBackend::from_backends(vec![local_shard(words0.clone()), Box::new(flaky)])
+            .unwrap();
+        (router, words0, mode)
+    }
+
+    /// Kill one of two shards: the batch is stamped partial, its hits are
+    /// bit-exact against a flat store over the *surviving* shard's words
+    /// (with shard-0 global ids), the ejection is visible through health,
+    /// and a later probe rejoins the healed shard.
+    #[test]
+    fn ejection_serves_partial_results_and_health_rejoins() {
+        let (router, words0, mode) = flaky_pair(51);
+        let mut r = rng(52);
+        let q = BitVec::random(64, 0.5, &mut r);
+
+        let full = router.search_batch(std::slice::from_ref(&q), 3).unwrap();
+        assert!(!full.partial, "healthy scatter is complete");
+
+        mode.store(FLAKY_SUBMIT, AOrd::SeqCst);
+        let flat = DigitalExactEngine::new(words0);
+        let want = flat.search_topk(&q, 3);
+        for round in 0..2 {
+            // Round 0 ejects shard 1 at submit; round 1 skips it outright.
+            let got = router.search_batch(std::slice::from_ref(&q), 3).unwrap();
+            assert!(got.partial, "degraded batch is stamped partial (round {round})");
+            assert_eq!(got.results[0].len(), want.len());
+            for (g, e) in got.results[0].iter().zip(&want) {
+                assert_eq!(g.score, e.score, "K-1 merge equals the survivor's flat reference");
+                assert_eq!(split_row(g.row).0, 0, "survivor keeps its shard index");
+            }
+        }
+        assert!(!router.shard_healthy(1));
+        assert!(router.shard_healthy(0));
+        assert_eq!(router.ejections(), 1, "repeated failures count one transition");
+
+        let h = router.health().unwrap();
+        assert_eq!(h.shards_unhealthy, 1);
+        mode.store(FLAKY_OK, AOrd::SeqCst);
+        let h = router.health().unwrap();
+        assert_eq!(h.shards_unhealthy, 0, "probe rejoins the healed shard");
+        assert_eq!(router.rejoins(), 1);
+        let healed = router.search_batch(std::slice::from_ref(&q), 3).unwrap();
+        assert!(!healed.partial, "rejoined shard serves complete batches again");
+
+        let m = router.metrics().unwrap();
+        assert_eq!(m.degraded, 2, "both degraded rounds counted");
+        router.shutdown();
+    }
+
+    /// A shard that accepts the submit but dies before answering is ejected
+    /// at gather time with the same degraded semantics.
+    #[test]
+    fn mid_gather_failure_ejects_and_serves_survivors() {
+        let (router, words0, mode) = flaky_pair(55);
+        let mut r = rng(56);
+        let q = BitVec::random(64, 0.5, &mut r);
+        mode.store(FLAKY_GATHER, AOrd::SeqCst);
+        let got = router.search_batch(std::slice::from_ref(&q), 4).unwrap();
+        assert!(got.partial);
+        let flat = DigitalExactEngine::new(words0);
+        let want = flat.search_topk(&q, 4);
+        assert_eq!(got.results[0].len(), want.len());
+        for (g, e) in got.results[0].iter().zip(&want) {
+            assert_eq!(g.score, e.score);
+        }
+        assert!(!router.shard_healthy(1));
+        assert_eq!(router.ejections(), 1);
+        router.shutdown();
+    }
+
+    /// With every shard down the scatter is a typed error, never an empty
+    /// "success".
+    #[test]
+    fn all_shards_down_is_an_error_not_an_empty_result() {
+        let (router, _, mode) = flaky_pair(57);
+        let mut r = rng(58);
+        let q = BitVec::random(64, 0.5, &mut r);
+        mode.store(FLAKY_SUBMIT, AOrd::SeqCst);
+        // Eject shard 1 (degraded round), then kill shard 0's service too.
+        router.search_batch(std::slice::from_ref(&q), 2).unwrap();
+        router.close();
+        match router.search_batch(std::slice::from_ref(&q), 2) {
+            Err(SubmitError::Io(_) | SubmitError::Closed) => {}
+            other => panic!("expected a transport error, got {other:?}"),
+        }
+    }
+
+    /// Replication ops forward through a single-child router (the `serve`
+    /// topology) and are a typed rejection on a real fan-out.
+    #[test]
+    fn replication_ops_forward_only_for_flat_routers() {
+        let (router, _) = router(20, 64, 1, 61);
+        let chunk = router.snapshot_chunk(None, 0, 8).unwrap();
+        assert_eq!(chunk.dims as usize, 64);
+        assert!(!chunk.rows.is_empty());
+        let batch = router.catchup(chunk.epoch).unwrap();
+        assert!(batch.entries.is_empty(), "nothing committed past the cut");
+        router.shutdown();
+
+        let (router, _) = router(20, 64, 2, 63);
+        match router.snapshot_chunk(None, 0, 8) {
+            Err(SubmitError::BadQuery(msg)) => assert!(msg.contains("2 shards"), "{msg}"),
+            other => panic!("expected BadQuery, got {other:?}"),
+        }
+        match router.catchup(0) {
+            Err(SubmitError::BadQuery(msg)) => assert!(msg.contains("2 shards"), "{msg}"),
+            other => panic!("expected BadQuery, got {other:?}"),
+        }
         router.shutdown();
     }
 }

@@ -60,6 +60,17 @@ pub(super) struct Shared {
     pub(super) running: AtomicBool,
     pub(super) max_frame: usize,
     pub(super) max_inflight: usize,
+    /// Shared secret required by the hello handshake; empty = auth off.
+    pub(super) auth_secret: String,
+}
+
+/// Per-connection protocol state (both I/O engines): whether this
+/// connection has completed the hello handshake. Connections start
+/// unauthenticated; on a server with no `auth_secret` every op is allowed
+/// anyway.
+#[derive(Debug, Default)]
+pub(super) struct ConnState {
+    pub(super) authed: bool,
 }
 
 /// A running `cosimed` instance. Dropping the handle does **not** stop the
@@ -102,6 +113,7 @@ impl CosimeServer {
             running: AtomicBool::new(true),
             max_frame: cfg.max_frame.max(protocol::HEADER_LEN),
             max_inflight: cfg.max_inflight.max(1),
+            auth_secret: cfg.auth_secret.clone(),
         });
         let loop_shared = shared.clone();
         let join = match cfg.io {
@@ -197,6 +209,7 @@ pub(super) enum Handled {
 /// to this frame must carry.
 pub(super) fn handle_frame(
     shared: &Shared,
+    state: &mut ConnState,
     version: u8,
     op_byte: u8,
     flags: u16,
@@ -226,7 +239,7 @@ pub(super) fn handle_frame(
         );
     }
     let handled = match Op::from_u8(op_byte) {
-        Some(op) => match try_handle_request(shared, version, op, payload) {
+        Some(op) => match try_handle_request(shared, state, version, op, payload) {
             Ok(handled) => handled,
             Err(e) => error_handled(e),
         },
@@ -242,13 +255,62 @@ fn error_handled(e: WireError) -> Handled {
     Handled::Immediate(Op::Error, encode_error_response(&e))
 }
 
+/// Reject ops below the protocol version that introduced them: their
+/// response layouts do not exist in older versions, so an old-framed
+/// request cannot be answered coherently.
+fn require_version(version: u8, need: u8, op: Op) -> Result<(), WireError> {
+    if version < need {
+        return Err(WireError::new(
+            ErrorCode::BadVersion,
+            format!("{op:?} requires protocol version {need} (frame carried {version})"),
+        ));
+    }
+    Ok(())
+}
+
 fn try_handle_request(
     shared: &Shared,
+    state: &mut ConnState,
     version: u8,
     op: Op,
     payload: &[u8],
 ) -> Result<Handled, WireError> {
+    // Auth gate: with a secret configured, the hello handshake must come
+    // first. Every other op on an unauthenticated connection gets the typed
+    // rejection (the connection stays open and in sync, so the client can
+    // hello and retry).
+    if !shared.auth_secret.is_empty() && !state.authed && op != Op::Hello {
+        return Err(WireError::new(
+            ErrorCode::Unauthorized,
+            "hello handshake required before any other op",
+        ));
+    }
     match op {
+        Op::Hello => {
+            require_version(version, 4, op)?;
+            let secret = protocol::decode_hello_request(payload)?;
+            if !shared.auth_secret.is_empty() && secret != shared.auth_secret.as_bytes() {
+                return Err(WireError::new(ErrorCode::Unauthorized, "auth secret mismatch"));
+            }
+            state.authed = true;
+            // HelloOk carries no payload.
+            Ok(Handled::Immediate(Op::HelloOk, Vec::new()))
+        }
+        Op::Snapshot => {
+            require_version(version, 4, op)?;
+            let (pin, start_row, max_rows) = protocol::decode_snapshot_request(payload)?;
+            let chunk = shared
+                .backend
+                .snapshot_chunk(pin, start_row, max_rows)
+                .map_err(WireError::from)?;
+            Ok(Handled::Immediate(Op::SnapshotOk, protocol::encode_snapshot_response(&chunk)))
+        }
+        Op::Replicate => {
+            require_version(version, 4, op)?;
+            let from_epoch = protocol::decode_replicate_request(payload)?;
+            let batch = shared.backend.catchup(from_epoch).map_err(WireError::from)?;
+            Ok(Handled::Immediate(Op::ReplicateOk, protocol::encode_replicate_response(&batch)))
+        }
         Op::Search => {
             let (k, queries) = protocol::decode_search_request(payload)?;
             let ticket =
@@ -256,14 +318,7 @@ fn try_handle_request(
             Ok(Handled::Search(SearchKind::TopK, ticket))
         }
         Op::SearchThreshold => {
-            // v3-only op: the response layout does not exist in older
-            // versions, so a pre-v3 frame cannot be answered coherently.
-            if version < 3 {
-                return Err(WireError::new(
-                    ErrorCode::BadVersion,
-                    format!("SearchThreshold requires protocol version 3 (frame carried {version})"),
-                ));
-            }
+            require_version(version, 3, op)?;
             let (threshold, limit, queries) = protocol::decode_threshold_request(payload)?;
             let ticket = shared
                 .backend
@@ -299,14 +354,24 @@ fn try_handle_request(
 }
 
 /// Encode a completed (or failed) search ticket into its response frame
-/// payload, in the layout its query kind calls for.
-pub(super) fn finish_search(kind: SearchKind, ticket: Ticket) -> (Op, Vec<u8>) {
+/// payload, in the layout its query kind calls for, stamped with the
+/// request's negotiated version (v4 responses carry the partial flag; older
+/// versions degrade by dropping it).
+pub(super) fn finish_search(kind: SearchKind, ticket: Ticket, version: u8) -> (Op, Vec<u8>) {
     match ticket.wait() {
         Ok(result) => match kind {
-            SearchKind::TopK => {
-                (Op::SearchOk, protocol::encode_search_response(result.epoch, &result.results))
-            }
+            SearchKind::TopK => (
+                Op::SearchOk,
+                protocol::encode_search_response(
+                    result.epoch,
+                    &result.results,
+                    version,
+                    result.partial,
+                ),
+            ),
             SearchKind::Threshold => {
+                let epoch = result.epoch;
+                let partial = result.partial;
                 let lists: Vec<WireMatchList> = result
                     .results
                     .into_iter()
@@ -315,7 +380,7 @@ pub(super) fn finish_search(kind: SearchKind, ticket: Ticket) -> (Op, Vec<u8>) {
                     .collect();
                 (
                     Op::SearchThresholdOk,
-                    protocol::encode_threshold_response(result.epoch, &lists),
+                    protocol::encode_threshold_response(epoch, &lists, version, partial),
                 )
             }
         },
@@ -380,6 +445,7 @@ fn handle_conn(stream: TcpStream, shared: Arc<Shared>) {
 
 fn read_loop(stream: TcpStream, shared: &Shared, tx: &mpsc::SyncSender<Reply>) {
     let mut r = BufReader::new(stream);
+    let mut state = ConnState::default();
     loop {
         let (header, payload) = match protocol::read_frame(&mut r, shared.max_frame) {
             Ok(frame) => frame,
@@ -406,7 +472,7 @@ fn read_loop(stream: TcpStream, shared: &Shared, tx: &mpsc::SyncSender<Reply>) {
             }
         };
         let (version, handled) =
-            handle_frame(shared, header.version, header.op, header.flags, &payload);
+            handle_frame(shared, &mut state, header.version, header.op, header.flags, &payload);
         let reply = match handled {
             Handled::Immediate(op, payload) => Reply::Immediate(version, op, payload),
             Handled::Search(kind, ticket) => Reply::Search(version, kind, ticket),
@@ -432,7 +498,7 @@ fn write_loop(stream: TcpStream, rx: mpsc::Receiver<Reply>) {
                 return;
             }
             Reply::Search(version, kind, ticket) => {
-                let (op, payload) = finish_search(kind, ticket);
+                let (op, payload) = finish_search(kind, ticket, version);
                 protocol::write_frame_v(&mut w, version, op, &payload).is_ok()
             }
         };
@@ -602,6 +668,118 @@ mod tests {
             protocol::write_frame(&mut stream, Op::Health, &[]).unwrap();
             let (h, _) = protocol::read_frame(&mut stream, 1 << 20).unwrap();
             assert_eq!(Op::from_u8(h.op), Some(Op::HealthOk));
+            drop(stream);
+            server.shutdown();
+        }
+    }
+
+    /// With `[server] auth_secret` set, every op before a correct hello is
+    /// rejected with the typed `Unauthorized` error — and the connection
+    /// stays open so the client can hello and retry on the same socket.
+    #[test]
+    fn auth_secret_gates_every_op_until_hello() {
+        for io in [IoMode::Threaded, IoMode::EventLoop] {
+            let mut r = rng(3);
+            let words: Vec<BitVec> = (0..10).map(|_| BitVec::random(32, 0.5, &mut r)).collect();
+            let cfg = CosimeConfig::default();
+            let router = RouterBackend::build(&cfg, 1, 64, words, |w| {
+                Ok(Box::new(DigitalExactEngine::new(w)) as Box<dyn AmEngine>)
+            })
+            .unwrap();
+            let mut scfg = cfg.server.clone();
+            scfg.listen = "127.0.0.1:0".to_string();
+            scfg.io = io;
+            scfg.auth_secret = "open sesame".to_string();
+            let server = CosimeServer::serve(&scfg, router).unwrap();
+            let mut stream = TcpStream::connect(server.local_addr()).unwrap();
+
+            let expect_err = |stream: &mut TcpStream, code: ErrorCode| {
+                let (h, payload) = protocol::read_frame(stream, 1 << 20).unwrap();
+                assert_eq!(Op::from_u8(h.op), Some(Op::Error), "{io:?}");
+                assert_eq!(protocol::decode_error_response(&payload).unwrap().code, code);
+            };
+
+            // Pre-hello ops are rejected but do not kill the connection.
+            protocol::write_frame(&mut stream, Op::Health, &[]).unwrap();
+            expect_err(&mut stream, ErrorCode::Unauthorized);
+            // Wrong secret: rejected, still open.
+            let bad = protocol::encode_hello_request(b"wrong");
+            protocol::write_frame(&mut stream, Op::Hello, &bad).unwrap();
+            expect_err(&mut stream, ErrorCode::Unauthorized);
+            // Hello is v4-born: an old-framed hello cannot authenticate.
+            let good = protocol::encode_hello_request(b"open sesame");
+            protocol::write_frame_v(&mut stream, 3, Op::Hello, &good).unwrap();
+            expect_err(&mut stream, ErrorCode::BadVersion);
+            // Correct secret: HelloOk, and the same socket now serves.
+            protocol::write_frame(&mut stream, Op::Hello, &good).unwrap();
+            let (h, payload) = protocol::read_frame(&mut stream, 1 << 20).unwrap();
+            assert_eq!(Op::from_u8(h.op), Some(Op::HelloOk));
+            assert!(payload.is_empty());
+            protocol::write_frame(&mut stream, Op::Health, &[]).unwrap();
+            let (h, _) = protocol::read_frame(&mut stream, 1 << 20).unwrap();
+            assert_eq!(Op::from_u8(h.op), Some(Op::HealthOk));
+
+            // A *second* connection starts unauthenticated again.
+            let mut fresh = TcpStream::connect(server.local_addr()).unwrap();
+            protocol::write_frame(&mut fresh, Op::Health, &[]).unwrap();
+            expect_err(&mut fresh, ErrorCode::Unauthorized);
+            drop(fresh);
+            drop(stream);
+            server.shutdown();
+        }
+    }
+
+    /// Snapshot + catch-up pulls over the raw socket (v4-born ops): chunked
+    /// snapshot streaming respects the epoch pin, and the replicate op
+    /// serves the typed truncation floor — on both I/O engines.
+    #[test]
+    fn snapshot_and_replicate_over_a_raw_socket() {
+        for io in [IoMode::Threaded, IoMode::EventLoop] {
+            let (server, words) = start(20, 64, 1, io);
+            let mut stream = TcpStream::connect(server.local_addr()).unwrap();
+
+            // Old-framed replication ops are rejected with BadVersion.
+            let req = protocol::encode_snapshot_request(None, 0, 8);
+            protocol::write_frame_v(&mut stream, 3, Op::Snapshot, &req).unwrap();
+            let (h, payload) = protocol::read_frame(&mut stream, 1 << 20).unwrap();
+            assert_eq!(Op::from_u8(h.op), Some(Op::Error), "{io:?}");
+            let e = protocol::decode_error_response(&payload).unwrap();
+            assert_eq!(e.code, ErrorCode::BadVersion);
+
+            // Pull the full store in pinned chunks and compare bit-exact.
+            let mut rows = Vec::new();
+            let mut pin = None;
+            loop {
+                let req = protocol::encode_snapshot_request(pin, rows.len() as u64, 7);
+                protocol::write_frame(&mut stream, Op::Snapshot, &req).unwrap();
+                let (h, payload) = protocol::read_frame(&mut stream, 1 << 20).unwrap();
+                assert_eq!(Op::from_u8(h.op), Some(Op::SnapshotOk));
+                let chunk = protocol::decode_snapshot_response(&payload).unwrap();
+                assert_eq!(chunk.dims, 64);
+                assert_eq!(chunk.total_rows, 20);
+                pin = Some(chunk.epoch);
+                rows.extend(chunk.rows);
+                if rows.len() as u64 >= chunk.total_rows {
+                    break;
+                }
+            }
+            assert_eq!(rows, words, "streamed snapshot is the stored words, bit-exact");
+
+            // A pin at the wrong epoch is rejected with EpochMismatch.
+            let req = protocol::encode_snapshot_request(Some(pin.unwrap() + 5), 0, 4);
+            protocol::write_frame(&mut stream, Op::Snapshot, &req).unwrap();
+            let (_, payload) = protocol::read_frame(&mut stream, 1 << 20).unwrap();
+            let e = protocol::decode_error_response(&payload).unwrap();
+            assert_eq!(e.code, ErrorCode::EpochMismatch);
+
+            // Catch-up from the serving epoch: empty feed, same epoch.
+            let req = protocol::encode_replicate_request(pin.unwrap());
+            protocol::write_frame(&mut stream, Op::Replicate, &req).unwrap();
+            let (h, payload) = protocol::read_frame(&mut stream, 1 << 20).unwrap();
+            assert_eq!(Op::from_u8(h.op), Some(Op::ReplicateOk));
+            let batch = protocol::decode_replicate_response(&payload).unwrap();
+            assert_eq!(batch.serving_epoch, pin.unwrap());
+            assert!(batch.entries.is_empty());
             drop(stream);
             server.shutdown();
         }

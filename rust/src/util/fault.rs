@@ -1,0 +1,341 @@
+//! Deterministic TCP fault injection for failover tests.
+//!
+//! [`FaultProxy`] sits between a wire client and a `cosimed` server as a
+//! byte relay, and misbehaves *on schedule*: each accepted connection is
+//! assigned the next [`FaultAction`] from a fixed list, so "the third
+//! connection dies after 512 bytes" is a reproducible fact of the test,
+//! not a race. On top of the per-connection schedule the proxy has one
+//! global switch — [`FaultProxy::partition`] — that severs every live
+//! relay and refuses new ones until [`FaultProxy::heal`], which is how
+//! kill-one-shard and partition-and-rejoin scenarios are scripted.
+//!
+//! Determinism model: actions are consumed in **accept order**, and the
+//! schedule itself can be derived from a seed ([`seeded_schedule`]), so a
+//! failing fault run is re-playable from its seed alone. Timing-dependent
+//! interleaving is kept out of the *assertions* — tests assert on typed
+//! results (partial flags, typed errors, bit-exact survivors), never on
+//! how fast a byte moved.
+//!
+//! The proxy is test infrastructure first, but lives in `util` (not under
+//! `#[cfg(test)]`) so integration tests, the fuzz rail and future chaos
+//! tooling share one implementation.
+
+use std::io::{Read, Write};
+use std::net::{Shutdown, SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicI64, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::thread;
+use std::time::Duration;
+
+use super::rng;
+use super::sync::lock_recover;
+
+/// What the proxy does to one relayed connection.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FaultAction {
+    /// Forward bytes untouched.
+    None,
+    /// Forward this many bytes (both directions share the budget), then
+    /// sever both sides mid-stream — the "shard died mid-response" and
+    /// "snapshot stream cut" fault.
+    CloseAfterBytes(u64),
+    /// Sleep this long before forwarding each read chunk — the slow-shard
+    /// fault (results must stay correct, just late).
+    DelayChunks(Duration),
+    /// Accept, then immediately close without forwarding anything — the
+    /// "port open, service gone" fault.
+    RefuseBytes,
+}
+
+/// Derive a reproducible mixed fault schedule from a seed: same seed, same
+/// `len` → the same action sequence, on any machine.
+pub fn seeded_schedule(seed: u64, len: usize) -> Vec<FaultAction> {
+    let mut r = rng(seed);
+    (0..len)
+        .map(|_| match r.below(5) {
+            0 | 1 => FaultAction::None,
+            2 => FaultAction::CloseAfterBytes(1 + r.below(4096) as u64),
+            3 => FaultAction::DelayChunks(Duration::from_millis(1 + r.below(4) as u64)),
+            _ => FaultAction::RefuseBytes,
+        })
+        .collect()
+}
+
+struct ProxyShared {
+    upstream: SocketAddr,
+    /// Per-connection actions, consumed in accept order; connections past
+    /// the end of the schedule relay untouched.
+    schedule: Vec<FaultAction>,
+    accepted: AtomicU64,
+    /// Global partition switch: sever live relays, refuse new ones.
+    partitioned: AtomicBool,
+    running: AtomicBool,
+    /// Both sockets of every live relay, so [`FaultProxy::partition`] can
+    /// sever in-flight connections, not just refuse new ones.
+    live: Mutex<Vec<TcpStream>>,
+}
+
+impl ProxyShared {
+    fn sever_live(&self) {
+        let mut live = lock_recover(&self.live);
+        for s in live.drain(..) {
+            let _ = s.shutdown(Shutdown::Both);
+        }
+    }
+}
+
+/// A deterministic fault-injecting TCP relay (module docs). Dropping the
+/// proxy without [`FaultProxy::shutdown`] leaks its accept thread for the
+/// remainder of the process — fine in tests, call `shutdown` anyway.
+pub struct FaultProxy {
+    addr: SocketAddr,
+    shared: Arc<ProxyShared>,
+    accept_thread: Option<thread::JoinHandle<()>>,
+}
+
+impl FaultProxy {
+    /// Start a relay on an ephemeral local port in front of `upstream`.
+    /// Connection `i` (accept order) gets `schedule[i]`; connections past
+    /// the schedule relay untouched.
+    pub fn start(
+        upstream: SocketAddr,
+        schedule: Vec<FaultAction>,
+    ) -> std::io::Result<FaultProxy> {
+        let listener = TcpListener::bind("127.0.0.1:0")?;
+        let addr = listener.local_addr()?;
+        let shared = Arc::new(ProxyShared {
+            upstream,
+            schedule,
+            accepted: AtomicU64::new(0),
+            partitioned: AtomicBool::new(false),
+            running: AtomicBool::new(true),
+            live: Mutex::new(Vec::new()),
+        });
+        let accept_shared = shared.clone();
+        let accept_thread = thread::spawn(move || accept_loop(listener, accept_shared));
+        Ok(FaultProxy { addr, shared, accept_thread: Some(accept_thread) })
+    }
+
+    /// Address clients should dial instead of the upstream's.
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Connections accepted so far (monotone; includes refused ones).
+    pub fn accepted(&self) -> u64 {
+        self.shared.accepted.load(Ordering::Acquire)
+    }
+
+    /// Sever every live relay and refuse new connections until
+    /// [`FaultProxy::heal`] — the network partition switch.
+    pub fn partition(&self) {
+        self.shared.partitioned.store(true, Ordering::Release);
+        self.shared.sever_live();
+    }
+
+    /// Lift a [`FaultProxy::partition`]: new connections relay again
+    /// (consuming the schedule where it left off).
+    pub fn heal(&self) {
+        self.shared.partitioned.store(false, Ordering::Release);
+    }
+
+    /// Stop accepting, sever everything, and join the accept thread.
+    pub fn shutdown(mut self) {
+        self.shared.running.store(false, Ordering::Release);
+        self.shared.partitioned.store(true, Ordering::Release);
+        self.shared.sever_live();
+        // Unblock the accept loop with a throwaway dial.
+        let _ = TcpStream::connect(self.addr);
+        if let Some(t) = self.accept_thread.take() {
+            let _ = t.join();
+        }
+    }
+}
+
+fn accept_loop(listener: TcpListener, shared: Arc<ProxyShared>) {
+    while shared.running.load(Ordering::Acquire) {
+        let Ok((client, _)) = listener.accept() else { break };
+        if !shared.running.load(Ordering::Acquire) {
+            break;
+        }
+        let idx = shared.accepted.fetch_add(1, Ordering::AcqRel) as usize;
+        if shared.partitioned.load(Ordering::Acquire) {
+            let _ = client.shutdown(Shutdown::Both);
+            continue;
+        }
+        let action = shared.schedule.get(idx).copied().unwrap_or(FaultAction::None);
+        if action == FaultAction::RefuseBytes {
+            let _ = client.shutdown(Shutdown::Both);
+            continue;
+        }
+        let Ok(server) = TcpStream::connect(shared.upstream) else {
+            let _ = client.shutdown(Shutdown::Both);
+            continue;
+        };
+        let _ = client.set_nodelay(true);
+        let _ = server.set_nodelay(true);
+        {
+            let mut live = lock_recover(&shared.live);
+            if let (Ok(c), Ok(s)) = (client.try_clone(), server.try_clone()) {
+                live.push(c);
+                live.push(s);
+            }
+        }
+        // Both directions draw on one byte budget so "dies after N bytes"
+        // covers request *or* response truncation, wherever N lands in the
+        // (sequential, request-response) exchange.
+        let budget: Arc<AtomicI64> = Arc::new(AtomicI64::new(match action {
+            FaultAction::CloseAfterBytes(n) => n.min(i64::MAX as u64) as i64,
+            _ => i64::MAX,
+        }));
+        let delay = match action {
+            FaultAction::DelayChunks(d) => Some(d),
+            _ => None,
+        };
+        for (from, to) in [
+            (client.try_clone(), server.try_clone()),
+            (server.try_clone(), client.try_clone()),
+        ] {
+            let (Ok(from), Ok(to)) = (from, to) else { continue };
+            let budget = budget.clone();
+            thread::spawn(move || relay(from, to, budget, delay));
+        }
+    }
+}
+
+/// Copy bytes `from → to`, honoring the shared byte budget and the
+/// per-chunk delay; sever both sides once the budget runs dry.
+fn relay(mut from: TcpStream, mut to: TcpStream, budget: Arc<AtomicI64>, delay: Option<Duration>) {
+    let mut chunk = [0u8; 16 * 1024];
+    loop {
+        let n = match from.read(&mut chunk) {
+            Ok(0) | Err(_) => break,
+            Ok(n) => n,
+        };
+        if let Some(d) = delay {
+            thread::sleep(d);
+        }
+        let before = budget.fetch_sub(n as i64, Ordering::AcqRel);
+        let allowed = before.clamp(0, n as i64) as usize;
+        if to.write_all(&chunk[..allowed]).is_err() {
+            break;
+        }
+        if allowed < n {
+            // Budget exhausted mid-chunk: cut the relay, both directions.
+            break;
+        }
+    }
+    let _ = from.shutdown(Shutdown::Both);
+    let _ = to.shutdown(Shutdown::Both);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Echo server: accepts connections, echoes bytes back until EOF.
+    fn echo_server() -> (SocketAddr, thread::JoinHandle<()>) {
+        let listener = TcpListener::bind("127.0.0.1:0").expect("bind echo");
+        let addr = listener.local_addr().expect("echo addr");
+        let t = thread::spawn(move || {
+            for stream in listener.incoming() {
+                let Ok(mut s) = stream else { break };
+                thread::spawn(move || {
+                    let mut buf = [0u8; 1024];
+                    loop {
+                        match s.read(&mut buf) {
+                            Ok(0) | Err(_) => break,
+                            Ok(n) => {
+                                if s.write_all(&buf[..n]).is_err() {
+                                    break;
+                                }
+                            }
+                        }
+                    }
+                });
+            }
+        });
+        (addr, t)
+    }
+
+    fn round_trip(addr: SocketAddr, payload: &[u8]) -> std::io::Result<Vec<u8>> {
+        let mut s = TcpStream::connect(addr)?;
+        s.write_all(payload)?;
+        let mut got = vec![0u8; payload.len()];
+        s.read_exact(&mut got)?;
+        Ok(got)
+    }
+
+    #[test]
+    fn clean_schedule_relays_untouched() {
+        let (upstream, _t) = echo_server();
+        let proxy = FaultProxy::start(upstream, vec![]).expect("proxy");
+        let got = round_trip(proxy.addr(), b"hello through the relay").expect("echo");
+        assert_eq!(got, b"hello through the relay");
+        assert_eq!(proxy.accepted(), 1);
+        proxy.shutdown();
+    }
+
+    #[test]
+    fn close_after_bytes_cuts_the_stream_on_schedule() {
+        let (upstream, _t) = echo_server();
+        // Connection 0 dies after 8 bytes; connection 1 is clean.
+        let proxy = FaultProxy::start(
+            upstream,
+            vec![FaultAction::CloseAfterBytes(8), FaultAction::None],
+        )
+        .expect("proxy");
+        let err = round_trip(proxy.addr(), &[7u8; 64]).expect_err("truncated relay");
+        let _ = err; // read_exact fails: EOF before 64 echoed bytes
+        let got = round_trip(proxy.addr(), &[9u8; 64]).expect("clean follow-up");
+        assert_eq!(got, vec![9u8; 64]);
+        proxy.shutdown();
+    }
+
+    #[test]
+    fn delayed_chunks_still_arrive_intact() {
+        let (upstream, _t) = echo_server();
+        let proxy = FaultProxy::start(
+            upstream,
+            vec![FaultAction::DelayChunks(Duration::from_millis(2))],
+        )
+        .expect("proxy");
+        let got = round_trip(proxy.addr(), b"slow but correct").expect("echo");
+        assert_eq!(got, b"slow but correct");
+        proxy.shutdown();
+    }
+
+    #[test]
+    fn partition_severs_and_heal_restores() {
+        let (upstream, _t) = echo_server();
+        let proxy = FaultProxy::start(upstream, vec![]).expect("proxy");
+        let mut live = TcpStream::connect(proxy.addr()).expect("dial");
+        live.write_all(b"warm").expect("write");
+        let mut buf = [0u8; 4];
+        live.read_exact(&mut buf).expect("echo before partition");
+
+        proxy.partition();
+        // The live relay is severed: the next exchange fails.
+        let dead = live.write_all(&[0u8; 1024]).and_then(|_| {
+            let mut b = [0u8; 1];
+            live.read_exact(&mut b)
+        });
+        assert!(dead.is_err(), "partitioned relay must not answer");
+        // New connections are refused (accepted then severed).
+        assert!(round_trip(proxy.addr(), b"nope").is_err());
+
+        proxy.heal();
+        let got = round_trip(proxy.addr(), b"back").expect("healed relay");
+        assert_eq!(got, b"back");
+        proxy.shutdown();
+    }
+
+    #[test]
+    fn seeded_schedules_are_reproducible() {
+        let a = seeded_schedule(0xFA017, 32);
+        let b = seeded_schedule(0xFA017, 32);
+        assert_eq!(a, b);
+        assert_ne!(a, seeded_schedule(0xFA018, 32), "seed must matter");
+        assert!(a.iter().any(|f| *f != FaultAction::None), "mix includes faults");
+    }
+}

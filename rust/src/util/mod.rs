@@ -8,6 +8,8 @@ mod bitvec;
 pub mod bench;
 /// Dependency-free CLI argument parsing.
 pub mod cli;
+/// Deterministic TCP fault injection for failover tests.
+pub mod fault;
 /// Minimal JSON value, parser, and pretty-printer.
 pub mod json;
 /// Scoped-thread fork/join helpers.

@@ -1,0 +1,336 @@
+//! Deterministic fault-injection failover tests: every scenario scripts
+//! its network faults through [`FaultProxy`] — a seeded, accept-ordered
+//! fault schedule, plus an explicit partition switch — so kill-one-shard,
+//! slow-shard, partition-and-rejoin and mid-snapshot-disconnect are
+//! reproducible assertions, not races. Assertions are on *typed* outcomes
+//! only: partial flags, typed `SubmitError`s, bit-exact survivor results,
+//! health transitions. Same seed → same fault schedule → same verdict.
+//!
+//! Every wire scenario runs the shard servers under **both** I/O engines.
+//! `COSIME_FAULT_ITERS` raises the chaos-sweep iteration count (nightly).
+
+use std::time::Duration;
+
+use cosime::am::{AmEngine, DigitalExactEngine, SearchResult};
+use cosime::config::{CosimeConfig, IoMode};
+use cosime::coordinator::{AdminCmd, Backend, Hit};
+use cosime::server::{pull_store, split_row, CosimeServer, RemoteBackend, RouterBackend, ShardRouter};
+use cosime::util::fault::{seeded_schedule, FaultAction, FaultProxy};
+use cosime::util::{rng, BitVec};
+
+const DIMS: usize = 128;
+const BOTH_IO: [IoMode; 2] = [IoMode::Threaded, IoMode::EventLoop];
+
+/// Chaos-sweep rounds per I/O engine; `COSIME_FAULT_ITERS` overrides (the
+/// nightly job raises it).
+fn fault_iters(default_rounds: usize) -> usize {
+    std::env::var("COSIME_FAULT_ITERS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(default_rounds)
+}
+
+/// One flat shard server over `words` (children of a routing tier must be
+/// flat so global row ids stay `shard << 48 | local`).
+fn start_shard(words: &[BitVec], io: IoMode) -> CosimeServer {
+    let mut cfg = CosimeConfig::default();
+    cfg.server.listen = "127.0.0.1:0".to_string();
+    cfg.server.shards = 1;
+    cfg.server.io = io;
+    cfg.coordinator.workers = 2;
+    let router = ShardRouter::build(&cfg, 1, 64, words.to_vec(), |w| {
+        Ok(Box::new(DigitalExactEngine::new(w)) as Box<dyn AmEngine>)
+    })
+    .unwrap();
+    CosimeServer::serve(&cfg.server, router).unwrap()
+}
+
+/// Wire connection with a 1 ms reconnect backoff so probe-driven rejoin is
+/// fast inside a test.
+fn remote(addr: std::net::SocketAddr) -> RemoteBackend {
+    RemoteBackend::connect_opts(&addr.to_string(), b"", Duration::from_millis(1)).unwrap()
+}
+
+fn words_for(seed: u64, n: usize) -> Vec<BitVec> {
+    let mut r = rng(seed);
+    (0..n).map(|_| BitVec::random(DIMS, 0.5, &mut r)).collect()
+}
+
+fn assert_scores(hits: &[Hit], want: &[SearchResult], ctx: &str) {
+    assert_eq!(hits.len(), want.len(), "result depth ({ctx})");
+    for (got, exp) in hits.iter().zip(want) {
+        assert_eq!(got.score, exp.score, "bit-exact score sequence ({ctx})");
+    }
+}
+
+/// The archetype determinism claim: a fault schedule is a pure function of
+/// its seed, so any failing fault run replays from the seed alone.
+#[test]
+fn same_seed_same_fault_schedule() {
+    for seed in [0xFA01_0001u64, 0xFA01_0002, 0xFA01_0003] {
+        assert_eq!(seeded_schedule(seed, 64), seeded_schedule(seed, 64));
+    }
+    assert_ne!(seeded_schedule(1, 64), seeded_schedule(2, 64), "seeds must matter");
+}
+
+/// Kill-one-shard + partition-and-rejoin, both I/O engines: partitioning
+/// one of two remote shards turns complete results into typed-partial
+/// survivor results (bit-exact against a flat reference over the surviving
+/// shard, global ids intact); healing the partition lets health probes
+/// rejoin the shard and results become complete and bit-exact again.
+#[test]
+fn partition_ejects_shard_and_heal_rejoins() {
+    for io in BOTH_IO {
+        let words = words_for(0xFA02, 60);
+        let (w0, w1) = words.split_at(30);
+        let s0 = start_shard(w0, io);
+        let s1 = start_shard(w1, io);
+        let proxy = FaultProxy::start(s0.local_addr(), Vec::new()).unwrap();
+        let router = RouterBackend::from_backends(vec![
+            Box::new(remote(proxy.addr())) as Box<dyn Backend>,
+            Box::new(remote(s1.local_addr())) as Box<dyn Backend>,
+        ])
+        .unwrap();
+        let full = DigitalExactEngine::new(words.clone());
+        let survivor = DigitalExactEngine::new(w1.to_vec());
+        let mut r = rng(0xFA03);
+
+        // Healthy topology: complete, bit-exact against the flat reference.
+        for _ in 0..5 {
+            let q = BitVec::random(DIMS, 0.5, &mut r);
+            let b = router.search_batch(std::slice::from_ref(&q), 3).unwrap();
+            assert!(!b.partial, "{io:?}: healthy scatter must not be partial");
+            assert_scores(&b.results[0], &full.search_topk(&q, 3), "healthy");
+        }
+
+        // Partition shard 0. Under continued load the router ejects it and
+        // serves the surviving K-1 shards with the typed partial flag.
+        proxy.partition();
+        let mut degraded = false;
+        for _ in 0..50 {
+            let q = BitVec::random(DIMS, 0.5, &mut r);
+            match router.search_batch(std::slice::from_ref(&q), 3) {
+                Ok(b) if b.partial => {
+                    assert_scores(&b.results[0], &survivor.search_topk(&q, 3), "degraded");
+                    degraded = true;
+                    break;
+                }
+                Ok(b) => assert_scores(&b.results[0], &full.search_topk(&q, 3), "pre-cut"),
+                Err(_) => {} // typed transport error while the cut lands
+            }
+        }
+        assert!(degraded, "{io:?}: partition never surfaced as a partial batch");
+
+        // Steady degraded state: every batch is partial, survivor-exact,
+        // and every id names the surviving shard.
+        for _ in 0..10 {
+            let q = BitVec::random(DIMS, 0.5, &mut r);
+            let b = router.search_batch(std::slice::from_ref(&q), 3).unwrap();
+            assert!(b.partial, "{io:?}: degraded scatter must stay flagged");
+            assert_scores(&b.results[0], &survivor.search_topk(&q, 3), "steady degraded");
+            for h in &b.results[0] {
+                assert_eq!(split_row(h.row).0, 1, "ids stay global across the skip");
+            }
+        }
+
+        // Health reflects the ejection (probes fail through the partition)
+        // and aggregates over the survivors only.
+        let h = router.health().unwrap();
+        assert_eq!(h.shards_unhealthy, 1, "{io:?}");
+        assert_eq!(h.rows, 30, "aggregate covers the surviving shard");
+
+        // Heal: health probes reconnect and rejoin the shard.
+        proxy.heal();
+        let mut rejoined = false;
+        for _ in 0..200 {
+            if let Ok(h) = router.health() {
+                if h.shards_unhealthy == 0 {
+                    rejoined = true;
+                    break;
+                }
+            }
+            std::thread::sleep(Duration::from_millis(2));
+        }
+        assert!(rejoined, "{io:?}: healed shard never rejoined");
+        let h = router.health().unwrap();
+        assert_eq!(h.rows, 60, "aggregate spans both shards again");
+
+        // Complete and bit-exact again after the rejoin.
+        for _ in 0..5 {
+            let q = BitVec::random(DIMS, 0.5, &mut r);
+            let b = router.search_batch(std::slice::from_ref(&q), 3).unwrap();
+            assert!(!b.partial, "{io:?}: rejoined scatter must be complete");
+            assert_scores(&b.results[0], &full.search_topk(&q, 3), "post-rejoin");
+        }
+
+        // The degraded window is visible in the metrics rail.
+        let m = router.metrics().unwrap();
+        assert!(m.degraded >= 1, "{io:?}: degraded batches must be counted");
+
+        router.close();
+        proxy.shutdown();
+        s0.shutdown();
+        s1.shutdown();
+    }
+}
+
+/// Slow-shard fault: chunk delays degrade latency, never correctness — no
+/// partial flag, no ejection, results bit-exact against the full store.
+#[test]
+fn slow_shard_degrades_latency_not_results() {
+    for io in BOTH_IO {
+        let words = words_for(0xFA04, 40);
+        let (w0, w1) = words.split_at(20);
+        let s0 = start_shard(w0, io);
+        let s1 = start_shard(w1, io);
+        let proxy = FaultProxy::start(
+            s0.local_addr(),
+            vec![FaultAction::DelayChunks(Duration::from_millis(2)); 4],
+        )
+        .unwrap();
+        let router = RouterBackend::from_backends(vec![
+            Box::new(remote(proxy.addr())) as Box<dyn Backend>,
+            Box::new(remote(s1.local_addr())) as Box<dyn Backend>,
+        ])
+        .unwrap();
+        let full = DigitalExactEngine::new(words.clone());
+        let mut r = rng(0xFA05);
+        for _ in 0..10 {
+            let q = BitVec::random(DIMS, 0.5, &mut r);
+            let b = router.search_batch(std::slice::from_ref(&q), 3).unwrap();
+            assert!(!b.partial, "{io:?}: slowness must not be treated as failure");
+            assert_scores(&b.results[0], &full.search_topk(&q, 3), "slow shard");
+        }
+        let h = router.health().unwrap();
+        assert_eq!(h.shards_unhealthy, 0, "{io:?}: a slow shard is still healthy");
+        router.close();
+        proxy.shutdown();
+        s0.shutdown();
+        s1.shutdown();
+    }
+}
+
+/// Mid-snapshot disconnect: a replica pull whose stream is cut after a
+/// scheduled byte budget restarts the cut through the backend's reconnect
+/// and still lands on an epoch-consistent, bit-exact copy of the primary.
+#[test]
+fn mid_snapshot_disconnect_retries_to_a_consistent_cut() {
+    for io in BOTH_IO {
+        let mut expected = words_for(0xFA06, 80);
+        let primary = start_shard(&expected, io);
+        // Commit a few admin ops so the cut epoch is non-trivial.
+        let mut r = rng(0xFA07);
+        for _ in 0..3 {
+            let w = BitVec::random(DIMS, 0.5, &mut r);
+            primary.backend().admin(AdminCmd::Insert { word: w.clone() }, None).unwrap();
+            expected.push(w);
+        }
+        let primary_epoch = primary.backend().health().unwrap().epoch;
+
+        // Connection 0 dies after 600 relayed bytes — past the handshake,
+        // inside the snapshot stream. Connection 1 (the reconnect) is clean.
+        let proxy =
+            FaultProxy::start(primary.local_addr(), vec![FaultAction::CloseAfterBytes(600)])
+                .unwrap();
+        let source = remote(proxy.addr());
+        let tiles = pull_store(&source, 64, 16, |w| {
+            Ok(Box::new(DigitalExactEngine::new(w)) as Box<dyn AmEngine>)
+        })
+        .unwrap();
+        assert!(
+            proxy.accepted() >= 2,
+            "{io:?}: the cut stream must have forced a reconnect"
+        );
+        assert_eq!(tiles.rows(), expected.len(), "{io:?}");
+        assert_eq!(tiles.epoch(), primary_epoch, "cut pinned to the primary's epoch");
+        assert_eq!(tiles.snapshot_words(), expected, "bit-exact replica of the store");
+        source.close();
+        proxy.shutdown();
+        primary.shutdown();
+    }
+}
+
+/// Seeded chaos: run a router over one faulty link whose connections follow
+/// a seeded mixed schedule (clean / die-after-N-bytes / delayed / refused).
+/// Liveness and honesty are the invariants — every batch either succeeds
+/// with results bit-exact against the full or the survivor reference
+/// (matching its partial flag) or fails with a typed error; nothing wedges,
+/// and once the schedule drains the shard rejoins and serves complete
+/// results again.
+#[test]
+fn seeded_chaos_schedule_never_wedges_the_router() {
+    let rounds = fault_iters(2);
+    for io in BOTH_IO {
+        for round in 0..rounds {
+            let seed = 0xC05_EED0 + round as u64;
+            let words = words_for(seed, 40);
+            let (w0, w1) = words.split_at(20);
+            let s0 = start_shard(w0, io);
+            let s1 = start_shard(w1, io);
+            let proxy = FaultProxy::start(s0.local_addr(), seeded_schedule(seed, 24)).unwrap();
+            let router = RouterBackend::from_backends(vec![
+                Box::new(remote(proxy.addr())) as Box<dyn Backend>,
+                Box::new(remote(s1.local_addr())) as Box<dyn Backend>,
+            ])
+            .unwrap();
+            let full = DigitalExactEngine::new(words.clone());
+            let survivor = DigitalExactEngine::new(w1.to_vec());
+            let mut r = rng(seed ^ 0x9E37_79B9);
+
+            for i in 0..40 {
+                let q = BitVec::random(DIMS, 0.5, &mut r);
+                match router.search_batch(std::slice::from_ref(&q), 3) {
+                    Ok(b) => {
+                        let want = if b.partial {
+                            survivor.search_topk(&q, 3)
+                        } else {
+                            full.search_topk(&q, 3)
+                        };
+                        assert_scores(&b.results[0], &want, "chaos");
+                        if b.partial {
+                            for h in &b.results[0] {
+                                assert_eq!(split_row(h.row).0, 1);
+                            }
+                        }
+                    }
+                    Err(_) => {} // typed rejection; liveness is the invariant
+                }
+                if i % 5 == 4 {
+                    // A probe window: ejected shards get a reconnect chance.
+                    let _ = router.health();
+                }
+            }
+
+            // The schedule's tail is all-None once consumed: the shard must
+            // rejoin and serve complete, bit-exact results again.
+            let mut recovered = false;
+            for _ in 0..300 {
+                if let Ok(h) = router.health() {
+                    if h.shards_unhealthy == 0 {
+                        let q = BitVec::random(DIMS, 0.5, &mut r);
+                        if let Ok(b) = router.search_batch(std::slice::from_ref(&q), 3) {
+                            if !b.partial {
+                                assert_scores(
+                                    &b.results[0],
+                                    &full.search_topk(&q, 3),
+                                    "post-chaos recovery",
+                                );
+                                recovered = true;
+                                break;
+                            }
+                        }
+                    }
+                }
+                std::thread::sleep(Duration::from_millis(2));
+            }
+            assert!(
+                recovered,
+                "router never recovered after the schedule drained ({io:?}, seed {seed:#x})"
+            );
+            router.close();
+            proxy.shutdown();
+            s0.shutdown();
+            s1.shutdown();
+        }
+    }
+}

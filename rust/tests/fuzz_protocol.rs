@@ -72,8 +72,12 @@ fn start_server(io: IoMode) -> CosimeServer {
     CosimeServer::serve(&cfg.server, router).expect("bind server")
 }
 
-/// A pool of valid frames (header + payload, ready to send) spanning both
-/// protocol versions and every request opcode the server dispatches.
+/// A pool of valid frames (header + payload, ready to send) spanning every
+/// protocol version v1..=v4 and every request opcode the server
+/// dispatches — including the v3 threshold family and the v4 replication
+/// tier (hello, snapshot chunks, catch-up pulls). Version-gated opcodes
+/// are also seeded on *older* versions on purpose: mutating a
+/// "v4 op on a v1 header" frame exercises the version-gate rejection path.
 fn seed_frames() -> Vec<Vec<u8>> {
     let mut r = rng(99);
     let queries: Vec<BitVec> = (0..4).map(|_| BitVec::random(DIMS, 0.5, &mut r)).collect();
@@ -86,7 +90,7 @@ fn seed_frames() -> Vec<Vec<u8>> {
         frames.push(buf);
     };
 
-    for version in [protocol::MIN_VERSION, protocol::VERSION] {
+    for version in protocol::MIN_VERSION..=protocol::VERSION {
         push(version, Op::Search, &protocol::encode_search_request(&queries[..1], 1));
         push(version, Op::Search, &protocol::encode_search_request(&queries, 3));
         push(version, Op::Health, &[]);
@@ -105,6 +109,19 @@ fn seed_frames() -> Vec<Vec<u8>> {
         for (op, payload) in admins {
             push(version, op, &payload);
         }
+        // v3 threshold family (on older versions: a version-gate rejection).
+        push(
+            version,
+            Op::SearchThreshold,
+            &protocol::encode_threshold_request(&queries[..2], DIMS as f64 * 0.4, 8),
+        );
+        // v4 replication tier: hello handshake, pinned and unpinned
+        // snapshot chunk pulls, catch-up log pulls.
+        push(version, Op::Hello, &protocol::encode_hello_request(b"fuzz-secret"));
+        push(version, Op::Snapshot, &protocol::encode_snapshot_request(None, 0, 16));
+        push(version, Op::Snapshot, &protocol::encode_snapshot_request(Some(3), 16, 16));
+        push(version, Op::Replicate, &protocol::encode_replicate_request(0));
+        push(version, Op::Replicate, &protocol::encode_replicate_request(u64::MAX));
     }
     frames
 }

@@ -1,0 +1,130 @@
+//! Replication equivalence property: a snapshot **streamed over the wire**
+//! (chunked `Snapshot` frames into [`pull_store`]) must load a store
+//! bit-identical to a **filesystem snapshot round-trip** (`AmStore`
+//! save/load) of the same primary — identical words, identical serving
+//! epoch, identical search results — for the 1-bit digital engine and the
+//! multi-bit engine, under both server I/O engines.
+//!
+//! The one deliberate asymmetry: filesystem snapshots do not persist the
+//! epoch (a loaded store starts at 0), so the fs path pins the cut epoch
+//! explicitly with `seed_epoch` — exactly what a replica joining from a
+//! warm-started snapshot would do.
+
+use std::time::Duration;
+
+use cosime::am::store::AmStore;
+use cosime::am::{AmEngine, DigitalExactEngine, MultiBitEngine};
+use cosime::config::{CosimeConfig, IoMode};
+use cosime::coordinator::{AdminOp, AmService, LocalBackend, TileManager};
+use cosime::server::{pull_store, CosimeServer, RemoteBackend};
+use cosime::util::{rng, BitVec};
+
+const DIMS: usize = 64;
+const BOTH_IO: [IoMode; 2] = [IoMode::Threaded, IoMode::EventLoop];
+
+/// Engine factory by kind, cloneable so snapshot-pull restarts can rebuild.
+fn factory(
+    kind: &'static str,
+) -> impl Fn(Vec<BitVec>) -> anyhow::Result<Box<dyn AmEngine>> + Send + Sync + Clone + 'static {
+    move |w: Vec<BitVec>| match kind {
+        "digital" => Ok(Box::new(DigitalExactEngine::new(w)) as Box<dyn AmEngine>),
+        _ => Ok(Box::new(MultiBitEngine::new(w, 2)) as Box<dyn AmEngine>),
+    }
+}
+
+#[test]
+fn wire_streamed_snapshot_equals_fs_round_trip() {
+    let dir = std::env::temp_dir().join(format!("cosime-replication-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let cfg = CosimeConfig::default();
+    for (e_idx, kind) in ["digital", "multibit"].into_iter().enumerate() {
+        for (io_idx, io) in BOTH_IO.into_iter().enumerate() {
+            let seed = 0xA110 + (e_idx * 2 + io_idx) as u64;
+            let mut r = rng(seed);
+            let rows = 24 + r.below(40);
+            let words: Vec<BitVec> =
+                (0..rows).map(|_| BitVec::random(DIMS, 0.5, &mut r)).collect();
+
+            // A live primary with a non-trivial mutation history, so the
+            // cut epoch and row set both differ from the build-time store.
+            let tiles = TileManager::build(words, 16, factory(kind)).unwrap();
+            let primary = AmService::start_with_config(&cfg, tiles);
+            for _ in 0..3 {
+                let w = BitVec::random(DIMS, 0.5, &mut r);
+                primary.admin(AdminOp::Insert { word: w }).unwrap();
+            }
+            let touched = r.below(rows);
+            let w = BitVec::random(DIMS, 0.5, &mut r);
+            primary.admin(AdminOp::Update { row: touched, word: w }).unwrap();
+            primary.admin(AdminOp::Delete { row: rows + 1 }).unwrap();
+            let epoch = primary.epoch();
+            assert!(epoch >= 5, "mutation history must move the epoch");
+
+            // Path A: stream the snapshot over the wire (small chunks so the
+            // pull spans several frames) into a fresh replica store.
+            let mut scfg = CosimeConfig::default();
+            scfg.server.listen = "127.0.0.1:0".to_string();
+            scfg.server.io = io;
+            let server = CosimeServer::serve_backend(
+                &scfg.server,
+                std::sync::Arc::new(LocalBackend::new(primary.clone())),
+            )
+            .unwrap();
+            let source = RemoteBackend::connect_opts(
+                &server.local_addr().to_string(),
+                b"",
+                Duration::from_millis(5),
+            )
+            .unwrap();
+            let tiles_wire = pull_store(&source, 16, 7, factory(kind)).unwrap();
+            source.close();
+
+            // Path B: filesystem round-trip of the same primary, epoch
+            // pinned to the same cut.
+            let path = dir.join(format!("{kind}-{io_idx}.json"));
+            let mut store = AmStore::new(&cfg, DIMS);
+            for (i, w) in primary.snapshot_words().iter().enumerate() {
+                store.insert(&format!("row-{i}"), w).unwrap();
+            }
+            store.save(&path).unwrap();
+            let loaded = AmStore::load(&cfg, &path).unwrap();
+            let tiles_fs = TileManager::build(loaded.words().to_vec(), 16, factory(kind)).unwrap();
+            tiles_fs.seed_epoch(epoch);
+
+            // Stored bits and epochs are identical.
+            assert_eq!(tiles_wire.epoch(), epoch, "{kind}/{io:?}: wire cut epoch");
+            assert_eq!(tiles_fs.epoch(), epoch, "{kind}/{io:?}: pinned fs epoch");
+            assert_eq!(
+                tiles_wire.snapshot_words(),
+                tiles_fs.snapshot_words(),
+                "{kind}/{io:?}: streamed rows must equal fs round-trip rows"
+            );
+
+            // Serving behavior is identical: same winners, same scores, same
+            // epoch stamps — against each other and against the primary.
+            let svc_wire = AmService::start_with_config(&cfg, tiles_wire);
+            let svc_fs = AmService::start_with_config(&cfg, tiles_fs);
+            for _ in 0..25 {
+                let q = BitVec::random(DIMS, 0.5, &mut r);
+                let a = svc_wire.submit_topk(q.clone(), 4).unwrap().recv().unwrap();
+                let b = svc_fs.submit_topk(q.clone(), 4).unwrap().recv().unwrap();
+                let p = primary.submit_topk(q, 4).unwrap().recv().unwrap();
+                assert_eq!(a.epoch, epoch, "{kind}/{io:?}: wire replica epoch stamp");
+                assert_eq!(b.epoch, epoch, "{kind}/{io:?}: fs replica epoch stamp");
+                assert_eq!(a.hits.len(), b.hits.len());
+                assert_eq!(a.hits.len(), p.hits.len());
+                for ((ha, hb), hp) in a.hits.iter().zip(&b.hits).zip(&p.hits) {
+                    assert_eq!(ha.winner, hb.winner, "{kind}/{io:?}: winner parity");
+                    assert_eq!(ha.score, hb.score, "{kind}/{io:?}: score parity");
+                    assert_eq!(ha.winner, hp.winner, "{kind}/{io:?}: primary parity");
+                    assert_eq!(ha.score, hp.score, "{kind}/{io:?}: primary score parity");
+                }
+            }
+            svc_wire.shutdown();
+            svc_fs.shutdown();
+            server.shutdown();
+            primary.shutdown();
+        }
+    }
+    std::fs::remove_dir_all(&dir).ok();
+}

@@ -599,6 +599,112 @@ fn backend_conformance_router_over_remote_shards() {
     }
 }
 
+/// Degraded-scatter conformance: kill one of two *remote* shards under a
+/// live search load. The routing tier must keep answering from the
+/// surviving shard — results bit-identical to a flat reference over that
+/// shard's slice alone, every response carrying the typed `partial` flag —
+/// and health/metrics must report the ejection. Runs the dead and the
+/// surviving shard under each I/O engine in turn.
+#[test]
+fn backend_conformance_degraded_scatter_over_remote_shards() {
+    for io in BOTH_IO {
+        let mut r = rng(77);
+        let words: Vec<BitVec> = (0..50).map(|_| BitVec::random(DIMS, 0.5, &mut r)).collect();
+        let full = DigitalExactEngine::new(words.clone());
+        let survivor = DigitalExactEngine::new(words[25..].to_vec());
+
+        let mut shard_servers = Vec::new();
+        for chunk in words.chunks(25) {
+            let mut cfg = CosimeConfig::default();
+            cfg.server.listen = "127.0.0.1:0".to_string();
+            cfg.server.io = io;
+            cfg.coordinator.workers = 2;
+            let router = ShardRouter::build(&cfg, 1, 64, chunk.to_vec(), |w| {
+                Ok(Box::new(DigitalExactEngine::new(w)) as Box<dyn AmEngine>)
+            })
+            .unwrap();
+            shard_servers.push(CosimeServer::serve(&cfg.server, router).unwrap());
+        }
+        let children: Vec<Box<dyn Backend>> = shard_servers
+            .iter()
+            .map(|s| {
+                Box::new(
+                    RemoteBackend::connect_retry(s.local_addr(), 10, Duration::from_millis(20))
+                        .unwrap(),
+                ) as Box<dyn Backend>
+            })
+            .collect();
+        let backend = RouterBackend::from_backends(children).unwrap();
+
+        // Healthy phase: complete (non-partial) answers, full-reference
+        // exact.
+        for _ in 0..5 {
+            let q = BitVec::random(DIMS, 0.5, &mut r);
+            let got = backend.search_batch(std::slice::from_ref(&q), 4).unwrap();
+            assert!(!got.partial, "{io:?}: healthy scatter must be complete");
+            let want = full.search_topk(&q, 4);
+            assert_eq!(got.results[0].len(), want.len());
+            for (hit, exp) in got.results[0].iter().zip(&want) {
+                assert_eq!(hit.score, exp.score, "{io:?}: healthy phase");
+            }
+        }
+
+        // Kill shard 0 while the search load keeps running. Until the
+        // router ejects it, answers are either still complete (pre-cut,
+        // full-reference exact) or typed transport errors — never wrong
+        // data. Once ejected, every answer is partial and survivor-exact.
+        let dead = shard_servers.remove(0);
+        dead.shutdown();
+        let mut degraded_seen = 0usize;
+        for round in 0..200 {
+            let q = BitVec::random(DIMS, 0.5, &mut r);
+            match backend.search_batch(std::slice::from_ref(&q), 4) {
+                Ok(got) if got.partial => {
+                    let want = survivor.search_topk(&q, 4);
+                    assert_eq!(
+                        got.results[0].len(),
+                        want.len(),
+                        "{io:?}: K-1 depth equals the surviving shard's reference"
+                    );
+                    for (hit, exp) in got.results[0].iter().zip(&want) {
+                        assert_eq!(hit.score, exp.score, "{io:?}: degraded scores");
+                        assert_eq!(split_row(hit.row).0, 1, "hits name the surviving shard");
+                    }
+                    degraded_seen += 1;
+                    if degraded_seen >= 10 {
+                        break;
+                    }
+                }
+                Ok(got) => {
+                    // Complete answer raced ahead of the cut: must still be
+                    // bit-exact against the full reference.
+                    let want = full.search_topk(&q, 4);
+                    for (hit, exp) in got.results[0].iter().zip(&want) {
+                        assert_eq!(hit.score, exp.score, "{io:?}: pre-cut round {round}");
+                    }
+                }
+                Err(_) => {} // typed transport error during ejection: legal
+            }
+        }
+        assert!(
+            degraded_seen >= 10,
+            "{io:?}: router never settled into degraded serving"
+        );
+
+        // The ejection is visible in health and metrics.
+        let h = backend.health().unwrap();
+        assert_eq!(h.shards_unhealthy, 1, "{io:?}");
+        assert_eq!(h.rows, 25, "aggregate health counts surviving rows only");
+        let m = backend.metrics().unwrap();
+        assert!(m.degraded >= 1, "{io:?}: degraded responses must be counted");
+
+        backend.close();
+        for s in shard_servers {
+            s.shutdown();
+        }
+    }
+}
+
 // ---------------------------------------------------------------------------
 // Event-loop ordering: poll-mode completion must never reorder pipelined
 // responses, even when the head of the line is slow or the client drains
