@@ -47,7 +47,7 @@
 //! and must be dropped. Polling is cheap enough to sit in an event loop's
 //! hot path.
 
-use std::sync::mpsc;
+use std::sync::{mpsc, Arc};
 use std::time::Duration;
 
 use crate::am::write::WriteReport;
@@ -347,6 +347,67 @@ pub trait Backend: Send + Sync {
         limit: usize,
     ) -> Result<BatchResult, SubmitError> {
         self.submit_threshold(queries, threshold, limit)?.wait()
+    }
+}
+
+/// [`Backend`] delegation through [`Arc`], so one backend can serve both a
+/// request path that owns a `Box<dyn Backend>` and a long-lived helper
+/// thread (e.g. the router's health probe) holding its own handle. Every
+/// method — including the default-provided replication and convenience
+/// wrappers — forwards to the shared backend, so wrapping never changes
+/// behavior.
+impl<B: Backend + ?Sized> Backend for Arc<B> {
+    fn dims(&self) -> usize {
+        (**self).dims()
+    }
+    fn submit_search(&self, queries: &[BitVec], k: usize) -> Result<Ticket, SubmitError> {
+        (**self).submit_search(queries, k)
+    }
+    fn submit_threshold(
+        &self,
+        queries: &[BitVec],
+        threshold: f64,
+        limit: usize,
+    ) -> Result<Ticket, SubmitError> {
+        (**self).submit_threshold(queries, threshold, limit)
+    }
+    fn admin(
+        &self,
+        cmd: AdminCmd,
+        expected_epoch: Option<u64>,
+    ) -> Result<AdminOutcome, SubmitError> {
+        (**self).admin(cmd, expected_epoch)
+    }
+    fn health(&self) -> Result<BackendHealth, SubmitError> {
+        (**self).health()
+    }
+    fn metrics(&self) -> Result<MetricsSnapshot, SubmitError> {
+        (**self).metrics()
+    }
+    fn snapshot_chunk(
+        &self,
+        pin: Option<u64>,
+        start_row: u64,
+        max_rows: u64,
+    ) -> Result<SnapshotChunk, SubmitError> {
+        (**self).snapshot_chunk(pin, start_row, max_rows)
+    }
+    fn catchup(&self, from_epoch: u64) -> Result<CatchupBatch, SubmitError> {
+        (**self).catchup(from_epoch)
+    }
+    fn close(&self) {
+        (**self).close()
+    }
+    fn search_batch(&self, queries: &[BitVec], k: usize) -> Result<BatchResult, SubmitError> {
+        (**self).search_batch(queries, k)
+    }
+    fn search_threshold_batch(
+        &self,
+        queries: &[BitVec],
+        threshold: f64,
+        limit: usize,
+    ) -> Result<BatchResult, SubmitError> {
+        (**self).search_threshold_batch(queries, threshold, limit)
     }
 }
 

@@ -7,11 +7,11 @@
 //! `max_batch` — the standard dynamic-batching policy of serving systems.
 
 use std::collections::VecDeque;
-use std::sync::{Condvar, Mutex};
+use std::sync::Condvar;
 use std::time::{Duration, Instant};
 
 use super::request::SubmitError;
-use crate::util::sync::{lock_recover, wait_recover, wait_timeout_recover};
+use crate::util::sync::{wait_timeout_tracked, wait_tracked, TrackedMutex, BATCHER_QUEUE};
 
 /// A queued item: payload + enqueue timestamp.
 pub struct Pending<T> {
@@ -26,9 +26,10 @@ struct State<T> {
     closed: bool,
 }
 
-/// The batching queue.
+/// The batching queue. The submission queue is the `batcher.queue` lock
+/// class in [`crate::util::sync::lock_order`].
 pub struct Batcher<T> {
-    state: Mutex<State<T>>,
+    queue: TrackedMutex<State<T>>,
     cv: Condvar,
     /// Largest batch the worker will drain at once.
     pub max_batch: usize,
@@ -43,7 +44,10 @@ impl<T> Batcher<T> {
     pub fn new(max_batch: usize, max_wait: Duration, depth: usize) -> Self {
         assert!(max_batch >= 1 && depth >= 1);
         Batcher {
-            state: Mutex::new(State { queue: VecDeque::new(), closed: false }),
+            queue: TrackedMutex::new(
+                &BATCHER_QUEUE,
+                State { queue: VecDeque::new(), closed: false },
+            ),
             cv: Condvar::new(),
             max_batch,
             max_wait,
@@ -53,7 +57,7 @@ impl<T> Batcher<T> {
 
     /// Non-blocking submit with backpressure.
     pub fn submit(&self, item: T) -> Result<(), SubmitError> {
-        let mut g = lock_recover(&self.state);
+        let mut g = self.queue.lock();
         if g.closed {
             return Err(SubmitError::Closed);
         }
@@ -68,7 +72,7 @@ impl<T> Batcher<T> {
 
     /// Current queue depth.
     pub fn len(&self) -> usize {
-        lock_recover(&self.state).queue.len()
+        self.queue.lock().queue.len()
     }
 
     /// Whether the queue is currently empty.
@@ -79,7 +83,7 @@ impl<T> Batcher<T> {
     /// Blocking: wait for at least one item, then gather batch-mates until
     /// `max_batch` or `max_wait` elapses. Returns `None` once closed+drained.
     pub fn next_batch(&self) -> Option<Vec<Pending<T>>> {
-        let mut g = lock_recover(&self.state);
+        let mut g = self.queue.lock();
         // Wait for the first item (or shutdown).
         loop {
             if !g.queue.is_empty() {
@@ -88,7 +92,7 @@ impl<T> Batcher<T> {
             if g.closed {
                 return None;
             }
-            g = wait_recover(&self.cv, g);
+            g = wait_tracked(&self.cv, g);
         }
         // Gather batch-mates. max_wait == 0 is the *greedy / continuous
         // batching* policy (§Perf): take whatever is already queued and go —
@@ -106,7 +110,7 @@ impl<T> Batcher<T> {
                 if now >= deadline {
                     break;
                 }
-                let (guard, timeout) = wait_timeout_recover(&self.cv, g, deadline - now);
+                let (guard, timeout) = wait_timeout_tracked(&self.cv, g, deadline - now);
                 g = guard;
                 if timeout.timed_out() {
                     break;
@@ -123,7 +127,7 @@ impl<T> Batcher<T> {
 
     /// Close the queue: submits fail with `Closed`; workers drain then exit.
     pub fn close(&self) {
-        lock_recover(&self.state).closed = true;
+        self.queue.lock().closed = true;
         self.cv.notify_all();
     }
 }

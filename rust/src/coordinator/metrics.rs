@@ -3,11 +3,10 @@
 //! (live store mutations) with cumulative write-verify cost accounting.
 
 use std::collections::BTreeMap;
-use std::sync::Mutex;
 use std::time::Duration;
 
 use crate::am::write::WriteReport;
-use crate::util::sync::lock_recover;
+use crate::util::sync::{TrackedMutex, METRICS_COUNTERS};
 use crate::util::Histogram;
 
 /// Admin-plane operation kind — each gets its own metrics lane.
@@ -152,9 +151,11 @@ impl Inner {
     }
 }
 
-/// Thread-safe metrics sink.
+/// Thread-safe metrics sink. The counter block is the `metrics.counters`
+/// lock class — innermost in [`crate::util::sync::lock_order`], so any
+/// serving path may record while holding its own locks.
 pub struct Metrics {
-    inner: Mutex<Inner>,
+    counters: TrackedMutex<Inner>,
 }
 
 /// Per-k latency summary (one row per lane; the key is the requested k,
@@ -295,55 +296,58 @@ impl Metrics {
     pub fn new() -> Self {
         let h = latency_histogram;
         Metrics {
-            inner: Mutex::new(Inner {
-                submitted: 0,
-                completed: 0,
-                rejected_busy: 0,
-                batches: 0,
-                batch_sizes: Vec::new(),
-                queue_us: h(),
-                exec_us: h(),
-                total_us: h(),
-                per_k: BTreeMap::new(),
-                kinds: [
-                    KindLane { completed: 0, truncated: 0, total_us: h() },
-                    KindLane { completed: 0, truncated: 0, total_us: h() },
-                ],
-                admin: [
-                    AdminLane { completed: 0, total_us: h() },
-                    AdminLane { completed: 0, total_us: h() },
-                    AdminLane { completed: 0, total_us: h() },
-                ],
-                admin_rejected: 0,
-                degraded: 0,
-                write_cells: 0,
-                write_pulses: 0,
-                write_energy_j: 0.0,
-                write_latency_s: 0.0,
-            }),
+            counters: TrackedMutex::new(
+                &METRICS_COUNTERS,
+                Inner {
+                    submitted: 0,
+                    completed: 0,
+                    rejected_busy: 0,
+                    batches: 0,
+                    batch_sizes: Vec::new(),
+                    queue_us: h(),
+                    exec_us: h(),
+                    total_us: h(),
+                    per_k: BTreeMap::new(),
+                    kinds: [
+                        KindLane { completed: 0, truncated: 0, total_us: h() },
+                        KindLane { completed: 0, truncated: 0, total_us: h() },
+                    ],
+                    admin: [
+                        AdminLane { completed: 0, total_us: h() },
+                        AdminLane { completed: 0, total_us: h() },
+                        AdminLane { completed: 0, total_us: h() },
+                    ],
+                    admin_rejected: 0,
+                    degraded: 0,
+                    write_cells: 0,
+                    write_pulses: 0,
+                    write_energy_j: 0.0,
+                    write_latency_s: 0.0,
+                },
+            ),
         }
     }
 
     /// Record a request accepted into the queue.
     pub fn on_submit(&self) {
-        lock_recover(&self.inner).submitted += 1;
+        self.counters.lock().submitted += 1;
     }
 
     /// Record a request rejected with `busy` backpressure.
     pub fn on_reject_busy(&self) {
-        lock_recover(&self.inner).rejected_busy += 1;
+        self.counters.lock().rejected_busy += 1;
     }
 
     /// Record one formed batch of `size` requests.
     pub fn on_batch(&self, size: usize) {
-        let mut g = lock_recover(&self.inner);
+        let mut g = self.counters.lock();
         g.batches += 1;
         g.batch_sizes.push(size as u64);
     }
 
     /// Record one completed top-k search with its queue/exec split.
     pub fn on_complete(&self, queued: Duration, exec: Duration, k: usize) {
-        let mut g = lock_recover(&self.inner);
+        let mut g = self.counters.lock();
         let tot = Self::record_shared(&mut g, queued, exec);
         let lane = g
             .per_k
@@ -360,7 +364,7 @@ impl Metrics {
     /// top-k, but landing in the threshold kind lane (no per-k lane — a
     /// threshold query has no k) with its spill flag counted.
     pub fn on_complete_threshold(&self, queued: Duration, exec: Duration, truncated: bool) {
-        let mut g = lock_recover(&self.inner);
+        let mut g = self.counters.lock();
         let tot = Self::record_shared(&mut g, queued, exec);
         let kind = &mut g.kinds[SearchKind::Threshold.idx()];
         kind.completed += 1;
@@ -386,7 +390,7 @@ impl Metrics {
     /// Record one committed admin op with its wall time and (for ops that
     /// programmed the array) the write-verify cost report.
     pub fn on_admin(&self, kind: AdminKind, total: Duration, report: Option<&WriteReport>) {
-        let mut g = lock_recover(&self.inner);
+        let mut g = self.counters.lock();
         let lane = &mut g.admin[kind.idx()];
         lane.completed += 1;
         lane.total_us.record((total.as_secs_f64() * 1e6).max(0.5));
@@ -398,23 +402,23 @@ impl Metrics {
     /// Account write pulses that were spent even though the op was rejected
     /// (verify failure): the array fired them regardless.
     pub fn on_write_spent(&self, report: &WriteReport) {
-        lock_recover(&self.inner).absorb_write(report);
+        self.counters.lock().absorb_write(report);
     }
 
     /// Record a rejected admin op (bad row, dims mismatch, verify failure).
     pub fn on_admin_rejected(&self) {
-        lock_recover(&self.inner).admin_rejected += 1;
+        self.counters.lock().admin_rejected += 1;
     }
 
     /// Record a scatter-gather batch served without one or more unhealthy
     /// shards (the responses carried the typed partial flag).
     pub fn on_degraded(&self) {
-        lock_recover(&self.inner).degraded += 1;
+        self.counters.lock().degraded += 1;
     }
 
     /// Consistent point-in-time copy of every counter and histogram.
     pub fn snapshot(&self) -> MetricsSnapshot {
-        let g = lock_recover(&self.inner);
+        let g = self.counters.lock();
         let mean_batch = if g.batch_sizes.is_empty() {
             0.0
         } else {

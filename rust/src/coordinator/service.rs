@@ -21,14 +21,14 @@
 
 use std::collections::VecDeque;
 use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::{mpsc, Arc, Mutex};
+use std::sync::{mpsc, Arc};
 use std::time::{Duration, Instant};
 
 use crate::am::store::program_word_verified;
 use crate::am::write::WriteReport;
 use crate::am::{BlockMatches, BlockTopK, QueryBlock, QueryKind, SearchResult};
 use crate::config::{CoordinatorConfig, CosimeConfig};
-use crate::util::sync::lock_recover;
+use crate::util::sync::{TrackedMutex, SERVICE_LOG, SERVICE_WRITER};
 use crate::util::{BitVec, Rng};
 
 use super::backend::{AdminCmd, CatchupBatch, CatchupEntry, SnapshotChunk};
@@ -108,10 +108,13 @@ struct Shared {
     /// start; exposed so frontends can advertise `max_batch`/`max_k` to
     /// clients (wire-level batching hints).
     policy: CoordinatorConfig,
-    write: Mutex<WritePath>,
+    /// Write-verify loop state: the `service.writer` lock class, held for
+    /// the whole programming pass (outermost in
+    /// [`crate::util::sync::lock_order`]).
+    writer: TrackedMutex<WritePath>,
     /// Replication feed: committed admin ops with their programmed words,
-    /// bounded by `[replication] log_capacity`.
-    log: Mutex<ReplLog>,
+    /// bounded by `[replication] log_capacity` — the `service.log` class.
+    log: TrackedMutex<ReplLog>,
     /// Server-side cap on one snapshot chunk's row count
     /// (`[replication] snapshot_chunk_rows`); pullers asking for more get a
     /// shorter chunk and advance by what they received.
@@ -157,15 +160,18 @@ impl AmService {
             max_k_policy: cfg.max_k.max(1),
             max_matches_policy: cfg.max_matches.max(1),
             policy: cfg.clone(),
-            write: Mutex::new(WritePath {
-                cfg: full.clone(),
-                rng: Rng::seed_from_u64(full.write.seed),
-            }),
-            log: Mutex::new(ReplLog {
-                entries: VecDeque::new(),
-                floor: log_floor,
-                capacity: full.replication.log_capacity.max(1),
-            }),
+            writer: TrackedMutex::new(
+                &SERVICE_WRITER,
+                WritePath { cfg: full.clone(), rng: Rng::seed_from_u64(full.write.seed) },
+            ),
+            log: TrackedMutex::new(
+                &SERVICE_LOG,
+                ReplLog {
+                    entries: VecDeque::new(),
+                    floor: log_floor,
+                    capacity: full.replication.log_capacity.max(1),
+                },
+            ),
             snapshot_chunk_rows: full.replication.snapshot_chunk_rows.max(1),
         });
         let workers = (0..cfg.workers.max(1))
@@ -490,7 +496,7 @@ impl AmService {
                 self.shared.tiles.dims()
             )));
         }
-        let mut w = lock_recover(&self.shared.write);
+        let mut w = self.shared.writer.lock();
         let WritePath { cfg, rng } = &mut *w;
         program_word_verified(cfg, word, rng).map_err(|e| {
             // The array fired the pulses whether or not verify passed —
@@ -503,7 +509,7 @@ impl AmService {
 
     /// Record a committed mutation in the replication feed.
     fn push_log(&self, entry: CatchupEntry) {
-        lock_recover(&self.shared.log).push(entry);
+        self.shared.log.lock().push(entry);
     }
 
     /// Serve one epoch-consistent slice of the store for a joining replica.
@@ -543,7 +549,7 @@ impl AmService {
                 return Err(SubmitError::EpochMismatch { expected: p, actual: epoch });
             }
         }
-        let log_floor = lock_recover(&self.shared.log).floor;
+        let log_floor = self.shared.log.lock().floor;
         Ok(SnapshotChunk {
             epoch,
             total_rows: total as u64,
@@ -567,7 +573,7 @@ impl AmService {
             return Err(SubmitError::Closed);
         }
         let entries: Vec<CatchupEntry> = {
-            let log = lock_recover(&self.shared.log);
+            let log = self.shared.log.lock();
             if from_epoch < log.floor {
                 return Err(SubmitError::LogTruncated { floor: log.floor });
             }

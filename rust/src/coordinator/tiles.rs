@@ -30,7 +30,6 @@
 //! rebuilding just the affected tile through the stored factory.
 
 use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
-use std::sync::RwLock;
 
 use anyhow::{bail, Result};
 
@@ -38,6 +37,7 @@ use crate::am::{
     AmEngine, BlockMatches, BlockSink, BlockTopK, QueriesRef, QueryBlock, SearchResult,
     SearchScratch,
 };
+use crate::util::sync::{TrackedRwLock, TILES_STORE};
 use crate::util::{par, BitVec};
 
 /// Engine constructor used to build tiles and to rebuild one tile when its
@@ -102,7 +102,11 @@ pub struct Commit {
 
 /// A sharded, live-updatable AM (see module docs for coherence semantics).
 pub struct TileManager {
-    inner: RwLock<TileSet>,
+    /// The epoch lock: the `tiles.store` class in
+    /// [`crate::util::sync::lock_order`], poison-*propagating* (module
+    /// docs). Commits take the write half inside a `// lint: epoch-write`
+    /// region; searches share the read half.
+    tiles: TrackedRwLock<TileSet>,
     factory: TileFactory,
     tile_capacity: usize,
     dims: usize,
@@ -182,7 +186,10 @@ impl TileManager {
         let max_k = tiles.iter().map(|t| t.max_k()).min().unwrap_or(usize::MAX);
         let thresholds = tiles.iter().all(|t| t.supports_threshold());
         Ok(TileManager {
-            inner: RwLock::new(TileSet { tiles, words: tile_words, offsets, total_rows }),
+            tiles: TrackedRwLock::new(
+                &TILES_STORE,
+                TileSet { tiles, words: tile_words, offsets, total_rows },
+            ),
             factory: Box::new(factory),
             tile_capacity,
             dims,
@@ -195,13 +202,13 @@ impl TileManager {
     /// Number of tiles currently backing the store.
     pub fn tile_count(&self) -> usize {
         // lint: allow(no-panic) -- a poisoned epoch lock means a mutator panicked mid-commit; serving or mutating a possibly-torn store would silently corrupt results, so propagating the panic is the correct policy.
-        self.inner.read().unwrap().tiles.len()
+        self.tiles.read().unwrap().tiles.len()
     }
 
     /// Total stored rows across tiles.
     pub fn rows(&self) -> usize {
         // lint: allow(no-panic) -- a poisoned epoch lock means a mutator panicked mid-commit; serving or mutating a possibly-torn store would silently corrupt results, so propagating the panic is the correct policy.
-        self.inner.read().unwrap().total_rows
+        self.tiles.read().unwrap().total_rows
     }
 
     /// Word width in bits.
@@ -233,7 +240,7 @@ impl TileManager {
     /// path of a live server (consistent: taken under the read lock).
     pub fn snapshot_words(&self) -> Vec<BitVec> {
         // lint: allow(no-panic) -- a poisoned epoch lock means a mutator panicked mid-commit; serving or mutating a possibly-torn store would silently corrupt results, so propagating the panic is the correct policy.
-        let set = self.inner.read().unwrap();
+        let set = self.tiles.read().unwrap();
         set.words.iter().flat_map(|w| w.iter().cloned()).collect()
     }
 
@@ -244,7 +251,7 @@ impl TileManager {
     /// tear against a concurrent mutation.
     pub fn snapshot_range(&self, start: usize, max: usize) -> (u64, usize, Vec<BitVec>) {
         // lint: allow(no-panic) -- a poisoned epoch lock means a mutator panicked mid-commit; serving or mutating a possibly-torn store would silently corrupt results, so propagating the panic is the correct policy.
-        let set = self.inner.read().unwrap();
+        let set = self.tiles.read().unwrap();
         let epoch = self.epoch.load(Ordering::Acquire);
         let total = set.total_rows;
         let rows = set
@@ -323,8 +330,9 @@ impl TileManager {
         if word.len() != self.dims {
             bail!("word has {} bits, engine expects {}", word.len(), self.dims);
         }
+        // lint: epoch-write -- mutation region: write half of the epoch lock, committed below.
         // lint: allow(no-panic) -- a poisoned epoch lock means a mutator panicked mid-commit; serving or mutating a possibly-torn store would silently corrupt results, so propagating the panic is the correct policy.
-        let mut set = self.inner.write().unwrap();
+        let mut set = self.tiles.write().unwrap();
         self.check_expected_epoch(expected_epoch)?;
         if row >= set.total_rows {
             bail!("row {row} out of range {}", set.total_rows);
@@ -337,6 +345,7 @@ impl TileManager {
         }
         set.words[t][local] = word.clone();
         Ok(self.commit(&set))
+        // lint: end-epoch-write
     }
 
     /// Append `word` as a new global row: into the last tile while it has
@@ -356,8 +365,9 @@ impl TileManager {
         if word.len() != self.dims {
             bail!("word has {} bits, engine expects {}", word.len(), self.dims);
         }
+        // lint: epoch-write -- mutation region: write half of the epoch lock, committed below.
         // lint: allow(no-panic) -- a poisoned epoch lock means a mutator panicked mid-commit; serving or mutating a possibly-torn store would silently corrupt results, so propagating the panic is the correct policy.
-        let mut set = self.inner.write().unwrap();
+        let mut set = self.tiles.write().unwrap();
         self.check_expected_epoch(expected_epoch)?;
         let row = set.total_rows;
         let t = set.tiles.len() - 1;
@@ -378,6 +388,7 @@ impl TileManager {
         }
         set.total_rows = row + 1;
         Ok((row, self.commit(&set)))
+        // lint: end-epoch-write
     }
 
     /// Remove global row `row`; rows above shift down by one. A tile that
@@ -390,8 +401,9 @@ impl TileManager {
     /// [`TileManager::delete_row`] with the optional compare-and-swap guard
     /// (see [`TileManager::update_row_cas`]).
     pub fn delete_row_cas(&self, row: usize, expected_epoch: Option<u64>) -> Result<Commit> {
+        // lint: epoch-write -- mutation region: write half of the epoch lock, committed below.
         // lint: allow(no-panic) -- a poisoned epoch lock means a mutator panicked mid-commit; serving or mutating a possibly-torn store would silently corrupt results, so propagating the panic is the correct policy.
-        let mut set = self.inner.write().unwrap();
+        let mut set = self.tiles.write().unwrap();
         self.check_expected_epoch(expected_epoch)?;
         if row >= set.total_rows {
             bail!("row {row} out of range {}", set.total_rows);
@@ -417,6 +429,7 @@ impl TileManager {
         }
         set.total_rows -= 1;
         Ok(self.commit(&set))
+        // lint: end-epoch-write
     }
 
     // ---- search (read side of the epoch lock) ----------------------------
@@ -442,7 +455,7 @@ impl TileManager {
     ) -> u64 {
         assert_eq!(queries.dims(), self.dims, "query dims mismatch");
         // lint: allow(no-panic) -- a poisoned epoch lock means a mutator panicked mid-commit; serving or mutating a possibly-torn store would silently corrupt results, so propagating the panic is the correct policy.
-        let guard = self.inner.read().unwrap();
+        let guard = self.tiles.read().unwrap();
         let set: &TileSet = &guard;
         let epoch = self.epoch.load(Ordering::Acquire);
         let kk = k.min(set.total_rows);
@@ -542,7 +555,7 @@ impl TileManager {
         assert_eq!(queries.dims(), self.dims, "query dims mismatch");
         assert_eq!(out.queries(), queries.len(), "selector count mismatch");
         // lint: allow(no-panic) -- a poisoned epoch lock means a mutator panicked mid-commit; serving or mutating a possibly-torn store would silently corrupt results, so propagating the panic is the correct policy.
-        let guard = self.inner.read().unwrap();
+        let guard = self.tiles.read().unwrap();
         let set: &TileSet = &guard;
         let epoch = self.epoch.load(Ordering::Acquire);
         if queries.is_empty() {
@@ -664,7 +677,7 @@ impl TileManager {
     pub fn search(&self, query: &BitVec) -> SearchResult {
         assert_eq!(query.len(), self.dims, "query dims mismatch");
         // lint: allow(no-panic) -- a poisoned epoch lock means a mutator panicked mid-commit; serving or mutating a possibly-torn store would silently corrupt results, so propagating the panic is the correct policy.
-        let set = self.inner.read().unwrap();
+        let set = self.tiles.read().unwrap();
         let mut best = SearchResult { winner: 0, score: f64::NEG_INFINITY };
         for (t, tile) in set.tiles.iter().enumerate() {
             let local = tile.search(query);

@@ -39,8 +39,9 @@
 //! * [`repro`] — regeneration harnesses for every table and figure in the paper.
 //!
 //! * [`lint`] — the in-crate invariant linter behind `cosime lint`:
-//!   SAFETY-comment, no-panic, hot-path-allocation, and wire/config
-//!   exhaustiveness rules over the whole tree (tier-1 gated).
+//!   SAFETY-comment, no-panic, hot-path-allocation, wire/config
+//!   exhaustiveness, lock-order, and epoch-discipline rules over the
+//!   whole tree (tier-1 gated), plus the `--waivers` audit report.
 //!
 //! See `rust/README.md` for the kernel API walkthrough, the cargo feature
 //! flags (notably the off-by-default `xla` runtime backend), and the

@@ -11,6 +11,8 @@
 //! | `hot-path-alloc`  | no allocation inside `// lint: hot-path` … `// lint: end-hot-path` regions |
 //! | `wire-exhaustive` | every `Op`/`ErrorCode` variant in `server/protocol.rs` is dispatched/produced in the serving layer |
 //! | `config-doc`      | every config key parsed in `config/` is documented in rust/README.md |
+//! | `lock-order`      | no tracked-class acquisition while a higher-ranked class is textually held (the table in `util::sync::lock_order`) |
+//! | `epoch-discipline`| every write-half acquisition of the store's epoch lock sits in a `// lint: epoch-write` region that bumps the epoch |
 //!
 //! Violations can be waived in place with
 //! `// lint: allow(<rule>) -- <reason>` (the reason is mandatory).
@@ -47,6 +49,10 @@ pub enum Rule {
     WireExhaustive,
     /// Config key parsed but undocumented in rust/README.md.
     ConfigDoc,
+    /// Tracked lock acquired while a higher-ranked class is held.
+    LockOrder,
+    /// Store epoch-lock write outside a committed `epoch-write` region.
+    EpochDiscipline,
 }
 
 impl Rule {
@@ -59,6 +65,8 @@ impl Rule {
             Rule::HotPathAlloc => "hot-path-alloc",
             Rule::WireExhaustive => "wire-exhaustive",
             Rule::ConfigDoc => "config-doc",
+            Rule::LockOrder => "lock-order",
+            Rule::EpochDiscipline => "epoch-discipline",
         }
     }
 }
@@ -194,6 +202,125 @@ pub fn lint_tree(root: &Path) -> Result<Vec<Finding>> {
     Ok(findings)
 }
 
+/// One `// lint: allow(<rule>) -- <reason>` waiver somewhere in the tree.
+#[derive(Debug, Clone)]
+pub struct Waiver {
+    /// Path relative to the repo root, `/`-separated.
+    pub file: String,
+    /// 1-based line of the directive comment.
+    pub line: u32,
+    /// Rule name being waived.
+    pub rule: String,
+    /// The mandatory reason text after ` -- `.
+    pub reason: String,
+    /// Abbreviated commit that introduced the directive line (`git blame`);
+    /// `"uncommitted"` for working-tree edits, `"unknown"` when blame is
+    /// unavailable (no git binary, tarball checkout).
+    pub commit: String,
+}
+
+/// `git blame` one line, returning the abbreviated introducing commit.
+fn blame_line(root: &Path, rel: &str, line: u32) -> String {
+    let out = std::process::Command::new("git")
+        .arg("-C")
+        .arg(root)
+        .arg("blame")
+        .arg("-L")
+        .arg(format!("{line},{line}"))
+        .arg("--porcelain")
+        .arg("--")
+        .arg(rel)
+        .output();
+    match out {
+        Ok(o) if o.status.success() => {
+            let text = String::from_utf8_lossy(&o.stdout);
+            let hash = text.split_whitespace().next().unwrap_or("");
+            if hash.is_empty() {
+                "unknown".into()
+            } else if hash.chars().all(|c| c == '0') {
+                "uncommitted".into()
+            } else {
+                hash.chars().take(8).collect()
+            }
+        }
+        _ => "unknown".into(),
+    }
+}
+
+/// Collect every waiver in the tree, annotated with the introducing commit.
+/// Sorted by file then line — this is the `cosime lint --waivers` audit
+/// report, so reviewers see each escape hatch, its documented reason, and
+/// when it entered the tree in one place.
+pub fn waiver_report(root: &Path) -> Result<Vec<Waiver>> {
+    let mut files = Vec::new();
+    for walk in WALK_ROOTS {
+        let dir = root.join(walk);
+        if dir.is_dir() {
+            collect_rs(root, &dir, &mut files)?;
+        }
+    }
+    let mut out = Vec::new();
+    for rel in &files {
+        let src = fs::read_to_string(root.join(rel))
+            .with_context(|| format!("reading {rel}"))?;
+        for c in &lexer::lex(&src).comments {
+            let mut rest = c.text.as_str();
+            while let Some(pos) = rest.find("lint: allow(") {
+                let tail = &rest[pos + "lint: allow(".len()..];
+                let Some(close) = tail.find(')') else { break };
+                let rule = tail[..close].to_string();
+                let after = &tail[close + 1..];
+                if let Some(reason) = after.trim_start().strip_prefix("--") {
+                    let reason = reason.trim();
+                    if !reason.is_empty() {
+                        out.push(Waiver {
+                            file: rel.clone(),
+                            line: c.line,
+                            rule,
+                            reason: reason.to_string(),
+                            commit: blame_line(root, rel, c.line),
+                        });
+                    }
+                }
+                rest = after;
+            }
+        }
+    }
+    out.sort_by(|a, b| (&a.file, a.line).cmp(&(&b.file, b.line)));
+    Ok(out)
+}
+
+/// Render the waiver report as human-readable text, one waiver per line.
+pub fn render_waivers_text(waivers: &[Waiver]) -> String {
+    let mut s = String::new();
+    for w in waivers {
+        s.push_str(&format!(
+            "{}:{}: {} [{}] -- {}\n",
+            w.file, w.line, w.rule, w.commit, w.reason
+        ));
+    }
+    s.push_str(&format!("{} waiver(s)\n", waivers.len()));
+    s
+}
+
+/// Render the waiver report as JSON (`--waivers --json`, the CI artifact).
+pub fn render_waivers_json(waivers: &[Waiver]) -> String {
+    let items = waivers.iter().map(|w| {
+        Json::obj(vec![
+            ("file", Json::str(&w.file)),
+            ("line", Json::num(w.line as f64)),
+            ("rule", Json::str(&w.rule)),
+            ("reason", Json::str(&w.reason)),
+            ("commit", Json::str(&w.commit)),
+        ])
+    });
+    Json::obj(vec![
+        ("count", Json::num(waivers.len() as f64)),
+        ("waivers", Json::arr(items)),
+    ])
+    .to_string_pretty()
+}
+
 /// Render findings as a JSON document (the `--json` mode):
 /// `{"findings": [{"file", "line", "rule", "message"}, …], "count": N}`.
 pub fn render_json(findings: &[Finding]) -> String {
@@ -239,6 +366,19 @@ mod tests {
         assert_eq!(parsed.get("count").and_then(Json::as_usize), Some(1));
         let arr = parsed.get("findings").and_then(Json::as_arr).expect("arr");
         assert_eq!(arr[0].get("rule").and_then(Json::as_str), Some("safety-comment"));
+    }
+
+    #[test]
+    fn waiver_report_lists_known_waivers_with_reasons() {
+        let root = repo_root().expect("repo root");
+        let ws = waiver_report(&root).expect("report");
+        assert!(!ws.is_empty(), "the tree carries documented waivers");
+        assert!(ws.iter().all(|w| !w.reason.is_empty() && !w.commit.is_empty()));
+        assert!(ws.iter().any(|w| w.rule == "no-panic"));
+        let json = Json::parse(&render_waivers_json(&ws)).expect("valid json");
+        assert_eq!(json.get("count").and_then(Json::as_usize), Some(ws.len()));
+        let text = render_waivers_text(&ws);
+        assert!(text.contains("waiver(s)"));
     }
 
     #[test]

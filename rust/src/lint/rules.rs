@@ -20,6 +20,7 @@
 
 use super::lexer::{Lexed, TokKind};
 use super::{Finding, Rule};
+use crate::util::sync::lock_order;
 
 /// Paths (relative to the repo root, `/`-separated) where the `no-panic`
 /// rule applies: the serving stack and the search kernel, where a panic
@@ -40,6 +41,8 @@ pub fn lint_file(rel: &str, lexed: &Lexed, out: &mut Vec<Finding>) {
         no_panic(rel, lexed, &allows, &tests, out);
     }
     hot_path_alloc(rel, lexed, &allows, out);
+    lock_order_rule(rel, lexed, &allows, &tests, out);
+    epoch_discipline(rel, lexed, &allows, &tests, out);
 }
 
 // ---------------------------------------------------------------------------
@@ -401,6 +404,254 @@ fn hot_path_alloc(rel: &str, lexed: &Lexed, allows: &AllowSet, out: &mut Vec<Fin
 }
 
 // ---------------------------------------------------------------------------
+// rule: lock-order
+
+/// The tracked-lock acquisition methods: `TrackedMutex::lock`,
+/// `TrackedRwLock::read`/`write`.
+const ACQUIRE_METHODS: &[&str] = &["lock", "read", "write"];
+
+/// One guard the textual scan currently believes is held.
+struct HeldByScan {
+    rank: u32,
+    class: &'static str,
+    field: &'static str,
+    /// `let` binding holding the guard, if recognizable — an explicit
+    /// `drop(<binding>)` releases it early.
+    binding: Option<String>,
+    /// Brace depth of the acquiring statement; leaving the enclosing block
+    /// releases the guard.
+    depth: usize,
+    line: u32,
+}
+
+/// Static lock-order check, driven by the same declared table the runtime
+/// lockdep uses ([`crate::util::sync::lock_order`]): the field names in
+/// that table are globally unique, so the identifier left of a
+/// `.lock()` / `.read()` / `.write()` call *is* the class key — no type
+/// resolution needed. Acquiring a class while a **higher-ranked** class is
+/// textually still held (ranks ascend outermost → innermost) inverts the
+/// declared order. `let`-bound guards count as held to the end of their
+/// enclosing block or an explicit `drop(binding)`; bare acquisitions are
+/// treated as instantaneous. Purely textual, so it catches orderings the
+/// test suite never executes; the runtime lockdep catches the dynamic
+/// ones. Waive deliberate exceptions with
+/// `// lint: allow(lock-order) -- <reason>`.
+fn lock_order_rule(
+    rel: &str,
+    lexed: &Lexed,
+    allows: &AllowSet,
+    tests: &[(usize, usize)],
+    out: &mut Vec<Finding>,
+) {
+    let t = &lexed.toks;
+    let mut held: Vec<HeldByScan> = Vec::new();
+    let mut depth = 0usize;
+    for i in 0..t.len() {
+        match t[i].kind {
+            TokKind::Punct('{') => depth += 1,
+            TokKind::Punct('}') => {
+                depth = depth.saturating_sub(1);
+                held.retain(|h| h.depth <= depth);
+            }
+            _ => {}
+        }
+        // `drop(<binding>)` releases the named guard early.
+        if t[i].is_ident("drop")
+            && t.get(i + 1).is_some_and(|n| n.is_punct('('))
+            && t.get(i + 3).is_some_and(|n| n.is_punct(')'))
+        {
+            if let Some(name) = t.get(i + 2).filter(|n| n.kind == TokKind::Ident) {
+                let pos = held
+                    .iter()
+                    .rposition(|h| h.binding.as_deref() == Some(name.text.as_str()));
+                if let Some(pos) = pos {
+                    held.remove(pos);
+                }
+            }
+        }
+        // An acquisition: `<field> . lock|read|write (`.
+        let is_acquire = i >= 1
+            && t[i].is_punct('.')
+            && t.get(i + 1).is_some_and(|n| {
+                n.kind == TokKind::Ident && ACQUIRE_METHODS.contains(&n.text.as_str())
+            })
+            && t.get(i + 2).is_some_and(|n| n.is_punct('('))
+            && t[i - 1].kind == TokKind::Ident;
+        if !is_acquire || in_spans(tests, i) {
+            continue;
+        }
+        let field_tok = &t[i - 1];
+        let Some(spec) = lock_order().iter().find(|s| s.field == field_tok.text) else {
+            continue;
+        };
+        let line = t[i + 1].line;
+        if let Some(outer) = held.iter().find(|h| h.field != spec.field && spec.rank < h.rank) {
+            if !allows.allows("lock-order", line) {
+                out.push(Finding {
+                    file: rel.to_string(),
+                    line,
+                    rule: Rule::LockOrder,
+                    message: format!(
+                        "`{}.{}()` acquires lock class \"{}\" (rank {}) while \"{}\" \
+                         (rank {}, acquired on line {}) is still held — inverts the \
+                         declared order in util::sync::lock_order(); release the outer \
+                         guard first or add `// lint: allow(lock-order) -- <reason>`",
+                        spec.field,
+                        t[i + 1].text,
+                        spec.name,
+                        spec.rank,
+                        outer.class,
+                        outer.rank,
+                        outer.line
+                    ),
+                });
+            }
+        }
+        // Held-region bookkeeping: a `let` in the same statement keeps the
+        // guard alive past the call; find the statement start and, if it
+        // binds a plain identifier, remember it for `drop()` release.
+        let mut j = i;
+        while j > 0 {
+            let k = &t[j - 1].kind;
+            if matches!(k, TokKind::Punct(';') | TokKind::Punct('{') | TokKind::Punct('}')) {
+                break;
+            }
+            j -= 1;
+        }
+        let let_pos = (j..i).find(|&k| t[k].is_ident("let"));
+        if let Some(let_pos) = let_pos {
+            let mut b = let_pos + 1;
+            if t.get(b).is_some_and(|n| n.is_ident("mut")) {
+                b += 1;
+            }
+            let binding = t
+                .get(b)
+                .filter(|n| n.kind == TokKind::Ident)
+                .map(|n| n.text.clone());
+            held.push(HeldByScan {
+                rank: spec.rank,
+                class: spec.name,
+                field: spec.field,
+                binding,
+                depth,
+                line,
+            });
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// rule: epoch-discipline
+
+/// Every acquisition of the write half of the store's epoch lock (the
+/// `tiles.store` class) must sit inside a region opened by a comment
+/// starting `lint: epoch-write` and closed by `lint: end-epoch-write`, and
+/// each region holding such a write must bump the epoch — a `commit(` or
+/// `seed_epoch(` call — before it closes, so a store mutation can never
+/// skip the epoch stamp the replication tier depends on. Waive with
+/// `// lint: allow(epoch-discipline) -- <reason>`.
+fn epoch_discipline(
+    rel: &str,
+    lexed: &Lexed,
+    allows: &AllowSet,
+    tests: &[(usize, usize)],
+    out: &mut Vec<Finding>,
+) {
+    let Some(store) = lock_order().iter().find(|s| s.name == "tiles.store") else {
+        return;
+    };
+    // Collect regions from the marker comments (same grammar as hot-path:
+    // a marker is a comment that *starts with* the directive, so prose
+    // mentioning `lint: epoch-write` mid-sentence opens nothing).
+    let mut regions: Vec<(u32, u32)> = Vec::new();
+    let mut open: Option<u32> = None;
+    for c in &lexed.comments {
+        let body = c.text.trim_start_matches(['/', '*', '!']).trim();
+        if body.starts_with("lint: end-epoch-write") {
+            match open.take() {
+                Some(start) => regions.push((start, c.line)),
+                None => out.push(Finding {
+                    file: rel.to_string(),
+                    line: c.line,
+                    rule: Rule::EpochDiscipline,
+                    message: "`lint: end-epoch-write` without a matching `lint: epoch-write`"
+                        .into(),
+                }),
+            }
+        } else if body.starts_with("lint: epoch-write") {
+            if let Some(start) = open.replace(c.line) {
+                out.push(Finding {
+                    file: rel.to_string(),
+                    line: start,
+                    rule: Rule::EpochDiscipline,
+                    message: "`lint: epoch-write` region is never closed before the next one"
+                        .into(),
+                });
+            }
+        }
+    }
+    if let Some(start) = open {
+        out.push(Finding {
+            file: rel.to_string(),
+            line: start,
+            rule: Rule::EpochDiscipline,
+            message: "unterminated `lint: epoch-write` region (missing `lint: end-epoch-write`)"
+                .into(),
+        });
+    }
+
+    let t = &lexed.toks;
+    // Lines that bump the epoch inside this file.
+    let bumps: Vec<u32> = (0..t.len())
+        .filter(|&i| {
+            t[i].kind == TokKind::Ident
+                && (t[i].text == "commit" || t[i].text == "seed_epoch")
+                && t.get(i + 1).is_some_and(|n| n.is_punct('('))
+        })
+        .map(|i| t[i].line)
+        .collect();
+    for i in 1..t.len() {
+        let is_store_write = t[i].is_punct('.')
+            && t.get(i + 1).is_some_and(|n| n.is_ident("write"))
+            && t.get(i + 2).is_some_and(|n| n.is_punct('('))
+            && t[i - 1].is_ident(store.field);
+        if !is_store_write || in_spans(tests, i) {
+            continue;
+        }
+        let line = t[i + 1].line;
+        if allows.allows("epoch-discipline", line) {
+            continue;
+        }
+        match regions.iter().find(|&&(a, b)| line > a && line < b) {
+            None => out.push(Finding {
+                file: rel.to_string(),
+                line,
+                rule: Rule::EpochDiscipline,
+                message: format!(
+                    "`{}.write()` takes the write half of the epoch lock outside a \
+                     `lint: epoch-write` region; wrap the mutation or add \
+                     `// lint: allow(epoch-discipline) -- <reason>`",
+                    store.field
+                ),
+            }),
+            Some(&(a, b)) => {
+                if !bumps.iter().any(|&l| l > a && l < b) {
+                    out.push(Finding {
+                        file: rel.to_string(),
+                        line,
+                        rule: Rule::EpochDiscipline,
+                        message: format!(
+                            "the `lint: epoch-write` region starting on line {a} never \
+                             bumps the epoch (no `commit(`/`seed_epoch(` before line {b})"
+                        ),
+                    });
+                }
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
 // rule: wire-exhaustive
 
 /// Variant names (and decl lines) of `enum <name>` in a lexed file.
@@ -738,6 +989,72 @@ mod tests {
         wire_exhaustive(("p.rs", &proto), &[("tcp.rs", &tcp)], &mut out);
         assert_eq!(out.len(), 1);
         assert!(out[0].message.contains("Op::Ghost"));
+    }
+
+    #[test]
+    fn lock_order_inversion_fires() {
+        let src = "fn f(s: &S) {\n    let g = s.counters.lock();\n    let w = s.writer.lock();\n    drop(w);\n    drop(g);\n}\n";
+        let out = findings("rust/src/x.rs", src);
+        assert_eq!(out.len(), 1);
+        assert_eq!(out[0].rule, Rule::LockOrder);
+        assert_eq!(out[0].line, 3);
+        assert!(out[0].message.contains("metrics.counters"), "{}", out[0].message);
+        assert!(out[0].message.contains("service.writer"), "{}", out[0].message);
+    }
+
+    #[test]
+    fn lock_order_ascending_dropped_scoped_and_untracked_are_clean() {
+        let ascending = "fn f(s: &S) {\n    let w = s.writer.lock();\n    let g = s.counters.lock();\n}\n";
+        assert!(findings("rust/src/x.rs", ascending).is_empty());
+        let dropped = "fn f(s: &S) {\n    let g = s.counters.lock();\n    drop(g);\n    let w = s.writer.lock();\n}\n";
+        assert!(findings("rust/src/x.rs", dropped).is_empty());
+        let scoped = "fn f(s: &S) {\n    {\n        let g = s.counters.lock();\n    }\n    let w = s.writer.lock();\n}\n";
+        assert!(findings("rust/src/x.rs", scoped).is_empty());
+        let untracked = "fn f(s: &S) {\n    let g = s.mystery.lock();\n    let w = s.writer.lock();\n}\n";
+        assert!(findings("rust/src/x.rs", untracked).is_empty());
+    }
+
+    #[test]
+    fn lock_order_same_class_and_waiver_are_clean() {
+        let same = "fn f(s: &S) {\n    let a = s.conn.lock();\n    let b = s.conn.lock();\n}\n";
+        assert!(findings("rust/src/x.rs", same).is_empty());
+        let waived = "fn f(s: &S) {\n    let g = s.counters.lock();\n    // lint: allow(lock-order) -- shutdown path; outer guard is idle\n    let w = s.writer.lock();\n}\n";
+        assert!(findings("rust/src/x.rs", waived).is_empty());
+    }
+
+    #[test]
+    fn epoch_write_outside_region_fires() {
+        let src = "fn f(s: &S) {\n    let mut set = s.tiles.write();\n    set.rows += 1;\n}\n";
+        let out = findings("rust/src/x.rs", src);
+        assert_eq!(out.len(), 1);
+        assert_eq!(out[0].rule, Rule::EpochDiscipline);
+        assert_eq!(out[0].line, 2);
+    }
+
+    #[test]
+    fn epoch_write_region_must_bump_the_epoch() {
+        let committed = "fn f(s: &S) {\n    // lint: epoch-write -- fixture\n    let mut set = s.tiles.write();\n    let c = s.commit(&set);\n    // lint: end-epoch-write\n    let _ = c;\n}\n";
+        assert!(findings("rust/src/x.rs", committed).is_empty());
+        let seeded = "fn f(s: &S) {\n    // lint: epoch-write -- fixture\n    let mut set = s.tiles.write();\n    s.seed_epoch(7);\n    // lint: end-epoch-write\n}\n";
+        assert!(findings("rust/src/x.rs", seeded).is_empty());
+        let no_bump = "fn f(s: &S) {\n    // lint: epoch-write -- fixture\n    let mut set = s.tiles.write();\n    set.rows += 1;\n    // lint: end-epoch-write\n}\n";
+        let out = findings("rust/src/x.rs", no_bump);
+        assert_eq!(out.len(), 1);
+        assert!(out[0].message.contains("bumps the epoch"), "{}", out[0].message);
+    }
+
+    #[test]
+    fn epoch_write_markers_must_pair_and_waiver_applies() {
+        let unterminated = "fn f() {\n    // lint: epoch-write -- fixture\n}\n";
+        let out = findings("rust/src/x.rs", unterminated);
+        assert_eq!(out.len(), 1);
+        assert!(out[0].message.contains("unterminated"), "{}", out[0].message);
+        let orphan = "fn f() {\n    // lint: end-epoch-write\n}\n";
+        let out = findings("rust/src/x.rs", orphan);
+        assert_eq!(out.len(), 1);
+        assert!(out[0].message.contains("without a matching"), "{}", out[0].message);
+        let waived = "fn f(s: &S) {\n    // lint: allow(epoch-discipline) -- bulk loader stamps the epoch itself\n    let mut set = s.tiles.write();\n}\n";
+        assert!(findings("rust/src/x.rs", waived).is_empty());
     }
 
     #[test]

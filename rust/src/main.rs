@@ -32,11 +32,15 @@
 //!             and serving benches and writes BENCH_kernel.json /
 //!             BENCH_serving.json (--out DIR, default repo root `.`;
 //!             --quick trims the grid for CI smoke; --only kernel|serving
-//!             runs one rail; --check only validates existing artifacts)
+//!             runs one rail; --check only validates existing artifacts;
+//!             --append records a dated headline entry into
+//!             BENCH_trajectory.json for longitudinal tracking)
 //!   lint      run the in-crate invariant linter (SAFETY comments, no-panic
-//!             serving paths, hot-path allocation regions, wire/config
-//!             exhaustiveness; --json for machine-readable findings,
-//!             non-zero exit when anything fires)
+//!             serving paths, hot-path allocation regions, lock ordering,
+//!             epoch-write discipline, wire/config exhaustiveness; --json
+//!             for machine-readable findings, non-zero exit when anything
+//!             fires; --waivers lists every `lint: allow` escape hatch
+//!             with its reason and introducing commit instead)
 //!
 //! Common flags: --results DIR, --seed N, --subsample F (dataset fraction),
 //! --trials N (Monte Carlo), --engine digital|analog|xla|multibit.
@@ -672,6 +676,10 @@ fn cmd_bench(args: &Args) -> Result<()> {
     for p in &written {
         println!("wrote {}", p.display());
     }
+    if args.flag("append") {
+        let tp = cosime::perf::append_trajectory(&out_dir)?;
+        println!("appended trajectory entry to {}", tp.display());
+    }
     Ok(())
 }
 
@@ -681,6 +689,17 @@ fn cmd_lint(args: &Args) -> Result<()> {
         None => cosime::lint::repo_root()
             .ok_or_else(|| anyhow::anyhow!("could not locate the repo root (rust/src/lib.rs)"))?,
     };
+    if args.flag("waivers") {
+        // Audit mode: list every `lint: allow` escape hatch instead of
+        // linting. Always exits 0 — waivers are documented, not wrong.
+        let waivers = cosime::lint::waiver_report(&root)?;
+        if args.flag("json") {
+            println!("{}", cosime::lint::render_waivers_json(&waivers));
+        } else {
+            print!("{}", cosime::lint::render_waivers_text(&waivers));
+        }
+        return Ok(());
+    }
     let findings = cosime::lint::lint_tree(&root)?;
     if args.flag("json") {
         println!("{}", cosime::lint::render_json(&findings));

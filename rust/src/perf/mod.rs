@@ -24,6 +24,13 @@
 //! test. A committed file may carry `"placeholder": true` plus a `"note"`
 //! when it was last written in an environment that could not run the bench;
 //! the next `cosime bench` run replaces it with measured numbers.
+//!
+//! On top of the per-run artifacts, `cosime bench --append` folds each run's
+//! headline numbers (best kernel bandwidth, best SIMD-vs-scalar speedup,
+//! best serving p50 and pipelined throughput) into `BENCH_trajectory.json`
+//! (`cosime-bench-trajectory/v1`) — one dated, commit-stamped entry per run,
+//! so perf regressions show up as a trend break instead of a diff between
+//! two overwritten snapshots.
 
 use std::path::{Path, PathBuf};
 use std::time::{Duration, Instant};
@@ -538,7 +545,174 @@ pub fn check_artifacts(dir: &Path) -> Result<()> {
     )
     .with_context(|| format!("parsing {}", sp.display()))?;
     validate_serving_json(&sj).with_context(|| format!("validating {}", sp.display()))?;
+    // The trajectory artifact is optional (born from `--append`) but must
+    // validate whenever it exists.
+    let tp = trajectory_path_in(dir);
+    if tp.exists() {
+        let tj = read_json(&tp)?;
+        validate_trajectory_json(&tj).with_context(|| format!("validating {}", tp.display()))?;
+    }
     Ok(())
+}
+
+// ---- longitudinal trajectory (`cosime bench --append`) -------------------
+
+/// Schema tag of `BENCH_trajectory.json`.
+pub const TRAJECTORY_SCHEMA: &str = "cosime-bench-trajectory/v1";
+
+/// `BENCH_trajectory.json` under `dir`.
+pub fn trajectory_path_in(dir: &Path) -> PathBuf {
+    dir.join("BENCH_trajectory.json")
+}
+
+/// Days since 1970-01-01 → proleptic-Gregorian `(year, month, day)`
+/// (Hinnant's `civil_from_days`), so the trajectory can stamp UTC dates
+/// without a date-time dependency.
+fn civil_from_days(days: i64) -> (i64, u32, u32) {
+    let z = days + 719_468;
+    let era = if z >= 0 { z } else { z - 146_096 } / 146_097;
+    let doe = z - era * 146_097; // [0, 146096]
+    let yoe = (doe - doe / 1460 + doe / 36_524 - doe / 146_096) / 365;
+    let doy = doe - (365 * yoe + yoe / 4 - yoe / 100);
+    let mp = (5 * doy + 2) / 153;
+    let d = (doy - (153 * mp + 2) / 5 + 1) as u32;
+    let m = if mp < 10 { mp + 3 } else { mp - 9 } as u32;
+    (yoe + era * 400 + i64::from(m <= 2), m, d)
+}
+
+fn utc_date_today() -> String {
+    let secs = std::time::SystemTime::now()
+        .duration_since(std::time::UNIX_EPOCH)
+        .map(|d| d.as_secs())
+        .unwrap_or(0);
+    let (y, m, d) = civil_from_days((secs / 86_400) as i64);
+    format!("{y:04}-{m:02}-{d:02}")
+}
+
+/// `git rev-parse --short=12 HEAD` in `dir`, or `"unknown"` outside a
+/// checkout — the trajectory stays appendable from exported tarballs.
+fn head_commit(dir: &Path) -> String {
+    std::process::Command::new("git")
+        .args(["rev-parse", "--short=12", "HEAD"])
+        .current_dir(dir)
+        .output()
+        .ok()
+        .filter(|o| o.status.success())
+        .and_then(|o| String::from_utf8(o.stdout).ok())
+        .map(|s| s.trim().to_string())
+        .filter(|s| !s.is_empty())
+        .unwrap_or_else(|| "unknown".to_string())
+}
+
+fn read_json(p: &Path) -> Result<Json> {
+    Json::parse(&std::fs::read_to_string(p).with_context(|| format!("reading {}", p.display()))?)
+        .with_context(|| format!("parsing {}", p.display()))
+}
+
+/// Schema check for `BENCH_trajectory.json`. An empty entry list is legal
+/// (the committed seed file); every present entry must carry a well-formed
+/// `YYYY-MM-DD` date, a commit id, and finite positive headline metrics.
+pub fn validate_trajectory_json(j: &Json) -> Result<()> {
+    let got = want_str(j, "schema", "trajectory")?;
+    ensure!(
+        got == TRAJECTORY_SCHEMA,
+        "schema mismatch: got \"{got}\", want \"{TRAJECTORY_SCHEMA}\""
+    );
+    let entries = j.get("entries").and_then(Json::as_arr).context("entries must be an array")?;
+    for e in entries {
+        let date = want_str(e, "date", "trajectory entry")?;
+        let well_formed = date.len() == 10
+            && date
+                .bytes()
+                .enumerate()
+                .all(|(i, b)| if i == 4 || i == 7 { b == b'-' } else { b.is_ascii_digit() });
+        ensure!(well_formed, "trajectory entry date must be YYYY-MM-DD, got \"{date}\"");
+        let what = format!("trajectory entry {date}");
+        ensure!(!want_str(e, "commit", &what)?.is_empty(), "{what}: commit must be non-empty");
+        want_str(e, "arch", &what)?;
+        want_str(e, "active", &what)?;
+        want_pos_f64(e, "kernel_best_gb_per_s", &what)?;
+        want_pos_f64(e, "serving_best_p50_us", &what)?;
+        want_pos_f64(e, "serving_best_qps", &what)?;
+        // Scalar-only hosts have no speedup records, so the field is
+        // optional — but must be sane when present.
+        if e.get("kernel_best_vs_scalar").is_some() {
+            want_pos_f64(e, "kernel_best_vs_scalar", &what)?;
+        }
+    }
+    Ok(())
+}
+
+/// Append one dated, commit-stamped headline entry to
+/// `BENCH_trajectory.json` under `out_dir`, creating the file on first use.
+/// Reads the kernel/serving artifacts from the same directory; placeholder
+/// artifacts are rejected (run the bench first). Returns the written path.
+pub fn append_trajectory(out_dir: &Path) -> Result<PathBuf> {
+    let kj = read_json(&kernel_path_in(out_dir))?;
+    let sj = read_json(&serving_path_in(out_dir))?;
+    validate_kernel_json(&kj).context("kernel artifact")?;
+    validate_serving_json(&sj).context("serving artifact")?;
+    let is_placeholder = |j: &Json| j.get("placeholder").and_then(Json::as_bool).unwrap_or(false);
+    ensure!(
+        !is_placeholder(&kj) && !is_placeholder(&sj),
+        "bench artifacts are placeholders; run `cosime bench` before --append"
+    );
+
+    let k_results = kj.get("results").and_then(Json::as_arr).context("kernel results")?;
+    let s_results = sj.get("results").and_then(Json::as_arr).context("serving results")?;
+    let best_gbps = k_results
+        .iter()
+        .filter_map(|e| e.get("gb_per_s").and_then(Json::as_f64))
+        .reduce(f64::max)
+        .context("kernel artifact has no gb_per_s entries")?;
+    let best_speedup = kj.get("speedup").and_then(Json::as_arr).and_then(|a| {
+        a.iter().filter_map(|e| e.get("vs_scalar").and_then(Json::as_f64)).reduce(f64::max)
+    });
+    let best_p50 = s_results
+        .iter()
+        .filter_map(|e| e.get("p50_us").and_then(Json::as_f64))
+        .reduce(f64::min)
+        .context("serving artifact has no p50_us entries")?;
+    let best_qps = s_results
+        .iter()
+        .filter_map(|e| e.get("pipelined_qps").and_then(Json::as_f64))
+        .reduce(f64::max)
+        .context("serving artifact has no pipelined_qps entries")?;
+
+    let host = kj.get("host").context("kernel artifact has no host block")?;
+    let mut fields = vec![
+        ("date", Json::str(&utc_date_today())),
+        ("commit", Json::str(&head_commit(out_dir))),
+        ("arch", Json::str(host.get("arch").and_then(Json::as_str).unwrap_or("unknown"))),
+        ("active", Json::str(host.get("active").and_then(Json::as_str).unwrap_or("unknown"))),
+        ("quick", Json::Bool(host.get("quick").and_then(Json::as_bool).unwrap_or(false))),
+        ("kernel_best_gb_per_s", Json::num(best_gbps)),
+        ("serving_best_p50_us", Json::num(best_p50)),
+        ("serving_best_qps", Json::num(best_qps)),
+    ];
+    if let Some(x) = best_speedup {
+        fields.push(("kernel_best_vs_scalar", Json::num(x)));
+    }
+    let entry = Json::obj(fields);
+
+    let tp = trajectory_path_in(out_dir);
+    let mut entries: Vec<Json> = if tp.exists() {
+        let tj = read_json(&tp)?;
+        validate_trajectory_json(&tj).with_context(|| format!("validating {}", tp.display()))?;
+        tj.get("entries").and_then(Json::as_arr).map(<[Json]>::to_vec).unwrap_or_default()
+    } else {
+        Vec::new()
+    };
+    entries.push(entry);
+    let out = Json::obj(vec![
+        ("schema", Json::str(TRAJECTORY_SCHEMA)),
+        ("note", Json::str("appended by `cosime bench --append`; one entry per run")),
+        ("entries", Json::Arr(entries)),
+    ]);
+    validate_trajectory_json(&out).context("BENCH_trajectory self-validation")?;
+    std::fs::write(&tp, out.to_string_pretty() + "\n")
+        .with_context(|| format!("writing {}", tp.display()))?;
+    Ok(tp)
 }
 
 #[cfg(test)]
@@ -604,5 +778,67 @@ mod tests {
             ("speedup", Json::Arr(Vec::new())),
         ]);
         validate_kernel_json(&placeholder).unwrap();
+    }
+
+    /// `--append` creates the trajectory on first use and grows it by one
+    /// schema-valid dated entry per run; `check_artifacts` validates it
+    /// alongside the two rails.
+    #[test]
+    fn trajectory_append_creates_then_grows() {
+        let dir = std::env::temp_dir().join(format!("cosime-traj-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let kj = kernel_bench_json(&[64], &[100], true).unwrap();
+        std::fs::write(kernel_path_in(&dir), kj.to_string_pretty()).unwrap();
+        let sj = serving_bench_json(256, 128, 10, 2, &[IoMode::Threaded], &[1], true).unwrap();
+        std::fs::write(serving_path_in(&dir), sj.to_string_pretty()).unwrap();
+
+        let tp = append_trajectory(&dir).unwrap();
+        let tj = Json::parse(&std::fs::read_to_string(&tp).unwrap()).unwrap();
+        validate_trajectory_json(&tj).unwrap();
+        assert_eq!(tj.get("entries").and_then(Json::as_arr).unwrap().len(), 1);
+
+        append_trajectory(&dir).unwrap();
+        let tj = Json::parse(&std::fs::read_to_string(&tp).unwrap()).unwrap();
+        let entries = tj.get("entries").and_then(Json::as_arr).unwrap();
+        assert_eq!(entries.len(), 2, "append grows by exactly one entry");
+        let e = &entries[1];
+        assert_eq!(e.get("date").and_then(Json::as_str).unwrap().len(), 10);
+        assert!(e.get("kernel_best_gb_per_s").and_then(Json::as_f64).unwrap() > 0.0);
+        assert!(e.get("serving_best_qps").and_then(Json::as_f64).unwrap() > 0.0);
+        check_artifacts(&dir).unwrap();
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    /// Placeholder rails cannot seed trajectory entries, and the validator
+    /// rejects malformed dates; the civil-date conversion is exact.
+    #[test]
+    fn trajectory_rejects_placeholders_and_bad_dates() {
+        let dir = std::env::temp_dir().join(format!("cosime-traj-ph-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let ph = |schema: &str| {
+            Json::obj(vec![
+                ("schema", Json::str(schema)),
+                ("placeholder", Json::Bool(true)),
+                ("note", Json::str("regenerate with `cosime bench`")),
+                ("host", host_json(true)),
+                ("results", Json::Arr(Vec::new())),
+                ("speedup", Json::Arr(Vec::new())),
+            ])
+        };
+        std::fs::write(kernel_path_in(&dir), ph(KERNEL_SCHEMA).to_string_pretty()).unwrap();
+        std::fs::write(serving_path_in(&dir), ph(SERVING_SCHEMA).to_string_pretty()).unwrap();
+        let err = append_trajectory(&dir).unwrap_err().to_string();
+        assert!(err.contains("placeholder"), "{err}");
+        std::fs::remove_dir_all(&dir).ok();
+
+        let bad = Json::obj(vec![
+            ("schema", Json::str(TRAJECTORY_SCHEMA)),
+            ("entries", Json::Arr(vec![Json::obj(vec![("date", Json::str("08/08/2026"))])])),
+        ]);
+        assert!(validate_trajectory_json(&bad).is_err());
+
+        assert_eq!(civil_from_days(0), (1970, 1, 1));
+        assert_eq!(civil_from_days(19_723), (2024, 1, 1));
+        assert_eq!(civil_from_days(19_782), (2024, 2, 29), "leap day maps correctly");
     }
 }

@@ -34,6 +34,11 @@
 //!   marks the connection finished; its in-flight tickets are dropped
 //!   (the backend completes the work; results go nowhere) and the loop
 //!   moves on.
+//! * **Single-threaded state** — each connection's buffers and in-flight
+//!   FIFO are owned by the one loop thread, so they carry no lock and no
+//!   [`crate::util::sync::lock_order`] class. The cross-thread completion
+//!   FIFO this engine hands results through is the *backend's* (e.g.
+//!   `remote.conn` for a remote child); lockdep tracks it there.
 
 use std::collections::VecDeque;
 use std::io::{Read, Write};

@@ -27,7 +27,7 @@
 use std::collections::{HashMap, HashSet, VecDeque};
 use std::io::{Read, Write};
 use std::net::{TcpStream, ToSocketAddrs};
-use std::sync::{Arc, Mutex};
+use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use anyhow::{Context, Result};
@@ -37,7 +37,7 @@ use crate::coordinator::backend::{
     SnapshotChunk, Ticket,
 };
 use crate::coordinator::{MetricsSnapshot, SubmitError};
-use crate::util::sync::lock_recover;
+use crate::util::sync::{TrackedMutex, REMOTE_CONN};
 use crate::util::BitVec;
 
 use super::protocol::{self, FrameHeader, Op, HEADER_LEN, MAGIC, VERSION};
@@ -361,9 +361,11 @@ fn handshake(addr: &str, secret: &[u8]) -> Result<(TcpStream, BackendHealth)> {
 
 /// A remote `cosimed` server as a completion-based [`Backend`] (module
 /// docs). Cheap to share behind the routing tier: submissions and polls
-/// synchronize on one internal connection lock.
+/// synchronize on one internal connection lock — the shared completion
+/// FIFO, tracked as the `remote.conn` class in
+/// [`crate::util::sync::lock_order`].
 pub struct RemoteBackend {
-    conn: Arc<Mutex<RemoteConn>>,
+    conn: Arc<TrackedMutex<RemoteConn>>,
     dims: usize,
     health0: BackendHealth,
 }
@@ -389,24 +391,27 @@ impl RemoteBackend {
         let (stream, health) = handshake(addr, secret)?;
         stream.set_nonblocking(true).context("switching to nonblocking mode")?;
         Ok(RemoteBackend {
-            conn: Arc::new(Mutex::new(RemoteConn {
-                stream,
-                outbuf: VecDeque::new(),
-                inbuf: Vec::new(),
-                inflight: VecDeque::new(),
-                completed: HashMap::new(),
-                abandoned: HashSet::new(),
-                next_seq: 0,
-                max_frame: DEFAULT_MAX_FRAME,
-                dead: None,
-                addr: addr.to_string(),
-                secret: secret.to_vec(),
-                dims: health.dims as usize,
-                backoff: probe_backoff.max(Duration::from_millis(1)),
-                attempts: 0,
-                last_attempt: None,
-                closed: false,
-            })),
+            conn: Arc::new(TrackedMutex::new(
+                &REMOTE_CONN,
+                RemoteConn {
+                    stream,
+                    outbuf: VecDeque::new(),
+                    inbuf: Vec::new(),
+                    inflight: VecDeque::new(),
+                    completed: HashMap::new(),
+                    abandoned: HashSet::new(),
+                    next_seq: 0,
+                    max_frame: DEFAULT_MAX_FRAME,
+                    dead: None,
+                    addr: addr.to_string(),
+                    secret: secret.to_vec(),
+                    dims: health.dims as usize,
+                    backoff: probe_backoff.max(Duration::from_millis(1)),
+                    attempts: 0,
+                    last_attempt: None,
+                    closed: false,
+                },
+            )),
             dims: health.dims as usize,
             health0: health,
         })
@@ -441,10 +446,10 @@ impl RemoteBackend {
 
     /// Enqueue one frame and block (by pumping) until its slot fills.
     fn round_trip(&self, op: Op, want: Op, payload: &[u8]) -> Result<Vec<u8>, SubmitError> {
-        let seq = lock_recover(&self.conn).enqueue(op, want, payload)?;
+        let seq = self.conn.lock().enqueue(op, want, payload)?;
         loop {
             {
-                let mut conn = lock_recover(&self.conn);
+                let mut conn = self.conn.lock();
                 conn.pump();
                 if let Some(outcome) = conn.check(seq) {
                     return outcome;
@@ -458,7 +463,7 @@ impl RemoteBackend {
 /// Completion of one in-flight remote search: pump the shared connection,
 /// look for this slot's frame.
 struct RemoteCompletion {
-    conn: Arc<Mutex<RemoteConn>>,
+    conn: Arc<TrackedMutex<RemoteConn>>,
     seq: u64,
     queries: usize,
     /// Which response layout the slot's frame decodes as.
@@ -473,7 +478,7 @@ impl Drop for RemoteCompletion {
         // client) must deregister its slot, or the arriving response
         // would park in the connection's completed map forever.
         if !self.spent {
-            lock_recover(&self.conn).abandon(self.seq);
+            self.conn.lock().abandon(self.seq);
         }
     }
 }
@@ -481,7 +486,7 @@ impl Drop for RemoteCompletion {
 impl Completion for RemoteCompletion {
     fn poll(&mut self) -> Result<Option<BatchResult>, SubmitError> {
         let outcome = {
-            let mut conn = lock_recover(&self.conn);
+            let mut conn = self.conn.lock();
             conn.pump();
             conn.check(self.seq)
         };
@@ -548,7 +553,7 @@ impl Backend for RemoteBackend {
             }
         }
         let payload = protocol::encode_search_request(queries, k);
-        let seq = lock_recover(&self.conn).enqueue(Op::Search, Op::SearchOk, &payload)?;
+        let seq = self.conn.lock().enqueue(Op::Search, Op::SearchOk, &payload)?;
         Ok(Ticket::new(Box::new(RemoteCompletion {
             conn: self.conn.clone(),
             seq,
@@ -574,7 +579,7 @@ impl Backend for RemoteBackend {
             }
         }
         let payload = protocol::encode_threshold_request(queries, threshold, limit);
-        let seq = lock_recover(&self.conn)
+        let seq = self.conn.lock()
             .enqueue(Op::SearchThreshold, Op::SearchThresholdOk, &payload)?;
         Ok(Ticket::new(Box::new(RemoteCompletion {
             conn: self.conn.clone(),
@@ -629,7 +634,7 @@ impl Backend for RemoteBackend {
     }
 
     fn close(&self) {
-        let mut conn = lock_recover(&self.conn);
+        let mut conn = self.conn.lock();
         conn.closed = true;
         let _ = conn.stream.shutdown(std::net::Shutdown::Both);
         conn.poison(SubmitError::Closed);

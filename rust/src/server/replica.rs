@@ -189,7 +189,10 @@ where
 
 /// Background catch-up: a thread repeating [`catch_up`] rounds on an
 /// interval so a serving replica keeps tracking its primary. See the
-/// module docs for the failure policy.
+/// module docs for the failure policy. Both [`ReplicaSync::stop`] and a
+/// plain drop signal the thread and **join it** — the sleep is sliced
+/// (10 ms) so shutdown latency stays bounded regardless of the interval,
+/// and the thread can never outlive its handle.
 pub struct ReplicaSync {
     stop: Arc<AtomicBool>,
     stale: Arc<AtomicBool>,
@@ -227,7 +230,12 @@ impl ReplicaSync {
                             // backoff on its own; keep polling.
                         }
                     }
-                    thread::sleep(interval);
+                    let mut slept = Duration::ZERO;
+                    while slept < interval && !t_stop.load(Ordering::Acquire) {
+                        let nap = Duration::from_millis(10).min(interval - slept);
+                        thread::sleep(nap);
+                        slept += nap;
+                    }
                 }
                 source.close();
             })
@@ -248,10 +256,22 @@ impl ReplicaSync {
 
     /// Stop the sync thread and close its backend connection.
     pub fn stop(mut self) {
+        self.shutdown();
+    }
+
+    /// Signal the thread and join it (idempotent); [`ReplicaSync::stop`]
+    /// and [`Drop`] both funnel here.
+    fn shutdown(&mut self) {
         self.stop.store(true, Ordering::Release);
         if let Some(t) = self.thread.take() {
             let _ = t.join();
         }
+    }
+}
+
+impl Drop for ReplicaSync {
+    fn drop(&mut self) {
+        self.shutdown();
     }
 }
 
@@ -389,6 +409,28 @@ mod tests {
         let q = BitVec::random(64, 0.5, &mut r);
         assert_eq!(topk(&fresh, &q, 3), topk(&svc, &q, 3));
         fresh.shutdown();
+        svc.shutdown();
+    }
+
+    /// Dropping the handle (without `stop()`) joins the thread with bounded
+    /// latency even under a long poll interval — no leaked sync threads.
+    #[test]
+    fn dropping_replica_sync_joins_the_thread() {
+        let (svc, cfg) = primary(10, 64, 77);
+        let source = LocalBackend::new(svc.clone());
+        let replica = bootstrap(&source, &cfg, 16, 8, digital_factory).unwrap();
+        let sync = ReplicaSync::spawn(
+            Box::new(LocalBackend::new(svc.clone())),
+            replica.clone(),
+            Duration::from_secs(3600),
+        );
+        let start = std::time::Instant::now();
+        drop(sync);
+        assert!(
+            start.elapsed() < Duration::from_secs(30),
+            "drop must join within a few sleep slices, not one interval"
+        );
+        replica.shutdown();
         svc.shutdown();
     }
 }

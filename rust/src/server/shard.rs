@@ -83,7 +83,8 @@
 //! back to the conservative worst-shard tail.
 
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
-use std::sync::Arc;
+use std::sync::{Arc, PoisonError};
+use std::time::Duration;
 
 use anyhow::{bail, ensure, Result};
 
@@ -99,6 +100,7 @@ use crate::coordinator::{
     AmService, MetricsSnapshot, RequestTiming, SearchResponse, SubmitError, TileManager,
     WriteCostSnapshot,
 };
+use crate::util::sync::{TrackedRwLock, ROUTER_HEALTH};
 use crate::util::BitVec;
 
 use super::tcp::SearchKind;
@@ -137,12 +139,15 @@ pub fn fnv1a_word(word: &BitVec) -> u64 {
 /// [`AdminOutcome`] under its historical router-era name).
 pub type RoutedAdminResponse = AdminOutcome;
 
-/// Shared failover state: one health bit per shard plus the counters the
+/// Shared failover state: the per-shard health map plus the counters the
 /// metrics lane reports. Lives behind an [`Arc`] so in-flight completions
-/// can eject a shard after the submitting call returned.
+/// can eject a shard after the submitting call returned. The map is the
+/// `router.health` lock class in [`crate::util::sync::lock_order`]; it
+/// carries no cross-field invariant, so poison recovers (a panicking
+/// prober always leaves a valid map behind).
 struct RouterState {
     /// `healthy[i]` — shard `i` participates in scatters.
-    healthy: Vec<AtomicBool>,
+    healthy: TrackedRwLock<Vec<bool>>,
     /// Batches served with at least one shard missing (partial results).
     degraded: AtomicU64,
     /// Healthy→unhealthy transitions.
@@ -154,7 +159,7 @@ struct RouterState {
 impl RouterState {
     fn new(shards: usize) -> Arc<RouterState> {
         Arc::new(RouterState {
-            healthy: (0..shards).map(|_| AtomicBool::new(true)).collect(),
+            healthy: TrackedRwLock::new(&ROUTER_HEALTH, vec![true; shards]),
             degraded: AtomicU64::new(0),
             ejections: AtomicU64::new(0),
             rejoins: AtomicU64::new(0),
@@ -162,26 +167,29 @@ impl RouterState {
     }
 
     fn is_healthy(&self, shard: usize) -> bool {
-        self.healthy[shard].load(Ordering::Acquire)
+        self.healthy.read().unwrap_or_else(PoisonError::into_inner)[shard]
     }
 
     /// Mark `shard` unhealthy; counts the transition exactly once even when
     /// several in-flight batches observe the same failure.
     fn eject(&self, shard: usize) {
-        if self.healthy[shard].swap(false, Ordering::AcqRel) {
+        let mut map = self.healthy.write().unwrap_or_else(PoisonError::into_inner);
+        if std::mem::replace(&mut map[shard], false) {
             self.ejections.fetch_add(1, Ordering::Relaxed);
         }
     }
 
     /// Mark `shard` healthy again (probe succeeded).
     fn rejoin(&self, shard: usize) {
-        if !self.healthy[shard].swap(true, Ordering::AcqRel) {
+        let mut map = self.healthy.write().unwrap_or_else(PoisonError::into_inner);
+        if !std::mem::replace(&mut map[shard], true) {
             self.rejoins.fetch_add(1, Ordering::Relaxed);
         }
     }
 
     fn unhealthy_count(&self) -> u32 {
-        self.healthy.iter().filter(|h| !h.load(Ordering::Acquire)).count() as u32
+        let map = self.healthy.read().unwrap_or_else(PoisonError::into_inner);
+        map.iter().filter(|h| !**h).count() as u32
     }
 }
 
@@ -197,6 +205,59 @@ pub struct RouterBackend {
 /// The pre-backend-trait name of [`RouterBackend`], kept so existing call
 /// sites and docs stay valid.
 pub type ShardRouter = RouterBackend;
+
+/// A joinable background prober that drives [`Backend::health`] — the
+/// router's eject/rejoin scan — on a fixed cadence, so an ejected shard
+/// rejoins without waiting for a client health request. Dropping the
+/// handle (or calling [`HealthProbe::stop`]) signals the thread and
+/// **joins it**: shutdown latency is bounded by one probe plus one 10 ms
+/// sleep slice, and the thread is never leaked past its owner.
+pub struct HealthProbe {
+    stop: Arc<AtomicBool>,
+    thread: Option<std::thread::JoinHandle<()>>,
+}
+
+impl HealthProbe {
+    /// Probe `backend` every `interval` until stopped. The sleep is sliced
+    /// (10 ms) so stop/drop latency stays bounded regardless of `interval`.
+    pub fn spawn<B: Backend + 'static>(backend: Arc<B>, interval: Duration) -> HealthProbe {
+        let stop = Arc::new(AtomicBool::new(false));
+        let flag = Arc::clone(&stop);
+        let builder = std::thread::Builder::new().name("cosime-health-probe".into());
+        let thread = builder
+            .spawn(move || {
+                const SLICE: Duration = Duration::from_millis(10);
+                while !flag.load(Ordering::Acquire) {
+                    // Probe errors already eject inside health(); nothing
+                    // more to do with the aggregate here.
+                    let _ = backend.health();
+                    let mut slept = Duration::ZERO;
+                    while slept < interval && !flag.load(Ordering::Acquire) {
+                        let nap = SLICE.min(interval - slept);
+                        std::thread::sleep(nap);
+                        slept += nap;
+                    }
+                }
+            })
+            // lint: allow(no-panic) -- OS thread-spawn failure at startup is fatal by design.
+            .expect("spawn health probe");
+        HealthProbe { stop, thread: Some(thread) }
+    }
+
+    /// Signal and join the prober. Idempotent; [`Drop`] calls this too.
+    pub fn stop(&mut self) {
+        self.stop.store(true, Ordering::Release);
+        if let Some(t) = self.thread.take() {
+            let _ = t.join();
+        }
+    }
+}
+
+impl Drop for HealthProbe {
+    fn drop(&mut self) {
+        self.stop();
+    }
+}
 
 /// An in-flight scattered search (the blocking, single-query adapter):
 /// one child ticket per shard. Call [`PendingSearch::wait`] to gather and
@@ -1561,5 +1622,34 @@ mod tests {
             other => panic!("expected BadQuery, got {other:?}"),
         }
         router.shutdown();
+    }
+
+    /// The health probe rejoins a healed shard on its own cadence — no
+    /// client health request involved — and dropping the handle joins the
+    /// thread with bounded latency instead of leaking it.
+    #[test]
+    fn health_probe_rejoins_and_drop_joins() {
+        use std::time::Instant;
+        let (router, _, mode) = flaky_pair(71);
+        let router = Arc::new(router);
+        let mut r = rng(72);
+        let q = BitVec::random(64, 0.5, &mut r);
+        mode.store(FLAKY_SUBMIT, AOrd::SeqCst);
+        router.search_batch(std::slice::from_ref(&q), 2).unwrap();
+        assert!(!router.shard_healthy(1), "failed shard ejected");
+
+        let probe = HealthProbe::spawn(Arc::clone(&router), Duration::from_millis(5));
+        mode.store(FLAKY_OK, AOrd::SeqCst);
+        let deadline = Instant::now() + Duration::from_secs(30);
+        while !router.shard_healthy(1) {
+            assert!(Instant::now() < deadline, "probe must rejoin the healed shard");
+            std::thread::yield_now();
+        }
+        assert!(router.rejoins() >= 1);
+
+        let start = Instant::now();
+        drop(probe);
+        assert!(start.elapsed() < Duration::from_secs(10), "drop joins promptly");
+        router.close();
     }
 }

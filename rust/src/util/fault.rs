@@ -23,12 +23,12 @@
 use std::io::{Read, Write};
 use std::net::{Shutdown, SocketAddr, TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, AtomicI64, AtomicU64, Ordering};
-use std::sync::{Arc, Mutex};
+use std::sync::Arc;
 use std::thread;
 use std::time::Duration;
 
 use super::rng;
-use super::sync::lock_recover;
+use super::sync::{TrackedMutex, FAULT_LIVE};
 
 /// What the proxy does to one relayed connection.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -71,13 +71,14 @@ struct ProxyShared {
     partitioned: AtomicBool,
     running: AtomicBool,
     /// Both sockets of every live relay, so [`FaultProxy::partition`] can
-    /// sever in-flight connections, not just refuse new ones.
-    live: Mutex<Vec<TcpStream>>,
+    /// sever in-flight connections, not just refuse new ones. This is the
+    /// `fault.live` lock class in [`super::sync::lock_order`].
+    live: TrackedMutex<Vec<TcpStream>>,
 }
 
 impl ProxyShared {
     fn sever_live(&self) {
-        let mut live = lock_recover(&self.live);
+        let mut live = self.live.lock();
         for s in live.drain(..) {
             let _ = s.shutdown(Shutdown::Both);
         }
@@ -109,7 +110,7 @@ impl FaultProxy {
             accepted: AtomicU64::new(0),
             partitioned: AtomicBool::new(false),
             running: AtomicBool::new(true),
-            live: Mutex::new(Vec::new()),
+            live: TrackedMutex::new(&FAULT_LIVE, Vec::new()),
         });
         let accept_shared = shared.clone();
         let accept_thread = thread::spawn(move || accept_loop(listener, accept_shared));
@@ -175,7 +176,7 @@ fn accept_loop(listener: TcpListener, shared: Arc<ProxyShared>) {
         let _ = client.set_nodelay(true);
         let _ = server.set_nodelay(true);
         {
-            let mut live = lock_recover(&shared.live);
+            let mut live = shared.live.lock();
             if let (Ok(c), Ok(s)) = (client.try_clone(), server.try_clone()) {
                 live.push(c);
                 live.push(s);

@@ -17,8 +17,10 @@ pub mod par;
 /// Tiny property-testing harness (seeded shrinking).
 pub mod prop;
 mod rng;
+/// Seeded deterministic-interleaving harness for concurrency tests.
+pub mod sched;
 mod stats;
-/// Poison-recovering lock/condvar helpers and the recovery policy.
+/// Lock classes, runtime lockdep, and poison-recovering lock helpers.
 pub mod sync;
 /// Minimal TOML subset parser for `cosime.toml`.
 pub mod toml_lite;

@@ -1,0 +1,289 @@
+//! Seeded deterministic-interleaving harness for concurrency tests.
+//!
+//! [`run`] spawns N worker closures and steps them under a seeded
+//! permutation schedule: every worker gates at each **yield point** —
+//! injected automatically at every tracked-lock acquisition
+//! ([`crate::util::sync::TrackedMutex`] / [`TrackedRwLock`]), or placed
+//! explicitly with [`yield_point`] — and a coordinator grants one seeded
+//! pseudo-random waiting worker at a time. The grant sequence is returned
+//! as a trace, so a failing interleaving replays from its seed alone — the
+//! same determinism contract as the fault proxy
+//! ([`crate::util::fault::FaultProxy`]).
+//!
+//! # Determinism contract
+//!
+//! The schedule is deterministic *up to genuine blocking*: a granted worker
+//! that blocks on a real lock (or on unscheduled helper threads, e.g. a
+//! service's worker pool) is given a quiescence window, after which the
+//! coordinator grants another waiting worker so the system can make
+//! progress. Scenarios whose workers only synchronize through tracked locks
+//! and yield points replay exactly; scenarios that block on free-running
+//! threads replay the same *decisions* but may interleave the blocked
+//! stretches differently. A watchdog aborts the schedule (naming the seed
+//! and per-worker states) if nothing transitions for several seconds —
+//! a genuine deadlock in the code under test.
+//!
+//! Threads not spawned by [`run`] are unaffected: [`yield_point`] is a
+//! no-op on unregistered threads, so a scenario can drive a full serving
+//! stack whose internal worker pool runs freely.
+//!
+//! [`TrackedRwLock`]: crate::util::sync::TrackedRwLock
+
+use std::cell::RefCell;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+use super::sync::{lock_recover, wait_recover, wait_timeout_recover};
+
+/// How long the coordinator waits for the last-granted worker to reach its
+/// next yield point before overlapping a second grant (see the determinism
+/// contract in the module docs).
+const QUIESCENCE: Duration = Duration::from_millis(100);
+
+/// No worker transition for this long aborts the schedule: the code under
+/// test has genuinely deadlocked (lockdep should have caught the inversion
+/// first — this is the backstop).
+const WATCHDOG: Duration = Duration::from_secs(5);
+
+/// One scheduled worker closure.
+pub type Worker<'env> = Box<dyn FnOnce() + Send + 'env>;
+
+type PanicPayload = Box<dyn std::any::Any + Send>;
+
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+enum WState {
+    /// Granted (or between yield points); the worker owns its step.
+    Running,
+    /// Parked at a yield point, waiting for a grant.
+    AtYield,
+    /// Body returned (or panicked — the payload is re-thrown after join).
+    Done,
+}
+
+struct SchedState {
+    workers: Vec<WState>,
+    /// Bumped on every transition; the coordinator's progress clock.
+    version: u64,
+    /// Watchdog fired: all gates become pass-through so threads can drain.
+    abort: bool,
+}
+
+struct SchedInner {
+    state: Mutex<SchedState>,
+    cv: Condvar,
+}
+
+thread_local! {
+    /// The scheduler this thread is registered with, if spawned by [`run`].
+    static CURRENT: RefCell<Option<(Arc<SchedInner>, usize)>> = const { RefCell::new(None) };
+}
+
+/// Gate the current thread until the scheduler grants it the next step.
+/// No-op on threads not spawned by [`run`] (and after a watchdog abort),
+/// so library code can call this unconditionally — the tracked locks in
+/// [`crate::util::sync`] do.
+pub fn yield_point() {
+    let cur = CURRENT.with(|c| c.borrow().clone());
+    if let Some((inner, i)) = cur {
+        inner.pause(i);
+    }
+}
+
+impl SchedInner {
+    /// Park worker `i` at a yield point until granted.
+    fn pause(&self, i: usize) {
+        let mut st = lock_recover(&self.state);
+        if st.abort {
+            return;
+        }
+        st.workers[i] = WState::AtYield;
+        st.version += 1;
+        self.cv.notify_all();
+        while st.workers[i] != WState::Running && !st.abort {
+            st = wait_recover(&self.cv, st);
+        }
+    }
+
+    fn finish(&self, i: usize) {
+        let mut st = lock_recover(&self.state);
+        st.workers[i] = WState::Done;
+        st.version += 1;
+        self.cv.notify_all();
+    }
+}
+
+/// Run `workers` to completion under the seeded schedule; returns the grant
+/// trace (worker index per scheduling decision). Worker panics are caught,
+/// the remaining schedule drains, and the first payload is re-thrown after
+/// every thread has joined — so a failing scenario reports the worker's own
+/// assertion, replayable via `seed`.
+///
+/// Each worker takes an initial gate before its body runs, so the *start*
+/// order is scheduled too.
+pub fn run(seed: u64, workers: Vec<Worker<'_>>) -> Vec<usize> {
+    let n = workers.len();
+    let inner = Arc::new(SchedInner {
+        state: Mutex::new(SchedState {
+            workers: vec![WState::Running; n],
+            version: 0,
+            abort: false,
+        }),
+        cv: Condvar::new(),
+    });
+    let panics: Mutex<Vec<PanicPayload>> = Mutex::new(Vec::new());
+    let trace = std::thread::scope(|s| {
+        for (i, body) in workers.into_iter().enumerate() {
+            let inner = Arc::clone(&inner);
+            let panics = &panics;
+            s.spawn(move || {
+                CURRENT.with(|c| *c.borrow_mut() = Some((Arc::clone(&inner), i)));
+                inner.pause(i); // initial gate: start order is scheduled
+                let result = catch_unwind(AssertUnwindSafe(body));
+                CURRENT.with(|c| *c.borrow_mut() = None);
+                inner.finish(i);
+                if let Err(payload) = result {
+                    lock_recover(panics).push(payload);
+                }
+            });
+        }
+        coordinate(&inner, seed)
+    });
+    let aborted = lock_recover(&inner.state).abort;
+    let first = lock_recover(&panics).drain(..).next();
+    if let Some(payload) = first {
+        std::panic::resume_unwind(payload);
+    }
+    assert!(
+        !aborted,
+        "sched: watchdog fired — no scheduler progress for {WATCHDOG:?} \
+         (genuine deadlock in the scenario; replay with seed {seed})"
+    );
+    trace
+}
+
+fn coordinate(inner: &SchedInner, seed: u64) -> Vec<usize> {
+    let mut r = crate::util::rng(seed);
+    let mut trace = Vec::new();
+    let mut last_granted: Option<usize> = None;
+    // One full quiescence window expired with the last grant still running:
+    // overlap the next grant so real-lock blocking cannot stall the world.
+    let mut patience = false;
+    let mut st = lock_recover(&inner.state);
+    let mut last_version = st.version;
+    let mut last_progress = Instant::now();
+    loop {
+        if st.workers.iter().all(|&w| w == WState::Done) {
+            return trace;
+        }
+        if st.version != last_version {
+            last_version = st.version;
+            last_progress = Instant::now();
+        } else if last_progress.elapsed() >= WATCHDOG {
+            st.abort = true;
+            st.version += 1;
+            eprintln!(
+                "sched: watchdog (seed {seed}); worker states: {:?}; trace: {trace:?}",
+                st.workers
+            );
+            inner.cv.notify_all();
+            return trace;
+        }
+        let at_yield: Vec<usize> = st
+            .workers
+            .iter()
+            .enumerate()
+            .filter(|&(_, &w)| w == WState::AtYield)
+            .map(|(i, _)| i)
+            .collect();
+        let runner_busy = last_granted.is_some_and(|g| st.workers[g] == WState::Running);
+        if at_yield.is_empty() || (runner_busy && !patience) {
+            let (guard, timeout) = wait_timeout_recover(&inner.cv, st, QUIESCENCE);
+            st = guard;
+            if timeout.timed_out() && runner_busy {
+                patience = true;
+            }
+            continue;
+        }
+        let pick = at_yield[r.below(at_yield.len())];
+        st.workers[pick] = WState::Running;
+        st.version += 1;
+        trace.push(pick);
+        last_granted = Some(pick);
+        patience = false;
+        inner.cv.notify_all();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicU64, Ordering};
+
+    /// Pure-yield workers replay bit-identically: same seed, same grant
+    /// trace, same interleaving-sensitive outcome.
+    #[test]
+    fn same_seed_same_trace() {
+        let scenario = |seed: u64| -> (Vec<usize>, Vec<usize>) {
+            let order = Mutex::new(Vec::new());
+            let workers: Vec<Worker> = (0..3usize)
+                .map(|w| {
+                    let order = &order;
+                    Box::new(move || {
+                        for _ in 0..5 {
+                            yield_point();
+                            lock_recover(order).push(w);
+                        }
+                    }) as Worker
+                })
+                .collect();
+            let trace = run(seed, workers);
+            (trace, order.into_inner().unwrap())
+        };
+        let (t1, o1) = scenario(42);
+        let (t2, o2) = scenario(42);
+        assert_eq!(t1, t2, "same seed must grant identically");
+        assert_eq!(o1, o2, "same seed must interleave identically");
+        let diverged = (43..48).any(|seed| scenario(seed).0 != t1);
+        assert!(diverged, "other seeds must explore different schedules");
+    }
+
+    /// A panicking worker surfaces its own payload after every thread
+    /// joined, and the rest of the schedule still drains.
+    #[test]
+    fn worker_panic_is_rethrown_after_join() {
+        let progressed = AtomicU64::new(0);
+        let err = catch_unwind(AssertUnwindSafe(|| {
+            run(
+                7,
+                vec![
+                    Box::new(|| {
+                        yield_point();
+                        panic!("scenario assertion failed");
+                    }) as Worker,
+                    Box::new(|| {
+                        for _ in 0..3 {
+                            yield_point();
+                            progressed.fetch_add(1, Ordering::Relaxed);
+                        }
+                    }) as Worker,
+                ],
+            );
+        }))
+        .expect_err("worker panic must propagate");
+        let msg = err
+            .downcast_ref::<&str>()
+            .map(|s| s.to_string())
+            .or_else(|| err.downcast_ref::<String>().cloned())
+            .unwrap_or_default();
+        assert!(msg.contains("scenario assertion"), "original payload: {msg}");
+        assert_eq!(progressed.load(Ordering::Relaxed), 3, "schedule drained after the panic");
+    }
+
+    /// Unregistered threads pass straight through yield points.
+    #[test]
+    fn yield_point_is_noop_off_schedule() {
+        yield_point();
+        yield_point();
+    }
+}

@@ -122,17 +122,31 @@ fn unterminated_hot_path_region_is_a_violation() {
 // ---------------------------------------------------------------------------
 
 /// A protocol fixture shaped like the real one: paired request/response
-/// opcodes including the v3 threshold pair, and an `ErrorCode` whose
-/// variants are referenced by the protocol's own conversion impl.
+/// opcodes including the v3 threshold pair and the v4 replication trio
+/// (hello handshake, snapshot streaming, catch-up pull), and an `ErrorCode`
+/// whose variants are referenced by the protocol's own conversion impl.
 const PROTO_FIXTURE: &str = "\
 pub enum Op {\n\
     Search = 0x01,\n\
     SearchThreshold = 0x07,\n\
+    Hello = 0x08,\n\
+    Snapshot = 0x09,\n\
+    Replicate = 0x0A,\n\
     SearchOk = 0x81,\n\
     SearchThresholdOk = 0x87,\n\
+    HelloOk = 0x88,\n\
+    SnapshotOk = 0x89,\n\
+    ReplicateOk = 0x8A,\n\
 }\n\
 pub enum ErrorCode { BadQuery = 1 }\n\
 impl ErrorCode { fn of(&self) -> u8 { let _ = ErrorCode::BadQuery; 1 } }\n";
+
+/// Full v4 coverage in one serving file: the replication ops dispatched,
+/// their responses emitted — appended to fixtures whose point lies
+/// elsewhere so only the variant under test stays uncovered.
+const V4_DISPATCH: &str = "\
+fn v4(op: Op) { match op { Op::Hello => {}, Op::Snapshot => {}, Op::Replicate => {}, _ => {} } }\n\
+fn v4r() -> (Op, Op, Op) { (Op::HelloOk, Op::SnapshotOk, Op::ReplicateOk) }\n";
 
 fn wire_findings(serving: &[(&str, &str)]) -> Vec<Finding> {
     let proto = lex(PROTO_FIXTURE);
@@ -151,7 +165,10 @@ fn wire_exhaustive_fires_when_a_threshold_opcode_is_not_dispatched() {
     // exactly the regression this rule exists to catch.
     let tcp = "fn d(op: Op) { match op { Op::Search => {}, Op::SearchThreshold => {}, _ => {} } }\n\
                fn r() -> Op { Op::SearchOk }\n";
-    let out = wire_findings(&[("rust/src/server/tcp.rs", tcp)]);
+    let out = wire_findings(&[
+        ("rust/src/server/tcp.rs", tcp),
+        ("rust/src/server/replica.rs", V4_DISPATCH),
+    ]);
     assert_eq!(out.len(), 1, "{out:?}");
     assert_eq!(out[0].rule, Rule::WireExhaustive);
     assert!(out[0].message.contains("Op::SearchThresholdOk"), "{}", out[0].message);
@@ -166,6 +183,39 @@ fn wire_exhaustive_accepts_dispatch_spread_across_serving_files() {
     let tcp = "fn d(op: Op) { match op { Op::Search => {}, Op::SearchThreshold => {}, _ => {} } }\n";
     let evl = "fn c() -> (Op, Op) { (Op::SearchOk, Op::SearchThresholdOk) }\n";
     let cli = "fn q() { let _ = (Op::SearchThreshold, Op::SearchThresholdOk); }\n";
+    let out = wire_findings(&[
+        ("rust/src/server/tcp.rs", tcp),
+        ("rust/src/server/eventloop.rs", evl),
+        ("rust/src/server/client.rs", cli),
+        ("rust/src/server/replica.rs", V4_DISPATCH),
+    ]);
+    assert!(out.is_empty(), "{out:?}");
+}
+
+#[test]
+fn wire_exhaustive_fires_when_a_v4_snapshot_response_is_never_emitted() {
+    // Half-wired replication: the v4 pull ops are dispatched and two of the
+    // responses emitted, but nobody ever produces the snapshot chunk
+    // response — the exact seam a partial v4 port would leave open.
+    let tcp = "fn d(op: Op) { match op { Op::Search => {}, Op::SearchThreshold => {}, \
+               Op::Hello => {}, Op::Snapshot => {}, Op::Replicate => {}, _ => {} } }\n\
+               fn r() -> (Op, Op, Op, Op) { (Op::SearchOk, Op::SearchThresholdOk, Op::HelloOk, Op::ReplicateOk) }\n";
+    let out = wire_findings(&[("rust/src/server/tcp.rs", tcp)]);
+    assert_eq!(out.len(), 1, "{out:?}");
+    assert_eq!(out[0].rule, Rule::WireExhaustive);
+    assert!(out[0].message.contains("Op::SnapshotOk"), "{}", out[0].message);
+}
+
+#[test]
+fn wire_exhaustive_accepts_v4_replication_spread_across_files() {
+    // The realistic v4 split: both server loops dispatch the pull ops and
+    // emit the responses; the replica client round-trips all three pairs.
+    let tcp = "fn d(op: Op) { match op { Op::Search => {}, Op::SearchThreshold => {}, \
+               Op::Hello => {}, Op::Snapshot => {}, Op::Replicate => {}, _ => {} } }\n\
+               fn r() -> (Op, Op) { (Op::SearchOk, Op::SearchThresholdOk) }\n";
+    let evl = "fn c() -> (Op, Op, Op) { (Op::HelloOk, Op::SnapshotOk, Op::ReplicateOk) }\n";
+    let cli = "fn pull() { let _ = (Op::Hello, Op::HelloOk, Op::Snapshot, Op::SnapshotOk, \
+               Op::Replicate, Op::ReplicateOk); }\n";
     let out = wire_findings(&[
         ("rust/src/server/tcp.rs", tcp),
         ("rust/src/server/eventloop.rs", evl),
@@ -185,7 +235,10 @@ fn wire_exhaustive_ignores_test_only_dispatch() {
                    #[test]\n\
                    fn t() { let _ = super::Op::SearchThresholdOk; }\n\
                }\n";
-    let out = wire_findings(&[("rust/src/server/tcp.rs", tcp)]);
+    let out = wire_findings(&[
+        ("rust/src/server/tcp.rs", tcp),
+        ("rust/src/server/replica.rs", V4_DISPATCH),
+    ]);
     assert_eq!(out.len(), 1, "{out:?}");
     assert!(out[0].message.contains("Op::SearchThresholdOk"), "{}", out[0].message);
 }
